@@ -1,0 +1,48 @@
+//! End-to-end pipeline benchmark: the full distributed-DQN stack (actors →
+//! Reverb PER table → AOT learner) measured in train-steps/s and
+//! env-steps/s. Requires `make artifacts`.
+//!
+//! Run: `cargo bench --bench e2e_dqn`
+
+use reverb::coordinator::{run_dqn, DqnConfig};
+use reverb::core::table::TableConfig;
+use reverb::net::server::Server;
+
+fn main() {
+    let artifacts = reverb::runtime::learner::default_artifacts_dir();
+    if !artifacts.join("qnet_train.hlo.txt").exists() {
+        println!("SKIPPED: artifacts missing (run `make artifacts`)");
+        return;
+    }
+    let fast = reverb::util::bench::fast_mode();
+    let train_steps = if fast { 50 } else { 200 };
+
+    println!("# E2E DQN pipeline (CartPole, PER, SPI=8, 2 actors)");
+    println!("| actors | train steps | train/s | env steps/s | realized SPI |");
+    println!("|---|---|---|---|---|");
+    for actors in [1usize, 2, 4] {
+        let server = Server::builder()
+            .table(
+                TableConfig::prioritized_replay("replay", 100_000, 0.6, 8.0, 64, 4096.0)
+                    .unwrap(),
+            )
+            .table(TableConfig::variable_container("variables"))
+            .bind("127.0.0.1:0")
+            .unwrap();
+        let config = DqnConfig {
+            server_addr: server.local_addr().to_string(),
+            num_actors: actors,
+            train_steps,
+            publish_period: 25,
+            ..DqnConfig::default()
+        };
+        let report = run_dqn(config).unwrap();
+        let secs = report.wall.as_secs_f64();
+        println!(
+            "| {actors} | {train_steps} | {:.1} | {:.0} | {:.2} |",
+            train_steps as f64 / secs,
+            report.env_steps as f64 / secs,
+            report.realized_spi,
+        );
+    }
+}

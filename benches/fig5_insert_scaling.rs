@@ -1,0 +1,58 @@
+//! Figure 5 reproduction: single-server INSERT throughput (BPS & QPS) vs
+//! number of concurrent clients, for payloads 400 B → 400 kB.
+//!
+//! Paper setup (§5): random f32 tensors (incompressible), chunk & sequence
+//! length 1 (no sharing), clients insert flat out. Expected shape: linear
+//! scaling with client count until a QPS or BPS ceiling, then a flat
+//! plateau — adding clients past saturation must NOT degrade throughput.
+//!
+//! Clients are threads over loopback TCP (DESIGN.md §2); absolute ceilings
+//! are loopback-bound, the shape is the result.
+//!
+//! Run: `cargo bench --bench fig5_insert_scaling`
+//! (REVERB_BENCH_FAST=1 for a quick pass.)
+
+use reverb::core::table::TableConfig;
+use reverb::net::server::Server;
+use reverb::util::bench::*;
+use reverb::util::stats::{fmt_bps, fmt_qps};
+
+fn main() {
+    println!("# Figure 5: insert scaling (clients are loopback threads)");
+    println!("| payload | clients | QPS | BPS | per-client QPS |");
+    println!("|---|---|---|---|---|");
+    let mut peak: Vec<(String, f64, f64)> = Vec::new();
+    for &(floats, label) in PAYLOAD_SIZES {
+        let mut best_qps: f64 = 0.0;
+        let mut best_bps: f64 = 0.0;
+        for &clients in &client_counts() {
+            // Fresh server per point: FIFO eviction at max_size keeps the
+            // table bounded, matching the paper's steady-state overwrite.
+            let server = Server::builder()
+                .table(TableConfig::uniform_replay("t", 200_000))
+                .bind("127.0.0.1:0")
+                .unwrap();
+            let t = run_insert_clients(
+                &server.local_addr().to_string(),
+                &["t".to_string()],
+                clients,
+                floats,
+                window(),
+            );
+            best_qps = best_qps.max(t.qps());
+            best_bps = best_bps.max(t.bps());
+            print_row(&[
+                label.to_string(),
+                clients.to_string(),
+                fmt_qps(t.qps()),
+                fmt_bps(t.bps()),
+                fmt_qps(t.qps() / clients as f64),
+            ]);
+        }
+        peak.push((label.to_string(), best_qps, best_bps));
+    }
+    println!("\n## Peak insert throughput per payload (paper: ~60k items/s or ~11 GB/s)");
+    for (label, qps, bps) in peak {
+        println!("  {label}: {} / {}", fmt_qps(qps), fmt_bps(bps));
+    }
+}

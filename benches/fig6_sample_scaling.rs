@@ -1,0 +1,50 @@
+//! Figure 6 reproduction: single-server SAMPLE throughput (BPS & QPS) vs
+//! number of concurrent clients, payloads 400 B → 400 kB.
+//!
+//! Expected shape (§5.2): same linear-then-plateau scaling as Figure 5 but
+//! with a ~10× higher QPS ceiling than inserting — the sample path batches
+//! selections under one table-lock acquisition and decompresses outside
+//! the lock, while inserts pay per-item selector/eviction/extension work.
+//!
+//! Run: `cargo bench --bench fig6_sample_scaling`
+
+use reverb::core::table::TableConfig;
+use reverb::net::server::Server;
+use reverb::util::bench::*;
+use reverb::util::stats::{fmt_bps, fmt_qps};
+
+fn main() {
+    println!("# Figure 6: sample scaling (clients are loopback threads)");
+    println!("| payload | clients | QPS | BPS | per-client QPS |");
+    println!("|---|---|---|---|---|");
+    let mut peak: Vec<(String, f64, f64)> = Vec::new();
+    for &(floats, label) in PAYLOAD_SIZES {
+        // One pre-filled server per payload size.
+        let server = Server::builder()
+            .table(TableConfig::uniform_replay("t", 100_000))
+            .bind("127.0.0.1:0")
+            .unwrap();
+        prefill_table(&server.table("t").unwrap(), 2_000, floats);
+        let addr = server.local_addr().to_string();
+
+        let mut best_qps: f64 = 0.0;
+        let mut best_bps: f64 = 0.0;
+        for &clients in &client_counts() {
+            let t = run_sample_clients(&addr, "t", clients, floats, window(), 16);
+            best_qps = best_qps.max(t.qps());
+            best_bps = best_bps.max(t.bps());
+            print_row(&[
+                label.to_string(),
+                clients.to_string(),
+                fmt_qps(t.qps()),
+                fmt_bps(t.bps()),
+                fmt_qps(t.qps() / clients as f64),
+            ]);
+        }
+        peak.push((label.to_string(), best_qps, best_bps));
+    }
+    println!("\n## Peak sample throughput per payload (paper: ~600k items/s or ~11 GB/s, ≈10× insert QPS)");
+    for (label, qps, bps) in peak {
+        println!("  {label}: {} / {}", fmt_qps(qps), fmt_bps(bps));
+    }
+}

@@ -1,0 +1,54 @@
+//! Figure 7 / Appendix B reproduction: insert QPS vs clients when the load
+//! is spread round-robin over 1, 2, 4, 8 tables on ONE server.
+//!
+//! The paper's hypothesis: the insert-QPS ceiling is Table-mutex
+//! contention, so sharding the load across tables on the same server
+//! should lift it (~200% improvement at 8 tables). Each client here writes
+//! to `tables[client % n]`, mirroring the paper's round-robin
+//! `create_item`.
+//!
+//! Run: `cargo bench --bench fig7_sharded_tables`
+
+use reverb::core::table::TableConfig;
+use reverb::net::server::Server;
+use reverb::util::bench::*;
+use reverb::util::stats::fmt_qps;
+
+const FLOATS: usize = 100; // 400B payload isolates QPS from BPS limits
+
+fn main() {
+    println!("# Figure 7: insert QPS with the load sharded over N tables");
+    println!("| tables | clients | QPS |");
+    println!("|---|---|---|");
+    let mut peaks = Vec::new();
+    for &num_tables in &[1usize, 2, 4, 8] {
+        let names: Vec<String> = (0..num_tables).map(|i| format!("t{i}")).collect();
+        let mut best: f64 = 0.0;
+        for &clients in &client_counts() {
+            let mut builder = Server::builder();
+            for n in &names {
+                builder = builder.table(TableConfig::uniform_replay(n, 200_000));
+            }
+            let server = builder.bind("127.0.0.1:0").unwrap();
+            let t = run_insert_clients(
+                &server.local_addr().to_string(),
+                &names,
+                clients,
+                FLOATS,
+                window(),
+            );
+            best = best.max(t.qps());
+            print_row(&[
+                num_tables.to_string(),
+                clients.to_string(),
+                fmt_qps(t.qps()),
+            ]);
+        }
+        peaks.push((num_tables, best));
+    }
+    println!("\n## Peak insert QPS by table count (paper: ~3x from 1 -> 8 tables)");
+    let base = peaks[0].1;
+    for (n, qps) in peaks {
+        println!("  {n} tables: {} ({:.2}x vs 1 table)", fmt_qps(qps), qps / base);
+    }
+}

@@ -1,0 +1,57 @@
+//! §3.3 ablation: per-operation cost of every Selector strategy vs table
+//! size. Selectors must stay cheap because they run under the table mutex;
+//! this bench documents the O(1)/O(log n) behaviour of each.
+//!
+//! Run: `cargo bench --bench selectors`
+
+use reverb::core::selector::SelectorConfig;
+use reverb::util::rng::Pcg32;
+use std::time::Instant;
+
+fn bench_selector(cfg: SelectorConfig, n: usize) -> (f64, f64, f64) {
+    let mut s = cfg.build();
+    let mut rng = Pcg32::new(1, 1);
+    // Fill.
+    let t0 = Instant::now();
+    for k in 0..n as u64 {
+        s.insert(k, rng.gen_f64() * 10.0).unwrap();
+    }
+    let insert_ns = t0.elapsed().as_nanos() as f64 / n as f64;
+    // Select.
+    let reps = 100_000;
+    let t1 = Instant::now();
+    for _ in 0..reps {
+        s.select(&mut rng).unwrap();
+    }
+    let select_ns = t1.elapsed().as_nanos() as f64 / reps as f64;
+    // Update.
+    let t2 = Instant::now();
+    for k in 0..(n as u64).min(100_000) {
+        s.update(k, rng.gen_f64() * 10.0).unwrap();
+    }
+    let update_ns = t2.elapsed().as_nanos() as f64 / (n as f64).min(100_000.0);
+    (insert_ns, select_ns, update_ns)
+}
+
+fn main() {
+    println!("# Selector per-op cost (ns) vs table size");
+    println!("| selector | size | insert | select | update |");
+    println!("|---|---|---|---|---|");
+    for cfg in [
+        SelectorConfig::Fifo,
+        SelectorConfig::Lifo,
+        SelectorConfig::Uniform,
+        SelectorConfig::MaxHeap,
+        SelectorConfig::MinHeap,
+        SelectorConfig::Prioritized { exponent: 0.8 },
+    ] {
+        for &n in &[1_000usize, 100_000, 1_000_000] {
+            let (ins, sel, upd) = bench_selector(cfg, n);
+            println!(
+                "| {:?} | {n} | {ins:.0} | {sel:.0} | {upd:.0} |",
+                cfg
+            );
+        }
+    }
+    println!("\nuniform select is O(1); heaps/prioritized are O(log n); fifo/lifo use a BTree (O(log n)).");
+}

@@ -1,0 +1,68 @@
+//! End-to-end driver (DESIGN.md §4, experiment "E2E"): distributed DQN on
+//! CartPole through a real Reverb server.
+//!
+//! Topology: N actor threads (epsilon-greedy rollouts, PJRT inference,
+//! streaming writers) → prioritized replay table with a
+//! SampleToInsertRatio limiter → learner thread executing the AOT
+//! `qnet_train` HLO, writing |TD| priorities back, and publishing network
+//! parameters to actors through a variable-container table (App. A.2).
+//!
+//! Requires `make artifacts` first. Run:
+//!   cargo run --release --example dqn_cartpole [train_steps]
+//!
+//! Prints the loss curve and episode-return curve; both are recorded in
+//! EXPERIMENTS.md.
+
+use reverb::coordinator::{run_dqn, DqnConfig};
+use reverb::core::table::TableConfig;
+use reverb::net::server::Server;
+
+fn main() -> reverb::Result<()> {
+    let train_steps: u64 = std::env::args()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(300);
+
+    // Replay: PER with exponent 0.6, SPI 8 (each transition trains ~8/64
+    // batches), min 64 items before sampling, generous error buffer.
+    let server = Server::builder()
+        .table(TableConfig::prioritized_replay("replay", 100_000, 0.6, 8.0, 64, 4096.0)?)
+        .table(TableConfig::variable_container("variables"))
+        .checkpoint_dir(std::env::temp_dir().join("reverb_dqn_ckpts"))
+        .bind("127.0.0.1:0")?;
+    println!("reverb server on {}", server.local_addr());
+
+    let config = DqnConfig {
+        server_addr: server.local_addr().to_string(),
+        num_actors: 2,
+        n_step: 3,
+        train_steps,
+        publish_period: 25,
+        actor_refresh_period: 300,
+        ..DqnConfig::default()
+    };
+    let report = run_dqn(config)?;
+
+    println!("\n== loss curve (step, loss) ==");
+    for (step, loss) in report.losses.iter().step_by(report.losses.len().max(20) / 20) {
+        println!("{step:>6} {loss:.5}");
+    }
+
+    println!("\n== episode returns ==");
+    let rets = &report.episode_returns;
+    for (i, chunk) in rets.chunks(rets.len().max(10) / 10).enumerate() {
+        let mean = chunk.iter().sum::<f32>() / chunk.len().max(1) as f32;
+        println!("episodes {:>4}..{:>4}: mean return {mean:.1}", i * chunk.len(), (i + 1) * chunk.len());
+    }
+
+    println!(
+        "\ntrain_steps={} env_steps={} wall={:.1?} realized_SPI={:.2} \
+         train_steps/s={:.1}",
+        report.train_steps,
+        report.env_steps,
+        report.wall,
+        report.realized_spi,
+        report.train_steps as f64 / report.wall.as_secs_f64(),
+    );
+    Ok(())
+}

@@ -1,0 +1,126 @@
+"""AOT lowering: JAX → HLO *text* → `artifacts/` for the Rust runtime.
+
+The interchange format is HLO text, NOT serialized `HloModuleProto` — jax ≥
+0.5 emits protos with 64-bit instruction ids that the `xla` crate's
+xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Outputs (written to --out-dir, default ../artifacts):
+  qnet_infer.hlo.txt   — infer(params..., obs) -> (q,)
+  qnet_train.hlo.txt   — train_step(online..., target..., m..., v..., step,
+                          batch...) -> (new state..., loss, priorities)
+  meta.txt             — key/value manifest the Rust runtime parses
+                          (network sizes, batch, hyperparams, layer shapes)
+
+Python runs ONLY here, at build time (`make artifacts`); the Rust binary is
+self-contained afterwards.
+"""
+
+import argparse
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from compile import model
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (return_tuple calling conv)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def param_specs(obs_dim, hidden, num_actions):
+    """ShapeDtypeStructs of the flat parameter list."""
+    specs = []
+    for d_in, d_out in model.layer_sizes(obs_dim, hidden, num_actions):
+        specs.append(jax.ShapeDtypeStruct((d_in, d_out), jnp.float32))
+        specs.append(jax.ShapeDtypeStruct((d_out,), jnp.float32))
+    return specs
+
+
+def lower_all(obs_dim, hidden, num_actions, batch, infer_batch, gamma, lr):
+    params = param_specs(obs_dim, hidden, num_actions)
+    num_layers = len(params) // 2
+
+    obs_b = jax.ShapeDtypeStruct((batch, obs_dim), jnp.float32)
+    obs_i = jax.ShapeDtypeStruct((infer_batch, obs_dim), jnp.float32)
+    vec = jax.ShapeDtypeStruct((batch,), jnp.float32)
+    ivec = jax.ShapeDtypeStruct((batch,), jnp.int32)
+    scalar = jax.ShapeDtypeStruct((), jnp.float32)
+
+    infer_lowered = jax.jit(model.infer).lower(*params, obs_i)
+
+    train_step = model.make_train_step(num_layers, gamma=gamma, lr=lr)
+    train_args = (
+        *params, *params, *params, *params,  # online, target, m, v
+        scalar, obs_b, ivec, vec, vec, obs_b, vec,
+    )
+    train_lowered = jax.jit(train_step).lower(*train_args)
+    return infer_lowered, train_lowered
+
+
+def write_meta(path, *, obs_dim, hidden, num_actions, batch, infer_batch, gamma, lr):
+    lines = [
+        f"obs_dim {obs_dim}",
+        f"num_actions {num_actions}",
+        f"hidden {' '.join(str(h) for h in hidden)}",
+        f"batch {batch}",
+        f"infer_batch {infer_batch}",
+        f"gamma {gamma}",
+        f"lr {lr}",
+    ]
+    for i, (d_in, d_out) in enumerate(model.layer_sizes(obs_dim, hidden, num_actions)):
+        lines.append(f"layer{i} {d_in} {d_out}")
+    with open(path, "w") as f:
+        f.write("\n".join(lines) + "\n")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument(
+        "--out-dir",
+        default=os.path.join(os.path.dirname(__file__), "..", "..", "artifacts"),
+    )
+    ap.add_argument("--obs-dim", type=int, default=4, help="CartPole observation dim")
+    ap.add_argument("--num-actions", type=int, default=2)
+    ap.add_argument("--hidden", type=int, nargs="+", default=[64, 64])
+    ap.add_argument("--batch", type=int, default=64, help="train batch size")
+    ap.add_argument("--infer-batch", type=int, default=1, help="actor inference batch")
+    ap.add_argument("--gamma", type=float, default=0.99)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    # Back-compat with the scaffold Makefile's `--out artifacts/model.hlo.txt`.
+    ap.add_argument("--out", default=None, help=argparse.SUPPRESS)
+    args = ap.parse_args()
+
+    out_dir = os.path.dirname(args.out) if args.out else args.out_dir
+    os.makedirs(out_dir, exist_ok=True)
+
+    infer_lowered, train_lowered = lower_all(
+        args.obs_dim, args.hidden, args.num_actions, args.batch, args.infer_batch,
+        args.gamma, args.lr,
+    )
+
+    for name, lowered in [("qnet_infer", infer_lowered), ("qnet_train", train_lowered)]:
+        text = to_hlo_text(lowered)
+        path = os.path.join(out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        print(f"wrote {path} ({len(text)} chars)")
+
+    meta_path = os.path.join(out_dir, "meta.txt")
+    write_meta(
+        meta_path,
+        obs_dim=args.obs_dim, hidden=args.hidden, num_actions=args.num_actions,
+        batch=args.batch, infer_batch=args.infer_batch, gamma=args.gamma, lr=args.lr,
+    )
+    print(f"wrote {meta_path}")
+
+
+if __name__ == "__main__":
+    main()

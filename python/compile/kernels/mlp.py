@@ -1,0 +1,150 @@
+"""Layer 1: fused linear(+bias)(+ReLU) Pallas kernels, forward and backward.
+
+TPU-style formulation (DESIGN.md §Hardware-Adaptation): the [B, IN] x
+[IN, OUT] matmul is tiled into VMEM-sized blocks via BlockSpec — grid over
+(B/BM, OUT/BN), with the full IN (contraction) axis resident per tile, f32
+accumulation on the MXU, and the bias-add + ReLU fused into the epilogue so
+activations never round-trip to HBM between the matmul and the
+nonlinearity.
+
+The layer is exposed through `jax.custom_vjp`: the backward pass reuses the
+same tiled Pallas matmul for dX = G @ Wᵀ and dW = Xᵀ @ G (ReLU mask applied
+to G first; dB is a cheap reduction XLA fuses into the mask multiply).
+
+On this image Pallas runs with `interpret=True` (the CPU PJRT plugin cannot
+execute Mosaic custom-calls); the BlockSpec structure is what carries over
+to real TPU. VMEM budgeting for the default tiles is in EXPERIMENTS.md
+§Perf.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default tile sizes: multiples of the 128x128 MXU systolic array / 8x128
+# VPU lanes. A (128, K<=1024, 128) f32 tile set costs
+#   x: 128*1024*4 = 512 KiB, w: 1024*128*4 = 512 KiB, o: 128*128*4 = 64 KiB
+# ~= 1.1 MiB of VMEM — comfortably inside the ~16 MiB/core budget with
+# double buffering.
+BLOCK_B = 128
+BLOCK_OUT = 128
+
+
+def _affine_kernel(x_ref, w_ref, b_ref, o_ref, *, apply_relu):
+    """One (BM, BN) output tile: full-K matmul + bias + optional ReLU."""
+    x = x_ref[...].astype(jnp.float32)
+    w = w_ref[...].astype(jnp.float32)
+    acc = jnp.dot(x, w, preferred_element_type=jnp.float32)
+    acc = acc + b_ref[...].astype(jnp.float32)[None, :]
+    if apply_relu:
+        acc = jnp.maximum(acc, 0.0)
+    o_ref[...] = acc
+
+
+def _affine_call(x, w, b, *, apply_relu, block_b, block_out):
+    batch, d_in = x.shape
+    d_in_w, d_out = w.shape
+    assert d_in == d_in_w, f"contraction mismatch {d_in} vs {d_in_w}"
+    assert b.shape == (d_out,)
+    bm = min(block_b, batch)
+    bn = min(block_out, d_out)
+    grid = (pl.cdiv(batch, bm), pl.cdiv(d_out, bn))
+    return pl.pallas_call(
+        functools.partial(_affine_kernel, apply_relu=apply_relu),
+        out_shape=jax.ShapeDtypeStruct((batch, d_out), jnp.float32),
+        grid=grid,
+        in_specs=[
+            # Activations: tile the batch axis, full K resident.
+            pl.BlockSpec((bm, d_in), lambda i, j: (i, 0)),
+            # Weights: tile the OUT axis, full K resident.
+            pl.BlockSpec((d_in, bn), lambda i, j: (0, j)),
+            # Bias: tile matching the OUT tile.
+            pl.BlockSpec((bn,), lambda i, j: (j,)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(x, w, b)
+
+
+def _matmul_kernel(a_ref, b_ref, o_ref):
+    o_ref[...] = jnp.dot(
+        a_ref[...].astype(jnp.float32),
+        b_ref[...].astype(jnp.float32),
+        preferred_element_type=jnp.float32,
+    )
+
+
+def matmul(a, b, *, block_m=BLOCK_B, block_n=BLOCK_OUT):
+    """Tiled Pallas matmul `a @ b` (used by the backward pass)."""
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2
+    bm = min(block_m, m)
+    bn = min(block_n, n)
+    grid = (pl.cdiv(m, bm), pl.cdiv(n, bn))
+    return pl.pallas_call(
+        _matmul_kernel,
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((k, bn), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        interpret=True,
+    )(a, b)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3,))
+def linear_relu(x, w, b, apply_relu=True):
+    """Fused `relu(x @ w + b)` (or affine only) with a Pallas fwd + bwd.
+
+    Args:
+      x: [B, IN] activations (f32 or bf16).
+      w: [IN, OUT] weights.
+      b: [OUT] bias.
+      apply_relu: fuse ReLU into the epilogue.
+
+    Returns:
+      [B, OUT] f32 activations.
+    """
+    return _affine_call(x, w, b, apply_relu=apply_relu, block_b=BLOCK_B, block_out=BLOCK_OUT)
+
+
+def _linear_relu_fwd(x, w, b, apply_relu):
+    y = _affine_call(x, w, b, apply_relu=apply_relu, block_b=BLOCK_B, block_out=BLOCK_OUT)
+    return y, (x, w, y)
+
+
+def _linear_relu_bwd(apply_relu, res, g):
+    x, w, y = res
+    g = g.astype(jnp.float32)
+    if apply_relu:
+        # y == relu(pre): the mask y > 0 equals pre > 0 almost everywhere.
+        g = g * (y > 0.0).astype(jnp.float32)
+    dx = matmul(g, w.astype(jnp.float32).T)
+    dw = matmul(x.astype(jnp.float32).T, g)
+    db = jnp.sum(g, axis=0)
+    return dx.astype(x.dtype), dw.astype(w.dtype), db.astype(x.dtype)
+
+
+linear_relu.defvjp(_linear_relu_fwd, _linear_relu_bwd)
+
+
+def mlp_forward(params, x):
+    """Q-network forward: fused linear+ReLU layers with an affine head.
+
+    Args:
+      params: list of (w, b) tuples, layer order.
+      x: [B, obs_dim] observations.
+
+    Returns:
+      [B, num_actions] Q-values.
+    """
+    h = x
+    for i, (w, b) in enumerate(params):
+        last = i == len(params) - 1
+        h = linear_relu(h, w, b, not last)
+    return h

@@ -1,0 +1,114 @@
+"""Layer 1: fused double-DQN TD-target + Huber loss + priority kernel.
+
+A pure VPU (elementwise/reduction) fusion: for each batch row, pick the
+online-argmax action, evaluate it under the target network, form the TD
+error against the chosen-action Q-value, and emit both the importance-
+weighted Huber loss and the |TD| priority that flows back to Reverb's
+prioritized table. Blocked over the batch axis so each grid step holds one
+(BLOCK_B, A) tile set in VMEM; A (action count) is small for the benchmark
+domains, making this memory-bound — fusing the five elementwise stages into
+one kernel avoids four HBM round-trips.
+
+Runs with `interpret=True` on this image (see mlp.py).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK_B = 256
+
+
+def _td_kernel(q_chosen_ref, q_no_ref, q_nt_ref, r_ref, d_ref, w_ref, loss_ref, prio_ref, *, gamma, delta):
+    q_no = q_no_ref[...].astype(jnp.float32)  # [BM, A] online Q(s')
+    q_nt = q_nt_ref[...].astype(jnp.float32)  # [BM, A] target Q(s')
+    r = r_ref[...].astype(jnp.float32)  # [BM]
+    d = d_ref[...].astype(jnp.float32)  # [BM]
+    w = w_ref[...].astype(jnp.float32)  # [BM]
+    q_chosen = q_chosen_ref[...].astype(jnp.float32)  # [BM]
+
+    # Double DQN: online argmax, target evaluation — as a max over a mask so
+    # it stays a dense VPU op (no gather).
+    best_mask = q_no == jnp.max(q_no, axis=-1, keepdims=True)
+    # Break ties toward the first action, like argmax.
+    first_best = jnp.cumsum(best_mask.astype(jnp.int32), axis=-1) == 1
+    pick = jnp.logical_and(best_mask, first_best)
+    q_eval = jnp.sum(jnp.where(pick, q_nt, 0.0), axis=-1)
+
+    target = r + gamma * d * q_eval
+    td = q_chosen - target
+
+    abs_err = jnp.abs(td)
+    quad = jnp.minimum(abs_err, delta)
+    lin = abs_err - quad
+    loss_ref[...] = w * (0.5 * quad * quad + delta * lin)
+    prio_ref[...] = abs_err
+
+
+def _td_targets_kernel(q_no_ref, q_nt_ref, r_ref, d_ref, o_ref, *, gamma):
+    q_no = q_no_ref[...].astype(jnp.float32)
+    q_nt = q_nt_ref[...].astype(jnp.float32)
+    best_mask = q_no == jnp.max(q_no, axis=-1, keepdims=True)
+    first_best = jnp.cumsum(best_mask.astype(jnp.int32), axis=-1) == 1
+    pick = jnp.logical_and(best_mask, first_best)
+    q_eval = jnp.sum(jnp.where(pick, q_nt, 0.0), axis=-1)
+    o_ref[...] = r_ref[...].astype(jnp.float32) + gamma * d_ref[...].astype(jnp.float32) * q_eval
+
+
+@functools.partial(jax.jit, static_argnames=("gamma", "block_b"))
+def td_targets(q_next_online, q_next_target, rewards, discounts, *, gamma, block_b=BLOCK_B):
+    """Fused double-DQN TD targets [B] (no gradient path — consumed under
+    `stop_gradient` by the train step)."""
+    batch, num_actions = q_next_online.shape
+    bm = min(block_b, batch)
+    grid = (pl.cdiv(batch, bm),)
+    row = pl.BlockSpec((bm,), lambda i: (i,))
+    mat = pl.BlockSpec((bm, num_actions), lambda i: (i, 0))
+    return pl.pallas_call(
+        functools.partial(_td_targets_kernel, gamma=gamma),
+        out_shape=jax.ShapeDtypeStruct((batch,), jnp.float32),
+        grid=grid,
+        in_specs=[mat, mat, row, row],
+        out_specs=row,
+        interpret=True,
+    )(q_next_online, q_next_target, rewards, discounts)
+
+
+@functools.partial(jax.jit, static_argnames=("gamma", "delta", "block_b"))
+def td_loss_and_priorities(
+    q_chosen, q_next_online, q_next_target, rewards, discounts, weights, *, gamma, delta=1.0, block_b=BLOCK_B
+):
+    """Fused per-example weighted Huber TD loss + |TD| priorities.
+
+    Args:
+      q_chosen: [B] Q(s, a) for the taken actions.
+      q_next_online: [B, A] online net at s'.
+      q_next_target: [B, A] target net at s'.
+      rewards: [B]; discounts: [B] (0 at terminal); weights: [B] importance
+        weights from the prioritized sampler.
+      gamma: scalar discount.
+      delta: Huber transition point.
+
+    Returns:
+      (loss [B], priorities [B]) — both f32.
+    """
+    batch, _num_actions = q_next_online.shape
+    bm = min(block_b, batch)
+    grid = (pl.cdiv(batch, bm),)
+
+    row = pl.BlockSpec((bm,), lambda i: (i,))
+    mat = pl.BlockSpec((bm, _num_actions), lambda i: (i, 0))
+
+    return pl.pallas_call(
+        functools.partial(_td_kernel, gamma=gamma, delta=delta),
+        out_shape=(
+            jax.ShapeDtypeStruct((batch,), jnp.float32),
+            jax.ShapeDtypeStruct((batch,), jnp.float32),
+        ),
+        grid=grid,
+        in_specs=[row, mat, mat, row, row, row],
+        out_specs=(row, row),
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(q_chosen, q_next_online, q_next_target, rewards, discounts, weights)

@@ -1,0 +1,175 @@
+"""Layer 2: the experience *consumer* — a double-DQN learner in JAX.
+
+This is the compute graph that Reverb feeds: a Q-network MLP built from the
+Layer-1 Pallas kernels (`kernels.mlp`), double-DQN TD targets from
+`kernels.td`, per-example Huber loss weighted by the prioritized sampler's
+importance weights, and an inline Adam optimizer. Both entry points
+(`infer`, `train_step`) take and return *flat tuples of arrays* so the
+AOT-lowered HLO has a stable calling convention for the Rust runtime.
+
+Python runs only at build time: `aot.py` lowers these functions once to
+HLO text; the Rust coordinator executes them through PJRT forever after.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels import mlp, td
+
+# ---------------------------------------------------------------------------
+# Network configuration
+# ---------------------------------------------------------------------------
+
+
+def layer_sizes(obs_dim, hidden, num_actions):
+    """[(in, out)] per layer for an MLP obs -> hidden... -> actions."""
+    dims = [obs_dim, *hidden, num_actions]
+    return list(zip(dims[:-1], dims[1:]))
+
+
+def init_params(rng_key, obs_dim, hidden, num_actions):
+    """He-initialized parameters as the flat list [w0, b0, w1, b1, ...]."""
+    flat = []
+    for d_in, d_out in layer_sizes(obs_dim, hidden, num_actions):
+        rng_key, sub = jax.random.split(rng_key)
+        scale = jnp.sqrt(2.0 / d_in)
+        flat.append(jax.random.normal(sub, (d_in, d_out), jnp.float32) * scale)
+        flat.append(jnp.zeros((d_out,), jnp.float32))
+    return flat
+
+
+def unflatten(flat_params):
+    """Flat [w0, b0, w1, b1, ...] -> [(w, b), ...]."""
+    assert len(flat_params) % 2 == 0
+    return [(flat_params[i], flat_params[i + 1]) for i in range(0, len(flat_params), 2)]
+
+
+# ---------------------------------------------------------------------------
+# Entry points (flat signatures for AOT)
+# ---------------------------------------------------------------------------
+
+
+def q_values(flat_params, obs):
+    """[B, A] Q-values via the Pallas MLP."""
+    return mlp.mlp_forward(unflatten(flat_params), obs)
+
+
+def infer(*args):
+    """AOT entry: `infer(w0, b0, ..., obs) -> (q_values,)`."""
+    flat_params, obs = list(args[:-1]), args[-1]
+    return (q_values(flat_params, obs),)
+
+
+def _train_step_impl(
+    online, target, m, v, step, obs, actions, rewards, discounts, next_obs, weights,
+    *, gamma, lr, beta1, beta2, eps, huber_delta,
+):
+    def loss_fn(params):
+        q = q_values(params, obs)  # [B, A]
+        q_chosen = jnp.take_along_axis(q, actions[:, None], axis=-1)[:, 0]
+        # The fused TD-target kernel consumes only next-state values and
+        # batch scalars; wrap in stop_gradient for explicitness.
+        q_next_online = jax.lax.stop_gradient(q_values(params, next_obs))
+        q_next_target = jax.lax.stop_gradient(q_values(target, next_obs))
+        tgt = jax.lax.stop_gradient(
+            td.td_targets(q_next_online, q_next_target, rewards, discounts, gamma=gamma)
+        )
+        td_err = q_chosen - tgt
+        abs_err = jnp.abs(td_err)
+        quad = jnp.minimum(abs_err, huber_delta)
+        lin = abs_err - quad
+        loss_vec = weights * (0.5 * quad * quad + huber_delta * lin)
+        return jnp.mean(loss_vec), abs_err
+
+    (loss, priorities), grads = jax.value_and_grad(loss_fn, has_aux=True)(online)
+
+    # Inline Adam (bias-corrected learning rate form).
+    step = step + 1.0
+    lr_t = lr * jnp.sqrt(1.0 - beta2**step) / (1.0 - beta1**step)
+    new_online, new_m, new_v = [], [], []
+    for p, g, mi, vi in zip(online, grads, m, v):
+        mi = beta1 * mi + (1.0 - beta1) * g
+        vi = beta2 * vi + (1.0 - beta2) * (g * g)
+        p = p - lr_t * mi / (jnp.sqrt(vi) + eps)
+        new_online.append(p)
+        new_m.append(mi)
+        new_v.append(vi)
+
+    return new_online, new_m, new_v, step, loss, priorities
+
+
+def make_train_step(
+    num_layers, gamma=0.99, lr=1e-3, beta1=0.9, beta2=0.999, eps=1e-8, huber_delta=1.0
+):
+    """Build the flat-signature AOT train step for a `num_layers`-layer MLP.
+
+    Flat signature (`P = 2 * num_layers` parameter arrays):
+      inputs:  online[P], target[P], m[P], v[P], step (f32 scalar),
+               obs [B,O] f32, actions [B] i32, rewards [B] f32,
+               discounts [B] f32, next_obs [B,O] f32, weights [B] f32
+      outputs: new_online[P], new_m[P], new_v[P], new_step, loss, priorities
+    """
+    P = 2 * num_layers
+
+    def train_step(*args):
+        assert len(args) == 4 * P + 7, f"expected {4 * P + 7} args, got {len(args)}"
+        online = list(args[0:P])
+        target = list(args[P : 2 * P])
+        m = list(args[2 * P : 3 * P])
+        v = list(args[3 * P : 4 * P])
+        (step, obs, actions, rewards, discounts, next_obs, weights) = args[4 * P :]
+        new_online, new_m, new_v, new_step, loss, priorities = _train_step_impl(
+            online, target, m, v, step, obs, actions, rewards, discounts, next_obs,
+            weights, gamma=gamma, lr=lr, beta1=beta1, beta2=beta2, eps=eps,
+            huber_delta=huber_delta,
+        )
+        return (*new_online, *new_m, *new_v, new_step, loss, priorities)
+
+    return train_step
+
+
+# ---------------------------------------------------------------------------
+# Pure-jnp reference learner (oracle for python/tests/test_model.py)
+# ---------------------------------------------------------------------------
+
+
+def q_values_ref(flat_params, obs):
+    from compile.kernels import ref
+
+    h = obs
+    layers = unflatten(flat_params)
+    for i, (w, b) in enumerate(layers):
+        h = ref.linear_relu_ref(h, w, b, apply_relu=i < len(layers) - 1)
+    return h
+
+
+def train_step_ref(
+    online, target, m, v, step, obs, actions, rewards, discounts, next_obs, weights,
+    *, gamma, lr=1e-3, beta1=0.9, beta2=0.999, eps=1e-8, huber_delta=1.0,
+):
+    """Same computation as `_train_step_impl` with no Pallas anywhere."""
+    from compile.kernels import ref
+
+    def loss_fn(params):
+        q = q_values_ref(params, obs)
+        q_chosen = jnp.take_along_axis(q, actions[:, None], axis=-1)[:, 0]
+        q_next_online = jax.lax.stop_gradient(q_values_ref(params, next_obs))
+        q_next_target = jax.lax.stop_gradient(q_values_ref(target, next_obs))
+        tgt = jax.lax.stop_gradient(
+            ref.td_targets_ref(q_next_online, q_next_target, rewards, discounts, gamma=gamma)
+        )
+        td_err = q_chosen - tgt
+        loss_vec = weights * ref.huber_ref(td_err, delta=huber_delta)
+        return jnp.mean(loss_vec), jnp.abs(td_err)
+
+    (loss, priorities), grads = jax.value_and_grad(loss_fn, has_aux=True)(online)
+    step = step + 1.0
+    lr_t = lr * jnp.sqrt(1.0 - beta2**step) / (1.0 - beta1**step)
+    new_online, new_m, new_v = [], [], []
+    for p, g, mi, vi in zip(online, grads, m, v):
+        mi = beta1 * mi + (1.0 - beta1) * g
+        vi = beta2 * vi + (1.0 - beta2) * (g * g)
+        new_online.append(p - lr_t * mi / (jnp.sqrt(vi) + eps))
+        new_m.append(mi)
+        new_v.append(vi)
+    return new_online, new_m, new_v, step, loss, priorities

@@ -1,0 +1,173 @@
+"""Layer-1 correctness: Pallas kernels vs pure-jnp oracles.
+
+Hypothesis sweeps shapes and dtypes; every comparison is
+`np.testing.assert_allclose` against `kernels.ref`.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import mlp, ref, td
+
+# Keep hypothesis deadline generous: interpret-mode Pallas is slow.
+COMMON = dict(deadline=None, max_examples=25)
+
+
+def rand(rng, shape, dtype=np.float32, scale=1.0):
+    return jnp.asarray(rng.normal(size=shape) * scale, dtype)
+
+
+# ---------------------------------------------------------------------------
+# linear_relu
+# ---------------------------------------------------------------------------
+
+
+@settings(**COMMON)
+@given(
+    batch=st.integers(1, 300),
+    d_in=st.integers(1, 130),
+    d_out=st.integers(1, 200),
+    relu=st.booleans(),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_linear_relu_matches_ref(batch, d_in, d_out, relu, seed):
+    rng = np.random.default_rng(seed)
+    x = rand(rng, (batch, d_in))
+    w = rand(rng, (d_in, d_out))
+    b = rand(rng, (d_out,))
+    got = mlp.linear_relu(x, w, b, relu)
+    want = ref.linear_relu_ref(x, w, b, apply_relu=relu)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+@settings(**COMMON)
+@given(
+    batch=st.integers(1, 64),
+    d_in=st.integers(1, 48),
+    d_out=st.integers(1, 48),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_linear_relu_gradients_match_ref(batch, d_in, d_out, seed):
+    rng = np.random.default_rng(seed)
+    x = rand(rng, (batch, d_in))
+    w = rand(rng, (d_in, d_out))
+    b = rand(rng, (d_out,))
+
+    def k_loss(x, w, b):
+        return jnp.sum(mlp.linear_relu(x, w, b, True) ** 2)
+
+    def r_loss(x, w, b):
+        return jnp.sum(ref.linear_relu_ref(x, w, b) ** 2)
+
+    gk = jax.grad(k_loss, argnums=(0, 1, 2))(x, w, b)
+    gr = jax.grad(r_loss, argnums=(0, 1, 2))(x, w, b)
+    for a, e in zip(gk, gr):
+        np.testing.assert_allclose(a, e, rtol=1e-4, atol=1e-4)
+
+
+def test_linear_relu_bf16_inputs():
+    rng = np.random.default_rng(0)
+    x = rand(rng, (8, 16)).astype(jnp.bfloat16)
+    w = rand(rng, (16, 8)).astype(jnp.bfloat16)
+    b = rand(rng, (8,)).astype(jnp.bfloat16)
+    got = mlp.linear_relu(x, w, b, True)
+    want = ref.linear_relu_ref(x, w, b)
+    assert got.dtype == jnp.float32
+    np.testing.assert_allclose(got, want, rtol=2e-2, atol=2e-2)
+
+
+@pytest.mark.parametrize("batch,d_out", [(1, 1), (128, 128), (129, 127), (257, 3)])
+def test_linear_relu_tile_boundaries(batch, d_out):
+    """Shapes exactly on / straddling the (128, 128) tile grid."""
+    rng = np.random.default_rng(1)
+    x = rand(rng, (batch, 7))
+    w = rand(rng, (7, d_out))
+    b = rand(rng, (d_out,))
+    np.testing.assert_allclose(
+        mlp.linear_relu(x, w, b, True),
+        ref.linear_relu_ref(x, w, b),
+        rtol=1e-5,
+        atol=1e-5,
+    )
+
+
+def test_matmul_matches_jnp():
+    rng = np.random.default_rng(2)
+    a = rand(rng, (100, 30))
+    b = rand(rng, (30, 50))
+    np.testing.assert_allclose(mlp.matmul(a, b), a @ b, rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# TD kernels
+# ---------------------------------------------------------------------------
+
+
+@settings(**COMMON)
+@given(
+    batch=st.integers(1, 600),
+    actions=st.integers(2, 18),
+    gamma=st.floats(0.5, 0.999),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_td_targets_match_ref(batch, actions, gamma, seed):
+    rng = np.random.default_rng(seed)
+    q_no = rand(rng, (batch, actions))
+    q_nt = rand(rng, (batch, actions))
+    r = rand(rng, (batch,))
+    d = jnp.asarray(rng.integers(0, 2, size=(batch,)), jnp.float32)
+    got = td.td_targets(q_no, q_nt, r, d, gamma=gamma)
+    want = ref.td_targets_ref(q_no, q_nt, r, d, gamma=gamma)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+@settings(**COMMON)
+@given(
+    batch=st.integers(1, 400),
+    actions=st.integers(2, 10),
+    delta=st.floats(0.25, 4.0),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_td_loss_and_priorities_match_ref(batch, actions, delta, seed):
+    rng = np.random.default_rng(seed)
+    qc = rand(rng, (batch,), scale=2.0)
+    q_no = rand(rng, (batch, actions))
+    q_nt = rand(rng, (batch, actions))
+    r = rand(rng, (batch,))
+    d = jnp.asarray(rng.integers(0, 2, size=(batch,)), jnp.float32)
+    w = jnp.asarray(rng.uniform(0.1, 1.0, size=(batch,)), jnp.float32)
+    got_l, got_p = td.td_loss_and_priorities(qc, q_no, q_nt, r, d, w, gamma=0.99, delta=delta)
+    want_l, want_p = ref.td_loss_and_priorities_ref(
+        qc, q_no, q_nt, r, d, w, gamma=0.99, delta=delta
+    )
+    np.testing.assert_allclose(got_l, want_l, rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(got_p, want_p, rtol=1e-5, atol=1e-5)
+
+
+def test_td_targets_tie_breaking_matches_argmax():
+    """Duplicate maxima must resolve like argmax (first index wins)."""
+    q_no = jnp.asarray([[1.0, 1.0, 0.5], [0.2, 0.9, 0.9]], jnp.float32)
+    q_nt = jnp.asarray([[10.0, 20.0, 30.0], [1.0, 2.0, 3.0]], jnp.float32)
+    r = jnp.zeros((2,), jnp.float32)
+    d = jnp.ones((2,), jnp.float32)
+    got = td.td_targets(q_no, q_nt, r, d, gamma=1.0)
+    np.testing.assert_allclose(got, [10.0, 2.0])
+
+
+def test_terminal_transitions_ignore_bootstrap():
+    q_no = jnp.asarray([[5.0, 1.0]], jnp.float32)
+    q_nt = jnp.asarray([[100.0, 100.0]], jnp.float32)
+    r = jnp.asarray([2.0], jnp.float32)
+    d = jnp.zeros((1,), jnp.float32)  # terminal
+    got = td.td_targets(q_no, q_nt, r, d, gamma=0.99)
+    np.testing.assert_allclose(got, [2.0])
+
+
+def test_huber_regions():
+    e = jnp.asarray([-3.0, -1.0, -0.25, 0.0, 0.25, 1.0, 3.0], jnp.float32)
+    got = ref.huber_ref(e, delta=1.0)
+    want = np.where(np.abs(e) <= 1.0, 0.5 * np.square(e), np.abs(e) - 0.5)
+    np.testing.assert_allclose(got, want, rtol=1e-6)

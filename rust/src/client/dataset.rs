@@ -1,0 +1,144 @@
+//! `Dataset` (§3.9): the iterator analogue of `ReverbDataset` — pipelined,
+//! flow-controlled delivery of samples into a training loop, with the
+//! rate-limiter timeout surfacing as ordinary iterator exhaustion.
+
+use super::sampler::{Sample, Sampler, SamplerOptions};
+use super::Client;
+use crate::error::Result;
+
+/// An iterator over samples from one table.
+///
+/// With `num_workers == 1` and `max_in_flight == 1` the dataset delivers
+/// samples in exact server order, as required when the table uses
+/// deterministic selectors (FIFO queues); more workers/in-flight trade
+/// ordering for throughput.
+pub struct Dataset {
+    sampler: Sampler,
+    finished: bool,
+    delivered: u64,
+}
+
+impl Dataset {
+    pub(crate) fn open(client: &Client, options: SamplerOptions) -> Result<Dataset> {
+        Ok(Dataset {
+            sampler: Sampler::open(client, options)?,
+            finished: false,
+            delivered: 0,
+        })
+    }
+
+    /// Samples delivered so far.
+    pub fn delivered(&self) -> u64 {
+        self.delivered
+    }
+
+    /// Collect the next `n` samples into a batch; `None` if the stream
+    /// ends first (fewer than `n` remaining).
+    pub fn next_batch(&mut self, n: usize) -> Option<Result<Vec<Sample>>> {
+        let mut out = Vec::with_capacity(n);
+        for _ in 0..n {
+            match self.next()? {
+                Ok(s) => out.push(s),
+                Err(e) => return Some(Err(e)),
+            }
+        }
+        Some(Ok(out))
+    }
+}
+
+impl Iterator for Dataset {
+    type Item = Result<Sample>;
+
+    /// `None` once the table's rate-limiter timeout fires (§3.9: "the
+    /// reverb service will signal to the iterator that it is safe to end
+    /// the sequence"). Genuine failures yield `Some(Err(_))`.
+    fn next(&mut self) -> Option<Self::Item> {
+        if self.finished {
+            return None;
+        }
+        match self.sampler.next_sample() {
+            Ok(s) => {
+                self.delivered += 1;
+                Some(Ok(s))
+            }
+            Err(e) if e.is_timeout() => {
+                self.finished = true;
+                None
+            }
+            Err(e) => {
+                self.finished = true;
+                Some(Err(e))
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::client::writer::WriterOptions;
+    use crate::core::table::TableConfig;
+    use crate::core::tensor::Tensor;
+    use crate::net::server::Server;
+
+    #[test]
+    fn dataset_ends_cleanly_on_timeout() {
+        let server = Server::builder()
+            .table(TableConfig::queue("q", 100))
+            .bind("127.0.0.1:0")
+            .unwrap();
+        let client = Client::connect(server.local_addr().to_string()).unwrap();
+        let mut w = client.writer(WriterOptions::default()).unwrap();
+        for i in 0..5 {
+            w.append(vec![Tensor::from_f32(&[1], &[i as f32]).unwrap()])
+                .unwrap();
+            w.create_item("q", 1, 1.0).unwrap();
+        }
+        w.flush().unwrap();
+
+        let ds = client
+            .dataset(SamplerOptions::new("q").with_timeout_ms(100))
+            .unwrap();
+        let values: Vec<f32> = ds
+            .map(|r| r.unwrap().data[0].to_f32().unwrap()[0])
+            .collect();
+        // Queue: exactly the 5 items, in order, then end-of-sequence.
+        assert_eq!(values, vec![0., 1., 2., 3., 4.]);
+    }
+
+    #[test]
+    fn next_batch_collects_n() {
+        let server = Server::builder()
+            .table(TableConfig::uniform_replay("r", 100))
+            .bind("127.0.0.1:0")
+            .unwrap();
+        let client = Client::connect(server.local_addr().to_string()).unwrap();
+        let mut w = client.writer(WriterOptions::default()).unwrap();
+        for i in 0..3 {
+            w.append(vec![Tensor::from_f32(&[1], &[i as f32]).unwrap()])
+                .unwrap();
+            w.create_item("r", 1, 1.0).unwrap();
+        }
+        w.flush().unwrap();
+        let mut ds = client
+            .dataset(SamplerOptions::new("r").with_timeout_ms(1000))
+            .unwrap();
+        let batch = ds.next_batch(8).unwrap().unwrap();
+        assert_eq!(batch.len(), 8);
+        assert_eq!(ds.delivered(), 8);
+    }
+
+    #[test]
+    fn failure_surfaces_once_then_none() {
+        let server = Server::builder()
+            .table(TableConfig::uniform_replay("r", 100))
+            .bind("127.0.0.1:0")
+            .unwrap();
+        let client = Client::connect(server.local_addr().to_string()).unwrap();
+        let mut ds = client
+            .dataset(SamplerOptions::new("does_not_exist").with_timeout_ms(100))
+            .unwrap();
+        assert!(ds.next().unwrap().is_err());
+        assert!(ds.next().is_none());
+    }
+}

@@ -1,0 +1,181 @@
+//! Reverb client (§3.8): wraps the wire protocol in a higher-level API for
+//! writing, mutating, and reading data.
+//!
+//! - [`Writer`] streams sequential steps and creates items (§4 examples).
+//! - [`Sampler`] manages a pool of long-lived sample streams with
+//!   flow-controlled prefetching.
+//! - [`Dataset`] is the iterator analogue of `ReverbDataset` (§3.9).
+//! - [`ClientPool`] shards operations across independent servers (§3.6).
+
+pub mod dataset;
+pub mod pool;
+pub mod sampler;
+pub mod writer;
+
+pub use dataset::Dataset;
+pub use pool::ClientPool;
+pub use sampler::{Sample, Sampler, SamplerOptions};
+pub use writer::{Writer, WriterOptions};
+
+use crate::core::table::TableInfo;
+use crate::error::{Error, Result};
+use crate::net::wire::{error_from_code, Message};
+use crate::util::KeyGenerator;
+use std::io::{BufReader, BufWriter, Write as _};
+use std::net::TcpStream;
+use std::sync::Arc;
+
+/// A synchronous framed connection with request-id bookkeeping.
+pub(crate) struct Conn {
+    reader: BufReader<TcpStream>,
+    writer: BufWriter<TcpStream>,
+    next_id: u64,
+}
+
+impl Conn {
+    pub(crate) fn connect(addr: &str) -> Result<Conn> {
+        let stream = TcpStream::connect(addr)?;
+        stream.set_nodelay(true)?;
+        Ok(Conn {
+            reader: BufReader::with_capacity(256 * 1024, stream.try_clone()?),
+            writer: BufWriter::with_capacity(256 * 1024, stream),
+            next_id: 1,
+        })
+    }
+
+    pub(crate) fn next_id(&mut self) -> u64 {
+        let id = self.next_id;
+        self.next_id += 1;
+        id
+    }
+
+    /// Send without waiting for a reply (pipelining).
+    pub(crate) fn send(&mut self, msg: &Message) -> Result<()> {
+        msg.write_frame(&mut self.writer)
+    }
+
+    pub(crate) fn flush(&mut self) -> Result<()> {
+        self.writer.flush()?;
+        Ok(())
+    }
+
+    /// Receive the next frame.
+    pub(crate) fn recv(&mut self) -> Result<Message> {
+        Message::read_frame(&mut self.reader)
+    }
+
+    /// Synchronous call: send, flush, await the matching reply.
+    pub(crate) fn call(&mut self, msg: &Message) -> Result<Message> {
+        self.send(msg)?;
+        self.flush()?;
+        self.recv()
+    }
+
+    /// Await an `Ack` for `id`; convert `Err` frames into errors.
+    pub(crate) fn expect_ack(&mut self, id: u64) -> Result<String> {
+        match self.recv()? {
+            Message::Ack { id: got, detail } if got == id => Ok(detail),
+            Message::Ack { id: got, .. } => Err(Error::Decode(format!(
+                "out-of-order ack: expected {id}, got {got}"
+            ))),
+            Message::Err { code, message, .. } => Err(error_from_code(code, message)),
+            other => Err(Error::Decode(format!("unexpected reply {other:?}"))),
+        }
+    }
+}
+
+/// Client handle for one Reverb server. Cheap to clone; each [`Writer`] /
+/// [`Sampler`] opens its own long-lived connection.
+#[derive(Clone)]
+pub struct Client {
+    addr: String,
+    keys: Arc<KeyGenerator>,
+}
+
+impl Client {
+    /// Connect to `addr` ("host:port"), verifying the server responds.
+    pub fn connect(addr: impl Into<String>) -> Result<Client> {
+        let client = Client {
+            addr: addr.into(),
+            keys: Arc::new(KeyGenerator::new()),
+        };
+        client.server_info()?; // fail fast on bad address
+        Ok(client)
+    }
+
+    pub fn addr(&self) -> &str {
+        &self.addr
+    }
+
+    pub(crate) fn key_gen(&self) -> Arc<KeyGenerator> {
+        self.keys.clone()
+    }
+
+    /// Table infos (sizes, insert/sample counts, rate-limiter cursor).
+    pub fn server_info(&self) -> Result<Vec<(String, TableInfo)>> {
+        let mut conn = Conn::connect(&self.addr)?;
+        let id = conn.next_id();
+        match conn.call(&Message::InfoRequest { id })? {
+            Message::Info { tables, .. } => Ok(tables),
+            Message::Err { code, message, .. } => Err(error_from_code(code, message)),
+            other => Err(Error::Decode(format!("unexpected reply {other:?}"))),
+        }
+    }
+
+    /// Update priorities and/or delete items (client-side `mutate`).
+    pub fn mutate_priorities(
+        &self,
+        table: &str,
+        updates: &[(u64, f64)],
+        deletes: &[u64],
+    ) -> Result<()> {
+        let mut conn = Conn::connect(&self.addr)?;
+        let id = conn.next_id();
+        conn.send(&Message::MutatePriorities {
+            id,
+            table: table.into(),
+            updates: updates.to_vec(),
+            deletes: deletes.to_vec(),
+        })?;
+        conn.flush()?;
+        conn.expect_ack(id)?;
+        Ok(())
+    }
+
+    /// Remove all items from a table.
+    pub fn reset(&self, table: &str) -> Result<()> {
+        let mut conn = Conn::connect(&self.addr)?;
+        let id = conn.next_id();
+        conn.send(&Message::Reset {
+            id,
+            table: table.into(),
+        })?;
+        conn.flush()?;
+        conn.expect_ack(id)?;
+        Ok(())
+    }
+
+    /// Trigger a server-side checkpoint (§3.7); returns its path.
+    pub fn checkpoint(&self) -> Result<String> {
+        let mut conn = Conn::connect(&self.addr)?;
+        let id = conn.next_id();
+        conn.send(&Message::Checkpoint { id })?;
+        conn.flush()?;
+        conn.expect_ack(id)
+    }
+
+    /// Open a streaming [`Writer`].
+    pub fn writer(&self, options: WriterOptions) -> Result<Writer> {
+        Writer::open(self, options)
+    }
+
+    /// Open a multi-stream [`Sampler`].
+    pub fn sampler(&self, options: SamplerOptions) -> Result<Sampler> {
+        Sampler::open(self, options)
+    }
+
+    /// Open a [`Dataset`] iterator over a table.
+    pub fn dataset(&self, options: SamplerOptions) -> Result<Dataset> {
+        Dataset::open(self, options)
+    }
+}

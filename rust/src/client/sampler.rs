@@ -1,0 +1,392 @@
+//! Multi-stream sampler (§3.8–3.9).
+//!
+//! A `Sampler` manages a pool of worker threads, each holding one
+//! long-lived connection to the server. Workers pipeline up to
+//! `max_in_flight_samples_per_worker` sample requests (flow control),
+//! decompress responses *client-side*, and push materialized samples into a
+//! bounded channel. A `rate_limiter_timeout` on the server maps to a clean
+//! end-of-sequence here (§3.9: "similar to reaching the end of the file").
+
+use super::{Client, Conn};
+use crate::core::chunk::Chunk;
+use crate::core::tensor::Tensor;
+use crate::error::{Error, Result};
+use crate::net::wire::{error_from_code, Message, WireSampleInfo};
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{Receiver, SyncSender, TrySendError};
+use std::sync::Arc;
+
+/// Sampler configuration.
+#[derive(Clone, Debug)]
+pub struct SamplerOptions {
+    /// Table to sample from.
+    pub table: String,
+    /// Number of worker streams. Use 1 for exact-order delivery with
+    /// deterministic selectors (§3.9).
+    pub num_workers: usize,
+    /// Outstanding sample requests per worker (prefetch depth). 1 means the
+    /// next sample is requested only after the previous was consumed.
+    pub max_in_flight_samples_per_worker: usize,
+    /// Samples fetched per request (server batches under one table lock).
+    pub batch_size: u32,
+    /// Server-side rate-limiter timeout; on expiry the stream ends
+    /// (`None` from [`Sampler::next_sample`]'s iterator wrapper / an
+    /// `Error::RateLimiterTimeout` here). `u64::MAX` = wait forever.
+    pub rate_limiter_timeout_ms: u64,
+}
+
+impl SamplerOptions {
+    pub fn new(table: impl Into<String>) -> Self {
+        SamplerOptions {
+            table: table.into(),
+            num_workers: 1,
+            max_in_flight_samples_per_worker: 4,
+            batch_size: 1,
+            rate_limiter_timeout_ms: u64::MAX,
+        }
+    }
+
+    pub fn with_workers(mut self, n: usize) -> Self {
+        self.num_workers = n.max(1);
+        self
+    }
+
+    pub fn with_max_in_flight(mut self, n: usize) -> Self {
+        self.max_in_flight_samples_per_worker = n.max(1);
+        self
+    }
+
+    pub fn with_batch_size(mut self, n: u32) -> Self {
+        self.batch_size = n.max(1);
+        self
+    }
+
+    pub fn with_timeout_ms(mut self, ms: u64) -> Self {
+        self.rate_limiter_timeout_ms = ms;
+        self
+    }
+}
+
+/// One materialized sample: item metadata + decoded per-field tensors
+/// (leading axis = item length).
+#[derive(Clone, Debug)]
+pub struct Sample {
+    pub key: u64,
+    pub table: String,
+    pub priority: f64,
+    pub times_sampled: u32,
+    /// Selector probability (importance weights for PER).
+    pub probability: f64,
+    /// Table size at sampling time.
+    pub table_size: u64,
+    /// One tensor per signature field.
+    pub data: Vec<Tensor>,
+}
+
+/// Materialize a wire sample from its (deduplicated) chunk set.
+pub(crate) fn materialize_sample(
+    info: &WireSampleInfo,
+    chunks: &HashMap<u64, Arc<Chunk>>,
+) -> Result<Sample> {
+    let item_chunks = info
+        .item
+        .chunk_keys
+        .iter()
+        .map(|k| chunks.get(k).cloned().ok_or(Error::ChunkNotFound(*k)))
+        .collect::<Result<Vec<_>>>()?;
+    let item = crate::core::item::Item::new(
+        info.item.key,
+        info.item.table.clone(),
+        info.item.priority,
+        item_chunks,
+        info.item.offset as usize,
+        info.item.length as usize,
+    )?;
+    let data = item.materialize()?;
+    Ok(Sample {
+        key: info.item.key,
+        table: info.item.table.clone(),
+        priority: info.item.priority,
+        times_sampled: info.item.times_sampled,
+        probability: info.probability,
+        table_size: info.table_size,
+        data,
+    })
+}
+
+enum Event {
+    Sample(Sample),
+    /// Worker hit the rate-limiter timeout → end of sequence.
+    End,
+    Fail(Error),
+}
+
+/// A pool of sampling streams feeding one consumer.
+pub struct Sampler {
+    rx: Receiver<Event>,
+    stop: Arc<AtomicBool>,
+    workers: Vec<std::thread::JoinHandle<()>>,
+    live_workers: usize,
+}
+
+impl Sampler {
+    pub(crate) fn open(client: &Client, options: SamplerOptions) -> Result<Sampler> {
+        let capacity =
+            options.num_workers * options.max_in_flight_samples_per_worker * options.batch_size as usize;
+        let (tx, rx) = std::sync::mpsc::sync_channel(capacity.max(1));
+        let stop = Arc::new(AtomicBool::new(false));
+        let mut workers = Vec::with_capacity(options.num_workers);
+        for _ in 0..options.num_workers {
+            let conn = Conn::connect(client.addr())?;
+            let tx = tx.clone();
+            let stop = stop.clone();
+            let opts = options.clone();
+            workers.push(
+                std::thread::Builder::new()
+                    .name("reverb-sampler".into())
+                    .spawn(move || worker_loop(conn, opts, tx, stop))
+                    .expect("spawn sampler worker"),
+            );
+        }
+        Ok(Sampler {
+            rx,
+            stop,
+            live_workers: workers.len(),
+            workers,
+        })
+    }
+
+    /// Next sample. `Err(RateLimiterTimeout)` = clean end of sequence
+    /// (all workers exhausted); other errors are failures.
+    pub fn next_sample(&mut self) -> Result<Sample> {
+        loop {
+            if self.live_workers == 0 {
+                return Err(Error::RateLimiterTimeout(std::time::Duration::ZERO));
+            }
+            match self.rx.recv() {
+                Ok(Event::Sample(s)) => return Ok(s),
+                Ok(Event::End) => {
+                    self.live_workers -= 1;
+                }
+                Ok(Event::Fail(e)) => return Err(e),
+                Err(_) => return Err(Error::Cancelled("sampler workers gone".into())),
+            }
+        }
+    }
+
+    /// Collect `n` samples (blocking).
+    pub fn next_batch(&mut self, n: usize) -> Result<Vec<Sample>> {
+        (0..n).map(|_| self.next_sample()).collect()
+    }
+
+    /// Signal workers to stop and join them.
+    pub fn stop(&mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        // Drain so workers blocked on a full channel can exit.
+        while self.rx.try_recv().is_ok() {}
+        for h in self.workers.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for Sampler {
+    fn drop(&mut self) {
+        self.stop();
+    }
+}
+
+fn worker_loop(mut conn: Conn, opts: SamplerOptions, tx: SyncSender<Event>, stop: Arc<AtomicBool>) {
+    let result = (|| -> Result<()> {
+        let mut outstanding = 0usize;
+        loop {
+            if stop.load(Ordering::SeqCst) {
+                return Ok(());
+            }
+            // Fill the pipeline window.
+            while outstanding < opts.max_in_flight_samples_per_worker {
+                let id = conn.next_id();
+                conn.send(&Message::SampleRequest {
+                    id,
+                    table: opts.table.clone(),
+                    num_samples: opts.batch_size,
+                    timeout_ms: opts.rate_limiter_timeout_ms.min(u64::MAX / 2),
+                })?;
+                outstanding += 1;
+            }
+            conn.flush()?;
+            // Consume one response.
+            match conn.recv()? {
+                Message::SampleData { infos, chunks, .. } => {
+                    outstanding -= 1;
+                    let map: HashMap<u64, Arc<Chunk>> =
+                        chunks.into_iter().map(|c| (c.key, Arc::new(c))).collect();
+                    for info in &infos {
+                        let sample = materialize_sample(info, &map)?;
+                        if push(&tx, &stop, Event::Sample(sample))? {
+                            return Ok(());
+                        }
+                    }
+                }
+                Message::Err { code, message, .. } => {
+                    let e = error_from_code(code, message);
+                    if e.is_timeout() {
+                        return Ok(()); // clean end of sequence
+                    }
+                    return Err(e);
+                }
+                other => {
+                    return Err(Error::Decode(format!("unexpected reply {other:?}")));
+                }
+            }
+        }
+    })();
+    match result {
+        Ok(()) => {
+            // Deliver the end-of-sequence marker even if the channel is
+            // momentarily full; ignore a disconnected consumer.
+            let _ = tx.send(Event::End);
+        }
+        Err(e) => {
+            let _ = tx.send(Event::Fail(e));
+        }
+    }
+}
+
+/// Push with stop-awareness; returns Ok(true) if the worker should exit.
+fn push(tx: &SyncSender<Event>, stop: &AtomicBool, ev: Event) -> Result<bool> {
+    let mut ev = ev;
+    loop {
+        if stop.load(Ordering::SeqCst) {
+            return Ok(true);
+        }
+        match tx.try_send(ev) {
+            Ok(()) => return Ok(false),
+            Err(TrySendError::Full(back)) => {
+                ev = back;
+                std::thread::sleep(std::time::Duration::from_micros(200));
+            }
+            Err(TrySendError::Disconnected(_)) => return Ok(true),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::client::writer::WriterOptions;
+    use crate::core::table::TableConfig;
+    use crate::net::server::Server;
+
+    fn fill(server: &Server, client: &Client, table: &str, n: usize) {
+        let mut w = client.writer(WriterOptions::default()).unwrap();
+        for i in 0..n {
+            w.append(vec![Tensor::from_f32(&[1], &[i as f32]).unwrap()])
+                .unwrap();
+            w.create_item(table, 1, 1.0 + i as f64).unwrap();
+        }
+        w.flush().unwrap();
+        assert_eq!(server.table(table).unwrap().size(), n);
+    }
+
+    fn start() -> (Server, Client) {
+        let server = Server::builder()
+            .table(TableConfig::uniform_replay("replay", 1000))
+            .table(TableConfig::queue("queue", 100))
+            .bind("127.0.0.1:0")
+            .unwrap();
+        let client = Client::connect(server.local_addr().to_string()).unwrap();
+        (server, client)
+    }
+
+    #[test]
+    fn samples_flow_with_prefetch() {
+        let (server, client) = start();
+        fill(&server, &client, "replay", 20);
+        let mut s = client
+            .sampler(
+                SamplerOptions::new("replay")
+                    .with_workers(2)
+                    .with_max_in_flight(4)
+                    .with_batch_size(2),
+            )
+            .unwrap();
+        for _ in 0..50 {
+            let sample = s.next_sample().unwrap();
+            assert_eq!(sample.table, "replay");
+            assert_eq!(sample.data.len(), 1);
+            assert_eq!(sample.data[0].shape(), &[1, 1]);
+            assert!((1.0..=20.0).contains(&sample.priority));
+        }
+        s.stop();
+    }
+
+    #[test]
+    fn queue_exact_order_single_stream() {
+        let (server, client) = start();
+        fill(&server, &client, "queue", 10);
+        let mut s = client
+            .sampler(
+                SamplerOptions::new("queue")
+                    .with_workers(1)
+                    .with_max_in_flight(1)
+                    .with_timeout_ms(100),
+            )
+            .unwrap();
+        let mut got = Vec::new();
+        loop {
+            match s.next_sample() {
+                Ok(sample) => got.push(sample.data[0].to_f32().unwrap()[0]),
+                Err(e) if e.is_timeout() => break,
+                Err(e) => panic!("{e}"),
+            }
+        }
+        assert_eq!(got, (0..10).map(|i| i as f32).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn timeout_is_end_of_sequence() {
+        let (_server, client) = start();
+        let mut s = client
+            .sampler(SamplerOptions::new("replay").with_timeout_ms(50))
+            .unwrap();
+        let err = s.next_sample().unwrap_err();
+        assert!(err.is_timeout());
+    }
+
+    #[test]
+    fn missing_table_is_failure_not_eos() {
+        let (_server, client) = start();
+        let mut s = client
+            .sampler(SamplerOptions::new("missing").with_timeout_ms(50))
+            .unwrap();
+        let err = s.next_sample().unwrap_err();
+        assert!(matches!(err, Error::TableNotFound(_)), "{err}");
+    }
+
+    #[test]
+    fn probability_reflects_prioritization() {
+        let server = Server::builder()
+            .table(
+                TableConfig::prioritized_replay("per", 100, 1.0, 1000.0, 1, 1000.0).unwrap(),
+            )
+            .bind("127.0.0.1:0")
+            .unwrap();
+        let client = Client::connect(server.local_addr().to_string()).unwrap();
+        let mut w = client.writer(WriterOptions::default()).unwrap();
+        for (i, p) in [1.0f64, 3.0].iter().enumerate() {
+            w.append(vec![Tensor::from_f32(&[1], &[i as f32]).unwrap()])
+                .unwrap();
+            w.create_item("per", 1, *p).unwrap();
+        }
+        w.flush().unwrap();
+        let mut s = client.sampler(SamplerOptions::new("per")).unwrap();
+        for _ in 0..20 {
+            let sample = s.next_sample().unwrap();
+            let expect = sample.priority / 4.0;
+            assert!((sample.probability - expect).abs() < 1e-9);
+            assert_eq!(sample.table_size, 2);
+        }
+    }
+}

@@ -1,0 +1,474 @@
+//! Streaming writer (§3.8, examples §4.1–4.2).
+//!
+//! `append` pushes a step into a local buffer; every `chunk_length` steps a
+//! chunk is cut, compressed, and streamed to the server. `create_item`
+//! registers an item over the most recent `num_timesteps` steps; items wait
+//! in a local buffer until every chunk they reference has been transmitted
+//! ("Waiting for the Chunk to be sent before Items makes it safe for
+//! multiple items to reference the same data without sending it more than
+//! once"). `flush`/`end_episode` force out buffered steps and items.
+//!
+//! Acknowledgements are pipelined: up to `max_in_flight_items` CreateItem
+//! requests may be outstanding before the writer blocks on acks.
+
+use super::{Client, Conn};
+use crate::core::chunk::{ChunkBuilder, Compression};
+use crate::core::tensor::Tensor;
+use crate::error::{Error, Result};
+use crate::net::wire::{Message, WireItem};
+use crate::util::KeyGenerator;
+use std::collections::VecDeque;
+use std::sync::Arc;
+
+/// Writer configuration.
+#[derive(Clone, Debug)]
+pub struct WriterOptions {
+    /// Steps per chunk (the `K` of §3.2). Pick `N mod K == 0` relative to
+    /// item lengths `N` to avoid sampling overhead (Fig. 3).
+    pub chunk_length: usize,
+    /// Max unacknowledged CreateItem requests before `create_item` blocks.
+    pub max_in_flight_items: usize,
+    /// Column compression for cut chunks.
+    pub compression: Compression,
+    /// Server-side insert timeout per item (rate-limiter blocking).
+    pub insert_timeout_ms: u64,
+}
+
+impl Default for WriterOptions {
+    fn default() -> Self {
+        WriterOptions {
+            chunk_length: 1,
+            max_in_flight_items: 64,
+            compression: Compression::default_fast(),
+            insert_timeout_ms: 60_000,
+        }
+    }
+}
+
+impl WriterOptions {
+    pub fn with_chunk_length(mut self, n: usize) -> Self {
+        self.chunk_length = n;
+        self
+    }
+
+    pub fn with_compression(mut self, c: Compression) -> Self {
+        self.compression = c;
+        self
+    }
+
+    pub fn with_max_in_flight_items(mut self, n: usize) -> Self {
+        self.max_in_flight_items = n.max(1);
+        self
+    }
+
+    pub fn with_insert_timeout_ms(mut self, ms: u64) -> Self {
+        self.insert_timeout_ms = ms;
+        self
+    }
+}
+
+/// Metadata of a chunk already streamed to the server.
+#[derive(Clone, Copy, Debug)]
+struct SentChunk {
+    key: u64,
+    start: u64,
+    len: usize,
+}
+
+/// A pending item waiting for its chunks to be cut/transmitted.
+struct PendingItem {
+    table: String,
+    priority: f64,
+    /// Step range `[start, end)` in episode coordinates.
+    start: u64,
+    end: u64,
+}
+
+/// Streaming writer over one long-lived connection.
+pub struct Writer {
+    conn: Conn,
+    keys: Arc<KeyGenerator>,
+    options: WriterOptions,
+    builder: ChunkBuilder,
+    /// Chunks already transmitted, oldest first.
+    sent_chunks: VecDeque<SentChunk>,
+    pending_items: VecDeque<PendingItem>,
+    /// Outstanding (unacked) CreateItem request ids.
+    in_flight: VecDeque<u64>,
+    /// Items successfully created (acked) over this writer's lifetime.
+    items_created: u64,
+    /// Steps appended over this writer's lifetime (across episodes).
+    steps_appended: u64,
+}
+
+impl Writer {
+    pub(crate) fn open(client: &Client, options: WriterOptions) -> Result<Writer> {
+        assert!(options.chunk_length > 0, "chunk_length must be positive");
+        Ok(Writer {
+            conn: Conn::connect(client.addr())?,
+            keys: client.key_gen(),
+            builder: ChunkBuilder::new(options.chunk_length, options.compression),
+            options,
+            sent_chunks: VecDeque::new(),
+            pending_items: VecDeque::new(),
+            in_flight: VecDeque::new(),
+            items_created: 0,
+            steps_appended: 0,
+        })
+    }
+
+    /// Append one step (a row of tensors in signature order).
+    pub fn append(&mut self, step: Vec<Tensor>) -> Result<()> {
+        self.steps_appended += 1;
+        let key = self.keys.next_key();
+        if let Some(chunk) = self.builder.append(key, step)? {
+            self.transmit_chunk(chunk)?;
+        }
+        self.maybe_send_pending()?;
+        Ok(())
+    }
+
+    /// Create an item over the `num_timesteps` most recently appended
+    /// steps (§4.1 overlapping trajectories). The item is sent once all
+    /// referenced chunks have been cut & transmitted; call [`Writer::flush`]
+    /// to force.
+    pub fn create_item(&mut self, table: &str, num_timesteps: usize, priority: f64) -> Result<()> {
+        let end = self.builder.next_sequence();
+        if (num_timesteps as u64) > end {
+            return Err(Error::InvalidArgument(format!(
+                "item of {num_timesteps} steps but only {end} appended"
+            )));
+        }
+        if num_timesteps == 0 {
+            return Err(Error::InvalidArgument("item of zero steps".into()));
+        }
+        let start = end - num_timesteps as u64;
+        // The referenced range must still be coverable: its chunks may have
+        // been pruned if it is very old.
+        if let Some(first) = self.sent_chunks.front() {
+            if start < first.start && end <= first.start {
+                return Err(Error::InvalidArgument(
+                    "item references steps older than the writer history".into(),
+                ));
+            }
+        }
+        self.pending_items.push_back(PendingItem {
+            table: table.into(),
+            priority,
+            start,
+            end,
+        });
+        self.maybe_send_pending()
+    }
+
+    /// Force out any buffered steps as a (short) chunk and send all pending
+    /// items, then wait for every outstanding ack.
+    pub fn flush(&mut self) -> Result<()> {
+        if self.builder.buffered_steps() > 0 && !self.pending_items.is_empty() {
+            let key = self.keys.next_key();
+            if let Some(chunk) = self.builder.flush(key)? {
+                self.transmit_chunk(chunk)?;
+            }
+        }
+        self.maybe_send_pending()?;
+        if !self.pending_items.is_empty() {
+            return Err(Error::InvalidArgument(
+                "pending items reference steps never appended".into(),
+            ));
+        }
+        self.conn.flush()?;
+        self.drain_acks(0)?;
+        Ok(())
+    }
+
+    /// Flush and reset episode state: the next append starts step 0 of a
+    /// new episode; items can no longer reference earlier steps.
+    pub fn end_episode(&mut self) -> Result<()> {
+        self.flush()?;
+        self.builder.reset();
+        self.sent_chunks.clear();
+        Ok(())
+    }
+
+    /// Number of items acknowledged by the server so far.
+    pub fn items_created(&self) -> u64 {
+        self.items_created
+    }
+
+    /// Total steps appended (across episodes).
+    pub fn steps_appended(&self) -> u64 {
+        self.steps_appended
+    }
+
+    fn transmit_chunk(&mut self, chunk: crate::core::chunk::Chunk) -> Result<()> {
+        self.sent_chunks.push_back(SentChunk {
+            key: chunk.key,
+            start: chunk.sequence_start,
+            len: chunk.num_steps,
+        });
+        self.conn.send(&Message::InsertChunks {
+            chunks: vec![chunk],
+        })?;
+        self.prune_history();
+        Ok(())
+    }
+
+    /// Drop sent-chunk metadata that no pending or future item can
+    /// reference. A chunk is prunable once it ends before the earliest
+    /// pending item's start — and, conservatively, we always keep the most
+    /// recent 64 chunks so future `create_item` calls can look back.
+    fn prune_history(&mut self) {
+        let pending_min = self
+            .pending_items
+            .front()
+            .map(|p| p.start)
+            .unwrap_or(u64::MAX);
+        while self.sent_chunks.len() > 64 {
+            let front = self.sent_chunks.front().expect("len > 64");
+            let front_end = front.start + front.len as u64;
+            if front_end <= pending_min.min(self.oldest_reachable_step()) {
+                self.sent_chunks.pop_front();
+            } else {
+                break;
+            }
+        }
+    }
+
+    /// Steps older than this can never be referenced again (we keep a
+    /// generous window of 4096 steps of history).
+    fn oldest_reachable_step(&self) -> u64 {
+        self.builder.next_sequence().saturating_sub(4096)
+    }
+
+    /// Send every pending item whose chunk span is fully transmitted.
+    fn maybe_send_pending(&mut self) -> Result<()> {
+        while let Some(p) = self.pending_items.front() {
+            let Some(chunk_keys) = self.cover(p.start, p.end) else {
+                break;
+            };
+            let p = self.pending_items.pop_front().expect("front exists");
+            let first_chunk_start = self
+                .sent_chunks
+                .iter()
+                .find(|c| c.key == chunk_keys[0])
+                .expect("cover() returned sent chunks")
+                .start;
+            let id = self.conn.next_id();
+            let item = WireItem {
+                key: self.keys.next_key(),
+                table: p.table.clone(),
+                priority: p.priority,
+                chunk_keys,
+                offset: p.start - first_chunk_start,
+                length: p.end - p.start,
+                times_sampled: 0,
+            };
+            self.conn.send(&Message::CreateItem {
+                id,
+                item,
+                timeout_ms: self.options.insert_timeout_ms,
+            })?;
+            self.in_flight.push_back(id);
+            // Flush eagerly so the server overlaps with our next append
+            // (measured faster than deferring the flush to the window
+            // boundary — see EXPERIMENTS.md §Perf); block on acks only
+            // when the pipeline window is full.
+            self.conn.flush()?;
+            self.drain_acks(self.options.max_in_flight_items)?;
+        }
+        Ok(())
+    }
+
+    /// Chunk keys covering `[start, end)`, or None if not fully chunked yet.
+    fn cover(&self, start: u64, end: u64) -> Option<Vec<u64>> {
+        let mut keys = Vec::new();
+        let mut covered_to: Option<u64> = None;
+        for c in &self.sent_chunks {
+            let c_end = c.start + c.len as u64;
+            if c_end <= start || c.start >= end {
+                continue;
+            }
+            match covered_to {
+                None => {
+                    if c.start > start {
+                        return None; // front of range not covered
+                    }
+                    covered_to = Some(c_end);
+                }
+                Some(to) => {
+                    debug_assert_eq!(c.start, to, "sent chunks are contiguous");
+                    covered_to = Some(c_end);
+                }
+            }
+            keys.push(c.key);
+            if covered_to.unwrap() >= end {
+                return Some(keys);
+            }
+        }
+        None
+    }
+
+    /// Block until at most `max_outstanding` acks remain outstanding.
+    fn drain_acks(&mut self, max_outstanding: usize) -> Result<()> {
+        while self.in_flight.len() > max_outstanding {
+            // Pop before awaiting: the server sends exactly one reply per
+            // request, so even an Err reply consumes this id — leaving it
+            // queued would make a later drain re-read a reply that never
+            // comes.
+            let id = self.in_flight.pop_front().expect("non-empty");
+            self.conn.expect_ack(id)?;
+            self.items_created += 1;
+        }
+        Ok(())
+    }
+}
+
+impl Drop for Writer {
+    fn drop(&mut self) {
+        let _ = self.flush();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::table::TableConfig;
+    use crate::net::server::Server;
+
+    fn step(v: f32) -> Vec<Tensor> {
+        vec![Tensor::from_f32(&[2], &[v, v + 0.5]).unwrap()]
+    }
+
+    fn start() -> (Server, Client) {
+        let server = Server::builder()
+            .table(TableConfig::uniform_replay("a", 1000))
+            .table(TableConfig::uniform_replay("b", 1000))
+            .bind("127.0.0.1:0")
+            .unwrap();
+        let client = Client::connect(server.local_addr().to_string()).unwrap();
+        (server, client)
+    }
+
+    #[test]
+    fn overlapping_trajectories_share_chunks() {
+        // The §4.1 example: trajectories of length 3 overlapping by 2,
+        // chunk_length 3.
+        let (server, client) = start();
+        let mut w = client
+            .writer(WriterOptions::default().with_chunk_length(3))
+            .unwrap();
+        for i in 0..9 {
+            w.append(step(i as f32)).unwrap();
+            if i >= 2 {
+                w.create_item("a", 3, 1.5).unwrap();
+            }
+        }
+        w.flush().unwrap();
+        assert_eq!(w.items_created(), 7);
+        let table = server.table("a").unwrap();
+        assert_eq!(table.size(), 7);
+        // Verify a sampled item materializes 3 consecutive steps.
+        let s = table.sample(None).unwrap();
+        assert_eq!(s.item.length, 3);
+        let data = s.item.materialize().unwrap();
+        assert_eq!(data[0].shape()[0], 3);
+        let vals = data[0].to_f32().unwrap();
+        assert!((vals[2] - vals[0] - 1.0).abs() < 1e-6, "consecutive steps: {vals:?}");
+    }
+
+    #[test]
+    fn multi_table_items() {
+        // The §4.2 example: items of different lengths into two tables.
+        let (server, client) = start();
+        let mut w = client
+            .writer(WriterOptions::default().with_chunk_length(1))
+            .unwrap();
+        for i in 0..5 {
+            w.append(step(i as f32)).unwrap();
+            if i >= 1 {
+                w.create_item("a", 2, 1.5).unwrap();
+            }
+            if i >= 2 {
+                w.create_item("b", 3, 1.5).unwrap();
+            }
+        }
+        w.flush().unwrap();
+        assert_eq!(server.table("a").unwrap().size(), 4);
+        assert_eq!(server.table("b").unwrap().size(), 3);
+    }
+
+    #[test]
+    fn flush_forces_short_chunk() {
+        let (server, client) = start();
+        let mut w = client
+            .writer(WriterOptions::default().with_chunk_length(100))
+            .unwrap();
+        w.append(step(1.0)).unwrap();
+        w.append(step(2.0)).unwrap();
+        w.create_item("a", 2, 1.0).unwrap();
+        // Item pending (chunk of 100 not yet cut) until flush.
+        assert_eq!(server.table("a").unwrap().size(), 0);
+        w.flush().unwrap();
+        assert_eq!(server.table("a").unwrap().size(), 1);
+    }
+
+    #[test]
+    fn end_episode_resets_sequence() {
+        let (server, client) = start();
+        let mut w = client
+            .writer(WriterOptions::default().with_chunk_length(2))
+            .unwrap();
+        w.append(step(1.0)).unwrap();
+        w.append(step(2.0)).unwrap();
+        w.create_item("a", 2, 1.0).unwrap();
+        w.end_episode().unwrap();
+        // New episode: referencing 2 steps with only 1 appended must fail.
+        w.append(step(3.0)).unwrap();
+        assert!(w.create_item("a", 2, 1.0).is_err());
+        w.append(step(4.0)).unwrap();
+        w.create_item("a", 2, 1.0).unwrap();
+        w.flush().unwrap();
+        assert_eq!(server.table("a").unwrap().size(), 2);
+    }
+
+    #[test]
+    fn create_item_validates_length() {
+        let (_server, client) = start();
+        let mut w = client.writer(WriterOptions::default()).unwrap();
+        assert!(w.create_item("a", 1, 1.0).is_err(), "no steps appended yet");
+        w.append(step(0.0)).unwrap();
+        assert!(w.create_item("a", 0, 1.0).is_err(), "zero-length item");
+        assert!(w.create_item("a", 2, 1.0).is_err(), "too long");
+        w.create_item("a", 1, 1.0).unwrap();
+    }
+
+    #[test]
+    fn unknown_table_surfaces_on_flush() {
+        let (_server, client) = start();
+        let mut w = client.writer(WriterOptions::default()).unwrap();
+        w.append(step(0.0)).unwrap();
+        w.create_item("missing", 1, 1.0).unwrap();
+        let err = w.flush().unwrap_err();
+        assert!(matches!(err, Error::TableNotFound(_)), "{err}");
+    }
+
+    #[test]
+    fn item_longer_than_chunk_spans_chunks() {
+        let (server, client) = start();
+        let mut w = client
+            .writer(WriterOptions::default().with_chunk_length(2))
+            .unwrap();
+        for i in 0..6 {
+            w.append(step(i as f32)).unwrap();
+        }
+        // Item over steps 1..5 spans chunks [0,2), [2,4), [4,6).
+        w.create_item("a", 5, 1.0).unwrap();
+        w.flush().unwrap();
+        let s = server.table("a").unwrap().sample(None).unwrap();
+        assert_eq!(s.item.chunks.len(), 3);
+        assert_eq!(s.item.offset, 1);
+        let data = s.item.materialize().unwrap();
+        assert_eq!(data[0].shape(), &[5, 2]);
+        assert_eq!(data[0].to_f32().unwrap()[0], 1.0);
+    }
+}

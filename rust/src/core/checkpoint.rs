@@ -1,0 +1,357 @@
+//! Checkpointing (§3.7): serialize the state and content of tables (and the
+//! chunks their items reference) to disk, and restore at construction time.
+//!
+//! Format (all little-endian, see `crate::io`):
+//!
+//! ```text
+//! magic "RVBCKPT1"
+//! u32  num_chunks        — unique chunks referenced by any item
+//!   per chunk: key, sequence_start, num_steps, columns
+//! u32  num_tables
+//!   per table: name, inserts, samples, items
+//!     per item: key, priority, offset, length, times_sampled, chunk keys
+//! u32  crc32 of everything above
+//! ```
+//!
+//! Writing is atomic (tmp file + rename); the CRC guards against torn or
+//! corrupted files on load.
+
+use crate::core::chunk::Chunk;
+use crate::core::chunk_store::ChunkStore;
+use crate::core::item::Item;
+use crate::core::table::Table;
+use crate::error::{Error, Result};
+use crate::io::*;
+use std::collections::BTreeMap;
+use std::io::{Read, Write};
+use std::path::Path;
+use std::sync::Arc;
+
+const MAGIC: &[u8; 8] = b"RVBCKPT1";
+
+fn encode_item<W: Write>(w: &mut W, item: &Item) -> Result<()> {
+    put_u64(w, item.key)?;
+    put_f64(w, item.priority)?;
+    put_u64(w, item.offset as u64)?;
+    put_u64(w, item.length as u64)?;
+    put_u32(w, item.times_sampled)?;
+    put_u32(w, item.chunks.len() as u32)?;
+    for c in &item.chunks {
+        put_u64(w, c.key)?;
+    }
+    Ok(())
+}
+
+struct DecodedItem {
+    key: u64,
+    priority: f64,
+    offset: usize,
+    length: usize,
+    times_sampled: u32,
+    chunk_keys: Vec<u64>,
+}
+
+fn decode_item<R: Read>(r: &mut R) -> Result<DecodedItem> {
+    let key = get_u64(r)?;
+    let priority = get_f64(r)?;
+    let offset = get_u64(r)? as usize;
+    let length = get_u64(r)? as usize;
+    let times_sampled = get_u32(r)?;
+    let nchunks = get_u32(r)? as usize;
+    if nchunks > 1 << 20 {
+        return Err(Error::Decode(format!("{nchunks} chunk refs exceeds limit")));
+    }
+    let chunk_keys = (0..nchunks).map(|_| get_u64(r)).collect::<Result<_>>()?;
+    Ok(DecodedItem {
+        key,
+        priority,
+        offset,
+        length,
+        times_sampled,
+        chunk_keys,
+    })
+}
+
+/// CRC-tracking writer shim.
+struct CrcWriter<W: Write> {
+    inner: W,
+    hasher: crc32fast::Hasher,
+}
+
+impl<W: Write> Write for CrcWriter<W> {
+    fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+        let n = self.inner.write(buf)?;
+        self.hasher.update(&buf[..n]);
+        Ok(n)
+    }
+    fn flush(&mut self) -> std::io::Result<()> {
+        self.inner.flush()
+    }
+}
+
+/// CRC-tracking reader shim.
+struct CrcReader<R: Read> {
+    inner: R,
+    hasher: crc32fast::Hasher,
+}
+
+impl<R: Read> Read for CrcReader<R> {
+    fn read(&mut self, buf: &mut [u8]) -> std::io::Result<usize> {
+        let n = self.inner.read(buf)?;
+        self.hasher.update(&buf[..n]);
+        Ok(n)
+    }
+}
+
+/// Write a checkpoint of `tables` to `path` atomically.
+///
+/// The caller (the server, §3.7) is responsible for blocking concurrent
+/// mutations for full consistency across tables; each table's own snapshot
+/// is atomic regardless.
+pub fn save(path: &Path, tables: &[Arc<Table>]) -> Result<()> {
+    let mut snapshots = Vec::with_capacity(tables.len());
+    let mut chunks: BTreeMap<u64, Arc<Chunk>> = BTreeMap::new();
+    for t in tables {
+        let (items, inserts, samples) = t.snapshot();
+        for item in &items {
+            for c in &item.chunks {
+                chunks.entry(c.key).or_insert_with(|| c.clone());
+            }
+        }
+        snapshots.push((t.name().to_string(), inserts, samples, items));
+    }
+
+    let tmp = path.with_extension("tmp");
+    if let Some(parent) = path.parent() {
+        std::fs::create_dir_all(parent)?;
+    }
+    let file = std::fs::File::create(&tmp)?;
+    let mut w = CrcWriter {
+        inner: std::io::BufWriter::new(file),
+        hasher: crc32fast::Hasher::new(),
+    };
+
+    w.write_all(MAGIC)?;
+    put_u32(&mut w, chunks.len() as u32)?;
+    for c in chunks.values() {
+        c.encode(&mut w)?;
+    }
+    put_u32(&mut w, snapshots.len() as u32)?;
+    for (name, inserts, samples, items) in &snapshots {
+        put_string(&mut w, name)?;
+        put_u64(&mut w, *inserts)?;
+        put_u64(&mut w, *samples)?;
+        put_u32(&mut w, items.len() as u32)?;
+        for item in items {
+            encode_item(&mut w, item)?;
+        }
+    }
+    let crc = w.hasher.clone().finalize();
+    let mut inner = w.inner;
+    byteorder::WriteBytesExt::write_u32::<byteorder::LittleEndian>(&mut inner, crc)?;
+    inner.flush()?;
+    inner.get_ref().sync_all()?;
+    drop(inner);
+    std::fs::rename(&tmp, path)?;
+    Ok(())
+}
+
+/// Load a checkpoint into `tables` (matched by name; the tables must be
+/// freshly constructed/empty). Chunks are registered in `store`; tables
+/// absent from the checkpoint are left empty, and checkpointed tables with
+/// no matching live table are skipped.
+///
+/// Returns the number of items restored.
+pub fn load(path: &Path, tables: &[Arc<Table>], store: &ChunkStore) -> Result<usize> {
+    let file = std::fs::File::open(path)?;
+    let len = file.metadata()?.len();
+    if len < (MAGIC.len() + 4) as u64 {
+        return Err(Error::CorruptCheckpoint("file too short".into()));
+    }
+    let mut r = CrcReader {
+        inner: std::io::BufReader::new(file),
+        hasher: crc32fast::Hasher::new(),
+    };
+
+    let mut magic = [0u8; 8];
+    r.read_exact(&mut magic)?;
+    if &magic != MAGIC {
+        return Err(Error::CorruptCheckpoint("bad magic".into()));
+    }
+
+    let nchunks = get_u32(&mut r)? as usize;
+    let mut arcs: BTreeMap<u64, Arc<Chunk>> = BTreeMap::new();
+    for _ in 0..nchunks {
+        let chunk = Chunk::decode(&mut r)?;
+        arcs.insert(chunk.key, store.insert(chunk));
+    }
+
+    let ntables = get_u32(&mut r)? as usize;
+    let mut decoded: Vec<(String, u64, u64, Vec<DecodedItem>)> = Vec::with_capacity(ntables);
+    for _ in 0..ntables {
+        let name = get_string(&mut r)?;
+        let inserts = get_u64(&mut r)?;
+        let samples = get_u64(&mut r)?;
+        let nitems = get_u32(&mut r)? as usize;
+        let items = (0..nitems)
+            .map(|_| decode_item(&mut r))
+            .collect::<Result<Vec<_>>>()?;
+        decoded.push((name, inserts, samples, items));
+    }
+
+    // Verify CRC before mutating any table.
+    let computed = r.hasher.clone().finalize();
+    let stored = byteorder::ReadBytesExt::read_u32::<byteorder::LittleEndian>(&mut r.inner)?;
+    if computed != stored {
+        return Err(Error::CorruptCheckpoint(format!(
+            "crc mismatch: computed {computed:#x}, stored {stored:#x}"
+        )));
+    }
+
+    let mut restored = 0;
+    for (name, inserts, samples, items) in decoded {
+        let Some(table) = tables.iter().find(|t| t.name() == name) else {
+            continue;
+        };
+        let mut live_items = Vec::with_capacity(items.len());
+        for d in items {
+            let chunks = d
+                .chunk_keys
+                .iter()
+                .map(|k| arcs.get(k).cloned().ok_or(Error::ChunkNotFound(*k)))
+                .collect::<Result<Vec<_>>>()?;
+            let mut item = Item::new(d.key, name.clone(), d.priority, chunks, d.offset, d.length)?;
+            item.times_sampled = d.times_sampled;
+            live_items.push(item);
+        }
+        restored += live_items.len();
+        table.restore(live_items, inserts, samples)?;
+    }
+    Ok(restored)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::chunk::Compression;
+    use crate::core::table::TableConfig;
+    use crate::core::tensor::Tensor;
+
+    fn mk_item(key: u64, table: &str, priority: f64, shared: Option<Arc<Chunk>>) -> Item {
+        let chunk = shared.unwrap_or_else(|| {
+            let steps = vec![vec![Tensor::from_f32(&[2], &[key as f32, 1.0]).unwrap()]];
+            Arc::new(Chunk::from_steps(key + 1000, 0, &steps, Compression::Zstd { level: 1 }).unwrap())
+        });
+        Item::new(key, table, priority, vec![chunk], 0, 1).unwrap()
+    }
+
+    fn tmpdir(name: &str) -> std::path::PathBuf {
+        let d = std::env::temp_dir().join(format!("reverb_ckpt_{name}_{}", std::process::id()));
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    #[test]
+    fn save_load_roundtrip() {
+        let dir = tmpdir("roundtrip");
+        let path = dir.join("ckpt.rvb");
+
+        let t1 = Arc::new(Table::new(TableConfig::uniform_replay("alpha", 100)));
+        let t2 = Arc::new(Table::new(TableConfig::uniform_replay("beta", 100)));
+        // A chunk shared by items in both tables must be serialized once.
+        let shared = Arc::new(
+            Chunk::from_steps(
+                9999,
+                0,
+                &[vec![Tensor::from_f32(&[1], &[42.0]).unwrap()]],
+                Compression::None,
+            )
+            .unwrap(),
+        );
+        t1.insert_or_assign(mk_item(1, "alpha", 0.5, None), None).unwrap();
+        t1.insert_or_assign(mk_item(2, "alpha", 1.5, Some(shared.clone())), None)
+            .unwrap();
+        t2.insert_or_assign(mk_item(3, "beta", 2.5, Some(shared)), None)
+            .unwrap();
+        t1.sample(None).unwrap();
+
+        save(&path, &[t1.clone(), t2.clone()]).unwrap();
+
+        let r1 = Arc::new(Table::new(TableConfig::uniform_replay("alpha", 100)));
+        let r2 = Arc::new(Table::new(TableConfig::uniform_replay("beta", 100)));
+        let store = ChunkStore::new();
+        let restored = load(&path, &[r1.clone(), r2.clone()], &store).unwrap();
+        assert_eq!(restored, 3);
+        assert_eq!(r1.size(), 2);
+        assert_eq!(r2.size(), 1);
+        let info = r1.info();
+        assert_eq!(info.inserts, 2);
+        assert_eq!(info.samples, 1);
+
+        // Sampled data decodes identically.
+        let s = r2.sample(None).unwrap();
+        assert_eq!(s.item.key, 3);
+        let data = s.item.materialize().unwrap();
+        assert_eq!(data[0].to_f32().unwrap(), vec![42.0]);
+
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn corrupt_file_rejected() {
+        let dir = tmpdir("corrupt");
+        let path = dir.join("ckpt.rvb");
+        let t = Arc::new(Table::new(TableConfig::uniform_replay("t", 10)));
+        t.insert_or_assign(mk_item(1, "t", 1.0, None), None).unwrap();
+        save(&path, &[t]).unwrap();
+
+        // Flip a payload byte.
+        let mut bytes = std::fs::read(&path).unwrap();
+        let mid = bytes.len() / 2;
+        bytes[mid] ^= 0xFF;
+        std::fs::write(&path, &bytes).unwrap();
+
+        let r = Arc::new(Table::new(TableConfig::uniform_replay("t", 10)));
+        let store = ChunkStore::new();
+        let err = load(&path, &[r.clone()], &store).unwrap_err();
+        assert!(
+            matches!(err, Error::CorruptCheckpoint(_) | Error::Decode(_) | Error::Io(_)),
+            "{err}"
+        );
+        assert_eq!(r.size(), 0, "no partial restore");
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn truncated_file_rejected() {
+        let dir = tmpdir("trunc");
+        let path = dir.join("ckpt.rvb");
+        let t = Arc::new(Table::new(TableConfig::uniform_replay("t", 10)));
+        t.insert_or_assign(mk_item(1, "t", 1.0, None), None).unwrap();
+        save(&path, &[t]).unwrap();
+        let bytes = std::fs::read(&path).unwrap();
+        std::fs::write(&path, &bytes[..bytes.len() - 6]).unwrap();
+        let r = Arc::new(Table::new(TableConfig::uniform_replay("t", 10)));
+        let err = load(&path, &[r], &ChunkStore::new()).unwrap_err();
+        assert!(
+            matches!(err, Error::CorruptCheckpoint(_) | Error::Io(_)),
+            "{err}"
+        );
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn unknown_tables_are_skipped() {
+        let dir = tmpdir("skip");
+        let path = dir.join("ckpt.rvb");
+        let t = Arc::new(Table::new(TableConfig::uniform_replay("old_name", 10)));
+        t.insert_or_assign(mk_item(1, "old_name", 1.0, None), None)
+            .unwrap();
+        save(&path, &[t]).unwrap();
+        let r = Arc::new(Table::new(TableConfig::uniform_replay("new_name", 10)));
+        let restored = load(&path, &[r.clone()], &ChunkStore::new()).unwrap();
+        assert_eq!(restored, 0);
+        assert_eq!(r.size(), 0);
+        std::fs::remove_dir_all(dir).ok();
+    }
+}

@@ -1,0 +1,594 @@
+//! Chunks: the unit of data storage and transport (§3.1, Fig. 1).
+//!
+//! Sequential data elements (steps) are batched column-wise — one column per
+//! signature field, stacked along a new leading "time" axis — and each
+//! column is compressed independently. Sequential RL data is highly
+//! redundant (e.g. Atari frames), so an optional delta filter subtracts the
+//! previous row byte-wise before entropy coding, which is where the paper's
+//! "up to 90% compression over 40-frame sequences" comes from.
+
+use crate::core::tensor::{DType, Signature, Tensor};
+use crate::error::{Error, Result};
+use byteorder::{ByteOrder, LittleEndian};
+
+/// How a chunk column's payload is encoded on the wire / in memory.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Compression {
+    /// Raw bytes, no compression. Fastest; used for tiny payloads.
+    None,
+    /// zstd entropy coding of the raw column.
+    Zstd { level: i32 },
+    /// Byte-wise delta between consecutive rows, then zstd. Best for
+    /// slowly-changing dense data (frames).
+    DeltaZstd { level: i32 },
+}
+
+impl Compression {
+    /// Default used by writers: cheap zstd.
+    pub fn default_fast() -> Self {
+        Compression::Zstd { level: 1 }
+    }
+
+    pub(crate) fn tag(self) -> u8 {
+        match self {
+            Compression::None => 0,
+            Compression::Zstd { .. } => 1,
+            Compression::DeltaZstd { .. } => 2,
+        }
+    }
+
+    pub(crate) fn from_tag(tag: u8) -> Result<Self> {
+        Ok(match tag {
+            0 => Compression::None,
+            1 => Compression::Zstd { level: 1 },
+            2 => Compression::DeltaZstd { level: 1 },
+            t => return Err(Error::Decode(format!("unknown compression tag {t}"))),
+        })
+    }
+}
+
+/// One compressed column of a chunk: the stacked per-step tensors of one
+/// signature field.
+#[derive(Clone, Debug)]
+pub struct Column {
+    pub dtype: DType,
+    /// Shape of the *stacked* column: `[num_steps, per_step_shape...]`.
+    pub shape: Vec<usize>,
+    pub compression: Compression,
+    /// Encoded payload.
+    pub payload: Vec<u8>,
+    /// Length of the raw (decoded) payload in bytes.
+    pub uncompressed_len: usize,
+}
+
+impl Column {
+    /// Encode a stacked column tensor.
+    pub fn encode(stacked: &Tensor, compression: Compression) -> Result<Column> {
+        let raw = stacked.bytes();
+        let row_len = if stacked.shape().is_empty() || stacked.shape()[0] == 0 {
+            0
+        } else {
+            raw.len() / stacked.shape()[0]
+        };
+        let payload = match compression {
+            Compression::None => raw.to_vec(),
+            Compression::Zstd { level } => zstd_compress(raw, level)?,
+            Compression::DeltaZstd { level } => {
+                let deltas = delta_encode(raw, row_len);
+                zstd_compress(&deltas, level)?
+            }
+        };
+        Ok(Column {
+            dtype: stacked.dtype(),
+            shape: stacked.shape().to_vec(),
+            compression,
+            payload,
+            uncompressed_len: raw.len(),
+        })
+    }
+
+    /// Decode back to the stacked column tensor.
+    pub fn decode(&self) -> Result<Tensor> {
+        let raw = match self.compression {
+            Compression::None => self.payload.clone(),
+            Compression::Zstd { .. } => zstd_decompress(&self.payload, self.uncompressed_len)?,
+            Compression::DeltaZstd { .. } => {
+                let deltas = zstd_decompress(&self.payload, self.uncompressed_len)?;
+                let row_len = if self.shape.is_empty() || self.shape[0] == 0 {
+                    0
+                } else {
+                    deltas.len() / self.shape[0]
+                };
+                delta_decode(&deltas, row_len)
+            }
+        };
+        Tensor::from_bytes(self.dtype, self.shape.clone(), raw)
+    }
+
+    /// Encoded size in bytes.
+    pub fn encoded_len(&self) -> usize {
+        self.payload.len()
+    }
+}
+
+fn zstd_compress(raw: &[u8], level: i32) -> Result<Vec<u8>> {
+    zstd::bulk::compress(raw, level).map_err(|e| Error::Decode(format!("zstd compress: {e}")))
+}
+
+fn zstd_decompress(payload: &[u8], cap: usize) -> Result<Vec<u8>> {
+    zstd::bulk::decompress(payload, cap).map_err(|e| Error::Decode(format!("zstd decompress: {e}")))
+}
+
+/// Subtract row `i-1` from row `i`, byte-wise with wrapping arithmetic.
+/// Row 0 is stored verbatim.
+fn delta_encode(raw: &[u8], row_len: usize) -> Vec<u8> {
+    if row_len == 0 || raw.len() <= row_len {
+        return raw.to_vec();
+    }
+    let mut out = Vec::with_capacity(raw.len());
+    out.extend_from_slice(&raw[..row_len]);
+    for i in (row_len..raw.len()).step_by(row_len) {
+        let end = (i + row_len).min(raw.len());
+        for j in i..end {
+            out.push(raw[j].wrapping_sub(raw[j - row_len]));
+        }
+    }
+    out
+}
+
+/// Inverse of [`delta_encode`].
+fn delta_decode(deltas: &[u8], row_len: usize) -> Vec<u8> {
+    if row_len == 0 || deltas.len() <= row_len {
+        return deltas.to_vec();
+    }
+    let mut out = Vec::with_capacity(deltas.len());
+    out.extend_from_slice(&deltas[..row_len]);
+    for i in (row_len..deltas.len()).step_by(row_len) {
+        let end = (i + row_len).min(deltas.len());
+        for j in i..end {
+            let prev = out[j - row_len];
+            out.push(deltas[j].wrapping_add(prev));
+        }
+    }
+    out
+}
+
+/// A chunk: `num_steps` sequential data elements batched column-wise and
+/// compressed. Identified by a key unique within the writer's stream.
+#[derive(Clone, Debug)]
+pub struct Chunk {
+    /// Globally (probabilistically) unique key.
+    pub key: u64,
+    /// Index of the first step of this chunk within its episode stream.
+    pub sequence_start: u64,
+    /// Number of steps (rows) in the chunk.
+    pub num_steps: usize,
+    /// One column per signature field, in signature order.
+    pub columns: Vec<Column>,
+}
+
+impl Chunk {
+    /// Build a chunk from `steps` (each a row of tensors in signature field
+    /// order), compressing each column with `compression`.
+    pub fn from_steps(
+        key: u64,
+        sequence_start: u64,
+        steps: &[Vec<Tensor>],
+        compression: Compression,
+    ) -> Result<Chunk> {
+        let first = steps
+            .first()
+            .ok_or_else(|| Error::InvalidArgument("chunk of zero steps".into()))?;
+        let num_fields = first.len();
+        let mut columns = Vec::with_capacity(num_fields);
+        for f in 0..num_fields {
+            let col_tensors: Vec<Tensor> = steps
+                .iter()
+                .map(|row| {
+                    row.get(f).cloned().ok_or_else(|| {
+                        Error::SignatureMismatch(format!("step missing field {f}"))
+                    })
+                })
+                .collect::<Result<_>>()?;
+            let stacked = Tensor::stack(&col_tensors)?;
+            columns.push(Column::encode(&stacked, compression)?);
+        }
+        Ok(Chunk {
+            key,
+            sequence_start,
+            num_steps: steps.len(),
+            columns,
+        })
+    }
+
+    /// Decode all columns back into per-step rows (inverse of
+    /// [`Chunk::from_steps`]).
+    pub fn to_steps(&self) -> Result<Vec<Vec<Tensor>>> {
+        let mut cols: Vec<Vec<Tensor>> = Vec::with_capacity(self.columns.len());
+        for c in &self.columns {
+            cols.push(c.decode()?.unstack()?);
+        }
+        let mut steps = vec![Vec::with_capacity(self.columns.len()); self.num_steps];
+        for col in cols {
+            if col.len() != self.num_steps {
+                return Err(Error::Decode(format!(
+                    "column has {} rows, chunk has {} steps",
+                    col.len(),
+                    self.num_steps
+                )));
+            }
+            for (i, t) in col.into_iter().enumerate() {
+                steps[i].push(t);
+            }
+        }
+        Ok(steps)
+    }
+
+    /// Decode only rows `[offset, offset+len)` of every column. This is the
+    /// item materialization path (Fig. 3: offset & length select the exact
+    /// steps within the chunk sequence).
+    pub fn decode_rows(&self, offset: usize, len: usize) -> Result<Vec<Tensor>> {
+        if offset + len > self.num_steps {
+            return Err(Error::InvalidArgument(format!(
+                "decode_rows [{offset}, {}) out of bounds for {} steps",
+                offset + len,
+                self.num_steps
+            )));
+        }
+        self.columns
+            .iter()
+            .map(|c| {
+                // Fast path: uncompressed columns can be sliced byte-wise
+                // without materializing the full column first (hot on the
+                // client sample-materialization path).
+                if c.compression == Compression::None && !c.shape.is_empty() && c.shape[0] > 0 {
+                    let rows = c.shape[0];
+                    let row_len = c.payload.len() / rows;
+                    let inner: Vec<usize> = c.shape[1..].to_vec();
+                    let mut shape = Vec::with_capacity(c.shape.len());
+                    shape.push(len);
+                    shape.extend_from_slice(&inner);
+                    return Tensor::from_bytes(
+                        c.dtype,
+                        shape,
+                        c.payload[offset * row_len..(offset + len) * row_len].to_vec(),
+                    );
+                }
+                c.decode()?.slice_rows(offset, len)
+            })
+            .collect()
+    }
+
+    /// Sum of encoded column payload sizes.
+    pub fn encoded_len(&self) -> usize {
+        self.columns.iter().map(|c| c.encoded_len()).sum()
+    }
+
+    /// Sum of raw (uncompressed) column sizes.
+    pub fn uncompressed_len(&self) -> usize {
+        self.columns.iter().map(|c| c.uncompressed_len).sum()
+    }
+
+    /// Compression ratio achieved: `1 - encoded/uncompressed`.
+    pub fn compression_ratio(&self) -> f64 {
+        let u = self.uncompressed_len();
+        if u == 0 {
+            return 0.0;
+        }
+        1.0 - self.encoded_len() as f64 / u as f64
+    }
+
+    /// Validate chunk columns against a signature (per-step shapes).
+    pub fn validate_signature(&self, sig: &Signature) -> Result<()> {
+        if self.columns.len() != sig.fields.len() {
+            return Err(Error::SignatureMismatch(format!(
+                "chunk has {} columns, signature has {} fields",
+                self.columns.len(),
+                sig.fields.len()
+            )));
+        }
+        for (col, spec) in self.columns.iter().zip(&sig.fields) {
+            if col.dtype != spec.dtype {
+                return Err(Error::SignatureMismatch(format!(
+                    "field {}: chunk dtype {} != spec {}",
+                    spec.name, col.dtype, spec.dtype
+                )));
+            }
+            // col.shape = [steps, per-step...]
+            if col.shape.len() != spec.shape.len() + 1 {
+                return Err(Error::SignatureMismatch(format!(
+                    "field {}: chunk rank {} != spec rank {} + 1",
+                    spec.name,
+                    col.shape.len(),
+                    spec.shape.len()
+                )));
+            }
+            for (i, (&got, want)) in col.shape[1..].iter().zip(&spec.shape).enumerate() {
+                if let Some(w) = want {
+                    if got != *w {
+                        return Err(Error::SignatureMismatch(format!(
+                            "field {}: dim {i} is {got}, spec wants {w}",
+                            spec.name
+                        )));
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+impl Chunk {
+    /// Serialize to a binary stream (shared by the wire protocol and the
+    /// checkpoint format).
+    pub fn encode<W: std::io::Write>(&self, w: &mut W) -> Result<()> {
+        use crate::io::*;
+        put_u64(w, self.key)?;
+        put_u64(w, self.sequence_start)?;
+        put_u64(w, self.num_steps as u64)?;
+        put_u32(w, self.columns.len() as u32)?;
+        for col in &self.columns {
+            put_u8(w, col.dtype.tag())?;
+            put_shape(w, &col.shape)?;
+            put_u8(w, col.compression.tag())?;
+            put_u64(w, col.uncompressed_len as u64)?;
+            put_bytes(w, &col.payload)?;
+        }
+        Ok(())
+    }
+
+    /// Inverse of [`Chunk::encode`].
+    pub fn decode<R: std::io::Read>(r: &mut R) -> Result<Chunk> {
+        use crate::io::*;
+        let key = get_u64(r)?;
+        let sequence_start = get_u64(r)?;
+        let num_steps = get_u64(r)? as usize;
+        let ncols = get_u32(r)? as usize;
+        if ncols > 4096 {
+            return Err(Error::Decode(format!("{ncols} columns exceeds limit")));
+        }
+        let mut columns = Vec::with_capacity(ncols);
+        for _ in 0..ncols {
+            let dtype = DType::from_tag(get_u8(r)?)?;
+            let shape = get_shape(r)?;
+            let compression = Compression::from_tag(get_u8(r)?)?;
+            let uncompressed_len = get_u64(r)? as usize;
+            let payload = get_bytes(r)?;
+            columns.push(Column {
+                dtype,
+                shape,
+                compression,
+                payload,
+                uncompressed_len,
+            });
+        }
+        Ok(Chunk {
+            key,
+            sequence_start,
+            num_steps,
+            columns,
+        })
+    }
+}
+
+/// Incremental chunk builder used by writers: buffers appended steps and
+/// emits a chunk every `chunk_length` steps (or on demand at episode end).
+pub struct ChunkBuilder {
+    chunk_length: usize,
+    compression: Compression,
+    buffered: Vec<Vec<Tensor>>,
+    next_sequence: u64,
+}
+
+impl ChunkBuilder {
+    pub fn new(chunk_length: usize, compression: Compression) -> Self {
+        assert!(chunk_length > 0, "chunk_length must be positive");
+        ChunkBuilder {
+            chunk_length,
+            compression,
+            buffered: Vec::new(),
+            next_sequence: 0,
+        }
+    }
+
+    /// Append a step; returns a completed chunk when the buffer fills.
+    pub fn append(&mut self, key: u64, step: Vec<Tensor>) -> Result<Option<Chunk>> {
+        self.buffered.push(step);
+        if self.buffered.len() >= self.chunk_length {
+            self.flush(key)
+        } else {
+            Ok(None)
+        }
+    }
+
+    /// Emit a (possibly short) chunk from whatever is buffered.
+    pub fn flush(&mut self, key: u64) -> Result<Option<Chunk>> {
+        if self.buffered.is_empty() {
+            return Ok(None);
+        }
+        let steps = std::mem::take(&mut self.buffered);
+        let chunk = Chunk::from_steps(key, self.next_sequence, &steps, self.compression)?;
+        self.next_sequence += steps.len() as u64;
+        Ok(Some(chunk))
+    }
+
+    /// Number of steps currently buffered (not yet in a chunk).
+    pub fn buffered_steps(&self) -> usize {
+        self.buffered.len()
+    }
+
+    /// Stream position of the *next* appended step.
+    pub fn next_sequence(&self) -> u64 {
+        self.next_sequence + self.buffered.len() as u64
+    }
+
+    /// Reset episode state (sequence counter and buffer).
+    pub fn reset(&mut self) {
+        self.buffered.clear();
+        self.next_sequence = 0;
+    }
+}
+
+/// Build a correlated "frame-like" step for compression tests/benches:
+/// `base + small noise`, mimicking consecutive Atari frames.
+pub fn correlated_frame(base: &[u8], noise: &mut crate::util::rng::Pcg32, flips: usize) -> Vec<u8> {
+    let mut frame = base.to_vec();
+    for _ in 0..flips {
+        let i = noise.gen_range(frame.len() as u64) as usize;
+        frame[i] = frame[i].wrapping_add((noise.next_u32() & 0xF) as u8);
+    }
+    frame
+}
+
+/// Encode a f32 slice into raw little-endian bytes (bench helper).
+pub fn f32s_to_bytes(xs: &[f32]) -> Vec<u8> {
+    let mut out = vec![0u8; xs.len() * 4];
+    LittleEndian::write_f32_into(xs, &mut out);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::tensor::TensorSpec;
+    use crate::util::rng::Pcg32;
+
+    fn step(vals: &[f32], action: i32) -> Vec<Tensor> {
+        vec![
+            Tensor::from_f32(&[vals.len()], vals).unwrap(),
+            Tensor::from_i32(&[], &[action]).unwrap(),
+        ]
+    }
+
+    #[test]
+    fn chunk_roundtrip_all_compressions() {
+        for comp in [
+            Compression::None,
+            Compression::Zstd { level: 3 },
+            Compression::DeltaZstd { level: 3 },
+        ] {
+            let steps = vec![step(&[1., 2.], 0), step(&[3., 4.], 1), step(&[5., 6.], 2)];
+            let chunk = Chunk::from_steps(7, 10, &steps, comp).unwrap();
+            assert_eq!(chunk.num_steps, 3);
+            assert_eq!(chunk.sequence_start, 10);
+            let back = chunk.to_steps().unwrap();
+            assert_eq!(back.len(), 3);
+            assert_eq!(back[1][0].to_f32().unwrap(), vec![3., 4.]);
+            assert_eq!(back[2][1].to_i32().unwrap(), vec![2]);
+        }
+    }
+
+    #[test]
+    fn decode_rows_subrange() {
+        let steps: Vec<_> = (0..5).map(|i| step(&[i as f32, 0.], i)).collect();
+        let chunk = Chunk::from_steps(1, 0, &steps, Compression::Zstd { level: 1 }).unwrap();
+        let rows = chunk.decode_rows(2, 2).unwrap();
+        assert_eq!(rows[0].shape(), &[2, 2]);
+        assert_eq!(rows[0].to_f32().unwrap(), vec![2., 0., 3., 0.]);
+        assert_eq!(rows[1].to_i32().unwrap(), vec![2, 3]);
+        assert!(chunk.decode_rows(4, 2).is_err());
+    }
+
+    #[test]
+    fn delta_roundtrip_property() {
+        crate::util::proptest::forall("delta encode/decode roundtrip", |rng| {
+            let row = 1 + rng.gen_range(16) as usize;
+            let rows = 1 + rng.gen_range(8) as usize;
+            let mut raw = vec![0u8; row * rows];
+            rng.fill_bytes(&mut raw);
+            let enc = delta_encode(&raw, row);
+            let dec = delta_decode(&enc, row);
+            if dec == raw {
+                Ok(())
+            } else {
+                Err(format!("row={row} rows={rows}"))
+            }
+        });
+    }
+
+    #[test]
+    fn correlated_frames_compress_much_better_than_random() {
+        let mut rng = Pcg32::new(1, 1);
+        let mut base = vec![0u8; 84 * 84];
+        rng.fill_bytes(&mut base[..200]); // sparse "sprites" on black bg
+
+        // 40 correlated frames vs 40 random frames (paper: ~90% on Atari).
+        let corr_steps: Vec<Vec<Tensor>> = (0..40)
+            .map(|_| {
+                base = correlated_frame(&base, &mut rng, 8);
+                vec![Tensor::from_u8(&[84, 84], &base).unwrap()]
+            })
+            .collect();
+        let rand_steps: Vec<Vec<Tensor>> = (0..40)
+            .map(|_| {
+                let mut f = vec![0u8; 84 * 84];
+                rng.fill_bytes(&mut f);
+                vec![Tensor::from_u8(&[84, 84], &f).unwrap()]
+            })
+            .collect();
+
+        let corr = Chunk::from_steps(1, 0, &corr_steps, Compression::DeltaZstd { level: 1 }).unwrap();
+        let rand = Chunk::from_steps(2, 0, &rand_steps, Compression::DeltaZstd { level: 1 }).unwrap();
+        assert!(
+            corr.compression_ratio() > 0.85,
+            "correlated ratio {}",
+            corr.compression_ratio()
+        );
+        assert!(
+            rand.compression_ratio() < 0.05,
+            "random ratio {}",
+            rand.compression_ratio()
+        );
+        // And the round trip is still exact.
+        assert_eq!(
+            corr.to_steps().unwrap()[39][0].bytes(),
+            corr_steps[39][0].bytes()
+        );
+    }
+
+    #[test]
+    fn builder_emits_on_boundary() {
+        let mut b = ChunkBuilder::new(3, Compression::None);
+        assert!(b.append(1, step(&[0.], 0)).unwrap().is_none());
+        assert!(b.append(1, step(&[1.], 0)).unwrap().is_none());
+        let c = b.append(1, step(&[2.], 0)).unwrap().unwrap();
+        assert_eq!(c.num_steps, 3);
+        assert_eq!(c.sequence_start, 0);
+        // Next chunk continues the sequence numbering.
+        assert!(b.append(2, step(&[3.], 0)).unwrap().is_none());
+        let c2 = b.flush(2).unwrap().unwrap();
+        assert_eq!(c2.num_steps, 1);
+        assert_eq!(c2.sequence_start, 3);
+        assert!(b.flush(3).unwrap().is_none());
+    }
+
+    #[test]
+    fn builder_reset_clears_sequence() {
+        let mut b = ChunkBuilder::new(2, Compression::None);
+        b.append(1, step(&[0.], 0)).unwrap();
+        b.reset();
+        assert_eq!(b.buffered_steps(), 0);
+        assert_eq!(b.next_sequence(), 0);
+    }
+
+    #[test]
+    fn validate_signature_checks_columns() {
+        let steps = vec![step(&[1., 2.], 0)];
+        let chunk = Chunk::from_steps(1, 0, &steps, Compression::None).unwrap();
+        let good = Signature::new(vec![
+            TensorSpec::new("obs", &[2], DType::F32),
+            TensorSpec::new("act", &[], DType::I32),
+        ]);
+        chunk.validate_signature(&good).unwrap();
+        let bad = Signature::new(vec![
+            TensorSpec::new("obs", &[3], DType::F32),
+            TensorSpec::new("act", &[], DType::I32),
+        ]);
+        assert!(chunk.validate_signature(&bad).is_err());
+        let bad_dtype = Signature::new(vec![
+            TensorSpec::new("obs", &[2], DType::F64),
+            TensorSpec::new("act", &[], DType::I32),
+        ]);
+        assert!(chunk.validate_signature(&bad_dtype).is_err());
+    }
+}

@@ -1,0 +1,198 @@
+//! The ChunkStore (§3.1, Fig. 2): owns chunk lookup, with reference counting
+//! that decouples data deallocation from Table mutexes.
+//!
+//! Design (mirrors the paper):
+//! - `Item`s hold `Arc<Chunk>`; the store itself keeps only `Weak` refs.
+//!   The chunk's memory is freed when the *last item* referencing it drops —
+//!   which Table operations arrange to happen *after* releasing the table
+//!   lock ("Decoupling data deallocation from the (mutex protected)
+//!   operations on Tables is important for high and stable throughput").
+//! - Multiple items — in the same or different tables — can reference the
+//!   same chunk without copying.
+//! - The map is sharded to keep store mutation off any single hot lock.
+
+use crate::core::chunk::Chunk;
+use crate::error::{Error, Result};
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex, Weak};
+
+const NUM_SHARDS: usize = 16;
+
+/// Sharded weak map from chunk key to chunk.
+pub struct ChunkStore {
+    shards: Vec<Mutex<HashMap<u64, Weak<Chunk>>>>,
+}
+
+impl Default for ChunkStore {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl ChunkStore {
+    pub fn new() -> Self {
+        ChunkStore {
+            shards: (0..NUM_SHARDS).map(|_| Mutex::new(HashMap::new())).collect(),
+        }
+    }
+
+    #[inline]
+    fn shard(&self, key: u64) -> &Mutex<HashMap<u64, Weak<Chunk>>> {
+        &self.shards[(crate::util::splitmix64(key) as usize) % NUM_SHARDS]
+    }
+
+    /// Register a chunk, returning the shared handle. If a live chunk with
+    /// the same key exists it is returned instead (idempotent insert — a
+    /// retrying writer may resend a chunk).
+    pub fn insert(&self, chunk: Chunk) -> Arc<Chunk> {
+        let mut shard = self.shard(chunk.key).lock().unwrap();
+        if let Some(existing) = shard.get(&chunk.key).and_then(Weak::upgrade) {
+            return existing;
+        }
+        let arc = Arc::new(chunk);
+        shard.insert(arc.key, Arc::downgrade(&arc));
+        arc
+    }
+
+    /// Look up a live chunk.
+    pub fn get(&self, key: u64) -> Result<Arc<Chunk>> {
+        self.shard(key)
+            .lock()
+            .unwrap()
+            .get(&key)
+            .and_then(Weak::upgrade)
+            .ok_or(Error::ChunkNotFound(key))
+    }
+
+    /// Whether a live chunk with this key exists.
+    pub fn contains(&self, key: u64) -> bool {
+        self.get(key).is_ok()
+    }
+
+    /// Drop dead weak entries. Called opportunistically; the data itself is
+    /// already freed by Arc when the last item drops — this only trims the
+    /// key map.
+    pub fn sweep(&self) -> usize {
+        let mut removed = 0;
+        for shard in &self.shards {
+            let mut m = shard.lock().unwrap();
+            let before = m.len();
+            m.retain(|_, w| w.strong_count() > 0);
+            removed += before - m.len();
+        }
+        removed
+    }
+
+    /// Number of live chunks (O(n); diagnostics only).
+    pub fn live_count(&self) -> usize {
+        self.shards
+            .iter()
+            .map(|s| {
+                s.lock()
+                    .unwrap()
+                    .values()
+                    .filter(|w| w.strong_count() > 0)
+                    .count()
+            })
+            .sum()
+    }
+
+    /// Total encoded bytes across live chunks (diagnostics only).
+    pub fn live_bytes(&self) -> usize {
+        self.shards
+            .iter()
+            .map(|s| {
+                s.lock()
+                    .unwrap()
+                    .values()
+                    .filter_map(Weak::upgrade)
+                    .map(|c| c.encoded_len())
+                    .sum::<usize>()
+            })
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::chunk::Compression;
+    use crate::core::tensor::Tensor;
+
+    fn mk_chunk(key: u64) -> Chunk {
+        let steps = vec![vec![Tensor::from_f32(&[2], &[1., 2.]).unwrap()]];
+        Chunk::from_steps(key, 0, &steps, Compression::None).unwrap()
+    }
+
+    #[test]
+    fn insert_and_get() {
+        let store = ChunkStore::new();
+        let arc = store.insert(mk_chunk(5));
+        assert_eq!(store.get(5).unwrap().key, 5);
+        drop(arc);
+        assert!(store.get(5).is_err());
+    }
+
+    #[test]
+    fn insert_is_idempotent_while_live() {
+        let store = ChunkStore::new();
+        let a = store.insert(mk_chunk(9));
+        let b = store.insert(mk_chunk(9));
+        assert!(Arc::ptr_eq(&a, &b));
+    }
+
+    #[test]
+    fn memory_freed_when_last_ref_drops() {
+        let store = ChunkStore::new();
+        let a = store.insert(mk_chunk(1));
+        let b = store.get(1).unwrap();
+        assert_eq!(store.live_count(), 1);
+        drop(a);
+        assert_eq!(store.live_count(), 1, "still one live ref");
+        drop(b);
+        assert_eq!(store.live_count(), 0, "freed after last drop");
+        assert_eq!(store.sweep(), 1);
+        assert_eq!(store.live_count(), 0);
+    }
+
+    #[test]
+    fn sweep_keeps_live_entries() {
+        let store = ChunkStore::new();
+        let keep = store.insert(mk_chunk(1));
+        let dead = store.insert(mk_chunk(2));
+        drop(dead);
+        assert_eq!(store.sweep(), 1);
+        assert!(store.get(1).is_ok());
+        assert!(store.get(2).is_err());
+        drop(keep);
+    }
+
+    #[test]
+    fn live_bytes_reflects_payloads() {
+        let store = ChunkStore::new();
+        let a = store.insert(mk_chunk(1));
+        assert_eq!(store.live_bytes(), a.encoded_len());
+        drop(a);
+        assert_eq!(store.live_bytes(), 0);
+    }
+
+    #[test]
+    fn concurrent_insert_get() {
+        let store = Arc::new(ChunkStore::new());
+        let mut handles = vec![];
+        for t in 0..4u64 {
+            let store = store.clone();
+            handles.push(std::thread::spawn(move || {
+                let mut arcs = vec![];
+                for i in 0..200 {
+                    let key = t * 1000 + i;
+                    arcs.push(store.insert(mk_chunk(key)));
+                    assert!(store.get(key).is_ok());
+                }
+                arcs.len()
+            }));
+        }
+        let total: usize = handles.into_iter().map(|h| h.join().unwrap()).sum();
+        assert_eq!(total, 800);
+    }
+}

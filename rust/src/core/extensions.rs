@@ -1,0 +1,303 @@
+//! Table extensions (§3.5): hooks executed as part of the parent table's
+//! atomic operations. All callbacks run while the table mutex is held, so
+//! implementations must be cheap.
+
+use crate::core::item::Item;
+use std::collections::HashMap;
+use std::time::Instant;
+
+/// Lightweight view of an item passed to extension callbacks (no chunk
+/// payload access — extensions observe metadata only, mirroring the
+/// selector data-independence rule).
+#[derive(Clone, Copy, Debug)]
+pub struct ItemRef<'a> {
+    pub key: u64,
+    pub priority: f64,
+    pub length: usize,
+    pub times_sampled: u32,
+    pub table: &'a str,
+}
+
+impl<'a> ItemRef<'a> {
+    pub fn of(item: &'a Item) -> Self {
+        ItemRef {
+            key: item.key,
+            priority: item.priority,
+            length: item.length,
+            times_sampled: item.times_sampled,
+            table: &item.table,
+        }
+    }
+}
+
+/// Extension hook points. Default implementations are no-ops so extensions
+/// implement only what they observe.
+pub trait TableExtension: Send {
+    /// Item inserted (after selectors were updated).
+    fn on_insert(&mut self, _item: ItemRef<'_>) {}
+    /// Item sampled (after its `times_sampled` was bumped).
+    fn on_sample(&mut self, _item: ItemRef<'_>) {}
+    /// Priority updated. Returns follow-up priority updates to apply
+    /// atomically (e.g. diffusion to neighbours); follow-ups do not recurse.
+    fn on_update(&mut self, _item: ItemRef<'_>) -> Vec<(u64, f64)> {
+        Vec::new()
+    }
+    /// Item removed (eviction, explicit delete, or max_times_sampled).
+    fn on_delete(&mut self, _item: ItemRef<'_>) {}
+    /// Table reset.
+    fn on_reset(&mut self) {}
+    /// Extension name for diagnostics.
+    fn name(&self) -> &'static str;
+}
+
+/// Counters reported by [`StatsExtension`].
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct TableStats {
+    pub inserts: u64,
+    pub samples: u64,
+    pub deletes: u64,
+    pub updates: u64,
+    pub resets: u64,
+    /// Steps (not items) inserted — items × their length.
+    pub steps_inserted: u64,
+    /// Steps sampled.
+    pub steps_sampled: u64,
+}
+
+/// Extension recording insert/sample/delete/update counts and step volumes
+/// — the "statistics about the amount of data inserted and sampled" use
+/// case from §3.5.
+#[derive(Default)]
+pub struct StatsExtension {
+    stats: std::sync::Arc<std::sync::Mutex<TableStats>>,
+    started: Option<Instant>,
+}
+
+impl StatsExtension {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Shared handle for reading stats from outside the table.
+    pub fn handle(&self) -> StatsHandle {
+        StatsHandle {
+            stats: self.stats.clone(),
+        }
+    }
+}
+
+/// Read-side handle to a [`StatsExtension`]'s counters.
+#[derive(Clone)]
+pub struct StatsHandle {
+    stats: std::sync::Arc<std::sync::Mutex<TableStats>>,
+}
+
+impl StatsHandle {
+    pub fn snapshot(&self) -> TableStats {
+        *self.stats.lock().unwrap()
+    }
+}
+
+impl TableExtension for StatsExtension {
+    fn on_insert(&mut self, item: ItemRef<'_>) {
+        self.started.get_or_insert_with(Instant::now);
+        let mut s = self.stats.lock().unwrap();
+        s.inserts += 1;
+        s.steps_inserted += item.length as u64;
+    }
+
+    fn on_sample(&mut self, item: ItemRef<'_>) {
+        let mut s = self.stats.lock().unwrap();
+        s.samples += 1;
+        s.steps_sampled += item.length as u64;
+    }
+
+    fn on_update(&mut self, _item: ItemRef<'_>) -> Vec<(u64, f64)> {
+        self.stats.lock().unwrap().updates += 1;
+        Vec::new()
+    }
+
+    fn on_delete(&mut self, _item: ItemRef<'_>) {
+        self.stats.lock().unwrap().deletes += 1;
+    }
+
+    fn on_reset(&mut self) {
+        self.stats.lock().unwrap().resets += 1;
+    }
+
+    fn name(&self) -> &'static str {
+        "stats"
+    }
+}
+
+/// Priority diffusion (§3.5 cites Gruslys et al. 2017, "Reactor"): when an
+/// item's priority is updated, a fraction of the change is diffused to the
+/// items inserted immediately before/after it, smoothing priorities across
+/// neighbouring trajectories.
+pub struct PriorityDiffusionExtension {
+    /// Fraction of the priority delta propagated to each neighbour.
+    rate: f64,
+    /// Insertion-order ring of keys (bounded).
+    order: Vec<u64>,
+    pos: HashMap<u64, usize>,
+    /// Last known priority per key (to compute deltas).
+    priority: HashMap<u64, f64>,
+}
+
+impl PriorityDiffusionExtension {
+    pub fn new(rate: f64) -> Self {
+        assert!((0.0..=1.0).contains(&rate));
+        PriorityDiffusionExtension {
+            rate,
+            order: Vec::new(),
+            pos: HashMap::new(),
+            priority: HashMap::new(),
+        }
+    }
+
+    fn neighbours(&self, key: u64) -> Vec<u64> {
+        let Some(&i) = self.pos.get(&key) else {
+            return Vec::new();
+        };
+        let mut out = Vec::with_capacity(2);
+        if i > 0 {
+            if let Some(&k) = self.order.get(i - 1) {
+                if self.pos.contains_key(&k) {
+                    out.push(k);
+                }
+            }
+        }
+        if let Some(&k) = self.order.get(i + 1) {
+            if self.pos.contains_key(&k) {
+                out.push(k);
+            }
+        }
+        out
+    }
+}
+
+impl TableExtension for PriorityDiffusionExtension {
+    fn on_insert(&mut self, item: ItemRef<'_>) {
+        self.pos.insert(item.key, self.order.len());
+        self.order.push(item.key);
+        self.priority.insert(item.key, item.priority);
+    }
+
+    fn on_update(&mut self, item: ItemRef<'_>) -> Vec<(u64, f64)> {
+        let old = self.priority.insert(item.key, item.priority).unwrap_or(0.0);
+        let delta = item.priority - old;
+        if delta == 0.0 || self.rate == 0.0 {
+            return Vec::new();
+        }
+        self.neighbours(item.key)
+            .into_iter()
+            .map(|k| {
+                let base = self.priority.get(&k).copied().unwrap_or(0.0);
+                let new = (base + self.rate * delta).max(0.0);
+                (k, new)
+            })
+            .collect()
+    }
+
+    fn on_delete(&mut self, item: ItemRef<'_>) {
+        // Leave a hole in `order` (pos removed ⇒ skipped by neighbours);
+        // compaction is amortized on reset.
+        self.pos.remove(&item.key);
+        self.priority.remove(&item.key);
+    }
+
+    fn on_reset(&mut self) {
+        self.order.clear();
+        self.pos.clear();
+        self.priority.clear();
+    }
+
+    fn name(&self) -> &'static str {
+        "priority_diffusion"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn item_ref(key: u64, priority: f64) -> ItemRef<'static> {
+        ItemRef {
+            key,
+            priority,
+            length: 3,
+            times_sampled: 0,
+            table: "t",
+        }
+    }
+
+    #[test]
+    fn stats_counts_everything() {
+        let mut ext = StatsExtension::new();
+        let h = ext.handle();
+        ext.on_insert(item_ref(1, 1.0));
+        ext.on_insert(item_ref(2, 1.0));
+        ext.on_sample(item_ref(1, 1.0));
+        ext.on_update(item_ref(1, 2.0));
+        ext.on_delete(item_ref(2, 1.0));
+        ext.on_reset();
+        let s = h.snapshot();
+        assert_eq!(s.inserts, 2);
+        assert_eq!(s.samples, 1);
+        assert_eq!(s.updates, 1);
+        assert_eq!(s.deletes, 1);
+        assert_eq!(s.resets, 1);
+        assert_eq!(s.steps_inserted, 6);
+        assert_eq!(s.steps_sampled, 3);
+    }
+
+    #[test]
+    fn diffusion_propagates_to_neighbours() {
+        let mut ext = PriorityDiffusionExtension::new(0.5);
+        ext.on_insert(item_ref(1, 1.0));
+        ext.on_insert(item_ref(2, 1.0));
+        ext.on_insert(item_ref(3, 1.0));
+        // Bump middle item 1.0 → 3.0; delta 2.0, neighbours get +1.0.
+        let updates = ext.on_update(item_ref(2, 3.0));
+        let mut sorted = updates.clone();
+        sorted.sort_by_key(|(k, _)| *k);
+        assert_eq!(sorted, vec![(1, 2.0), (3, 2.0)]);
+    }
+
+    #[test]
+    fn diffusion_skips_deleted_neighbours() {
+        let mut ext = PriorityDiffusionExtension::new(0.5);
+        ext.on_insert(item_ref(1, 1.0));
+        ext.on_insert(item_ref(2, 1.0));
+        ext.on_insert(item_ref(3, 1.0));
+        ext.on_delete(item_ref(1, 1.0));
+        let updates = ext.on_update(item_ref(2, 3.0));
+        assert_eq!(updates, vec![(3, 2.0)]);
+    }
+
+    #[test]
+    fn diffusion_clamps_at_zero() {
+        let mut ext = PriorityDiffusionExtension::new(1.0);
+        ext.on_insert(item_ref(1, 0.1));
+        ext.on_insert(item_ref(2, 5.0));
+        let updates = ext.on_update(item_ref(2, 0.0));
+        assert_eq!(updates, vec![(1, 0.0)]);
+    }
+
+    #[test]
+    fn zero_rate_is_inert() {
+        let mut ext = PriorityDiffusionExtension::new(0.0);
+        ext.on_insert(item_ref(1, 1.0));
+        ext.on_insert(item_ref(2, 1.0));
+        assert!(ext.on_update(item_ref(2, 9.0)).is_empty());
+    }
+
+    #[test]
+    fn edge_items_have_one_neighbour() {
+        let mut ext = PriorityDiffusionExtension::new(0.5);
+        ext.on_insert(item_ref(1, 1.0));
+        ext.on_insert(item_ref(2, 1.0));
+        let updates = ext.on_update(item_ref(1, 3.0));
+        assert_eq!(updates, vec![(2, 2.0)]);
+    }
+}

@@ -1,0 +1,236 @@
+//! Items (§3.2): the unit of sampling. An item references a span of steps
+//! across one or more chunks (Fig. 3) and carries a mutable priority.
+
+use crate::core::chunk::Chunk;
+use crate::core::tensor::Tensor;
+use crate::error::{Error, Result};
+use std::sync::Arc;
+
+/// An item held by a [`crate::core::table::Table`].
+#[derive(Clone, Debug)]
+pub struct Item {
+    /// Unique key (client generated).
+    pub key: u64,
+    /// Name of the owning table (items are per-table; the same underlying
+    /// chunks may be referenced by items in several tables).
+    pub table: String,
+    /// Priority used by Selectors. Clients can update this value.
+    pub priority: f64,
+    /// Referenced chunks, in stream order. The `Arc`s are the reference
+    /// counts tracked by the ChunkStore design.
+    pub chunks: Vec<Arc<Chunk>>,
+    /// Offset of the item's first step within `chunks[0]`.
+    pub offset: usize,
+    /// Total number of steps spanned by the item.
+    pub length: usize,
+    /// How many times this item has been sampled so far.
+    pub times_sampled: u32,
+}
+
+impl Item {
+    /// Construct and validate an item over a chunk span.
+    pub fn new(
+        key: u64,
+        table: impl Into<String>,
+        priority: f64,
+        chunks: Vec<Arc<Chunk>>,
+        offset: usize,
+        length: usize,
+    ) -> Result<Item> {
+        if chunks.is_empty() {
+            return Err(Error::InvalidArgument("item with no chunks".into()));
+        }
+        if length == 0 {
+            return Err(Error::InvalidArgument("item of zero length".into()));
+        }
+        if !priority.is_finite() || priority < 0.0 {
+            return Err(Error::InvalidArgument(format!(
+                "priority must be finite and >= 0, got {priority}"
+            )));
+        }
+        let total: usize = chunks.iter().map(|c| c.num_steps).sum();
+        if offset >= chunks[0].num_steps {
+            return Err(Error::InvalidArgument(format!(
+                "offset {offset} outside first chunk ({} steps)",
+                chunks[0].num_steps
+            )));
+        }
+        if offset + length > total {
+            return Err(Error::InvalidArgument(format!(
+                "item span [{offset}, {}) exceeds {total} chunked steps",
+                offset + length
+            )));
+        }
+        // Chunks must be sequential within one stream.
+        for w in chunks.windows(2) {
+            let (a, b) = (&w[0], &w[1]);
+            if a.sequence_start + a.num_steps as u64 != b.sequence_start {
+                return Err(Error::InvalidArgument(format!(
+                    "non-contiguous chunks: [{}, {}) then [{}, ...)",
+                    a.sequence_start,
+                    a.sequence_start + a.num_steps as u64,
+                    b.sequence_start
+                )));
+            }
+        }
+        Ok(Item {
+            key,
+            table: table.into(),
+            priority,
+            chunks,
+            offset,
+            length,
+            times_sampled: 0,
+        })
+    }
+
+    /// Total *encoded* payload bytes across the referenced chunks. Note the
+    /// §3.2 overhead discussion: all referenced chunk bytes travel on
+    /// sampling even when offset/length select a sub-span.
+    pub fn referenced_bytes(&self) -> usize {
+        self.chunks.iter().map(|c| c.encoded_len()).sum()
+    }
+
+    /// Decode exactly the steps this item spans: one tensor per signature
+    /// field, each with leading axis `length`. Performed entirely outside
+    /// table locks (the caller holds `Arc<Chunk>`s).
+    pub fn materialize(&self) -> Result<Vec<Tensor>> {
+        // Fast path: single chunk.
+        if self.chunks.len() == 1 {
+            return self.chunks[0].decode_rows(self.offset, self.length);
+        }
+        // Multi-chunk: decode each chunk's contribution, then concatenate
+        // along the time axis per field.
+        let num_fields = self.chunks[0].columns.len();
+        let mut per_field: Vec<Vec<Tensor>> = vec![Vec::new(); num_fields];
+        let mut remaining = self.length;
+        let mut offset = self.offset;
+        for chunk in &self.chunks {
+            if remaining == 0 {
+                break;
+            }
+            let take = (chunk.num_steps - offset).min(remaining);
+            let rows = chunk.decode_rows(offset, take)?;
+            if rows.len() != num_fields {
+                return Err(Error::Decode(
+                    "inconsistent field count across item chunks".into(),
+                ));
+            }
+            for (f, t) in rows.into_iter().enumerate() {
+                per_field[f].push(t);
+            }
+            remaining -= take;
+            offset = 0;
+        }
+        if remaining > 0 {
+            return Err(Error::Decode("item spans more steps than chunks hold".into()));
+        }
+        per_field
+            .into_iter()
+            .map(|parts| concat_rows(&parts))
+            .collect()
+    }
+}
+
+/// Concatenate tensors along the leading axis.
+fn concat_rows(parts: &[Tensor]) -> Result<Tensor> {
+    let first = parts
+        .first()
+        .ok_or_else(|| Error::InvalidArgument("concat of zero tensors".into()))?;
+    if parts.len() == 1 {
+        return Ok(first.clone());
+    }
+    let inner = &first.shape()[1..];
+    let mut rows = 0;
+    let mut data = Vec::new();
+    for p in parts {
+        if &p.shape()[1..] != inner || p.dtype() != first.dtype() {
+            return Err(Error::SignatureMismatch(
+                "concat parts disagree on inner shape/dtype".into(),
+            ));
+        }
+        rows += p.shape()[0];
+        data.extend_from_slice(p.bytes());
+    }
+    let mut shape = vec![rows];
+    shape.extend_from_slice(inner);
+    Tensor::from_bytes(first.dtype(), shape, data)
+}
+
+/// A sampled item as returned to clients: the item metadata plus sampling
+/// info (the table also reports the sampling probability when the sampler
+/// defines one).
+#[derive(Clone, Debug)]
+pub struct SampledItem {
+    pub item: Item,
+    /// Probability with which the sampler chose this item (1.0 for
+    /// deterministic selectors).
+    pub probability: f64,
+    /// Table size at the moment of sampling (for importance weights).
+    pub table_size: usize,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::chunk::{Chunk, Compression};
+
+    fn chunk(key: u64, start: u64, vals: &[f32]) -> Arc<Chunk> {
+        let steps: Vec<Vec<Tensor>> = vals
+            .iter()
+            .map(|&v| vec![Tensor::from_f32(&[1], &[v]).unwrap()])
+            .collect();
+        Arc::new(Chunk::from_steps(key, start, &steps, Compression::None).unwrap())
+    }
+
+    #[test]
+    fn item_validation() {
+        let c = chunk(1, 0, &[0., 1., 2., 3.]);
+        assert!(Item::new(1, "t", 1.0, vec![c.clone()], 0, 4).is_ok());
+        assert!(Item::new(1, "t", 1.0, vec![c.clone()], 1, 3).is_ok());
+        assert!(Item::new(1, "t", 1.0, vec![c.clone()], 1, 4).is_err()); // overruns
+        assert!(Item::new(1, "t", 1.0, vec![c.clone()], 4, 1).is_err()); // offset oob
+        assert!(Item::new(1, "t", 1.0, vec![], 0, 1).is_err());
+        assert!(Item::new(1, "t", 1.0, vec![c.clone()], 0, 0).is_err());
+        assert!(Item::new(1, "t", f64::NAN, vec![c.clone()], 0, 1).is_err());
+        assert!(Item::new(1, "t", -1.0, vec![c], 0, 1).is_err());
+    }
+
+    #[test]
+    fn rejects_non_contiguous_chunks() {
+        let a = chunk(1, 0, &[0., 1.]);
+        let gap = chunk(2, 5, &[5., 6.]);
+        assert!(Item::new(1, "t", 1.0, vec![a, gap], 0, 3).is_err());
+    }
+
+    #[test]
+    fn materialize_single_chunk() {
+        let c = chunk(1, 0, &[0., 1., 2., 3.]);
+        let item = Item::new(1, "t", 1.0, vec![c], 1, 2).unwrap();
+        let out = item.materialize().unwrap();
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].shape(), &[2, 1]);
+        assert_eq!(out[0].to_f32().unwrap(), vec![1., 2.]);
+    }
+
+    #[test]
+    fn materialize_across_chunks() {
+        let a = chunk(1, 0, &[0., 1., 2.]);
+        let b = chunk(2, 3, &[3., 4., 5.]);
+        // Span steps 2..5 (last of a, first two of b).
+        let item = Item::new(9, "t", 1.0, vec![a, b], 2, 3).unwrap();
+        let out = item.materialize().unwrap();
+        assert_eq!(out[0].shape(), &[3, 1]);
+        assert_eq!(out[0].to_f32().unwrap(), vec![2., 3., 4.]);
+    }
+
+    #[test]
+    fn referenced_bytes_counts_whole_chunks() {
+        let a = chunk(1, 0, &[0., 1., 2.]);
+        let b = chunk(2, 3, &[3., 4., 5.]);
+        let total = a.encoded_len() + b.encoded_len();
+        let item = Item::new(9, "t", 1.0, vec![a, b], 2, 2).unwrap();
+        // Even though only 2 steps are used, both chunks are "sent" (§3.2).
+        assert_eq!(item.referenced_bytes(), total);
+    }
+}

@@ -1,0 +1,12 @@
+//! Core server-side data model: tensors, chunks, items, tables, selectors,
+//! rate limiters, extensions, and checkpointing (paper §3.1–3.5, §3.7).
+
+pub mod checkpoint;
+pub mod chunk;
+pub mod chunk_store;
+pub mod extensions;
+pub mod item;
+pub mod rate_limiter;
+pub mod selector;
+pub mod table;
+pub mod tensor;

@@ -1,0 +1,333 @@
+//! Rate limiting (§3.4, Fig. 4): controls when items may be inserted into /
+//! sampled from a table, enforcing a target sample-to-insert ratio (SPI).
+//!
+//! The limiter tracks cumulative `inserts` and `samples` and maintains the
+//! *cursor*
+//!
+//! ```text
+//!   diff = inserts × SPI − samples
+//! ```
+//!
+//! (each insert moves the cursor by +SPI, each sample by −1; Fig. 4 shows
+//! the equivalent +3/−2 formulation for SPI = 3/2). An insert is allowed
+//! while the post-insert diff stays ≤ `max_diff`; a sample is allowed once
+//! at least `min_size_to_sample` items have ever been inserted and the
+//! post-sample diff stays ≥ `min_diff`. These semantics mirror the
+//! open-source Reverb `RateLimiter`.
+//!
+//! The limiter itself is pure bookkeeping — blocking (condvars, timeouts)
+//! lives in [`crate::core::table::Table`].
+
+use crate::error::{Error, Result};
+
+/// Serializable limiter configuration.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct RateLimiterConfig {
+    /// Target samples per insert (SPI).
+    pub samples_per_insert: f64,
+    /// Minimum number of inserts before sampling may begin.
+    pub min_size_to_sample: u64,
+    /// Lower bound on `diff` after a sample.
+    pub min_diff: f64,
+    /// Upper bound on `diff` after an insert.
+    pub max_diff: f64,
+}
+
+impl RateLimiterConfig {
+    /// `SampleToInsertRatio` (§3.4): target SPI with a symmetric
+    /// `error_buffer` around the equilibrium point
+    /// `min_size_to_sample × SPI`. Larger buffers avoid blocking when the
+    /// system is roughly in equilibrium.
+    pub fn sample_to_insert_ratio(
+        samples_per_insert: f64,
+        min_size_to_sample: u64,
+        error_buffer: f64,
+    ) -> Result<Self> {
+        if !(samples_per_insert.is_finite() && samples_per_insert > 0.0) {
+            return Err(Error::InvalidArgument(format!(
+                "samples_per_insert must be positive, got {samples_per_insert}"
+            )));
+        }
+        if !(error_buffer.is_finite() && error_buffer > 0.0) {
+            return Err(Error::InvalidArgument(format!(
+                "error_buffer must be positive, got {error_buffer}"
+            )));
+        }
+        // The buffer must admit at least one insert and one sample around
+        // equilibrium or the system deadlocks immediately.
+        if error_buffer < samples_per_insert.max(1.0) {
+            return Err(Error::InvalidArgument(format!(
+                "error_buffer {error_buffer} too small for SPI {samples_per_insert}; \
+                 must be >= max(SPI, 1)"
+            )));
+        }
+        let center = min_size_to_sample as f64 * samples_per_insert;
+        Ok(RateLimiterConfig {
+            samples_per_insert,
+            min_size_to_sample,
+            min_diff: center - error_buffer,
+            max_diff: center + error_buffer,
+        })
+    }
+
+    /// `MinSize` (§3.4): only require `n` items before sampling starts; the
+    /// SPI is unconstrained (bounds at ±∞).
+    pub fn min_size(n: u64) -> Self {
+        RateLimiterConfig {
+            samples_per_insert: 1.0,
+            min_size_to_sample: n,
+            min_diff: f64::MIN,
+            max_diff: f64::MAX,
+        }
+    }
+
+    /// `Queue` (§3.4): bounded queue of `queue_size` items, each consumed
+    /// exactly once. SPI = 1, diff bounded in `[0, queue_size]`: inserts
+    /// block when `queue_size` unconsumed items exist, samples block when
+    /// none do. Combine with FIFO selectors (+ `max_times_sampled = 1`) for
+    /// queue behaviour, LIFO for a stack.
+    pub fn queue(queue_size: u64) -> Self {
+        RateLimiterConfig {
+            samples_per_insert: 1.0,
+            min_size_to_sample: 0,
+            min_diff: 0.0,
+            max_diff: queue_size as f64,
+        }
+    }
+
+    pub fn build(self) -> RateLimiter {
+        RateLimiter {
+            cfg: self,
+            inserts: 0,
+            samples: 0,
+            blocked_inserts: 0,
+            blocked_samples: 0,
+        }
+    }
+}
+
+/// Live limiter state.
+#[derive(Clone, Debug)]
+pub struct RateLimiter {
+    cfg: RateLimiterConfig,
+    inserts: u64,
+    samples: u64,
+    /// Diagnostics: how many times an insert/sample had to wait.
+    blocked_inserts: u64,
+    blocked_samples: u64,
+}
+
+impl RateLimiter {
+    pub fn config(&self) -> &RateLimiterConfig {
+        &self.cfg
+    }
+
+    /// Cursor position `inserts × SPI − samples`.
+    pub fn diff(&self) -> f64 {
+        self.inserts as f64 * self.cfg.samples_per_insert - self.samples as f64
+    }
+
+    /// Realized SPI so far (NaN before the first insert).
+    pub fn realized_spi(&self) -> f64 {
+        self.samples as f64 / self.inserts as f64
+    }
+
+    /// Whether `n` more inserts are currently admissible.
+    pub fn can_insert(&self, n: u64) -> bool {
+        let diff =
+            (self.inserts + n) as f64 * self.cfg.samples_per_insert - self.samples as f64;
+        diff <= self.cfg.max_diff
+    }
+
+    /// Whether `n` more samples are currently admissible.
+    pub fn can_sample(&self, n: u64) -> bool {
+        if self.inserts < self.cfg.min_size_to_sample {
+            return false;
+        }
+        let diff =
+            self.inserts as f64 * self.cfg.samples_per_insert - (self.samples + n) as f64;
+        diff >= self.cfg.min_diff
+    }
+
+    /// Record `n` committed inserts.
+    pub fn commit_insert(&mut self, n: u64) {
+        self.inserts += n;
+    }
+
+    /// Record `n` committed samples.
+    pub fn commit_sample(&mut self, n: u64) {
+        self.samples += n;
+    }
+
+    /// Record that an insert had to block (diagnostics).
+    pub fn note_blocked_insert(&mut self) {
+        self.blocked_inserts += 1;
+    }
+
+    /// Record that a sample had to block (diagnostics).
+    pub fn note_blocked_sample(&mut self) {
+        self.blocked_samples += 1;
+    }
+
+    pub fn inserts(&self) -> u64 {
+        self.inserts
+    }
+
+    pub fn samples(&self) -> u64 {
+        self.samples
+    }
+
+    pub fn blocked_inserts(&self) -> u64 {
+        self.blocked_inserts
+    }
+
+    pub fn blocked_samples(&self) -> u64 {
+        self.blocked_samples
+    }
+
+    /// Restore counters (checkpoint load).
+    pub fn restore(&mut self, inserts: u64, samples: u64) {
+        self.inserts = inserts;
+        self.samples = samples;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::forall;
+
+    #[test]
+    fn fig4_worked_example() {
+        // Fig. 4: SPI = 3/2 — inserts move the cursor +3, samples −2. In our
+        // normalized units (sample = −1), SPI = 1.5 and bounds scaled by 2.
+        // error_buffer = 3 (≥ SPI) around min_size 2 → center 3.
+        let mut rl = RateLimiterConfig::sample_to_insert_ratio(1.5, 2, 3.0)
+            .unwrap()
+            .build();
+        // No sampling before 2 inserts.
+        assert!(!rl.can_sample(1));
+        rl.commit_insert(1);
+        assert!(!rl.can_sample(1));
+        rl.commit_insert(1);
+        // diff = 3.0, min_diff = 0 → sampling allowed.
+        assert!(rl.can_sample(1));
+        // max_diff = 6: diff after 3rd insert = 4.5 ≤ 6 OK, after 4th = 6 OK,
+        // after 5th = 7.5 > 6 → blocked until a sample.
+        assert!(rl.can_insert(2));
+        assert!(!rl.can_insert(3));
+        rl.commit_insert(2);
+        assert!(!rl.can_insert(1));
+        // One sample moves the cursor −1 (diff 6 → 5): the next insert would
+        // land at 6.5 > 6, still blocked. A second sample (diff 4) admits it.
+        rl.commit_sample(1);
+        assert!(!rl.can_insert(1));
+        rl.commit_sample(1);
+        assert!(rl.can_insert(1));
+    }
+
+    #[test]
+    fn min_size_gates_sampling_only() {
+        let mut rl = RateLimiterConfig::min_size(3).build();
+        assert!(rl.can_insert(1_000_000));
+        assert!(!rl.can_sample(1));
+        rl.commit_insert(2);
+        assert!(!rl.can_sample(1));
+        rl.commit_insert(1);
+        assert!(rl.can_sample(1));
+        // SPI unconstrained: sample far more than inserted.
+        rl.commit_sample(1_000_000);
+        assert!(rl.can_sample(1));
+        assert!(rl.can_insert(1));
+    }
+
+    #[test]
+    fn queue_semantics() {
+        let mut rl = RateLimiterConfig::queue(2).build();
+        assert!(!rl.can_sample(1), "empty queue blocks sample");
+        assert!(rl.can_insert(1));
+        rl.commit_insert(1);
+        assert!(rl.can_insert(1));
+        rl.commit_insert(1);
+        assert!(!rl.can_insert(1), "full queue blocks insert");
+        assert!(rl.can_sample(1));
+        assert!(!rl.can_sample(3), "cannot sample more than queued");
+        rl.commit_sample(1);
+        assert!(rl.can_insert(1));
+    }
+
+    #[test]
+    fn sample_to_insert_ratio_validation() {
+        assert!(RateLimiterConfig::sample_to_insert_ratio(0.0, 1, 1.0).is_err());
+        assert!(RateLimiterConfig::sample_to_insert_ratio(-1.0, 1, 1.0).is_err());
+        assert!(RateLimiterConfig::sample_to_insert_ratio(1.0, 1, 0.0).is_err());
+        assert!(RateLimiterConfig::sample_to_insert_ratio(4.0, 1, 2.0).is_err());
+        assert!(RateLimiterConfig::sample_to_insert_ratio(4.0, 1, 4.0).is_ok());
+    }
+
+    #[test]
+    fn realized_spi_tracks_counts() {
+        let mut rl = RateLimiterConfig::min_size(1).build();
+        rl.commit_insert(10);
+        rl.commit_sample(25);
+        assert!((rl.realized_spi() - 2.5).abs() < 1e-12);
+        assert_eq!(rl.inserts(), 10);
+        assert_eq!(rl.samples(), 25);
+    }
+
+    #[test]
+    fn restore_sets_counters() {
+        let mut rl = RateLimiterConfig::queue(5).build();
+        rl.restore(3, 1);
+        assert_eq!(rl.diff(), 2.0);
+        assert!(rl.can_sample(1));
+        assert!(rl.can_insert(3));
+        assert!(!rl.can_insert(4));
+    }
+
+    /// The central invariant of §3.4: under any admissible schedule the
+    /// realized diff stays inside [min_diff - spi, max_diff] — i.e. the SPI
+    /// never drifts outside the configured corridor.
+    #[test]
+    fn diff_never_escapes_corridor_property() {
+        forall("rate limiter corridor", |rng| {
+            let spi = 0.25 + rng.gen_f64() * 4.0;
+            let min_size = rng.gen_range(5);
+            let buffer = spi.max(1.0) * (1.0 + rng.gen_f64() * 3.0);
+            let cfg =
+                RateLimiterConfig::sample_to_insert_ratio(spi, min_size, buffer).unwrap();
+            let mut rl = cfg.build();
+            for _ in 0..500 {
+                // A scheduler that only commits admissible ops (as the Table
+                // enforces) — choose randomly among admissible actions.
+                let can_i = rl.can_insert(1);
+                let can_s = rl.can_sample(1);
+                match (can_i, can_s) {
+                    (true, true) => {
+                        if rng.gen_bool(0.5) {
+                            rl.commit_insert(1)
+                        } else {
+                            rl.commit_sample(1)
+                        }
+                    }
+                    (true, false) => rl.commit_insert(1),
+                    (false, true) => rl.commit_sample(1),
+                    (false, false) => {
+                        return Err(format!(
+                            "deadlock: diff={} cfg={:?}",
+                            rl.diff(),
+                            cfg
+                        ))
+                    }
+                }
+                if rl.diff() > cfg.max_diff + 1e-9 {
+                    return Err(format!("diff {} above max {}", rl.diff(), cfg.max_diff));
+                }
+                if rl.samples() > 0 && rl.diff() < cfg.min_diff - 1e-9 {
+                    return Err(format!("diff {} below min {}", rl.diff(), cfg.min_diff));
+                }
+            }
+            Ok(())
+        });
+    }
+}

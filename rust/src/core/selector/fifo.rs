@@ -1,0 +1,240 @@
+//! FIFO and LIFO selectors (§3.3): select by insertion order.
+//!
+//! Backed by an insertion-ordered `BTreeMap<seq, key>` plus a reverse index,
+//! giving O(log n) insert/delete and O(log n) select of the oldest/newest.
+//! As a Sampler, FIFO gives queue semantics and LIFO stack semantics; as a
+//! Remover, FIFO evicts the oldest item (the classic sliding-window replay
+//! buffer) and LIFO evicts the newest (preserving the oldest).
+
+use super::Selector;
+use crate::error::{Error, Result};
+use crate::util::rng::Pcg32;
+use std::collections::{BTreeMap, HashMap};
+
+/// Shared order-index machinery for FIFO/LIFO.
+#[derive(Default, Debug)]
+struct OrderIndex {
+    /// Monotone insertion counter → key.
+    by_seq: BTreeMap<u64, u64>,
+    /// key → insertion counter.
+    seq_of: HashMap<u64, u64>,
+    next_seq: u64,
+}
+
+impl OrderIndex {
+    fn insert(&mut self, key: u64) -> Result<()> {
+        if self.seq_of.contains_key(&key) {
+            return Err(Error::InvalidArgument(format!(
+                "duplicate key {key} in order selector"
+            )));
+        }
+        let seq = self.next_seq;
+        self.next_seq += 1;
+        self.by_seq.insert(seq, key);
+        self.seq_of.insert(key, seq);
+        Ok(())
+    }
+
+    fn delete(&mut self, key: u64) -> Result<()> {
+        let seq = self
+            .seq_of
+            .remove(&key)
+            .ok_or(Error::ItemNotFound(key))?;
+        self.by_seq.remove(&seq);
+        Ok(())
+    }
+
+    fn contains(&self, key: u64) -> bool {
+        self.seq_of.contains_key(&key)
+    }
+
+    fn len(&self) -> usize {
+        self.by_seq.len()
+    }
+
+    fn clear(&mut self) {
+        self.by_seq.clear();
+        self.seq_of.clear();
+        // next_seq deliberately NOT reset: keys inserted after a clear are
+        // still newer than anything that came before.
+    }
+
+    fn oldest(&self) -> Option<u64> {
+        self.by_seq.values().next().copied()
+    }
+
+    fn newest(&self) -> Option<u64> {
+        self.by_seq.values().next_back().copied()
+    }
+}
+
+/// First-in-first-out selection.
+#[derive(Default, Debug)]
+pub struct Fifo {
+    index: OrderIndex,
+}
+
+impl Fifo {
+    pub fn new() -> Self {
+        Self::default()
+    }
+}
+
+impl Selector for Fifo {
+    fn insert(&mut self, key: u64, _priority: f64) -> Result<()> {
+        self.index.insert(key)
+    }
+
+    fn update(&mut self, key: u64, _priority: f64) -> Result<()> {
+        // Order-based: priority changes are observed but do not affect order.
+        if self.index.contains(key) {
+            Ok(())
+        } else {
+            Err(Error::ItemNotFound(key))
+        }
+    }
+
+    fn delete(&mut self, key: u64) -> Result<()> {
+        self.index.delete(key)
+    }
+
+    fn select(&mut self, _rng: &mut Pcg32) -> Option<(u64, f64)> {
+        self.index.oldest().map(|k| (k, 1.0))
+    }
+
+    fn len(&self) -> usize {
+        self.index.len()
+    }
+
+    fn clear(&mut self) {
+        self.index.clear()
+    }
+
+    fn name(&self) -> &'static str {
+        "fifo"
+    }
+}
+
+/// Last-in-first-out selection.
+#[derive(Default, Debug)]
+pub struct Lifo {
+    index: OrderIndex,
+}
+
+impl Lifo {
+    pub fn new() -> Self {
+        Self::default()
+    }
+}
+
+impl Selector for Lifo {
+    fn insert(&mut self, key: u64, _priority: f64) -> Result<()> {
+        self.index.insert(key)
+    }
+
+    fn update(&mut self, key: u64, _priority: f64) -> Result<()> {
+        if self.index.contains(key) {
+            Ok(())
+        } else {
+            Err(Error::ItemNotFound(key))
+        }
+    }
+
+    fn delete(&mut self, key: u64) -> Result<()> {
+        self.index.delete(key)
+    }
+
+    fn select(&mut self, _rng: &mut Pcg32) -> Option<(u64, f64)> {
+        self.index.newest().map(|k| (k, 1.0))
+    }
+
+    fn len(&self) -> usize {
+        self.index.len()
+    }
+
+    fn clear(&mut self) {
+        self.index.clear()
+    }
+
+    fn name(&self) -> &'static str {
+        "lifo"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rng() -> Pcg32 {
+        Pcg32::new(1, 1)
+    }
+
+    #[test]
+    fn fifo_selects_in_insertion_order() {
+        let mut s = Fifo::new();
+        for k in [10, 20, 30] {
+            s.insert(k, 1.0).unwrap();
+        }
+        assert_eq!(s.select(&mut rng()), Some((10, 1.0)));
+        s.delete(10).unwrap();
+        assert_eq!(s.select(&mut rng()), Some((20, 1.0)));
+        s.delete(20).unwrap();
+        s.delete(30).unwrap();
+        assert_eq!(s.select(&mut rng()), None);
+    }
+
+    #[test]
+    fn lifo_selects_newest() {
+        let mut s = Lifo::new();
+        for k in [10, 20, 30] {
+            s.insert(k, 1.0).unwrap();
+        }
+        assert_eq!(s.select(&mut rng()), Some((30, 1.0)));
+        s.delete(30).unwrap();
+        assert_eq!(s.select(&mut rng()), Some((20, 1.0)));
+    }
+
+    #[test]
+    fn delete_middle_preserves_order() {
+        let mut s = Fifo::new();
+        for k in [1, 2, 3] {
+            s.insert(k, 1.0).unwrap();
+        }
+        s.delete(1).unwrap();
+        assert_eq!(s.select(&mut rng()), Some((2, 1.0)));
+        assert_eq!(s.len(), 2);
+    }
+
+    #[test]
+    fn duplicate_insert_rejected() {
+        let mut s = Fifo::new();
+        s.insert(5, 1.0).unwrap();
+        assert!(s.insert(5, 2.0).is_err());
+    }
+
+    #[test]
+    fn update_checks_existence_only() {
+        let mut s = Lifo::new();
+        s.insert(5, 1.0).unwrap();
+        s.update(5, 99.0).unwrap();
+        assert!(s.update(6, 1.0).is_err());
+        assert_eq!(s.select(&mut rng()), Some((5, 1.0)));
+    }
+
+    #[test]
+    fn clear_then_reuse_keeps_ordering() {
+        let mut s = Fifo::new();
+        s.insert(1, 1.0).unwrap();
+        s.clear();
+        assert_eq!(s.len(), 0);
+        s.insert(1, 1.0).unwrap();
+        s.insert(2, 1.0).unwrap();
+        assert_eq!(s.select(&mut rng()), Some((1, 1.0)));
+    }
+
+    #[test]
+    fn delete_missing_errors() {
+        let mut s = Fifo::new();
+        assert!(s.delete(42).is_err());
+    }
+}

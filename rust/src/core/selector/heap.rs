@@ -1,0 +1,334 @@
+//! Max/Min heap selectors (§3.3): select the item with the highest/lowest
+//! priority. An indexed binary heap (position map) gives O(log n) insert,
+//! update (sift in either direction) and delete, O(1) peek.
+//!
+//! As a Sampler, MaxHeap yields priority-queue behaviour; as a Remover,
+//! MinHeap keeps "a view of the highest priority data across longer time
+//! spans" by always evicting the lowest-priority item.
+//!
+//! Ties break by insertion order (older first) so behaviour is
+//! deterministic — matching Reverb's heap selector.
+
+use super::Selector;
+use crate::error::{Error, Result};
+use crate::util::rng::Pcg32;
+use std::collections::HashMap;
+
+#[derive(Clone, Copy, Debug)]
+struct Entry {
+    key: u64,
+    priority: f64,
+    /// Tie-break: insertion sequence (older wins).
+    seq: u64,
+}
+
+/// Indexed binary heap parameterized on direction.
+#[derive(Debug)]
+struct IndexedHeap {
+    /// true → max-heap, false → min-heap.
+    max: bool,
+    heap: Vec<Entry>,
+    pos: HashMap<u64, usize>,
+    next_seq: u64,
+}
+
+impl IndexedHeap {
+    fn new(max: bool) -> Self {
+        IndexedHeap {
+            max,
+            heap: Vec::new(),
+            pos: HashMap::new(),
+            next_seq: 0,
+        }
+    }
+
+    /// True if `a` should be closer to the root than `b`.
+    #[inline]
+    fn before(&self, a: &Entry, b: &Entry) -> bool {
+        if a.priority != b.priority {
+            if self.max {
+                a.priority > b.priority
+            } else {
+                a.priority < b.priority
+            }
+        } else {
+            a.seq < b.seq
+        }
+    }
+
+    fn swap(&mut self, i: usize, j: usize) {
+        self.heap.swap(i, j);
+        self.pos.insert(self.heap[i].key, i);
+        self.pos.insert(self.heap[j].key, j);
+    }
+
+    fn sift_up(&mut self, mut i: usize) {
+        while i > 0 {
+            let parent = (i - 1) / 2;
+            if self.before(&self.heap[i], &self.heap[parent]) {
+                self.swap(i, parent);
+                i = parent;
+            } else {
+                break;
+            }
+        }
+    }
+
+    fn sift_down(&mut self, mut i: usize) {
+        loop {
+            let (l, r) = (2 * i + 1, 2 * i + 2);
+            let mut best = i;
+            if l < self.heap.len() && self.before(&self.heap[l], &self.heap[best]) {
+                best = l;
+            }
+            if r < self.heap.len() && self.before(&self.heap[r], &self.heap[best]) {
+                best = r;
+            }
+            if best == i {
+                break;
+            }
+            self.swap(i, best);
+            i = best;
+        }
+    }
+
+    fn insert(&mut self, key: u64, priority: f64) -> Result<()> {
+        if self.pos.contains_key(&key) {
+            return Err(Error::InvalidArgument(format!(
+                "duplicate key {key} in heap selector"
+            )));
+        }
+        let seq = self.next_seq;
+        self.next_seq += 1;
+        let i = self.heap.len();
+        self.heap.push(Entry { key, priority, seq });
+        self.pos.insert(key, i);
+        self.sift_up(i);
+        Ok(())
+    }
+
+    fn update(&mut self, key: u64, priority: f64) -> Result<()> {
+        let &i = self.pos.get(&key).ok_or(Error::ItemNotFound(key))?;
+        self.heap[i].priority = priority;
+        self.sift_up(i);
+        // If sift_up did not move it, it may need to go down.
+        let i = self.pos[&key];
+        self.sift_down(i);
+        Ok(())
+    }
+
+    fn delete(&mut self, key: u64) -> Result<()> {
+        let i = self.pos.remove(&key).ok_or(Error::ItemNotFound(key))?;
+        let last = self.heap.pop().expect("non-empty on pos hit");
+        if i < self.heap.len() {
+            self.heap[i] = last;
+            self.pos.insert(last.key, i);
+            self.sift_up(i);
+            let i = self.pos[&last.key];
+            self.sift_down(i);
+        }
+        Ok(())
+    }
+
+    fn peek(&self) -> Option<u64> {
+        self.heap.first().map(|e| e.key)
+    }
+
+    fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    fn clear(&mut self) {
+        self.heap.clear();
+        self.pos.clear();
+    }
+
+    #[cfg(test)]
+    fn check_heap_property(&self) {
+        for i in 1..self.heap.len() {
+            let parent = (i - 1) / 2;
+            assert!(
+                !self.before(&self.heap[i], &self.heap[parent]),
+                "heap property violated at {i}"
+            );
+            assert_eq!(self.pos[&self.heap[i].key], i, "pos map stale at {i}");
+        }
+    }
+}
+
+/// Selects the highest-priority item.
+#[derive(Debug)]
+pub struct MaxHeap {
+    inner: IndexedHeap,
+}
+
+impl Default for MaxHeap {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl MaxHeap {
+    pub fn new() -> Self {
+        MaxHeap {
+            inner: IndexedHeap::new(true),
+        }
+    }
+}
+
+/// Selects the lowest-priority item.
+#[derive(Debug)]
+pub struct MinHeap {
+    inner: IndexedHeap,
+}
+
+impl Default for MinHeap {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl MinHeap {
+    pub fn new() -> Self {
+        MinHeap {
+            inner: IndexedHeap::new(false),
+        }
+    }
+}
+
+macro_rules! impl_heap_selector {
+    ($ty:ty, $name:literal) => {
+        impl Selector for $ty {
+            fn insert(&mut self, key: u64, priority: f64) -> Result<()> {
+                self.inner.insert(key, priority)
+            }
+            fn update(&mut self, key: u64, priority: f64) -> Result<()> {
+                self.inner.update(key, priority)
+            }
+            fn delete(&mut self, key: u64) -> Result<()> {
+                self.inner.delete(key)
+            }
+            fn select(&mut self, _rng: &mut Pcg32) -> Option<(u64, f64)> {
+                self.inner.peek().map(|k| (k, 1.0))
+            }
+            fn len(&self) -> usize {
+                self.inner.len()
+            }
+            fn clear(&mut self) {
+                self.inner.clear()
+            }
+            fn name(&self) -> &'static str {
+                $name
+            }
+        }
+    };
+}
+
+impl_heap_selector!(MaxHeap, "max_heap");
+impl_heap_selector!(MinHeap, "min_heap");
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::forall;
+
+    fn rng() -> Pcg32 {
+        Pcg32::new(2, 2)
+    }
+
+    #[test]
+    fn max_heap_selects_highest() {
+        let mut h = MaxHeap::new();
+        h.insert(1, 5.0).unwrap();
+        h.insert(2, 9.0).unwrap();
+        h.insert(3, 7.0).unwrap();
+        assert_eq!(h.select(&mut rng()), Some((2, 1.0)));
+        h.delete(2).unwrap();
+        assert_eq!(h.select(&mut rng()), Some((3, 1.0)));
+    }
+
+    #[test]
+    fn min_heap_selects_lowest() {
+        let mut h = MinHeap::new();
+        h.insert(1, 5.0).unwrap();
+        h.insert(2, 9.0).unwrap();
+        h.insert(3, 7.0).unwrap();
+        assert_eq!(h.select(&mut rng()), Some((1, 1.0)));
+    }
+
+    #[test]
+    fn ties_break_by_insertion_order() {
+        let mut h = MaxHeap::new();
+        h.insert(10, 1.0).unwrap();
+        h.insert(20, 1.0).unwrap();
+        h.insert(30, 1.0).unwrap();
+        assert_eq!(h.select(&mut rng()), Some((10, 1.0)));
+        h.delete(10).unwrap();
+        assert_eq!(h.select(&mut rng()), Some((20, 1.0)));
+    }
+
+    #[test]
+    fn update_reorders() {
+        let mut h = MaxHeap::new();
+        h.insert(1, 1.0).unwrap();
+        h.insert(2, 2.0).unwrap();
+        h.update(1, 3.0).unwrap();
+        assert_eq!(h.select(&mut rng()), Some((1, 1.0)));
+        h.update(1, 0.5).unwrap();
+        assert_eq!(h.select(&mut rng()), Some((2, 1.0)));
+    }
+
+    #[test]
+    fn random_ops_maintain_heap_property() {
+        forall("indexed heap property", |rng| {
+            let mut h = IndexedHeap::new(rng.gen_bool(0.5));
+            let mut live: Vec<u64> = vec![];
+            let mut next = 1u64;
+            for _ in 0..200 {
+                match rng.gen_range(3) {
+                    0 => {
+                        h.insert(next, rng.gen_f64()).map_err(|e| e.to_string())?;
+                        live.push(next);
+                        next += 1;
+                    }
+                    1 if !live.is_empty() => {
+                        let i = rng.gen_range(live.len() as u64) as usize;
+                        h.update(live[i], rng.gen_f64()).map_err(|e| e.to_string())?;
+                    }
+                    _ if !live.is_empty() => {
+                        let i = rng.gen_range(live.len() as u64) as usize;
+                        let k = live.swap_remove(i);
+                        h.delete(k).map_err(|e| e.to_string())?;
+                    }
+                    _ => {}
+                }
+                h.check_heap_property();
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn peek_matches_linear_scan() {
+        forall("heap peek = argmax", |rng| {
+            let mut h = MaxHeap::new();
+            let mut entries: Vec<(u64, f64)> = vec![];
+            for k in 1..=30u64 {
+                let p = rng.gen_f64();
+                h.insert(k, p).unwrap();
+                entries.push((k, p));
+            }
+            let (want, _) = entries
+                .iter()
+                .cloned()
+                .reduce(|a, b| if b.1 > a.1 { b } else { a })
+                .unwrap();
+            let (got, _) = h.select(&mut Pcg32::new(1, 1)).unwrap();
+            if got == want {
+                Ok(())
+            } else {
+                Err(format!("peek {got} != argmax {want}"))
+            }
+        });
+    }
+}

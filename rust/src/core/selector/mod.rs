@@ -1,0 +1,217 @@
+//! Selectors (§3.3): strategies for choosing an item from a table.
+//!
+//! Each `Table` holds two selectors — a **Sampler** (chooses the item for a
+//! sample request) and a **Remover** (chooses the victim when the table is
+//! full). Selectors maintain only their own internal state, updated by
+//! observing insert/update/delete on the parent table; by design they never
+//! see item *data*, only `(key, priority)` pairs — the paper calls this out
+//! as a performance requirement.
+
+mod fifo;
+mod heap;
+mod prioritized;
+mod uniform;
+
+pub use fifo::{Fifo, Lifo};
+pub use heap::{MaxHeap, MinHeap};
+pub use prioritized::Prioritized;
+pub use uniform::Uniform;
+
+use crate::error::{Error, Result};
+use crate::util::rng::Pcg32;
+
+/// A selection strategy over `(key, priority)` pairs.
+pub trait Selector: Send {
+    /// Observe an item insertion.
+    fn insert(&mut self, key: u64, priority: f64) -> Result<()>;
+    /// Observe a priority update.
+    fn update(&mut self, key: u64, priority: f64) -> Result<()>;
+    /// Observe an item deletion.
+    fn delete(&mut self, key: u64) -> Result<()>;
+    /// Choose an item. Returns `(key, probability)` where `probability` is
+    /// the chance this call had of returning this particular key (1.0 for
+    /// deterministic selectors). `None` iff empty.
+    fn select(&mut self, rng: &mut Pcg32) -> Option<(u64, f64)>;
+    /// Number of tracked items.
+    fn len(&self) -> usize;
+    /// True if no items are tracked.
+    fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+    /// Remove all state.
+    fn clear(&mut self);
+    /// Human-readable strategy name.
+    fn name(&self) -> &'static str;
+}
+
+/// Serializable selector configuration — used in table configs, on the wire
+/// and in checkpoints.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum SelectorConfig {
+    Fifo,
+    Lifo,
+    Uniform,
+    MaxHeap,
+    MinHeap,
+    /// Prioritized selection with exponent `C` (priority^C weighting,
+    /// Schaul et al. 2015).
+    Prioritized { exponent: f64 },
+}
+
+impl SelectorConfig {
+    /// Instantiate the strategy.
+    pub fn build(self) -> Box<dyn Selector> {
+        match self {
+            SelectorConfig::Fifo => Box::new(Fifo::new()),
+            SelectorConfig::Lifo => Box::new(Lifo::new()),
+            SelectorConfig::Uniform => Box::new(Uniform::new()),
+            SelectorConfig::MaxHeap => Box::new(MaxHeap::new()),
+            SelectorConfig::MinHeap => Box::new(MinHeap::new()),
+            SelectorConfig::Prioritized { exponent } => Box::new(Prioritized::new(exponent)),
+        }
+    }
+
+    /// Stable wire/checkpoint encoding: `(tag, f64 param)`.
+    pub fn encode(self) -> (u8, f64) {
+        match self {
+            SelectorConfig::Fifo => (0, 0.0),
+            SelectorConfig::Lifo => (1, 0.0),
+            SelectorConfig::Uniform => (2, 0.0),
+            SelectorConfig::MaxHeap => (3, 0.0),
+            SelectorConfig::MinHeap => (4, 0.0),
+            SelectorConfig::Prioritized { exponent } => (5, exponent),
+        }
+    }
+
+    /// Inverse of [`SelectorConfig::encode`].
+    pub fn decode(tag: u8, param: f64) -> Result<Self> {
+        Ok(match tag {
+            0 => SelectorConfig::Fifo,
+            1 => SelectorConfig::Lifo,
+            2 => SelectorConfig::Uniform,
+            3 => SelectorConfig::MaxHeap,
+            4 => SelectorConfig::MinHeap,
+            5 => SelectorConfig::Prioritized { exponent: param },
+            t => return Err(Error::Decode(format!("unknown selector tag {t}"))),
+        })
+    }
+
+    /// Whether `select` is deterministic given the table state. The client
+    /// Dataset uses this to decide if exact-order (single stream) delivery
+    /// is required (§3.9).
+    pub fn is_deterministic(self) -> bool {
+        !matches!(
+            self,
+            SelectorConfig::Uniform | SelectorConfig::Prioritized { .. }
+        )
+    }
+}
+
+#[cfg(test)]
+pub(crate) mod test_support {
+    use super::*;
+    use std::collections::HashMap;
+
+    /// Drive an arbitrary op sequence against a selector and a naive model,
+    /// checking shared invariants. Returns Err on the first divergence.
+    pub fn check_against_model(
+        mut sel: Box<dyn Selector>,
+        rng: &mut Pcg32,
+        ops: usize,
+    ) -> std::result::Result<(), String> {
+        let mut model: HashMap<u64, f64> = HashMap::new();
+        let mut next_key = 1u64;
+        for _ in 0..ops {
+            match rng.gen_range(4) {
+                0 => {
+                    let p = rng.gen_f64() * 10.0;
+                    sel.insert(next_key, p).map_err(|e| e.to_string())?;
+                    model.insert(next_key, p);
+                    next_key += 1;
+                }
+                1 if !model.is_empty() => {
+                    let keys: Vec<u64> = model.keys().copied().collect();
+                    let k = keys[rng.gen_range(keys.len() as u64) as usize];
+                    let p = rng.gen_f64() * 10.0;
+                    sel.update(k, p).map_err(|e| e.to_string())?;
+                    model.insert(k, p);
+                }
+                2 if !model.is_empty() => {
+                    let keys: Vec<u64> = model.keys().copied().collect();
+                    let k = keys[rng.gen_range(keys.len() as u64) as usize];
+                    sel.delete(k).map_err(|e| e.to_string())?;
+                    model.remove(&k);
+                }
+                _ => {
+                    match sel.select(rng) {
+                        None => {
+                            if !model.is_empty() {
+                                return Err("select returned None on non-empty".into());
+                            }
+                        }
+                        Some((k, prob)) => {
+                            if !model.contains_key(&k) {
+                                return Err(format!("selected unknown key {k}"));
+                            }
+                            if !(0.0..=1.0).contains(&prob) {
+                                return Err(format!("probability {prob} out of range"));
+                            }
+                        }
+                    }
+                }
+            }
+            if sel.len() != model.len() {
+                return Err(format!("len {} != model {}", sel.len(), model.len()));
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::forall;
+
+    #[test]
+    fn config_roundtrip() {
+        for cfg in [
+            SelectorConfig::Fifo,
+            SelectorConfig::Lifo,
+            SelectorConfig::Uniform,
+            SelectorConfig::MaxHeap,
+            SelectorConfig::MinHeap,
+            SelectorConfig::Prioritized { exponent: 0.7 },
+        ] {
+            let (tag, p) = cfg.encode();
+            assert_eq!(SelectorConfig::decode(tag, p).unwrap(), cfg);
+        }
+        assert!(SelectorConfig::decode(99, 0.0).is_err());
+    }
+
+    #[test]
+    fn determinism_classification() {
+        assert!(SelectorConfig::Fifo.is_deterministic());
+        assert!(SelectorConfig::Lifo.is_deterministic());
+        assert!(SelectorConfig::MaxHeap.is_deterministic());
+        assert!(!SelectorConfig::Uniform.is_deterministic());
+        assert!(!SelectorConfig::Prioritized { exponent: 1.0 }.is_deterministic());
+    }
+
+    #[test]
+    fn all_selectors_satisfy_model_invariants() {
+        for cfg in [
+            SelectorConfig::Fifo,
+            SelectorConfig::Lifo,
+            SelectorConfig::Uniform,
+            SelectorConfig::MaxHeap,
+            SelectorConfig::MinHeap,
+            SelectorConfig::Prioritized { exponent: 1.0 },
+            SelectorConfig::Prioritized { exponent: 0.5 },
+        ] {
+            forall(&format!("model invariants for {cfg:?}"), |rng| {
+                test_support::check_against_model(cfg.build(), rng, 100)
+            });
+        }
+    }
+}

@@ -1,0 +1,410 @@
+//! Prioritized selector (§3.3): Schaul et al. (2015) proportional
+//! prioritization. Item `i` is selected with probability
+//!
+//! ```text
+//!             p_i^C
+//!   P(i) = ───────────
+//!           Σ_k p_k^C
+//! ```
+//!
+//! Backed by a sum-tree (complete binary tree over weights stored in a flat
+//! vec): O(log n) insert/update/delete/sample with exact proportional
+//! probabilities. Zero-priority items are sampled only if every priority is
+//! zero (in which case selection falls back to uniform over the tree, as in
+//! the reference implementation where a tiny epsilon keeps items reachable).
+
+use super::Selector;
+use crate::error::{Error, Result};
+use crate::util::rng::Pcg32;
+use std::collections::HashMap;
+
+#[derive(Debug)]
+pub struct Prioritized {
+    /// Priority exponent `C`.
+    exponent: f64,
+    /// Flat complete binary tree; leaves hold weights, internal nodes sums.
+    /// `tree[0]` is the root. Leaf `i` lives at `capacity - 1 + i`.
+    tree: Vec<f64>,
+    /// Number of leaf slots allocated.
+    capacity: usize,
+    /// leaf index → key (u64::MAX = free).
+    leaf_key: Vec<u64>,
+    /// key → leaf index.
+    leaf_of: HashMap<u64, usize>,
+    /// Free leaf slots.
+    free: Vec<usize>,
+}
+
+const FREE: u64 = u64::MAX;
+
+impl Prioritized {
+    pub fn new(exponent: f64) -> Self {
+        assert!(
+            exponent.is_finite() && exponent >= 0.0,
+            "priority exponent must be finite and >= 0"
+        );
+        Prioritized {
+            exponent,
+            tree: vec![0.0; 1],
+            capacity: 1,
+            leaf_key: vec![FREE],
+            leaf_of: HashMap::new(),
+            free: vec![0],
+        }
+    }
+
+    pub fn exponent(&self) -> f64 {
+        self.exponent
+    }
+
+    #[inline]
+    fn weight(&self, priority: f64) -> f64 {
+        if priority == 0.0 {
+            0.0
+        } else {
+            priority.powf(self.exponent)
+        }
+    }
+
+    fn grow(&mut self) {
+        let new_cap = self.capacity * 2;
+        let mut tree = vec![0.0; 2 * new_cap - 1];
+        let mut leaf_key = vec![FREE; new_cap];
+        // Copy existing leaves into the new tree.
+        for i in 0..self.capacity {
+            tree[new_cap - 1 + i] = self.tree[self.capacity - 1 + i];
+            leaf_key[i] = self.leaf_key[i];
+        }
+        // Rebuild internal sums bottom-up.
+        for i in (0..new_cap - 1).rev() {
+            tree[i] = tree[2 * i + 1] + tree[2 * i + 2];
+        }
+        self.free.extend(self.capacity..new_cap);
+        self.capacity = new_cap;
+        self.tree = tree;
+        self.leaf_key = leaf_key;
+        for (k, leaf) in self.leaf_of.iter() {
+            debug_assert_eq!(self.leaf_key[*leaf], *k);
+        }
+    }
+
+    fn set_leaf(&mut self, leaf: usize, weight: f64) {
+        let mut i = self.capacity - 1 + leaf;
+        let delta = weight - self.tree[i];
+        if delta == 0.0 {
+            return;
+        }
+        self.tree[i] = weight;
+        while i > 0 {
+            i = (i - 1) / 2;
+            self.tree[i] += delta;
+        }
+        // Fight f64 drift on long op sequences: if the root went slightly
+        // negative, clamp (exact rebuilds happen on grow()).
+        if self.tree[0] < 0.0 {
+            self.rebuild_sums();
+        }
+    }
+
+    fn rebuild_sums(&mut self) {
+        for i in (0..self.capacity - 1).rev() {
+            self.tree[i] = self.tree[2 * i + 1] + self.tree[2 * i + 2];
+        }
+    }
+
+    fn total(&self) -> f64 {
+        self.tree[0]
+    }
+
+    /// Descend the tree to find the leaf covering mass `target`.
+    fn find_leaf(&self, mut target: f64) -> usize {
+        let mut i = 0usize;
+        while i < self.capacity - 1 {
+            let left = 2 * i + 1;
+            if target < self.tree[left] {
+                i = left;
+            } else {
+                target -= self.tree[left];
+                i = left + 1;
+            }
+        }
+        i - (self.capacity - 1)
+    }
+
+    fn live_len(&self) -> usize {
+        self.leaf_of.len()
+    }
+}
+
+impl Selector for Prioritized {
+    fn insert(&mut self, key: u64, priority: f64) -> Result<()> {
+        if self.leaf_of.contains_key(&key) {
+            return Err(Error::InvalidArgument(format!(
+                "duplicate key {key} in prioritized selector"
+            )));
+        }
+        if !priority.is_finite() || priority < 0.0 {
+            return Err(Error::InvalidArgument(format!(
+                "invalid priority {priority}"
+            )));
+        }
+        if self.free.is_empty() {
+            self.grow();
+        }
+        let leaf = self.free.pop().expect("grew above");
+        self.leaf_key[leaf] = key;
+        self.leaf_of.insert(key, leaf);
+        let w = self.weight(priority);
+        self.set_leaf(leaf, w);
+        Ok(())
+    }
+
+    fn update(&mut self, key: u64, priority: f64) -> Result<()> {
+        if !priority.is_finite() || priority < 0.0 {
+            return Err(Error::InvalidArgument(format!(
+                "invalid priority {priority}"
+            )));
+        }
+        let &leaf = self.leaf_of.get(&key).ok_or(Error::ItemNotFound(key))?;
+        let w = self.weight(priority);
+        self.set_leaf(leaf, w);
+        Ok(())
+    }
+
+    fn delete(&mut self, key: u64) -> Result<()> {
+        let leaf = self.leaf_of.remove(&key).ok_or(Error::ItemNotFound(key))?;
+        self.leaf_key[leaf] = FREE;
+        self.set_leaf(leaf, 0.0);
+        self.free.push(leaf);
+        Ok(())
+    }
+
+    fn select(&mut self, rng: &mut Pcg32) -> Option<(u64, f64)> {
+        let n = self.live_len();
+        if n == 0 {
+            return None;
+        }
+        let total = self.total();
+        if total <= 0.0 {
+            // All priorities zero → uniform over live keys. O(n) scan; this
+            // is the degenerate path and rare in practice.
+            let idx = rng.gen_range(n as u64) as usize;
+            let key = *self.leaf_of.keys().nth(idx).expect("n > 0");
+            return Some((key, 1.0 / n as f64));
+        }
+        // Rejection loop guards against landing on a freed/zero leaf due to
+        // floating point edge effects at bucket boundaries.
+        for _ in 0..64 {
+            let target = rng.gen_f64() * total;
+            let leaf = self.find_leaf(target);
+            let key = self.leaf_key[leaf];
+            let w = self.tree[self.capacity - 1 + leaf];
+            if key != FREE && w > 0.0 {
+                return Some((key, (w / total).min(1.0)));
+            }
+        }
+        // Deterministic fallback: first live leaf with positive weight.
+        for leaf in 0..self.capacity {
+            let key = self.leaf_key[leaf];
+            let w = self.tree[self.capacity - 1 + leaf];
+            if key != FREE && w > 0.0 {
+                return Some((key, (w / total).min(1.0)));
+            }
+        }
+        // Only zero-weight live leaves remain.
+        let key = *self.leaf_of.keys().next().expect("n > 0");
+        Some((key, 1.0 / n as f64))
+    }
+
+    fn len(&self) -> usize {
+        self.live_len()
+    }
+
+    fn clear(&mut self) {
+        self.tree = vec![0.0; 1];
+        self.capacity = 1;
+        self.leaf_key = vec![FREE];
+        self.leaf_of.clear();
+        self.free = vec![0];
+    }
+
+    fn name(&self) -> &'static str {
+        "prioritized"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::forall;
+
+    #[test]
+    fn sampling_is_proportional_to_priority() {
+        let mut s = Prioritized::new(1.0);
+        s.insert(1, 1.0).unwrap();
+        s.insert(2, 2.0).unwrap();
+        s.insert(3, 7.0).unwrap();
+        let mut rng = Pcg32::new(42, 1);
+        let mut counts = HashMap::new();
+        let n = 200_000;
+        for _ in 0..n {
+            let (k, p) = s.select(&mut rng).unwrap();
+            *counts.entry(k).or_insert(0usize) += 1;
+            let expect_p = match k {
+                1 => 0.1,
+                2 => 0.2,
+                3 => 0.7,
+                _ => unreachable!(),
+            };
+            assert!((p - expect_p).abs() < 1e-9, "reported prob {p} for {k}");
+        }
+        assert!((counts[&1] as f64 / n as f64 - 0.1).abs() < 0.01);
+        assert!((counts[&2] as f64 / n as f64 - 0.2).abs() < 0.01);
+        assert!((counts[&3] as f64 / n as f64 - 0.7).abs() < 0.01);
+    }
+
+    #[test]
+    fn exponent_reshapes_distribution() {
+        // C = 0.5 compresses the ratio 1:4 to 1:2.
+        let mut s = Prioritized::new(0.5);
+        s.insert(1, 1.0).unwrap();
+        s.insert(2, 4.0).unwrap();
+        let mut rng = Pcg32::new(7, 1);
+        let mut hi = 0usize;
+        let n = 100_000;
+        for _ in 0..n {
+            if s.select(&mut rng).unwrap().0 == 2 {
+                hi += 1;
+            }
+        }
+        assert!((hi as f64 / n as f64 - 2.0 / 3.0).abs() < 0.01);
+    }
+
+    #[test]
+    fn exponent_zero_is_uniform() {
+        let mut s = Prioritized::new(0.0);
+        s.insert(1, 0.001).unwrap();
+        s.insert(2, 1000.0).unwrap();
+        let mut rng = Pcg32::new(9, 1);
+        let mut one = 0usize;
+        let n = 100_000;
+        for _ in 0..n {
+            if s.select(&mut rng).unwrap().0 == 1 {
+                one += 1;
+            }
+        }
+        assert!((one as f64 / n as f64 - 0.5).abs() < 0.01);
+    }
+
+    #[test]
+    fn update_changes_mass() {
+        let mut s = Prioritized::new(1.0);
+        s.insert(1, 1.0).unwrap();
+        s.insert(2, 1.0).unwrap();
+        s.update(1, 0.0).unwrap();
+        let mut rng = Pcg32::new(5, 1);
+        for _ in 0..1000 {
+            assert_eq!(s.select(&mut rng).unwrap().0, 2);
+        }
+    }
+
+    #[test]
+    fn all_zero_priorities_fall_back_to_uniform() {
+        let mut s = Prioritized::new(1.0);
+        s.insert(1, 0.0).unwrap();
+        s.insert(2, 0.0).unwrap();
+        let mut rng = Pcg32::new(5, 2);
+        let mut seen = std::collections::HashSet::new();
+        for _ in 0..200 {
+            let (k, p) = s.select(&mut rng).unwrap();
+            assert!((p - 0.5).abs() < 1e-12);
+            seen.insert(k);
+        }
+        assert_eq!(seen.len(), 2);
+    }
+
+    #[test]
+    fn growth_preserves_weights() {
+        let mut s = Prioritized::new(1.0);
+        for k in 0..100 {
+            s.insert(k, (k + 1) as f64).unwrap();
+        }
+        // Total mass = 1+2+..+100 = 5050.
+        assert!((s.total() - 5050.0).abs() < 1e-6);
+        for k in 0..50 {
+            s.delete(k).unwrap();
+        }
+        let expect: f64 = (51..=100).sum::<u64>() as f64;
+        assert!((s.total() - expect).abs() < 1e-6);
+        assert_eq!(s.len(), 50);
+    }
+
+    #[test]
+    fn deleted_keys_never_selected_property() {
+        forall("prioritized never selects deleted", |rng| {
+            let mut s = Prioritized::new(1.0);
+            let mut live = std::collections::HashSet::new();
+            let mut next = 1u64;
+            for _ in 0..150 {
+                match rng.gen_range(3) {
+                    0 => {
+                        s.insert(next, rng.gen_f64() * 5.0).unwrap();
+                        live.insert(next);
+                        next += 1;
+                    }
+                    1 if !live.is_empty() => {
+                        let k = *live.iter().next().unwrap();
+                        live.remove(&k);
+                        s.delete(k).unwrap();
+                    }
+                    _ => {
+                        if let Some((k, _)) = s.select(rng) {
+                            if !live.contains(&k) {
+                                return Err(format!("selected deleted key {k}"));
+                            }
+                        } else if !live.is_empty() {
+                            return Err("None on non-empty".into());
+                        }
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn tree_sums_consistent_property() {
+        forall("sum tree internal consistency", |rng| {
+            let mut s = Prioritized::new(1.0);
+            let mut model: HashMap<u64, f64> = HashMap::new();
+            let mut next = 1u64;
+            for _ in 0..200 {
+                match rng.gen_range(3) {
+                    0 => {
+                        let p = rng.gen_f64() * 3.0;
+                        s.insert(next, p).unwrap();
+                        model.insert(next, p);
+                        next += 1;
+                    }
+                    1 if !model.is_empty() => {
+                        let k = *model.keys().next().unwrap();
+                        let p = rng.gen_f64() * 3.0;
+                        s.update(k, p).unwrap();
+                        model.insert(k, p);
+                    }
+                    _ if !model.is_empty() => {
+                        let k = *model.keys().next().unwrap();
+                        s.delete(k).unwrap();
+                        model.remove(&k);
+                    }
+                    _ => {}
+                }
+                let expect: f64 = model.values().sum();
+                if (s.total() - expect).abs() > 1e-6 * expect.max(1.0) {
+                    return Err(format!("total {} != model {}", s.total(), expect));
+                }
+            }
+            Ok(())
+        });
+    }
+}

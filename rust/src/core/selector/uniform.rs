@@ -1,0 +1,132 @@
+//! Uniform selector (§3.3): every item equally likely. O(1) insert, delete
+//! (swap-remove) and select. The workhorse Sampler for classic ER, usually
+//! paired with a FIFO Remover.
+
+use super::Selector;
+use crate::error::{Error, Result};
+use crate::util::rng::Pcg32;
+use std::collections::HashMap;
+
+#[derive(Default, Debug)]
+pub struct Uniform {
+    keys: Vec<u64>,
+    pos: HashMap<u64, usize>,
+}
+
+impl Uniform {
+    pub fn new() -> Self {
+        Self::default()
+    }
+}
+
+impl Selector for Uniform {
+    fn insert(&mut self, key: u64, _priority: f64) -> Result<()> {
+        if self.pos.contains_key(&key) {
+            return Err(Error::InvalidArgument(format!(
+                "duplicate key {key} in uniform selector"
+            )));
+        }
+        self.pos.insert(key, self.keys.len());
+        self.keys.push(key);
+        Ok(())
+    }
+
+    fn update(&mut self, key: u64, _priority: f64) -> Result<()> {
+        if self.pos.contains_key(&key) {
+            Ok(())
+        } else {
+            Err(Error::ItemNotFound(key))
+        }
+    }
+
+    fn delete(&mut self, key: u64) -> Result<()> {
+        let idx = self.pos.remove(&key).ok_or(Error::ItemNotFound(key))?;
+        let last = self.keys.pop().expect("keys non-empty if pos hit");
+        if idx < self.keys.len() {
+            self.keys[idx] = last;
+            self.pos.insert(last, idx);
+        }
+        Ok(())
+    }
+
+    fn select(&mut self, rng: &mut Pcg32) -> Option<(u64, f64)> {
+        if self.keys.is_empty() {
+            return None;
+        }
+        let i = rng.gen_range(self.keys.len() as u64) as usize;
+        Some((self.keys[i], 1.0 / self.keys.len() as f64))
+    }
+
+    fn len(&self) -> usize {
+        self.keys.len()
+    }
+
+    fn clear(&mut self) {
+        self.keys.clear();
+        self.pos.clear();
+    }
+
+    fn name(&self) -> &'static str {
+        "uniform"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn selects_all_keys_roughly_uniformly() {
+        let mut s = Uniform::new();
+        for k in 0..10 {
+            s.insert(k, 1.0).unwrap();
+        }
+        let mut rng = Pcg32::new(3, 3);
+        let mut counts = [0usize; 10];
+        let n = 100_000;
+        for _ in 0..n {
+            let (k, p) = s.select(&mut rng).unwrap();
+            assert!((p - 0.1).abs() < 1e-12);
+            counts[k as usize] += 1;
+        }
+        for &c in &counts {
+            assert!((c as f64 - n as f64 / 10.0).abs() < n as f64 * 0.01);
+        }
+    }
+
+    #[test]
+    fn swap_remove_keeps_index_consistent() {
+        let mut s = Uniform::new();
+        for k in 0..100 {
+            s.insert(k, 1.0).unwrap();
+        }
+        // Delete every third key, then verify the rest are all selectable.
+        for k in (0..100).step_by(3) {
+            s.delete(k).unwrap();
+        }
+        let mut rng = Pcg32::new(5, 5);
+        let mut seen = std::collections::HashSet::new();
+        for _ in 0..20_000 {
+            let (k, _) = s.select(&mut rng).unwrap();
+            assert_ne!(k % 3, 0, "deleted key {k} selected");
+            seen.insert(k);
+        }
+        assert_eq!(seen.len(), s.len());
+    }
+
+    #[test]
+    fn empty_behavior() {
+        let mut s = Uniform::new();
+        assert_eq!(s.select(&mut Pcg32::new(1, 1)), None);
+        assert!(s.delete(1).is_err());
+        assert!(s.update(1, 2.0).is_err());
+    }
+
+    #[test]
+    fn duplicate_insert_rejected() {
+        let mut s = Uniform::new();
+        s.insert(1, 1.0).unwrap();
+        assert!(s.insert(1, 1.0).is_err());
+        assert_eq!(s.len(), 1);
+    }
+}

@@ -1,0 +1,811 @@
+//! Tables (§3.2): the mutex-protected heart of a Reverb server.
+//!
+//! A table owns items, two selectors (Sampler + Remover), a rate limiter,
+//! and optional extensions. Everything that mutates table state happens in
+//! one critical section per operation; the paper's two key performance
+//! design points are reproduced here:
+//!
+//! 1. **Decoupled deallocation** — removed items (holding the only
+//!    `Arc<Chunk>` refs) are collected into a vector and dropped *after*
+//!    the table mutex is released, so chunk deallocation never serializes
+//!    other table operations.
+//! 2. **Sample-path batching** — one lock acquisition admits and services
+//!    up to `n` samples (`sample_batch`), while inserts pay per-item lock +
+//!    selector + extension + eviction costs. This asymmetry is what gives
+//!    sampling its ~10× QPS headroom over inserting in the paper's Fig. 5/6
+//!    benchmarks.
+
+use crate::core::extensions::{ItemRef, TableExtension};
+use crate::core::item::{Item, SampledItem};
+use crate::core::rate_limiter::{RateLimiter, RateLimiterConfig};
+use crate::core::selector::{Selector, SelectorConfig};
+use crate::core::tensor::Signature;
+use crate::error::{Error, Result};
+use crate::util::rng::Pcg32;
+use std::collections::HashMap;
+use std::sync::{Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+/// Static table configuration.
+#[derive(Clone, Debug)]
+pub struct TableConfig {
+    pub name: String,
+    pub sampler: SelectorConfig,
+    pub remover: SelectorConfig,
+    /// Maximum number of items; the Remover evicts beyond this.
+    pub max_size: usize,
+    /// Items are deleted after this many samples. 0 = unlimited.
+    pub max_times_sampled: u32,
+    pub rate_limiter: RateLimiterConfig,
+    /// Optional signature; when present, inserted chunks are validated.
+    pub signature: Option<Signature>,
+}
+
+impl TableConfig {
+    /// A uniform-sampled, FIFO-evicted replay buffer with a MinSize(1)
+    /// limiter — the Acme D4PG configuration of Appendix A.1.
+    pub fn uniform_replay(name: impl Into<String>, max_size: usize) -> Self {
+        TableConfig {
+            name: name.into(),
+            sampler: SelectorConfig::Uniform,
+            remover: SelectorConfig::Fifo,
+            max_size,
+            max_times_sampled: 0,
+            rate_limiter: RateLimiterConfig::min_size(1),
+            signature: None,
+        }
+    }
+
+    /// A bounded FIFO queue (items consumed exactly once) — §3.4 "Queue".
+    pub fn queue(name: impl Into<String>, queue_size: usize) -> Self {
+        TableConfig {
+            name: name.into(),
+            sampler: SelectorConfig::Fifo,
+            remover: SelectorConfig::Fifo,
+            max_size: queue_size,
+            max_times_sampled: 1,
+            rate_limiter: RateLimiterConfig::queue(queue_size as u64),
+            signature: None,
+        }
+    }
+
+    /// Prioritized experience replay (Schaul et al.) with a
+    /// SampleToInsertRatio limiter.
+    pub fn prioritized_replay(
+        name: impl Into<String>,
+        max_size: usize,
+        exponent: f64,
+        samples_per_insert: f64,
+        min_size_to_sample: u64,
+        error_buffer: f64,
+    ) -> Result<Self> {
+        Ok(TableConfig {
+            name: name.into(),
+            sampler: SelectorConfig::Prioritized { exponent },
+            remover: SelectorConfig::Fifo,
+            max_size,
+            max_times_sampled: 0,
+            rate_limiter: RateLimiterConfig::sample_to_insert_ratio(
+                samples_per_insert,
+                min_size_to_sample,
+                error_buffer,
+            )?,
+            signature: None,
+        })
+    }
+
+    /// A variable container: max_size 1, any sampler, unlimited sampling —
+    /// the TF-Agents parameter-distribution pattern of Appendix A.2.
+    pub fn variable_container(name: impl Into<String>) -> Self {
+        TableConfig {
+            name: name.into(),
+            sampler: SelectorConfig::Uniform,
+            remover: SelectorConfig::Fifo,
+            max_size: 1,
+            max_times_sampled: 0,
+            rate_limiter: RateLimiterConfig::min_size(1),
+            signature: None,
+        }
+    }
+}
+
+/// Point-in-time table metrics.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct TableInfo {
+    pub size: usize,
+    pub max_size: usize,
+    pub inserts: u64,
+    pub samples: u64,
+    pub rate_limited_inserts: u64,
+    pub rate_limited_samples: u64,
+    /// Current rate-limiter cursor (inserts × SPI − samples).
+    pub diff: f64,
+}
+
+struct State {
+    items: HashMap<u64, Item>,
+    sampler: Box<dyn Selector>,
+    remover: Box<dyn Selector>,
+    rate_limiter: RateLimiter,
+    extensions: Vec<Box<dyn TableExtension>>,
+    rng: Pcg32,
+    cancelled: bool,
+}
+
+/// A Reverb table. All methods are safe to call concurrently.
+pub struct Table {
+    config: TableConfig,
+    state: Mutex<State>,
+    /// Signalled when inserting may have become possible.
+    insert_cv: Condvar,
+    /// Signalled when sampling may have become possible.
+    sample_cv: Condvar,
+}
+
+impl Table {
+    pub fn new(config: TableConfig) -> Self {
+        Self::with_extensions(config, Vec::new())
+    }
+
+    /// Build with table extensions (§3.5). Extensions run under the table
+    /// mutex, in registration order.
+    pub fn with_extensions(config: TableConfig, extensions: Vec<Box<dyn TableExtension>>) -> Self {
+        assert!(config.max_size > 0, "table max_size must be positive");
+        let state = State {
+            items: HashMap::new(),
+            sampler: config.sampler.build(),
+            remover: config.remover.build(),
+            rate_limiter: config.rate_limiter.build(),
+            extensions,
+            rng: Pcg32::new(0x5EED, crate::util::splitmix64(config.max_size as u64)),
+            cancelled: false,
+        };
+        Table {
+            config,
+            state: Mutex::new(state),
+            insert_cv: Condvar::new(),
+            sample_cv: Condvar::new(),
+        }
+    }
+
+    pub fn name(&self) -> &str {
+        &self.config.name
+    }
+
+    pub fn config(&self) -> &TableConfig {
+        &self.config
+    }
+
+    /// Insert a new item, or — if the key already exists — update its
+    /// priority (Reverb's `InsertOrAssign`). Blocks while the rate limiter
+    /// rejects inserts, up to `timeout` (`None` = wait forever).
+    pub fn insert_or_assign(&self, item: Item, timeout: Option<Duration>) -> Result<()> {
+        if let Some(sig) = &self.config.signature {
+            for chunk in &item.chunks {
+                chunk.validate_signature(sig)?;
+            }
+        }
+        // Items dropped only after the lock is released (decoupled dealloc).
+        let mut dropped: Vec<Item> = Vec::new();
+        {
+            let mut state = self.state.lock().unwrap();
+
+            // Existing key → priority update, not an insert (no rate limit).
+            if state.items.contains_key(&item.key) {
+                Self::apply_update(&mut state, item.key, item.priority)?;
+                return Ok(());
+            }
+
+            state = self.wait_for(state, timeout, true)?;
+
+            // Evict via the Remover until there is room (§3.2 case 2).
+            while state.items.len() >= self.config.max_size {
+                let State {
+                    ref mut remover,
+                    ref mut rng,
+                    ..
+                } = *state;
+                let victim = remover
+                    .select(rng)
+                    .map(|(k, _)| k)
+                    .ok_or_else(|| {
+                        Error::InvalidArgument("table full but remover empty".into())
+                    })?;
+                if let Some(it) = Self::remove_item(&mut state, victim)? {
+                    dropped.push(it);
+                }
+            }
+
+            state.sampler.insert(item.key, item.priority)?;
+            state.remover.insert(item.key, item.priority)?;
+            state.rate_limiter.commit_insert(1);
+            for ext in &mut state.extensions {
+                ext.on_insert(ItemRef::of(&item));
+            }
+            state.items.insert(item.key, item);
+        }
+        // An insert can unblock samplers; eviction never unblocks inserts
+        // (the limiter tracks cumulative counts), but notify both for the
+        // queue-style configs where sampling consumes items.
+        self.sample_cv.notify_all();
+        drop(dropped);
+        Ok(())
+    }
+
+    /// Sample up to `n` items in a single critical section. Blocks until at
+    /// least one sample is admissible (or `timeout`). Returns between 1 and
+    /// `n` items; fewer than `n` when the rate limiter only admits fewer.
+    ///
+    /// Chunk payloads are NOT decoded here — callers materialize the
+    /// returned `Arc<Chunk>` data outside the lock.
+    pub fn sample_batch(&self, n: usize, timeout: Option<Duration>) -> Result<Vec<SampledItem>> {
+        assert!(n > 0);
+        let mut dropped: Vec<Item> = Vec::new();
+        let sampled = {
+            let mut state = self.state.lock().unwrap();
+            state = self.wait_for(state, timeout, false)?;
+
+            let mut out = Vec::with_capacity(n);
+            for _ in 0..n {
+                if !state.rate_limiter.can_sample(1) || state.items.is_empty() {
+                    break;
+                }
+                // Borrow-split: rng and sampler live in the same struct.
+                let State {
+                    ref mut sampler,
+                    ref mut rng,
+                    ..
+                } = *state;
+                let Some((key, probability)) = sampler.select(rng) else {
+                    break;
+                };
+                state.rate_limiter.commit_sample(1);
+                let table_size = state.items.len();
+                let item = state.items.get_mut(&key).expect("selector/table in sync");
+                item.times_sampled += 1;
+                let snapshot = item.clone();
+                let hit_limit = self.config.max_times_sampled > 0
+                    && item.times_sampled >= self.config.max_times_sampled;
+                for ext in &mut state.extensions {
+                    ext.on_sample(ItemRef::of(&snapshot));
+                }
+                if hit_limit {
+                    if let Some(it) = Self::remove_item(&mut state, key)? {
+                        dropped.push(it);
+                    }
+                }
+                out.push(SampledItem {
+                    item: snapshot,
+                    probability,
+                    table_size,
+                });
+            }
+            out
+        };
+        if sampled.is_empty() {
+            // wait_for admitted one sample, so this is unreachable unless a
+            // racing sampler consumed the budget; surface as timeout.
+            return Err(Error::RateLimiterTimeout(timeout.unwrap_or(Duration::ZERO)));
+        }
+        self.insert_cv.notify_all();
+        drop(dropped);
+        Ok(sampled)
+    }
+
+    /// Convenience single-item sample.
+    pub fn sample(&self, timeout: Option<Duration>) -> Result<SampledItem> {
+        Ok(self.sample_batch(1, timeout)?.remove(0))
+    }
+
+    /// Update priorities for a set of keys. Unknown keys are ignored
+    /// (mirrors Reverb: items may have been evicted since the client read
+    /// them). Returns the number of items actually updated.
+    pub fn update_priorities(&self, updates: &[(u64, f64)]) -> Result<usize> {
+        let mut state = self.state.lock().unwrap();
+        let mut applied = 0;
+        for &(key, priority) in updates {
+            if state.items.contains_key(&key) {
+                Self::apply_update(&mut state, key, priority)?;
+                applied += 1;
+            }
+        }
+        Ok(applied)
+    }
+
+    /// Delete items by key. Unknown keys are ignored. Returns the number
+    /// deleted.
+    pub fn delete(&self, keys: &[u64]) -> Result<usize> {
+        let mut dropped: Vec<Item> = Vec::new();
+        {
+            let mut state = self.state.lock().unwrap();
+            for &key in keys {
+                if let Some(it) = Self::remove_item(&mut state, key)? {
+                    dropped.push(it);
+                }
+            }
+        }
+        let n = dropped.len();
+        drop(dropped);
+        Ok(n)
+    }
+
+    /// Remove all items and reset selectors + extension state. Rate-limiter
+    /// counters are preserved (matching Reverb's `Reset` keeping episode
+    /// bookkeeping out of the limiter).
+    pub fn reset(&self) {
+        let mut dropped: Vec<Item> = Vec::new();
+        {
+            let mut state = self.state.lock().unwrap();
+            for (_, it) in state.items.drain() {
+                dropped.push(it);
+            }
+            state.sampler.clear();
+            state.remover.clear();
+            for ext in &mut state.extensions {
+                ext.on_reset();
+            }
+        }
+        self.insert_cv.notify_all();
+        drop(dropped);
+    }
+
+    /// Wake all blocked waiters with `Cancelled` (server shutdown).
+    pub fn cancel(&self) {
+        self.state.lock().unwrap().cancelled = true;
+        self.insert_cv.notify_all();
+        self.sample_cv.notify_all();
+    }
+
+    /// Current size (item count).
+    pub fn size(&self) -> usize {
+        self.state.lock().unwrap().items.len()
+    }
+
+    /// Whether an item with `key` exists.
+    pub fn contains(&self, key: u64) -> bool {
+        self.state.lock().unwrap().items.contains_key(&key)
+    }
+
+    /// Metrics snapshot.
+    pub fn info(&self) -> TableInfo {
+        let state = self.state.lock().unwrap();
+        TableInfo {
+            size: state.items.len(),
+            max_size: self.config.max_size,
+            inserts: state.rate_limiter.inserts(),
+            samples: state.rate_limiter.samples(),
+            rate_limited_inserts: state.rate_limiter.blocked_inserts(),
+            rate_limited_samples: state.rate_limiter.blocked_samples(),
+            diff: state.rate_limiter.diff(),
+        }
+    }
+
+    /// Clone out all items plus limiter counters (checkpointing, §3.7).
+    pub fn snapshot(&self) -> (Vec<Item>, u64, u64) {
+        let state = self.state.lock().unwrap();
+        let mut items: Vec<Item> = state.items.values().cloned().collect();
+        items.sort_by_key(|i| i.key);
+        (
+            items,
+            state.rate_limiter.inserts(),
+            state.rate_limiter.samples(),
+        )
+    }
+
+    /// Restore from a checkpoint snapshot. The table must be empty.
+    pub fn restore(&self, items: Vec<Item>, inserts: u64, samples: u64) -> Result<()> {
+        let mut state = self.state.lock().unwrap();
+        if !state.items.is_empty() {
+            return Err(Error::InvalidArgument(
+                "restore into non-empty table".into(),
+            ));
+        }
+        for item in items {
+            state.sampler.insert(item.key, item.priority)?;
+            state.remover.insert(item.key, item.priority)?;
+            for ext in &mut state.extensions {
+                ext.on_insert(ItemRef::of(&item));
+            }
+            state.items.insert(item.key, item);
+        }
+        state.rate_limiter.restore(inserts, samples);
+        drop(state);
+        self.sample_cv.notify_all();
+        self.insert_cv.notify_all();
+        Ok(())
+    }
+
+    // ------------------------------------------------------------------
+    // internals
+    // ------------------------------------------------------------------
+
+    /// Block until the rate limiter admits one insert (`insert=true`) or
+    /// one sample (`insert=false`).
+    fn wait_for<'a>(
+        &'a self,
+        mut state: std::sync::MutexGuard<'a, State>,
+        timeout: Option<Duration>,
+        insert: bool,
+    ) -> Result<std::sync::MutexGuard<'a, State>> {
+        let deadline = timeout.map(|t| Instant::now() + t);
+        let mut noted = false;
+        loop {
+            if state.cancelled {
+                return Err(Error::Cancelled(self.config.name.clone()));
+            }
+            let ok = if insert {
+                state.rate_limiter.can_insert(1)
+            } else {
+                state.rate_limiter.can_sample(1)
+            };
+            if ok {
+                return Ok(state);
+            }
+            if !noted {
+                if insert {
+                    state.rate_limiter.note_blocked_insert();
+                } else {
+                    state.rate_limiter.note_blocked_sample();
+                }
+                noted = true;
+            }
+            let cv = if insert { &self.insert_cv } else { &self.sample_cv };
+            state = match deadline {
+                None => cv.wait(state).unwrap(),
+                Some(d) => {
+                    let now = Instant::now();
+                    if now >= d {
+                        return Err(Error::RateLimiterTimeout(timeout.unwrap()));
+                    }
+                    let (guard, res) = cv.wait_timeout(state, d - now).unwrap();
+                    if res.timed_out() && {
+                        let ok = if insert {
+                            guard.rate_limiter.can_insert(1)
+                        } else {
+                            guard.rate_limiter.can_sample(1)
+                        };
+                        !ok && !guard.cancelled
+                    } {
+                        return Err(Error::RateLimiterTimeout(timeout.unwrap()));
+                    }
+                    guard
+                }
+            };
+        }
+    }
+
+    /// Apply a priority update plus any extension follow-ups (§3.5
+    /// diffusion). Follow-ups are applied once, without recursion.
+    fn apply_update(state: &mut State, key: u64, priority: f64) -> Result<()> {
+        let followups = Self::apply_update_inner(state, key, priority, true)?;
+        for (k, p) in followups {
+            if state.items.contains_key(&k) {
+                Self::apply_update_inner(state, k, p, false)?;
+            }
+        }
+        Ok(())
+    }
+
+    fn apply_update_inner(
+        state: &mut State,
+        key: u64,
+        priority: f64,
+        run_extensions: bool,
+    ) -> Result<Vec<(u64, f64)>> {
+        let item = state
+            .items
+            .get_mut(&key)
+            .ok_or(Error::ItemNotFound(key))?;
+        item.priority = priority;
+        let snapshot = ItemRef::of(item);
+        let key = snapshot.key;
+        state.sampler.update(key, priority)?;
+        state.remover.update(key, priority)?;
+        let mut followups = Vec::new();
+        if run_extensions {
+            // Re-borrow item immutably through a raw snapshot: extensions
+            // only see ItemRef fields.
+            let item = state.items.get(&key).expect("just updated");
+            let r = ItemRef::of(item);
+            for ext in &mut state.extensions {
+                followups.extend(ext.on_update(r));
+            }
+        }
+        Ok(followups)
+    }
+
+    /// Remove an item from all internal structures; returns it so the
+    /// caller can drop it outside the lock. Unknown keys → Ok(None).
+    fn remove_item(state: &mut State, key: u64) -> Result<Option<Item>> {
+        let Some(item) = state.items.remove(&key) else {
+            return Ok(None);
+        };
+        state.sampler.delete(key)?;
+        state.remover.delete(key)?;
+        for ext in &mut state.extensions {
+            ext.on_delete(ItemRef::of(&item));
+        }
+        Ok(Some(item))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::chunk::{Chunk, Compression};
+    use crate::core::extensions::StatsExtension;
+    use crate::core::tensor::Tensor;
+    use std::sync::Arc;
+
+    fn mk_item(key: u64, priority: f64) -> Item {
+        let steps = vec![vec![Tensor::from_f32(&[1], &[key as f32]).unwrap()]];
+        let chunk = Arc::new(Chunk::from_steps(key, 0, &steps, Compression::None).unwrap());
+        Item::new(key, "t", priority, vec![chunk], 0, 1).unwrap()
+    }
+
+    fn uniform_table(max_size: usize) -> Table {
+        Table::new(TableConfig::uniform_replay("t", max_size))
+    }
+
+    #[test]
+    fn insert_then_sample() {
+        let t = uniform_table(10);
+        t.insert_or_assign(mk_item(1, 1.0), None).unwrap();
+        let s = t.sample(Some(Duration::from_millis(100))).unwrap();
+        assert_eq!(s.item.key, 1);
+        assert_eq!(s.item.times_sampled, 1);
+        assert_eq!(s.table_size, 1);
+    }
+
+    #[test]
+    fn sample_empty_times_out() {
+        let t = uniform_table(10);
+        let err = t.sample(Some(Duration::from_millis(20))).unwrap_err();
+        assert!(err.is_timeout(), "{err}");
+    }
+
+    #[test]
+    fn capacity_eviction_fifo() {
+        let t = uniform_table(3);
+        for k in 1..=5 {
+            t.insert_or_assign(mk_item(k, 1.0), None).unwrap();
+        }
+        assert_eq!(t.size(), 3);
+        // FIFO remover evicted 1 and 2.
+        assert!(!t.contains(1));
+        assert!(!t.contains(2));
+        assert!(t.contains(3) && t.contains(4) && t.contains(5));
+    }
+
+    #[test]
+    fn insert_existing_key_updates_priority() {
+        let cfg = TableConfig {
+            sampler: SelectorConfig::MaxHeap,
+            ..TableConfig::uniform_replay("t", 10)
+        };
+        let t = Table::new(cfg);
+        t.insert_or_assign(mk_item(1, 1.0), None).unwrap();
+        t.insert_or_assign(mk_item(2, 5.0), None).unwrap();
+        t.insert_or_assign(mk_item(1, 9.0), None).unwrap();
+        assert_eq!(t.size(), 2);
+        let s = t.sample(None).unwrap();
+        assert_eq!(s.item.key, 1, "updated priority should win the max-heap");
+        assert_eq!(s.item.priority, 9.0);
+        // inserts counted once per new item.
+        assert_eq!(t.info().inserts, 2);
+    }
+
+    #[test]
+    fn max_times_sampled_removes_item() {
+        let mut cfg = TableConfig::queue("q", 10);
+        cfg.max_times_sampled = 2;
+        cfg.rate_limiter = RateLimiterConfig::min_size(1);
+        cfg.sampler = SelectorConfig::Fifo;
+        let t = Table::new(cfg);
+        t.insert_or_assign(mk_item(1, 1.0), None).unwrap();
+        t.insert_or_assign(mk_item(2, 1.0), None).unwrap();
+        assert_eq!(t.sample(None).unwrap().item.key, 1);
+        assert_eq!(t.sample(None).unwrap().item.key, 1);
+        // Item 1 hit max_times_sampled=2 and was removed.
+        assert!(!t.contains(1));
+        assert_eq!(t.sample(None).unwrap().item.key, 2);
+    }
+
+    #[test]
+    fn queue_behaviour_end_to_end() {
+        let t = Table::new(TableConfig::queue("q", 2));
+        t.insert_or_assign(mk_item(1, 1.0), None).unwrap();
+        t.insert_or_assign(mk_item(2, 1.0), None).unwrap();
+        // Full: 3rd insert blocks → times out.
+        let err = t
+            .insert_or_assign(mk_item(3, 1.0), Some(Duration::from_millis(20)))
+            .unwrap_err();
+        assert!(err.is_timeout());
+        // FIFO order, consumed exactly once.
+        assert_eq!(t.sample(None).unwrap().item.key, 1);
+        t.insert_or_assign(mk_item(3, 1.0), None).unwrap();
+        assert_eq!(t.sample(None).unwrap().item.key, 2);
+        assert_eq!(t.sample(None).unwrap().item.key, 3);
+        assert_eq!(t.size(), 0);
+    }
+
+    #[test]
+    fn sample_batch_respects_rate_limiter_budget() {
+        // Queue of 10 with 4 items: batch of 8 must return exactly 4.
+        let t = Table::new(TableConfig::queue("q", 10));
+        for k in 1..=4 {
+            t.insert_or_assign(mk_item(k, 1.0), None).unwrap();
+        }
+        let got = t.sample_batch(8, None).unwrap();
+        assert_eq!(got.len(), 4);
+        assert_eq!(
+            got.iter().map(|s| s.item.key).collect::<Vec<_>>(),
+            vec![1, 2, 3, 4]
+        );
+    }
+
+    #[test]
+    fn update_and_delete() {
+        let t = uniform_table(10);
+        for k in 1..=3 {
+            t.insert_or_assign(mk_item(k, 1.0), None).unwrap();
+        }
+        assert_eq!(t.update_priorities(&[(1, 5.0), (99, 2.0)]).unwrap(), 1);
+        assert_eq!(t.delete(&[2, 98]).unwrap(), 1);
+        assert_eq!(t.size(), 2);
+        assert!(!t.contains(2));
+    }
+
+    #[test]
+    fn reset_clears_items_keeps_counters() {
+        let t = uniform_table(10);
+        for k in 1..=3 {
+            t.insert_or_assign(mk_item(k, 1.0), None).unwrap();
+        }
+        t.sample(None).unwrap();
+        t.reset();
+        assert_eq!(t.size(), 0);
+        let info = t.info();
+        assert_eq!(info.inserts, 3);
+        assert_eq!(info.samples, 1);
+    }
+
+    #[test]
+    fn rate_limiter_blocks_sampler_until_insert() {
+        let t = Arc::new(Table::new(
+            TableConfig {
+                rate_limiter: RateLimiterConfig::min_size(2),
+                ..TableConfig::uniform_replay("t", 10)
+            },
+        ));
+        let t2 = t.clone();
+        let sampler = std::thread::spawn(move || t2.sample(Some(Duration::from_secs(5))));
+        std::thread::sleep(Duration::from_millis(30));
+        t.insert_or_assign(mk_item(1, 1.0), None).unwrap();
+        std::thread::sleep(Duration::from_millis(10));
+        t.insert_or_assign(mk_item(2, 1.0), None).unwrap();
+        let s = sampler.join().unwrap().unwrap();
+        assert!(s.item.key == 1 || s.item.key == 2);
+    }
+
+    #[test]
+    fn spi_corridor_under_concurrency() {
+        // SPI=2 with min_size 10: two writers + two samplers hammer the
+        // table; realized SPI must stay within the error buffer corridor.
+        let spi = 2.0;
+        let min_size = 10u64;
+        let buffer = 4.0;
+        let cfg = TableConfig {
+            rate_limiter: RateLimiterConfig::sample_to_insert_ratio(spi, min_size, buffer)
+                .unwrap(),
+            ..TableConfig::uniform_replay("t", 100_000)
+        };
+        let t = Arc::new(Table::new(cfg));
+        let stop = Arc::new(std::sync::atomic::AtomicBool::new(false));
+        let mut handles = Vec::new();
+        for w in 0..2u64 {
+            let t = t.clone();
+            let stop = stop.clone();
+            handles.push(std::thread::spawn(move || {
+                let mut k = w * 1_000_000 + 1;
+                while !stop.load(std::sync::atomic::Ordering::Relaxed) {
+                    let _ = t.insert_or_assign(mk_item(k, 1.0), Some(Duration::from_millis(50)));
+                    k += 1;
+                }
+            }));
+        }
+        for _ in 0..2 {
+            let t = t.clone();
+            let stop = stop.clone();
+            handles.push(std::thread::spawn(move || {
+                while !stop.load(std::sync::atomic::Ordering::Relaxed) {
+                    let _ = t.sample_batch(4, Some(Duration::from_millis(50)));
+                }
+            }));
+        }
+        std::thread::sleep(Duration::from_millis(300));
+        stop.store(true, std::sync::atomic::Ordering::Relaxed);
+        t.cancel();
+        for h in handles {
+            h.join().unwrap();
+        }
+        let info = t.info();
+        let center = min_size as f64 * spi;
+        assert!(
+            info.diff <= center + buffer + 1e-9 && info.diff >= center - buffer - spi - 1.0,
+            "diff {} escaped corridor [{}, {}]",
+            info.diff,
+            center - buffer,
+            center + buffer
+        );
+        assert!(info.inserts > min_size, "made progress");
+    }
+
+    #[test]
+    fn cancel_wakes_blocked_waiters() {
+        let t = Arc::new(uniform_table(10));
+        let t2 = t.clone();
+        let h = std::thread::spawn(move || t2.sample(None));
+        std::thread::sleep(Duration::from_millis(30));
+        t.cancel();
+        let err = h.join().unwrap().unwrap_err();
+        assert!(matches!(err, Error::Cancelled(_)));
+    }
+
+    #[test]
+    fn stats_extension_observes_ops() {
+        let ext = StatsExtension::new();
+        let handle = ext.handle();
+        let t = Table::with_extensions(
+            TableConfig::uniform_replay("t", 2),
+            vec![Box::new(ext)],
+        );
+        for k in 1..=3 {
+            t.insert_or_assign(mk_item(k, 1.0), None).unwrap();
+        }
+        t.sample(None).unwrap();
+        t.update_priorities(&[(3, 2.0)]).unwrap();
+        let s = handle.snapshot();
+        assert_eq!(s.inserts, 3);
+        assert_eq!(s.samples, 1);
+        assert_eq!(s.deletes, 1, "one eviction at capacity");
+        assert_eq!(s.updates, 1);
+    }
+
+    #[test]
+    fn snapshot_restore_roundtrip() {
+        let t = uniform_table(10);
+        for k in 1..=3 {
+            t.insert_or_assign(mk_item(k, k as f64), None).unwrap();
+        }
+        t.sample(None).unwrap();
+        let (items, ins, smp) = t.snapshot();
+        assert_eq!(items.len(), 3);
+        assert_eq!((ins, smp), (3, 1));
+
+        let t2 = uniform_table(10);
+        t2.restore(items, ins, smp).unwrap();
+        assert_eq!(t2.size(), 3);
+        let info = t2.info();
+        assert_eq!(info.inserts, 3);
+        assert_eq!(info.samples, 1);
+        assert!(t2.contains(1) && t2.contains(2) && t2.contains(3));
+        // Restoring into a non-empty table fails.
+        assert!(t2.restore(vec![], 0, 0).is_err());
+    }
+
+    #[test]
+    fn priorities_survive_snapshot() {
+        let cfg = TableConfig {
+            sampler: SelectorConfig::MaxHeap,
+            ..TableConfig::uniform_replay("t", 10)
+        };
+        let t = Table::new(cfg.clone());
+        t.insert_or_assign(mk_item(1, 1.0), None).unwrap();
+        t.insert_or_assign(mk_item(2, 7.0), None).unwrap();
+        let (items, ins, smp) = t.snapshot();
+        let t2 = Table::new(cfg);
+        t2.restore(items, ins, smp).unwrap();
+        assert_eq!(t2.sample(None).unwrap().item.key, 2);
+    }
+}

@@ -1,0 +1,521 @@
+//! Tensors, dtypes and signatures.
+//!
+//! Reverb moves *raw tensor data* (§3.1 of the paper): each data element in
+//! a writer's stream is a nested structure whose leaves are tensors, and the
+//! flattened structure — field names, shapes, dtypes — is the stream's
+//! `Signature`. Signatures must stay constant across the stream, which lets
+//! the server view the stream as a 2-D table (rows = steps, columns =
+//! signature fields, Fig. 1b) and batch column-wise into chunks.
+
+use crate::error::{Error, Result};
+use byteorder::{ByteOrder, LittleEndian};
+
+/// Element type of a tensor. The set mirrors what the PJRT runtime and the
+/// JAX artifacts use; `Bf16` is stored as raw `u16` bit patterns.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum DType {
+    F32,
+    F64,
+    I32,
+    I64,
+    U8,
+    Bool,
+    Bf16,
+}
+
+impl DType {
+    /// Size of one element in bytes.
+    pub fn size_of(self) -> usize {
+        match self {
+            DType::F32 | DType::I32 => 4,
+            DType::F64 | DType::I64 => 8,
+            DType::U8 | DType::Bool => 1,
+            DType::Bf16 => 2,
+        }
+    }
+
+    /// Stable wire/checkpoint tag.
+    pub fn tag(self) -> u8 {
+        match self {
+            DType::F32 => 0,
+            DType::F64 => 1,
+            DType::I32 => 2,
+            DType::I64 => 3,
+            DType::U8 => 4,
+            DType::Bool => 5,
+            DType::Bf16 => 6,
+        }
+    }
+
+    /// Inverse of [`DType::tag`].
+    pub fn from_tag(tag: u8) -> Result<Self> {
+        Ok(match tag {
+            0 => DType::F32,
+            1 => DType::F64,
+            2 => DType::I32,
+            3 => DType::I64,
+            4 => DType::U8,
+            5 => DType::Bool,
+            6 => DType::Bf16,
+            t => return Err(Error::Decode(format!("unknown dtype tag {t}"))),
+        })
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            DType::F32 => "f32",
+            DType::F64 => "f64",
+            DType::I32 => "i32",
+            DType::I64 => "i64",
+            DType::U8 => "u8",
+            DType::Bool => "bool",
+            DType::Bf16 => "bf16",
+        }
+    }
+
+    /// Parse the names emitted by `python/compile/aot.py` into `meta.txt`.
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "f32" | "float32" => DType::F32,
+            "f64" | "float64" => DType::F64,
+            "i32" | "int32" => DType::I32,
+            "i64" | "int64" => DType::I64,
+            "u8" | "uint8" => DType::U8,
+            "bool" => DType::Bool,
+            "bf16" | "bfloat16" => DType::Bf16,
+            _ => return Err(Error::Decode(format!("unknown dtype name {s:?}"))),
+        })
+    }
+}
+
+impl std::fmt::Display for DType {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// A dense, row-major tensor: dtype + shape + owned byte buffer.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Tensor {
+    dtype: DType,
+    shape: Vec<usize>,
+    data: Vec<u8>,
+}
+
+impl Tensor {
+    /// Construct from raw parts, validating that the buffer length matches
+    /// the shape and dtype.
+    pub fn from_bytes(dtype: DType, shape: Vec<usize>, data: Vec<u8>) -> Result<Self> {
+        let expect = shape.iter().product::<usize>() * dtype.size_of();
+        if data.len() != expect {
+            return Err(Error::InvalidArgument(format!(
+                "tensor buffer length {} does not match shape {:?} x {} ({} bytes)",
+                data.len(),
+                shape,
+                dtype,
+                expect
+            )));
+        }
+        Ok(Tensor { dtype, shape, data })
+    }
+
+    /// A zero-filled tensor.
+    pub fn zeros(dtype: DType, shape: &[usize]) -> Self {
+        let len = shape.iter().product::<usize>() * dtype.size_of();
+        Tensor {
+            dtype,
+            shape: shape.to_vec(),
+            data: vec![0; len],
+        }
+    }
+
+    /// Construct an `f32` tensor from values.
+    pub fn from_f32(shape: &[usize], values: &[f32]) -> Result<Self> {
+        let mut data = vec![0u8; values.len() * 4];
+        LittleEndian::write_f32_into(values, &mut data);
+        Tensor::from_bytes(DType::F32, shape.to_vec(), data)
+    }
+
+    /// Construct an `i32` tensor from values.
+    pub fn from_i32(shape: &[usize], values: &[i32]) -> Result<Self> {
+        let mut data = vec![0u8; values.len() * 4];
+        LittleEndian::write_i32_into(values, &mut data);
+        Tensor::from_bytes(DType::I32, shape.to_vec(), data)
+    }
+
+    /// Construct an `i64` tensor from values.
+    pub fn from_i64(shape: &[usize], values: &[i64]) -> Result<Self> {
+        let mut data = vec![0u8; values.len() * 8];
+        LittleEndian::write_i64_into(values, &mut data);
+        Tensor::from_bytes(DType::I64, shape.to_vec(), data)
+    }
+
+    /// Construct a `u8` tensor from values.
+    pub fn from_u8(shape: &[usize], values: &[u8]) -> Result<Self> {
+        Tensor::from_bytes(DType::U8, shape.to_vec(), values.to_vec())
+    }
+
+    /// Scalar f32 convenience constructor.
+    pub fn scalar_f32(v: f32) -> Self {
+        Tensor::from_f32(&[], &[v]).unwrap()
+    }
+
+    pub fn dtype(&self) -> DType {
+        self.dtype
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    /// Number of elements.
+    pub fn num_elements(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    /// Size of the raw buffer in bytes.
+    pub fn byte_len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn bytes(&self) -> &[u8] {
+        &self.data
+    }
+
+    pub fn bytes_mut(&mut self) -> &mut [u8] {
+        &mut self.data
+    }
+
+    pub fn into_bytes(self) -> Vec<u8> {
+        self.data
+    }
+
+    /// View as `f32` values (copies into a Vec; wire data is unaligned).
+    pub fn to_f32(&self) -> Result<Vec<f32>> {
+        if self.dtype != DType::F32 {
+            return Err(Error::InvalidArgument(format!(
+                "to_f32 on {} tensor",
+                self.dtype
+            )));
+        }
+        let mut out = vec![0f32; self.num_elements()];
+        LittleEndian::read_f32_into(&self.data, &mut out);
+        Ok(out)
+    }
+
+    /// View as `i32` values.
+    pub fn to_i32(&self) -> Result<Vec<i32>> {
+        if self.dtype != DType::I32 {
+            return Err(Error::InvalidArgument(format!(
+                "to_i32 on {} tensor",
+                self.dtype
+            )));
+        }
+        let mut out = vec![0i32; self.num_elements()];
+        LittleEndian::read_i32_into(&self.data, &mut out);
+        Ok(out)
+    }
+
+    /// View as `i64` values.
+    pub fn to_i64(&self) -> Result<Vec<i64>> {
+        if self.dtype != DType::I64 {
+            return Err(Error::InvalidArgument(format!(
+                "to_i64 on {} tensor",
+                self.dtype
+            )));
+        }
+        let mut out = vec![0i64; self.num_elements()];
+        LittleEndian::read_i64_into(&self.data, &mut out);
+        Ok(out)
+    }
+
+    /// Stack `n` tensors of identical spec along a new leading axis.
+    /// This is the column-wise batching of Fig. 1a.
+    pub fn stack(tensors: &[Tensor]) -> Result<Tensor> {
+        let first = tensors
+            .first()
+            .ok_or_else(|| Error::InvalidArgument("stack of zero tensors".into()))?;
+        for t in tensors {
+            if t.dtype != first.dtype || t.shape != first.shape {
+                return Err(Error::SignatureMismatch(format!(
+                    "stack mismatch: {:?}/{} vs {:?}/{}",
+                    first.shape, first.dtype, t.shape, t.dtype
+                )));
+            }
+        }
+        let mut shape = Vec::with_capacity(first.shape.len() + 1);
+        shape.push(tensors.len());
+        shape.extend_from_slice(&first.shape);
+        let mut data = Vec::with_capacity(first.data.len() * tensors.len());
+        for t in tensors {
+            data.extend_from_slice(&t.data);
+        }
+        Tensor::from_bytes(first.dtype, shape, data)
+    }
+
+    /// Inverse of [`Tensor::stack`]: split along the leading axis into
+    /// per-row tensors. Used when a client unpacks sampled chunk columns.
+    pub fn unstack(&self) -> Result<Vec<Tensor>> {
+        let n = *self
+            .shape
+            .first()
+            .ok_or_else(|| Error::InvalidArgument("unstack of scalar".into()))?;
+        let inner: Vec<usize> = self.shape[1..].to_vec();
+        let row = inner.iter().product::<usize>() * self.dtype.size_of();
+        let mut out = Vec::with_capacity(n);
+        for i in 0..n {
+            out.push(Tensor::from_bytes(
+                self.dtype,
+                inner.clone(),
+                self.data[i * row..(i + 1) * row].to_vec(),
+            )?);
+        }
+        Ok(out)
+    }
+
+    /// Slice rows `[start, start+len)` along the leading axis (an Item's
+    /// offset/length view into a chunk column, Fig. 3).
+    pub fn slice_rows(&self, start: usize, len: usize) -> Result<Tensor> {
+        let n = *self
+            .shape
+            .first()
+            .ok_or_else(|| Error::InvalidArgument("slice_rows of scalar".into()))?;
+        if start + len > n {
+            return Err(Error::InvalidArgument(format!(
+                "slice_rows [{start}, {}) out of bounds for leading dim {n}",
+                start + len
+            )));
+        }
+        let inner: Vec<usize> = self.shape[1..].to_vec();
+        let row = inner.iter().product::<usize>() * self.dtype.size_of();
+        let mut shape = Vec::with_capacity(self.shape.len());
+        shape.push(len);
+        shape.extend_from_slice(&inner);
+        Tensor::from_bytes(
+            self.dtype,
+            shape,
+            self.data[start * row..(start + len) * row].to_vec(),
+        )
+    }
+}
+
+/// The spec of one flattened signature field.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct TensorSpec {
+    /// Flattened field path, e.g. `"observation/pixels"`.
+    pub name: String,
+    /// Per-step shape. `None` entries are wildcards (any size).
+    pub shape: Vec<Option<usize>>,
+    pub dtype: DType,
+}
+
+impl TensorSpec {
+    /// Fixed-shape spec constructor.
+    pub fn new(name: impl Into<String>, shape: &[usize], dtype: DType) -> Self {
+        TensorSpec {
+            name: name.into(),
+            shape: shape.iter().map(|&d| Some(d)).collect(),
+            dtype,
+        }
+    }
+
+    /// Check a tensor against this spec.
+    pub fn validate(&self, t: &Tensor) -> Result<()> {
+        if t.dtype() != self.dtype {
+            return Err(Error::SignatureMismatch(format!(
+                "field {}: dtype {} != spec {}",
+                self.name,
+                t.dtype(),
+                self.dtype
+            )));
+        }
+        if t.shape().len() != self.shape.len() {
+            return Err(Error::SignatureMismatch(format!(
+                "field {}: rank {} != spec rank {}",
+                self.name,
+                t.shape().len(),
+                self.shape.len()
+            )));
+        }
+        for (i, (&got, want)) in t.shape().iter().zip(&self.shape).enumerate() {
+            if let Some(want) = want {
+                if got != *want {
+                    return Err(Error::SignatureMismatch(format!(
+                        "field {}: dim {i} is {got}, spec wants {want}",
+                        self.name
+                    )));
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+/// A flattened nested-structure signature: an ordered list of field specs.
+/// Order is significant — it is the column order of the Fig. 1b table.
+#[derive(Clone, Debug, PartialEq, Eq, Default)]
+pub struct Signature {
+    pub fields: Vec<TensorSpec>,
+}
+
+impl Signature {
+    pub fn new(fields: Vec<TensorSpec>) -> Self {
+        Signature { fields }
+    }
+
+    pub fn num_fields(&self) -> usize {
+        self.fields.len()
+    }
+
+    /// Validate one data element (a row: one tensor per field, in order).
+    pub fn validate_step(&self, step: &[Tensor]) -> Result<()> {
+        if step.len() != self.fields.len() {
+            return Err(Error::SignatureMismatch(format!(
+                "step has {} fields, signature has {}",
+                step.len(),
+                self.fields.len()
+            )));
+        }
+        for (spec, t) in self.fields.iter().zip(step) {
+            spec.validate(t)?;
+        }
+        Ok(())
+    }
+
+    /// Derive a signature from a concrete step (all dims fixed).
+    pub fn infer_from(step: &[Tensor]) -> Self {
+        Signature {
+            fields: step
+                .iter()
+                .enumerate()
+                .map(|(i, t)| TensorSpec::new(format!("field_{i}"), t.shape(), t.dtype()))
+                .collect(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dtype_tag_roundtrip() {
+        for d in [
+            DType::F32,
+            DType::F64,
+            DType::I32,
+            DType::I64,
+            DType::U8,
+            DType::Bool,
+            DType::Bf16,
+        ] {
+            assert_eq!(DType::from_tag(d.tag()).unwrap(), d);
+            assert_eq!(DType::parse(d.name()).unwrap(), d);
+        }
+        assert!(DType::from_tag(200).is_err());
+        assert!(DType::parse("q7").is_err());
+    }
+
+    #[test]
+    fn tensor_roundtrip_f32() {
+        let t = Tensor::from_f32(&[2, 3], &[1., 2., 3., 4., 5., 6.]).unwrap();
+        assert_eq!(t.num_elements(), 6);
+        assert_eq!(t.byte_len(), 24);
+        assert_eq!(t.to_f32().unwrap(), vec![1., 2., 3., 4., 5., 6.]);
+    }
+
+    #[test]
+    fn tensor_rejects_bad_length() {
+        assert!(Tensor::from_bytes(DType::F32, vec![2, 2], vec![0; 15]).is_err());
+    }
+
+    #[test]
+    fn wrong_dtype_view_errors() {
+        let t = Tensor::from_i32(&[2], &[1, 2]).unwrap();
+        assert!(t.to_f32().is_err());
+        assert!(t.to_i32().is_ok());
+    }
+
+    #[test]
+    fn stack_and_unstack() {
+        let a = Tensor::from_f32(&[2], &[1., 2.]).unwrap();
+        let b = Tensor::from_f32(&[2], &[3., 4.]).unwrap();
+        let s = Tensor::stack(&[a.clone(), b.clone()]).unwrap();
+        assert_eq!(s.shape(), &[2, 2]);
+        assert_eq!(s.to_f32().unwrap(), vec![1., 2., 3., 4.]);
+        let parts = s.unstack().unwrap();
+        assert_eq!(parts, vec![a, b]);
+    }
+
+    #[test]
+    fn stack_rejects_mismatched() {
+        let a = Tensor::from_f32(&[2], &[1., 2.]).unwrap();
+        let b = Tensor::from_f32(&[3], &[3., 4., 5.]).unwrap();
+        assert!(Tensor::stack(&[a.clone(), b]).is_err());
+        let c = Tensor::from_i32(&[2], &[3, 4]).unwrap();
+        assert!(Tensor::stack(&[a, c]).is_err());
+        assert!(Tensor::stack(&[]).is_err());
+    }
+
+    #[test]
+    fn slice_rows_selects_subrange() {
+        let t = Tensor::from_f32(&[4, 2], &[0., 1., 2., 3., 4., 5., 6., 7.]).unwrap();
+        let s = t.slice_rows(1, 2).unwrap();
+        assert_eq!(s.shape(), &[2, 2]);
+        assert_eq!(s.to_f32().unwrap(), vec![2., 3., 4., 5.]);
+        assert!(t.slice_rows(3, 2).is_err());
+    }
+
+    #[test]
+    fn signature_validation() {
+        let sig = Signature::new(vec![
+            TensorSpec::new("obs", &[4], DType::F32),
+            TensorSpec::new("action", &[], DType::I32),
+        ]);
+        let good = vec![
+            Tensor::from_f32(&[4], &[0.; 4]).unwrap(),
+            Tensor::from_i32(&[], &[1]).unwrap(),
+        ];
+        sig.validate_step(&good).unwrap();
+
+        let wrong_count = vec![Tensor::from_f32(&[4], &[0.; 4]).unwrap()];
+        assert!(sig.validate_step(&wrong_count).is_err());
+
+        let wrong_shape = vec![
+            Tensor::from_f32(&[5], &[0.; 5]).unwrap(),
+            Tensor::from_i32(&[], &[1]).unwrap(),
+        ];
+        assert!(sig.validate_step(&wrong_shape).is_err());
+
+        let wrong_dtype = vec![
+            Tensor::from_f32(&[4], &[0.; 4]).unwrap(),
+            Tensor::from_f32(&[], &[1.]).unwrap(),
+        ];
+        assert!(sig.validate_step(&wrong_dtype).is_err());
+    }
+
+    #[test]
+    fn wildcard_dims_accept_any_size() {
+        let spec = TensorSpec {
+            name: "x".into(),
+            shape: vec![None, Some(3)],
+            dtype: DType::F32,
+        };
+        spec.validate(&Tensor::from_f32(&[7, 3], &[0.; 21]).unwrap())
+            .unwrap();
+        assert!(spec
+            .validate(&Tensor::from_f32(&[7, 4], &[0.; 28]).unwrap())
+            .is_err());
+    }
+
+    #[test]
+    fn infer_signature() {
+        let step = vec![
+            Tensor::from_f32(&[2], &[1., 2.]).unwrap(),
+            Tensor::from_u8(&[3], &[1, 2, 3]).unwrap(),
+        ];
+        let sig = Signature::infer_from(&step);
+        sig.validate_step(&step).unwrap();
+        assert_eq!(sig.fields[1].dtype, DType::U8);
+    }
+}

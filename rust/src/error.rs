@@ -1,0 +1,83 @@
+//! Error types shared across the Reverb crate.
+
+use thiserror::Error;
+
+/// Unified error type for all Reverb operations.
+#[derive(Error, Debug)]
+pub enum Error {
+    /// The table named in a request does not exist on the server.
+    #[error("table not found: {0}")]
+    TableNotFound(String),
+
+    /// An item key was referenced that is not (or no longer) in the table.
+    #[error("item not found: {0}")]
+    ItemNotFound(u64),
+
+    /// A chunk key was referenced that is not in the chunk store.
+    #[error("chunk not found: {0}")]
+    ChunkNotFound(u64),
+
+    /// A blocking insert/sample timed out waiting for the rate limiter.
+    ///
+    /// The client-side `Dataset` maps this to end-of-sequence (§3.9 of the
+    /// paper: "similar to reaching the end of the file").
+    #[error("rate limiter timeout after {0:?}")]
+    RateLimiterTimeout(std::time::Duration),
+
+    /// The table/server is shutting down; blocked waiters are released.
+    #[error("cancelled: {0}")]
+    Cancelled(String),
+
+    /// Data did not match the table signature.
+    #[error("signature mismatch: {0}")]
+    SignatureMismatch(String),
+
+    /// Malformed wire message or checkpoint payload.
+    #[error("decode error: {0}")]
+    Decode(String),
+
+    /// Invariant violation / invalid argument.
+    #[error("invalid argument: {0}")]
+    InvalidArgument(String),
+
+    /// Checkpoint file corruption (CRC mismatch, truncation).
+    #[error("corrupt checkpoint: {0}")]
+    CorruptCheckpoint(String),
+
+    /// Underlying I/O failure (socket, disk).
+    #[error("io error: {0}")]
+    Io(#[from] std::io::Error),
+
+    /// Failure raised by the XLA/PJRT runtime layer.
+    #[error("runtime error: {0}")]
+    Runtime(String),
+}
+
+/// Crate-wide result alias.
+pub type Result<T> = std::result::Result<T, Error>;
+
+impl Error {
+    /// True if this error is the benign end-of-stream signal produced when a
+    /// sampler hits the configured `rate_limiter_timeout`.
+    pub fn is_timeout(&self) -> bool {
+        matches!(self, Error::RateLimiterTimeout(_))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn timeout_is_timeout() {
+        let e = Error::RateLimiterTimeout(std::time::Duration::from_millis(5));
+        assert!(e.is_timeout());
+        assert!(!Error::TableNotFound("x".into()).is_timeout());
+    }
+
+    #[test]
+    fn display_formats() {
+        assert_eq!(Error::ItemNotFound(7).to_string(), "item not found: 7");
+        assert!(Error::Decode("bad".into()).to_string().contains("bad"));
+    }
+}

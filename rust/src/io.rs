@@ -1,0 +1,136 @@
+//! Binary encode/decode primitives shared by the wire protocol and the
+//! checkpoint format. Little-endian, length-prefixed strings/buffers.
+
+use crate::error::{Error, Result};
+use byteorder::{LittleEndian, ReadBytesExt, WriteBytesExt};
+use std::io::{Read, Write};
+
+/// Maximum single string/buffer length accepted when decoding (guards
+/// against corrupt length prefixes allocating unbounded memory).
+pub const MAX_DECODE_LEN: usize = 1 << 31;
+
+pub fn put_u8<W: Write>(w: &mut W, v: u8) -> Result<()> {
+    w.write_u8(v)?;
+    Ok(())
+}
+
+pub fn put_u32<W: Write>(w: &mut W, v: u32) -> Result<()> {
+    w.write_u32::<LittleEndian>(v)?;
+    Ok(())
+}
+
+pub fn put_u64<W: Write>(w: &mut W, v: u64) -> Result<()> {
+    w.write_u64::<LittleEndian>(v)?;
+    Ok(())
+}
+
+pub fn put_f64<W: Write>(w: &mut W, v: f64) -> Result<()> {
+    w.write_f64::<LittleEndian>(v)?;
+    Ok(())
+}
+
+pub fn put_bytes<W: Write>(w: &mut W, v: &[u8]) -> Result<()> {
+    put_u64(w, v.len() as u64)?;
+    w.write_all(v)?;
+    Ok(())
+}
+
+pub fn put_string<W: Write>(w: &mut W, v: &str) -> Result<()> {
+    put_bytes(w, v.as_bytes())
+}
+
+pub fn get_u8<R: Read>(r: &mut R) -> Result<u8> {
+    Ok(r.read_u8()?)
+}
+
+pub fn get_u32<R: Read>(r: &mut R) -> Result<u32> {
+    Ok(r.read_u32::<LittleEndian>()?)
+}
+
+pub fn get_u64<R: Read>(r: &mut R) -> Result<u64> {
+    Ok(r.read_u64::<LittleEndian>()?)
+}
+
+pub fn get_f64<R: Read>(r: &mut R) -> Result<f64> {
+    Ok(r.read_f64::<LittleEndian>()?)
+}
+
+pub fn get_bytes<R: Read>(r: &mut R) -> Result<Vec<u8>> {
+    let len = get_u64(r)? as usize;
+    if len > MAX_DECODE_LEN {
+        return Err(Error::Decode(format!("buffer length {len} exceeds limit")));
+    }
+    let mut buf = vec![0u8; len];
+    r.read_exact(&mut buf)?;
+    Ok(buf)
+}
+
+pub fn get_string<R: Read>(r: &mut R) -> Result<String> {
+    String::from_utf8(get_bytes(r)?).map_err(|e| Error::Decode(format!("invalid utf8: {e}")))
+}
+
+/// Encode a usize vector (shapes).
+pub fn put_shape<W: Write>(w: &mut W, shape: &[usize]) -> Result<()> {
+    put_u32(w, shape.len() as u32)?;
+    for &d in shape {
+        put_u64(w, d as u64)?;
+    }
+    Ok(())
+}
+
+pub fn get_shape<R: Read>(r: &mut R) -> Result<Vec<usize>> {
+    let rank = get_u32(r)? as usize;
+    if rank > 64 {
+        return Err(Error::Decode(format!("rank {rank} exceeds limit")));
+    }
+    (0..rank).map(|_| Ok(get_u64(r)? as usize)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    #[test]
+    fn primitive_roundtrip() {
+        let mut buf = Vec::new();
+        put_u8(&mut buf, 7).unwrap();
+        put_u32(&mut buf, 0xDEADBEEF).unwrap();
+        put_u64(&mut buf, u64::MAX - 3).unwrap();
+        put_f64(&mut buf, -1.5e300).unwrap();
+        put_string(&mut buf, "héllo").unwrap();
+        put_bytes(&mut buf, &[1, 2, 3]).unwrap();
+        put_shape(&mut buf, &[2, 3, 4]).unwrap();
+
+        let mut r = Cursor::new(buf);
+        assert_eq!(get_u8(&mut r).unwrap(), 7);
+        assert_eq!(get_u32(&mut r).unwrap(), 0xDEADBEEF);
+        assert_eq!(get_u64(&mut r).unwrap(), u64::MAX - 3);
+        assert_eq!(get_f64(&mut r).unwrap(), -1.5e300);
+        assert_eq!(get_string(&mut r).unwrap(), "héllo");
+        assert_eq!(get_bytes(&mut r).unwrap(), vec![1, 2, 3]);
+        assert_eq!(get_shape(&mut r).unwrap(), vec![2, 3, 4]);
+    }
+
+    #[test]
+    fn decode_guards_against_huge_lengths() {
+        let mut buf = Vec::new();
+        put_u64(&mut buf, u64::MAX).unwrap();
+        assert!(get_bytes(&mut Cursor::new(buf)).is_err());
+    }
+
+    #[test]
+    fn truncated_input_errors() {
+        let mut buf = Vec::new();
+        put_bytes(&mut buf, &[0u8; 100]).unwrap();
+        buf.truncate(50);
+        assert!(get_bytes(&mut Cursor::new(buf)).is_err());
+    }
+
+    #[test]
+    fn invalid_utf8_errors() {
+        let mut buf = Vec::new();
+        put_bytes(&mut buf, &[0xFF, 0xFE]).unwrap();
+        assert!(get_string(&mut Cursor::new(buf)).is_err());
+    }
+}

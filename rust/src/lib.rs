@@ -1,0 +1,29 @@
+//! # Reverb — a framework for experience replay
+//!
+//! A Rust reproduction of *"Reverb: A Framework For Experience Replay"*
+//! (Cassirer et al., 2021): an efficient, flexible data storage and
+//! transport system for reinforcement learning, with a streaming
+//! client/server, pluggable selectors, SPI rate limiting, chunked and
+//! compressed storage, checkpointing, and sharding — plus a three-layer
+//! JAX/Pallas learner stack executed through PJRT (see `runtime`).
+
+pub mod client;
+pub mod coordinator;
+pub mod core;
+pub mod error;
+pub mod io;
+pub mod net;
+pub mod rl;
+pub mod runtime;
+pub mod util;
+
+pub use crate::core::chunk::{Chunk, ChunkBuilder, Compression};
+pub use crate::core::chunk_store::ChunkStore;
+pub use crate::core::item::{Item, SampledItem};
+pub use crate::core::rate_limiter::{RateLimiter, RateLimiterConfig};
+pub use crate::core::selector::SelectorConfig;
+pub use crate::core::table::{Table, TableConfig, TableInfo};
+pub use crate::core::tensor::{DType, Signature, Tensor, TensorSpec};
+pub use crate::client::{Client, ClientPool, Dataset, Sample, Sampler, SamplerOptions, Writer, WriterOptions};
+pub use crate::error::{Error, Result};
+pub use crate::net::{Server, ServerBuilder};

@@ -1,0 +1,163 @@
+//! `reverb-server`: the standalone server binary.
+//!
+//! ```text
+//! reverb-server serve --bind 0.0.0.0:9090 \
+//!     --table replay:uniform:100000 --table queue:queue:512 \
+//!     --table per:prioritized:100000:0.6 \
+//!     --checkpoint-dir /tmp/reverb-ckpts [--load <ckpt>]
+//! reverb-server info --addr 127.0.0.1:9090
+//! reverb-server checkpoint --addr 127.0.0.1:9090
+//! ```
+//!
+//! Table spec: `name:kind[:params]` where kind ∈ {uniform, queue,
+//! prioritized, variable}. Hand-rolled arg parsing (no clap in the offline
+//! crate set).
+
+use reverb::core::table::TableConfig;
+use reverb::net::server::Server;
+use reverb::Client;
+
+fn usage() -> ! {
+    eprintln!(
+        "usage:\n  reverb-server serve --bind HOST:PORT --table NAME:KIND[:ARGS] \
+         [--checkpoint-dir DIR] [--load CKPT]\n  reverb-server info --addr HOST:PORT\n  \
+         reverb-server checkpoint --addr HOST:PORT\n\n\
+         table kinds:\n  NAME:uniform:MAX_SIZE\n  NAME:queue:QUEUE_SIZE\n  \
+         NAME:prioritized:MAX_SIZE:EXPONENT[:SPI:MIN_SIZE:ERROR_BUFFER]\n  NAME:variable"
+    );
+    std::process::exit(2);
+}
+
+fn parse_table(spec: &str) -> Result<TableConfig, String> {
+    let parts: Vec<&str> = spec.split(':').collect();
+    if parts.len() < 2 {
+        return Err(format!("bad table spec {spec:?}"));
+    }
+    let name = parts[0];
+    let num = |i: usize, what: &str| -> Result<f64, String> {
+        parts
+            .get(i)
+            .ok_or_else(|| format!("{spec:?}: missing {what}"))?
+            .parse::<f64>()
+            .map_err(|e| format!("{spec:?}: bad {what}: {e}"))
+    };
+    match parts[1] {
+        "uniform" => Ok(TableConfig::uniform_replay(name, num(2, "max_size")? as usize)),
+        "queue" => Ok(TableConfig::queue(name, num(2, "queue_size")? as usize)),
+        "variable" => Ok(TableConfig::variable_container(name)),
+        "prioritized" => {
+            let max_size = num(2, "max_size")? as usize;
+            let exponent = num(3, "exponent")?;
+            if parts.len() > 4 {
+                let spi = num(4, "spi")?;
+                let min_size = num(5, "min_size")? as u64;
+                let buffer = num(6, "error_buffer")?;
+                TableConfig::prioritized_replay(name, max_size, exponent, spi, min_size, buffer)
+                    .map_err(|e| e.to_string())
+            } else {
+                TableConfig::prioritized_replay(name, max_size, exponent, 1e9, 1, 1e9)
+                    .map_err(|e| e.to_string())
+            }
+        }
+        other => Err(format!("unknown table kind {other:?}")),
+    }
+}
+
+fn flag(args: &[String], name: &str) -> Option<String> {
+    args.iter()
+        .position(|a| a == name)
+        .and_then(|i| args.get(i + 1).cloned())
+}
+
+fn flags(args: &[String], name: &str) -> Vec<String> {
+    let mut out = Vec::new();
+    let mut i = 0;
+    while i < args.len() {
+        if args[i] == name {
+            if let Some(v) = args.get(i + 1) {
+                out.push(v.clone());
+                i += 1;
+            }
+        }
+        i += 1;
+    }
+    out
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    match args.first().map(String::as_str) {
+        Some("serve") => {
+            let bind = flag(&args, "--bind").unwrap_or_else(|| "127.0.0.1:9090".into());
+            let table_specs = flags(&args, "--table");
+            if table_specs.is_empty() {
+                eprintln!("serve requires at least one --table");
+                usage();
+            }
+            let mut builder = Server::builder();
+            for spec in &table_specs {
+                match parse_table(spec) {
+                    Ok(cfg) => builder = builder.table(cfg),
+                    Err(e) => {
+                        eprintln!("{e}");
+                        std::process::exit(2);
+                    }
+                }
+            }
+            if let Some(dir) = flag(&args, "--checkpoint-dir") {
+                builder = builder.checkpoint_dir(dir);
+            }
+            if let Some(ckpt) = flag(&args, "--load") {
+                builder = builder.load_checkpoint(ckpt);
+            }
+            match builder.bind(&bind) {
+                Ok(server) => {
+                    println!("reverb-server listening on {}", server.local_addr());
+                    for (name, info) in server.info() {
+                        println!("  table {name}: size={}/{}", info.size, info.max_size);
+                    }
+                    // Serve until killed.
+                    loop {
+                        std::thread::sleep(std::time::Duration::from_secs(3600));
+                    }
+                }
+                Err(e) => {
+                    eprintln!("failed to start: {e}");
+                    std::process::exit(1);
+                }
+            }
+        }
+        Some("info") => {
+            let addr = flag(&args, "--addr").unwrap_or_else(|| "127.0.0.1:9090".into());
+            match Client::connect(addr).and_then(|c| c.server_info()) {
+                Ok(tables) => {
+                    println!(
+                        "{:<16} {:>10} {:>10} {:>12} {:>12} {:>10}",
+                        "table", "size", "max", "inserts", "samples", "diff"
+                    );
+                    for (name, i) in tables {
+                        println!(
+                            "{:<16} {:>10} {:>10} {:>12} {:>12} {:>10.1}",
+                            name, i.size, i.max_size, i.inserts, i.samples, i.diff
+                        );
+                    }
+                }
+                Err(e) => {
+                    eprintln!("info failed: {e}");
+                    std::process::exit(1);
+                }
+            }
+        }
+        Some("checkpoint") => {
+            let addr = flag(&args, "--addr").unwrap_or_else(|| "127.0.0.1:9090".into());
+            match Client::connect(addr).and_then(|c| c.checkpoint()) {
+                Ok(path) => println!("checkpoint written: {path}"),
+                Err(e) => {
+                    eprintln!("checkpoint failed: {e}");
+                    std::process::exit(1);
+                }
+            }
+        }
+        _ => usage(),
+    }
+}

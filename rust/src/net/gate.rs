@@ -1,0 +1,153 @@
+//! Checkpoint gate (§3.7): "During the checkpointing process, the server
+//! blocks all incoming insert, sample, update, and delete requests."
+//!
+//! A pausable in-flight counter: request handlers `enter()` before touching
+//! tables and `exit()` after; the checkpointer calls `pause()` which stops
+//! new entries and waits for in-flight handlers to drain, then `resume()`.
+//! Handlers slice long blocking waits into short segments and re-enter the
+//! gate between segments, so a pause never waits on a rate-limiter block.
+
+use std::sync::{Condvar, Mutex};
+
+#[derive(Default)]
+struct GateState {
+    paused: bool,
+    in_flight: usize,
+}
+
+/// Pausable entry gate.
+#[derive(Default)]
+pub struct Gate {
+    state: Mutex<GateState>,
+    cv: Condvar,
+}
+
+impl Gate {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Block until unpaused, then register as in-flight.
+    pub fn enter(&self) -> GateGuard<'_> {
+        let mut s = self.state.lock().unwrap();
+        while s.paused {
+            s = self.cv.wait(s).unwrap();
+        }
+        s.in_flight += 1;
+        GateGuard { gate: self }
+    }
+
+    /// Try to enter without blocking; `None` when paused.
+    pub fn try_enter(&self) -> Option<GateGuard<'_>> {
+        let mut s = self.state.lock().unwrap();
+        if s.paused {
+            return None;
+        }
+        s.in_flight += 1;
+        Some(GateGuard { gate: self })
+    }
+
+    fn exit(&self) {
+        let mut s = self.state.lock().unwrap();
+        s.in_flight -= 1;
+        if s.in_flight == 0 {
+            self.cv.notify_all();
+        }
+    }
+
+    /// Stop new entries and wait for all in-flight work to drain.
+    pub fn pause(&self) {
+        let mut s = self.state.lock().unwrap();
+        s.paused = true;
+        while s.in_flight > 0 {
+            s = self.cv.wait(s).unwrap();
+        }
+    }
+
+    /// Allow entries again.
+    pub fn resume(&self) {
+        let mut s = self.state.lock().unwrap();
+        s.paused = false;
+        drop(s);
+        self.cv.notify_all();
+    }
+
+    /// Current number of in-flight handlers (diagnostics).
+    pub fn in_flight(&self) -> usize {
+        self.state.lock().unwrap().in_flight
+    }
+}
+
+/// RAII in-flight registration.
+pub struct GateGuard<'a> {
+    gate: &'a Gate,
+}
+
+impl Drop for GateGuard<'_> {
+    fn drop(&mut self) {
+        self.gate.exit();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    use std::sync::Arc;
+    use std::time::Duration;
+
+    #[test]
+    fn enter_exit_counts() {
+        let g = Gate::new();
+        assert_eq!(g.in_flight(), 0);
+        let a = g.enter();
+        let b = g.enter();
+        assert_eq!(g.in_flight(), 2);
+        drop(a);
+        assert_eq!(g.in_flight(), 1);
+        drop(b);
+        assert_eq!(g.in_flight(), 0);
+    }
+
+    #[test]
+    fn pause_blocks_new_entries_and_drains() {
+        let g = Arc::new(Gate::new());
+        let counter = Arc::new(AtomicUsize::new(0));
+
+        // A long-ish handler.
+        let g2 = g.clone();
+        let c2 = counter.clone();
+        let worker = std::thread::spawn(move || {
+            let _guard = g2.enter();
+            std::thread::sleep(Duration::from_millis(50));
+            c2.fetch_add(1, Ordering::SeqCst);
+        });
+        std::thread::sleep(Duration::from_millis(10));
+
+        // pause() must wait for the worker to finish.
+        g.pause();
+        assert_eq!(counter.load(Ordering::SeqCst), 1, "pause drained in-flight");
+
+        // New entries blocked while paused.
+        assert!(g.try_enter().is_none());
+        let g3 = g.clone();
+        let c3 = counter.clone();
+        let blocked = std::thread::spawn(move || {
+            let _guard = g3.enter();
+            c3.fetch_add(10, Ordering::SeqCst);
+        });
+        std::thread::sleep(Duration::from_millis(30));
+        assert_eq!(counter.load(Ordering::SeqCst), 1, "entry blocked during pause");
+
+        g.resume();
+        blocked.join().unwrap();
+        assert_eq!(counter.load(Ordering::SeqCst), 11);
+        worker.join().unwrap();
+    }
+
+    #[test]
+    fn try_enter_succeeds_when_unpaused() {
+        let g = Gate::new();
+        assert!(g.try_enter().is_some());
+    }
+}

@@ -1,0 +1,8 @@
+//! Networking: the wire protocol (gRPC analogue), the server, and the
+//! checkpoint gate.
+
+pub mod gate;
+pub mod server;
+pub mod wire;
+
+pub use server::{Server, ServerBuilder};

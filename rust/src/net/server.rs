@@ -1,0 +1,748 @@
+//! The Reverb server: a TCP listener exposing tables over the wire
+//! protocol, with one service thread per connection (Reverb's gRPC server
+//! is likewise thread-pooled; contention behaviour lives in the tables, not
+//! the transport — see DESIGN.md §2).
+
+use crate::core::chunk::Chunk;
+use crate::core::chunk_store::ChunkStore;
+use crate::core::extensions::TableExtension;
+use crate::core::item::Item;
+use crate::core::table::{Table, TableConfig, TableInfo};
+use crate::error::{Error, Result};
+use crate::net::gate::Gate;
+use crate::net::wire::{error_code, Message, WireItem, WireSampleInfo};
+use std::collections::HashMap;
+use std::io::{BufReader, BufWriter, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// Long blocking waits are sliced into segments of this length so the
+/// checkpoint gate can drain promptly (see `net::gate`).
+const WAIT_SLICE: Duration = Duration::from_millis(50);
+
+/// Per-connection cache of recently streamed chunks awaiting item creation.
+/// Bounded; writers create items promptly after streaming chunks.
+const PENDING_CHUNK_CAP: usize = 1024;
+
+/// Server construction options.
+pub struct ServerBuilder {
+    tables: Vec<(TableConfig, Vec<Box<dyn TableExtension>>)>,
+    checkpoint_dir: Option<PathBuf>,
+    load_checkpoint: Option<PathBuf>,
+    checkpoint_interval: Option<Duration>,
+}
+
+impl ServerBuilder {
+    pub fn new() -> Self {
+        ServerBuilder {
+            tables: Vec::new(),
+            checkpoint_dir: None,
+            load_checkpoint: None,
+            checkpoint_interval: None,
+        }
+    }
+
+    /// Add a table.
+    pub fn table(mut self, config: TableConfig) -> Self {
+        self.tables.push((config, Vec::new()));
+        self
+    }
+
+    /// Add a table with extensions (§3.5).
+    pub fn table_with_extensions(
+        mut self,
+        config: TableConfig,
+        extensions: Vec<Box<dyn TableExtension>>,
+    ) -> Self {
+        self.tables.push((config, extensions));
+        self
+    }
+
+    /// Directory for client-triggered checkpoints (§3.7).
+    pub fn checkpoint_dir(mut self, dir: impl Into<PathBuf>) -> Self {
+        self.checkpoint_dir = Some(dir.into());
+        self
+    }
+
+    /// Load this checkpoint at construction time (§3.7).
+    pub fn load_checkpoint(mut self, path: impl Into<PathBuf>) -> Self {
+        self.load_checkpoint = Some(path.into());
+        self
+    }
+
+    /// Write a checkpoint automatically every `interval` (§3.7: "potential
+    /// data loss ... can be limited through the use of periodic
+    /// checkpointing"). Requires [`ServerBuilder::checkpoint_dir`].
+    pub fn checkpoint_interval(mut self, interval: Duration) -> Self {
+        self.checkpoint_interval = Some(interval);
+        self
+    }
+
+    /// Bind to `addr` (use port 0 for an ephemeral port) and start serving.
+    pub fn bind(self, addr: &str) -> Result<Server> {
+        let mut tables = HashMap::new();
+        let mut table_order = Vec::new();
+        for (config, extensions) in self.tables {
+            let name = config.name.clone();
+            let t = Arc::new(Table::with_extensions(config, extensions));
+            table_order.push(t.clone());
+            if tables.insert(name.clone(), t).is_some() {
+                return Err(Error::InvalidArgument(format!("duplicate table {name}")));
+            }
+        }
+        let store = ChunkStore::new();
+        if let Some(path) = &self.load_checkpoint {
+            crate::core::checkpoint::load(path, &table_order, &store)?;
+        }
+        let inner = Arc::new(ServerInner {
+            tables,
+            table_order,
+            store,
+            gate: Gate::new(),
+            checkpoint_dir: self.checkpoint_dir,
+            checkpoint_seq: AtomicU64::new(0),
+            shutdown: AtomicBool::new(false),
+        });
+
+        let listener = TcpListener::bind(addr)?;
+        let local_addr = listener.local_addr()?;
+        let accept_inner = inner.clone();
+        let accept_thread = std::thread::Builder::new()
+            .name("reverb-accept".into())
+            .spawn(move || accept_loop(listener, accept_inner))
+            .expect("spawn accept thread");
+
+        // Periodic checkpointer (§3.7), if configured.
+        let checkpoint_thread = self.checkpoint_interval.map(|interval| {
+            if inner.checkpoint_dir.is_none() {
+                panic!("checkpoint_interval requires checkpoint_dir");
+            }
+            let ckpt_inner = inner.clone();
+            std::thread::Builder::new()
+                .name("reverb-ckpt".into())
+                .spawn(move || {
+                    let tick = Duration::from_millis(25).min(interval);
+                    let mut waited = Duration::ZERO;
+                    loop {
+                        std::thread::sleep(tick);
+                        if ckpt_inner.shutdown.load(Ordering::SeqCst) {
+                            return;
+                        }
+                        waited += tick;
+                        if waited >= interval {
+                            waited = Duration::ZERO;
+                            if let Err(e) = ckpt_inner.checkpoint() {
+                                log::warn!("periodic checkpoint failed: {e}");
+                            }
+                        }
+                    }
+                })
+                .expect("spawn checkpoint thread")
+        });
+
+        Ok(Server {
+            inner,
+            local_addr,
+            accept_thread: Some(accept_thread),
+            checkpoint_thread,
+        })
+    }
+}
+
+impl Default for ServerBuilder {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+struct ServerInner {
+    tables: HashMap<String, Arc<Table>>,
+    /// Construction order (stable info/checkpoint ordering).
+    table_order: Vec<Arc<Table>>,
+    store: ChunkStore,
+    gate: Gate,
+    checkpoint_dir: Option<PathBuf>,
+    checkpoint_seq: AtomicU64,
+    shutdown: AtomicBool,
+}
+
+/// A running Reverb server. Dropping (or calling [`Server::stop`]) shuts it
+/// down and releases all blocked clients.
+pub struct Server {
+    inner: Arc<ServerInner>,
+    local_addr: SocketAddr,
+    accept_thread: Option<std::thread::JoinHandle<()>>,
+    checkpoint_thread: Option<std::thread::JoinHandle<()>>,
+}
+
+impl Server {
+    /// Convenience: builder.
+    pub fn builder() -> ServerBuilder {
+        ServerBuilder::new()
+    }
+
+    /// The bound address (e.g. `127.0.0.1:41523`).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.local_addr
+    }
+
+    /// Direct in-process access to a table — used by benchmarks that want
+    /// to isolate table behaviour from transport cost, and by embedded
+    /// (single-process) deployments.
+    pub fn table(&self, name: &str) -> Result<Arc<Table>> {
+        self.inner
+            .tables
+            .get(name)
+            .cloned()
+            .ok_or_else(|| Error::TableNotFound(name.into()))
+    }
+
+    /// Info for all tables, in construction order.
+    pub fn info(&self) -> Vec<(String, TableInfo)> {
+        self.inner
+            .table_order
+            .iter()
+            .map(|t| (t.name().to_string(), t.info()))
+            .collect()
+    }
+
+    /// Write a checkpoint now (also reachable via the client RPC).
+    pub fn checkpoint(&self) -> Result<PathBuf> {
+        self.inner.checkpoint()
+    }
+
+    /// Stop serving: wake blocked clients, close the listener, join.
+    pub fn stop(&mut self) {
+        if self.inner.shutdown.swap(true, Ordering::SeqCst) {
+            return;
+        }
+        for t in &self.inner.table_order {
+            t.cancel();
+        }
+        // Unblock the accept loop.
+        let _ = TcpStream::connect(self.local_addr);
+        if let Some(h) = self.accept_thread.take() {
+            let _ = h.join();
+        }
+        if let Some(h) = self.checkpoint_thread.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        self.stop();
+    }
+}
+
+impl ServerInner {
+    fn table(&self, name: &str) -> Result<&Arc<Table>> {
+        self.tables
+            .get(name)
+            .ok_or_else(|| Error::TableNotFound(name.into()))
+    }
+
+    fn checkpoint(&self) -> Result<PathBuf> {
+        let dir = self
+            .checkpoint_dir
+            .clone()
+            .ok_or_else(|| Error::InvalidArgument("server has no checkpoint_dir".into()))?;
+        // Block all incoming requests for the duration (§3.7).
+        self.gate.pause();
+        let result = (|| {
+            let seq = self.checkpoint_seq.fetch_add(1, Ordering::SeqCst);
+            let path = dir.join(format!("ckpt_{seq:06}.rvb"));
+            crate::core::checkpoint::save(&path, &self.table_order)?;
+            Ok(path)
+        })();
+        self.gate.resume();
+        result
+    }
+
+    /// Insert with gate-sliced blocking (see WAIT_SLICE). The item is
+    /// cloned per attempt (cheap: `Arc<Chunk>` refs + metadata) so a sliced
+    /// timeout can retry after re-entering the gate.
+    fn gated_insert(&self, table: &Arc<Table>, item: Item, timeout: Duration) -> Result<()> {
+        let deadline = Instant::now() + timeout;
+        loop {
+            let _guard = self.gate.enter();
+            let now = Instant::now();
+            let slice = WAIT_SLICE.min(deadline.saturating_duration_since(now));
+            match table.insert_or_assign(item.clone(), Some(slice)) {
+                Ok(()) => return Ok(()),
+                Err(Error::RateLimiterTimeout(_)) if Instant::now() < deadline => continue,
+                Err(e) => return Err(e),
+            }
+        }
+    }
+
+    /// Sample with gate-sliced blocking.
+    fn gated_sample(
+        &self,
+        table: &Arc<Table>,
+        n: usize,
+        timeout: Duration,
+    ) -> Result<Vec<crate::core::item::SampledItem>> {
+        let deadline = Instant::now() + timeout;
+        loop {
+            let _guard = self.gate.enter();
+            let now = Instant::now();
+            let slice = WAIT_SLICE.min(deadline.saturating_duration_since(now));
+            match table.sample_batch(n, Some(slice)) {
+                Ok(items) => return Ok(items),
+                Err(Error::RateLimiterTimeout(_)) if Instant::now() < deadline => continue,
+                Err(e) => return Err(e),
+            }
+        }
+    }
+}
+
+fn accept_loop(listener: TcpListener, inner: Arc<ServerInner>) {
+    loop {
+        match listener.accept() {
+            Ok((stream, _peer)) => {
+                if inner.shutdown.load(Ordering::SeqCst) {
+                    return;
+                }
+                let conn_inner = inner.clone();
+                let _ = std::thread::Builder::new()
+                    .name("reverb-conn".into())
+                    .spawn(move || {
+                        let _ = serve_connection(stream, conn_inner);
+                    });
+            }
+            Err(_) => {
+                if inner.shutdown.load(Ordering::SeqCst) {
+                    return;
+                }
+            }
+        }
+    }
+}
+
+/// Build a table `Item` from its wire form, resolving chunk references from
+/// the per-connection pending set or the global store.
+fn resolve_item(
+    inner: &ServerInner,
+    pending: &HashMap<u64, Arc<Chunk>>,
+    wire: &WireItem,
+) -> Result<Item> {
+    let chunks = wire
+        .chunk_keys
+        .iter()
+        .map(|k| {
+            pending
+                .get(k)
+                .cloned()
+                .map(Ok)
+                .unwrap_or_else(|| inner.store.get(*k))
+        })
+        .collect::<Result<Vec<_>>>()?;
+    Item::new(
+        wire.key,
+        wire.table.clone(),
+        wire.priority,
+        chunks,
+        wire.offset as usize,
+        wire.length as usize,
+    )
+}
+
+/// Convert a sampled item to its wire form plus its chunk set.
+fn sampled_to_wire(s: &crate::core::item::SampledItem) -> (WireSampleInfo, Vec<Arc<Chunk>>) {
+    let info = WireSampleInfo {
+        item: WireItem {
+            key: s.item.key,
+            table: s.item.table.clone(),
+            priority: s.item.priority,
+            chunk_keys: s.item.chunks.iter().map(|c| c.key).collect(),
+            offset: s.item.offset as u64,
+            length: s.item.length as u64,
+            times_sampled: s.item.times_sampled,
+        },
+        probability: s.probability,
+        table_size: s.table_size as u64,
+    };
+    (info, s.item.chunks.clone())
+}
+
+fn serve_connection(stream: TcpStream, inner: Arc<ServerInner>) -> Result<()> {
+    stream.set_nodelay(true)?;
+    let mut reader = BufReader::with_capacity(256 * 1024, stream.try_clone()?);
+    let mut writer = BufWriter::with_capacity(256 * 1024, stream);
+    // Chunks streamed on this connection, awaiting item creation.
+    let mut pending: HashMap<u64, Arc<Chunk>> = HashMap::new();
+    let mut pending_order: std::collections::VecDeque<u64> = std::collections::VecDeque::new();
+
+    loop {
+        if inner.shutdown.load(Ordering::SeqCst) {
+            return Ok(());
+        }
+        let msg = match Message::read_frame(&mut reader) {
+            Ok(m) => m,
+            Err(Error::Io(_)) => return Ok(()), // client hung up
+            Err(e) => return Err(e),
+        };
+        match msg {
+            Message::InsertChunks { chunks } => {
+                for chunk in chunks {
+                    let key = chunk.key;
+                    let arc = inner.store.insert(chunk);
+                    if pending.insert(key, arc).is_none() {
+                        pending_order.push_back(key);
+                    }
+                    while pending_order.len() > PENDING_CHUNK_CAP {
+                        if let Some(old) = pending_order.pop_front() {
+                            pending.remove(&old);
+                        }
+                    }
+                }
+                // No reply: chunk streaming is fire-and-forget, acks ride
+                // on the subsequent CreateItem.
+            }
+            Message::CreateItem { id, item, timeout_ms } => {
+                let reply = (|| {
+                    let table = inner.table(&item.table)?.clone();
+                    let item = resolve_item(&inner, &pending, &item)?;
+                    inner.gated_insert(&table, item, Duration::from_millis(timeout_ms))?;
+                    Ok(())
+                })();
+                send_reply(&mut writer, id, reply.map(|()| String::new()))?;
+            }
+            Message::SampleRequest {
+                id,
+                table,
+                num_samples,
+                timeout_ms,
+            } => {
+                let result = (|| {
+                    let table = inner.table(&table)?.clone();
+                    inner.gated_sample(
+                        &table,
+                        num_samples.max(1) as usize,
+                        Duration::from_millis(timeout_ms),
+                    )
+                })();
+                match result {
+                    Ok(samples) => {
+                        let mut infos = Vec::with_capacity(samples.len());
+                        let mut chunks: Vec<Arc<Chunk>> = Vec::with_capacity(samples.len());
+                        for s in &samples {
+                            let (info, item_chunks) = sampled_to_wire(s);
+                            infos.push(info);
+                            for c in item_chunks {
+                                // Dedup chunks shared across items in this
+                                // response batch; encode straight from the
+                                // Arc (no payload clone) — hot path. Linear
+                                // scan beats a HashSet at batch sizes.
+                                if !chunks.iter().any(|x| x.key == c.key) {
+                                    chunks.push(c);
+                                }
+                            }
+                        }
+                        Message::write_sample_data_frame(&mut writer, id, &infos, &chunks)?;
+                        writer.flush()?;
+                    }
+                    Err(e) => {
+                        send_err(&mut writer, id, &e)?;
+                    }
+                }
+            }
+            Message::MutatePriorities {
+                id,
+                table,
+                updates,
+                deletes,
+            } => {
+                let reply = (|| {
+                    let table = inner.table(&table)?.clone();
+                    let _guard = inner.gate.enter();
+                    let updated = table.update_priorities(&updates)?;
+                    let deleted = table.delete(&deletes)?;
+                    Ok(format!("updated={updated} deleted={deleted}"))
+                })();
+                send_reply(&mut writer, id, reply)?;
+            }
+            Message::Reset { id, table } => {
+                let reply = (|| {
+                    let table = inner.table(&table)?.clone();
+                    let _guard = inner.gate.enter();
+                    table.reset();
+                    Ok(String::new())
+                })();
+                send_reply(&mut writer, id, reply)?;
+            }
+            Message::InfoRequest { id } => {
+                let tables = inner
+                    .table_order
+                    .iter()
+                    .map(|t| (t.name().to_string(), t.info()))
+                    .collect();
+                Message::Info { id, tables }.write_frame(&mut writer)?;
+                writer.flush()?;
+            }
+            Message::Checkpoint { id } => {
+                let reply = inner
+                    .checkpoint()
+                    .map(|p| p.display().to_string());
+                send_reply(&mut writer, id, reply)?;
+            }
+            // Server-to-client messages arriving at the server are protocol
+            // violations.
+            Message::Ack { .. }
+            | Message::Err { .. }
+            | Message::SampleData { .. }
+            | Message::Info { .. } => {
+                return Err(Error::Decode("client sent a server-side message".into()));
+            }
+        }
+    }
+}
+
+fn send_reply<W: Write>(w: &mut W, id: u64, result: Result<String>) -> Result<()> {
+    match result {
+        Ok(detail) => Message::Ack { id, detail }.write_frame(w)?,
+        Err(e) => {
+            Message::Err {
+                id,
+                code: error_code(&e),
+                message: e.to_string(),
+            }
+            .write_frame(w)?;
+        }
+    }
+    w.flush()?;
+    Ok(())
+}
+
+fn send_err<W: Write>(w: &mut W, id: u64, e: &Error) -> Result<()> {
+    Message::Err {
+        id,
+        code: error_code(e),
+        message: e.to_string(),
+    }
+    .write_frame(w)?;
+    w.flush()?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::chunk::Compression;
+    use crate::core::tensor::Tensor;
+
+    fn mk_chunk(key: u64, v: f32) -> Chunk {
+        let steps = vec![vec![Tensor::from_f32(&[1], &[v]).unwrap()]];
+        Chunk::from_steps(key, 0, &steps, Compression::None).unwrap()
+    }
+
+    fn start_server() -> Server {
+        Server::builder()
+            .table(TableConfig::uniform_replay("replay", 100))
+            .table(TableConfig::queue("queue", 4))
+            .bind("127.0.0.1:0")
+            .unwrap()
+    }
+
+    /// Raw-protocol round trip (the typed Client is tested in client/).
+    #[test]
+    fn raw_insert_then_sample_over_tcp() {
+        let server = start_server();
+        let stream = TcpStream::connect(server.local_addr()).unwrap();
+        stream.set_nodelay(true).unwrap();
+        let mut r = BufReader::new(stream.try_clone().unwrap());
+        let mut w = BufWriter::new(stream);
+
+        Message::InsertChunks {
+            chunks: vec![mk_chunk(11, 3.5)],
+        }
+        .write_frame(&mut w)
+        .unwrap();
+        Message::CreateItem {
+            id: 1,
+            item: WireItem {
+                key: 7,
+                table: "replay".into(),
+                priority: 1.0,
+                chunk_keys: vec![11],
+                offset: 0,
+                length: 1,
+                times_sampled: 0,
+            },
+            timeout_ms: 1000,
+        }
+        .write_frame(&mut w)
+        .unwrap();
+        w.flush().unwrap();
+        match Message::read_frame(&mut r).unwrap() {
+            Message::Ack { id, .. } => assert_eq!(id, 1),
+            other => panic!("expected ack, got {other:?}"),
+        }
+
+        Message::SampleRequest {
+            id: 2,
+            table: "replay".into(),
+            num_samples: 1,
+            timeout_ms: 1000,
+        }
+        .write_frame(&mut w)
+        .unwrap();
+        w.flush().unwrap();
+        match Message::read_frame(&mut r).unwrap() {
+            Message::SampleData { id, infos, chunks } => {
+                assert_eq!(id, 2);
+                assert_eq!(infos[0].item.key, 7);
+                assert_eq!(chunks[0].key, 11);
+                let steps = chunks[0].to_steps().unwrap();
+                assert_eq!(steps[0][0].to_f32().unwrap(), vec![3.5]);
+            }
+            other => panic!("expected samples, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn unknown_table_errors() {
+        let server = start_server();
+        let stream = TcpStream::connect(server.local_addr()).unwrap();
+        let mut r = BufReader::new(stream.try_clone().unwrap());
+        let mut w = BufWriter::new(stream);
+        Message::SampleRequest {
+            id: 1,
+            table: "nope".into(),
+            num_samples: 1,
+            timeout_ms: 10,
+        }
+        .write_frame(&mut w)
+        .unwrap();
+        w.flush().unwrap();
+        match Message::read_frame(&mut r).unwrap() {
+            Message::Err { code, .. } => assert_eq!(code, crate::net::wire::code::NOT_FOUND),
+            other => panic!("expected err, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn sample_timeout_maps_to_timeout_code() {
+        let server = start_server();
+        let stream = TcpStream::connect(server.local_addr()).unwrap();
+        let mut r = BufReader::new(stream.try_clone().unwrap());
+        let mut w = BufWriter::new(stream);
+        Message::SampleRequest {
+            id: 1,
+            table: "replay".into(),
+            num_samples: 1,
+            timeout_ms: 30,
+        }
+        .write_frame(&mut w)
+        .unwrap();
+        w.flush().unwrap();
+        match Message::read_frame(&mut r).unwrap() {
+            Message::Err { code, .. } => assert_eq!(code, crate::net::wire::code::TIMEOUT),
+            other => panic!("expected timeout, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn info_request_reports_tables() {
+        let server = start_server();
+        let stream = TcpStream::connect(server.local_addr()).unwrap();
+        let mut r = BufReader::new(stream.try_clone().unwrap());
+        let mut w = BufWriter::new(stream);
+        Message::InfoRequest { id: 5 }.write_frame(&mut w).unwrap();
+        w.flush().unwrap();
+        match Message::read_frame(&mut r).unwrap() {
+            Message::Info { tables, .. } => {
+                let names: Vec<&str> = tables.iter().map(|(n, _)| n.as_str()).collect();
+                assert_eq!(names, vec!["replay", "queue"]);
+            }
+            other => panic!("expected info, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn stop_releases_blocked_clients() {
+        let mut server = start_server();
+        let addr = server.local_addr();
+        let h = std::thread::spawn(move || {
+            let stream = TcpStream::connect(addr).unwrap();
+            let mut r = BufReader::new(stream.try_clone().unwrap());
+            let mut w = BufWriter::new(stream);
+            Message::SampleRequest {
+                id: 1,
+                table: "replay".into(),
+                num_samples: 1,
+                timeout_ms: 60_000,
+            }
+            .write_frame(&mut w)
+            .unwrap();
+            w.flush().unwrap();
+            Message::read_frame(&mut r)
+        });
+        std::thread::sleep(Duration::from_millis(50));
+        server.stop();
+        match h.join().unwrap() {
+            Ok(Message::Err { code, .. }) => {
+                assert_eq!(code, crate::net::wire::code::CANCELLED)
+            }
+            Ok(other) => panic!("unexpected {other:?}"),
+            // Connection torn down before the reply is also acceptable.
+            Err(Error::Io(_)) => {}
+            Err(e) => panic!("unexpected error {e}"),
+        }
+    }
+
+    #[test]
+    fn periodic_checkpointing_writes_files() {
+        let dir = std::env::temp_dir().join(format!("reverb_periodic_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let server = Server::builder()
+            .table(TableConfig::uniform_replay("t", 10))
+            .checkpoint_dir(&dir)
+            .checkpoint_interval(Duration::from_millis(60))
+            .bind("127.0.0.1:0")
+            .unwrap();
+        // Write something so the checkpoints have content.
+        let table = server.table("t").unwrap();
+        let steps = vec![vec![crate::core::tensor::Tensor::from_f32(&[1], &[1.0]).unwrap()]];
+        let chunk = std::sync::Arc::new(
+            Chunk::from_steps(1, 0, &steps, Compression::None).unwrap(),
+        );
+        table
+            .insert_or_assign(
+                crate::core::item::Item::new(1, "t", 1.0, vec![chunk], 0, 1).unwrap(),
+                None,
+            )
+            .unwrap();
+        std::thread::sleep(Duration::from_millis(250));
+        drop(server);
+        let ckpts: Vec<_> = std::fs::read_dir(&dir)
+            .unwrap()
+            .filter_map(|e| e.ok())
+            .filter(|e| e.path().extension().is_some_and(|x| x == "rvb"))
+            .collect();
+        assert!(ckpts.len() >= 2, "expected periodic checkpoints, got {}", ckpts.len());
+        // And the newest one restores.
+        let newest = ckpts.iter().map(|e| e.path()).max().unwrap();
+        let restored = Server::builder()
+            .table(TableConfig::uniform_replay("t", 10))
+            .load_checkpoint(newest)
+            .bind("127.0.0.1:0")
+            .unwrap();
+        assert_eq!(restored.table("t").unwrap().size(), 1);
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn duplicate_table_rejected() {
+        let r = Server::builder()
+            .table(TableConfig::uniform_replay("t", 10))
+            .table(TableConfig::uniform_replay("t", 10))
+            .bind("127.0.0.1:0");
+        assert!(r.is_err());
+    }
+}

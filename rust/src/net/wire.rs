@@ -1,0 +1,700 @@
+//! Wire protocol: the gRPC replacement (see DESIGN.md §2).
+//!
+//! Frames are `[u32 length][u8 message-tag][payload]` over a TCP stream.
+//! The protocol keeps the properties of Reverb's gRPC service that matter
+//! for behaviour and benchmarks: long-lived insert/sample streams, chunks
+//! transmitted separately from (and before) the items that reference them,
+//! pipelined acknowledgements for client-side flow control, and chunk
+//! deduplication within a sample response.
+
+use crate::core::chunk::Chunk;
+use crate::core::rate_limiter::RateLimiterConfig;
+use crate::core::selector::SelectorConfig;
+use crate::core::table::{TableConfig, TableInfo};
+use crate::error::{Error, Result};
+use crate::io::*;
+use std::io::{Read, Write};
+
+/// Maximum frame payload (1 GiB) — guards against corrupt length prefixes.
+pub const MAX_FRAME_LEN: usize = 1 << 30;
+
+/// Metadata of an item on the wire (both directions).
+#[derive(Clone, Debug, PartialEq)]
+pub struct WireItem {
+    pub key: u64,
+    pub table: String,
+    pub priority: f64,
+    pub chunk_keys: Vec<u64>,
+    pub offset: u64,
+    pub length: u64,
+    pub times_sampled: u32,
+}
+
+/// One sampled item entry in a [`Message::SampleData`] response.
+#[derive(Clone, Debug, PartialEq)]
+pub struct WireSampleInfo {
+    pub item: WireItem,
+    pub probability: f64,
+    pub table_size: u64,
+}
+
+/// Everything that travels between client and server.
+#[derive(Debug)]
+pub enum Message {
+    // ---- client → server ----
+    /// Stream chunks ahead of the items that reference them. No reply.
+    InsertChunks { chunks: Vec<Chunk> },
+    /// Create an item referencing previously-streamed chunks. Server
+    /// replies `Ack { id }` (or `Err`) once the insert commits, enabling
+    /// windowed pipelining.
+    CreateItem { id: u64, item: WireItem, timeout_ms: u64 },
+    /// Request a batch of samples. Server replies `SampleData` or `Err`
+    /// (notably `RateLimiterTimeout` → client end-of-sequence, §3.9).
+    SampleRequest {
+        id: u64,
+        table: String,
+        num_samples: u32,
+        timeout_ms: u64,
+    },
+    /// Priority updates + deletions (client `mutate_priorities`). Ack'd.
+    MutatePriorities {
+        id: u64,
+        table: String,
+        updates: Vec<(u64, f64)>,
+        deletes: Vec<u64>,
+    },
+    /// Reset a table. Ack'd.
+    Reset { id: u64, table: String },
+    /// Request server/table info. Replied with `Info`.
+    InfoRequest { id: u64 },
+    /// Trigger a checkpoint (§3.7). Ack'd with the checkpoint path echoed.
+    Checkpoint { id: u64 },
+
+    // ---- server → client ----
+    /// Positive acknowledgement of the request with matching `id`.
+    Ack { id: u64, detail: String },
+    /// Request failed.
+    Err { id: u64, code: u8, message: String },
+    /// Sample response: deduplicated chunks + item metadata.
+    SampleData {
+        id: u64,
+        infos: Vec<WireSampleInfo>,
+        chunks: Vec<Chunk>,
+    },
+    /// Server info response.
+    Info { id: u64, tables: Vec<(String, TableInfo)> },
+}
+
+/// Error codes carried by [`Message::Err`].
+pub mod code {
+    pub const GENERIC: u8 = 0;
+    pub const NOT_FOUND: u8 = 1;
+    pub const TIMEOUT: u8 = 2;
+    pub const CANCELLED: u8 = 3;
+    pub const INVALID: u8 = 4;
+}
+
+/// Map a server-side error to a wire code.
+pub fn error_code(e: &Error) -> u8 {
+    match e {
+        Error::TableNotFound(_) | Error::ItemNotFound(_) | Error::ChunkNotFound(_) => {
+            code::NOT_FOUND
+        }
+        Error::RateLimiterTimeout(_) => code::TIMEOUT,
+        Error::Cancelled(_) => code::CANCELLED,
+        Error::InvalidArgument(_) | Error::SignatureMismatch(_) => code::INVALID,
+        _ => code::GENERIC,
+    }
+}
+
+/// Reconstruct a client-side error from a wire code.
+pub fn error_from_code(code_: u8, message: String) -> Error {
+    match code_ {
+        code::TIMEOUT => Error::RateLimiterTimeout(std::time::Duration::ZERO),
+        code::CANCELLED => Error::Cancelled(message),
+        code::NOT_FOUND => Error::TableNotFound(message),
+        code::INVALID => Error::InvalidArgument(message),
+        _ => Error::Decode(message),
+    }
+}
+
+const TAG_INSERT_CHUNKS: u8 = 1;
+const TAG_CREATE_ITEM: u8 = 2;
+const TAG_SAMPLE_REQUEST: u8 = 3;
+const TAG_MUTATE: u8 = 4;
+const TAG_RESET: u8 = 5;
+const TAG_INFO_REQUEST: u8 = 6;
+const TAG_CHECKPOINT: u8 = 7;
+const TAG_ACK: u8 = 128;
+const TAG_ERR: u8 = 129;
+const TAG_SAMPLE_DATA: u8 = 130;
+const TAG_INFO: u8 = 131;
+
+fn put_wire_item<W: Write>(w: &mut W, item: &WireItem) -> Result<()> {
+    put_u64(w, item.key)?;
+    put_string(w, &item.table)?;
+    put_f64(w, item.priority)?;
+    put_u32(w, item.chunk_keys.len() as u32)?;
+    for &k in &item.chunk_keys {
+        put_u64(w, k)?;
+    }
+    put_u64(w, item.offset)?;
+    put_u64(w, item.length)?;
+    put_u32(w, item.times_sampled)?;
+    Ok(())
+}
+
+fn get_wire_item<R: Read>(r: &mut R) -> Result<WireItem> {
+    let key = get_u64(r)?;
+    let table = get_string(r)?;
+    let priority = get_f64(r)?;
+    let n = get_u32(r)? as usize;
+    if n > 1 << 20 {
+        return Err(Error::Decode(format!("{n} chunk keys exceeds limit")));
+    }
+    let chunk_keys = (0..n).map(|_| get_u64(r)).collect::<Result<_>>()?;
+    Ok(WireItem {
+        key,
+        table,
+        priority,
+        chunk_keys,
+        offset: get_u64(r)?,
+        length: get_u64(r)?,
+        times_sampled: get_u32(r)?,
+    })
+}
+
+impl Message {
+    /// Serialize the message body (without the frame header).
+    pub fn encode_body(&self) -> Result<(u8, Vec<u8>)> {
+        let mut b = Vec::new();
+        let tag = match self {
+            Message::InsertChunks { chunks } => {
+                put_u32(&mut b, chunks.len() as u32)?;
+                for c in chunks {
+                    c.encode(&mut b)?;
+                }
+                TAG_INSERT_CHUNKS
+            }
+            Message::CreateItem { id, item, timeout_ms } => {
+                put_u64(&mut b, *id)?;
+                put_wire_item(&mut b, item)?;
+                put_u64(&mut b, *timeout_ms)?;
+                TAG_CREATE_ITEM
+            }
+            Message::SampleRequest {
+                id,
+                table,
+                num_samples,
+                timeout_ms,
+            } => {
+                put_u64(&mut b, *id)?;
+                put_string(&mut b, table)?;
+                put_u32(&mut b, *num_samples)?;
+                put_u64(&mut b, *timeout_ms)?;
+                TAG_SAMPLE_REQUEST
+            }
+            Message::MutatePriorities {
+                id,
+                table,
+                updates,
+                deletes,
+            } => {
+                put_u64(&mut b, *id)?;
+                put_string(&mut b, table)?;
+                put_u32(&mut b, updates.len() as u32)?;
+                for (k, p) in updates {
+                    put_u64(&mut b, *k)?;
+                    put_f64(&mut b, *p)?;
+                }
+                put_u32(&mut b, deletes.len() as u32)?;
+                for k in deletes {
+                    put_u64(&mut b, *k)?;
+                }
+                TAG_MUTATE
+            }
+            Message::Reset { id, table } => {
+                put_u64(&mut b, *id)?;
+                put_string(&mut b, table)?;
+                TAG_RESET
+            }
+            Message::InfoRequest { id } => {
+                put_u64(&mut b, *id)?;
+                TAG_INFO_REQUEST
+            }
+            Message::Checkpoint { id } => {
+                put_u64(&mut b, *id)?;
+                TAG_CHECKPOINT
+            }
+            Message::Ack { id, detail } => {
+                put_u64(&mut b, *id)?;
+                put_string(&mut b, detail)?;
+                TAG_ACK
+            }
+            Message::Err { id, code, message } => {
+                put_u64(&mut b, *id)?;
+                put_u8(&mut b, *code)?;
+                put_string(&mut b, message)?;
+                TAG_ERR
+            }
+            Message::SampleData { id, infos, chunks } => {
+                put_u64(&mut b, *id)?;
+                put_u32(&mut b, infos.len() as u32)?;
+                for info in infos {
+                    put_wire_item(&mut b, &info.item)?;
+                    put_f64(&mut b, info.probability)?;
+                    put_u64(&mut b, info.table_size)?;
+                }
+                put_u32(&mut b, chunks.len() as u32)?;
+                for c in chunks {
+                    c.encode(&mut b)?;
+                }
+                TAG_SAMPLE_DATA
+            }
+            Message::Info { id, tables } => {
+                put_u64(&mut b, *id)?;
+                put_u32(&mut b, tables.len() as u32)?;
+                for (name, info) in tables {
+                    put_string(&mut b, name)?;
+                    put_u64(&mut b, info.size as u64)?;
+                    put_u64(&mut b, info.max_size as u64)?;
+                    put_u64(&mut b, info.inserts)?;
+                    put_u64(&mut b, info.samples)?;
+                    put_u64(&mut b, info.rate_limited_inserts)?;
+                    put_u64(&mut b, info.rate_limited_samples)?;
+                    put_f64(&mut b, info.diff)?;
+                }
+                TAG_INFO
+            }
+        };
+        Ok((tag, b))
+    }
+
+    /// Deserialize a message body.
+    pub fn decode_body(tag: u8, body: &[u8]) -> Result<Message> {
+        let mut r = std::io::Cursor::new(body);
+        let msg = match tag {
+            TAG_INSERT_CHUNKS => {
+                let n = get_u32(&mut r)? as usize;
+                if n > 1 << 20 {
+                    return Err(Error::Decode(format!("{n} chunks exceeds limit")));
+                }
+                let chunks = (0..n).map(|_| Chunk::decode(&mut r)).collect::<Result<_>>()?;
+                Message::InsertChunks { chunks }
+            }
+            TAG_CREATE_ITEM => Message::CreateItem {
+                id: get_u64(&mut r)?,
+                item: get_wire_item(&mut r)?,
+                timeout_ms: get_u64(&mut r)?,
+            },
+            TAG_SAMPLE_REQUEST => Message::SampleRequest {
+                id: get_u64(&mut r)?,
+                table: get_string(&mut r)?,
+                num_samples: get_u32(&mut r)?,
+                timeout_ms: get_u64(&mut r)?,
+            },
+            TAG_MUTATE => {
+                let id = get_u64(&mut r)?;
+                let table = get_string(&mut r)?;
+                let nu = get_u32(&mut r)? as usize;
+                if nu > 1 << 24 {
+                    return Err(Error::Decode("too many updates".into()));
+                }
+                let updates = (0..nu)
+                    .map(|_| Ok((get_u64(&mut r)?, get_f64(&mut r)?)))
+                    .collect::<Result<_>>()?;
+                let nd = get_u32(&mut r)? as usize;
+                if nd > 1 << 24 {
+                    return Err(Error::Decode("too many deletes".into()));
+                }
+                let deletes = (0..nd).map(|_| get_u64(&mut r)).collect::<Result<_>>()?;
+                Message::MutatePriorities {
+                    id,
+                    table,
+                    updates,
+                    deletes,
+                }
+            }
+            TAG_RESET => Message::Reset {
+                id: get_u64(&mut r)?,
+                table: get_string(&mut r)?,
+            },
+            TAG_INFO_REQUEST => Message::InfoRequest { id: get_u64(&mut r)? },
+            TAG_CHECKPOINT => Message::Checkpoint { id: get_u64(&mut r)? },
+            TAG_ACK => Message::Ack {
+                id: get_u64(&mut r)?,
+                detail: get_string(&mut r)?,
+            },
+            TAG_ERR => Message::Err {
+                id: get_u64(&mut r)?,
+                code: get_u8(&mut r)?,
+                message: get_string(&mut r)?,
+            },
+            TAG_SAMPLE_DATA => {
+                let id = get_u64(&mut r)?;
+                let ni = get_u32(&mut r)? as usize;
+                if ni > 1 << 20 {
+                    return Err(Error::Decode("too many sample infos".into()));
+                }
+                let infos = (0..ni)
+                    .map(|_| {
+                        Ok(WireSampleInfo {
+                            item: get_wire_item(&mut r)?,
+                            probability: get_f64(&mut r)?,
+                            table_size: get_u64(&mut r)?,
+                        })
+                    })
+                    .collect::<Result<_>>()?;
+                let nc = get_u32(&mut r)? as usize;
+                if nc > 1 << 20 {
+                    return Err(Error::Decode("too many chunks".into()));
+                }
+                let chunks = (0..nc).map(|_| Chunk::decode(&mut r)).collect::<Result<_>>()?;
+                Message::SampleData { id, infos, chunks }
+            }
+            TAG_INFO => {
+                let id = get_u64(&mut r)?;
+                let n = get_u32(&mut r)? as usize;
+                if n > 1 << 16 {
+                    return Err(Error::Decode("too many tables".into()));
+                }
+                let tables = (0..n)
+                    .map(|_| {
+                        let name = get_string(&mut r)?;
+                        Ok((
+                            name,
+                            TableInfo {
+                                size: get_u64(&mut r)? as usize,
+                                max_size: get_u64(&mut r)? as usize,
+                                inserts: get_u64(&mut r)?,
+                                samples: get_u64(&mut r)?,
+                                rate_limited_inserts: get_u64(&mut r)?,
+                                rate_limited_samples: get_u64(&mut r)?,
+                                diff: get_f64(&mut r)?,
+                            },
+                        ))
+                    })
+                    .collect::<Result<_>>()?;
+                Message::Info { id, tables }
+            }
+            t => return Err(Error::Decode(format!("unknown message tag {t}"))),
+        };
+        Ok(msg)
+    }
+
+    /// Zero-clone fast path for sample responses: encodes a `SampleData`
+    /// frame directly from shared chunk handles, avoiding the payload copy
+    /// that `Message::SampleData { chunks: Vec<Chunk> }` would require.
+    /// This is the server's hot sampling path (§5.2).
+    pub fn write_sample_data_frame<W: Write>(
+        w: &mut W,
+        id: u64,
+        infos: &[WireSampleInfo],
+        chunks: &[std::sync::Arc<Chunk>],
+    ) -> Result<()> {
+        let mut b = Vec::with_capacity(
+            64 + chunks.iter().map(|c| c.encoded_len() + 64).sum::<usize>(),
+        );
+        put_u64(&mut b, id)?;
+        put_u32(&mut b, infos.len() as u32)?;
+        for info in infos {
+            put_wire_item(&mut b, &info.item)?;
+            put_f64(&mut b, info.probability)?;
+            put_u64(&mut b, info.table_size)?;
+        }
+        put_u32(&mut b, chunks.len() as u32)?;
+        for c in chunks {
+            c.encode(&mut b)?;
+        }
+        put_u32(w, b.len() as u32)?;
+        put_u8(w, TAG_SAMPLE_DATA)?;
+        w.write_all(&b)?;
+        Ok(())
+    }
+
+    /// Write a full frame (`[u32 len][u8 tag][body]`).
+    pub fn write_frame<W: Write>(&self, w: &mut W) -> Result<()> {
+        let (tag, body) = self.encode_body()?;
+        put_u32(w, body.len() as u32)?;
+        put_u8(w, tag)?;
+        w.write_all(&body)?;
+        Ok(())
+    }
+
+    /// Read one full frame.
+    pub fn read_frame<R: Read>(r: &mut R) -> Result<Message> {
+        let len = get_u32(r)? as usize;
+        if len > MAX_FRAME_LEN {
+            return Err(Error::Decode(format!("frame length {len} exceeds limit")));
+        }
+        let tag = get_u8(r)?;
+        let mut body = vec![0u8; len];
+        r.read_exact(&mut body)?;
+        Message::decode_body(tag, &body)
+    }
+}
+
+/// Encode a table config for config files / diagnostics (used by the
+/// server CLI; not part of the client protocol).
+pub fn encode_table_config<W: Write>(w: &mut W, cfg: &TableConfig) -> Result<()> {
+    put_string(w, &cfg.name)?;
+    let (t, p) = cfg.sampler.encode();
+    put_u8(w, t)?;
+    put_f64(w, p)?;
+    let (t, p) = cfg.remover.encode();
+    put_u8(w, t)?;
+    put_f64(w, p)?;
+    put_u64(w, cfg.max_size as u64)?;
+    put_u32(w, cfg.max_times_sampled)?;
+    let rl = &cfg.rate_limiter;
+    put_f64(w, rl.samples_per_insert)?;
+    put_u64(w, rl.min_size_to_sample)?;
+    put_f64(w, rl.min_diff)?;
+    put_f64(w, rl.max_diff)?;
+    Ok(())
+}
+
+/// Inverse of [`encode_table_config`].
+pub fn decode_table_config<R: Read>(r: &mut R) -> Result<TableConfig> {
+    let name = get_string(r)?;
+    let sampler = SelectorConfig::decode(get_u8(r)?, get_f64(r)?)?;
+    let remover = SelectorConfig::decode(get_u8(r)?, get_f64(r)?)?;
+    let max_size = get_u64(r)? as usize;
+    let max_times_sampled = get_u32(r)?;
+    let rate_limiter = RateLimiterConfig {
+        samples_per_insert: get_f64(r)?,
+        min_size_to_sample: get_u64(r)?,
+        min_diff: get_f64(r)?,
+        max_diff: get_f64(r)?,
+    };
+    Ok(TableConfig {
+        name,
+        sampler,
+        remover,
+        max_size,
+        max_times_sampled,
+        rate_limiter,
+        signature: None,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::chunk::Compression;
+    use crate::core::tensor::Tensor;
+
+    fn mk_chunk(key: u64) -> Chunk {
+        let steps = vec![
+            vec![Tensor::from_f32(&[2], &[1., 2.]).unwrap()],
+            vec![Tensor::from_f32(&[2], &[3., 4.]).unwrap()],
+        ];
+        Chunk::from_steps(key, 0, &steps, Compression::Zstd { level: 1 }).unwrap()
+    }
+
+    fn roundtrip(msg: &Message) -> Message {
+        let mut buf = Vec::new();
+        msg.write_frame(&mut buf).unwrap();
+        Message::read_frame(&mut std::io::Cursor::new(buf)).unwrap()
+    }
+
+    #[test]
+    fn insert_chunks_roundtrip() {
+        let msg = Message::InsertChunks {
+            chunks: vec![mk_chunk(1), mk_chunk(2)],
+        };
+        match roundtrip(&msg) {
+            Message::InsertChunks { chunks } => {
+                assert_eq!(chunks.len(), 2);
+                assert_eq!(chunks[0].key, 1);
+                assert_eq!(
+                    chunks[1].to_steps().unwrap()[1][0].to_f32().unwrap(),
+                    vec![3., 4.]
+                );
+            }
+            other => panic!("wrong message {other:?}"),
+        }
+    }
+
+    #[test]
+    fn create_item_roundtrip() {
+        let msg = Message::CreateItem {
+            id: 42,
+            item: WireItem {
+                key: 7,
+                table: "replay".into(),
+                priority: 1.5,
+                chunk_keys: vec![1, 2, 3],
+                offset: 1,
+                length: 9,
+                times_sampled: 0,
+            },
+            timeout_ms: 500,
+        };
+        match roundtrip(&msg) {
+            Message::CreateItem { id, item, timeout_ms } => {
+                assert_eq!(id, 42);
+                assert_eq!(item.table, "replay");
+                assert_eq!(item.chunk_keys, vec![1, 2, 3]);
+                assert_eq!(timeout_ms, 500);
+            }
+            other => panic!("wrong message {other:?}"),
+        }
+    }
+
+    #[test]
+    fn sample_flow_roundtrip() {
+        let req = Message::SampleRequest {
+            id: 1,
+            table: "t".into(),
+            num_samples: 8,
+            timeout_ms: 100,
+        };
+        assert!(matches!(
+            roundtrip(&req),
+            Message::SampleRequest { num_samples: 8, .. }
+        ));
+
+        let resp = Message::SampleData {
+            id: 1,
+            infos: vec![WireSampleInfo {
+                item: WireItem {
+                    key: 7,
+                    table: "t".into(),
+                    priority: 0.5,
+                    chunk_keys: vec![11],
+                    offset: 0,
+                    length: 2,
+                    times_sampled: 3,
+                },
+                probability: 0.25,
+                table_size: 100,
+            }],
+            chunks: vec![mk_chunk(11)],
+        };
+        match roundtrip(&resp) {
+            Message::SampleData { infos, chunks, .. } => {
+                assert_eq!(infos[0].probability, 0.25);
+                assert_eq!(infos[0].table_size, 100);
+                assert_eq!(chunks[0].key, 11);
+            }
+            other => panic!("wrong message {other:?}"),
+        }
+    }
+
+    #[test]
+    fn mutate_reset_info_ack_err_roundtrip() {
+        let m = Message::MutatePriorities {
+            id: 5,
+            table: "t".into(),
+            updates: vec![(1, 0.5), (2, 9.0)],
+            deletes: vec![3],
+        };
+        assert!(
+            matches!(roundtrip(&m), Message::MutatePriorities { updates, deletes, .. }
+                if updates == vec![(1, 0.5), (2, 9.0)] && deletes == vec![3])
+        );
+        assert!(matches!(
+            roundtrip(&Message::Reset { id: 1, table: "q".into() }),
+            Message::Reset { .. }
+        ));
+        assert!(matches!(
+            roundtrip(&Message::InfoRequest { id: 9 }),
+            Message::InfoRequest { id: 9 }
+        ));
+        assert!(matches!(
+            roundtrip(&Message::Checkpoint { id: 2 }),
+            Message::Checkpoint { id: 2 }
+        ));
+        assert!(matches!(
+            roundtrip(&Message::Ack { id: 3, detail: "ok".into() }),
+            Message::Ack { id: 3, .. }
+        ));
+        match roundtrip(&Message::Err {
+            id: 4,
+            code: code::TIMEOUT,
+            message: "slow".into(),
+        }) {
+            Message::Err { code: c, message, .. } => {
+                assert_eq!(c, code::TIMEOUT);
+                assert!(error_from_code(c, message).is_timeout());
+            }
+            other => panic!("wrong message {other:?}"),
+        }
+    }
+
+    #[test]
+    fn info_roundtrip() {
+        let msg = Message::Info {
+            id: 1,
+            tables: vec![(
+                "t".into(),
+                TableInfo {
+                    size: 5,
+                    max_size: 10,
+                    inserts: 100,
+                    samples: 200,
+                    rate_limited_inserts: 3,
+                    rate_limited_samples: 4,
+                    diff: -2.5,
+                },
+            )],
+        };
+        match roundtrip(&msg) {
+            Message::Info { tables, .. } => {
+                assert_eq!(tables[0].0, "t");
+                assert_eq!(tables[0].1.samples, 200);
+                assert_eq!(tables[0].1.diff, -2.5);
+            }
+            other => panic!("wrong message {other:?}"),
+        }
+    }
+
+    #[test]
+    fn unknown_tag_rejected() {
+        assert!(Message::decode_body(200, &[]).is_err());
+    }
+
+    #[test]
+    fn oversized_frame_rejected() {
+        let mut buf = Vec::new();
+        put_u32(&mut buf, u32::MAX).unwrap();
+        put_u8(&mut buf, TAG_ACK).unwrap();
+        assert!(Message::read_frame(&mut std::io::Cursor::new(buf)).is_err());
+    }
+
+    #[test]
+    fn table_config_codec_roundtrip() {
+        let cfg = TableConfig::prioritized_replay("per", 1000, 0.6, 4.0, 100, 40.0).unwrap();
+        let mut buf = Vec::new();
+        encode_table_config(&mut buf, &cfg).unwrap();
+        let back = decode_table_config(&mut std::io::Cursor::new(buf)).unwrap();
+        assert_eq!(back.name, "per");
+        assert_eq!(back.sampler, SelectorConfig::Prioritized { exponent: 0.6 });
+        assert_eq!(back.max_size, 1000);
+        assert_eq!(back.rate_limiter, cfg.rate_limiter);
+    }
+
+    #[test]
+    fn wire_roundtrip_property() {
+        crate::util::proptest::forall("wire item roundtrip", |rng| {
+            let item = WireItem {
+                key: rng.next_u64(),
+                table: format!("table_{}", rng.gen_range(100)),
+                priority: rng.gen_f64() * 100.0,
+                chunk_keys: (0..rng.gen_range(10)).map(|_| rng.next_u64()).collect(),
+                offset: rng.gen_range(1000),
+                length: rng.gen_range(1000) + 1,
+                times_sampled: rng.gen_range(100) as u32,
+            };
+            let mut buf = Vec::new();
+            put_wire_item(&mut buf, &item).unwrap();
+            let back = get_wire_item(&mut std::io::Cursor::new(buf)).unwrap();
+            if back == item {
+                Ok(())
+            } else {
+                Err(format!("{back:?} != {item:?}"))
+            }
+        });
+    }
+}

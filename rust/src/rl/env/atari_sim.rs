@@ -1,0 +1,177 @@
+//! AtariSim: a procedural frame generator with Atari-like inter-frame
+//! redundancy (DESIGN.md §2 substitution for real Atari).
+//!
+//! Frames are 84×84 u8: a static textured background plus a handful of
+//! moving "sprites". Consecutive frames differ only where sprites moved —
+//! exactly the redundancy structure Reverb's chunk compression exploits
+//! ("in Atari we observe compression rates of up to 90% in sequences of 40
+//! frames", §5). The sprite count and speed tune the redundancy level.
+
+use crate::util::rng::Pcg32;
+
+pub const FRAME_W: usize = 84;
+pub const FRAME_H: usize = 84;
+
+struct Sprite {
+    x: f32,
+    y: f32,
+    dx: f32,
+    dy: f32,
+    size: usize,
+    tone: u8,
+}
+
+/// Procedural frame source. Not an [`super::Environment`] (observations are
+/// frames, not vectors); used directly by compression tests/benches via
+/// [`AtariSim::next_frame`].
+pub struct AtariSim {
+    background: Vec<u8>,
+    sprites: Vec<Sprite>,
+    frame: Vec<u8>,
+    rng: Pcg32,
+}
+
+impl AtariSim {
+    /// `num_sprites` controls how much changes per frame (0 = static).
+    pub fn new(seed: u64, num_sprites: usize) -> Self {
+        let mut rng = Pcg32::new(seed, 0xA7A21);
+        // Textured but compressible background: vertical bands + noise dots.
+        let mut background = vec![0u8; FRAME_W * FRAME_H];
+        for y in 0..FRAME_H {
+            for x in 0..FRAME_W {
+                background[y * FRAME_W + x] = ((x / 12) * 24) as u8;
+            }
+        }
+        for _ in 0..120 {
+            let i = rng.gen_range((FRAME_W * FRAME_H) as u64) as usize;
+            background[i] = background[i].wrapping_add(40);
+        }
+        let sprites = (0..num_sprites)
+            .map(|i| Sprite {
+                x: rng.gen_f32() * (FRAME_W - 8) as f32,
+                y: rng.gen_f32() * (FRAME_H - 8) as f32,
+                dx: 0.5 + rng.gen_f32() * 1.5,
+                dy: 0.3 + rng.gen_f32() * 1.2,
+                size: 3 + (i % 4),
+                tone: 150 + (i * 13 % 100) as u8,
+            })
+            .collect();
+        let mut sim = AtariSim {
+            background,
+            sprites,
+            frame: vec![0u8; FRAME_W * FRAME_H],
+            rng,
+        };
+        sim.render();
+        sim
+    }
+
+    fn render(&mut self) {
+        self.frame.copy_from_slice(&self.background);
+        for s in &self.sprites {
+            let x0 = s.x as usize;
+            let y0 = s.y as usize;
+            for dy in 0..s.size {
+                for dx in 0..s.size {
+                    let (x, y) = (x0 + dx, y0 + dy);
+                    if x < FRAME_W && y < FRAME_H {
+                        self.frame[y * FRAME_W + x] = s.tone;
+                    }
+                }
+            }
+        }
+    }
+
+    /// Advance the simulation and return the next frame (row-major u8).
+    pub fn next_frame(&mut self) -> &[u8] {
+        for s in &mut self.sprites {
+            s.x += s.dx;
+            s.y += s.dy;
+            if s.x <= 0.0 || s.x >= (FRAME_W - s.size) as f32 {
+                s.dx = -s.dx;
+                s.x = s.x.clamp(0.0, (FRAME_W - s.size) as f32);
+            }
+            if s.y <= 0.0 || s.y >= (FRAME_H - s.size) as f32 {
+                s.dy = -s.dy;
+                s.y = s.y.clamp(0.0, (FRAME_H - s.size) as f32);
+            }
+        }
+        self.render();
+        &self.frame
+    }
+
+    /// A fully random (incompressible) frame — the §5 benchmark control.
+    pub fn random_frame(&mut self) -> Vec<u8> {
+        let mut f = vec![0u8; FRAME_W * FRAME_H];
+        self.rng.fill_bytes(&mut f);
+        f
+    }
+
+    pub fn frame_len(&self) -> usize {
+        FRAME_W * FRAME_H
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::chunk::{Chunk, Compression};
+    use crate::core::tensor::Tensor;
+
+    #[test]
+    fn consecutive_frames_are_mostly_identical() {
+        let mut sim = AtariSim::new(1, 4);
+        let a = sim.next_frame().to_vec();
+        let b = sim.next_frame().to_vec();
+        let changed = a.iter().zip(&b).filter(|(x, y)| x != y).count();
+        assert!(changed > 0, "sprites must move");
+        assert!(
+            (changed as f64) < a.len() as f64 * 0.02,
+            "only sprite pixels change: {changed}/{}",
+            a.len()
+        );
+    }
+
+    #[test]
+    fn forty_frame_chunk_compresses_like_the_paper_claims() {
+        // §5: "compression rates of up to 90% in sequences of 40 frames".
+        let mut sim = AtariSim::new(2, 4);
+        let steps: Vec<Vec<Tensor>> = (0..40)
+            .map(|_| vec![Tensor::from_u8(&[FRAME_H, FRAME_W], &sim.next_frame().to_vec()).unwrap()])
+            .collect();
+        let chunk =
+            Chunk::from_steps(1, 0, &steps, Compression::DeltaZstd { level: 1 }).unwrap();
+        assert!(
+            chunk.compression_ratio() > 0.9,
+            "ratio {}",
+            chunk.compression_ratio()
+        );
+    }
+
+    #[test]
+    fn random_frames_do_not_compress() {
+        let mut sim = AtariSim::new(3, 4);
+        let steps: Vec<Vec<Tensor>> = (0..40)
+            .map(|_| vec![Tensor::from_u8(&[FRAME_H, FRAME_W], &sim.random_frame()).unwrap()])
+            .collect();
+        let chunk =
+            Chunk::from_steps(1, 0, &steps, Compression::DeltaZstd { level: 1 }).unwrap();
+        assert!(
+            chunk.compression_ratio() < 0.05,
+            "ratio {}",
+            chunk.compression_ratio()
+        );
+    }
+
+    #[test]
+    fn sprites_stay_in_bounds() {
+        let mut sim = AtariSim::new(4, 8);
+        for _ in 0..500 {
+            sim.next_frame();
+        }
+        for s in &sim.sprites {
+            assert!(s.x >= 0.0 && s.x <= FRAME_W as f32);
+            assert!(s.y >= 0.0 && s.y <= FRAME_H as f32);
+        }
+    }
+}

@@ -1,0 +1,156 @@
+//! CartPole-v1 dynamics (Barto, Sutton & Anderson 1983; OpenAI Gym
+//! constants): the classic-control workload for the end-to-end DQN driver.
+
+use super::{Environment, StepResult};
+use crate::util::rng::Pcg32;
+
+const GRAVITY: f32 = 9.8;
+const MASS_CART: f32 = 1.0;
+const MASS_POLE: f32 = 0.1;
+const TOTAL_MASS: f32 = MASS_CART + MASS_POLE;
+const POLE_HALF_LENGTH: f32 = 0.5;
+const POLE_MASS_LENGTH: f32 = MASS_POLE * POLE_HALF_LENGTH;
+const FORCE_MAG: f32 = 10.0;
+const TAU: f32 = 0.02;
+const THETA_LIMIT: f32 = 12.0 * std::f32::consts::PI / 180.0;
+const X_LIMIT: f32 = 2.4;
+const MAX_EPISODE_STEPS: u32 = 500;
+
+/// CartPole: 4-dim observation `[x, x_dot, theta, theta_dot]`, 2 actions
+/// (push left / right), +1 reward per step, terminates on |x| > 2.4,
+/// |theta| > 12° or after 500 steps.
+pub struct CartPole {
+    state: [f32; 4],
+    steps: u32,
+    rng: Pcg32,
+}
+
+impl CartPole {
+    pub fn new(seed: u64) -> Self {
+        let mut env = CartPole {
+            state: [0.0; 4],
+            steps: 0,
+            rng: Pcg32::new(seed, 0xCA47),
+        };
+        env.reset();
+        env
+    }
+
+    fn observe(&self) -> Vec<f32> {
+        self.state.to_vec()
+    }
+}
+
+impl Environment for CartPole {
+    fn observation_dim(&self) -> usize {
+        4
+    }
+
+    fn num_actions(&self) -> usize {
+        2
+    }
+
+    fn reset(&mut self) -> Vec<f32> {
+        for s in &mut self.state {
+            *s = self.rng.gen_f32() * 0.1 - 0.05;
+        }
+        self.steps = 0;
+        self.observe()
+    }
+
+    fn step(&mut self, action: usize) -> StepResult {
+        let [x, x_dot, theta, theta_dot] = self.state;
+        let force = if action == 1 { FORCE_MAG } else { -FORCE_MAG };
+        let cos = theta.cos();
+        let sin = theta.sin();
+
+        let temp = (force + POLE_MASS_LENGTH * theta_dot * theta_dot * sin) / TOTAL_MASS;
+        let theta_acc = (GRAVITY * sin - cos * temp)
+            / (POLE_HALF_LENGTH * (4.0 / 3.0 - MASS_POLE * cos * cos / TOTAL_MASS));
+        let x_acc = temp - POLE_MASS_LENGTH * theta_acc * cos / TOTAL_MASS;
+
+        // Explicit Euler, matching Gym.
+        self.state = [
+            x + TAU * x_dot,
+            x_dot + TAU * x_acc,
+            theta + TAU * theta_dot,
+            theta_dot + TAU * theta_acc,
+        ];
+        self.steps += 1;
+
+        let fell = self.state[0].abs() > X_LIMIT || self.state[2].abs() > THETA_LIMIT;
+        let done = fell || self.steps >= MAX_EPISODE_STEPS;
+        StepResult {
+            observation: self.observe(),
+            reward: 1.0,
+            done,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn reset_is_near_zero() {
+        let mut env = CartPole::new(7);
+        let obs = env.reset();
+        for v in obs {
+            assert!(v.abs() <= 0.05);
+        }
+    }
+
+    #[test]
+    fn constant_action_terminates_quickly() {
+        // Always pushing one way topples the pole well before 500 steps.
+        let mut env = CartPole::new(1);
+        env.reset();
+        let mut steps = 0;
+        loop {
+            steps += 1;
+            if env.step(1).done {
+                break;
+            }
+            assert!(steps < 500, "should topple early");
+        }
+        assert!(steps < 200, "toppled after {steps} steps");
+    }
+
+    #[test]
+    fn episode_caps_at_500() {
+        // An (unrealistic) oracle alternating policy can survive a while;
+        // we just check the step cap path by driving the state manually.
+        let mut env = CartPole::new(3);
+        env.reset();
+        let mut done_at = None;
+        for t in 0..600 {
+            // Simple balance heuristic: push in the direction the pole leans.
+            let action = if env.state[2] > 0.0 { 1 } else { 0 };
+            if env.step(action).done {
+                done_at = Some(t + 1);
+                break;
+            }
+        }
+        let done_at = done_at.expect("episode must end");
+        assert!(done_at <= 500);
+    }
+
+    #[test]
+    fn seeded_determinism() {
+        let mut a = CartPole::new(42);
+        let mut b = CartPole::new(42);
+        a.reset();
+        b.reset();
+        for i in 0..100 {
+            let ra = a.step(i % 2);
+            let rb = b.step(i % 2);
+            assert_eq!(ra.observation, rb.observation);
+            assert_eq!(ra.done, rb.done);
+            if ra.done {
+                a.reset();
+                b.reset();
+            }
+        }
+    }
+}

@@ -1,0 +1,62 @@
+//! Environments: the workload substrate for the end-to-end experiments.
+//!
+//! The paper's evaluation generates experience from RL environments (Atari
+//! in the compression discussion); we implement CartPole (the e2e DQN
+//! driver), a procedural Atari-like frame generator (compression
+//! benchmarks), and a small GridWorld (deterministic tests).
+
+mod atari_sim;
+mod cartpole;
+mod gridworld;
+
+pub use atari_sim::AtariSim;
+pub use cartpole::CartPole;
+pub use gridworld::GridWorld;
+
+/// One environment step result.
+#[derive(Clone, Debug)]
+pub struct StepResult {
+    pub observation: Vec<f32>,
+    pub reward: f32,
+    /// True when the episode terminated (discount 0 at this transition).
+    pub done: bool,
+}
+
+/// A discrete-action environment.
+pub trait Environment: Send {
+    /// Observation vector length.
+    fn observation_dim(&self) -> usize;
+    /// Number of discrete actions.
+    fn num_actions(&self) -> usize;
+    /// Reset to the start of a new episode, returning the first observation.
+    fn reset(&mut self) -> Vec<f32>;
+    /// Apply an action.
+    fn step(&mut self, action: usize) -> StepResult;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn exercise(env: &mut dyn Environment) {
+        let obs = env.reset();
+        assert_eq!(obs.len(), env.observation_dim());
+        let mut terminated = false;
+        for t in 0..1000 {
+            let r = env.step(t % env.num_actions());
+            assert_eq!(r.observation.len(), env.observation_dim());
+            assert!(r.reward.is_finite());
+            if r.done {
+                terminated = true;
+                env.reset();
+            }
+        }
+        assert!(terminated, "no episode ever terminated in 1000 steps");
+    }
+
+    #[test]
+    fn all_environments_satisfy_contract() {
+        exercise(&mut CartPole::new(1));
+        exercise(&mut GridWorld::new(5, 3));
+    }
+}

@@ -1,0 +1,288 @@
+//! RL substrate: environments, n-step transition accumulation, and the
+//! glue between environment steps, Reverb items, and learner batches.
+
+pub mod env;
+
+use crate::client::Sample;
+use crate::core::tensor::Tensor;
+use crate::error::{Error, Result};
+use crate::util::rng::Pcg32;
+use std::collections::VecDeque;
+
+/// A single transition `(s, a, r, d, s')` with an n-step accumulated
+/// reward/discount (Appendix A.1: "each item is a n-step transition which
+/// accumulates the reward and the discount for n steps").
+#[derive(Clone, Debug, PartialEq)]
+pub struct Transition {
+    pub observation: Vec<f32>,
+    pub action: i32,
+    /// Σ_{k<n} γ^k r_{t+k}
+    pub reward: f32,
+    /// γ^n, or 0 if the episode terminated within the window.
+    pub discount: f32,
+    pub next_observation: Vec<f32>,
+}
+
+impl Transition {
+    /// Reverb step layout: `[obs f32[O], action i32[], reward f32[],
+    /// discount f32[], next_obs f32[O]]`.
+    pub fn to_step(&self) -> Result<Vec<Tensor>> {
+        Ok(vec![
+            Tensor::from_f32(&[self.observation.len()], &self.observation)?,
+            Tensor::from_i32(&[], &[self.action])?,
+            Tensor::from_f32(&[], &[self.reward])?,
+            Tensor::from_f32(&[], &[self.discount])?,
+            Tensor::from_f32(&[self.next_observation.len()], &self.next_observation)?,
+        ])
+    }
+
+    /// Inverse of [`Transition::to_step`] from a sampled item's fields
+    /// (leading time axis of length 1).
+    pub fn from_sample(sample: &Sample) -> Result<Transition> {
+        if sample.data.len() != 5 {
+            return Err(Error::SignatureMismatch(format!(
+                "transition sample must have 5 fields, got {}",
+                sample.data.len()
+            )));
+        }
+        let row = |t: &Tensor| -> Result<Vec<f32>> {
+            Ok(t.slice_rows(0, 1)?.to_f32()?)
+        };
+        let action = sample.data[1].slice_rows(0, 1)?.to_i32()?[0];
+        Ok(Transition {
+            observation: row(&sample.data[0])?,
+            action,
+            reward: row(&sample.data[2])?[0],
+            discount: row(&sample.data[3])?[0],
+            next_observation: row(&sample.data[4])?,
+        })
+    }
+}
+
+/// Accumulates environment steps into n-step transitions (Acme-style).
+pub struct NStepAccumulator {
+    n: usize,
+    gamma: f32,
+    /// Pending (obs, action, reward) triples awaiting their n-step window.
+    window: VecDeque<(Vec<f32>, i32, f32)>,
+}
+
+impl NStepAccumulator {
+    pub fn new(n: usize, gamma: f32) -> Self {
+        assert!(n >= 1);
+        NStepAccumulator {
+            n,
+            gamma,
+            window: VecDeque::new(),
+        }
+    }
+
+    /// Observe one environment step: the action taken from `obs`, the
+    /// reward received, the next observation, and termination. Returns any
+    /// completed n-step transitions (one per call in steady state; the
+    /// whole tail at termination).
+    pub fn push(
+        &mut self,
+        obs: Vec<f32>,
+        action: i32,
+        reward: f32,
+        next_obs: &[f32],
+        done: bool,
+    ) -> Vec<Transition> {
+        self.window.push_back((obs, action, reward));
+        let mut out = Vec::new();
+        if done {
+            // Every pending window bootstraps at a terminal state:
+            // discount 0 for all of them.
+            while !self.window.is_empty() {
+                out.push(self.emit_terminal(next_obs));
+            }
+        } else if self.window.len() == self.n {
+            out.push(self.emit(next_obs, false));
+        }
+        out
+    }
+
+    fn emit(&mut self, next_obs: &[f32], terminal: bool) -> Transition {
+        let (obs, action, _) = self.window.front().cloned().expect("non-empty");
+        let mut reward = 0.0;
+        let mut g = 1.0;
+        for (_, _, r) in self.window.iter() {
+            reward += g * r;
+            g *= self.gamma;
+        }
+        self.window.pop_front();
+        Transition {
+            observation: obs,
+            action,
+            reward,
+            discount: if terminal { 0.0 } else { g },
+            next_observation: next_obs.to_vec(),
+        }
+    }
+
+    fn emit_terminal(&mut self, next_obs: &[f32]) -> Transition {
+        let mut t = self.emit(next_obs, false);
+        t.discount = 0.0;
+        t
+    }
+
+    /// Discard any buffered steps (call on environment reset without
+    /// termination).
+    pub fn reset(&mut self) {
+        self.window.clear();
+    }
+}
+
+/// Epsilon-greedy action selection over a Q-value row.
+pub fn epsilon_greedy(q_values: &[f32], epsilon: f64, rng: &mut Pcg32) -> usize {
+    if rng.gen_bool(epsilon) {
+        rng.gen_range(q_values.len() as u64) as usize
+    } else {
+        argmax(q_values)
+    }
+}
+
+/// First-index argmax (ties toward lower index, like the TD kernel).
+pub fn argmax(xs: &[f32]) -> usize {
+    let mut best = 0;
+    for (i, &x) in xs.iter().enumerate() {
+        if x > xs[best] {
+            best = i;
+        }
+    }
+    best
+}
+
+/// Importance weights for PER (Schaul et al.): `w_i = (N · P(i))^-beta`,
+/// normalized by the max weight in the batch.
+pub fn importance_weights(samples: &[Sample], beta: f64) -> Vec<f32> {
+    let raw: Vec<f64> = samples
+        .iter()
+        .map(|s| {
+            let n = s.table_size.max(1) as f64;
+            let p = s.probability.max(1e-12);
+            (n * p).powf(-beta)
+        })
+        .collect();
+    let max = raw.iter().cloned().fold(f64::MIN, f64::max).max(1e-12);
+    raw.iter().map(|w| (w / max) as f32).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn one_step_accumulator_passes_through() {
+        let mut acc = NStepAccumulator::new(1, 0.9);
+        let out = acc.push(vec![0.0], 1, 2.0, &[1.0], false);
+        assert_eq!(out.len(), 1);
+        let t = &out[0];
+        assert_eq!(t.observation, vec![0.0]);
+        assert_eq!(t.reward, 2.0);
+        assert!((t.discount - 0.9).abs() < 1e-6);
+        assert_eq!(t.next_observation, vec![1.0]);
+    }
+
+    #[test]
+    fn n_step_reward_accumulation() {
+        let mut acc = NStepAccumulator::new(3, 0.5);
+        assert!(acc.push(vec![0.], 0, 1.0, &[1.], false).is_empty());
+        assert!(acc.push(vec![1.], 0, 2.0, &[2.], false).is_empty());
+        let out = acc.push(vec![2.], 0, 4.0, &[3.], false);
+        assert_eq!(out.len(), 1);
+        let t = &out[0];
+        // r = 1 + 0.5*2 + 0.25*4 = 3.0; discount = 0.5^3.
+        assert!((t.reward - 3.0).abs() < 1e-6);
+        assert!((t.discount - 0.125).abs() < 1e-6);
+        assert_eq!(t.observation, vec![0.]);
+        assert_eq!(t.next_observation, vec![3.]);
+    }
+
+    #[test]
+    fn termination_flushes_tail_with_zero_discount() {
+        let mut acc = NStepAccumulator::new(3, 0.9);
+        acc.push(vec![0.], 0, 1.0, &[1.], false);
+        let out = acc.push(vec![1.], 0, 1.0, &[2.], true);
+        assert_eq!(out.len(), 2, "both pending windows flush");
+        for t in &out {
+            assert_eq!(t.discount, 0.0);
+            assert_eq!(t.next_observation, vec![2.]);
+        }
+        // r for the first = 1 + 0.9*1.
+        assert!((out[0].reward - 1.9).abs() < 1e-6);
+        assert!((out[1].reward - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn transition_step_roundtrip() {
+        let t = Transition {
+            observation: vec![1.0, 2.0],
+            action: 1,
+            reward: 0.5,
+            discount: 0.9,
+            next_observation: vec![3.0, 4.0],
+        };
+        let step = t.to_step().unwrap();
+        assert_eq!(step.len(), 5);
+        assert_eq!(step[0].to_f32().unwrap(), vec![1.0, 2.0]);
+        assert_eq!(step[1].to_i32().unwrap(), vec![1]);
+
+        // Emulate a sampled item of length 1 (stacked time axis).
+        let stacked: Vec<Tensor> = step.iter().map(|f| Tensor::stack(&[f.clone()]).unwrap()).collect();
+        let sample = Sample {
+            key: 1,
+            table: "t".into(),
+            priority: 1.0,
+            times_sampled: 1,
+            probability: 0.5,
+            table_size: 2,
+            data: stacked,
+        };
+        assert_eq!(Transition::from_sample(&sample).unwrap(), t);
+    }
+
+    #[test]
+    fn epsilon_greedy_limits() {
+        let q = [0.1, 0.9, 0.3];
+        let mut rng = Pcg32::new(1, 1);
+        for _ in 0..100 {
+            assert_eq!(epsilon_greedy(&q, 0.0, &mut rng), 1);
+        }
+        let mut counts = [0usize; 3];
+        for _ in 0..30_000 {
+            counts[epsilon_greedy(&q, 1.0, &mut rng)] += 1;
+        }
+        for c in counts {
+            assert!((c as f64 - 10_000.0).abs() < 600.0, "{counts:?}");
+        }
+    }
+
+    #[test]
+    fn argmax_tie_breaks_low() {
+        assert_eq!(argmax(&[1.0, 1.0, 0.5]), 0);
+        assert_eq!(argmax(&[0.0]), 0);
+    }
+
+    #[test]
+    fn importance_weights_normalized() {
+        let mk = |prob: f64, n: u64| Sample {
+            key: 1,
+            table: "t".into(),
+            priority: 1.0,
+            times_sampled: 0,
+            probability: prob,
+            table_size: n,
+            data: vec![],
+        };
+        let samples = vec![mk(0.5, 100), mk(0.01, 100)];
+        let w = importance_weights(&samples, 0.6);
+        // Rarer sample gets weight 1.0 (the max); common one less.
+        assert!((w[1] - 1.0).abs() < 1e-6);
+        assert!(w[0] < 1.0 && w[0] > 0.0);
+        // beta = 0 → all ones.
+        let w0 = importance_weights(&samples, 0.0);
+        assert!(w0.iter().all(|&x| (x - 1.0).abs() < 1e-6));
+    }
+}

@@ -1,0 +1,462 @@
+//! The learner harness: owns the AOT executables plus the optimizer state,
+//! and turns Reverb samples into train steps.
+//!
+//! All numeric state (online/target params, Adam moments, step counter)
+//! lives in Rust [`Tensor`]s; every train step round-trips them through the
+//! AOT `qnet_train` executable. Target-network sync is a host-side copy.
+
+use super::Engine;
+use crate::core::tensor::{DType, Tensor};
+use crate::error::{Error, Result};
+use crate::util::rng::Pcg32;
+use std::path::{Path, PathBuf};
+
+/// Parsed `artifacts/meta.txt` manifest (written by `python/compile/aot.py`).
+#[derive(Clone, Debug)]
+pub struct QNetMeta {
+    pub obs_dim: usize,
+    pub num_actions: usize,
+    pub hidden: Vec<usize>,
+    pub batch: usize,
+    pub infer_batch: usize,
+    pub gamma: f64,
+    pub lr: f64,
+    /// [(d_in, d_out)] per layer.
+    pub layers: Vec<(usize, usize)>,
+}
+
+impl QNetMeta {
+    pub fn load(path: &Path) -> Result<QNetMeta> {
+        let text = std::fs::read_to_string(path)?;
+        let mut kv = std::collections::HashMap::new();
+        for line in text.lines() {
+            if let Some((k, v)) = line.split_once(' ') {
+                kv.insert(k.to_string(), v.to_string());
+            }
+        }
+        let get = |k: &str| -> Result<String> {
+            kv.get(k)
+                .cloned()
+                .ok_or_else(|| Error::Decode(format!("meta.txt missing key {k}")))
+        };
+        let parse_usize = |k: &str| -> Result<usize> {
+            get(k)?
+                .parse()
+                .map_err(|e| Error::Decode(format!("meta.txt bad {k}: {e}")))
+        };
+        let hidden = get("hidden")?
+            .split_whitespace()
+            .map(|s| s.parse::<usize>())
+            .collect::<std::result::Result<Vec<_>, _>>()
+            .map_err(|e| Error::Decode(format!("meta.txt bad hidden: {e}")))?;
+        let mut layers = Vec::new();
+        for i in 0.. {
+            let Some(v) = kv.get(&format!("layer{i}")) else {
+                break;
+            };
+            let mut it = v.split_whitespace();
+            let d_in = it.next().and_then(|s| s.parse().ok());
+            let d_out = it.next().and_then(|s| s.parse().ok());
+            match (d_in, d_out) {
+                (Some(a), Some(b)) => layers.push((a, b)),
+                _ => return Err(Error::Decode(format!("meta.txt bad layer{i}: {v}"))),
+            }
+        }
+        if layers.is_empty() {
+            return Err(Error::Decode("meta.txt has no layers".into()));
+        }
+        Ok(QNetMeta {
+            obs_dim: parse_usize("obs_dim")?,
+            num_actions: parse_usize("num_actions")?,
+            hidden,
+            batch: parse_usize("batch")?,
+            infer_batch: parse_usize("infer_batch")?,
+            gamma: get("gamma")?
+                .parse()
+                .map_err(|e| Error::Decode(format!("meta.txt bad gamma: {e}")))?,
+            lr: get("lr")?
+                .parse()
+                .map_err(|e| Error::Decode(format!("meta.txt bad lr: {e}")))?,
+            layers,
+        })
+    }
+
+    /// Number of parameter tensors (`2 × layers`: weight + bias each).
+    pub fn num_param_tensors(&self) -> usize {
+        2 * self.layers.len()
+    }
+}
+
+/// He-initialized flat parameter list [w0, b0, w1, b1, ...] matching the
+/// python-side `model.init_params`.
+pub fn init_params(meta: &QNetMeta, rng: &mut Pcg32) -> Vec<Tensor> {
+    let mut out = Vec::with_capacity(meta.num_param_tensors());
+    for &(d_in, d_out) in &meta.layers {
+        let scale = (2.0 / d_in as f64).sqrt();
+        let w: Vec<f32> = (0..d_in * d_out)
+            .map(|_| (rng.gen_normal() * scale) as f32)
+            .collect();
+        out.push(Tensor::from_f32(&[d_in, d_out], &w).expect("shape matches"));
+        out.push(Tensor::zeros(DType::F32, &[d_out]));
+    }
+    out
+}
+
+/// Zeroed Adam-moment tensors with the same shapes as `params`.
+fn zeros_like(params: &[Tensor]) -> Vec<Tensor> {
+    params
+        .iter()
+        .map(|p| Tensor::zeros(p.dtype(), p.shape()))
+        .collect()
+}
+
+/// A training batch in the AOT calling convention.
+#[derive(Clone, Debug)]
+pub struct TrainBatch {
+    pub obs: Tensor,       // [B, O] f32
+    pub actions: Tensor,   // [B] i32
+    pub rewards: Tensor,   // [B] f32
+    pub discounts: Tensor, // [B] f32
+    pub next_obs: Tensor,  // [B, O] f32
+    pub weights: Tensor,   // [B] f32
+}
+
+/// Result of one train step.
+#[derive(Clone, Debug)]
+pub struct TrainOutput {
+    pub step: u64,
+    pub loss: f32,
+    /// |TD error| per batch element — fed back as Reverb priorities.
+    pub priorities: Vec<f32>,
+}
+
+/// Learner configuration.
+#[derive(Clone, Debug)]
+pub struct LearnerConfig {
+    pub artifacts_dir: PathBuf,
+    /// Sync the target network every N train steps.
+    pub target_update_period: u64,
+    pub seed: u64,
+}
+
+impl Default for LearnerConfig {
+    fn default() -> Self {
+        LearnerConfig {
+            artifacts_dir: default_artifacts_dir(),
+            target_update_period: 100,
+            seed: 17,
+        }
+    }
+}
+
+/// Locate `artifacts/` relative to the crate root (works from tests,
+/// examples, and benches).
+pub fn default_artifacts_dir() -> PathBuf {
+    let mut dir = PathBuf::from(env!("CARGO_MANIFEST_DIR"));
+    dir.push("artifacts");
+    dir
+}
+
+/// A double-DQN learner executing AOT HLO through PJRT.
+pub struct Learner {
+    engine: Engine,
+    meta: QNetMeta,
+    online: Vec<Tensor>,
+    target: Vec<Tensor>,
+    m: Vec<Tensor>,
+    v: Vec<Tensor>,
+    step: Tensor,
+    steps_done: u64,
+    config: LearnerConfig,
+}
+
+impl Learner {
+    /// Load artifacts and initialize parameters.
+    pub fn new(config: LearnerConfig) -> Result<Learner> {
+        let meta = QNetMeta::load(&config.artifacts_dir.join("meta.txt"))?;
+        let mut engine = Engine::cpu()?;
+        engine.load_hlo("infer", &config.artifacts_dir.join("qnet_infer.hlo.txt"))?;
+        engine.load_hlo("train", &config.artifacts_dir.join("qnet_train.hlo.txt"))?;
+        let mut rng = Pcg32::new(config.seed, 0x51EE9);
+        let online = init_params(&meta, &mut rng);
+        let target = online.clone();
+        let m = zeros_like(&online);
+        let v = zeros_like(&online);
+        Ok(Learner {
+            engine,
+            meta,
+            online,
+            target,
+            m,
+            v,
+            step: Tensor::scalar_f32(0.0),
+            steps_done: 0,
+            config,
+        })
+    }
+
+    pub fn meta(&self) -> &QNetMeta {
+        &self.meta
+    }
+
+    /// Online parameters (e.g. to publish into a variable-container table).
+    pub fn params(&self) -> &[Tensor] {
+        &self.online
+    }
+
+    /// Replace online parameters (e.g. restored from a checkpoint).
+    pub fn set_params(&mut self, params: Vec<Tensor>) -> Result<()> {
+        if params.len() != self.online.len() {
+            return Err(Error::InvalidArgument(format!(
+                "expected {} param tensors, got {}",
+                self.online.len(),
+                params.len()
+            )));
+        }
+        self.online = params;
+        Ok(())
+    }
+
+    /// Q-values for a batch of observations of shape `[infer_batch, O]`.
+    pub fn q_values(&self, obs: &Tensor) -> Result<Tensor> {
+        let mut inputs = self.online.clone();
+        inputs.push(obs.clone());
+        let mut out = self.engine.execute("infer", &inputs)?;
+        Ok(out.remove(0))
+    }
+
+    /// Run one AOT train step; updates parameters, Adam state, and the
+    /// target network (every `target_update_period` steps).
+    pub fn train_step(&mut self, batch: &TrainBatch) -> Result<TrainOutput> {
+        let p = self.meta.num_param_tensors();
+        let mut inputs = Vec::with_capacity(4 * p + 7);
+        inputs.extend(self.online.iter().cloned());
+        inputs.extend(self.target.iter().cloned());
+        inputs.extend(self.m.iter().cloned());
+        inputs.extend(self.v.iter().cloned());
+        inputs.push(self.step.clone());
+        inputs.push(batch.obs.clone());
+        inputs.push(batch.actions.clone());
+        inputs.push(batch.rewards.clone());
+        inputs.push(batch.discounts.clone());
+        inputs.push(batch.next_obs.clone());
+        inputs.push(batch.weights.clone());
+
+        let mut out = self.engine.execute("train", &inputs)?;
+        if out.len() != 3 * p + 3 {
+            return Err(Error::Runtime(format!(
+                "train step returned {} outputs, expected {}",
+                out.len(),
+                3 * p + 3
+            )));
+        }
+        let priorities = out.pop().expect("priorities").to_f32()?;
+        let loss = out.pop().expect("loss").to_f32()?[0];
+        let step = out.pop().expect("step");
+        let v: Vec<Tensor> = out.drain(2 * p..).collect();
+        let m: Vec<Tensor> = out.drain(p..).collect();
+        let online: Vec<Tensor> = out;
+        self.online = online;
+        self.m = m;
+        self.v = v;
+        self.step = step;
+        self.steps_done += 1;
+        if self.steps_done % self.config.target_update_period == 0 {
+            self.target = self.online.clone();
+        }
+        Ok(TrainOutput {
+            step: self.steps_done,
+            loss,
+            priorities,
+        })
+    }
+
+    /// Build a [`TrainBatch`] from raw columns (validating shapes against
+    /// the AOT batch size).
+    pub fn make_batch(
+        &self,
+        obs: Vec<f32>,
+        actions: Vec<i32>,
+        rewards: Vec<f32>,
+        discounts: Vec<f32>,
+        next_obs: Vec<f32>,
+        weights: Vec<f32>,
+    ) -> Result<TrainBatch> {
+        let b = self.meta.batch;
+        let o = self.meta.obs_dim;
+        if obs.len() != b * o || next_obs.len() != b * o {
+            return Err(Error::InvalidArgument(format!(
+                "obs must be {b}x{o} = {} floats, got {}",
+                b * o,
+                obs.len()
+            )));
+        }
+        if actions.len() != b || rewards.len() != b || discounts.len() != b || weights.len() != b {
+            return Err(Error::InvalidArgument(format!(
+                "batch vectors must have length {b}"
+            )));
+        }
+        Ok(TrainBatch {
+            obs: Tensor::from_f32(&[b, o], &obs)?,
+            actions: Tensor::from_i32(&[b], &actions)?,
+            rewards: Tensor::from_f32(&[b], &rewards)?,
+            discounts: Tensor::from_f32(&[b], &discounts)?,
+            next_obs: Tensor::from_f32(&[b, o], &next_obs)?,
+            weights: Tensor::from_f32(&[b], &weights)?,
+        })
+    }
+}
+
+/// Serialize a flat parameter list into one step row (a single f32 tensor
+/// per parameter) for distribution through a variable-container table
+/// (Appendix A.2 pattern).
+pub fn params_to_step(params: &[Tensor]) -> Vec<Tensor> {
+    params.to_vec()
+}
+
+/// Inverse of [`params_to_step`] given the sampled (leading-axis-1) data:
+/// strips the item's time axis added by the chunk layout.
+pub fn step_to_params(step: &[Tensor]) -> Result<Vec<Tensor>> {
+    step.iter()
+        .map(|t| {
+            let rows = t.unstack()?;
+            rows.into_iter()
+                .next()
+                .ok_or_else(|| Error::Decode("empty parameter row".into()))
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn meta_text() -> &'static str {
+        "obs_dim 4\nnum_actions 2\nhidden 64 64\nbatch 64\ninfer_batch 1\n\
+         gamma 0.99\nlr 0.001\nlayer0 4 64\nlayer1 64 64\nlayer2 64 2\n"
+    }
+
+    #[test]
+    fn meta_parses() {
+        let dir = std::env::temp_dir().join(format!("reverb_meta_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("meta.txt");
+        std::fs::write(&path, meta_text()).unwrap();
+        let meta = QNetMeta::load(&path).unwrap();
+        assert_eq!(meta.obs_dim, 4);
+        assert_eq!(meta.hidden, vec![64, 64]);
+        assert_eq!(meta.layers, vec![(4, 64), (64, 64), (64, 2)]);
+        assert_eq!(meta.num_param_tensors(), 6);
+        assert!((meta.gamma - 0.99).abs() < 1e-12);
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn meta_rejects_missing_keys() {
+        let dir = std::env::temp_dir().join(format!("reverb_meta_bad_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("meta.txt");
+        std::fs::write(&path, "obs_dim 4\n").unwrap();
+        assert!(QNetMeta::load(&path).is_err());
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn init_params_shapes_and_stats() {
+        let dir = std::env::temp_dir().join(format!("reverb_meta2_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("meta.txt");
+        std::fs::write(&path, meta_text()).unwrap();
+        let meta = QNetMeta::load(&path).unwrap();
+        let mut rng = Pcg32::new(1, 1);
+        let params = init_params(&meta, &mut rng);
+        assert_eq!(params.len(), 6);
+        assert_eq!(params[0].shape(), &[4, 64]);
+        assert_eq!(params[1].shape(), &[64]);
+        assert_eq!(params[4].shape(), &[64, 2]);
+        // He init: w0 std ≈ sqrt(2/4) ≈ 0.707.
+        let w: Vec<f32> = params[2].to_f32().unwrap();
+        let mean = w.iter().sum::<f32>() / w.len() as f32;
+        let std = (w.iter().map(|x| (x - mean).powi(2)).sum::<f32>() / w.len() as f32).sqrt();
+        assert!((std - (2.0f32 / 64.0).sqrt()).abs() < 0.02, "std={std}");
+        // biases zero
+        assert!(params[1].to_f32().unwrap().iter().all(|&b| b == 0.0));
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn params_step_roundtrip() {
+        let params = vec![
+            Tensor::from_f32(&[2, 3], &[1., 2., 3., 4., 5., 6.]).unwrap(),
+            Tensor::from_f32(&[3], &[7., 8., 9.]).unwrap(),
+        ];
+        let step = params_to_step(&params);
+        // Simulate the chunk layout: stack each field with leading axis 1.
+        let stacked: Vec<Tensor> = step.iter().map(|t| Tensor::stack(&[t.clone()]).unwrap()).collect();
+        let back = step_to_params(&stacked).unwrap();
+        assert_eq!(back, params);
+    }
+
+    /// End-to-end learner test against the real artifacts (skips without
+    /// `make artifacts`).
+    #[test]
+    fn learner_trains_on_synthetic_batch() {
+        let dir = default_artifacts_dir();
+        if !dir.join("qnet_train.hlo.txt").exists() {
+            eprintln!("skipping: artifacts missing (run `make artifacts`)");
+            return;
+        }
+        let mut learner = Learner::new(LearnerConfig::default()).unwrap();
+        let meta = learner.meta().clone();
+        let b = meta.batch;
+        let o = meta.obs_dim;
+        let mut rng = Pcg32::new(3, 3);
+
+        let mut losses = Vec::new();
+        // Fixed batch: loss should drop as the learner fits it.
+        let obs: Vec<f32> = (0..b * o).map(|_| rng.gen_f32() * 2.0 - 1.0).collect();
+        let actions: Vec<i32> = (0..b).map(|_| rng.gen_range(meta.num_actions as u64) as i32).collect();
+        let rewards: Vec<f32> = (0..b).map(|_| rng.gen_f32()).collect();
+        let discounts: Vec<f32> = (0..b).map(|_| (rng.gen_bool(0.9)) as u8 as f32).collect();
+        let next_obs: Vec<f32> = (0..b * o).map(|_| rng.gen_f32() * 2.0 - 1.0).collect();
+        let weights = vec![1.0f32; b];
+        let batch = learner
+            .make_batch(obs, actions, rewards, discounts, next_obs, weights)
+            .unwrap();
+        for i in 0..40 {
+            let out = learner.train_step(&batch).unwrap();
+            assert_eq!(out.priorities.len(), b);
+            assert!(out.loss.is_finite());
+            assert_eq!(out.step, i + 1);
+            losses.push(out.loss);
+        }
+        assert!(
+            losses[39] < losses[0] * 0.9,
+            "loss did not decrease: {} -> {}",
+            losses[0],
+            losses[39]
+        );
+
+        // Inference matches the infer artifact's batch shape.
+        let obs = Tensor::zeros(DType::F32, &[meta.infer_batch, meta.obs_dim]);
+        let q = learner.q_values(&obs).unwrap();
+        assert_eq!(q.shape(), &[meta.infer_batch, meta.num_actions]);
+    }
+
+    #[test]
+    fn make_batch_validates_shapes() {
+        let dir = default_artifacts_dir();
+        if !dir.join("qnet_train.hlo.txt").exists() {
+            return;
+        }
+        let learner = Learner::new(LearnerConfig::default()).unwrap();
+        let b = learner.meta().batch;
+        let o = learner.meta().obs_dim;
+        assert!(learner
+            .make_batch(vec![0.0; b * o - 1], vec![0; b], vec![0.0; b], vec![0.0; b], vec![0.0; b * o], vec![0.0; b])
+            .is_err());
+        assert!(learner
+            .make_batch(vec![0.0; b * o], vec![0; b + 1], vec![0.0; b], vec![0.0; b], vec![0.0; b * o], vec![0.0; b])
+            .is_err());
+    }
+}

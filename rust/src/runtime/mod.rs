@@ -1,0 +1,216 @@
+//! PJRT runtime: load AOT-compiled HLO text artifacts and execute them from
+//! the Rust hot path (no Python at runtime).
+//!
+//! Follows /opt/xla-example/load_hlo: `PjRtClient::cpu()` →
+//! `HloModuleProto::from_text_file` → `compile` → `execute`. The
+//! interchange format is HLO *text* (see `python/compile/aot.py` for why).
+
+pub mod learner;
+
+pub use learner::{Learner, LearnerConfig, QNetMeta, TrainOutput};
+
+use crate::core::tensor::{DType, Tensor};
+use crate::error::{Error, Result};
+use std::collections::HashMap;
+use std::path::Path;
+
+fn element_type(dtype: DType) -> xla::ElementType {
+    match dtype {
+        DType::F32 => xla::ElementType::F32,
+        DType::F64 => xla::ElementType::F64,
+        DType::I32 => xla::ElementType::S32,
+        DType::I64 => xla::ElementType::S64,
+        DType::U8 => xla::ElementType::U8,
+        DType::Bool => xla::ElementType::Pred,
+        DType::Bf16 => xla::ElementType::Bf16,
+    }
+}
+
+/// Convert a Reverb [`Tensor`] into an XLA literal (zero conversion: raw
+/// little-endian bytes are bitwise compatible on this platform).
+pub fn tensor_to_literal(t: &Tensor) -> Result<xla::Literal> {
+    xla::Literal::create_from_shape_and_untyped_data(element_type(t.dtype()), t.shape(), t.bytes())
+        .map_err(|e| Error::Runtime(format!("literal from tensor: {e}")))
+}
+
+/// Convert an XLA literal back into a [`Tensor`].
+pub fn literal_to_tensor(lit: &xla::Literal) -> Result<Tensor> {
+    let shape = lit
+        .array_shape()
+        .map_err(|e| Error::Runtime(format!("literal shape: {e}")))?;
+    let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+    let dtype = match shape.ty() {
+        xla::ElementType::F32 => DType::F32,
+        xla::ElementType::F64 => DType::F64,
+        xla::ElementType::S32 => DType::I32,
+        xla::ElementType::S64 => DType::I64,
+        xla::ElementType::U8 => DType::U8,
+        xla::ElementType::Pred => DType::Bool,
+        xla::ElementType::Bf16 => DType::Bf16,
+        other => return Err(Error::Runtime(format!("unsupported element type {other:?}"))),
+    };
+    let mut bytes = vec![0u8; lit.size_bytes()];
+    copy_literal_bytes(lit, dtype, &mut bytes)?;
+    Tensor::from_bytes(dtype, dims, bytes)
+}
+
+fn copy_literal_bytes(lit: &xla::Literal, dtype: DType, out: &mut [u8]) -> Result<()> {
+    use byteorder::{ByteOrder, LittleEndian};
+    macro_rules! via {
+        ($t:ty, $write:path) => {{
+            let v: Vec<$t> = lit
+                .to_vec()
+                .map_err(|e| Error::Runtime(format!("literal to_vec: {e}")))?;
+            $write(&v, out);
+            Ok(())
+        }};
+    }
+    match dtype {
+        DType::F32 => via!(f32, LittleEndian::write_f32_into),
+        DType::F64 => via!(f64, LittleEndian::write_f64_into),
+        DType::I32 => via!(i32, LittleEndian::write_i32_into),
+        DType::I64 => via!(i64, LittleEndian::write_i64_into),
+        DType::U8 => {
+            let v: Vec<u8> = lit
+                .to_vec()
+                .map_err(|e| Error::Runtime(format!("literal to_vec: {e}")))?;
+            out.copy_from_slice(&v);
+            Ok(())
+        }
+        DType::Bool | DType::Bf16 => Err(Error::Runtime(format!(
+            "byte extraction for {dtype} not supported"
+        ))),
+    }
+}
+
+/// A PJRT engine holding named compiled executables.
+pub struct Engine {
+    client: xla::PjRtClient,
+    exes: HashMap<String, xla::PjRtLoadedExecutable>,
+}
+
+impl Engine {
+    /// Create a CPU PJRT engine.
+    pub fn cpu() -> Result<Engine> {
+        let client =
+            xla::PjRtClient::cpu().map_err(|e| Error::Runtime(format!("pjrt cpu client: {e}")))?;
+        Ok(Engine {
+            client,
+            exes: HashMap::new(),
+        })
+    }
+
+    /// PJRT platform name (diagnostics).
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load and compile an HLO text artifact under `name`.
+    pub fn load_hlo(&mut self, name: impl Into<String>, path: &Path) -> Result<()> {
+        let proto = xla::HloModuleProto::from_text_file(path.to_str().ok_or_else(|| {
+            Error::Runtime(format!("non-utf8 path {path:?}"))
+        })?)
+        .map_err(|e| Error::Runtime(format!("parse hlo {path:?}: {e}")))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| Error::Runtime(format!("compile {path:?}: {e}")))?;
+        self.exes.insert(name.into(), exe);
+        Ok(())
+    }
+
+    /// Whether an executable is loaded.
+    pub fn has(&self, name: &str) -> bool {
+        self.exes.contains_key(name)
+    }
+
+    /// Execute `name` with the given inputs. The AOT side lowers with
+    /// `return_tuple=True`, so the single output is a tuple that we
+    /// decompose into per-output tensors.
+    pub fn execute(&self, name: &str, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+        let exe = self
+            .exes
+            .get(name)
+            .ok_or_else(|| Error::Runtime(format!("no executable named {name}")))?;
+        let literals = inputs
+            .iter()
+            .map(tensor_to_literal)
+            .collect::<Result<Vec<_>>>()?;
+        let result = exe
+            .execute::<xla::Literal>(&literals)
+            .map_err(|e| Error::Runtime(format!("execute {name}: {e}")))?;
+        let out = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| Error::Runtime(format!("fetch output of {name}: {e}")))?;
+        let parts = out
+            .to_tuple()
+            .map_err(|e| Error::Runtime(format!("untuple output of {name}: {e}")))?;
+        parts.iter().map(literal_to_tensor).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tensor_literal_roundtrip_f32() {
+        let t = Tensor::from_f32(&[2, 3], &[1., 2., 3., 4., 5., 6.]).unwrap();
+        let lit = tensor_to_literal(&t).unwrap();
+        let back = literal_to_tensor(&lit).unwrap();
+        assert_eq!(back, t);
+    }
+
+    #[test]
+    fn tensor_literal_roundtrip_i32_scalar() {
+        let t = Tensor::from_i32(&[], &[42]).unwrap();
+        let back = literal_to_tensor(&tensor_to_literal(&t).unwrap()).unwrap();
+        assert_eq!(back.to_i32().unwrap(), vec![42]);
+        assert_eq!(back.shape(), &[] as &[usize]);
+    }
+
+    #[test]
+    fn tensor_literal_roundtrip_u8() {
+        let t = Tensor::from_u8(&[4], &[9, 8, 7, 6]).unwrap();
+        let back = literal_to_tensor(&tensor_to_literal(&t).unwrap()).unwrap();
+        assert_eq!(back, t);
+    }
+
+    #[test]
+    fn engine_reports_missing_executable() {
+        let engine = Engine::cpu().unwrap();
+        assert!(!engine.has("nope"));
+        let err = engine.execute("nope", &[]).unwrap_err();
+        assert!(matches!(err, Error::Runtime(_)));
+    }
+
+    /// Full AOT round trip against the real artifacts when they exist
+    /// (`make artifacts`); skipped otherwise so `cargo test` works in a
+    /// fresh checkout.
+    #[test]
+    fn executes_infer_artifact_if_present() {
+        let dir = crate::runtime::learner::default_artifacts_dir();
+        let path = dir.join("qnet_infer.hlo.txt");
+        if !path.exists() {
+            eprintln!("skipping: {path:?} missing (run `make artifacts`)");
+            return;
+        }
+        let meta = QNetMeta::load(&dir.join("meta.txt")).unwrap();
+        let mut engine = Engine::cpu().unwrap();
+        engine.load_hlo("infer", &path).unwrap();
+
+        let mut rng = crate::util::rng::Pcg32::new(7, 7);
+        let params = learner::init_params(&meta, &mut rng);
+        let mut inputs = params.clone();
+        inputs.push(Tensor::zeros(DType::F32, &[meta.infer_batch, meta.obs_dim]));
+        let out = engine.execute("infer", &inputs).unwrap();
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].shape(), &[meta.infer_batch, meta.num_actions]);
+        // Zero observations + zero biases on the last layer: all-zero input
+        // still produces finite Q-values.
+        for q in out[0].to_f32().unwrap() {
+            assert!(q.is_finite());
+        }
+    }
+}

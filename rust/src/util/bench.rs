@@ -1,0 +1,256 @@
+//! Shared benchmark support: synthetic workload clients reproducing the
+//! paper's §5 setup — "each data element is a single float32 tensor whose
+//! values have been randomly sampled" (incompressible), "chunk and sequence
+//! length is 1" (no sharing), "clients solely generate load as fast as
+//! possible". Clients here are threads over loopback TCP (DESIGN.md §2).
+
+use crate::client::{Client, SamplerOptions, WriterOptions};
+use crate::core::chunk::Compression;
+use crate::core::tensor::Tensor;
+use crate::util::rng::Pcg32;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// Payload sizes used across Figures 5–7: 400 B to 400 kB in f32 counts.
+pub const PAYLOAD_SIZES: &[(usize, &str)] = &[
+    (100, "400B"),
+    (1_000, "4kB"),
+    (10_000, "40kB"),
+    (100_000, "400kB"),
+];
+
+/// A random f32 step of `floats` elements (≈ `floats * 4` bytes).
+pub fn random_step(floats: usize, rng: &mut Pcg32) -> Vec<Tensor> {
+    let vals: Vec<f32> = (0..floats).map(|_| rng.gen_f32()).collect();
+    vec![Tensor::from_f32(&[floats], &vals).unwrap()]
+}
+
+/// Aggregate throughput measured by a client fleet.
+#[derive(Clone, Copy, Debug)]
+pub struct Throughput {
+    pub items: u64,
+    pub bytes: u64,
+    pub wall: Duration,
+}
+
+impl Throughput {
+    pub fn qps(&self) -> f64 {
+        self.items as f64 / self.wall.as_secs_f64()
+    }
+    pub fn bps(&self) -> f64 {
+        self.bytes as f64 / self.wall.as_secs_f64()
+    }
+}
+
+/// Run `num_clients` insert clients against `addr` for `duration`, each
+/// writing random `floats`-element steps to `tables[i % len]` (round-robin
+/// table assignment reproduces Appendix B when several tables are given).
+pub fn run_insert_clients(
+    addr: &str,
+    tables: &[String],
+    num_clients: usize,
+    floats: usize,
+    duration: Duration,
+) -> Throughput {
+    let items = Arc::new(AtomicU64::new(0));
+    let bytes = Arc::new(AtomicU64::new(0));
+    let stop = Arc::new(AtomicBool::new(false));
+    let start = Instant::now();
+    let mut handles = Vec::new();
+    for c in 0..num_clients {
+        let addr = addr.to_string();
+        let table = tables[c % tables.len()].clone();
+        let items = items.clone();
+        let bytes = bytes.clone();
+        let stop = stop.clone();
+        handles.push(std::thread::spawn(move || {
+            let Ok(client) = Client::connect(addr) else {
+                return;
+            };
+            // chunk_length=1, no compression benefit on random data — use
+            // None to measure transport/table limits, not zstd.
+            let Ok(mut w) = client.writer(
+                WriterOptions::default()
+                    .with_chunk_length(1)
+                    .with_compression(Compression::None)
+                    .with_max_in_flight_items(32),
+            ) else {
+                return;
+            };
+            let mut rng = Pcg32::new(0xBE9C4, c as u64);
+            let step_bytes = (floats * 4) as u64;
+            while !stop.load(Ordering::Relaxed) {
+                let step = random_step(floats, &mut rng);
+                if w.append(step).is_err() {
+                    break;
+                }
+                if w.create_item(&table, 1, 1.0).is_err() {
+                    break;
+                }
+                items.fetch_add(1, Ordering::Relaxed);
+                bytes.fetch_add(step_bytes, Ordering::Relaxed);
+            }
+            let _ = w.flush();
+        }));
+    }
+    std::thread::sleep(duration);
+    stop.store(true, Ordering::Relaxed);
+    for h in handles {
+        let _ = h.join();
+    }
+    Throughput {
+        items: items.load(Ordering::Relaxed),
+        bytes: bytes.load(Ordering::Relaxed),
+        wall: start.elapsed(),
+    }
+}
+
+/// Run `num_clients` sample clients against a pre-filled `table`.
+pub fn run_sample_clients(
+    addr: &str,
+    table: &str,
+    num_clients: usize,
+    floats: usize,
+    duration: Duration,
+    batch_size: u32,
+) -> Throughput {
+    let items = Arc::new(AtomicU64::new(0));
+    let bytes = Arc::new(AtomicU64::new(0));
+    let stop = Arc::new(AtomicBool::new(false));
+    let start = Instant::now();
+    let mut handles = Vec::new();
+    for _ in 0..num_clients {
+        let addr = addr.to_string();
+        let table = table.to_string();
+        let items = items.clone();
+        let bytes = bytes.clone();
+        let stop = stop.clone();
+        handles.push(std::thread::spawn(move || {
+            let Ok(client) = Client::connect(addr) else {
+                return;
+            };
+            let Ok(mut s) = client.sampler(
+                SamplerOptions::new(table)
+                    .with_workers(1)
+                    .with_max_in_flight(4)
+                    .with_batch_size(batch_size)
+                    .with_timeout_ms(5_000),
+            ) else {
+                return;
+            };
+            let step_bytes = (floats * 4) as u64;
+            while !stop.load(Ordering::Relaxed) {
+                match s.next_sample() {
+                    Ok(_) => {
+                        items.fetch_add(1, Ordering::Relaxed);
+                        bytes.fetch_add(step_bytes, Ordering::Relaxed);
+                    }
+                    Err(_) => break,
+                }
+            }
+            s.stop();
+        }));
+    }
+    std::thread::sleep(duration);
+    stop.store(true, Ordering::Relaxed);
+    for h in handles {
+        let _ = h.join();
+    }
+    Throughput {
+        items: items.load(Ordering::Relaxed),
+        bytes: bytes.load(Ordering::Relaxed),
+        wall: start.elapsed(),
+    }
+}
+
+/// Pre-fill a table with `n` random items (server-side, no transport cost).
+pub fn prefill_table(table: &crate::core::table::Table, n: usize, floats: usize) {
+    let mut rng = Pcg32::new(0xF111, 0);
+    for i in 0..n {
+        let step = random_step(floats, &mut rng);
+        let chunk = crate::core::chunk::Chunk::from_steps(
+            1_000_000 + i as u64,
+            0,
+            &[step],
+            Compression::None,
+        )
+        .unwrap();
+        let item = crate::core::item::Item::new(
+            i as u64 + 1,
+            table.name().to_string(),
+            1.0,
+            vec![std::sync::Arc::new(chunk)],
+            0,
+            1,
+        )
+        .unwrap();
+        table.insert_or_assign(item, None).unwrap();
+    }
+}
+
+/// Print a markdown-ish bench row.
+pub fn print_row(cols: &[String]) {
+    println!("| {} |", cols.join(" | "));
+}
+
+/// Environment-tunable bench scale: REVERB_BENCH_FAST=1 shrinks client
+/// counts and durations so `cargo bench` completes quickly on CI.
+pub fn fast_mode() -> bool {
+    std::env::var("REVERB_BENCH_FAST").map(|v| v != "0").unwrap_or(false)
+}
+
+/// Measurement window per point.
+pub fn window() -> Duration {
+    if fast_mode() {
+        Duration::from_millis(300)
+    } else {
+        Duration::from_millis(1200)
+    }
+}
+
+/// Client-count sweep (the paper sweeps 1→200; loopback threads on this
+/// box saturate far earlier, the *shape* is what we reproduce).
+pub fn client_counts() -> Vec<usize> {
+    if fast_mode() {
+        vec![1, 2, 4]
+    } else {
+        // The paper sweeps 1 -> 200 machines; we sweep 1 -> 200 threads.
+        vec![1, 2, 4, 8, 16, 32, 64, 128, 200]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::table::TableConfig;
+    use crate::net::server::Server;
+
+    #[test]
+    fn insert_and_sample_clients_measure_throughput() {
+        let server = Server::builder()
+            .table(TableConfig::uniform_replay("t", 100_000))
+            .bind("127.0.0.1:0")
+            .unwrap();
+        let addr = server.local_addr().to_string();
+        let t = run_insert_clients(
+            &addr,
+            &["t".to_string()],
+            2,
+            100,
+            Duration::from_millis(200),
+        );
+        assert!(t.items > 0, "inserted nothing");
+        assert_eq!(t.bytes, t.items * 400);
+
+        let s = run_sample_clients(&addr, "t", 2, 100, Duration::from_millis(200), 8);
+        assert!(s.items > 0, "sampled nothing");
+    }
+
+    #[test]
+    fn prefill_populates() {
+        let table = crate::core::table::Table::new(TableConfig::uniform_replay("t", 1000));
+        prefill_table(&table, 50, 10);
+        assert_eq!(table.size(), 50);
+    }
+}

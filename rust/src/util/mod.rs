@@ -1,0 +1,96 @@
+//! Infrastructure utilities: deterministic RNG, statistics, a mini
+//! property-testing harness, and key generation.
+
+pub mod bench;
+pub mod proptest;
+pub mod rng;
+pub mod stats;
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Process-wide unique key generator for items/chunks. Keys embed a random
+/// 16-bit prefix per process so that keys from different clients writing to
+/// the same server collide with negligible probability.
+pub struct KeyGenerator {
+    next: AtomicU64,
+}
+
+impl KeyGenerator {
+    /// Create a generator with a time-derived prefix.
+    pub fn new() -> Self {
+        let nanos = std::time::SystemTime::now()
+            .duration_since(std::time::UNIX_EPOCH)
+            .map(|d| d.as_nanos() as u64)
+            .unwrap_or(1);
+        // Mix nanos into the top 16 bits; low 48 bits count up.
+        let prefix = (splitmix64(nanos) & 0xFFFF) << 48;
+        KeyGenerator {
+            next: AtomicU64::new(prefix | 1),
+        }
+    }
+
+    /// Deterministic generator for tests.
+    pub fn with_prefix(prefix: u16) -> Self {
+        KeyGenerator {
+            next: AtomicU64::new(((prefix as u64) << 48) | 1),
+        }
+    }
+
+    /// Next unique key.
+    pub fn next_key(&self) -> u64 {
+        self.next.fetch_add(1, Ordering::Relaxed)
+    }
+}
+
+impl Default for KeyGenerator {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// SplitMix64 finalizer — used for key mixing and hashing small ints.
+#[inline]
+pub fn splitmix64(mut x: u64) -> u64 {
+    x = x.wrapping_add(0x9E3779B97F4A7C15);
+    x = (x ^ (x >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+    x = (x ^ (x >> 27)).wrapping_mul(0x94D049BB133111EB);
+    x ^ (x >> 31)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn keys_are_unique_and_increasing() {
+        let kg = KeyGenerator::with_prefix(7);
+        let a = kg.next_key();
+        let b = kg.next_key();
+        assert!(b > a);
+        assert_eq!(a >> 48, 7);
+    }
+
+    #[test]
+    fn keys_unique_across_threads() {
+        let kg = std::sync::Arc::new(KeyGenerator::with_prefix(3));
+        let mut handles = vec![];
+        for _ in 0..4 {
+            let kg = kg.clone();
+            handles.push(std::thread::spawn(move || {
+                (0..1000).map(|_| kg.next_key()).collect::<Vec<_>>()
+            }));
+        }
+        let mut all: Vec<u64> = handles.into_iter().flat_map(|h| h.join().unwrap()).collect();
+        let n = all.len();
+        all.sort_unstable();
+        all.dedup();
+        assert_eq!(all.len(), n);
+    }
+
+    #[test]
+    fn splitmix_is_bijective_sample() {
+        // distinct inputs map to distinct outputs for a sample
+        let outs: std::collections::HashSet<u64> = (0..10_000).map(splitmix64).collect();
+        assert_eq!(outs.len(), 10_000);
+    }
+}

@@ -1,0 +1,138 @@
+//! A miniature property-based testing harness.
+//!
+//! The offline registry does not include `proptest`, so Reverb ships the
+//! subset it needs: seeded random case generation, a `forall` driver that
+//! runs many cases and reports the failing seed, and shrinking for integer
+//! vectors (halving + element removal). It is deliberately tiny; the point
+//! is that invariant tests (selector correctness, rate-limiter bounds, wire
+//! round-trips) are driven by *generated* inputs, not hand-picked ones.
+
+use super::rng::Pcg32;
+
+/// Configuration for a property run.
+#[derive(Clone, Debug)]
+pub struct Config {
+    /// Number of random cases to attempt.
+    pub cases: u32,
+    /// Base seed; case `i` uses stream `i`.
+    pub seed: u64,
+    /// Max shrink iterations after a failure.
+    pub max_shrink: u32,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        // REVERB_PROPTEST_CASES overrides for slow CI or deep soak runs.
+        let cases = std::env::var("REVERB_PROPTEST_CASES")
+            .ok()
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(128);
+        Config {
+            cases,
+            seed: 0xC0FFEE,
+            max_shrink: 512,
+        }
+    }
+}
+
+/// Run `prop` against `cases` random generators. On failure, panics with the
+/// case index and seed so the exact case can be replayed.
+pub fn forall<F>(name: &str, prop: F)
+where
+    F: Fn(&mut Pcg32) -> Result<(), String>,
+{
+    forall_cfg(name, &Config::default(), prop)
+}
+
+/// Like [`forall`] with explicit configuration.
+pub fn forall_cfg<F>(name: &str, cfg: &Config, prop: F)
+where
+    F: Fn(&mut Pcg32) -> Result<(), String>,
+{
+    for case in 0..cfg.cases {
+        let mut rng = Pcg32::new(cfg.seed, case as u64);
+        if let Err(msg) = prop(&mut rng) {
+            panic!(
+                "property '{name}' failed at case {case} (seed={:#x}, stream={case}): {msg}",
+                cfg.seed
+            );
+        }
+    }
+}
+
+/// Generate a vector of length in `[0, max_len]` with elements from `gen`.
+pub fn vec_of<T>(rng: &mut Pcg32, max_len: usize, mut gen: impl FnMut(&mut Pcg32) -> T) -> Vec<T> {
+    let len = rng.gen_range(max_len as u64 + 1) as usize;
+    (0..len).map(|_| gen(rng)).collect()
+}
+
+/// A generated operation sequence failure shrinker: tries removing spans and
+/// individual elements while `fails` keeps returning true, returning the
+/// smallest failing input found.
+pub fn shrink_vec<T: Clone>(input: Vec<T>, max_iter: u32, fails: impl Fn(&[T]) -> bool) -> Vec<T> {
+    assert!(fails(&input), "shrink_vec requires a failing input");
+    let mut cur = input;
+    let mut iter = 0;
+    // Pass 1: remove halves / quarters / ... (delta debugging).
+    let mut chunk = cur.len() / 2;
+    while chunk > 0 && iter < max_iter {
+        let mut progress = false;
+        let mut start = 0;
+        while start < cur.len() && iter < max_iter {
+            iter += 1;
+            let mut candidate = Vec::with_capacity(cur.len().saturating_sub(chunk));
+            candidate.extend_from_slice(&cur[..start]);
+            candidate.extend_from_slice(&cur[(start + chunk).min(cur.len())..]);
+            if candidate.len() < cur.len() && fails(&candidate) {
+                cur = candidate;
+                progress = true;
+            } else {
+                start += chunk;
+            }
+        }
+        if !progress {
+            chunk /= 2;
+        }
+    }
+    cur
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn forall_passes_trivial_property() {
+        forall("u64 is monotone under +1", |rng| {
+            let x = rng.gen_range(1 << 40);
+            if x + 1 > x {
+                Ok(())
+            } else {
+                Err(format!("{x}"))
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always fails'")]
+    fn forall_reports_failure() {
+        forall("always fails", |_rng| Err("nope".into()));
+    }
+
+    #[test]
+    fn shrinker_minimizes() {
+        // Failing predicate: contains a value >= 100.
+        let input: Vec<u32> = vec![1, 2, 300, 4, 5, 6, 7, 8];
+        let shrunk = shrink_vec(input, 1000, |xs| xs.iter().any(|&x| x >= 100));
+        assert_eq!(shrunk, vec![300]);
+    }
+
+    #[test]
+    fn vec_of_respects_max_len() {
+        let mut rng = Pcg32::new(1, 1);
+        for _ in 0..100 {
+            let v = vec_of(&mut rng, 17, |r| r.next_u32());
+            assert!(v.len() <= 17);
+        }
+    }
+}

@@ -1,0 +1,277 @@
+//! Lightweight statistics helpers used by benchmarks and the metrics
+//! extension: online mean/variance, percentile estimation over recorded
+//! samples, and simple rate meters.
+
+use std::time::{Duration, Instant};
+
+/// Welford online mean/variance accumulator.
+#[derive(Clone, Debug, Default)]
+pub struct Welford {
+    n: u64,
+    mean: f64,
+    m2: f64,
+}
+
+impl Welford {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Observe one value.
+    pub fn add(&mut self, x: f64) {
+        self.n += 1;
+        let delta = x - self.mean;
+        self.mean += delta / self.n as f64;
+        self.m2 += delta * (x - self.mean);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+
+    pub fn mean(&self) -> f64 {
+        self.mean
+    }
+
+    /// Population variance (0 for fewer than 2 observations).
+    pub fn variance(&self) -> f64 {
+        if self.n < 2 {
+            0.0
+        } else {
+            self.m2 / self.n as f64
+        }
+    }
+
+    pub fn stddev(&self) -> f64 {
+        self.variance().sqrt()
+    }
+
+    /// Merge another accumulator (parallel Welford).
+    pub fn merge(&mut self, other: &Welford) {
+        if other.n == 0 {
+            return;
+        }
+        if self.n == 0 {
+            *self = other.clone();
+            return;
+        }
+        let n = self.n + other.n;
+        let delta = other.mean - self.mean;
+        self.m2 += other.m2 + delta * delta * (self.n as f64 * other.n as f64) / n as f64;
+        self.mean += delta * other.n as f64 / n as f64;
+        self.n = n;
+    }
+}
+
+/// Sample recorder with percentile queries. Stores raw samples; intended for
+/// bench-scale data (≤ millions of points).
+#[derive(Clone, Debug, Default)]
+pub struct Samples {
+    xs: Vec<f64>,
+    sorted: bool,
+}
+
+impl Samples {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn add(&mut self, x: f64) {
+        self.xs.push(x);
+        self.sorted = false;
+    }
+
+    pub fn len(&self) -> usize {
+        self.xs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.xs.is_empty()
+    }
+
+    fn ensure_sorted(&mut self) {
+        if !self.sorted {
+            self.xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            self.sorted = true;
+        }
+    }
+
+    /// Linear-interpolated percentile, `p` in [0, 100].
+    pub fn percentile(&mut self, p: f64) -> f64 {
+        assert!((0.0..=100.0).contains(&p));
+        self.ensure_sorted();
+        if self.xs.is_empty() {
+            return f64::NAN;
+        }
+        let rank = p / 100.0 * (self.xs.len() - 1) as f64;
+        let lo = rank.floor() as usize;
+        let hi = rank.ceil() as usize;
+        if lo == hi {
+            self.xs[lo]
+        } else {
+            let frac = rank - lo as f64;
+            self.xs[lo] * (1.0 - frac) + self.xs[hi] * frac
+        }
+    }
+
+    pub fn median(&mut self) -> f64 {
+        self.percentile(50.0)
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.xs.is_empty() {
+            f64::NAN
+        } else {
+            self.xs.iter().sum::<f64>() / self.xs.len() as f64
+        }
+    }
+
+    pub fn min(&mut self) -> f64 {
+        self.percentile(0.0)
+    }
+
+    pub fn max(&mut self) -> f64 {
+        self.percentile(100.0)
+    }
+}
+
+/// Sliding throughput meter: counts events and bytes since construction.
+#[derive(Debug)]
+pub struct RateMeter {
+    start: Instant,
+    events: u64,
+    bytes: u64,
+}
+
+impl Default for RateMeter {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl RateMeter {
+    pub fn new() -> Self {
+        RateMeter {
+            start: Instant::now(),
+            events: 0,
+            bytes: 0,
+        }
+    }
+
+    pub fn record(&mut self, n_events: u64, n_bytes: u64) {
+        self.events += n_events;
+        self.bytes += n_bytes;
+    }
+
+    pub fn elapsed(&self) -> Duration {
+        self.start.elapsed()
+    }
+
+    pub fn events(&self) -> u64 {
+        self.events
+    }
+
+    pub fn bytes(&self) -> u64 {
+        self.bytes
+    }
+
+    /// Events per second since construction.
+    pub fn qps(&self) -> f64 {
+        self.events as f64 / self.elapsed().as_secs_f64().max(1e-9)
+    }
+
+    /// Bytes per second since construction.
+    pub fn bps(&self) -> f64 {
+        self.bytes as f64 / self.elapsed().as_secs_f64().max(1e-9)
+    }
+}
+
+/// Format a bytes/second figure with a human-readable SI suffix.
+pub fn fmt_bps(bps: f64) -> String {
+    fmt_si(bps, "B/s")
+}
+
+/// Format a count/second figure with a human-readable SI suffix.
+pub fn fmt_qps(qps: f64) -> String {
+    fmt_si(qps, "/s")
+}
+
+fn fmt_si(x: f64, unit: &str) -> String {
+    let (div, suffix) = if x >= 1e9 {
+        (1e9, "G")
+    } else if x >= 1e6 {
+        (1e6, "M")
+    } else if x >= 1e3 {
+        (1e3, "k")
+    } else {
+        (1.0, "")
+    };
+    format!("{:.2} {}{}", x / div, suffix, unit)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn welford_matches_naive() {
+        let xs = [1.0, 2.0, 3.0, 4.0, 10.0];
+        let mut w = Welford::new();
+        for &x in &xs {
+            w.add(x);
+        }
+        let mean = xs.iter().sum::<f64>() / xs.len() as f64;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / xs.len() as f64;
+        assert!((w.mean() - mean).abs() < 1e-12);
+        assert!((w.variance() - var).abs() < 1e-12);
+    }
+
+    #[test]
+    fn welford_merge_equals_combined() {
+        let mut a = Welford::new();
+        let mut b = Welford::new();
+        let mut whole = Welford::new();
+        for i in 0..50 {
+            let x = (i * i) as f64 * 0.37;
+            if i % 2 == 0 {
+                a.add(x)
+            } else {
+                b.add(x)
+            }
+            whole.add(x);
+        }
+        a.merge(&b);
+        assert_eq!(a.count(), whole.count());
+        assert!((a.mean() - whole.mean()).abs() < 1e-9);
+        assert!((a.variance() - whole.variance()).abs() < 1e-6);
+    }
+
+    #[test]
+    fn percentiles() {
+        let mut s = Samples::new();
+        for i in 1..=100 {
+            s.add(i as f64);
+        }
+        assert!((s.median() - 50.5).abs() < 1e-9);
+        assert!((s.percentile(0.0) - 1.0).abs() < 1e-9);
+        assert!((s.percentile(100.0) - 100.0).abs() < 1e-9);
+        assert!((s.percentile(99.0) - 99.01).abs() < 0.02);
+    }
+
+    #[test]
+    fn rate_meter_counts() {
+        let mut m = RateMeter::new();
+        m.record(10, 1000);
+        m.record(5, 500);
+        assert_eq!(m.events(), 15);
+        assert_eq!(m.bytes(), 1500);
+        assert!(m.qps() > 0.0);
+    }
+
+    #[test]
+    fn si_formatting() {
+        assert_eq!(fmt_bps(11.0e9), "11.00 GB/s");
+        assert_eq!(fmt_qps(60_000.0), "60.00 k/s");
+        assert_eq!(fmt_qps(3.0), "3.00 /s");
+    }
+}

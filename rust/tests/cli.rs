@@ -1,0 +1,114 @@
+//! Black-box tests of the `reverb-server` binary: spawn the real process,
+//! talk to it over TCP, checkpoint it, kill it, restore it.
+
+use reverb::{Client, SamplerOptions, Tensor, WriterOptions};
+use std::io::Read;
+use std::process::{Child, Command, Stdio};
+use std::time::Duration;
+
+fn server_bin() -> std::path::PathBuf {
+    // target/debug/reverb-server next to the test binary's directory.
+    let mut p = std::env::current_exe().unwrap();
+    p.pop(); // deps/
+    p.pop(); // debug/
+    p.push("reverb-server");
+    p
+}
+
+/// Spawn the binary and parse the bound address from stdout.
+fn spawn_server(extra: &[&str]) -> (Child, String) {
+    let mut child = Command::new(server_bin())
+        .args([
+            "serve",
+            "--bind",
+            "127.0.0.1:0",
+            "--table",
+            "replay:uniform:1000",
+            "--table",
+            "q:queue:8",
+        ])
+        .args(extra)
+        .stdout(Stdio::piped())
+        .stderr(Stdio::null())
+        .spawn()
+        .expect("spawn reverb-server");
+    let mut stdout = child.stdout.take().unwrap();
+    let mut buf = Vec::new();
+    let mut byte = [0u8; 1];
+    // Read the first line ("reverb-server listening on ADDR").
+    loop {
+        assert_eq!(stdout.read(&mut byte).unwrap(), 1, "server exited early");
+        if byte[0] == b'\n' {
+            break;
+        }
+        buf.push(byte[0]);
+        assert!(buf.len() < 200);
+    }
+    let line = String::from_utf8(buf).unwrap();
+    let addr = line.rsplit(' ').next().unwrap().to_string();
+    (child, addr)
+}
+
+#[test]
+fn cli_serves_and_checkpoints() {
+    let dir = std::env::temp_dir().join(format!("reverb_cli_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let (mut child, addr) = spawn_server(&["--checkpoint-dir", dir.to_str().unwrap()]);
+
+    // Write + sample through the real process.
+    let client = Client::connect(addr.clone()).unwrap();
+    let mut w = client.writer(WriterOptions::default()).unwrap();
+    for i in 0..5 {
+        w.append(vec![Tensor::from_f32(&[2], &[i as f32, 0.0]).unwrap()])
+            .unwrap();
+        w.create_item("replay", 1, 1.0).unwrap();
+    }
+    w.flush().unwrap();
+    let mut s = client
+        .sampler(SamplerOptions::new("replay").with_timeout_ms(2_000))
+        .unwrap();
+    assert_eq!(s.next_sample().unwrap().data[0].shape(), &[1, 2]);
+    s.stop();
+
+    // Checkpoint via RPC, then kill the process (simulated crash).
+    let ckpt = client.checkpoint().unwrap();
+    child.kill().unwrap();
+    child.wait().unwrap();
+
+    // Restore a second instance from the checkpoint.
+    let (mut child2, addr2) = spawn_server(&["--load", &ckpt]);
+    let client2 = Client::connect(addr2).unwrap();
+    let info = client2.server_info().unwrap();
+    let replay = info.iter().find(|(n, _)| n == "replay").unwrap();
+    assert_eq!(replay.1.size, 5, "state survived the crash");
+    child2.kill().unwrap();
+    child2.wait().unwrap();
+    std::fs::remove_dir_all(dir).ok();
+}
+
+#[test]
+fn cli_rejects_bad_table_spec() {
+    let out = Command::new(server_bin())
+        .args(["serve", "--table", "bogus:nope:1"])
+        .output()
+        .unwrap();
+    assert!(!out.status.success());
+}
+
+#[test]
+fn cli_usage_on_no_args() {
+    let out = Command::new(server_bin()).output().unwrap();
+    assert!(!out.status.success());
+    assert!(String::from_utf8_lossy(&out.stderr).contains("usage"));
+}
+
+/// Guard against zombie servers from this test file.
+#[test]
+fn spawned_servers_are_reaped() {
+    let (mut child, addr) = spawn_server(&[]);
+    assert!(Client::connect(addr).is_ok());
+    child.kill().unwrap();
+    let status = child.wait().unwrap();
+    let _ = status;
+    std::thread::sleep(Duration::from_millis(50));
+}

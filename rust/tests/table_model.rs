@@ -1,0 +1,284 @@
+//! Property-based model checking of the Table: random operation sequences
+//! executed against both the real Table and a naive in-memory model, with
+//! invariants checked after every step.
+
+use reverb::core::chunk::{Chunk, Compression};
+use reverb::core::item::Item;
+use reverb::core::rate_limiter::RateLimiterConfig;
+use reverb::core::table::{Table, TableConfig};
+use reverb::util::proptest::forall;
+use reverb::util::rng::Pcg32;
+use reverb::{SelectorConfig, Tensor};
+use std::collections::HashMap;
+use std::sync::Arc;
+use std::time::Duration;
+
+fn mk_item(key: u64, priority: f64) -> Item {
+    let steps = vec![vec![Tensor::from_f32(&[1], &[key as f32]).unwrap()]];
+    let chunk = Arc::new(Chunk::from_steps(key | 1 << 62, 0, &steps, Compression::None).unwrap());
+    Item::new(key, "t", priority, vec![chunk], 0, 1).unwrap()
+}
+
+/// Naive reference model of the table.
+struct Model {
+    items: HashMap<u64, f64>,
+    max_size: usize,
+    inserted_order: Vec<u64>,
+}
+
+impl Model {
+    fn insert(&mut self, key: u64, priority: f64) {
+        if self.items.contains_key(&key) {
+            self.items.insert(key, priority);
+            return;
+        }
+        // FIFO remover at capacity.
+        while self.items.len() >= self.max_size {
+            let oldest = self.inserted_order.remove(0);
+            self.items.remove(&oldest);
+        }
+        self.items.insert(key, priority);
+        self.inserted_order.push(key);
+    }
+
+    fn update(&mut self, key: u64, priority: f64) {
+        if let Some(p) = self.items.get_mut(&key) {
+            *p = priority;
+        }
+    }
+
+    fn delete(&mut self, key: u64) {
+        if self.items.remove(&key).is_some() {
+            self.inserted_order.retain(|&k| k != key);
+        }
+    }
+}
+
+#[test]
+fn table_matches_model_under_random_ops() {
+    for sampler in [
+        SelectorConfig::Uniform,
+        SelectorConfig::MaxHeap,
+        SelectorConfig::Prioritized { exponent: 1.0 },
+        SelectorConfig::Fifo,
+    ] {
+        forall(&format!("table/model {sampler:?}"), |rng: &mut Pcg32| {
+            let max_size = 1 + rng.gen_range(20) as usize;
+            let table = Table::new(TableConfig {
+                sampler,
+                ..TableConfig::uniform_replay("t", max_size)
+            });
+            let mut model = Model {
+                items: HashMap::new(),
+                max_size,
+                inserted_order: vec![],
+            };
+            let mut next_key = 1u64;
+            for _ in 0..120 {
+                match rng.gen_range(10) {
+                    0..=4 => {
+                        let p = rng.gen_f64() * 10.0;
+                        table
+                            .insert_or_assign(mk_item(next_key, p), None)
+                            .map_err(|e| e.to_string())?;
+                        model.insert(next_key, p);
+                        next_key += 1;
+                    }
+                    5 => {
+                        // update (possibly missing key)
+                        let k = 1 + rng.gen_range(next_key);
+                        let p = rng.gen_f64() * 10.0;
+                        table.update_priorities(&[(k, p)]).map_err(|e| e.to_string())?;
+                        model.update(k, p);
+                    }
+                    6 => {
+                        let k = 1 + rng.gen_range(next_key);
+                        table.delete(&[k]).map_err(|e| e.to_string())?;
+                        model.delete(k);
+                    }
+                    _ => {
+                        if !model.items.is_empty() {
+                            let s = table
+                                .sample(Some(Duration::from_millis(100)))
+                                .map_err(|e| e.to_string())?;
+                            if !model.items.contains_key(&s.item.key) {
+                                return Err(format!("sampled unknown key {}", s.item.key));
+                            }
+                            let want_p = model.items[&s.item.key];
+                            if (s.item.priority - want_p).abs() > 1e-9 {
+                                return Err(format!(
+                                    "priority mismatch for {}: {} vs {}",
+                                    s.item.key, s.item.priority, want_p
+                                ));
+                            }
+                        }
+                    }
+                }
+                // Invariants after every op.
+                if table.size() != model.items.len() {
+                    return Err(format!(
+                        "size {} != model {}",
+                        table.size(),
+                        model.items.len()
+                    ));
+                }
+                if table.size() > max_size {
+                    return Err(format!("size {} exceeds max {}", table.size(), max_size));
+                }
+            }
+            // Final deep check: snapshots agree with the model exactly.
+            let (items, _, _) = table.snapshot();
+            for it in &items {
+                let Some(&p) = model.items.get(&it.key) else {
+                    return Err(format!("snapshot has unknown key {}", it.key));
+                };
+                if (it.priority - p).abs() > 1e-9 {
+                    return Err("snapshot priority mismatch".into());
+                }
+            }
+            Ok(())
+        });
+    }
+}
+
+#[test]
+fn queue_tables_deliver_each_item_exactly_once_in_order() {
+    forall("queue exactly-once", |rng: &mut Pcg32| {
+        let cap = 1 + rng.gen_range(16) as usize;
+        let table = Arc::new(Table::new(TableConfig::queue("t", cap)));
+        let n = 1 + rng.gen_range(60);
+        let producer = {
+            let table = table.clone();
+            std::thread::spawn(move || {
+                for k in 1..=n {
+                    table
+                        .insert_or_assign(mk_item(k, 1.0), Some(Duration::from_secs(5)))
+                        .unwrap();
+                }
+            })
+        };
+        let mut got = Vec::new();
+        for _ in 0..n {
+            got.push(
+                table
+                    .sample(Some(Duration::from_secs(5)))
+                    .map_err(|e| e.to_string())?
+                    .item
+                    .key,
+            );
+        }
+        producer.join().unwrap();
+        let want: Vec<u64> = (1..=n).collect();
+        if got != want {
+            return Err(format!("order violated: {got:?}"));
+        }
+        if table.size() != 0 {
+            return Err(format!("{} items left in queue", table.size()));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn snapshot_restore_is_lossless_under_random_state() {
+    forall("checkpoint lossless", |rng: &mut Pcg32| {
+        let dir = std::env::temp_dir().join(format!(
+            "reverb_prop_ckpt_{}_{}",
+            std::process::id(),
+            rng.next_u64()
+        ));
+        std::fs::create_dir_all(&dir).map_err(|e| e.to_string())?;
+        let path = dir.join("c.rvb");
+        let table = Arc::new(Table::new(TableConfig::uniform_replay("t", 64)));
+        let n = 1 + rng.gen_range(40);
+        for k in 1..=n {
+            table
+                .insert_or_assign(mk_item(k, rng.gen_f64() * 5.0), None)
+                .map_err(|e| e.to_string())?;
+        }
+        for _ in 0..rng.gen_range(10) {
+            let _ = table.sample(Some(Duration::from_millis(50)));
+        }
+        reverb::core::checkpoint::save(&path, &[table.clone()]).map_err(|e| e.to_string())?;
+
+        let restored = Arc::new(Table::new(TableConfig::uniform_replay("t", 64)));
+        let store = reverb::core::chunk_store::ChunkStore::new();
+        reverb::core::checkpoint::load(&path, &[restored.clone()], &store)
+            .map_err(|e| e.to_string())?;
+
+        let (a, ai, asamp) = table.snapshot();
+        let (b, bi, bsamp) = restored.snapshot();
+        if (ai, asamp) != (bi, bsamp) {
+            return Err("counter mismatch".into());
+        }
+        if a.len() != b.len() {
+            return Err("item count mismatch".into());
+        }
+        for (x, y) in a.iter().zip(&b) {
+            if x.key != y.key
+                || (x.priority - y.priority).abs() > 1e-12
+                || x.times_sampled != y.times_sampled
+            {
+                return Err(format!("item mismatch {} vs {}", x.key, y.key));
+            }
+            // Payload bytes identical.
+            let dx = x.materialize().map_err(|e| e.to_string())?;
+            let dy = y.materialize().map_err(|e| e.to_string())?;
+            if dx != dy {
+                return Err("payload mismatch".into());
+            }
+        }
+        std::fs::remove_dir_all(&dir).ok();
+        Ok(())
+    });
+}
+
+#[test]
+fn rate_limited_table_never_violates_corridor_under_threads() {
+    forall("threaded SPI corridor", |rng: &mut Pcg32| {
+        let spi = 1.0 + rng.gen_f64() * 4.0;
+        let min_size = 1 + rng.gen_range(8);
+        let buffer = spi.max(1.0) * 2.0;
+        let cfg = RateLimiterConfig::sample_to_insert_ratio(spi, min_size, buffer)
+            .map_err(|e| e.to_string())?;
+        let table = Arc::new(Table::new(TableConfig {
+            rate_limiter: cfg,
+            ..TableConfig::uniform_replay("t", 100_000)
+        }));
+        let stop = Arc::new(std::sync::atomic::AtomicBool::new(false));
+        let mut handles = vec![];
+        for tid in 0..2u64 {
+            let table = table.clone();
+            let stop = stop.clone();
+            handles.push(std::thread::spawn(move || {
+                let mut k = tid << 40 | 1;
+                while !stop.load(std::sync::atomic::Ordering::Relaxed) {
+                    let _ =
+                        table.insert_or_assign(mk_item(k, 1.0), Some(Duration::from_millis(5)));
+                    k += 1;
+                }
+            }));
+        }
+        {
+            let table = table.clone();
+            let stop = stop.clone();
+            handles.push(std::thread::spawn(move || {
+                while !stop.load(std::sync::atomic::Ordering::Relaxed) {
+                    let _ = table.sample_batch(3, Some(Duration::from_millis(5)));
+                }
+            }));
+        }
+        std::thread::sleep(Duration::from_millis(40));
+        stop.store(true, std::sync::atomic::Ordering::Relaxed);
+        table.cancel();
+        for h in handles {
+            h.join().unwrap();
+        }
+        let info = table.info();
+        let center = min_size as f64 * spi;
+        if info.diff > center + buffer + 1e-6 {
+            return Err(format!("diff {} above corridor", info.diff));
+        }
+        Ok(())
+    });
+}

@@ -9,9 +9,8 @@ use reverb::core::table::TableConfig;
 use reverb::net::server::Server;
 
 fn main() {
-    let artifacts = reverb::runtime::learner::default_artifacts_dir();
-    if !artifacts.join("qnet_train.hlo.txt").exists() {
-        println!("SKIPPED: artifacts missing (run `make artifacts`)");
+    if !reverb::runtime::can_execute_artifacts() {
+        println!("SKIPPED: needs `make artifacts` + a real PJRT backend (DESIGN.md §5)");
         return;
     }
     let fast = reverb::util::bench::fast_mode();
@@ -30,11 +29,11 @@ fn main() {
             .bind("127.0.0.1:0")
             .unwrap();
         let config = DqnConfig {
-            server_addr: server.local_addr().to_string(),
             num_actors: actors,
             train_steps,
             publish_period: 25,
-            ..DqnConfig::default()
+            // Same-process harness → zero-copy in-process transport.
+            ..DqnConfig::for_server(&server)
         };
         let report = run_dqn(config).unwrap();
         let secs = report.wall.as_secs_f64();

@@ -1,0 +1,116 @@
+//! Transport comparison: insert/sample QPS of the zero-copy in-process
+//! backend vs TCP loopback, same server code, same client code — only the
+//! `Client::connect` endpoint differs.
+//!
+//! The paper (§2, §5) argues Reverb's ceilings live in the tables, not the
+//! transport; GEAR-style shared-memory data paths show how much headroom a
+//! copy-free path buys for co-located actors/learners. Expected result:
+//! in-process insert QPS ≥ TCP insert QPS at every payload size (it skips
+//! frame encode/decode and syscalls entirely), with the gap widening as
+//! payloads grow.
+//!
+//! Run: `cargo bench --bench transport`
+//! (REVERB_BENCH_FAST=1 for a quick pass.)
+
+use reverb::core::table::TableConfig;
+use reverb::net::server::Server;
+use reverb::util::bench::*;
+use reverb::util::stats::{fmt_bps, fmt_qps};
+use std::time::Duration;
+
+const CLIENTS: usize = 4;
+
+fn window_for(fast: bool) -> Duration {
+    if fast {
+        Duration::from_millis(300)
+    } else {
+        Duration::from_millis(1000)
+    }
+}
+
+/// One (backend, payload) insert measurement on a fresh server.
+fn insert_qps(in_proc: bool, floats: usize, window: Duration) -> Throughput {
+    let builder = Server::builder().table(TableConfig::uniform_replay("t", 200_000));
+    let (server, addr) = if in_proc {
+        let s = builder.serve_in_proc().unwrap();
+        let a = s.in_proc_addr();
+        (s, a)
+    } else {
+        let s = builder.bind("127.0.0.1:0").unwrap();
+        let a = format!("tcp://{}", s.local_addr());
+        (s, a)
+    };
+    let t = run_insert_clients(&addr, &["t".to_string()], CLIENTS, floats, window);
+    drop(server);
+    t
+}
+
+/// One (backend, payload) sample measurement on a pre-filled server.
+fn sample_qps(in_proc: bool, floats: usize, window: Duration) -> Throughput {
+    let builder = Server::builder().table(TableConfig::uniform_replay("t", 100_000));
+    let (server, addr) = if in_proc {
+        let s = builder.serve_in_proc().unwrap();
+        let a = s.in_proc_addr();
+        (s, a)
+    } else {
+        let s = builder.bind("127.0.0.1:0").unwrap();
+        let a = format!("tcp://{}", s.local_addr());
+        (s, a)
+    };
+    prefill_table(&server.table("t").unwrap(), 1_000, floats);
+    let t = run_sample_clients(&addr, "t", CLIENTS, floats, window, 8);
+    drop(server);
+    t
+}
+
+fn main() {
+    let fast = fast_mode();
+    let window = window_for(fast);
+    let payloads: &[(usize, &str)] = if fast {
+        &[(100, "400B"), (10_000, "40kB")]
+    } else {
+        PAYLOAD_SIZES
+    };
+
+    println!("# Transport: zero-copy in-process vs TCP loopback ({CLIENTS} clients)");
+    println!("| op | payload | tcp QPS | in-proc QPS | in-proc/tcp | in-proc BPS |");
+    println!("|---|---|---|---|---|---|");
+
+    let mut all_hold = true;
+    for &(floats, label) in payloads {
+        let tcp = insert_qps(false, floats, window);
+        let ip = insert_qps(true, floats, window);
+        let ratio = ip.qps() / tcp.qps().max(1.0);
+        if ip.qps() < tcp.qps() {
+            all_hold = false;
+        }
+        print_row(&[
+            "insert".into(),
+            label.into(),
+            fmt_qps(tcp.qps()),
+            fmt_qps(ip.qps()),
+            format!("{ratio:.2}x"),
+            fmt_bps(ip.bps()),
+        ]);
+    }
+    for &(floats, label) in payloads {
+        let tcp = sample_qps(false, floats, window);
+        let ip = sample_qps(true, floats, window);
+        let ratio = ip.qps() / tcp.qps().max(1.0);
+        print_row(&[
+            "sample".into(),
+            label.into(),
+            fmt_qps(tcp.qps()),
+            fmt_qps(ip.qps()),
+            format!("{ratio:.2}x"),
+            fmt_bps(ip.bps()),
+        ]);
+    }
+
+    println!();
+    if all_hold {
+        println!("RESULT: PASS — in-process insert QPS >= TCP-loopback insert QPS at every payload size.");
+    } else {
+        println!("RESULT: WARNING — TCP beat in-process on at least one insert payload; rerun on an idle machine.");
+    }
+}

@@ -18,6 +18,10 @@ use reverb::core::table::TableConfig;
 use reverb::net::server::Server;
 
 fn main() -> reverb::Result<()> {
+    if !reverb::runtime::can_execute_artifacts() {
+        eprintln!("SKIPPED: needs `make artifacts` + a real PJRT backend (DESIGN.md §5)");
+        return Ok(());
+    }
     let train_steps: u64 = std::env::args()
         .nth(1)
         .and_then(|s| s.parse().ok())
@@ -30,16 +34,21 @@ fn main() -> reverb::Result<()> {
         .table(TableConfig::variable_container("variables"))
         .checkpoint_dir(std::env::temp_dir().join("reverb_dqn_ckpts"))
         .bind("127.0.0.1:0")?;
-    println!("reverb server on {}", server.local_addr());
+    println!(
+        "reverb server on {} (harness uses {})",
+        server.local_addr(),
+        server.in_proc_addr()
+    );
 
+    // Actors/learner share this process with the server, so the harness
+    // defaults to the zero-copy in-process transport.
     let config = DqnConfig {
-        server_addr: server.local_addr().to_string(),
         num_actors: 2,
         n_step: 3,
         train_steps,
         publish_period: 25,
         actor_refresh_period: 300,
-        ..DqnConfig::default()
+        ..DqnConfig::for_server(&server)
     };
     let report = run_dqn(config)?;
 

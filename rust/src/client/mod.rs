@@ -19,26 +19,24 @@ pub use writer::{Writer, WriterOptions};
 
 use crate::core::table::TableInfo;
 use crate::error::{Error, Result};
+use crate::net::transport::{self, MsgStream};
 use crate::net::wire::{error_from_code, Message};
 use crate::util::KeyGenerator;
-use std::io::{BufReader, BufWriter, Write as _};
-use std::net::TcpStream;
 use std::sync::Arc;
 
-/// A synchronous framed connection with request-id bookkeeping.
+/// A synchronous framed connection with request-id bookkeeping, over any
+/// transport backend (`tcp://host:port`, bare `host:port`, or
+/// `reverb://in-proc/<name>`). Messages are passed by value so the
+/// in-process backend can move `Arc<Chunk>` payloads without copying.
 pub(crate) struct Conn {
-    reader: BufReader<TcpStream>,
-    writer: BufWriter<TcpStream>,
+    stream: Box<dyn MsgStream>,
     next_id: u64,
 }
 
 impl Conn {
     pub(crate) fn connect(addr: &str) -> Result<Conn> {
-        let stream = TcpStream::connect(addr)?;
-        stream.set_nodelay(true)?;
         Ok(Conn {
-            reader: BufReader::with_capacity(256 * 1024, stream.try_clone()?),
-            writer: BufWriter::with_capacity(256 * 1024, stream),
+            stream: transport::dial(addr)?,
             next_id: 1,
         })
     }
@@ -50,22 +48,21 @@ impl Conn {
     }
 
     /// Send without waiting for a reply (pipelining).
-    pub(crate) fn send(&mut self, msg: &Message) -> Result<()> {
-        msg.write_frame(&mut self.writer)
+    pub(crate) fn send(&mut self, msg: Message) -> Result<()> {
+        self.stream.send(msg)
     }
 
     pub(crate) fn flush(&mut self) -> Result<()> {
-        self.writer.flush()?;
-        Ok(())
+        self.stream.flush()
     }
 
     /// Receive the next frame.
     pub(crate) fn recv(&mut self) -> Result<Message> {
-        Message::read_frame(&mut self.reader)
+        self.stream.recv()
     }
 
     /// Synchronous call: send, flush, await the matching reply.
-    pub(crate) fn call(&mut self, msg: &Message) -> Result<Message> {
+    pub(crate) fn call(&mut self, msg: Message) -> Result<Message> {
         self.send(msg)?;
         self.flush()?;
         self.recv()
@@ -93,7 +90,9 @@ pub struct Client {
 }
 
 impl Client {
-    /// Connect to `addr` ("host:port"), verifying the server responds.
+    /// Connect to `addr` — `host:port` / `tcp://host:port` for TCP, or
+    /// `reverb://in-proc/<name>` for the zero-copy in-process transport —
+    /// verifying the server responds.
     pub fn connect(addr: impl Into<String>) -> Result<Client> {
         let client = Client {
             addr: addr.into(),
@@ -115,7 +114,7 @@ impl Client {
     pub fn server_info(&self) -> Result<Vec<(String, TableInfo)>> {
         let mut conn = Conn::connect(&self.addr)?;
         let id = conn.next_id();
-        match conn.call(&Message::InfoRequest { id })? {
+        match conn.call(Message::InfoRequest { id })? {
             Message::Info { tables, .. } => Ok(tables),
             Message::Err { code, message, .. } => Err(error_from_code(code, message)),
             other => Err(Error::Decode(format!("unexpected reply {other:?}"))),
@@ -131,7 +130,7 @@ impl Client {
     ) -> Result<()> {
         let mut conn = Conn::connect(&self.addr)?;
         let id = conn.next_id();
-        conn.send(&Message::MutatePriorities {
+        conn.send(Message::MutatePriorities {
             id,
             table: table.into(),
             updates: updates.to_vec(),
@@ -146,7 +145,7 @@ impl Client {
     pub fn reset(&self, table: &str) -> Result<()> {
         let mut conn = Conn::connect(&self.addr)?;
         let id = conn.next_id();
-        conn.send(&Message::Reset {
+        conn.send(Message::Reset {
             id,
             table: table.into(),
         })?;
@@ -159,7 +158,7 @@ impl Client {
     pub fn checkpoint(&self) -> Result<String> {
         let mut conn = Conn::connect(&self.addr)?;
         let id = conn.next_id();
-        conn.send(&Message::Checkpoint { id })?;
+        conn.send(Message::Checkpoint { id })?;
         conn.flush()?;
         conn.expect_ack(id)
     }

@@ -207,7 +207,7 @@ fn worker_loop(mut conn: Conn, opts: SamplerOptions, tx: SyncSender<Event>, stop
             // Fill the pipeline window.
             while outstanding < opts.max_in_flight_samples_per_worker {
                 let id = conn.next_id();
-                conn.send(&Message::SampleRequest {
+                conn.send(Message::SampleRequest {
                     id,
                     table: opts.table.clone(),
                     num_samples: opts.batch_size,
@@ -220,8 +220,11 @@ fn worker_loop(mut conn: Conn, opts: SamplerOptions, tx: SyncSender<Event>, stop
             match conn.recv()? {
                 Message::SampleData { infos, chunks, .. } => {
                     outstanding -= 1;
+                    // Chunks arrive as shared handles: decoded fresh on the
+                    // TCP path, the server's own allocations on the
+                    // in-process path.
                     let map: HashMap<u64, Arc<Chunk>> =
-                        chunks.into_iter().map(|c| (c.key, Arc::new(c))).collect();
+                        chunks.into_iter().map(|c| (c.key, c)).collect();
                     for info in &infos {
                         let sample = materialize_sample(info, &map)?;
                         if push(&tx, &stop, Event::Sample(sample))? {

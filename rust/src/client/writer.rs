@@ -206,8 +206,11 @@ impl Writer {
             start: chunk.sequence_start,
             len: chunk.num_steps,
         });
-        self.conn.send(&Message::InsertChunks {
-            chunks: vec![chunk],
+        // The chunk travels as a shared handle: the TCP backend encodes
+        // from it, the in-process backend hands this very allocation to the
+        // server's chunk store (zero-copy insert path).
+        self.conn.send(Message::InsertChunks {
+            chunks: vec![Arc::new(chunk)],
         })?;
         self.prune_history();
         Ok(())
@@ -263,7 +266,7 @@ impl Writer {
                 length: p.end - p.start,
                 times_sampled: 0,
             };
-            self.conn.send(&Message::CreateItem {
+            self.conn.send(Message::CreateItem {
                 id,
                 item,
                 timeout_ms: self.options.insert_timeout_ms,

@@ -12,6 +12,12 @@
 //!   PJRT inference engine and Reverb writer;
 //! - one learner thread: samples batches, executes the AOT train step,
 //!   writes |TD| priorities back via `mutate_priorities`.
+//!
+//! Actors and learner live in the server's process, so the harness defaults
+//! to the zero-copy in-process transport ([`DqnConfig::for_server`] picks
+//! `reverb://in-proc/...`): replay traffic never pays TCP-loopback
+//! serialization. Point `server_addr` at `tcp://host:port` to run against a
+//! remote server instead.
 
 use crate::client::{Client, SamplerOptions, WriterOptions};
 use crate::core::chunk::Compression;
@@ -28,6 +34,8 @@ use std::time::{Duration, Instant};
 /// Experiment configuration.
 #[derive(Clone, Debug)]
 pub struct DqnConfig {
+    /// Endpoint of the replay server. For a co-located server use
+    /// [`DqnConfig::for_server`], which selects the in-process transport.
     pub server_addr: String,
     pub replay_table: String,
     pub variable_table: String,
@@ -49,6 +57,18 @@ pub struct DqnConfig {
     pub actor_refresh_period: u64,
     pub learner: LearnerConfig,
     pub seed: u64,
+}
+
+impl DqnConfig {
+    /// Default configuration wired to `server` over the zero-copy
+    /// in-process transport — the standard harness for a same-process
+    /// actor/learner experiment.
+    pub fn for_server(server: &crate::net::Server) -> Self {
+        DqnConfig {
+            server_addr: server.in_proc_addr(),
+            ..DqnConfig::default()
+        }
+    }
 }
 
 impl Default for DqnConfig {
@@ -337,12 +357,12 @@ mod tests {
     use crate::net::server::Server;
 
     /// Full pipeline smoke test: actors + learner + PER + variable
-    /// container against real artifacts (skips without `make artifacts`).
+    /// container against real artifacts (skips without `make artifacts`
+    /// and a real PJRT backend).
     #[test]
     fn dqn_pipeline_runs_end_to_end() {
-        let artifacts = crate::runtime::learner::default_artifacts_dir();
-        if !artifacts.join("qnet_train.hlo.txt").exists() {
-            eprintln!("skipping: artifacts missing (run `make artifacts`)");
+        if !crate::runtime::can_execute_artifacts() {
+            eprintln!("skipping: needs artifacts + a real PJRT backend (DESIGN.md §5)");
             return;
         }
         let server = Server::builder()
@@ -355,12 +375,11 @@ mod tests {
             .unwrap();
 
         let config = DqnConfig {
-            server_addr: server.local_addr().to_string(),
             num_actors: 2,
             train_steps: 12,
             publish_period: 4,
             actor_refresh_period: 50,
-            ..DqnConfig::default()
+            ..DqnConfig::for_server(&server)
         };
         let report = run_dqn(config).unwrap();
         assert_eq!(report.losses.len(), 12);

@@ -45,13 +45,19 @@ impl ChunkStore {
     /// the same key exists it is returned instead (idempotent insert — a
     /// retrying writer may resend a chunk).
     pub fn insert(&self, chunk: Chunk) -> Arc<Chunk> {
+        self.insert_arc(Arc::new(chunk))
+    }
+
+    /// Register an already-shared chunk without re-allocating. This is the
+    /// zero-copy in-process insert path: the writer's `Arc<Chunk>` travels
+    /// through the transport and is registered here as-is.
+    pub fn insert_arc(&self, chunk: Arc<Chunk>) -> Arc<Chunk> {
         let mut shard = self.shard(chunk.key).lock().unwrap();
         if let Some(existing) = shard.get(&chunk.key).and_then(Weak::upgrade) {
             return existing;
         }
-        let arc = Arc::new(chunk);
-        shard.insert(arc.key, Arc::downgrade(&arc));
-        arc
+        shard.insert(chunk.key, Arc::downgrade(&chunk));
+        chunk
     }
 
     /// Look up a live chunk.

@@ -3,9 +3,11 @@
 //! A Rust reproduction of *"Reverb: A Framework For Experience Replay"*
 //! (Cassirer et al., 2021): an efficient, flexible data storage and
 //! transport system for reinforcement learning, with a streaming
-//! client/server, pluggable selectors, SPI rate limiting, chunked and
-//! compressed storage, checkpointing, and sharding — plus a three-layer
-//! JAX/Pallas learner stack executed through PJRT (see `runtime`).
+//! client/server over a pluggable transport (TCP or a zero-copy in-process
+//! channel — see `net::transport`), pluggable selectors, SPI rate
+//! limiting, chunked and compressed storage, checkpointing, and sharding —
+//! plus a three-layer JAX/Pallas learner stack executed through PJRT (see
+//! `runtime`; the PJRT backend itself is gated, DESIGN.md §5).
 
 pub mod client;
 pub mod coordinator;

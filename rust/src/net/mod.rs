@@ -1,8 +1,10 @@
-//! Networking: the wire protocol (gRPC analogue), the server, and the
-//! checkpoint gate.
+//! Networking: the wire protocol (gRPC analogue), the pluggable transport
+//! layer (TCP + zero-copy in-process), the server, and the checkpoint gate.
 
 pub mod gate;
 pub mod server;
+pub mod transport;
 pub mod wire;
 
 pub use server::{Server, ServerBuilder};
+pub use transport::{dial, MsgStream, TransportListener, IN_PROC_SCHEME};

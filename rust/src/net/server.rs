@@ -1,7 +1,11 @@
-//! The Reverb server: a TCP listener exposing tables over the wire
-//! protocol, with one service thread per connection (Reverb's gRPC server
-//! is likewise thread-pooled; contention behaviour lives in the tables, not
-//! the transport — see DESIGN.md §2).
+//! The Reverb server: tables exposed over the wire protocol through any
+//! number of [`TransportListener`]s, with one service thread per connection
+//! (Reverb's gRPC server is likewise thread-pooled; contention behaviour
+//! lives in the tables, not the transport — see DESIGN.md §2).
+//!
+//! Every server registers an in-process endpoint (`reverb://in-proc/...`);
+//! [`ServerBuilder::bind`] additionally opens a TCP listener, while
+//! [`ServerBuilder::serve_in_proc`] serves the in-process path alone.
 
 use crate::core::chunk::Chunk;
 use crate::core::chunk_store::ChunkStore;
@@ -10,10 +14,12 @@ use crate::core::item::Item;
 use crate::core::table::{Table, TableConfig, TableInfo};
 use crate::error::{Error, Result};
 use crate::net::gate::Gate;
+use crate::net::transport::{
+    self, InProcListener, MsgStream, TcpTransportListener, TransportListener,
+};
 use crate::net::wire::{error_code, Message, WireItem, WireSampleInfo};
 use std::collections::HashMap;
-use std::io::{BufReader, BufWriter, Write};
-use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::net::{SocketAddr, TcpStream};
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::Arc;
@@ -33,6 +39,7 @@ pub struct ServerBuilder {
     checkpoint_dir: Option<PathBuf>,
     load_checkpoint: Option<PathBuf>,
     checkpoint_interval: Option<Duration>,
+    in_proc_name: Option<String>,
 }
 
 impl ServerBuilder {
@@ -42,6 +49,7 @@ impl ServerBuilder {
             checkpoint_dir: None,
             load_checkpoint: None,
             checkpoint_interval: None,
+            in_proc_name: None,
         }
     }
 
@@ -81,8 +89,34 @@ impl ServerBuilder {
         self
     }
 
-    /// Bind to `addr` (use port 0 for an ephemeral port) and start serving.
+    /// Name the in-process endpoint (default: a process-unique name).
+    pub fn in_proc_name(mut self, name: impl Into<String>) -> Self {
+        self.in_proc_name = Some(name.into());
+        self
+    }
+
+    /// Bind a TCP listener on `addr` (use port 0 for an ephemeral port) and
+    /// start serving. The in-process endpoint is registered as well.
     pub fn bind(self, addr: &str) -> Result<Server> {
+        let tcp = TcpTransportListener::bind(addr)?;
+        let local_addr = tcp.local_addr();
+        let in_proc_name = self.in_proc_name.clone();
+        let in_proc = InProcListener::bind(in_proc_name)?;
+        self.start(Some((tcp, local_addr)), in_proc)
+    }
+
+    /// Serve the zero-copy in-process transport only — no sockets at all.
+    /// Clients connect via [`Server::in_proc_addr`].
+    pub fn serve_in_proc(self) -> Result<Server> {
+        let in_proc = InProcListener::bind(self.in_proc_name.clone())?;
+        self.start(None, in_proc)
+    }
+
+    fn start(
+        self,
+        tcp: Option<(TcpTransportListener, SocketAddr)>,
+        in_proc: InProcListener,
+    ) -> Result<Server> {
         let mut tables = HashMap::new();
         let mut table_order = Vec::new();
         for (config, extensions) in self.tables {
@@ -90,6 +124,7 @@ impl ServerBuilder {
             let t = Arc::new(Table::with_extensions(config, extensions));
             table_order.push(t.clone());
             if tables.insert(name.clone(), t).is_some() {
+                // `in_proc` unbinds itself on drop (token-guarded RAII).
                 return Err(Error::InvalidArgument(format!("duplicate table {name}")));
             }
         }
@@ -107,13 +142,26 @@ impl ServerBuilder {
             shutdown: AtomicBool::new(false),
         });
 
-        let listener = TcpListener::bind(addr)?;
-        let local_addr = listener.local_addr()?;
-        let accept_inner = inner.clone();
-        let accept_thread = std::thread::Builder::new()
-            .name("reverb-accept".into())
-            .spawn(move || accept_loop(listener, accept_inner))
-            .expect("spawn accept thread");
+        let in_proc_addr = in_proc.endpoint();
+        let in_proc_name = in_proc.name().to_string();
+        let mut shutdowns = vec![ListenerShutdown::InProc(in_proc_name)];
+        let mut listeners: Vec<Box<dyn TransportListener>> = vec![Box::new(in_proc)];
+        let local_addr = tcp.map(|(listener, addr)| {
+            shutdowns.push(ListenerShutdown::Tcp(addr));
+            listeners.push(Box::new(listener));
+            addr
+        });
+
+        let mut accept_threads = Vec::with_capacity(listeners.len());
+        for listener in listeners {
+            let accept_inner = inner.clone();
+            accept_threads.push(
+                std::thread::Builder::new()
+                    .name("reverb-accept".into())
+                    .spawn(move || accept_loop(listener, accept_inner))
+                    .expect("spawn accept thread"),
+            );
+        }
 
         // Periodic checkpointer (§3.7), if configured.
         let checkpoint_thread = self.checkpoint_interval.map(|interval| {
@@ -146,7 +194,9 @@ impl ServerBuilder {
         Ok(Server {
             inner,
             local_addr,
-            accept_thread: Some(accept_thread),
+            in_proc_addr,
+            shutdowns,
+            accept_threads,
             checkpoint_thread,
         })
     }
@@ -169,12 +219,22 @@ struct ServerInner {
     shutdown: AtomicBool,
 }
 
+/// How to unblock one listener's accept loop on shutdown.
+enum ListenerShutdown {
+    /// Dummy-connect to wake the blocking `accept`.
+    Tcp(SocketAddr),
+    /// Unbind the registry entry; the accept channel disconnects.
+    InProc(String),
+}
+
 /// A running Reverb server. Dropping (or calling [`Server::stop`]) shuts it
 /// down and releases all blocked clients.
 pub struct Server {
     inner: Arc<ServerInner>,
-    local_addr: SocketAddr,
-    accept_thread: Option<std::thread::JoinHandle<()>>,
+    local_addr: Option<SocketAddr>,
+    in_proc_addr: String,
+    shutdowns: Vec<ListenerShutdown>,
+    accept_threads: Vec<std::thread::JoinHandle<()>>,
     checkpoint_thread: Option<std::thread::JoinHandle<()>>,
 }
 
@@ -184,9 +244,25 @@ impl Server {
         ServerBuilder::new()
     }
 
-    /// The bound address (e.g. `127.0.0.1:41523`).
+    /// The bound TCP address (e.g. `127.0.0.1:41523`).
+    ///
+    /// Panics for in-process-only servers ([`ServerBuilder::serve_in_proc`]);
+    /// use [`Server::tcp_addr`] to probe.
     pub fn local_addr(&self) -> SocketAddr {
         self.local_addr
+            .expect("server has no TCP listener (in-proc only)")
+    }
+
+    /// The bound TCP address, if a TCP listener was requested.
+    pub fn tcp_addr(&self) -> Option<SocketAddr> {
+        self.local_addr
+    }
+
+    /// The in-process endpoint (`reverb://in-proc/<name>`), always
+    /// available. Same-process clients connecting here skip
+    /// serialization and syscalls entirely.
+    pub fn in_proc_addr(&self) -> String {
+        self.in_proc_addr.clone()
     }
 
     /// Direct in-process access to a table — used by benchmarks that want
@@ -214,7 +290,7 @@ impl Server {
         self.inner.checkpoint()
     }
 
-    /// Stop serving: wake blocked clients, close the listener, join.
+    /// Stop serving: wake blocked clients, close the listeners, join.
     pub fn stop(&mut self) {
         if self.inner.shutdown.swap(true, Ordering::SeqCst) {
             return;
@@ -222,9 +298,16 @@ impl Server {
         for t in &self.inner.table_order {
             t.cancel();
         }
-        // Unblock the accept loop.
-        let _ = TcpStream::connect(self.local_addr);
-        if let Some(h) = self.accept_thread.take() {
+        for s in &self.shutdowns {
+            match s {
+                // Unblock the accept loop.
+                ListenerShutdown::Tcp(addr) => {
+                    let _ = TcpStream::connect(addr);
+                }
+                ListenerShutdown::InProc(name) => transport::in_proc_unbind(name),
+            }
+        }
+        for h in self.accept_threads.drain(..) {
             let _ = h.join();
         }
         if let Some(h) = self.checkpoint_thread.take() {
@@ -301,10 +384,10 @@ impl ServerInner {
     }
 }
 
-fn accept_loop(listener: TcpListener, inner: Arc<ServerInner>) {
+fn accept_loop(mut listener: Box<dyn TransportListener>, inner: Arc<ServerInner>) {
     loop {
         match listener.accept() {
-            Ok((stream, _peer)) => {
+            Ok(Some(stream)) => {
                 if inner.shutdown.load(Ordering::SeqCst) {
                     return;
                 }
@@ -315,6 +398,8 @@ fn accept_loop(listener: TcpListener, inner: Arc<ServerInner>) {
                         let _ = serve_connection(stream, conn_inner);
                     });
             }
+            // Listener closed cleanly (in-proc unbind).
+            Ok(None) => return,
             Err(_) => {
                 if inner.shutdown.load(Ordering::SeqCst) {
                     return;
@@ -370,11 +455,10 @@ fn sampled_to_wire(s: &crate::core::item::SampledItem) -> (WireSampleInfo, Vec<A
     (info, s.item.chunks.clone())
 }
 
-fn serve_connection(stream: TcpStream, inner: Arc<ServerInner>) -> Result<()> {
-    stream.set_nodelay(true)?;
-    let mut reader = BufReader::with_capacity(256 * 1024, stream.try_clone()?);
-    let mut writer = BufWriter::with_capacity(256 * 1024, stream);
-    // Chunks streamed on this connection, awaiting item creation.
+fn serve_connection(mut stream: Box<dyn MsgStream>, inner: Arc<ServerInner>) -> Result<()> {
+    // Chunks streamed on this connection, awaiting item creation. On the
+    // in-process transport these are the writer's own allocations — the
+    // whole insert path is copy-free from client append to table item.
     let mut pending: HashMap<u64, Arc<Chunk>> = HashMap::new();
     let mut pending_order: std::collections::VecDeque<u64> = std::collections::VecDeque::new();
 
@@ -382,7 +466,7 @@ fn serve_connection(stream: TcpStream, inner: Arc<ServerInner>) -> Result<()> {
         if inner.shutdown.load(Ordering::SeqCst) {
             return Ok(());
         }
-        let msg = match Message::read_frame(&mut reader) {
+        let msg = match stream.recv() {
             Ok(m) => m,
             Err(Error::Io(_)) => return Ok(()), // client hung up
             Err(e) => return Err(e),
@@ -391,7 +475,7 @@ fn serve_connection(stream: TcpStream, inner: Arc<ServerInner>) -> Result<()> {
             Message::InsertChunks { chunks } => {
                 for chunk in chunks {
                     let key = chunk.key;
-                    let arc = inner.store.insert(chunk);
+                    let arc = inner.store.insert_arc(chunk);
                     if pending.insert(key, arc).is_none() {
                         pending_order.push_back(key);
                     }
@@ -411,7 +495,7 @@ fn serve_connection(stream: TcpStream, inner: Arc<ServerInner>) -> Result<()> {
                     inner.gated_insert(&table, item, Duration::from_millis(timeout_ms))?;
                     Ok(())
                 })();
-                send_reply(&mut writer, id, reply.map(|()| String::new()))?;
+                send_reply(stream.as_mut(), id, reply.map(|()| String::new()))?;
             }
             Message::SampleRequest {
                 id,
@@ -436,19 +520,22 @@ fn serve_connection(stream: TcpStream, inner: Arc<ServerInner>) -> Result<()> {
                             infos.push(info);
                             for c in item_chunks {
                                 // Dedup chunks shared across items in this
-                                // response batch; encode straight from the
-                                // Arc (no payload clone) — hot path. Linear
-                                // scan beats a HashSet at batch sizes.
+                                // response batch. The response carries the
+                                // shared handles: TCP encodes straight from
+                                // them, in-proc hands them to the client
+                                // as-is — no payload clone either way (hot
+                                // path). Linear scan beats a HashSet at
+                                // batch sizes.
                                 if !chunks.iter().any(|x| x.key == c.key) {
                                     chunks.push(c);
                                 }
                             }
                         }
-                        Message::write_sample_data_frame(&mut writer, id, &infos, &chunks)?;
-                        writer.flush()?;
+                        stream.send(Message::SampleData { id, infos, chunks })?;
+                        stream.flush()?;
                     }
                     Err(e) => {
-                        send_err(&mut writer, id, &e)?;
+                        send_err(stream.as_mut(), id, &e)?;
                     }
                 }
             }
@@ -465,7 +552,7 @@ fn serve_connection(stream: TcpStream, inner: Arc<ServerInner>) -> Result<()> {
                     let deleted = table.delete(&deletes)?;
                     Ok(format!("updated={updated} deleted={deleted}"))
                 })();
-                send_reply(&mut writer, id, reply)?;
+                send_reply(stream.as_mut(), id, reply)?;
             }
             Message::Reset { id, table } => {
                 let reply = (|| {
@@ -474,7 +561,7 @@ fn serve_connection(stream: TcpStream, inner: Arc<ServerInner>) -> Result<()> {
                     table.reset();
                     Ok(String::new())
                 })();
-                send_reply(&mut writer, id, reply)?;
+                send_reply(stream.as_mut(), id, reply)?;
             }
             Message::InfoRequest { id } => {
                 let tables = inner
@@ -482,14 +569,14 @@ fn serve_connection(stream: TcpStream, inner: Arc<ServerInner>) -> Result<()> {
                     .iter()
                     .map(|t| (t.name().to_string(), t.info()))
                     .collect();
-                Message::Info { id, tables }.write_frame(&mut writer)?;
-                writer.flush()?;
+                stream.send(Message::Info { id, tables })?;
+                stream.flush()?;
             }
             Message::Checkpoint { id } => {
                 let reply = inner
                     .checkpoint()
                     .map(|p| p.display().to_string());
-                send_reply(&mut writer, id, reply)?;
+                send_reply(stream.as_mut(), id, reply)?;
             }
             // Server-to-client messages arriving at the server are protocol
             // violations.
@@ -503,31 +590,26 @@ fn serve_connection(stream: TcpStream, inner: Arc<ServerInner>) -> Result<()> {
     }
 }
 
-fn send_reply<W: Write>(w: &mut W, id: u64, result: Result<String>) -> Result<()> {
-    match result {
-        Ok(detail) => Message::Ack { id, detail }.write_frame(w)?,
-        Err(e) => {
-            Message::Err {
-                id,
-                code: error_code(&e),
-                message: e.to_string(),
-            }
-            .write_frame(w)?;
-        }
-    }
-    w.flush()?;
-    Ok(())
+fn send_reply(stream: &mut dyn MsgStream, id: u64, result: Result<String>) -> Result<()> {
+    let msg = match result {
+        Ok(detail) => Message::Ack { id, detail },
+        Err(e) => Message::Err {
+            id,
+            code: error_code(&e),
+            message: e.to_string(),
+        },
+    };
+    stream.send(msg)?;
+    stream.flush()
 }
 
-fn send_err<W: Write>(w: &mut W, id: u64, e: &Error) -> Result<()> {
-    Message::Err {
+fn send_err(stream: &mut dyn MsgStream, id: u64, e: &Error) -> Result<()> {
+    stream.send(Message::Err {
         id,
         code: error_code(e),
         message: e.to_string(),
-    }
-    .write_frame(w)?;
-    w.flush()?;
-    Ok(())
+    })?;
+    stream.flush()
 }
 
 #[cfg(test)]
@@ -535,10 +617,12 @@ mod tests {
     use super::*;
     use crate::core::chunk::Compression;
     use crate::core::tensor::Tensor;
+    use crate::net::wire::Message;
+    use std::io::{BufReader, BufWriter, Write};
 
-    fn mk_chunk(key: u64, v: f32) -> Chunk {
+    fn mk_chunk(key: u64, v: f32) -> Arc<Chunk> {
         let steps = vec![vec![Tensor::from_f32(&[1], &[v]).unwrap()]];
-        Chunk::from_steps(key, 0, &steps, Compression::None).unwrap()
+        Arc::new(Chunk::from_steps(key, 0, &steps, Compression::None).unwrap())
     }
 
     fn start_server() -> Server {
@@ -549,7 +633,9 @@ mod tests {
             .unwrap()
     }
 
-    /// Raw-protocol round trip (the typed Client is tested in client/).
+    /// Raw-protocol round trip over plain TCP framing (the typed Client is
+    /// tested in client/; both transports are covered by the conformance
+    /// suite in tests/transport_conformance.rs).
     #[test]
     fn raw_insert_then_sample_over_tcp() {
         let server = start_server();
@@ -602,6 +688,75 @@ mod tests {
                 assert_eq!(steps[0][0].to_f32().unwrap(), vec![3.5]);
             }
             other => panic!("expected samples, got {other:?}"),
+        }
+    }
+
+    /// The same raw round trip over the in-process transport, proving both
+    /// backends speak the identical protocol — and that the sampled chunk
+    /// is the very allocation the server holds (zero-copy).
+    #[test]
+    fn raw_insert_then_sample_in_proc() {
+        let server = start_server();
+        let mut conn = transport::dial(&server.in_proc_addr()).unwrap();
+        let sent = mk_chunk(21, 9.25);
+        conn.send(Message::InsertChunks {
+            chunks: vec![sent.clone()],
+        })
+        .unwrap();
+        conn.send(Message::CreateItem {
+            id: 1,
+            item: WireItem {
+                key: 9,
+                table: "replay".into(),
+                priority: 1.0,
+                chunk_keys: vec![21],
+                offset: 0,
+                length: 1,
+                times_sampled: 0,
+            },
+            timeout_ms: 1000,
+        })
+        .unwrap();
+        conn.flush().unwrap();
+        match conn.recv().unwrap() {
+            Message::Ack { id, .. } => assert_eq!(id, 1),
+            other => panic!("expected ack, got {other:?}"),
+        }
+
+        conn.send(Message::SampleRequest {
+            id: 2,
+            table: "replay".into(),
+            num_samples: 1,
+            timeout_ms: 1000,
+        })
+        .unwrap();
+        conn.flush().unwrap();
+        match conn.recv().unwrap() {
+            Message::SampleData { id, infos, chunks } => {
+                assert_eq!(id, 2);
+                assert_eq!(infos[0].item.key, 9);
+                assert!(
+                    Arc::ptr_eq(&chunks[0], &sent),
+                    "in-proc sample must share the inserted chunk allocation"
+                );
+            }
+            other => panic!("expected samples, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn in_proc_only_server_serves_and_reports_no_tcp() {
+        let server = Server::builder()
+            .table(TableConfig::uniform_replay("t", 10))
+            .serve_in_proc()
+            .unwrap();
+        assert!(server.tcp_addr().is_none());
+        let mut conn = transport::dial(&server.in_proc_addr()).unwrap();
+        conn.send(Message::InfoRequest { id: 5 }).unwrap();
+        conn.flush().unwrap();
+        match conn.recv().unwrap() {
+            Message::Info { tables, .. } => assert_eq!(tables[0].0, "t"),
+            other => panic!("expected info, got {other:?}"),
         }
     }
 
@@ -697,6 +852,18 @@ mod tests {
     }
 
     #[test]
+    fn stop_unbinds_in_proc_endpoint() {
+        let mut server = Server::builder()
+            .table(TableConfig::uniform_replay("t", 10))
+            .serve_in_proc()
+            .unwrap();
+        let addr = server.in_proc_addr();
+        assert!(transport::dial(&addr).is_ok());
+        server.stop();
+        assert!(transport::dial(&addr).is_err(), "endpoint must be unbound");
+    }
+
+    #[test]
     fn periodic_checkpointing_writes_files() {
         let dir = std::env::temp_dir().join(format!("reverb_periodic_{}", std::process::id()));
         std::fs::create_dir_all(&dir).unwrap();
@@ -744,5 +911,23 @@ mod tests {
             .table(TableConfig::uniform_replay("t", 10))
             .bind("127.0.0.1:0");
         assert!(r.is_err());
+    }
+
+    #[test]
+    fn named_in_proc_endpoint_and_duplicate_name_rejected() {
+        let server = Server::builder()
+            .table(TableConfig::uniform_replay("t", 10))
+            .in_proc_name("named-endpoint-test")
+            .serve_in_proc()
+            .unwrap();
+        assert_eq!(
+            server.in_proc_addr(),
+            format!("{}named-endpoint-test", crate::net::transport::IN_PROC_SCHEME)
+        );
+        let dup = Server::builder()
+            .table(TableConfig::uniform_replay("t", 10))
+            .in_proc_name("named-endpoint-test")
+            .serve_in_proc();
+        assert!(dup.is_err());
     }
 }

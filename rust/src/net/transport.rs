@@ -1,0 +1,446 @@
+//! Pluggable transport (DESIGN.md §2): framed [`Message`] streams between
+//! clients and servers, with two interchangeable backends.
+//!
+//! - **`tcp://host:port`** (bare `host:port` also accepted) — the original
+//!   path: length-prefixed frames over a `TcpStream`, `Message`s encoded and
+//!   decoded at each end.
+//! - **`reverb://in-proc/<name>`** — a zero-copy in-process path: whole
+//!   [`Message`] values move through channels (requests bounded for
+//!   backpressure, replies unbounded for deadlock freedom — see
+//!   [`CHANNEL_DEPTH`]), so chunk payloads (`Arc<Chunk>`) are *shared*,
+//!   never serialized, copied, or pushed through a syscall. This is the
+//!   default data plane for same-process actor/learner harnesses
+//!   (`coordinator`), where the paper notes the throughput ceiling should
+//!   live in the tables, not the transport.
+//!
+//! Both backends carry the identical protocol and error mapping: a closed
+//! peer surfaces as [`Error::Io`], exactly like a TCP hang-up, so every
+//! layer above (`Server`, `Client`, `Writer`, `Sampler`) is
+//! transport-oblivious. The conformance suite in
+//! `rust/tests/transport_conformance.rs` runs every black-box scenario
+//! against both backends.
+
+use crate::error::{Error, Result};
+use crate::net::wire::Message;
+use std::collections::HashMap;
+use std::io::Write as _;
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{channel, sync_channel, Receiver, Sender, SyncSender};
+use std::sync::{Mutex, OnceLock};
+
+/// URL prefix of the in-process backend.
+pub const IN_PROC_SCHEME: &str = "reverb://in-proc/";
+
+/// Request-direction (client→server) messages buffered on an in-process
+/// connection. Bounded so requests see the same backpressure a full TCP
+/// socket buffer would. The reply direction is deliberately *unbounded*:
+/// a server that can never block on replies always drains requests, which
+/// rules out the request-full/reply-full deadlock for arbitrarily large
+/// client pipelining windows; reply memory stays bounded by the client's
+/// outstanding-request window for any client that reads its replies.
+const CHANNEL_DEPTH: usize = 256;
+
+/// Pending, not-yet-accepted connections per in-process listener.
+const ACCEPT_BACKLOG: usize = 64;
+
+/// A bidirectional, framed [`Message`] stream. `send` may buffer until
+/// `flush`; `recv` blocks for the next message. A closed peer yields
+/// [`Error::Io`] from `recv`/`send`, mirroring TCP semantics.
+pub trait MsgStream: Send {
+    fn send(&mut self, msg: Message) -> Result<()>;
+    fn flush(&mut self) -> Result<()>;
+    fn recv(&mut self) -> Result<Message>;
+    /// Backend name for diagnostics ("tcp" / "in-proc").
+    fn transport(&self) -> &'static str;
+}
+
+/// Server side of a transport: blocks for inbound connections.
+pub trait TransportListener: Send {
+    /// Next connection. `Ok(None)` means the listener was shut down.
+    fn accept(&mut self) -> Result<Option<Box<dyn MsgStream>>>;
+    /// The endpoint string clients dial to reach this listener.
+    fn endpoint(&self) -> String;
+}
+
+/// Connect to an endpoint by URL. Dispatches on scheme:
+/// `reverb://in-proc/<name>` (or `inproc://<name>`) to the channel backend,
+/// `tcp://host:port` or bare `host:port` to TCP.
+pub fn dial(addr: &str) -> Result<Box<dyn MsgStream>> {
+    if let Some(name) = addr.strip_prefix(IN_PROC_SCHEME) {
+        return Ok(Box::new(dial_in_proc(name)?));
+    }
+    if let Some(name) = addr.strip_prefix("inproc://") {
+        return Ok(Box::new(dial_in_proc(name)?));
+    }
+    let hostport = addr.strip_prefix("tcp://").unwrap_or(addr);
+    Ok(Box::new(TcpMsgStream::connect(hostport)?))
+}
+
+// ---------------------------------------------------------------------
+// TCP backend
+// ---------------------------------------------------------------------
+
+/// Buffered frame codec over one TCP connection.
+pub struct TcpMsgStream {
+    reader: std::io::BufReader<TcpStream>,
+    writer: std::io::BufWriter<TcpStream>,
+}
+
+impl TcpMsgStream {
+    pub fn connect(addr: &str) -> Result<TcpMsgStream> {
+        Self::from_stream(TcpStream::connect(addr)?)
+    }
+
+    pub fn from_stream(stream: TcpStream) -> Result<TcpMsgStream> {
+        stream.set_nodelay(true)?;
+        Ok(TcpMsgStream {
+            reader: std::io::BufReader::with_capacity(256 * 1024, stream.try_clone()?),
+            writer: std::io::BufWriter::with_capacity(256 * 1024, stream),
+        })
+    }
+}
+
+impl MsgStream for TcpMsgStream {
+    fn send(&mut self, msg: Message) -> Result<()> {
+        msg.write_frame(&mut self.writer)
+    }
+
+    fn flush(&mut self) -> Result<()> {
+        self.writer.flush()?;
+        Ok(())
+    }
+
+    fn recv(&mut self) -> Result<Message> {
+        Message::read_frame(&mut self.reader)
+    }
+
+    fn transport(&self) -> &'static str {
+        "tcp"
+    }
+}
+
+/// TCP listener half.
+pub struct TcpTransportListener {
+    listener: TcpListener,
+    local: SocketAddr,
+}
+
+impl TcpTransportListener {
+    pub fn bind(addr: &str) -> Result<TcpTransportListener> {
+        let listener = TcpListener::bind(addr)?;
+        let local = listener.local_addr()?;
+        Ok(TcpTransportListener { listener, local })
+    }
+
+    pub fn local_addr(&self) -> SocketAddr {
+        self.local
+    }
+}
+
+impl TransportListener for TcpTransportListener {
+    fn accept(&mut self) -> Result<Option<Box<dyn MsgStream>>> {
+        let (stream, _peer) = self.listener.accept()?;
+        Ok(Some(Box::new(TcpMsgStream::from_stream(stream)?)))
+    }
+
+    fn endpoint(&self) -> String {
+        format!("tcp://{}", self.local)
+    }
+}
+
+// ---------------------------------------------------------------------
+// In-process backend
+// ---------------------------------------------------------------------
+
+/// Sending half of an in-process direction: requests are bounded
+/// (backpressure), replies unbounded (deadlock freedom) — see
+/// [`CHANNEL_DEPTH`].
+enum Tx {
+    Bounded(SyncSender<Message>),
+    Unbounded(Sender<Message>),
+}
+
+impl Tx {
+    fn send(&self, msg: Message) -> std::result::Result<(), ()> {
+        match self {
+            Tx::Bounded(tx) => tx.send(msg).map_err(|_| ()),
+            Tx::Unbounded(tx) => tx.send(msg).map_err(|_| ()),
+        }
+    }
+}
+
+/// One direction-pair of channels. Chunk payloads inside the `Message` are
+/// `Arc<Chunk>` handles, so moving a message through the channel shares
+/// the payload instead of copying it.
+pub struct ChannelMsgStream {
+    tx: Tx,
+    rx: Receiver<Message>,
+}
+
+fn peer_closed() -> Error {
+    Error::Io(std::io::Error::new(
+        std::io::ErrorKind::BrokenPipe,
+        "in-proc peer closed",
+    ))
+}
+
+impl MsgStream for ChannelMsgStream {
+    fn send(&mut self, msg: Message) -> Result<()> {
+        self.tx.send(msg).map_err(|()| peer_closed())
+    }
+
+    fn flush(&mut self) -> Result<()> {
+        Ok(())
+    }
+
+    fn recv(&mut self) -> Result<Message> {
+        self.rx.recv().map_err(|_| peer_closed())
+    }
+
+    fn transport(&self) -> &'static str {
+        "in-proc"
+    }
+}
+
+/// Build a connected pair of in-process streams (client side, server
+/// side). The client→server direction is bounded, server→client
+/// unbounded — see [`CHANNEL_DEPTH`] for why.
+pub fn channel_pair() -> (ChannelMsgStream, ChannelMsgStream) {
+    let (tx_c2s, rx_c2s) = sync_channel(CHANNEL_DEPTH);
+    let (tx_s2c, rx_s2c) = channel();
+    (
+        ChannelMsgStream {
+            tx: Tx::Bounded(tx_c2s),
+            rx: rx_s2c,
+        },
+        ChannelMsgStream {
+            tx: Tx::Unbounded(tx_s2c),
+            rx: rx_c2s,
+        },
+    )
+}
+
+/// A registered in-proc endpoint: the accept-queue sender plus a unique
+/// token so a stale listener's `Drop` can never unbind a newer endpoint
+/// that reused its name.
+struct RegisteredEndpoint {
+    token: u64,
+    tx: SyncSender<ChannelMsgStream>,
+}
+
+/// Process-wide endpoint registry: in-proc listeners register here; `dial`
+/// looks the name up and hands the listener the server half of a fresh
+/// channel pair.
+fn registry() -> &'static Mutex<HashMap<String, RegisteredEndpoint>> {
+    static REGISTRY: OnceLock<Mutex<HashMap<String, RegisteredEndpoint>>> = OnceLock::new();
+    REGISTRY.get_or_init(|| Mutex::new(HashMap::new()))
+}
+
+fn next_token() -> u64 {
+    static NEXT: AtomicU64 = AtomicU64::new(0);
+    NEXT.fetch_add(1, Ordering::Relaxed)
+}
+
+fn unique_name() -> String {
+    format!("srv-{}-{}", std::process::id(), next_token())
+}
+
+fn dial_in_proc(name: &str) -> Result<ChannelMsgStream> {
+    let refused = || {
+        Error::Io(std::io::Error::new(
+            std::io::ErrorKind::ConnectionRefused,
+            format!("no in-proc server at {name:?}"),
+        ))
+    };
+    let tx = registry()
+        .lock()
+        .unwrap()
+        .get(name)
+        .map(|e| e.tx.clone())
+        .ok_or_else(&refused)?;
+    let (client_side, server_side) = channel_pair();
+    // Sent outside the registry lock: a full accept backlog must not block
+    // the whole registry.
+    tx.send(server_side).map_err(|_| refused())?;
+    Ok(client_side)
+}
+
+/// Remove an endpoint from the registry by name (server shutdown).
+/// Dropping the registered sender unblocks the listener's `accept` with
+/// `Ok(None)`.
+pub fn in_proc_unbind(name: &str) {
+    registry().lock().unwrap().remove(name);
+}
+
+/// In-process listener half. Unbinds itself on drop (token-guarded, so a
+/// name rebound by a newer listener in the meantime is left untouched).
+pub struct InProcListener {
+    name: String,
+    token: u64,
+    rx: Receiver<ChannelMsgStream>,
+}
+
+impl InProcListener {
+    /// Register an endpoint. `None` picks a process-unique name.
+    pub fn bind(name: Option<String>) -> Result<InProcListener> {
+        let name = name.unwrap_or_else(unique_name);
+        let token = next_token();
+        let (tx, rx) = sync_channel(ACCEPT_BACKLOG);
+        let mut reg = registry().lock().unwrap();
+        if reg.contains_key(&name) {
+            return Err(Error::InvalidArgument(format!(
+                "in-proc endpoint {name:?} already bound"
+            )));
+        }
+        reg.insert(name.clone(), RegisteredEndpoint { token, tx });
+        Ok(InProcListener { name, token, rx })
+    }
+
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+}
+
+impl Drop for InProcListener {
+    fn drop(&mut self) {
+        let mut reg = registry().lock().unwrap();
+        if reg.get(&self.name).is_some_and(|e| e.token == self.token) {
+            reg.remove(&self.name);
+        }
+    }
+}
+
+impl TransportListener for InProcListener {
+    fn accept(&mut self) -> Result<Option<Box<dyn MsgStream>>> {
+        match self.rx.recv() {
+            Ok(stream) => Ok(Some(Box::new(stream))),
+            // Every sender is gone: the endpoint was unbound.
+            Err(_) => Ok(None),
+        }
+    }
+
+    fn endpoint(&self) -> String {
+        format!("{IN_PROC_SCHEME}{}", self.name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::chunk::{Chunk, Compression};
+    use crate::core::tensor::Tensor;
+    use std::sync::Arc;
+
+    fn mk_chunk(key: u64) -> Arc<Chunk> {
+        let steps = vec![vec![Tensor::from_f32(&[2], &[1.0, 2.0]).unwrap()]];
+        Arc::new(Chunk::from_steps(key, 0, &steps, Compression::None).unwrap())
+    }
+
+    #[test]
+    fn channel_pair_is_zero_copy() {
+        // The defining property of the in-proc path: the receiver observes
+        // the *same allocation* the sender handed in, not a decoded copy.
+        let (mut a, mut b) = channel_pair();
+        let chunk = mk_chunk(7);
+        a.send(Message::InsertChunks {
+            chunks: vec![chunk.clone()],
+        })
+        .unwrap();
+        match b.recv().unwrap() {
+            Message::InsertChunks { chunks } => {
+                assert!(Arc::ptr_eq(&chunks[0], &chunk), "payload was copied");
+            }
+            other => panic!("wrong message {other:?}"),
+        }
+    }
+
+    #[test]
+    fn channel_pair_is_bidirectional() {
+        let (mut a, mut b) = channel_pair();
+        a.send(Message::InfoRequest { id: 1 }).unwrap();
+        assert!(matches!(b.recv().unwrap(), Message::InfoRequest { id: 1 }));
+        b.send(Message::Ack { id: 1, detail: "ok".into() }).unwrap();
+        assert!(matches!(a.recv().unwrap(), Message::Ack { id: 1, .. }));
+    }
+
+    #[test]
+    fn closed_peer_surfaces_as_io_error() {
+        let (mut a, b) = channel_pair();
+        drop(b);
+        assert!(matches!(
+            a.send(Message::InfoRequest { id: 1 }),
+            Err(Error::Io(_))
+        ));
+        assert!(matches!(a.recv(), Err(Error::Io(_))));
+    }
+
+    #[test]
+    fn bind_dial_accept_roundtrip() {
+        let mut listener = InProcListener::bind(Some("transport-test-1".into())).unwrap();
+        let endpoint = listener.endpoint();
+        assert_eq!(endpoint, format!("{IN_PROC_SCHEME}transport-test-1"));
+        let mut client = dial(&endpoint).unwrap();
+        let mut server = listener.accept().unwrap().expect("one connection");
+        client.send(Message::InfoRequest { id: 9 }).unwrap();
+        client.flush().unwrap();
+        assert!(matches!(server.recv().unwrap(), Message::InfoRequest { id: 9 }));
+        in_proc_unbind("transport-test-1");
+    }
+
+    #[test]
+    fn unbind_unblocks_accept_and_refuses_dials() {
+        let mut listener = InProcListener::bind(Some("transport-test-2".into())).unwrap();
+        in_proc_unbind("transport-test-2");
+        assert!(listener.accept().unwrap().is_none(), "accept must report closed");
+        assert!(dial(&format!("{IN_PROC_SCHEME}transport-test-2")).is_err());
+    }
+
+    #[test]
+    fn duplicate_bind_rejected() {
+        let _l = InProcListener::bind(Some("transport-test-3".into())).unwrap();
+        assert!(InProcListener::bind(Some("transport-test-3".into())).is_err());
+    }
+
+    #[test]
+    fn drop_unbinds_and_allows_rebinding() {
+        let listener = InProcListener::bind(Some("transport-test-4".into())).unwrap();
+        drop(listener);
+        assert!(dial("reverb://in-proc/transport-test-4").is_err());
+        // The name is free again.
+        let _again = InProcListener::bind(Some("transport-test-4".into())).unwrap();
+    }
+
+    #[test]
+    fn stale_listener_drop_leaves_rebound_name_alone() {
+        let stale = InProcListener::bind(Some("transport-test-5".into())).unwrap();
+        // Server shutdown unbinds by name...
+        in_proc_unbind("transport-test-5");
+        // ...and a new server rebinds it before the old listener drops.
+        let mut fresh = InProcListener::bind(Some("transport-test-5".into())).unwrap();
+        drop(stale); // token mismatch: must NOT unbind the fresh endpoint
+        let mut client = dial("reverb://in-proc/transport-test-5")
+            .expect("fresh endpoint must survive the stale drop");
+        let mut server = fresh.accept().unwrap().expect("one connection");
+        client.send(Message::InfoRequest { id: 1 }).unwrap();
+        assert!(matches!(server.recv().unwrap(), Message::InfoRequest { id: 1 }));
+    }
+
+    #[test]
+    fn dial_unknown_endpoint_refused() {
+        assert!(dial("reverb://in-proc/nowhere").is_err());
+    }
+
+    #[test]
+    fn tcp_scheme_prefix_is_accepted() {
+        let mut listener = TcpTransportListener::bind("127.0.0.1:0").unwrap();
+        let endpoint = listener.endpoint();
+        assert!(endpoint.starts_with("tcp://"));
+        let mut client = dial(&endpoint).unwrap();
+        assert_eq!(client.transport(), "tcp");
+        let mut server = listener.accept().unwrap().expect("one connection");
+        client.send(Message::InfoRequest { id: 3 }).unwrap();
+        client.flush().unwrap();
+        assert!(matches!(server.recv().unwrap(), Message::InfoRequest { id: 3 }));
+    }
+}

@@ -1,6 +1,13 @@
 //! Wire protocol: the gRPC replacement (see DESIGN.md §2).
 //!
-//! Frames are `[u32 length][u8 message-tag][payload]` over a TCP stream.
+//! On byte-stream transports (TCP), frames are
+//! `[u32 length][u8 message-tag][payload]`. On the in-process transport,
+//! whole [`Message`] values move through channels and this codec is never
+//! invoked — which is why chunk payloads are carried as `Arc<Chunk>`
+//! handles: the encoder serializes straight from the shared handle (no
+//! payload clone on the TCP hot path) and the in-process path shares the
+//! handle itself (no serialization at all).
+//!
 //! The protocol keeps the properties of Reverb's gRPC service that matter
 //! for behaviour and benchmarks: long-lived insert/sample streams, chunks
 //! transmitted separately from (and before) the items that reference them,
@@ -14,6 +21,7 @@ use crate::core::table::{TableConfig, TableInfo};
 use crate::error::{Error, Result};
 use crate::io::*;
 use std::io::{Read, Write};
+use std::sync::Arc;
 
 /// Maximum frame payload (1 GiB) — guards against corrupt length prefixes.
 pub const MAX_FRAME_LEN: usize = 1 << 30;
@@ -43,7 +51,7 @@ pub struct WireSampleInfo {
 pub enum Message {
     // ---- client → server ----
     /// Stream chunks ahead of the items that reference them. No reply.
-    InsertChunks { chunks: Vec<Chunk> },
+    InsertChunks { chunks: Vec<Arc<Chunk>> },
     /// Create an item referencing previously-streamed chunks. Server
     /// replies `Ack { id }` (or `Err`) once the insert commits, enabling
     /// windowed pipelining.
@@ -79,7 +87,7 @@ pub enum Message {
     SampleData {
         id: u64,
         infos: Vec<WireSampleInfo>,
-        chunks: Vec<Chunk>,
+        chunks: Vec<Arc<Chunk>>,
     },
     /// Server info response.
     Info { id: u64, tables: Vec<(String, TableInfo)> },
@@ -279,7 +287,9 @@ impl Message {
                 if n > 1 << 20 {
                     return Err(Error::Decode(format!("{n} chunks exceeds limit")));
                 }
-                let chunks = (0..n).map(|_| Chunk::decode(&mut r)).collect::<Result<_>>()?;
+                let chunks = (0..n)
+                    .map(|_| Chunk::decode(&mut r).map(Arc::new))
+                    .collect::<Result<_>>()?;
                 Message::InsertChunks { chunks }
             }
             TAG_CREATE_ITEM => Message::CreateItem {
@@ -349,7 +359,9 @@ impl Message {
                 if nc > 1 << 20 {
                     return Err(Error::Decode("too many chunks".into()));
                 }
-                let chunks = (0..nc).map(|_| Chunk::decode(&mut r)).collect::<Result<_>>()?;
+                let chunks = (0..nc)
+                    .map(|_| Chunk::decode(&mut r).map(Arc::new))
+                    .collect::<Result<_>>()?;
                 Message::SampleData { id, infos, chunks }
             }
             TAG_INFO => {
@@ -382,37 +394,11 @@ impl Message {
         Ok(msg)
     }
 
-    /// Zero-clone fast path for sample responses: encodes a `SampleData`
-    /// frame directly from shared chunk handles, avoiding the payload copy
-    /// that `Message::SampleData { chunks: Vec<Chunk> }` would require.
-    /// This is the server's hot sampling path (§5.2).
-    pub fn write_sample_data_frame<W: Write>(
-        w: &mut W,
-        id: u64,
-        infos: &[WireSampleInfo],
-        chunks: &[std::sync::Arc<Chunk>],
-    ) -> Result<()> {
-        let mut b = Vec::with_capacity(
-            64 + chunks.iter().map(|c| c.encoded_len() + 64).sum::<usize>(),
-        );
-        put_u64(&mut b, id)?;
-        put_u32(&mut b, infos.len() as u32)?;
-        for info in infos {
-            put_wire_item(&mut b, &info.item)?;
-            put_f64(&mut b, info.probability)?;
-            put_u64(&mut b, info.table_size)?;
-        }
-        put_u32(&mut b, chunks.len() as u32)?;
-        for c in chunks {
-            c.encode(&mut b)?;
-        }
-        put_u32(w, b.len() as u32)?;
-        put_u8(w, TAG_SAMPLE_DATA)?;
-        w.write_all(&b)?;
-        Ok(())
-    }
-
     /// Write a full frame (`[u32 len][u8 tag][body]`).
+    ///
+    /// Since chunk-bearing variants hold `Arc<Chunk>`, encoding serializes
+    /// straight from the shared handle — the server's hot sampling path
+    /// (§5.2) never clones chunk payloads to build a response frame.
     pub fn write_frame<W: Write>(&self, w: &mut W) -> Result<()> {
         let (tag, body) = self.encode_body()?;
         put_u32(w, body.len() as u32)?;
@@ -484,12 +470,12 @@ mod tests {
     use crate::core::chunk::Compression;
     use crate::core::tensor::Tensor;
 
-    fn mk_chunk(key: u64) -> Chunk {
+    fn mk_chunk(key: u64) -> Arc<Chunk> {
         let steps = vec![
             vec![Tensor::from_f32(&[2], &[1., 2.]).unwrap()],
             vec![Tensor::from_f32(&[2], &[3., 4.]).unwrap()],
         ];
-        Chunk::from_steps(key, 0, &steps, Compression::Zstd { level: 1 }).unwrap()
+        Arc::new(Chunk::from_steps(key, 0, &steps, Compression::Zstd { level: 1 }).unwrap())
     }
 
     fn roundtrip(msg: &Message) -> Message {
@@ -661,6 +647,64 @@ mod tests {
         put_u32(&mut buf, u32::MAX).unwrap();
         put_u8(&mut buf, TAG_ACK).unwrap();
         assert!(Message::read_frame(&mut std::io::Cursor::new(buf)).is_err());
+    }
+
+    #[test]
+    fn truncated_frame_rejected_at_every_cut() {
+        // A valid frame cut short at any byte boundary must produce a clean
+        // error (Io for missing bytes, Decode for malformed bodies) — never
+        // a panic or a bogus message.
+        let msg = Message::SampleData {
+            id: 3,
+            infos: vec![WireSampleInfo {
+                item: WireItem {
+                    key: 1,
+                    table: "t".into(),
+                    priority: 1.0,
+                    chunk_keys: vec![11],
+                    offset: 0,
+                    length: 2,
+                    times_sampled: 0,
+                },
+                probability: 0.5,
+                table_size: 4,
+            }],
+            chunks: vec![mk_chunk(11)],
+        };
+        let mut full = Vec::new();
+        msg.write_frame(&mut full).unwrap();
+        for cut in 0..full.len() {
+            let mut cursor = std::io::Cursor::new(&full[..cut]);
+            assert!(
+                Message::read_frame(&mut cursor).is_err(),
+                "truncation at {cut}/{} was accepted",
+                full.len()
+            );
+        }
+        // And the intact frame still decodes.
+        assert!(Message::read_frame(&mut std::io::Cursor::new(full)).is_ok());
+    }
+
+    #[test]
+    fn truncated_body_with_valid_header_rejected() {
+        // Header says the body is longer than what follows.
+        let (tag, body) = Message::InfoRequest { id: 1 }.encode_body().unwrap();
+        let mut buf = Vec::new();
+        put_u32(&mut buf, body.len() as u32 + 64).unwrap();
+        put_u8(&mut buf, tag).unwrap();
+        buf.extend_from_slice(&body);
+        assert!(Message::read_frame(&mut std::io::Cursor::new(buf)).is_err());
+    }
+
+    #[test]
+    fn frame_length_limit_is_exact() {
+        // MAX_FRAME_LEN itself is accepted by the length check (the read
+        // then fails on missing bytes); one past it is rejected outright.
+        let mut over = Vec::new();
+        put_u32(&mut over, (MAX_FRAME_LEN + 1) as u32).unwrap();
+        put_u8(&mut over, TAG_ACK).unwrap();
+        let err = Message::read_frame(&mut std::io::Cursor::new(over)).unwrap_err();
+        assert!(matches!(err, Error::Decode(_)), "{err}");
     }
 
     #[test]

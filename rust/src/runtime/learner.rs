@@ -398,12 +398,11 @@ mod tests {
     }
 
     /// End-to-end learner test against the real artifacts (skips without
-    /// `make artifacts`).
+    /// `make artifacts` and a real PJRT backend).
     #[test]
     fn learner_trains_on_synthetic_batch() {
-        let dir = default_artifacts_dir();
-        if !dir.join("qnet_train.hlo.txt").exists() {
-            eprintln!("skipping: artifacts missing (run `make artifacts`)");
+        if !crate::runtime::can_execute_artifacts() {
+            eprintln!("skipping: needs artifacts + a real PJRT backend (DESIGN.md §5)");
             return;
         }
         let mut learner = Learner::new(LearnerConfig::default()).unwrap();
@@ -445,8 +444,7 @@ mod tests {
 
     #[test]
     fn make_batch_validates_shapes() {
-        let dir = default_artifacts_dir();
-        if !dir.join("qnet_train.hlo.txt").exists() {
+        if !crate::runtime::can_execute_artifacts() {
             return;
         }
         let learner = Learner::new(LearnerConfig::default()).unwrap();

@@ -1,0 +1,48 @@
+//! Shared harness for dual-transport black-box tests: every scenario that
+//! talks to a server through a `Client` should run against both backends
+//! (TCP loopback and the zero-copy in-process channel) via these helpers.
+#![allow(dead_code)] // each test binary uses a subset of the helpers
+
+use reverb::net::server::{Server, ServerBuilder};
+use reverb::{Client, Tensor, WriterOptions};
+
+/// Start one server per transport backend and return
+/// `(server, endpoint, label)` triples. Keep the `Server` alive for the
+/// duration of the scenario — dropping it shuts the endpoint down.
+pub fn endpoints(build: impl Fn() -> ServerBuilder) -> Vec<(Server, String, &'static str)> {
+    let tcp = build().bind("127.0.0.1:0").unwrap();
+    let tcp_addr = format!("tcp://{}", tcp.local_addr());
+    let in_proc = build().serve_in_proc().unwrap();
+    let in_proc_addr = in_proc.in_proc_addr();
+    vec![(tcp, tcp_addr, "tcp"), (in_proc, in_proc_addr, "in-proc")]
+}
+
+/// Start a single server on the requested backend — for scenarios that
+/// need per-backend setup (extension handles) or to drop the server
+/// mid-test. Returns `(server, endpoint)`.
+pub fn build_one(in_proc: bool, builder: ServerBuilder) -> (Server, String) {
+    if in_proc {
+        let s = builder.serve_in_proc().unwrap();
+        let a = s.in_proc_addr();
+        (s, a)
+    } else {
+        let s = builder.bind("127.0.0.1:0").unwrap();
+        let a = format!("tcp://{}", s.local_addr());
+        (s, a)
+    }
+}
+
+/// One `[2]`-shaped f32 step carrying `[v, v + 0.5]`.
+pub fn step(v: f32) -> Vec<Tensor> {
+    vec![Tensor::from_f32(&[2], &[v, v + 0.5]).unwrap()]
+}
+
+/// Write `n` single-step items of [`step`]`(i)` into `table`.
+pub fn write_items(client: &Client, table: &str, n: usize, priority: impl Fn(usize) -> f64) {
+    let mut w = client.writer(WriterOptions::default()).unwrap();
+    for i in 0..n {
+        w.append(step(i as f32)).unwrap();
+        w.create_item(table, 1, priority(i)).unwrap();
+    }
+    w.flush().unwrap();
+}

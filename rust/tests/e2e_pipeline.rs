@@ -1,32 +1,30 @@
 //! End-to-end pipeline tests exercising runtime + coordinator against the
 //! real AOT artifacts (skipped when `make artifacts` has not run).
 
+mod common;
+
 use reverb::coordinator::{run_dqn, DqnConfig};
 use reverb::core::table::TableConfig;
 use reverb::net::server::Server;
-use reverb::runtime::learner::default_artifacts_dir;
-
-fn artifacts_present() -> bool {
-    default_artifacts_dir().join("qnet_train.hlo.txt").exists()
-}
 
 #[test]
 fn dqn_loss_is_finite_and_priorities_flow_back() {
-    if !artifacts_present() {
-        eprintln!("skipping: run `make artifacts`");
+    if !reverb::runtime::can_execute_artifacts() {
+        eprintln!("skipping: needs `make artifacts` + a real PJRT backend (DESIGN.md §5)");
         return;
     }
+    // The coordinator harness runs in-process with the server, so it uses
+    // the zero-copy transport by default (DqnConfig::for_server).
     let server = Server::builder()
         .table(TableConfig::prioritized_replay("replay", 10_000, 0.6, 8.0, 64, 2048.0).unwrap())
         .table(TableConfig::variable_container("variables"))
-        .bind("127.0.0.1:0")
+        .serve_in_proc()
         .unwrap();
     let report = run_dqn(DqnConfig {
-        server_addr: server.local_addr().to_string(),
         num_actors: 1,
         train_steps: 8,
         publish_period: 4,
-        ..DqnConfig::default()
+        ..DqnConfig::for_server(&server)
     })
     .unwrap();
     assert_eq!(report.losses.len(), 8);
@@ -43,35 +41,37 @@ fn dqn_loss_is_finite_and_priorities_flow_back() {
 
 #[test]
 fn queue_pipeline_preserves_order_under_load() {
-    // On-policy data plane: strict FIFO through a queue table over TCP.
-    let server = Server::builder()
-        .table(TableConfig::queue("q", 8))
-        .bind("127.0.0.1:0")
-        .unwrap();
-    let client = reverb::Client::connect(server.local_addr().to_string()).unwrap();
-    let producer = {
-        let client = client.clone();
-        std::thread::spawn(move || {
-            let mut w = client
-                .writer(reverb::WriterOptions::default().with_insert_timeout_ms(10_000))
-                .unwrap();
-            for i in 0..200i32 {
-                w.append(vec![reverb::Tensor::from_i32(&[], &[i]).unwrap()])
+    // On-policy data plane: strict FIFO through a queue table, identical
+    // over both transport backends.
+    for in_proc in [false, true] {
+        let (server, addr) =
+            common::build_one(in_proc, Server::builder().table(TableConfig::queue("q", 8)));
+        let client = reverb::Client::connect(addr).unwrap();
+        let producer = {
+            let client = client.clone();
+            std::thread::spawn(move || {
+                let mut w = client
+                    .writer(reverb::WriterOptions::default().with_insert_timeout_ms(10_000))
                     .unwrap();
-                w.create_item("q", 1, 1.0).unwrap();
-            }
-            w.flush().unwrap();
-        })
-    };
-    let ds = client
-        .dataset(
-            reverb::SamplerOptions::new("q")
-                .with_workers(1)
-                .with_max_in_flight(1)
-                .with_timeout_ms(3_000),
-        )
-        .unwrap();
-    let got: Vec<i32> = ds.map(|s| s.unwrap().data[0].to_i32().unwrap()[0]).collect();
-    producer.join().unwrap();
-    assert_eq!(got, (0..200).collect::<Vec<_>>());
+                for i in 0..200i32 {
+                    w.append(vec![reverb::Tensor::from_i32(&[], &[i]).unwrap()])
+                        .unwrap();
+                    w.create_item("q", 1, 1.0).unwrap();
+                }
+                w.flush().unwrap();
+            })
+        };
+        let ds = client
+            .dataset(
+                reverb::SamplerOptions::new("q")
+                    .with_workers(1)
+                    .with_max_in_flight(1)
+                    .with_timeout_ms(3_000),
+            )
+            .unwrap();
+        let got: Vec<i32> = ds.map(|s| s.unwrap().data[0].to_i32().unwrap()[0]).collect();
+        producer.join().unwrap();
+        assert_eq!(got, (0..200).collect::<Vec<_>>(), "in_proc={in_proc}");
+        drop(server);
+    }
 }

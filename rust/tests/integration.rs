@@ -1,5 +1,10 @@
-//! Cross-module integration tests: full client/server flows over real TCP.
+//! Cross-module integration tests: full client/server flows, each run over
+//! both transport backends (TCP loopback and the zero-copy in-process
+//! channel) via `common::endpoints`.
 
+mod common;
+
+use common::{build_one, endpoints as each_endpoint, write_items};
 use reverb::core::chunk::Compression;
 use reverb::core::extensions::{PriorityDiffusionExtension, StatsExtension};
 use reverb::core::table::TableConfig;
@@ -7,141 +12,149 @@ use reverb::net::server::Server;
 use reverb::{Client, Error, SamplerOptions, SelectorConfig, Tensor, WriterOptions};
 use std::time::Duration;
 
-fn write_items(client: &Client, table: &str, n: usize, priority: impl Fn(usize) -> f64) {
-    let mut w = client.writer(WriterOptions::default()).unwrap();
-    for i in 0..n {
-        w.append(vec![Tensor::from_f32(&[1], &[i as f32]).unwrap()])
-            .unwrap();
-        w.create_item(table, 1, priority(i)).unwrap();
-    }
-    w.flush().unwrap();
-}
-
 #[test]
 fn priority_updates_change_sampling_distribution() {
-    let server = Server::builder()
-        .table(TableConfig::prioritized_replay("per", 100, 1.0, 1e9, 1, 1e9).unwrap())
-        .bind("127.0.0.1:0")
-        .unwrap();
-    let client = Client::connect(server.local_addr().to_string()).unwrap();
-    write_items(&client, "per", 2, |_| 1.0);
+    for (_server, addr, label) in each_endpoint(|| {
+        Server::builder()
+            .table(TableConfig::prioritized_replay("per", 100, 1.0, 1e9, 1, 1e9).unwrap())
+    }) {
+        let client = Client::connect(addr).unwrap();
+        write_items(&client, "per", 2, |_| 1.0);
 
-    // Find both keys by sampling.
-    let mut s = client.sampler(SamplerOptions::new("per")).unwrap();
-    let mut keys = std::collections::HashSet::new();
-    while keys.len() < 2 {
-        keys.insert(s.next_sample().unwrap().key);
+        // Find both keys by sampling.
+        let mut s = client.sampler(SamplerOptions::new("per")).unwrap();
+        let mut keys = std::collections::HashSet::new();
+        while keys.len() < 2 {
+            keys.insert(s.next_sample().unwrap().key);
+        }
+        let keys: Vec<u64> = keys.into_iter().collect();
+
+        // Crush one key's priority; the other must dominate.
+        client
+            .mutate_priorities("per", &[(keys[0], 0.0)], &[])
+            .unwrap();
+        let mut s2 = client.sampler(SamplerOptions::new("per")).unwrap();
+        for _ in 0..50 {
+            assert_eq!(s2.next_sample().unwrap().key, keys[1], "{label}");
+        }
+
+        // Delete the dominant key; the zero-priority one is all that is left.
+        client.mutate_priorities("per", &[], &[keys[1]]).unwrap();
+        let mut s3 = client.sampler(SamplerOptions::new("per")).unwrap();
+        assert_eq!(s3.next_sample().unwrap().key, keys[0], "{label}");
     }
-    let keys: Vec<u64> = keys.into_iter().collect();
-
-    // Crush one key's priority; the other must dominate.
-    client
-        .mutate_priorities("per", &[(keys[0], 0.0)], &[])
-        .unwrap();
-    let mut s2 = client.sampler(SamplerOptions::new("per")).unwrap();
-    for _ in 0..50 {
-        assert_eq!(s2.next_sample().unwrap().key, keys[1]);
-    }
-
-    // Delete the dominant key; the zero-priority one is all that is left.
-    client.mutate_priorities("per", &[], &[keys[1]]).unwrap();
-    let mut s3 = client.sampler(SamplerOptions::new("per")).unwrap();
-    assert_eq!(s3.next_sample().unwrap().key, keys[0]);
 }
 
 #[test]
 fn checkpoint_rpc_roundtrip_preserves_state() {
     let dir = std::env::temp_dir().join(format!("reverb_it_ckpt_{}", std::process::id()));
-    let server = Server::builder()
-        .table(TableConfig::uniform_replay("t", 100))
-        .checkpoint_dir(&dir)
-        .bind("127.0.0.1:0")
-        .unwrap();
-    let client = Client::connect(server.local_addr().to_string()).unwrap();
-    write_items(&client, "t", 10, |i| i as f64 + 1.0);
-    // Sample a few to advance rate-limiter counters.
-    let mut s = client.sampler(SamplerOptions::new("t")).unwrap();
-    for _ in 0..4 {
-        s.next_sample().unwrap();
+    let dir2 = dir.clone();
+    for (server, addr, label) in each_endpoint(move || {
+        Server::builder()
+            .table(TableConfig::uniform_replay("t", 100))
+            .checkpoint_dir(&dir2)
+    }) {
+        let client = Client::connect(addr).unwrap();
+        write_items(&client, "t", 10, |i| i as f64 + 1.0);
+        // Sample a few to advance rate-limiter counters.
+        let mut s = client.sampler(SamplerOptions::new("t")).unwrap();
+        for _ in 0..4 {
+            s.next_sample().unwrap();
+        }
+        s.stop();
+
+        let path = client.checkpoint().unwrap();
+        drop(server);
+
+        let server2 = Server::builder()
+            .table(TableConfig::uniform_replay("t", 100))
+            .load_checkpoint(&path)
+            .bind("127.0.0.1:0")
+            .unwrap();
+        let client2 = Client::connect(server2.local_addr().to_string()).unwrap();
+        let info = &client2.server_info().unwrap()[0].1;
+        assert_eq!(info.size, 10, "{label}");
+        assert_eq!(info.inserts, 10, "{label}");
+        // The sampler prefetches, so the server-side count is >= the 4 we
+        // consumed; the restored counter must match whatever was checkpointed.
+        assert!(info.samples >= 4, "{label}: samples={}", info.samples);
+        // Data survives byte-exact.
+        let mut s2 = client2.sampler(SamplerOptions::new("t")).unwrap();
+        let sample = s2.next_sample().unwrap();
+        let v = sample.data[0].to_f32().unwrap()[0];
+        assert!((0.0..10.0).contains(&v), "{label}");
     }
-    s.stop();
-
-    let path = client.checkpoint().unwrap();
-    drop(server);
-
-    let server2 = Server::builder()
-        .table(TableConfig::uniform_replay("t", 100))
-        .load_checkpoint(&path)
-        .bind("127.0.0.1:0")
-        .unwrap();
-    let client2 = Client::connect(server2.local_addr().to_string()).unwrap();
-    let info = &client2.server_info().unwrap()[0].1;
-    assert_eq!(info.size, 10);
-    assert_eq!(info.inserts, 10);
-    // The sampler prefetches, so the server-side count is >= the 4 we
-    // consumed; the restored counter must match whatever was checkpointed.
-    assert!(info.samples >= 4, "samples={}", info.samples);
-    // Data survives byte-exact.
-    let mut s2 = client2.sampler(SamplerOptions::new("t")).unwrap();
-    let sample = s2.next_sample().unwrap();
-    let v = sample.data[0].to_f32().unwrap()[0];
-    assert!((0.0..10.0).contains(&v));
     std::fs::remove_dir_all(dir).ok();
 }
 
 #[test]
 fn items_in_two_tables_share_chunks() {
-    let server = Server::builder()
-        .table(TableConfig::uniform_replay("a", 100))
-        .table(TableConfig::uniform_replay("b", 100))
-        .bind("127.0.0.1:0")
-        .unwrap();
-    let client = Client::connect(server.local_addr().to_string()).unwrap();
-    let mut w = client
-        .writer(WriterOptions::default().with_chunk_length(4))
-        .unwrap();
-    for i in 0..4 {
-        w.append(vec![Tensor::from_f32(&[1], &[i as f32]).unwrap()])
+    for (server, addr, label) in each_endpoint(|| {
+        Server::builder()
+            .table(TableConfig::uniform_replay("a", 100))
+            .table(TableConfig::uniform_replay("b", 100))
+    }) {
+        let client = Client::connect(addr).unwrap();
+        let mut w = client
+            .writer(WriterOptions::default().with_chunk_length(4))
             .unwrap();
-    }
-    // Both items reference the same 4-step chunk.
-    w.create_item("a", 4, 1.0).unwrap();
-    w.create_item("b", 2, 1.0).unwrap();
-    w.flush().unwrap();
+        for i in 0..4 {
+            w.append(vec![Tensor::from_f32(&[1], &[i as f32]).unwrap()])
+                .unwrap();
+        }
+        // Both items reference the same 4-step chunk.
+        w.create_item("a", 4, 1.0).unwrap();
+        w.create_item("b", 2, 1.0).unwrap();
+        w.flush().unwrap();
 
-    let sa = server.table("a").unwrap().sample(None).unwrap();
-    let sb = server.table("b").unwrap().sample(None).unwrap();
-    assert_eq!(sa.item.chunks[0].key, sb.item.chunks[0].key, "shared chunk");
-    assert_eq!(sa.item.length, 4);
-    assert_eq!(sb.item.length, 2);
-    assert_eq!(sb.item.offset, 2, "item b covers the last 2 steps");
+        let sa = server.table("a").unwrap().sample(None).unwrap();
+        let sb = server.table("b").unwrap().sample(None).unwrap();
+        assert_eq!(
+            sa.item.chunks[0].key, sb.item.chunks[0].key,
+            "{label}: shared chunk"
+        );
+        assert_eq!(sa.item.length, 4, "{label}");
+        assert_eq!(sb.item.length, 2, "{label}");
+        assert_eq!(sb.item.offset, 2, "{label}: item b covers the last 2 steps");
+        // On the in-process path the table item holds the writer's own
+        // allocation — the zero-copy guarantee, observable end to end.
+        if label == "in-proc" {
+            assert!(
+                std::sync::Arc::strong_count(&sa.item.chunks[0]) >= 2,
+                "chunk shared between both tables' items"
+            );
+        }
+    }
 }
 
 #[test]
 fn max_times_sampled_is_enforced_over_the_wire() {
-    let mut cfg = TableConfig::uniform_replay("t", 100);
-    cfg.max_times_sampled = 2;
-    let server = Server::builder().table(cfg).bind("127.0.0.1:0").unwrap();
-    let client = Client::connect(server.local_addr().to_string()).unwrap();
-    write_items(&client, "t", 1, |_| 1.0);
-    let mut s = client
-        .sampler(SamplerOptions::new("t").with_timeout_ms(200))
-        .unwrap();
-    assert_eq!(s.next_sample().unwrap().times_sampled, 1);
-    assert_eq!(s.next_sample().unwrap().times_sampled, 2);
-    // Item removed after 2 samples: the stream must end (timeout), not serve
-    // a third copy.
-    let err = s.next_sample().unwrap_err();
-    assert!(err.is_timeout(), "{err}");
-    assert_eq!(server.table("t").unwrap().size(), 0);
+    for (server, addr, label) in each_endpoint(|| {
+        let mut cfg = TableConfig::uniform_replay("t", 100);
+        cfg.max_times_sampled = 2;
+        Server::builder().table(cfg)
+    }) {
+        let client = Client::connect(addr).unwrap();
+        write_items(&client, "t", 1, |_| 1.0);
+        let mut s = client
+            .sampler(SamplerOptions::new("t").with_timeout_ms(200))
+            .unwrap();
+        assert_eq!(s.next_sample().unwrap().times_sampled, 1, "{label}");
+        assert_eq!(s.next_sample().unwrap().times_sampled, 2, "{label}");
+        // Item removed after 2 samples: the stream must end (timeout), not
+        // serve a third copy.
+        let err = s.next_sample().unwrap_err();
+        assert!(err.is_timeout(), "{label}: {err}");
+        assert_eq!(server.table("t").unwrap().size(), 0, "{label}");
+    }
 }
 
 #[test]
 fn stats_and_diffusion_extensions_through_server() {
-    let stats = StatsExtension::new();
-    let handle = stats.handle();
-    let server = Server::builder()
-        .table_with_extensions(
+    for in_proc in [false, true] {
+        let stats = StatsExtension::new();
+        let handle = stats.handle();
+        let builder = Server::builder().table_with_extensions(
             TableConfig {
                 sampler: SelectorConfig::MaxHeap,
                 ..TableConfig::uniform_replay("t", 100)
@@ -150,217 +163,192 @@ fn stats_and_diffusion_extensions_through_server() {
                 Box::new(stats),
                 Box::new(PriorityDiffusionExtension::new(0.5)),
             ],
-        )
-        .bind("127.0.0.1:0")
-        .unwrap();
-    let client = Client::connect(server.local_addr().to_string()).unwrap();
-    write_items(&client, "t", 3, |_| 1.0);
+        );
+        let (server, addr) = build_one(in_proc, builder);
+        let client = Client::connect(addr).unwrap();
+        write_items(&client, "t", 3, |_| 1.0);
 
-    // Find the middle item's key by draining the heap once.
-    let table = server.table("t").unwrap();
-    let (items, _, _) = table.snapshot();
-    let mut keys: Vec<u64> = items.iter().map(|i| i.key).collect();
-    keys.sort_unstable();
+        // Find the middle item's key.
+        let table = server.table("t").unwrap();
+        let (items, _, _) = table.snapshot();
+        let mut keys: Vec<u64> = items.iter().map(|i| i.key).collect();
+        keys.sort_unstable();
 
-    // Update the middle item's priority: +4 delta diffuses +2 to both
-    // neighbours via the extension.
-    client
-        .mutate_priorities("t", &[(keys[1], 5.0)], &[])
-        .unwrap();
-    let (items, _, _) = table.snapshot();
-    let p: std::collections::HashMap<u64, f64> =
-        items.iter().map(|i| (i.key, i.priority)).collect();
-    assert_eq!(p[&keys[1]], 5.0);
-    assert_eq!(p[&keys[0]], 3.0);
-    assert_eq!(p[&keys[2]], 3.0);
+        // Update the middle item's priority: +4 delta diffuses +2 to both
+        // neighbours via the extension.
+        client
+            .mutate_priorities("t", &[(keys[1], 5.0)], &[])
+            .unwrap();
+        let (items, _, _) = table.snapshot();
+        let p: std::collections::HashMap<u64, f64> =
+            items.iter().map(|i| (i.key, i.priority)).collect();
+        assert_eq!(p[&keys[1]], 5.0, "in_proc={in_proc}");
+        assert_eq!(p[&keys[0]], 3.0, "in_proc={in_proc}");
+        assert_eq!(p[&keys[2]], 3.0, "in_proc={in_proc}");
 
-    let snap = handle.snapshot();
-    assert_eq!(snap.inserts, 3);
-    assert!(snap.updates >= 1);
-}
-
-#[test]
-fn server_drop_fails_clients_cleanly() {
-    let server = Server::builder()
-        .table(TableConfig::uniform_replay("t", 100))
-        .bind("127.0.0.1:0")
-        .unwrap();
-    let client = Client::connect(server.local_addr().to_string()).unwrap();
-    write_items(&client, "t", 5, |_| 1.0);
-    let mut s = client
-        .sampler(SamplerOptions::new("t").with_workers(2))
-        .unwrap();
-    s.next_sample().unwrap();
-    drop(server);
-    // Eventually the workers hit I/O errors or cancellation — never a hang.
-    let deadline = std::time::Instant::now() + Duration::from_secs(10);
-    loop {
-        match s.next_sample() {
-            Ok(_) => {
-                assert!(std::time::Instant::now() < deadline, "hung after server drop");
-            }
-            Err(e) => {
-                assert!(
-                    matches!(e, Error::Io(_) | Error::Cancelled(_)) || e.is_timeout(),
-                    "{e}"
-                );
-                break;
-            }
-        }
+        let snap = handle.snapshot();
+        assert_eq!(snap.inserts, 3, "in_proc={in_proc}");
+        assert!(snap.updates >= 1, "in_proc={in_proc}");
     }
 }
 
 #[test]
 fn reset_rpc_empties_table() {
-    let server = Server::builder()
-        .table(TableConfig::uniform_replay("t", 100))
-        .bind("127.0.0.1:0")
-        .unwrap();
-    let client = Client::connect(server.local_addr().to_string()).unwrap();
-    write_items(&client, "t", 8, |_| 1.0);
-    assert_eq!(server.table("t").unwrap().size(), 8);
-    client.reset("t").unwrap();
-    assert_eq!(server.table("t").unwrap().size(), 0);
-    assert!(client.reset("missing").is_err());
+    for (server, addr, label) in
+        each_endpoint(|| Server::builder().table(TableConfig::uniform_replay("t", 100)))
+    {
+        let client = Client::connect(addr).unwrap();
+        write_items(&client, "t", 8, |_| 1.0);
+        assert_eq!(server.table("t").unwrap().size(), 8, "{label}");
+        client.reset("t").unwrap();
+        assert_eq!(server.table("t").unwrap().size(), 0, "{label}");
+        assert!(client.reset("missing").is_err(), "{label}");
+    }
 }
 
 #[test]
 fn compressed_chunks_roundtrip_over_wire() {
-    let server = Server::builder()
-        .table(TableConfig::uniform_replay("t", 10))
-        .bind("127.0.0.1:0")
-        .unwrap();
-    let client = Client::connect(server.local_addr().to_string()).unwrap();
-    // Highly compressible payload through DeltaZstd.
-    let mut w = client
-        .writer(
-            WriterOptions::default()
-                .with_chunk_length(8)
-                .with_compression(Compression::DeltaZstd { level: 3 }),
-        )
-        .unwrap();
-    let payload: Vec<f32> = (0..4096).map(|i| (i / 100) as f32).collect();
-    for _ in 0..8 {
-        w.append(vec![Tensor::from_f32(&[4096], &payload).unwrap()])
+    for (_server, addr, label) in
+        each_endpoint(|| Server::builder().table(TableConfig::uniform_replay("t", 10)))
+    {
+        let client = Client::connect(addr).unwrap();
+        // Highly compressible payload through DeltaZstd.
+        let mut w = client
+            .writer(
+                WriterOptions::default()
+                    .with_chunk_length(8)
+                    .with_compression(Compression::DeltaZstd { level: 3 }),
+            )
             .unwrap();
-    }
-    w.create_item("t", 8, 1.0).unwrap();
-    w.flush().unwrap();
+        let payload: Vec<f32> = (0..4096).map(|i| (i / 100) as f32).collect();
+        for _ in 0..8 {
+            w.append(vec![Tensor::from_f32(&[4096], &payload).unwrap()])
+                .unwrap();
+        }
+        w.create_item("t", 8, 1.0).unwrap();
+        w.flush().unwrap();
 
-    let mut s = client.sampler(SamplerOptions::new("t")).unwrap();
-    let sample = s.next_sample().unwrap();
-    assert_eq!(sample.data[0].shape(), &[8, 4096]);
-    let got = sample.data[0].to_f32().unwrap();
-    assert_eq!(&got[..4096], &payload[..]);
-    assert_eq!(&got[7 * 4096..], &payload[..]);
+        let mut s = client.sampler(SamplerOptions::new("t")).unwrap();
+        let sample = s.next_sample().unwrap();
+        assert_eq!(sample.data[0].shape(), &[8, 4096], "{label}");
+        let got = sample.data[0].to_f32().unwrap();
+        assert_eq!(&got[..4096], &payload[..], "{label}");
+        assert_eq!(&got[7 * 4096..], &payload[..], "{label}");
+    }
 }
 
 #[test]
 fn concurrent_writers_and_samplers_stress() {
-    let server = Server::builder()
-        .table(TableConfig::uniform_replay("t", 10_000))
-        .bind("127.0.0.1:0")
-        .unwrap();
-    let addr = server.local_addr().to_string();
-    let stop = std::sync::Arc::new(std::sync::atomic::AtomicBool::new(false));
-    let mut handles = Vec::new();
-    for wid in 0..3u64 {
-        let addr = addr.clone();
-        let stop = stop.clone();
-        handles.push(std::thread::spawn(move || {
-            let client = Client::connect(addr).unwrap();
-            let mut w = client.writer(WriterOptions::default()).unwrap();
-            let mut i = 0u64;
-            while !stop.load(std::sync::atomic::Ordering::Relaxed) {
-                w.append(vec![Tensor::from_f32(&[8], &[wid as f32; 8]).unwrap()])
-                    .unwrap();
-                w.create_item("t", 1, 1.0 + (i % 5) as f64).unwrap();
-                i += 1;
-            }
-            w.flush().unwrap();
-            i
-        }));
-    }
-    let mut sample_handles = Vec::new();
-    for _ in 0..2 {
-        let addr = addr.clone();
-        let stop = stop.clone();
-        sample_handles.push(std::thread::spawn(move || {
-            let client = Client::connect(addr).unwrap();
-            let mut s = client
-                .sampler(
-                    SamplerOptions::new("t")
-                        .with_workers(2)
-                        .with_batch_size(4)
-                        .with_timeout_ms(5_000),
-                )
-                .unwrap();
-            let mut n = 0u64;
-            while !stop.load(std::sync::atomic::Ordering::Relaxed) {
-                if s.next_sample().is_ok() {
-                    n += 1;
+    for (server, addr, label) in
+        each_endpoint(|| Server::builder().table(TableConfig::uniform_replay("t", 10_000)))
+    {
+        let stop = std::sync::Arc::new(std::sync::atomic::AtomicBool::new(false));
+        let mut handles = Vec::new();
+        for wid in 0..3u64 {
+            let addr = addr.clone();
+            let stop = stop.clone();
+            handles.push(std::thread::spawn(move || {
+                let client = Client::connect(addr).unwrap();
+                let mut w = client.writer(WriterOptions::default()).unwrap();
+                let mut i = 0u64;
+                while !stop.load(std::sync::atomic::Ordering::Relaxed) {
+                    w.append(vec![Tensor::from_f32(&[8], &[wid as f32; 8]).unwrap()])
+                        .unwrap();
+                    w.create_item("t", 1, 1.0 + (i % 5) as f64).unwrap();
+                    i += 1;
                 }
-            }
-            s.stop();
-            n
-        }));
+                w.flush().unwrap();
+                i
+            }));
+        }
+        let mut sample_handles = Vec::new();
+        for _ in 0..2 {
+            let addr = addr.clone();
+            let stop = stop.clone();
+            sample_handles.push(std::thread::spawn(move || {
+                let client = Client::connect(addr).unwrap();
+                let mut s = client
+                    .sampler(
+                        SamplerOptions::new("t")
+                            .with_workers(2)
+                            .with_batch_size(4)
+                            .with_timeout_ms(5_000),
+                    )
+                    .unwrap();
+                let mut n = 0u64;
+                while !stop.load(std::sync::atomic::Ordering::Relaxed) {
+                    if s.next_sample().is_ok() {
+                        n += 1;
+                    }
+                }
+                s.stop();
+                n
+            }));
+        }
+        std::thread::sleep(Duration::from_millis(800));
+        stop.store(true, std::sync::atomic::Ordering::Relaxed);
+        let written: u64 = handles.into_iter().map(|h| h.join().unwrap()).sum();
+        let sampled: u64 = sample_handles.into_iter().map(|h| h.join().unwrap()).sum();
+        assert!(written > 100, "{label}: written={written}");
+        assert!(sampled > 100, "{label}: sampled={sampled}");
+        let info = &server.info()[0].1;
+        assert_eq!(info.inserts, written, "{label}");
     }
-    std::thread::sleep(Duration::from_millis(800));
-    stop.store(true, std::sync::atomic::Ordering::Relaxed);
-    let written: u64 = handles.into_iter().map(|h| h.join().unwrap()).sum();
-    let sampled: u64 = sample_handles.into_iter().map(|h| h.join().unwrap()).sum();
-    assert!(written > 100, "written={written}");
-    assert!(sampled > 100, "sampled={sampled}");
-    let info = &server.info()[0].1;
-    assert_eq!(info.inserts, written);
 }
 
 #[test]
 fn table_signature_rejects_mismatched_writes() {
     use reverb::{DType, Signature, TensorSpec};
-    let mut cfg = TableConfig::uniform_replay("typed", 100);
-    cfg.signature = Some(Signature::new(vec![
-        TensorSpec::new("obs", &[4], DType::F32),
-        TensorSpec::new("action", &[], DType::I32),
-    ]));
-    let server = Server::builder().table(cfg).bind("127.0.0.1:0").unwrap();
-    let client = Client::connect(server.local_addr().to_string()).unwrap();
+    for (server, addr, label) in each_endpoint(|| {
+        let mut cfg = TableConfig::uniform_replay("typed", 100);
+        cfg.signature = Some(Signature::new(vec![
+            TensorSpec::new("obs", &[4], DType::F32),
+            TensorSpec::new("action", &[], DType::I32),
+        ]));
+        Server::builder().table(cfg)
+    }) {
+        let client = Client::connect(addr).unwrap();
 
-    // Conforming write succeeds.
-    let mut w = client.writer(WriterOptions::default()).unwrap();
-    w.append(vec![
-        Tensor::from_f32(&[4], &[0.0; 4]).unwrap(),
-        Tensor::from_i32(&[], &[1]).unwrap(),
-    ])
-    .unwrap();
-    w.create_item("typed", 1, 1.0).unwrap();
-    w.flush().unwrap();
-    assert_eq!(server.table("typed").unwrap().size(), 1);
+        // Conforming write succeeds.
+        let mut w = client.writer(WriterOptions::default()).unwrap();
+        w.append(vec![
+            Tensor::from_f32(&[4], &[0.0; 4]).unwrap(),
+            Tensor::from_i32(&[], &[1]).unwrap(),
+        ])
+        .unwrap();
+        w.create_item("typed", 1, 1.0).unwrap();
+        w.flush().unwrap();
+        assert_eq!(server.table("typed").unwrap().size(), 1, "{label}");
 
-    // Wrong obs shape is rejected server-side with InvalidArgument.
-    let mut w2 = client.writer(WriterOptions::default()).unwrap();
-    w2.append(vec![
-        Tensor::from_f32(&[5], &[0.0; 5]).unwrap(),
-        Tensor::from_i32(&[], &[1]).unwrap(),
-    ])
-    .unwrap();
-    w2.create_item("typed", 1, 1.0).unwrap();
-    let err = w2.flush().unwrap_err();
-    assert!(
-        matches!(err, Error::SignatureMismatch(_) | Error::InvalidArgument(_)),
-        "{err}"
-    );
-    assert_eq!(server.table("typed").unwrap().size(), 1, "bad item not inserted");
+        // Wrong obs shape is rejected server-side with InvalidArgument.
+        let mut w2 = client.writer(WriterOptions::default()).unwrap();
+        w2.append(vec![
+            Tensor::from_f32(&[5], &[0.0; 5]).unwrap(),
+            Tensor::from_i32(&[], &[1]).unwrap(),
+        ])
+        .unwrap();
+        w2.create_item("typed", 1, 1.0).unwrap();
+        let err = w2.flush().unwrap_err();
+        assert!(
+            matches!(err, Error::SignatureMismatch(_) | Error::InvalidArgument(_)),
+            "{label}: {err}"
+        );
+        assert_eq!(
+            server.table("typed").unwrap().size(),
+            1,
+            "{label}: bad item not inserted"
+        );
 
-    // Wrong dtype likewise.
-    let mut w3 = client.writer(WriterOptions::default()).unwrap();
-    w3.append(vec![
-        Tensor::from_f32(&[4], &[0.0; 4]).unwrap(),
-        Tensor::from_f32(&[], &[1.0]).unwrap(),
-    ])
-    .unwrap();
-    w3.create_item("typed", 1, 1.0).unwrap();
-    assert!(w3.flush().is_err());
+        // Wrong dtype likewise.
+        let mut w3 = client.writer(WriterOptions::default()).unwrap();
+        w3.append(vec![
+            Tensor::from_f32(&[4], &[0.0; 4]).unwrap(),
+            Tensor::from_f32(&[], &[1.0]).unwrap(),
+        ])
+        .unwrap();
+        w3.create_item("typed", 1, 1.0).unwrap();
+        assert!(w3.flush().is_err(), "{label}");
+    }
 }
 
 #[test]
@@ -402,57 +390,61 @@ fn chunk_decode_never_panics_on_garbage() {
 fn client_disconnect_mid_stream_leaves_server_healthy() {
     // Fault injection: a writer that streams chunks and vanishes before
     // creating items must not corrupt the table or leak visible state; a
-    // new client on the same server keeps working.
-    let server = Server::builder()
-        .table(TableConfig::uniform_replay("t", 100))
-        .bind("127.0.0.1:0")
-        .unwrap();
-    let addr = server.local_addr().to_string();
+    // new client on the same server keeps working. Same contract on both
+    // backends.
+    for (server, addr, label) in
+        each_endpoint(|| Server::builder().table(TableConfig::uniform_replay("t", 100)))
     {
-        let client = Client::connect(addr.clone()).unwrap();
-        let mut w = client
-            .writer(WriterOptions::default().with_chunk_length(1))
-            .unwrap();
-        // Chunks go out immediately (chunk_length 1); no create_item.
-        for i in 0..20 {
-            w.append(vec![Tensor::from_f32(&[1], &[i as f32]).unwrap()])
+        {
+            let client = Client::connect(addr.clone()).unwrap();
+            let mut w = client
+                .writer(WriterOptions::default().with_chunk_length(1))
                 .unwrap();
+            // Chunks go out immediately (chunk_length 1); no create_item.
+            for i in 0..20 {
+                w.append(vec![Tensor::from_f32(&[1], &[i as f32]).unwrap()])
+                    .unwrap();
+            }
+            // Drop without flush: connection closes, pending chunks abandoned.
+            std::mem::forget(w); // skip Drop's flush to simulate a hard crash
         }
-        // Drop without flush: connection closes, pending chunks abandoned.
-        std::mem::forget(w); // skip Drop's flush to simulate a hard crash
-    }
-    std::thread::sleep(Duration::from_millis(100));
-    assert_eq!(server.table("t").unwrap().size(), 0, "no items were created");
+        std::thread::sleep(Duration::from_millis(100));
+        assert_eq!(
+            server.table("t").unwrap().size(),
+            0,
+            "{label}: no items were created"
+        );
 
-    // Server still serves new clients.
-    let client2 = Client::connect(addr).unwrap();
-    write_items(&client2, "t", 3, |_| 1.0);
-    assert_eq!(server.table("t").unwrap().size(), 3);
+        // Server still serves new clients.
+        let client2 = Client::connect(addr).unwrap();
+        write_items(&client2, "t", 3, |_| 1.0);
+        assert_eq!(server.table("t").unwrap().size(), 3, "{label}");
+    }
 }
 
 #[test]
 fn hundred_chunk_item_materializes() {
     // An item spanning 100 single-step chunks (the Fig-3 worst case for
     // K=1): the full span must reassemble exactly.
-    let server = Server::builder()
-        .table(TableConfig::uniform_replay("t", 10))
-        .bind("127.0.0.1:0")
-        .unwrap();
-    let client = Client::connect(server.local_addr().to_string()).unwrap();
-    let mut w = client
-        .writer(WriterOptions::default().with_chunk_length(1))
-        .unwrap();
-    for i in 0..100 {
-        w.append(vec![Tensor::from_f32(&[1], &[i as f32]).unwrap()])
+    for (_server, addr, label) in
+        each_endpoint(|| Server::builder().table(TableConfig::uniform_replay("t", 10)))
+    {
+        let client = Client::connect(addr).unwrap();
+        let mut w = client
+            .writer(WriterOptions::default().with_chunk_length(1))
             .unwrap();
+        for i in 0..100 {
+            w.append(vec![Tensor::from_f32(&[1], &[i as f32]).unwrap()])
+                .unwrap();
+        }
+        w.create_item("t", 100, 1.0).unwrap();
+        w.flush().unwrap();
+        let mut s = client.sampler(SamplerOptions::new("t")).unwrap();
+        let sample = s.next_sample().unwrap();
+        assert_eq!(sample.data[0].shape(), &[100, 1], "{label}");
+        let vals = sample.data[0].to_f32().unwrap();
+        assert_eq!(vals[0], 0.0, "{label}");
+        assert_eq!(vals[99], 99.0, "{label}");
+        assert!(vals.windows(2).all(|w| w[1] - w[0] == 1.0), "{label}");
     }
-    w.create_item("t", 100, 1.0).unwrap();
-    w.flush().unwrap();
-    let mut s = client.sampler(SamplerOptions::new("t")).unwrap();
-    let sample = s.next_sample().unwrap();
-    assert_eq!(sample.data[0].shape(), &[100, 1]);
-    let vals = sample.data[0].to_f32().unwrap();
-    assert_eq!(vals[0], 0.0);
-    assert_eq!(vals[99], 99.0);
-    assert!(vals.windows(2).all(|w| w[1] - w[0] == 1.0));
 }

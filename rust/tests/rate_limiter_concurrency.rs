@@ -1,0 +1,215 @@
+//! Concurrency tests for the RateLimiter (§3.4) as enforced by the Table:
+//! threaded writers/samplers must never drive the cursor outside the
+//! `SampleToInsertRatio` error-buffer corridor, and `MinSize` wakeups must
+//! never deadlock. All runs are bounded in time (every blocking call takes
+//! a timeout) and deterministic in input (fixed `Pcg32` seeds drive the
+//! workloads; interleavings vary, the asserted invariants hold for all).
+
+use reverb::core::chunk::{Chunk, Compression};
+use reverb::core::item::Item;
+use reverb::core::rate_limiter::RateLimiterConfig;
+use reverb::core::table::{Table, TableConfig};
+use reverb::util::rng::Pcg32;
+use reverb::Tensor;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+fn mk_item(key: u64) -> Item {
+    let steps = vec![vec![Tensor::from_f32(&[1], &[key as f32]).unwrap()]];
+    let chunk = Arc::new(Chunk::from_steps(key | 1 << 62, 0, &steps, Compression::None).unwrap());
+    Item::new(key, "t", 1.0, vec![chunk], 0, 1).unwrap()
+}
+
+/// SPI corridor: with W writer and S sampler threads hammering a
+/// SampleToInsertRatio(spi, min_size, buffer) table, the cursor
+/// `diff = inserts × spi − samples` must never escape
+/// `[center − buffer − spi, center + buffer]` (one insert of slack below:
+/// a batch admitted at the boundary finishes below it).
+#[test]
+fn spi_corridor_holds_for_thread_mixes() {
+    for (writers, samplers, spi, min_size, buffer, seed) in [
+        (1usize, 4usize, 4.0f64, 8u64, 8.0f64, 11u64),
+        (4, 1, 0.5, 4, 2.0, 22),
+        (3, 3, 2.0, 16, 4.0, 33),
+    ] {
+        let cfg = RateLimiterConfig::sample_to_insert_ratio(spi, min_size, buffer).unwrap();
+        let table = Arc::new(Table::new(TableConfig {
+            rate_limiter: cfg,
+            ..TableConfig::uniform_replay("t", 1_000_000)
+        }));
+        let stop = Arc::new(AtomicBool::new(false));
+        let mut handles = Vec::new();
+        for w in 0..writers {
+            let table = table.clone();
+            let stop = stop.clone();
+            handles.push(std::thread::spawn(move || {
+                let mut rng = Pcg32::new(seed, w as u64);
+                let mut k = (w as u64) << 40 | 1;
+                while !stop.load(Ordering::Relaxed) {
+                    let _ = table.insert_or_assign(mk_item(k), Some(Duration::from_millis(10)));
+                    k += 1;
+                    if rng.gen_bool(0.05) {
+                        std::thread::yield_now();
+                    }
+                }
+            }));
+        }
+        for s in 0..samplers {
+            let table = table.clone();
+            let stop = stop.clone();
+            handles.push(std::thread::spawn(move || {
+                let mut rng = Pcg32::new(seed, 1000 + s as u64);
+                while !stop.load(Ordering::Relaxed) {
+                    let n = 1 + rng.gen_range(4) as usize;
+                    let _ = table.sample_batch(n, Some(Duration::from_millis(10)));
+                }
+            }));
+        }
+        std::thread::sleep(Duration::from_millis(250));
+        stop.store(true, Ordering::Relaxed);
+        table.cancel();
+        for h in handles {
+            h.join().unwrap();
+        }
+        let info = table.info();
+        let center = min_size as f64 * spi;
+        assert!(
+            info.diff <= center + buffer + 1e-9,
+            "w={writers} s={samplers}: diff {} above corridor max {}",
+            info.diff,
+            center + buffer
+        );
+        // Below-min excursions are bounded by one sample batch admitted at
+        // the boundary (≤ 4 here) — but only once sampling has started.
+        if info.samples > 0 {
+            assert!(
+                info.diff >= center - buffer - spi - 4.0,
+                "w={writers} s={samplers}: diff {} far below corridor min {}",
+                info.diff,
+                center - buffer
+            );
+        }
+        assert!(
+            info.inserts > min_size,
+            "w={writers} s={samplers}: made no progress ({} inserts)",
+            info.inserts
+        );
+    }
+}
+
+/// MinSize wakeups: samplers blocked on an under-filled table must all wake
+/// promptly once the table reaches `min_size` — no lost-wakeup deadlock.
+#[test]
+fn min_size_wakeup_releases_all_blocked_samplers() {
+    const MIN_SIZE: u64 = 32;
+    const SAMPLERS: usize = 6;
+    let table = Arc::new(Table::new(TableConfig {
+        rate_limiter: RateLimiterConfig::min_size(MIN_SIZE),
+        ..TableConfig::uniform_replay("t", 1000)
+    }));
+
+    let woken = Arc::new(AtomicU64::new(0));
+    let mut handles = Vec::new();
+    for _ in 0..SAMPLERS {
+        let table = table.clone();
+        let woken = woken.clone();
+        handles.push(std::thread::spawn(move || {
+            // Generous timeout: the test fails by assertion, not by hang.
+            let s = table.sample(Some(Duration::from_secs(20)));
+            if s.is_ok() {
+                woken.fetch_add(1, Ordering::SeqCst);
+            }
+            s
+        }));
+    }
+    // Let every sampler reach its blocked state.
+    std::thread::sleep(Duration::from_millis(100));
+    assert_eq!(woken.load(Ordering::SeqCst), 0, "sampled before min_size");
+
+    // Insert min_size items; the last one crosses the threshold.
+    let start = Instant::now();
+    for k in 1..=MIN_SIZE {
+        table.insert_or_assign(mk_item(k), None).unwrap();
+        // Slow drip for the first half to exercise repeated wakeups.
+        if k < MIN_SIZE / 2 {
+            std::thread::sleep(Duration::from_millis(1));
+        }
+    }
+    for h in handles {
+        let s = h.join().unwrap().expect("sampler must wake with a sample");
+        assert_eq!(s.table_size, MIN_SIZE as usize);
+    }
+    assert_eq!(woken.load(Ordering::SeqCst), SAMPLERS as u64);
+    assert!(
+        start.elapsed() < Duration::from_secs(10),
+        "wakeups took {:?} — lost-wakeup suspected",
+        start.elapsed()
+    );
+}
+
+/// Queue limiter: producers and consumers over a tiny queue deliver every
+/// item exactly once with no deadlock, even when both sides contend.
+#[test]
+fn queue_limiter_producers_consumers_never_deadlock() {
+    const PER_PRODUCER: u64 = 150;
+    const PRODUCERS: u64 = 2;
+    let table = Arc::new(Table::new(TableConfig::queue("t", 4)));
+    let mut handles = Vec::new();
+    for p in 0..PRODUCERS {
+        let table = table.clone();
+        handles.push(std::thread::spawn(move || {
+            for i in 0..PER_PRODUCER {
+                let key = p * PER_PRODUCER + i + 1;
+                table
+                    .insert_or_assign(mk_item(key), Some(Duration::from_secs(20)))
+                    .expect("producer timed out: queue deadlock");
+            }
+        }));
+    }
+    let consumer = {
+        let table = table.clone();
+        std::thread::spawn(move || {
+            let mut got = Vec::new();
+            while got.len() < (PRODUCERS * PER_PRODUCER) as usize {
+                let batch = table
+                    .sample_batch(3, Some(Duration::from_secs(20)))
+                    .expect("consumer timed out: queue deadlock");
+                got.extend(batch.into_iter().map(|s| s.item.key));
+            }
+            got
+        })
+    };
+    for h in handles {
+        h.join().unwrap();
+    }
+    let mut got = consumer.join().unwrap();
+    assert_eq!(got.len() as u64, PRODUCERS * PER_PRODUCER);
+    got.sort_unstable();
+    got.dedup();
+    assert_eq!(
+        got.len() as u64,
+        PRODUCERS * PER_PRODUCER,
+        "duplicate delivery"
+    );
+    assert_eq!(table.size(), 0);
+}
+
+/// The blocked-op diagnostics must observe contention: a deliberately
+/// starved sampler side registers blocked samples, a saturated insert side
+/// registers blocked inserts.
+#[test]
+fn blocked_op_counters_reflect_contention() {
+    let table = Arc::new(Table::new(TableConfig::queue("t", 2)));
+    // Empty queue: sampling blocks (and times out).
+    assert!(table.sample(Some(Duration::from_millis(20))).is_err());
+    // Full queue: inserting blocks (and times out).
+    table.insert_or_assign(mk_item(1), None).unwrap();
+    table.insert_or_assign(mk_item(2), None).unwrap();
+    assert!(table
+        .insert_or_assign(mk_item(3), Some(Duration::from_millis(20)))
+        .is_err());
+    let info = table.info();
+    assert!(info.rate_limited_samples >= 1, "{info:?}");
+    assert!(info.rate_limited_inserts >= 1, "{info:?}");
+}

@@ -1,0 +1,323 @@
+//! Property tests for the selector strategies (§3.3), driven by the
+//! in-tree proptest harness (`util/proptest.rs`): random
+//! insert/update/delete churn against a naive model, then invariants on
+//! sampling probabilities (uniform, prioritized) and selection order
+//! (fifo, lifo, heaps — the Remover roles).
+
+use reverb::core::selector::{Selector, SelectorConfig};
+use reverb::util::proptest::forall;
+use reverb::util::rng::Pcg32;
+use std::collections::HashMap;
+
+/// A naive model of selector contents: key → (priority, insertion seq).
+#[derive(Default)]
+struct Model {
+    items: HashMap<u64, (f64, u64)>,
+    next_key: u64,
+    next_seq: u64,
+}
+
+impl Model {
+    fn random_op(&mut self, sel: &mut dyn Selector, rng: &mut Pcg32) -> Result<(), String> {
+        match rng.gen_range(5) {
+            // Insert twice as often as update/delete so sets grow.
+            0 | 1 => {
+                self.next_key += 1;
+                let p = rng.gen_f64() * 10.0;
+                sel.insert(self.next_key, p).map_err(|e| e.to_string())?;
+                self.items.insert(self.next_key, (p, self.next_seq));
+                self.next_seq += 1;
+            }
+            2 if !self.items.is_empty() => {
+                let k = self.pick_key(rng);
+                let p = rng.gen_f64() * 10.0;
+                sel.update(k, p).map_err(|e| e.to_string())?;
+                // Order-based selectors keep the original insertion seq.
+                let seq = self.items[&k].1;
+                self.items.insert(k, (p, seq));
+            }
+            3 if !self.items.is_empty() => {
+                let k = self.pick_key(rng);
+                sel.delete(k).map_err(|e| e.to_string())?;
+                self.items.remove(&k);
+            }
+            _ => {}
+        }
+        if sel.len() != self.items.len() {
+            return Err(format!("len {} != model {}", sel.len(), self.items.len()));
+        }
+        Ok(())
+    }
+
+    fn pick_key(&self, rng: &mut Pcg32) -> u64 {
+        let keys: Vec<u64> = self.items.keys().copied().collect();
+        keys[rng.gen_range(keys.len() as u64) as usize]
+    }
+}
+
+fn churn(sel: &mut dyn Selector, model: &mut Model, rng: &mut Pcg32, ops: usize) -> Result<(), String> {
+    for _ in 0..ops {
+        model.random_op(sel, rng)?;
+    }
+    Ok(())
+}
+
+#[test]
+fn uniform_reports_exact_probability_under_churn() {
+    forall("uniform probability = 1/n", |rng| {
+        let mut sel = SelectorConfig::Uniform.build();
+        let mut model = Model::default();
+        churn(sel.as_mut(), &mut model, rng, 80)?;
+        for _ in 0..20 {
+            match sel.select(rng) {
+                None => {
+                    if !model.items.is_empty() {
+                        return Err("None on non-empty selector".into());
+                    }
+                }
+                Some((k, p)) => {
+                    if !model.items.contains_key(&k) {
+                        return Err(format!("selected dead key {k}"));
+                    }
+                    let want = 1.0 / model.items.len() as f64;
+                    if (p - want).abs() > 1e-12 {
+                        return Err(format!("probability {p} != 1/{}", model.items.len()));
+                    }
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn uniform_empirical_frequency_is_flat() {
+    // Statistical check on a fixed mid-sized set after churn.
+    let mut rng = Pcg32::new(0xA11CE, 1);
+    let mut sel = SelectorConfig::Uniform.build();
+    let mut model = Model::default();
+    churn(sel.as_mut(), &mut model, &mut rng, 200).unwrap();
+    // Ensure a reasonable population.
+    while model.items.len() < 10 {
+        model.next_key += 1;
+        sel.insert(model.next_key, 1.0).unwrap();
+        model.items.insert(model.next_key, (1.0, model.next_seq));
+        model.next_seq += 1;
+    }
+    let n = model.items.len();
+    let draws = 40_000;
+    let mut counts: HashMap<u64, usize> = HashMap::new();
+    for _ in 0..draws {
+        let (k, _) = sel.select(&mut rng).unwrap();
+        *counts.entry(k).or_default() += 1;
+    }
+    let expect = draws as f64 / n as f64;
+    for (k, c) in counts {
+        assert!(
+            (c as f64 - expect).abs() < expect * 0.25,
+            "key {k}: {c} vs {expect}"
+        );
+    }
+}
+
+#[test]
+fn prioritized_probability_matches_weights_under_churn() {
+    for exponent in [1.0, 0.6] {
+        forall(
+            &format!("prioritized probability (C={exponent})"),
+            |rng| {
+                let mut sel = SelectorConfig::Prioritized { exponent }.build();
+                let mut model = Model::default();
+                churn(sel.as_mut(), &mut model, rng, 120)?;
+                let total: f64 = model
+                    .items
+                    .values()
+                    .map(|(p, _)| if *p == 0.0 { 0.0 } else { p.powf(exponent) })
+                    .sum();
+                for _ in 0..20 {
+                    match sel.select(rng) {
+                        None => {
+                            if !model.items.is_empty() {
+                                return Err("None on non-empty selector".into());
+                            }
+                        }
+                        Some((k, prob)) => {
+                            let Some((p, _)) = model.items.get(&k) else {
+                                return Err(format!("selected dead key {k}"));
+                            };
+                            if total > 0.0 {
+                                let w = if *p == 0.0 { 0.0 } else { p.powf(exponent) };
+                                let want = (w / total).min(1.0);
+                                // The sum tree accumulates deltas; allow
+                                // small float drift.
+                                if (prob - want).abs() > 1e-6 * (1.0 + want) {
+                                    return Err(format!(
+                                        "P({k}) = {prob}, want {want} (total {total})"
+                                    ));
+                                }
+                            }
+                        }
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+}
+
+#[test]
+fn prioritized_empirical_frequency_is_proportional() {
+    // Three items with priorities 1, 2, 4 and C=1: frequencies ≈ 1:2:4.
+    let mut rng = Pcg32::new(0xBEEF, 3);
+    let mut sel = SelectorConfig::Prioritized { exponent: 1.0 }.build();
+    sel.insert(1, 1.0).unwrap();
+    sel.insert(2, 2.0).unwrap();
+    sel.insert(3, 4.0).unwrap();
+    let draws = 70_000;
+    let mut counts = [0usize; 4];
+    for _ in 0..draws {
+        let (k, _) = sel.select(&mut rng).unwrap();
+        counts[k as usize] += 1;
+    }
+    for (k, want) in [(1usize, 1.0 / 7.0), (2, 2.0 / 7.0), (3, 4.0 / 7.0)] {
+        let got = counts[k] as f64 / draws as f64;
+        assert!((got - want).abs() < 0.02, "key {k}: {got} vs {want}");
+    }
+}
+
+#[test]
+fn zero_priority_items_are_never_selected_while_positive_exist() {
+    forall("zero priority starvation", |rng| {
+        let mut sel = SelectorConfig::Prioritized { exponent: 1.0 }.build();
+        // Half the keys have zero priority.
+        let n = 2 + rng.gen_range(10);
+        for k in 1..=n {
+            let p = if k % 2 == 0 { 0.0 } else { 1.0 + rng.gen_f64() };
+            sel.insert(k, p).map_err(|e| e.to_string())?;
+        }
+        for _ in 0..50 {
+            let (k, _) = sel.select(rng).ok_or("empty")?;
+            if k % 2 == 0 {
+                return Err(format!("zero-priority key {k} selected"));
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Expected selection for an order/priority-based remover strategy.
+fn model_expected(cfg: SelectorConfig, model: &Model) -> Option<u64> {
+    let items = &model.items;
+    if items.is_empty() {
+        return None;
+    }
+    let pick = |better: &dyn Fn((f64, u64), (f64, u64)) -> bool| {
+        let mut best: Option<(u64, (f64, u64))> = None;
+        for (&k, &v) in items {
+            best = match best {
+                None => Some((k, v)),
+                Some((bk, bv)) => {
+                    if better(v, bv) {
+                        Some((k, v))
+                    } else {
+                        Some((bk, bv))
+                    }
+                }
+            };
+        }
+        best.map(|(k, _)| k)
+    };
+    match cfg {
+        SelectorConfig::Fifo => pick(&|a, b| a.1 < b.1),
+        SelectorConfig::Lifo => pick(&|a, b| a.1 > b.1),
+        // Heap ties break by insertion order (older first).
+        SelectorConfig::MaxHeap => pick(&|a, b| a.0 > b.0 || (a.0 == b.0 && a.1 < b.1)),
+        SelectorConfig::MinHeap => pick(&|a, b| a.0 < b.0 || (a.0 == b.0 && a.1 < b.1)),
+        _ => unreachable!("not an order-based selector"),
+    }
+}
+
+#[test]
+fn remover_order_invariants_under_churn() {
+    // The Remover contract: FIFO evicts the oldest, LIFO the newest,
+    // MinHeap the lowest-priority, MaxHeap the highest-priority item —
+    // deterministically (probability 1.0), at every point of an arbitrary
+    // churn sequence.
+    for cfg in [
+        SelectorConfig::Fifo,
+        SelectorConfig::Lifo,
+        SelectorConfig::MaxHeap,
+        SelectorConfig::MinHeap,
+    ] {
+        forall(&format!("remover order {cfg:?}"), |rng| {
+            let mut sel = cfg.build();
+            let mut model = Model::default();
+            for _ in 0..100 {
+                model.random_op(sel.as_mut(), rng)?;
+                let want = model_expected(cfg, &model);
+                match (sel.select(rng), want) {
+                    (None, None) => {}
+                    (Some((k, p)), Some(wk)) => {
+                        if k != wk {
+                            return Err(format!("{cfg:?} selected {k}, expected {wk}"));
+                        }
+                        if p != 1.0 {
+                            return Err(format!("deterministic selector reported P={p}"));
+                        }
+                    }
+                    (got, want) => {
+                        return Err(format!("{cfg:?}: got {got:?}, expected {want:?}"))
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+}
+
+#[test]
+fn fifo_drain_returns_insertion_order_after_churn() {
+    forall("fifo drain order", |rng| {
+        let mut sel = SelectorConfig::Fifo.build();
+        let mut model = Model::default();
+        churn(sel.as_mut(), &mut model, rng, 80)?;
+        // Drain fully: keys must come out in ascending insertion seq.
+        let mut order: Vec<u64> = model.items.keys().copied().collect();
+        order.sort_by_key(|k| model.items[k].1);
+        for want in order {
+            let (k, _) = sel.select(rng).ok_or("selector drained early")?;
+            if k != want {
+                return Err(format!("drain got {k}, want {want}"));
+            }
+            sel.delete(k).map_err(|e| e.to_string())?;
+        }
+        if sel.select(rng).is_some() {
+            return Err("selector non-empty after drain".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn selectors_clear_to_empty() {
+    for cfg in [
+        SelectorConfig::Fifo,
+        SelectorConfig::Lifo,
+        SelectorConfig::Uniform,
+        SelectorConfig::MaxHeap,
+        SelectorConfig::MinHeap,
+        SelectorConfig::Prioritized { exponent: 0.8 },
+    ] {
+        let mut rng = Pcg32::new(7, 7);
+        let mut sel = cfg.build();
+        for k in 1..=20 {
+            sel.insert(k, k as f64).unwrap();
+        }
+        sel.clear();
+        assert_eq!(sel.len(), 0, "{cfg:?}");
+        assert!(sel.select(&mut rng).is_none(), "{cfg:?}");
+        // Usable after clear.
+        sel.insert(99, 1.0).unwrap();
+        assert_eq!(sel.select(&mut rng).unwrap().0, 99, "{cfg:?}");
+    }
+}

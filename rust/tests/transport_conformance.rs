@@ -1,0 +1,320 @@
+//! Transport conformance suite: every scenario here runs *identically*
+//! against both transport backends — TCP loopback and the zero-copy
+//! in-process channel — proving the backends are behaviourally
+//! interchangeable (same protocol, same error mapping, same ordering and
+//! flow-control semantics).
+
+mod common;
+
+use common::{build_one, endpoints, step, write_items};
+use reverb::core::table::TableConfig;
+use reverb::net::server::{Server, ServerBuilder};
+use reverb::{Client, Error, SamplerOptions, WriterOptions};
+use std::time::Duration;
+
+/// Run `scenario` against both backends (see `common::endpoints`).
+fn for_each_transport(
+    build: impl Fn() -> ServerBuilder,
+    scenario: impl Fn(&Server, String, &'static str),
+) {
+    for (server, addr, label) in endpoints(build) {
+        scenario(&server, addr, label);
+    }
+}
+
+#[test]
+fn insert_then_sample_roundtrips_data() {
+    for_each_transport(
+        || Server::builder().table(TableConfig::uniform_replay("t", 100)),
+        |server, addr, label| {
+            let client = Client::connect(addr).unwrap();
+            write_items(&client, "t", 10, |i| 1.0 + i as f64);
+            assert_eq!(server.table("t").unwrap().size(), 10, "{label}");
+
+            let mut s = client.sampler(SamplerOptions::new("t")).unwrap();
+            for _ in 0..20 {
+                let sample = s.next_sample().unwrap();
+                assert_eq!(sample.table, "t", "{label}");
+                assert_eq!(sample.data[0].shape(), &[1, 2], "{label}");
+                let v = sample.data[0].to_f32().unwrap();
+                assert!((v[1] - v[0] - 0.5).abs() < 1e-6, "{label}: {v:?}");
+            }
+        },
+    );
+}
+
+#[test]
+fn overlapping_items_share_chunks_in_one_response() {
+    // Two items referencing the same chunk: the response must carry the
+    // chunk once (dedup) on both backends.
+    for_each_transport(
+        || Server::builder().table(TableConfig::uniform_replay("t", 100)),
+        |server, addr, label| {
+            let client = Client::connect(addr).unwrap();
+            let mut w = client
+                .writer(WriterOptions::default().with_chunk_length(4))
+                .unwrap();
+            for i in 0..4 {
+                w.append(step(i as f32)).unwrap();
+            }
+            w.create_item("t", 4, 1.0).unwrap();
+            w.create_item("t", 2, 1.0).unwrap();
+            w.flush().unwrap();
+            assert_eq!(server.table("t").unwrap().size(), 2, "{label}");
+
+            let mut s = client
+                .sampler(SamplerOptions::new("t").with_batch_size(2))
+                .unwrap();
+            for _ in 0..8 {
+                let sample = s.next_sample().unwrap();
+                assert!(sample.data[0].shape()[0] == 4 || sample.data[0].shape()[0] == 2);
+            }
+        },
+    );
+}
+
+#[test]
+fn unknown_table_maps_to_not_found() {
+    for_each_transport(
+        || Server::builder().table(TableConfig::uniform_replay("t", 10)),
+        |_server, addr, label| {
+            let client = Client::connect(addr).unwrap();
+            let mut s = client
+                .sampler(SamplerOptions::new("missing").with_timeout_ms(100))
+                .unwrap();
+            let err = s.next_sample().unwrap_err();
+            assert!(matches!(err, Error::TableNotFound(_)), "{label}: {err}");
+            assert!(client.reset("missing").is_err(), "{label}");
+        },
+    );
+}
+
+#[test]
+fn rate_limiter_timeout_is_end_of_sequence() {
+    for_each_transport(
+        || Server::builder().table(TableConfig::uniform_replay("t", 10)),
+        |_server, addr, label| {
+            let client = Client::connect(addr).unwrap();
+            let mut s = client
+                .sampler(SamplerOptions::new("t").with_timeout_ms(50))
+                .unwrap();
+            let err = s.next_sample().unwrap_err();
+            assert!(err.is_timeout(), "{label}: {err}");
+        },
+    );
+}
+
+#[test]
+fn mutate_and_reset_rpcs() {
+    for_each_transport(
+        || Server::builder().table(TableConfig::uniform_replay("t", 100)),
+        |server, addr, label| {
+            let client = Client::connect(addr).unwrap();
+            write_items(&client, "t", 4, |_| 1.0);
+
+            let (items, _, _) = server.table("t").unwrap().snapshot();
+            let keys: Vec<u64> = items.iter().map(|i| i.key).collect();
+            client
+                .mutate_priorities("t", &[(keys[0], 9.0)], &[keys[1]])
+                .unwrap();
+            let (items, _, _) = server.table("t").unwrap().snapshot();
+            assert_eq!(items.len(), 3, "{label}");
+            assert!(
+                items.iter().any(|i| (i.priority - 9.0).abs() < 1e-12),
+                "{label}: priority update did not land"
+            );
+
+            client.reset("t").unwrap();
+            assert_eq!(server.table("t").unwrap().size(), 0, "{label}");
+        },
+    );
+}
+
+#[test]
+fn server_info_reports_tables_in_order() {
+    for_each_transport(
+        || {
+            Server::builder()
+                .table(TableConfig::uniform_replay("alpha", 10))
+                .table(TableConfig::queue("beta", 4))
+        },
+        |_server, addr, label| {
+            let client = Client::connect(addr).unwrap();
+            let info = client.server_info().unwrap();
+            let names: Vec<&str> = info.iter().map(|(n, _)| n.as_str()).collect();
+            assert_eq!(names, vec!["alpha", "beta"], "{label}");
+        },
+    );
+}
+
+#[test]
+fn checkpoint_rpc_works_on_both_backends() {
+    let dir = std::env::temp_dir().join(format!(
+        "reverb_conformance_ckpt_{}",
+        std::process::id()
+    ));
+    std::fs::create_dir_all(&dir).unwrap();
+    let dir2 = dir.clone();
+    for_each_transport(
+        move || {
+            Server::builder()
+                .table(TableConfig::uniform_replay("t", 100))
+                .checkpoint_dir(&dir2)
+        },
+        |_server, addr, label| {
+            let client = Client::connect(addr).unwrap();
+            write_items(&client, "t", 3, |_| 1.0);
+            let path = client.checkpoint().unwrap();
+            assert!(std::path::Path::new(&path).exists(), "{label}: {path}");
+        },
+    );
+    std::fs::remove_dir_all(dir).ok();
+}
+
+#[test]
+fn queue_delivers_exact_order_exactly_once() {
+    for_each_transport(
+        || Server::builder().table(TableConfig::queue("q", 100)),
+        |_server, addr, label| {
+            let client = Client::connect(addr).unwrap();
+            write_items(&client, "q", 10, |_| 1.0);
+            let mut s = client
+                .sampler(
+                    SamplerOptions::new("q")
+                        .with_workers(1)
+                        .with_max_in_flight(1)
+                        .with_timeout_ms(100),
+                )
+                .unwrap();
+            let mut got = Vec::new();
+            loop {
+                match s.next_sample() {
+                    Ok(sample) => got.push(sample.data[0].to_f32().unwrap()[0]),
+                    Err(e) if e.is_timeout() => break,
+                    Err(e) => panic!("{label}: {e}"),
+                }
+            }
+            assert_eq!(got, (0..10).map(|i| i as f32).collect::<Vec<_>>(), "{label}");
+        },
+    );
+}
+
+#[test]
+fn pipelined_writer_many_small_items() {
+    for_each_transport(
+        || Server::builder().table(TableConfig::uniform_replay("t", 10_000)),
+        |server, addr, label| {
+            let client = Client::connect(addr).unwrap();
+            let mut w = client
+                .writer(WriterOptions::default().with_max_in_flight_items(32))
+                .unwrap();
+            for i in 0..500 {
+                w.append(step(i as f32)).unwrap();
+                w.create_item("t", 1, 1.0).unwrap();
+            }
+            w.flush().unwrap();
+            assert_eq!(w.items_created(), 500, "{label}");
+            assert_eq!(server.table("t").unwrap().size(), 500, "{label}");
+        },
+    );
+}
+
+#[test]
+fn concurrent_writers_and_samplers() {
+    for_each_transport(
+        || Server::builder().table(TableConfig::uniform_replay("t", 10_000)),
+        |server, addr, label| {
+            let stop = std::sync::Arc::new(std::sync::atomic::AtomicBool::new(false));
+            let mut writers = Vec::new();
+            for wid in 0..2u64 {
+                let addr = addr.clone();
+                let stop = stop.clone();
+                writers.push(std::thread::spawn(move || {
+                    let client = Client::connect(addr).unwrap();
+                    let mut w = client.writer(WriterOptions::default()).unwrap();
+                    let mut n = 0u64;
+                    while !stop.load(std::sync::atomic::Ordering::Relaxed) {
+                        w.append(step(wid as f32)).unwrap();
+                        w.create_item("t", 1, 1.0).unwrap();
+                        n += 1;
+                    }
+                    w.flush().unwrap();
+                    n
+                }));
+            }
+            let mut samplers = Vec::new();
+            for _ in 0..2 {
+                let addr = addr.clone();
+                let stop = stop.clone();
+                samplers.push(std::thread::spawn(move || {
+                    let client = Client::connect(addr).unwrap();
+                    let mut s = client
+                        .sampler(
+                            SamplerOptions::new("t")
+                                .with_batch_size(4)
+                                .with_timeout_ms(5_000),
+                        )
+                        .unwrap();
+                    let mut n = 0u64;
+                    while !stop.load(std::sync::atomic::Ordering::Relaxed) {
+                        if s.next_sample().is_ok() {
+                            n += 1;
+                        }
+                    }
+                    s.stop();
+                    n
+                }));
+            }
+            std::thread::sleep(Duration::from_millis(400));
+            stop.store(true, std::sync::atomic::Ordering::Relaxed);
+            let written: u64 = writers.into_iter().map(|h| h.join().unwrap()).sum();
+            let sampled: u64 = samplers.into_iter().map(|h| h.join().unwrap()).sum();
+            assert!(written > 50, "{label}: written={written}");
+            assert!(sampled > 50, "{label}: sampled={sampled}");
+            assert_eq!(server.info()[0].1.inserts, written, "{label}");
+        },
+    );
+}
+
+#[test]
+fn server_stop_fails_clients_cleanly() {
+    // Builds its own servers (not `for_each_transport`) so it can drop
+    // them mid-stream.
+    for in_proc in [false, true] {
+        let (server, addr) = build_one(
+            in_proc,
+            Server::builder().table(TableConfig::uniform_replay("t", 100)),
+        );
+        let client = Client::connect(addr).unwrap();
+        write_items(&client, "t", 5, |_| 1.0);
+        let mut s = client
+            .sampler(SamplerOptions::new("t").with_workers(2))
+            .unwrap();
+        s.next_sample().unwrap();
+        drop(server);
+        let deadline = std::time::Instant::now() + Duration::from_secs(10);
+        loop {
+            match s.next_sample() {
+                Ok(_) => {
+                    assert!(
+                        std::time::Instant::now() < deadline,
+                        "in_proc={in_proc}: hung after server drop"
+                    );
+                }
+                Err(e) => {
+                    assert!(
+                        matches!(e, Error::Io(_) | Error::Cancelled(_)) || e.is_timeout(),
+                        "in_proc={in_proc}: {e}"
+                    );
+                    break;
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn dial_failures_are_clean_on_both_schemes() {
+    assert!(Client::connect("reverb://in-proc/no-such-endpoint").is_err());
+    assert!(Client::connect("tcp://127.0.0.1:1").is_err());
+}

@@ -5,7 +5,6 @@
 //! Run: `cargo bench --bench e2e_dqn`
 
 use reverb::coordinator::{run_dqn, DqnConfig};
-use reverb::core::table::TableConfig;
 use reverb::net::server::Server;
 
 fn main() {
@@ -20,12 +19,12 @@ fn main() {
     println!("| actors | train steps | train/s | env steps/s | realized SPI |");
     println!("|---|---|---|---|---|");
     for actors in [1usize, 2, 4] {
+        let (replay, vars) = DqnConfig::default()
+            .replay_tables(100_000, 0.6, 8.0, 64, 4096.0)
+            .unwrap();
         let server = Server::builder()
-            .table(
-                TableConfig::prioritized_replay("replay", 100_000, 0.6, 8.0, 64, 4096.0)
-                    .unwrap(),
-            )
-            .table(TableConfig::variable_container("variables"))
+            .table(replay)
+            .table(vars)
             .bind("127.0.0.1:0")
             .unwrap();
         let config = DqnConfig {

@@ -14,7 +14,6 @@
 //! EXPERIMENTS.md.
 
 use reverb::coordinator::{run_dqn, DqnConfig};
-use reverb::core::table::TableConfig;
 use reverb::net::server::Server;
 
 fn main() -> reverb::Result<()> {
@@ -28,10 +27,12 @@ fn main() -> reverb::Result<()> {
         .unwrap_or(300);
 
     // Replay: PER with exponent 0.6, SPI 8 (each transition trains ~8/64
-    // batches), min 64 items before sampling, generous error buffer.
+    // batches), min 64 items before sampling, generous error buffer. The
+    // replay table is sharded per core (DqnConfig::table_shards).
+    let (replay, vars) = DqnConfig::default().replay_tables(100_000, 0.6, 8.0, 64, 4096.0)?;
     let server = Server::builder()
-        .table(TableConfig::prioritized_replay("replay", 100_000, 0.6, 8.0, 64, 4096.0)?)
-        .table(TableConfig::variable_container("variables"))
+        .table(replay)
+        .table(vars)
         .checkpoint_dir(std::env::temp_dir().join("reverb_dqn_ckpts"))
         .bind("127.0.0.1:0")?;
     println!(

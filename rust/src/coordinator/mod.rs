@@ -55,6 +55,11 @@ pub struct DqnConfig {
     pub publish_period: u64,
     /// Actors refresh parameters every N environment steps.
     pub actor_refresh_period: u64,
+    /// Shard count for the replay table built by
+    /// [`DqnConfig::replay_tables`]: many actors insert concurrently, so
+    /// the replay table is sharded per core by default (Fig. 7). The
+    /// variable container always stays at one shard.
+    pub table_shards: usize,
     pub learner: LearnerConfig,
     pub seed: u64,
 }
@@ -68,6 +73,31 @@ impl DqnConfig {
             server_addr: server.in_proc_addr(),
             ..DqnConfig::default()
         }
+    }
+
+    /// The standard table pair for this experiment: a PER replay table
+    /// (sharded per [`DqnConfig::table_shards`]) and a single-shard
+    /// variable container (A.2).
+    pub fn replay_tables(
+        &self,
+        max_size: usize,
+        exponent: f64,
+        samples_per_insert: f64,
+        min_size_to_sample: u64,
+        error_buffer: f64,
+    ) -> crate::error::Result<(crate::core::table::TableConfig, crate::core::table::TableConfig)>
+    {
+        let replay = crate::core::table::TableConfig::prioritized_replay(
+            self.replay_table.clone(),
+            max_size,
+            exponent,
+            samples_per_insert,
+            min_size_to_sample,
+            error_buffer,
+        )?
+        .with_shards(self.table_shards);
+        let vars = crate::core::table::TableConfig::variable_container(self.variable_table.clone());
+        Ok((replay, vars))
     }
 }
 
@@ -87,6 +117,7 @@ impl Default for DqnConfig {
             train_steps: 200,
             publish_period: 20,
             actor_refresh_period: 200,
+            table_shards: crate::core::table::default_shard_count(),
             learner: LearnerConfig::default(),
             seed: 11,
         }
@@ -353,7 +384,6 @@ fn actor_loop(
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::core::table::TableConfig;
     use crate::net::server::Server;
 
     /// Full pipeline smoke test: actors + learner + PER + variable
@@ -365,12 +395,15 @@ mod tests {
             eprintln!("skipping: needs artifacts + a real PJRT backend (DESIGN.md §5)");
             return;
         }
+        // Tables come from the config helper so the replay table carries
+        // the per-core shard default.
+        let (replay, vars) = DqnConfig::default()
+            .replay_tables(50_000, 0.6, 8.0, 64, 2048.0)
+            .unwrap();
+        assert_eq!(replay.num_shards, crate::core::table::default_shard_count());
         let server = Server::builder()
-            .table(
-                TableConfig::prioritized_replay("replay", 50_000, 0.6, 8.0, 64, 2048.0)
-                    .unwrap(),
-            )
-            .table(TableConfig::variable_container("variables"))
+            .table(replay)
+            .table(vars)
             .bind("127.0.0.1:0")
             .unwrap();
 

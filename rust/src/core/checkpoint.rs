@@ -15,6 +15,12 @@
 //!
 //! Writing is atomic (tmp file + rename); the CRC guards against torn or
 //! corrupted files on load.
+//!
+//! Sharded tables (DESIGN.md §7) checkpoint deterministically:
+//! `Table::snapshot` walks shards in index order and sorts items by key,
+//! so the byte stream is independent of `num_shards`, and `Table::restore`
+//! re-routes items by key hash — a checkpoint taken at one shard count
+//! restores into any other.
 
 use crate::core::chunk::Chunk;
 use crate::core::chunk_store::ChunkStore;
@@ -336,6 +342,52 @@ mod tests {
         assert!(
             matches!(err, Error::CorruptCheckpoint(_) | Error::Io(_)),
             "{err}"
+        );
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn checkpoint_is_shard_count_portable() {
+        // Save from a 4-shard table, restore into 1- and 3-shard tables:
+        // identical contents, counters, and payloads each way.
+        let dir = tmpdir("shard_portable");
+        let src = Arc::new(Table::new(
+            TableConfig::uniform_replay("t", 100).with_shards(4),
+        ));
+        for k in 1..=25 {
+            src.insert_or_assign(mk_item(k, "t", k as f64 * 0.5, None), None)
+                .unwrap();
+        }
+        src.sample(None).unwrap();
+        let path = dir.join("sharded.rvb");
+        save(&path, &[src.clone()]).unwrap();
+
+        for shards in [1usize, 3] {
+            let dst = Arc::new(Table::new(
+                TableConfig::uniform_replay("t", 100).with_shards(shards),
+            ));
+            let store = ChunkStore::new();
+            assert_eq!(load(&path, &[dst.clone()], &store).unwrap(), 25);
+            let (a, ai, asamp) = src.snapshot();
+            let (b, bi, bsamp) = dst.snapshot();
+            assert_eq!((ai, asamp), (bi, bsamp));
+            assert_eq!(a.len(), b.len());
+            for (x, y) in a.iter().zip(&b) {
+                assert_eq!(x.key, y.key);
+                assert_eq!(x.priority, y.priority);
+                assert_eq!(x.times_sampled, y.times_sampled);
+            }
+        }
+        // And byte streams are identical regardless of source shard count.
+        let single = Arc::new(Table::new(TableConfig::uniform_replay("t", 100)));
+        let (items, ins, smp) = src.snapshot();
+        single.restore(items, ins, smp).unwrap();
+        let path1 = dir.join("single.rvb");
+        save(&path1, &[single]).unwrap();
+        assert_eq!(
+            std::fs::read(&path).unwrap(),
+            std::fs::read(&path1).unwrap(),
+            "checkpoint bytes must be shard-count independent"
         );
         std::fs::remove_dir_all(dir).ok();
     }

@@ -16,7 +16,8 @@ use crate::error::{Error, Result};
 use std::collections::HashMap;
 use std::sync::{Arc, Mutex, Weak};
 
-const NUM_SHARDS: usize = 16;
+/// Default shard count when none is requested.
+pub const DEFAULT_NUM_SHARDS: usize = 16;
 
 /// Sharded weak map from chunk key to chunk.
 pub struct ChunkStore {
@@ -31,14 +32,27 @@ impl Default for ChunkStore {
 
 impl ChunkStore {
     pub fn new() -> Self {
+        Self::with_shards(DEFAULT_NUM_SHARDS)
+    }
+
+    /// Build with an explicit shard count. The server aligns this with its
+    /// largest table shard count so the store never has coarser lock
+    /// granularity than the tables feeding from it.
+    pub fn with_shards(num_shards: usize) -> Self {
+        assert!(num_shards >= 1, "chunk store needs at least one shard");
         ChunkStore {
-            shards: (0..NUM_SHARDS).map(|_| Mutex::new(HashMap::new())).collect(),
+            shards: (0..num_shards).map(|_| Mutex::new(HashMap::new())).collect(),
         }
+    }
+
+    /// Number of lock shards.
+    pub fn num_shards(&self) -> usize {
+        self.shards.len()
     }
 
     #[inline]
     fn shard(&self, key: u64) -> &Mutex<HashMap<u64, Weak<Chunk>>> {
-        &self.shards[(crate::util::splitmix64(key) as usize) % NUM_SHARDS]
+        &self.shards[(crate::util::splitmix64(key) as usize) % self.shards.len()]
     }
 
     /// Register a chunk, returning the shared handle. If a live chunk with
@@ -180,6 +194,19 @@ mod tests {
         assert_eq!(store.live_bytes(), a.encoded_len());
         drop(a);
         assert_eq!(store.live_bytes(), 0);
+    }
+
+    #[test]
+    fn configurable_shard_count() {
+        let store = ChunkStore::with_shards(3);
+        assert_eq!(store.num_shards(), 3);
+        // Behaviour is shard-count independent.
+        let a = store.insert(mk_chunk(1));
+        let b = store.insert(mk_chunk(2));
+        assert!(store.get(1).is_ok() && store.get(2).is_ok());
+        drop((a, b));
+        assert_eq!(store.sweep(), 2);
+        assert_eq!(ChunkStore::new().num_shards(), DEFAULT_NUM_SHARDS);
     }
 
     #[test]

@@ -16,9 +16,14 @@
 //! open-source Reverb `RateLimiter`.
 //!
 //! The limiter itself is pure bookkeeping — blocking (condvars, timeouts)
-//! lives in [`crate::core::table::Table`].
+//! lives in [`crate::core::table::Table`]. Two implementations share the
+//! config: the mutex-friendly [`RateLimiter`] (check-then-commit under an
+//! external lock) and the lock-free [`AtomicRateLimiter`] used by the
+//! sharded table, which makes check+commit a single CAS on the cursor so
+//! admission stays globally exact while shards never share a lock.
 
 use crate::error::{Error, Result};
+use std::sync::atomic::{AtomicU64, Ordering};
 
 /// Serializable limiter configuration.
 #[derive(Clone, Copy, Debug, PartialEq)]
@@ -192,6 +197,190 @@ impl RateLimiter {
     }
 }
 
+/// Lock-free limiter for the sharded table hot path.
+///
+/// The admission cursor (`diff`) lives in a single atomic f64 (bit-cast to
+/// `u64`); admission-check and commit are one CAS, so concurrent inserters
+/// and samplers can never jointly over-admit past the corridor — the exact
+/// guarantee the mutex-based [`RateLimiter`] gets from its external lock,
+/// without any lock. `inserts`/`samples` are kept as separate monotonic
+/// counters for diagnostics, checkpointing, and the (monotone, so safely
+/// non-atomic-with-the-cursor) `min_size_to_sample` gate.
+#[derive(Debug)]
+pub struct AtomicRateLimiter {
+    cfg: RateLimiterConfig,
+    /// f64 bits of the cursor `inserts × SPI − samples`.
+    diff_bits: AtomicU64,
+    inserts: AtomicU64,
+    samples: AtomicU64,
+    blocked_inserts: AtomicU64,
+    blocked_samples: AtomicU64,
+}
+
+impl AtomicRateLimiter {
+    pub fn new(cfg: RateLimiterConfig) -> Self {
+        AtomicRateLimiter {
+            cfg,
+            diff_bits: AtomicU64::new(0f64.to_bits()),
+            inserts: AtomicU64::new(0),
+            samples: AtomicU64::new(0),
+            blocked_inserts: AtomicU64::new(0),
+            blocked_samples: AtomicU64::new(0),
+        }
+    }
+
+    pub fn config(&self) -> &RateLimiterConfig {
+        &self.cfg
+    }
+
+    /// Current cursor position. This is the authoritative admission state;
+    /// it tracks `inserts × SPI − samples` exactly up to f64 rounding of
+    /// the incremental ±SPI/±1 steps (bounded corridors keep the absolute
+    /// error far below any configured `error_buffer`).
+    pub fn diff(&self) -> f64 {
+        f64::from_bits(self.diff_bits.load(Ordering::SeqCst))
+    }
+
+    /// Try to reserve `n` inserts in one CAS on the cursor. Returns `true`
+    /// when the reservation was taken; the caller must then either land the
+    /// items and call [`AtomicRateLimiter::confirm_inserts`], or give the
+    /// reservation back with [`AtomicRateLimiter::rollback_insert`]. The
+    /// `inserts` counter (and with it the `min_size_to_sample` gate) only
+    /// advances at confirm time, i.e. after items are physically present.
+    pub fn try_insert(&self, n: u64) -> bool {
+        let step = n as f64 * self.cfg.samples_per_insert;
+        let mut cur = self.diff_bits.load(Ordering::SeqCst);
+        loop {
+            let next = f64::from_bits(cur) + step;
+            if next > self.cfg.max_diff {
+                return false;
+            }
+            match self.diff_bits.compare_exchange_weak(
+                cur,
+                next.to_bits(),
+                Ordering::SeqCst,
+                Ordering::SeqCst,
+            ) {
+                Ok(_) => return true,
+                Err(actual) => cur = actual,
+            }
+        }
+    }
+
+    /// Count `n` reserved inserts as completed (items are in the table).
+    pub fn confirm_inserts(&self, n: u64) {
+        self.inserts.fetch_add(n, Ordering::SeqCst);
+    }
+
+    /// Read-only probe: whether `n` samples could currently be admitted.
+    /// Used by the table's wait loop; actual grants are committed with
+    /// [`AtomicRateLimiter::try_sample_upto`] under the serving shard's
+    /// lock so admission and item removal stay atomic per shard.
+    pub fn could_sample(&self, n: u64) -> bool {
+        if self.inserts.load(Ordering::SeqCst) < self.cfg.min_size_to_sample {
+            return false;
+        }
+        f64::from_bits(self.diff_bits.load(Ordering::SeqCst)) - n as f64 >= self.cfg.min_diff
+    }
+
+    /// Try to admit and commit up to `n` samples in one CAS; returns the
+    /// granted count (0 = nothing admissible right now). The caller must
+    /// deliver that many samples or roll back the shortfall.
+    pub fn try_sample_upto(&self, n: u64) -> u64 {
+        if self.inserts.load(Ordering::SeqCst) < self.cfg.min_size_to_sample {
+            return 0;
+        }
+        let mut cur = self.diff_bits.load(Ordering::SeqCst);
+        loop {
+            let diff = f64::from_bits(cur);
+            let headroom = (diff - self.cfg.min_diff).floor().max(0.0);
+            // `as u64` saturates for the ±∞-style MinSize bounds.
+            let granted = n.min(headroom as u64);
+            if granted == 0 {
+                return 0;
+            }
+            let next = diff - granted as f64;
+            match self.diff_bits.compare_exchange_weak(
+                cur,
+                next.to_bits(),
+                Ordering::SeqCst,
+                Ordering::SeqCst,
+            ) {
+                Ok(_) => {
+                    self.samples.fetch_add(granted, Ordering::SeqCst);
+                    return granted;
+                }
+                Err(actual) => cur = actual,
+            }
+        }
+    }
+
+    /// Give back an unconfirmed insert reservation (the key turned out to
+    /// already exist — a concurrent `InsertOrAssign` race resolved as an
+    /// update — or the insert failed).
+    pub fn rollback_insert(&self, n: u64) {
+        self.add_to_diff(-(n as f64) * self.cfg.samples_per_insert);
+    }
+
+    /// Give back sample reservations that could not be served (table
+    /// drained between admission and delivery).
+    pub fn rollback_samples(&self, n: u64) {
+        if n == 0 {
+            return;
+        }
+        self.add_to_diff(n as f64);
+        self.samples.fetch_sub(n, Ordering::SeqCst);
+    }
+
+    fn add_to_diff(&self, delta: f64) {
+        let mut cur = self.diff_bits.load(Ordering::SeqCst);
+        loop {
+            let next = (f64::from_bits(cur) + delta).to_bits();
+            match self.diff_bits.compare_exchange_weak(
+                cur,
+                next,
+                Ordering::SeqCst,
+                Ordering::SeqCst,
+            ) {
+                Ok(_) => return,
+                Err(actual) => cur = actual,
+            }
+        }
+    }
+
+    pub fn note_blocked_insert(&self) {
+        self.blocked_inserts.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn note_blocked_sample(&self) {
+        self.blocked_samples.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn inserts(&self) -> u64 {
+        self.inserts.load(Ordering::SeqCst)
+    }
+
+    pub fn samples(&self) -> u64 {
+        self.samples.load(Ordering::SeqCst)
+    }
+
+    pub fn blocked_inserts(&self) -> u64 {
+        self.blocked_inserts.load(Ordering::Relaxed)
+    }
+
+    pub fn blocked_samples(&self) -> u64 {
+        self.blocked_samples.load(Ordering::Relaxed)
+    }
+
+    /// Restore counters (checkpoint load); the cursor is recomputed.
+    pub fn restore(&self, inserts: u64, samples: u64) {
+        self.inserts.store(inserts, Ordering::SeqCst);
+        self.samples.store(samples, Ordering::SeqCst);
+        let diff = inserts as f64 * self.cfg.samples_per_insert - samples as f64;
+        self.diff_bits.store(diff.to_bits(), Ordering::SeqCst);
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -329,5 +518,123 @@ mod tests {
             }
             Ok(())
         });
+    }
+
+    #[test]
+    fn atomic_matches_locked_semantics_sequentially() {
+        // Drive both implementations with the same admissible schedule; the
+        // atomic one must admit exactly what the locked one admits.
+        let cfg = RateLimiterConfig::sample_to_insert_ratio(1.5, 2, 3.0).unwrap();
+        let mut locked = cfg.build();
+        let atomic = AtomicRateLimiter::new(cfg);
+        let mut rng = crate::util::rng::Pcg32::new(99, 1);
+        for _ in 0..2000 {
+            if rng.gen_bool(0.5) {
+                let want = locked.can_insert(1);
+                assert_eq!(atomic.try_insert(1), want);
+                if want {
+                    atomic.confirm_inserts(1);
+                    locked.commit_insert(1);
+                }
+            } else {
+                let want = locked.can_sample(1);
+                assert_eq!(atomic.try_sample_upto(1), want as u64);
+                if want {
+                    locked.commit_sample(1);
+                }
+            }
+            assert!((atomic.diff() - locked.diff()).abs() < 1e-9);
+        }
+        assert_eq!(atomic.inserts(), locked.inserts());
+        assert_eq!(atomic.samples(), locked.samples());
+    }
+
+    #[test]
+    fn atomic_batch_grant_is_exact() {
+        let atomic = AtomicRateLimiter::new(RateLimiterConfig::queue(10));
+        assert_eq!(atomic.try_sample_upto(4), 0, "empty queue grants nothing");
+        for _ in 0..3 {
+            assert!(atomic.try_insert(1));
+            atomic.confirm_inserts(1);
+        }
+        // 3 unconsumed: a batch of 8 is granted exactly 3.
+        assert_eq!(atomic.try_sample_upto(8), 3);
+        assert_eq!(atomic.try_sample_upto(1), 0);
+        // Rollback restores the budget.
+        atomic.rollback_samples(2);
+        assert_eq!(atomic.try_sample_upto(8), 2);
+        assert_eq!(atomic.samples(), 3);
+    }
+
+    #[test]
+    fn atomic_min_size_unbounded_grants() {
+        let atomic = AtomicRateLimiter::new(RateLimiterConfig::min_size(2));
+        assert!(atomic.try_insert(1));
+        atomic.confirm_inserts(1);
+        assert_eq!(atomic.try_sample_upto(5), 0, "below min_size");
+        assert!(!atomic.could_sample(1));
+        assert!(atomic.try_insert(1));
+        atomic.confirm_inserts(1);
+        assert!(atomic.could_sample(1));
+        // MinSize has ±∞ bounds: grants saturate at the request size.
+        assert_eq!(atomic.try_sample_upto(5), 5);
+        assert_eq!(atomic.try_sample_upto(1_000_000), 1_000_000);
+        assert!(atomic.try_insert(1));
+    }
+
+    #[test]
+    fn atomic_rollback_insert_restores_cursor() {
+        let cfg = RateLimiterConfig::queue(2);
+        let atomic = AtomicRateLimiter::new(cfg);
+        assert!(atomic.try_insert(1));
+        atomic.confirm_inserts(1);
+        assert!(atomic.try_insert(1));
+        assert!(!atomic.try_insert(1), "queue full");
+        // Second reservation abandoned (duplicate-key race): cursor restored,
+        // counter never advanced past the confirmed insert.
+        atomic.rollback_insert(1);
+        assert_eq!(atomic.inserts(), 1);
+        assert!(atomic.try_insert(1));
+    }
+
+    #[test]
+    fn atomic_concurrent_inserts_never_over_admit() {
+        // 8 threads race try_insert against a corridor that admits exactly
+        // `max_diff / spi` inserts with no samples; the total admitted must
+        // be exactly that bound, never one more.
+        let cfg = RateLimiterConfig::sample_to_insert_ratio(2.0, 0, 64.0).unwrap();
+        let limit = (cfg.max_diff / cfg.samples_per_insert) as u64;
+        let atomic = std::sync::Arc::new(AtomicRateLimiter::new(cfg));
+        let admitted = std::sync::Arc::new(AtomicU64::new(0));
+        let mut handles = Vec::new();
+        for _ in 0..8 {
+            let atomic = atomic.clone();
+            let admitted = admitted.clone();
+            handles.push(std::thread::spawn(move || {
+                for _ in 0..limit {
+                    if atomic.try_insert(1) {
+                        atomic.confirm_inserts(1);
+                        admitted.fetch_add(1, Ordering::SeqCst);
+                    }
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(admitted.load(Ordering::SeqCst), limit);
+        assert_eq!(atomic.inserts(), limit);
+        assert!(atomic.diff() <= cfg.max_diff + 1e-9);
+    }
+
+    #[test]
+    fn atomic_restore_recomputes_cursor() {
+        let atomic = AtomicRateLimiter::new(RateLimiterConfig::queue(5));
+        atomic.restore(3, 1);
+        assert_eq!(atomic.diff(), 2.0);
+        assert_eq!(atomic.try_sample_upto(9), 2);
+        atomic.restore(3, 1);
+        assert!(atomic.try_insert(3));
+        assert!(!atomic.try_insert(1));
     }
 }

@@ -106,6 +106,12 @@ impl Selector for Fifo {
         self.index.len()
     }
 
+    fn total_weight(&self) -> f64 {
+        // Count mass: a shard holding k items is k× as likely to serve the
+        // next (approximately-ordered) cross-shard FIFO pick.
+        self.index.len() as f64
+    }
+
     fn clear(&mut self) {
         self.index.clear()
     }
@@ -150,6 +156,10 @@ impl Selector for Lifo {
 
     fn len(&self) -> usize {
         self.index.len()
+    }
+
+    fn total_weight(&self) -> f64 {
+        self.index.len() as f64
     }
 
     fn clear(&mut self) {

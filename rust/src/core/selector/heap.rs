@@ -214,6 +214,9 @@ macro_rules! impl_heap_selector {
             fn len(&self) -> usize {
                 self.inner.len()
             }
+            fn total_weight(&self) -> f64 {
+                self.inner.len() as f64
+            }
             fn clear(&mut self) {
                 self.inner.clear()
             }

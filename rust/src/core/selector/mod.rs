@@ -34,6 +34,15 @@ pub trait Selector: Send {
     fn select(&mut self, rng: &mut Pcg32) -> Option<(u64, f64)>;
     /// Number of tracked items.
     fn len(&self) -> usize;
+    /// Total selection mass of the tracked items, in the same units
+    /// `select` draws from. The sharded table weighs shards by this value
+    /// so cross-shard sampling reproduces the single-shard distribution:
+    /// P(item) = (shard mass / Σ masses) × P(item | shard). Count-based
+    /// selectors (uniform, fifo/lifo, heaps) report their item count;
+    /// prioritized reports the sum of priority^C weights.
+    fn total_weight(&self) -> f64 {
+        self.len() as f64
+    }
     /// True if no items are tracked.
     fn is_empty(&self) -> bool {
         self.len() == 0

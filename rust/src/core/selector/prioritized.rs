@@ -220,6 +220,14 @@ impl Selector for Prioritized {
         self.live_len()
     }
 
+    fn total_weight(&self) -> f64 {
+        // Priority mass: shard-weighting by Σ p^C composes to the exact
+        // global proportional distribution (m_s/Σm × w_i/m_s = w_i/Σm).
+        // All-zero shards report 0 and are skipped while positive mass
+        // exists elsewhere, matching the zero-priority starvation rule.
+        self.total().max(0.0)
+    }
+
     fn clear(&mut self) {
         self.tree = vec![0.0; 1];
         self.capacity = 1;

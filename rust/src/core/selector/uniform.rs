@@ -61,6 +61,12 @@ impl Selector for Uniform {
         self.keys.len()
     }
 
+    fn total_weight(&self) -> f64 {
+        // Count mass: shard-weighting by item count makes the cross-shard
+        // composition exactly uniform (n_s/N × 1/n_s = 1/N).
+        self.keys.len() as f64
+    }
+
     fn clear(&mut self) {
         self.keys.clear();
         self.pos.clear();

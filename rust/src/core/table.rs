@@ -1,30 +1,62 @@
-//! Tables (§3.2): the mutex-protected heart of a Reverb server.
+//! Tables (§3.2): the heart of a Reverb server — now sharded.
 //!
 //! A table owns items, two selectors (Sampler + Remover), a rate limiter,
-//! and optional extensions. Everything that mutates table state happens in
-//! one critical section per operation; the paper's two key performance
-//! design points are reproduced here:
+//! and optional extensions. The seed implementation guarded everything with
+//! one `Mutex<State>`, which made that mutex the insert-throughput ceiling
+//! the paper's Fig. 7 works around by spreading load over several tables.
+//! This implementation lifts the ceiling *behind one table name*
+//! (DESIGN.md §7): a [`ShardedTable`] splits the item space over
+//! `num_shards` independently-locked shards (routed by key hash), each
+//! owning its own Sampler/Remover instance, while admission control is a
+//! single lock-free [`AtomicRateLimiter`] whose check+commit is one CAS on
+//! the SPI cursor — globally exact, never behind a global lock.
+//!
+//! Key design points:
 //!
 //! 1. **Decoupled deallocation** — removed items (holding the only
-//!    `Arc<Chunk>` refs) are collected into a vector and dropped *after*
-//!    the table mutex is released, so chunk deallocation never serializes
-//!    other table operations.
-//! 2. **Sample-path batching** — one lock acquisition admits and services
-//!    up to `n` samples (`sample_batch`), while inserts pay per-item lock +
-//!    selector + extension + eviction costs. This asymmetry is what gives
-//!    sampling its ~10× QPS headroom over inserting in the paper's Fig. 5/6
-//!    benchmarks.
+//!    `Arc<Chunk>` refs) are collected and dropped *after* shard locks are
+//!    released, so chunk deallocation never serializes table operations.
+//! 2. **Sample-path batching** — one shard-lock acquisition admits and
+//!    services a whole per-shard slice of a `sample_batch`, preserving the
+//!    paper's ~10× sample/insert QPS asymmetry (Figs. 5/6).
+//! 3. **Mass-weighted shard sampling** — a sample first draws a shard with
+//!    probability proportional to the shard's selector mass
+//!    ([`crate::core::selector::Selector::total_weight`]), then samples
+//!    within it. Uniform composes to exactly 1/N and prioritized to exactly
+//!    w_i/Σw, so cross-shard distributions match the single-shard ones.
+//! 4. **Global eviction budget** — `max_size` is one atomic budget across
+//!    shards; eviction prefers the inserting shard (exact legacy Remover
+//!    order at `num_shards = 1`) and falls back to scanning other shards.
+//! 5. **Deterministic checkpointing** — `snapshot` walks shards in index
+//!    order and sorts items by key, so the checkpoint byte stream is
+//!    independent of the shard count and a checkpoint taken at one shard
+//!    count restores into any other.
+//!
+//! Defaults preserve the exact legacy semantics: every `TableConfig`
+//! constructor uses `num_shards = 1` (deterministic FIFO order, strict
+//! queue behaviour). Sharding is opt-in via [`TableConfig::with_shards`];
+//! queue-style tables (consume-on-sample with a bounded corridor) should
+//! stay at 1 shard — see DESIGN.md §7.
 
 use crate::core::extensions::{ItemRef, TableExtension};
 use crate::core::item::{Item, SampledItem};
-use crate::core::rate_limiter::{RateLimiter, RateLimiterConfig};
+use crate::core::rate_limiter::{AtomicRateLimiter, RateLimiterConfig};
 use crate::core::selector::{Selector, SelectorConfig};
 use crate::core::tensor::Signature;
 use crate::error::{Error, Result};
 use crate::util::rng::Pcg32;
 use std::collections::HashMap;
-use std::sync::{Condvar, Mutex};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Condvar, Mutex, MutexGuard};
 use std::time::{Duration, Instant};
+
+/// Default shard count for throughput-oriented tables: one shard per
+/// available core (the CLI and coordinator knobs default to this).
+pub fn default_shard_count() -> usize {
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1)
+}
 
 /// Static table configuration.
 #[derive(Clone, Debug)]
@@ -39,6 +71,11 @@ pub struct TableConfig {
     pub rate_limiter: RateLimiterConfig,
     /// Optional signature; when present, inserted chunks are validated.
     pub signature: Option<Signature>,
+    /// Number of independently-locked shards behind this table name.
+    /// 1 (the constructor default) reproduces the exact single-mutex
+    /// semantics; larger values lift the insert ceiling at the cost of
+    /// approximate cross-shard ordering for deterministic samplers.
+    pub num_shards: usize,
 }
 
 impl TableConfig {
@@ -53,6 +90,7 @@ impl TableConfig {
             max_times_sampled: 0,
             rate_limiter: RateLimiterConfig::min_size(1),
             signature: None,
+            num_shards: 1,
         }
     }
 
@@ -66,6 +104,7 @@ impl TableConfig {
             max_times_sampled: 1,
             rate_limiter: RateLimiterConfig::queue(queue_size as u64),
             signature: None,
+            num_shards: 1,
         }
     }
 
@@ -91,6 +130,7 @@ impl TableConfig {
                 error_buffer,
             )?,
             signature: None,
+            num_shards: 1,
         })
     }
 
@@ -105,7 +145,15 @@ impl TableConfig {
             max_times_sampled: 0,
             rate_limiter: RateLimiterConfig::min_size(1),
             signature: None,
+            num_shards: 1,
         }
+    }
+
+    /// Split this table over `n` independently-locked shards (Fig. 7).
+    pub fn with_shards(mut self, n: usize) -> Self {
+        assert!(n >= 1, "num_shards must be >= 1");
+        self.num_shards = n;
+        self
     }
 }
 
@@ -122,49 +170,123 @@ pub struct TableInfo {
     pub diff: f64,
 }
 
-struct State {
+/// Per-shard mutable state: the only data behind a lock on the hot path.
+struct ShardState {
     items: HashMap<u64, Item>,
     sampler: Box<dyn Selector>,
     remover: Box<dyn Selector>,
-    rate_limiter: RateLimiter,
-    extensions: Vec<Box<dyn TableExtension>>,
     rng: Pcg32,
-    cancelled: bool,
 }
 
-/// A Reverb table. All methods are safe to call concurrently.
-pub struct Table {
+struct Shard {
+    state: Mutex<ShardState>,
+    /// f64 bits of the shard's sampler mass, refreshed after every mutation
+    /// under the shard lock; read lock-free by the cross-shard sampler.
+    mass: AtomicU64,
+    /// Item count mirror (fallback weights when every mass is zero).
+    count: AtomicUsize,
+}
+
+impl Shard {
+    fn store_stats(&self, st: &ShardState) {
+        self.mass
+            .store(st.sampler.total_weight().to_bits(), Ordering::SeqCst);
+        self.count.store(st.items.len(), Ordering::SeqCst);
+    }
+}
+
+/// Parked-waiter support: blocked inserters/samplers wait here; the hot
+/// path only ever reads one atomic (`count`) to decide whether a wakeup
+/// notification is needed, so uncontended operations never touch the lock.
+struct Waiters {
+    lock: Mutex<()>,
+    cv: Condvar,
+    count: AtomicUsize,
+}
+
+impl Waiters {
+    fn new() -> Self {
+        Waiters {
+            lock: Mutex::new(()),
+            cv: Condvar::new(),
+            count: AtomicUsize::new(0),
+        }
+    }
+}
+
+/// A Reverb table, sharded behind a single name. All methods are safe to
+/// call concurrently. `Table` remains the canonical alias.
+pub struct ShardedTable {
     config: TableConfig,
-    state: Mutex<State>,
-    /// Signalled when inserting may have become possible.
-    insert_cv: Condvar,
-    /// Signalled when sampling may have become possible.
-    sample_cv: Condvar,
+    shards: Vec<Shard>,
+    limiter: AtomicRateLimiter,
+    /// Global capacity budget: items present plus admitted in-flight
+    /// inserts holding a slot. Never exceeds `max_size`.
+    budget: AtomicUsize,
+    /// Items actually present across shards (legacy `items.len()`
+    /// semantics — what `size()`, `TableInfo.size`, and
+    /// `SampledItem.table_size` report).
+    live: AtomicUsize,
+    cancelled: AtomicBool,
+    /// Inserts between limiter reservation and shard landing (or
+    /// rollback). Lets samplers distinguish a genuinely drained table
+    /// (fail fast, legacy behaviour) from an admitted insert that has not
+    /// reached its shard yet (retry).
+    inflight_inserts: AtomicUsize,
+    /// Extensions (§3.5) run under their own mutex (acquired only while a
+    /// shard lock is held — lock order: shard → extensions). `None` when
+    /// no extensions are registered so the hot path pays nothing.
+    extensions: Option<Mutex<Vec<Box<dyn TableExtension>>>>,
+    insert_waiters: Waiters,
+    sample_waiters: Waiters,
+    /// Seed sequence for per-call shard-pick RNGs.
+    pick_seq: AtomicU64,
 }
 
-impl Table {
+/// The canonical table type.
+pub type Table = ShardedTable;
+
+impl ShardedTable {
     pub fn new(config: TableConfig) -> Self {
         Self::with_extensions(config, Vec::new())
     }
 
-    /// Build with table extensions (§3.5). Extensions run under the table
-    /// mutex, in registration order.
+    /// Build with table extensions (§3.5). Extensions run while the serving
+    /// shard's lock is held, in registration order.
     pub fn with_extensions(config: TableConfig, extensions: Vec<Box<dyn TableExtension>>) -> Self {
         assert!(config.max_size > 0, "table max_size must be positive");
-        let state = State {
-            items: HashMap::new(),
-            sampler: config.sampler.build(),
-            remover: config.remover.build(),
-            rate_limiter: config.rate_limiter.build(),
-            extensions,
-            rng: Pcg32::new(0x5EED, crate::util::splitmix64(config.max_size as u64)),
-            cancelled: false,
-        };
-        Table {
+        assert!(config.num_shards >= 1, "table num_shards must be positive");
+        let shards = (0..config.num_shards)
+            .map(|i| Shard {
+                state: Mutex::new(ShardState {
+                    items: HashMap::new(),
+                    sampler: config.sampler.build(),
+                    remover: config.remover.build(),
+                    rng: Pcg32::new(
+                        0x5EED ^ i as u64,
+                        crate::util::splitmix64(config.max_size as u64 ^ ((i as u64) << 17)),
+                    ),
+                }),
+                mass: AtomicU64::new(0f64.to_bits()),
+                count: AtomicUsize::new(0),
+            })
+            .collect();
+        ShardedTable {
+            limiter: AtomicRateLimiter::new(config.rate_limiter),
+            shards,
+            budget: AtomicUsize::new(0),
+            live: AtomicUsize::new(0),
+            cancelled: AtomicBool::new(false),
+            inflight_inserts: AtomicUsize::new(0),
+            extensions: if extensions.is_empty() {
+                None
+            } else {
+                Some(Mutex::new(extensions))
+            },
+            insert_waiters: Waiters::new(),
+            sample_waiters: Waiters::new(),
+            pick_seq: AtomicU64::new(0),
             config,
-            state: Mutex::new(state),
-            insert_cv: Condvar::new(),
-            sample_cv: Condvar::new(),
         }
     }
 
@@ -176,6 +298,19 @@ impl Table {
         &self.config
     }
 
+    pub fn num_shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    #[inline]
+    fn route(&self, key: u64) -> usize {
+        if self.shards.len() == 1 {
+            0
+        } else {
+            (crate::util::splitmix64(key) as usize) % self.shards.len()
+        }
+    }
+
     /// Insert a new item, or — if the key already exists — update its
     /// priority (Reverb's `InsertOrAssign`). Blocks while the rate limiter
     /// rejects inserts, up to `timeout` (`None` = wait forever).
@@ -185,111 +320,266 @@ impl Table {
                 chunk.validate_signature(sig)?;
             }
         }
-        // Items dropped only after the lock is released (decoupled dealloc).
-        let mut dropped: Vec<Item> = Vec::new();
-        {
-            let mut state = self.state.lock().unwrap();
+        let shard_idx = self.route(item.key);
 
-            // Existing key → priority update, not an insert (no rate limit).
-            if state.items.contains_key(&item.key) {
-                Self::apply_update(&mut state, item.key, item.priority)?;
+        // Existing key → priority update, not an insert (no rate limit).
+        {
+            let mut st = self.shards[shard_idx].state.lock().unwrap();
+            if st.items.contains_key(&item.key) {
+                let followups = self.apply_update_in_state(&mut st, item.key, item.priority, true)?;
+                self.shards[shard_idx].store_stats(&st);
+                drop(st);
+                self.apply_followups(followups)?;
                 return Ok(());
             }
-
-            state = self.wait_for(state, timeout, true)?;
-
-            // Evict via the Remover until there is room (§3.2 case 2).
-            while state.items.len() >= self.config.max_size {
-                let State {
-                    ref mut remover,
-                    ref mut rng,
-                    ..
-                } = *state;
-                let victim = remover
-                    .select(rng)
-                    .map(|(k, _)| k)
-                    .ok_or_else(|| {
-                        Error::InvalidArgument("table full but remover empty".into())
-                    })?;
-                if let Some(it) = Self::remove_item(&mut state, victim)? {
-                    dropped.push(it);
-                }
-            }
-
-            state.sampler.insert(item.key, item.priority)?;
-            state.remover.insert(item.key, item.priority)?;
-            state.rate_limiter.commit_insert(1);
-            for ext in &mut state.extensions {
-                ext.on_insert(ItemRef::of(&item));
-            }
-            state.items.insert(item.key, item);
         }
-        // An insert can unblock samplers; eviction never unblocks inserts
-        // (the limiter tracks cumulative counts), but notify both for the
-        // queue-style configs where sampling consumes items.
-        self.sample_cv.notify_all();
+
+        // Reserve an insert on the limiter cursor (one CAS; may block).
+        if self.cancelled.load(Ordering::SeqCst) {
+            return Err(Error::Cancelled(self.config.name.clone()));
+        }
+        // Registered before the reservation so a sampler admitted by our
+        // reservation can always see the insert is still in flight.
+        let deadline = timeout.map(|t| Instant::now() + t);
+        self.inflight_inserts.fetch_add(1, Ordering::SeqCst);
+        if !self.limiter.try_insert(1) {
+            if let Err(e) = self.block_until(&self.insert_waiters, timeout, true, || {
+                self.limiter.try_insert(1)
+            }) {
+                self.inflight_inserts.fetch_sub(1, Ordering::SeqCst);
+                return Err(e);
+            }
+        }
+
+        // Items dropped only after locks are released (decoupled dealloc).
+        let mut dropped: Vec<Item> = Vec::new();
+        let result = self.commit_insert(shard_idx, item, &mut dropped, deadline, timeout);
+        self.inflight_inserts.fetch_sub(1, Ordering::SeqCst);
+        if result.is_ok() {
+            // An insert can unblock samplers (and, for queue-style configs
+            // where sampling consumes items, eventually inserters too).
+            self.notify(&self.sample_waiters);
+        }
         drop(dropped);
+        result
+    }
+
+    /// Land a reserved insert: acquire a capacity slot (evicting if the
+    /// global budget is exhausted), then add the item to its shard.
+    fn commit_insert(
+        &self,
+        shard_idx: usize,
+        item: Item,
+        dropped: &mut Vec<Item>,
+        deadline: Option<Instant>,
+        timeout: Option<Duration>,
+    ) -> Result<()> {
+        // Re-check the duplicate race *before* paying for a capacity slot:
+        // the limiter wait above may have lasted a long time, and a lost
+        // InsertOrAssign race resolved as an update must not evict a
+        // victim. (A second post-slot check below covers the residual
+        // microsecond window.)
+        {
+            let shard = &self.shards[shard_idx];
+            let mut st = shard.state.lock().unwrap();
+            if st.items.contains_key(&item.key) {
+                self.limiter.rollback_insert(1);
+                let followups = self.apply_update_in_state(&mut st, item.key, item.priority, true)?;
+                shard.store_stats(&st);
+                drop(st);
+                self.notify(&self.insert_waiters);
+                return self.apply_followups(followups);
+            }
+        }
+        if let Err(e) = self.acquire_capacity_slot(shard_idx, dropped, deadline, timeout) {
+            self.limiter.rollback_insert(1);
+            // The rollback freed corridor headroom another inserter may be
+            // parked on.
+            self.notify(&self.insert_waiters);
+            return Err(e);
+        }
+        let shard = &self.shards[shard_idx];
+        let mut st = shard.state.lock().unwrap();
+        if st.items.contains_key(&item.key) {
+            // Lost an InsertOrAssign race for this key: resolve as an
+            // update. Give back the slot and the cursor reservation so
+            // inserts stay counted once per new item.
+            self.budget.fetch_sub(1, Ordering::SeqCst);
+            self.limiter.rollback_insert(1);
+            let followups = self.apply_update_in_state(&mut st, item.key, item.priority, true)?;
+            shard.store_stats(&st);
+            drop(st);
+            self.notify(&self.insert_waiters);
+            return self.apply_followups(followups);
+        }
+        let seed: Result<()> = (|| {
+            st.sampler.insert(item.key, item.priority)?;
+            st.remover.insert(item.key, item.priority)?;
+            Ok(())
+        })();
+        if let Err(e) = seed {
+            let _ = st.sampler.delete(item.key);
+            let _ = st.remover.delete(item.key);
+            self.budget.fetch_sub(1, Ordering::SeqCst);
+            self.limiter.rollback_insert(1);
+            shard.store_stats(&st);
+            drop(st);
+            self.notify(&self.insert_waiters);
+            return Err(e);
+        }
+        self.run_extensions(|ext| ext.on_insert(ItemRef::of(&item)));
+        st.items.insert(item.key, item);
+        self.live.fetch_add(1, Ordering::SeqCst);
+        shard.store_stats(&st);
+        // Confirm only after the item is visible so the min_size gate can
+        // never admit samplers against items that have not landed yet.
+        self.limiter.confirm_inserts(1);
         Ok(())
     }
 
-    /// Sample up to `n` items in a single critical section. Blocks until at
-    /// least one sample is admissible (or `timeout`). Returns between 1 and
-    /// `n` items; fewer than `n` when the rate limiter only admits fewer.
+    /// Claim one unit of the global size budget, evicting via the Remover
+    /// while the table is full (§3.2 case 2). Never holds more than one
+    /// shard lock at a time. Honors the caller's insert deadline while
+    /// waiting out transient all-slots-in-flight states.
+    fn acquire_capacity_slot(
+        &self,
+        prefer: usize,
+        dropped: &mut Vec<Item>,
+        deadline: Option<Instant>,
+        timeout: Option<Duration>,
+    ) -> Result<()> {
+        let max = self.config.max_size;
+        let mut idle_scans = 0u32;
+        loop {
+            let s = self.budget.load(Ordering::SeqCst);
+            if s < max {
+                if self
+                    .budget
+                    .compare_exchange(s, s + 1, Ordering::SeqCst, Ordering::SeqCst)
+                    .is_ok()
+                {
+                    return Ok(());
+                }
+                continue;
+            }
+            if self.evict_one(prefer, dropped)? {
+                idle_scans = 0;
+                continue;
+            }
+            // Full by the budget but no victim anywhere: concurrent
+            // inserters hold slots they have not filled yet. Yield briefly,
+            // honoring the caller's deadline.
+            if let Some(d) = deadline {
+                if Instant::now() >= d {
+                    return Err(Error::RateLimiterTimeout(timeout.unwrap()));
+                }
+            }
+            idle_scans += 1;
+            if idle_scans > 1_000_000 {
+                return Err(Error::InvalidArgument("table full but remover empty".into()));
+            }
+            std::thread::yield_now();
+        }
+    }
+
+    /// Evict one item via the Remover, preferring `prefer`'s shard (exact
+    /// legacy eviction order at one shard) and scanning the rest otherwise.
+    /// Returns `true` when the caller should retry its capacity CAS —
+    /// either an eviction happened or capacity freed up on its own.
+    fn evict_one(&self, prefer: usize, dropped: &mut Vec<Item>) -> Result<bool> {
+        let n = self.shards.len();
+        for off in 0..n {
+            let idx = (prefer + off) % n;
+            let shard = &self.shards[idx];
+            let mut st = shard.state.lock().unwrap();
+            // Re-check under the lock: a consume-on-sample removal (which
+            // runs inside this same shard lock) may have freed capacity
+            // between the caller's size probe and our lock acquisition —
+            // evicting then would drop an item a sampler already paid for.
+            if self.budget.load(Ordering::SeqCst) < self.config.max_size {
+                return Ok(true);
+            }
+            let victim = {
+                let ShardState {
+                    ref mut remover,
+                    ref mut rng,
+                    ..
+                } = *st;
+                remover.select(rng).map(|(k, _)| k)
+            };
+            let Some(victim) = victim else {
+                continue;
+            };
+            if let Some(it) = self.remove_item_in_state(&mut st, victim)? {
+                dropped.push(it);
+                shard.store_stats(&st);
+                return Ok(true);
+            }
+        }
+        Ok(false)
+    }
+
+    /// Sample up to `n` items. Blocks until at least one sample is
+    /// admissible (or `timeout`). Returns between 1 and `n` items; fewer
+    /// than `n` when the rate limiter only admits fewer.
+    ///
+    /// The batch is spread over shards drawn proportionally to selector
+    /// mass; each shard visit admits its slice with one CAS **under the
+    /// shard lock** and serves it in the same critical section, so
+    /// admission and consume-on-sample removal stay atomic per shard.
     ///
     /// Chunk payloads are NOT decoded here — callers materialize the
     /// returned `Arc<Chunk>` data outside the lock.
     pub fn sample_batch(&self, n: usize, timeout: Option<Duration>) -> Result<Vec<SampledItem>> {
         assert!(n > 0);
+        let deadline = timeout.map(|t| Instant::now() + t);
+        let mut out = Vec::new();
         let mut dropped: Vec<Item> = Vec::new();
-        let sampled = {
-            let mut state = self.state.lock().unwrap();
-            state = self.wait_for(state, timeout, false)?;
-
-            let mut out = Vec::with_capacity(n);
-            for _ in 0..n {
-                if !state.rate_limiter.can_sample(1) || state.items.is_empty() {
-                    break;
-                }
-                // Borrow-split: rng and sampler live in the same struct.
-                let State {
-                    ref mut sampler,
-                    ref mut rng,
-                    ..
-                } = *state;
-                let Some((key, probability)) = sampler.select(rng) else {
-                    break;
-                };
-                state.rate_limiter.commit_sample(1);
-                let table_size = state.items.len();
-                let item = state.items.get_mut(&key).expect("selector/table in sync");
-                item.times_sampled += 1;
-                let snapshot = item.clone();
-                let hit_limit = self.config.max_times_sampled > 0
-                    && item.times_sampled >= self.config.max_times_sampled;
-                for ext in &mut state.extensions {
-                    ext.on_sample(ItemRef::of(&snapshot));
-                }
-                if hit_limit {
-                    if let Some(it) = Self::remove_item(&mut state, key)? {
-                        dropped.push(it);
-                    }
-                }
-                out.push(SampledItem {
-                    item: snapshot,
-                    probability,
-                    table_size,
-                });
+        loop {
+            if self.cancelled.load(Ordering::SeqCst) {
+                return Err(Error::Cancelled(self.config.name.clone()));
             }
-            out
-        };
-        if sampled.is_empty() {
-            // wait_for admitted one sample, so this is unreachable unless a
-            // racing sampler consumed the budget; surface as timeout.
-            return Err(Error::RateLimiterTimeout(timeout.unwrap_or(Duration::ZERO)));
+            if !self.limiter.could_sample(1) {
+                self.block_until(&self.sample_waiters, remaining(deadline, timeout)?, false, || {
+                    self.limiter.could_sample(1)
+                })?;
+            }
+            self.collect_samples(n as u64, &mut out, &mut dropped);
+            if !out.is_empty() {
+                break;
+            }
+            // Admissible by the counters but nothing collectable. With no
+            // items, no in-flight inserts, and the limiter still
+            // admissible, the table was genuinely drained
+            // (deleted/evicted) since the counters last matched — fail
+            // immediately like the legacy single-lock path did. Otherwise
+            // an insert is mid-flight to its shard: retry until the
+            // deadline.
+            if self.budget.load(Ordering::SeqCst) == 0
+                && self.inflight_inserts.load(Ordering::SeqCst) == 0
+                && self.limiter.could_sample(1)
+            {
+                return Err(Error::RateLimiterTimeout(timeout.unwrap_or(Duration::ZERO)));
+            }
+            match deadline {
+                Some(d) if Instant::now() >= d => {
+                    return Err(Error::RateLimiterTimeout(timeout.unwrap()));
+                }
+                _ => {
+                    // Park on the sample condvar (a landing insert
+                    // notifies it) with a short bound so liveness never
+                    // depends on the wakeup alone.
+                    let w = &self.sample_waiters;
+                    let guard = w.lock.lock().unwrap();
+                    w.count.fetch_add(1, Ordering::SeqCst);
+                    let _ = w.cv.wait_timeout(guard, Duration::from_millis(1)).unwrap();
+                    w.count.fetch_sub(1, Ordering::SeqCst);
+                }
+            }
         }
-        self.insert_cv.notify_all();
+        self.notify(&self.insert_waiters);
         drop(dropped);
-        Ok(sampled)
+        Ok(out)
     }
 
     /// Convenience single-item sample.
@@ -297,17 +587,183 @@ impl Table {
         Ok(self.sample_batch(1, timeout)?.remove(0))
     }
 
+    /// One cross-shard collection pass: draw shard slices weighted by
+    /// selector mass, then serve each slice under its shard's lock.
+    fn collect_samples(&self, want: u64, out: &mut Vec<SampledItem>, dropped: &mut Vec<Item>) {
+        let nshards = self.shards.len();
+        if nshards == 1 {
+            self.sample_from_shard(0, want, 0.0, true, out, dropped);
+            return;
+        }
+        let mut rng = self.pick_rng();
+        for _round in 0..4 {
+            let remaining_want = want - out.len() as u64;
+            if remaining_want == 0 {
+                return;
+            }
+            let mut weights: Vec<f64> = self
+                .shards
+                .iter()
+                .map(|s| f64::from_bits(s.mass.load(Ordering::SeqCst)))
+                .collect();
+            let mut use_mass = true;
+            let mut total: f64 = weights.iter().sum();
+            if total <= 0.0 {
+                // Every shard reports zero mass (all-zero priorities):
+                // fall back to item-count weights, mirroring the in-shard
+                // uniform fallback.
+                use_mass = false;
+                weights = self
+                    .shards
+                    .iter()
+                    .map(|s| s.count.load(Ordering::SeqCst) as f64)
+                    .collect();
+                total = weights.iter().sum();
+                if total <= 0.0 {
+                    return; // table (transiently) empty
+                }
+            }
+            // Multinomial draw of per-shard slice sizes. Floating-point
+            // boundary misses fall back to the last *positive-weight*
+            // shard, never a zero-mass one (which may hold only
+            // zero-priority items the starvation rule must skip).
+            let last_positive = weights
+                .iter()
+                .rposition(|w| *w > 0.0)
+                .expect("total > 0 implies a positive weight");
+            let mut picks = vec![0u64; nshards];
+            for _ in 0..remaining_want {
+                let mut target = rng.gen_f64() * total;
+                let mut idx = last_positive;
+                for (i, w) in weights.iter().enumerate() {
+                    if target < *w {
+                        idx = i;
+                        break;
+                    }
+                    target -= *w;
+                }
+                picks[idx] += 1;
+            }
+            for (idx, &cnt) in picks.iter().enumerate() {
+                if cnt == 0 {
+                    continue;
+                }
+                let slice = cnt.min(want - out.len() as u64);
+                if slice == 0 {
+                    break;
+                }
+                self.sample_from_shard(idx, slice, total - weights[idx], use_mass, out, dropped);
+            }
+            if out.len() as u64 >= want {
+                return;
+            }
+            // Shards drained under us (weights were stale) — redraw.
+        }
+    }
+
+    /// Serve up to `want` samples from one shard in a single critical
+    /// section. The limiter grant happens inside the lock, clamped to the
+    /// items actually present, so every granted sample is delivered.
+    fn sample_from_shard(
+        &self,
+        idx: usize,
+        want: u64,
+        other_weight: f64,
+        use_mass: bool,
+        out: &mut Vec<SampledItem>,
+        dropped: &mut Vec<Item>,
+    ) {
+        let shard = &self.shards[idx];
+        let mut st = shard.state.lock().unwrap();
+        let avail = st.items.len() as u64;
+        if avail == 0 {
+            return;
+        }
+        let granted = self.limiter.try_sample_upto(want.min(avail));
+        let mut served = 0u64;
+        for _ in 0..granted {
+            let live = if use_mass {
+                st.sampler.total_weight()
+            } else {
+                st.items.len() as f64
+            };
+            let selected = {
+                let ShardState {
+                    ref mut sampler,
+                    ref mut rng,
+                    ..
+                } = *st;
+                sampler.select(rng)
+            };
+            let Some((key, p_in)) = selected else {
+                break;
+            };
+            // Compose the global probability: P(shard) × P(item | shard),
+            // with this shard's weight refreshed under the lock so a
+            // single-shard table reports the exact in-shard probability.
+            let effective_total = other_weight + live;
+            let probability = if effective_total > 0.0 {
+                (p_in * (live / effective_total)).min(1.0)
+            } else {
+                p_in
+            };
+            let table_size = self.live.load(Ordering::SeqCst);
+            let item = st.items.get_mut(&key).expect("selector/shard in sync");
+            item.times_sampled += 1;
+            let snapshot = item.clone();
+            let hit_limit = self.config.max_times_sampled > 0
+                && item.times_sampled >= self.config.max_times_sampled;
+            self.run_extensions(|ext| ext.on_sample(ItemRef::of(&snapshot)));
+            let mut removal_failed = false;
+            if hit_limit {
+                match self.remove_item_in_state(&mut st, key) {
+                    Ok(Some(it)) => dropped.push(it),
+                    Ok(None) => {}
+                    // Selector/map divergence (should be unreachable): stop
+                    // serving this slice rather than sampling a ghost.
+                    Err(_) => removal_failed = true,
+                }
+            }
+            out.push(SampledItem {
+                item: snapshot,
+                probability,
+                table_size,
+            });
+            served += 1;
+            if removal_failed {
+                break;
+            }
+        }
+        shard.store_stats(&st);
+        drop(st);
+        if served < granted {
+            // Selector refused (e.g. emptied by removals mid-slice): give
+            // the unused grants back and wake samplers parked on the
+            // now-restored headroom.
+            self.limiter.rollback_samples(granted - served);
+            self.notify(&self.sample_waiters);
+        }
+    }
+
     /// Update priorities for a set of keys. Unknown keys are ignored
     /// (mirrors Reverb: items may have been evicted since the client read
     /// them). Returns the number of items actually updated.
     pub fn update_priorities(&self, updates: &[(u64, f64)]) -> Result<usize> {
-        let mut state = self.state.lock().unwrap();
         let mut applied = 0;
         for &(key, priority) in updates {
-            if state.items.contains_key(&key) {
-                Self::apply_update(&mut state, key, priority)?;
-                applied += 1;
-            }
+            let idx = self.route(key);
+            let followups = {
+                let shard = &self.shards[idx];
+                let mut st = shard.state.lock().unwrap();
+                if !st.items.contains_key(&key) {
+                    continue;
+                }
+                let f = self.apply_update_in_state(&mut st, key, priority, true)?;
+                shard.store_stats(&st);
+                f
+            };
+            applied += 1;
+            self.apply_followups(followups)?;
         }
         Ok(applied)
     }
@@ -316,12 +772,13 @@ impl Table {
     /// deleted.
     pub fn delete(&self, keys: &[u64]) -> Result<usize> {
         let mut dropped: Vec<Item> = Vec::new();
-        {
-            let mut state = self.state.lock().unwrap();
-            for &key in keys {
-                if let Some(it) = Self::remove_item(&mut state, key)? {
-                    dropped.push(it);
-                }
+        for &key in keys {
+            let idx = self.route(key);
+            let shard = &self.shards[idx];
+            let mut st = shard.state.lock().unwrap();
+            if let Some(it) = self.remove_item_in_state(&mut st, key)? {
+                dropped.push(it);
+                shard.store_stats(&st);
             }
         }
         let n = dropped.len();
@@ -334,84 +791,98 @@ impl Table {
     /// bookkeeping out of the limiter).
     pub fn reset(&self) {
         let mut dropped: Vec<Item> = Vec::new();
-        {
-            let mut state = self.state.lock().unwrap();
-            for (_, it) in state.items.drain() {
-                dropped.push(it);
-            }
-            state.sampler.clear();
-            state.remover.clear();
-            for ext in &mut state.extensions {
-                ext.on_reset();
-            }
+        for shard in &self.shards {
+            let mut st = shard.state.lock().unwrap();
+            let drained = st.items.len();
+            dropped.extend(st.items.drain().map(|(_, it)| it));
+            st.sampler.clear();
+            st.remover.clear();
+            self.budget.fetch_sub(drained, Ordering::SeqCst);
+            self.live.fetch_sub(drained, Ordering::SeqCst);
+            shard.store_stats(&st);
         }
-        self.insert_cv.notify_all();
+        self.run_extensions_standalone(|ext| ext.on_reset());
+        self.notify(&self.insert_waiters);
         drop(dropped);
     }
 
     /// Wake all blocked waiters with `Cancelled` (server shutdown).
     pub fn cancel(&self) {
-        self.state.lock().unwrap().cancelled = true;
-        self.insert_cv.notify_all();
-        self.sample_cv.notify_all();
+        self.cancelled.store(true, Ordering::SeqCst);
+        self.force_notify(&self.insert_waiters);
+        self.force_notify(&self.sample_waiters);
     }
 
-    /// Current size (item count).
+    /// Current size (items actually present, legacy `items.len()`
+    /// semantics).
     pub fn size(&self) -> usize {
-        self.state.lock().unwrap().items.len()
+        self.live.load(Ordering::SeqCst)
     }
 
     /// Whether an item with `key` exists.
     pub fn contains(&self, key: u64) -> bool {
-        self.state.lock().unwrap().items.contains_key(&key)
+        let idx = self.route(key);
+        self.shards[idx]
+            .state
+            .lock()
+            .unwrap()
+            .items
+            .contains_key(&key)
     }
 
     /// Metrics snapshot.
     pub fn info(&self) -> TableInfo {
-        let state = self.state.lock().unwrap();
         TableInfo {
-            size: state.items.len(),
+            size: self.live.load(Ordering::SeqCst),
             max_size: self.config.max_size,
-            inserts: state.rate_limiter.inserts(),
-            samples: state.rate_limiter.samples(),
-            rate_limited_inserts: state.rate_limiter.blocked_inserts(),
-            rate_limited_samples: state.rate_limiter.blocked_samples(),
-            diff: state.rate_limiter.diff(),
+            inserts: self.limiter.inserts(),
+            samples: self.limiter.samples(),
+            rate_limited_inserts: self.limiter.blocked_inserts(),
+            rate_limited_samples: self.limiter.blocked_samples(),
+            diff: self.limiter.diff(),
         }
     }
 
     /// Clone out all items plus limiter counters (checkpointing, §3.7).
+    /// Shards are walked in index order and the result is sorted by key,
+    /// so the snapshot is deterministic and independent of the shard
+    /// count. The server's checkpoint gate quiesces concurrent mutations
+    /// for cross-shard consistency; each shard's slice is atomic
+    /// regardless.
     pub fn snapshot(&self) -> (Vec<Item>, u64, u64) {
-        let state = self.state.lock().unwrap();
-        let mut items: Vec<Item> = state.items.values().cloned().collect();
+        let mut items: Vec<Item> = Vec::with_capacity(self.live.load(Ordering::SeqCst));
+        for shard in &self.shards {
+            let st = shard.state.lock().unwrap();
+            items.extend(st.items.values().cloned());
+        }
         items.sort_by_key(|i| i.key);
-        (
-            items,
-            state.rate_limiter.inserts(),
-            state.rate_limiter.samples(),
-        )
+        (items, self.limiter.inserts(), self.limiter.samples())
     }
 
-    /// Restore from a checkpoint snapshot. The table must be empty.
+    /// Restore from a checkpoint snapshot. The table must be empty. Items
+    /// are re-routed by key hash, so a checkpoint taken at any shard count
+    /// restores into any other.
     pub fn restore(&self, items: Vec<Item>, inserts: u64, samples: u64) -> Result<()> {
-        let mut state = self.state.lock().unwrap();
-        if !state.items.is_empty() {
+        if self.budget.load(Ordering::SeqCst) != 0 {
             return Err(Error::InvalidArgument(
                 "restore into non-empty table".into(),
             ));
         }
         for item in items {
-            state.sampler.insert(item.key, item.priority)?;
-            state.remover.insert(item.key, item.priority)?;
-            for ext in &mut state.extensions {
-                ext.on_insert(ItemRef::of(&item));
-            }
-            state.items.insert(item.key, item);
+            let idx = self.route(item.key);
+            let shard = &self.shards[idx];
+            let mut st = shard.state.lock().unwrap();
+            st.sampler.insert(item.key, item.priority)?;
+            st.remover.insert(item.key, item.priority)?;
+            self.run_extensions(|ext| ext.on_insert(ItemRef::of(&item)));
+            st.items.insert(item.key, item);
+            self.budget.fetch_add(1, Ordering::SeqCst);
+            self.live.fetch_add(1, Ordering::SeqCst);
+            shard.store_stats(&st);
         }
-        state.rate_limiter.restore(inserts, samples);
-        drop(state);
-        self.sample_cv.notify_all();
-        self.insert_cv.notify_all();
+        self.limiter.restore(inserts, samples);
+        self.force_notify(&self.sample_waiters);
+        self.force_notify(&self.insert_waiters);
         Ok(())
     }
 
@@ -419,113 +890,162 @@ impl Table {
     // internals
     // ------------------------------------------------------------------
 
-    /// Block until the rate limiter admits one insert (`insert=true`) or
-    /// one sample (`insert=false`).
-    fn wait_for<'a>(
-        &'a self,
-        mut state: std::sync::MutexGuard<'a, State>,
+    /// Park until `try_op` succeeds (its success usually commits a limiter
+    /// reservation), the table is cancelled, or `timeout` expires. The hot
+    /// path never calls this: it is only entered after a failed fast try.
+    fn block_until(
+        &self,
+        w: &Waiters,
         timeout: Option<Duration>,
         insert: bool,
-    ) -> Result<std::sync::MutexGuard<'a, State>> {
+        mut try_op: impl FnMut() -> bool,
+    ) -> Result<()> {
         let deadline = timeout.map(|t| Instant::now() + t);
+        let mut guard = w.lock.lock().unwrap();
+        w.count.fetch_add(1, Ordering::SeqCst);
         let mut noted = false;
-        loop {
-            if state.cancelled {
-                return Err(Error::Cancelled(self.config.name.clone()));
+        let result = loop {
+            if self.cancelled.load(Ordering::SeqCst) {
+                break Err(Error::Cancelled(self.config.name.clone()));
             }
-            let ok = if insert {
-                state.rate_limiter.can_insert(1)
-            } else {
-                state.rate_limiter.can_sample(1)
-            };
-            if ok {
-                return Ok(state);
+            if try_op() {
+                break Ok(());
             }
             if !noted {
                 if insert {
-                    state.rate_limiter.note_blocked_insert();
+                    self.limiter.note_blocked_insert();
                 } else {
-                    state.rate_limiter.note_blocked_sample();
+                    self.limiter.note_blocked_sample();
                 }
                 noted = true;
             }
-            let cv = if insert { &self.insert_cv } else { &self.sample_cv };
-            state = match deadline {
-                None => cv.wait(state).unwrap(),
+            guard = match deadline {
+                None => w.cv.wait(guard).unwrap(),
                 Some(d) => {
                     let now = Instant::now();
                     if now >= d {
-                        return Err(Error::RateLimiterTimeout(timeout.unwrap()));
+                        break Err(Error::RateLimiterTimeout(timeout.unwrap()));
                     }
-                    let (guard, res) = cv.wait_timeout(state, d - now).unwrap();
-                    if res.timed_out() && {
-                        let ok = if insert {
-                            guard.rate_limiter.can_insert(1)
-                        } else {
-                            guard.rate_limiter.can_sample(1)
-                        };
-                        !ok && !guard.cancelled
-                    } {
-                        return Err(Error::RateLimiterTimeout(timeout.unwrap()));
-                    }
-                    guard
+                    w.cv.wait_timeout(guard, d - now).unwrap().0
                 }
             };
+        };
+        w.count.fetch_sub(1, Ordering::SeqCst);
+        drop(guard);
+        result
+    }
+
+    /// Wake one waiter class if (and only if) anyone is parked. The
+    /// lock/unlock before notify closes the check-then-wait race: a waiter
+    /// registers `count` under the lock before testing its predicate, so a
+    /// notifier that misses the count has published its commit before the
+    /// waiter's test runs.
+    fn notify(&self, w: &Waiters) {
+        if w.count.load(Ordering::SeqCst) > 0 {
+            drop(w.lock.lock().unwrap());
+            w.cv.notify_all();
         }
     }
 
-    /// Apply a priority update plus any extension follow-ups (§3.5
-    /// diffusion). Follow-ups are applied once, without recursion.
-    fn apply_update(state: &mut State, key: u64, priority: f64) -> Result<()> {
-        let followups = Self::apply_update_inner(state, key, priority, true)?;
-        for (k, p) in followups {
-            if state.items.contains_key(&k) {
-                Self::apply_update_inner(state, k, p, false)?;
+    /// Unconditional notify (cancel/restore paths).
+    fn force_notify(&self, w: &Waiters) {
+        drop(w.lock.lock().unwrap());
+        w.cv.notify_all();
+    }
+
+    fn pick_rng(&self) -> Pcg32 {
+        let seq = self.pick_seq.fetch_add(1, Ordering::Relaxed);
+        Pcg32::new(crate::util::splitmix64(seq ^ 0x5EED_BA5E), seq)
+    }
+
+    fn run_extensions(&self, mut f: impl FnMut(&mut dyn TableExtension)) {
+        if let Some(m) = &self.extensions {
+            let mut exts = m.lock().unwrap();
+            for e in exts.iter_mut() {
+                f(e.as_mut());
+            }
+        }
+    }
+
+    /// Same as [`Self::run_extensions`]; named separately for call sites
+    /// that hold no shard lock (reset) to document the lock order.
+    fn run_extensions_standalone(&self, f: impl FnMut(&mut dyn TableExtension)) {
+        self.run_extensions(f)
+    }
+
+    /// Apply a priority update inside one shard; returns extension
+    /// follow-ups (§3.5 diffusion) for the caller to apply once, without
+    /// recursion, to whichever shards their keys live in.
+    fn apply_update_in_state(
+        &self,
+        st: &mut MutexGuard<'_, ShardState>,
+        key: u64,
+        priority: f64,
+        run_extensions: bool,
+    ) -> Result<Vec<(u64, f64)>> {
+        let item = st.items.get_mut(&key).ok_or(Error::ItemNotFound(key))?;
+        item.priority = priority;
+        st.sampler.update(key, priority)?;
+        st.remover.update(key, priority)?;
+        let mut followups = Vec::new();
+        if run_extensions {
+            let item = st.items.get(&key).expect("just updated");
+            let r = ItemRef::of(item);
+            self.run_extensions(|ext| followups.extend(ext.on_update(r)));
+        }
+        Ok(followups)
+    }
+
+    /// Apply follow-up updates to their owning shards (cross-shard safe:
+    /// one shard lock at a time, extensions not re-run).
+    fn apply_followups(&self, followups: Vec<(u64, f64)>) -> Result<()> {
+        for (key, priority) in followups {
+            let idx = self.route(key);
+            let shard = &self.shards[idx];
+            let mut st = shard.state.lock().unwrap();
+            if st.items.contains_key(&key) {
+                self.apply_update_in_state(&mut st, key, priority, false)?;
+                shard.store_stats(&st);
             }
         }
         Ok(())
     }
 
-    fn apply_update_inner(
-        state: &mut State,
+    /// Remove an item from one shard's structures and the global budget;
+    /// returns it so the caller can drop it outside the lock. Unknown keys
+    /// → Ok(None). The caller refreshes shard stats.
+    fn remove_item_in_state(
+        &self,
+        st: &mut MutexGuard<'_, ShardState>,
         key: u64,
-        priority: f64,
-        run_extensions: bool,
-    ) -> Result<Vec<(u64, f64)>> {
-        let item = state
-            .items
-            .get_mut(&key)
-            .ok_or(Error::ItemNotFound(key))?;
-        item.priority = priority;
-        let snapshot = ItemRef::of(item);
-        let key = snapshot.key;
-        state.sampler.update(key, priority)?;
-        state.remover.update(key, priority)?;
-        let mut followups = Vec::new();
-        if run_extensions {
-            // Re-borrow item immutably through a raw snapshot: extensions
-            // only see ItemRef fields.
-            let item = state.items.get(&key).expect("just updated");
-            let r = ItemRef::of(item);
-            for ext in &mut state.extensions {
-                followups.extend(ext.on_update(r));
-            }
-        }
-        Ok(followups)
-    }
-
-    /// Remove an item from all internal structures; returns it so the
-    /// caller can drop it outside the lock. Unknown keys → Ok(None).
-    fn remove_item(state: &mut State, key: u64) -> Result<Option<Item>> {
-        let Some(item) = state.items.remove(&key) else {
+    ) -> Result<Option<Item>> {
+        let Some(item) = st.items.remove(&key) else {
             return Ok(None);
         };
-        state.sampler.delete(key)?;
-        state.remover.delete(key)?;
-        for ext in &mut state.extensions {
-            ext.on_delete(ItemRef::of(&item));
-        }
+        // Budget release right after the map removal so map↔budget stay
+        // consistent even if a selector delete fails below.
+        self.budget.fetch_sub(1, Ordering::SeqCst);
+        self.live.fetch_sub(1, Ordering::SeqCst);
+        st.sampler.delete(key)?;
+        st.remover.delete(key)?;
+        self.run_extensions(|ext| ext.on_delete(ItemRef::of(&item)));
         Ok(Some(item))
+    }
+}
+
+/// Remaining time before `deadline` as a fresh timeout, or the original
+/// timeout error once it has passed. `None` deadline = wait forever.
+fn remaining(deadline: Option<Instant>, timeout: Option<Duration>) -> Result<Option<Duration>> {
+    match deadline {
+        None => Ok(None),
+        Some(d) => {
+            let now = Instant::now();
+            if now >= d {
+                Err(Error::RateLimiterTimeout(timeout.unwrap()))
+            } else {
+                Ok(Some(d - now))
+            }
+        }
     }
 }
 
@@ -562,6 +1082,23 @@ mod tests {
         let t = uniform_table(10);
         let err = t.sample(Some(Duration::from_millis(20))).unwrap_err();
         assert!(err.is_timeout(), "{err}");
+    }
+
+    #[test]
+    fn drained_admissible_table_fails_fast_even_without_timeout() {
+        // min_size(1) limiter stays admissible after a full drain (its
+        // counters are cumulative), but with nothing to serve and nothing
+        // in flight the sample must fail immediately — legacy behaviour —
+        // rather than hang a `None`-timeout caller.
+        let t = uniform_table(10);
+        for k in 1..=3 {
+            t.insert_or_assign(mk_item(k, 1.0), None).unwrap();
+        }
+        t.delete(&[1, 2, 3]).unwrap();
+        let start = Instant::now();
+        let err = t.sample(None).unwrap_err();
+        assert!(err.is_timeout(), "{err}");
+        assert!(start.elapsed() < Duration::from_secs(2), "sample hung");
     }
 
     #[test]
@@ -807,5 +1344,166 @@ mod tests {
         let t2 = Table::new(cfg);
         t2.restore(items, ins, smp).unwrap();
         assert_eq!(t2.sample(None).unwrap().item.key, 2);
+    }
+
+    // ------------------------------------------------------------------
+    // sharded-specific tests
+    // ------------------------------------------------------------------
+
+    #[test]
+    fn sharded_insert_sample_covers_all_shards() {
+        let t = Table::new(TableConfig::uniform_replay("t", 1000).with_shards(4));
+        assert_eq!(t.num_shards(), 4);
+        for k in 1..=200 {
+            t.insert_or_assign(mk_item(k, 1.0), None).unwrap();
+        }
+        assert_eq!(t.size(), 200);
+        for k in 1..=200 {
+            assert!(t.contains(k), "missing key {k}");
+        }
+        // Every key is reachable through cross-shard sampling.
+        let mut seen = std::collections::HashSet::new();
+        for _ in 0..6000 {
+            let s = t.sample(None).unwrap();
+            assert!((s.probability - 1.0 / 200.0).abs() < 1e-3, "P={}", s.probability);
+            seen.insert(s.item.key);
+        }
+        assert!(seen.len() > 190, "only {} of 200 keys sampled", seen.len());
+    }
+
+    #[test]
+    fn sharded_capacity_is_a_global_budget() {
+        let t = Table::new(TableConfig::uniform_replay("t", 10).with_shards(4));
+        for k in 1..=50 {
+            t.insert_or_assign(mk_item(k, 1.0), None).unwrap();
+            assert!(t.size() <= 10, "size {} exceeded budget", t.size());
+        }
+        assert_eq!(t.size(), 10);
+        let (items, _, _) = t.snapshot();
+        assert_eq!(items.len(), 10);
+    }
+
+    #[test]
+    fn sharded_duplicate_insert_is_update() {
+        let t = Table::new(TableConfig::uniform_replay("t", 100).with_shards(8));
+        for k in 1..=20 {
+            t.insert_or_assign(mk_item(k, 1.0), None).unwrap();
+        }
+        for k in 1..=20 {
+            t.insert_or_assign(mk_item(k, 2.0), None).unwrap();
+        }
+        assert_eq!(t.size(), 20);
+        assert_eq!(t.info().inserts, 20, "updates must not count as inserts");
+        let (items, _, _) = t.snapshot();
+        assert!(items.iter().all(|i| i.priority == 2.0));
+    }
+
+    #[test]
+    fn sharded_snapshot_is_shard_count_independent() {
+        let a = Table::new(TableConfig::uniform_replay("t", 100).with_shards(1));
+        let b = Table::new(TableConfig::uniform_replay("t", 100).with_shards(5));
+        for k in 1..=40 {
+            a.insert_or_assign(mk_item(k, k as f64), None).unwrap();
+            b.insert_or_assign(mk_item(k, k as f64), None).unwrap();
+        }
+        let (ia, _, _) = a.snapshot();
+        let (ib, _, _) = b.snapshot();
+        assert_eq!(ia.len(), ib.len());
+        for (x, y) in ia.iter().zip(&ib) {
+            assert_eq!(x.key, y.key);
+            assert_eq!(x.priority, y.priority);
+        }
+        // Cross-shard-count restore: 5-shard snapshot into a 3-shard table.
+        let c = Table::new(TableConfig::uniform_replay("t", 100).with_shards(3));
+        c.restore(ib, 40, 0).unwrap();
+        assert_eq!(c.size(), 40);
+        for k in 1..=40 {
+            assert!(c.contains(k));
+        }
+    }
+
+    #[test]
+    fn sharded_delete_and_update_route_correctly() {
+        let t = Table::new(TableConfig::uniform_replay("t", 100).with_shards(4));
+        for k in 1..=30 {
+            t.insert_or_assign(mk_item(k, 1.0), None).unwrap();
+        }
+        let updates: Vec<(u64, f64)> = (1..=30).map(|k| (k, k as f64)).collect();
+        assert_eq!(t.update_priorities(&updates).unwrap(), 30);
+        let deletes: Vec<u64> = (1..=10).collect();
+        assert_eq!(t.delete(&deletes).unwrap(), 10);
+        assert_eq!(t.size(), 20);
+        let (items, _, _) = t.snapshot();
+        assert!(items.iter().all(|i| i.key > 10 && i.priority == i.key as f64));
+    }
+
+    #[test]
+    fn sharded_max_times_sampled_exactly_once() {
+        // Consume-once semantics across shards: every item delivered at
+        // most once and removed after its only sample.
+        let mut cfg = TableConfig::uniform_replay("t", 1000).with_shards(4);
+        cfg.max_times_sampled = 1;
+        let t = Table::new(cfg);
+        for k in 1..=100 {
+            t.insert_or_assign(mk_item(k, 1.0), None).unwrap();
+        }
+        let mut got = Vec::new();
+        while let Ok(batch) = t.sample_batch(16, Some(Duration::from_millis(100))) {
+            got.extend(batch.into_iter().map(|s| s.item.key));
+            if t.size() == 0 {
+                break;
+            }
+        }
+        got.sort_unstable();
+        let dedup_len = {
+            let mut d = got.clone();
+            d.dedup();
+            d.len()
+        };
+        assert_eq!(dedup_len, got.len(), "duplicate delivery");
+        assert_eq!(got.len(), 100, "missing deliveries: {}", got.len());
+        assert_eq!(t.size(), 0);
+    }
+
+    #[test]
+    fn sharded_concurrent_inserts_scale_correctly() {
+        // 4 writer threads over 4 shards: every insert lands exactly once
+        // and the budget holds.
+        let t = Arc::new(Table::new(
+            TableConfig::uniform_replay("t", 100_000).with_shards(4),
+        ));
+        let mut handles = Vec::new();
+        for w in 0..4u64 {
+            let t = t.clone();
+            handles.push(std::thread::spawn(move || {
+                for i in 0..500 {
+                    let k = w * 10_000 + i + 1;
+                    t.insert_or_assign(mk_item(k, 1.0), None).unwrap();
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(t.size(), 2000);
+        assert_eq!(t.info().inserts, 2000);
+        for w in 0..4u64 {
+            for i in 0..500 {
+                assert!(t.contains(w * 10_000 + i + 1));
+            }
+        }
+    }
+
+    #[test]
+    fn sharded_cancel_wakes_blocked_waiters() {
+        let t = Arc::new(Table::new(
+            TableConfig::uniform_replay("t", 10).with_shards(4),
+        ));
+        let t2 = t.clone();
+        let h = std::thread::spawn(move || t2.sample(None));
+        std::thread::sleep(Duration::from_millis(30));
+        t.cancel();
+        let err = h.join().unwrap().unwrap_err();
+        assert!(matches!(err, Error::Cancelled(_)));
     }
 }

@@ -20,12 +20,21 @@ use reverb::Client;
 fn usage() -> ! {
     eprintln!(
         "usage:\n  reverb-server serve --bind HOST:PORT --table NAME:KIND[:ARGS] \
-         [--checkpoint-dir DIR] [--load CKPT]\n  reverb-server info --addr HOST:PORT\n  \
+         [--shards N] [--checkpoint-dir DIR] [--load CKPT]\n  reverb-server info --addr HOST:PORT\n  \
          reverb-server checkpoint --addr HOST:PORT\n\n\
          table kinds:\n  NAME:uniform:MAX_SIZE\n  NAME:queue:QUEUE_SIZE\n  \
-         NAME:prioritized:MAX_SIZE:EXPONENT[:SPI:MIN_SIZE:ERROR_BUFFER]\n  NAME:variable"
+         NAME:prioritized:MAX_SIZE:EXPONENT[:SPI:MIN_SIZE:ERROR_BUFFER]\n  NAME:variable\n\n\
+         --shards N splits each uniform/prioritized table over N \
+         independently-locked shards (default: one per core); queue and \
+         variable tables keep strict single-shard ordering."
     );
     std::process::exit(2);
+}
+
+/// Whether a table kind benefits from (and tolerates) sharding: replay
+/// tables do; queues/variable containers need strict single-shard order.
+fn shardable(cfg: &TableConfig) -> bool {
+    cfg.max_times_sampled == 0 && cfg.max_size > 1
 }
 
 fn parse_table(spec: &str) -> Result<TableConfig, String> {
@@ -94,10 +103,27 @@ fn main() {
                 eprintln!("serve requires at least one --table");
                 usage();
             }
+            let shards = match flag(&args, "--shards") {
+                Some(v) => match v.parse::<usize>() {
+                    Ok(n) if n >= 1 => n,
+                    _ => {
+                        eprintln!("--shards must be a positive integer");
+                        std::process::exit(2);
+                    }
+                },
+                None => reverb::default_shard_count(),
+            };
             let mut builder = Server::builder();
             for spec in &table_specs {
                 match parse_table(spec) {
-                    Ok(cfg) => builder = builder.table(cfg),
+                    Ok(cfg) => {
+                        let cfg = if shardable(&cfg) {
+                            cfg.with_shards(shards)
+                        } else {
+                            cfg
+                        };
+                        builder = builder.table(cfg)
+                    }
                     Err(e) => {
                         eprintln!("{e}");
                         std::process::exit(2);

@@ -128,7 +128,15 @@ impl ServerBuilder {
                 return Err(Error::InvalidArgument(format!("duplicate table {name}")));
             }
         }
-        let store = ChunkStore::new();
+        // Align chunk-store lock granularity with the most-sharded table so
+        // InsertChunks never contends on coarser locks than CreateItem.
+        let store_shards = table_order
+            .iter()
+            .map(|t| t.num_shards())
+            .max()
+            .unwrap_or(1)
+            .max(crate::core::chunk_store::DEFAULT_NUM_SHARDS);
+        let store = ChunkStore::with_shards(store_shards);
         if let Some(path) = &self.load_checkpoint {
             crate::core::checkpoint::load(path, &table_order, &store)?;
         }

@@ -407,6 +407,21 @@ impl Message {
         Ok(())
     }
 
+    /// Encode a full frame (`[u32 len][u8 tag][body]`) into one owned
+    /// buffer. The TCP transport queues these and flushes the queue with a
+    /// single `write_vectored` call, so pipelined small frames
+    /// (`InsertChunks` + `CreateItem`, streams of acks) cost one syscall
+    /// per flush instead of one per frame — and skip the intermediate
+    /// `BufWriter` copy entirely.
+    pub fn encode_frame(&self) -> Result<Vec<u8>> {
+        let (tag, body) = self.encode_body()?;
+        let mut frame = Vec::with_capacity(5 + body.len());
+        frame.extend_from_slice(&(body.len() as u32).to_le_bytes());
+        frame.push(tag);
+        frame.extend_from_slice(&body);
+        Ok(frame)
+    }
+
     /// Read one full frame.
     pub fn read_frame<R: Read>(r: &mut R) -> Result<Message> {
         let len = get_u32(r)? as usize;
@@ -437,6 +452,7 @@ pub fn encode_table_config<W: Write>(w: &mut W, cfg: &TableConfig) -> Result<()>
     put_u64(w, rl.min_size_to_sample)?;
     put_f64(w, rl.min_diff)?;
     put_f64(w, rl.max_diff)?;
+    put_u32(w, cfg.num_shards as u32)?;
     Ok(())
 }
 
@@ -453,6 +469,7 @@ pub fn decode_table_config<R: Read>(r: &mut R) -> Result<TableConfig> {
         min_diff: get_f64(r)?,
         max_diff: get_f64(r)?,
     };
+    let num_shards = (get_u32(r)? as usize).max(1);
     Ok(TableConfig {
         name,
         sampler,
@@ -461,6 +478,7 @@ pub fn decode_table_config<R: Read>(r: &mut R) -> Result<TableConfig> {
         max_times_sampled,
         rate_limiter,
         signature: None,
+        num_shards,
     })
 }
 
@@ -637,6 +655,19 @@ mod tests {
     }
 
     #[test]
+    fn encode_frame_matches_write_frame_bytes() {
+        for msg in [
+            Message::InfoRequest { id: 7 },
+            Message::Ack { id: 1, detail: "ok".into() },
+            Message::InsertChunks { chunks: vec![mk_chunk(3)] },
+        ] {
+            let mut streamed = Vec::new();
+            msg.write_frame(&mut streamed).unwrap();
+            assert_eq!(msg.encode_frame().unwrap(), streamed);
+        }
+    }
+
+    #[test]
     fn unknown_tag_rejected() {
         assert!(Message::decode_body(200, &[]).is_err());
     }
@@ -709,7 +740,9 @@ mod tests {
 
     #[test]
     fn table_config_codec_roundtrip() {
-        let cfg = TableConfig::prioritized_replay("per", 1000, 0.6, 4.0, 100, 40.0).unwrap();
+        let cfg = TableConfig::prioritized_replay("per", 1000, 0.6, 4.0, 100, 40.0)
+            .unwrap()
+            .with_shards(6);
         let mut buf = Vec::new();
         encode_table_config(&mut buf, &cfg).unwrap();
         let back = decode_table_config(&mut std::io::Cursor::new(buf)).unwrap();
@@ -717,6 +750,7 @@ mod tests {
         assert_eq!(back.sampler, SelectorConfig::Prioritized { exponent: 0.6 });
         assert_eq!(back.max_size, 1000);
         assert_eq!(back.rate_limiter, cfg.rate_limiter);
+        assert_eq!(back.num_shards, 6);
     }
 
     #[test]

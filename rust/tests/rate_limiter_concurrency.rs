@@ -195,6 +195,139 @@ fn queue_limiter_producers_consumers_never_deadlock() {
     assert_eq!(table.size(), 0);
 }
 
+/// Sharded-table admission exactness (DESIGN.md §7): the lock-free
+/// limiter's check+commit is one CAS, so racing writers on different
+/// shards can never jointly over-admit past the corridor — the admitted
+/// count is exactly the corridor capacity, deterministically.
+#[test]
+fn sharded_rate_limiter_is_globally_exact_under_concurrent_inserts() {
+    // center = 4 × 2 = 8, buffer 8 → max_diff 16 → exactly 8 inserts
+    // admissible before any sample.
+    let spi = 2.0;
+    let cfg = RateLimiterConfig::sample_to_insert_ratio(spi, 4, 8.0).unwrap();
+    let table = Arc::new(Table::new(TableConfig {
+        rate_limiter: cfg,
+        ..TableConfig::uniform_replay("t", 1_000_000).with_shards(8)
+    }));
+    let admitted = Arc::new(AtomicU64::new(0));
+    let mut handles = Vec::new();
+    for w in 0..8u64 {
+        let table = table.clone();
+        let admitted = admitted.clone();
+        handles.push(std::thread::spawn(move || {
+            for i in 0..40 {
+                let key = (w << 32) | (i + 1);
+                if table
+                    .insert_or_assign(mk_item(key), Some(Duration::from_millis(2)))
+                    .is_ok()
+                {
+                    admitted.fetch_add(1, Ordering::SeqCst);
+                }
+            }
+        }));
+    }
+    for h in handles {
+        h.join().unwrap();
+    }
+    assert_eq!(
+        admitted.load(Ordering::SeqCst),
+        8,
+        "corridor must admit exactly max_diff / SPI inserts"
+    );
+    let info = table.info();
+    assert_eq!(info.inserts, 8);
+    assert_eq!(table.size(), 8);
+    assert!((info.diff - 16.0).abs() < 1e-9, "diff {}", info.diff);
+
+    // Two samples free exactly one more insert slot (16 − 2 + 2 ≤ 16),
+    // not two.
+    let got = table.sample_batch(2, Some(Duration::from_secs(5))).unwrap();
+    assert_eq!(got.len(), 2);
+    let mut extra = 0;
+    for i in 0..4u64 {
+        if table
+            .insert_or_assign(mk_item(1 << 50 | i), Some(Duration::from_millis(2)))
+            .is_ok()
+        {
+            extra += 1;
+        }
+    }
+    assert_eq!(extra, 1, "post-sample headroom must be exactly one insert");
+}
+
+/// After quiescence the lock-free cursor must reconcile exactly with the
+/// confirmed counters (diff = inserts × SPI − samples) on a sharded table
+/// hammered by concurrent writers and samplers.
+#[test]
+fn sharded_spi_corridor_holds_and_counters_reconcile() {
+    let spi = 2.0;
+    let min_size = 16u64;
+    let buffer = 4.0;
+    let cfg = RateLimiterConfig::sample_to_insert_ratio(spi, min_size, buffer).unwrap();
+    let table = Arc::new(Table::new(TableConfig {
+        rate_limiter: cfg,
+        ..TableConfig::uniform_replay("t", 1_000_000).with_shards(8)
+    }));
+    let stop = Arc::new(AtomicBool::new(false));
+    let mut handles = Vec::new();
+    for w in 0..4usize {
+        let table = table.clone();
+        let stop = stop.clone();
+        handles.push(std::thread::spawn(move || {
+            let mut k = (w as u64) << 40 | 1;
+            while !stop.load(Ordering::Relaxed) {
+                let _ = table.insert_or_assign(mk_item(k), Some(Duration::from_millis(10)));
+                k += 1;
+            }
+        }));
+    }
+    for s in 0..2usize {
+        let table = table.clone();
+        let stop = stop.clone();
+        handles.push(std::thread::spawn(move || {
+            let mut rng = Pcg32::new(77, s as u64);
+            while !stop.load(Ordering::Relaxed) {
+                let n = 1 + rng.gen_range(4) as usize;
+                let _ = table.sample_batch(n, Some(Duration::from_millis(10)));
+            }
+        }));
+    }
+    std::thread::sleep(Duration::from_millis(300));
+    stop.store(true, Ordering::Relaxed);
+    table.cancel();
+    for h in handles {
+        h.join().unwrap();
+    }
+    let info = table.info();
+    let center = min_size as f64 * spi;
+    assert!(
+        info.diff <= center + buffer + 1e-9,
+        "diff {} above corridor max {}",
+        info.diff,
+        center + buffer
+    );
+    if info.samples > 0 {
+        assert!(
+            info.diff >= center - buffer - 1e-9,
+            "diff {} below corridor min {}",
+            info.diff,
+            center - buffer
+        );
+    }
+    // Exact reconciliation: the cursor is precisely the counter-derived
+    // value (SPI = 2.0 is exact in f64, so no rounding slack is needed
+    // beyond a hair of accumulated associativity).
+    let derived = info.inserts as f64 * spi - info.samples as f64;
+    assert!(
+        (info.diff - derived).abs() < 1e-6,
+        "cursor {} != counters-derived {}",
+        info.diff,
+        derived
+    );
+    assert!(info.inserts > min_size, "made progress");
+    assert_eq!(table.size(), table.snapshot().0.len(), "budget vs items");
+}
+
 /// The blocked-op diagnostics must observe contention: a deliberately
 /// starved sampler side registers blocked samples, a saturated insert side
 /// registers blocked inserts.

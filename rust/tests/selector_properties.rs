@@ -2,12 +2,19 @@
 //! in-tree proptest harness (`util/proptest.rs`): random
 //! insert/update/delete churn against a naive model, then invariants on
 //! sampling probabilities (uniform, prioritized) and selection order
-//! (fifo, lifo, heaps — the Remover roles).
+//! (fifo, lifo, heaps — the Remover roles) — plus cross-shard invariants
+//! for the sharded table (DESIGN.md §7): mass-weighted shard sampling must
+//! reproduce the single-shard distributions.
 
+use reverb::core::chunk::{Chunk, Compression};
+use reverb::core::item::Item;
 use reverb::core::selector::{Selector, SelectorConfig};
+use reverb::core::table::{Table, TableConfig};
 use reverb::util::proptest::forall;
 use reverb::util::rng::Pcg32;
+use reverb::Tensor;
 use std::collections::HashMap;
+use std::sync::Arc;
 
 /// A naive model of selector contents: key → (priority, insertion seq).
 #[derive(Default)]
@@ -296,6 +303,111 @@ fn fifo_drain_returns_insertion_order_after_churn() {
         }
         Ok(())
     });
+}
+
+// ---------------------------------------------------------------------
+// Sharded-table cross-shard invariants (DESIGN.md §7)
+// ---------------------------------------------------------------------
+
+fn table_item(key: u64, priority: f64) -> Item {
+    let steps = vec![vec![Tensor::from_f32(&[1], &[key as f32]).unwrap()]];
+    let chunk = Arc::new(Chunk::from_steps(key, 0, &steps, Compression::None).unwrap());
+    Item::new(key, "t", priority, vec![chunk], 0, 1).unwrap()
+}
+
+#[test]
+fn sharded_uniform_sampling_matches_single_shard_distribution() {
+    const ITEMS: u64 = 60;
+    const DRAWS: usize = 30_000;
+    let expect = DRAWS as f64 / ITEMS as f64;
+    for shards in [1usize, 8] {
+        let t = Table::new(TableConfig::uniform_replay("t", 1000).with_shards(shards));
+        for k in 1..=ITEMS {
+            t.insert_or_assign(table_item(k, 1.0), None).unwrap();
+        }
+        let mut counts: HashMap<u64, usize> = HashMap::new();
+        for _ in 0..DRAWS {
+            let s = t.sample(None).unwrap();
+            // Mass-weighted shard choice composes to exactly 1/N.
+            assert!(
+                (s.probability - 1.0 / ITEMS as f64).abs() < 1e-9,
+                "{} shards: probability {} != 1/{}",
+                shards,
+                s.probability,
+                ITEMS
+            );
+            *counts.entry(s.item.key).or_default() += 1;
+        }
+        for k in 1..=ITEMS {
+            let c = *counts.get(&k).unwrap_or(&0) as f64;
+            assert!(
+                (c - expect).abs() < expect * 0.35,
+                "{shards} shards: key {k} drawn {c} times, expected ~{expect}"
+            );
+        }
+    }
+}
+
+#[test]
+fn sharded_prioritized_sampling_matches_single_shard_distribution() {
+    const ITEMS: u64 = 24;
+    const DRAWS: usize = 40_000;
+    let total: f64 = (1..=ITEMS).map(|k| k as f64).sum();
+    for shards in [1usize, 6] {
+        let cfg = TableConfig {
+            sampler: SelectorConfig::Prioritized { exponent: 1.0 },
+            ..TableConfig::uniform_replay("t", 1000)
+        }
+        .with_shards(shards);
+        let t = Table::new(cfg);
+        for k in 1..=ITEMS {
+            t.insert_or_assign(table_item(k, k as f64), None).unwrap();
+        }
+        let mut counts: HashMap<u64, usize> = HashMap::new();
+        for _ in 0..DRAWS {
+            let s = t.sample(None).unwrap();
+            let want_p = s.item.key as f64 / total;
+            // Mass-weighted shard choice composes to exactly w_i / Σw.
+            assert!(
+                (s.probability - want_p).abs() < 1e-6 * (1.0 + want_p),
+                "{} shards: P({}) = {}, want {}",
+                shards,
+                s.item.key,
+                s.probability,
+                want_p
+            );
+            *counts.entry(s.item.key).or_default() += 1;
+        }
+        for k in 1..=ITEMS {
+            let want = k as f64 / total;
+            let got = *counts.get(&k).unwrap_or(&0) as f64 / DRAWS as f64;
+            assert!(
+                (got - want).abs() < 0.012 + want * 0.25,
+                "{shards} shards: key {k} frequency {got}, want {want}"
+            );
+        }
+    }
+}
+
+#[test]
+fn sharded_zero_priority_items_are_never_selected() {
+    // Half the keys carry zero priority, spread over 5 shards (some shards
+    // end up with zero total mass): only positive-priority items may be
+    // drawn, exactly as in the single-shard selector.
+    let cfg = TableConfig {
+        sampler: SelectorConfig::Prioritized { exponent: 1.0 },
+        ..TableConfig::uniform_replay("t", 1000)
+    }
+    .with_shards(5);
+    let t = Table::new(cfg);
+    for k in 1..=30u64 {
+        let p = if k % 2 == 0 { 0.0 } else { 1.0 + k as f64 };
+        t.insert_or_assign(table_item(k, p), None).unwrap();
+    }
+    for _ in 0..2000 {
+        let s = t.sample(None).unwrap();
+        assert_ne!(s.item.key % 2, 0, "zero-priority key {} drawn", s.item.key);
+    }
 }
 
 #[test]

@@ -1,0 +1,116 @@
+//! TrajectoryWriter vs legacy Writer insert throughput.
+//!
+//! The column-oriented write path (DESIGN.md §9) chunks every column
+//! independently and ships per-column slice lists in v2 item frames, where
+//! the legacy writer cuts one multi-field chunk per step and ships a flat
+//! span. This bench quantifies what that flexibility costs (or saves) on
+//! the §5-style insert workload: same total payload per step, split across
+//! 1 / 4 / 16 columns, both writers, zero-copy in-process transport so the
+//! measurement is writer + table work rather than socket work.
+//!
+//! Run: `cargo bench --bench trajectory_writer`
+//! (REVERB_BENCH_FAST=1 for the CI quick pass; emits BENCH_trajectory.json.)
+
+use reverb::core::table::TableConfig;
+use reverb::net::server::Server;
+use reverb::util::bench::*;
+use reverb::util::stats::fmt_qps;
+use std::time::Duration;
+
+const COLUMN_COUNTS: &[usize] = &[1, 4, 16];
+/// Total f32s per appended step (≈ 4 kB), split across the columns.
+const FLOATS_PER_STEP: usize = 1_024;
+
+fn window_for(fast: bool) -> Duration {
+    if fast {
+        Duration::from_millis(300)
+    } else {
+        Duration::from_millis(1200)
+    }
+}
+
+/// One `(writer kind, num_columns)` measurement on a fresh in-proc server.
+fn measure(trajectory: bool, num_columns: usize, clients: usize, window: Duration) -> Throughput {
+    let server = Server::builder()
+        .table(TableConfig::uniform_replay("t", 1_000_000))
+        .serve_in_proc()
+        .unwrap();
+    let addr = server.in_proc_addr();
+    let t = if trajectory {
+        run_trajectory_insert_clients(&addr, "t", clients, FLOATS_PER_STEP, num_columns, window)
+    } else {
+        run_row_insert_clients(&addr, "t", clients, FLOATS_PER_STEP, num_columns, window)
+    };
+    drop(server);
+    t
+}
+
+fn main() {
+    let fast = fast_mode();
+    let window = window_for(fast);
+    let clients = if fast { 2 } else { 4 };
+
+    println!(
+        "# TrajectoryWriter vs legacy Writer: insert QPS, {clients} clients, \
+         {FLOATS_PER_STEP} f32/step split across N columns (in-proc)"
+    );
+    println!("| columns | legacy writer | trajectory writer | trajectory/legacy |");
+    println!("|---|---|---|---|");
+
+    let mut rows: Vec<(usize, f64, f64)> = Vec::new();
+    for &cols in COLUMN_COUNTS {
+        let legacy = measure(false, cols, clients, window).qps();
+        let traj = measure(true, cols, clients, window).qps();
+        rows.push((cols, legacy, traj));
+        print_row(&[
+            cols.to_string(),
+            fmt_qps(legacy),
+            fmt_qps(traj),
+            format!("{:.2}x", traj / legacy),
+        ]);
+    }
+
+    // The trajectory path sends one chunk per column per step here
+    // (chunk_length 1); it should stay within a small factor of the
+    // legacy single-chunk path at 1 column and degrade gracefully as
+    // column count grows. Guard the ratio: a zero legacy measurement
+    // (e.g. connect failure on a loaded runner) must not write inf/NaN
+    // into the JSON artifact.
+    let single_col_ratio = if rows[0].1 > 0.0 {
+        rows[0].2 / rows[0].1
+    } else {
+        0.0
+    };
+
+    let results: Vec<String> = rows
+        .iter()
+        .map(|(c, l, t)| {
+            format!(
+                "    {{\"columns\": {c}, \"legacy_qps\": {l:.1}, \"trajectory_qps\": {t:.1}}}"
+            )
+        })
+        .collect();
+    let json = format!(
+        "{{\n  \"bench\": \"trajectory_writer\",\n  \"mode\": \"insert_qps_in_proc\",\n  \
+         \"clients\": {clients},\n  \"floats_per_step\": {FLOATS_PER_STEP},\n  \
+         \"fast\": {fast},\n  \"single_column_ratio\": {single_col_ratio:.3},\n  \
+         \"results\": [\n{}\n  ]\n}}\n",
+        results.join(",\n")
+    );
+    std::fs::write("BENCH_trajectory.json", &json).expect("write BENCH_trajectory.json");
+    println!("\nwrote BENCH_trajectory.json");
+
+    if single_col_ratio > 0.5 {
+        println!(
+            "RESULT: PASS — single-column trajectory path within 2x of the legacy writer \
+             ({:.2}x).",
+            single_col_ratio
+        );
+    } else {
+        println!(
+            "RESULT: WARNING — single-column trajectory path at {:.2}x of legacy; \
+             investigate per-column chunking overhead.",
+            single_col_ratio
+        );
+    }
+}

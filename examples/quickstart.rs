@@ -1,14 +1,19 @@
-//! Quickstart: the paper's §4 examples end to end.
+//! Quickstart: the paper's §4 examples, written with the column-oriented
+//! `TrajectoryWriter`.
 //!
-//! Starts an in-process server with two tables, writes overlapping
-//! trajectories (§4.1) and multi-table items (§4.2), then samples them
-//! back and prints what arrived.
+//! The legacy `Writer` treats a step as one opaque row and items as "the
+//! last N timesteps". `TrajectoryWriter` replaces both restrictions:
+//! `append` takes *named columns* (any subset per step) and returns a
+//! `StepRef` per cell; `create_item` takes an explicit `Trajectory` — per
+//! column, any strictly increasing pick of references — so overlapping
+//! windows (§4.1), multi-table items (§4.2), n-step skips, and squeezed
+//! scalar fields are all the same one API.
 //!
 //! Run: `cargo run --release --example quickstart`
 
 use reverb::core::table::TableConfig;
 use reverb::net::server::Server;
-use reverb::{Client, SamplerOptions, Tensor, WriterOptions};
+use reverb::{Client, SamplerOptions, Tensor, Trajectory, TrajectoryWriterOptions};
 
 fn env_step(t: usize) -> (Vec<f32>, i32) {
     // A toy "environment": observation is [t, 2t], action alternates.
@@ -24,31 +29,65 @@ fn main() -> reverb::Result<()> {
     println!("server on {}", server.local_addr());
     let client = Client::connect(server.local_addr().to_string())?;
 
-    // -- §4.1: trajectories of length 3 overlapping by 2 timesteps. --
+    // -- Open a column-oriented writer. Each column owns its own chunker:
+    // here observations chunk every 3 steps (matching the §4.1 item
+    // length, so overlapping items share whole chunks) while the tiny
+    // action column batches 6 steps per chunk.
     const NUM_TIMESTEPS: usize = 3;
-    let mut writer = client.writer(WriterOptions::default().with_chunk_length(NUM_TIMESTEPS))?;
+    let mut writer = client.trajectory_writer(
+        TrajectoryWriterOptions::default()
+            .with_chunk_length(NUM_TIMESTEPS)
+            .with_column_chunk_length("action", 2 * NUM_TIMESTEPS),
+    )?;
+
+    // Keep the refs `append` hands back; trajectories are built from them.
+    let mut obs_refs = Vec::new();
+    let mut act_refs = Vec::new();
     for step in 0..10 {
         let (ts, a) = env_step(step);
-        let row = vec![Tensor::from_f32(&[2], &ts)?, Tensor::from_i32(&[], &[a])?];
-        writer.append(row)?;
+        // A structured step: named columns instead of a positional row.
+        // (Partial steps are fine — omit a column and it simply does not
+        // advance.)
+        let refs = writer.append(vec![
+            ("observation", Tensor::from_f32(&[2], &ts)?),
+            ("action", Tensor::from_i32(&[], &[a])?),
+        ])?;
+        obs_refs.push(refs[0].clone());
+        act_refs.push(refs[1].clone());
+
         if step >= 2 {
-            // Items reference the 3 most recently appended timesteps and
-            // have a priority of 1.5.
-            writer.create_item("my_table_a", NUM_TIMESTEPS, 1.5)?;
+            // §4.1: trajectories over the 3 most recent timesteps with a
+            // priority of 1.5 — expressed as explicit per-column
+            // references, not an implicit trailing window.
+            let t = Trajectory::new()
+                .column(&obs_refs[step - 2..=step])
+                .column(&act_refs[step - 2..=step]);
+            writer.create_item("my_table_a", 1.5, t)?;
         }
-        if step >= 1 {
-            // §4.2: a second table with length-2 trajectories.
-            writer.create_item("my_table_b", 2, 1.5)?;
+        if step >= 4 {
+            // Beyond §4.2: an n-step-style item into the second table —
+            // observations at t-4, t-2, t (skipping steps: a trajectory
+            // the flat API cannot express) plus the *squeezed* current
+            // action (a scalar without a time axis).
+            let t = Trajectory::new()
+                .column(&[
+                    obs_refs[step - 4].clone(),
+                    obs_refs[step - 2].clone(),
+                    obs_refs[step].clone(),
+                ])
+                .squeezed(&act_refs[step]);
+            writer.create_item("my_table_b", 1.5, t)?;
         }
     }
+    // Flush cuts every column's buffered short chunk and drains acks.
     writer.flush()?;
     println!(
-        "wrote {} items over {} steps (overlapping trajectories share chunks)",
+        "wrote {} items over {} steps (overlapping trajectories share column chunks)",
         writer.items_created(),
         writer.steps_appended()
     );
 
-    // -- Sample back. --
+    // -- Sample back: columns arrive by name. --
     let mut sampler = client.sampler(
         SamplerOptions::new("my_table_a")
             .with_workers(2)
@@ -56,18 +95,31 @@ fn main() -> reverb::Result<()> {
     )?;
     for i in 0..5 {
         let s = sampler.next_sample()?;
-        let obs = s.data[0].to_f32()?;
-        let actions = s.data[1].to_i32()?;
+        let obs = s.column("observation").expect("named column");
+        let actions = s.column("action").expect("named column");
         println!(
             "sample {i}: key={:#x} priority={} first_obs_per_step={:?} actions={:?} P={:.3}",
             s.key,
             s.priority,
-            obs.chunks(2).map(|c| c[0]).collect::<Vec<_>>(),
-            actions,
+            obs.to_f32()?.chunks(2).map(|c| c[0]).collect::<Vec<_>>(),
+            actions.to_i32()?,
             s.probability,
         );
-        assert_eq!(s.data[0].shape(), &[3, 2], "length-3 trajectory, obs dim 2");
+        assert_eq!(obs.shape(), &[3, 2], "length-3 trajectory, obs dim 2");
     }
+
+    // -- The n-step table: a strided column and a squeezed scalar. --
+    let mut sampler_b = client.sampler(SamplerOptions::new("my_table_b"))?;
+    let s = sampler_b.next_sample()?;
+    let obs = s.column("observation").expect("named column");
+    let action = s.column("action").expect("named column");
+    assert_eq!(obs.shape(), &[3, 2], "t-4, t-2, t");
+    assert_eq!(action.shape(), &[] as &[usize], "squeezed scalar");
+    println!(
+        "n-step sample: obs_t={:?} (stride 2), bootstrap action={:?}",
+        obs.to_f32()?.chunks(2).map(|c| c[0]).collect::<Vec<_>>(),
+        action.to_i32()?,
+    );
 
     // -- Server info (sizes + rate limiter state). --
     for (name, info) in client.server_info()? {

@@ -4,7 +4,8 @@
 
 use super::sampler::{Sample, Sampler, SamplerOptions};
 use super::Client;
-use crate::error::Result;
+use crate::core::tensor::Tensor;
+use crate::error::{Error, Result};
 
 /// An iterator over samples from one table.
 ///
@@ -44,6 +45,41 @@ impl Dataset {
         }
         Some(Ok(out))
     }
+
+    /// Collect the next `n` samples and stack them *per column*: each
+    /// returned `(name, tensor)` pair holds the column's tensors from all
+    /// `n` samples stacked along a new leading batch axis. Requires every
+    /// sample in the batch to share column names, shapes, and dtypes (the
+    /// usual case: one table, one trajectory signature).
+    pub fn next_batch_stacked(&mut self, n: usize) -> Option<Result<Vec<(String, Tensor)>>> {
+        let samples = match self.next_batch(n)? {
+            Ok(s) => s,
+            Err(e) => return Some(Err(e)),
+        };
+        Some(stack_samples(&samples))
+    }
+}
+
+/// Stack samples per column (see [`Dataset::next_batch_stacked`]).
+fn stack_samples(samples: &[Sample]) -> Result<Vec<(String, Tensor)>> {
+    let first = samples
+        .first()
+        .ok_or_else(|| Error::InvalidArgument("stack of zero samples".into()))?;
+    let mut out = Vec::with_capacity(first.column_names.len());
+    for (c, name) in first.column_names.iter().enumerate() {
+        let mut parts = Vec::with_capacity(samples.len());
+        for s in samples {
+            if s.column_names.get(c) != Some(name) {
+                return Err(Error::SignatureMismatch(format!(
+                    "sample column {c} is {:?}, batch expects {name:?}",
+                    s.column_names.get(c)
+                )));
+            }
+            parts.push(s.data[c].clone());
+        }
+        out.push((name.clone(), Tensor::stack(&parts)?));
+    }
+    Ok(out)
 }
 
 impl Iterator for Dataset {
@@ -126,6 +162,42 @@ mod tests {
         let batch = ds.next_batch(8).unwrap().unwrap();
         assert_eq!(batch.len(), 8);
         assert_eq!(ds.delivered(), 8);
+    }
+
+    #[test]
+    fn next_batch_stacked_stacks_per_column() {
+        let server = Server::builder()
+            .table(TableConfig::uniform_replay("r", 100))
+            .bind("127.0.0.1:0")
+            .unwrap();
+        let client = Client::connect(server.local_addr().to_string()).unwrap();
+        let mut w = client
+            .trajectory_writer(crate::client::TrajectoryWriterOptions::default())
+            .unwrap();
+        for i in 0..4 {
+            let refs = w
+                .append(vec![
+                    ("obs", Tensor::from_f32(&[2], &[i as f32, 0.]).unwrap()),
+                    ("act", Tensor::from_i32(&[], &[i]).unwrap()),
+                ])
+                .unwrap();
+            let t = crate::client::Trajectory::new()
+                .column(&refs[..1])
+                .squeezed(&refs[1]);
+            w.create_item("r", 1.0, t).unwrap();
+        }
+        w.flush().unwrap();
+        let mut ds = client
+            .dataset(SamplerOptions::new("r").with_timeout_ms(1000))
+            .unwrap();
+        let batch = ds.next_batch_stacked(3).unwrap().unwrap();
+        assert_eq!(batch.len(), 2);
+        assert_eq!(batch[0].0, "obs");
+        // [batch, time, obs_dim]: 3 samples of a length-1 trajectory.
+        assert_eq!(batch[0].1.shape(), &[3, 1, 2]);
+        assert_eq!(batch[1].0, "act");
+        // Squeezed scalar column stacks to [batch].
+        assert_eq!(batch[1].1.shape(), &[3]);
     }
 
     #[test]

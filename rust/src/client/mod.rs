@@ -1,7 +1,10 @@
 //! Reverb client (§3.8): wraps the wire protocol in a higher-level API for
 //! writing, mutating, and reading data.
 //!
-//! - [`Writer`] streams sequential steps and creates items (§4 examples).
+//! - [`TrajectoryWriter`] streams structured steps of named columns and
+//!   creates items from explicit per-column trajectories (§3.8, §4).
+//! - [`Writer`] is the legacy flat-step API, now a shim over
+//!   [`TrajectoryWriter`] (one column group, trailing-window items).
 //! - [`Sampler`] manages a pool of long-lived sample streams with
 //!   flow-controlled prefetching.
 //! - [`Dataset`] is the iterator analogue of `ReverbDataset` (§3.9).
@@ -10,11 +13,13 @@
 pub mod dataset;
 pub mod pool;
 pub mod sampler;
+pub mod trajectory_writer;
 pub mod writer;
 
 pub use dataset::Dataset;
 pub use pool::ClientPool;
 pub use sampler::{Sample, Sampler, SamplerOptions};
+pub use trajectory_writer::{StepRef, Trajectory, TrajectoryWriter, TrajectoryWriterOptions};
 pub use writer::{Writer, WriterOptions};
 
 use crate::core::table::TableInfo;
@@ -163,9 +168,14 @@ impl Client {
         conn.expect_ack(id)
     }
 
-    /// Open a streaming [`Writer`].
+    /// Open a streaming [`Writer`] (legacy flat-step API).
     pub fn writer(&self, options: WriterOptions) -> Result<Writer> {
         Writer::open(self, options)
+    }
+
+    /// Open a column-oriented [`TrajectoryWriter`].
+    pub fn trajectory_writer(&self, options: TrajectoryWriterOptions) -> Result<TrajectoryWriter> {
+        TrajectoryWriter::open(self, options)
     }
 
     /// Open a multi-stream [`Sampler`].

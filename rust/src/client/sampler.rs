@@ -68,8 +68,13 @@ impl SamplerOptions {
     }
 }
 
-/// One materialized sample: item metadata + decoded per-field tensors
-/// (leading axis = item length).
+/// One materialized sample: item metadata + decoded per-column tensors.
+///
+/// Trajectory items carry their writer-side column names and per-column
+/// leading axes (absent for squeezed columns); legacy flat items use
+/// positional `field_{i}` names with leading axis = item length. The flat
+/// `data` vector is the deprecated-path view — new code should prefer the
+/// named accessors ([`Sample::column`] / [`Sample::columns`]).
 #[derive(Clone, Debug)]
 pub struct Sample {
     pub key: u64,
@@ -80,8 +85,30 @@ pub struct Sample {
     pub probability: f64,
     /// Table size at sampling time.
     pub table_size: u64,
-    /// One tensor per signature field.
+    /// One tensor per column, in column order (flat view).
     pub data: Vec<Tensor>,
+    /// Column names, parallel to `data`.
+    pub column_names: Vec<String>,
+}
+
+impl Sample {
+    /// The tensor of a named column, if present.
+    pub fn column(&self, name: &str) -> Option<&Tensor> {
+        self.column_names
+            .iter()
+            .position(|n| n == name)
+            .map(|i| &self.data[i])
+    }
+
+    /// Named columns as `(name, tensor)` pairs (clones the tensors; use
+    /// [`Sample::column`] for by-reference access).
+    pub fn columns(&self) -> Vec<(String, Tensor)> {
+        self.column_names
+            .iter()
+            .cloned()
+            .zip(self.data.iter().cloned())
+            .collect()
+    }
 }
 
 /// Materialize a wire sample from its (deduplicated) chunk set.
@@ -95,15 +122,25 @@ pub(crate) fn materialize_sample(
         .iter()
         .map(|k| chunks.get(k).cloned().ok_or(Error::ChunkNotFound(*k)))
         .collect::<Result<Vec<_>>>()?;
-    let item = crate::core::item::Item::new(
-        info.item.key,
-        info.item.table.clone(),
-        info.item.priority,
-        item_chunks,
-        info.item.offset as usize,
-        info.item.length as usize,
-    )?;
-    let data = item.materialize()?;
+    let item = match &info.item.columns {
+        Some(columns) => crate::core::item::Item::new_trajectory(
+            info.item.key,
+            info.item.table.clone(),
+            info.item.priority,
+            item_chunks,
+            columns.clone(),
+        )?,
+        None => crate::core::item::Item::new(
+            info.item.key,
+            info.item.table.clone(),
+            info.item.priority,
+            item_chunks,
+            info.item.offset as usize,
+            info.item.length as usize,
+        )?,
+    };
+    let (column_names, data): (Vec<String>, Vec<Tensor>) =
+        item.materialize_columns()?.into_iter().unzip();
     Ok(Sample {
         key: info.item.key,
         table: info.item.table.clone(),
@@ -112,6 +149,7 @@ pub(crate) fn materialize_sample(
         probability: info.probability,
         table_size: info.table_size,
         data,
+        column_names,
     })
 }
 
@@ -346,6 +384,21 @@ mod tests {
             }
         }
         assert_eq!(got, (0..10).map(|i| i as f32).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn legacy_samples_expose_positional_columns() {
+        let (server, client) = start();
+        fill(&server, &client, "replay", 3);
+        let mut s = client.sampler(SamplerOptions::new("replay")).unwrap();
+        let sample = s.next_sample().unwrap();
+        assert_eq!(sample.column_names, ["field_0"]);
+        assert_eq!(
+            sample.column("field_0").unwrap().bytes(),
+            sample.data[0].bytes()
+        );
+        assert!(sample.column("missing").is_none());
+        assert_eq!(sample.columns().len(), 1);
     }
 
     #[test]

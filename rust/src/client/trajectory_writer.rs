@@ -1,0 +1,1017 @@
+//! `TrajectoryWriter` (§3.8, §4): the column-oriented write API.
+//!
+//! The legacy [`crate::client::Writer`] treats a step as one opaque row and
+//! an item as "the last N timesteps". This module replaces that model with
+//! the one real Reverb converged on: `append` takes a *structured step* of
+//! named columns (partial steps allowed) and hands back one [`StepRef`] per
+//! column; items are created from an explicit [`Trajectory`] — per-column
+//! lists of references that may be contiguous, strided/non-contiguous, or a
+//! single squeezed step. Each column owns its own [`ChunkBuilder`] with a
+//! per-column chunk length, so a large observation column can chunk at 1
+//! while a scalar reward column chunks at 100.
+//!
+//! Chunks still stream ahead of the items that reference them, items still
+//! wait locally until every referenced chunk has been transmitted, and
+//! acknowledgements are still pipelined (`max_in_flight_items`), exactly as
+//! in the legacy writer — only the trajectory shape became expressible.
+
+use super::{Client, Conn};
+use crate::core::chunk::{Chunk, ChunkBuilder, Compression};
+use crate::core::item::{ChunkSlice, TrajectoryColumn};
+use crate::core::tensor::Tensor;
+use crate::error::{Error, Result};
+use crate::net::wire::{Message, WireItem};
+use crate::util::KeyGenerator;
+use std::collections::{HashMap, VecDeque};
+use std::sync::Arc;
+
+/// TrajectoryWriter configuration.
+#[derive(Clone, Debug)]
+pub struct TrajectoryWriterOptions {
+    /// Default steps per chunk for columns without an explicit override.
+    pub chunk_length: usize,
+    /// Per-column chunk-length overrides (column name, steps per chunk).
+    pub column_chunk_lengths: Vec<(String, usize)>,
+    /// Max unacknowledged CreateItem requests before `create_item` blocks.
+    pub max_in_flight_items: usize,
+    /// Column compression for cut chunks.
+    pub compression: Compression,
+    /// Server-side insert timeout per item (rate-limiter blocking).
+    pub insert_timeout_ms: u64,
+}
+
+impl Default for TrajectoryWriterOptions {
+    fn default() -> Self {
+        TrajectoryWriterOptions {
+            chunk_length: 1,
+            column_chunk_lengths: Vec::new(),
+            max_in_flight_items: 64,
+            compression: Compression::default_fast(),
+            insert_timeout_ms: 60_000,
+        }
+    }
+}
+
+impl TrajectoryWriterOptions {
+    pub fn with_chunk_length(mut self, n: usize) -> Self {
+        self.chunk_length = n;
+        self
+    }
+
+    /// Override the chunk length of one column (repeatable).
+    pub fn with_column_chunk_length(mut self, column: impl Into<String>, n: usize) -> Self {
+        self.column_chunk_lengths.push((column.into(), n));
+        self
+    }
+
+    pub fn with_compression(mut self, c: Compression) -> Self {
+        self.compression = c;
+        self
+    }
+
+    pub fn with_max_in_flight_items(mut self, n: usize) -> Self {
+        self.max_in_flight_items = n.max(1);
+        self
+    }
+
+    pub fn with_insert_timeout_ms(mut self, ms: u64) -> Self {
+        self.insert_timeout_ms = ms;
+        self
+    }
+
+    fn chunk_length_for(&self, column: &str) -> usize {
+        self.column_chunk_lengths
+            .iter()
+            .rev() // last override wins
+            .find(|(name, _)| name == column)
+            .map(|&(_, n)| n)
+            .unwrap_or(self.chunk_length)
+    }
+}
+
+/// A reference to one appended cell: `(column, position in that column's
+/// own stream)`, tagged with the episode it belongs to so a ref retained
+/// across [`TrajectoryWriter::end_episode`] cannot silently alias the new
+/// episode's cells. Returned by [`TrajectoryWriter::append`]; composed
+/// into [`Trajectory`]s. Cheap to clone.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct StepRef {
+    column: Arc<str>,
+    index: u64,
+    epoch: u64,
+}
+
+impl StepRef {
+    /// Name of the referenced column.
+    pub fn column(&self) -> &str {
+        &self.column
+    }
+
+    /// Position within the column's stream (per-column coordinates:
+    /// partial steps do not advance absent columns).
+    pub fn index(&self) -> u64 {
+        self.index
+    }
+}
+
+/// One column of a [`Trajectory`] under construction.
+#[derive(Clone, Debug)]
+struct TrajectoryColumnRefs {
+    refs: Vec<StepRef>,
+    squeeze: bool,
+}
+
+/// An explicit per-column trajectory, built from [`StepRef`]s:
+///
+/// ```ignore
+/// let t = Trajectory::new()
+///     .column(&obs_refs[2..7])          // contiguous slice
+///     .column(&[r0.clone(), r4.clone()]) // non-contiguous pick
+///     .squeezed(&action_refs[6]);        // single step, no time axis
+/// writer.create_item("table", 1.0, t)?;
+/// ```
+#[derive(Clone, Debug, Default)]
+pub struct Trajectory {
+    columns: Vec<TrajectoryColumnRefs>,
+}
+
+impl Trajectory {
+    pub fn new() -> Self {
+        Trajectory { columns: Vec::new() }
+    }
+
+    /// Add a column gathering `refs` (all from the same writer column, in
+    /// strictly increasing order — validated at `create_item`).
+    pub fn column(mut self, refs: &[StepRef]) -> Self {
+        self.columns.push(TrajectoryColumnRefs {
+            refs: refs.to_vec(),
+            squeeze: false,
+        });
+        self
+    }
+
+    /// Add a single-step column materialized without the time axis.
+    pub fn squeezed(mut self, r: &StepRef) -> Self {
+        self.columns.push(TrajectoryColumnRefs {
+            refs: vec![r.clone()],
+            squeeze: true,
+        });
+        self
+    }
+
+    /// Number of columns added so far.
+    pub fn num_columns(&self) -> usize {
+        self.columns.len()
+    }
+}
+
+/// Metadata of a chunk already streamed to the server (one column's
+/// stream; starts are per-column coordinates).
+#[derive(Clone, Copy, Debug)]
+struct SentChunk {
+    key: u64,
+    start: u64,
+    len: usize,
+}
+
+/// Per-column chunking state: its own builder (own chunk length) and the
+/// metadata of its transmitted chunks, oldest first, contiguous.
+struct ColumnState {
+    name: Arc<str>,
+    builder: ChunkBuilder,
+    sent: VecDeque<SentChunk>,
+}
+
+impl ColumnState {
+    /// Stream position past the last *transmitted* cell (cells at or past
+    /// this position are still buffered in the builder).
+    fn sent_end(&self) -> u64 {
+        self.builder.next_sequence() - self.builder.buffered_steps() as u64
+    }
+
+    /// Oldest stream position still covered by retained chunk metadata.
+    fn oldest_retained(&self) -> u64 {
+        self.sent.front().map(|c| c.start).unwrap_or_else(|| self.sent_end())
+    }
+}
+
+/// What a pending item references.
+enum PendingPayload {
+    /// Legacy trailing window `[start, end)` over one column's rows —
+    /// emitted as a flat v1 wire item (chunk_keys + offset + length).
+    Window { col: usize, start: u64, end: u64 },
+    /// Explicit per-column references — emitted as a v2 wire item with
+    /// per-column chunk-slice runs.
+    Trajectory {
+        /// `(column index, strictly increasing cell indices, squeeze)`.
+        cols: Vec<(usize, Vec<u64>, bool)>,
+    },
+}
+
+/// An item waiting for its referenced chunks to be cut & transmitted.
+struct PendingItem {
+    table: String,
+    priority: f64,
+    payload: PendingPayload,
+}
+
+/// Column-oriented streaming writer over one long-lived connection.
+pub struct TrajectoryWriter {
+    conn: Conn,
+    keys: Arc<KeyGenerator>,
+    options: TrajectoryWriterOptions,
+    columns: Vec<ColumnState>,
+    col_index: HashMap<String, usize>,
+    pending: VecDeque<PendingItem>,
+    /// Outstanding (unacked) CreateItem request ids.
+    in_flight: VecDeque<u64>,
+    items_created: u64,
+    appends: u64,
+    /// Episode counter; stamped into every [`StepRef`] so stale refs from
+    /// a finished episode are rejected at `create_item`.
+    epoch: u64,
+}
+
+impl TrajectoryWriter {
+    pub(crate) fn open(client: &Client, options: TrajectoryWriterOptions) -> Result<TrajectoryWriter> {
+        assert!(options.chunk_length > 0, "chunk_length must be positive");
+        for (name, n) in &options.column_chunk_lengths {
+            assert!(*n > 0, "chunk_length for column {name:?} must be positive");
+        }
+        Ok(TrajectoryWriter {
+            conn: Conn::connect(client.addr())?,
+            keys: client.key_gen(),
+            options,
+            columns: Vec::new(),
+            col_index: HashMap::new(),
+            pending: VecDeque::new(),
+            in_flight: VecDeque::new(),
+            items_created: 0,
+            appends: 0,
+            epoch: 0,
+        })
+    }
+
+    /// Append one structured step: named single-tensor cells, in any
+    /// order, any subset of columns (partial steps allowed — absent
+    /// columns simply do not advance). Returns one [`StepRef`] per
+    /// provided cell, in input order.
+    pub fn append(&mut self, step: Vec<(&str, Tensor)>) -> Result<Vec<StepRef>> {
+        if step.is_empty() {
+            return Err(Error::InvalidArgument("append of an empty step".into()));
+        }
+        let mut seen: Vec<usize> = Vec::with_capacity(step.len());
+        let mut refs = Vec::with_capacity(step.len());
+        for (name, tensor) in step {
+            let col = self.column_index(name);
+            if seen.contains(&col) {
+                return Err(Error::InvalidArgument(format!(
+                    "column {name:?} appears twice in one step"
+                )));
+            }
+            seen.push(col);
+            refs.push(self.append_cell(col, vec![tensor])?);
+        }
+        self.appends += 1;
+        self.maybe_send_pending()?;
+        Ok(refs)
+    }
+
+    /// Append one multi-tensor row to a single column group. This is the
+    /// legacy [`crate::client::Writer`] data model (one group holding all
+    /// signature fields per step); such a group can only be referenced
+    /// through [`TrajectoryWriter::create_item_window`].
+    pub fn append_row(&mut self, column: &str, row: Vec<Tensor>) -> Result<StepRef> {
+        if row.is_empty() {
+            return Err(Error::InvalidArgument("append of an empty row".into()));
+        }
+        let col = self.column_index(column);
+        let r = self.append_cell(col, row)?;
+        self.appends += 1;
+        self.maybe_send_pending()?;
+        Ok(r)
+    }
+
+    /// Create an item from an explicit per-column [`Trajectory`]. The item
+    /// is transmitted once every referenced chunk has been cut & sent
+    /// (call [`TrajectoryWriter::flush`] to force short chunks out).
+    pub fn create_item(&mut self, table: &str, priority: f64, trajectory: Trajectory) -> Result<()> {
+        if trajectory.columns.is_empty() {
+            return Err(Error::InvalidArgument("trajectory with no columns".into()));
+        }
+        let mut cols = Vec::with_capacity(trajectory.columns.len());
+        for tc in &trajectory.columns {
+            let first = tc.refs.first().ok_or_else(|| {
+                Error::InvalidArgument("trajectory column with no references".into())
+            })?;
+            let name = first.column.clone();
+            let col = *self.col_index.get(&*name).ok_or_else(|| {
+                Error::InvalidArgument(format!("unknown column {:?}", &*name))
+            })?;
+            let mut indices = Vec::with_capacity(tc.refs.len());
+            for r in &tc.refs {
+                if r.epoch != self.epoch {
+                    return Err(Error::InvalidArgument(format!(
+                        "column {:?}: reference {} belongs to a previous episode",
+                        &*name, r.index
+                    )));
+                }
+                if r.column != name {
+                    return Err(Error::InvalidArgument(format!(
+                        "trajectory column mixes references to {:?} and {:?}",
+                        &*name, &*r.column
+                    )));
+                }
+                if let Some(&prev) = indices.last() {
+                    if r.index <= prev {
+                        return Err(Error::InvalidArgument(format!(
+                            "column {:?}: references must be strictly increasing \
+                             ({prev} then {})",
+                            &*name, r.index
+                        )));
+                    }
+                }
+                indices.push(r.index);
+            }
+            let state = &self.columns[col];
+            let end = state.builder.next_sequence();
+            let last = *indices.last().expect("non-empty");
+            if last >= end {
+                return Err(Error::InvalidArgument(format!(
+                    "column {:?}: reference {last} beyond the {end} appended cells",
+                    &*name
+                )));
+            }
+            if indices[0] < state.oldest_retained() {
+                return Err(Error::InvalidArgument(format!(
+                    "column {:?}: reference {} is older than the writer history",
+                    &*name, indices[0]
+                )));
+            }
+            cols.push((col, indices, tc.squeeze));
+        }
+        self.pending.push_back(PendingItem {
+            table: table.into(),
+            priority,
+            payload: PendingPayload::Trajectory { cols },
+        });
+        self.maybe_send_pending()
+    }
+
+    /// Create a legacy flat item over the `num_timesteps` most recently
+    /// appended rows of `column` (the §4.1 trailing-window model). The
+    /// wire item uses the v1 flat representation, so servers see exactly
+    /// what the legacy `Writer` produced.
+    pub fn create_item_window(
+        &mut self,
+        table: &str,
+        column: &str,
+        num_timesteps: usize,
+        priority: f64,
+    ) -> Result<()> {
+        if num_timesteps == 0 {
+            return Err(Error::InvalidArgument("item of zero steps".into()));
+        }
+        let end = match self.col_index.get(column) {
+            Some(&col) => self.columns[col].builder.next_sequence(),
+            None => 0,
+        };
+        if (num_timesteps as u64) > end {
+            return Err(Error::InvalidArgument(format!(
+                "item of {num_timesteps} steps but only {end} appended"
+            )));
+        }
+        let col = self.col_index[column];
+        let start = end - num_timesteps as u64;
+        // The full range must still be coverable: an item whose *start*
+        // predates retained history can never be sent, so it must error
+        // here rather than sit in `pending` forever.
+        if start < self.columns[col].oldest_retained() {
+            return Err(Error::InvalidArgument(
+                "item references steps older than the writer history".into(),
+            ));
+        }
+        self.pending.push_back(PendingItem {
+            table: table.into(),
+            priority,
+            payload: PendingPayload::Window { col, start, end },
+        });
+        self.maybe_send_pending()
+    }
+
+    /// Force out buffered cells of *every* column as (short) chunks and
+    /// send all pending items, then wait for every outstanding ack.
+    ///
+    /// The builders are always flushed — even when no item is pending —
+    /// so appended-but-itemless cells cannot linger in a builder and shift
+    /// chunk boundaries under a later `create_item`.
+    pub fn flush(&mut self) -> Result<()> {
+        for col in 0..self.columns.len() {
+            if self.columns[col].builder.buffered_steps() > 0 {
+                let key = self.keys.next_key();
+                if let Some(chunk) = self.columns[col].builder.flush(key)? {
+                    self.transmit_chunk(col, chunk)?;
+                }
+            }
+        }
+        self.maybe_send_pending()?;
+        if !self.pending.is_empty() {
+            return Err(Error::InvalidArgument(
+                "pending items reference steps never appended".into(),
+            ));
+        }
+        self.conn.flush()?;
+        self.drain_acks(0)?;
+        Ok(())
+    }
+
+    /// Flush and reset episode state: every column restarts at cell 0 and
+    /// items can no longer reference earlier cells.
+    pub fn end_episode(&mut self) -> Result<()> {
+        self.flush()?;
+        for col in &mut self.columns {
+            col.builder.reset();
+            col.sent.clear();
+        }
+        self.epoch += 1;
+        Ok(())
+    }
+
+    /// Number of items acknowledged by the server so far.
+    pub fn items_created(&self) -> u64 {
+        self.items_created
+    }
+
+    /// Structured steps / rows appended over this writer's lifetime
+    /// (across episodes).
+    pub fn steps_appended(&self) -> u64 {
+        self.appends
+    }
+
+    /// Names of the columns seen so far, in first-append order.
+    pub fn column_names(&self) -> Vec<String> {
+        self.columns.iter().map(|c| c.name.to_string()).collect()
+    }
+
+    /// Index of `name`, creating the column state on first use.
+    fn column_index(&mut self, name: &str) -> usize {
+        if let Some(&i) = self.col_index.get(name) {
+            return i;
+        }
+        let chunk_length = self.options.chunk_length_for(name);
+        let i = self.columns.len();
+        self.columns.push(ColumnState {
+            name: Arc::from(name),
+            builder: ChunkBuilder::new(chunk_length, self.options.compression),
+            sent: VecDeque::new(),
+        });
+        self.col_index.insert(name.to_string(), i);
+        i
+    }
+
+    /// Push one cell into a column; transmit the chunk if it filled.
+    fn append_cell(&mut self, col: usize, row: Vec<Tensor>) -> Result<StepRef> {
+        let key = self.keys.next_key();
+        let (name, index, cut) = {
+            let state = &mut self.columns[col];
+            let index = state.builder.next_sequence();
+            let cut = state.builder.append(key, row)?;
+            (state.name.clone(), index, cut)
+        };
+        if let Some(chunk) = cut {
+            self.transmit_chunk(col, chunk)?;
+        }
+        Ok(StepRef {
+            column: name,
+            index,
+            epoch: self.epoch,
+        })
+    }
+
+    fn transmit_chunk(&mut self, col: usize, chunk: Chunk) -> Result<()> {
+        self.columns[col].sent.push_back(SentChunk {
+            key: chunk.key,
+            start: chunk.sequence_start,
+            len: chunk.num_steps,
+        });
+        // The chunk travels as a shared handle: the TCP backend encodes
+        // from it, the in-process backend hands this very allocation to
+        // the server's chunk store (zero-copy insert path).
+        self.conn.send(Message::InsertChunks {
+            chunks: vec![Arc::new(chunk)],
+        })?;
+        self.prune_history(col);
+        Ok(())
+    }
+
+    /// Minimum cell index any pending item references in `col`.
+    fn pending_min(&self, col: usize) -> u64 {
+        let mut min = u64::MAX;
+        for p in &self.pending {
+            match &p.payload {
+                PendingPayload::Window { col: c, start, .. } => {
+                    if *c == col {
+                        min = min.min(*start);
+                    }
+                }
+                PendingPayload::Trajectory { cols } => {
+                    for (c, indices, _) in cols {
+                        if *c == col {
+                            if let Some(&first) = indices.first() {
+                                min = min.min(first);
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        min
+    }
+
+    /// Drop sent-chunk metadata no pending or future item can reference:
+    /// keep the most recent 64 chunks per column plus anything a pending
+    /// item still needs or that lies within the 4096-cell lookback window.
+    fn prune_history(&mut self, col: usize) {
+        let keep_from = self
+            .pending_min(col)
+            .min(self.columns[col].builder.next_sequence().saturating_sub(4096));
+        let sent = &mut self.columns[col].sent;
+        while sent.len() > 64 {
+            let front = sent.front().expect("len > 64");
+            if front.start + front.len as u64 <= keep_from {
+                sent.pop_front();
+            } else {
+                break;
+            }
+        }
+    }
+
+    /// Send every pending item whose referenced chunks are all
+    /// transmitted; stop at the first that still waits on a chunk cut.
+    fn maybe_send_pending(&mut self) -> Result<()> {
+        loop {
+            let Some(front) = self.pending.front() else {
+                return Ok(());
+            };
+            let Some(item) = self.build_wire_item(front)? else {
+                return Ok(());
+            };
+            self.pending.pop_front();
+            let id = self.conn.next_id();
+            self.conn.send(Message::CreateItem {
+                id,
+                item,
+                timeout_ms: self.options.insert_timeout_ms,
+            })?;
+            self.in_flight.push_back(id);
+            // Flush eagerly so the server overlaps with our next append;
+            // block on acks only when the pipeline window is full.
+            self.conn.flush()?;
+            self.drain_acks(self.options.max_in_flight_items)?;
+        }
+    }
+
+    /// Build the wire item for `p` if every referenced chunk has been
+    /// transmitted; `None` when a referenced cell is still buffered.
+    fn build_wire_item(&self, p: &PendingItem) -> Result<Option<WireItem>> {
+        match &p.payload {
+            PendingPayload::Window { col, start, end } => {
+                let Some(chunk_keys) = self.cover(*col, *start, *end) else {
+                    return Ok(None);
+                };
+                let first_chunk_start = self.columns[*col]
+                    .sent
+                    .iter()
+                    .find(|c| c.key == chunk_keys[0])
+                    .expect("cover() returned sent chunks")
+                    .start;
+                Ok(Some(WireItem {
+                    key: self.keys.next_key(),
+                    table: p.table.clone(),
+                    priority: p.priority,
+                    chunk_keys,
+                    offset: start - first_chunk_start,
+                    length: end - start,
+                    times_sampled: 0,
+                    columns: None,
+                }))
+            }
+            PendingPayload::Trajectory { cols } => {
+                let mut chunk_keys: Vec<u64> = Vec::new();
+                let mut wire_cols = Vec::with_capacity(cols.len());
+                let mut length = 0u64;
+                for (col, indices, squeeze) in cols {
+                    let state = &self.columns[*col];
+                    let Some(slices) = slice_runs(&state.sent, indices)? else {
+                        return Ok(None);
+                    };
+                    for s in &slices {
+                        if !chunk_keys.contains(&s.chunk_key) {
+                            chunk_keys.push(s.chunk_key);
+                        }
+                    }
+                    length = length.max(indices.len() as u64);
+                    wire_cols.push(TrajectoryColumn {
+                        name: state.name.to_string(),
+                        squeeze: *squeeze,
+                        slices,
+                    });
+                }
+                Ok(Some(WireItem {
+                    key: self.keys.next_key(),
+                    table: p.table.clone(),
+                    priority: p.priority,
+                    chunk_keys,
+                    offset: 0,
+                    length,
+                    times_sampled: 0,
+                    columns: Some(wire_cols),
+                }))
+            }
+        }
+    }
+
+    /// Chunk keys covering the contiguous range `[start, end)` of one
+    /// column, or `None` if not fully chunked yet.
+    fn cover(&self, col: usize, start: u64, end: u64) -> Option<Vec<u64>> {
+        let mut keys = Vec::new();
+        let mut covered_to: Option<u64> = None;
+        for c in &self.columns[col].sent {
+            let c_end = c.start + c.len as u64;
+            if c_end <= start || c.start >= end {
+                continue;
+            }
+            match covered_to {
+                None => {
+                    if c.start > start {
+                        return None; // front of range not covered
+                    }
+                    covered_to = Some(c_end);
+                }
+                Some(to) => {
+                    debug_assert_eq!(c.start, to, "sent chunks are contiguous");
+                    covered_to = Some(c_end);
+                }
+            }
+            keys.push(c.key);
+            if covered_to.unwrap() >= end {
+                return Some(keys);
+            }
+        }
+        None
+    }
+
+    /// Block until at most `max_outstanding` acks remain outstanding.
+    fn drain_acks(&mut self, max_outstanding: usize) -> Result<()> {
+        while self.in_flight.len() > max_outstanding {
+            // Pop before awaiting: the server sends exactly one reply per
+            // request, so even an Err reply consumes this id.
+            let id = self.in_flight.pop_front().expect("non-empty");
+            self.conn.expect_ack(id)?;
+            self.items_created += 1;
+        }
+        Ok(())
+    }
+}
+
+/// Coalesce strictly increasing cell `indices` into [`ChunkSlice`] runs
+/// against one column's transmitted chunks. `Ok(None)` when an index is
+/// past the transmitted region (still buffered); `Err` when an index
+/// predates retained history (pruned after the item was queued — cannot
+/// happen while `prune_history` honours `pending_min`).
+fn slice_runs(sent: &VecDeque<SentChunk>, indices: &[u64]) -> Result<Option<Vec<ChunkSlice>>> {
+    let mut runs: Vec<ChunkSlice> = Vec::new();
+    let mut prev: Option<(u64, u64)> = None; // (chunk key, cell index)
+    for &i in indices {
+        let Some(c) = sent
+            .iter()
+            .find(|c| c.start <= i && i < c.start + c.len as u64)
+        else {
+            let sent_end = sent.back().map(|c| c.start + c.len as u64).unwrap_or(0);
+            if i >= sent_end {
+                return Ok(None); // still buffered
+            }
+            return Err(Error::InvalidArgument(format!(
+                "trajectory reference {i} predates retained writer history"
+            )));
+        };
+        match prev {
+            Some((pk, pi)) if pk == c.key && i == pi + 1 => {
+                runs.last_mut().expect("run exists when prev is set").length += 1;
+            }
+            _ => runs.push(ChunkSlice {
+                chunk_key: c.key,
+                offset: (i - c.start) as usize,
+                length: 1,
+            }),
+        }
+        prev = Some((c.key, i));
+    }
+    Ok(Some(runs))
+}
+
+impl Drop for TrajectoryWriter {
+    fn drop(&mut self) {
+        let _ = self.flush();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::client::SamplerOptions;
+    use crate::core::table::TableConfig;
+    use crate::net::server::Server;
+
+    fn obs(v: f32) -> Tensor {
+        Tensor::from_f32(&[2], &[v, v + 0.5]).unwrap()
+    }
+
+    fn start() -> (Server, Client) {
+        let server = Server::builder()
+            .table(TableConfig::uniform_replay("a", 1000))
+            .table(TableConfig::uniform_replay("b", 1000))
+            .bind("127.0.0.1:0")
+            .unwrap();
+        let client = Client::connect(server.local_addr().to_string()).unwrap();
+        (server, client)
+    }
+
+    #[test]
+    fn multi_column_trajectory_roundtrips() {
+        let (server, client) = start();
+        let mut w = client
+            .trajectory_writer(
+                TrajectoryWriterOptions::default()
+                    .with_chunk_length(3)
+                    .with_column_chunk_length("reward", 5),
+            )
+            .unwrap();
+        let mut obs_refs = Vec::new();
+        let mut rew_refs = Vec::new();
+        for i in 0..10 {
+            let refs = w
+                .append(vec![
+                    ("obs", obs(i as f32)),
+                    ("reward", Tensor::scalar_f32(i as f32 * 0.1)),
+                ])
+                .unwrap();
+            assert_eq!(refs[0].column(), "obs");
+            assert_eq!(refs[0].index(), i as u64);
+            obs_refs.push(refs[0].clone());
+            rew_refs.push(refs[1].clone());
+        }
+        // Trailing window of 4 over both columns.
+        let t = Trajectory::new()
+            .column(&obs_refs[6..10])
+            .column(&rew_refs[6..10]);
+        w.create_item("a", 1.0, t).unwrap();
+        w.flush().unwrap();
+        assert_eq!(w.items_created(), 1);
+
+        let mut s = client.sampler(SamplerOptions::new("a")).unwrap();
+        let sample = s.next_sample().unwrap();
+        assert_eq!(sample.column_names, ["obs", "reward"]);
+        let o = sample.column("obs").unwrap();
+        assert_eq!(o.shape(), &[4, 2]);
+        assert_eq!(o.to_f32().unwrap()[0], 6.0);
+        let r = sample.column("reward").unwrap();
+        assert_eq!(r.shape(), &[4]);
+        assert!((r.to_f32().unwrap()[3] - 0.9).abs() < 1e-6);
+    }
+
+    #[test]
+    fn non_contiguous_and_squeezed_columns() {
+        let (_server, client) = start();
+        let mut w = client
+            .trajectory_writer(TrajectoryWriterOptions::default().with_chunk_length(2))
+            .unwrap();
+        let mut refs = Vec::new();
+        for i in 0..8 {
+            refs.push(w.append(vec![("x", obs(i as f32))]).unwrap().remove(0));
+        }
+        // n-step-style pick: cells 1, 3, 7 (skips steps), plus a squeezed
+        // bootstrap cell.
+        let t = Trajectory::new()
+            .column(&[refs[1].clone(), refs[3].clone(), refs[7].clone()])
+            .squeezed(&refs[7]);
+        w.create_item("a", 1.0, t).unwrap();
+        w.flush().unwrap();
+
+        let mut s = client.sampler(SamplerOptions::new("a")).unwrap();
+        let sample = s.next_sample().unwrap();
+        let picked = sample.data[0].to_f32().unwrap();
+        assert_eq!(sample.data[0].shape(), &[3, 2]);
+        assert_eq!(picked[0], 1.0);
+        assert_eq!(picked[2], 3.0);
+        assert_eq!(picked[4], 7.0);
+        assert_eq!(sample.data[1].shape(), &[2], "squeezed: no time axis");
+        assert_eq!(sample.data[1].to_f32().unwrap(), vec![7.0, 7.5]);
+    }
+
+    #[test]
+    fn partial_steps_advance_only_present_columns() {
+        let (_server, client) = start();
+        let mut w = client
+            .trajectory_writer(TrajectoryWriterOptions::default())
+            .unwrap();
+        let a0 = w.append(vec![("a", obs(0.))]).unwrap().remove(0);
+        let b0 = w.append(vec![("b", obs(10.))]).unwrap().remove(0);
+        let a1 = w.append(vec![("a", obs(1.))]).unwrap().remove(0);
+        assert_eq!(a0.index(), 0);
+        assert_eq!(b0.index(), 0, "column b has its own coordinates");
+        assert_eq!(a1.index(), 1);
+        let t = Trajectory::new().column(&[a0, a1]).column(&[b0]);
+        w.create_item("a", 1.0, t).unwrap();
+        w.flush().unwrap();
+
+        let mut s = client.sampler(SamplerOptions::new("a")).unwrap();
+        let sample = s.next_sample().unwrap();
+        assert_eq!(sample.data[0].shape(), &[2, 2]);
+        assert_eq!(sample.data[1].shape(), &[1, 2]);
+        assert_eq!(sample.data[1].to_f32().unwrap()[0], 10.0);
+    }
+
+    #[test]
+    fn create_item_validates_references() {
+        let (_server, client) = start();
+        let mut w = client
+            .trajectory_writer(TrajectoryWriterOptions::default())
+            .unwrap();
+        // Empty trajectory / empty column.
+        assert!(w.create_item("a", 1.0, Trajectory::new()).is_err());
+        let r0 = w.append(vec![("x", obs(0.))]).unwrap().remove(0);
+        let r1 = w.append(vec![("x", obs(1.))]).unwrap().remove(0);
+        let other = w.append(vec![("y", obs(9.))]).unwrap().remove(0);
+        assert!(w
+            .create_item("a", 1.0, Trajectory::new().column(&[]))
+            .is_err());
+        // Mixed columns in one gather.
+        assert!(w
+            .create_item(
+                "a",
+                1.0,
+                Trajectory::new().column(&[r0.clone(), other.clone()])
+            )
+            .is_err());
+        // Out-of-order references.
+        assert!(w
+            .create_item(
+                "a",
+                1.0,
+                Trajectory::new().column(&[r1.clone(), r0.clone()])
+            )
+            .is_err());
+        // Duplicate references.
+        assert!(w
+            .create_item(
+                "a",
+                1.0,
+                Trajectory::new().column(&[r0.clone(), r0.clone()])
+            )
+            .is_err());
+        // A valid one still goes through.
+        w.create_item("a", 1.0, Trajectory::new().column(&[r0, r1]))
+            .unwrap();
+        w.flush().unwrap();
+        assert_eq!(w.items_created(), 1);
+    }
+
+    #[test]
+    fn duplicate_column_in_step_rejected() {
+        let (_server, client) = start();
+        let mut w = client
+            .trajectory_writer(TrajectoryWriterOptions::default())
+            .unwrap();
+        assert!(w
+            .append(vec![("x", obs(0.)), ("x", obs(1.))])
+            .is_err());
+        assert!(w.append(vec![]).is_err());
+    }
+
+    #[test]
+    fn items_wait_for_chunk_cut_then_flush_forces() {
+        let (server, client) = start();
+        let mut w = client
+            .trajectory_writer(TrajectoryWriterOptions::default().with_chunk_length(100))
+            .unwrap();
+        let r0 = w.append(vec![("x", obs(0.))]).unwrap().remove(0);
+        let r1 = w.append(vec![("x", obs(1.))]).unwrap().remove(0);
+        w.create_item("a", 1.0, Trajectory::new().column(&[r0, r1]))
+            .unwrap();
+        // Chunk of 100 not yet cut: the item is pending.
+        assert_eq!(server.table("a").unwrap().size(), 0);
+        w.flush().unwrap();
+        assert_eq!(server.table("a").unwrap().size(), 1);
+    }
+
+    #[test]
+    fn per_column_chunk_lengths_cut_independently() {
+        let (server, client) = start();
+        let mut w = client
+            .trajectory_writer(
+                TrajectoryWriterOptions::default()
+                    .with_chunk_length(1)
+                    .with_column_chunk_length("slow", 4),
+            )
+            .unwrap();
+        let mut fast = Vec::new();
+        let mut slow = Vec::new();
+        for i in 0..4 {
+            let refs = w
+                .append(vec![("fast", obs(i as f32)), ("slow", obs(-(i as f32)))])
+                .unwrap();
+            fast.push(refs[0].clone());
+            slow.push(refs[1].clone());
+        }
+        // The fast column (chunk length 1) is fully transmitted, the slow
+        // column cut exactly once at 4 — an item over both sends without a
+        // flush.
+        w.create_item(
+            "a",
+            1.0,
+            Trajectory::new().column(&fast).column(&slow),
+        )
+        .unwrap();
+        // Give the ack a chance to land via the next call.
+        w.flush().unwrap();
+        assert_eq!(w.items_created(), 1);
+        let s = server.table("a").unwrap().sample(None).unwrap();
+        // 4 single-cell chunks for "fast" + 1 four-cell chunk for "slow".
+        assert_eq!(s.item.chunks.len(), 5);
+        let cols = s.item.materialize_columns().unwrap();
+        assert_eq!(cols[0].0, "fast");
+        assert_eq!(cols[1].0, "slow");
+        assert_eq!(cols[1].1.to_f32().unwrap()[6], -3.0);
+    }
+
+    #[test]
+    fn end_episode_resets_column_coordinates() {
+        let (server, client) = start();
+        let mut w = client
+            .trajectory_writer(TrajectoryWriterOptions::default())
+            .unwrap();
+        let stale = w.append(vec![("x", obs(0.))]).unwrap().remove(0);
+        w.end_episode().unwrap();
+        let fresh = w.append(vec![("x", obs(1.))]).unwrap().remove(0);
+        assert_eq!(fresh.index(), 0, "new episode restarts at cell 0");
+        // A ref retained across end_episode would alias the new episode's
+        // cell 0; the epoch stamp rejects it instead of committing wrong
+        // data.
+        let err = w
+            .create_item("a", 1.0, Trajectory::new().column(&[stale]))
+            .unwrap_err();
+        assert!(
+            matches!(err, Error::InvalidArgument(_)) && err.to_string().contains("episode"),
+            "{err}"
+        );
+        // Fresh refs still work.
+        w.create_item("a", 1.0, Trajectory::new().column(&[fresh]))
+            .unwrap();
+        w.flush().unwrap();
+        assert_eq!(server.table("a").unwrap().size(), 1);
+    }
+
+    #[test]
+    fn unknown_table_surfaces_on_flush() {
+        let (_server, client) = start();
+        let mut w = client
+            .trajectory_writer(TrajectoryWriterOptions::default())
+            .unwrap();
+        let r = w.append(vec![("x", obs(0.))]).unwrap().remove(0);
+        w.create_item("missing", 1.0, Trajectory::new().column(&[r]))
+            .unwrap();
+        let err = w.flush().unwrap_err();
+        assert!(matches!(err, Error::TableNotFound(_)), "{err}");
+    }
+
+    #[test]
+    fn overlapping_trajectories_share_column_chunks() {
+        // The §4.1 example, column-oriented: length-3 windows overlapping
+        // by 2 share the same column chunks.
+        let (server, client) = start();
+        let mut w = client
+            .trajectory_writer(TrajectoryWriterOptions::default().with_chunk_length(3))
+            .unwrap();
+        let mut refs = Vec::new();
+        for i in 0..9 {
+            refs.push(w.append(vec![("x", obs(i as f32))]).unwrap().remove(0));
+            if i >= 2 {
+                let t = Trajectory::new().column(&refs[i - 2..=i]);
+                w.create_item("a", 1.5, t).unwrap();
+            }
+        }
+        w.flush().unwrap();
+        assert_eq!(w.items_created(), 7);
+        let table = server.table("a").unwrap();
+        assert_eq!(table.size(), 7);
+        let s = table.sample(None).unwrap();
+        let data = s.item.materialize().unwrap();
+        assert_eq!(data[0].shape()[0], 3);
+        let vals = data[0].to_f32().unwrap();
+        assert!(
+            (vals[2] - vals[0] - 1.0).abs() < 1e-6,
+            "consecutive steps: {vals:?}"
+        );
+    }
+}

@@ -1,24 +1,24 @@
-//! Streaming writer (§3.8, examples §4.1–4.2).
+//! Legacy streaming writer (§3.8, examples §4.1–4.2) — now a thin shim
+//! over [`TrajectoryWriter`].
 //!
-//! `append` pushes a step into a local buffer; every `chunk_length` steps a
-//! chunk is cut, compressed, and streamed to the server. `create_item`
-//! registers an item over the most recent `num_timesteps` steps; items wait
-//! in a local buffer until every chunk they reference has been transmitted
-//! ("Waiting for the Chunk to be sent before Items makes it safe for
-//! multiple items to reference the same data without sending it more than
-//! once"). `flush`/`end_episode` force out buffered steps and items.
-//!
-//! Acknowledgements are pipelined: up to `max_in_flight_items` CreateItem
-//! requests may be outstanding before the writer blocks on acks.
+//! The flat-step model (`append` one opaque row, `create_item` over "the
+//! last N timesteps") maps onto the column-oriented writer as a single
+//! column group holding every signature field per cell, with items created
+//! through the trailing-window path ([`TrajectoryWriter::create_item_window`]).
+//! Window items keep the v1 flat wire representation — chunk keys + offset
+//! + length over multi-field chunks — so servers (and the old decoder) see
+//! exactly what the original writer produced: chunking cadence, chunk
+//! sharing between overlapping items, pipelined acks, and pending-item
+//! semantics are all inherited from the one implementation.
 
-use super::{Client, Conn};
-use crate::core::chunk::{ChunkBuilder, Compression};
+use super::trajectory_writer::{TrajectoryWriter, TrajectoryWriterOptions};
+use super::Client;
+use crate::core::chunk::Compression;
 use crate::core::tensor::Tensor;
-use crate::error::{Error, Result};
-use crate::net::wire::{Message, WireItem};
-use crate::util::KeyGenerator;
-use std::collections::VecDeque;
-use std::sync::Arc;
+use crate::error::Result;
+
+/// The single column group the legacy writer appends into.
+const ROW_COLUMN: &str = "__row__";
 
 /// Writer configuration.
 #[derive(Clone, Debug)]
@@ -67,65 +67,28 @@ impl WriterOptions {
     }
 }
 
-/// Metadata of a chunk already streamed to the server.
-#[derive(Clone, Copy, Debug)]
-struct SentChunk {
-    key: u64,
-    start: u64,
-    len: usize,
-}
-
-/// A pending item waiting for its chunks to be cut/transmitted.
-struct PendingItem {
-    table: String,
-    priority: f64,
-    /// Step range `[start, end)` in episode coordinates.
-    start: u64,
-    end: u64,
-}
-
-/// Streaming writer over one long-lived connection.
+/// Streaming writer over one long-lived connection (legacy flat-step API).
 pub struct Writer {
-    conn: Conn,
-    keys: Arc<KeyGenerator>,
-    options: WriterOptions,
-    builder: ChunkBuilder,
-    /// Chunks already transmitted, oldest first.
-    sent_chunks: VecDeque<SentChunk>,
-    pending_items: VecDeque<PendingItem>,
-    /// Outstanding (unacked) CreateItem request ids.
-    in_flight: VecDeque<u64>,
-    /// Items successfully created (acked) over this writer's lifetime.
-    items_created: u64,
-    /// Steps appended over this writer's lifetime (across episodes).
-    steps_appended: u64,
+    inner: TrajectoryWriter,
 }
 
 impl Writer {
     pub(crate) fn open(client: &Client, options: WriterOptions) -> Result<Writer> {
         assert!(options.chunk_length > 0, "chunk_length must be positive");
-        Ok(Writer {
-            conn: Conn::connect(client.addr())?,
-            keys: client.key_gen(),
-            builder: ChunkBuilder::new(options.chunk_length, options.compression),
-            options,
-            sent_chunks: VecDeque::new(),
-            pending_items: VecDeque::new(),
-            in_flight: VecDeque::new(),
-            items_created: 0,
-            steps_appended: 0,
-        })
+        let inner = TrajectoryWriter::open(
+            client,
+            TrajectoryWriterOptions::default()
+                .with_chunk_length(options.chunk_length)
+                .with_compression(options.compression)
+                .with_max_in_flight_items(options.max_in_flight_items)
+                .with_insert_timeout_ms(options.insert_timeout_ms),
+        )?;
+        Ok(Writer { inner })
     }
 
     /// Append one step (a row of tensors in signature order).
     pub fn append(&mut self, step: Vec<Tensor>) -> Result<()> {
-        self.steps_appended += 1;
-        let key = self.keys.next_key();
-        if let Some(chunk) = self.builder.append(key, step)? {
-            self.transmit_chunk(chunk)?;
-        }
-        self.maybe_send_pending()?;
-        Ok(())
+        self.inner.append_row(ROW_COLUMN, step).map(|_| ())
     }
 
     /// Create an item over the `num_timesteps` most recently appended
@@ -133,202 +96,30 @@ impl Writer {
     /// referenced chunks have been cut & transmitted; call [`Writer::flush`]
     /// to force.
     pub fn create_item(&mut self, table: &str, num_timesteps: usize, priority: f64) -> Result<()> {
-        let end = self.builder.next_sequence();
-        if (num_timesteps as u64) > end {
-            return Err(Error::InvalidArgument(format!(
-                "item of {num_timesteps} steps but only {end} appended"
-            )));
-        }
-        if num_timesteps == 0 {
-            return Err(Error::InvalidArgument("item of zero steps".into()));
-        }
-        let start = end - num_timesteps as u64;
-        // The referenced range must still be coverable: its chunks may have
-        // been pruned if it is very old.
-        if let Some(first) = self.sent_chunks.front() {
-            if start < first.start && end <= first.start {
-                return Err(Error::InvalidArgument(
-                    "item references steps older than the writer history".into(),
-                ));
-            }
-        }
-        self.pending_items.push_back(PendingItem {
-            table: table.into(),
-            priority,
-            start,
-            end,
-        });
-        self.maybe_send_pending()
+        self.inner
+            .create_item_window(table, ROW_COLUMN, num_timesteps, priority)
     }
 
     /// Force out any buffered steps as a (short) chunk and send all pending
     /// items, then wait for every outstanding ack.
     pub fn flush(&mut self) -> Result<()> {
-        if self.builder.buffered_steps() > 0 && !self.pending_items.is_empty() {
-            let key = self.keys.next_key();
-            if let Some(chunk) = self.builder.flush(key)? {
-                self.transmit_chunk(chunk)?;
-            }
-        }
-        self.maybe_send_pending()?;
-        if !self.pending_items.is_empty() {
-            return Err(Error::InvalidArgument(
-                "pending items reference steps never appended".into(),
-            ));
-        }
-        self.conn.flush()?;
-        self.drain_acks(0)?;
-        Ok(())
+        self.inner.flush()
     }
 
     /// Flush and reset episode state: the next append starts step 0 of a
     /// new episode; items can no longer reference earlier steps.
     pub fn end_episode(&mut self) -> Result<()> {
-        self.flush()?;
-        self.builder.reset();
-        self.sent_chunks.clear();
-        Ok(())
+        self.inner.end_episode()
     }
 
     /// Number of items acknowledged by the server so far.
     pub fn items_created(&self) -> u64 {
-        self.items_created
+        self.inner.items_created()
     }
 
     /// Total steps appended (across episodes).
     pub fn steps_appended(&self) -> u64 {
-        self.steps_appended
-    }
-
-    fn transmit_chunk(&mut self, chunk: crate::core::chunk::Chunk) -> Result<()> {
-        self.sent_chunks.push_back(SentChunk {
-            key: chunk.key,
-            start: chunk.sequence_start,
-            len: chunk.num_steps,
-        });
-        // The chunk travels as a shared handle: the TCP backend encodes
-        // from it, the in-process backend hands this very allocation to the
-        // server's chunk store (zero-copy insert path).
-        self.conn.send(Message::InsertChunks {
-            chunks: vec![Arc::new(chunk)],
-        })?;
-        self.prune_history();
-        Ok(())
-    }
-
-    /// Drop sent-chunk metadata that no pending or future item can
-    /// reference. A chunk is prunable once it ends before the earliest
-    /// pending item's start — and, conservatively, we always keep the most
-    /// recent 64 chunks so future `create_item` calls can look back.
-    fn prune_history(&mut self) {
-        let pending_min = self
-            .pending_items
-            .front()
-            .map(|p| p.start)
-            .unwrap_or(u64::MAX);
-        while self.sent_chunks.len() > 64 {
-            let front = self.sent_chunks.front().expect("len > 64");
-            let front_end = front.start + front.len as u64;
-            if front_end <= pending_min.min(self.oldest_reachable_step()) {
-                self.sent_chunks.pop_front();
-            } else {
-                break;
-            }
-        }
-    }
-
-    /// Steps older than this can never be referenced again (we keep a
-    /// generous window of 4096 steps of history).
-    fn oldest_reachable_step(&self) -> u64 {
-        self.builder.next_sequence().saturating_sub(4096)
-    }
-
-    /// Send every pending item whose chunk span is fully transmitted.
-    fn maybe_send_pending(&mut self) -> Result<()> {
-        while let Some(p) = self.pending_items.front() {
-            let Some(chunk_keys) = self.cover(p.start, p.end) else {
-                break;
-            };
-            let p = self.pending_items.pop_front().expect("front exists");
-            let first_chunk_start = self
-                .sent_chunks
-                .iter()
-                .find(|c| c.key == chunk_keys[0])
-                .expect("cover() returned sent chunks")
-                .start;
-            let id = self.conn.next_id();
-            let item = WireItem {
-                key: self.keys.next_key(),
-                table: p.table.clone(),
-                priority: p.priority,
-                chunk_keys,
-                offset: p.start - first_chunk_start,
-                length: p.end - p.start,
-                times_sampled: 0,
-            };
-            self.conn.send(Message::CreateItem {
-                id,
-                item,
-                timeout_ms: self.options.insert_timeout_ms,
-            })?;
-            self.in_flight.push_back(id);
-            // Flush eagerly so the server overlaps with our next append
-            // (measured faster than deferring the flush to the window
-            // boundary — see EXPERIMENTS.md §Perf); block on acks only
-            // when the pipeline window is full.
-            self.conn.flush()?;
-            self.drain_acks(self.options.max_in_flight_items)?;
-        }
-        Ok(())
-    }
-
-    /// Chunk keys covering `[start, end)`, or None if not fully chunked yet.
-    fn cover(&self, start: u64, end: u64) -> Option<Vec<u64>> {
-        let mut keys = Vec::new();
-        let mut covered_to: Option<u64> = None;
-        for c in &self.sent_chunks {
-            let c_end = c.start + c.len as u64;
-            if c_end <= start || c.start >= end {
-                continue;
-            }
-            match covered_to {
-                None => {
-                    if c.start > start {
-                        return None; // front of range not covered
-                    }
-                    covered_to = Some(c_end);
-                }
-                Some(to) => {
-                    debug_assert_eq!(c.start, to, "sent chunks are contiguous");
-                    covered_to = Some(c_end);
-                }
-            }
-            keys.push(c.key);
-            if covered_to.unwrap() >= end {
-                return Some(keys);
-            }
-        }
-        None
-    }
-
-    /// Block until at most `max_outstanding` acks remain outstanding.
-    fn drain_acks(&mut self, max_outstanding: usize) -> Result<()> {
-        while self.in_flight.len() > max_outstanding {
-            // Pop before awaiting: the server sends exactly one reply per
-            // request, so even an Err reply consumes this id — leaving it
-            // queued would make a later drain re-read a reply that never
-            // comes.
-            let id = self.in_flight.pop_front().expect("non-empty");
-            self.conn.expect_ack(id)?;
-            self.items_created += 1;
-        }
-        Ok(())
-    }
-}
-
-impl Drop for Writer {
-    fn drop(&mut self) {
-        let _ = self.flush();
+        self.inner.steps_appended()
     }
 }
 
@@ -336,6 +127,7 @@ impl Drop for Writer {
 mod tests {
     use super::*;
     use crate::core::table::TableConfig;
+    use crate::error::Error;
     use crate::net::server::Server;
 
     fn step(v: f32) -> Vec<Tensor> {
@@ -413,6 +205,58 @@ mod tests {
         assert_eq!(server.table("a").unwrap().size(), 0);
         w.flush().unwrap();
         assert_eq!(server.table("a").unwrap().size(), 1);
+    }
+
+    #[test]
+    fn flush_cuts_itemless_buffered_steps() {
+        // Regression: flush() used to skip cutting the buffered short
+        // chunk when no item was pending, so appended-but-itemless steps
+        // survived the flush and a later create_item saw stale chunk
+        // boundaries. The builder must always be flushed.
+        let (server, client) = start();
+        let mut w = client
+            .writer(WriterOptions::default().with_chunk_length(100))
+            .unwrap();
+        w.append(step(1.0)).unwrap();
+        w.append(step(2.0)).unwrap();
+        // No pending item — flush must still cut & transmit [0, 2).
+        w.flush().unwrap();
+        // The next appends land in a fresh chunk; an item over the last 3
+        // steps spans the flush boundary and must materialize correctly.
+        w.append(step(3.0)).unwrap();
+        w.append(step(4.0)).unwrap();
+        w.create_item("a", 3, 1.0).unwrap();
+        w.flush().unwrap();
+        assert_eq!(server.table("a").unwrap().size(), 1);
+        let s = server.table("a").unwrap().sample(None).unwrap();
+        assert_eq!(s.item.chunks.len(), 2, "item spans the flush-cut chunk");
+        let data = s.item.materialize().unwrap();
+        assert_eq!(data[0].shape(), &[3, 2]);
+        assert_eq!(data[0].to_f32().unwrap()[0], 2.0);
+    }
+
+    #[test]
+    fn stale_reference_errors_instead_of_hanging() {
+        // Regression: the too-old-reference guard compared both ends of
+        // the range against retained history in a way that let partially
+        // pruned items through; they then hung forever as unsendable
+        // pending items. Referencing pruned steps must error eagerly.
+        let (_server, client) = start();
+        let mut w = client
+            .writer(WriterOptions::default().with_chunk_length(1))
+            .unwrap();
+        // 5000 single-step chunks: far past the 64-chunk / 4096-step
+        // retention horizon, so step 0 is long pruned.
+        for i in 0..5000 {
+            w.append(step(i as f32)).unwrap();
+        }
+        let err = w.create_item("a", 5000, 1.0).unwrap_err();
+        assert!(matches!(err, Error::InvalidArgument(_)), "{err}");
+        // And flush still succeeds — nothing is stuck pending.
+        w.flush().unwrap();
+        // Recent windows keep working.
+        w.create_item("a", 3, 1.0).unwrap();
+        w.flush().unwrap();
     }
 
     #[test]

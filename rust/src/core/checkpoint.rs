@@ -4,14 +4,19 @@
 //! Format (all little-endian, see `crate::io`):
 //!
 //! ```text
-//! magic "RVBCKPT1"
+//! magic "RVBCKPT2"
 //! u32  num_chunks        — unique chunks referenced by any item
 //!   per chunk: key, sequence_start, num_steps, columns
 //! u32  num_tables
 //!   per table: name, inserts, samples, items
-//!     per item: key, priority, offset, length, times_sampled, chunk keys
+//!     per item: key, priority, offset, length, times_sampled, chunk keys,
+//!               u8 trajectory flag [+ per-column slice lists]
 //! u32  crc32 of everything above
 //! ```
+//!
+//! Version 2 (DESIGN.md §9) appends the optional per-column trajectory
+//! representation to each item. Version-1 files (`RVBCKPT1`, no trajectory
+//! byte) still load: the magic selects the item decoder.
 //!
 //! Writing is atomic (tmp file + rename); the CRC guards against torn or
 //! corrupted files on load.
@@ -24,16 +29,18 @@
 
 use crate::core::chunk::Chunk;
 use crate::core::chunk_store::ChunkStore;
-use crate::core::item::Item;
+use crate::core::item::{Item, TrajectoryColumn};
 use crate::core::table::Table;
 use crate::error::{Error, Result};
 use crate::io::*;
+use crate::util::crc32;
 use std::collections::BTreeMap;
 use std::io::{Read, Write};
 use std::path::Path;
 use std::sync::Arc;
 
-const MAGIC: &[u8; 8] = b"RVBCKPT1";
+const MAGIC_V2: &[u8; 8] = b"RVBCKPT2";
+const MAGIC_V1: &[u8; 8] = b"RVBCKPT1";
 
 fn encode_item<W: Write>(w: &mut W, item: &Item) -> Result<()> {
     put_u64(w, item.key)?;
@@ -45,7 +52,7 @@ fn encode_item<W: Write>(w: &mut W, item: &Item) -> Result<()> {
     for c in &item.chunks {
         put_u64(w, c.key)?;
     }
-    Ok(())
+    TrajectoryColumn::encode_list(&item.columns, w)
 }
 
 struct DecodedItem {
@@ -55,9 +62,10 @@ struct DecodedItem {
     length: usize,
     times_sampled: u32,
     chunk_keys: Vec<u64>,
+    columns: Option<Vec<TrajectoryColumn>>,
 }
 
-fn decode_item<R: Read>(r: &mut R) -> Result<DecodedItem> {
+fn decode_item<R: Read>(r: &mut R, version: u8) -> Result<DecodedItem> {
     let key = get_u64(r)?;
     let priority = get_f64(r)?;
     let offset = get_u64(r)? as usize;
@@ -68,6 +76,12 @@ fn decode_item<R: Read>(r: &mut R) -> Result<DecodedItem> {
         return Err(Error::Decode(format!("{nchunks} chunk refs exceeds limit")));
     }
     let chunk_keys = (0..nchunks).map(|_| get_u64(r)).collect::<Result<_>>()?;
+    // v1 items end here (flat representation only).
+    let columns = if version >= 2 {
+        TrajectoryColumn::decode_list(r)?
+    } else {
+        None
+    };
     Ok(DecodedItem {
         key,
         priority,
@@ -75,13 +89,14 @@ fn decode_item<R: Read>(r: &mut R) -> Result<DecodedItem> {
         length,
         times_sampled,
         chunk_keys,
+        columns,
     })
 }
 
 /// CRC-tracking writer shim.
 struct CrcWriter<W: Write> {
     inner: W,
-    hasher: crc32fast::Hasher,
+    hasher: crc32::Hasher,
 }
 
 impl<W: Write> Write for CrcWriter<W> {
@@ -98,7 +113,7 @@ impl<W: Write> Write for CrcWriter<W> {
 /// CRC-tracking reader shim.
 struct CrcReader<R: Read> {
     inner: R,
-    hasher: crc32fast::Hasher,
+    hasher: crc32::Hasher,
 }
 
 impl<R: Read> Read for CrcReader<R> {
@@ -134,10 +149,10 @@ pub fn save(path: &Path, tables: &[Arc<Table>]) -> Result<()> {
     let file = std::fs::File::create(&tmp)?;
     let mut w = CrcWriter {
         inner: std::io::BufWriter::new(file),
-        hasher: crc32fast::Hasher::new(),
+        hasher: crc32::Hasher::new(),
     };
 
-    w.write_all(MAGIC)?;
+    w.write_all(MAGIC_V2)?;
     put_u32(&mut w, chunks.len() as u32)?;
     for c in chunks.values() {
         c.encode(&mut w)?;
@@ -171,19 +186,23 @@ pub fn save(path: &Path, tables: &[Arc<Table>]) -> Result<()> {
 pub fn load(path: &Path, tables: &[Arc<Table>], store: &ChunkStore) -> Result<usize> {
     let file = std::fs::File::open(path)?;
     let len = file.metadata()?.len();
-    if len < (MAGIC.len() + 4) as u64 {
+    if len < (MAGIC_V2.len() + 4) as u64 {
         return Err(Error::CorruptCheckpoint("file too short".into()));
     }
     let mut r = CrcReader {
         inner: std::io::BufReader::new(file),
-        hasher: crc32fast::Hasher::new(),
+        hasher: crc32::Hasher::new(),
     };
 
     let mut magic = [0u8; 8];
     r.read_exact(&mut magic)?;
-    if &magic != MAGIC {
+    let version = if &magic == MAGIC_V2 {
+        2
+    } else if &magic == MAGIC_V1 {
+        1
+    } else {
         return Err(Error::CorruptCheckpoint("bad magic".into()));
-    }
+    };
 
     let nchunks = get_u32(&mut r)? as usize;
     let mut arcs: BTreeMap<u64, Arc<Chunk>> = BTreeMap::new();
@@ -200,7 +219,7 @@ pub fn load(path: &Path, tables: &[Arc<Table>], store: &ChunkStore) -> Result<us
         let samples = get_u64(&mut r)?;
         let nitems = get_u32(&mut r)? as usize;
         let items = (0..nitems)
-            .map(|_| decode_item(&mut r))
+            .map(|_| decode_item(&mut r, version))
             .collect::<Result<Vec<_>>>()?;
         decoded.push((name, inserts, samples, items));
     }
@@ -226,7 +245,12 @@ pub fn load(path: &Path, tables: &[Arc<Table>], store: &ChunkStore) -> Result<us
                 .iter()
                 .map(|k| arcs.get(k).cloned().ok_or(Error::ChunkNotFound(*k)))
                 .collect::<Result<Vec<_>>>()?;
-            let mut item = Item::new(d.key, name.clone(), d.priority, chunks, d.offset, d.length)?;
+            let mut item = match d.columns {
+                Some(cols) => {
+                    Item::new_trajectory(d.key, name.clone(), d.priority, chunks, cols)?
+                }
+                None => Item::new(d.key, name.clone(), d.priority, chunks, d.offset, d.length)?,
+            };
             item.times_sampled = d.times_sampled;
             live_items.push(item);
         }
@@ -300,6 +324,108 @@ mod tests {
         let data = s.item.materialize().unwrap();
         assert_eq!(data[0].to_f32().unwrap(), vec![42.0]);
 
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn trajectory_items_roundtrip() {
+        // Per-column items (different lengths, non-contiguous slices, a
+        // squeezed column) must survive save/restore bit-exactly.
+        let dir = tmpdir("trajectory");
+        let path = dir.join("ckpt.rvb");
+        let mk_col_chunk = |key: u64, start: u64, vals: &[f32]| {
+            let steps: Vec<Vec<Tensor>> = vals
+                .iter()
+                .map(|&v| vec![Tensor::from_f32(&[1], &[v]).unwrap()])
+                .collect();
+            Arc::new(Chunk::from_steps(key, start, &steps, Compression::None).unwrap())
+        };
+        let obs = mk_col_chunk(100, 0, &[0., 1., 2., 3.]);
+        let rew = mk_col_chunk(200, 0, &[10., 11.]);
+        let item = Item::new_trajectory(
+            5,
+            "t",
+            2.5,
+            vec![obs, rew],
+            vec![
+                crate::core::item::TrajectoryColumn {
+                    name: "obs".into(),
+                    squeeze: false,
+                    slices: vec![
+                        crate::core::item::ChunkSlice { chunk_key: 100, offset: 0, length: 1 },
+                        crate::core::item::ChunkSlice { chunk_key: 100, offset: 2, length: 2 },
+                    ],
+                },
+                crate::core::item::TrajectoryColumn {
+                    name: "rew".into(),
+                    squeeze: true,
+                    slices: vec![crate::core::item::ChunkSlice {
+                        chunk_key: 200,
+                        offset: 1,
+                        length: 1,
+                    }],
+                },
+            ],
+        )
+        .unwrap();
+        let t = Arc::new(Table::new(TableConfig::uniform_replay("t", 10)));
+        t.insert_or_assign(item, None).unwrap();
+        save(&path, &[t]).unwrap();
+
+        let r = Arc::new(Table::new(TableConfig::uniform_replay("t", 10)));
+        let store = ChunkStore::new();
+        assert_eq!(load(&path, &[r.clone()], &store).unwrap(), 1);
+        let s = r.sample(None).unwrap();
+        let cols = s.item.materialize_columns().unwrap();
+        assert_eq!(cols[0].0, "obs");
+        assert_eq!(cols[0].1.shape(), &[3, 1]);
+        assert_eq!(cols[0].1.to_f32().unwrap(), vec![0., 2., 3.]);
+        assert_eq!(cols[1].0, "rew");
+        assert_eq!(cols[1].1.shape(), &[1], "squeeze flag restored");
+        assert_eq!(cols[1].1.to_f32().unwrap(), vec![11.]);
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn v1_checkpoints_still_load() {
+        // Hand-craft a version-1 file (flat items, no trajectory byte) and
+        // load it through the current reader.
+        let dir = tmpdir("v1_compat");
+        let path = dir.join("old.rvb");
+        let chunk = Chunk::from_steps(
+            42,
+            0,
+            &[vec![Tensor::from_f32(&[1], &[3.5]).unwrap()]],
+            Compression::None,
+        )
+        .unwrap();
+        let mut body = Vec::new();
+        body.extend_from_slice(MAGIC_V1);
+        put_u32(&mut body, 1).unwrap(); // one chunk
+        chunk.encode(&mut body).unwrap();
+        put_u32(&mut body, 1).unwrap(); // one table
+        put_string(&mut body, "t").unwrap();
+        put_u64(&mut body, 1).unwrap(); // inserts
+        put_u64(&mut body, 0).unwrap(); // samples
+        put_u32(&mut body, 1).unwrap(); // one item, v1 layout
+        put_u64(&mut body, 7).unwrap(); // key
+        put_f64(&mut body, 1.5).unwrap(); // priority
+        put_u64(&mut body, 0).unwrap(); // offset
+        put_u64(&mut body, 1).unwrap(); // length
+        put_u32(&mut body, 0).unwrap(); // times_sampled
+        put_u32(&mut body, 1).unwrap(); // one chunk key
+        put_u64(&mut body, 42).unwrap();
+        let crc = crate::util::crc32::crc32(&body);
+        byteorder::WriteBytesExt::write_u32::<byteorder::LittleEndian>(&mut body, crc).unwrap();
+        std::fs::write(&path, &body).unwrap();
+
+        let r = Arc::new(Table::new(TableConfig::uniform_replay("t", 10)));
+        let store = ChunkStore::new();
+        assert_eq!(load(&path, &[r.clone()], &store).unwrap(), 1);
+        let s = r.sample(None).unwrap();
+        assert_eq!(s.item.key, 7);
+        assert!(s.item.columns.is_none());
+        assert_eq!(s.item.materialize().unwrap()[0].to_f32().unwrap(), vec![3.5]);
         std::fs::remove_dir_all(dir).ok();
     }
 

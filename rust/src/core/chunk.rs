@@ -402,13 +402,18 @@ impl ChunkBuilder {
     }
 
     /// Emit a (possibly short) chunk from whatever is buffered.
+    ///
+    /// Failure is atomic: the buffer and sequence counter are untouched
+    /// on error, so cell positions already handed out (writer `StepRef`s)
+    /// never silently re-bind to data appended later — the cut just fails
+    /// again until the caller gives up.
     pub fn flush(&mut self, key: u64) -> Result<Option<Chunk>> {
         if self.buffered.is_empty() {
             return Ok(None);
         }
-        let steps = std::mem::take(&mut self.buffered);
-        let chunk = Chunk::from_steps(key, self.next_sequence, &steps, self.compression)?;
-        self.next_sequence += steps.len() as u64;
+        let chunk = Chunk::from_steps(key, self.next_sequence, &self.buffered, self.compression)?;
+        self.next_sequence += self.buffered.len() as u64;
+        self.buffered.clear();
         Ok(Some(chunk))
     }
 
@@ -560,6 +565,24 @@ mod tests {
         assert_eq!(c2.num_steps, 1);
         assert_eq!(c2.sequence_start, 3);
         assert!(b.flush(3).unwrap().is_none());
+    }
+
+    #[test]
+    fn builder_failed_cut_keeps_buffer_and_sequence() {
+        // A cell that breaks the cut (mismatched shape) must not discard
+        // buffered cells or rewind the sequence — positions already handed
+        // out would silently re-bind to later data.
+        let mut b = ChunkBuilder::new(2, Compression::None);
+        b.append(1, vec![Tensor::from_f32(&[2], &[0., 1.]).unwrap()])
+            .unwrap();
+        let err = b.append(2, vec![Tensor::from_f32(&[3], &[0., 1., 2.]).unwrap()]);
+        assert!(err.is_err(), "mismatched shapes cannot stack");
+        assert_eq!(b.buffered_steps(), 2, "buffer intact after failed cut");
+        assert_eq!(b.next_sequence(), 2, "sequence not rewound");
+        // The bad cell keeps the cut failing loudly; reset recovers.
+        assert!(b.flush(3).is_err());
+        b.reset();
+        assert!(b.append(4, step(&[0., 1.], 0)).unwrap().is_none());
     }
 
     #[test]

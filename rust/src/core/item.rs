@@ -1,10 +1,118 @@
-//! Items (§3.2): the unit of sampling. An item references a span of steps
-//! across one or more chunks (Fig. 3) and carries a mutable priority.
+//! Items (§3.2): the unit of sampling. An item references stored steps and
+//! carries a mutable priority. Two representations coexist (DESIGN.md §9):
+//!
+//! - **Flat** (the paper's Fig. 3): a contiguous span of whole steps across
+//!   one or more multi-column chunks, described by `(chunks, offset,
+//!   length)`. Produced by the legacy trailing-window `Writer`.
+//! - **Trajectory** (§3.8 "flexible API"): per-column lists of chunk-slice
+//!   ranges — each column gathers its own (possibly non-contiguous) rows
+//!   from single-column chunks and may be squeezed to drop the time axis.
+//!   Produced by `TrajectoryWriter`.
 
 use crate::core::chunk::Chunk;
 use crate::core::tensor::Tensor;
 use crate::error::{Error, Result};
+use std::collections::HashMap;
 use std::sync::Arc;
+
+/// One contiguous run of rows inside a single chunk, referenced by a
+/// trajectory column. Chunks are addressed by key: the owning [`Item`]
+/// carries the `Arc<Chunk>` handles in [`Item::chunks`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ChunkSlice {
+    /// Key of the referenced chunk.
+    pub chunk_key: u64,
+    /// First row of the run within the chunk.
+    pub offset: usize,
+    /// Number of rows in the run (>= 1).
+    pub length: usize,
+}
+
+/// One named column of a trajectory item: an ordered gather of chunk-slice
+/// runs. Non-adjacent runs express strided / non-contiguous trajectories
+/// (e.g. n-step returns that skip steps).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct TrajectoryColumn {
+    /// Column name as written by the client (`TrajectoryWriter` column).
+    pub name: String,
+    /// Slice runs, gathered in order along the time axis.
+    pub slices: Vec<ChunkSlice>,
+    /// Materialize without the leading time axis (requires exactly one
+    /// referenced row total).
+    pub squeeze: bool,
+}
+
+impl TrajectoryColumn {
+    /// Total rows gathered by this column.
+    pub fn num_steps(&self) -> usize {
+        self.slices.iter().map(|s| s.length).sum()
+    }
+
+    /// Serialize an optional column list: a presence byte, then per column
+    /// its name, squeeze flag, and `(chunk_key, offset, length)` runs.
+    /// Shared by the wire protocol (v2 item frames) and the checkpoint
+    /// format (like [`Chunk::encode`]), so the two layouts cannot drift.
+    pub fn encode_list<W: std::io::Write>(
+        cols: &Option<Vec<TrajectoryColumn>>,
+        w: &mut W,
+    ) -> Result<()> {
+        use crate::io::*;
+        match cols {
+            None => put_u8(w, 0)?,
+            Some(cols) => {
+                put_u8(w, 1)?;
+                put_u32(w, cols.len() as u32)?;
+                for col in cols {
+                    put_string(w, &col.name)?;
+                    put_u8(w, col.squeeze as u8)?;
+                    put_u32(w, col.slices.len() as u32)?;
+                    for s in &col.slices {
+                        put_u64(w, s.chunk_key)?;
+                        put_u64(w, s.offset as u64)?;
+                        put_u64(w, s.length as u64)?;
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Inverse of [`TrajectoryColumn::encode_list`].
+    pub fn decode_list<R: std::io::Read>(r: &mut R) -> Result<Option<Vec<TrajectoryColumn>>> {
+        use crate::io::*;
+        if get_u8(r)? == 0 {
+            return Ok(None);
+        }
+        let ncols = get_u32(r)? as usize;
+        if ncols > 4096 {
+            return Err(Error::Decode(format!("{ncols} item columns exceeds limit")));
+        }
+        let mut cols = Vec::with_capacity(ncols);
+        for _ in 0..ncols {
+            let name = get_string(r)?;
+            let squeeze = get_u8(r)? != 0;
+            let nslices = get_u32(r)? as usize;
+            if nslices > 1 << 20 {
+                return Err(Error::Decode(format!("{nslices} slices exceeds limit")));
+            }
+            let slices = (0..nslices)
+                .map(|_| {
+                    Ok(ChunkSlice {
+                        chunk_key: get_u64(r)?,
+                        offset: get_u64(r)? as usize,
+                        length: get_u64(r)? as usize,
+                    })
+                })
+                .collect::<Result<_>>()?;
+            cols.push(TrajectoryColumn {
+                name,
+                squeeze,
+                slices,
+            });
+        }
+        Ok(Some(cols))
+    }
+}
 
 /// An item held by a [`crate::core::table::Table`].
 #[derive(Clone, Debug)]
@@ -17,14 +125,30 @@ pub struct Item {
     /// Priority used by Selectors. Clients can update this value.
     pub priority: f64,
     /// Referenced chunks, in stream order. The `Arc`s are the reference
-    /// counts tracked by the ChunkStore design.
+    /// counts tracked by the ChunkStore design. For trajectory items this
+    /// is the deduplicated union of every column's referenced chunks.
     pub chunks: Vec<Arc<Chunk>>,
-    /// Offset of the item's first step within `chunks[0]`.
+    /// Offset of the item's first step within `chunks[0]` (flat items; 0
+    /// for trajectory items).
     pub offset: usize,
-    /// Total number of steps spanned by the item.
+    /// Total number of steps spanned by the item (flat items), or the
+    /// longest column's row count (trajectory items) — the value extension
+    /// step counters see either way.
     pub length: usize,
     /// How many times this item has been sampled so far.
     pub times_sampled: u32,
+    /// Per-column gather lists: `None` for flat items, `Some` for
+    /// trajectory items.
+    pub columns: Option<Vec<TrajectoryColumn>>,
+}
+
+fn validate_priority(priority: f64) -> Result<()> {
+    if !priority.is_finite() || priority < 0.0 {
+        return Err(Error::InvalidArgument(format!(
+            "priority must be finite and >= 0, got {priority}"
+        )));
+    }
+    Ok(())
 }
 
 impl Item {
@@ -43,11 +167,7 @@ impl Item {
         if length == 0 {
             return Err(Error::InvalidArgument("item of zero length".into()));
         }
-        if !priority.is_finite() || priority < 0.0 {
-            return Err(Error::InvalidArgument(format!(
-                "priority must be finite and >= 0, got {priority}"
-            )));
-        }
+        validate_priority(priority)?;
         let total: usize = chunks.iter().map(|c| c.num_steps).sum();
         if offset >= chunks[0].num_steps {
             return Err(Error::InvalidArgument(format!(
@@ -81,6 +201,105 @@ impl Item {
             offset,
             length,
             times_sampled: 0,
+            columns: None,
+        })
+    }
+
+    /// Construct and validate a trajectory item: per-column gather lists
+    /// over single-column chunks. `chunks` must be exactly the
+    /// deduplicated set of chunks the slices reference (this is what the
+    /// server's insert path checks the wire item against).
+    pub fn new_trajectory(
+        key: u64,
+        table: impl Into<String>,
+        priority: f64,
+        chunks: Vec<Arc<Chunk>>,
+        columns: Vec<TrajectoryColumn>,
+    ) -> Result<Item> {
+        if chunks.is_empty() {
+            return Err(Error::InvalidArgument("item with no chunks".into()));
+        }
+        if columns.is_empty() {
+            return Err(Error::InvalidArgument(
+                "trajectory item with no columns".into(),
+            ));
+        }
+        validate_priority(priority)?;
+        let mut by_key: HashMap<u64, &Arc<Chunk>> = HashMap::with_capacity(chunks.len());
+        for c in &chunks {
+            if by_key.insert(c.key, c).is_some() {
+                return Err(Error::InvalidArgument(format!(
+                    "duplicate chunk {} in trajectory item",
+                    c.key
+                )));
+            }
+        }
+        let mut referenced: std::collections::HashSet<u64> = std::collections::HashSet::new();
+        let mut length = 0usize;
+        for col in &columns {
+            if col.slices.is_empty() {
+                return Err(Error::InvalidArgument(format!(
+                    "trajectory column {:?} has no chunk slices",
+                    col.name
+                )));
+            }
+            let mut steps = 0usize;
+            for s in &col.slices {
+                if s.length == 0 {
+                    return Err(Error::InvalidArgument(format!(
+                        "trajectory column {:?}: zero-length chunk slice",
+                        col.name
+                    )));
+                }
+                let chunk = by_key
+                    .get(&s.chunk_key)
+                    .ok_or(Error::ChunkNotFound(s.chunk_key))?;
+                if chunk.columns.len() != 1 {
+                    return Err(Error::SignatureMismatch(format!(
+                        "trajectory column {:?} references chunk {} with {} fields \
+                         (trajectory chunks hold exactly one column)",
+                        col.name,
+                        s.chunk_key,
+                        chunk.columns.len()
+                    )));
+                }
+                if s.offset + s.length > chunk.num_steps {
+                    return Err(Error::InvalidArgument(format!(
+                        "trajectory column {:?}: slice [{}, {}) exceeds chunk {} ({} steps)",
+                        col.name,
+                        s.offset,
+                        s.offset + s.length,
+                        s.chunk_key,
+                        chunk.num_steps
+                    )));
+                }
+                referenced.insert(s.chunk_key);
+                steps += s.length;
+            }
+            if col.squeeze && steps != 1 {
+                return Err(Error::InvalidArgument(format!(
+                    "squeezed column {:?} references {steps} steps (must be 1)",
+                    col.name
+                )));
+            }
+            length = length.max(steps);
+        }
+        if referenced.len() != chunks.len() {
+            return Err(Error::InvalidArgument(format!(
+                "trajectory item carries {} chunks but references {}",
+                chunks.len(),
+                referenced.len()
+            )));
+        }
+        Ok(Item {
+            key,
+            table: table.into(),
+            priority,
+            chunks,
+            offset: 0,
+            length,
+            times_sampled: 0,
+            columns: Some(columns),
         })
     }
 
@@ -91,10 +310,75 @@ impl Item {
         self.chunks.iter().map(|c| c.encoded_len()).sum()
     }
 
-    /// Decode exactly the steps this item spans: one tensor per signature
-    /// field, each with leading axis `length`. Performed entirely outside
-    /// table locks (the caller holds `Arc<Chunk>`s).
+    /// Decode the data this item references: one tensor per field/column,
+    /// in order. Flat items yield one tensor per signature field with
+    /// leading axis `length`; trajectory items yield one tensor per column
+    /// with a per-column leading axis (absent when squeezed). Performed
+    /// entirely outside table locks (the caller holds `Arc<Chunk>`s).
     pub fn materialize(&self) -> Result<Vec<Tensor>> {
+        if let Some(cols) = &self.columns {
+            return Ok(self
+                .materialize_trajectory(cols)?
+                .into_iter()
+                .map(|(_, t)| t)
+                .collect());
+        }
+        self.materialize_flat()
+    }
+
+    /// Like [`Item::materialize`], but with column names attached:
+    /// trajectory items use their writer-side column names, flat items the
+    /// positional `field_{i}` names of [`crate::core::tensor::Signature`].
+    pub fn materialize_columns(&self) -> Result<Vec<(String, Tensor)>> {
+        if let Some(cols) = &self.columns {
+            return self.materialize_trajectory(cols);
+        }
+        Ok(self
+            .materialize_flat()?
+            .into_iter()
+            .enumerate()
+            .map(|(i, t)| (format!("field_{i}"), t))
+            .collect())
+    }
+
+    /// Per-column gather: decode each slice run from its (single-column)
+    /// chunk, concatenate along the time axis, squeeze if requested.
+    fn materialize_trajectory(
+        &self,
+        cols: &[TrajectoryColumn],
+    ) -> Result<Vec<(String, Tensor)>> {
+        let by_key: HashMap<u64, &Arc<Chunk>> =
+            self.chunks.iter().map(|c| (c.key, c)).collect();
+        let mut out = Vec::with_capacity(cols.len());
+        for col in cols {
+            let mut parts = Vec::with_capacity(col.slices.len());
+            for s in &col.slices {
+                let chunk = by_key
+                    .get(&s.chunk_key)
+                    .ok_or(Error::ChunkNotFound(s.chunk_key))?;
+                let mut rows = chunk.decode_rows(s.offset, s.length)?;
+                if rows.len() != 1 {
+                    return Err(Error::Decode(format!(
+                        "trajectory chunk {} decoded to {} fields, expected 1",
+                        s.chunk_key,
+                        rows.len()
+                    )));
+                }
+                parts.push(rows.pop().expect("one field"));
+            }
+            let stacked = concat_rows(&parts)?;
+            let tensor = if col.squeeze {
+                stacked.squeeze_leading()?
+            } else {
+                stacked
+            };
+            out.push((col.name.clone(), tensor));
+        }
+        Ok(out)
+    }
+
+    /// Flat-span decoding (the legacy representation).
+    fn materialize_flat(&self) -> Result<Vec<Tensor>> {
         // Fast path: single chunk.
         if self.chunks.len() == 1 {
             return self.chunks[0].decode_rows(self.offset, self.length);
@@ -222,6 +506,179 @@ mod tests {
         let out = item.materialize().unwrap();
         assert_eq!(out[0].shape(), &[3, 1]);
         assert_eq!(out[0].to_f32().unwrap(), vec![2., 3., 4.]);
+    }
+
+    fn slice(chunk_key: u64, offset: usize, length: usize) -> ChunkSlice {
+        ChunkSlice {
+            chunk_key,
+            offset,
+            length,
+        }
+    }
+
+    fn col(name: &str, slices: Vec<ChunkSlice>, squeeze: bool) -> TrajectoryColumn {
+        TrajectoryColumn {
+            name: name.into(),
+            slices,
+            squeeze,
+        }
+    }
+
+    #[test]
+    fn trajectory_validation() {
+        let a = chunk(1, 0, &[0., 1., 2., 3.]);
+        let b = chunk(2, 0, &[10., 11.]);
+        let ok = Item::new_trajectory(
+            9,
+            "t",
+            1.0,
+            vec![a.clone(), b.clone()],
+            vec![
+                col("obs", vec![slice(1, 0, 4)], false),
+                col("r", vec![slice(2, 0, 2)], false),
+            ],
+        );
+        assert!(ok.is_ok());
+        let item = ok.unwrap();
+        assert_eq!(item.length, 4, "length is the longest column");
+        assert_eq!(item.offset, 0);
+        // No columns / no slices / zero-length slice.
+        assert!(Item::new_trajectory(9, "t", 1.0, vec![a.clone()], vec![]).is_err());
+        assert!(Item::new_trajectory(
+            9,
+            "t",
+            1.0,
+            vec![a.clone()],
+            vec![col("obs", vec![], false)]
+        )
+        .is_err());
+        assert!(Item::new_trajectory(
+            9,
+            "t",
+            1.0,
+            vec![a.clone()],
+            vec![col("obs", vec![slice(1, 0, 0)], false)]
+        )
+        .is_err());
+        // Unknown chunk key.
+        assert!(Item::new_trajectory(
+            9,
+            "t",
+            1.0,
+            vec![a.clone()],
+            vec![col("obs", vec![slice(99, 0, 1)], false)]
+        )
+        .is_err());
+        // Span exceeds the chunk.
+        assert!(Item::new_trajectory(
+            9,
+            "t",
+            1.0,
+            vec![a.clone()],
+            vec![col("obs", vec![slice(1, 3, 2)], false)]
+        )
+        .is_err());
+        // Squeeze over more than one step.
+        assert!(Item::new_trajectory(
+            9,
+            "t",
+            1.0,
+            vec![a.clone()],
+            vec![col("obs", vec![slice(1, 0, 2)], true)]
+        )
+        .is_err());
+        // Carried-but-unreferenced chunk.
+        assert!(Item::new_trajectory(
+            9,
+            "t",
+            1.0,
+            vec![a.clone(), b.clone()],
+            vec![col("obs", vec![slice(1, 0, 4)], false)]
+        )
+        .is_err());
+        // Multi-field chunks cannot back a trajectory column.
+        let multi = Arc::new(
+            Chunk::from_steps(
+                7,
+                0,
+                &[vec![
+                    Tensor::from_f32(&[1], &[0.]).unwrap(),
+                    Tensor::from_f32(&[1], &[1.]).unwrap(),
+                ]],
+                Compression::None,
+            )
+            .unwrap(),
+        );
+        assert!(Item::new_trajectory(
+            9,
+            "t",
+            1.0,
+            vec![multi],
+            vec![col("obs", vec![slice(7, 0, 1)], false)]
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn trajectory_materializes_per_column() {
+        // Column "obs" gathers a non-contiguous pick (rows 0 and 2-3 of one
+        // chunk plus row 1 of another); column "last" squeezes one step.
+        let a = chunk(1, 0, &[0., 1., 2., 3.]);
+        let b = chunk(2, 4, &[4., 5.]);
+        let item = Item::new_trajectory(
+            9,
+            "t",
+            1.0,
+            vec![a, b],
+            vec![
+                col(
+                    "obs",
+                    vec![slice(1, 0, 1), slice(1, 2, 2), slice(2, 1, 1)],
+                    false,
+                ),
+                col("last", vec![slice(2, 0, 1)], true),
+            ],
+        )
+        .unwrap();
+        assert_eq!(item.length, 4);
+        let cols = item.materialize_columns().unwrap();
+        assert_eq!(cols.len(), 2);
+        assert_eq!(cols[0].0, "obs");
+        assert_eq!(cols[0].1.shape(), &[4, 1]);
+        assert_eq!(cols[0].1.to_f32().unwrap(), vec![0., 2., 3., 5.]);
+        assert_eq!(cols[1].0, "last");
+        assert_eq!(cols[1].1.shape(), &[1], "squeezed: no time axis");
+        assert_eq!(cols[1].1.to_f32().unwrap(), vec![4.]);
+        // The flat view matches, names dropped.
+        let flat = item.materialize().unwrap();
+        assert_eq!(flat[0].to_f32().unwrap(), vec![0., 2., 3., 5.]);
+        assert_eq!(flat[1].shape(), &[1]);
+    }
+
+    #[test]
+    fn column_list_codec_roundtrip() {
+        for cols in [
+            None,
+            Some(vec![
+                col("obs", vec![slice(1, 0, 3), slice(2, 4, 2)], false),
+                col("act", vec![slice(3, 1, 1)], true),
+            ]),
+        ] {
+            let mut buf = Vec::new();
+            TrajectoryColumn::encode_list(&cols, &mut buf).unwrap();
+            let back =
+                TrajectoryColumn::decode_list(&mut std::io::Cursor::new(buf)).unwrap();
+            assert_eq!(back, cols);
+        }
+    }
+
+    #[test]
+    fn flat_items_report_positional_column_names() {
+        let c = chunk(1, 0, &[0., 1.]);
+        let item = Item::new(1, "t", 1.0, vec![c], 0, 2).unwrap();
+        let cols = item.materialize_columns().unwrap();
+        assert_eq!(cols[0].0, "field_0");
+        assert_eq!(cols[0].1.shape(), &[2, 1]);
     }
 
     #[test]

@@ -273,6 +273,19 @@ impl Tensor {
         Ok(out)
     }
 
+    /// Drop a leading axis of size 1: `[1, d...] -> [d...]`. Used by
+    /// squeezed trajectory columns, where a single referenced step
+    /// materializes without a time axis.
+    pub fn squeeze_leading(&self) -> Result<Tensor> {
+        match self.shape.first() {
+            Some(1) => Tensor::from_bytes(self.dtype, self.shape[1..].to_vec(), self.data.clone()),
+            Some(n) => Err(Error::InvalidArgument(format!(
+                "squeeze_leading on leading dim {n} (must be 1)"
+            ))),
+            None => Err(Error::InvalidArgument("squeeze_leading of scalar".into())),
+        }
+    }
+
     /// Slice rows `[start, start+len)` along the leading axis (an Item's
     /// offset/length view into a chunk column, Fig. 3).
     pub fn slice_rows(&self, start: usize, len: usize) -> Result<Tensor> {
@@ -445,6 +458,20 @@ mod tests {
         assert_eq!(s.to_f32().unwrap(), vec![1., 2., 3., 4.]);
         let parts = s.unstack().unwrap();
         assert_eq!(parts, vec![a, b]);
+    }
+
+    #[test]
+    fn squeeze_leading_drops_unit_axis() {
+        let t = Tensor::from_f32(&[1, 3], &[1., 2., 3.]).unwrap();
+        let s = t.squeeze_leading().unwrap();
+        assert_eq!(s.shape(), &[3]);
+        assert_eq!(s.to_f32().unwrap(), vec![1., 2., 3.]);
+        // Leading dim 1 of a rank-1 tensor squeezes to a scalar.
+        let one = Tensor::from_f32(&[1], &[7.]).unwrap();
+        assert_eq!(one.squeeze_leading().unwrap().shape(), &[] as &[usize]);
+        // Non-unit leading dims and scalars are rejected.
+        assert!(Tensor::from_f32(&[2], &[1., 2.]).unwrap().squeeze_leading().is_err());
+        assert!(Tensor::scalar_f32(1.0).squeeze_leading().is_err());
     }
 
     #[test]

@@ -21,11 +21,14 @@ pub mod util;
 
 pub use crate::core::chunk::{Chunk, ChunkBuilder, Compression};
 pub use crate::core::chunk_store::ChunkStore;
-pub use crate::core::item::{Item, SampledItem};
+pub use crate::core::item::{ChunkSlice, Item, SampledItem, TrajectoryColumn};
 pub use crate::core::rate_limiter::{RateLimiter, RateLimiterConfig};
 pub use crate::core::selector::SelectorConfig;
 pub use crate::core::table::{default_shard_count, ShardedTable, Table, TableConfig, TableInfo};
 pub use crate::core::tensor::{DType, Signature, Tensor, TensorSpec};
-pub use crate::client::{Client, ClientPool, Dataset, Sample, Sampler, SamplerOptions, Writer, WriterOptions};
+pub use crate::client::{
+    Client, ClientPool, Dataset, Sample, Sampler, SamplerOptions, StepRef, Trajectory,
+    TrajectoryWriter, TrajectoryWriterOptions, Writer, WriterOptions,
+};
 pub use crate::error::{Error, Result};
 pub use crate::net::{Server, ServerBuilder};

@@ -418,7 +418,10 @@ fn accept_loop(mut listener: Box<dyn TransportListener>, inner: Arc<ServerInner>
 }
 
 /// Build a table `Item` from its wire form, resolving chunk references from
-/// the per-connection pending set or the global store.
+/// the per-connection pending set or the global store. Trajectory items
+/// (v2 frames) are validated per column against the resolved chunks:
+/// `Item::new_trajectory` rejects slices that overrun a chunk, reference a
+/// chunk the item does not carry, or gather from multi-field chunks.
 fn resolve_item(
     inner: &ServerInner,
     pending: &HashMap<u64, Arc<Chunk>>,
@@ -435,14 +438,23 @@ fn resolve_item(
                 .unwrap_or_else(|| inner.store.get(*k))
         })
         .collect::<Result<Vec<_>>>()?;
-    Item::new(
-        wire.key,
-        wire.table.clone(),
-        wire.priority,
-        chunks,
-        wire.offset as usize,
-        wire.length as usize,
-    )
+    match &wire.columns {
+        Some(columns) => Item::new_trajectory(
+            wire.key,
+            wire.table.clone(),
+            wire.priority,
+            chunks,
+            columns.clone(),
+        ),
+        None => Item::new(
+            wire.key,
+            wire.table.clone(),
+            wire.priority,
+            chunks,
+            wire.offset as usize,
+            wire.length as usize,
+        ),
+    }
 }
 
 /// Convert a sampled item to its wire form plus its chunk set.
@@ -456,6 +468,7 @@ fn sampled_to_wire(s: &crate::core::item::SampledItem) -> (WireSampleInfo, Vec<A
             offset: s.item.offset as u64,
             length: s.item.length as u64,
             times_sampled: s.item.times_sampled,
+            columns: s.item.columns.clone(),
         },
         probability: s.probability,
         table_size: s.table_size as u64,
@@ -667,6 +680,7 @@ mod tests {
                 offset: 0,
                 length: 1,
                 times_sampled: 0,
+                columns: None,
             },
             timeout_ms: 1000,
         }
@@ -721,6 +735,7 @@ mod tests {
                 offset: 0,
                 length: 1,
                 times_sampled: 0,
+                columns: None,
             },
             timeout_ms: 1000,
         })

@@ -15,6 +15,7 @@
 //! deduplication within a sample response.
 
 use crate::core::chunk::Chunk;
+use crate::core::item::TrajectoryColumn;
 use crate::core::rate_limiter::RateLimiterConfig;
 use crate::core::selector::SelectorConfig;
 use crate::core::table::{TableConfig, TableInfo};
@@ -27,15 +28,27 @@ use std::sync::Arc;
 pub const MAX_FRAME_LEN: usize = 1 << 30;
 
 /// Metadata of an item on the wire (both directions).
+///
+/// Two frame versions exist (DESIGN.md §9): v1 carries the flat
+/// `(chunk_keys, offset, length)` span only; v2 appends an optional
+/// per-column slice list (serialized by
+/// [`TrajectoryColumn::encode_list`], the codec the checkpoint format
+/// shares). The encoder emits a v1 frame whenever `columns` is `None`, so
+/// legacy traffic keeps the original byte layout and the v1 decoder stays
+/// exercised.
 #[derive(Clone, Debug, PartialEq)]
 pub struct WireItem {
     pub key: u64,
     pub table: String,
     pub priority: f64,
+    /// Referenced chunks. For trajectory items: the deduplicated union of
+    /// every column's slice keys, in first-use order.
     pub chunk_keys: Vec<u64>,
     pub offset: u64,
     pub length: u64,
     pub times_sampled: u32,
+    /// Per-column slices (`Some` = trajectory item, v2 frame).
+    pub columns: Option<Vec<TrajectoryColumn>>,
 }
 
 /// One sampled item entry in a [`Message::SampleData`] response.
@@ -133,12 +146,28 @@ const TAG_MUTATE: u8 = 4;
 const TAG_RESET: u8 = 5;
 const TAG_INFO_REQUEST: u8 = 6;
 const TAG_CHECKPOINT: u8 = 7;
+/// v2 of `CreateItem`: the item carries per-column trajectory slices.
+const TAG_CREATE_ITEM_V2: u8 = 8;
 const TAG_ACK: u8 = 128;
 const TAG_ERR: u8 = 129;
 const TAG_SAMPLE_DATA: u8 = 130;
 const TAG_INFO: u8 = 131;
+/// v2 of `SampleData`: at least one item carries trajectory slices.
+const TAG_SAMPLE_DATA_V2: u8 = 132;
 
+/// v1 item layout (no columns). Callers route items with columns to
+/// [`put_wire_item_v2`]; encoding them here would silently drop the
+/// trajectory, so that is a hard error.
 fn put_wire_item<W: Write>(w: &mut W, item: &WireItem) -> Result<()> {
+    if item.columns.is_some() {
+        return Err(Error::InvalidArgument(
+            "trajectory item on a v1 frame".into(),
+        ));
+    }
+    put_wire_item_common(w, item)
+}
+
+fn put_wire_item_common<W: Write>(w: &mut W, item: &WireItem) -> Result<()> {
     put_u64(w, item.key)?;
     put_string(w, &item.table)?;
     put_f64(w, item.priority)?;
@@ -150,6 +179,12 @@ fn put_wire_item<W: Write>(w: &mut W, item: &WireItem) -> Result<()> {
     put_u64(w, item.length)?;
     put_u32(w, item.times_sampled)?;
     Ok(())
+}
+
+/// v2 item layout: the v1 fields followed by an optional column list.
+fn put_wire_item_v2<W: Write>(w: &mut W, item: &WireItem) -> Result<()> {
+    put_wire_item_common(w, item)?;
+    TrajectoryColumn::encode_list(&item.columns, w)
 }
 
 fn get_wire_item<R: Read>(r: &mut R) -> Result<WireItem> {
@@ -169,7 +204,14 @@ fn get_wire_item<R: Read>(r: &mut R) -> Result<WireItem> {
         offset: get_u64(r)?,
         length: get_u64(r)?,
         times_sampled: get_u32(r)?,
+        columns: None,
     })
+}
+
+fn get_wire_item_v2<R: Read>(r: &mut R) -> Result<WireItem> {
+    let mut item = get_wire_item(r)?;
+    item.columns = TrajectoryColumn::decode_list(r)?;
+    Ok(item)
 }
 
 impl Message {
@@ -186,9 +228,15 @@ impl Message {
             }
             Message::CreateItem { id, item, timeout_ms } => {
                 put_u64(&mut b, *id)?;
-                put_wire_item(&mut b, item)?;
-                put_u64(&mut b, *timeout_ms)?;
-                TAG_CREATE_ITEM
+                if item.columns.is_some() {
+                    put_wire_item_v2(&mut b, item)?;
+                    put_u64(&mut b, *timeout_ms)?;
+                    TAG_CREATE_ITEM_V2
+                } else {
+                    put_wire_item(&mut b, item)?;
+                    put_u64(&mut b, *timeout_ms)?;
+                    TAG_CREATE_ITEM
+                }
             }
             Message::SampleRequest {
                 id,
@@ -246,10 +294,17 @@ impl Message {
                 TAG_ERR
             }
             Message::SampleData { id, infos, chunks } => {
+                // One trajectory item upgrades the whole frame to v2 (the
+                // v2 item layout still carries flat items unchanged).
+                let v2 = infos.iter().any(|i| i.item.columns.is_some());
                 put_u64(&mut b, *id)?;
                 put_u32(&mut b, infos.len() as u32)?;
                 for info in infos {
-                    put_wire_item(&mut b, &info.item)?;
+                    if v2 {
+                        put_wire_item_v2(&mut b, &info.item)?;
+                    } else {
+                        put_wire_item(&mut b, &info.item)?;
+                    }
                     put_f64(&mut b, info.probability)?;
                     put_u64(&mut b, info.table_size)?;
                 }
@@ -257,7 +312,11 @@ impl Message {
                 for c in chunks {
                     c.encode(&mut b)?;
                 }
-                TAG_SAMPLE_DATA
+                if v2 {
+                    TAG_SAMPLE_DATA_V2
+                } else {
+                    TAG_SAMPLE_DATA
+                }
             }
             Message::Info { id, tables } => {
                 put_u64(&mut b, *id)?;
@@ -295,6 +354,11 @@ impl Message {
             TAG_CREATE_ITEM => Message::CreateItem {
                 id: get_u64(&mut r)?,
                 item: get_wire_item(&mut r)?,
+                timeout_ms: get_u64(&mut r)?,
+            },
+            TAG_CREATE_ITEM_V2 => Message::CreateItem {
+                id: get_u64(&mut r)?,
+                item: get_wire_item_v2(&mut r)?,
                 timeout_ms: get_u64(&mut r)?,
             },
             TAG_SAMPLE_REQUEST => Message::SampleRequest {
@@ -340,7 +404,7 @@ impl Message {
                 code: get_u8(&mut r)?,
                 message: get_string(&mut r)?,
             },
-            TAG_SAMPLE_DATA => {
+            TAG_SAMPLE_DATA | TAG_SAMPLE_DATA_V2 => {
                 let id = get_u64(&mut r)?;
                 let ni = get_u32(&mut r)? as usize;
                 if ni > 1 << 20 {
@@ -348,8 +412,13 @@ impl Message {
                 }
                 let infos = (0..ni)
                     .map(|_| {
+                        let item = if tag == TAG_SAMPLE_DATA_V2 {
+                            get_wire_item_v2(&mut r)?
+                        } else {
+                            get_wire_item(&mut r)?
+                        };
                         Ok(WireSampleInfo {
-                            item: get_wire_item(&mut r)?,
+                            item,
                             probability: get_f64(&mut r)?,
                             table_size: get_u64(&mut r)?,
                         })
@@ -486,6 +555,7 @@ pub fn decode_table_config<R: Read>(r: &mut R) -> Result<TableConfig> {
 mod tests {
     use super::*;
     use crate::core::chunk::Compression;
+    use crate::core::item::ChunkSlice;
     use crate::core::tensor::Tensor;
 
     fn mk_chunk(key: u64) -> Arc<Chunk> {
@@ -532,6 +602,7 @@ mod tests {
                 offset: 1,
                 length: 9,
                 times_sampled: 0,
+                columns: None,
             },
             timeout_ms: 500,
         };
@@ -570,6 +641,7 @@ mod tests {
                     offset: 0,
                     length: 2,
                     times_sampled: 3,
+                    columns: None,
                 },
                 probability: 0.25,
                 table_size: 100,
@@ -696,6 +768,7 @@ mod tests {
                     offset: 0,
                     length: 2,
                     times_sampled: 0,
+                    columns: None,
                 },
                 probability: 0.5,
                 table_size: 4,
@@ -756,6 +829,26 @@ mod tests {
     #[test]
     fn wire_roundtrip_property() {
         crate::util::proptest::forall("wire item roundtrip", |rng| {
+            // Half the cases carry a trajectory column list (v2 layout).
+            let columns = if rng.gen_range(2) == 0 {
+                None
+            } else {
+                Some(
+                    (0..rng.gen_range(4) + 1)
+                        .map(|c| TrajectoryColumn {
+                            name: format!("col_{c}"),
+                            squeeze: rng.gen_range(2) == 0,
+                            slices: (0..rng.gen_range(5) + 1)
+                                .map(|_| ChunkSlice {
+                                    chunk_key: rng.next_u64(),
+                                    offset: rng.gen_range(100) as usize,
+                                    length: rng.gen_range(100) as usize + 1,
+                                })
+                                .collect(),
+                        })
+                        .collect(),
+                )
+            };
             let item = WireItem {
                 key: rng.next_u64(),
                 table: format!("table_{}", rng.gen_range(100)),
@@ -764,15 +857,106 @@ mod tests {
                 offset: rng.gen_range(1000),
                 length: rng.gen_range(1000) + 1,
                 times_sampled: rng.gen_range(100) as u32,
+                columns,
             };
             let mut buf = Vec::new();
-            put_wire_item(&mut buf, &item).unwrap();
-            let back = get_wire_item(&mut std::io::Cursor::new(buf)).unwrap();
+            put_wire_item_v2(&mut buf, &item).unwrap();
+            let back = get_wire_item_v2(&mut std::io::Cursor::new(buf)).unwrap();
             if back == item {
                 Ok(())
             } else {
                 Err(format!("{back:?} != {item:?}"))
             }
         });
+    }
+
+    fn trajectory_item() -> WireItem {
+        WireItem {
+            key: 7,
+            table: "traj".into(),
+            priority: 2.0,
+            chunk_keys: vec![11, 12],
+            offset: 0,
+            length: 3,
+            times_sampled: 0,
+            columns: Some(vec![
+                TrajectoryColumn {
+                    name: "obs".into(),
+                    squeeze: false,
+                    slices: vec![
+                        ChunkSlice { chunk_key: 11, offset: 0, length: 2 },
+                        ChunkSlice { chunk_key: 12, offset: 1, length: 1 },
+                    ],
+                },
+                TrajectoryColumn {
+                    name: "last".into(),
+                    squeeze: true,
+                    slices: vec![ChunkSlice { chunk_key: 12, offset: 0, length: 1 }],
+                },
+            ]),
+        }
+    }
+
+    #[test]
+    fn trajectory_create_item_uses_v2_frame_and_roundtrips() {
+        let msg = Message::CreateItem {
+            id: 3,
+            item: trajectory_item(),
+            timeout_ms: 250,
+        };
+        let (tag, _) = msg.encode_body().unwrap();
+        assert_eq!(tag, TAG_CREATE_ITEM_V2);
+        match roundtrip(&msg) {
+            Message::CreateItem { item, timeout_ms, .. } => {
+                assert_eq!(item, trajectory_item());
+                assert_eq!(timeout_ms, 250);
+            }
+            other => panic!("wrong message {other:?}"),
+        }
+        // A flat item still encodes as the v1 frame — byte layout unchanged.
+        let flat = Message::CreateItem {
+            id: 3,
+            item: WireItem { columns: None, ..trajectory_item() },
+            timeout_ms: 250,
+        };
+        let (tag, _) = flat.encode_body().unwrap();
+        assert_eq!(tag, TAG_CREATE_ITEM);
+    }
+
+    #[test]
+    fn trajectory_sample_data_uses_v2_frame_and_roundtrips() {
+        let msg = Message::SampleData {
+            id: 9,
+            infos: vec![
+                WireSampleInfo {
+                    item: trajectory_item(),
+                    probability: 0.5,
+                    table_size: 3,
+                },
+                // Mixed batch: a flat item rides the v2 frame unchanged.
+                WireSampleInfo {
+                    item: WireItem { columns: None, ..trajectory_item() },
+                    probability: 0.25,
+                    table_size: 3,
+                },
+            ],
+            chunks: vec![mk_chunk(11)],
+        };
+        let (tag, _) = msg.encode_body().unwrap();
+        assert_eq!(tag, TAG_SAMPLE_DATA_V2);
+        match roundtrip(&msg) {
+            Message::SampleData { infos, chunks, .. } => {
+                assert_eq!(infos[0].item, trajectory_item());
+                assert!(infos[1].item.columns.is_none());
+                assert_eq!(chunks[0].key, 11);
+            }
+            other => panic!("wrong message {other:?}"),
+        }
+    }
+
+    #[test]
+    fn v1_frame_rejects_trajectory_items() {
+        let mut buf = Vec::new();
+        assert!(put_wire_item(&mut buf, &trajectory_item()).is_err());
     }
 }

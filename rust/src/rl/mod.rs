@@ -238,6 +238,7 @@ mod tests {
             times_sampled: 1,
             probability: 0.5,
             table_size: 2,
+            column_names: (0..stacked.len()).map(|i| format!("field_{i}")).collect(),
             data: stacked,
         };
         assert_eq!(Transition::from_sample(&sample).unwrap(), t);
@@ -275,6 +276,7 @@ mod tests {
             probability: prob,
             table_size: n,
             data: vec![],
+            column_names: vec![],
         };
         let samples = vec![mk(0.5, 100), mk(0.01, 100)];
         let w = importance_weights(&samples, 0.6);

@@ -4,7 +4,7 @@
 //! length is 1" (no sharing), "clients solely generate load as fast as
 //! possible". Clients here are threads over loopback TCP (DESIGN.md §2).
 
-use crate::client::{Client, SamplerOptions, WriterOptions};
+use crate::client::{Client, SamplerOptions, Trajectory, TrajectoryWriterOptions, WriterOptions};
 use crate::core::chunk::Compression;
 use crate::core::tensor::Tensor;
 use crate::util::rng::Pcg32;
@@ -43,6 +43,59 @@ impl Throughput {
     }
 }
 
+/// Shared counters every fleet client reports into.
+pub struct FleetCtl {
+    pub items: AtomicU64,
+    pub bytes: AtomicU64,
+    pub stop: AtomicBool,
+}
+
+impl FleetCtl {
+    /// Record one completed operation of `op_bytes` payload.
+    pub fn count(&self, op_bytes: u64) {
+        self.items.fetch_add(1, Ordering::Relaxed);
+        self.bytes.fetch_add(op_bytes, Ordering::Relaxed);
+    }
+
+    /// Whether the measurement window has closed.
+    pub fn stopped(&self) -> bool {
+        self.stop.load(Ordering::Relaxed)
+    }
+}
+
+/// Spawn `num_clients` threads running `client_fn(client_index, ctl)`,
+/// let them work for `duration`, signal stop, join, and report aggregate
+/// throughput. All the `run_*_clients` harnesses share this scaffold.
+fn run_client_fleet<F>(num_clients: usize, duration: Duration, client_fn: F) -> Throughput
+where
+    F: Fn(usize, &FleetCtl) + Send + Sync + 'static,
+{
+    let ctl = Arc::new(FleetCtl {
+        items: AtomicU64::new(0),
+        bytes: AtomicU64::new(0),
+        stop: AtomicBool::new(false),
+    });
+    let client_fn = Arc::new(client_fn);
+    let start = Instant::now();
+    let handles: Vec<_> = (0..num_clients)
+        .map(|c| {
+            let ctl = ctl.clone();
+            let client_fn = client_fn.clone();
+            std::thread::spawn(move || (*client_fn)(c, &ctl))
+        })
+        .collect();
+    std::thread::sleep(duration);
+    ctl.stop.store(true, Ordering::Relaxed);
+    for h in handles {
+        let _ = h.join();
+    }
+    Throughput {
+        items: ctl.items.load(Ordering::Relaxed),
+        bytes: ctl.bytes.load(Ordering::Relaxed),
+        wall: start.elapsed(),
+    }
+}
+
 /// Run `num_clients` insert clients against `addr` for `duration`, each
 /// writing random `floats`-element steps to `tables[i % len]` (round-robin
 /// table assignment reproduces Appendix B when several tables are given).
@@ -53,57 +106,135 @@ pub fn run_insert_clients(
     floats: usize,
     duration: Duration,
 ) -> Throughput {
-    let items = Arc::new(AtomicU64::new(0));
-    let bytes = Arc::new(AtomicU64::new(0));
-    let stop = Arc::new(AtomicBool::new(false));
-    let start = Instant::now();
-    let mut handles = Vec::new();
-    for c in 0..num_clients {
-        let addr = addr.to_string();
-        let table = tables[c % tables.len()].clone();
-        let items = items.clone();
-        let bytes = bytes.clone();
-        let stop = stop.clone();
-        handles.push(std::thread::spawn(move || {
-            let Ok(client) = Client::connect(addr) else {
-                return;
-            };
-            // chunk_length=1, no compression benefit on random data — use
-            // None to measure transport/table limits, not zstd.
-            let Ok(mut w) = client.writer(
-                WriterOptions::default()
-                    .with_chunk_length(1)
-                    .with_compression(Compression::None)
-                    .with_max_in_flight_items(32),
-            ) else {
-                return;
-            };
-            let mut rng = Pcg32::new(0xBE9C4, c as u64);
-            let step_bytes = (floats * 4) as u64;
-            while !stop.load(Ordering::Relaxed) {
-                let step = random_step(floats, &mut rng);
-                if w.append(step).is_err() {
-                    break;
-                }
-                if w.create_item(&table, 1, 1.0).is_err() {
-                    break;
-                }
-                items.fetch_add(1, Ordering::Relaxed);
-                bytes.fetch_add(step_bytes, Ordering::Relaxed);
+    let addr = addr.to_string();
+    let tables = tables.to_vec();
+    run_client_fleet(num_clients, duration, move |c, ctl| {
+        let Ok(client) = Client::connect(addr.as_str()) else {
+            return;
+        };
+        // chunk_length=1, no compression benefit on random data — use
+        // None to measure transport/table limits, not zstd.
+        let Ok(mut w) = client.writer(
+            WriterOptions::default()
+                .with_chunk_length(1)
+                .with_compression(Compression::None)
+                .with_max_in_flight_items(32),
+        ) else {
+            return;
+        };
+        let table = &tables[c % tables.len()];
+        let mut rng = Pcg32::new(0xBE9C4, c as u64);
+        let step_bytes = (floats * 4) as u64;
+        while !ctl.stopped() {
+            let step = random_step(floats, &mut rng);
+            if w.append(step).is_err() || w.create_item(table, 1, 1.0).is_err() {
+                break;
             }
-            let _ = w.flush();
-        }));
-    }
-    std::thread::sleep(duration);
-    stop.store(true, Ordering::Relaxed);
-    for h in handles {
-        let _ = h.join();
-    }
-    Throughput {
-        items: items.load(Ordering::Relaxed),
-        bytes: bytes.load(Ordering::Relaxed),
-        wall: start.elapsed(),
-    }
+            ctl.count(step_bytes);
+        }
+        let _ = w.flush();
+    })
+}
+
+/// Run `num_clients` column-oriented insert clients: each appends a
+/// structured step of `num_columns` named columns (the `floats` payload
+/// split evenly across them) and creates one single-step trajectory item
+/// per append. The legacy-writer counterpart of this workload is
+/// [`run_row_insert_clients`].
+pub fn run_trajectory_insert_clients(
+    addr: &str,
+    table: &str,
+    num_clients: usize,
+    floats: usize,
+    num_columns: usize,
+    duration: Duration,
+) -> Throughput {
+    assert!(num_columns >= 1);
+    let addr = addr.to_string();
+    let table = table.to_string();
+    let per_col = (floats / num_columns).max(1);
+    let col_names: Vec<String> = (0..num_columns).map(|c| format!("col_{c}")).collect();
+    run_client_fleet(num_clients, duration, move |c, ctl| {
+        let Ok(client) = Client::connect(addr.as_str()) else {
+            return;
+        };
+        let Ok(mut w) = client.trajectory_writer(
+            TrajectoryWriterOptions::default()
+                .with_chunk_length(1)
+                .with_compression(Compression::None)
+                .with_max_in_flight_items(32),
+        ) else {
+            return;
+        };
+        let mut rng = Pcg32::new(0xBE9C5, c as u64);
+        let step_bytes = (per_col * num_columns * 4) as u64;
+        while !ctl.stopped() {
+            let step: Vec<(&str, Tensor)> = col_names
+                .iter()
+                .map(|name| {
+                    let vals: Vec<f32> = (0..per_col).map(|_| rng.gen_f32()).collect();
+                    (name.as_str(), Tensor::from_f32(&[per_col], &vals).unwrap())
+                })
+                .collect();
+            let Ok(refs) = w.append(step) else {
+                break;
+            };
+            let mut t = Trajectory::new();
+            for r in &refs {
+                t = t.column(std::slice::from_ref(r));
+            }
+            if w.create_item(&table, 1.0, t).is_err() {
+                break;
+            }
+            ctl.count(step_bytes);
+        }
+        let _ = w.flush();
+    })
+}
+
+/// Run `num_clients` legacy-writer insert clients appending
+/// `num_columns`-field rows (the row-group analogue of
+/// [`run_trajectory_insert_clients`], for apples-to-apples comparisons).
+pub fn run_row_insert_clients(
+    addr: &str,
+    table: &str,
+    num_clients: usize,
+    floats: usize,
+    num_columns: usize,
+    duration: Duration,
+) -> Throughput {
+    assert!(num_columns >= 1);
+    let addr = addr.to_string();
+    let table = table.to_string();
+    let per_col = (floats / num_columns).max(1);
+    run_client_fleet(num_clients, duration, move |c, ctl| {
+        let Ok(client) = Client::connect(addr.as_str()) else {
+            return;
+        };
+        let Ok(mut w) = client.writer(
+            WriterOptions::default()
+                .with_chunk_length(1)
+                .with_compression(Compression::None)
+                .with_max_in_flight_items(32),
+        ) else {
+            return;
+        };
+        let mut rng = Pcg32::new(0xBE9C6, c as u64);
+        let step_bytes = (per_col * num_columns * 4) as u64;
+        while !ctl.stopped() {
+            let step: Vec<Tensor> = (0..num_columns)
+                .map(|_| {
+                    let vals: Vec<f32> = (0..per_col).map(|_| rng.gen_f32()).collect();
+                    Tensor::from_f32(&[per_col], &vals).unwrap()
+                })
+                .collect();
+            if w.append(step).is_err() || w.create_item(&table, 1, 1.0).is_err() {
+                break;
+            }
+            ctl.count(step_bytes);
+        }
+        let _ = w.flush();
+    })
 }
 
 /// Run `num_clients` sample clients against a pre-filled `table`.
@@ -115,53 +246,30 @@ pub fn run_sample_clients(
     duration: Duration,
     batch_size: u32,
 ) -> Throughput {
-    let items = Arc::new(AtomicU64::new(0));
-    let bytes = Arc::new(AtomicU64::new(0));
-    let stop = Arc::new(AtomicBool::new(false));
-    let start = Instant::now();
-    let mut handles = Vec::new();
-    for _ in 0..num_clients {
-        let addr = addr.to_string();
-        let table = table.to_string();
-        let items = items.clone();
-        let bytes = bytes.clone();
-        let stop = stop.clone();
-        handles.push(std::thread::spawn(move || {
-            let Ok(client) = Client::connect(addr) else {
-                return;
-            };
-            let Ok(mut s) = client.sampler(
-                SamplerOptions::new(table)
-                    .with_workers(1)
-                    .with_max_in_flight(4)
-                    .with_batch_size(batch_size)
-                    .with_timeout_ms(5_000),
-            ) else {
-                return;
-            };
-            let step_bytes = (floats * 4) as u64;
-            while !stop.load(Ordering::Relaxed) {
-                match s.next_sample() {
-                    Ok(_) => {
-                        items.fetch_add(1, Ordering::Relaxed);
-                        bytes.fetch_add(step_bytes, Ordering::Relaxed);
-                    }
-                    Err(_) => break,
-                }
+    let addr = addr.to_string();
+    let table = table.to_string();
+    run_client_fleet(num_clients, duration, move |_c, ctl| {
+        let Ok(client) = Client::connect(addr.as_str()) else {
+            return;
+        };
+        let Ok(mut s) = client.sampler(
+            SamplerOptions::new(table.as_str())
+                .with_workers(1)
+                .with_max_in_flight(4)
+                .with_batch_size(batch_size)
+                .with_timeout_ms(5_000),
+        ) else {
+            return;
+        };
+        let step_bytes = (floats * 4) as u64;
+        while !ctl.stopped() {
+            match s.next_sample() {
+                Ok(_) => ctl.count(step_bytes),
+                Err(_) => break,
             }
-            s.stop();
-        }));
-    }
-    std::thread::sleep(duration);
-    stop.store(true, Ordering::Relaxed);
-    for h in handles {
-        let _ = h.join();
-    }
-    Throughput {
-        items: items.load(Ordering::Relaxed),
-        bytes: bytes.load(Ordering::Relaxed),
-        wall: start.elapsed(),
-    }
+        }
+        s.stop();
+    })
 }
 
 /// Pre-fill a table with `n` random items (server-side, no transport cost).
@@ -245,6 +353,20 @@ mod tests {
 
         let s = run_sample_clients(&addr, "t", 2, 100, Duration::from_millis(200), 8);
         assert!(s.items > 0, "sampled nothing");
+    }
+
+    #[test]
+    fn trajectory_and_row_insert_clients_measure_throughput() {
+        let server = Server::builder()
+            .table(TableConfig::uniform_replay("t", 100_000))
+            .bind("127.0.0.1:0")
+            .unwrap();
+        let addr = server.local_addr().to_string();
+        let t = run_trajectory_insert_clients(&addr, "t", 2, 64, 4, Duration::from_millis(200));
+        assert!(t.items > 0, "inserted nothing");
+        assert_eq!(t.bytes, t.items * 64 * 4);
+        let r = run_row_insert_clients(&addr, "t", 2, 64, 4, Duration::from_millis(200));
+        assert!(r.items > 0, "inserted nothing");
     }
 
     #[test]

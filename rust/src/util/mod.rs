@@ -2,6 +2,7 @@
 //! property-testing harness, and key generation.
 
 pub mod bench;
+pub mod crc32;
 pub mod proptest;
 pub mod rng;
 pub mod stats;

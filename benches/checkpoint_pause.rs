@@ -1,0 +1,208 @@
+//! Checkpoint gate-pause scaling (§3.7 vs DESIGN.md §10).
+//!
+//! The paper's checkpoint blocks *all* insert/sample/update/delete traffic
+//! while the full table serializes, so the pause grows linearly with table
+//! size. The incremental persist subsystem replaces that with a
+//! constant-time journal rotation: the gate pause should stay flat from
+//! 10k to 1M items while the legacy full-snapshot pause keeps scaling.
+//!
+//! For each table size and each mode this harness measures the
+//! steady-state checkpoint (min of several runs, a ~100-item delta since
+//! the previous one for the incremental mode):
+//!
+//! - **pause**: how long the request gate was closed
+//!   (`Server::last_checkpoint_pause`) — the number that must stay flat;
+//! - **total**: wall time of the whole checkpoint RPC (for incremental
+//!   this includes waiting for the background fsync, which happens off
+//!   the gate).
+//!
+//! Emits `BENCH_checkpoint.json`, uploaded by CI next to the fig7 and
+//! trajectory artifacts. Run: `cargo bench --bench checkpoint_pause`
+//! (REVERB_BENCH_FAST=1 for the CI quick pass).
+
+use reverb::core::chunk::{Chunk, Compression};
+use reverb::core::item::Item;
+use reverb::core::table::TableConfig;
+use reverb::net::server::{PersistMode, Server};
+use reverb::util::bench::{fast_mode, print_row};
+use reverb::Tensor;
+use std::path::Path;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+const SIZES: &[usize] = &[10_000, 100_000, 1_000_000];
+
+struct Measure {
+    pause: Duration,
+    total: Duration,
+    /// First checkpoint after the bulk load (incremental: includes the
+    /// writer catching up on the whole journal, still off the gate).
+    first_total: Duration,
+}
+
+fn shared_chunk() -> Arc<Chunk> {
+    let steps = vec![vec![Tensor::from_f32(&[4], &[1.0, 2.0, 3.0, 4.0]).unwrap()]];
+    Arc::new(Chunk::from_steps(1, 0, &steps, Compression::None).unwrap())
+}
+
+/// Measure one mode at one size. Items share a single chunk, so the cost
+/// under measurement is the per-item metadata walk/serialization — the
+/// part that scales with item count.
+fn run_mode(incremental: bool, n: usize, dir: &Path, reps: usize) -> Measure {
+    std::fs::remove_dir_all(dir).ok();
+    std::fs::create_dir_all(dir).unwrap();
+    let mut builder = Server::builder()
+        .table(TableConfig::uniform_replay("t", n + 10_000))
+        .checkpoint_dir(dir);
+    if incremental {
+        builder = builder.persist_mode(PersistMode::incremental());
+    }
+    let server = builder.serve_in_proc().unwrap();
+    let table = server.table("t").unwrap();
+    let chunk = shared_chunk();
+    for k in 1..=n as u64 {
+        table
+            .insert_or_assign(
+                Item::new(k, "t", 1.0, vec![chunk.clone()], 0, 1).unwrap(),
+                None,
+            )
+            .unwrap();
+    }
+
+    let start = Instant::now();
+    server.checkpoint().expect("first checkpoint");
+    let first_total = start.elapsed();
+
+    // Steady state: a small delta between checkpoints, min over reps.
+    let mut pause = Duration::MAX;
+    let mut total = Duration::MAX;
+    let mut next = n as u64;
+    for _ in 0..reps {
+        for _ in 0..100 {
+            next += 1;
+            table
+                .insert_or_assign(
+                    Item::new(next, "t", 1.0, vec![chunk.clone()], 0, 1).unwrap(),
+                    None,
+                )
+                .unwrap();
+        }
+        let start = Instant::now();
+        server.checkpoint().expect("steady-state checkpoint");
+        total = total.min(start.elapsed());
+        pause = pause.min(server.last_checkpoint_pause());
+    }
+
+    // Correctness spot-check: the chain restores to the live item count.
+    if incremental {
+        let live = table.size();
+        let dst = Arc::new(reverb::core::table::Table::new(TableConfig::uniform_replay(
+            "t",
+            n + 10_000,
+        )));
+        let restored = reverb::core::checkpoint::load(
+            &dir.join(reverb::persist::MANIFEST_NAME),
+            &[dst.clone()],
+            &reverb::ChunkStore::new(),
+        )
+        .expect("restore");
+        assert_eq!(restored, live, "incremental restore item count");
+    }
+    drop(server);
+    std::fs::remove_dir_all(dir).ok();
+    Measure {
+        pause,
+        total,
+        first_total,
+    }
+}
+
+fn ms(d: Duration) -> f64 {
+    d.as_secs_f64() * 1e3
+}
+
+fn main() {
+    let fast = fast_mode();
+    // Fast mode keeps the full 10k -> 1M sweep (the scaling claim needs
+    // the endpoints) but takes a single steady-state measurement per
+    // point, so the CI smoke stays a handful of snapshots.
+    let reps = if fast { 1 } else { 5 };
+    let tmp = std::env::temp_dir().join(format!("reverb_bench_ckpt_{}", std::process::id()));
+
+    println!("# Checkpoint gate pause vs table size (§3.7 vs incremental §10)");
+    println!("| items | full pause | full total | incr pause | incr total | incr 1st total |");
+    println!("|---|---|---|---|---|---|");
+    let mut rows: Vec<(usize, Measure, Measure)> = Vec::new();
+    for &n in SIZES {
+        let full = run_mode(false, n, &tmp.join("full"), reps);
+        let incr = run_mode(true, n, &tmp.join("incr"), reps);
+        print_row(&[
+            n.to_string(),
+            format!("{:.3} ms", ms(full.pause)),
+            format!("{:.3} ms", ms(full.total)),
+            format!("{:.3} ms", ms(incr.pause)),
+            format!("{:.3} ms", ms(incr.total)),
+            format!("{:.1} ms", ms(incr.first_total)),
+        ]);
+        rows.push((n, full, incr));
+    }
+
+    // Flatness: incremental pause at the largest size within 2x of the
+    // smallest size (with a 0.5 ms noise floor — "flat" means the pause
+    // stays sub-millisecond-scale no matter the table size). Legacy must
+    // keep scaling with size.
+    let floor = 0.5f64; // ms
+    let incr_small = ms(rows.first().unwrap().2.pause).max(floor);
+    let incr_large = ms(rows.last().unwrap().2.pause);
+    let incr_flat = incr_large <= 2.0 * incr_small;
+    let full_small = ms(rows.first().unwrap().1.pause).max(1e-3);
+    let full_large = ms(rows.last().unwrap().1.pause);
+    let full_scaling = full_large / full_small;
+    let legacy_scales = full_scaling > 4.0;
+
+    let results: Vec<String> = rows
+        .iter()
+        .map(|(n, full, incr)| {
+            format!(
+                "    {{\"items\": {n}, \"full_pause_ms\": {:.4}, \"full_total_ms\": {:.4}, \
+                 \"incr_pause_ms\": {:.4}, \"incr_total_ms\": {:.4}, \"incr_first_total_ms\": {:.4}}}",
+                ms(full.pause),
+                ms(full.total),
+                ms(incr.pause),
+                ms(incr.total),
+                ms(incr.first_total)
+            )
+        })
+        .collect();
+    let json = format!(
+        "{{\n  \"bench\": \"checkpoint_pause\",\n  \"fast\": {fast},\n  \
+         \"incremental_flat_within_2x\": {incr_flat},\n  \
+         \"legacy_pause_scaling_10k_to_1m\": {full_scaling:.1},\n  \
+         \"results\": [\n{}\n  ]\n}}\n",
+        results.join(",\n")
+    );
+    std::fs::write("BENCH_checkpoint.json", &json).expect("write BENCH_checkpoint.json");
+    println!("\nwrote BENCH_checkpoint.json");
+
+    println!();
+    if incr_flat && legacy_scales {
+        println!(
+            "RESULT: PASS — incremental pause flat ({:.3} ms -> {:.3} ms, 10k -> 1M items) \
+             while the legacy full-snapshot pause scales {:.0}x.",
+            ms(rows.first().unwrap().2.pause),
+            incr_large,
+            full_scaling
+        );
+    } else if incr_flat {
+        println!(
+            "RESULT: WARNING — legacy pause only scaled {full_scaling:.1}x \
+             (expected ~linear); rerun on an idle box."
+        );
+    } else {
+        println!(
+            "RESULT: WARNING — incremental pause not flat ({incr_small:.3} ms -> \
+             {incr_large:.3} ms); rerun on an idle box."
+        );
+    }
+    std::fs::remove_dir_all(&tmp).ok();
+}

@@ -123,7 +123,7 @@ pub(crate) fn materialize_sample(
         .map(|k| chunks.get(k).cloned().ok_or(Error::ChunkNotFound(*k)))
         .collect::<Result<Vec<_>>>()?;
     let item = match &info.item.columns {
-        Some(columns) => crate::core::item::Item::new_trajectory(
+        Some(columns) => crate::core::item::Item::new_trajectory_shared(
             info.item.key,
             info.item.table.clone(),
             info.item.priority,

@@ -625,7 +625,7 @@ impl TrajectoryWriter {
                     offset: 0,
                     length,
                     times_sampled: 0,
-                    columns: Some(wire_cols),
+                    columns: Some(Arc::new(wire_cols)),
                 }))
             }
         }

@@ -60,6 +60,16 @@ pub struct DqnConfig {
     /// the replay table is sharded per core by default (Fig. 7). The
     /// variable container always stays at one shard.
     pub table_shards: usize,
+    /// Durable replay (DESIGN.md §10): when set, the server built by
+    /// [`DqnConfig::recoverable_server`] persists incrementally into this
+    /// directory and restores from its manifest on restart, so a crashed
+    /// experiment resumes with its replay buffer intact.
+    pub persist_dir: Option<std::path::PathBuf>,
+    /// Periodic checkpoint (journal rotation) interval in milliseconds;
+    /// 0 disables the periodic thread (explicit checkpoints still work).
+    pub checkpoint_interval_ms: u64,
+    /// Journal segment size for incremental persistence.
+    pub journal_segment_bytes: usize,
     pub learner: LearnerConfig,
     pub seed: u64,
 }
@@ -99,6 +109,37 @@ impl DqnConfig {
         let vars = crate::core::table::TableConfig::variable_container(self.variable_table.clone());
         Ok((replay, vars))
     }
+
+    /// Build and start the experiment's replay server (in-process
+    /// transport) with crash recovery: when [`DqnConfig::persist_dir`] is
+    /// set, the server persists incrementally into it, and — if the
+    /// directory already holds a manifest from a previous incarnation —
+    /// restores that state before serving, so actors/learner pick up where
+    /// the crashed run left off.
+    pub fn recoverable_server(
+        &self,
+        tables: Vec<crate::core::table::TableConfig>,
+    ) -> Result<crate::net::Server> {
+        let mut builder = crate::net::Server::builder();
+        for t in tables {
+            builder = builder.table(t);
+        }
+        if let Some(dir) = &self.persist_dir {
+            // The builder auto-restores an existing manifest in
+            // checkpoint_dir under incremental mode — the crash-recovery
+            // policy lives in one place.
+            builder = builder
+                .checkpoint_dir(dir.clone())
+                .persist_mode(crate::net::PersistMode::Incremental {
+                    journal_segment_bytes: self.journal_segment_bytes,
+                });
+            if self.checkpoint_interval_ms > 0 {
+                builder = builder
+                    .checkpoint_interval(Duration::from_millis(self.checkpoint_interval_ms));
+            }
+        }
+        builder.serve_in_proc()
+    }
 }
 
 impl Default for DqnConfig {
@@ -118,6 +159,9 @@ impl Default for DqnConfig {
             publish_period: 20,
             actor_refresh_period: 200,
             table_shards: crate::core::table::default_shard_count(),
+            persist_dir: None,
+            checkpoint_interval_ms: 0,
+            journal_segment_bytes: crate::persist::DEFAULT_SEGMENT_BYTES,
             learner: LearnerConfig::default(),
             seed: 11,
         }
@@ -385,6 +429,58 @@ fn actor_loop(
 mod tests {
     use super::*;
     use crate::net::server::Server;
+
+    #[test]
+    fn recoverable_server_restores_previous_incarnation() {
+        let dir = std::env::temp_dir().join(format!(
+            "reverb_coord_recover_{}",
+            std::process::id()
+        ));
+        std::fs::remove_dir_all(&dir).ok();
+        let config = DqnConfig {
+            persist_dir: Some(dir.clone()),
+            ..DqnConfig::default()
+        };
+        let tables =
+            vec![crate::core::table::TableConfig::uniform_replay("replay", 1000)];
+
+        // Incarnation 1: fill the replay buffer, checkpoint, "crash".
+        let server = config.recoverable_server(tables.clone()).unwrap();
+        let table = server.table("replay").unwrap();
+        for k in 1..=8u64 {
+            let steps = vec![vec![
+                crate::core::tensor::Tensor::from_f32(&[1], &[k as f32]).unwrap(),
+            ]];
+            let chunk = std::sync::Arc::new(
+                crate::core::chunk::Chunk::from_steps(
+                    k + 100,
+                    0,
+                    &steps,
+                    crate::core::chunk::Compression::None,
+                )
+                .unwrap(),
+            );
+            table
+                .insert_or_assign(
+                    crate::core::item::Item::new(k, "replay", k as f64, vec![chunk], 0, 1)
+                        .unwrap(),
+                    None,
+                )
+                .unwrap();
+        }
+        server.checkpoint().unwrap();
+        drop(server);
+
+        // Incarnation 2: same config finds the manifest and resumes.
+        let server2 = config.recoverable_server(tables).unwrap();
+        let table2 = server2.table("replay").unwrap();
+        assert_eq!(table2.size(), 8, "replay buffer survived the restart");
+        assert_eq!(table2.info().inserts, 8);
+        let s = table2.sample(None).unwrap();
+        assert_eq!(s.item.materialize().unwrap()[0].to_f32().unwrap().len(), 1);
+        drop(server2);
+        std::fs::remove_dir_all(&dir).ok();
+    }
 
     /// Full pipeline smoke test: actors + learner + PER + variable
     /// container against real artifacts (skips without `make artifacts`

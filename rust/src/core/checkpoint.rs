@@ -1,7 +1,7 @@
 //! Checkpointing (§3.7): serialize the state and content of tables (and the
 //! chunks their items reference) to disk, and restore at construction time.
 //!
-//! Format (all little-endian, see `crate::io`):
+//! Full-snapshot format (all little-endian, see `crate::io`):
 //!
 //! ```text
 //! magic "RVBCKPT2"
@@ -18,6 +18,14 @@
 //! representation to each item. Version-1 files (`RVBCKPT1`, no trajectory
 //! byte) still load: the magic selects the item decoder.
 //!
+//! Version 3 (`RVBCKPT3`, DESIGN.md §10) is not a third full-snapshot
+//! layout but a *manifest*: a small file listing a v2-format base snapshot
+//! plus the live journal segments of the incremental persist subsystem
+//! ([`crate::persist`]). [`load`] dispatches on the magic, so all three
+//! versions restore through the same entry point; bases and segments are
+//! produced by a background writer and the §3.7 gate pause no longer
+//! scales with table size.
+//!
 //! Writing is atomic (tmp file + rename); the CRC guards against torn or
 //! corrupted files on load.
 //!
@@ -25,7 +33,8 @@
 //! `Table::snapshot` walks shards in index order and sorts items by key,
 //! so the byte stream is independent of `num_shards`, and `Table::restore`
 //! re-routes items by key hash — a checkpoint taken at one shard count
-//! restores into any other.
+//! restores into any other (v3 replays deltas by key, so it is equally
+//! shard-count portable).
 
 use crate::core::chunk::Chunk;
 use crate::core::chunk_store::ChunkStore;
@@ -41,8 +50,11 @@ use std::sync::Arc;
 
 const MAGIC_V2: &[u8; 8] = b"RVBCKPT2";
 const MAGIC_V1: &[u8; 8] = b"RVBCKPT1";
+/// Incremental-checkpoint manifest magic (see [`crate::persist`]).
+pub(crate) const MAGIC_V3: &[u8; 8] = b"RVBCKPT3";
 
-fn encode_item<W: Write>(w: &mut W, item: &Item) -> Result<()> {
+/// Item body codec shared by full snapshots and the persist journal.
+pub(crate) fn encode_item<W: Write>(w: &mut W, item: &Item) -> Result<()> {
     put_u64(w, item.key)?;
     put_f64(w, item.priority)?;
     put_u64(w, item.offset as u64)?;
@@ -52,20 +64,48 @@ fn encode_item<W: Write>(w: &mut W, item: &Item) -> Result<()> {
     for c in &item.chunks {
         put_u64(w, c.key)?;
     }
-    TrajectoryColumn::encode_list(&item.columns, w)
+    TrajectoryColumn::encode_list(item.columns_slice(), w)
 }
 
-struct DecodedItem {
-    key: u64,
-    priority: f64,
-    offset: usize,
-    length: usize,
-    times_sampled: u32,
-    chunk_keys: Vec<u64>,
-    columns: Option<Vec<TrajectoryColumn>>,
+pub(crate) struct DecodedItem {
+    pub key: u64,
+    pub priority: f64,
+    pub offset: usize,
+    pub length: usize,
+    pub times_sampled: u32,
+    pub chunk_keys: Vec<u64>,
+    pub columns: Option<Vec<TrajectoryColumn>>,
 }
 
-fn decode_item<R: Read>(r: &mut R, version: u8) -> Result<DecodedItem> {
+impl DecodedItem {
+    /// Rebuild the live [`Item`], resolving chunk keys from `arcs`.
+    pub fn into_item(
+        self,
+        table: &str,
+        arcs: &BTreeMap<u64, Arc<Chunk>>,
+    ) -> Result<Item> {
+        let chunks = self
+            .chunk_keys
+            .iter()
+            .map(|k| arcs.get(k).cloned().ok_or(Error::ChunkNotFound(*k)))
+            .collect::<Result<Vec<_>>>()?;
+        let mut item = match self.columns {
+            Some(cols) => Item::new_trajectory(self.key, table, self.priority, chunks, cols)?,
+            None => Item::new(
+                self.key,
+                table,
+                self.priority,
+                chunks,
+                self.offset,
+                self.length,
+            )?,
+        };
+        item.times_sampled = self.times_sampled;
+        Ok(item)
+    }
+}
+
+pub(crate) fn decode_item<R: Read>(r: &mut R, version: u8) -> Result<DecodedItem> {
     let key = get_u64(r)?;
     let priority = get_f64(r)?;
     let offset = get_u64(r)? as usize;
@@ -124,12 +164,26 @@ impl<R: Read> Read for CrcReader<R> {
     }
 }
 
-/// Write a checkpoint of `tables` to `path` atomically.
-///
-/// The caller (the server, §3.7) is responsible for blocking concurrent
-/// mutations for full consistency across tables; each table's own snapshot
-/// is atomic regardless.
-pub fn save(path: &Path, tables: &[Arc<Table>]) -> Result<()> {
+/// One table's checkpoint slice, decoded or ready to encode.
+pub struct TableSnapshot {
+    pub name: String,
+    pub inserts: u64,
+    pub samples: u64,
+    /// Items sorted by key (the deterministic snapshot order).
+    pub items: Vec<Item>,
+}
+
+/// A fully materialized checkpoint body: the deduplicated chunk set plus
+/// per-table snapshots. Produced by [`snapshot_tables`] (from live tables),
+/// [`read_full`] (from a v1/v2 file), or the persist subsystem's delta
+/// replay; consumed by [`write_full`] and [`install`].
+pub struct CheckpointData {
+    pub chunks: BTreeMap<u64, Arc<Chunk>>,
+    pub tables: Vec<TableSnapshot>,
+}
+
+/// Clone the state of `tables` into a [`CheckpointData`].
+pub fn snapshot_tables(tables: &[Arc<Table>]) -> CheckpointData {
     let mut snapshots = Vec::with_capacity(tables.len());
     let mut chunks: BTreeMap<u64, Arc<Chunk>> = BTreeMap::new();
     for t in tables {
@@ -139,9 +193,22 @@ pub fn save(path: &Path, tables: &[Arc<Table>]) -> Result<()> {
                 chunks.entry(c.key).or_insert_with(|| c.clone());
             }
         }
-        snapshots.push((t.name().to_string(), inserts, samples, items));
+        snapshots.push(TableSnapshot {
+            name: t.name().to_string(),
+            inserts,
+            samples,
+            items,
+        });
     }
+    CheckpointData {
+        chunks,
+        tables: snapshots,
+    }
+}
 
+/// Write `data` as a full v2-format snapshot to `path` atomically
+/// (tmp + fsync + rename). Also the persist subsystem's base format.
+pub fn write_full(path: &Path, data: &CheckpointData) -> Result<()> {
     let tmp = path.with_extension("tmp");
     if let Some(parent) = path.parent() {
         std::fs::create_dir_all(parent)?;
@@ -153,17 +220,17 @@ pub fn save(path: &Path, tables: &[Arc<Table>]) -> Result<()> {
     };
 
     w.write_all(MAGIC_V2)?;
-    put_u32(&mut w, chunks.len() as u32)?;
-    for c in chunks.values() {
+    put_u32(&mut w, data.chunks.len() as u32)?;
+    for c in data.chunks.values() {
         c.encode(&mut w)?;
     }
-    put_u32(&mut w, snapshots.len() as u32)?;
-    for (name, inserts, samples, items) in &snapshots {
-        put_string(&mut w, name)?;
-        put_u64(&mut w, *inserts)?;
-        put_u64(&mut w, *samples)?;
-        put_u32(&mut w, items.len() as u32)?;
-        for item in items {
+    put_u32(&mut w, data.tables.len() as u32)?;
+    for t in &data.tables {
+        put_string(&mut w, &t.name)?;
+        put_u64(&mut w, t.inserts)?;
+        put_u64(&mut w, t.samples)?;
+        put_u32(&mut w, t.items.len() as u32)?;
+        for item in &t.items {
             encode_item(&mut w, item)?;
         }
     }
@@ -174,16 +241,26 @@ pub fn save(path: &Path, tables: &[Arc<Table>]) -> Result<()> {
     inner.get_ref().sync_all()?;
     drop(inner);
     std::fs::rename(&tmp, path)?;
+    // Create+rename durability needs the directory entry synced too.
+    if let Some(parent) = path.parent() {
+        sync_dir(parent)?;
+    }
     Ok(())
 }
 
-/// Load a checkpoint into `tables` (matched by name; the tables must be
-/// freshly constructed/empty). Chunks are registered in `store`; tables
-/// absent from the checkpoint are left empty, and checkpointed tables with
-/// no matching live table are skipped.
+/// Write a checkpoint of `tables` to `path` atomically.
 ///
-/// Returns the number of items restored.
-pub fn load(path: &Path, tables: &[Arc<Table>], store: &ChunkStore) -> Result<usize> {
+/// The caller (the server, §3.7) is responsible for blocking concurrent
+/// mutations for full consistency across tables; each table's own snapshot
+/// is atomic regardless.
+pub fn save(path: &Path, tables: &[Arc<Table>]) -> Result<()> {
+    write_full(path, &snapshot_tables(tables))
+}
+
+/// Decode a full v1/v2 snapshot file into a [`CheckpointData`] without
+/// touching any live table or chunk store. The CRC is verified before
+/// returning, so a successful read is internally consistent.
+pub fn read_full(path: &Path) -> Result<CheckpointData> {
     let file = std::fs::File::open(path)?;
     let len = file.metadata()?.len();
     if len < (MAGIC_V2.len() + 4) as u64 {
@@ -208,7 +285,7 @@ pub fn load(path: &Path, tables: &[Arc<Table>], store: &ChunkStore) -> Result<us
     let mut arcs: BTreeMap<u64, Arc<Chunk>> = BTreeMap::new();
     for _ in 0..nchunks {
         let chunk = Chunk::decode(&mut r)?;
-        arcs.insert(chunk.key, store.insert(chunk));
+        arcs.insert(chunk.key, Arc::new(chunk));
     }
 
     let ntables = get_u32(&mut r)? as usize;
@@ -224,7 +301,7 @@ pub fn load(path: &Path, tables: &[Arc<Table>], store: &ChunkStore) -> Result<us
         decoded.push((name, inserts, samples, items));
     }
 
-    // Verify CRC before mutating any table.
+    // Verify CRC before handing any state to the caller.
     let computed = r.hasher.clone().finalize();
     let stored = byteorder::ReadBytesExt::read_u32::<byteorder::LittleEndian>(&mut r.inner)?;
     if computed != stored {
@@ -233,31 +310,71 @@ pub fn load(path: &Path, tables: &[Arc<Table>], store: &ChunkStore) -> Result<us
         )));
     }
 
-    let mut restored = 0;
+    let mut tables = Vec::with_capacity(decoded.len());
     for (name, inserts, samples, items) in decoded {
-        let Some(table) = tables.iter().find(|t| t.name() == name) else {
+        let items = items
+            .into_iter()
+            .map(|d| d.into_item(&name, &arcs))
+            .collect::<Result<Vec<_>>>()?;
+        tables.push(TableSnapshot {
+            name,
+            inserts,
+            samples,
+            items,
+        });
+    }
+    Ok(CheckpointData {
+        chunks: arcs,
+        tables,
+    })
+}
+
+/// Install decoded checkpoint state into live `tables` (matched by name;
+/// the tables must be freshly constructed/empty). Chunks are registered in
+/// `store`; tables absent from the checkpoint are left empty, and
+/// checkpointed tables with no matching live table are skipped.
+///
+/// Returns the number of items restored.
+pub fn install(data: CheckpointData, tables: &[Arc<Table>], store: &ChunkStore) -> Result<usize> {
+    for chunk in data.chunks.values() {
+        store.insert_arc(chunk.clone());
+    }
+    let mut restored = 0;
+    for t in data.tables {
+        let Some(table) = tables.iter().find(|lt| lt.name() == t.name) else {
             continue;
         };
-        let mut live_items = Vec::with_capacity(items.len());
-        for d in items {
-            let chunks = d
-                .chunk_keys
-                .iter()
-                .map(|k| arcs.get(k).cloned().ok_or(Error::ChunkNotFound(*k)))
-                .collect::<Result<Vec<_>>>()?;
-            let mut item = match d.columns {
-                Some(cols) => {
-                    Item::new_trajectory(d.key, name.clone(), d.priority, chunks, cols)?
-                }
-                None => Item::new(d.key, name.clone(), d.priority, chunks, d.offset, d.length)?,
-            };
-            item.times_sampled = d.times_sampled;
-            live_items.push(item);
-        }
-        restored += live_items.len();
-        table.restore(live_items, inserts, samples)?;
+        restored += t.items.len();
+        table.restore(t.items, t.inserts, t.samples)?;
     }
     Ok(restored)
+}
+
+/// Load a checkpoint into `tables`. Dispatches on the file magic: v1/v2
+/// full snapshots decode directly; a v3 manifest restores the persist
+/// subsystem's base + delta-journal chain (including crash-recovery of a
+/// torn trailing segment).
+///
+/// Returns the number of items restored.
+pub fn load(path: &Path, tables: &[Arc<Table>], store: &ChunkStore) -> Result<usize> {
+    let data = if is_manifest(path)? {
+        crate::persist::restore(path)?.data
+    } else {
+        read_full(path)?
+    };
+    install(data, tables, store)
+}
+
+/// Whether `path` holds a v3 incremental-checkpoint manifest.
+pub fn is_manifest(path: &Path) -> Result<bool> {
+    let mut file = std::fs::File::open(path)?;
+    let mut magic = [0u8; 8];
+    match file.read_exact(&mut magic) {
+        Ok(()) => Ok(&magic == MAGIC_V3),
+        // Shorter than any magic: not a manifest; let the full reader
+        // produce its "file too short" error.
+        Err(_) => Ok(false),
+    }
 }
 
 #[cfg(test)]
@@ -515,6 +632,97 @@ mod tests {
             std::fs::read(&path1).unwrap(),
             "checkpoint bytes must be shard-count independent"
         );
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn cross_version_restore_matrix() {
+        // The same logical state through every format version — a
+        // hand-crafted v1 file, a v2 full snapshot, and a v3 manifest
+        // chain (base + journaled deltas) — must restore identically
+        // through the one `load` entry point, at several shard counts.
+        let dir = tmpdir("matrix");
+        let items: Vec<Item> = (1..=6)
+            .map(|k| mk_item(k, "t", k as f64 * 0.5, None))
+            .collect();
+
+        // v2: the standard save path.
+        let src = Arc::new(Table::new(TableConfig::uniform_replay("t", 100)));
+        for item in &items {
+            src.insert_or_assign(item.clone(), None).unwrap();
+        }
+        let v2 = dir.join("v2.rvb");
+        save(&v2, &[src]).unwrap();
+
+        // v1: the same items in the version-1 layout (no trajectory byte).
+        let v1 = dir.join("v1.rvb");
+        {
+            let mut body = Vec::new();
+            body.extend_from_slice(MAGIC_V1);
+            put_u32(&mut body, items.len() as u32).unwrap();
+            for item in &items {
+                item.chunks[0].encode(&mut body).unwrap();
+            }
+            put_u32(&mut body, 1).unwrap(); // one table
+            put_string(&mut body, "t").unwrap();
+            put_u64(&mut body, items.len() as u64).unwrap(); // inserts
+            put_u64(&mut body, 0).unwrap(); // samples
+            put_u32(&mut body, items.len() as u32).unwrap();
+            for item in &items {
+                put_u64(&mut body, item.key).unwrap();
+                put_f64(&mut body, item.priority).unwrap();
+                put_u64(&mut body, 0).unwrap(); // offset
+                put_u64(&mut body, 1).unwrap(); // length
+                put_u32(&mut body, 0).unwrap(); // times_sampled
+                put_u32(&mut body, 1).unwrap(); // one chunk key
+                put_u64(&mut body, item.chunks[0].key).unwrap();
+            }
+            let crc = crate::util::crc32::crc32(&body);
+            byteorder::WriteBytesExt::write_u32::<byteorder::LittleEndian>(&mut body, crc)
+                .unwrap();
+            std::fs::write(&v1, &body).unwrap();
+        }
+
+        // v3: the same inserts journaled through the persist subsystem.
+        let v3dir = dir.join("v3");
+        let t3 = Arc::new(Table::new(TableConfig::uniform_replay("t", 100)));
+        let persister = crate::persist::Persister::start(
+            crate::persist::PersistConfig::new(&v3dir),
+            &[t3.clone()],
+        )
+        .unwrap();
+        for item in &items {
+            t3.insert_or_assign(item.clone(), None).unwrap();
+        }
+        persister.rotate(&[t3.clone()]).wait().unwrap();
+        let v3 = persister.manifest_path();
+        persister.stop(&[t3]);
+
+        for (version, path) in [("v1", &v1), ("v2", &v2), ("v3", &v3)] {
+            for shards in [1usize, 3] {
+                let dst = Arc::new(Table::new(
+                    TableConfig::uniform_replay("t", 100).with_shards(shards),
+                ));
+                let store = ChunkStore::new();
+                assert_eq!(
+                    load(path, &[dst.clone()], &store).unwrap(),
+                    items.len(),
+                    "{version} at {shards} shards"
+                );
+                let (got, inserts, _samples) = dst.snapshot();
+                assert_eq!(inserts, items.len() as u64, "{version} counters");
+                assert_eq!(got.len(), items.len());
+                for (g, want) in got.iter().zip(&items) {
+                    assert_eq!(g.key, want.key, "{version}");
+                    assert_eq!(g.priority, want.priority, "{version}");
+                    assert_eq!(
+                        g.materialize().unwrap()[0].to_f32().unwrap(),
+                        want.materialize().unwrap()[0].to_f32().unwrap(),
+                        "{version} payload"
+                    );
+                }
+            }
+        }
         std::fs::remove_dir_all(dir).ok();
     }
 

@@ -50,10 +50,11 @@ impl TrajectoryColumn {
 
     /// Serialize an optional column list: a presence byte, then per column
     /// its name, squeeze flag, and `(chunk_key, offset, length)` runs.
-    /// Shared by the wire protocol (v2 item frames) and the checkpoint
-    /// format (like [`Chunk::encode`]), so the two layouts cannot drift.
+    /// Shared by the wire protocol (v2 item frames), the checkpoint format,
+    /// and the persist journal (like [`Chunk::encode`]), so the layouts
+    /// cannot drift.
     pub fn encode_list<W: std::io::Write>(
-        cols: &Option<Vec<TrajectoryColumn>>,
+        cols: Option<&[TrajectoryColumn]>,
         w: &mut W,
     ) -> Result<()> {
         use crate::io::*;
@@ -138,8 +139,10 @@ pub struct Item {
     /// How many times this item has been sampled so far.
     pub times_sampled: u32,
     /// Per-column gather lists: `None` for flat items, `Some` for
-    /// trajectory items.
-    pub columns: Option<Vec<TrajectoryColumn>>,
+    /// trajectory items. Shared behind an `Arc` so the per-sample item
+    /// clone (`sampled_to_wire`/`materialize_sample`) copies a pointer, not
+    /// the column metadata, on the sampling hot path.
+    pub columns: Option<Arc<Vec<TrajectoryColumn>>>,
 }
 
 fn validate_priority(priority: f64) -> Result<()> {
@@ -216,6 +219,19 @@ impl Item {
         chunks: Vec<Arc<Chunk>>,
         columns: Vec<TrajectoryColumn>,
     ) -> Result<Item> {
+        Self::new_trajectory_shared(key, table, priority, chunks, Arc::new(columns))
+    }
+
+    /// Like [`Item::new_trajectory`], but sharing an already-built column
+    /// list. The wire and checkpoint paths pass their decoded `Arc` through
+    /// so re-validation never clones the column metadata.
+    pub fn new_trajectory_shared(
+        key: u64,
+        table: impl Into<String>,
+        priority: f64,
+        chunks: Vec<Arc<Chunk>>,
+        columns: Arc<Vec<TrajectoryColumn>>,
+    ) -> Result<Item> {
         if chunks.is_empty() {
             return Err(Error::InvalidArgument("item with no chunks".into()));
         }
@@ -236,7 +252,7 @@ impl Item {
         }
         let mut referenced: std::collections::HashSet<u64> = std::collections::HashSet::new();
         let mut length = 0usize;
-        for col in &columns {
+        for col in columns.iter() {
             if col.slices.is_empty() {
                 return Err(Error::InvalidArgument(format!(
                     "trajectory column {:?} has no chunk slices",
@@ -303,6 +319,12 @@ impl Item {
         })
     }
 
+    /// The trajectory column list as a slice, if this is a trajectory item
+    /// (the borrow encoders want, without exposing the `Arc`).
+    pub fn columns_slice(&self) -> Option<&[TrajectoryColumn]> {
+        self.columns.as_deref().map(|v| v.as_slice())
+    }
+
     /// Total *encoded* payload bytes across the referenced chunks. Note the
     /// §3.2 overhead discussion: all referenced chunk bytes travel on
     /// sampling even when offset/length select a sub-span.
@@ -318,7 +340,7 @@ impl Item {
     pub fn materialize(&self) -> Result<Vec<Tensor>> {
         if let Some(cols) = &self.columns {
             return Ok(self
-                .materialize_trajectory(cols)?
+                .materialize_trajectory(cols.as_slice())?
                 .into_iter()
                 .map(|(_, t)| t)
                 .collect());
@@ -331,7 +353,7 @@ impl Item {
     /// positional `field_{i}` names of [`crate::core::tensor::Signature`].
     pub fn materialize_columns(&self) -> Result<Vec<(String, Tensor)>> {
         if let Some(cols) = &self.columns {
-            return self.materialize_trajectory(cols);
+            return self.materialize_trajectory(cols.as_slice());
         }
         Ok(self
             .materialize_flat()?
@@ -665,7 +687,7 @@ mod tests {
             ]),
         ] {
             let mut buf = Vec::new();
-            TrajectoryColumn::encode_list(&cols, &mut buf).unwrap();
+            TrajectoryColumn::encode_list(cols.as_deref(), &mut buf).unwrap();
             let back =
                 TrajectoryColumn::decode_list(&mut std::io::Cursor::new(buf)).unwrap();
             assert_eq!(back, cols);

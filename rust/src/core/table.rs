@@ -47,8 +47,26 @@ use crate::error::{Error, Result};
 use crate::util::rng::Pcg32;
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
-use std::sync::{Condvar, Mutex, MutexGuard};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard, OnceLock};
 use std::time::{Duration, Instant};
+
+/// Sink for a durability journal (the persist subsystem, DESIGN.md §10):
+/// receives every mutation that lands in the table. Invoked while the
+/// mutated shard's lock is held, so events on the same key arrive in their
+/// true commit order. Implementations must never call back into the table
+/// and must not block on I/O (the persist journal appends to an in-memory
+/// buffer; file work happens on its background writer).
+pub trait MutationSink: Send + Sync {
+    /// A new item landed (priority updates of existing keys are
+    /// `on_update`). `times_sampled` reflects the value at landing.
+    fn on_insert(&self, table: &str, item: &Item);
+    /// An item left the table: explicit delete, eviction,
+    /// consume-on-sample removal, or reset.
+    fn on_delete(&self, table: &str, key: u64);
+    /// A priority change (client update, InsertOrAssign on an existing
+    /// key, or extension diffusion).
+    fn on_update(&self, table: &str, key: u64, priority: f64);
+}
 
 /// Default shard count for throughput-oriented tables: one shard per
 /// available core (the CLI and coordinator knobs default to this).
@@ -239,8 +257,22 @@ pub struct ShardedTable {
     extensions: Option<Mutex<Vec<Box<dyn TableExtension>>>>,
     insert_waiters: Waiters,
     sample_waiters: Waiters,
-    /// Seed sequence for per-call shard-pick RNGs.
+    /// Seed sequence for pooled shard-pick RNGs.
     pick_seq: AtomicU64,
+    /// Reusable cross-shard sampling scratch (buffers + persistent RNGs):
+    /// popped per `sample_batch` call, pushed back after, so the hot
+    /// multi-shard sample path allocates nothing per round.
+    scratch_pool: Mutex<Vec<SampleScratch>>,
+    /// Durability hook (persist subsystem); unset tables pay one atomic
+    /// load per mutation.
+    sink: OnceLock<Arc<dyn MutationSink>>,
+}
+
+/// Pooled per-call state for cross-shard sampling.
+struct SampleScratch {
+    weights: Vec<f64>,
+    picks: Vec<u64>,
+    rng: Pcg32,
 }
 
 /// The canonical table type.
@@ -286,8 +318,20 @@ impl ShardedTable {
             insert_waiters: Waiters::new(),
             sample_waiters: Waiters::new(),
             pick_seq: AtomicU64::new(0),
+            scratch_pool: Mutex::new(Vec::new()),
+            sink: OnceLock::new(),
             config,
         }
+    }
+
+    /// Attach a durability sink (the persist journal, DESIGN.md §10). May
+    /// be set once, after any restore and before serving traffic —
+    /// restored items are not re-journaled (they belong to the base
+    /// snapshot the persist subsystem writes at startup).
+    pub fn set_mutation_sink(&self, sink: Arc<dyn MutationSink>) -> Result<()> {
+        self.sink
+            .set(sink)
+            .map_err(|_| Error::InvalidArgument("mutation sink already set".into()))
     }
 
     pub fn name(&self) -> &str {
@@ -338,15 +382,26 @@ impl ShardedTable {
         if self.cancelled.load(Ordering::SeqCst) {
             return Err(Error::Cancelled(self.config.name.clone()));
         }
-        // Registered before the reservation so a sampler admitted by our
-        // reservation can always see the insert is still in flight.
+        // Registered before each reservation attempt (so a sampler admitted
+        // by our reservation always sees the insert in flight) and dropped
+        // again while parked: a corridor-blocked inserter must not defeat
+        // the drained-table sampler fail-fast by holding the in-flight
+        // count through its park.
         let deadline = timeout.map(|t| Instant::now() + t);
         self.inflight_inserts.fetch_add(1, Ordering::SeqCst);
         if !self.limiter.try_insert(1) {
+            self.inflight_inserts.fetch_sub(1, Ordering::SeqCst);
             if let Err(e) = self.block_until(&self.insert_waiters, timeout, true, || {
-                self.limiter.try_insert(1)
+                self.inflight_inserts.fetch_add(1, Ordering::SeqCst);
+                if self.limiter.try_insert(1) {
+                    true
+                } else {
+                    self.inflight_inserts.fetch_sub(1, Ordering::SeqCst);
+                    false
+                }
             }) {
-                self.inflight_inserts.fetch_sub(1, Ordering::SeqCst);
+                // The failed final attempt already dropped its
+                // registration.
                 return Err(e);
             }
         }
@@ -428,6 +483,9 @@ impl ShardedTable {
             return Err(e);
         }
         self.run_extensions(|ext| ext.on_insert(ItemRef::of(&item)));
+        if let Some(sink) = self.sink.get() {
+            sink.on_insert(&self.config.name, &item);
+        }
         st.items.insert(item.key, item);
         self.live.fetch_add(1, Ordering::SeqCst);
         shard.store_stats(&st);
@@ -590,35 +648,50 @@ impl ShardedTable {
     /// One cross-shard collection pass: draw shard slices weighted by
     /// selector mass, then serve each slice under its shard's lock.
     fn collect_samples(&self, want: u64, out: &mut Vec<SampledItem>, dropped: &mut Vec<Item>) {
-        let nshards = self.shards.len();
-        if nshards == 1 {
+        if self.shards.len() == 1 {
             self.sample_from_shard(0, want, 0.0, true, out, dropped);
             return;
         }
-        let mut rng = self.pick_rng();
+        // Borrow a pooled scratch (weights/picks buffers + a persistent
+        // RNG) so the hot multi-shard path allocates nothing per round.
+        let mut scratch = self.take_scratch();
+        self.collect_samples_multi(want, &mut scratch, out, dropped);
+        self.scratch_pool.lock().unwrap().push(scratch);
+    }
+
+    fn collect_samples_multi(
+        &self,
+        want: u64,
+        scratch: &mut SampleScratch,
+        out: &mut Vec<SampledItem>,
+        dropped: &mut Vec<Item>,
+    ) {
+        let nshards = self.shards.len();
         for _round in 0..4 {
             let remaining_want = want - out.len() as u64;
             if remaining_want == 0 {
                 return;
             }
-            let mut weights: Vec<f64> = self
-                .shards
-                .iter()
-                .map(|s| f64::from_bits(s.mass.load(Ordering::SeqCst)))
-                .collect();
+            scratch.weights.clear();
+            scratch.weights.extend(
+                self.shards
+                    .iter()
+                    .map(|s| f64::from_bits(s.mass.load(Ordering::SeqCst))),
+            );
             let mut use_mass = true;
-            let mut total: f64 = weights.iter().sum();
+            let mut total: f64 = scratch.weights.iter().sum();
             if total <= 0.0 {
                 // Every shard reports zero mass (all-zero priorities):
                 // fall back to item-count weights, mirroring the in-shard
                 // uniform fallback.
                 use_mass = false;
-                weights = self
-                    .shards
-                    .iter()
-                    .map(|s| s.count.load(Ordering::SeqCst) as f64)
-                    .collect();
-                total = weights.iter().sum();
+                scratch.weights.clear();
+                scratch.weights.extend(
+                    self.shards
+                        .iter()
+                        .map(|s| s.count.load(Ordering::SeqCst) as f64),
+                );
+                total = scratch.weights.iter().sum();
                 if total <= 0.0 {
                     return; // table (transiently) empty
                 }
@@ -627,24 +700,27 @@ impl ShardedTable {
             // boundary misses fall back to the last *positive-weight*
             // shard, never a zero-mass one (which may hold only
             // zero-priority items the starvation rule must skip).
-            let last_positive = weights
+            let last_positive = scratch
+                .weights
                 .iter()
                 .rposition(|w| *w > 0.0)
                 .expect("total > 0 implies a positive weight");
-            let mut picks = vec![0u64; nshards];
+            scratch.picks.clear();
+            scratch.picks.resize(nshards, 0);
             for _ in 0..remaining_want {
-                let mut target = rng.gen_f64() * total;
+                let mut target = scratch.rng.gen_f64() * total;
                 let mut idx = last_positive;
-                for (i, w) in weights.iter().enumerate() {
+                for (i, w) in scratch.weights.iter().enumerate() {
                     if target < *w {
                         idx = i;
                         break;
                     }
                     target -= *w;
                 }
-                picks[idx] += 1;
+                scratch.picks[idx] += 1;
             }
-            for (idx, &cnt) in picks.iter().enumerate() {
+            for idx in 0..nshards {
+                let cnt = scratch.picks[idx];
                 if cnt == 0 {
                     continue;
                 }
@@ -652,7 +728,14 @@ impl ShardedTable {
                 if slice == 0 {
                     break;
                 }
-                self.sample_from_shard(idx, slice, total - weights[idx], use_mass, out, dropped);
+                self.sample_from_shard(
+                    idx,
+                    slice,
+                    total - scratch.weights[idx],
+                    use_mass,
+                    out,
+                    dropped,
+                );
             }
             if out.len() as u64 >= want {
                 return;
@@ -794,7 +877,15 @@ impl ShardedTable {
         for shard in &self.shards {
             let mut st = shard.state.lock().unwrap();
             let drained = st.items.len();
+            let first_drained = dropped.len();
             dropped.extend(st.items.drain().map(|(_, it)| it));
+            // Journal the drain as per-key deletes under this shard's lock
+            // so same-key ordering holds against concurrent re-inserts.
+            if let Some(sink) = self.sink.get() {
+                for it in &dropped[first_drained..] {
+                    sink.on_delete(&self.config.name, it.key);
+                }
+            }
             st.sampler.clear();
             st.remover.clear();
             self.budget.fetch_sub(drained, Ordering::SeqCst);
@@ -953,9 +1044,19 @@ impl ShardedTable {
         w.cv.notify_all();
     }
 
-    fn pick_rng(&self) -> Pcg32 {
+    /// Pop a pooled sampling scratch, or mint one (first use per
+    /// concurrency level). RNGs persist with their scratch for the table's
+    /// lifetime; distinct scratches get distinct Pcg32 streams.
+    fn take_scratch(&self) -> SampleScratch {
+        if let Some(s) = self.scratch_pool.lock().unwrap().pop() {
+            return s;
+        }
         let seq = self.pick_seq.fetch_add(1, Ordering::Relaxed);
-        Pcg32::new(crate::util::splitmix64(seq ^ 0x5EED_BA5E), seq)
+        SampleScratch {
+            weights: Vec::with_capacity(self.shards.len()),
+            picks: Vec::with_capacity(self.shards.len()),
+            rng: Pcg32::new(crate::util::splitmix64(seq ^ 0x5EED_BA5E), seq),
+        }
     }
 
     fn run_extensions(&self, mut f: impl FnMut(&mut dyn TableExtension)) {
@@ -987,6 +1088,9 @@ impl ShardedTable {
         item.priority = priority;
         st.sampler.update(key, priority)?;
         st.remover.update(key, priority)?;
+        if let Some(sink) = self.sink.get() {
+            sink.on_update(&self.config.name, key, priority);
+        }
         let mut followups = Vec::new();
         if run_extensions {
             let item = st.items.get(&key).expect("just updated");
@@ -1029,6 +1133,9 @@ impl ShardedTable {
         st.sampler.delete(key)?;
         st.remover.delete(key)?;
         self.run_extensions(|ext| ext.on_delete(ItemRef::of(&item)));
+        if let Some(sink) = self.sink.get() {
+            sink.on_delete(&self.config.name, key);
+        }
         Ok(Some(item))
     }
 }
@@ -1505,5 +1612,108 @@ mod tests {
         t.cancel();
         let err = h.join().unwrap().unwrap_err();
         assert!(matches!(err, Error::Cancelled(_)));
+    }
+
+    #[test]
+    fn parked_inserter_does_not_defeat_drained_fail_fast() {
+        // Regression (PR 2 review finding): a corridor-blocked inserter
+        // used to hold `inflight_inserts` through its park, so a fully
+        // drained-but-admissible table spun the sampler's 1 ms poll loop
+        // until its deadline instead of failing fast like the legacy
+        // single-lock table.
+        let t = Arc::new(Table::new(TableConfig::queue("q", 2)));
+        t.insert_or_assign(mk_item(1, 1.0), None).unwrap();
+        t.insert_or_assign(mk_item(2, 1.0), None).unwrap();
+        // Third insert parks on the full-queue corridor.
+        let t2 = t.clone();
+        let blocked =
+            std::thread::spawn(move || t2.insert_or_assign(mk_item(3, 1.0), Some(Duration::from_secs(10))));
+        std::thread::sleep(Duration::from_millis(50));
+        // Drain the queue out from under it. Deletes do not move the
+        // limiter cursor, so the inserter stays parked and the sampler
+        // stays admissible — with nothing to serve.
+        t.delete(&[1, 2]).unwrap();
+        let start = Instant::now();
+        let err = t.sample(Some(Duration::from_secs(10))).unwrap_err();
+        assert!(err.is_timeout(), "{err}");
+        assert!(
+            start.elapsed() < Duration::from_secs(2),
+            "sampler spun until its deadline instead of failing fast"
+        );
+        t.cancel();
+        let _ = blocked.join().unwrap();
+    }
+
+    /// Recording sink: every mutation event in arrival order.
+    #[derive(Default)]
+    struct RecordingSink {
+        events: Mutex<Vec<String>>,
+    }
+
+    impl MutationSink for RecordingSink {
+        fn on_insert(&self, table: &str, item: &Item) {
+            self.events
+                .lock()
+                .unwrap()
+                .push(format!("insert {table} {}", item.key));
+        }
+        fn on_delete(&self, table: &str, key: u64) {
+            self.events.lock().unwrap().push(format!("delete {table} {key}"));
+        }
+        fn on_update(&self, table: &str, key: u64, priority: f64) {
+            self.events
+                .lock()
+                .unwrap()
+                .push(format!("update {table} {key} {priority}"));
+        }
+    }
+
+    #[test]
+    fn mutation_sink_observes_all_paths() {
+        let sink = Arc::new(RecordingSink::default());
+        let t = Table::new(TableConfig::uniform_replay("t", 2));
+        t.set_mutation_sink(sink.clone()).unwrap();
+        // Double attach is rejected.
+        assert!(t
+            .set_mutation_sink(Arc::new(RecordingSink::default()))
+            .is_err());
+
+        t.insert_or_assign(mk_item(1, 1.0), None).unwrap();
+        t.insert_or_assign(mk_item(2, 1.0), None).unwrap();
+        // Existing key → update, not insert.
+        t.insert_or_assign(mk_item(1, 5.0), None).unwrap();
+        // Capacity eviction → delete of FIFO victim (key 1) + insert.
+        t.insert_or_assign(mk_item(3, 1.0), None).unwrap();
+        t.update_priorities(&[(2, 9.0)]).unwrap();
+        t.delete(&[2]).unwrap();
+        t.reset();
+        let events = sink.events.lock().unwrap().clone();
+        assert_eq!(
+            events,
+            vec![
+                "insert t 1",
+                "insert t 2",
+                "update t 1 5",
+                "delete t 1",
+                "insert t 3",
+                "update t 2 9",
+                "delete t 2",
+                "delete t 3",
+            ]
+        );
+    }
+
+    #[test]
+    fn consume_on_sample_removal_reaches_sink() {
+        let sink = Arc::new(RecordingSink::default());
+        let mut cfg = TableConfig::uniform_replay("t", 10);
+        cfg.max_times_sampled = 1;
+        let t = Table::new(cfg);
+        t.set_mutation_sink(sink.clone()).unwrap();
+        t.insert_or_assign(mk_item(7, 1.0), None).unwrap();
+        t.sample(None).unwrap();
+        assert!(!t.contains(7));
+        let events = sink.events.lock().unwrap().clone();
+        assert_eq!(events, vec!["insert t 7", "delete t 7"]);
     }
 }

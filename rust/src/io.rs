@@ -69,6 +69,22 @@ pub fn get_string<R: Read>(r: &mut R) -> Result<String> {
     String::from_utf8(get_bytes(r)?).map_err(|e| Error::Decode(format!("invalid utf8: {e}")))
 }
 
+/// Fsync a directory so freshly created/renamed entries survive power
+/// loss (POSIX requires syncing the directory, not just the file, for
+/// create/rename durability). No-op on platforms where directories
+/// cannot be opened for syncing.
+pub fn sync_dir(dir: &std::path::Path) -> Result<()> {
+    #[cfg(unix)]
+    {
+        std::fs::File::open(dir)?.sync_all()?;
+    }
+    #[cfg(not(unix))]
+    {
+        let _ = dir;
+    }
+    Ok(())
+}
+
 /// Encode a usize vector (shapes).
 pub fn put_shape<W: Write>(w: &mut W, shape: &[usize]) -> Result<()> {
     put_u32(w, shape.len() as u32)?;

@@ -15,6 +15,7 @@ pub mod core;
 pub mod error;
 pub mod io;
 pub mod net;
+pub mod persist;
 pub mod rl;
 pub mod runtime;
 pub mod util;
@@ -31,4 +32,5 @@ pub use crate::client::{
     TrajectoryWriter, TrajectoryWriterOptions, Writer, WriterOptions,
 };
 pub use crate::error::{Error, Result};
-pub use crate::net::{Server, ServerBuilder};
+pub use crate::net::{PersistMode, Server, ServerBuilder};
+pub use crate::persist::{PersistConfig, Persister};

@@ -20,13 +20,20 @@ use reverb::Client;
 fn usage() -> ! {
     eprintln!(
         "usage:\n  reverb-server serve --bind HOST:PORT --table NAME:KIND[:ARGS] \
-         [--shards N] [--checkpoint-dir DIR] [--load CKPT]\n  reverb-server info --addr HOST:PORT\n  \
+         [--shards N] [--checkpoint-dir DIR] [--load CKPT] \
+         [--persist full|delta] [--checkpoint-interval SECS] \
+         [--journal-segment-bytes N]\n  reverb-server info --addr HOST:PORT\n  \
          reverb-server checkpoint --addr HOST:PORT\n\n\
          table kinds:\n  NAME:uniform:MAX_SIZE\n  NAME:queue:QUEUE_SIZE\n  \
          NAME:prioritized:MAX_SIZE:EXPONENT[:SPI:MIN_SIZE:ERROR_BUFFER]\n  NAME:variable\n\n\
          --shards N splits each uniform/prioritized table over N \
          independently-locked shards (default: one per core); queue and \
-         variable tables keep strict single-shard ordering."
+         variable tables keep strict single-shard ordering.\n\
+         --persist delta journals mutations incrementally (base + delta \
+         segments + background fsync) so checkpoint pauses stay constant \
+         in table size; full (the default) snapshots stop-the-world. \
+         --journal-segment-bytes implies delta. --load accepts both .rvb \
+         snapshots and MANIFEST.rvb3 manifests."
     );
     std::process::exit(2);
 }
@@ -135,6 +142,53 @@ fn main() {
             }
             if let Some(ckpt) = flag(&args, "--load") {
                 builder = builder.load_checkpoint(ckpt);
+            }
+            let segment_bytes = match flag(&args, "--journal-segment-bytes") {
+                Some(v) => match v.parse::<usize>() {
+                    Ok(n) if n > 0 => Some(n),
+                    _ => {
+                        eprintln!("--journal-segment-bytes must be a positive integer");
+                        std::process::exit(2);
+                    }
+                },
+                None => None,
+            };
+            // --journal-segment-bytes implies delta persistence.
+            let persist = flag(&args, "--persist")
+                .unwrap_or_else(|| if segment_bytes.is_some() { "delta".into() } else { "full".into() });
+            match persist.as_str() {
+                "full" => {
+                    if segment_bytes.is_some() {
+                        eprintln!("--journal-segment-bytes conflicts with --persist full");
+                        std::process::exit(2);
+                    }
+                }
+                "delta" => {
+                    builder = builder.persist_mode(reverb::PersistMode::Incremental {
+                        journal_segment_bytes: segment_bytes
+                            .unwrap_or(reverb::persist::DEFAULT_SEGMENT_BYTES),
+                    });
+                }
+                other => {
+                    eprintln!("--persist must be 'full' or 'delta', got {other:?}");
+                    std::process::exit(2);
+                }
+            }
+            if let Some(secs) = flag(&args, "--checkpoint-interval") {
+                if flag(&args, "--checkpoint-dir").is_none() {
+                    eprintln!("--checkpoint-interval requires --checkpoint-dir");
+                    std::process::exit(2);
+                }
+                match secs.parse::<f64>() {
+                    Ok(s) if s > 0.0 && s.is_finite() => {
+                        builder = builder
+                            .checkpoint_interval(std::time::Duration::from_secs_f64(s));
+                    }
+                    _ => {
+                        eprintln!("--checkpoint-interval must be a positive number of seconds");
+                        std::process::exit(2);
+                    }
+                }
             }
             match builder.bind(&bind) {
                 Ok(server) => {

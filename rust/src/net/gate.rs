@@ -7,12 +7,17 @@
 //! Handlers slice long blocking waits into short segments and re-enter the
 //! gate between segments, so a pause never waits on a rate-limiter block.
 
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Condvar, Mutex};
+use std::time::{Duration, Instant};
 
 #[derive(Default)]
 struct GateState {
     paused: bool,
     in_flight: usize,
+    /// When the current pause began (measured from `pause()` entry, so the
+    /// recorded window includes the in-flight drain wait).
+    paused_at: Option<Instant>,
 }
 
 /// Pausable entry gate.
@@ -20,6 +25,10 @@ struct GateState {
 pub struct Gate {
     state: Mutex<GateState>,
     cv: Condvar,
+    /// Nanoseconds requests were blocked by the most recent pause/resume
+    /// cycle — what `benches/checkpoint_pause.rs` tracks against table
+    /// size (DESIGN.md §10).
+    last_pause_nanos: AtomicU64,
 }
 
 impl Gate {
@@ -57,8 +66,10 @@ impl Gate {
 
     /// Stop new entries and wait for all in-flight work to drain.
     pub fn pause(&self) {
+        let started = Instant::now();
         let mut s = self.state.lock().unwrap();
         s.paused = true;
+        s.paused_at = Some(started);
         while s.in_flight > 0 {
             s = self.cv.wait(s).unwrap();
         }
@@ -67,9 +78,19 @@ impl Gate {
     /// Allow entries again.
     pub fn resume(&self) {
         let mut s = self.state.lock().unwrap();
+        if let Some(started) = s.paused_at.take() {
+            self.last_pause_nanos
+                .store(started.elapsed().as_nanos() as u64, Ordering::SeqCst);
+        }
         s.paused = false;
         drop(s);
         self.cv.notify_all();
+    }
+
+    /// How long requests were blocked by the most recent pause/resume
+    /// cycle (zero before the first pause).
+    pub fn last_pause(&self) -> Duration {
+        Duration::from_nanos(self.last_pause_nanos.load(Ordering::SeqCst))
     }
 
     /// Current number of in-flight handlers (diagnostics).
@@ -149,5 +170,16 @@ mod tests {
     fn try_enter_succeeds_when_unpaused() {
         let g = Gate::new();
         assert!(g.try_enter().is_some());
+    }
+
+    #[test]
+    fn pause_window_is_recorded() {
+        let g = Gate::new();
+        assert_eq!(g.last_pause(), Duration::ZERO);
+        g.pause();
+        std::thread::sleep(Duration::from_millis(20));
+        g.resume();
+        assert!(g.last_pause() >= Duration::from_millis(20));
+        assert!(g.try_enter().is_some(), "gate reopened");
     }
 }

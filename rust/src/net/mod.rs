@@ -6,5 +6,5 @@ pub mod server;
 pub mod transport;
 pub mod wire;
 
-pub use server::{Server, ServerBuilder};
+pub use server::{PersistMode, Server, ServerBuilder};
 pub use transport::{dial, MsgStream, TransportListener, IN_PROC_SCHEME};

@@ -18,12 +18,37 @@ use crate::net::transport::{
     self, InProcListener, MsgStream, TcpTransportListener, TransportListener,
 };
 use crate::net::wire::{error_code, Message, WireItem, WireSampleInfo};
+use crate::persist::{PersistConfig, Persister, DEFAULT_SEGMENT_BYTES};
 use std::collections::HashMap;
 use std::net::{SocketAddr, TcpStream};
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
+
+/// How the server persists checkpoints (§3.7 / DESIGN.md §10).
+#[derive(Clone, Debug)]
+pub enum PersistMode {
+    /// Stop-the-world full snapshot per checkpoint — the paper's §3.7
+    /// semantics; the gate pause scales with table size.
+    Full,
+    /// Base snapshot + delta journal + background writer: the checkpoint
+    /// gate pause is a constant-time journal rotation, and fsync happens
+    /// off the request path.
+    Incremental {
+        /// Seal journal segments at about this many bytes.
+        journal_segment_bytes: usize,
+    },
+}
+
+impl PersistMode {
+    /// Incremental persistence with the default segment size.
+    pub fn incremental() -> Self {
+        PersistMode::Incremental {
+            journal_segment_bytes: DEFAULT_SEGMENT_BYTES,
+        }
+    }
+}
 
 /// Long blocking waits are sliced into segments of this length so the
 /// checkpoint gate can drain promptly (see `net::gate`).
@@ -39,6 +64,7 @@ pub struct ServerBuilder {
     checkpoint_dir: Option<PathBuf>,
     load_checkpoint: Option<PathBuf>,
     checkpoint_interval: Option<Duration>,
+    persist_mode: PersistMode,
     in_proc_name: Option<String>,
 }
 
@@ -49,6 +75,7 @@ impl ServerBuilder {
             checkpoint_dir: None,
             load_checkpoint: None,
             checkpoint_interval: None,
+            persist_mode: PersistMode::Full,
             in_proc_name: None,
         }
     }
@@ -83,9 +110,24 @@ impl ServerBuilder {
 
     /// Write a checkpoint automatically every `interval` (§3.7: "potential
     /// data loss ... can be limited through the use of periodic
-    /// checkpointing"). Requires [`ServerBuilder::checkpoint_dir`].
+    /// checkpointing"). Requires [`ServerBuilder::checkpoint_dir`]. Under
+    /// [`PersistMode::Incremental`] each tick is a journal rotation +
+    /// manifest commit, so short intervals stay cheap.
     pub fn checkpoint_interval(mut self, interval: Duration) -> Self {
         self.checkpoint_interval = Some(interval);
+        self
+    }
+
+    /// Select the checkpoint persistence mode (default:
+    /// [`PersistMode::Full`], the seed's stop-the-world behaviour).
+    /// [`PersistMode::Incremental`] requires
+    /// [`ServerBuilder::checkpoint_dir`]; if that directory already holds
+    /// a manifest from a previous incarnation and no explicit
+    /// [`ServerBuilder::load_checkpoint`] was given, the server restores
+    /// it automatically before serving (a plain restart never wipes the
+    /// durable chain).
+    pub fn persist_mode(mut self, mode: PersistMode) -> Self {
+        self.persist_mode = mode;
         self
     }
 
@@ -139,7 +181,35 @@ impl ServerBuilder {
         let store = ChunkStore::with_shards(store_shards);
         if let Some(path) = &self.load_checkpoint {
             crate::core::checkpoint::load(path, &table_order, &store)?;
+        } else if matches!(self.persist_mode, PersistMode::Incremental { .. }) {
+            // Starting the persister rewrites the manifest and garbage-
+            // collects the old chain, so an incremental server that finds
+            // an existing manifest in its checkpoint_dir MUST restore it
+            // first — otherwise a plain restart (no --load) would wipe the
+            // very state this subsystem exists to protect.
+            if let Some(dir) = &self.checkpoint_dir {
+                let manifest = dir.join(crate::persist::MANIFEST_NAME);
+                if manifest.exists() {
+                    crate::core::checkpoint::load(&manifest, &table_order, &store)?;
+                }
+            }
         }
+        // Incremental persistence attaches after any restore: the journal
+        // starts from the fresh base the persister writes at startup.
+        let persister = match (&self.persist_mode, &self.checkpoint_dir) {
+            (PersistMode::Incremental { journal_segment_bytes }, Some(dir)) => Some(
+                Persister::start(
+                    PersistConfig::new(dir.clone()).with_segment_bytes(*journal_segment_bytes),
+                    &table_order,
+                )?,
+            ),
+            (PersistMode::Incremental { .. }, None) => {
+                return Err(Error::InvalidArgument(
+                    "incremental persistence requires checkpoint_dir".into(),
+                ));
+            }
+            (PersistMode::Full, _) => None,
+        };
         let inner = Arc::new(ServerInner {
             tables,
             table_order,
@@ -147,6 +217,7 @@ impl ServerBuilder {
             gate: Gate::new(),
             checkpoint_dir: self.checkpoint_dir,
             checkpoint_seq: AtomicU64::new(0),
+            persister,
             shutdown: AtomicBool::new(false),
         });
 
@@ -224,6 +295,9 @@ struct ServerInner {
     gate: Gate,
     checkpoint_dir: Option<PathBuf>,
     checkpoint_seq: AtomicU64,
+    /// Incremental persistence (DESIGN.md §10); `None` = legacy full
+    /// snapshots.
+    persister: Option<Arc<Persister>>,
     shutdown: AtomicBool,
 }
 
@@ -293,9 +367,18 @@ impl Server {
             .collect()
     }
 
-    /// Write a checkpoint now (also reachable via the client RPC).
+    /// Write a checkpoint now (also reachable via the client RPC). Under
+    /// [`PersistMode::Incremental`] the returned path is the manifest.
     pub fn checkpoint(&self) -> Result<PathBuf> {
         self.inner.checkpoint()
+    }
+
+    /// Duration requests were blocked by the most recent checkpoint's
+    /// §3.7 gate pause — constant under [`PersistMode::Incremental`],
+    /// table-size-proportional under [`PersistMode::Full`]
+    /// (`benches/checkpoint_pause.rs`).
+    pub fn last_checkpoint_pause(&self) -> Duration {
+        self.inner.gate.last_pause()
     }
 
     /// Stop serving: wake blocked clients, close the listeners, join.
@@ -321,6 +404,11 @@ impl Server {
         if let Some(h) = self.checkpoint_thread.take() {
             let _ = h.join();
         }
+        // Final journal rotation + durable manifest, then join the
+        // background writer.
+        if let Some(p) = &self.inner.persister {
+            p.stop(&self.inner.table_order);
+        }
     }
 }
 
@@ -338,6 +426,17 @@ impl ServerInner {
     }
 
     fn checkpoint(&self) -> Result<PathBuf> {
+        if let Some(persister) = &self.persister {
+            // Incremental (§3.7 revisited, DESIGN.md §10): the pause only
+            // covers draining in-flight handlers plus a constant-time
+            // journal rotation — independent of table size. Durability
+            // (segment spill + manifest fsync) is awaited after the gate
+            // has reopened, on the background writer.
+            self.gate.pause();
+            let pending = persister.rotate(&self.table_order);
+            self.gate.resume();
+            return pending.wait();
+        }
         let dir = self
             .checkpoint_dir
             .clone()
@@ -439,7 +538,7 @@ fn resolve_item(
         })
         .collect::<Result<Vec<_>>>()?;
     match &wire.columns {
-        Some(columns) => Item::new_trajectory(
+        Some(columns) => Item::new_trajectory_shared(
             wire.key,
             wire.table.clone(),
             wire.priority,
@@ -925,6 +1024,140 @@ mod tests {
             .unwrap();
         assert_eq!(restored.table("t").unwrap().size(), 1);
         std::fs::remove_dir_all(dir).ok();
+    }
+
+    fn mk_flat_item(key: u64, table: &str, priority: f64) -> crate::core::item::Item {
+        crate::core::item::Item::new(
+            key,
+            table,
+            priority,
+            vec![mk_chunk(key + 500, key as f32)],
+            0,
+            1,
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn incremental_checkpoint_restores_through_standard_load() {
+        let dir = std::env::temp_dir().join(format!(
+            "reverb_persist_srv_{}",
+            std::process::id()
+        ));
+        std::fs::remove_dir_all(&dir).ok();
+        std::fs::create_dir_all(&dir).unwrap();
+        let server = Server::builder()
+            .table(TableConfig::uniform_replay("t", 100))
+            .checkpoint_dir(&dir)
+            .persist_mode(PersistMode::incremental())
+            .serve_in_proc()
+            .unwrap();
+        let table = server.table("t").unwrap();
+        for k in 1..=10 {
+            table
+                .insert_or_assign(mk_flat_item(k, "t", k as f64), None)
+                .unwrap();
+        }
+        table.update_priorities(&[(3, 99.0)]).unwrap();
+        table.delete(&[5]).unwrap();
+        let manifest = server.checkpoint().unwrap();
+        assert!(manifest.ends_with(crate::persist::MANIFEST_NAME));
+        // A mutation after the manifest commit becomes durable via the
+        // final rotation at shutdown.
+        table
+            .insert_or_assign(mk_flat_item(11, "t", 1.0), None)
+            .unwrap();
+        drop(server);
+
+        let restored = Server::builder()
+            .table(TableConfig::uniform_replay("t", 100))
+            .load_checkpoint(dir.join(crate::persist::MANIFEST_NAME))
+            .serve_in_proc()
+            .unwrap();
+        let rt = restored.table("t").unwrap();
+        assert_eq!(rt.size(), 10, "10 inserts - 1 delete + 1 late insert");
+        assert!(!rt.contains(5));
+        assert!(rt.contains(11));
+        let (items, inserts, _samples) = rt.snapshot();
+        assert_eq!(inserts, 11, "insert counter restored exactly");
+        let p3 = items.iter().find(|i| i.key == 3).unwrap();
+        assert_eq!(p3.priority, 99.0, "priority update replayed");
+        // Payloads decode after restore.
+        let s = rt.sample(None).unwrap();
+        assert!(s.item.materialize().is_ok());
+        drop(restored);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn incremental_restart_without_load_restores_automatically() {
+        let dir = std::env::temp_dir().join(format!(
+            "reverb_persist_autorestore_{}",
+            std::process::id()
+        ));
+        std::fs::remove_dir_all(&dir).ok();
+        std::fs::create_dir_all(&dir).unwrap();
+        let mk = || {
+            Server::builder()
+                .table(TableConfig::uniform_replay("t", 100))
+                .checkpoint_dir(&dir)
+                .persist_mode(PersistMode::incremental())
+                .serve_in_proc()
+                .unwrap()
+        };
+        let server = mk();
+        let table = server.table("t").unwrap();
+        for k in 1..=3 {
+            table
+                .insert_or_assign(mk_flat_item(k, "t", 1.0), None)
+                .unwrap();
+        }
+        server.checkpoint().unwrap();
+        drop(server);
+        // A plain restart (same flags, no explicit load) must restore the
+        // chain rather than wipe it.
+        let restarted = mk();
+        assert_eq!(restarted.table("t").unwrap().size(), 3);
+        drop(restarted);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn incremental_requires_checkpoint_dir() {
+        let r = Server::builder()
+            .table(TableConfig::uniform_replay("t", 10))
+            .persist_mode(PersistMode::incremental())
+            .serve_in_proc();
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn periodic_incremental_commits_manifest() {
+        let dir = std::env::temp_dir().join(format!(
+            "reverb_persist_periodic_{}",
+            std::process::id()
+        ));
+        std::fs::remove_dir_all(&dir).ok();
+        std::fs::create_dir_all(&dir).unwrap();
+        let server = Server::builder()
+            .table(TableConfig::uniform_replay("t", 10))
+            .checkpoint_dir(&dir)
+            .persist_mode(PersistMode::incremental())
+            .checkpoint_interval(Duration::from_millis(60))
+            .serve_in_proc()
+            .unwrap();
+        let table = server.table("t").unwrap();
+        table
+            .insert_or_assign(mk_flat_item(1, "t", 1.0), None)
+            .unwrap();
+        std::thread::sleep(Duration::from_millis(300));
+        let m = crate::persist::manifest::read_manifest(
+            &dir.join(crate::persist::MANIFEST_NAME),
+        )
+        .unwrap();
+        assert!(m.watermark >= 1, "periodic rotation committed the insert");
+        drop(server);
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]

@@ -47,8 +47,10 @@ pub struct WireItem {
     pub offset: u64,
     pub length: u64,
     pub times_sampled: u32,
-    /// Per-column slices (`Some` = trajectory item, v2 frame).
-    pub columns: Option<Vec<TrajectoryColumn>>,
+    /// Per-column slices (`Some` = trajectory item, v2 frame). Shared with
+    /// the table's item on the server sampling path, so building a
+    /// response copies a pointer rather than the column metadata.
+    pub columns: Option<Arc<Vec<TrajectoryColumn>>>,
 }
 
 /// One sampled item entry in a [`Message::SampleData`] response.
@@ -184,7 +186,7 @@ fn put_wire_item_common<W: Write>(w: &mut W, item: &WireItem) -> Result<()> {
 /// v2 item layout: the v1 fields followed by an optional column list.
 fn put_wire_item_v2<W: Write>(w: &mut W, item: &WireItem) -> Result<()> {
     put_wire_item_common(w, item)?;
-    TrajectoryColumn::encode_list(&item.columns, w)
+    TrajectoryColumn::encode_list(item.columns.as_deref().map(|v| v.as_slice()), w)
 }
 
 fn get_wire_item<R: Read>(r: &mut R) -> Result<WireItem> {
@@ -210,7 +212,7 @@ fn get_wire_item<R: Read>(r: &mut R) -> Result<WireItem> {
 
 fn get_wire_item_v2<R: Read>(r: &mut R) -> Result<WireItem> {
     let mut item = get_wire_item(r)?;
-    item.columns = TrajectoryColumn::decode_list(r)?;
+    item.columns = TrajectoryColumn::decode_list(r)?.map(Arc::new);
     Ok(item)
 }
 
@@ -833,7 +835,7 @@ mod tests {
             let columns = if rng.gen_range(2) == 0 {
                 None
             } else {
-                Some(
+                Some(Arc::new(
                     (0..rng.gen_range(4) + 1)
                         .map(|c| TrajectoryColumn {
                             name: format!("col_{c}"),
@@ -847,7 +849,7 @@ mod tests {
                                 .collect(),
                         })
                         .collect(),
-                )
+                ))
             };
             let item = WireItem {
                 key: rng.next_u64(),
@@ -879,7 +881,7 @@ mod tests {
             offset: 0,
             length: 3,
             times_sampled: 0,
-            columns: Some(vec![
+            columns: Some(Arc::new(vec![
                 TrajectoryColumn {
                     name: "obs".into(),
                     squeeze: false,
@@ -893,7 +895,7 @@ mod tests {
                     squeeze: true,
                     slices: vec![ChunkSlice { chunk_key: 12, offset: 0, length: 1 }],
                 },
-            ]),
+            ])),
         }
     }
 

@@ -1,0 +1,287 @@
+//! The change journal: an in-memory buffer of table mutations that seals
+//! into segments for the background writer (DESIGN.md §10).
+//!
+//! A [`Journal`] is attached to every table of a persisting server as its
+//! [`MutationSink`]. Each landed mutation appends one [`Op`] record under a
+//! short global mutex hold — the record stores `Arc<Chunk>` handles and an
+//! interned table name, never encoded payload bytes, so an append costs a
+//! sequence assignment, one `Vec` of chunk handles (inserts only), and a
+//! few `Arc` bumps; all serialization and file I/O happen on the writer
+//! thread. The single journal mutex is shared by all shards — if it ever
+//! shows contention under `--persist delta` at high shard counts, the
+//! ROADMAP names per-shard journal buffers (seal-time sequence
+//! reconciliation) as the follow-up.
+//!
+//! Chunks are embedded into the journal exactly once per durable chain: a
+//! per-journal set tracks every chunk key already present in the base, a
+//! sealed segment, or the active buffer, and an insert record only carries
+//! the chunks that set has not seen. Compaction rebuilds the set from the
+//! new base plus the segments it did not fold (see
+//! [`Journal::compact_reset`]), so a chunk whose only durable copy was
+//! garbage-collected is re-embedded if a later item references it again.
+//!
+//! Sequence numbers are assigned under the journal mutex, which the table
+//! calls into while holding the mutated shard's lock — so two ops on the
+//! same key are journaled in their true commit order, and replaying records
+//! in sequence order reproduces the final table state.
+
+use crate::core::chunk::Chunk;
+use crate::core::item::{Item, TrajectoryColumn};
+use crate::core::table::MutationSink;
+use crate::error::Result;
+use std::collections::HashSet;
+use std::sync::mpsc::Sender;
+use std::sync::{Arc, Mutex};
+
+/// Rough per-record bookkeeping overhead (framing, seq, table name) used
+/// for the segment-size trigger; payload chunks add their encoded length.
+const RECORD_OVERHEAD: usize = 96;
+
+/// One journaled table mutation. Table names are interned `Arc<str>`s so
+/// the per-mutation append never allocates for the name (see
+/// [`Journal::record_named`]).
+#[derive(Clone)]
+pub enum Op {
+    /// A new item landed (priority updates of existing keys are `Update`).
+    Insert {
+        table: Arc<str>,
+        item: JournaledItem,
+    },
+    /// An item left the table (explicit delete, eviction, consume-on-sample
+    /// removal, or reset).
+    Delete { table: Arc<str>, key: u64 },
+    /// A priority change.
+    Update { table: Arc<str>, key: u64, priority: f64 },
+}
+
+/// The insert payload the journal retains: the [`Item`] minus its owned
+/// table name (the op carries the interned name), so the hot-path capture
+/// is one `Vec` of chunk handles plus `Arc` bumps — no `String` clone.
+#[derive(Clone)]
+pub struct JournaledItem {
+    pub key: u64,
+    pub priority: f64,
+    pub offset: u64,
+    pub length: u64,
+    pub times_sampled: u32,
+    pub chunks: Vec<Arc<Chunk>>,
+    pub columns: Option<Arc<Vec<TrajectoryColumn>>>,
+}
+
+impl JournaledItem {
+    pub fn of(item: &Item) -> JournaledItem {
+        JournaledItem {
+            key: item.key,
+            priority: item.priority,
+            offset: item.offset as u64,
+            length: item.length as u64,
+            times_sampled: item.times_sampled,
+            chunks: item.chunks.clone(),
+            columns: item.columns.clone(),
+        }
+    }
+
+    /// Serialize the item body. Byte-identical to the checkpoint item
+    /// codec (`checkpoint::encode_item`/`decode_item`, v2 layout) — the
+    /// segment reader decodes journal inserts with `decode_item`.
+    pub fn encode<W: std::io::Write>(&self, w: &mut W) -> Result<()> {
+        use crate::io::*;
+        put_u64(w, self.key)?;
+        put_f64(w, self.priority)?;
+        put_u64(w, self.offset)?;
+        put_u64(w, self.length)?;
+        put_u32(w, self.times_sampled)?;
+        put_u32(w, self.chunks.len() as u32)?;
+        for c in &self.chunks {
+            put_u64(w, c.key)?;
+        }
+        TrajectoryColumn::encode_list(self.columns.as_deref().map(|v| v.as_slice()), w)
+    }
+}
+
+/// A sealed run of journal records plus the chunks first referenced in it,
+/// handed to the background writer to spill and fsync.
+pub struct SealedSegment {
+    pub index: u64,
+    pub first_seq: u64,
+    pub last_seq: u64,
+    /// Chunks whose first durable appearance is this segment, in reference
+    /// order (each precedes every record that needs it on replay).
+    pub new_chunks: Vec<Arc<Chunk>>,
+    /// `(sequence, op)` records in sequence order.
+    pub records: Vec<(u64, Op)>,
+}
+
+#[derive(Default)]
+struct Active {
+    records: Vec<(u64, Op)>,
+    new_chunks: Vec<Arc<Chunk>>,
+    approx_bytes: usize,
+}
+
+struct Inner {
+    seq: u64,
+    next_index: u64,
+    active: Active,
+    /// Interned table names: the per-mutation append clones an `Arc<str>`
+    /// instead of allocating a `String` while the shard lock is held.
+    names: std::collections::HashMap<String, Arc<str>>,
+    /// Keys of every chunk already embedded in the durable chain (base,
+    /// sealed segment, or the active buffer).
+    persisted_chunks: HashSet<u64>,
+    /// Chunk keys first embedded per sealed segment, pruned at compaction —
+    /// lets [`Journal::compact_reset`] keep exactly the still-durable keys.
+    sealed_chunk_keys: Vec<(u64, Vec<u64>)>,
+    /// Channel to the background writer. Kept inside the mutex (it is only
+    /// used while sealing, which already holds it) so `Journal` is `Sync`
+    /// without requiring `Sender: Sync` of the toolchain.
+    tx: Sender<super::writer::Cmd>,
+}
+
+/// The mutation journal shared by all tables of one persisting server.
+pub struct Journal {
+    inner: Mutex<Inner>,
+    segment_bytes: usize,
+}
+
+impl Journal {
+    /// `base_chunks` are the keys already durable in the initial base;
+    /// `first_index` is the index of the first segment this journal will
+    /// seal; `start_seq` continues the sequence space of a restored chain.
+    pub(crate) fn new(
+        tx: Sender<super::writer::Cmd>,
+        segment_bytes: usize,
+        base_chunks: HashSet<u64>,
+        first_index: u64,
+        start_seq: u64,
+    ) -> Journal {
+        Journal {
+            inner: Mutex::new(Inner {
+                seq: start_seq,
+                next_index: first_index,
+                active: Active::default(),
+                names: std::collections::HashMap::new(),
+                persisted_chunks: base_chunks,
+                sealed_chunk_keys: Vec::new(),
+                tx,
+            }),
+            segment_bytes: segment_bytes.max(256),
+        }
+    }
+
+    /// Append one record. Called from table mutation paths (under the
+    /// shard lock); never blocks on I/O. Seals the active segment to the
+    /// background writer when it crosses the configured size.
+    pub fn record(&self, op: Op) {
+        let mut g = self.inner.lock().unwrap();
+        self.push_locked(&mut g, op);
+    }
+
+    /// Like [`Journal::record`], but interning `table` first: steady-state
+    /// appends clone an `Arc<str>` rather than allocating for the name.
+    pub fn record_named(&self, table: &str, make: impl FnOnce(Arc<str>) -> Op) {
+        let mut g = self.inner.lock().unwrap();
+        let name = match g.names.get(table) {
+            Some(n) => n.clone(),
+            None => {
+                let n: Arc<str> = Arc::from(table);
+                g.names.insert(table.to_string(), n.clone());
+                n
+            }
+        };
+        let op = make(name);
+        self.push_locked(&mut g, op);
+    }
+
+    fn push_locked(&self, g: &mut Inner, op: Op) {
+        g.seq += 1;
+        let seq = g.seq;
+        let mut added = RECORD_OVERHEAD;
+        if let Op::Insert { item, .. } = &op {
+            for c in &item.chunks {
+                if g.persisted_chunks.insert(c.key) {
+                    added += c.encoded_len() + RECORD_OVERHEAD;
+                    g.active.new_chunks.push(c.clone());
+                }
+            }
+        }
+        g.active.approx_bytes += added;
+        g.active.records.push((seq, op));
+        if g.active.approx_bytes >= self.segment_bytes {
+            self.seal_locked(g);
+        }
+    }
+
+    /// Seal the active segment (if non-empty) and return the watermark:
+    /// the highest sequence number assigned so far. This is the entirety
+    /// of the work done under the §3.7 gate pause — a buffer swap, never a
+    /// table walk.
+    pub fn rotate(&self) -> u64 {
+        let mut g = self.inner.lock().unwrap();
+        self.seal_locked(&mut g);
+        g.seq
+    }
+
+    fn seal_locked(&self, g: &mut Inner) {
+        if g.active.records.is_empty() {
+            return;
+        }
+        let active = std::mem::take(&mut g.active);
+        let index = g.next_index;
+        g.next_index += 1;
+        let first_seq = active.records.first().map(|(s, _)| *s).unwrap_or(g.seq);
+        let last_seq = active.records.last().map(|(s, _)| *s).unwrap_or(g.seq);
+        g.sealed_chunk_keys
+            .push((index, active.new_chunks.iter().map(|c| c.key).collect()));
+        // Writer gone (shutdown race): drop the segment silently; the
+        // server is tearing down and the final commit already happened.
+        let _ = g.tx.send(super::writer::Cmd::Segment(SealedSegment {
+            index,
+            first_seq,
+            last_seq,
+            new_chunks: active.new_chunks,
+            records: active.records,
+        }));
+    }
+
+    /// Called by the background writer after folding segments up to (and
+    /// including) `folded_index` into a new base whose chunk keys are
+    /// `base_keys`: rebuild the persisted-chunk set as base keys plus the
+    /// keys of still-unfolded sealed segments plus the active buffer, so
+    /// chunks dropped from the durable chain get re-embedded on next use.
+    pub(crate) fn compact_reset(&self, folded_index: u64, mut base_keys: HashSet<u64>) {
+        let mut g = self.inner.lock().unwrap();
+        g.sealed_chunk_keys.retain(|(idx, _)| *idx > folded_index);
+        for (_, keys) in &g.sealed_chunk_keys {
+            base_keys.extend(keys.iter().copied());
+        }
+        base_keys.extend(g.active.new_chunks.iter().map(|c| c.key));
+        g.persisted_chunks = base_keys;
+    }
+
+    /// Current sequence watermark (diagnostics/tests).
+    pub fn watermark(&self) -> u64 {
+        self.inner.lock().unwrap().seq
+    }
+}
+
+impl MutationSink for Journal {
+    fn on_insert(&self, table: &str, item: &Item) {
+        self.record_named(table, |table| Op::Insert {
+            table,
+            item: JournaledItem::of(item),
+        });
+    }
+
+    fn on_delete(&self, table: &str, key: u64) {
+        self.record_named(table, |table| Op::Delete { table, key });
+    }
+
+    fn on_update(&self, table: &str, key: u64, priority: f64) {
+        self.record_named(table, |table| Op::Update {
+            table,
+            key,
+            priority,
+        });
+    }
+}

@@ -1,0 +1,231 @@
+//! The v3 checkpoint manifest (`RVBCKPT3`): a small, atomically replaced
+//! file naming the current base snapshot and the live journal segments.
+//!
+//! Layout (little-endian, see `crate::io`):
+//!
+//! ```text
+//! magic "RVBCKPT3"
+//! u64 watermark                  — counters below are exact at this seq
+//! string base file name          — a v2-format full snapshot in the same dir
+//! u64 first_unlisted_index       — recovery scans only segment files with
+//!                                  index >= this (and not listed below)
+//! u32 ncounters
+//!   per table: name, u64 inserts, u64 samples
+//! u32 nsegments
+//!   per segment: file name, u64 bytes, u32 crc32, u64 index,
+//!                u64 first_seq, u64 last_seq
+//! u32 crc32 of everything above
+//! ```
+//!
+//! The manifest is tiny (independent of table size) and is the only file
+//! replaced in place — base and segment files are immutable once written,
+//! so every crash leaves either the old manifest with its complete chain or
+//! the new one with its complete chain on disk.
+
+use crate::core::checkpoint::MAGIC_V3;
+use crate::error::{Error, Result};
+use crate::io::*;
+use crate::persist::segment::SegmentMeta;
+use crate::util::crc32;
+use std::io::{Read, Write};
+use std::path::{Path, PathBuf};
+
+/// File name of the manifest inside a checkpoint directory.
+pub const MANIFEST_NAME: &str = "MANIFEST.rvb3";
+
+/// Rate-limiter counters of one table, captured at the watermark.
+#[derive(Clone, Debug)]
+pub struct TableCounters {
+    pub name: String,
+    pub inserts: u64,
+    pub samples: u64,
+}
+
+/// The decoded manifest.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub watermark: u64,
+    pub base: String,
+    pub first_unlisted_index: u64,
+    pub counters: Vec<TableCounters>,
+    pub segments: Vec<SegmentMeta>,
+}
+
+/// Atomically write `m` as `dir/MANIFEST.rvb3` (tmp + fsync + rename).
+pub fn write_manifest(dir: &Path, m: &Manifest) -> Result<PathBuf> {
+    let mut body = Vec::with_capacity(256);
+    body.extend_from_slice(MAGIC_V3);
+    put_u64(&mut body, m.watermark)?;
+    put_string(&mut body, &m.base)?;
+    put_u64(&mut body, m.first_unlisted_index)?;
+    put_u32(&mut body, m.counters.len() as u32)?;
+    for c in &m.counters {
+        put_string(&mut body, &c.name)?;
+        put_u64(&mut body, c.inserts)?;
+        put_u64(&mut body, c.samples)?;
+    }
+    put_u32(&mut body, m.segments.len() as u32)?;
+    for s in &m.segments {
+        put_string(&mut body, &s.file)?;
+        put_u64(&mut body, s.bytes)?;
+        put_u32(&mut body, s.crc)?;
+        put_u64(&mut body, s.index)?;
+        put_u64(&mut body, s.first_seq)?;
+        put_u64(&mut body, s.last_seq)?;
+    }
+    let crc = crc32::crc32(&body);
+    put_u32(&mut body, crc)?;
+
+    let path = dir.join(MANIFEST_NAME);
+    let tmp = dir.join(format!("{MANIFEST_NAME}.tmp"));
+    let mut file = std::fs::File::create(&tmp)?;
+    file.write_all(&body)?;
+    file.sync_all()?;
+    drop(file);
+    std::fs::rename(&tmp, &path)?;
+    // The rename itself must be durable before a checkpoint RPC acks.
+    sync_dir(dir)?;
+    Ok(path)
+}
+
+/// Read and CRC-verify a manifest file.
+pub fn read_manifest(path: &Path) -> Result<Manifest> {
+    let bytes = std::fs::read(path)?;
+    if bytes.len() < MAGIC_V3.len() + 4 || &bytes[..MAGIC_V3.len()] != MAGIC_V3 {
+        return Err(Error::CorruptCheckpoint(format!(
+            "{} is not a checkpoint manifest",
+            path.display()
+        )));
+    }
+    let (body, tail) = bytes.split_at(bytes.len() - 4);
+    let stored = u32::from_le_bytes(tail.try_into().unwrap());
+    if crc32::crc32(body) != stored {
+        return Err(Error::CorruptCheckpoint("manifest crc mismatch".into()));
+    }
+    let mut r = std::io::Cursor::new(&body[MAGIC_V3.len()..]);
+    let watermark = get_u64(&mut r)?;
+    let base = get_string(&mut r)?;
+    let first_unlisted_index = get_u64(&mut r)?;
+    let ncounters = get_u32(&mut r)? as usize;
+    if ncounters > 1 << 16 {
+        return Err(Error::Decode("too many manifest counters".into()));
+    }
+    let counters = (0..ncounters)
+        .map(|_| {
+            Ok(TableCounters {
+                name: get_string(&mut r)?,
+                inserts: get_u64(&mut r)?,
+                samples: get_u64(&mut r)?,
+            })
+        })
+        .collect::<Result<Vec<_>>>()?;
+    let nsegments = get_u32(&mut r)? as usize;
+    if nsegments > 1 << 20 {
+        return Err(Error::Decode("too many manifest segments".into()));
+    }
+    let segments = (0..nsegments)
+        .map(|_| {
+            Ok(SegmentMeta {
+                file: get_string(&mut r)?,
+                bytes: get_u64(&mut r)?,
+                crc: get_u32(&mut r)?,
+                index: get_u64(&mut r)?,
+                first_seq: get_u64(&mut r)?,
+                last_seq: get_u64(&mut r)?,
+            })
+        })
+        .collect::<Result<Vec<_>>>()?;
+    // Reject file names that escape the checkpoint directory.
+    for name in std::iter::once(base.as_str()).chain(segments.iter().map(|s| s.file.as_str())) {
+        if name.is_empty() || name.contains('/') || name.contains('\\') || name.contains("..") {
+            return Err(Error::CorruptCheckpoint(format!(
+                "manifest references suspicious file name {name:?}"
+            )));
+        }
+    }
+    let mut rest = Vec::new();
+    r.read_to_end(&mut rest)?;
+    if !rest.is_empty() {
+        return Err(Error::CorruptCheckpoint(
+            "trailing bytes after manifest".into(),
+        ));
+    }
+    Ok(Manifest {
+        watermark,
+        base,
+        first_unlisted_index,
+        counters,
+        segments,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Manifest {
+        Manifest {
+            watermark: 42,
+            base: "base_000003.rvb".into(),
+            first_unlisted_index: 9,
+            counters: vec![TableCounters {
+                name: "replay".into(),
+                inserts: 100,
+                samples: 900,
+            }],
+            segments: vec![SegmentMeta {
+                file: "seg_000007.rvbj".into(),
+                bytes: 1234,
+                crc: 0xDEAD_BEEF,
+                index: 7,
+                first_seq: 10,
+                last_seq: 41,
+            }],
+        }
+    }
+
+    fn tmpdir(name: &str) -> std::path::PathBuf {
+        let d = std::env::temp_dir().join(format!("reverb_mani_{name}_{}", std::process::id()));
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    #[test]
+    fn roundtrip() {
+        let dir = tmpdir("roundtrip");
+        let path = write_manifest(&dir, &sample()).unwrap();
+        assert!(path.ends_with(MANIFEST_NAME));
+        let back = read_manifest(&path).unwrap();
+        assert_eq!(back.watermark, 42);
+        assert_eq!(back.base, "base_000003.rvb");
+        assert_eq!(back.first_unlisted_index, 9);
+        assert_eq!(back.counters[0].name, "replay");
+        assert_eq!(back.counters[0].samples, 900);
+        assert_eq!(back.segments[0].file, "seg_000007.rvbj");
+        assert_eq!(back.segments[0].crc, 0xDEAD_BEEF);
+        assert_eq!(back.segments[0].last_seq, 41);
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn corruption_rejected() {
+        let dir = tmpdir("corrupt");
+        let path = write_manifest(&dir, &sample()).unwrap();
+        let mut bytes = std::fs::read(&path).unwrap();
+        let mid = bytes.len() / 2;
+        bytes[mid] ^= 0xFF;
+        std::fs::write(&path, &bytes).unwrap();
+        assert!(read_manifest(&path).is_err());
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn path_escapes_rejected() {
+        let dir = tmpdir("escape");
+        let mut m = sample();
+        m.base = "../outside.rvb".into();
+        write_manifest(&dir, &m).unwrap();
+        assert!(read_manifest(&dir.join(MANIFEST_NAME)).is_err());
+        std::fs::remove_dir_all(dir).ok();
+    }
+}

@@ -1,0 +1,459 @@
+//! The background persistence writer: a dedicated thread that owns all
+//! file I/O of the incremental checkpoint chain (DESIGN.md §10).
+//!
+//! Sealed journal segments arrive over a channel, are spilled to disk and
+//! fsynced *off the request path*; manifest commits (triggered by the
+//! checkpoint RPC, the periodic checkpointer, or shutdown) atomically
+//! publish the current chain; and when the on-disk journal outgrows the
+//! base, the writer folds base + segments into a fresh base entirely from
+//! files — live tables are never touched, so compaction costs the data
+//! plane nothing.
+
+use crate::core::checkpoint::{self, CheckpointData};
+use crate::core::table::Table;
+use crate::error::{Error, Result};
+use crate::persist::journal::{Journal, Op, SealedSegment};
+use crate::persist::manifest::{self, Manifest, TableCounters, MANIFEST_NAME};
+use crate::persist::segment::{self, SegmentMeta};
+use crate::persist::ReplayState;
+use std::collections::HashSet;
+use std::path::{Path, PathBuf};
+use std::sync::mpsc::{self, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+
+/// Default journal segment size (~4 MiB): large enough that fsyncs
+/// amortize, small enough that the crash-loss window stays tight between
+/// rotations.
+pub const DEFAULT_SEGMENT_BYTES: usize = 4 << 20;
+
+/// Incremental persistence configuration.
+#[derive(Clone, Debug)]
+pub struct PersistConfig {
+    /// Directory holding base snapshots, journal segments, and the
+    /// manifest.
+    pub dir: PathBuf,
+    /// Seal the active journal segment when it exceeds about this size.
+    pub segment_bytes: usize,
+    /// Compact when on-disk journal bytes exceed
+    /// `max(compact_min_bytes, compact_factor × base bytes)`.
+    pub compact_min_bytes: u64,
+    pub compact_factor: f64,
+}
+
+impl PersistConfig {
+    pub fn new(dir: impl Into<PathBuf>) -> Self {
+        PersistConfig {
+            dir: dir.into(),
+            segment_bytes: DEFAULT_SEGMENT_BYTES,
+            compact_min_bytes: 32 << 20,
+            compact_factor: 4.0,
+        }
+    }
+
+    pub fn with_segment_bytes(mut self, n: usize) -> Self {
+        self.segment_bytes = n;
+        self
+    }
+
+    pub fn with_compaction(mut self, min_bytes: u64, factor: f64) -> Self {
+        self.compact_min_bytes = min_bytes;
+        self.compact_factor = factor;
+        self
+    }
+}
+
+/// Messages into the writer thread.
+pub(crate) enum Cmd {
+    Segment(SealedSegment),
+    Commit {
+        watermark: u64,
+        counters: Vec<TableCounters>,
+        done: Sender<Result<PathBuf>>,
+    },
+    /// Drain marker: acked once everything queued before it is on disk,
+    /// without committing a manifest (tests/diagnostics).
+    Barrier { done: Sender<()> },
+    Shutdown,
+}
+
+/// Handle on an in-flight manifest commit; resolves once the chain up to
+/// the rotation watermark is durable.
+pub struct PendingCommit {
+    rx: Receiver<Result<PathBuf>>,
+}
+
+impl PendingCommit {
+    pub fn wait(self) -> Result<PathBuf> {
+        match self.rx.recv() {
+            Ok(r) => r,
+            Err(_) => Err(Error::Cancelled("persist writer stopped".into())),
+        }
+    }
+}
+
+/// The persist subsystem facade owned by a server: journal + writer thread.
+pub struct Persister {
+    journal: Arc<Journal>,
+    /// Commands to the writer thread (mutexed so `Persister` is `Sync`
+    /// without requiring `Sender: Sync`; all senders here are cold paths).
+    tx: Mutex<Sender<Cmd>>,
+    handle: Mutex<Option<std::thread::JoinHandle<()>>>,
+    dir: PathBuf,
+}
+
+/// One past every base/segment index already in `dir`, so a fresh
+/// incarnation never clobbers files a restore may have read from.
+fn next_generation(dir: &Path) -> Result<u64> {
+    let mut max = 0u64;
+    for entry in std::fs::read_dir(dir)? {
+        let name = entry?.file_name();
+        let name = name.to_string_lossy();
+        let idx = segment::parse_segment_index(&name).or_else(|| {
+            name.strip_prefix("base_")
+                .and_then(|r| r.strip_suffix(".rvb"))
+                .and_then(|r| r.parse().ok())
+        });
+        if let Some(idx) = idx {
+            max = max.max(idx + 1);
+        }
+    }
+    Ok(max)
+}
+
+/// Remove every chain file except `keep_base` and the manifest: leftover
+/// bases/segments from previous incarnations are already folded into the
+/// fresh base (the server restored before starting the persister) or were
+/// deliberately not restored.
+fn cleanup_dir(dir: &Path, keep_base: &str) -> Result<()> {
+    for entry in std::fs::read_dir(dir)? {
+        let entry = entry?;
+        let name = entry.file_name();
+        let name = name.to_string_lossy().into_owned();
+        let stale_base = name.starts_with("base_") && name.ends_with(".rvb") && name != keep_base;
+        let stale_seg = segment::parse_segment_index(&name).is_some();
+        let stale_tmp = name.ends_with(".tmp");
+        if stale_base || stale_seg || stale_tmp {
+            let _ = std::fs::remove_file(entry.path());
+        }
+    }
+    Ok(())
+}
+
+impl Persister {
+    /// Start incremental persistence over `tables`: write a fresh base
+    /// snapshot of their current state (this is the one full-table walk,
+    /// paid at startup — never during serving), publish a manifest, spawn
+    /// the background writer, and attach the journal to every table.
+    ///
+    /// Call after any checkpoint restore and before serving traffic.
+    pub fn start(cfg: PersistConfig, tables: &[Arc<Table>]) -> Result<Arc<Persister>> {
+        std::fs::create_dir_all(&cfg.dir)?;
+        let generation = next_generation(&cfg.dir)?;
+        let base_name = format!("base_{generation:06}.rvb");
+        let data = checkpoint::snapshot_tables(tables);
+        checkpoint::write_full(&cfg.dir.join(&base_name), &data)?;
+        let base_bytes = std::fs::metadata(cfg.dir.join(&base_name))?.len();
+        let counters: Vec<TableCounters> = data
+            .tables
+            .iter()
+            .map(|t| TableCounters {
+                name: t.name.clone(),
+                inserts: t.inserts,
+                samples: t.samples,
+            })
+            .collect();
+        let base_keys: HashSet<u64> = data.chunks.keys().copied().collect();
+        manifest::write_manifest(
+            &cfg.dir,
+            &Manifest {
+                watermark: 0,
+                base: base_name.clone(),
+                first_unlisted_index: generation,
+                counters: counters.clone(),
+                segments: Vec::new(),
+            },
+        )?;
+        cleanup_dir(&cfg.dir, &base_name)?;
+
+        let (tx, rx) = mpsc::channel();
+        let journal = Arc::new(Journal::new(
+            tx.clone(),
+            cfg.segment_bytes,
+            base_keys.clone(),
+            generation,
+            0,
+        ));
+        let state = WriterState {
+            dir: cfg.dir.clone(),
+            compact_min_bytes: cfg.compact_min_bytes,
+            compact_factor: cfg.compact_factor,
+            generation,
+            base: base_name,
+            base_bytes,
+            segments: Vec::new(),
+            journal_bytes: 0,
+            next_unlisted: generation,
+            watermark: 0,
+            counters,
+            journal: journal.clone(),
+            durable_chunks: base_keys,
+            poisoned: None,
+        };
+        let handle = std::thread::Builder::new()
+            .name("reverb-persist".into())
+            .spawn(move || run(state, rx))
+            .expect("spawn persist writer");
+        for t in tables {
+            t.set_mutation_sink(journal.clone())?;
+        }
+        Ok(Arc::new(Persister {
+            journal,
+            tx: Mutex::new(tx),
+            handle: Mutex::new(Some(handle)),
+            dir: cfg.dir,
+        }))
+    }
+
+    /// The §3.7 checkpoint, incremental flavour. Call with the gate
+    /// paused: captures per-table counters and seals the journal — both
+    /// constant-time in table size — and queues a manifest commit. Resume
+    /// the gate, then [`PendingCommit::wait`] for durability.
+    pub fn rotate(&self, tables: &[Arc<Table>]) -> PendingCommit {
+        let counters = tables
+            .iter()
+            .map(|t| {
+                let i = t.info();
+                TableCounters {
+                    name: t.name().to_string(),
+                    inserts: i.inserts,
+                    samples: i.samples,
+                }
+            })
+            .collect();
+        let watermark = self.journal.rotate();
+        let (done, rx) = mpsc::channel();
+        let _ = self.tx.lock().unwrap().send(Cmd::Commit {
+            watermark,
+            counters,
+            done,
+        });
+        PendingCommit { rx }
+    }
+
+    /// Path of the live manifest (what the checkpoint RPC reports and what
+    /// `--load` takes to restore).
+    pub fn manifest_path(&self) -> PathBuf {
+        self.dir.join(MANIFEST_NAME)
+    }
+
+    /// Direct journal access (tests/diagnostics).
+    pub fn journal(&self) -> &Arc<Journal> {
+        &self.journal
+    }
+
+    /// Wait until the background writer has spilled everything sealed so
+    /// far, without committing a manifest (tests/diagnostics — lets a
+    /// crash test observe fully written yet unlisted tail segments).
+    pub fn sync_writer(&self) -> Result<()> {
+        let (done, rx) = mpsc::channel();
+        let _ = self.tx.lock().unwrap().send(Cmd::Barrier { done });
+        rx.recv()
+            .map_err(|_| Error::Cancelled("persist writer stopped".into()))
+    }
+
+    /// Final rotation + durable manifest, then join the writer thread.
+    /// Idempotent.
+    pub fn stop(&self, tables: &[Arc<Table>]) {
+        let handle = {
+            let mut h = self.handle.lock().unwrap();
+            match h.take() {
+                Some(handle) => handle,
+                None => return,
+            }
+        };
+        if let Err(e) = self.rotate(tables).wait() {
+            log::error!("persist: final shutdown commit failed — mutations since the last durable manifest are lost: {e}");
+        }
+        let _ = self.tx.lock().unwrap().send(Cmd::Shutdown);
+        let _ = handle.join();
+    }
+}
+
+struct WriterState {
+    dir: PathBuf,
+    compact_min_bytes: u64,
+    compact_factor: f64,
+    /// Base-file generation counter (bumped per compaction).
+    generation: u64,
+    base: String,
+    base_bytes: u64,
+    segments: Vec<SegmentMeta>,
+    /// On-disk journal bytes since the last compaction.
+    journal_bytes: u64,
+    /// Lowest segment index a crash-recovery scan should consider.
+    next_unlisted: u64,
+    watermark: u64,
+    counters: Vec<TableCounters>,
+    journal: Arc<Journal>,
+    /// Authoritative set of chunk keys durable in the current chain (base
+    /// + written segments). The journal's own dedup set is an optimistic
+    /// mirror that can briefly run ahead of a concurrent compaction's
+    /// garbage collection; [`WriterState::handle_segment`] re-checks every
+    /// record against this set and re-embeds anything missing, so chain
+    /// integrity never depends on the race-prone mirror.
+    durable_chunks: HashSet<u64>,
+    /// Sticky spill failure: once a segment fails to reach disk the chain
+    /// has a hole, so every later segment is dropped and every later
+    /// commit must fail loudly instead of publishing a manifest that
+    /// claims durability past the hole.
+    poisoned: Option<String>,
+}
+
+fn run(mut st: WriterState, rx: Receiver<Cmd>) {
+    while let Ok(cmd) = rx.recv() {
+        match cmd {
+            Cmd::Segment(seg) => {
+                let index = seg.index;
+                if let Err(e) = st.handle_segment(seg) {
+                    log::error!("persist: segment spill failed: {e}");
+                    st.poisoned
+                        .get_or_insert_with(|| format!("segment {index} spill failed: {e}"));
+                }
+            }
+            Cmd::Commit {
+                watermark,
+                counters,
+                done,
+            } => {
+                let _ = done.send(st.commit(watermark, counters));
+            }
+            Cmd::Barrier { done } => {
+                let _ = done.send(());
+            }
+            Cmd::Shutdown => return,
+        }
+    }
+}
+
+impl WriterState {
+    fn handle_segment(&mut self, mut seg: SealedSegment) -> Result<()> {
+        // Past a spill failure the chain already has a hole: drop further
+        // segments (they could not restore anyway) and let commits fail.
+        if self.poisoned.is_some() {
+            return Ok(());
+        }
+        // Self-heal the journal's optimistic chunk dedup: a record sealed
+        // while a compaction was folding may have deduped against a chunk
+        // the fold then garbage-collected. The records still hold live
+        // `Arc<Chunk>` handles, so re-embed anything this chain no longer
+        // carries before the segment hits disk.
+        let mut embedded: HashSet<u64> = seg.new_chunks.iter().map(|c| c.key).collect();
+        let mut healed: Vec<Arc<crate::core::chunk::Chunk>> = Vec::new();
+        for (_, op) in &seg.records {
+            if let Op::Insert { item, .. } = op {
+                for c in &item.chunks {
+                    if !embedded.contains(&c.key) && !self.durable_chunks.contains(&c.key) {
+                        embedded.insert(c.key);
+                        healed.push(c.clone());
+                    }
+                }
+            }
+        }
+        seg.new_chunks.extend(healed);
+
+        let name = segment::segment_file_name(seg.index);
+        let meta = segment::write_segment(&self.dir.join(&name), &seg)?;
+        self.durable_chunks
+            .extend(seg.new_chunks.iter().map(|c| c.key));
+        self.journal_bytes += meta.bytes;
+        self.next_unlisted = meta.index + 1;
+        self.segments.push(meta);
+        let threshold = self
+            .compact_min_bytes
+            .max((self.base_bytes as f64 * self.compact_factor) as u64);
+        if self.journal_bytes > threshold {
+            self.compact()?;
+        }
+        Ok(())
+    }
+
+    fn commit(&mut self, watermark: u64, counters: Vec<TableCounters>) -> Result<PathBuf> {
+        // A lost segment is a hole in the delta chain: refuse to advance
+        // the manifest watermark past it — checkpoint RPCs must fail
+        // rather than report durability for mutations that never landed.
+        if let Some(why) = &self.poisoned {
+            return Err(Error::Io(std::io::Error::new(
+                std::io::ErrorKind::Other,
+                format!("persist chain poisoned: {why}"),
+            )));
+        }
+        self.watermark = self.watermark.max(watermark);
+        if !counters.is_empty() {
+            self.counters = counters;
+        }
+        self.write_manifest()
+    }
+
+    fn write_manifest(&self) -> Result<PathBuf> {
+        manifest::write_manifest(
+            &self.dir,
+            &Manifest {
+                watermark: self.watermark,
+                base: self.base.clone(),
+                first_unlisted_index: self.next_unlisted,
+                counters: self.counters.clone(),
+                segments: self.segments.clone(),
+            },
+        )
+    }
+
+    /// Fold base + every written segment into a fresh base, publish it,
+    /// then delete the old chain. Pure file-to-file work on this thread;
+    /// a crash at any point leaves one complete chain referenced by
+    /// whichever manifest is on disk.
+    fn compact(&mut self) -> Result<()> {
+        let (folded_index, folded_seq) = match self.segments.last() {
+            Some(m) => (m.index, m.last_seq),
+            None => return Ok(()),
+        };
+        let mut state = ReplayState::from_data(checkpoint::read_full(&self.dir.join(&self.base))?);
+        for meta in &self.segments {
+            let rs = segment::read_segment(&self.dir.join(&meta.file), true)?;
+            for rec in rs.records {
+                state.apply(rec)?;
+            }
+        }
+        state.apply_counters(&self.counters);
+        let data: CheckpointData = state.into_data();
+
+        self.generation += 1;
+        let new_base = format!("base_{:06}.rvb", self.generation);
+        checkpoint::write_full(&self.dir.join(&new_base), &data)?;
+        let new_base_bytes = std::fs::metadata(self.dir.join(&new_base))?.len();
+
+        let old_base = std::mem::replace(&mut self.base, new_base);
+        let old_segments = std::mem::take(&mut self.segments);
+        self.base_bytes = new_base_bytes;
+        self.journal_bytes = 0;
+        self.watermark = self.watermark.max(folded_seq);
+        self.counters = data
+            .tables
+            .iter()
+            .map(|t| TableCounters {
+                name: t.name.clone(),
+                inserts: t.inserts,
+                samples: t.samples,
+            })
+            .collect();
+        self.write_manifest()?;
+        // The new manifest no longer references the old chain: delete it.
+        let _ = std::fs::remove_file(self.dir.join(&old_base));
+        for m in &old_segments {
+            let _ = std::fs::remove_file(self.dir.join(&m.file));
+        }
+        self.durable_chunks = data.chunks.keys().copied().collect();
+        self.journal
+            .compact_reset(folded_index, data.chunks.keys().copied().collect());
+        Ok(())
+    }
+}

@@ -87,6 +87,51 @@ fn cli_serves_and_checkpoints() {
 }
 
 #[test]
+fn cli_delta_persistence_survives_kill() {
+    let dir = std::env::temp_dir().join(format!("reverb_cli_delta_{}", std::process::id()));
+    std::fs::remove_dir_all(&dir).ok();
+    std::fs::create_dir_all(&dir).unwrap();
+    let (mut child, addr) = spawn_server(&[
+        "--checkpoint-dir",
+        dir.to_str().unwrap(),
+        "--persist",
+        "delta",
+        "--journal-segment-bytes",
+        "65536",
+    ]);
+    let client = Client::connect(addr).unwrap();
+    let mut w = client.writer(WriterOptions::default()).unwrap();
+    for i in 0..7 {
+        w.append(vec![Tensor::from_f32(&[2], &[i as f32, 1.0]).unwrap()])
+            .unwrap();
+        w.create_item("replay", 1, 1.0).unwrap();
+    }
+    w.flush().unwrap();
+    // Checkpoint = constant-time journal rotation + manifest commit.
+    let ckpt = client.checkpoint().unwrap();
+    assert!(ckpt.ends_with("MANIFEST.rvb3"), "{ckpt}");
+    // Hard kill: no graceful shutdown rotation.
+    child.kill().unwrap();
+    child.wait().unwrap();
+
+    let (mut child2, addr2) = spawn_server(&[
+        "--load",
+        &ckpt,
+        "--checkpoint-dir",
+        dir.to_str().unwrap(),
+        "--persist",
+        "delta",
+    ]);
+    let client2 = Client::connect(addr2).unwrap();
+    let info = client2.server_info().unwrap();
+    let replay = info.iter().find(|(n, _)| n == "replay").unwrap();
+    assert_eq!(replay.1.size, 7, "base+delta state survived the crash");
+    child2.kill().unwrap();
+    child2.wait().unwrap();
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
 fn cli_rejects_bad_table_spec() {
     let out = Command::new(server_bin())
         .args(["serve", "--table", "bogus:nope:1"])

@@ -1,0 +1,353 @@
+//! Crash-recovery properties of the persist subsystem (DESIGN.md §10).
+//!
+//! The core property: kill the background writer at a random byte offset
+//! mid-segment (simulated by truncating the unlisted tail segment at a
+//! random cut), and `restore(base + surviving deltas)` must equal the
+//! reference state obtained by replaying exactly the first `K` mutations
+//! against a model map — where `K` is the recovered watermark, which must
+//! never fall below the last manifest commit. Restores are installed at
+//! several shard counts and must agree everywhere.
+
+use reverb::core::checkpoint;
+use reverb::core::chunk::{Chunk, Compression};
+use reverb::core::item::Item;
+use reverb::core::table::{Table, TableConfig};
+use reverb::persist::{self, PersistConfig, Persister, MANIFEST_NAME};
+use reverb::util::proptest::{forall_cfg, Config};
+use reverb::util::rng::Pcg32;
+use reverb::{ChunkStore, Tensor};
+use std::collections::HashMap;
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+static CASE_ID: AtomicU64 = AtomicU64::new(0);
+
+fn case_dir(label: &str) -> PathBuf {
+    let id = CASE_ID.fetch_add(1, Ordering::Relaxed);
+    let dir = std::env::temp_dir().join(format!(
+        "reverb_persist_prop_{label}_{}_{id}",
+        std::process::id()
+    ));
+    std::fs::remove_dir_all(&dir).ok();
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+/// One modeled mutation. Generated so that every op lands exactly one
+/// journal record (inserts use fresh keys, updates/deletes hit live keys),
+/// making journal sequence number == 1-based op index.
+#[derive(Clone, Copy, Debug)]
+enum MOp {
+    Insert(u64, f64),
+    Update(u64, f64),
+    Delete(u64),
+}
+
+fn payload_for(key: u64) -> f32 {
+    key as f32 * 0.5 + 1.0
+}
+
+fn mk_item(key: u64) -> Item {
+    let steps = vec![vec![Tensor::from_f32(&[1], &[payload_for(key)]).unwrap()]];
+    let chunk = Arc::new(Chunk::from_steps(key + 1_000_000, 0, &steps, Compression::None).unwrap());
+    Item::new(key, "t", 1.0, vec![chunk], 0, 1).unwrap()
+}
+
+/// Generate `n` ops, applying each to the live table AND recording it.
+fn run_ops(rng: &mut Pcg32, table: &Table, n: usize, next_key: &mut u64, ops: &mut Vec<MOp>) {
+    for _ in 0..n {
+        let live: Vec<u64> = live_keys(ops);
+        let roll = rng.gen_range(10);
+        if live.is_empty() || roll < 6 {
+            *next_key += 1;
+            let key = *next_key;
+            let mut item = mk_item(key);
+            item.priority = (rng.gen_range(100) + 1) as f64;
+            let op = MOp::Insert(key, item.priority);
+            table.insert_or_assign(item, None).unwrap();
+            ops.push(op);
+        } else if roll < 8 {
+            let key = live[rng.gen_range(live.len() as u64) as usize];
+            let priority = (rng.gen_range(100) + 1) as f64;
+            assert_eq!(table.update_priorities(&[(key, priority)]).unwrap(), 1);
+            ops.push(MOp::Update(key, priority));
+        } else {
+            let key = live[rng.gen_range(live.len() as u64) as usize];
+            assert_eq!(table.delete(&[key]).unwrap(), 1);
+            ops.push(MOp::Delete(key));
+        }
+    }
+}
+
+/// Live keys after applying all of `ops` (the generator's view).
+fn live_keys(ops: &[MOp]) -> Vec<u64> {
+    let mut map: HashMap<u64, f64> = HashMap::new();
+    for op in ops {
+        match op {
+            MOp::Insert(k, p) => {
+                map.insert(*k, *p);
+            }
+            MOp::Update(k, p) => {
+                map.insert(*k, *p);
+            }
+            MOp::Delete(k) => {
+                map.remove(k);
+            }
+        }
+    }
+    let mut keys: Vec<u64> = map.into_keys().collect();
+    keys.sort_unstable();
+    keys
+}
+
+/// Model state after the first `k` ops: key -> priority.
+fn model_after(ops: &[MOp], k: usize) -> HashMap<u64, f64> {
+    let mut map = HashMap::new();
+    for op in &ops[..k] {
+        match op {
+            MOp::Insert(key, p) | MOp::Update(key, p) => {
+                map.insert(*key, *p);
+            }
+            MOp::Delete(key) => {
+                map.remove(key);
+            }
+        }
+    }
+    map
+}
+
+/// Assert a restored table matches the model exactly: key set, priorities,
+/// and decoded chunk payloads.
+fn assert_matches_model(table: &Table, model: &HashMap<u64, f64>, what: &str) {
+    let (items, _inserts, _samples) = table.snapshot();
+    assert_eq!(items.len(), model.len(), "{what}: item count");
+    for item in &items {
+        let want = model
+            .get(&item.key)
+            .unwrap_or_else(|| panic!("{what}: unexpected key {}", item.key));
+        assert_eq!(item.priority, *want, "{what}: priority of {}", item.key);
+        let data = item.materialize().unwrap();
+        assert_eq!(
+            data[0].to_f32().unwrap(),
+            vec![payload_for(item.key)],
+            "{what}: payload of {}",
+            item.key
+        );
+    }
+}
+
+#[test]
+fn killed_writer_restores_to_exact_op_prefix() {
+    let cases = std::env::var("REVERB_PROPTEST_CASES")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(32)
+        .min(48);
+    let cfg = Config {
+        cases,
+        seed: 0xBEEF_CAFE,
+        max_shrink: 0,
+    };
+    forall_cfg("persist crash recovery", &cfg, |rng| {
+        let dir = case_dir("kill");
+        let shards = [1usize, 2, 4][rng.gen_range(3) as usize];
+        let segment_bytes = [512usize, 2048, 8192][rng.gen_range(3) as usize];
+        let table = Arc::new(Table::new(
+            TableConfig::uniform_replay("t", 100_000).with_shards(shards),
+        ));
+        let persister = Persister::start(
+            PersistConfig::new(&dir).with_segment_bytes(segment_bytes),
+            &[table.clone()],
+        )
+        .unwrap();
+
+        let mut ops: Vec<MOp> = Vec::new();
+        let mut next_key = 0u64;
+        // Phase A: committed through a manifest rotation.
+        run_ops(rng, &table, 10 + rng.gen_range(30) as usize, &mut next_key, &mut ops);
+        persister.rotate(&[table.clone()]).wait().unwrap();
+        let committed = ops.len() as u64;
+        // Phase B: sealed and spilled, but never named by a manifest —
+        // the crash window.
+        run_ops(rng, &table, 10 + rng.gen_range(40) as usize, &mut next_key, &mut ops);
+        persister.journal().rotate();
+        persister.sync_writer().unwrap();
+
+        // "Kill the writer": drop everything without a final commit, then
+        // tear bytes off the tail segment at a random offset.
+        drop(persister);
+        drop(table);
+        let manifest_path = dir.join(MANIFEST_NAME);
+        let listed: std::collections::HashSet<String> = {
+            let m = reverb::persist::manifest::read_manifest(&manifest_path)
+                .map_err(|e| format!("manifest unreadable: {e}"))?;
+            m.segments.iter().map(|s| s.file.clone()).collect()
+        };
+        let mut tail: Vec<PathBuf> = std::fs::read_dir(&dir)
+            .unwrap()
+            .filter_map(|e| e.ok())
+            .map(|e| e.path())
+            .filter(|p| {
+                p.file_name()
+                    .map(|n| {
+                        let n = n.to_string_lossy();
+                        n.starts_with("seg_") && !listed.contains(n.as_ref())
+                    })
+                    .unwrap_or(false)
+            })
+            .collect();
+        tail.sort();
+        if let Some(last) = tail.last() {
+            let bytes = std::fs::read(last).unwrap();
+            let cut = rng.gen_range(bytes.len() as u64 + 1) as usize;
+            std::fs::write(last, &bytes[..cut]).unwrap();
+        }
+
+        // Restore and compare against the exact op prefix.
+        let restored = persist::restore(&manifest_path).map_err(|e| e.to_string())?;
+        let k = restored.watermark as usize;
+        if (k as u64) < committed || k > ops.len() {
+            return Err(format!(
+                "watermark {k} outside [{committed}, {}]",
+                ops.len()
+            ));
+        }
+        let model = model_after(&ops, k);
+        for restore_shards in [1usize, 3] {
+            let dst = Arc::new(Table::new(
+                TableConfig::uniform_replay("t", 100_000).with_shards(restore_shards),
+            ));
+            let store = ChunkStore::new();
+            checkpoint::load(&manifest_path, &[dst.clone()], &store)
+                .map_err(|e| format!("load at {restore_shards} shards: {e}"))?;
+            assert_matches_model(
+                &dst,
+                &model,
+                &format!("case shards={shards} seg={segment_bytes} restore={restore_shards} k={k}"),
+            );
+        }
+        std::fs::remove_dir_all(&dir).ok();
+        Ok(())
+    });
+}
+
+#[test]
+fn compaction_preserves_state_and_reembeds_dropped_chunks() {
+    let dir = case_dir("compact");
+    let table = Arc::new(Table::new(TableConfig::uniform_replay("t", 10_000)));
+    // Aggressive compaction: fold after every ~2 KiB of journal.
+    let persister = Persister::start(
+        PersistConfig::new(&dir)
+            .with_segment_bytes(1024)
+            .with_compaction(2048, 0.0),
+        &[table.clone()],
+    )
+    .unwrap();
+
+    // A chunk shared by an early item; the item is deleted so compaction
+    // garbage-collects the chunk from the base...
+    let steps = vec![vec![Tensor::from_f32(&[1], &[42.0]).unwrap()]];
+    let shared = Arc::new(Chunk::from_steps(777, 0, &steps, Compression::None).unwrap());
+    table
+        .insert_or_assign(
+            Item::new(1, "t", 1.0, vec![shared.clone()], 0, 1).unwrap(),
+            None,
+        )
+        .unwrap();
+    table.delete(&[1]).unwrap();
+    // ...then churn enough inserts to force several compactions.
+    for k in 10..200u64 {
+        table.insert_or_assign(mk_item(k), None).unwrap();
+        if k % 50 == 0 {
+            persister.rotate(&[table.clone()]).wait().unwrap();
+        }
+    }
+    for k in 10..150u64 {
+        table.delete(&[k]).unwrap();
+    }
+    // ...and re-reference the dropped chunk: the journal must re-embed it.
+    table
+        .insert_or_assign(
+            Item::new(9_999, "t", 2.0, vec![shared], 0, 1).unwrap(),
+            None,
+        )
+        .unwrap();
+    persister.rotate(&[table.clone()]).wait().unwrap();
+    let (want_items, want_inserts, _) = table.snapshot();
+    persister.stop(&[table.clone()]);
+
+    let dst = Arc::new(Table::new(TableConfig::uniform_replay("t", 10_000)));
+    let store = ChunkStore::new();
+    checkpoint::load(&dir.join(MANIFEST_NAME), &[dst.clone()], &store).unwrap();
+    let (got_items, got_inserts, _) = dst.snapshot();
+    assert_eq!(got_inserts, want_inserts);
+    assert_eq!(got_items.len(), want_items.len());
+    for (g, w) in got_items.iter().zip(&want_items) {
+        assert_eq!(g.key, w.key);
+        assert_eq!(g.priority, w.priority);
+    }
+    // The re-embedded shared chunk decodes.
+    let revived = got_items.iter().find(|i| i.key == 9_999).unwrap();
+    assert_eq!(
+        revived.materialize().unwrap()[0].to_f32().unwrap(),
+        vec![42.0]
+    );
+    // Compaction actually ran: journal bytes were folded away, old
+    // generations deleted.
+    let bases: Vec<String> = std::fs::read_dir(&dir)
+        .unwrap()
+        .filter_map(|e| e.ok())
+        .map(|e| e.file_name().to_string_lossy().into_owned())
+        .filter(|n| n.starts_with("base_"))
+        .collect();
+    assert_eq!(bases.len(), 1, "exactly one live base, got {bases:?}");
+    assert_ne!(bases[0], "base_000000.rvb", "base generation advanced");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// A drained corridor case end to end: rotate with nothing new since the
+/// last rotation must still commit a manifest and restore cleanly.
+#[test]
+fn empty_rotation_is_a_noop_commit() {
+    let dir = case_dir("empty");
+    let table = Arc::new(Table::new(TableConfig::uniform_replay("t", 100)));
+    let persister = Persister::start(PersistConfig::new(&dir), &[table.clone()]).unwrap();
+    table.insert_or_assign(mk_item(1), None).unwrap();
+    let p1 = persister.rotate(&[table.clone()]).wait().unwrap();
+    let p2 = persister.rotate(&[table.clone()]).wait().unwrap();
+    assert_eq!(p1, p2, "manifest path is stable");
+    persister.stop(&[table.clone()]);
+    let dst = Arc::new(Table::new(TableConfig::uniform_replay("t", 100)));
+    checkpoint::load(&p1, &[dst.clone()], &ChunkStore::new()).unwrap();
+    assert_eq!(dst.size(), 1);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// `is_manifest` dispatch sanity: a legacy v2 file is not a manifest and
+/// still loads through the same entry point next to v3 chains.
+#[test]
+fn load_dispatches_on_magic() {
+    let dir = case_dir("dispatch");
+    let table = Arc::new(Table::new(TableConfig::uniform_replay("t", 100)));
+    table.insert_or_assign(mk_item(5), None).unwrap();
+    let v2 = dir.join("full.rvb");
+    checkpoint::save(&v2, &[table.clone()]).unwrap();
+    assert!(!checkpoint::is_manifest(&v2).unwrap());
+
+    let pdir = dir.join("chain");
+    let persister = Persister::start(PersistConfig::new(&pdir), &[table.clone()]).unwrap();
+    let manifest = persister.rotate(&[table.clone()]).wait().unwrap();
+    persister.stop(&[table]);
+    assert!(checkpoint::is_manifest(&manifest).unwrap());
+
+    for path in [&v2, &manifest] {
+        let dst = Arc::new(Table::new(TableConfig::uniform_replay("t", 100)));
+        assert_eq!(
+            checkpoint::load(path, &[dst.clone()], &ChunkStore::new()).unwrap(),
+            1
+        );
+        assert!(dst.contains(5));
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}

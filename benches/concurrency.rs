@@ -1,0 +1,127 @@
+//! Concurrency sweep (DESIGN.md §11): mixed insert+sample QPS under
+//! {8, 64, 256, 1024} concurrent clients × {threaded, event} service
+//! models, with the server pinned to 4 service threads.
+//!
+//! The paper's headline serving claim is "thousands of concurrent
+//! clients" (§1, Figs. 5/6); the thread-per-connection seed made
+//! connection count the ceiling long before table throughput. The
+//! event-driven core decouples them: expected result is event-model QPS
+//! >= threaded-model QPS from 256 clients up, while holding >= 1024
+//! concurrent live connections on 4 workers (each client keeps a writer
+//! and a sampler connection open for the whole window).
+//!
+//! Run: `cargo bench --bench concurrency`
+//! (REVERB_BENCH_FAST=1 for a quick CI pass — fewer tiers, shorter
+//! windows.) Emits `BENCH_concurrency.json` for the CI perf trajectory.
+
+use reverb::core::table::TableConfig;
+use reverb::net::poller::ensure_fd_capacity;
+use reverb::net::server::Server;
+use reverb::util::bench::*;
+use reverb::util::stats::fmt_qps;
+use reverb::ServiceModel;
+use std::time::Duration;
+
+const SERVICE_THREADS: usize = 4;
+const PAYLOAD_FLOATS: usize = 100; // 400 B, the paper's small-payload point
+
+fn model_name(model: ServiceModel) -> &'static str {
+    match model {
+        ServiceModel::Threaded => "threaded",
+        ServiceModel::Event => "event",
+    }
+}
+
+/// One (model, client-count) measurement on a fresh server.
+fn mixed_qps(model: ServiceModel, clients: usize, window: Duration) -> Throughput {
+    let server = Server::builder()
+        .table(TableConfig::uniform_replay("t", 500_000))
+        .service_model(model)
+        .service_threads(SERVICE_THREADS)
+        .bind("127.0.0.1:0")
+        .unwrap();
+    let addr = format!("tcp://{}", server.local_addr());
+    // Pre-fill so samplers never wait on min_size.
+    prefill_table(&server.table("t").unwrap(), 1_000, PAYLOAD_FLOATS);
+    let t = run_mixed_clients(&addr, "t", clients, PAYLOAD_FLOATS, window);
+    drop(server);
+    t
+}
+
+fn main() {
+    let fast = fast_mode();
+    let tiers: &[usize] = if fast { &[8, 64] } else { &[8, 64, 256, 1024] };
+    let window = if fast {
+        Duration::from_millis(400)
+    } else {
+        Duration::from_millis(2_000)
+    };
+    // Each client holds ~3 descriptors on each side (writer conn, sampler
+    // conn, transients), plus the server's accept/poller overhead — all in
+    // one process.
+    ensure_fd_capacity(16_384);
+
+    println!(
+        "# Concurrency sweep: {SERVICE_THREADS} service threads, mixed insert+sample, 400B payloads"
+    );
+    println!("| clients | threaded QPS | event QPS | event/threaded |");
+    println!("|---|---|---|---|");
+
+    let mut threaded_qps = Vec::new();
+    let mut event_qps = Vec::new();
+    let mut high_tier_holds = true;
+    for &clients in tiers {
+        let threaded = mixed_qps(ServiceModel::Threaded, clients, window);
+        let event = mixed_qps(ServiceModel::Event, clients, window);
+        let ratio = event.qps() / threaded.qps().max(1.0);
+        if clients >= 256 && event.qps() < threaded.qps() {
+            high_tier_holds = false;
+        }
+        threaded_qps.push(threaded.qps());
+        event_qps.push(event.qps());
+        print_row(&[
+            clients.to_string(),
+            fmt_qps(threaded.qps()),
+            fmt_qps(event.qps()),
+            format!("{ratio:.2}x"),
+        ]);
+    }
+
+    // Machine-readable trajectory for CI (BENCH_concurrency.json).
+    let fmt_list = |xs: &[f64]| {
+        xs.iter()
+            .map(|q| format!("{q:.1}"))
+            .collect::<Vec<_>>()
+            .join(",")
+    };
+    let json = format!(
+        "{{\"bench\":\"concurrency\",\"service_threads\":{SERVICE_THREADS},\
+         \"payload_floats\":{PAYLOAD_FLOATS},\"fast\":{fast},\
+         \"clients\":[{}],\"threaded_qps\":[{}],\"event_qps\":[{}],\
+         \"models\":[\"{}\",\"{}\"]}}",
+        tiers
+            .iter()
+            .map(|c| c.to_string())
+            .collect::<Vec<_>>()
+            .join(","),
+        fmt_list(&threaded_qps),
+        fmt_list(&event_qps),
+        model_name(ServiceModel::Threaded),
+        model_name(ServiceModel::Event),
+    );
+    std::fs::write("BENCH_concurrency.json", &json).expect("write BENCH_concurrency.json");
+    println!("\nwrote BENCH_concurrency.json");
+
+    println!();
+    if fast {
+        println!("RESULT: SMOKE — fast mode exercises both models at low tiers only.");
+    } else if high_tier_holds {
+        println!(
+            "RESULT: PASS — event-model QPS >= threaded-model QPS at every tier >= 256 clients."
+        );
+    } else {
+        println!(
+            "RESULT: WARNING — threaded beat event at a >=256-client tier; rerun on an idle machine."
+        );
+    }
+}

@@ -70,6 +70,11 @@ pub struct DqnConfig {
     pub checkpoint_interval_ms: u64,
     /// Journal segment size for incremental persistence.
     pub journal_segment_bytes: usize,
+    /// Worker-pool size of the event-driven service core in servers built
+    /// by [`DqnConfig::recoverable_server`] (DESIGN.md §11). Actors and
+    /// the learner multiplex onto this many service threads regardless of
+    /// `num_actors`.
+    pub service_threads: usize,
     pub learner: LearnerConfig,
     pub seed: u64,
 }
@@ -120,7 +125,7 @@ impl DqnConfig {
         &self,
         tables: Vec<crate::core::table::TableConfig>,
     ) -> Result<crate::net::Server> {
-        let mut builder = crate::net::Server::builder();
+        let mut builder = crate::net::Server::builder().service_threads(self.service_threads);
         for t in tables {
             builder = builder.table(t);
         }
@@ -162,6 +167,7 @@ impl Default for DqnConfig {
             persist_dir: None,
             checkpoint_interval_ms: 0,
             journal_segment_bytes: crate::persist::DEFAULT_SEGMENT_BYTES,
+            service_threads: crate::net::event::default_service_threads(),
             learner: LearnerConfig::default(),
             seed: 11,
         }

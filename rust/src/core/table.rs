@@ -188,6 +188,26 @@ pub struct TableInfo {
     pub diff: f64,
 }
 
+/// Result of [`ShardedTable::try_insert_or_assign`].
+pub enum TryInsertOutcome {
+    /// The item landed (or resolved to a priority update of an existing
+    /// key).
+    Inserted,
+    /// The rate limiter refused; the item is handed back for a later
+    /// retry (re-arm via [`ShardedTable::register_insert_waker`]).
+    Blocked(Item),
+}
+
+/// Result of [`ShardedTable::try_sample_batch`].
+pub enum TrySampleOutcome {
+    /// Between 1 and `n` admitted samples.
+    Sampled(Vec<SampledItem>),
+    /// The rate limiter refused, or an admitted insert has not landed in
+    /// its shard yet; retry after a
+    /// [`ShardedTable::register_sample_waker`] wakeup.
+    Blocked,
+}
+
 /// Per-shard mutable state: the only data behind a lock on the hot path.
 struct ShardState {
     items: HashMap<u64, Item>,
@@ -214,12 +234,22 @@ impl Shard {
 }
 
 /// Parked-waiter support: blocked inserters/samplers wait here; the hot
-/// path only ever reads one atomic (`count`) to decide whether a wakeup
-/// notification is needed, so uncontended operations never touch the lock.
+/// path only ever reads two atomics (`count`, `hook_count`) to decide
+/// whether a wakeup notification is needed, so uncontended operations
+/// never touch the locks.
+///
+/// Two waiter kinds coexist: condvar parkers (the blocking API) and
+/// one-shot re-arm hooks (the event-driven server parks a *connection*
+/// instead of a thread and registers a hook to reschedule it — see
+/// `net::event`). Hooks are drained and invoked on every notification;
+/// spurious invocations are fine (the re-armed connection simply retries
+/// and re-parks).
 struct Waiters {
     lock: Mutex<()>,
     cv: Condvar,
     count: AtomicUsize,
+    hooks: Mutex<Vec<Arc<dyn Fn() + Send + Sync>>>,
+    hook_count: AtomicUsize,
 }
 
 impl Waiters {
@@ -228,6 +258,33 @@ impl Waiters {
             lock: Mutex::new(()),
             cv: Condvar::new(),
             count: AtomicUsize::new(0),
+            hooks: Mutex::new(Vec::new()),
+            hook_count: AtomicUsize::new(0),
+        }
+    }
+
+    /// Register a one-shot wakeup hook. NOTE: a notification racing with
+    /// registration may be missed; callers must re-try their operation
+    /// once *after* registering (the event core does) so a wakeup that
+    /// slipped through the window is recovered immediately.
+    fn add_hook(&self, hook: Arc<dyn Fn() + Send + Sync>) {
+        let mut h = self.hooks.lock().unwrap();
+        h.push(hook);
+        self.hook_count.store(h.len(), Ordering::SeqCst);
+    }
+
+    /// Drain and invoke all registered hooks (outside any table lock).
+    fn fire_hooks(&self) {
+        if self.hook_count.load(Ordering::SeqCst) == 0 {
+            return;
+        }
+        let drained = {
+            let mut h = self.hooks.lock().unwrap();
+            self.hook_count.store(0, Ordering::SeqCst);
+            std::mem::take(&mut *h)
+        };
+        for hook in drained {
+            hook();
         }
     }
 }
@@ -408,7 +465,9 @@ impl ShardedTable {
 
         // Items dropped only after locks are released (decoupled dealloc).
         let mut dropped: Vec<Item> = Vec::new();
-        let result = self.commit_insert(shard_idx, item, &mut dropped, deadline, timeout);
+        let result = self
+            .commit_insert(shard_idx, item, &mut dropped, deadline, timeout)
+            .map_err(|(e, _)| e);
         self.inflight_inserts.fetch_sub(1, Ordering::SeqCst);
         if result.is_ok() {
             // An insert can unblock samplers (and, for queue-style configs
@@ -421,6 +480,11 @@ impl ShardedTable {
 
     /// Land a reserved insert: acquire a capacity slot (evicting if the
     /// global budget is exhausted), then add the item to its shard.
+    ///
+    /// On the one *retryable* failure — the capacity wait timing out while
+    /// every slot is held by an in-flight insert — the untouched item is
+    /// handed back (`Some`), so the non-blocking caller can park and retry
+    /// without a defensive clone on the hot path.
     fn commit_insert(
         &self,
         shard_idx: usize,
@@ -428,7 +492,7 @@ impl ShardedTable {
         dropped: &mut Vec<Item>,
         deadline: Option<Instant>,
         timeout: Option<Duration>,
-    ) -> Result<()> {
+    ) -> std::result::Result<(), (Error, Option<Item>)> {
         // Re-check the duplicate race *before* paying for a capacity slot:
         // the limiter wait above may have lasted a long time, and a lost
         // InsertOrAssign race resolved as an update must not evict a
@@ -439,11 +503,13 @@ impl ShardedTable {
             let mut st = shard.state.lock().unwrap();
             if st.items.contains_key(&item.key) {
                 self.limiter.rollback_insert(1);
-                let followups = self.apply_update_in_state(&mut st, item.key, item.priority, true)?;
+                let followups = self
+                    .apply_update_in_state(&mut st, item.key, item.priority, true)
+                    .map_err(|e| (e, None))?;
                 shard.store_stats(&st);
                 drop(st);
                 self.notify(&self.insert_waiters);
-                return self.apply_followups(followups);
+                return self.apply_followups(followups).map_err(|e| (e, None));
             }
         }
         if let Err(e) = self.acquire_capacity_slot(shard_idx, dropped, deadline, timeout) {
@@ -451,7 +517,7 @@ impl ShardedTable {
             // The rollback freed corridor headroom another inserter may be
             // parked on.
             self.notify(&self.insert_waiters);
-            return Err(e);
+            return Err((e, Some(item)));
         }
         let shard = &self.shards[shard_idx];
         let mut st = shard.state.lock().unwrap();
@@ -461,11 +527,13 @@ impl ShardedTable {
             // inserts stay counted once per new item.
             self.budget.fetch_sub(1, Ordering::SeqCst);
             self.limiter.rollback_insert(1);
-            let followups = self.apply_update_in_state(&mut st, item.key, item.priority, true)?;
+            let followups = self
+                .apply_update_in_state(&mut st, item.key, item.priority, true)
+                .map_err(|e| (e, None))?;
             shard.store_stats(&st);
             drop(st);
             self.notify(&self.insert_waiters);
-            return self.apply_followups(followups);
+            return self.apply_followups(followups).map_err(|e| (e, None));
         }
         let seed: Result<()> = (|| {
             st.sampler.insert(item.key, item.priority)?;
@@ -480,7 +548,7 @@ impl ShardedTable {
             shard.store_stats(&st);
             drop(st);
             self.notify(&self.insert_waiters);
-            return Err(e);
+            return Err((e, None));
         }
         self.run_extensions(|ext| ext.on_insert(ItemRef::of(&item)));
         if let Some(sink) = self.sink.get() {
@@ -978,6 +1046,138 @@ impl ShardedTable {
     }
 
     // ------------------------------------------------------------------
+    // non-blocking API (the event-driven service core, DESIGN.md §11)
+    // ------------------------------------------------------------------
+
+    /// Non-blocking [`ShardedTable::insert_or_assign`]: when the rate
+    /// limiter refuses the insert, the item is handed back inside
+    /// [`TryInsertOutcome::Blocked`] instead of parking the calling
+    /// thread. The caller re-arms itself via
+    /// [`ShardedTable::register_insert_waker`] and retries.
+    ///
+    /// A transient full-table state (every capacity slot held by an
+    /// in-flight insert) also reports `Blocked` after a bounded spin,
+    /// rather than yielding indefinitely.
+    pub fn try_insert_or_assign(&self, item: Item) -> Result<TryInsertOutcome> {
+        if let Some(sig) = &self.config.signature {
+            for chunk in &item.chunks {
+                chunk.validate_signature(sig)?;
+            }
+        }
+        if self.cancelled.load(Ordering::SeqCst) {
+            return Err(Error::Cancelled(self.config.name.clone()));
+        }
+        let shard_idx = self.route(item.key);
+
+        // Existing key → priority update, not an insert (no rate limit).
+        {
+            let mut st = self.shards[shard_idx].state.lock().unwrap();
+            if st.items.contains_key(&item.key) {
+                let followups =
+                    self.apply_update_in_state(&mut st, item.key, item.priority, true)?;
+                self.shards[shard_idx].store_stats(&st);
+                drop(st);
+                self.apply_followups(followups)?;
+                return Ok(TryInsertOutcome::Inserted);
+            }
+        }
+
+        self.inflight_inserts.fetch_add(1, Ordering::SeqCst);
+        if !self.limiter.try_insert(1) {
+            self.inflight_inserts.fetch_sub(1, Ordering::SeqCst);
+            return Ok(TryInsertOutcome::Blocked(item));
+        }
+        // The reservation landed; commit with a short transient deadline so
+        // an all-slots-in-flight race reports Blocked instead of spinning.
+        let transient = Duration::from_millis(2);
+        let mut dropped: Vec<Item> = Vec::new();
+        let result = self.commit_insert(
+            shard_idx,
+            item,
+            &mut dropped,
+            Some(Instant::now() + transient),
+            Some(transient),
+        );
+        self.inflight_inserts.fetch_sub(1, Ordering::SeqCst);
+        let outcome = match result {
+            Ok(()) => {
+                self.notify(&self.sample_waiters);
+                Ok(TryInsertOutcome::Inserted)
+            }
+            // commit_insert already rolled the reservation back and handed
+            // the untouched item back for the retry.
+            Err((Error::RateLimiterTimeout(_), Some(item))) => {
+                Ok(TryInsertOutcome::Blocked(item))
+            }
+            Err((e, _)) => Err(e),
+        };
+        drop(dropped);
+        outcome
+    }
+
+    /// Non-blocking [`ShardedTable::sample_batch`]: reports
+    /// [`TrySampleOutcome::Blocked`] when the limiter refuses (or an
+    /// admitted insert has not yet landed in its shard), and fails fast
+    /// with `RateLimiterTimeout` when the table is genuinely drained while
+    /// the limiter remains admissible — exactly the blocking path's
+    /// semantics, minus the park.
+    pub fn try_sample_batch(&self, n: usize) -> Result<TrySampleOutcome> {
+        assert!(n > 0);
+        if self.cancelled.load(Ordering::SeqCst) {
+            return Err(Error::Cancelled(self.config.name.clone()));
+        }
+        if !self.limiter.could_sample(1) {
+            return Ok(TrySampleOutcome::Blocked);
+        }
+        let mut out = Vec::new();
+        let mut dropped: Vec<Item> = Vec::new();
+        self.collect_samples(n as u64, &mut out, &mut dropped);
+        if !out.is_empty() {
+            self.notify(&self.insert_waiters);
+            drop(dropped);
+            return Ok(TrySampleOutcome::Sampled(out));
+        }
+        drop(dropped);
+        if self.budget.load(Ordering::SeqCst) == 0
+            && self.inflight_inserts.load(Ordering::SeqCst) == 0
+            && self.limiter.could_sample(1)
+        {
+            // Genuinely drained (deleted/evicted since the counters last
+            // matched): fail immediately, legacy behaviour.
+            return Err(Error::RateLimiterTimeout(Duration::ZERO));
+        }
+        Ok(TrySampleOutcome::Blocked)
+    }
+
+    /// Register a one-shot wakeup fired when insert-side headroom may have
+    /// appeared (a sample was served, a reservation rolled back, a reset
+    /// drained the table, or the table was cancelled/restored). Spurious
+    /// firings are expected; a racing notification may be missed, so
+    /// callers must retry their operation once after registering.
+    pub fn register_insert_waker(&self, hook: Arc<dyn Fn() + Send + Sync>) {
+        self.insert_waiters.add_hook(hook);
+    }
+
+    /// Sample-side counterpart of
+    /// [`ShardedTable::register_insert_waker`]: fires when an insert
+    /// lands, or on cancel/restore.
+    pub fn register_sample_waker(&self, hook: Arc<dyn Fn() + Send + Sync>) {
+        self.sample_waiters.add_hook(hook);
+    }
+
+    /// Count one blocked-insert episode in [`TableInfo`] (the event core
+    /// calls this once when it parks a connection on the insert corridor,
+    /// mirroring the blocking path's once-per-park accounting).
+    pub fn note_blocked_insert(&self) {
+        self.limiter.note_blocked_insert();
+    }
+
+    /// Sample-side counterpart of [`ShardedTable::note_blocked_insert`].
+    pub fn note_blocked_sample(&self) {
+        self.limiter.note_blocked_sample();
+    }
+
+    // ------------------------------------------------------------------
     // internals
     // ------------------------------------------------------------------
 
@@ -1030,18 +1230,20 @@ impl ShardedTable {
     /// lock/unlock before notify closes the check-then-wait race: a waiter
     /// registers `count` under the lock before testing its predicate, so a
     /// notifier that misses the count has published its commit before the
-    /// waiter's test runs.
+    /// waiter's test runs. Event-core re-arm hooks are fired as well.
     fn notify(&self, w: &Waiters) {
         if w.count.load(Ordering::SeqCst) > 0 {
             drop(w.lock.lock().unwrap());
             w.cv.notify_all();
         }
+        w.fire_hooks();
     }
 
     /// Unconditional notify (cancel/restore paths).
     fn force_notify(&self, w: &Waiters) {
         drop(w.lock.lock().unwrap());
         w.cv.notify_all();
+        w.fire_hooks();
     }
 
     /// Pop a pooled sampling scratch, or mint one (first use per
@@ -1715,5 +1917,137 @@ mod tests {
         assert!(!t.contains(7));
         let events = sink.events.lock().unwrap().clone();
         assert_eq!(events, vec!["insert t 7", "delete t 7"]);
+    }
+
+    // ------------------------------------------------------------------
+    // non-blocking API (event-driven service core)
+    // ------------------------------------------------------------------
+
+    #[test]
+    fn try_insert_blocks_on_full_queue_and_hands_item_back() {
+        let t = Table::new(TableConfig::queue("q", 2));
+        assert!(matches!(
+            t.try_insert_or_assign(mk_item(1, 1.0)).unwrap(),
+            TryInsertOutcome::Inserted
+        ));
+        assert!(matches!(
+            t.try_insert_or_assign(mk_item(2, 1.0)).unwrap(),
+            TryInsertOutcome::Inserted
+        ));
+        // Full corridor: the item comes back unharmed, nothing landed.
+        match t.try_insert_or_assign(mk_item(3, 1.0)).unwrap() {
+            TryInsertOutcome::Blocked(item) => assert_eq!(item.key, 3),
+            TryInsertOutcome::Inserted => panic!("insert admitted past a full queue"),
+        }
+        assert_eq!(t.size(), 2);
+        assert_eq!(t.info().inserts, 2);
+        // Headroom appears → the retry lands.
+        assert_eq!(t.sample(None).unwrap().item.key, 1);
+        assert!(matches!(
+            t.try_insert_or_assign(mk_item(3, 1.0)).unwrap(),
+            TryInsertOutcome::Inserted
+        ));
+        assert_eq!(t.size(), 2);
+    }
+
+    #[test]
+    fn try_insert_existing_key_is_update_even_when_corridor_full() {
+        let t = Table::new(TableConfig::queue("q", 2));
+        t.insert_or_assign(mk_item(1, 1.0), None).unwrap();
+        t.insert_or_assign(mk_item(2, 1.0), None).unwrap();
+        // Updates bypass the rate limiter exactly like the blocking path.
+        assert!(matches!(
+            t.try_insert_or_assign(mk_item(1, 7.0)).unwrap(),
+            TryInsertOutcome::Inserted
+        ));
+        let (items, _, _) = t.snapshot();
+        assert_eq!(items.iter().find(|i| i.key == 1).unwrap().priority, 7.0);
+        assert_eq!(t.info().inserts, 2);
+    }
+
+    #[test]
+    fn try_sample_blocked_then_served_and_drained_fails_fast() {
+        let t = Table::new(TableConfig::uniform_replay("t", 10));
+        // Empty + min_size(1) unmet → Blocked (parked until data).
+        assert!(matches!(
+            t.try_sample_batch(1).unwrap(),
+            TrySampleOutcome::Blocked
+        ));
+        t.insert_or_assign(mk_item(1, 1.0), None).unwrap();
+        match t.try_sample_batch(4).unwrap() {
+            TrySampleOutcome::Sampled(batch) => {
+                assert_eq!(batch.len(), 1);
+                assert_eq!(batch[0].item.key, 1);
+            }
+            TrySampleOutcome::Blocked => panic!("admissible sample reported blocked"),
+        }
+        // Drain: limiter stays admissible but nothing is present or in
+        // flight → immediate timeout, the legacy fail-fast.
+        t.delete(&[1]).unwrap();
+        assert!(t.try_sample_batch(1).unwrap_err().is_timeout());
+    }
+
+    #[test]
+    fn try_ops_error_cancelled_after_cancel() {
+        let t = Table::new(TableConfig::uniform_replay("t", 10));
+        t.cancel();
+        assert!(matches!(
+            t.try_insert_or_assign(mk_item(1, 1.0)),
+            Err(Error::Cancelled(_))
+        ));
+        assert!(matches!(t.try_sample_batch(1), Err(Error::Cancelled(_))));
+    }
+
+    #[test]
+    fn wakers_fire_on_the_matching_transitions() {
+        use std::sync::atomic::AtomicUsize;
+        let t = Table::new(TableConfig::queue("q", 1));
+        t.insert_or_assign(mk_item(1, 1.0), None).unwrap();
+
+        // A parked-insert waker fires when a sample frees corridor room.
+        let insert_hits = Arc::new(AtomicUsize::new(0));
+        let h = insert_hits.clone();
+        t.register_insert_waker(Arc::new(move || {
+            h.fetch_add(1, Ordering::SeqCst);
+        }));
+        assert_eq!(insert_hits.load(Ordering::SeqCst), 0);
+        t.sample(None).unwrap(); // consume-on-sample frees the slot
+        assert_eq!(insert_hits.load(Ordering::SeqCst), 1, "sample woke inserter");
+
+        // A parked-sample waker fires when an insert lands.
+        let sample_hits = Arc::new(AtomicUsize::new(0));
+        let h = sample_hits.clone();
+        t.register_sample_waker(Arc::new(move || {
+            h.fetch_add(1, Ordering::SeqCst);
+        }));
+        t.insert_or_assign(mk_item(2, 1.0), None).unwrap();
+        assert_eq!(sample_hits.load(Ordering::SeqCst), 1, "insert woke sampler");
+
+        // Hooks are one-shot: further activity does not re-fire them.
+        t.sample(None).unwrap();
+        t.insert_or_assign(mk_item(3, 1.0), None).unwrap();
+        assert_eq!(insert_hits.load(Ordering::SeqCst), 1);
+        assert_eq!(sample_hits.load(Ordering::SeqCst), 1);
+    }
+
+    #[test]
+    fn cancel_fires_registered_wakers() {
+        use std::sync::atomic::AtomicUsize;
+        let t = Table::new(TableConfig::uniform_replay("t", 10));
+        let hits = Arc::new(AtomicUsize::new(0));
+        let h1 = hits.clone();
+        let h2 = hits.clone();
+        t.register_insert_waker(Arc::new(move || {
+            h1.fetch_add(1, Ordering::SeqCst);
+        }));
+        t.register_sample_waker(Arc::new(move || {
+            h2.fetch_add(1, Ordering::SeqCst);
+        }));
+        t.cancel();
+        assert_eq!(
+            hits.load(Ordering::SeqCst),
+            2,
+            "cancel must re-arm parked connections so they observe Cancelled"
+        );
     }
 }

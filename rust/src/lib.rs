@@ -32,5 +32,6 @@ pub use crate::client::{
     TrajectoryWriter, TrajectoryWriterOptions, Writer, WriterOptions,
 };
 pub use crate::error::{Error, Result};
-pub use crate::net::{PersistMode, Server, ServerBuilder};
+pub use crate::net::event::default_service_threads;
+pub use crate::net::{PersistMode, Server, ServerBuilder, ServiceModel};
 pub use crate::persist::{PersistConfig, Persister};

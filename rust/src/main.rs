@@ -22,7 +22,9 @@ fn usage() -> ! {
         "usage:\n  reverb-server serve --bind HOST:PORT --table NAME:KIND[:ARGS] \
          [--shards N] [--checkpoint-dir DIR] [--load CKPT] \
          [--persist full|delta] [--checkpoint-interval SECS] \
-         [--journal-segment-bytes N]\n  reverb-server info --addr HOST:PORT\n  \
+         [--journal-segment-bytes N] [--service-threads N] \
+         [--service-model event|threaded] [--unix-socket PATH]\n  \
+         reverb-server info --addr HOST:PORT\n  \
          reverb-server checkpoint --addr HOST:PORT\n\n\
          table kinds:\n  NAME:uniform:MAX_SIZE\n  NAME:queue:QUEUE_SIZE\n  \
          NAME:prioritized:MAX_SIZE:EXPONENT[:SPI:MIN_SIZE:ERROR_BUFFER]\n  NAME:variable\n\n\
@@ -33,7 +35,12 @@ fn usage() -> ! {
          segments + background fsync) so checkpoint pauses stay constant \
          in table size; full (the default) snapshots stop-the-world. \
          --journal-segment-bytes implies delta. --load accepts both .rvb \
-         snapshots and MANIFEST.rvb3 manifests."
+         snapshots and MANIFEST.rvb3 manifests.\n\
+         --service-threads N sizes the event-driven worker pool (default: \
+         one per core) that multiplexes all connections; --service-model \
+         threaded restores the legacy thread-per-connection core (kept one \
+         release as a differential-testing oracle). --unix-socket PATH \
+         additionally serves reverb+unix://PATH."
     );
     std::process::exit(2);
 }
@@ -137,6 +144,29 @@ fn main() {
                     }
                 }
             }
+            match flag(&args, "--service-threads") {
+                Some(v) => match v.parse::<usize>() {
+                    Ok(n) if n >= 1 => builder = builder.service_threads(n),
+                    _ => {
+                        eprintln!("--service-threads must be a positive integer");
+                        std::process::exit(2);
+                    }
+                },
+                None => {}
+            }
+            match flag(&args, "--service-model").as_deref() {
+                Some("event") | None => {}
+                Some("threaded") => {
+                    builder = builder.service_model(reverb::ServiceModel::Threaded)
+                }
+                Some(other) => {
+                    eprintln!("--service-model must be 'event' or 'threaded', got {other:?}");
+                    std::process::exit(2);
+                }
+            }
+            if let Some(path) = flag(&args, "--unix-socket") {
+                builder = builder.unix_socket(path);
+            }
             if let Some(dir) = flag(&args, "--checkpoint-dir") {
                 builder = builder.checkpoint_dir(dir);
             }
@@ -193,6 +223,9 @@ fn main() {
             match builder.bind(&bind) {
                 Ok(server) => {
                     println!("reverb-server listening on {}", server.local_addr());
+                    if let Some(uds) = server.uds_addr() {
+                        println!("  unix socket: {uds}");
+                    }
                     for (name, info) in server.info() {
                         println!("  table {name}: size={}/{}", info.size, info.max_size);
                     }

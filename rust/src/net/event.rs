@@ -1,0 +1,845 @@
+//! The event-driven service core (DESIGN.md §11): `N = service_threads`
+//! workers drive per-connection state machines over readiness signals,
+//! decoupling connection count from OS-thread count — the prerequisite for
+//! the paper's "thousands of concurrent clients" serving claim.
+//!
+//! # Architecture
+//!
+//! - **Poller thread** — sleeps in `ppoll(2)` ([`crate::net::poller`])
+//!   over every fd-backed connection with an armed interest, plus a timer
+//!   heap for parked-operation deadlines and retry slices. Readiness or a
+//!   due timer *schedules* the connection onto the ready queue.
+//! - **Worker pool** — `N` threads pop scheduled connections and run each
+//!   connection's state machine: retry a parked op, resume a partial
+//!   write, read frames (`try_recv`, resumable mid-frame), dispatch, and
+//!   flush (`try_flush`, resumable mid-write).
+//! - **Parked operations** — a `CreateItem`/`SampleRequest` whose rate
+//!   limiter (or the checkpoint gate) refuses does NOT pin a worker: the
+//!   connection parks with the op, registers a one-shot waker on the
+//!   table's waiter lists ([`Table::register_insert_waker`] /
+//!   [`Table::register_sample_waker`]) or the gate's resume hook, arms a
+//!   bounded retry timer, and the worker moves on. The table's existing
+//!   condvar wakeup paths fire the hooks, so corridor wakeups re-arm
+//!   connections with the same precision the blocking path enjoys.
+//!
+//! Per-connection FIFO semantics are preserved by construction: while an
+//! op is parked the connection reads no further input (the kernel socket
+//! buffer / bounded in-proc channel provides the same client-side
+//! backpressure the blocked service thread used to), and replies are
+//! written in dispatch order.
+//!
+//! In-proc connections have no fd; their readiness rides the channel
+//! occupancy wakers ([`MsgStream::set_ready_waker`]) instead of the
+//! poller.
+
+use crate::core::item::Item;
+use crate::core::table::{Table, TryInsertOutcome, TrySampleOutcome};
+use crate::error::{Error, Result};
+use crate::net::poller::Poller;
+use crate::net::server::{resolve_item, sample_reply, stash_chunks, ServerInner};
+use crate::net::transport::{MsgStream, PollSource};
+use crate::net::wire::{error_code, Message};
+use std::cmp::Reverse;
+use std::collections::{BinaryHeap, HashMap, VecDeque};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+/// Upper bound on frames handled in one service pass, so one firehose
+/// connection cannot starve the others (it re-schedules itself instead).
+const MAX_FRAMES_PER_SERVICE: usize = 128;
+
+/// Retry slice for limiter-parked ops: the waker is the fast path; the
+/// timer bounds staleness exactly like the blocking path's `WAIT_SLICE`.
+const PARK_SLICE: Duration = Duration::from_millis(50);
+
+/// Retry slice for gate-parked ops (checkpoint pauses are short).
+const GATE_SLICE: Duration = Duration::from_millis(2);
+
+/// Poller tick when no timer is due sooner.
+const POLL_TICK: Duration = Duration::from_millis(25);
+
+/// Cap on client-supplied op timeouts: practically infinite, while
+/// keeping `Instant + timeout` arithmetic overflow-free for adversarial
+/// `timeout_ms` values (a worker must never panic on wire input).
+const MAX_OP_TIMEOUT: Duration = Duration::from_secs(30 * 24 * 3600);
+
+/// Default worker count: one per core.
+pub fn default_service_threads() -> usize {
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(4)
+}
+
+/// A table op the rate limiter (or gate) refused, suspended with its
+/// connection. `noted` tracks the once-per-park blocked-episode metric.
+enum ParkedOp {
+    Insert {
+        id: u64,
+        table: Arc<Table>,
+        item: Item,
+        deadline: Instant,
+        timeout: Duration,
+        noted: bool,
+    },
+    Sample {
+        id: u64,
+        table: Arc<Table>,
+        n: usize,
+        deadline: Instant,
+        timeout: Duration,
+        noted: bool,
+    },
+}
+
+impl ParkedOp {
+    fn deadline(&self) -> Instant {
+        match self {
+            ParkedOp::Insert { deadline, .. } | ParkedOp::Sample { deadline, .. } => *deadline,
+        }
+    }
+}
+
+/// Why an op parked — decides which wakeup source to register.
+#[derive(Clone, Copy, PartialEq, Eq)]
+enum ParkKind {
+    /// `Gate::try_enter` failed (checkpoint pause in progress).
+    Gate,
+    /// The insert corridor refused.
+    Insert,
+    /// The sample corridor refused (or an admitted insert is mid-flight).
+    Sample,
+}
+
+/// Outcome of one attempt at a (possibly parked) op.
+enum Attempt {
+    /// Replied (success or error); the connection may resume reading.
+    Done,
+    /// Still blocked; park with this op and wakeup source.
+    Parked(ParkedOp, ParkKind),
+}
+
+/// Outcome of dispatching one inbound frame.
+enum Dispatch {
+    Continue,
+    Parked(ParkedOp, ParkKind),
+}
+
+/// Per-connection mutable state (the state machine's tape).
+struct ConnState {
+    stream: Box<dyn MsgStream>,
+    source: PollSource,
+    /// Chunks streamed on this connection, awaiting item creation.
+    pending: HashMap<u64, Arc<crate::core::chunk::Chunk>>,
+    pending_order: VecDeque<u64>,
+    /// A dispatched op the limiter/gate refused; while `Some`, no further
+    /// input is read (per-connection FIFO + backpressure).
+    parked: Option<ParkedOp>,
+    /// A reply flush hit `WouldBlock`; resume on writability.
+    want_write: bool,
+}
+
+/// One served connection.
+struct EventConn {
+    id: u64,
+    /// In the ready queue (or about to be serviced). Cleared by the worker
+    /// before servicing so wakeups during service re-queue the connection
+    /// rather than being lost.
+    queued: AtomicBool,
+    closed: AtomicBool,
+    state: Mutex<ConnState>,
+}
+
+/// State shared by workers, the poller thread, accept threads, and the
+/// wakers registered with tables/gate.
+pub(crate) struct EventShared {
+    inner: Arc<ServerInner>,
+    poller: Poller,
+    ready: Mutex<VecDeque<Arc<EventConn>>>,
+    ready_cv: Condvar,
+    conns: Mutex<HashMap<u64, Arc<EventConn>>>,
+    /// Parked-op deadlines and retry slices, drained by the poller thread.
+    timers: Mutex<BinaryHeap<Reverse<(Instant, u64)>>>,
+    stop: AtomicBool,
+    next_id: AtomicU64,
+}
+
+impl EventShared {
+    /// Hand a freshly accepted connection to the pool.
+    pub(crate) fn add_conn(self: &Arc<Self>, mut stream: Box<dyn MsgStream>) {
+        if self.stop.load(Ordering::SeqCst) {
+            return;
+        }
+        if stream.set_nonblocking(true).is_err() {
+            return;
+        }
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        let source = stream.poll_source();
+        let conn = Arc::new(EventConn {
+            id,
+            queued: AtomicBool::new(false),
+            closed: AtomicBool::new(false),
+            state: Mutex::new(ConnState {
+                stream,
+                source,
+                pending: HashMap::new(),
+                pending_order: VecDeque::new(),
+                parked: None,
+                want_write: false,
+            }),
+        });
+        self.conns.lock().unwrap().insert(id, conn.clone());
+        match source {
+            PollSource::Fd(fd) => {
+                // Interests are armed by the first service pass.
+                self.poller.register(id, fd);
+            }
+            PollSource::Channel => {
+                let waker = self.waker_for(&conn);
+                conn.state.lock().unwrap().stream.set_ready_waker(waker);
+            }
+        }
+        self.schedule(&conn);
+    }
+
+    /// Number of live connections (diagnostics / tests).
+    pub(crate) fn live_conns(&self) -> usize {
+        self.conns.lock().unwrap().len()
+    }
+
+    /// Queue a connection for a worker (idempotent; cheap enough to call
+    /// from table wakers and client threads).
+    fn schedule(&self, conn: &Arc<EventConn>) {
+        if conn.closed.load(Ordering::SeqCst) {
+            return;
+        }
+        if conn.queued.swap(true, Ordering::SeqCst) {
+            return;
+        }
+        self.ready.lock().unwrap().push_back(conn.clone());
+        self.ready_cv.notify_one();
+    }
+
+    /// A one-shot wakeup closure for `conn`, weak on both ends so a
+    /// stale hook outliving the connection (or the whole server) is inert.
+    fn waker_for(self: &Arc<Self>, conn: &Arc<EventConn>) -> Arc<dyn Fn() + Send + Sync> {
+        let shared = Arc::downgrade(self);
+        let conn = Arc::downgrade(conn);
+        Arc::new(move || {
+            if let (Some(shared), Some(conn)) = (shared.upgrade(), conn.upgrade()) {
+                shared.schedule(&conn);
+            }
+        })
+    }
+
+    fn add_timer(&self, at: Instant, conn_id: u64) {
+        self.timers.lock().unwrap().push(Reverse((at, conn_id)));
+        // The poller may be sleeping past the new deadline.
+        self.poller.wake();
+    }
+
+    fn arm_read(&self, st: &ConnState, conn_id: u64) {
+        if let PollSource::Fd(_) = st.source {
+            self.poller.arm_read(conn_id);
+        }
+    }
+
+    fn arm_write(&self, st: &ConnState, conn_id: u64) {
+        if let PollSource::Fd(_) = st.source {
+            self.poller.arm_write(conn_id);
+        }
+    }
+
+    /// Tear a connection down: deregister, drop the socket *now* (fd
+    /// hygiene — the queue may briefly hold the Arc), forget it.
+    fn close(&self, conn: &EventConn, st: &mut ConnState) {
+        if conn.closed.swap(true, Ordering::SeqCst) {
+            return;
+        }
+        if let PollSource::Fd(_) = st.source {
+            self.poller.deregister(conn.id);
+        }
+        st.stream = Box::new(ClosedStream);
+        st.pending.clear();
+        st.pending_order.clear();
+        st.parked = None;
+        self.conns.lock().unwrap().remove(&conn.id);
+    }
+}
+
+/// The worker pool + poller driving every connection of one server.
+pub(crate) struct EventCore {
+    shared: Arc<EventShared>,
+    workers: Vec<std::thread::JoinHandle<()>>,
+    poll_thread: Option<std::thread::JoinHandle<()>>,
+}
+
+impl EventCore {
+    pub(crate) fn start(inner: Arc<ServerInner>, threads: usize) -> Result<EventCore> {
+        let shared = Arc::new(EventShared {
+            inner,
+            poller: Poller::new()?,
+            ready: Mutex::new(VecDeque::new()),
+            ready_cv: Condvar::new(),
+            conns: Mutex::new(HashMap::new()),
+            timers: Mutex::new(BinaryHeap::new()),
+            stop: AtomicBool::new(false),
+            next_id: AtomicU64::new(1),
+        });
+        let threads = threads.max(1);
+        let mut workers = Vec::with_capacity(threads);
+        for i in 0..threads {
+            let s = shared.clone();
+            workers.push(
+                std::thread::Builder::new()
+                    .name(format!("reverb-svc-{i}"))
+                    .spawn(move || worker_loop(s))
+                    .expect("spawn service worker"),
+            );
+        }
+        let s = shared.clone();
+        let poll_thread = std::thread::Builder::new()
+            .name("reverb-poll".into())
+            .spawn(move || poll_loop(s))
+            .expect("spawn poll thread");
+        Ok(EventCore {
+            shared,
+            workers,
+            poll_thread: Some(poll_thread),
+        })
+    }
+
+    pub(crate) fn shared(&self) -> Arc<EventShared> {
+        self.shared.clone()
+    }
+
+    /// Stop the pool: workers drain the ready queue (so cancel-released
+    /// parked ops still get their error replies), then exit; all
+    /// connections are then closed.
+    pub(crate) fn stop(&mut self) {
+        if self.shared.stop.swap(true, Ordering::SeqCst) {
+            return;
+        }
+        self.shared.poller.wake();
+        {
+            // Lock/unlock pairs with the workers' wait loop so the stop
+            // flag is observed.
+            drop(self.shared.ready.lock().unwrap());
+        }
+        self.shared.ready_cv.notify_all();
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+        if let Some(p) = self.poll_thread.take() {
+            let _ = p.join();
+        }
+        let conns: Vec<Arc<EventConn>> = {
+            let mut map = self.shared.conns.lock().unwrap();
+            map.drain().map(|(_, c)| c).collect()
+        };
+        for conn in conns {
+            let mut st = conn.state.lock().unwrap();
+            conn.closed.store(true, Ordering::SeqCst);
+            st.stream = Box::new(ClosedStream);
+        }
+    }
+}
+
+impl Drop for EventCore {
+    fn drop(&mut self) {
+        self.stop();
+    }
+}
+
+fn worker_loop(shared: Arc<EventShared>) {
+    loop {
+        let conn = {
+            let mut q = shared.ready.lock().unwrap();
+            loop {
+                if let Some(c) = q.pop_front() {
+                    break c;
+                }
+                if shared.stop.load(Ordering::SeqCst) {
+                    return;
+                }
+                q = shared.ready_cv.wait(q).unwrap();
+            }
+        };
+        conn.queued.store(false, Ordering::SeqCst);
+        service(&shared, &conn);
+    }
+}
+
+fn poll_loop(shared: Arc<EventShared>) {
+    while !shared.stop.load(Ordering::SeqCst) {
+        // Fire due timers; find the next deadline.
+        let now = Instant::now();
+        let mut due = Vec::new();
+        let mut next: Option<Instant> = None;
+        {
+            let mut timers = shared.timers.lock().unwrap();
+            while let Some(&Reverse((at, id))) = timers.peek() {
+                if at <= now {
+                    timers.pop();
+                    due.push(id);
+                } else {
+                    next = Some(at);
+                    break;
+                }
+            }
+        }
+        for id in due {
+            let conn = shared.conns.lock().unwrap().get(&id).cloned();
+            if let Some(c) = conn {
+                shared.schedule(&c);
+            }
+        }
+        let timeout = match next {
+            Some(at) => at.saturating_duration_since(now).min(POLL_TICK),
+            None => POLL_TICK,
+        };
+        for token in shared.poller.poll(timeout) {
+            let conn = shared.conns.lock().unwrap().get(&token).cloned();
+            if let Some(c) = conn {
+                shared.schedule(&c);
+            }
+        }
+    }
+}
+
+/// One service pass over a connection's state machine.
+fn service(shared: &Arc<EventShared>, conn: &Arc<EventConn>) {
+    let mut st = conn.state.lock().unwrap();
+    if conn.closed.load(Ordering::SeqCst) {
+        return;
+    }
+
+    // 1. Retry a parked op (wakeup or timer brought us here).
+    let mut may_read = true;
+    if let Some(op) = st.parked.take() {
+        match attempt_parked(shared, &mut st, op) {
+            Ok(Attempt::Done) => {}
+            Ok(Attempt::Parked(op, kind)) => {
+                park(shared, conn, &mut st, op, kind);
+                may_read = false;
+            }
+            Err(_) => {
+                shared.close(conn, &mut st);
+                return;
+            }
+        }
+        if conn.closed.load(Ordering::SeqCst) {
+            return;
+        }
+    }
+
+    // 2. Resume a partial reply write before producing more output.
+    if st.want_write {
+        match st.stream.try_flush() {
+            Ok(true) => st.want_write = false,
+            Ok(false) => {
+                shared.arm_write(&st, conn.id);
+                return;
+            }
+            Err(_) => {
+                shared.close(conn, &mut st);
+                return;
+            }
+        }
+    }
+
+    // 3. Read + dispatch until the input drains (or we park / yield).
+    if may_read && st.parked.is_none() {
+        let mut frames = 0usize;
+        loop {
+            if frames >= MAX_FRAMES_PER_SERVICE {
+                // Fairness: let other connections at the workers; more
+                // input may still be buffered, so come straight back.
+                shared.schedule(conn);
+                break;
+            }
+            match st.stream.try_recv() {
+                Ok(Some(msg)) => {
+                    frames += 1;
+                    match dispatch(shared, &mut st, msg) {
+                        Ok(Dispatch::Continue) => continue,
+                        Ok(Dispatch::Parked(op, kind)) => {
+                            park(shared, conn, &mut st, op, kind);
+                            break;
+                        }
+                        Err(_) => {
+                            shared.close(conn, &mut st);
+                            return;
+                        }
+                    }
+                }
+                Ok(None) => {
+                    // Input drained: re-arm readiness (fd backends; the
+                    // in-proc waker is persistent).
+                    shared.arm_read(&st, conn.id);
+                    break;
+                }
+                Err(_) => {
+                    // Peer hung up (mid-frame drops land here too).
+                    shared.close(conn, &mut st);
+                    return;
+                }
+            }
+        }
+        if conn.closed.load(Ordering::SeqCst) {
+            return;
+        }
+    }
+
+    // 4. Flush replies produced this pass.
+    match st.stream.try_flush() {
+        Ok(true) => {}
+        Ok(false) => {
+            st.want_write = true;
+            shared.arm_write(&st, conn.id);
+        }
+        Err(_) => shared.close(conn, &mut st),
+    }
+}
+
+/// Park `op` on its wakeup source, then re-attempt once: a notification
+/// that fired between the failed attempt and hook registration would
+/// otherwise be lost (see `Waiters::add_hook`). The retry timer bounds
+/// staleness in every remaining race.
+fn park(
+    shared: &Arc<EventShared>,
+    conn: &Arc<EventConn>,
+    st: &mut ConnState,
+    op: ParkedOp,
+    kind: ParkKind,
+) {
+    let waker = shared.waker_for(conn);
+    let slice = match kind {
+        ParkKind::Gate => GATE_SLICE,
+        ParkKind::Insert | ParkKind::Sample => PARK_SLICE,
+    };
+    let retry_at = (Instant::now() + slice).min(op.deadline());
+    match (&op, kind) {
+        (_, ParkKind::Gate) => shared.inner.gate.register_resume_waker(waker),
+        (ParkedOp::Insert { table, .. }, _) => table.register_insert_waker(waker),
+        (ParkedOp::Sample { table, .. }, _) => table.register_sample_waker(waker),
+    }
+    shared.add_timer(retry_at, conn.id);
+    match attempt_parked(shared, st, op) {
+        Ok(Attempt::Done) => {}
+        Ok(Attempt::Parked(op, _)) => st.parked = Some(op),
+        Err(_) => shared.close(conn, st),
+    }
+}
+
+/// Retry a parked op.
+fn attempt_parked(shared: &Arc<EventShared>, st: &mut ConnState, op: ParkedOp) -> Result<Attempt> {
+    match op {
+        ParkedOp::Insert {
+            id,
+            table,
+            item,
+            deadline,
+            timeout,
+            noted,
+        } => attempt_insert(shared, st, id, table, item, deadline, timeout, noted),
+        ParkedOp::Sample {
+            id,
+            table,
+            n,
+            deadline,
+            timeout,
+            noted,
+        } => attempt_sample(shared, st, id, table, n, deadline, timeout, noted),
+    }
+}
+
+/// One non-blocking insert attempt. The gate guard is held only for the
+/// duration of the try — a corridor park never pins a worker *or* holds
+/// the gate open.
+#[allow(clippy::too_many_arguments)]
+fn attempt_insert(
+    shared: &Arc<EventShared>,
+    st: &mut ConnState,
+    id: u64,
+    table: Arc<Table>,
+    item: Item,
+    deadline: Instant,
+    timeout: Duration,
+    noted: bool,
+) -> Result<Attempt> {
+    let Some(_guard) = shared.inner.gate.try_enter() else {
+        return Ok(Attempt::Parked(
+            ParkedOp::Insert {
+                id,
+                table,
+                item,
+                deadline,
+                timeout,
+                noted,
+            },
+            ParkKind::Gate,
+        ));
+    };
+    match table.try_insert_or_assign(item) {
+        Ok(TryInsertOutcome::Inserted) => {
+            send_reply(st, id, Ok(String::new()))?;
+            Ok(Attempt::Done)
+        }
+        Ok(TryInsertOutcome::Blocked(item)) => {
+            if Instant::now() >= deadline {
+                send_reply(st, id, Err(Error::RateLimiterTimeout(timeout)))?;
+                return Ok(Attempt::Done);
+            }
+            if !noted {
+                table.note_blocked_insert();
+            }
+            Ok(Attempt::Parked(
+                ParkedOp::Insert {
+                    id,
+                    table,
+                    item,
+                    deadline,
+                    timeout,
+                    noted: true,
+                },
+                ParkKind::Insert,
+            ))
+        }
+        Err(e) => {
+            send_reply(st, id, Err(e))?;
+            Ok(Attempt::Done)
+        }
+    }
+}
+
+/// One non-blocking sample attempt (see [`attempt_insert`]).
+#[allow(clippy::too_many_arguments)]
+fn attempt_sample(
+    shared: &Arc<EventShared>,
+    st: &mut ConnState,
+    id: u64,
+    table: Arc<Table>,
+    n: usize,
+    deadline: Instant,
+    timeout: Duration,
+    noted: bool,
+) -> Result<Attempt> {
+    let Some(_guard) = shared.inner.gate.try_enter() else {
+        return Ok(Attempt::Parked(
+            ParkedOp::Sample {
+                id,
+                table,
+                n,
+                deadline,
+                timeout,
+                noted,
+            },
+            ParkKind::Gate,
+        ));
+    };
+    match table.try_sample_batch(n) {
+        Ok(TrySampleOutcome::Sampled(samples)) => {
+            st.stream.send(sample_reply(id, &samples))?;
+            Ok(Attempt::Done)
+        }
+        Ok(TrySampleOutcome::Blocked) => {
+            if Instant::now() >= deadline {
+                send_err(st, id, &Error::RateLimiterTimeout(timeout))?;
+                return Ok(Attempt::Done);
+            }
+            if !noted {
+                table.note_blocked_sample();
+            }
+            Ok(Attempt::Parked(
+                ParkedOp::Sample {
+                    id,
+                    table,
+                    n,
+                    deadline,
+                    timeout,
+                    noted: true,
+                },
+                ParkKind::Sample,
+            ))
+        }
+        Err(e) => {
+            send_err(st, id, &e)?;
+            Ok(Attempt::Done)
+        }
+    }
+}
+
+/// Dispatch one inbound frame. `Err` is connection-fatal (reply channel
+/// broken or protocol violation); op-level failures become error replies.
+fn dispatch(shared: &Arc<EventShared>, st: &mut ConnState, msg: Message) -> Result<Dispatch> {
+    match msg {
+        Message::InsertChunks { chunks } => {
+            stash_chunks(
+                &shared.inner,
+                &mut st.pending,
+                &mut st.pending_order,
+                chunks,
+            );
+            // No reply: chunk streaming is fire-and-forget, acks ride on
+            // the subsequent CreateItem.
+            Ok(Dispatch::Continue)
+        }
+        Message::CreateItem { id, item, timeout_ms } => {
+            let table = match shared.inner.table(&item.table) {
+                Ok(t) => t.clone(),
+                Err(e) => {
+                    send_reply(st, id, Err(e))?;
+                    return Ok(Dispatch::Continue);
+                }
+            };
+            let resolved = match resolve_item(&shared.inner, &st.pending, &item) {
+                Ok(i) => i,
+                Err(e) => {
+                    send_reply(st, id, Err(e))?;
+                    return Ok(Dispatch::Continue);
+                }
+            };
+            let timeout = Duration::from_millis(timeout_ms).min(MAX_OP_TIMEOUT);
+            let deadline = Instant::now() + timeout;
+            match attempt_insert(shared, st, id, table, resolved, deadline, timeout, false)? {
+                Attempt::Done => Ok(Dispatch::Continue),
+                Attempt::Parked(op, kind) => Ok(Dispatch::Parked(op, kind)),
+            }
+        }
+        Message::SampleRequest {
+            id,
+            table,
+            num_samples,
+            timeout_ms,
+        } => {
+            let table = match shared.inner.table(&table) {
+                Ok(t) => t.clone(),
+                Err(e) => {
+                    send_err(st, id, &e)?;
+                    return Ok(Dispatch::Continue);
+                }
+            };
+            let n = num_samples.max(1) as usize;
+            let timeout = Duration::from_millis(timeout_ms).min(MAX_OP_TIMEOUT);
+            let deadline = Instant::now() + timeout;
+            match attempt_sample(shared, st, id, table, n, deadline, timeout, false)? {
+                Attempt::Done => Ok(Dispatch::Continue),
+                Attempt::Parked(op, kind) => Ok(Dispatch::Parked(op, kind)),
+            }
+        }
+        Message::MutatePriorities {
+            id,
+            table,
+            updates,
+            deletes,
+        } => {
+            let reply = (|| {
+                let table = shared.inner.table(&table)?.clone();
+                // Mutations never park on the rate limiter; a blocking
+                // gate entry is bounded by the (short) checkpoint pause.
+                let _guard = shared.inner.gate.enter();
+                let updated = table.update_priorities(&updates)?;
+                let deleted = table.delete(&deletes)?;
+                Ok(format!("updated={updated} deleted={deleted}"))
+            })();
+            send_reply(st, id, reply)?;
+            Ok(Dispatch::Continue)
+        }
+        Message::Reset { id, table } => {
+            let reply = (|| {
+                let table = shared.inner.table(&table)?.clone();
+                let _guard = shared.inner.gate.enter();
+                table.reset();
+                Ok(String::new())
+            })();
+            send_reply(st, id, reply)?;
+            Ok(Dispatch::Continue)
+        }
+        Message::InfoRequest { id } => {
+            let tables = shared
+                .inner
+                .table_order
+                .iter()
+                .map(|t| (t.name().to_string(), t.info()))
+                .collect();
+            st.stream.send(Message::Info { id, tables })?;
+            Ok(Dispatch::Continue)
+        }
+        Message::Checkpoint { id } => {
+            // Deliberately synchronous on the worker: checkpoints are rare
+            // and gate-serialized; parked connections re-arm off the gate's
+            // resume hook, so the pause never wedges the pool.
+            let reply = shared.inner.checkpoint().map(|p| p.display().to_string());
+            send_reply(st, id, reply)?;
+            Ok(Dispatch::Continue)
+        }
+        // Server-to-client messages arriving at the server are protocol
+        // violations.
+        Message::Ack { .. }
+        | Message::Err { .. }
+        | Message::SampleData { .. }
+        | Message::Info { .. } => Err(Error::Decode("client sent a server-side message".into())),
+    }
+}
+
+/// Queue an Ack/Err reply (no flush — the service pass flushes once per
+/// batch).
+fn send_reply(st: &mut ConnState, id: u64, result: Result<String>) -> Result<()> {
+    let msg = match result {
+        Ok(detail) => Message::Ack { id, detail },
+        Err(e) => Message::Err {
+            id,
+            code: error_code(&e),
+            message: e.to_string(),
+        },
+    };
+    st.stream.send(msg)
+}
+
+fn send_err(st: &mut ConnState, id: u64, e: &Error) -> Result<()> {
+    st.stream.send(Message::Err {
+        id,
+        code: error_code(e),
+        message: e.to_string(),
+    })
+}
+
+/// Stand-in installed when a connection closes, so the real socket drops
+/// (and its fd is returned to the OS) immediately even if the ready queue
+/// still holds the connection handle for a moment.
+struct ClosedStream;
+
+impl MsgStream for ClosedStream {
+    fn send(&mut self, _msg: Message) -> Result<()> {
+        Err(closed())
+    }
+    fn flush(&mut self) -> Result<()> {
+        Err(closed())
+    }
+    fn recv(&mut self) -> Result<Message> {
+        Err(closed())
+    }
+    fn transport(&self) -> &'static str {
+        "closed"
+    }
+    fn set_nonblocking(&mut self, _nonblocking: bool) -> Result<()> {
+        Ok(())
+    }
+    fn poll_source(&self) -> PollSource {
+        PollSource::Channel
+    }
+    fn try_recv(&mut self) -> Result<Option<Message>> {
+        Err(closed())
+    }
+    fn try_flush(&mut self) -> Result<bool> {
+        Err(closed())
+    }
+}
+
+fn closed() -> Error {
+    Error::Io(std::io::Error::new(
+        std::io::ErrorKind::NotConnected,
+        "connection closed",
+    ))
+}

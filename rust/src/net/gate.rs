@@ -8,7 +8,7 @@
 //! gate between segments, so a pause never waits on a rate-limiter block.
 
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Condvar, Mutex};
+use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
 #[derive(Default)]
@@ -18,6 +18,10 @@ struct GateState {
     /// When the current pause began (measured from `pause()` entry, so the
     /// recorded window includes the in-flight drain wait).
     paused_at: Option<Instant>,
+    /// One-shot callbacks fired when the gate reopens — the event-driven
+    /// server parks a connection whose `try_enter` failed and re-arms it
+    /// from here instead of pinning a worker thread on `enter()`.
+    resume_wakers: Vec<Arc<dyn Fn() + Send + Sync>>,
 }
 
 /// Pausable entry gate.
@@ -83,8 +87,25 @@ impl Gate {
                 .store(started.elapsed().as_nanos() as u64, Ordering::SeqCst);
         }
         s.paused = false;
+        let wakers = std::mem::take(&mut s.resume_wakers);
         drop(s);
         self.cv.notify_all();
+        for w in wakers {
+            w();
+        }
+    }
+
+    /// Register a one-shot callback fired when the current pause ends. If
+    /// the gate is not paused, the callback fires immediately (the
+    /// `try_enter` failure it reacts to has already resolved).
+    pub fn register_resume_waker(&self, waker: Arc<dyn Fn() + Send + Sync>) {
+        let mut s = self.state.lock().unwrap();
+        if !s.paused {
+            drop(s);
+            waker();
+            return;
+        }
+        s.resume_wakers.push(waker);
     }
 
     /// How long requests were blocked by the most recent pause/resume
@@ -170,6 +191,33 @@ mod tests {
     fn try_enter_succeeds_when_unpaused() {
         let g = Gate::new();
         assert!(g.try_enter().is_some());
+    }
+
+    #[test]
+    fn resume_waker_fires_on_resume_or_immediately() {
+        let g = Gate::new();
+        let hits = Arc::new(AtomicUsize::new(0));
+
+        // Unpaused: fires synchronously.
+        let h = hits.clone();
+        g.register_resume_waker(Arc::new(move || {
+            h.fetch_add(1, Ordering::SeqCst);
+        }));
+        assert_eq!(hits.load(Ordering::SeqCst), 1);
+
+        // Paused: held until resume, then fired exactly once.
+        g.pause();
+        assert!(g.try_enter().is_none());
+        let h = hits.clone();
+        g.register_resume_waker(Arc::new(move || {
+            h.fetch_add(10, Ordering::SeqCst);
+        }));
+        assert_eq!(hits.load(Ordering::SeqCst), 1, "held while paused");
+        g.resume();
+        assert_eq!(hits.load(Ordering::SeqCst), 11, "fired on resume");
+        g.pause();
+        g.resume();
+        assert_eq!(hits.load(Ordering::SeqCst), 11, "one-shot: not re-fired");
     }
 
     #[test]

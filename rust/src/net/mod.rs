@@ -1,10 +1,14 @@
 //! Networking: the wire protocol (gRPC analogue), the pluggable transport
-//! layer (TCP + zero-copy in-process), the server, and the checkpoint gate.
+//! layer (TCP + Unix sockets + zero-copy in-process), the readiness
+//! poller, the event-driven service core, the server, and the checkpoint
+//! gate.
 
+pub mod event;
 pub mod gate;
+pub mod poller;
 pub mod server;
 pub mod transport;
 pub mod wire;
 
-pub use server::{PersistMode, Server, ServerBuilder};
-pub use transport::{dial, MsgStream, TransportListener, IN_PROC_SCHEME};
+pub use server::{PersistMode, Server, ServerBuilder, ServiceModel};
+pub use transport::{dial, MsgStream, PollSource, TransportListener, IN_PROC_SCHEME, UNIX_SCHEME};

@@ -1,18 +1,28 @@
 //! The Reverb server: tables exposed over the wire protocol through any
-//! number of [`TransportListener`]s, with one service thread per connection
-//! (Reverb's gRPC server is likewise thread-pooled; contention behaviour
-//! lives in the tables, not the transport — see DESIGN.md §2).
+//! number of [`TransportListener`]s.
+//!
+//! Two service models exist (DESIGN.md §11):
+//!
+//! - **Event** (the default): `N = service_threads` workers drive
+//!   per-connection state machines over a readiness poller
+//!   (`net::event`), so connection count and CPU usage are decoupled —
+//!   the paper's "thousands of concurrent clients" regime.
+//! - **Threaded** (`--service-model threaded`): the original
+//!   thread-per-connection model, kept for one release as a
+//!   differential-testing oracle.
 //!
 //! Every server registers an in-process endpoint (`reverb://in-proc/...`);
-//! [`ServerBuilder::bind`] additionally opens a TCP listener, while
+//! [`ServerBuilder::bind`] additionally opens a TCP listener,
+//! [`ServerBuilder::unix_socket`] a Unix-domain-socket listener, and
 //! [`ServerBuilder::serve_in_proc`] serves the in-process path alone.
 
 use crate::core::chunk::Chunk;
 use crate::core::chunk_store::ChunkStore;
 use crate::core::extensions::TableExtension;
-use crate::core::item::Item;
+use crate::core::item::{Item, SampledItem};
 use crate::core::table::{Table, TableConfig, TableInfo};
 use crate::error::{Error, Result};
+use crate::net::event::{default_service_threads, EventCore, EventShared};
 use crate::net::gate::Gate;
 use crate::net::transport::{
     self, InProcListener, MsgStream, TcpTransportListener, TransportListener,
@@ -23,8 +33,20 @@ use std::collections::HashMap;
 use std::net::{SocketAddr, TcpStream};
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::Arc;
+use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
+
+/// How connections are serviced (DESIGN.md §11).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ServiceModel {
+    /// One OS thread per connection — the legacy model, kept as a
+    /// differential-testing oracle (`--service-model threaded`).
+    Threaded,
+    /// A fixed worker pool drives per-connection state machines over a
+    /// readiness poller; blocked table ops suspend the connection, not a
+    /// worker.
+    Event,
+}
 
 /// How the server persists checkpoints (§3.7 / DESIGN.md §10).
 #[derive(Clone, Debug)]
@@ -56,7 +78,7 @@ const WAIT_SLICE: Duration = Duration::from_millis(50);
 
 /// Per-connection cache of recently streamed chunks awaiting item creation.
 /// Bounded; writers create items promptly after streaming chunks.
-const PENDING_CHUNK_CAP: usize = 1024;
+pub(crate) const PENDING_CHUNK_CAP: usize = 1024;
 
 /// Server construction options.
 pub struct ServerBuilder {
@@ -66,6 +88,9 @@ pub struct ServerBuilder {
     checkpoint_interval: Option<Duration>,
     persist_mode: PersistMode,
     in_proc_name: Option<String>,
+    service_model: ServiceModel,
+    service_threads: Option<usize>,
+    uds_path: Option<PathBuf>,
 }
 
 impl ServerBuilder {
@@ -77,7 +102,39 @@ impl ServerBuilder {
             checkpoint_interval: None,
             persist_mode: PersistMode::Full,
             in_proc_name: None,
+            // The poller has no readiness source for socket fds off unix
+            // (RawSock::raw_fd returns -1 there), so non-unix platforms
+            // keep the thread-per-connection default.
+            service_model: if cfg!(unix) {
+                ServiceModel::Event
+            } else {
+                ServiceModel::Threaded
+            },
+            service_threads: None,
+            uds_path: None,
         }
+    }
+
+    /// Select how connections are serviced (default:
+    /// [`ServiceModel::Event`]). [`ServiceModel::Threaded`] restores the
+    /// legacy thread-per-connection behaviour.
+    pub fn service_model(mut self, model: ServiceModel) -> Self {
+        self.service_model = model;
+        self
+    }
+
+    /// Size of the event-model worker pool (default: one per core).
+    /// Ignored under [`ServiceModel::Threaded`].
+    pub fn service_threads(mut self, n: usize) -> Self {
+        self.service_threads = Some(n.max(1));
+        self
+    }
+
+    /// Additionally serve a Unix-domain-socket listener at `path`
+    /// (`reverb+unix:///path`). The socket file is removed at shutdown.
+    pub fn unix_socket(mut self, path: impl Into<PathBuf>) -> Self {
+        self.uds_path = Some(path.into());
+        self
     }
 
     /// Add a table.
@@ -230,41 +287,71 @@ impl ServerBuilder {
             listeners.push(Box::new(listener));
             addr
         });
+        let uds_addr = match &self.uds_path {
+            Some(path) => {
+                #[cfg(unix)]
+                {
+                    let listener = transport::UnixTransportListener::bind(path)?;
+                    let addr = listener.endpoint();
+                    shutdowns.push(ListenerShutdown::Unix(path.clone()));
+                    listeners.push(Box::new(listener));
+                    Some(addr)
+                }
+                #[cfg(not(unix))]
+                {
+                    let _ = path;
+                    return Err(Error::InvalidArgument(
+                        "unix-domain sockets are not supported on this platform".into(),
+                    ));
+                }
+            }
+            None => None,
+        };
+
+        // The event-driven service core (DESIGN.md §11), unless the
+        // threaded differential oracle was requested.
+        let event = match self.service_model {
+            ServiceModel::Event => Some(EventCore::start(
+                inner.clone(),
+                self.service_threads.unwrap_or_else(default_service_threads),
+            )?),
+            ServiceModel::Threaded => None,
+        };
+        let driver = match &event {
+            Some(core) => ServiceDriver::Event(core.shared()),
+            None => ServiceDriver::Threaded,
+        };
 
         let mut accept_threads = Vec::with_capacity(listeners.len());
         for listener in listeners {
             let accept_inner = inner.clone();
+            let accept_driver = driver.clone();
             accept_threads.push(
                 std::thread::Builder::new()
                     .name("reverb-accept".into())
-                    .spawn(move || accept_loop(listener, accept_inner))
+                    .spawn(move || accept_loop(listener, accept_inner, accept_driver))
                     .expect("spawn accept thread"),
             );
         }
 
-        // Periodic checkpointer (§3.7), if configured.
+        // Periodic checkpointer (§3.7), if configured. It parks on a
+        // condvar signalled by `stop()`, so shutdown latency is bounded by
+        // an in-flight checkpoint, never by the interval.
+        let stop_signal = Arc::new(StopSignal::default());
         let checkpoint_thread = self.checkpoint_interval.map(|interval| {
             if inner.checkpoint_dir.is_none() {
                 panic!("checkpoint_interval requires checkpoint_dir");
             }
             let ckpt_inner = inner.clone();
+            let signal = stop_signal.clone();
             std::thread::Builder::new()
                 .name("reverb-ckpt".into())
-                .spawn(move || {
-                    let tick = Duration::from_millis(25).min(interval);
-                    let mut waited = Duration::ZERO;
-                    loop {
-                        std::thread::sleep(tick);
-                        if ckpt_inner.shutdown.load(Ordering::SeqCst) {
-                            return;
-                        }
-                        waited += tick;
-                        if waited >= interval {
-                            waited = Duration::ZERO;
-                            if let Err(e) = ckpt_inner.checkpoint() {
-                                log::warn!("periodic checkpoint failed: {e}");
-                            }
-                        }
+                .spawn(move || loop {
+                    if signal.wait_stop(interval) {
+                        return;
+                    }
+                    if let Err(e) = ckpt_inner.checkpoint() {
+                        log::warn!("periodic checkpoint failed: {e}");
                     }
                 })
                 .expect("spawn checkpoint thread")
@@ -274,11 +361,54 @@ impl ServerBuilder {
             inner,
             local_addr,
             in_proc_addr,
+            uds_addr,
             shutdowns,
             accept_threads,
             checkpoint_thread,
+            stop_signal,
+            event,
         })
     }
+}
+
+/// Shutdown handshake for the periodic checkpoint thread: `wait_stop`
+/// parks for one interval or until `signal()` fires, whichever is first.
+#[derive(Default)]
+struct StopSignal {
+    stopped: Mutex<bool>,
+    cv: Condvar,
+}
+
+impl StopSignal {
+    /// Returns `true` when stop was signalled (possibly before the full
+    /// interval elapsed).
+    fn wait_stop(&self, interval: Duration) -> bool {
+        let deadline = Instant::now() + interval;
+        let mut stopped = self.stopped.lock().unwrap();
+        loop {
+            if *stopped {
+                return true;
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                return false;
+            }
+            let (guard, _timeout) = self.cv.wait_timeout(stopped, deadline - now).unwrap();
+            stopped = guard;
+        }
+    }
+
+    fn signal(&self) {
+        *self.stopped.lock().unwrap() = true;
+        self.cv.notify_all();
+    }
+}
+
+/// How accepted connections are handed to the service layer.
+#[derive(Clone)]
+enum ServiceDriver {
+    Threaded,
+    Event(Arc<EventShared>),
 }
 
 impl Default for ServerBuilder {
@@ -287,12 +417,12 @@ impl Default for ServerBuilder {
     }
 }
 
-struct ServerInner {
+pub(crate) struct ServerInner {
     tables: HashMap<String, Arc<Table>>,
     /// Construction order (stable info/checkpoint ordering).
-    table_order: Vec<Arc<Table>>,
-    store: ChunkStore,
-    gate: Gate,
+    pub(crate) table_order: Vec<Arc<Table>>,
+    pub(crate) store: ChunkStore,
+    pub(crate) gate: Gate,
     checkpoint_dir: Option<PathBuf>,
     checkpoint_seq: AtomicU64,
     /// Incremental persistence (DESIGN.md §10); `None` = legacy full
@@ -307,6 +437,9 @@ enum ListenerShutdown {
     Tcp(SocketAddr),
     /// Unbind the registry entry; the accept channel disconnects.
     InProc(String),
+    /// Dummy-connect the socket path to wake the blocking `accept`.
+    #[cfg_attr(not(unix), allow(dead_code))]
+    Unix(PathBuf),
 }
 
 /// A running Reverb server. Dropping (or calling [`Server::stop`]) shuts it
@@ -315,9 +448,14 @@ pub struct Server {
     inner: Arc<ServerInner>,
     local_addr: Option<SocketAddr>,
     in_proc_addr: String,
+    uds_addr: Option<String>,
     shutdowns: Vec<ListenerShutdown>,
     accept_threads: Vec<std::thread::JoinHandle<()>>,
     checkpoint_thread: Option<std::thread::JoinHandle<()>>,
+    stop_signal: Arc<StopSignal>,
+    /// The event-driven service core; `None` under
+    /// [`ServiceModel::Threaded`].
+    event: Option<EventCore>,
 }
 
 impl Server {
@@ -345,6 +483,19 @@ impl Server {
     /// serialization and syscalls entirely.
     pub fn in_proc_addr(&self) -> String {
         self.in_proc_addr.clone()
+    }
+
+    /// The Unix-domain-socket endpoint (`reverb+unix:///path`), if one was
+    /// requested via [`ServerBuilder::unix_socket`].
+    pub fn uds_addr(&self) -> Option<String> {
+        self.uds_addr.clone()
+    }
+
+    /// Live connections currently tracked by the event-driven core
+    /// (`None` under [`ServiceModel::Threaded`], which does not track its
+    /// connection threads).
+    pub fn live_connections(&self) -> Option<usize> {
+        self.event.as_ref().map(|e| e.shared().live_conns())
     }
 
     /// Direct in-process access to a table — used by benchmarks that want
@@ -386,9 +537,16 @@ impl Server {
         if self.inner.shutdown.swap(true, Ordering::SeqCst) {
             return;
         }
+        // Cancelling tables wakes blocked handlers (threaded model) and
+        // fires the re-arm hooks of parked connections (event model), so
+        // their Cancelled error replies are produced before the worker
+        // pool drains and exits below.
         for t in &self.inner.table_order {
             t.cancel();
         }
+        // Unpark the checkpoint thread immediately — stop latency must not
+        // scale with --checkpoint-interval.
+        self.stop_signal.signal();
         for s in &self.shutdowns {
             match s {
                 // Unblock the accept loop.
@@ -396,6 +554,12 @@ impl Server {
                     let _ = TcpStream::connect(addr);
                 }
                 ListenerShutdown::InProc(name) => transport::in_proc_unbind(name),
+                ListenerShutdown::Unix(_path) => {
+                    #[cfg(unix)]
+                    {
+                        let _ = std::os::unix::net::UnixStream::connect(_path);
+                    }
+                }
             }
         }
         for h in self.accept_threads.drain(..) {
@@ -403,6 +567,9 @@ impl Server {
         }
         if let Some(h) = self.checkpoint_thread.take() {
             let _ = h.join();
+        }
+        if let Some(event) = &mut self.event {
+            event.stop();
         }
         // Final journal rotation + durable manifest, then join the
         // background writer.
@@ -419,13 +586,13 @@ impl Drop for Server {
 }
 
 impl ServerInner {
-    fn table(&self, name: &str) -> Result<&Arc<Table>> {
+    pub(crate) fn table(&self, name: &str) -> Result<&Arc<Table>> {
         self.tables
             .get(name)
             .ok_or_else(|| Error::TableNotFound(name.into()))
     }
 
-    fn checkpoint(&self) -> Result<PathBuf> {
+    pub(crate) fn checkpoint(&self) -> Result<PathBuf> {
         if let Some(persister) = &self.persister {
             // Incremental (§3.7 revisited, DESIGN.md §10): the pause only
             // covers draining in-flight handlers plus a constant-time
@@ -491,19 +658,28 @@ impl ServerInner {
     }
 }
 
-fn accept_loop(mut listener: Box<dyn TransportListener>, inner: Arc<ServerInner>) {
+fn accept_loop(
+    mut listener: Box<dyn TransportListener>,
+    inner: Arc<ServerInner>,
+    driver: ServiceDriver,
+) {
     loop {
         match listener.accept() {
             Ok(Some(stream)) => {
                 if inner.shutdown.load(Ordering::SeqCst) {
                     return;
                 }
-                let conn_inner = inner.clone();
-                let _ = std::thread::Builder::new()
-                    .name("reverb-conn".into())
-                    .spawn(move || {
-                        let _ = serve_connection(stream, conn_inner);
-                    });
+                match &driver {
+                    ServiceDriver::Threaded => {
+                        let conn_inner = inner.clone();
+                        let _ = std::thread::Builder::new()
+                            .name("reverb-conn".into())
+                            .spawn(move || {
+                                let _ = serve_connection(stream, conn_inner);
+                            });
+                    }
+                    ServiceDriver::Event(shared) => shared.add_conn(stream),
+                }
             }
             // Listener closed cleanly (in-proc unbind).
             Ok(None) => return,
@@ -521,7 +697,30 @@ fn accept_loop(mut listener: Box<dyn TransportListener>, inner: Arc<ServerInner>
 /// (v2 frames) are validated per column against the resolved chunks:
 /// `Item::new_trajectory` rejects slices that overrun a chunk, reference a
 /// chunk the item does not carry, or gather from multi-field chunks.
-fn resolve_item(
+/// Stash freshly streamed chunks in the global store and the
+/// per-connection pending set (bounded by [`PENDING_CHUNK_CAP`]). Shared
+/// by both service models so their chunk-retention policies cannot drift.
+pub(crate) fn stash_chunks(
+    inner: &ServerInner,
+    pending: &mut HashMap<u64, Arc<Chunk>>,
+    pending_order: &mut std::collections::VecDeque<u64>,
+    chunks: Vec<Arc<Chunk>>,
+) {
+    for chunk in chunks {
+        let key = chunk.key;
+        let arc = inner.store.insert_arc(chunk);
+        if pending.insert(key, arc).is_none() {
+            pending_order.push_back(key);
+        }
+        while pending_order.len() > PENDING_CHUNK_CAP {
+            if let Some(old) = pending_order.pop_front() {
+                pending.remove(&old);
+            }
+        }
+    }
+}
+
+pub(crate) fn resolve_item(
     inner: &ServerInner,
     pending: &HashMap<u64, Arc<Chunk>>,
     wire: &WireItem,
@@ -557,7 +756,7 @@ fn resolve_item(
 }
 
 /// Convert a sampled item to its wire form plus its chunk set.
-fn sampled_to_wire(s: &crate::core::item::SampledItem) -> (WireSampleInfo, Vec<Arc<Chunk>>) {
+fn sampled_to_wire(s: &SampledItem) -> (WireSampleInfo, Vec<Arc<Chunk>>) {
     let info = WireSampleInfo {
         item: WireItem {
             key: s.item.key,
@@ -573,6 +772,26 @@ fn sampled_to_wire(s: &crate::core::item::SampledItem) -> (WireSampleInfo, Vec<A
         table_size: s.table_size as u64,
     };
     (info, s.item.chunks.clone())
+}
+
+/// Build the `SampleData` response for a batch, deduplicating chunks
+/// shared across items. The response carries the shared handles: TCP/UDS
+/// encode straight from them, in-proc hands them to the client as-is — no
+/// payload clone either way (hot path). Linear scan beats a HashSet at
+/// batch sizes. Shared by both service models.
+pub(crate) fn sample_reply(id: u64, samples: &[SampledItem]) -> Message {
+    let mut infos = Vec::with_capacity(samples.len());
+    let mut chunks: Vec<Arc<Chunk>> = Vec::with_capacity(samples.len());
+    for s in samples {
+        let (info, item_chunks) = sampled_to_wire(s);
+        infos.push(info);
+        for c in item_chunks {
+            if !chunks.iter().any(|x| x.key == c.key) {
+                chunks.push(c);
+            }
+        }
+    }
+    Message::SampleData { id, infos, chunks }
 }
 
 fn serve_connection(mut stream: Box<dyn MsgStream>, inner: Arc<ServerInner>) -> Result<()> {
@@ -593,18 +812,7 @@ fn serve_connection(mut stream: Box<dyn MsgStream>, inner: Arc<ServerInner>) -> 
         };
         match msg {
             Message::InsertChunks { chunks } => {
-                for chunk in chunks {
-                    let key = chunk.key;
-                    let arc = inner.store.insert_arc(chunk);
-                    if pending.insert(key, arc).is_none() {
-                        pending_order.push_back(key);
-                    }
-                    while pending_order.len() > PENDING_CHUNK_CAP {
-                        if let Some(old) = pending_order.pop_front() {
-                            pending.remove(&old);
-                        }
-                    }
-                }
+                stash_chunks(&inner, &mut pending, &mut pending_order, chunks);
                 // No reply: chunk streaming is fire-and-forget, acks ride
                 // on the subsequent CreateItem.
             }
@@ -633,25 +841,7 @@ fn serve_connection(mut stream: Box<dyn MsgStream>, inner: Arc<ServerInner>) -> 
                 })();
                 match result {
                     Ok(samples) => {
-                        let mut infos = Vec::with_capacity(samples.len());
-                        let mut chunks: Vec<Arc<Chunk>> = Vec::with_capacity(samples.len());
-                        for s in &samples {
-                            let (info, item_chunks) = sampled_to_wire(s);
-                            infos.push(info);
-                            for c in item_chunks {
-                                // Dedup chunks shared across items in this
-                                // response batch. The response carries the
-                                // shared handles: TCP encodes straight from
-                                // them, in-proc hands them to the client
-                                // as-is — no payload clone either way (hot
-                                // path). Linear scan beats a HashSet at
-                                // batch sizes.
-                                if !chunks.iter().any(|x| x.key == c.key) {
-                                    chunks.push(c);
-                                }
-                            }
-                        }
-                        stream.send(Message::SampleData { id, infos, chunks })?;
+                        stream.send(sample_reply(id, &samples))?;
                         stream.flush()?;
                     }
                     Err(e) => {
@@ -1158,6 +1348,288 @@ mod tests {
         assert!(m.watermark >= 1, "periodic rotation committed the insert");
         drop(server);
         std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn stop_returns_quickly_under_long_checkpoint_interval() {
+        // Regression: the checkpoint thread used to tick with
+        // `thread::sleep`, so stop() could block for up to the interval.
+        // It now parks on a condvar signalled by stop().
+        let dir = std::env::temp_dir().join(format!(
+            "reverb_stop_latency_{}",
+            std::process::id()
+        ));
+        std::fs::create_dir_all(&dir).unwrap();
+        let mut server = Server::builder()
+            .table(TableConfig::uniform_replay("t", 10))
+            .checkpoint_dir(&dir)
+            .checkpoint_interval(Duration::from_secs(3600))
+            .bind("127.0.0.1:0")
+            .unwrap();
+        // Let the checkpoint thread reach its park.
+        std::thread::sleep(Duration::from_millis(50));
+        let start = Instant::now();
+        server.stop();
+        let elapsed = start.elapsed();
+        assert!(
+            elapsed < Duration::from_millis(100),
+            "stop took {elapsed:?} under a 1h checkpoint interval"
+        );
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn threaded_service_model_still_serves() {
+        // The differential-testing oracle: the legacy model must keep
+        // speaking the identical protocol.
+        let server = Server::builder()
+            .table(TableConfig::uniform_replay("t", 100))
+            .service_model(ServiceModel::Threaded)
+            .bind("127.0.0.1:0")
+            .unwrap();
+        assert!(server.live_connections().is_none(), "threaded model");
+        let mut conn = transport::dial(&format!("tcp://{}", server.local_addr())).unwrap();
+        conn.send(Message::InsertChunks { chunks: vec![mk_chunk(31, 1.5)] })
+            .unwrap();
+        conn.send(Message::CreateItem {
+            id: 1,
+            item: WireItem {
+                key: 3,
+                table: "t".into(),
+                priority: 1.0,
+                chunk_keys: vec![31],
+                offset: 0,
+                length: 1,
+                times_sampled: 0,
+                columns: None,
+            },
+            timeout_ms: 1000,
+        })
+        .unwrap();
+        conn.flush().unwrap();
+        assert!(matches!(conn.recv().unwrap(), Message::Ack { id: 1, .. }));
+        conn.send(Message::SampleRequest {
+            id: 2,
+            table: "t".into(),
+            num_samples: 1,
+            timeout_ms: 1000,
+        })
+        .unwrap();
+        conn.flush().unwrap();
+        match conn.recv().unwrap() {
+            Message::SampleData { id, infos, .. } => {
+                assert_eq!(id, 2);
+                assert_eq!(infos[0].item.key, 3);
+            }
+            other => panic!("expected samples, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn event_model_with_one_worker_parks_blocked_insert_without_pinning() {
+        // The core non-pinning property: with a single service worker, a
+        // corridor-blocked CreateItem on connection A must not prevent
+        // connection B from being serviced — and B's sample must unblock
+        // A's parked insert through the table wakers.
+        let server = Server::builder()
+            .table(TableConfig::queue("q", 1))
+            .service_threads(1)
+            .serve_in_proc()
+            .unwrap();
+        let mk_create = |id: u64, key: u64| Message::CreateItem {
+            id,
+            item: WireItem {
+                key,
+                table: "q".into(),
+                priority: 1.0,
+                chunk_keys: vec![key + 100],
+                offset: 0,
+                length: 1,
+                times_sampled: 0,
+                columns: None,
+            },
+            timeout_ms: 10_000,
+        };
+        let mut a = transport::dial(&server.in_proc_addr()).unwrap();
+        a.send(Message::InsertChunks { chunks: vec![mk_chunk(101, 1.0)] })
+            .unwrap();
+        a.send(mk_create(1, 1)).unwrap();
+        a.flush().unwrap();
+        assert!(matches!(a.recv().unwrap(), Message::Ack { id: 1, .. }));
+        // Queue full: this one parks server-side.
+        a.send(Message::InsertChunks { chunks: vec![mk_chunk(102, 2.0)] })
+            .unwrap();
+        a.send(mk_create(2, 2)).unwrap();
+        a.flush().unwrap();
+        // The single worker must still serve connection B while A parks.
+        let mut b = transport::dial(&server.in_proc_addr()).unwrap();
+        b.send(Message::SampleRequest {
+            id: 7,
+            table: "q".into(),
+            num_samples: 1,
+            timeout_ms: 5_000,
+        })
+        .unwrap();
+        b.flush().unwrap();
+        match b.recv().unwrap() {
+            Message::SampleData { id, infos, .. } => {
+                assert_eq!(id, 7);
+                assert_eq!(infos[0].item.key, 1);
+            }
+            other => panic!("expected samples, got {other:?}"),
+        }
+        // The consume-on-sample freed the corridor: A's parked insert
+        // completes via the re-arm hook.
+        assert!(matches!(a.recv().unwrap(), Message::Ack { id: 2, .. }));
+        assert_eq!(server.table("q").unwrap().size(), 1);
+        assert_eq!(server.live_connections(), Some(2));
+    }
+
+    /// Run a fixed, fully deterministic protocol script and log every
+    /// reply (the differential-testing oracle for the two service models).
+    /// `use_tcp` picks the socket path (partial frames, writev queue) vs
+    /// the in-proc channel path (occupancy wakers) — both must agree.
+    fn run_differential_script(model: ServiceModel, use_tcp: bool) -> Vec<String> {
+        fn describe(m: Message) -> String {
+            match m {
+                Message::Ack { id, .. } => format!("ack {id}"),
+                Message::Err { id, code, .. } => format!("err {id} code={code}"),
+                Message::SampleData { id, infos, .. } => format!(
+                    "samples {id} keys={:?}",
+                    infos.iter().map(|i| i.item.key).collect::<Vec<_>>()
+                ),
+                Message::Info { id, tables } => format!(
+                    "info {id} {:?}",
+                    tables
+                        .iter()
+                        .map(|(n, i)| (n.clone(), i.size))
+                        .collect::<Vec<_>>()
+                ),
+                other => format!("unexpected {other:?}"),
+            }
+        }
+        let server = Server::builder()
+            .table(TableConfig::queue("q", 2))
+            .service_model(model)
+            .bind("127.0.0.1:0")
+            .unwrap();
+        let addr = if use_tcp {
+            format!("tcp://{}", server.local_addr())
+        } else {
+            server.in_proc_addr()
+        };
+        let mut conn = transport::dial(&addr).unwrap();
+        let item = |key: u64| WireItem {
+            key,
+            table: "q".into(),
+            priority: 1.0,
+            chunk_keys: vec![key + 200],
+            offset: 0,
+            length: 1,
+            times_sampled: 0,
+            columns: None,
+        };
+        let mut log = Vec::new();
+        for k in 1..=2u64 {
+            conn.send(Message::InsertChunks { chunks: vec![mk_chunk(k + 200, k as f32)] })
+                .unwrap();
+            conn.send(Message::CreateItem { id: k, item: item(k), timeout_ms: 2_000 })
+                .unwrap();
+        }
+        conn.flush().unwrap();
+        for _ in 0..2 {
+            log.push(describe(conn.recv().unwrap()));
+        }
+        // Full queue: the third insert times out (and must be replied
+        // before anything later on this connection — FIFO per conn).
+        conn.send(Message::InsertChunks { chunks: vec![mk_chunk(203, 3.0)] })
+            .unwrap();
+        conn.send(Message::CreateItem { id: 3, item: item(3), timeout_ms: 50 })
+            .unwrap();
+        conn.send(Message::SampleRequest {
+            id: 4,
+            table: "q".into(),
+            num_samples: 2,
+            timeout_ms: 2_000,
+        })
+        .unwrap();
+        conn.flush().unwrap();
+        log.push(describe(conn.recv().unwrap()));
+        log.push(describe(conn.recv().unwrap()));
+        // Drained queue: sampling times out.
+        conn.send(Message::SampleRequest {
+            id: 5,
+            table: "q".into(),
+            num_samples: 1,
+            timeout_ms: 50,
+        })
+        .unwrap();
+        // Unknown table, reset, info.
+        conn.send(Message::MutatePriorities {
+            id: 6,
+            table: "nope".into(),
+            updates: vec![],
+            deletes: vec![],
+        })
+        .unwrap();
+        conn.send(Message::Reset { id: 7, table: "q".into() }).unwrap();
+        conn.send(Message::InfoRequest { id: 8 }).unwrap();
+        conn.flush().unwrap();
+        for _ in 0..4 {
+            log.push(describe(conn.recv().unwrap()));
+        }
+        log
+    }
+
+    #[test]
+    fn service_models_are_behaviourally_identical() {
+        let expected = vec![
+            "ack 1".to_string(),
+            "ack 2".to_string(),
+            "err 3 code=2".to_string(),
+            "samples 4 keys=[1, 2]".to_string(),
+            "err 5 code=2".to_string(),
+            "err 6 code=1".to_string(),
+            "ack 7".to_string(),
+            "info 8 [(\"q\", 0)]".to_string(),
+        ];
+        // Both models × both transport paths (TCP exercises partial
+        // frames and the writev queue; in-proc the occupancy wakers).
+        for use_tcp in [false, true] {
+            let threaded = run_differential_script(ServiceModel::Threaded, use_tcp);
+            let event = run_differential_script(ServiceModel::Event, use_tcp);
+            assert_eq!(threaded, event, "oracle diverged (tcp={use_tcp})");
+            assert_eq!(threaded, expected, "tcp={use_tcp}");
+        }
+    }
+
+    #[cfg(unix)]
+    #[test]
+    fn uds_listener_serves_and_cleans_up() {
+        let path = std::env::temp_dir().join(format!(
+            "reverb_uds_server_{}.sock",
+            std::process::id()
+        ));
+        std::fs::remove_file(&path).ok();
+        let mut server = Server::builder()
+            .table(TableConfig::uniform_replay("t", 100))
+            .unix_socket(&path)
+            .serve_in_proc()
+            .unwrap();
+        let addr = server.uds_addr().expect("uds endpoint");
+        assert!(addr.starts_with(crate::net::transport::UNIX_SCHEME));
+        let mut conn = transport::dial(&addr).unwrap();
+        conn.send(Message::InfoRequest { id: 4 }).unwrap();
+        conn.flush().unwrap();
+        match conn.recv().unwrap() {
+            Message::Info { id, tables } => {
+                assert_eq!(id, 4);
+                assert_eq!(tables[0].0, "t");
+            }
+            other => panic!("expected info, got {other:?}"),
+        }
+        server.stop();
+        assert!(!path.exists(), "socket file removed at shutdown");
     }
 
     #[test]

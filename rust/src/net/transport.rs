@@ -1,9 +1,12 @@
-//! Pluggable transport (DESIGN.md §2): framed [`Message`] streams between
-//! clients and servers, with two interchangeable backends.
+//! Pluggable transport (DESIGN.md §2, §11): framed [`Message`] streams
+//! between clients and servers, with three interchangeable backends.
 //!
 //! - **`tcp://host:port`** (bare `host:port` also accepted) — the original
 //!   path: length-prefixed frames over a `TcpStream`, `Message`s encoded and
 //!   decoded at each end.
+//! - **`reverb+unix:///path`** — the same frame codec over a Unix domain
+//!   socket: loopback traffic without the TCP/IP stack (ROADMAP transport
+//!   backends item).
 //! - **`reverb://in-proc/<name>`** — a zero-copy in-process path: whole
 //!   [`Message`] values move through channels (requests bounded for
 //!   backpressure, replies unbounded for deadlock freedom — see
@@ -13,24 +16,42 @@
 //!   (`coordinator`), where the paper notes the throughput ceiling should
 //!   live in the tables, not the transport.
 //!
-//! Both backends carry the identical protocol and error mapping: a closed
+//! All backends carry the identical protocol and error mapping: a closed
 //! peer surfaces as [`Error::Io`], exactly like a TCP hang-up, so every
 //! layer above (`Server`, `Client`, `Writer`, `Sampler`) is
 //! transport-oblivious. The conformance suite in
 //! `rust/tests/transport_conformance.rs` runs every black-box scenario
-//! against both backends.
+//! against all backends.
+//!
+//! # Readiness API (the event-driven service core, DESIGN.md §11)
+//!
+//! Every stream also exposes a non-blocking face: [`MsgStream::set_nonblocking`],
+//! [`MsgStream::try_recv`] (resumable frame decode via
+//! [`crate::net::wire::FrameDecoder`] — a partial frame survives a
+//! `WouldBlock` and resumes on the next readiness event),
+//! [`MsgStream::try_flush`] (partial-write resumption over the vectored
+//! write queue), and [`MsgStream::poll_source`] — fd-backed streams hand
+//! their descriptor to the server's poller
+//! ([`crate::net::poller::Poller`]); channel-backed streams report
+//! readiness by occupancy and push wakeups through
+//! [`MsgStream::set_ready_waker`] instead. The blocking `recv`/`flush`
+//! methods are implemented *on top of* the same decoder and write queue,
+//! so the blocking client API routes over the identical nonblocking
+//! machinery.
 
 use crate::error::{Error, Result};
-use crate::net::wire::Message;
+use crate::net::wire::{FrameDecoder, Message};
 use std::collections::HashMap;
-use std::io::Write as _;
 use std::net::{SocketAddr, TcpListener, TcpStream};
-use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::mpsc::{channel, sync_channel, Receiver, Sender, SyncSender};
-use std::sync::{Mutex, OnceLock};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::mpsc::{channel, sync_channel, Receiver, Sender, SyncSender, TryRecvError};
+use std::sync::{Arc, Mutex, OnceLock};
 
 /// URL prefix of the in-process backend.
 pub const IN_PROC_SCHEME: &str = "reverb://in-proc/";
+
+/// URL prefix of the Unix-domain-socket backend (`reverb+unix:///path`).
+pub const UNIX_SCHEME: &str = "reverb+unix://";
 
 /// Request-direction (client→server) messages buffered on an in-process
 /// connection. Bounded so requests see the same backpressure a full TCP
@@ -44,15 +65,54 @@ const CHANNEL_DEPTH: usize = 256;
 /// Pending, not-yet-accepted connections per in-process listener.
 const ACCEPT_BACKLOG: usize = 64;
 
+/// Where a stream's readiness signal comes from (see module docs).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PollSource {
+    /// Poll this file descriptor (TCP / Unix sockets).
+    Fd(i32),
+    /// Channel-backed: readiness is channel occupancy, delivered through
+    /// [`MsgStream::set_ready_waker`]; there is nothing to poll.
+    Channel,
+}
+
 /// A bidirectional, framed [`Message`] stream. `send` may buffer until
 /// `flush`; `recv` blocks for the next message. A closed peer yields
 /// [`Error::Io`] from `recv`/`send`, mirroring TCP semantics.
+///
+/// The `try_*` half is the readiness face used by the event-driven server
+/// core; the blocking half is implemented over the same buffers, so both
+/// service models and the client share one code path per backend.
 pub trait MsgStream: Send {
     fn send(&mut self, msg: Message) -> Result<()>;
     fn flush(&mut self) -> Result<()>;
     fn recv(&mut self) -> Result<Message>;
-    /// Backend name for diagnostics ("tcp" / "in-proc").
+    /// Backend name for diagnostics ("tcp" / "unix" / "in-proc").
     fn transport(&self) -> &'static str;
+
+    // ---- readiness API (event-driven core) ----
+
+    /// Switch the underlying socket into (or out of) non-blocking mode.
+    /// Channel-backed streams are readiness-native; for them this is a
+    /// no-op.
+    fn set_nonblocking(&mut self, nonblocking: bool) -> Result<()>;
+
+    /// Registration token for the server's poller.
+    fn poll_source(&self) -> PollSource;
+
+    /// Non-blocking receive: `Ok(Some)` = one frame, `Ok(None)` = would
+    /// block (no complete frame available right now; a partial frame stays
+    /// buffered and resumes later), `Err` = peer closed / protocol error.
+    fn try_recv(&mut self) -> Result<Option<Message>>;
+
+    /// Non-blocking flush of queued outbound frames: `Ok(true)` = fully
+    /// flushed, `Ok(false)` = the peer's buffer filled mid-queue (re-arm
+    /// for writability and resume later).
+    fn try_flush(&mut self) -> Result<bool>;
+
+    /// Channel-backed streams invoke `waker` whenever a message becomes
+    /// available (and immediately if one already is). Fd-backed streams
+    /// ignore this — their readiness comes from the poller.
+    fn set_ready_waker(&mut self, _waker: Arc<dyn Fn() + Send + Sync>) {}
 }
 
 /// Server side of a transport: blocks for inbound connections.
@@ -65,7 +125,8 @@ pub trait TransportListener: Send {
 
 /// Connect to an endpoint by URL. Dispatches on scheme:
 /// `reverb://in-proc/<name>` (or `inproc://<name>`) to the channel backend,
-/// `tcp://host:port` or bare `host:port` to TCP.
+/// `reverb+unix:///path` to a Unix domain socket, and `tcp://host:port` or
+/// bare `host:port` to TCP.
 pub fn dial(addr: &str) -> Result<Box<dyn MsgStream>> {
     if let Some(name) = addr.strip_prefix(IN_PROC_SCHEME) {
         return Ok(Box::new(dial_in_proc(name)?));
@@ -73,27 +134,104 @@ pub fn dial(addr: &str) -> Result<Box<dyn MsgStream>> {
     if let Some(name) = addr.strip_prefix("inproc://") {
         return Ok(Box::new(dial_in_proc(name)?));
     }
+    if let Some(path) = addr.strip_prefix(UNIX_SCHEME) {
+        #[cfg(unix)]
+        {
+            return Ok(Box::new(UnixMsgStream::connect_unix(path)?));
+        }
+        #[cfg(not(unix))]
+        {
+            let _ = path;
+            return Err(Error::InvalidArgument(
+                "unix-domain sockets are not supported on this platform".into(),
+            ));
+        }
+    }
     let hostport = addr.strip_prefix("tcp://").unwrap_or(addr);
     Ok(Box::new(TcpMsgStream::connect(hostport)?))
 }
 
 // ---------------------------------------------------------------------
-// TCP backend
+// Socket backends (TCP + Unix): one generic frame stream
 // ---------------------------------------------------------------------
 
 /// Auto-flush threshold for queued outbound frames: matches the old
 /// `BufWriter` capacity so memory stays bounded under deep pipelining.
 const SEND_QUEUE_FLUSH_BYTES: usize = 256 * 1024;
 
-/// Frame codec over one TCP connection with a vectored write path:
+/// The socket operations a [`SocketMsgStream`] needs, shared by
+/// `TcpStream` and `UnixStream` (both implement `Read`/`Write` for `&Self`,
+/// which is what lets one object serve reads and vectored writes without
+/// `try_clone`).
+pub trait RawSock: Send {
+    fn read_some(&self, buf: &mut [u8]) -> std::io::Result<usize>;
+    fn write_vectored_some(&self, bufs: &[std::io::IoSlice<'_>]) -> std::io::Result<usize>;
+    fn set_nb(&self, nonblocking: bool) -> std::io::Result<()>;
+    fn raw_fd(&self) -> i32;
+    fn label(&self) -> &'static str;
+}
+
+impl RawSock for TcpStream {
+    fn read_some(&self, buf: &mut [u8]) -> std::io::Result<usize> {
+        let mut s = self;
+        std::io::Read::read(&mut s, buf)
+    }
+    fn write_vectored_some(&self, bufs: &[std::io::IoSlice<'_>]) -> std::io::Result<usize> {
+        let mut s = self;
+        std::io::Write::write_vectored(&mut s, bufs)
+    }
+    fn set_nb(&self, nonblocking: bool) -> std::io::Result<()> {
+        self.set_nonblocking(nonblocking)
+    }
+    fn raw_fd(&self) -> i32 {
+        #[cfg(unix)]
+        {
+            std::os::unix::io::AsRawFd::as_raw_fd(self)
+        }
+        #[cfg(not(unix))]
+        {
+            -1
+        }
+    }
+    fn label(&self) -> &'static str {
+        "tcp"
+    }
+}
+
+#[cfg(unix)]
+impl RawSock for std::os::unix::net::UnixStream {
+    fn read_some(&self, buf: &mut [u8]) -> std::io::Result<usize> {
+        let mut s = self;
+        std::io::Read::read(&mut s, buf)
+    }
+    fn write_vectored_some(&self, bufs: &[std::io::IoSlice<'_>]) -> std::io::Result<usize> {
+        let mut s = self;
+        std::io::Write::write_vectored(&mut s, bufs)
+    }
+    fn set_nb(&self, nonblocking: bool) -> std::io::Result<()> {
+        self.set_nonblocking(nonblocking)
+    }
+    fn raw_fd(&self) -> i32 {
+        std::os::unix::io::AsRawFd::as_raw_fd(self)
+    }
+    fn label(&self) -> &'static str {
+        "unix"
+    }
+}
+
+/// Frame codec over one stream socket with a vectored write path:
 /// `send` encodes each frame into its own buffer and queues it; `flush`
 /// hands the whole queue to `write_vectored`, so a pipelined burst of
 /// small frames (chunk streams + item creations, ack trains) is one
 /// `writev` syscall instead of one `write` per frame — with no
 /// intermediate copy into a staging buffer.
-pub struct TcpMsgStream {
-    reader: std::io::BufReader<TcpStream>,
-    stream: TcpStream,
+///
+/// The read path is a [`FrameDecoder`], so the same object serves blocking
+/// callers (`recv` loops until a frame completes) and the event core
+/// (`try_recv` suspends at `WouldBlock` and resumes mid-frame).
+pub struct SocketMsgStream<S: RawSock> {
+    sock: S,
+    decoder: FrameDecoder,
     /// Encoded frames awaiting the next flush.
     pending: std::collections::VecDeque<Vec<u8>>,
     /// Bytes of `pending[0]` already written by a previous partial flush.
@@ -101,25 +239,29 @@ pub struct TcpMsgStream {
     pending_bytes: usize,
 }
 
-impl TcpMsgStream {
-    pub fn connect(addr: &str) -> Result<TcpMsgStream> {
-        Self::from_stream(TcpStream::connect(addr)?)
-    }
+/// The TCP backend (kept under its historical name).
+pub type TcpMsgStream = SocketMsgStream<TcpStream>;
 
-    pub fn from_stream(stream: TcpStream) -> Result<TcpMsgStream> {
-        stream.set_nodelay(true)?;
-        Ok(TcpMsgStream {
-            reader: std::io::BufReader::with_capacity(256 * 1024, stream.try_clone()?),
-            stream,
+/// The Unix-domain-socket backend.
+#[cfg(unix)]
+pub type UnixMsgStream = SocketMsgStream<std::os::unix::net::UnixStream>;
+
+impl<S: RawSock> SocketMsgStream<S> {
+    fn new(sock: S) -> Self {
+        SocketMsgStream {
+            sock,
+            decoder: FrameDecoder::new(),
             pending: std::collections::VecDeque::new(),
             head: 0,
             pending_bytes: 0,
-        })
+        }
     }
 
-    /// Write every queued frame with as few `writev` calls as the kernel
-    /// allows, handling partial writes across frame boundaries.
-    fn flush_pending(&mut self) -> Result<()> {
+    /// Write queued frames with as few `writev` calls as the kernel
+    /// allows, handling partial writes across frame boundaries. Returns
+    /// `Ok(false)` when the socket reports `WouldBlock` mid-queue
+    /// (non-blocking mode): the remainder stays queued for resumption.
+    fn flush_pending(&mut self) -> Result<bool> {
         while !self.pending.is_empty() {
             let written = {
                 let mut slices: Vec<std::io::IoSlice<'_>> =
@@ -131,17 +273,18 @@ impl TcpMsgStream {
                 for buf in iter {
                     slices.push(std::io::IoSlice::new(buf));
                 }
-                // `Write for &TcpStream`: no mutable borrow of `self`
-                // needed while `slices` borrows the queue.
-                match (&self.stream).write_vectored(&slices) {
+                match self.sock.write_vectored_some(&slices) {
                     Ok(0) => {
                         return Err(Error::Io(std::io::Error::new(
                             std::io::ErrorKind::WriteZero,
-                            "tcp peer stopped accepting frame bytes",
+                            "peer stopped accepting frame bytes",
                         )))
                     }
                     Ok(n) => n,
                     Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+                    Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                        return Ok(false);
+                    }
                     Err(e) => return Err(e.into()),
                 }
             };
@@ -149,7 +292,7 @@ impl TcpMsgStream {
         }
         self.head = 0;
         self.pending_bytes = 0;
-        Ok(())
+        Ok(true)
     }
 
     /// Drop `n` written bytes off the front of the queue, keeping the
@@ -171,35 +314,103 @@ impl TcpMsgStream {
     }
 }
 
-impl Drop for TcpMsgStream {
+impl SocketMsgStream<TcpStream> {
+    pub fn connect(addr: &str) -> Result<TcpMsgStream> {
+        Self::from_stream(TcpStream::connect(addr)?)
+    }
+
+    pub fn from_stream(stream: TcpStream) -> Result<TcpMsgStream> {
+        stream.set_nodelay(true)?;
+        Ok(Self::new(stream))
+    }
+}
+
+#[cfg(unix)]
+impl SocketMsgStream<std::os::unix::net::UnixStream> {
+    pub fn connect_unix(path: &str) -> Result<UnixMsgStream> {
+        Ok(Self::new(std::os::unix::net::UnixStream::connect(path)?))
+    }
+
+    pub fn from_unix_stream(stream: std::os::unix::net::UnixStream) -> Result<UnixMsgStream> {
+        Ok(Self::new(stream))
+    }
+}
+
+impl<S: RawSock> Drop for SocketMsgStream<S> {
     /// Best-effort flush of queued frames, restoring the flush-on-drop
-    /// safety net the old `BufWriter` writer provided.
+    /// safety net the old `BufWriter` writer provided. (In non-blocking
+    /// mode this is a single attempt — whatever the socket refuses is
+    /// dropped with the connection, exactly like a TCP reset.)
     fn drop(&mut self) {
         let _ = self.flush_pending();
     }
 }
 
-impl MsgStream for TcpMsgStream {
+impl<S: RawSock> MsgStream for SocketMsgStream<S> {
     fn send(&mut self, msg: Message) -> Result<()> {
         let frame = msg.encode_frame()?;
         self.pending_bytes += frame.len();
         self.pending.push_back(frame);
         if self.pending_bytes >= SEND_QUEUE_FLUSH_BYTES {
+            // Blocking mode: drain fully (bounded memory). Non-blocking
+            // mode: opportunistic single pass — the event core re-arms for
+            // writability when the socket pushes back.
             self.flush_pending()?;
         }
         Ok(())
     }
 
     fn flush(&mut self) -> Result<()> {
-        self.flush_pending()
+        loop {
+            if self.flush_pending()? {
+                return Ok(());
+            }
+            // Only reachable on a non-blocking socket whose caller asked
+            // for blocking semantics; yield briefly rather than spin.
+            std::thread::sleep(std::time::Duration::from_micros(100));
+        }
     }
 
     fn recv(&mut self) -> Result<Message> {
-        Message::read_frame(&mut self.reader)
+        loop {
+            if let Some(msg) = self.decoder.read_from(&mut ReadAdapter(&self.sock))? {
+                return Ok(msg);
+            }
+            // Only reachable on a non-blocking socket whose caller asked
+            // for blocking semantics (the event core uses try_recv).
+            std::thread::sleep(std::time::Duration::from_micros(100));
+        }
     }
 
     fn transport(&self) -> &'static str {
-        "tcp"
+        self.sock.label()
+    }
+
+    fn set_nonblocking(&mut self, nonblocking: bool) -> Result<()> {
+        self.sock.set_nb(nonblocking)?;
+        Ok(())
+    }
+
+    fn poll_source(&self) -> PollSource {
+        PollSource::Fd(self.sock.raw_fd())
+    }
+
+    fn try_recv(&mut self) -> Result<Option<Message>> {
+        self.decoder.read_from(&mut ReadAdapter(&self.sock))
+    }
+
+    fn try_flush(&mut self) -> Result<bool> {
+        self.flush_pending()
+    }
+}
+
+/// Adapts `&S` (shared-reference reads) to `std::io::Read` for the frame
+/// decoder.
+struct ReadAdapter<'a, S: RawSock>(&'a S);
+
+impl<S: RawSock> std::io::Read for ReadAdapter<'_, S> {
+    fn read(&mut self, buf: &mut [u8]) -> std::io::Result<usize> {
+        self.0.read_some(buf)
     }
 }
 
@@ -232,6 +443,45 @@ impl TransportListener for TcpTransportListener {
     }
 }
 
+/// Unix-domain-socket listener half. Removes its socket file on drop.
+#[cfg(unix)]
+pub struct UnixTransportListener {
+    listener: std::os::unix::net::UnixListener,
+    path: std::path::PathBuf,
+}
+
+#[cfg(unix)]
+impl UnixTransportListener {
+    pub fn bind(path: impl Into<std::path::PathBuf>) -> Result<UnixTransportListener> {
+        let path = path.into();
+        let listener = std::os::unix::net::UnixListener::bind(&path)?;
+        Ok(UnixTransportListener { listener, path })
+    }
+
+    pub fn path(&self) -> &std::path::Path {
+        &self.path
+    }
+}
+
+#[cfg(unix)]
+impl Drop for UnixTransportListener {
+    fn drop(&mut self) {
+        let _ = std::fs::remove_file(&self.path);
+    }
+}
+
+#[cfg(unix)]
+impl TransportListener for UnixTransportListener {
+    fn accept(&mut self) -> Result<Option<Box<dyn MsgStream>>> {
+        let (stream, _peer) = self.listener.accept()?;
+        Ok(Some(Box::new(UnixMsgStream::from_unix_stream(stream)?)))
+    }
+
+    fn endpoint(&self) -> String {
+        format!("{UNIX_SCHEME}{}", self.path.display())
+    }
+}
+
 // ---------------------------------------------------------------------
 // In-process backend
 // ---------------------------------------------------------------------
@@ -253,12 +503,53 @@ impl Tx {
     }
 }
 
+/// A registered readiness callback for one in-process direction: the
+/// sender fires it after every delivery, the receiver installs it.
+#[derive(Default)]
+struct WakerSlot(Mutex<Option<Arc<dyn Fn() + Send + Sync>>>);
+
+impl WakerSlot {
+    fn fire(&self) {
+        let waker = self.0.lock().unwrap().clone();
+        if let Some(w) = waker {
+            w();
+        }
+    }
+}
+
 /// One direction-pair of channels. Chunk payloads inside the `Message` are
 /// `Arc<Chunk>` handles, so moving a message through the channel shares
 /// the payload instead of copying it.
+///
+/// Readiness: each direction tracks occupancy in an atomic; the sender
+/// fires the receiver's waker after every delivery, which is how the
+/// event-driven server learns a connection has input without any fd to
+/// poll (`poll_source` = [`PollSource::Channel`]).
 pub struct ChannelMsgStream {
-    tx: Tx,
+    /// `None` once dropped: the sender is released *before* the peer's
+    /// waker fires, so an event-driven peer that wakes on our departure
+    /// observes the disconnect deterministically.
+    tx: Option<Tx>,
     rx: Receiver<Message>,
+    /// Messages sitting in `rx` (incremented by the peer's send).
+    rx_count: Arc<AtomicUsize>,
+    /// Messages sitting in the peer's receive queue.
+    tx_count: Arc<AtomicUsize>,
+    /// My readiness callback; the peer's send fires it.
+    rx_waker: Arc<WakerSlot>,
+    /// The peer's readiness callback; my send fires it.
+    tx_waker: Arc<WakerSlot>,
+}
+
+impl Drop for ChannelMsgStream {
+    /// Release the send half, then wake the peer: an event-driven server
+    /// whose in-proc client vanished must get one last readiness signal so
+    /// its `try_recv` observes the disconnect and the connection is torn
+    /// down (transient RPC connections would otherwise accumulate).
+    fn drop(&mut self) {
+        self.tx = None;
+        self.tx_waker.fire();
+    }
 }
 
 fn peer_closed() -> Error {
@@ -270,7 +561,14 @@ fn peer_closed() -> Error {
 
 impl MsgStream for ChannelMsgStream {
     fn send(&mut self, msg: Message) -> Result<()> {
-        self.tx.send(msg).map_err(|()| peer_closed())
+        self.tx
+            .as_ref()
+            .ok_or_else(peer_closed)?
+            .send(msg)
+            .map_err(|()| peer_closed())?;
+        self.tx_count.fetch_add(1, Ordering::SeqCst);
+        self.tx_waker.fire();
+        Ok(())
     }
 
     fn flush(&mut self) -> Result<()> {
@@ -278,11 +576,45 @@ impl MsgStream for ChannelMsgStream {
     }
 
     fn recv(&mut self) -> Result<Message> {
-        self.rx.recv().map_err(|_| peer_closed())
+        let msg = self.rx.recv().map_err(|_| peer_closed())?;
+        self.rx_count.fetch_sub(1, Ordering::SeqCst);
+        Ok(msg)
     }
 
     fn transport(&self) -> &'static str {
         "in-proc"
+    }
+
+    fn set_nonblocking(&mut self, _nonblocking: bool) -> Result<()> {
+        Ok(()) // channels are readiness-native
+    }
+
+    fn poll_source(&self) -> PollSource {
+        PollSource::Channel
+    }
+
+    fn try_recv(&mut self) -> Result<Option<Message>> {
+        match self.rx.try_recv() {
+            Ok(msg) => {
+                self.rx_count.fetch_sub(1, Ordering::SeqCst);
+                Ok(Some(msg))
+            }
+            Err(TryRecvError::Empty) => Ok(None),
+            Err(TryRecvError::Disconnected) => Err(peer_closed()),
+        }
+    }
+
+    fn try_flush(&mut self) -> Result<bool> {
+        Ok(true) // sends are delivered immediately (replies unbounded)
+    }
+
+    fn set_ready_waker(&mut self, waker: Arc<dyn Fn() + Send + Sync>) {
+        *self.rx_waker.0.lock().unwrap() = Some(waker.clone());
+        // Close the registration race: messages delivered before the waker
+        // was installed must still produce a wakeup.
+        if self.rx_count.load(Ordering::SeqCst) > 0 {
+            waker();
+        }
     }
 }
 
@@ -292,14 +624,26 @@ impl MsgStream for ChannelMsgStream {
 pub fn channel_pair() -> (ChannelMsgStream, ChannelMsgStream) {
     let (tx_c2s, rx_c2s) = sync_channel(CHANNEL_DEPTH);
     let (tx_s2c, rx_s2c) = channel();
+    let c2s_count = Arc::new(AtomicUsize::new(0));
+    let s2c_count = Arc::new(AtomicUsize::new(0));
+    let client_waker = Arc::new(WakerSlot::default());
+    let server_waker = Arc::new(WakerSlot::default());
     (
         ChannelMsgStream {
-            tx: Tx::Bounded(tx_c2s),
+            tx: Some(Tx::Bounded(tx_c2s)),
             rx: rx_s2c,
+            rx_count: s2c_count.clone(),
+            tx_count: c2s_count.clone(),
+            rx_waker: client_waker.clone(),
+            tx_waker: server_waker.clone(),
         },
         ChannelMsgStream {
-            tx: Tx::Unbounded(tx_s2c),
+            tx: Some(Tx::Unbounded(tx_s2c)),
             rx: rx_c2s,
+            rx_count: c2s_count,
+            tx_count: s2c_count,
+            rx_waker: server_waker,
+            tx_waker: client_waker,
         },
     )
 }
@@ -459,6 +803,53 @@ mod tests {
     }
 
     #[test]
+    fn channel_try_recv_reports_occupancy() {
+        let (mut a, mut b) = channel_pair();
+        assert!(b.try_recv().unwrap().is_none(), "empty = would-block");
+        a.send(Message::InfoRequest { id: 3 }).unwrap();
+        assert!(matches!(
+            b.try_recv().unwrap(),
+            Some(Message::InfoRequest { id: 3 })
+        ));
+        assert!(b.try_recv().unwrap().is_none());
+        drop(a);
+        assert!(b.try_recv().is_err(), "disconnect = peer closed");
+    }
+
+    #[test]
+    fn channel_waker_fires_on_send_and_on_registration_backlog() {
+        let (mut a, mut b) = channel_pair();
+        let hits = Arc::new(std::sync::atomic::AtomicUsize::new(0));
+        // A message delivered *before* registration must fire immediately.
+        a.send(Message::InfoRequest { id: 1 }).unwrap();
+        let h = hits.clone();
+        b.set_ready_waker(Arc::new(move || {
+            h.fetch_add(1, Ordering::SeqCst);
+        }));
+        assert_eq!(hits.load(Ordering::SeqCst), 1, "backlog fired at install");
+        a.send(Message::InfoRequest { id: 2 }).unwrap();
+        assert_eq!(hits.load(Ordering::SeqCst), 2, "send fired the waker");
+        assert!(b.try_recv().unwrap().is_some());
+        assert!(b.try_recv().unwrap().is_some());
+    }
+
+    #[test]
+    fn dropping_a_channel_end_wakes_and_disconnects_the_peer() {
+        // The event core relies on this: a vanished in-proc client must
+        // produce one final readiness signal so the server observes the
+        // disconnect instead of keeping the connection forever.
+        let (a, mut b) = channel_pair();
+        let hits = Arc::new(std::sync::atomic::AtomicUsize::new(0));
+        let h = hits.clone();
+        b.set_ready_waker(Arc::new(move || {
+            h.fetch_add(1, Ordering::SeqCst);
+        }));
+        drop(a);
+        assert_eq!(hits.load(Ordering::SeqCst), 1, "drop fired the waker");
+        assert!(b.try_recv().is_err(), "disconnect visible to try_recv");
+    }
+
+    #[test]
     fn bind_dial_accept_roundtrip() {
         let mut listener = InProcListener::bind(Some("transport-test-1".into())).unwrap();
         let endpoint = listener.endpoint();
@@ -579,5 +970,70 @@ mod tests {
         client.send(Message::InfoRequest { id: 3 }).unwrap();
         client.flush().unwrap();
         assert!(matches!(server.recv().unwrap(), Message::InfoRequest { id: 3 }));
+    }
+
+    #[test]
+    fn tcp_nonblocking_try_recv_would_block_then_delivers() {
+        let mut listener = TcpTransportListener::bind("127.0.0.1:0").unwrap();
+        let endpoint = listener.endpoint();
+        let mut client = dial(&endpoint).unwrap();
+        let mut server = listener.accept().unwrap().expect("one connection");
+        server.set_nonblocking(true).unwrap();
+        assert!(matches!(server.poll_source(), PollSource::Fd(fd) if fd >= 0));
+        assert!(server.try_recv().unwrap().is_none(), "no input yet");
+        client.send(Message::InfoRequest { id: 77 }).unwrap();
+        client.flush().unwrap();
+        // Loopback delivery is fast but asynchronous: poll briefly.
+        let deadline = std::time::Instant::now() + std::time::Duration::from_secs(5);
+        loop {
+            match server.try_recv().unwrap() {
+                Some(Message::InfoRequest { id }) => {
+                    assert_eq!(id, 77);
+                    break;
+                }
+                Some(other) => panic!("wrong message {other:?}"),
+                None => {
+                    assert!(std::time::Instant::now() < deadline, "frame never arrived");
+                    std::thread::sleep(std::time::Duration::from_millis(1));
+                }
+            }
+        }
+    }
+
+    #[cfg(unix)]
+    #[test]
+    fn unix_socket_roundtrip_and_cleanup() {
+        let path = std::env::temp_dir().join(format!(
+            "reverb_uds_transport_{}.sock",
+            std::process::id()
+        ));
+        std::fs::remove_file(&path).ok();
+        let mut listener = UnixTransportListener::bind(&path).unwrap();
+        let endpoint = listener.endpoint();
+        assert!(endpoint.starts_with(UNIX_SCHEME), "{endpoint}");
+        let mut client = dial(&endpoint).unwrap();
+        assert_eq!(client.transport(), "unix");
+        let mut server = listener.accept().unwrap().expect("one connection");
+        let chunk = mk_chunk(5);
+        client
+            .send(Message::InsertChunks { chunks: vec![chunk] })
+            .unwrap();
+        client.flush().unwrap();
+        match server.recv().unwrap() {
+            Message::InsertChunks { chunks } => assert_eq!(chunks[0].key, 5),
+            other => panic!("wrong message {other:?}"),
+        }
+        server.send(Message::Ack { id: 1, detail: "ok".into() }).unwrap();
+        server.flush().unwrap();
+        assert!(matches!(client.recv().unwrap(), Message::Ack { id: 1, .. }));
+        assert!(path.exists());
+        drop(listener);
+        assert!(!path.exists(), "socket file removed on drop");
+    }
+
+    #[cfg(unix)]
+    #[test]
+    fn unix_dial_missing_path_refused() {
+        assert!(dial("reverb+unix:///tmp/reverb-no-such-socket.sock").is_err());
     }
 }

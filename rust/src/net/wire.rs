@@ -506,6 +506,109 @@ impl Message {
     }
 }
 
+/// Read granularity of [`FrameDecoder`]: one `read(2)` pulls up to this many
+/// bytes into the stash (matches the old `BufReader` capacity).
+const DECODER_READ_CHUNK: usize = 256 * 1024;
+
+/// Resumable frame decoder: the event-driven service core's read path.
+///
+/// Unlike [`Message::read_frame`], which issues blocking reads until one
+/// frame is complete, the decoder accumulates whatever bytes the socket has
+/// *right now* and yields a frame only once its bytes are all present — a
+/// `WouldBlock` mid-frame simply suspends the decode until the next
+/// readiness event re-drives it. The same decoder also serves the blocking
+/// path (a blocking socket never yields `WouldBlock`, so `read_into`
+/// completes frames in a loop), which is how the client and the threaded
+/// service model route over the identical code.
+#[derive(Default)]
+pub struct FrameDecoder {
+    /// Raw received-but-undecoded bytes. `pos` marks how much of the front
+    /// has already been consumed by decoded frames; the tail may hold a
+    /// partial frame awaiting more bytes.
+    stash: Vec<u8>,
+    pos: usize,
+    /// Reusable read buffer, zero-initialized once per decoder — `read(2)`
+    /// needs initialized memory, and re-zeroing a fresh region per call
+    /// would cost a 256 KB memset on every small-frame recv.
+    scratch: Vec<u8>,
+}
+
+impl FrameDecoder {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Decode one frame from the stash if its bytes are fully present.
+    fn try_decode(&mut self) -> Result<Option<Message>> {
+        let avail = self.stash.len() - self.pos;
+        if avail < 5 {
+            return Ok(None);
+        }
+        let len = u32::from_le_bytes(
+            self.stash[self.pos..self.pos + 4]
+                .try_into()
+                .expect("4 bytes"),
+        ) as usize;
+        if len > MAX_FRAME_LEN {
+            return Err(Error::Decode(format!("frame length {len} exceeds limit")));
+        }
+        if avail < 5 + len {
+            return Ok(None);
+        }
+        let tag = self.stash[self.pos + 4];
+        let body = &self.stash[self.pos + 5..self.pos + 5 + len];
+        let msg = Message::decode_body(tag, body)?;
+        self.pos += 5 + len;
+        if self.pos == self.stash.len() {
+            self.stash.clear();
+            self.pos = 0;
+        } else if self.pos >= DECODER_READ_CHUNK {
+            // Compact once the dead prefix outgrows a read chunk so the
+            // stash does not grow without bound under pipelining.
+            self.stash.drain(..self.pos);
+            self.pos = 0;
+        }
+        Ok(Some(msg))
+    }
+
+    /// Drive the decoder from `r`: drain buffered frames first, then read.
+    ///
+    /// - `Ok(Some(msg))` — one complete frame.
+    /// - `Ok(None)` — the reader reported `WouldBlock` and no complete
+    ///   frame is buffered (re-arm readiness and retry later).
+    /// - `Err(Error::Io)` with `UnexpectedEof` — the peer closed (mid-frame
+    ///   or at a boundary; callers treat both as a hang-up).
+    pub fn read_from<R: Read>(&mut self, r: &mut R) -> Result<Option<Message>> {
+        loop {
+            if let Some(msg) = self.try_decode()? {
+                return Ok(Some(msg));
+            }
+            if self.scratch.is_empty() {
+                self.scratch = vec![0u8; DECODER_READ_CHUNK];
+            }
+            match r.read(&mut self.scratch) {
+                Ok(0) => {
+                    return Err(Error::Io(std::io::Error::new(
+                        std::io::ErrorKind::UnexpectedEof,
+                        "peer closed",
+                    )));
+                }
+                Ok(n) => self.stash.extend_from_slice(&self.scratch[..n]),
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                    return Ok(None);
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+                Err(e) => return Err(e.into()),
+            }
+        }
+    }
+
+    /// Whether undecoded bytes (a partial frame) are buffered.
+    pub fn mid_frame(&self) -> bool {
+        self.stash.len() > self.pos
+    }
+}
+
 /// Encode a table config for config files / diagnostics (used by the
 /// server CLI; not part of the client protocol).
 pub fn encode_table_config<W: Write>(w: &mut W, cfg: &TableConfig) -> Result<()> {
@@ -960,5 +1063,120 @@ mod tests {
     fn v1_frame_rejects_trajectory_items() {
         let mut buf = Vec::new();
         assert!(put_wire_item(&mut buf, &trajectory_item()).is_err());
+    }
+
+    /// A reader that yields its script one slice at a time, interleaving
+    /// `WouldBlock` between slices — the shape of a nonblocking socket.
+    struct Trickle {
+        data: Vec<u8>,
+        pos: usize,
+        step: usize,
+        blocked: bool,
+    }
+
+    impl std::io::Read for Trickle {
+        fn read(&mut self, buf: &mut [u8]) -> std::io::Result<usize> {
+            if !self.blocked {
+                self.blocked = true;
+                return Err(std::io::Error::new(std::io::ErrorKind::WouldBlock, "nb"));
+            }
+            self.blocked = false;
+            if self.pos >= self.data.len() {
+                return Ok(0);
+            }
+            let n = self.step.min(buf.len()).min(self.data.len() - self.pos);
+            buf[..n].copy_from_slice(&self.data[self.pos..self.pos + n]);
+            self.pos += n;
+            Ok(n)
+        }
+    }
+
+    #[test]
+    fn frame_decoder_resumes_across_would_block_at_every_byte_granularity() {
+        // Three pipelined frames delivered 1..=7 bytes at a time with a
+        // WouldBlock before every read: the decoder must suspend and
+        // resume mid-header and mid-body without losing or reordering
+        // frames.
+        let msgs = vec![
+            Message::InfoRequest { id: 1 },
+            Message::InsertChunks { chunks: vec![mk_chunk(4)] },
+            Message::Ack { id: 2, detail: "done".into() },
+        ];
+        let mut wire = Vec::new();
+        for m in &msgs {
+            m.write_frame(&mut wire).unwrap();
+        }
+        for step in 1..=7usize {
+            let mut r = Trickle {
+                data: wire.clone(),
+                pos: 0,
+                step,
+                blocked: false,
+            };
+            let mut dec = FrameDecoder::new();
+            let mut got = Vec::new();
+            loop {
+                match dec.read_from(&mut r) {
+                    Ok(Some(m)) => got.push(m),
+                    Ok(None) => continue, // would-block: re-drive
+                    Err(Error::Io(e)) => {
+                        assert_eq!(e.kind(), std::io::ErrorKind::UnexpectedEof);
+                        break;
+                    }
+                    Err(e) => panic!("step {step}: {e}"),
+                }
+            }
+            assert_eq!(got.len(), 3, "step {step}");
+            assert!(matches!(got[0], Message::InfoRequest { id: 1 }));
+            assert!(matches!(&got[1], Message::InsertChunks { chunks } if chunks[0].key == 4));
+            assert!(matches!(&got[2], Message::Ack { id: 2, .. }));
+            assert!(!dec.mid_frame(), "step {step}: no stranded bytes");
+        }
+    }
+
+    #[test]
+    fn frame_decoder_eof_mid_frame_is_unexpected_eof() {
+        let mut wire = Vec::new();
+        Message::Ack { id: 9, detail: "x".into() }
+            .write_frame(&mut wire)
+            .unwrap();
+        wire.truncate(wire.len() - 1);
+        let mut dec = FrameDecoder::new();
+        let mut cursor = std::io::Cursor::new(wire);
+        match dec.read_from(&mut cursor) {
+            Err(Error::Io(e)) => assert_eq!(e.kind(), std::io::ErrorKind::UnexpectedEof),
+            other => panic!("expected eof error, got {other:?}"),
+        }
+        assert!(dec.mid_frame());
+    }
+
+    #[test]
+    fn frame_decoder_rejects_oversized_length_without_reading_body() {
+        let mut buf = Vec::new();
+        put_u32(&mut buf, (MAX_FRAME_LEN + 1) as u32).unwrap();
+        put_u8(&mut buf, TAG_ACK).unwrap();
+        let mut dec = FrameDecoder::new();
+        let mut cursor = std::io::Cursor::new(buf);
+        assert!(matches!(dec.read_from(&mut cursor), Err(Error::Decode(_))));
+    }
+
+    #[test]
+    fn frame_decoder_drains_buffered_frames_before_reading() {
+        // Both frames arrive in one read; the second must come out of the
+        // stash without touching the reader again.
+        let mut wire = Vec::new();
+        Message::InfoRequest { id: 1 }.write_frame(&mut wire).unwrap();
+        Message::InfoRequest { id: 2 }.write_frame(&mut wire).unwrap();
+        let mut dec = FrameDecoder::new();
+        let mut cursor = std::io::Cursor::new(wire);
+        assert!(matches!(
+            dec.read_from(&mut cursor).unwrap(),
+            Some(Message::InfoRequest { id: 1 })
+        ));
+        let mut dead = std::io::empty();
+        assert!(matches!(
+            dec.read_from(&mut dead).unwrap(),
+            Some(Message::InfoRequest { id: 2 })
+        ));
     }
 }

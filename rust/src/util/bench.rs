@@ -237,6 +237,58 @@ pub fn run_row_insert_clients(
     })
 }
 
+/// Run `num_clients` mixed clients: each loop inserts one random step and
+/// then draws one sample — the "many live connections all doing useful
+/// work" workload of `benches/concurrency.rs`. Every client holds its
+/// connections open for the whole window, so `num_clients` is a lower
+/// bound on concurrent live connections (writer + sampler each keep one).
+pub fn run_mixed_clients(
+    addr: &str,
+    table: &str,
+    num_clients: usize,
+    floats: usize,
+    duration: Duration,
+) -> Throughput {
+    let addr = addr.to_string();
+    let table = table.to_string();
+    run_client_fleet(num_clients, duration, move |c, ctl| {
+        let Ok(client) = Client::connect(addr.as_str()) else {
+            return;
+        };
+        let Ok(mut w) = client.writer(
+            WriterOptions::default()
+                .with_chunk_length(1)
+                .with_compression(Compression::None)
+                .with_max_in_flight_items(8),
+        ) else {
+            return;
+        };
+        let Ok(mut s) = client.sampler(
+            SamplerOptions::new(table.as_str())
+                .with_workers(1)
+                .with_max_in_flight(2)
+                .with_timeout_ms(30_000),
+        ) else {
+            return;
+        };
+        let mut rng = Pcg32::new(0xC0C0A, c as u64);
+        let step_bytes = (floats * 4) as u64;
+        while !ctl.stopped() {
+            let step = random_step(floats, &mut rng);
+            if w.append(step).is_err() || w.create_item(&table, 1, 1.0).is_err() {
+                break;
+            }
+            ctl.count(step_bytes);
+            match s.next_sample() {
+                Ok(_) => ctl.count(step_bytes),
+                Err(_) => break,
+            }
+        }
+        let _ = w.flush();
+        s.stop();
+    })
+}
+
 /// Run `num_clients` sample clients against a pre-filled `table`.
 pub fn run_sample_clients(
     addr: &str,

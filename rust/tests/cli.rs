@@ -132,6 +132,42 @@ fn cli_delta_persistence_survives_kill() {
 }
 
 #[test]
+fn cli_service_model_flags_round_trip() {
+    // The event-core knobs: an explicit worker count, and the legacy
+    // threaded oracle — both must serve the identical protocol.
+    for model in ["event", "threaded"] {
+        let (mut child, addr) =
+            spawn_server(&["--service-model", model, "--service-threads", "2"]);
+        let client = Client::connect(addr).unwrap();
+        let mut w = client.writer(WriterOptions::default()).unwrap();
+        w.append(vec![Tensor::from_f32(&[2], &[1.0, 2.0]).unwrap()])
+            .unwrap();
+        w.create_item("replay", 1, 1.0).unwrap();
+        w.flush().unwrap();
+        let info = client.server_info().unwrap();
+        let replay = info.iter().find(|(n, _)| n == "replay").unwrap();
+        assert_eq!(replay.1.inserts, 1, "model={model}");
+        child.kill().unwrap();
+        child.wait().unwrap();
+    }
+}
+
+#[test]
+fn cli_rejects_bad_service_model() {
+    let out = Command::new(server_bin())
+        .args([
+            "serve",
+            "--table",
+            "t:uniform:10",
+            "--service-model",
+            "fancy",
+        ])
+        .output()
+        .unwrap();
+    assert!(!out.status.success());
+}
+
+#[test]
 fn cli_rejects_bad_table_spec() {
     let out = Command::new(server_bin())
         .args(["serve", "--table", "bogus:nope:1"])

@@ -1,10 +1,21 @@
-//! Shared harness for dual-transport black-box tests: every scenario that
-//! talks to a server through a `Client` should run against both backends
-//! (TCP loopback and the zero-copy in-process channel) via these helpers.
+//! Shared harness for multi-transport black-box tests: every scenario
+//! that talks to a server through a `Client` should run against all
+//! backends (TCP loopback, the zero-copy in-process channel, and — on
+//! unix — a Unix domain socket) via these helpers.
 #![allow(dead_code)] // each test binary uses a subset of the helpers
 
 use reverb::net::server::{Server, ServerBuilder};
 use reverb::{Client, Tensor, WriterOptions};
+
+/// A process-unique Unix-socket path (kept short: sun_path caps at ~100
+/// bytes).
+#[cfg(unix)]
+pub fn unique_uds_path() -> std::path::PathBuf {
+    use std::sync::atomic::{AtomicU64, Ordering};
+    static NEXT: AtomicU64 = AtomicU64::new(0);
+    let n = NEXT.fetch_add(1, Ordering::Relaxed);
+    std::env::temp_dir().join(format!("rvb_{}_{n}.sock", std::process::id()))
+}
 
 /// Start one server per transport backend and return
 /// `(server, endpoint, label)` triples. Keep the `Server` alive for the
@@ -14,7 +25,16 @@ pub fn endpoints(build: impl Fn() -> ServerBuilder) -> Vec<(Server, String, &'st
     let tcp_addr = format!("tcp://{}", tcp.local_addr());
     let in_proc = build().serve_in_proc().unwrap();
     let in_proc_addr = in_proc.in_proc_addr();
-    vec![(tcp, tcp_addr, "tcp"), (in_proc, in_proc_addr, "in-proc")]
+    let mut out = vec![(tcp, tcp_addr, "tcp"), (in_proc, in_proc_addr, "in-proc")];
+    #[cfg(unix)]
+    {
+        let path = unique_uds_path();
+        std::fs::remove_file(&path).ok();
+        let uds = build().unix_socket(&path).serve_in_proc().unwrap();
+        let uds_addr = uds.uds_addr().expect("uds endpoint");
+        out.push((uds, uds_addr, "unix"));
+    }
+    out
 }
 
 /// Start a single server on the requested backend — for scenarios that

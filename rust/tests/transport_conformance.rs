@@ -1,8 +1,11 @@
 //! Transport conformance suite: every scenario here runs *identically*
-//! against both transport backends — TCP loopback and the zero-copy
-//! in-process channel — proving the backends are behaviourally
-//! interchangeable (same protocol, same error mapping, same ordering and
-//! flow-control semantics).
+//! against all transport backends — TCP loopback, the zero-copy
+//! in-process channel, and (on unix) a Unix domain socket — proving the
+//! backends are behaviourally interchangeable (same protocol, same error
+//! mapping, same ordering and flow-control semantics). The servers run
+//! the default event-driven service core, so the suite doubles as its
+//! black-box conformance harness; `net::server` holds the
+//! threaded-vs-event differential oracle.
 
 mod common;
 
@@ -433,7 +436,9 @@ fn server_stop_fails_clients_cleanly() {
 }
 
 #[test]
-fn dial_failures_are_clean_on_both_schemes() {
+fn dial_failures_are_clean_on_all_schemes() {
     assert!(Client::connect("reverb://in-proc/no-such-endpoint").is_err());
     assert!(Client::connect("tcp://127.0.0.1:1").is_err());
+    #[cfg(unix)]
+    assert!(Client::connect("reverb+unix:///tmp/reverb-no-such.sock").is_err());
 }

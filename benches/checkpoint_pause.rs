@@ -25,6 +25,7 @@ use reverb::core::item::Item;
 use reverb::core::table::TableConfig;
 use reverb::net::server::{PersistMode, Server};
 use reverb::util::bench::{fast_mode, print_row};
+use reverb::util::stats::json_f64_prec;
 use reverb::Tensor;
 use std::path::Path;
 use std::sync::Arc;
@@ -164,21 +165,22 @@ fn main() {
         .iter()
         .map(|(n, full, incr)| {
             format!(
-                "    {{\"items\": {n}, \"full_pause_ms\": {:.4}, \"full_total_ms\": {:.4}, \
-                 \"incr_pause_ms\": {:.4}, \"incr_total_ms\": {:.4}, \"incr_first_total_ms\": {:.4}}}",
-                ms(full.pause),
-                ms(full.total),
-                ms(incr.pause),
-                ms(incr.total),
-                ms(incr.first_total)
+                "    {{\"items\": {n}, \"full_pause_ms\": {}, \"full_total_ms\": {}, \
+                 \"incr_pause_ms\": {}, \"incr_total_ms\": {}, \"incr_first_total_ms\": {}}}",
+                json_f64_prec(ms(full.pause), 4),
+                json_f64_prec(ms(full.total), 4),
+                json_f64_prec(ms(incr.pause), 4),
+                json_f64_prec(ms(incr.total), 4),
+                json_f64_prec(ms(incr.first_total), 4)
             )
         })
         .collect();
     let json = format!(
         "{{\n  \"bench\": \"checkpoint_pause\",\n  \"fast\": {fast},\n  \
          \"incremental_flat_within_2x\": {incr_flat},\n  \
-         \"legacy_pause_scaling_10k_to_1m\": {full_scaling:.1},\n  \
+         \"legacy_pause_scaling_10k_to_1m\": {},\n  \
          \"results\": [\n{}\n  ]\n}}\n",
+        json_f64_prec(full_scaling, 1),
         results.join(",\n")
     );
     std::fs::write("BENCH_checkpoint.json", &json).expect("write BENCH_checkpoint.json");

@@ -18,7 +18,7 @@ use reverb::core::table::TableConfig;
 use reverb::net::poller::ensure_fd_capacity;
 use reverb::net::server::Server;
 use reverb::util::bench::*;
-use reverb::util::stats::fmt_qps;
+use reverb::util::stats::{fmt_qps, json_f64_prec};
 use reverb::ServiceModel;
 use std::time::Duration;
 
@@ -90,7 +90,7 @@ fn main() {
     // Machine-readable trajectory for CI (BENCH_concurrency.json).
     let fmt_list = |xs: &[f64]| {
         xs.iter()
-            .map(|q| format!("{q:.1}"))
+            .map(|&q| json_f64_prec(q, 1))
             .collect::<Vec<_>>()
             .join(",")
     };

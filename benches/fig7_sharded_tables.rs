@@ -24,7 +24,7 @@ use reverb::core::table::{Table, TableConfig};
 use reverb::net::server::Server;
 use reverb::util::bench::*;
 use reverb::util::rng::Pcg32;
-use reverb::util::stats::fmt_qps;
+use reverb::util::stats::{fmt_qps, json_f64_prec};
 use std::sync::Arc;
 use std::time::Instant;
 
@@ -111,7 +111,12 @@ fn main() {
     // Machine-readable trajectory for CI (BENCH_fig7.json).
     let results: Vec<String> = peaks
         .iter()
-        .map(|(s, q)| format!("    {{\"shards\": {s}, \"inserts_per_sec\": {q:.1}}}"))
+        .map(|(s, q)| {
+            format!(
+                "    {{\"shards\": {s}, \"inserts_per_sec\": {}}}",
+                json_f64_prec(*q, 1)
+            )
+        })
         .collect();
     let json = format!(
         "{{\n  \"bench\": \"fig7_sharded_tables\",\n  \"mode\": \"direct_table_insert\",\n  \

@@ -14,7 +14,7 @@
 use reverb::core::table::TableConfig;
 use reverb::net::server::Server;
 use reverb::util::bench::*;
-use reverb::util::stats::fmt_qps;
+use reverb::util::stats::{fmt_qps, json_f64_prec};
 use std::time::Duration;
 
 const COLUMN_COUNTS: &[usize] = &[1, 4, 16];
@@ -86,15 +86,18 @@ fn main() {
         .iter()
         .map(|(c, l, t)| {
             format!(
-                "    {{\"columns\": {c}, \"legacy_qps\": {l:.1}, \"trajectory_qps\": {t:.1}}}"
+                "    {{\"columns\": {c}, \"legacy_qps\": {}, \"trajectory_qps\": {}}}",
+                json_f64_prec(*l, 1),
+                json_f64_prec(*t, 1)
             )
         })
         .collect();
     let json = format!(
         "{{\n  \"bench\": \"trajectory_writer\",\n  \"mode\": \"insert_qps_in_proc\",\n  \
          \"clients\": {clients},\n  \"floats_per_step\": {FLOATS_PER_STEP},\n  \
-         \"fast\": {fast},\n  \"single_column_ratio\": {single_col_ratio:.3},\n  \
+         \"fast\": {fast},\n  \"single_column_ratio\": {},\n  \
          \"results\": [\n{}\n  ]\n}}\n",
+        json_f64_prec(single_col_ratio, 3),
         results.join(",\n")
     );
     std::fs::write("BENCH_trajectory.json", &json).expect("write BENCH_trajectory.json");

@@ -86,6 +86,86 @@ impl Conn {
     }
 }
 
+/// One admin re-tune request for [`Client::admin_reconfig`]. All knobs
+/// are optional; `table` may stay empty for interval-only requests.
+#[derive(Default, Clone, Debug)]
+pub struct AdminRequest {
+    pub table: String,
+    pub max_size: Option<u64>,
+    /// `(min_diff, max_diff)` — the corridor is always re-tuned as a pair.
+    pub corridor: Option<(f64, f64)>,
+    pub checkpoint_interval_ms: Option<u64>,
+}
+
+impl AdminRequest {
+    pub fn table(table: impl Into<String>) -> AdminRequest {
+        AdminRequest {
+            table: table.into(),
+            ..AdminRequest::default()
+        }
+    }
+
+    pub fn max_size(mut self, n: u64) -> AdminRequest {
+        self.max_size = Some(n);
+        self
+    }
+
+    pub fn corridor(mut self, min_diff: f64, max_diff: f64) -> AdminRequest {
+        self.corridor = Some((min_diff, max_diff));
+        self
+    }
+
+    pub fn checkpoint_interval_ms(mut self, ms: u64) -> AdminRequest {
+        self.checkpoint_interval_ms = Some(ms);
+        self
+    }
+}
+
+/// A live [`TableInfo`] subscription (see [`Client::watch`]): the server
+/// pushes deltas; [`Watch::next_update`] blocks for the next one.
+pub struct Watch {
+    conn: Conn,
+    id: u64,
+    /// The snapshot received at subscription time, delivered as the first
+    /// `next_update`.
+    baseline: Option<(String, TableInfo)>,
+}
+
+impl Watch {
+    /// Block until the next pushed update (the baseline snapshot first).
+    pub fn next_update(&mut self) -> Result<(String, TableInfo)> {
+        if let Some(first) = self.baseline.take() {
+            return Ok(first);
+        }
+        loop {
+            match self.conn.recv()? {
+                Message::WatchUpdate { id, table, info } if id == self.id => {
+                    return Ok((table, info))
+                }
+                // Another subscription on a shared connection (not
+                // produced by this client, but tolerated).
+                Message::WatchUpdate { .. } => continue,
+                Message::Err { code, message, .. } => return Err(error_from_code(code, message)),
+                other => return Err(Error::Decode(format!("unexpected frame {other:?}"))),
+            }
+        }
+    }
+
+    /// Cancel the subscription; drains in-flight updates up to the ack.
+    pub fn cancel(mut self) -> Result<()> {
+        self.conn.send(Message::WatchCancel { id: self.id })?;
+        self.conn.flush()?;
+        loop {
+            match self.conn.recv()? {
+                Message::Ack { id, .. } if id == self.id => return Ok(()),
+                Message::WatchUpdate { .. } => continue, // raced with the cancel
+                Message::Err { code, message, .. } => return Err(error_from_code(code, message)),
+                other => return Err(Error::Decode(format!("unexpected frame {other:?}"))),
+            }
+        }
+    }
+}
+
 /// Client handle for one Reverb server. Cheap to clone; each [`Writer`] /
 /// [`Sampler`] opens its own long-lived connection.
 #[derive(Clone)]
@@ -166,6 +246,54 @@ impl Client {
         conn.send(Message::Checkpoint { id })?;
         conn.flush()?;
         conn.expect_ack(id)
+    }
+
+    /// Re-tune a live server (DESIGN.md §12): any subset of a table's
+    /// `max_size`, its rate-limiter corridor (as a pair), and the periodic
+    /// checkpoint interval. Validated server-side as a unit — a rejected
+    /// request changes nothing. Returns the server's audit line.
+    pub fn admin_reconfig(&self, req: AdminRequest) -> Result<String> {
+        let mut conn = Conn::connect(&self.addr)?;
+        let id = conn.next_id();
+        conn.send(Message::AdminReconfig {
+            id,
+            table: req.table,
+            max_size: req.max_size,
+            min_diff: req.corridor.map(|(lo, _)| lo),
+            max_diff: req.corridor.map(|(_, hi)| hi),
+            checkpoint_interval_ms: req.checkpoint_interval_ms,
+        })?;
+        conn.flush()?;
+        conn.expect_ack(id)
+    }
+
+    /// Subscribe to a table's [`TableInfo`] stream (DESIGN.md §12). The
+    /// server pushes a baseline snapshot immediately, then one coalesced
+    /// update per mutation window — no client-side polling. Fails fast on
+    /// unknown tables.
+    pub fn watch(&self, table: &str) -> Result<Watch> {
+        let mut conn = Conn::connect(&self.addr)?;
+        let id = conn.next_id();
+        conn.send(Message::WatchRequest {
+            id,
+            table: table.into(),
+        })?;
+        conn.flush()?;
+        // The first frame is the baseline snapshot (or the rejection).
+        let baseline = match conn.recv()? {
+            Message::WatchUpdate {
+                id: got,
+                table,
+                info,
+            } if got == id => (table, info),
+            Message::Err { code, message, .. } => return Err(error_from_code(code, message)),
+            other => return Err(Error::Decode(format!("unexpected reply {other:?}"))),
+        };
+        Ok(Watch {
+            conn,
+            id,
+            baseline: Some(baseline),
+        })
     }
 
     /// Open a streaming [`Writer`] (legacy flat-step API).

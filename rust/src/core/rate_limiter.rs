@@ -211,6 +211,12 @@ pub struct AtomicRateLimiter {
     cfg: RateLimiterConfig,
     /// f64 bits of the cursor `inserts × SPI − samples`.
     diff_bits: AtomicU64,
+    /// f64 bits of the live corridor bounds. Seeded from `cfg` but kept as
+    /// atomics so the admin RPC can re-tune a serving table; every
+    /// admission check loads them fresh (including inside CAS retry
+    /// loops), so a re-tune takes effect on the very next attempt.
+    min_diff_bits: AtomicU64,
+    max_diff_bits: AtomicU64,
     inserts: AtomicU64,
     samples: AtomicU64,
     blocked_inserts: AtomicU64,
@@ -220,17 +226,64 @@ pub struct AtomicRateLimiter {
 impl AtomicRateLimiter {
     pub fn new(cfg: RateLimiterConfig) -> Self {
         AtomicRateLimiter {
-            cfg,
             diff_bits: AtomicU64::new(0f64.to_bits()),
+            min_diff_bits: AtomicU64::new(cfg.min_diff.to_bits()),
+            max_diff_bits: AtomicU64::new(cfg.max_diff.to_bits()),
             inserts: AtomicU64::new(0),
             samples: AtomicU64::new(0),
             blocked_inserts: AtomicU64::new(0),
             blocked_samples: AtomicU64::new(0),
+            cfg,
         }
     }
 
+    /// The construction-time config. NOTE: after a live re-tune the
+    /// authoritative corridor bounds are [`AtomicRateLimiter::corridor`],
+    /// not the `min_diff`/`max_diff` recorded here.
     pub fn config(&self) -> &RateLimiterConfig {
         &self.cfg
+    }
+
+    /// Live corridor bounds `(min_diff, max_diff)`.
+    pub fn corridor(&self) -> (f64, f64) {
+        (
+            f64::from_bits(self.min_diff_bits.load(Ordering::SeqCst)),
+            f64::from_bits(self.max_diff_bits.load(Ordering::SeqCst)),
+        )
+    }
+
+    /// The (immutable) samples-per-insert ratio.
+    pub fn samples_per_insert(&self) -> f64 {
+        self.cfg.samples_per_insert
+    }
+
+    /// Re-tune the corridor on a live limiter. The new corridor must be
+    /// wide enough to admit at least one insert and one sample around
+    /// equilibrium (`max_diff − min_diff ≥ max(SPI, 1)`) or the table
+    /// would deadlock; NaN bounds are rejected by the same check. The
+    /// cursor is left untouched — a cursor now outside the corridor simply
+    /// blocks one side until traffic drifts it back inside.
+    pub fn set_corridor(&self, min_diff: f64, max_diff: f64) -> Result<()> {
+        let min_width = self.cfg.samples_per_insert.max(1.0);
+        if !(max_diff - min_diff >= min_width) {
+            return Err(Error::InvalidArgument(format!(
+                "corridor [{min_diff}, {max_diff}] must span at least \
+                 max(SPI, 1) = {min_width}"
+            )));
+        }
+        self.min_diff_bits.store(min_diff.to_bits(), Ordering::SeqCst);
+        self.max_diff_bits.store(max_diff.to_bits(), Ordering::SeqCst);
+        Ok(())
+    }
+
+    #[inline]
+    fn min_diff(&self) -> f64 {
+        f64::from_bits(self.min_diff_bits.load(Ordering::SeqCst))
+    }
+
+    #[inline]
+    fn max_diff(&self) -> f64 {
+        f64::from_bits(self.max_diff_bits.load(Ordering::SeqCst))
     }
 
     /// Current cursor position. This is the authoritative admission state;
@@ -252,7 +305,7 @@ impl AtomicRateLimiter {
         let mut cur = self.diff_bits.load(Ordering::SeqCst);
         loop {
             let next = f64::from_bits(cur) + step;
-            if next > self.cfg.max_diff {
+            if next > self.max_diff() {
                 return false;
             }
             match self.diff_bits.compare_exchange_weak(
@@ -280,7 +333,7 @@ impl AtomicRateLimiter {
         if self.inserts.load(Ordering::SeqCst) < self.cfg.min_size_to_sample {
             return false;
         }
-        f64::from_bits(self.diff_bits.load(Ordering::SeqCst)) - n as f64 >= self.cfg.min_diff
+        f64::from_bits(self.diff_bits.load(Ordering::SeqCst)) - n as f64 >= self.min_diff()
     }
 
     /// Try to admit and commit up to `n` samples in one CAS; returns the
@@ -293,7 +346,7 @@ impl AtomicRateLimiter {
         let mut cur = self.diff_bits.load(Ordering::SeqCst);
         loop {
             let diff = f64::from_bits(cur);
-            let headroom = (diff - self.cfg.min_diff).floor().max(0.0);
+            let headroom = (diff - self.min_diff()).floor().max(0.0);
             // `as u64` saturates for the ±∞-style MinSize bounds.
             let granted = n.min(headroom as u64);
             if granted == 0 {
@@ -636,5 +689,36 @@ mod tests {
         atomic.restore(3, 1);
         assert!(atomic.try_insert(3));
         assert!(!atomic.try_insert(1));
+    }
+
+    #[test]
+    fn set_corridor_retunes_live_limiter() {
+        // queue(2): corridor [0, 2], SPI 1. Fill it, then widen live.
+        let atomic = AtomicRateLimiter::new(RateLimiterConfig::queue(2));
+        assert!(atomic.try_insert(2));
+        atomic.confirm_inserts(2);
+        assert!(!atomic.try_insert(1), "queue full");
+
+        atomic.set_corridor(0.0, 4.0).unwrap();
+        assert_eq!(atomic.corridor(), (0.0, 4.0));
+        assert!(atomic.try_insert(2), "widened corridor admits more");
+        atomic.confirm_inserts(2);
+        assert!(!atomic.try_insert(1), "new bound enforced");
+        assert_eq!(atomic.try_sample_upto(10), 4);
+
+        // Shrinking below the cursor blocks inserts but never panics and
+        // never rewrites the cursor.
+        assert!(atomic.try_insert(3));
+        atomic.set_corridor(0.0, 1.0).unwrap();
+        assert!(!atomic.try_insert(1));
+        assert_eq!(atomic.diff(), 3.0);
+        assert_eq!(atomic.try_sample_upto(10), 3);
+
+        // Invalid corridors are rejected: too narrow, inverted, NaN.
+        assert!(atomic.set_corridor(0.0, 0.5).is_err());
+        assert!(atomic.set_corridor(2.0, 1.0).is_err());
+        assert!(atomic.set_corridor(f64::NAN, 1.0).is_err());
+        assert!(atomic.set_corridor(0.0, f64::NAN).is_err());
+        assert_eq!(atomic.corridor(), (0.0, 1.0), "rejected re-tunes do not apply");
     }
 }

@@ -218,18 +218,40 @@ struct ShardState {
 
 struct Shard {
     state: Mutex<ShardState>,
-    /// f64 bits of the shard's sampler mass, refreshed after every mutation
-    /// under the shard lock; read lock-free by the cross-shard sampler.
-    mass: AtomicU64,
-    /// Item count mirror (fallback weights when every mass is zero).
-    count: AtomicUsize,
+    /// Packed `(sampler mass, item count)` pair — f32 mass bits in the
+    /// high 32 bits, u32 count in the low 32 — refreshed after every
+    /// mutation under the shard lock and read lock-free by the cross-shard
+    /// sampler. One word keeps the pair consistent: two separate atomics
+    /// let the sampler observe a torn (new mass, stale count) combination
+    /// and mis-weight the zero-mass count fallback.
+    stats: AtomicU64,
+}
+
+fn pack_shard_stats(mass: f64, count: usize) -> u64 {
+    // Saturate rather than wrap: count above u32::MAX is unreachable for
+    // in-memory tables, and f32 saturates to +inf which still weights the
+    // shard maximally.
+    let mass_bits = (mass as f32).to_bits() as u64;
+    let count = count.min(u32::MAX as usize) as u64;
+    (mass_bits << 32) | count
+}
+
+fn unpack_shard_stats(packed: u64) -> (f64, usize) {
+    let mass = f32::from_bits((packed >> 32) as u32) as f64;
+    (mass, (packed & u32::MAX as u64) as usize)
 }
 
 impl Shard {
     fn store_stats(&self, st: &ShardState) {
-        self.mass
-            .store(st.sampler.total_weight().to_bits(), Ordering::SeqCst);
-        self.count.store(st.items.len(), Ordering::SeqCst);
+        self.stats.store(
+            pack_shard_stats(st.sampler.total_weight(), st.items.len()),
+            Ordering::SeqCst,
+        );
+    }
+
+    /// Lock-free consistent `(mass, count)` snapshot.
+    fn load_stats(&self) -> (f64, usize) {
+        unpack_shard_stats(self.stats.load(Ordering::SeqCst))
     }
 }
 
@@ -293,6 +315,10 @@ impl Waiters {
 /// call concurrently. `Table` remains the canonical alias.
 pub struct ShardedTable {
     config: TableConfig,
+    /// Live capacity limit. Starts at `config.max_size`; the admin RPC may
+    /// re-tune it at runtime, so every capacity decision loads this atomic
+    /// instead of the frozen config field.
+    max_size: AtomicUsize,
     shards: Vec<Shard>,
     limiter: AtomicRateLimiter,
     /// Global capacity budget: items present plus admitted in-flight
@@ -323,6 +349,15 @@ pub struct ShardedTable {
     /// Durability hook (persist subsystem); unset tables pay one atomic
     /// load per mutation.
     sink: OnceLock<Arc<dyn MutationSink>>,
+    /// Watch-stream subscribers (DESIGN.md §12): persistent callbacks fired
+    /// after any mutation that changes `TableInfo`. A callback returning
+    /// `false` is dropped (subscription cancelled / connection gone).
+    /// Unlike the one-shot `Waiters` hooks these survive across firings,
+    /// so a subscriber never misses a mutation between re-arms.
+    watchers: Mutex<Vec<Box<dyn Fn() -> bool + Send + Sync>>>,
+    /// Fast-path mirror of `watchers.len()`: mutations skip the lock when
+    /// no one is subscribed.
+    watcher_count: AtomicUsize,
 }
 
 /// Pooled per-call state for cross-shard sampling.
@@ -356,11 +391,11 @@ impl ShardedTable {
                         crate::util::splitmix64(config.max_size as u64 ^ ((i as u64) << 17)),
                     ),
                 }),
-                mass: AtomicU64::new(0f64.to_bits()),
-                count: AtomicUsize::new(0),
+                stats: AtomicU64::new(pack_shard_stats(0.0, 0)),
             })
             .collect();
         ShardedTable {
+            max_size: AtomicUsize::new(config.max_size),
             limiter: AtomicRateLimiter::new(config.rate_limiter),
             shards,
             budget: AtomicUsize::new(0),
@@ -377,6 +412,8 @@ impl ShardedTable {
             pick_seq: AtomicU64::new(0),
             scratch_pool: Mutex::new(Vec::new()),
             sink: OnceLock::new(),
+            watchers: Mutex::new(Vec::new()),
+            watcher_count: AtomicUsize::new(0),
             config,
         }
     }
@@ -431,6 +468,7 @@ impl ShardedTable {
                 self.shards[shard_idx].store_stats(&st);
                 drop(st);
                 self.apply_followups(followups)?;
+                self.fire_watchers();
                 return Ok(());
             }
         }
@@ -473,6 +511,7 @@ impl ShardedTable {
             // An insert can unblock samplers (and, for queue-style configs
             // where sampling consumes items, eventually inserters too).
             self.notify(&self.sample_waiters);
+            self.fire_watchers();
         }
         drop(dropped);
         result
@@ -574,9 +613,10 @@ impl ShardedTable {
         deadline: Option<Instant>,
         timeout: Option<Duration>,
     ) -> Result<()> {
-        let max = self.config.max_size;
         let mut idle_scans = 0u32;
         loop {
+            // Re-loaded every pass so an admin re-tune mid-wait is honored.
+            let max = self.max_size.load(Ordering::SeqCst);
             let s = self.budget.load(Ordering::SeqCst);
             if s < max {
                 if self
@@ -622,7 +662,7 @@ impl ShardedTable {
             // runs inside this same shard lock) may have freed capacity
             // between the caller's size probe and our lock acquisition —
             // evicting then would drop an item a sampler already paid for.
-            if self.budget.load(Ordering::SeqCst) < self.config.max_size {
+            if self.budget.load(Ordering::SeqCst) < self.max_size.load(Ordering::SeqCst) {
                 return Ok(true);
             }
             let victim = {
@@ -704,6 +744,7 @@ impl ShardedTable {
             }
         }
         self.notify(&self.insert_waiters);
+        self.fire_watchers();
         drop(dropped);
         Ok(out)
     }
@@ -740,12 +781,19 @@ impl ShardedTable {
             if remaining_want == 0 {
                 return;
             }
+            // One atomic load per shard yields a consistent (mass, count)
+            // pair; the count fallback below reuses the same snapshot, so
+            // a concurrent mutation can never show this round a torn
+            // (new mass, stale count) combination. `picks` doubles as the
+            // snapshot buffer until the multinomial draw reclaims it.
+            scratch.picks.clear();
+            scratch
+                .picks
+                .extend(self.shards.iter().map(|s| s.stats.load(Ordering::SeqCst)));
             scratch.weights.clear();
-            scratch.weights.extend(
-                self.shards
-                    .iter()
-                    .map(|s| f64::from_bits(s.mass.load(Ordering::SeqCst))),
-            );
+            scratch
+                .weights
+                .extend(scratch.picks.iter().map(|&p| unpack_shard_stats(p).0));
             let mut use_mass = true;
             let mut total: f64 = scratch.weights.iter().sum();
             if total <= 0.0 {
@@ -754,11 +802,9 @@ impl ShardedTable {
                 // uniform fallback.
                 use_mass = false;
                 scratch.weights.clear();
-                scratch.weights.extend(
-                    self.shards
-                        .iter()
-                        .map(|s| s.count.load(Ordering::SeqCst) as f64),
-                );
+                scratch
+                    .weights
+                    .extend(scratch.picks.iter().map(|&p| unpack_shard_stats(p).1 as f64));
                 total = scratch.weights.iter().sum();
                 if total <= 0.0 {
                     return; // table (transiently) empty
@@ -916,6 +962,9 @@ impl ShardedTable {
             applied += 1;
             self.apply_followups(followups)?;
         }
+        if applied > 0 {
+            self.fire_watchers();
+        }
         Ok(applied)
     }
 
@@ -934,6 +983,9 @@ impl ShardedTable {
         }
         let n = dropped.len();
         drop(dropped);
+        if n > 0 {
+            self.fire_watchers();
+        }
         Ok(n)
     }
 
@@ -962,6 +1014,7 @@ impl ShardedTable {
         }
         self.run_extensions_standalone(|ext| ext.on_reset());
         self.notify(&self.insert_waiters);
+        self.fire_watchers();
         drop(dropped);
     }
 
@@ -993,7 +1046,7 @@ impl ShardedTable {
     pub fn info(&self) -> TableInfo {
         TableInfo {
             size: self.live.load(Ordering::SeqCst),
-            max_size: self.config.max_size,
+            max_size: self.max_size.load(Ordering::SeqCst),
             inserts: self.limiter.inserts(),
             samples: self.limiter.samples(),
             rate_limited_inserts: self.limiter.blocked_inserts(),
@@ -1042,6 +1095,7 @@ impl ShardedTable {
         self.limiter.restore(inserts, samples);
         self.force_notify(&self.sample_waiters);
         self.force_notify(&self.insert_waiters);
+        self.fire_watchers();
         Ok(())
     }
 
@@ -1078,6 +1132,7 @@ impl ShardedTable {
                 self.shards[shard_idx].store_stats(&st);
                 drop(st);
                 self.apply_followups(followups)?;
+                self.fire_watchers();
                 return Ok(TryInsertOutcome::Inserted);
             }
         }
@@ -1102,6 +1157,7 @@ impl ShardedTable {
         let outcome = match result {
             Ok(()) => {
                 self.notify(&self.sample_waiters);
+                self.fire_watchers();
                 Ok(TryInsertOutcome::Inserted)
             }
             // commit_insert already rolled the reservation back and handed
@@ -1134,6 +1190,7 @@ impl ShardedTable {
         self.collect_samples(n as u64, &mut out, &mut dropped);
         if !out.is_empty() {
             self.notify(&self.insert_waiters);
+            self.fire_watchers();
             drop(dropped);
             return Ok(TrySampleOutcome::Sampled(out));
         }
@@ -1175,6 +1232,108 @@ impl ShardedTable {
     /// Sample-side counterpart of [`ShardedTable::note_blocked_insert`].
     pub fn note_blocked_sample(&self) {
         self.limiter.note_blocked_sample();
+    }
+
+    // ------------------------------------------------------------------
+    // observability + live control plane (DESIGN.md §12)
+    // ------------------------------------------------------------------
+
+    /// Re-tune the capacity limit of a live table (admin RPC). Shrinking
+    /// evicts excess items through the Remover immediately, so `info()`
+    /// and watch subscribers observe the new limit without waiting for the
+    /// next insert; growing frees headroom parked inserters may be
+    /// waiting on.
+    pub fn set_max_size(&self, new_max: usize) -> Result<()> {
+        if new_max == 0 {
+            return Err(Error::InvalidArgument(
+                "max_size must be positive".into(),
+            ));
+        }
+        self.max_size.store(new_max, Ordering::SeqCst);
+        let mut dropped: Vec<Item> = Vec::new();
+        while self.budget.load(Ordering::SeqCst) > new_max {
+            match self.evict_one(0, &mut dropped) {
+                Ok(true) => {}
+                // Remaining excess is held by in-flight inserts (they will
+                // evict on landing) or the remover is empty — stop here.
+                _ => break,
+            }
+        }
+        drop(dropped);
+        self.notify(&self.insert_waiters);
+        self.fire_watchers();
+        Ok(())
+    }
+
+    /// Re-tune the rate-limiter SPI corridor bounds of a live table
+    /// (admin RPC). Validation lives in the limiter; parked work on both
+    /// sides is re-armed since a widened corridor may admit it.
+    pub fn set_rate_limiter_corridor(&self, min_diff: f64, max_diff: f64) -> Result<()> {
+        self.limiter.set_corridor(min_diff, max_diff)?;
+        self.notify(&self.insert_waiters);
+        self.notify(&self.sample_waiters);
+        self.fire_watchers();
+        Ok(())
+    }
+
+    /// Subscribe a persistent watch callback, fired after every mutation
+    /// that changes [`TableInfo`] (insert, sample, update, delete, reset,
+    /// restore, admin re-tune). Returning `false` drops the subscription.
+    /// Callbacks run outside all shard locks and must not call back into
+    /// the table.
+    pub fn register_watcher(&self, hook: Box<dyn Fn() -> bool + Send + Sync>) {
+        let mut w = self.watchers.lock().unwrap();
+        w.push(hook);
+        self.watcher_count.store(w.len(), Ordering::SeqCst);
+    }
+
+    /// Invoke all watch callbacks, dropping those that report themselves
+    /// dead. No-op (one atomic load) with no subscribers.
+    fn fire_watchers(&self) {
+        if self.watcher_count.load(Ordering::SeqCst) == 0 {
+            return;
+        }
+        let mut w = self.watchers.lock().unwrap();
+        w.retain(|hook| hook());
+        self.watcher_count.store(w.len(), Ordering::SeqCst);
+    }
+
+    /// Active watch-subscription count (metrics).
+    pub fn watcher_depth(&self) -> usize {
+        self.watcher_count.load(Ordering::SeqCst)
+    }
+
+    /// Parked blocking-API waiter depths `(insert, sample)` (metrics).
+    pub fn waiter_depths(&self) -> (usize, usize) {
+        (
+            self.insert_waiters.count.load(Ordering::SeqCst),
+            self.sample_waiters.count.load(Ordering::SeqCst),
+        )
+    }
+
+    /// Registered event-core re-arm hook depths `(insert, sample)` —
+    /// connections parked on the corridor (metrics).
+    pub fn rearm_hook_depths(&self) -> (usize, usize) {
+        (
+            self.insert_waiters.hook_count.load(Ordering::SeqCst),
+            self.sample_waiters.hook_count.load(Ordering::SeqCst),
+        )
+    }
+
+    /// Consistent per-shard `(sampler mass, item count)` snapshots
+    /// (metrics; lock-free).
+    pub fn shard_stats(&self) -> Vec<(f64, usize)> {
+        self.shards.iter().map(|s| s.load_stats()).collect()
+    }
+
+    /// Current rate-limiter corridor bounds `(min_diff, max_diff)`.
+    pub fn rate_limiter_bounds(&self) -> (f64, f64) {
+        self.limiter.corridor()
+    }
+
+    /// The limiter's samples-per-insert ratio.
+    pub fn samples_per_insert(&self) -> f64 {
+        self.limiter.samples_per_insert()
     }
 
     // ------------------------------------------------------------------
@@ -2049,5 +2208,134 @@ mod tests {
             2,
             "cancel must re-arm parked connections so they observe Cancelled"
         );
+    }
+
+    // ------------------------------------------------------------------
+    // observability + live control plane
+    // ------------------------------------------------------------------
+
+    #[test]
+    fn shard_stats_mass_count_pair_is_never_torn() {
+        // Regression: mass and count were two independent atomics, so the
+        // lock-free cross-shard sampler could observe a torn
+        // (new mass, stale count) pair. With every priority at 1.0 and a
+        // weight-1-per-item sampler, mass must equal count in every
+        // published snapshot — a torn pair breaks the equality.
+        let cfg = TableConfig {
+            sampler: SelectorConfig::Prioritized { exponent: 1.0 },
+            ..TableConfig::uniform_replay("t", 100_000)
+        }
+        .with_shards(4);
+        let t = Arc::new(Table::new(cfg));
+        let stop = Arc::new(std::sync::atomic::AtomicBool::new(false));
+        let mut handles = Vec::new();
+        for w in 0..2u64 {
+            let t = t.clone();
+            let stop = stop.clone();
+            handles.push(std::thread::spawn(move || {
+                let mut k = w * 1_000_000;
+                while !stop.load(Ordering::Relaxed) {
+                    k += 1;
+                    t.insert_or_assign(mk_item(k, 1.0), None).unwrap();
+                    if k % 2 == 0 {
+                        let _ = t.delete(&[k]);
+                    }
+                }
+            }));
+        }
+        let rt = t.clone();
+        let rstop = stop.clone();
+        let reader = std::thread::spawn(move || {
+            let mut checked = 0u64;
+            while !rstop.load(Ordering::Relaxed) {
+                for (mass, count) in rt.shard_stats() {
+                    assert!(
+                        (mass - count as f64).abs() < 1e-3,
+                        "torn shard stats: mass {mass} vs count {count}"
+                    );
+                    checked += 1;
+                }
+            }
+            checked
+        });
+        std::thread::sleep(Duration::from_millis(200));
+        stop.store(true, Ordering::Relaxed);
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert!(reader.join().unwrap() > 0, "reader made progress");
+    }
+
+    #[test]
+    fn zero_mass_count_fallback_samples_across_shards() {
+        // All-zero priorities force the sampler onto the count half of the
+        // packed shard stats (the zero-mass fallback path).
+        let cfg = TableConfig {
+            sampler: SelectorConfig::Prioritized { exponent: 1.0 },
+            ..TableConfig::uniform_replay("t", 1000)
+        }
+        .with_shards(4);
+        let t = Table::new(cfg);
+        for k in 1..=40 {
+            t.insert_or_assign(mk_item(k, 0.0), None).unwrap();
+        }
+        let mut seen = std::collections::HashSet::new();
+        for _ in 0..2000 {
+            seen.insert(t.sample(None).unwrap().item.key);
+        }
+        assert!(seen.len() > 30, "only {} of 40 keys reachable", seen.len());
+    }
+
+    #[test]
+    fn set_max_size_retunes_live_table() {
+        let t = uniform_table(10);
+        for k in 1..=10 {
+            t.insert_or_assign(mk_item(k, 1.0), None).unwrap();
+        }
+        assert!(t.set_max_size(0).is_err(), "zero max_size must be rejected");
+        // Shrink evicts down through the FIFO remover immediately.
+        t.set_max_size(4).unwrap();
+        assert_eq!(t.size(), 4);
+        assert_eq!(t.info().max_size, 4);
+        for k in 7..=10 {
+            assert!(t.contains(k), "newest items survive the shrink");
+        }
+        // Grow frees capacity for further inserts without eviction.
+        t.set_max_size(20).unwrap();
+        for k in 11..=26 {
+            t.insert_or_assign(mk_item(k, 1.0), None).unwrap();
+        }
+        assert_eq!(t.size(), 20);
+        assert_eq!(t.info().max_size, 20);
+    }
+
+    #[test]
+    fn watchers_fire_on_mutations_and_unsubscribe() {
+        use std::sync::atomic::AtomicUsize;
+        let t = uniform_table(10);
+        let hits = Arc::new(AtomicUsize::new(0));
+        let alive = Arc::new(std::sync::atomic::AtomicBool::new(true));
+        let (h, a) = (hits.clone(), alive.clone());
+        t.register_watcher(Box::new(move || {
+            h.fetch_add(1, Ordering::SeqCst);
+            a.load(Ordering::SeqCst)
+        }));
+        assert_eq!(t.watcher_depth(), 1);
+        t.insert_or_assign(mk_item(1, 1.0), None).unwrap();
+        let after_insert = hits.load(Ordering::SeqCst);
+        assert!(after_insert >= 1, "insert fired the watcher");
+        t.sample(None).unwrap();
+        assert!(hits.load(Ordering::SeqCst) > after_insert, "sample fired");
+        t.update_priorities(&[(1, 2.0)]).unwrap();
+        t.delete(&[1]).unwrap();
+        t.reset();
+        assert!(hits.load(Ordering::SeqCst) >= 5);
+        // A callback returning false is dropped on its next firing.
+        alive.store(false, Ordering::SeqCst);
+        t.insert_or_assign(mk_item(2, 1.0), None).unwrap();
+        assert_eq!(t.watcher_depth(), 0);
+        let settled = hits.load(Ordering::SeqCst);
+        t.insert_or_assign(mk_item(3, 1.0), None).unwrap();
+        assert_eq!(hits.load(Ordering::SeqCst), settled, "dropped watcher stays dropped");
     }
 }

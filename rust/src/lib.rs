@@ -28,8 +28,8 @@ pub use crate::core::selector::SelectorConfig;
 pub use crate::core::table::{default_shard_count, ShardedTable, Table, TableConfig, TableInfo};
 pub use crate::core::tensor::{DType, Signature, Tensor, TensorSpec};
 pub use crate::client::{
-    Client, ClientPool, Dataset, Sample, Sampler, SamplerOptions, StepRef, Trajectory,
-    TrajectoryWriter, TrajectoryWriterOptions, Writer, WriterOptions,
+    AdminRequest, Client, ClientPool, Dataset, Sample, Sampler, SamplerOptions, StepRef,
+    Trajectory, TrajectoryWriter, TrajectoryWriterOptions, Watch, Writer, WriterOptions,
 };
 pub use crate::error::{Error, Result};
 pub use crate::net::event::default_service_threads;

@@ -23,7 +23,8 @@ fn usage() -> ! {
          [--shards N] [--checkpoint-dir DIR] [--load CKPT] \
          [--persist full|delta] [--checkpoint-interval SECS] \
          [--journal-segment-bytes N] [--service-threads N] \
-         [--service-model event|threaded] [--unix-socket PATH]\n  \
+         [--service-model event|threaded] [--unix-socket PATH] \
+         [--metrics-addr HOST:PORT]\n  \
          reverb-server info --addr HOST:PORT\n  \
          reverb-server checkpoint --addr HOST:PORT\n\n\
          table kinds:\n  NAME:uniform:MAX_SIZE\n  NAME:queue:QUEUE_SIZE\n  \
@@ -40,7 +41,8 @@ fn usage() -> ! {
          one per core) that multiplexes all connections; --service-model \
          threaded restores the legacy thread-per-connection core (kept one \
          release as a differential-testing oracle). --unix-socket PATH \
-         additionally serves reverb+unix://PATH."
+         additionally serves reverb+unix://PATH. --metrics-addr HOST:PORT \
+         serves Prometheus text exposition at http://HOST:PORT/metrics."
     );
     std::process::exit(2);
 }
@@ -167,6 +169,9 @@ fn main() {
             if let Some(path) = flag(&args, "--unix-socket") {
                 builder = builder.unix_socket(path);
             }
+            if let Some(addr) = flag(&args, "--metrics-addr") {
+                builder = builder.metrics_addr(addr);
+            }
             if let Some(dir) = flag(&args, "--checkpoint-dir") {
                 builder = builder.checkpoint_dir(dir);
             }
@@ -225,6 +230,9 @@ fn main() {
                     println!("reverb-server listening on {}", server.local_addr());
                     if let Some(uds) = server.uds_addr() {
                         println!("  unix socket: {uds}");
+                    }
+                    if let Some(m) = server.metrics_addr() {
+                        println!("  metrics: http://{m}/metrics");
                     }
                     for (name, info) in server.info() {
                         println!("  table {name}: size={}/{}", info.size, info.max_size);

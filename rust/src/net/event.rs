@@ -137,6 +137,13 @@ struct ConnState {
     parked: Option<ParkedOp>,
     /// A reply flush hit `WouldBlock`; resume on writability.
     want_write: bool,
+    /// Watch subscriptions on this connection: (watch id, table, alive
+    /// flag). The table-side hooks hold only weak references plus the
+    /// alive flag, so a closed connection's hooks unsubscribe themselves.
+    watches: Vec<(u64, Arc<Table>, Arc<AtomicBool>)>,
+    /// `Some` for `/metrics` scrape sockets, which ride the same poller
+    /// and worker pool as data-plane connections but speak plain HTTP.
+    http: Option<HttpScrape>,
 }
 
 /// One served connection.
@@ -147,7 +154,31 @@ struct EventConn {
     /// rather than being lost.
     queued: AtomicBool,
     closed: AtomicBool,
+    /// A watcher hook fired since the last service pass: emit one
+    /// coalesced `WatchUpdate` per subscription (latest-wins).
+    watch_dirty: AtomicBool,
     state: Mutex<ConnState>,
+}
+
+/// State machine of one `/metrics` scrape riding the event loop: read the
+/// request head non-blockingly, render once, then write the response
+/// non-blockingly; close when done (replies are `Connection: close`, so
+/// there is no keep-alive state).
+struct HttpScrape {
+    sock: std::net::TcpStream,
+    head: Vec<u8>,
+    /// Rendered response; `None` until the request head completes.
+    response: Option<Vec<u8>>,
+    written: usize,
+}
+
+/// Per-worker service counters, exported as
+/// `reverb_worker_{dispatches,frames}_total`.
+pub(crate) struct WorkerStats {
+    /// Service passes this worker has run.
+    pub(crate) dispatches: AtomicU64,
+    /// Frames dispatched across those passes.
+    pub(crate) frames: AtomicU64,
 }
 
 /// State shared by workers, the poller thread, accept threads, and the
@@ -160,6 +191,8 @@ pub(crate) struct EventShared {
     conns: Mutex<HashMap<u64, Arc<EventConn>>>,
     /// Parked-op deadlines and retry slices, drained by the poller thread.
     timers: Mutex<BinaryHeap<Reverse<(Instant, u64)>>>,
+    /// One entry per worker thread, indexed by spawn order.
+    worker_stats: Vec<WorkerStats>,
     stop: AtomicBool,
     next_id: AtomicU64,
 }
@@ -179,6 +212,7 @@ impl EventShared {
             id,
             queued: AtomicBool::new(false),
             closed: AtomicBool::new(false),
+            watch_dirty: AtomicBool::new(false),
             state: Mutex::new(ConnState {
                 stream,
                 source,
@@ -186,6 +220,8 @@ impl EventShared {
                 pending_order: VecDeque::new(),
                 parked: None,
                 want_write: false,
+                watches: Vec::new(),
+                http: None,
             }),
         });
         self.conns.lock().unwrap().insert(id, conn.clone());
@@ -202,9 +238,67 @@ impl EventShared {
         self.schedule(&conn);
     }
 
+    /// Adopt an accepted `/metrics` scrape socket as another readiness
+    /// source on the worker pool: scrapes ride the same poller and
+    /// workers as the data plane instead of pinning a thread each. Gives
+    /// the socket back (`Err`) where fd polling is unavailable (non-unix)
+    /// so the caller can fall back to a thread per scrape.
+    pub(crate) fn add_http_conn(
+        self: &Arc<Self>,
+        sock: std::net::TcpStream,
+    ) -> std::result::Result<(), std::net::TcpStream> {
+        #[cfg(not(unix))]
+        {
+            return Err(sock);
+        }
+        #[cfg(unix)]
+        {
+            // Dropping the socket on a stopping server (or a failed
+            // nonblocking switch) is the correct outcome: the scrape just
+            // sees a reset.
+            if self.stop.load(Ordering::SeqCst) || sock.set_nonblocking(true).is_err() {
+                return Ok(());
+            }
+            let fd = std::os::unix::io::AsRawFd::as_raw_fd(&sock);
+            let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+            let conn = Arc::new(EventConn {
+                id,
+                queued: AtomicBool::new(false),
+                closed: AtomicBool::new(false),
+                watch_dirty: AtomicBool::new(false),
+                state: Mutex::new(ConnState {
+                    // HTTP bytes never touch the wire-protocol stream; the
+                    // scrape socket lives in `http`.
+                    stream: Box::new(ClosedStream),
+                    source: PollSource::Fd(fd),
+                    pending: HashMap::new(),
+                    pending_order: VecDeque::new(),
+                    parked: None,
+                    want_write: false,
+                    watches: Vec::new(),
+                    http: Some(HttpScrape {
+                        sock,
+                        head: Vec::new(),
+                        response: None,
+                        written: 0,
+                    }),
+                }),
+            });
+            self.conns.lock().unwrap().insert(id, conn.clone());
+            self.poller.register(id, fd);
+            self.schedule(&conn);
+            Ok(())
+        }
+    }
+
     /// Number of live connections (diagnostics / tests).
     pub(crate) fn live_conns(&self) -> usize {
         self.conns.lock().unwrap().len()
+    }
+
+    /// Per-worker service counters (metrics export).
+    pub(crate) fn worker_stats(&self) -> &[WorkerStats] {
+        &self.worker_stats
     }
 
     /// Queue a connection for a worker (idempotent; cheap enough to call
@@ -263,6 +357,13 @@ impl EventShared {
         st.pending.clear();
         st.pending_order.clear();
         st.parked = None;
+        // Flip alive flags before dropping the Arcs so watcher hooks that
+        // are mid-fire see the cancellation; hooks holding only dead Weaks
+        // unsubscribe themselves on their next firing either way.
+        for (_, _, alive) in st.watches.drain(..) {
+            alive.store(false, Ordering::SeqCst);
+        }
+        st.http = None;
         self.conns.lock().unwrap().remove(&conn.id);
     }
 }
@@ -276,6 +377,7 @@ pub(crate) struct EventCore {
 
 impl EventCore {
     pub(crate) fn start(inner: Arc<ServerInner>, threads: usize) -> Result<EventCore> {
+        let threads = threads.max(1);
         let shared = Arc::new(EventShared {
             inner,
             poller: Poller::new()?,
@@ -283,17 +385,22 @@ impl EventCore {
             ready_cv: Condvar::new(),
             conns: Mutex::new(HashMap::new()),
             timers: Mutex::new(BinaryHeap::new()),
+            worker_stats: (0..threads)
+                .map(|_| WorkerStats {
+                    dispatches: AtomicU64::new(0),
+                    frames: AtomicU64::new(0),
+                })
+                .collect(),
             stop: AtomicBool::new(false),
             next_id: AtomicU64::new(1),
         });
-        let threads = threads.max(1);
         let mut workers = Vec::with_capacity(threads);
         for i in 0..threads {
             let s = shared.clone();
             workers.push(
                 std::thread::Builder::new()
                     .name(format!("reverb-svc-{i}"))
-                    .spawn(move || worker_loop(s))
+                    .spawn(move || worker_loop(s, i))
                     .expect("spawn service worker"),
             );
         }
@@ -351,7 +458,7 @@ impl Drop for EventCore {
     }
 }
 
-fn worker_loop(shared: Arc<EventShared>) {
+fn worker_loop(shared: Arc<EventShared>, idx: usize) {
     loop {
         let conn = {
             let mut q = shared.ready.lock().unwrap();
@@ -366,7 +473,10 @@ fn worker_loop(shared: Arc<EventShared>) {
             }
         };
         conn.queued.store(false, Ordering::SeqCst);
-        service(&shared, &conn);
+        let frames = service(&shared, &conn);
+        let stats = &shared.worker_stats[idx];
+        stats.dispatches.fetch_add(1, Ordering::Relaxed);
+        stats.frames.fetch_add(frames as u64, Ordering::Relaxed);
     }
 }
 
@@ -407,12 +517,18 @@ fn poll_loop(shared: Arc<EventShared>) {
     }
 }
 
-/// One service pass over a connection's state machine.
-fn service(shared: &Arc<EventShared>, conn: &Arc<EventConn>) {
+/// One service pass over a connection's state machine. Returns the
+/// number of frames dispatched (for the per-worker counters).
+fn service(shared: &Arc<EventShared>, conn: &Arc<EventConn>) -> usize {
     let mut st = conn.state.lock().unwrap();
     if conn.closed.load(Ordering::SeqCst) {
-        return;
+        return 0;
     }
+    if st.http.is_some() {
+        service_http(shared, conn, &mut st);
+        return 0;
+    }
+    let mut frames = 0usize;
 
     // 1. Retry a parked op (wakeup or timer brought us here).
     let mut may_read = true;
@@ -425,11 +541,11 @@ fn service(shared: &Arc<EventShared>, conn: &Arc<EventConn>) {
             }
             Err(_) => {
                 shared.close(conn, &mut st);
-                return;
+                return frames;
             }
         }
         if conn.closed.load(Ordering::SeqCst) {
-            return;
+            return frames;
         }
     }
 
@@ -439,18 +555,17 @@ fn service(shared: &Arc<EventShared>, conn: &Arc<EventConn>) {
             Ok(true) => st.want_write = false,
             Ok(false) => {
                 shared.arm_write(&st, conn.id);
-                return;
+                return frames;
             }
             Err(_) => {
                 shared.close(conn, &mut st);
-                return;
+                return frames;
             }
         }
     }
 
     // 3. Read + dispatch until the input drains (or we park / yield).
     if may_read && st.parked.is_none() {
-        let mut frames = 0usize;
         loop {
             if frames >= MAX_FRAMES_PER_SERVICE {
                 // Fairness: let other connections at the workers; more
@@ -461,7 +576,7 @@ fn service(shared: &Arc<EventShared>, conn: &Arc<EventConn>) {
             match st.stream.try_recv() {
                 Ok(Some(msg)) => {
                     frames += 1;
-                    match dispatch(shared, &mut st, msg) {
+                    match dispatch(shared, conn, &mut st, msg) {
                         Ok(Dispatch::Continue) => continue,
                         Ok(Dispatch::Parked(op, kind)) => {
                             park(shared, conn, &mut st, op, kind);
@@ -469,7 +584,7 @@ fn service(shared: &Arc<EventShared>, conn: &Arc<EventConn>) {
                         }
                         Err(_) => {
                             shared.close(conn, &mut st);
-                            return;
+                            return frames;
                         }
                     }
                 }
@@ -482,12 +597,36 @@ fn service(shared: &Arc<EventShared>, conn: &Arc<EventConn>) {
                 Err(_) => {
                     // Peer hung up (mid-frame drops land here too).
                     shared.close(conn, &mut st);
-                    return;
+                    return frames;
                 }
             }
         }
         if conn.closed.load(Ordering::SeqCst) {
-            return;
+            return frames;
+        }
+    }
+
+    // 3.5. Push coalesced watch updates if any watcher hook fired since
+    // the last pass: one current-state snapshot per subscription,
+    // however many mutations landed meanwhile (latest-wins backpressure,
+    // DESIGN.md §12).
+    if conn.watch_dirty.swap(false, Ordering::SeqCst) && !st.watches.is_empty() {
+        let stt = &mut *st;
+        let mut failed = false;
+        for (id, table, _alive) in &stt.watches {
+            let update = Message::WatchUpdate {
+                id: *id,
+                table: table.name().to_string(),
+                info: table.info(),
+            };
+            if stt.stream.send(update).is_err() {
+                failed = true;
+                break;
+            }
+        }
+        if failed {
+            shared.close(conn, &mut st);
+            return frames;
         }
     }
 
@@ -500,6 +639,74 @@ fn service(shared: &Arc<EventShared>, conn: &Arc<EventConn>) {
         }
         Err(_) => shared.close(conn, &mut st),
     }
+    frames
+}
+
+/// One service pass over a `/metrics` scrape socket: read the request
+/// head, render the response once, write it out, close. Re-arms poller
+/// interest on `WouldBlock` at either end.
+fn service_http(shared: &Arc<EventShared>, conn: &Arc<EventConn>, st: &mut ConnState) {
+    use std::io::{ErrorKind, Read, Write};
+    // Take the scrape state out so socket I/O does not hold a field
+    // borrow across `close`/`arm_*` calls, which take the whole state.
+    let Some(mut http) = st.http.take() else {
+        return;
+    };
+    if http.response.is_none() {
+        let mut buf = [0u8; 1024];
+        loop {
+            if crate::net::metrics::head_complete(&http.head) {
+                break;
+            }
+            if http.head.len() > crate::net::metrics::MAX_HTTP_HEAD {
+                shared.close(conn, st);
+                return;
+            }
+            match http.sock.read(&mut buf) {
+                Ok(0) => {
+                    shared.close(conn, st);
+                    return;
+                }
+                Ok(n) => http.head.extend_from_slice(&buf[..n]),
+                Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+                Err(e) if e.kind() == ErrorKind::WouldBlock => {
+                    st.http = Some(http);
+                    shared.arm_read(st, conn.id);
+                    return;
+                }
+                Err(_) => {
+                    shared.close(conn, st);
+                    return;
+                }
+            }
+        }
+        http.response = Some(crate::net::metrics::http_response(
+            &http.head,
+            &shared.inner,
+            Some(shared),
+        ));
+    }
+    loop {
+        let resp = http.response.as_ref().expect("response rendered above");
+        if http.written >= resp.len() {
+            break;
+        }
+        match http.sock.write(&resp[http.written..]) {
+            // A zero-length write means the peer stopped reading: done.
+            Ok(0) => break,
+            Ok(n) => http.written += n,
+            Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+            Err(e) if e.kind() == ErrorKind::WouldBlock => {
+                st.http = Some(http);
+                shared.arm_write(st, conn.id);
+                return;
+            }
+            Err(_) => break,
+        }
+    }
+    // Fully written (or unrecoverable): responses are `Connection:
+    // close`, so tear down.
+    shared.close(conn, st);
 }
 
 /// Park `op` on its wakeup source, then re-attempt once: a notification
@@ -672,7 +879,12 @@ fn attempt_sample(
 
 /// Dispatch one inbound frame. `Err` is connection-fatal (reply channel
 /// broken or protocol violation); op-level failures become error replies.
-fn dispatch(shared: &Arc<EventShared>, st: &mut ConnState, msg: Message) -> Result<Dispatch> {
+fn dispatch(
+    shared: &Arc<EventShared>,
+    conn: &Arc<EventConn>,
+    st: &mut ConnState,
+    msg: Message,
+) -> Result<Dispatch> {
     match msg {
         Message::InsertChunks { chunks } => {
             stash_chunks(
@@ -774,12 +986,83 @@ fn dispatch(shared: &Arc<EventShared>, st: &mut ConnState, msg: Message) -> Resu
             send_reply(st, id, reply)?;
             Ok(Dispatch::Continue)
         }
+        Message::AdminReconfig {
+            id,
+            table,
+            max_size,
+            min_diff,
+            max_diff,
+            checkpoint_interval_ms,
+        } => {
+            let reply =
+                shared
+                    .inner
+                    .apply_admin(&table, max_size, min_diff, max_diff, checkpoint_interval_ms);
+            send_reply(st, id, reply)?;
+            Ok(Dispatch::Continue)
+        }
+        Message::WatchRequest { id, table } => {
+            match shared.inner.table(&table) {
+                Ok(t) => {
+                    let t = t.clone();
+                    let alive = Arc::new(AtomicBool::new(true));
+                    let hook_shared = Arc::downgrade(shared);
+                    let hook_conn = Arc::downgrade(conn);
+                    let hook_alive = Arc::downgrade(&alive);
+                    // The hook only flips a dirty bit and schedules the
+                    // connection — it runs on mutating threads outside
+                    // shard locks and must never call back into the table.
+                    t.register_watcher(Box::new(move || {
+                        let (Some(shared), Some(conn), Some(alive)) = (
+                            hook_shared.upgrade(),
+                            hook_conn.upgrade(),
+                            hook_alive.upgrade(),
+                        ) else {
+                            return false;
+                        };
+                        if conn.closed.load(Ordering::SeqCst) || !alive.load(Ordering::SeqCst) {
+                            return false;
+                        }
+                        conn.watch_dirty.store(true, Ordering::SeqCst);
+                        shared.schedule(&conn);
+                        true
+                    }));
+                    st.watches.push((id, t.clone(), alive));
+                    // Immediate snapshot: the baseline the deltas follow.
+                    st.stream.send(Message::WatchUpdate {
+                        id,
+                        table,
+                        info: t.info(),
+                    })?;
+                }
+                Err(e) => send_err(st, id, &e)?,
+            }
+            Ok(Dispatch::Continue)
+        }
+        Message::WatchCancel { id } => {
+            let before = st.watches.len();
+            st.watches.retain(|(wid, _, alive)| {
+                if *wid == id {
+                    alive.store(false, Ordering::SeqCst);
+                    false
+                } else {
+                    true
+                }
+            });
+            // Idempotent by design: cancelling an unknown id acks 0.
+            let n = before - st.watches.len();
+            send_reply(st, id, Ok(format!("cancelled={n}")))?;
+            Ok(Dispatch::Continue)
+        }
         // Server-to-client messages arriving at the server are protocol
         // violations.
         Message::Ack { .. }
         | Message::Err { .. }
         | Message::SampleData { .. }
-        | Message::Info { .. } => Err(Error::Decode("client sent a server-side message".into())),
+        | Message::Info { .. }
+        | Message::WatchUpdate { .. } => {
+            Err(Error::Decode("client sent a server-side message".into()))
+        }
     }
 }
 

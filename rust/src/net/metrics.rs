@@ -1,0 +1,352 @@
+//! Prometheus text exposition for the `/metrics` endpoint (DESIGN.md
+//! §12): a hand-rolled renderer over the observability accessors the
+//! tables, gate, journal, and event core already expose — no HTTP or
+//! metrics crate, just the text format (version 0.0.4).
+//!
+//! Every value is read through the same lock-free atomics (or short
+//! shard-lock holds) the data plane uses, so a scrape never stalls
+//! inserts or samples. Non-finite gauges are rendered as the exposition
+//! format's `+Inf` / `-Inf` / `NaN` literals — the `MinSize` limiter
+//! legitimately reports infinite corridor bounds.
+
+use crate::net::event::EventShared;
+use crate::net::server::ServerInner;
+
+/// Cap on an accepted scrape's request head; anything longer is dropped
+/// (a scrape request is a handful of lines).
+pub(crate) const MAX_HTTP_HEAD: usize = 8192;
+
+/// True once `buf` holds a complete HTTP request head. Bare-`\n`
+/// separators are tolerated for hand-written test clients.
+pub(crate) fn head_complete(buf: &[u8]) -> bool {
+    buf.windows(4).any(|w| w == b"\r\n\r\n") || buf.windows(2).any(|w| w == b"\n\n")
+}
+
+/// Build the full HTTP response for a scrape request head: `GET
+/// /metrics` gets the rendered exposition, anything else a small error.
+/// Responses are always `Connection: close` — scrapes are one-shot.
+pub(crate) fn http_response(
+    head: &[u8],
+    inner: &ServerInner,
+    event: Option<&EventShared>,
+) -> Vec<u8> {
+    let line = head.split(|&b| b == b'\n').next().unwrap_or(b"");
+    let line = String::from_utf8_lossy(line);
+    let mut parts = line.split_whitespace();
+    let method = parts.next().unwrap_or("");
+    let target = parts.next().unwrap_or("");
+    let path = target.split('?').next().unwrap_or("");
+    let (status, content_type, body) = if method != "GET" {
+        (
+            "405 Method Not Allowed",
+            "text/plain; charset=utf-8",
+            "method not allowed\n".to_string(),
+        )
+    } else if path == "/metrics" {
+        (
+            "200 OK",
+            "text/plain; version=0.0.4; charset=utf-8",
+            render_prometheus(inner, event),
+        )
+    } else {
+        (
+            "404 Not Found",
+            "text/plain; charset=utf-8",
+            "not found (try /metrics)\n".to_string(),
+        )
+    };
+    format!(
+        "HTTP/1.1 {status}\r\nContent-Type: {content_type}\r\nContent-Length: {}\r\nConnection: close\r\n\r\n{body}",
+        body.len()
+    )
+    .into_bytes()
+}
+
+/// A sample value in exposition syntax (`+Inf`/`-Inf`/`NaN` for the
+/// non-finite cases — never the bare Rust `inf` Display form).
+fn fmt_value(v: f64) -> String {
+    if v.is_nan() {
+        "NaN".to_string()
+    } else if v == f64::INFINITY {
+        "+Inf".to_string()
+    } else if v == f64::NEG_INFINITY {
+        "-Inf".to_string()
+    } else {
+        format!("{v}")
+    }
+}
+
+/// Escape a label value per the exposition format.
+fn escape_label(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '\\' => out.push_str("\\\\"),
+            '"' => out.push_str("\\\""),
+            '\n' => out.push_str("\\n"),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// Exposition buffer: `family` opens a `# HELP`/`# TYPE` block, `sample`
+/// appends one labelled value to the open family.
+struct Expo {
+    out: String,
+}
+
+impl Expo {
+    fn family(&mut self, name: &str, kind: &str, help: &str) {
+        self.out.push_str("# HELP ");
+        self.out.push_str(name);
+        self.out.push(' ');
+        self.out.push_str(help);
+        self.out.push_str("\n# TYPE ");
+        self.out.push_str(name);
+        self.out.push(' ');
+        self.out.push_str(kind);
+        self.out.push('\n');
+    }
+
+    fn sample(&mut self, name: &str, labels: &[(&str, &str)], value: f64) {
+        self.out.push_str(name);
+        if !labels.is_empty() {
+            self.out.push('{');
+            for (i, (k, v)) in labels.iter().enumerate() {
+                if i > 0 {
+                    self.out.push(',');
+                }
+                self.out.push_str(k);
+                self.out.push_str("=\"");
+                self.out.push_str(&escape_label(v));
+                self.out.push('"');
+            }
+            self.out.push('}');
+        }
+        self.out.push(' ');
+        self.out.push_str(&fmt_value(value));
+        self.out.push('\n');
+    }
+}
+
+/// Render the full exposition. `event` is `Some` under the event-driven
+/// service model, adding per-worker and connection-count families.
+pub(crate) fn render_prometheus(inner: &ServerInner, event: Option<&EventShared>) -> String {
+    let mut e = Expo {
+        out: String::with_capacity(4096),
+    };
+
+    // Snapshot per-table state once; each exposition family then groups
+    // all its samples under a single TYPE header as the format requires.
+    let tables: Vec<_> = inner
+        .table_order
+        .iter()
+        .map(|t| {
+            (
+                t.name().to_string(),
+                t.info(),
+                t.rate_limiter_bounds(),
+                t.samples_per_insert(),
+                t.waiter_depths(),
+                t.rearm_hook_depths(),
+                t.watcher_depth(),
+                t.shard_stats(),
+            )
+        })
+        .collect();
+
+    e.family("reverb_table_size", "gauge", "Items currently in the table.");
+    for (name, info, ..) in &tables {
+        e.sample("reverb_table_size", &[("table", name)], info.size as f64);
+    }
+    e.family("reverb_table_max_size", "gauge", "Configured capacity before eviction.");
+    for (name, info, ..) in &tables {
+        e.sample("reverb_table_max_size", &[("table", name)], info.max_size as f64);
+    }
+    e.family("reverb_table_inserts_total", "counter", "Items inserted since start.");
+    for (name, info, ..) in &tables {
+        e.sample("reverb_table_inserts_total", &[("table", name)], info.inserts as f64);
+    }
+    e.family("reverb_table_samples_total", "counter", "Items sampled since start.");
+    for (name, info, ..) in &tables {
+        e.sample("reverb_table_samples_total", &[("table", name)], info.samples as f64);
+    }
+    e.family(
+        "reverb_table_rate_limited_inserts_total",
+        "counter",
+        "Insert episodes blocked by the rate-limiter corridor.",
+    );
+    for (name, info, ..) in &tables {
+        e.sample(
+            "reverb_table_rate_limited_inserts_total",
+            &[("table", name)],
+            info.rate_limited_inserts as f64,
+        );
+    }
+    e.family(
+        "reverb_table_rate_limited_samples_total",
+        "counter",
+        "Sample episodes blocked by the rate-limiter corridor.",
+    );
+    for (name, info, ..) in &tables {
+        e.sample(
+            "reverb_table_rate_limited_samples_total",
+            &[("table", name)],
+            info.rate_limited_samples as f64,
+        );
+    }
+
+    e.family(
+        "reverb_rate_limiter_diff",
+        "gauge",
+        "Corridor cursor: inserts x samples_per_insert - samples.",
+    );
+    for (name, info, ..) in &tables {
+        e.sample("reverb_rate_limiter_diff", &[("table", name)], info.diff);
+    }
+    e.family(
+        "reverb_rate_limiter_min_diff",
+        "gauge",
+        "Lower corridor bound (samples block below).",
+    );
+    for (name, _, bounds, ..) in &tables {
+        e.sample("reverb_rate_limiter_min_diff", &[("table", name)], bounds.0);
+    }
+    e.family(
+        "reverb_rate_limiter_max_diff",
+        "gauge",
+        "Upper corridor bound (inserts block above).",
+    );
+    for (name, _, bounds, ..) in &tables {
+        e.sample("reverb_rate_limiter_max_diff", &[("table", name)], bounds.1);
+    }
+    e.family(
+        "reverb_rate_limiter_samples_per_insert",
+        "gauge",
+        "Target sampling rate per insert.",
+    );
+    for (name, _, _, spi, ..) in &tables {
+        e.sample("reverb_rate_limiter_samples_per_insert", &[("table", name)], *spi);
+    }
+
+    e.family("reverb_table_insert_waiters", "gauge", "Threads blocked in the insert corridor.");
+    for (name, _, _, _, waiters, ..) in &tables {
+        e.sample("reverb_table_insert_waiters", &[("table", name)], waiters.0 as f64);
+    }
+    e.family("reverb_table_sample_waiters", "gauge", "Threads blocked in the sample corridor.");
+    for (name, _, _, _, waiters, ..) in &tables {
+        e.sample("reverb_table_sample_waiters", &[("table", name)], waiters.1 as f64);
+    }
+    e.family(
+        "reverb_table_insert_rearm_hooks",
+        "gauge",
+        "Parked event-core inserts awaiting a corridor wakeup.",
+    );
+    for (name, _, _, _, _, hooks, ..) in &tables {
+        e.sample("reverb_table_insert_rearm_hooks", &[("table", name)], hooks.0 as f64);
+    }
+    e.family(
+        "reverb_table_sample_rearm_hooks",
+        "gauge",
+        "Parked event-core samples awaiting a corridor wakeup.",
+    );
+    for (name, _, _, _, _, hooks, ..) in &tables {
+        e.sample("reverb_table_sample_rearm_hooks", &[("table", name)], hooks.1 as f64);
+    }
+    e.family("reverb_table_watchers", "gauge", "Live watch-stream subscriptions on the table.");
+    for (name, _, _, _, _, _, watchers, _) in &tables {
+        e.sample("reverb_table_watchers", &[("table", name)], *watchers as f64);
+    }
+
+    e.family("reverb_shard_mass", "gauge", "Total priority mass per shard.");
+    for (name, _, _, _, _, _, _, shards) in &tables {
+        for (i, (mass, _)) in shards.iter().enumerate() {
+            let shard = i.to_string();
+            e.sample("reverb_shard_mass", &[("table", name), ("shard", &shard)], *mass);
+        }
+    }
+    e.family("reverb_shard_items", "gauge", "Item count per shard.");
+    for (name, _, _, _, _, _, _, shards) in &tables {
+        for (i, (_, count)) in shards.iter().enumerate() {
+            let shard = i.to_string();
+            e.sample("reverb_shard_items", &[("table", name), ("shard", &shard)], *count as f64);
+        }
+    }
+
+    e.family(
+        "reverb_gate_last_pause_seconds",
+        "gauge",
+        "Duration of the most recent checkpoint gate pause.",
+    );
+    e.sample("reverb_gate_last_pause_seconds", &[], inner.gate.last_pause().as_secs_f64());
+    e.family(
+        "reverb_gate_in_flight",
+        "gauge",
+        "Table operations currently inside the checkpoint gate.",
+    );
+    e.sample("reverb_gate_in_flight", &[], inner.gate.in_flight() as f64);
+
+    e.family(
+        "reverb_persist_journal_lag_bytes",
+        "gauge",
+        "Approximate bytes sealed to the persist writer but not yet on disk.",
+    );
+    e.sample("reverb_persist_journal_lag_bytes", &[], inner.journal_lag_bytes() as f64);
+
+    if let Some(shared) = event {
+        e.family(
+            "reverb_connections",
+            "gauge",
+            "Connections live on the event core (including scrapes).",
+        );
+        e.sample("reverb_connections", &[], shared.live_conns() as f64);
+        e.family("reverb_worker_dispatches_total", "counter", "Service passes run per worker.");
+        let stats = shared.worker_stats();
+        for (i, w) in stats.iter().enumerate() {
+            let worker = i.to_string();
+            e.sample(
+                "reverb_worker_dispatches_total",
+                &[("worker", &worker)],
+                w.dispatches.load(std::sync::atomic::Ordering::Relaxed) as f64,
+            );
+        }
+        e.family("reverb_worker_frames_total", "counter", "Frames dispatched per worker.");
+        for (i, w) in stats.iter().enumerate() {
+            let worker = i.to_string();
+            e.sample(
+                "reverb_worker_frames_total",
+                &[("worker", &worker)],
+                w.frames.load(std::sync::atomic::Ordering::Relaxed) as f64,
+            );
+        }
+    }
+
+    e.out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn head_complete_detects_terminators() {
+        assert!(!head_complete(b"GET /metrics HTTP/1.1\r\n"));
+        assert!(head_complete(b"GET /metrics HTTP/1.1\r\nHost: x\r\n\r\n"));
+        assert!(head_complete(b"GET /metrics HTTP/1.1\n\n"));
+    }
+
+    #[test]
+    fn values_render_exposition_literals() {
+        assert_eq!(fmt_value(f64::INFINITY), "+Inf");
+        assert_eq!(fmt_value(f64::NEG_INFINITY), "-Inf");
+        assert_eq!(fmt_value(f64::NAN), "NaN");
+        assert_eq!(fmt_value(1.5), "1.5");
+        assert_eq!(fmt_value(3.0), "3");
+    }
+
+    #[test]
+    fn labels_escape_specials() {
+        assert_eq!(escape_label("a\"b\\c\nd"), "a\\\"b\\\\c\\nd");
+    }
+}

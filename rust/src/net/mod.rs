@@ -1,10 +1,11 @@
 //! Networking: the wire protocol (gRPC analogue), the pluggable transport
 //! layer (TCP + Unix sockets + zero-copy in-process), the readiness
-//! poller, the event-driven service core, the server, and the checkpoint
-//! gate.
+//! poller, the event-driven service core, the server, the `/metrics`
+//! exposition, and the checkpoint gate.
 
 pub mod event;
 pub mod gate;
+pub(crate) mod metrics;
 pub mod poller;
 pub mod server;
 pub mod transport;

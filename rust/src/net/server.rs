@@ -91,6 +91,7 @@ pub struct ServerBuilder {
     service_model: ServiceModel,
     service_threads: Option<usize>,
     uds_path: Option<PathBuf>,
+    metrics_addr: Option<String>,
 }
 
 impl ServerBuilder {
@@ -112,7 +113,18 @@ impl ServerBuilder {
             },
             service_threads: None,
             uds_path: None,
+            metrics_addr: None,
         }
+    }
+
+    /// Additionally serve a plain-HTTP Prometheus `/metrics` endpoint on
+    /// `addr` (use port 0 for an ephemeral port; see
+    /// [`Server::metrics_addr`]). Under the event model each scrape socket
+    /// is just another readiness source on the worker pool; the threaded
+    /// model serves scrapes from short-lived threads.
+    pub fn metrics_addr(mut self, addr: impl Into<String>) -> Self {
+        self.metrics_addr = Some(addr.into());
+        self
     }
 
     /// Select how connections are serviced (default:
@@ -275,6 +287,11 @@ impl ServerBuilder {
             checkpoint_dir: self.checkpoint_dir,
             checkpoint_seq: AtomicU64::new(0),
             persister,
+            checkpoint_interval_ms: AtomicU64::new(
+                self.checkpoint_interval
+                    .map(|i| (i.as_millis() as u64).max(1))
+                    .unwrap_or(0),
+            ),
             shutdown: AtomicBool::new(false),
         });
 
@@ -336,9 +353,11 @@ impl ServerBuilder {
 
         // Periodic checkpointer (§3.7), if configured. It parks on a
         // condvar signalled by `stop()`, so shutdown latency is bounded by
-        // an in-flight checkpoint, never by the interval.
+        // an in-flight checkpoint, never by the interval — and it re-reads
+        // the interval each tick, so an admin re-tune takes effect at the
+        // next park.
         let stop_signal = Arc::new(StopSignal::default());
-        let checkpoint_thread = self.checkpoint_interval.map(|interval| {
+        let checkpoint_thread = self.checkpoint_interval.map(|_| {
             if inner.checkpoint_dir.is_none() {
                 panic!("checkpoint_interval requires checkpoint_dir");
             }
@@ -347,6 +366,9 @@ impl ServerBuilder {
             std::thread::Builder::new()
                 .name("reverb-ckpt".into())
                 .spawn(move || loop {
+                    let interval = Duration::from_millis(
+                        ckpt_inner.checkpoint_interval_ms.load(Ordering::SeqCst).max(1),
+                    );
                     if signal.wait_stop(interval) {
                         return;
                     }
@@ -357,11 +379,33 @@ impl ServerBuilder {
                 .expect("spawn checkpoint thread")
         });
 
+        // The `/metrics` exporter, if requested: a plain-HTTP listener
+        // whose scrape sockets are fed to the event core as readiness
+        // sources (or to short-lived threads under the threaded model).
+        let metrics_local = match &self.metrics_addr {
+            Some(addr) => {
+                let listener = std::net::TcpListener::bind(addr.as_str())?;
+                let local = listener.local_addr()?;
+                shutdowns.push(ListenerShutdown::Tcp(local));
+                let m_inner = inner.clone();
+                let m_event = event.as_ref().map(|c| c.shared());
+                accept_threads.push(
+                    std::thread::Builder::new()
+                        .name("reverb-metrics".into())
+                        .spawn(move || metrics_accept_loop(listener, m_inner, m_event))
+                        .expect("spawn metrics accept thread"),
+                );
+                Some(local)
+            }
+            None => None,
+        };
+
         Ok(Server {
             inner,
             local_addr,
             in_proc_addr,
             uds_addr,
+            metrics_local,
             shutdowns,
             accept_threads,
             checkpoint_thread,
@@ -428,6 +472,11 @@ pub(crate) struct ServerInner {
     /// Incremental persistence (DESIGN.md §10); `None` = legacy full
     /// snapshots.
     persister: Option<Arc<Persister>>,
+    /// Live periodic-checkpoint interval in milliseconds; 0 = periodic
+    /// checkpointing not configured (no checkpoint thread exists, so the
+    /// admin RPC rejects attempts to set it). The checkpoint thread
+    /// re-reads this every tick, so a re-tune never needs a restart.
+    pub(crate) checkpoint_interval_ms: AtomicU64,
     shutdown: AtomicBool,
 }
 
@@ -449,6 +498,7 @@ pub struct Server {
     local_addr: Option<SocketAddr>,
     in_proc_addr: String,
     uds_addr: Option<String>,
+    metrics_local: Option<SocketAddr>,
     shutdowns: Vec<ListenerShutdown>,
     accept_threads: Vec<std::thread::JoinHandle<()>>,
     checkpoint_thread: Option<std::thread::JoinHandle<()>>,
@@ -489,6 +539,12 @@ impl Server {
     /// requested via [`ServerBuilder::unix_socket`].
     pub fn uds_addr(&self) -> Option<String> {
         self.uds_addr.clone()
+    }
+
+    /// The bound `/metrics` HTTP address, if an exporter was requested via
+    /// [`ServerBuilder::metrics_addr`].
+    pub fn metrics_addr(&self) -> Option<SocketAddr> {
+        self.metrics_local
     }
 
     /// Live connections currently tracked by the event-driven core
@@ -592,6 +648,84 @@ impl ServerInner {
             .ok_or_else(|| Error::TableNotFound(name.into()))
     }
 
+    /// Bytes sealed into the persist journal but not yet spilled to disk
+    /// (0 without incremental persistence) — the `/metrics` lag gauge.
+    pub(crate) fn journal_lag_bytes(&self) -> u64 {
+        self.persister
+            .as_ref()
+            .map(|p| p.journal_lag_bytes())
+            .unwrap_or(0)
+    }
+
+    /// Apply one admin reconfiguration (shared by both service models).
+    /// Every request is validated in full before anything is applied, so a
+    /// rejected reconfig leaves the server exactly as it was. Corridor
+    /// bounds must be re-tuned as a pair (the limiter validates their
+    /// width); `table` is ignored — and may be empty — for interval-only
+    /// requests. Returns the audit line, which is both logged and sent
+    /// back as the Ack detail.
+    pub(crate) fn apply_admin(
+        &self,
+        table: &str,
+        max_size: Option<u64>,
+        min_diff: Option<f64>,
+        max_diff: Option<f64>,
+        checkpoint_interval_ms: Option<u64>,
+    ) -> Result<String> {
+        if max_size.is_none()
+            && min_diff.is_none()
+            && max_diff.is_none()
+            && checkpoint_interval_ms.is_none()
+        {
+            return Err(Error::InvalidArgument(
+                "empty reconfig: nothing to apply".into(),
+            ));
+        }
+        if min_diff.is_some() != max_diff.is_some() {
+            return Err(Error::InvalidArgument(
+                "corridor re-tune requires both min_diff and max_diff".into(),
+            ));
+        }
+        if let Some(ms) = checkpoint_interval_ms {
+            if ms == 0 {
+                return Err(Error::InvalidArgument(
+                    "checkpoint interval must be positive".into(),
+                ));
+            }
+            if self.checkpoint_interval_ms.load(Ordering::SeqCst) == 0 {
+                return Err(Error::InvalidArgument(
+                    "periodic checkpointing is not configured on this server".into(),
+                ));
+            }
+        }
+        if max_size == Some(0) {
+            return Err(Error::InvalidArgument("max_size must be positive".into()));
+        }
+        let mut audit = Vec::new();
+        if max_size.is_some() || min_diff.is_some() {
+            let t = self.table(table)?;
+            // The corridor is the last fallible apply (the limiter rejects
+            // NaN and too-narrow spans); max_size cannot fail past the
+            // zero pre-check above, so failure still leaves nothing
+            // applied.
+            if let (Some(lo), Some(hi)) = (min_diff, max_diff) {
+                t.set_rate_limiter_corridor(lo, hi)?;
+                audit.push(format!("corridor=[{lo}, {hi}]"));
+            }
+            if let Some(n) = max_size {
+                t.set_max_size(n as usize)?;
+                audit.push(format!("max_size={n}"));
+            }
+        }
+        if let Some(ms) = checkpoint_interval_ms {
+            self.checkpoint_interval_ms.store(ms, Ordering::SeqCst);
+            audit.push(format!("checkpoint_interval_ms={ms}"));
+        }
+        let detail = format!("reconfigured table={table:?} {}", audit.join(" "));
+        log::info!("admin: {detail}");
+        Ok(detail)
+    }
+
     pub(crate) fn checkpoint(&self) -> Result<PathBuf> {
         if let Some(persister) = &self.persister {
             // Incremental (§3.7 revisited, DESIGN.md §10): the pause only
@@ -690,6 +824,76 @@ fn accept_loop(
             }
         }
     }
+}
+
+/// Accept loop of the `/metrics` listener. Under the event model each
+/// accepted scrape socket becomes another readiness source on the worker
+/// pool; under the threaded model (or when fd polling is unavailable) a
+/// short-lived thread serves the scrape — scrapes are rare and bounded, so
+/// the thread cost is negligible there.
+fn metrics_accept_loop(
+    listener: std::net::TcpListener,
+    inner: Arc<ServerInner>,
+    event: Option<Arc<EventShared>>,
+) {
+    loop {
+        match listener.accept() {
+            Ok((sock, _peer)) => {
+                if inner.shutdown.load(Ordering::SeqCst) {
+                    return;
+                }
+                let fallback = match &event {
+                    Some(shared) => shared.add_http_conn(sock).err(),
+                    None => Some(sock),
+                };
+                if let Some(sock) = fallback {
+                    let scrape_inner = inner.clone();
+                    let scrape_event = event.clone();
+                    let _ = std::thread::Builder::new()
+                        .name("reverb-scrape".into())
+                        .spawn(move || {
+                            let _ = serve_metrics_scrape(
+                                sock,
+                                &scrape_inner,
+                                scrape_event.as_deref(),
+                            );
+                        });
+                }
+            }
+            Err(_) => {
+                if inner.shutdown.load(Ordering::SeqCst) {
+                    return;
+                }
+            }
+        }
+    }
+}
+
+/// One blocking `/metrics` scrape (threaded fallback): read the request
+/// head, reply with the Prometheus exposition (or 404), close. Replies are
+/// `Connection: close`, so there is no keep-alive state to manage.
+fn serve_metrics_scrape(
+    mut sock: TcpStream,
+    inner: &ServerInner,
+    event: Option<&EventShared>,
+) -> std::io::Result<()> {
+    use std::io::{Read, Write};
+    sock.set_read_timeout(Some(Duration::from_secs(5)))?;
+    let mut head = Vec::new();
+    let mut buf = [0u8; 1024];
+    while !crate::net::metrics::head_complete(&head) {
+        if head.len() > crate::net::metrics::MAX_HTTP_HEAD {
+            return Ok(()); // oversized request: drop the connection
+        }
+        let n = sock.read(&mut buf)?;
+        if n == 0 {
+            break;
+        }
+        head.extend_from_slice(&buf[..n]);
+    }
+    let response = crate::net::metrics::http_response(&head, inner, event);
+    sock.write_all(&response)?;
+    sock.flush()
 }
 
 /// Build a table `Item` from its wire form, resolving chunk references from
@@ -794,21 +998,72 @@ pub(crate) fn sample_reply(id: u64, samples: &[SampledItem]) -> Message {
     Message::SampleData { id, infos, chunks }
 }
 
+/// How often a threaded-model connection with live watch subscriptions
+/// checks its dirty bit between frames (the event model needs no tick: its
+/// watcher hooks schedule the connection directly).
+const WATCH_TICK: Duration = Duration::from_millis(2);
+
+/// Push one coalesced [`Message::WatchUpdate`] per subscription on this
+/// connection if any watcher hook fired since the last push. Latest-wins
+/// backpressure: however many mutations landed in the window, the
+/// subscriber sees a single current snapshot per subscription (DESIGN.md
+/// §12). Shared dirty bit per connection, so one firing refreshes every
+/// subscription — subscribers key on the watch id.
+fn flush_watch_updates(
+    stream: &mut dyn MsgStream,
+    dirty: &AtomicBool,
+    watches: &[(u64, Arc<Table>, Arc<AtomicBool>)],
+) -> Result<()> {
+    if watches.is_empty() || !dirty.swap(false, Ordering::SeqCst) {
+        return Ok(());
+    }
+    for (id, table, _alive) in watches {
+        stream.send(Message::WatchUpdate {
+            id: *id,
+            table: table.name().to_string(),
+            info: table.info(),
+        })?;
+    }
+    stream.flush()
+}
+
 fn serve_connection(mut stream: Box<dyn MsgStream>, inner: Arc<ServerInner>) -> Result<()> {
     // Chunks streamed on this connection, awaiting item creation. On the
     // in-process transport these are the writer's own allocations — the
     // whole insert path is copy-free from client append to table item.
     let mut pending: HashMap<u64, Arc<Chunk>> = HashMap::new();
     let mut pending_order: std::collections::VecDeque<u64> = std::collections::VecDeque::new();
+    // Watch subscriptions on this connection: (watch id, table, alive
+    // flag). Watcher hooks flip the shared dirty bit; once the first
+    // subscription lands, the loop switches to non-blocking reads with a
+    // short tick so updates are pushed even with no request in flight.
+    // Hooks hold only weak references, so a departed connection's hooks
+    // unsubscribe themselves on their next firing.
+    let mut watches: Vec<(u64, Arc<Table>, Arc<AtomicBool>)> = Vec::new();
+    let dirty = Arc::new(AtomicBool::new(false));
+    let mut nonblocking = false;
 
     loop {
         if inner.shutdown.load(Ordering::SeqCst) {
             return Ok(());
         }
-        let msg = match stream.recv() {
-            Ok(m) => m,
-            Err(Error::Io(_)) => return Ok(()), // client hung up
-            Err(e) => return Err(e),
+        let msg = if nonblocking {
+            match stream.try_recv() {
+                Ok(Some(m)) => m,
+                Ok(None) => {
+                    flush_watch_updates(stream.as_mut(), &dirty, &watches)?;
+                    std::thread::sleep(WATCH_TICK);
+                    continue;
+                }
+                Err(Error::Io(_)) => return Ok(()), // client hung up
+                Err(e) => return Err(e),
+            }
+        } else {
+            match stream.recv() {
+                Ok(m) => m,
+                Err(Error::Io(_)) => return Ok(()), // client hung up
+                Err(e) => return Err(e),
+            }
         };
         match msg {
             Message::InsertChunks { chunks } => {
@@ -888,15 +1143,88 @@ fn serve_connection(mut stream: Box<dyn MsgStream>, inner: Arc<ServerInner>) -> 
                     .map(|p| p.display().to_string());
                 send_reply(stream.as_mut(), id, reply)?;
             }
+            Message::AdminReconfig {
+                id,
+                table,
+                max_size,
+                min_diff,
+                max_diff,
+                checkpoint_interval_ms,
+            } => {
+                let reply = inner.apply_admin(
+                    &table,
+                    max_size,
+                    min_diff,
+                    max_diff,
+                    checkpoint_interval_ms,
+                );
+                send_reply(stream.as_mut(), id, reply)?;
+            }
+            Message::WatchRequest { id, table } => match inner.table(&table) {
+                Ok(t) => {
+                    let t = t.clone();
+                    let alive = Arc::new(AtomicBool::new(true));
+                    let hook_dirty = Arc::downgrade(&dirty);
+                    let hook_alive = Arc::downgrade(&alive);
+                    t.register_watcher(Box::new(move || {
+                        let (Some(d), Some(a)) = (hook_dirty.upgrade(), hook_alive.upgrade())
+                        else {
+                            return false; // connection gone: unsubscribe
+                        };
+                        if !a.load(Ordering::SeqCst) {
+                            return false; // cancelled: unsubscribe
+                        }
+                        d.store(true, Ordering::SeqCst);
+                        true
+                    }));
+                    watches.push((id, t.clone(), alive));
+                    if !nonblocking {
+                        stream.set_nonblocking(true)?;
+                        nonblocking = true;
+                    }
+                    // Immediate snapshot: the subscriber has a baseline
+                    // before the first delta.
+                    stream.send(Message::WatchUpdate {
+                        id,
+                        table,
+                        info: t.info(),
+                    })?;
+                    stream.flush()?;
+                }
+                Err(e) => send_err(stream.as_mut(), id, &e)?,
+            },
+            Message::WatchCancel { id } => {
+                let before = watches.len();
+                watches.retain(|(wid, _, alive)| {
+                    if *wid == id {
+                        alive.store(false, Ordering::SeqCst);
+                        false
+                    } else {
+                        true
+                    }
+                });
+                // Idempotent: cancelling an unknown id acks with n=0.
+                send_reply(
+                    stream.as_mut(),
+                    id,
+                    Ok(format!("cancelled={}", before - watches.len())),
+                )?;
+            }
             // Server-to-client messages arriving at the server are protocol
             // violations.
             Message::Ack { .. }
             | Message::Err { .. }
             | Message::SampleData { .. }
-            | Message::Info { .. } => {
+            | Message::Info { .. }
+            | Message::WatchUpdate { .. } => {
                 return Err(Error::Decode("client sent a server-side message".into()));
             }
         }
+        // A mutation handled above may have dirtied this connection's own
+        // subscriptions: push before reading the next frame so the
+        // reply/update order per request is deterministic (and matches the
+        // event model's per-service-pass emission).
+        flush_watch_updates(stream.as_mut(), &dirty, &watches)?;
     }
 }
 
@@ -1505,6 +1833,9 @@ mod tests {
                         .map(|(n, i)| (n.clone(), i.size))
                         .collect::<Vec<_>>()
                 ),
+                Message::WatchUpdate { id, table, info } => {
+                    format!("watch {id} {table} size={}", info.size)
+                }
                 other => format!("unexpected {other:?}"),
             }
         }
@@ -1578,6 +1909,55 @@ mod tests {
         for _ in 0..4 {
             log.push(describe(conn.recv().unwrap()));
         }
+        // --- Observability/control plane, same determinism bar. Watch
+        // pushes are coalesced per service pass (latest-wins), so the
+        // script sends ONE mutation at a time and drains its frames
+        // before the next — pipelined mutations would legitimately
+        // coalesce differently across the two models.
+        conn.send(Message::AdminReconfig {
+            id: 9,
+            table: "q".into(),
+            max_size: Some(3),
+            min_diff: None,
+            max_diff: None,
+            checkpoint_interval_ms: None,
+        })
+        .unwrap();
+        // Half a corridor: rejected, nothing applied.
+        conn.send(Message::AdminReconfig {
+            id: 10,
+            table: "q".into(),
+            max_size: None,
+            min_diff: Some(0.0),
+            max_diff: None,
+            checkpoint_interval_ms: None,
+        })
+        .unwrap();
+        conn.send(Message::WatchRequest { id: 11, table: "q".into() }).unwrap();
+        conn.flush().unwrap();
+        for _ in 0..3 {
+            log.push(describe(conn.recv().unwrap()));
+        }
+        // One insert: its ack, then the coalesced watch push.
+        conn.send(Message::InsertChunks { chunks: vec![mk_chunk(204, 4.0)] })
+            .unwrap();
+        conn.send(Message::CreateItem { id: 12, item: item(4), timeout_ms: 2_000 })
+            .unwrap();
+        conn.flush().unwrap();
+        log.push(describe(conn.recv().unwrap()));
+        log.push(describe(conn.recv().unwrap()));
+        // Cancel the subscription: later mutations push nothing.
+        conn.send(Message::WatchCancel { id: 11 }).unwrap();
+        conn.flush().unwrap();
+        log.push(describe(conn.recv().unwrap()));
+        conn.send(Message::InsertChunks { chunks: vec![mk_chunk(205, 5.0)] })
+            .unwrap();
+        conn.send(Message::CreateItem { id: 13, item: item(5), timeout_ms: 2_000 })
+            .unwrap();
+        conn.send(Message::InfoRequest { id: 14 }).unwrap();
+        conn.flush().unwrap();
+        log.push(describe(conn.recv().unwrap()));
+        log.push(describe(conn.recv().unwrap()));
         log
     }
 
@@ -1592,6 +1972,14 @@ mod tests {
             "err 6 code=1".to_string(),
             "ack 7".to_string(),
             "info 8 [(\"q\", 0)]".to_string(),
+            "ack 9".to_string(),
+            "err 10 code=4".to_string(),
+            "watch 11 q size=0".to_string(),
+            "ack 12".to_string(),
+            "watch 11 q size=1".to_string(),
+            "ack 11".to_string(),
+            "ack 13".to_string(),
+            "info 14 [(\"q\", 2)]".to_string(),
         ];
         // Both models × both transport paths (TCP exercises partial
         // frames and the writev queue; in-proc the occupancy wakers).

@@ -92,6 +92,29 @@ pub enum Message {
     InfoRequest { id: u64 },
     /// Trigger a checkpoint (§3.7). Ack'd with the checkpoint path echoed.
     Checkpoint { id: u64 },
+    /// Admin control plane (DESIGN.md §12): re-tune a live table/server.
+    /// Each field is independently optional; `min_diff`/`max_diff` must be
+    /// given together (the corridor is validated as a pair). Ack'd with an
+    /// audit summary of what changed, or `Err` if validation rejects the
+    /// request — in which case *none* of it was applied.
+    AdminReconfig {
+        id: u64,
+        table: String,
+        max_size: Option<u64>,
+        min_diff: Option<f64>,
+        max_diff: Option<f64>,
+        /// Server-wide periodic-checkpoint interval; `table` is ignored
+        /// for this field.
+        checkpoint_interval_ms: Option<u64>,
+    },
+    /// Subscribe to `TableInfo` deltas for one table (DESIGN.md §12). The
+    /// server replies immediately with a `WatchUpdate` snapshot, then
+    /// pushes a coalesced `WatchUpdate` after each mutation batch. `id`
+    /// names the subscription: every update echoes it, and `WatchCancel`
+    /// with the same id tears the subscription down.
+    WatchRequest { id: u64, table: String },
+    /// Cancel the watch subscription `id`. Ack'd.
+    WatchCancel { id: u64 },
 
     // ---- server → client ----
     /// Positive acknowledgement of the request with matching `id`.
@@ -106,6 +129,15 @@ pub enum Message {
     },
     /// Server info response.
     Info { id: u64, tables: Vec<(String, TableInfo)> },
+    /// One pushed delta on watch subscription `id` (also the immediate
+    /// snapshot reply to `WatchRequest`). Updates are coalesced: a burst
+    /// of mutations between two service rounds yields one frame carrying
+    /// the latest state — latest-wins is the backpressure policy.
+    WatchUpdate {
+        id: u64,
+        table: String,
+        info: TableInfo,
+    },
 }
 
 /// Error codes carried by [`Message::Err`].
@@ -150,12 +182,77 @@ const TAG_INFO_REQUEST: u8 = 6;
 const TAG_CHECKPOINT: u8 = 7;
 /// v2 of `CreateItem`: the item carries per-column trajectory slices.
 const TAG_CREATE_ITEM_V2: u8 = 8;
+const TAG_ADMIN_RECONFIG: u8 = 9;
+const TAG_WATCH_REQUEST: u8 = 10;
+const TAG_WATCH_CANCEL: u8 = 11;
 const TAG_ACK: u8 = 128;
 const TAG_ERR: u8 = 129;
 const TAG_SAMPLE_DATA: u8 = 130;
 const TAG_INFO: u8 = 131;
 /// v2 of `SampleData`: at least one item carries trajectory slices.
 const TAG_SAMPLE_DATA_V2: u8 = 132;
+const TAG_WATCH_UPDATE: u8 = 133;
+
+/// Optional-field layout shared by the admin frames: `[u8 present][value]`.
+fn put_opt_u64<W: Write>(w: &mut W, v: Option<u64>) -> Result<()> {
+    match v {
+        Some(x) => {
+            put_u8(w, 1)?;
+            put_u64(w, x)
+        }
+        None => put_u8(w, 0),
+    }
+}
+
+fn get_opt_u64<R: Read>(r: &mut R) -> Result<Option<u64>> {
+    match get_u8(r)? {
+        0 => Ok(None),
+        1 => Ok(Some(get_u64(r)?)),
+        f => Err(Error::Decode(format!("bad option flag {f}"))),
+    }
+}
+
+fn put_opt_f64<W: Write>(w: &mut W, v: Option<f64>) -> Result<()> {
+    match v {
+        Some(x) => {
+            put_u8(w, 1)?;
+            put_f64(w, x)
+        }
+        None => put_u8(w, 0),
+    }
+}
+
+fn get_opt_f64<R: Read>(r: &mut R) -> Result<Option<f64>> {
+    match get_u8(r)? {
+        0 => Ok(None),
+        1 => Ok(Some(get_f64(r)?)),
+        f => Err(Error::Decode(format!("bad option flag {f}"))),
+    }
+}
+
+/// `TableInfo` layout shared by the `Info` and `WatchUpdate` frames.
+fn put_table_info<W: Write>(w: &mut W, info: &TableInfo) -> Result<()> {
+    put_u64(w, info.size as u64)?;
+    put_u64(w, info.max_size as u64)?;
+    put_u64(w, info.inserts)?;
+    put_u64(w, info.samples)?;
+    put_u64(w, info.rate_limited_inserts)?;
+    put_u64(w, info.rate_limited_samples)?;
+    put_f64(w, info.diff)?;
+    Ok(())
+}
+
+fn get_table_info<R: Read>(r: &mut R) -> Result<TableInfo> {
+    Ok(TableInfo {
+        size: get_u64(r)? as usize,
+        max_size: get_u64(r)? as usize,
+        inserts: get_u64(r)?,
+        samples: get_u64(r)?,
+        rate_limited_inserts: get_u64(r)?,
+        rate_limited_samples: get_u64(r)?,
+        diff: get_f64(r)?,
+    })
+}
 
 /// v1 item layout (no columns). Callers route items with columns to
 /// [`put_wire_item_v2`]; encoding them here would silently drop the
@@ -284,6 +381,31 @@ impl Message {
                 put_u64(&mut b, *id)?;
                 TAG_CHECKPOINT
             }
+            Message::AdminReconfig {
+                id,
+                table,
+                max_size,
+                min_diff,
+                max_diff,
+                checkpoint_interval_ms,
+            } => {
+                put_u64(&mut b, *id)?;
+                put_string(&mut b, table)?;
+                put_opt_u64(&mut b, *max_size)?;
+                put_opt_f64(&mut b, *min_diff)?;
+                put_opt_f64(&mut b, *max_diff)?;
+                put_opt_u64(&mut b, *checkpoint_interval_ms)?;
+                TAG_ADMIN_RECONFIG
+            }
+            Message::WatchRequest { id, table } => {
+                put_u64(&mut b, *id)?;
+                put_string(&mut b, table)?;
+                TAG_WATCH_REQUEST
+            }
+            Message::WatchCancel { id } => {
+                put_u64(&mut b, *id)?;
+                TAG_WATCH_CANCEL
+            }
             Message::Ack { id, detail } => {
                 put_u64(&mut b, *id)?;
                 put_string(&mut b, detail)?;
@@ -325,15 +447,15 @@ impl Message {
                 put_u32(&mut b, tables.len() as u32)?;
                 for (name, info) in tables {
                     put_string(&mut b, name)?;
-                    put_u64(&mut b, info.size as u64)?;
-                    put_u64(&mut b, info.max_size as u64)?;
-                    put_u64(&mut b, info.inserts)?;
-                    put_u64(&mut b, info.samples)?;
-                    put_u64(&mut b, info.rate_limited_inserts)?;
-                    put_u64(&mut b, info.rate_limited_samples)?;
-                    put_f64(&mut b, info.diff)?;
+                    put_table_info(&mut b, info)?;
                 }
                 TAG_INFO
+            }
+            Message::WatchUpdate { id, table, info } => {
+                put_u64(&mut b, *id)?;
+                put_string(&mut b, table)?;
+                put_table_info(&mut b, info)?;
+                TAG_WATCH_UPDATE
             }
         };
         Ok((tag, b))
@@ -397,6 +519,19 @@ impl Message {
             },
             TAG_INFO_REQUEST => Message::InfoRequest { id: get_u64(&mut r)? },
             TAG_CHECKPOINT => Message::Checkpoint { id: get_u64(&mut r)? },
+            TAG_ADMIN_RECONFIG => Message::AdminReconfig {
+                id: get_u64(&mut r)?,
+                table: get_string(&mut r)?,
+                max_size: get_opt_u64(&mut r)?,
+                min_diff: get_opt_f64(&mut r)?,
+                max_diff: get_opt_f64(&mut r)?,
+                checkpoint_interval_ms: get_opt_u64(&mut r)?,
+            },
+            TAG_WATCH_REQUEST => Message::WatchRequest {
+                id: get_u64(&mut r)?,
+                table: get_string(&mut r)?,
+            },
+            TAG_WATCH_CANCEL => Message::WatchCancel { id: get_u64(&mut r)? },
             TAG_ACK => Message::Ack {
                 id: get_u64(&mut r)?,
                 detail: get_string(&mut r)?,
@@ -442,24 +577,15 @@ impl Message {
                     return Err(Error::Decode("too many tables".into()));
                 }
                 let tables = (0..n)
-                    .map(|_| {
-                        let name = get_string(&mut r)?;
-                        Ok((
-                            name,
-                            TableInfo {
-                                size: get_u64(&mut r)? as usize,
-                                max_size: get_u64(&mut r)? as usize,
-                                inserts: get_u64(&mut r)?,
-                                samples: get_u64(&mut r)?,
-                                rate_limited_inserts: get_u64(&mut r)?,
-                                rate_limited_samples: get_u64(&mut r)?,
-                                diff: get_f64(&mut r)?,
-                            },
-                        ))
-                    })
+                    .map(|_| Ok((get_string(&mut r)?, get_table_info(&mut r)?)))
                     .collect::<Result<_>>()?;
                 Message::Info { id, tables }
             }
+            TAG_WATCH_UPDATE => Message::WatchUpdate {
+                id: get_u64(&mut r)?,
+                table: get_string(&mut r)?,
+                info: get_table_info(&mut r)?,
+            },
             t => return Err(Error::Decode(format!("unknown message tag {t}"))),
         };
         Ok(msg)
@@ -829,6 +955,101 @@ mod tests {
             }
             other => panic!("wrong message {other:?}"),
         }
+    }
+
+    #[test]
+    fn admin_reconfig_roundtrip() {
+        // All fields present.
+        let full = Message::AdminReconfig {
+            id: 11,
+            table: "t".into(),
+            max_size: Some(4096),
+            min_diff: Some(-8.0),
+            max_diff: Some(8.0),
+            checkpoint_interval_ms: Some(30_000),
+        };
+        match roundtrip(&full) {
+            Message::AdminReconfig {
+                id,
+                table,
+                max_size,
+                min_diff,
+                max_diff,
+                checkpoint_interval_ms,
+            } => {
+                assert_eq!(id, 11);
+                assert_eq!(table, "t");
+                assert_eq!(max_size, Some(4096));
+                assert_eq!(min_diff, Some(-8.0));
+                assert_eq!(max_diff, Some(8.0));
+                assert_eq!(checkpoint_interval_ms, Some(30_000));
+            }
+            other => panic!("wrong message {other:?}"),
+        }
+        // Sparse: only one knob set, the rest None.
+        let sparse = Message::AdminReconfig {
+            id: 12,
+            table: "t".into(),
+            max_size: Some(10),
+            min_diff: None,
+            max_diff: None,
+            checkpoint_interval_ms: None,
+        };
+        assert!(matches!(
+            roundtrip(&sparse),
+            Message::AdminReconfig {
+                max_size: Some(10),
+                min_diff: None,
+                max_diff: None,
+                checkpoint_interval_ms: None,
+                ..
+            }
+        ));
+    }
+
+    #[test]
+    fn watch_frames_roundtrip() {
+        assert!(matches!(
+            roundtrip(&Message::WatchRequest { id: 5, table: "w".into() }),
+            Message::WatchRequest { id: 5, table } if table == "w"
+        ));
+        assert!(matches!(
+            roundtrip(&Message::WatchCancel { id: 5 }),
+            Message::WatchCancel { id: 5 }
+        ));
+        let upd = Message::WatchUpdate {
+            id: 5,
+            table: "w".into(),
+            info: TableInfo {
+                size: 3,
+                max_size: 10,
+                inserts: 7,
+                samples: 2,
+                rate_limited_inserts: 0,
+                rate_limited_samples: 1,
+                diff: 1.5,
+            },
+        };
+        match roundtrip(&upd) {
+            Message::WatchUpdate { id, table, info } => {
+                assert_eq!(id, 5);
+                assert_eq!(table, "w");
+                assert_eq!(info.size, 3);
+                assert_eq!(info.inserts, 7);
+                assert_eq!(info.diff, 1.5);
+            }
+            other => panic!("wrong message {other:?}"),
+        }
+    }
+
+    #[test]
+    fn bad_option_flag_rejected() {
+        // AdminReconfig body with a corrupt presence flag (2) must error.
+        let mut body = Vec::new();
+        put_u64(&mut body, 1).unwrap();
+        put_string(&mut body, "t").unwrap();
+        put_u8(&mut body, 2).unwrap();
+        assert!(Message::decode_body(TAG_ADMIN_RECONFIG, &body).is_err());
     }
 
     #[test]

@@ -30,6 +30,7 @@ use crate::core::item::{Item, TrajectoryColumn};
 use crate::core::table::MutationSink;
 use crate::error::Result;
 use std::collections::HashSet;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::Sender;
 use std::sync::{Arc, Mutex};
 
@@ -105,6 +106,10 @@ pub struct SealedSegment {
     pub index: u64,
     pub first_seq: u64,
     pub last_seq: u64,
+    /// Approximate in-memory size of the sealed run; the journal's lag
+    /// counter is charged by this amount at seal time and credited back
+    /// once the writer has spilled the segment.
+    pub approx_bytes: u64,
     /// Chunks whose first durable appearance is this segment, in reference
     /// order (each precedes every record that needs it on replay).
     pub new_chunks: Vec<Arc<Chunk>>,
@@ -142,6 +147,10 @@ struct Inner {
 pub struct Journal {
     inner: Mutex<Inner>,
     segment_bytes: usize,
+    /// Approximate bytes sealed to the background writer but not yet
+    /// spilled to disk — the persist pipeline's lag, exported on
+    /// `/metrics` as `reverb_persist_journal_lag_bytes`.
+    lag_bytes: AtomicU64,
 }
 
 impl Journal {
@@ -166,7 +175,20 @@ impl Journal {
                 tx,
             }),
             segment_bytes: segment_bytes.max(256),
+            lag_bytes: AtomicU64::new(0),
         }
+    }
+
+    /// Approximate bytes sealed but not yet durable on disk (sealed
+    /// segments still queued to — or in flight on — the writer thread).
+    pub fn lag_bytes(&self) -> u64 {
+        self.lag_bytes.load(Ordering::Relaxed)
+    }
+
+    /// Credit back a spilled (or dropped) segment's bytes; called by the
+    /// background writer once a [`SealedSegment`] has left its queue.
+    pub(crate) fn spilled(&self, bytes: u64) {
+        self.lag_bytes.fetch_sub(bytes, Ordering::Relaxed);
     }
 
     /// Append one record. Called from table mutation paths (under the
@@ -233,15 +255,24 @@ impl Journal {
         let last_seq = active.records.last().map(|(s, _)| *s).unwrap_or(g.seq);
         g.sealed_chunk_keys
             .push((index, active.new_chunks.iter().map(|c| c.key).collect()));
+        let approx_bytes = active.approx_bytes as u64;
+        self.lag_bytes.fetch_add(approx_bytes, Ordering::Relaxed);
         // Writer gone (shutdown race): drop the segment silently; the
         // server is tearing down and the final commit already happened.
-        let _ = g.tx.send(super::writer::Cmd::Segment(SealedSegment {
-            index,
-            first_seq,
-            last_seq,
-            new_chunks: active.new_chunks,
-            records: active.records,
-        }));
+        if g
+            .tx
+            .send(super::writer::Cmd::Segment(SealedSegment {
+                index,
+                first_seq,
+                last_seq,
+                approx_bytes,
+                new_chunks: active.new_chunks,
+                records: active.records,
+            }))
+            .is_err()
+        {
+            self.lag_bytes.fetch_sub(approx_bytes, Ordering::Relaxed);
+        }
     }
 
     /// Called by the background writer after folding segments up to (and

@@ -325,6 +325,7 @@ mod tests {
             index: 3,
             first_seq: 10,
             last_seq: 12,
+            approx_bytes: 0,
             new_chunks: vec![chunk],
             records: vec![
                 (

@@ -251,6 +251,12 @@ impl Persister {
         &self.journal
     }
 
+    /// Approximate bytes sealed into the journal but not yet spilled to
+    /// disk by the background writer (the `/metrics` persist-lag gauge).
+    pub fn journal_lag_bytes(&self) -> u64 {
+        self.journal.lag_bytes()
+    }
+
     /// Wait until the background writer has spilled everything sealed so
     /// far, without committing a manifest (tests/diagnostics — lets a
     /// crash test observe fully written yet unlisted tail segments).
@@ -314,11 +320,15 @@ fn run(mut st: WriterState, rx: Receiver<Cmd>) {
         match cmd {
             Cmd::Segment(seg) => {
                 let index = seg.index;
+                let bytes = seg.approx_bytes;
                 if let Err(e) = st.handle_segment(seg) {
                     log::error!("persist: segment spill failed: {e}");
                     st.poisoned
                         .get_or_insert_with(|| format!("segment {index} spill failed: {e}"));
                 }
+                // Spilled or dropped, the segment has left the queue:
+                // credit the lag gauge either way.
+                st.journal.spilled(bytes);
             }
             Cmd::Commit {
                 watermark,

@@ -91,7 +91,9 @@ impl Samples {
 
     fn ensure_sorted(&mut self) {
         if !self.sorted {
-            self.xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            // total_cmp: NaN samples sort last instead of panicking the
+            // bench/metrics thread mid-run.
+            self.xs.sort_by(|a, b| a.total_cmp(b));
             self.sorted = true;
         }
     }
@@ -196,6 +198,26 @@ pub fn fmt_qps(qps: f64) -> String {
     fmt_si(qps, "/s")
 }
 
+/// Render an `f64` as a JSON value token. JSON has no `NaN`/`Infinity`
+/// tokens, so undefined stats (e.g. percentiles of an empty sample set)
+/// serialize as `null` instead of corrupting `BENCH_*.json`.
+pub fn json_f64(x: f64) -> String {
+    if x.is_finite() {
+        format!("{x}")
+    } else {
+        "null".to_string()
+    }
+}
+
+/// [`json_f64`] with fixed decimal precision for finite values.
+pub fn json_f64_prec(x: f64, decimals: usize) -> String {
+    if x.is_finite() {
+        format!("{x:.decimals$}")
+    } else {
+        "null".to_string()
+    }
+}
+
 fn fmt_si(x: f64, unit: &str) -> String {
     let (div, suffix) = if x >= 1e9 {
         (1e9, "G")
@@ -266,6 +288,43 @@ mod tests {
         assert_eq!(m.events(), 15);
         assert_eq!(m.bytes(), 1500);
         assert!(m.qps() > 0.0);
+    }
+
+    #[test]
+    fn nan_samples_do_not_panic() {
+        // Regression: partial_cmp().unwrap() panicked on the first NaN.
+        let mut s = Samples::new();
+        s.add(3.0);
+        s.add(f64::NAN);
+        s.add(1.0);
+        s.add(f64::NAN);
+        s.add(2.0);
+        // total_cmp sorts NaNs last, so low percentiles stay meaningful.
+        assert_eq!(s.percentile(0.0), 1.0);
+        assert_eq!(s.median(), 2.0);
+        assert!(s.max().is_nan());
+    }
+
+    #[test]
+    fn empty_samples_yield_nan_not_panic() {
+        let mut s = Samples::new();
+        assert!(s.percentile(50.0).is_nan());
+        assert!(s.mean().is_nan());
+    }
+
+    #[test]
+    fn json_f64_maps_non_finite_to_null() {
+        assert_eq!(json_f64(1.5), "1.5");
+        assert_eq!(json_f64(0.0), "0");
+        assert_eq!(json_f64(f64::NAN), "null");
+        assert_eq!(json_f64(f64::INFINITY), "null");
+        assert_eq!(json_f64(f64::NEG_INFINITY), "null");
+        assert_eq!(json_f64_prec(1.23456, 2), "1.23");
+        assert_eq!(json_f64_prec(f64::NAN, 2), "null");
+        // The empty-Samples path composes into a valid JSON token.
+        let mut s = Samples::new();
+        assert_eq!(json_f64(s.percentile(99.0)), "null");
+        assert_eq!(json_f64(s.mean()), "null");
     }
 
     #[test]

@@ -13,7 +13,8 @@ use common::{build_one, endpoints, step, write_items};
 use reverb::core::table::TableConfig;
 use reverb::net::server::{Server, ServerBuilder};
 use reverb::{
-    Client, Error, SamplerOptions, Tensor, Trajectory, TrajectoryWriterOptions, WriterOptions,
+    AdminRequest, Client, Error, SamplerOptions, Tensor, Trajectory, TrajectoryWriterOptions,
+    WriterOptions,
 };
 use std::time::Duration;
 
@@ -441,4 +442,197 @@ fn dial_failures_are_clean_on_all_schemes() {
     assert!(Client::connect("tcp://127.0.0.1:1").is_err());
     #[cfg(unix)]
     assert!(Client::connect("reverb+unix:///tmp/reverb-no-such.sock").is_err());
+}
+
+#[test]
+fn admin_reconfig_retunes_live_server() {
+    for_each_transport(
+        || Server::builder().table(TableConfig::uniform_replay("t", 2)),
+        |server, addr, label| {
+            let client = Client::connect(addr).unwrap();
+            // A writer opened BEFORE the re-tune: admin changes must never
+            // drop live connections.
+            let mut w = client.writer(WriterOptions::default()).unwrap();
+            w.append(step(0.0)).unwrap();
+            w.create_item("t", 1, 1.0).unwrap();
+            w.flush().unwrap();
+
+            let detail = client
+                .admin_reconfig(AdminRequest::table("t").max_size(5))
+                .unwrap();
+            assert!(detail.contains("max_size=5"), "{label}: {detail}");
+            // The same connection keeps working, and the new capacity is
+            // live: 5 items fit where 2 did before.
+            for i in 1..5 {
+                w.append(step(i as f32)).unwrap();
+                w.create_item("t", 1, 1.0).unwrap();
+            }
+            w.flush().unwrap();
+            assert_eq!(server.table("t").unwrap().size(), 5, "{label}");
+
+            // Shrinking evicts down to the new cap immediately.
+            client
+                .admin_reconfig(AdminRequest::table("t").max_size(3))
+                .unwrap();
+            assert_eq!(server.table("t").unwrap().size(), 3, "{label}");
+
+            // Corridor re-tunes travel as a pair; the limiter rejects
+            // spans narrower than max(SPI, 1).
+            let detail = client
+                .admin_reconfig(AdminRequest::table("t").corridor(-1e9, 1e9))
+                .unwrap();
+            assert!(detail.contains("corridor"), "{label}: {detail}");
+            let err = client
+                .admin_reconfig(AdminRequest::table("t").corridor(5.0, 5.5))
+                .unwrap_err();
+            assert!(matches!(err, Error::InvalidArgument(_)), "{label}: {err}");
+
+            // Rejected as a unit, nothing applied: empty request, zero
+            // cap, interval without a checkpoint thread, unknown table.
+            assert!(client.admin_reconfig(AdminRequest::table("t")).is_err(), "{label}");
+            assert!(
+                client
+                    .admin_reconfig(AdminRequest::table("t").max_size(0))
+                    .is_err(),
+                "{label}"
+            );
+            assert!(
+                client
+                    .admin_reconfig(AdminRequest::default().checkpoint_interval_ms(50))
+                    .is_err(),
+                "{label}: interval re-tune requires periodic checkpointing"
+            );
+            assert!(
+                client
+                    .admin_reconfig(AdminRequest::table("missing").max_size(1))
+                    .is_err(),
+                "{label}"
+            );
+            assert_eq!(server.table("t").unwrap().size(), 3, "{label}: rejects applied nothing");
+        },
+    );
+}
+
+#[test]
+fn watch_stream_pushes_deltas_without_polling() {
+    for_each_transport(
+        || Server::builder().table(TableConfig::uniform_replay("t", 100)),
+        |_server, addr, label| {
+            let client = Client::connect(addr).unwrap();
+            assert!(client.watch("missing").is_err(), "{label}");
+            let mut watch = client.watch("t").unwrap();
+            let (table, info) = watch.next_update().unwrap();
+            assert_eq!(table, "t", "{label}");
+            assert_eq!(info.size, 0, "{label}: baseline snapshot");
+            // A mutation on another connection pushes a delta with no
+            // request in flight on the watch connection.
+            write_items(&client, "t", 1, |_| 1.0);
+            let (_, info) = watch.next_update().unwrap();
+            assert!(info.size >= 1, "{label}: first delta");
+            assert!(info.inserts >= 1, "{label}");
+            // Rapid mutations coalesce (latest-wins): drain pushes until
+            // the final state is visible.
+            write_items(&client, "t", 4, |_| 1.0);
+            let deadline = std::time::Instant::now() + Duration::from_secs(10);
+            loop {
+                let (_, info) = watch.next_update().unwrap();
+                if info.size == 5 {
+                    break;
+                }
+                assert!(
+                    std::time::Instant::now() < deadline,
+                    "{label}: never saw size=5"
+                );
+            }
+            watch.cancel().unwrap();
+        },
+    );
+}
+
+/// Minimal HTTP/1.1 GET against the metrics listener; returns
+/// `(head, body)`.
+fn scrape(addr: std::net::SocketAddr, path: &str) -> (String, String) {
+    use std::io::{Read, Write};
+    let mut sock = std::net::TcpStream::connect(addr).unwrap();
+    write!(sock, "GET {path} HTTP/1.1\r\nHost: reverb\r\n\r\n").unwrap();
+    let mut buf = String::new();
+    sock.read_to_string(&mut buf).unwrap();
+    let (head, body) = buf.split_once("\r\n\r\n").expect("header terminator");
+    (head.to_string(), body.to_string())
+}
+
+#[test]
+fn metrics_endpoint_serves_valid_exposition() {
+    for_each_transport(
+        || {
+            Server::builder()
+                .table(TableConfig::uniform_replay("t", 100))
+                .metrics_addr("127.0.0.1:0")
+        },
+        |server, addr, label| {
+            let client = Client::connect(addr).unwrap();
+            write_items(&client, "t", 3, |_| 1.0);
+            // Re-tune the corridor to ±∞ so the exposition's non-finite
+            // literals are exercised end to end.
+            client
+                .admin_reconfig(AdminRequest::table("t").corridor(
+                    f64::NEG_INFINITY,
+                    f64::INFINITY,
+                ))
+                .unwrap();
+            let maddr = server.metrics_addr().expect("metrics listener");
+            let (head, body) = scrape(maddr, "/metrics");
+            assert!(head.starts_with("HTTP/1.1 200"), "{label}: {head}");
+            assert!(head.contains("Connection: close"), "{label}");
+            for family in [
+                "reverb_table_size",
+                "reverb_table_max_size",
+                "reverb_table_inserts_total",
+                "reverb_table_samples_total",
+                "reverb_rate_limiter_diff",
+                "reverb_rate_limiter_min_diff",
+                "reverb_rate_limiter_max_diff",
+                "reverb_table_insert_waiters",
+                "reverb_table_watchers",
+                "reverb_shard_items",
+                "reverb_shard_mass",
+                "reverb_gate_last_pause_seconds",
+                "reverb_gate_in_flight",
+                "reverb_persist_journal_lag_bytes",
+            ] {
+                assert!(
+                    body.contains(&format!("# TYPE {family} ")),
+                    "{label}: missing family {family}\n{body}"
+                );
+            }
+            assert!(
+                body.contains("reverb_table_size{table=\"t\"} 3"),
+                "{label}:\n{body}"
+            );
+            assert!(
+                body.contains("reverb_rate_limiter_max_diff{table=\"t\"} +Inf"),
+                "{label}: +Inf literal\n{body}"
+            );
+            assert!(
+                body.contains("reverb_rate_limiter_min_diff{table=\"t\"} -Inf"),
+                "{label}: -Inf literal\n{body}"
+            );
+            // Exposition shape: every non-comment line is
+            // `name[{labels}] value` with a parseable value ("+Inf" and
+            // "NaN" are valid f64 spellings).
+            for line in body.lines() {
+                if line.is_empty() || line.starts_with('#') {
+                    continue;
+                }
+                let (series, value) = line.rsplit_once(' ').expect("sample line");
+                assert!(!series.is_empty(), "{label}: {line}");
+                assert!(
+                    value.parse::<f64>().is_ok(),
+                    "{label}: unparseable value in {line:?}"
+                );
+            }
+            let (head, _) = scrape(maddr, "/nope");
+            assert!(head.starts_with("HTTP/1.1 404"), "{label}: {head}");
+        },
+    );
 }

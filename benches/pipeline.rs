@@ -1,0 +1,267 @@
+//! Pipelined client + batched wire ops (DESIGN.md §13): single-connection
+//! insert throughput over depth ∈ {1, 4, 16, 64} in-flight requests ×
+//! batch ∈ {1, 16, 128} items per frame, against a sharded table — plus
+//! batched vs per-op priority updates.
+//!
+//! The blocking client is the (depth=1, batch=1) cell: one request on the
+//! wire, one ack round-trip per item. PR 5 gave the server event-driven
+//! capacity; this measures how much of it one connection can now use.
+//! Expected result: depth >= 16 sustains >= 2x the blocking cell, and
+//! batched priority updates run >= 4x the per-op path.
+//!
+//! Run: `cargo bench --bench pipeline`
+//! (REVERB_BENCH_FAST=1 for a quick CI pass — fewer cells, shorter
+//! windows.) Emits `BENCH_pipeline.json` for the CI perf trajectory.
+
+use reverb::core::table::TableConfig;
+use reverb::net::wire::{Message, PriorityUpdateOp, WireItem};
+use reverb::util::bench::*;
+use reverb::util::rng::Pcg32;
+use reverb::util::stats::{fmt_qps, json_f64_prec};
+use reverb::{Chunk, Compression, Pipeline, Server};
+use std::collections::VecDeque;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+const PAYLOAD_FLOATS: usize = 100; // 400 B, the paper's small-payload point
+const SHARDS: usize = 4;
+
+/// One random single-step chunk + the wire item referencing it.
+fn mk_op(key: u64, rng: &mut Pcg32) -> (Arc<Chunk>, WireItem) {
+    let steps = vec![random_step(PAYLOAD_FLOATS, rng)];
+    let chunk = Arc::new(Chunk::from_steps(key, 0, &steps, Compression::None).unwrap());
+    let item = WireItem {
+        key: key | (1 << 62), // item keys distinct from chunk keys
+        table: "t".into(),
+        priority: 1.0,
+        chunk_keys: vec![key],
+        offset: 0,
+        length: 1,
+        times_sampled: 0,
+        columns: None,
+    };
+    (chunk, item)
+}
+
+/// Single-connection insert QPS at one (depth, batch) cell: chunks + items
+/// travel `batch` per frame, up to `depth` unacked frames ride the wire.
+fn insert_qps(addr: &str, depth: usize, batch: usize, window: Duration) -> f64 {
+    let pipe = Pipeline::connect(addr, depth).unwrap();
+    let mut rng = Pcg32::new(0x9e37_79b9, ((depth as u64) << 8) | batch as u64);
+    let mut next_key = 1u64;
+    let mut outstanding: VecDeque<(reverb::Completion, usize)> = VecDeque::new();
+    let mut acked = 0u64;
+    let start = Instant::now();
+    while start.elapsed() < window {
+        let mut chunks = Vec::with_capacity(batch);
+        let mut items = Vec::with_capacity(batch);
+        for _ in 0..batch {
+            let (c, i) = mk_op(next_key, &mut rng);
+            next_key += 1;
+            chunks.push(c);
+            items.push(i);
+        }
+        pipe.send_unacked(Message::InsertChunks { chunks }).unwrap();
+        let completion = if batch == 1 {
+            // The v1 blocking-client frame, for a faithful baseline cell.
+            let item = items.pop().expect("batch of 1");
+            pipe.submit(|id| Message::CreateItem {
+                id,
+                item,
+                timeout_ms: 30_000,
+            })
+            .unwrap()
+        } else {
+            pipe.submit(|id| Message::CreateItemBatch {
+                id,
+                items,
+                timeout_ms: 30_000,
+            })
+            .unwrap()
+        };
+        pipe.flush().unwrap();
+        outstanding.push_back((completion, batch));
+        while outstanding.len() >= depth {
+            let (c, n) = outstanding.pop_front().expect("non-empty");
+            match c.wait().unwrap() {
+                Message::Ack { .. } => acked += n as u64,
+                Message::BatchReply { results, .. } => {
+                    acked += results.len() as u64;
+                }
+                other => panic!("unexpected reply {other:?}"),
+            }
+        }
+    }
+    while let Some((c, n)) = outstanding.pop_front() {
+        c.wait().unwrap();
+        acked += n as u64;
+    }
+    acked as f64 / start.elapsed().as_secs_f64()
+}
+
+/// Priority-update ops/sec with `batch` single-update ops per frame
+/// (batch = 1 uses the v1 per-op `MutatePriorities` frame), blocking on
+/// each frame's reply (depth 1) so the measurement isolates batching.
+fn mutate_qps(addr: &str, keys: &[u64], batch: usize, window: Duration) -> f64 {
+    let pipe = Pipeline::connect(addr, 1).unwrap();
+    let mut updated = 0u64;
+    let mut i = 0usize;
+    let start = Instant::now();
+    while start.elapsed() < window {
+        if batch == 1 {
+            let key = keys[i % keys.len()];
+            i += 1;
+            pipe.submit(|id| Message::MutatePriorities {
+                id,
+                table: "t".into(),
+                updates: vec![(key, 2.0)],
+                deletes: vec![],
+            })
+            .unwrap()
+            .expect_ack()
+            .unwrap();
+            updated += 1;
+        } else {
+            let ops: Vec<PriorityUpdateOp> = (0..batch)
+                .map(|_| {
+                    let key = keys[i % keys.len()];
+                    i += 1;
+                    PriorityUpdateOp {
+                        table: "t".into(),
+                        updates: vec![(key, 2.0)],
+                        deletes: vec![],
+                    }
+                })
+                .collect();
+            let results = pipe
+                .submit(|id| Message::PriorityUpdateBatch { id, ops })
+                .unwrap()
+                .expect_batch()
+                .unwrap();
+            updated += results.len() as u64;
+        }
+    }
+    updated as f64 / start.elapsed().as_secs_f64()
+}
+
+fn main() {
+    let fast = fast_mode();
+    let depths: &[usize] = if fast { &[1, 16] } else { &[1, 4, 16, 64] };
+    let batches: &[usize] = if fast { &[1, 16] } else { &[1, 16, 128] };
+    let window = if fast {
+        Duration::from_millis(300)
+    } else {
+        Duration::from_millis(1_500)
+    };
+
+    let server = Server::builder()
+        .table(TableConfig::uniform_replay("t", 4_000_000).with_shards(SHARDS))
+        .bind("127.0.0.1:0")
+        .unwrap();
+    let addr = format!("tcp://{}", server.local_addr());
+
+    println!(
+        "# Pipeline sweep: one connection, {SHARDS}-shard table, 400B items, \
+         depth x batch insert QPS"
+    );
+    let mut header = vec!["depth \\ batch".to_string()];
+    header.extend(batches.iter().map(|b| b.to_string()));
+    print_row(&header);
+    print_row(&vec!["---".to_string(); batches.len() + 1]);
+
+    let mut insert_grid: Vec<Vec<f64>> = Vec::new();
+    for &depth in depths {
+        let mut row_qps = Vec::new();
+        let mut row = vec![depth.to_string()];
+        for &batch in batches {
+            let qps = insert_qps(&addr, depth, batch, window);
+            row.push(fmt_qps(qps));
+            row_qps.push(qps);
+        }
+        print_row(&row);
+        insert_grid.push(row_qps);
+    }
+    let blocking = insert_grid[0][0];
+    let best_deep = depths
+        .iter()
+        .zip(&insert_grid)
+        .filter(|(d, _)| **d >= 16)
+        .flat_map(|(_, row)| row.iter().copied())
+        .fold(0.0f64, f64::max);
+    let insert_speedup = best_deep / blocking.max(1.0);
+
+    // Priority mutations: per-op vs batched frames on a prefilled table.
+    prefill_table(&server.table("t").unwrap(), 1_024, PAYLOAD_FLOATS);
+    let keys: Vec<u64> = {
+        let (items, _, _) = server.table("t").unwrap().snapshot();
+        items.iter().map(|i| i.key).collect()
+    };
+    println!("\n# Priority updates: ops/sec per frame shape (depth 1)");
+    print_row(&["batch".into(), "updates/s".into(), "vs per-op".into()]);
+    print_row(&["---".into(), "---".into(), "---".into()]);
+    let mut mutate_qps_list = Vec::new();
+    for &batch in batches {
+        let qps = mutate_qps(&addr, &keys, batch, window);
+        let base = *mutate_qps_list.first().unwrap_or(&qps);
+        print_row(&[
+            batch.to_string(),
+            fmt_qps(qps),
+            format!("{:.2}x", qps / base.max(1.0)),
+        ]);
+        mutate_qps_list.push(qps);
+    }
+    let mutate_speedup = mutate_qps_list.last().unwrap() / mutate_qps_list[0].max(1.0);
+
+    let fmt_list = |xs: &[f64]| {
+        xs.iter()
+            .map(|&q| json_f64_prec(q, 1))
+            .collect::<Vec<_>>()
+            .join(",")
+    };
+    let json = format!(
+        "{{\"bench\":\"pipeline\",\"shards\":{SHARDS},\
+         \"payload_floats\":{PAYLOAD_FLOATS},\"fast\":{fast},\
+         \"depths\":[{}],\"batches\":[{}],\"insert_qps\":[{}],\
+         \"blocking_qps\":{},\"insert_speedup\":{},\
+         \"mutate_qps\":[{}],\"mutate_speedup\":{}}}",
+        depths
+            .iter()
+            .map(|d| d.to_string())
+            .collect::<Vec<_>>()
+            .join(","),
+        batches
+            .iter()
+            .map(|b| b.to_string())
+            .collect::<Vec<_>>()
+            .join(","),
+        insert_grid
+            .iter()
+            .map(|row| format!("[{}]", fmt_list(row)))
+            .collect::<Vec<_>>()
+            .join(","),
+        json_f64_prec(blocking, 1),
+        json_f64_prec(insert_speedup, 2),
+        fmt_list(&mutate_qps_list),
+        json_f64_prec(mutate_speedup, 2),
+    );
+    std::fs::write("BENCH_pipeline.json", &json).expect("write BENCH_pipeline.json");
+    println!("\nwrote BENCH_pipeline.json");
+
+    println!();
+    if fast {
+        println!(
+            "RESULT: SMOKE — fast mode; pipelined/blocking = {insert_speedup:.2}x, \
+             batched/per-op updates = {mutate_speedup:.2}x."
+        );
+    } else if insert_speedup >= 2.0 && mutate_speedup >= 4.0 {
+        println!(
+            "RESULT: PASS — depth>=16 pipelining sustains {insert_speedup:.2}x the blocking \
+             client; batched updates run {mutate_speedup:.2}x the per-op path."
+        );
+    } else {
+        println!(
+            "RESULT: WARNING — pipelined/blocking = {insert_speedup:.2}x (want >= 2x), \
+             batched/per-op = {mutate_speedup:.2}x (want >= 4x); rerun on an idle machine."
+        );
+    }
+}

@@ -9,14 +9,18 @@
 //!   flow-controlled prefetching.
 //! - [`Dataset`] is the iterator analogue of `ReverbDataset` (§3.9).
 //! - [`ClientPool`] shards operations across independent servers (§3.6).
+//! - [`Pipeline`] keeps up to `depth` requests in flight over one
+//!   connection (DESIGN.md §13); writers and samplers route through it.
 
 pub mod dataset;
+pub mod pipeline;
 pub mod pool;
 pub mod sampler;
 pub mod trajectory_writer;
 pub mod writer;
 
 pub use dataset::Dataset;
+pub use pipeline::{Completion, Pipeline};
 pub use pool::ClientPool;
 pub use sampler::{Sample, Sampler, SamplerOptions};
 pub use trajectory_writer::{StepRef, Trajectory, TrajectoryWriter, TrajectoryWriterOptions};
@@ -25,7 +29,7 @@ pub use writer::{Writer, WriterOptions};
 use crate::core::table::TableInfo;
 use crate::error::{Error, Result};
 use crate::net::transport::{self, MsgStream};
-use crate::net::wire::{error_from_code, Message};
+use crate::net::wire::{error_from_code, Message, PriorityUpdateOp};
 use crate::util::KeyGenerator;
 use std::sync::Arc;
 
@@ -224,6 +228,29 @@ impl Client {
         conn.flush()?;
         conn.expect_ack(id)?;
         Ok(())
+    }
+
+    /// Batched priority mutations (wire v3): N [`PriorityUpdateOp`]s in
+    /// one frame, one syscall each way, with per-op results. The first
+    /// failing op's error is returned after the whole batch was applied;
+    /// on success the per-op detail strings are returned in op order.
+    pub fn mutate_priorities_batch(&self, ops: Vec<PriorityUpdateOp>) -> Result<Vec<String>> {
+        let mut conn = Conn::connect(&self.addr)?;
+        let id = conn.next_id();
+        match conn.call(Message::PriorityUpdateBatch { id, ops })? {
+            Message::BatchReply { results, .. } => {
+                results.into_iter().map(|r| r.into_result()).collect()
+            }
+            Message::Err { code, message, .. } => Err(error_from_code(code, message)),
+            other => Err(Error::Decode(format!("unexpected reply {other:?}"))),
+        }
+    }
+
+    /// Open a [`Pipeline`] to this server: up to `depth` requests in
+    /// flight over one connection, submissions returning [`Completion`]
+    /// handles (DESIGN.md §13).
+    pub fn pipeline(&self, depth: usize) -> Result<Pipeline> {
+        Pipeline::connect(&self.addr, depth)
     }
 
     /// Remove all items from a table.

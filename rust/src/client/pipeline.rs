@@ -1,0 +1,508 @@
+//! Pipelined client core (DESIGN.md §13): up to `depth` requests in
+//! flight over one [`MsgStream`](crate::net::transport::MsgStream)
+//! connection.
+//!
+//! The blocking client pays one full round-trip per op; a [`Pipeline`]
+//! amortizes that by letting submissions return immediately with a
+//! [`Completion`] handle while replies are drained in send order. There is
+//! no dedicated reader thread: whichever thread needs a reply (a window
+//! slot at [`Pipeline::submit`], or a result at [`Completion::wait`])
+//! takes the connection out of the shared state, performs one blocking
+//! `flush + recv` outside the lock, records the reply under the id it
+//! answers, and wakes every waiter through the condvar. Servers answer a
+//! connection's requests strictly in send order (watch pushes never share
+//! a pipelined connection), so the head of the in-flight queue always
+//! names the id the next reply must carry — any mismatch latches the
+//! pipeline as broken rather than mis-attributing a result.
+//!
+//! Backpressure is the bounded window: when `depth` requests are already
+//! outstanding, `submit` drains one reply before sending, so a slow server
+//! stalls the producer instead of ballooning the socket buffer.
+
+use super::Conn;
+use crate::error::{Error, Result};
+use crate::net::wire::{error_from_code, BatchResult, Message};
+use std::collections::{HashMap, HashSet, VecDeque};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard};
+
+/// Shared pipeline state behind one mutex + condvar.
+struct State {
+    /// `None` while some thread has the connection out doing blocking IO.
+    conn: Option<Conn>,
+    /// Request ids awaiting replies, in send order.
+    in_flight: VecDeque<u64>,
+    /// Replies received but not yet claimed by their [`Completion`].
+    completed: HashMap<u64, Message>,
+    /// Ids whose [`Completion`] was dropped unwaited: their replies are
+    /// discarded on arrival instead of accumulating in `completed`.
+    abandoned: HashSet<u64>,
+    /// Once set, every pending and future operation fails with this text
+    /// (a broken stream cannot match replies to requests anymore).
+    broken: Option<String>,
+}
+
+struct Shared {
+    state: Mutex<State>,
+    cv: Condvar,
+}
+
+impl Shared {
+    fn broken_err(text: &str) -> Error {
+        Error::Decode(format!("pipelined connection broken: {text}"))
+    }
+
+    /// With the lock held and the connection present, take the connection,
+    /// perform one blocking `flush + recv` *outside* the lock, and record
+    /// the reply against the head of the in-flight queue. Callers must
+    /// re-check their wait condition on the returned guard.
+    fn pump<'a>(&'a self, mut st: MutexGuard<'a, State>) -> MutexGuard<'a, State> {
+        let mut conn = st.conn.take().expect("pump requires the connection");
+        drop(st);
+        let io = conn.flush().and_then(|()| conn.recv());
+        let mut st = self.state.lock().expect("pipeline lock");
+        st.conn = Some(conn);
+        match io {
+            Ok(reply) => {
+                let expected = st.in_flight.pop_front();
+                match (expected, reply_id(&reply)) {
+                    (Some(want), Some(got)) if want == got => {
+                        if !st.abandoned.remove(&got) {
+                            st.completed.insert(got, reply);
+                        }
+                    }
+                    (want, got) => {
+                        st.broken = Some(format!(
+                            "reply out of order: expected id {want:?}, got {got:?}"
+                        ));
+                    }
+                }
+            }
+            Err(e) => st.broken = Some(e.to_string()),
+        }
+        self.cv.notify_all();
+        st
+    }
+}
+
+/// The request id a server→client frame answers, if any.
+fn reply_id(msg: &Message) -> Option<u64> {
+    match msg {
+        Message::Ack { id, .. }
+        | Message::Err { id, .. }
+        | Message::SampleData { id, .. }
+        | Message::Info { id, .. }
+        | Message::WatchUpdate { id, .. }
+        | Message::BatchReply { id, .. } => Some(*id),
+        _ => None,
+    }
+}
+
+/// A pipelined connection: submissions return [`Completion`] handles and
+/// up to `depth` requests ride the wire concurrently. Cheap to clone;
+/// clones share the window and the connection.
+#[derive(Clone)]
+pub struct Pipeline {
+    shared: Arc<Shared>,
+    depth: usize,
+}
+
+impl Pipeline {
+    /// Dial `addr` (any transport scheme [`Conn`] accepts) with an
+    /// in-flight window of `depth` requests.
+    pub fn connect(addr: &str, depth: usize) -> Result<Pipeline> {
+        Ok(Pipeline::from_conn(Conn::connect(addr)?, depth))
+    }
+
+    /// Wrap an existing connection.
+    pub(crate) fn from_conn(conn: Conn, depth: usize) -> Pipeline {
+        Pipeline {
+            shared: Arc::new(Shared {
+                state: Mutex::new(State {
+                    conn: Some(conn),
+                    in_flight: VecDeque::new(),
+                    completed: HashMap::new(),
+                    abandoned: HashSet::new(),
+                    broken: None,
+                }),
+                cv: Condvar::new(),
+            }),
+            depth: depth.max(1),
+        }
+    }
+
+    /// The in-flight window size.
+    pub fn depth(&self) -> usize {
+        self.depth
+    }
+
+    /// Requests currently awaiting a reply.
+    pub fn in_flight(&self) -> usize {
+        self.shared.state.lock().expect("pipeline lock").in_flight.len()
+    }
+
+    /// Submit one request. `build` receives the assigned request id and
+    /// returns the frame to send. If the window is full this first drains
+    /// one reply (backpressure); the send itself never waits for a reply.
+    /// The frame is buffered — call [`Pipeline::flush`] (or let the next
+    /// drain flush) to push it onto the wire.
+    pub fn submit<F: FnOnce(u64) -> Message>(&self, build: F) -> Result<Completion> {
+        let mut st = self.shared.state.lock().expect("pipeline lock");
+        loop {
+            if let Some(b) = &st.broken {
+                return Err(Shared::broken_err(b));
+            }
+            if st.conn.is_none() {
+                st = self.shared.cv.wait(st).expect("pipeline lock");
+            } else if st.in_flight.len() >= self.depth {
+                st = self.shared.pump(st);
+            } else {
+                break;
+            }
+        }
+        let conn = st.conn.as_mut().expect("window loop left the connection in");
+        let id = conn.next_id();
+        if let Err(e) = conn.send(build(id)) {
+            st.broken = Some(e.to_string());
+            self.shared.cv.notify_all();
+            return Err(e);
+        }
+        st.in_flight.push_back(id);
+        Ok(Completion {
+            shared: self.shared.clone(),
+            id,
+            waited: false,
+        })
+    }
+
+    /// Send a frame that carries no request id and gets no reply (chunk
+    /// streaming). Takes no window slot.
+    pub fn send_unacked(&self, msg: Message) -> Result<()> {
+        let mut st = self.shared.state.lock().expect("pipeline lock");
+        loop {
+            if let Some(b) = &st.broken {
+                return Err(Shared::broken_err(b));
+            }
+            match st.conn.as_mut() {
+                Some(conn) => {
+                    if let Err(e) = conn.send(msg) {
+                        st.broken = Some(e.to_string());
+                        self.shared.cv.notify_all();
+                        return Err(e);
+                    }
+                    return Ok(());
+                }
+                None => st = self.shared.cv.wait(st).expect("pipeline lock"),
+            }
+        }
+    }
+
+    /// Flush buffered frames onto the wire without waiting for replies.
+    pub fn flush(&self) -> Result<()> {
+        let mut st = self.shared.state.lock().expect("pipeline lock");
+        loop {
+            if let Some(b) = &st.broken {
+                return Err(Shared::broken_err(b));
+            }
+            match st.conn.as_mut() {
+                Some(conn) => {
+                    if let Err(e) = conn.flush() {
+                        st.broken = Some(e.to_string());
+                        self.shared.cv.notify_all();
+                        return Err(e);
+                    }
+                    return Ok(());
+                }
+                None => st = self.shared.cv.wait(st).expect("pipeline lock"),
+            }
+        }
+    }
+}
+
+/// Handle for one in-flight request. [`Completion::wait`] blocks until the
+/// matching reply arrives (driving the shared connection if no other
+/// thread is) and surfaces the server's reply or error. Dropping a
+/// completion unwaited abandons the reply — it is discarded on arrival and
+/// the connection stays usable.
+pub struct Completion {
+    shared: Arc<Shared>,
+    id: u64,
+    waited: bool,
+}
+
+impl Completion {
+    /// The request id this completion is matched against.
+    pub fn id(&self) -> u64 {
+        self.id
+    }
+
+    /// Block until the reply for this request arrives. `Err` frames are
+    /// converted into their client-side [`Error`]; any other frame is
+    /// returned as-is.
+    pub fn wait(mut self) -> Result<Message> {
+        self.waited = true;
+        let shared = self.shared.clone();
+        let id = self.id;
+        let mut st = shared.state.lock().expect("pipeline lock");
+        loop {
+            if let Some(reply) = st.completed.remove(&id) {
+                return match reply {
+                    Message::Err { code, message, .. } => Err(error_from_code(code, message)),
+                    other => Ok(other),
+                };
+            }
+            if let Some(b) = &st.broken {
+                return Err(Shared::broken_err(b));
+            }
+            // Our reply has not arrived: our id is still somewhere in the
+            // in-flight queue. Drive the connection if it is idle,
+            // otherwise wait for the draining thread's notify.
+            if st.conn.is_some() && !st.in_flight.is_empty() {
+                st = shared.pump(st);
+            } else {
+                st = shared.cv.wait(st).expect("pipeline lock");
+            }
+        }
+    }
+
+    /// Wait and require an `Ack`, returning its detail string.
+    pub fn expect_ack(self) -> Result<String> {
+        match self.wait()? {
+            Message::Ack { detail, .. } => Ok(detail),
+            other => Err(Error::Decode(format!("expected ack, got {other:?}"))),
+        }
+    }
+
+    /// Wait and require a `BatchReply`, returning the per-op results.
+    pub fn expect_batch(self) -> Result<Vec<BatchResult>> {
+        match self.wait()? {
+            Message::BatchReply { results, .. } => Ok(results),
+            other => Err(Error::Decode(format!("expected batch reply, got {other:?}"))),
+        }
+    }
+}
+
+impl Drop for Completion {
+    fn drop(&mut self) {
+        if self.waited {
+            return;
+        }
+        if let Ok(mut st) = self.shared.state.lock() {
+            if st.completed.remove(&self.id).is_none() && st.in_flight.contains(&self.id) {
+                st.abandoned.insert(self.id);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::client::Client;
+    use crate::core::table::TableConfig;
+    use crate::core::tensor::Tensor;
+    use crate::net::server::Server;
+    use crate::net::wire::{PriorityUpdateOp, WireItem};
+    use std::sync::Arc as StdArc;
+
+    fn start() -> (Server, Client) {
+        let server = Server::builder()
+            .table(TableConfig::uniform_replay("t", 1000))
+            .table(TableConfig::queue("q", 2))
+            .bind("127.0.0.1:0")
+            .unwrap();
+        let client = Client::connect(server.local_addr().to_string()).unwrap();
+        (server, client)
+    }
+
+    fn chunk_and_item(client: &Client, key: u64, table: &str) -> (Message, WireItem) {
+        let steps = vec![vec![Tensor::from_f32(&[1], &[key as f32]).unwrap()]];
+        let chunk = crate::core::chunk::Chunk::from_steps(
+            key,
+            0,
+            &steps,
+            crate::core::chunk::Compression::None,
+        )
+        .unwrap();
+        let item = WireItem {
+            key: client.key_gen().next_key(),
+            table: table.into(),
+            priority: 1.0,
+            chunk_keys: vec![key],
+            offset: 0,
+            length: 1,
+            times_sampled: 0,
+            columns: None,
+        };
+        (
+            Message::InsertChunks {
+                chunks: vec![StdArc::new(chunk)],
+            },
+            item,
+        )
+    }
+
+    #[test]
+    fn completions_resolve_out_of_wait_order() {
+        let (server, client) = start();
+        let pipe = client.pipeline(8).unwrap();
+        let mut completions = Vec::new();
+        for key in 0..5u64 {
+            let (chunks, item) = chunk_and_item(&client, key + 1, "t");
+            pipe.send_unacked(chunks).unwrap();
+            completions.push(
+                pipe.submit(|id| Message::CreateItem {
+                    id,
+                    item,
+                    timeout_ms: 1000,
+                })
+                .unwrap(),
+            );
+        }
+        // Wait newest-first: the drain still matches replies by send order.
+        for c in completions.into_iter().rev() {
+            c.expect_ack().unwrap();
+        }
+        assert_eq!(server.table("t").unwrap().size(), 5);
+        assert_eq!(pipe.in_flight(), 0);
+    }
+
+    #[test]
+    fn window_applies_backpressure_without_deadlock() {
+        let (server, client) = start();
+        let pipe = client.pipeline(2).unwrap();
+        let mut completions = VecDeque::new();
+        // 10 submissions through a window of 2: submit itself drains.
+        for key in 0..10u64 {
+            let (chunks, item) = chunk_and_item(&client, key + 1, "t");
+            pipe.send_unacked(chunks).unwrap();
+            completions.push_back(
+                pipe.submit(|id| Message::CreateItem {
+                    id,
+                    item,
+                    timeout_ms: 1000,
+                })
+                .unwrap(),
+            );
+            assert!(pipe.in_flight() <= 2);
+        }
+        while let Some(c) = completions.pop_front() {
+            c.expect_ack().unwrap();
+        }
+        assert_eq!(server.table("t").unwrap().size(), 10);
+    }
+
+    #[test]
+    fn per_op_errors_surface_through_wait() {
+        let (_server, client) = start();
+        let pipe = client.pipeline(4).unwrap();
+        let c = pipe
+            .submit(|id| Message::SampleRequest {
+                id,
+                table: "missing".into(),
+                num_samples: 1,
+                timeout_ms: 100,
+            })
+            .unwrap();
+        let err = c.wait().unwrap_err();
+        assert!(matches!(err, Error::TableNotFound(_)), "{err}");
+        // The connection survived the op error.
+        let c = pipe
+            .submit(|id| Message::InfoRequest { id })
+            .unwrap();
+        assert!(matches!(c.wait().unwrap(), Message::Info { .. }));
+    }
+
+    #[test]
+    fn dropped_completion_abandons_reply_cleanly() {
+        let (server, client) = start();
+        let pipe = client.pipeline(8).unwrap();
+        let (chunks, item) = chunk_and_item(&client, 1, "t");
+        pipe.send_unacked(chunks).unwrap();
+        let abandoned = pipe
+            .submit(|id| Message::CreateItem {
+                id,
+                item,
+                timeout_ms: 1000,
+            })
+            .unwrap();
+        drop(abandoned);
+        // A later request still matches its own reply.
+        let c = pipe.submit(|id| Message::InfoRequest { id }).unwrap();
+        assert!(matches!(c.wait().unwrap(), Message::Info { .. }));
+        assert_eq!(server.table("t").unwrap().size(), 1);
+    }
+
+    #[test]
+    fn batched_mutations_report_per_op() {
+        let (server, client) = start();
+        {
+            let mut w = client
+                .writer(crate::client::WriterOptions::default())
+                .unwrap();
+            for i in 0..3 {
+                w.append(vec![Tensor::from_f32(&[1], &[i as f32]).unwrap()])
+                    .unwrap();
+                w.create_item("t", 1, 1.0).unwrap();
+            }
+            w.flush().unwrap();
+        }
+        let keys: Vec<u64> = {
+            let table = server.table("t").unwrap();
+            (0..3).map(|_| table.sample(None).unwrap().item.key).collect()
+        };
+        let pipe = client.pipeline(4).unwrap();
+        let ops = vec![
+            PriorityUpdateOp {
+                table: "t".into(),
+                updates: vec![(keys[0], 5.0)],
+                deletes: vec![],
+            },
+            PriorityUpdateOp {
+                table: "missing".into(),
+                updates: vec![],
+                deletes: vec![],
+            },
+        ];
+        let c = pipe
+            .submit(|id| Message::PriorityUpdateBatch { id, ops })
+            .unwrap();
+        let results = c.expect_batch().unwrap();
+        assert_eq!(results.len(), 2);
+        assert!(matches!(&results[0], BatchResult::Ok { .. }));
+        assert!(matches!(
+            &results[1],
+            BatchResult::Err { code, .. } if *code == crate::net::wire::code::NOT_FOUND
+        ));
+    }
+
+    #[test]
+    fn concurrent_submitters_share_one_pipeline() {
+        let (server, client) = start();
+        let pipe = client.pipeline(8).unwrap();
+        let handles: Vec<_> = (0..4)
+            .map(|t| {
+                let pipe = pipe.clone();
+                let client = client.clone();
+                std::thread::spawn(move || {
+                    for i in 0..8u64 {
+                        let key = t * 100 + i + 1;
+                        let (chunks, item) = chunk_and_item(&client, key, "t");
+                        pipe.send_unacked(chunks).unwrap();
+                        pipe.submit(|id| Message::CreateItem {
+                            id,
+                            item,
+                            timeout_ms: 2000,
+                        })
+                        .unwrap()
+                        .expect_ack()
+                        .unwrap();
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(server.table("t").unwrap().size(), 32);
+    }
+}

@@ -3,6 +3,14 @@
 //! analogue); sampling fans out to every server in parallel and merges the
 //! results into a single stream, which "mitigates the effects of long-tail
 //! latency and creates fault tolerance against individual server failures".
+//!
+//! Round-robin writes compose with the pipelined client (DESIGN.md §13):
+//! each [`ClientPool::writer`] is bound to one shard and internally rides
+//! a [`Pipeline`](super::Pipeline) with batched `CreateItemBatch` frames,
+//! so sharding multiplies the already-amortized per-connection throughput
+//! instead of re-serializing it. For explicit pipelining against one
+//! shard, use [`Client::pipeline`] on [`ClientPool::client`] /
+//! [`ClientPool::round_robin`].
 
 use super::sampler::{Sample, Sampler, SamplerOptions};
 use super::writer::{Writer, WriterOptions};
@@ -66,6 +74,8 @@ impl ClientPool {
 
     /// A writer bound to the next shard (round-robin per writer; a writer's
     /// stream must stay on one server since chunks live with their items).
+    /// Each writer pipelines its items over its shard connection, so
+    /// per-shard throughput is the pipelined single-connection rate.
     pub fn writer(&self, options: WriterOptions) -> Result<Writer> {
         self.round_robin().writer(options)
     }
@@ -233,6 +243,39 @@ mod tests {
             }
         }
         assert!(n >= 1);
+    }
+
+    #[test]
+    fn pipelined_clients_pool_over_in_proc_servers() {
+        // A pool of pipelined clients against two in-proc servers: the
+        // round-robin writers (pipelined internally) spread evenly, and an
+        // explicit Pipeline per shard works over the same addresses.
+        let servers: Vec<Server> = (0..2)
+            .map(|i| {
+                Server::builder()
+                    .table(TableConfig::uniform_replay("t", 100))
+                    .in_proc_name(format!("pool-pipelined-{i}"))
+                    .serve_in_proc()
+                    .unwrap()
+            })
+            .collect();
+        let addrs: Vec<String> = servers.iter().map(|s| s.in_proc_addr()).collect();
+        let pool = ClientPool::connect(&addrs).unwrap();
+        for i in 0..6 {
+            write_one(&pool, i as f32);
+        }
+        for s in &servers {
+            assert_eq!(s.table("t").unwrap().size(), 3, "even spread");
+        }
+        use crate::net::wire::Message;
+        for i in 0..pool.len() {
+            let pipe = pool.client(i).pipeline(4).unwrap();
+            // Two overlapped info requests through one window.
+            let a = pipe.submit(|id| Message::InfoRequest { id }).unwrap();
+            let b = pipe.submit(|id| Message::InfoRequest { id }).unwrap();
+            assert!(matches!(a.wait().unwrap(), Message::Info { .. }));
+            assert!(matches!(b.wait().unwrap(), Message::Info { .. }));
+        }
     }
 
     #[test]

@@ -2,17 +2,21 @@
 //!
 //! A `Sampler` manages a pool of worker threads, each holding one
 //! long-lived connection to the server. Workers pipeline up to
-//! `max_in_flight_samples_per_worker` sample requests (flow control),
-//! decompress responses *client-side*, and push materialized samples into a
-//! bounded channel. A `rate_limiter_timeout` on the server maps to a clean
-//! end-of-sequence here (§3.9: "similar to reaching the end of the file").
+//! `max_in_flight_samples_per_worker` sample requests through a
+//! [`Pipeline`] (flow control with one-ahead prefetch: the requests for
+//! the next batches are already on the wire before the current reply is
+//! materialized), decompress responses *client-side*, and push
+//! materialized samples into a bounded channel. A `rate_limiter_timeout`
+//! on the server maps to a clean end-of-sequence here (§3.9: "similar to
+//! reaching the end of the file").
 
+use super::pipeline::{Completion, Pipeline};
 use super::{Client, Conn};
 use crate::core::chunk::Chunk;
 use crate::core::tensor::Tensor;
 use crate::error::{Error, Result};
-use crate::net::wire::{error_from_code, Message, WireSampleInfo};
-use std::collections::HashMap;
+use crate::net::wire::{Message, WireSampleInfo};
+use std::collections::{HashMap, VecDeque};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc::{Receiver, SyncSender, TrySendError};
 use std::sync::Arc;
@@ -235,29 +239,32 @@ impl Drop for Sampler {
     }
 }
 
-fn worker_loop(mut conn: Conn, opts: SamplerOptions, tx: SyncSender<Event>, stop: Arc<AtomicBool>) {
+fn worker_loop(conn: Conn, opts: SamplerOptions, tx: SyncSender<Event>, stop: Arc<AtomicBool>) {
+    let pipe = Pipeline::from_conn(conn, opts.max_in_flight_samples_per_worker);
+    let mut outstanding: VecDeque<Completion> = VecDeque::new();
     let result = (|| -> Result<()> {
-        let mut outstanding = 0usize;
         loop {
             if stop.load(Ordering::SeqCst) {
                 return Ok(());
             }
-            // Fill the pipeline window.
-            while outstanding < opts.max_in_flight_samples_per_worker {
-                let id = conn.next_id();
-                conn.send(Message::SampleRequest {
+            // Fill the prefetch window: the requests for the *next*
+            // batches ride the wire before the current reply is consumed.
+            while outstanding.len() < opts.max_in_flight_samples_per_worker {
+                let table = opts.table.clone();
+                let num_samples = opts.batch_size;
+                let timeout_ms = opts.rate_limiter_timeout_ms.min(u64::MAX / 2);
+                outstanding.push_back(pipe.submit(|id| Message::SampleRequest {
                     id,
-                    table: opts.table.clone(),
-                    num_samples: opts.batch_size,
-                    timeout_ms: opts.rate_limiter_timeout_ms.min(u64::MAX / 2),
-                })?;
-                outstanding += 1;
+                    table,
+                    num_samples,
+                    timeout_ms,
+                })?);
             }
-            conn.flush()?;
-            // Consume one response.
-            match conn.recv()? {
-                Message::SampleData { infos, chunks, .. } => {
-                    outstanding -= 1;
+            pipe.flush()?;
+            // Consume the oldest outstanding response.
+            let completion = outstanding.pop_front().expect("window just filled");
+            match completion.wait() {
+                Ok(Message::SampleData { infos, chunks, .. }) => {
                     // Chunks arrive as shared handles: decoded fresh on the
                     // TCP path, the server's own allocations on the
                     // in-process path.
@@ -270,15 +277,14 @@ fn worker_loop(mut conn: Conn, opts: SamplerOptions, tx: SyncSender<Event>, stop
                         }
                     }
                 }
-                Message::Err { code, message, .. } => {
-                    let e = error_from_code(code, message);
+                Ok(other) => {
+                    return Err(Error::Decode(format!("unexpected reply {other:?}")));
+                }
+                Err(e) => {
                     if e.is_timeout() {
                         return Ok(()); // clean end of sequence
                     }
                     return Err(e);
-                }
-                other => {
-                    return Err(Error::Decode(format!("unexpected reply {other:?}")));
                 }
             }
         }

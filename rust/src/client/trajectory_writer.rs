@@ -12,15 +12,18 @@
 //!
 //! Chunks still stream ahead of the items that reference them, items still
 //! wait locally until every referenced chunk has been transmitted, and
-//! acknowledgements are still pipelined (`max_in_flight_items`), exactly as
-//! in the legacy writer — only the trajectory shape became expressible.
+//! acknowledgements are still pipelined (`max_in_flight_items`) — but the
+//! transport now rides a [`Pipeline`]: every ready item travels in a
+//! wire-v3 `CreateItemBatch` frame (N items, one syscall, one batched ack
+//! with per-op results), so episode writes no longer stall per item.
 
-use super::{Client, Conn};
+use super::pipeline::{Completion, Pipeline};
+use super::Client;
 use crate::core::chunk::{Chunk, ChunkBuilder, Compression};
 use crate::core::item::{ChunkSlice, TrajectoryColumn};
 use crate::core::tensor::Tensor;
 use crate::error::{Error, Result};
-use crate::net::wire::{Message, WireItem};
+use crate::net::wire::{Message, WireItem, MAX_BATCH_OPS};
 use crate::util::KeyGenerator;
 use std::collections::{HashMap, VecDeque};
 use std::sync::Arc;
@@ -215,16 +218,20 @@ struct PendingItem {
     payload: PendingPayload,
 }
 
-/// Column-oriented streaming writer over one long-lived connection.
+/// Column-oriented streaming writer over one long-lived pipelined
+/// connection.
 pub struct TrajectoryWriter {
-    conn: Conn,
+    pipe: Pipeline,
     keys: Arc<KeyGenerator>,
     options: TrajectoryWriterOptions,
     columns: Vec<ColumnState>,
     col_index: HashMap<String, usize>,
     pending: VecDeque<PendingItem>,
-    /// Outstanding (unacked) CreateItem request ids.
-    in_flight: VecDeque<u64>,
+    /// Outstanding (unacked) CreateItemBatch completions, with the item
+    /// count each one carries.
+    in_flight: VecDeque<(Completion, usize)>,
+    /// Total items across `in_flight` (the backpressure unit).
+    in_flight_items: usize,
     items_created: u64,
     appends: u64,
     /// Episode counter; stamped into every [`StepRef`] so stale refs from
@@ -238,14 +245,18 @@ impl TrajectoryWriter {
         for (name, n) in &options.column_chunk_lengths {
             assert!(*n > 0, "chunk_length for column {name:?} must be positive");
         }
+        // One batch frame carries at least one item, so a window of
+        // `max_in_flight_items` frames can never be the binding limit.
+        let depth = options.max_in_flight_items.max(1);
         Ok(TrajectoryWriter {
-            conn: Conn::connect(client.addr())?,
+            pipe: Pipeline::connect(client.addr(), depth)?,
             keys: client.key_gen(),
             options,
             columns: Vec::new(),
             col_index: HashMap::new(),
             pending: VecDeque::new(),
             in_flight: VecDeque::new(),
+            in_flight_items: 0,
             items_created: 0,
             appends: 0,
             epoch: 0,
@@ -420,7 +431,7 @@ impl TrajectoryWriter {
                 "pending items reference steps never appended".into(),
             ));
         }
-        self.conn.flush()?;
+        self.pipe.flush()?;
         self.drain_acks(0)?;
         Ok(())
     }
@@ -497,7 +508,7 @@ impl TrajectoryWriter {
         // The chunk travels as a shared handle: the TCP backend encodes
         // from it, the in-process backend hands this very allocation to
         // the server's chunk store (zero-copy insert path).
-        self.conn.send(Message::InsertChunks {
+        self.pipe.send_unacked(Message::InsertChunks {
             chunks: vec![Arc::new(chunk)],
         })?;
         self.prune_history(col);
@@ -547,28 +558,48 @@ impl TrajectoryWriter {
     }
 
     /// Send every pending item whose referenced chunks are all
-    /// transmitted; stop at the first that still waits on a chunk cut.
+    /// transmitted, gathered into (at most [`MAX_BATCH_OPS`]-sized)
+    /// `CreateItemBatch` frames; stop at the first item that still waits
+    /// on a chunk cut.
     fn maybe_send_pending(&mut self) -> Result<()> {
+        let mut batch: Vec<WireItem> = Vec::new();
         loop {
-            let Some(front) = self.pending.front() else {
-                return Ok(());
+            let ready = match self.pending.front() {
+                Some(front) => self.build_wire_item(front)?,
+                None => None,
             };
-            let Some(item) = self.build_wire_item(front)? else {
-                return Ok(());
-            };
-            self.pending.pop_front();
-            let id = self.conn.next_id();
-            self.conn.send(Message::CreateItem {
-                id,
-                item,
-                timeout_ms: self.options.insert_timeout_ms,
-            })?;
-            self.in_flight.push_back(id);
-            // Flush eagerly so the server overlaps with our next append;
-            // block on acks only when the pipeline window is full.
-            self.conn.flush()?;
-            self.drain_acks(self.options.max_in_flight_items)?;
+            match ready {
+                Some(item) => {
+                    self.pending.pop_front();
+                    batch.push(item);
+                    if batch.len() >= MAX_BATCH_OPS {
+                        self.send_batch(std::mem::take(&mut batch))?;
+                    }
+                }
+                None => break,
+            }
         }
+        if !batch.is_empty() {
+            self.send_batch(batch)?;
+        }
+        Ok(())
+    }
+
+    /// Submit one `CreateItemBatch`, flush it eagerly so the server
+    /// overlaps with our next append, and block on acks only when more
+    /// than `max_in_flight_items` items ride the window.
+    fn send_batch(&mut self, items: Vec<WireItem>) -> Result<()> {
+        let n = items.len();
+        let timeout_ms = self.options.insert_timeout_ms;
+        let completion = self.pipe.submit(|id| Message::CreateItemBatch {
+            id,
+            items,
+            timeout_ms,
+        })?;
+        self.pipe.flush()?;
+        self.in_flight.push_back((completion, n));
+        self.in_flight_items += n;
+        self.drain_acks(self.options.max_in_flight_items)
     }
 
     /// Build the wire item for `p` if every referenced chunk has been
@@ -661,14 +692,26 @@ impl TrajectoryWriter {
         None
     }
 
-    /// Block until at most `max_outstanding` acks remain outstanding.
+    /// Block until at most `max_outstanding` *items* remain unacked. A
+    /// batched ack carries one result per item: successes count towards
+    /// `items_created` even when a sibling op failed; the first per-op
+    /// error of the batch is surfaced after the whole reply was consumed.
     fn drain_acks(&mut self, max_outstanding: usize) -> Result<()> {
-        while self.in_flight.len() > max_outstanding {
+        while self.in_flight_items > max_outstanding {
             // Pop before awaiting: the server sends exactly one reply per
-            // request, so even an Err reply consumes this id.
-            let id = self.in_flight.pop_front().expect("non-empty");
-            self.conn.expect_ack(id)?;
-            self.items_created += 1;
+            // batch, so even an Err reply consumes this completion.
+            let (completion, n) = self.in_flight.pop_front().expect("non-empty");
+            self.in_flight_items -= n;
+            let mut first_err = None;
+            for r in completion.expect_batch()? {
+                match r.into_result() {
+                    Ok(_) => self.items_created += 1,
+                    Err(e) => first_err = first_err.or(Some(e)),
+                }
+            }
+            if let Some(e) = first_err {
+                return Err(e);
+            }
         }
         Ok(())
     }

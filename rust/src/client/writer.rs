@@ -9,7 +9,10 @@
 //! + length over multi-field chunks — so servers (and the old decoder) see
 //! exactly what the original writer produced: chunking cadence, chunk
 //! sharing between overlapping items, pipelined acks, and pending-item
-//! semantics are all inherited from the one implementation.
+//! semantics are all inherited from the one implementation — including
+//! its pipelined transport: ready items travel in wire-v3
+//! `CreateItemBatch` frames over a [`Pipeline`](super::Pipeline), so N
+//! overlapping items cost one syscall, not N round-trips.
 
 use super::trajectory_writer::{TrajectoryWriter, TrajectoryWriterOptions};
 use super::Client;

@@ -36,9 +36,9 @@ use crate::core::item::Item;
 use crate::core::table::{Table, TryInsertOutcome, TrySampleOutcome};
 use crate::error::{Error, Result};
 use crate::net::poller::Poller;
-use crate::net::server::{resolve_item, sample_reply, stash_chunks, ServerInner};
+use crate::net::server::{batch_too_large, resolve_item, sample_reply, stash_chunks, ServerInner};
 use crate::net::transport::{MsgStream, PollSource};
-use crate::net::wire::{error_code, Message};
+use crate::net::wire::{error_code, BatchResult, Message, WireItem, MAX_BATCH_OPS};
 use std::cmp::Reverse;
 use std::collections::{BinaryHeap, HashMap, VecDeque};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
@@ -81,6 +81,9 @@ enum ParkedOp {
         deadline: Instant,
         timeout: Duration,
         noted: bool,
+        /// Dispatch time, for the service-time histogram (the recorded
+        /// latency spans parked time, matching the blocking model).
+        started: Instant,
     },
     Sample {
         id: u64,
@@ -89,13 +92,32 @@ enum ParkedOp {
         deadline: Instant,
         timeout: Duration,
         noted: bool,
+        started: Instant,
+    },
+    /// A `CreateItemBatch` suspended at the op that blocked: `results`
+    /// holds the outcomes already decided, `items` the blocked op and
+    /// everything after it. The retry resumes exactly where it left off
+    /// (the corridor-park contract, per op).
+    InsertBatch {
+        id: u64,
+        /// Table of the op at the front — the waker registration target.
+        table: Arc<Table>,
+        items: VecDeque<WireItem>,
+        results: Vec<BatchResult>,
+        deadline: Instant,
+        timeout: Duration,
+        noted: bool,
+        /// When the op currently at the front began (resets per op).
+        started: Instant,
     },
 }
 
 impl ParkedOp {
     fn deadline(&self) -> Instant {
         match self {
-            ParkedOp::Insert { deadline, .. } | ParkedOp::Sample { deadline, .. } => *deadline,
+            ParkedOp::Insert { deadline, .. }
+            | ParkedOp::Sample { deadline, .. }
+            | ParkedOp::InsertBatch { deadline, .. } => *deadline,
         }
     }
 }
@@ -728,7 +750,9 @@ fn park(
     let retry_at = (Instant::now() + slice).min(op.deadline());
     match (&op, kind) {
         (_, ParkKind::Gate) => shared.inner.gate.register_resume_waker(waker),
-        (ParkedOp::Insert { table, .. }, _) => table.register_insert_waker(waker),
+        (ParkedOp::Insert { table, .. } | ParkedOp::InsertBatch { table, .. }, _) => {
+            table.register_insert_waker(waker)
+        }
         (ParkedOp::Sample { table, .. }, _) => table.register_sample_waker(waker),
     }
     shared.add_timer(retry_at, conn.id);
@@ -749,7 +773,8 @@ fn attempt_parked(shared: &Arc<EventShared>, st: &mut ConnState, op: ParkedOp) -
             deadline,
             timeout,
             noted,
-        } => attempt_insert(shared, st, id, table, item, deadline, timeout, noted),
+            started,
+        } => attempt_insert(shared, st, id, table, item, deadline, timeout, noted, started),
         ParkedOp::Sample {
             id,
             table,
@@ -757,7 +782,18 @@ fn attempt_parked(shared: &Arc<EventShared>, st: &mut ConnState, op: ParkedOp) -
             deadline,
             timeout,
             noted,
-        } => attempt_sample(shared, st, id, table, n, deadline, timeout, noted),
+            started,
+        } => attempt_sample(shared, st, id, table, n, deadline, timeout, noted, started),
+        ParkedOp::InsertBatch {
+            id,
+            table: _,
+            items,
+            results,
+            deadline,
+            timeout,
+            noted,
+            started,
+        } => attempt_insert_batch(shared, st, id, items, results, deadline, timeout, noted, started),
     }
 }
 
@@ -774,6 +810,7 @@ fn attempt_insert(
     deadline: Instant,
     timeout: Duration,
     noted: bool,
+    started: Instant,
 ) -> Result<Attempt> {
     let Some(_guard) = shared.inner.gate.try_enter() else {
         return Ok(Attempt::Parked(
@@ -784,17 +821,20 @@ fn attempt_insert(
                 deadline,
                 timeout,
                 noted,
+                started,
             },
             ParkKind::Gate,
         ));
     };
     match table.try_insert_or_assign(item) {
         Ok(TryInsertOutcome::Inserted) => {
+            shared.inner.record_insert_latency(table.name(), started);
             send_reply(st, id, Ok(String::new()))?;
             Ok(Attempt::Done)
         }
         Ok(TryInsertOutcome::Blocked(item)) => {
             if Instant::now() >= deadline {
+                shared.inner.record_insert_latency(table.name(), started);
                 send_reply(st, id, Err(Error::RateLimiterTimeout(timeout)))?;
                 return Ok(Attempt::Done);
             }
@@ -809,13 +849,120 @@ fn attempt_insert(
                     deadline,
                     timeout,
                     noted: true,
+                    started,
                 },
                 ParkKind::Insert,
             ))
         }
         Err(e) => {
+            shared.inner.record_insert_latency(table.name(), started);
             send_reply(st, id, Err(e))?;
             Ok(Attempt::Done)
+        }
+    }
+}
+
+/// One pass over a (possibly resumed) `CreateItemBatch`: apply ops from
+/// the front until the batch drains or one blocks. Per-op failures
+/// (unknown table, unresolvable item, deadline) fill their result slot
+/// and never abort the ops after them; only a corridor/gate refusal
+/// before the deadline parks — holding the connection at exactly the op
+/// that blocked, with everything already decided kept in `results`.
+/// Items are re-resolved from their wire form on retry: `resolve_item`
+/// is non-destructive and the pending set cannot shrink while parked
+/// (a parked connection reads no input).
+#[allow(clippy::too_many_arguments)]
+fn attempt_insert_batch(
+    shared: &Arc<EventShared>,
+    st: &mut ConnState,
+    id: u64,
+    mut items: VecDeque<WireItem>,
+    mut results: Vec<BatchResult>,
+    deadline: Instant,
+    timeout: Duration,
+    mut noted: bool,
+    mut op_started: Instant,
+) -> Result<Attempt> {
+    loop {
+        let Some(wire_item) = items.front() else {
+            st.stream.send(Message::BatchReply { id, results })?;
+            return Ok(Attempt::Done);
+        };
+        let table = match shared.inner.table(&wire_item.table) {
+            Ok(t) => t.clone(),
+            Err(e) => {
+                results.push(BatchResult::from_result(Err(&e)));
+                items.pop_front();
+                op_started = Instant::now();
+                continue;
+            }
+        };
+        let item = match resolve_item(&shared.inner, &st.pending, wire_item) {
+            Ok(i) => i,
+            Err(e) => {
+                results.push(BatchResult::from_result(Err(&e)));
+                items.pop_front();
+                op_started = Instant::now();
+                continue;
+            }
+        };
+        let Some(_guard) = shared.inner.gate.try_enter() else {
+            return Ok(Attempt::Parked(
+                ParkedOp::InsertBatch {
+                    id,
+                    table,
+                    items,
+                    results,
+                    deadline,
+                    timeout,
+                    noted,
+                    started: op_started,
+                },
+                ParkKind::Gate,
+            ));
+        };
+        match table.try_insert_or_assign(item) {
+            Ok(TryInsertOutcome::Inserted) => {
+                shared.inner.record_insert_latency(&wire_item.table, op_started);
+                results.push(BatchResult::Ok { detail: String::new() });
+                items.pop_front();
+                noted = false;
+                op_started = Instant::now();
+            }
+            Ok(TryInsertOutcome::Blocked(_)) => {
+                if Instant::now() >= deadline {
+                    shared.inner.record_insert_latency(&wire_item.table, op_started);
+                    let e = Error::RateLimiterTimeout(timeout);
+                    results.push(BatchResult::from_result(Err(&e)));
+                    items.pop_front();
+                    noted = false;
+                    op_started = Instant::now();
+                    continue;
+                }
+                if !noted {
+                    table.note_blocked_insert();
+                }
+                return Ok(Attempt::Parked(
+                    ParkedOp::InsertBatch {
+                        id,
+                        table,
+                        items,
+                        results,
+                        deadline,
+                        timeout,
+                        noted: true,
+                        started: op_started,
+                    },
+                    ParkKind::Insert,
+                ));
+            }
+            Err(e) => {
+                shared.inner.record_insert_latency(&wire_item.table, op_started);
+                results.push(BatchResult::from_result(Err(&e)));
+                items.pop_front();
+                noted = false;
+                op_started = Instant::now();
+            }
         }
     }
 }
@@ -831,6 +978,7 @@ fn attempt_sample(
     deadline: Instant,
     timeout: Duration,
     noted: bool,
+    started: Instant,
 ) -> Result<Attempt> {
     let Some(_guard) = shared.inner.gate.try_enter() else {
         return Ok(Attempt::Parked(
@@ -841,17 +989,20 @@ fn attempt_sample(
                 deadline,
                 timeout,
                 noted,
+                started,
             },
             ParkKind::Gate,
         ));
     };
     match table.try_sample_batch(n) {
         Ok(TrySampleOutcome::Sampled(samples)) => {
+            shared.inner.record_sample_latency(table.name(), started);
             st.stream.send(sample_reply(id, &samples))?;
             Ok(Attempt::Done)
         }
         Ok(TrySampleOutcome::Blocked) => {
             if Instant::now() >= deadline {
+                shared.inner.record_sample_latency(table.name(), started);
                 send_err(st, id, &Error::RateLimiterTimeout(timeout))?;
                 return Ok(Attempt::Done);
             }
@@ -866,11 +1017,13 @@ fn attempt_sample(
                     deadline,
                     timeout,
                     noted: true,
+                    started,
                 },
                 ParkKind::Sample,
             ))
         }
         Err(e) => {
+            shared.inner.record_sample_latency(table.name(), started);
             send_err(st, id, &e)?;
             Ok(Attempt::Done)
         }
@@ -898,6 +1051,7 @@ fn dispatch(
             Ok(Dispatch::Continue)
         }
         Message::CreateItem { id, item, timeout_ms } => {
+            let started = Instant::now();
             let table = match shared.inner.table(&item.table) {
                 Ok(t) => t.clone(),
                 Err(e) => {
@@ -914,7 +1068,32 @@ fn dispatch(
             };
             let timeout = Duration::from_millis(timeout_ms).min(MAX_OP_TIMEOUT);
             let deadline = Instant::now() + timeout;
-            match attempt_insert(shared, st, id, table, resolved, deadline, timeout, false)? {
+            match attempt_insert(
+                shared, st, id, table, resolved, deadline, timeout, false, started,
+            )? {
+                Attempt::Done => Ok(Dispatch::Continue),
+                Attempt::Parked(op, kind) => Ok(Dispatch::Parked(op, kind)),
+            }
+        }
+        Message::CreateItemBatch { id, items, timeout_ms } => {
+            if items.len() > MAX_BATCH_OPS {
+                send_err(st, id, &batch_too_large(items.len()))?;
+                return Ok(Dispatch::Continue);
+            }
+            let timeout = Duration::from_millis(timeout_ms).min(MAX_OP_TIMEOUT);
+            let deadline = Instant::now() + timeout;
+            let cap = items.len();
+            match attempt_insert_batch(
+                shared,
+                st,
+                id,
+                VecDeque::from(items),
+                Vec::with_capacity(cap),
+                deadline,
+                timeout,
+                false,
+                Instant::now(),
+            )? {
                 Attempt::Done => Ok(Dispatch::Continue),
                 Attempt::Parked(op, kind) => Ok(Dispatch::Parked(op, kind)),
             }
@@ -925,6 +1104,7 @@ fn dispatch(
             num_samples,
             timeout_ms,
         } => {
+            let started = Instant::now();
             let table = match shared.inner.table(&table) {
                 Ok(t) => t.clone(),
                 Err(e) => {
@@ -935,7 +1115,7 @@ fn dispatch(
             let n = num_samples.max(1) as usize;
             let timeout = Duration::from_millis(timeout_ms).min(MAX_OP_TIMEOUT);
             let deadline = Instant::now() + timeout;
-            match attempt_sample(shared, st, id, table, n, deadline, timeout, false)? {
+            match attempt_sample(shared, st, id, table, n, deadline, timeout, false, started)? {
                 Attempt::Done => Ok(Dispatch::Continue),
                 Attempt::Parked(op, kind) => Ok(Dispatch::Parked(op, kind)),
             }
@@ -956,6 +1136,32 @@ fn dispatch(
                 Ok(format!("updated={updated} deleted={deleted}"))
             })();
             send_reply(st, id, reply)?;
+            Ok(Dispatch::Continue)
+        }
+        Message::PriorityUpdateBatch { id, ops } => {
+            if ops.len() > MAX_BATCH_OPS {
+                send_err(st, id, &batch_too_large(ops.len()))?;
+                return Ok(Dispatch::Continue);
+            }
+            // Mutations never park: one gate entry covers the whole batch,
+            // and each op's keys are already grouped per shard by
+            // `update_priorities`/`delete` — N ops cost one gate
+            // acquisition and one lock hold per touched shard.
+            let results = {
+                let _guard = shared.inner.gate.enter();
+                ops.iter()
+                    .map(|op| {
+                        let r = (|| {
+                            let table = shared.inner.table(&op.table)?;
+                            let updated = table.update_priorities(&op.updates)?;
+                            let deleted = table.delete(&op.deletes)?;
+                            Ok(format!("updated={updated} deleted={deleted}"))
+                        })();
+                        BatchResult::from_result(r.as_ref().map(String::clone))
+                    })
+                    .collect()
+            };
+            st.stream.send(Message::BatchReply { id, results })?;
             Ok(Dispatch::Continue)
         }
         Message::Reset { id, table } => {
@@ -1060,7 +1266,8 @@ fn dispatch(
         | Message::Err { .. }
         | Message::SampleData { .. }
         | Message::Info { .. }
-        | Message::WatchUpdate { .. } => {
+        | Message::WatchUpdate { .. }
+        | Message::BatchReply { .. } => {
             Err(Error::Decode("client sent a server-side message".into()))
         }
     }

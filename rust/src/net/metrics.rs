@@ -11,6 +11,8 @@
 
 use crate::net::event::EventShared;
 use crate::net::server::ServerInner;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Duration;
 
 /// Cap on an accepted scrape's request head; anything longer is dropped
 /// (a scrape request is a handful of lines).
@@ -88,6 +90,69 @@ fn escape_label(s: &str) -> String {
         }
     }
     out
+}
+
+/// Upper bounds (seconds) of the service-time histogram buckets. The
+/// ladder spans in-proc dispatch (~µs) through corridor-blocked waits
+/// (seconds); `+Inf` is implicit. Chosen once for every table so
+/// exposition families stay mergeable across tables.
+pub(crate) const LATENCY_BUCKETS: [f64; 12] = [
+    0.00005, 0.0001, 0.00025, 0.0005, 0.001, 0.0025, 0.005, 0.01, 0.05, 0.25, 1.0, 5.0,
+];
+
+/// A lock-free fixed-bucket latency histogram. `record` takes one atomic
+/// increment per observation (buckets are stored non-cumulative and
+/// cumulated at render time), so the data plane never serializes on the
+/// exporter. Sums are tracked in integer microseconds to stay atomic.
+#[derive(Default)]
+pub(crate) struct LatencyHistogram {
+    buckets: [AtomicU64; LATENCY_BUCKETS.len()],
+    sum_micros: AtomicU64,
+    count: AtomicU64,
+}
+
+impl LatencyHistogram {
+    pub(crate) fn record(&self, elapsed: Duration) {
+        let secs = elapsed.as_secs_f64();
+        if let Some(i) = LATENCY_BUCKETS.iter().position(|le| secs <= *le) {
+            self.buckets[i].fetch_add(1, Ordering::Relaxed);
+        }
+        self.sum_micros
+            .fetch_add(elapsed.as_micros() as u64, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Observations recorded so far (tests / diagnostics).
+    pub(crate) fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    /// Append the `_bucket`/`_sum`/`_count` samples of one labelled
+    /// series. Buckets are emitted cumulative per the exposition format,
+    /// with the implicit `+Inf` bucket equal to `_count`.
+    fn render_into(&self, e: &mut Expo, name: &str, table: &str) {
+        let bucket_name = format!("{name}_bucket");
+        let mut cumulative = 0u64;
+        for (i, le) in LATENCY_BUCKETS.iter().enumerate() {
+            cumulative += self.buckets[i].load(Ordering::Relaxed);
+            let le = fmt_value(*le);
+            e.sample(&bucket_name, &[("table", table), ("le", &le)], cumulative as f64);
+        }
+        let count = self.count.load(Ordering::Relaxed);
+        e.sample(&bucket_name, &[("table", table), ("le", "+Inf")], count as f64);
+        let sum = self.sum_micros.load(Ordering::Relaxed) as f64 / 1e6;
+        e.sample(&format!("{name}_sum"), &[("table", table)], sum);
+        e.sample(&format!("{name}_count"), &[("table", table)], count as f64);
+    }
+}
+
+/// Per-table service-time histograms, fed from the dispatch paths of both
+/// service models (threaded: around the blocking handler; event: dispatch
+/// to reply, spanning parked time).
+#[derive(Default)]
+pub(crate) struct TableLatency {
+    pub(crate) insert: LatencyHistogram,
+    pub(crate) sample: LatencyHistogram,
 }
 
 /// Exposition buffer: `family` opens a `# HELP`/`# TYPE` block, `sample`
@@ -275,6 +340,27 @@ pub(crate) fn render_prometheus(inner: &ServerInner, event: Option<&EventShared>
     }
 
     e.family(
+        "reverb_table_insert_latency_seconds",
+        "histogram",
+        "Insert (CreateItem) service time from dispatch to reply, including parked/corridor time.",
+    );
+    for t in &inner.table_order {
+        if let Some(tl) = inner.latency.get(t.name()) {
+            tl.insert.render_into(&mut e, "reverb_table_insert_latency_seconds", t.name());
+        }
+    }
+    e.family(
+        "reverb_table_sample_latency_seconds",
+        "histogram",
+        "Sample service time from dispatch to reply, including parked/corridor time.",
+    );
+    for t in &inner.table_order {
+        if let Some(tl) = inner.latency.get(t.name()) {
+            tl.sample.render_into(&mut e, "reverb_table_sample_latency_seconds", t.name());
+        }
+    }
+
+    e.family(
         "reverb_gate_last_pause_seconds",
         "gauge",
         "Duration of the most recent checkpoint gate pause.",
@@ -348,5 +434,29 @@ mod tests {
     #[test]
     fn labels_escape_specials() {
         assert_eq!(escape_label("a\"b\\c\nd"), "a\\\"b\\\\c\\nd");
+    }
+
+    #[test]
+    fn histogram_buckets_render_cumulative() {
+        let h = LatencyHistogram::default();
+        h.record(Duration::from_micros(80)); // <= 0.0001
+        h.record(Duration::from_micros(80));
+        h.record(Duration::from_millis(2)); // <= 0.0025
+        h.record(Duration::from_secs(60)); // beyond the ladder: +Inf only
+        let mut e = Expo { out: String::new() };
+        h.render_into(&mut e, "x_seconds", "t");
+        let lines: Vec<&str> = e.out.lines().collect();
+        assert_eq!(lines.len(), LATENCY_BUCKETS.len() + 3);
+        assert!(lines.contains(&"x_seconds_bucket{table=\"t\",le=\"0.0001\"} 2"));
+        assert!(lines.contains(&"x_seconds_bucket{table=\"t\",le=\"0.0025\"} 3"));
+        // The last finite bucket still excludes the 60 s outlier...
+        assert!(lines.contains(&"x_seconds_bucket{table=\"t\",le=\"5\"} 3"));
+        // ...which only the +Inf bucket (== _count) captures.
+        assert!(lines.contains(&"x_seconds_bucket{table=\"t\",le=\"+Inf\"} 4"));
+        assert!(lines.contains(&"x_seconds_count{table=\"t\"} 4"));
+        assert_eq!(h.count(), 4);
+        let sum_line = lines.iter().find(|l| l.starts_with("x_seconds_sum")).unwrap();
+        let v: f64 = sum_line.rsplit(' ').next().unwrap().parse().unwrap();
+        assert!((v - 60.00216).abs() < 1e-6, "sum was {v}");
     }
 }

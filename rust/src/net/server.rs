@@ -27,7 +27,10 @@ use crate::net::gate::Gate;
 use crate::net::transport::{
     self, InProcListener, MsgStream, TcpTransportListener, TransportListener,
 };
-use crate::net::wire::{error_code, Message, WireItem, WireSampleInfo};
+use crate::net::metrics::TableLatency;
+use crate::net::wire::{
+    error_code, BatchResult, Message, WireItem, WireSampleInfo, MAX_BATCH_OPS,
+};
 use crate::persist::{PersistConfig, Persister, DEFAULT_SEGMENT_BYTES};
 use std::collections::HashMap;
 use std::net::{SocketAddr, TcpStream};
@@ -279,9 +282,16 @@ impl ServerBuilder {
             }
             (PersistMode::Full, _) => None,
         };
+        // One service-time histogram pair per table, fed from the dispatch
+        // paths of both service models and rendered at `/metrics`.
+        let latency = tables
+            .keys()
+            .map(|name| (name.clone(), TableLatency::default()))
+            .collect();
         let inner = Arc::new(ServerInner {
             tables,
             table_order,
+            latency,
             store,
             gate: Gate::new(),
             checkpoint_dir: self.checkpoint_dir,
@@ -465,6 +475,8 @@ pub(crate) struct ServerInner {
     tables: HashMap<String, Arc<Table>>,
     /// Construction order (stable info/checkpoint ordering).
     pub(crate) table_order: Vec<Arc<Table>>,
+    /// Per-table insert/sample service-time histograms (`/metrics`).
+    pub(crate) latency: HashMap<String, TableLatency>,
     pub(crate) store: ChunkStore,
     pub(crate) gate: Gate,
     checkpoint_dir: Option<PathBuf>,
@@ -646,6 +658,23 @@ impl ServerInner {
         self.tables
             .get(name)
             .ok_or_else(|| Error::TableNotFound(name.into()))
+    }
+
+    /// Record one insert op's service time (dispatch to reply) into the
+    /// table's `/metrics` histogram. Unknown tables are skipped — there
+    /// is no series to attribute the op to.
+    pub(crate) fn record_insert_latency(&self, table: &str, started: Instant) {
+        if let Some(tl) = self.latency.get(table) {
+            tl.insert.record(started.elapsed());
+        }
+    }
+
+    /// Record one sample op's service time (see
+    /// [`ServerInner::record_insert_latency`]).
+    pub(crate) fn record_sample_latency(&self, table: &str, started: Instant) {
+        if let Some(tl) = self.latency.get(table) {
+            tl.sample.record(started.elapsed());
+        }
     }
 
     /// Bytes sealed into the persist journal but not yet spilled to disk
@@ -1072,13 +1101,40 @@ fn serve_connection(mut stream: Box<dyn MsgStream>, inner: Arc<ServerInner>) -> 
                 // on the subsequent CreateItem.
             }
             Message::CreateItem { id, item, timeout_ms } => {
+                let started = Instant::now();
                 let reply = (|| {
                     let table = inner.table(&item.table)?.clone();
                     let item = resolve_item(&inner, &pending, &item)?;
                     inner.gated_insert(&table, item, Duration::from_millis(timeout_ms))?;
                     Ok(())
                 })();
+                inner.record_insert_latency(&item.table, started);
                 send_reply(stream.as_mut(), id, reply.map(|()| String::new()))?;
+            }
+            Message::CreateItemBatch { id, items, timeout_ms } => {
+                if items.len() > MAX_BATCH_OPS {
+                    send_err(stream.as_mut(), id, &batch_too_large(items.len()))?;
+                } else {
+                    // Ops apply in order and fail independently; the
+                    // blocking `gated_insert` IS the threaded model's
+                    // park-at-the-blocked-op semantics (nothing after the
+                    // blocked op runs until it resolves).
+                    let timeout = Duration::from_millis(timeout_ms);
+                    let mut results = Vec::with_capacity(items.len());
+                    for wire_item in &items {
+                        let started = Instant::now();
+                        let r = (|| {
+                            let table = inner.table(&wire_item.table)?.clone();
+                            let item = resolve_item(&inner, &pending, wire_item)?;
+                            inner.gated_insert(&table, item, timeout)?;
+                            Ok(String::new())
+                        })();
+                        inner.record_insert_latency(&wire_item.table, started);
+                        results.push(BatchResult::from_result(r.as_ref().map(String::clone)));
+                    }
+                    stream.send(Message::BatchReply { id, results })?;
+                    stream.flush()?;
+                }
             }
             Message::SampleRequest {
                 id,
@@ -1086,6 +1142,7 @@ fn serve_connection(mut stream: Box<dyn MsgStream>, inner: Arc<ServerInner>) -> 
                 num_samples,
                 timeout_ms,
             } => {
+                let started = Instant::now();
                 let result = (|| {
                     let table = inner.table(&table)?.clone();
                     inner.gated_sample(
@@ -1094,6 +1151,7 @@ fn serve_connection(mut stream: Box<dyn MsgStream>, inner: Arc<ServerInner>) -> 
                         Duration::from_millis(timeout_ms),
                     )
                 })();
+                inner.record_sample_latency(&table, started);
                 match result {
                     Ok(samples) => {
                         stream.send(sample_reply(id, &samples))?;
@@ -1118,6 +1176,32 @@ fn serve_connection(mut stream: Box<dyn MsgStream>, inner: Arc<ServerInner>) -> 
                     Ok(format!("updated={updated} deleted={deleted}"))
                 })();
                 send_reply(stream.as_mut(), id, reply)?;
+            }
+            Message::PriorityUpdateBatch { id, ops } => {
+                if ops.len() > MAX_BATCH_OPS {
+                    send_err(stream.as_mut(), id, &batch_too_large(ops.len()))?;
+                } else {
+                    // Mutations never park: one gate entry covers the whole
+                    // batch, and each op's keys are already grouped per
+                    // shard by `update_priorities`/`delete` — N ops cost one
+                    // gate acquisition and one lock hold per touched shard.
+                    let results = {
+                        let _guard = inner.gate.enter();
+                        ops.iter()
+                            .map(|op| {
+                                let r = (|| {
+                                    let table = inner.table(&op.table)?;
+                                    let updated = table.update_priorities(&op.updates)?;
+                                    let deleted = table.delete(&op.deletes)?;
+                                    Ok(format!("updated={updated} deleted={deleted}"))
+                                })();
+                                BatchResult::from_result(r.as_ref().map(String::clone))
+                            })
+                            .collect()
+                    };
+                    stream.send(Message::BatchReply { id, results })?;
+                    stream.flush()?;
+                }
             }
             Message::Reset { id, table } => {
                 let reply = (|| {
@@ -1216,7 +1300,8 @@ fn serve_connection(mut stream: Box<dyn MsgStream>, inner: Arc<ServerInner>) -> 
             | Message::Err { .. }
             | Message::SampleData { .. }
             | Message::Info { .. }
-            | Message::WatchUpdate { .. } => {
+            | Message::WatchUpdate { .. }
+            | Message::BatchReply { .. } => {
                 return Err(Error::Decode("client sent a server-side message".into()));
             }
         }
@@ -1226,6 +1311,13 @@ fn serve_connection(mut stream: Box<dyn MsgStream>, inner: Arc<ServerInner>) -> 
         // event model's per-service-pass emission).
         flush_watch_updates(stream.as_mut(), &dirty, &watches)?;
     }
+}
+
+/// The per-frame rejection for batches beyond [`MAX_BATCH_OPS`]: a clean
+/// `Err` reply (code `INVALID`), never a decode failure — a misconfigured
+/// client keeps a usable connection. Shared by both service models.
+pub(crate) fn batch_too_large(n: usize) -> Error {
+    Error::InvalidArgument(format!("batch of {n} ops exceeds server cap {MAX_BATCH_OPS}"))
 }
 
 fn send_reply(stream: &mut dyn MsgStream, id: u64, result: Result<String>) -> Result<()> {
@@ -1255,7 +1347,7 @@ mod tests {
     use super::*;
     use crate::core::chunk::Compression;
     use crate::core::tensor::Tensor;
-    use crate::net::wire::Message;
+    use crate::net::wire::{Message, PriorityUpdateOp};
     use std::io::{BufReader, BufWriter, Write};
 
     fn mk_chunk(key: u64, v: f32) -> Arc<Chunk> {
@@ -1836,6 +1928,17 @@ mod tests {
                 Message::WatchUpdate { id, table, info } => {
                     format!("watch {id} {table} size={}", info.size)
                 }
+                Message::BatchReply { id, results } => format!(
+                    "batch {id} [{}]",
+                    results
+                        .iter()
+                        .map(|r| match r {
+                            BatchResult::Ok { detail } => format!("ok:{detail}"),
+                            BatchResult::Err { code, .. } => format!("err:{code}"),
+                        })
+                        .collect::<Vec<_>>()
+                        .join(",")
+                ),
                 other => format!("unexpected {other:?}"),
             }
         }
@@ -1958,6 +2061,63 @@ mod tests {
         conn.flush().unwrap();
         log.push(describe(conn.recv().unwrap()));
         log.push(describe(conn.recv().unwrap()));
+        // --- Wire v3 (DESIGN.md §13): batched frames, reply-for-reply.
+        // Queue state here: items {4, 5}, max_size 3 (admin-raised) — one
+        // free slot. The batch fills it (ok), hits an unknown table
+        // (per-op err), then blocks on the full queue until the 50 ms
+        // deadline (per-op timeout err): one frame exercising success,
+        // failure, and the park/timeout path in one deterministic reply.
+        conn.send(Message::InsertChunks {
+            chunks: vec![mk_chunk(206, 6.0), mk_chunk(207, 7.0)],
+        })
+        .unwrap();
+        let mut bad = item(6);
+        bad.table = "nope".into();
+        conn.send(Message::CreateItemBatch {
+            id: 15,
+            items: vec![item(6), bad, item(7)],
+            timeout_ms: 50,
+        })
+        .unwrap();
+        conn.flush().unwrap();
+        log.push(describe(conn.recv().unwrap()));
+        // Batched mutations under one id: an update+delete op (applied in
+        // order), then an unknown-table op (independent per-op failure).
+        conn.send(Message::PriorityUpdateBatch {
+            id: 16,
+            ops: vec![
+                PriorityUpdateOp {
+                    table: "q".into(),
+                    updates: vec![(4, 9.0)],
+                    deletes: vec![5],
+                },
+                PriorityUpdateOp {
+                    table: "nope".into(),
+                    updates: vec![],
+                    deletes: vec![],
+                },
+            ],
+        })
+        .unwrap();
+        // An oversized batch draws a clean per-frame error and leaves the
+        // connection usable (the InfoRequest after it still answers).
+        conn.send(Message::PriorityUpdateBatch {
+            id: 17,
+            ops: vec![
+                PriorityUpdateOp {
+                    table: "q".into(),
+                    updates: vec![],
+                    deletes: vec![],
+                };
+                crate::net::wire::MAX_BATCH_OPS + 1
+            ],
+        })
+        .unwrap();
+        conn.send(Message::InfoRequest { id: 18 }).unwrap();
+        conn.flush().unwrap();
+        for _ in 0..3 {
+            log.push(describe(conn.recv().unwrap()));
+        }
         log
     }
 
@@ -1980,6 +2140,10 @@ mod tests {
             "ack 11".to_string(),
             "ack 13".to_string(),
             "info 14 [(\"q\", 2)]".to_string(),
+            "batch 15 [ok:,err:1,err:2]".to_string(),
+            "batch 16 [ok:updated=1 deleted=1,err:1]".to_string(),
+            "err 17 code=4".to_string(),
+            "info 18 [(\"q\", 2)]".to_string(),
         ];
         // Both models × both transport paths (TCP exercises partial
         // frames and the writev queue; in-proc the occupancy wakers).

@@ -61,6 +61,48 @@ pub struct WireSampleInfo {
     pub table_size: u64,
 }
 
+/// One priority-mutation op inside a [`Message::PriorityUpdateBatch`]:
+/// the payload of a `MutatePriorities` without its request id (the batch
+/// carries one id and the reply reports per-op outcomes positionally).
+#[derive(Clone, Debug, PartialEq)]
+pub struct PriorityUpdateOp {
+    pub table: String,
+    pub updates: Vec<(u64, f64)>,
+    pub deletes: Vec<u64>,
+}
+
+/// Per-op outcome inside a [`Message::BatchReply`], in op order. A batch
+/// is applied op by op; one failing op does not abort the ops after it,
+/// so every slot reports independently.
+#[derive(Clone, Debug, PartialEq)]
+pub enum BatchResult {
+    /// The op committed; `detail` matches what a standalone `Ack` carries.
+    Ok { detail: String },
+    /// The op failed; `code` is a [`code`] constant.
+    Err { code: u8, message: String },
+}
+
+impl BatchResult {
+    /// Collapse to a client-side `Result`, rebuilding the error by code.
+    pub fn into_result(self) -> Result<String> {
+        match self {
+            BatchResult::Ok { detail } => Ok(detail),
+            BatchResult::Err { code, message } => Err(error_from_code(code, message)),
+        }
+    }
+
+    /// Build from a server-side op outcome.
+    pub fn from_result(r: std::result::Result<String, &Error>) -> BatchResult {
+        match r {
+            Ok(detail) => BatchResult::Ok { detail },
+            Err(e) => BatchResult::Err {
+                code: error_code(e),
+                message: e.to_string(),
+            },
+        }
+    }
+}
+
 /// Everything that travels between client and server.
 #[derive(Debug)]
 pub enum Message {
@@ -115,6 +157,21 @@ pub enum Message {
     WatchRequest { id: u64, table: String },
     /// Cancel the watch subscription `id`. Ack'd.
     WatchCancel { id: u64 },
+    /// Wire v3 (DESIGN.md §13): N `CreateItem` ops in one frame, applied
+    /// in order, answered by one [`Message::BatchReply`] with a per-op
+    /// outcome in each slot — N inserts cost one syscall each way. Items
+    /// may target different tables; each op fails independently. Batches
+    /// larger than [`MAX_BATCH_OPS`] are rejected with a per-frame `Err`
+    /// (the connection stays usable).
+    CreateItemBatch {
+        id: u64,
+        items: Vec<WireItem>,
+        timeout_ms: u64,
+    },
+    /// Wire v3: N priority-mutation ops in one frame, one `BatchReply`.
+    /// Each op is a `MutatePriorities` payload; keys inside one op are
+    /// grouped per shard under one lock acquisition by the table.
+    PriorityUpdateBatch { id: u64, ops: Vec<PriorityUpdateOp> },
 
     // ---- server → client ----
     /// Positive acknowledgement of the request with matching `id`.
@@ -138,6 +195,9 @@ pub enum Message {
         table: String,
         info: TableInfo,
     },
+    /// Wire v3 reply to a batch frame: one [`BatchResult`] per op, in op
+    /// order, under the batch's single request id.
+    BatchReply { id: u64, results: Vec<BatchResult> },
 }
 
 /// Error codes carried by [`Message::Err`].
@@ -192,6 +252,55 @@ const TAG_INFO: u8 = 131;
 /// v2 of `SampleData`: at least one item carries trajectory slices.
 const TAG_SAMPLE_DATA_V2: u8 = 132;
 const TAG_WATCH_UPDATE: u8 = 133;
+/// v3 batched ops (bodies start with the versioned envelope).
+const TAG_CREATE_ITEM_BATCH: u8 = 12;
+const TAG_PRIORITY_UPDATE_BATCH: u8 = 13;
+const TAG_BATCH_REPLY: u8 = 134;
+
+/// Server-side cap on ops per batch frame. Larger batches are refused
+/// with a clean per-frame `Err` (code `INVALID`) rather than a decode
+/// failure, so a misconfigured client keeps a usable connection. The
+/// decode-level cap (1 << 20) only guards against corrupt length fields.
+pub const MAX_BATCH_OPS: usize = 4096;
+
+/// Versioned envelope leading every v3 body: `[magic "Rv"][version][flags]`.
+///
+/// Earlier frame revisions were told apart by tag archaeology
+/// (`CREATE_ITEM` vs `CREATE_ITEM_V2`, checkpoint magics). From v3 on, a
+/// new frame family declares its version explicitly: a decoder that sees
+/// version 4 reports "unsupported wire version 4" instead of a baffling
+/// field-level decode error, and flags give v3 room to grow without a new
+/// tag. v1/v2 frame bodies are byte-for-byte unchanged.
+const ENVELOPE_MAGIC: [u8; 2] = *b"Rv";
+/// Wire version stamped into (and required from) the envelope.
+pub const WIRE_VERSION: u8 = 3;
+
+fn put_envelope<W: Write>(w: &mut W) -> Result<()> {
+    w.write_all(&ENVELOPE_MAGIC)?;
+    put_u8(w, WIRE_VERSION)?;
+    put_u8(w, 0) // flags, reserved
+}
+
+fn check_envelope<R: Read>(r: &mut R) -> Result<()> {
+    let mut magic = [0u8; 2];
+    r.read_exact(&mut magic)?;
+    if magic != ENVELOPE_MAGIC {
+        return Err(Error::Decode(format!(
+            "bad envelope magic {magic:02x?} (expected {ENVELOPE_MAGIC:02x?})"
+        )));
+    }
+    let version = get_u8(r)?;
+    if version != WIRE_VERSION {
+        return Err(Error::Decode(format!(
+            "unsupported wire version {version} (this build speaks {WIRE_VERSION})"
+        )));
+    }
+    let flags = get_u8(r)?;
+    if flags != 0 {
+        return Err(Error::Decode(format!("unknown envelope flags {flags:#x}")));
+    }
+    Ok(())
+}
 
 /// Optional-field layout shared by the admin frames: `[u8 present][value]`.
 fn put_opt_u64<W: Write>(w: &mut W, v: Option<u64>) -> Result<()> {
@@ -406,6 +515,55 @@ impl Message {
                 put_u64(&mut b, *id)?;
                 TAG_WATCH_CANCEL
             }
+            Message::CreateItemBatch { id, items, timeout_ms } => {
+                put_envelope(&mut b)?;
+                put_u64(&mut b, *id)?;
+                put_u32(&mut b, items.len() as u32)?;
+                for item in items {
+                    // The v2 item layout carries flat and trajectory items
+                    // alike, so a batch never needs two encodings.
+                    put_wire_item_v2(&mut b, item)?;
+                }
+                put_u64(&mut b, *timeout_ms)?;
+                TAG_CREATE_ITEM_BATCH
+            }
+            Message::PriorityUpdateBatch { id, ops } => {
+                put_envelope(&mut b)?;
+                put_u64(&mut b, *id)?;
+                put_u32(&mut b, ops.len() as u32)?;
+                for op in ops {
+                    put_string(&mut b, &op.table)?;
+                    put_u32(&mut b, op.updates.len() as u32)?;
+                    for (k, p) in &op.updates {
+                        put_u64(&mut b, *k)?;
+                        put_f64(&mut b, *p)?;
+                    }
+                    put_u32(&mut b, op.deletes.len() as u32)?;
+                    for k in &op.deletes {
+                        put_u64(&mut b, *k)?;
+                    }
+                }
+                TAG_PRIORITY_UPDATE_BATCH
+            }
+            Message::BatchReply { id, results } => {
+                put_envelope(&mut b)?;
+                put_u64(&mut b, *id)?;
+                put_u32(&mut b, results.len() as u32)?;
+                for res in results {
+                    match res {
+                        BatchResult::Ok { detail } => {
+                            put_u8(&mut b, 1)?;
+                            put_string(&mut b, detail)?;
+                        }
+                        BatchResult::Err { code, message } => {
+                            put_u8(&mut b, 0)?;
+                            put_u8(&mut b, *code)?;
+                            put_string(&mut b, message)?;
+                        }
+                    }
+                }
+                TAG_BATCH_REPLY
+            }
             Message::Ack { id, detail } => {
                 put_u64(&mut b, *id)?;
                 put_string(&mut b, detail)?;
@@ -532,6 +690,70 @@ impl Message {
                 table: get_string(&mut r)?,
             },
             TAG_WATCH_CANCEL => Message::WatchCancel { id: get_u64(&mut r)? },
+            TAG_CREATE_ITEM_BATCH => {
+                check_envelope(&mut r)?;
+                let id = get_u64(&mut r)?;
+                let n = get_u32(&mut r)? as usize;
+                if n > 1 << 20 {
+                    return Err(Error::Decode(format!("{n} batch items exceeds limit")));
+                }
+                let items = (0..n).map(|_| get_wire_item_v2(&mut r)).collect::<Result<_>>()?;
+                Message::CreateItemBatch {
+                    id,
+                    items,
+                    timeout_ms: get_u64(&mut r)?,
+                }
+            }
+            TAG_PRIORITY_UPDATE_BATCH => {
+                check_envelope(&mut r)?;
+                let id = get_u64(&mut r)?;
+                let n = get_u32(&mut r)? as usize;
+                if n > 1 << 20 {
+                    return Err(Error::Decode(format!("{n} batch ops exceeds limit")));
+                }
+                let ops = (0..n)
+                    .map(|_| {
+                        let table = get_string(&mut r)?;
+                        let nu = get_u32(&mut r)? as usize;
+                        if nu > 1 << 24 {
+                            return Err(Error::Decode("too many updates".into()));
+                        }
+                        let updates = (0..nu)
+                            .map(|_| Ok((get_u64(&mut r)?, get_f64(&mut r)?)))
+                            .collect::<Result<_>>()?;
+                        let nd = get_u32(&mut r)? as usize;
+                        if nd > 1 << 24 {
+                            return Err(Error::Decode("too many deletes".into()));
+                        }
+                        let deletes = (0..nd).map(|_| get_u64(&mut r)).collect::<Result<_>>()?;
+                        Ok(PriorityUpdateOp {
+                            table,
+                            updates,
+                            deletes,
+                        })
+                    })
+                    .collect::<Result<_>>()?;
+                Message::PriorityUpdateBatch { id, ops }
+            }
+            TAG_BATCH_REPLY => {
+                check_envelope(&mut r)?;
+                let id = get_u64(&mut r)?;
+                let n = get_u32(&mut r)? as usize;
+                if n > 1 << 20 {
+                    return Err(Error::Decode(format!("{n} batch results exceeds limit")));
+                }
+                let results = (0..n)
+                    .map(|_| match get_u8(&mut r)? {
+                        1 => Ok(BatchResult::Ok { detail: get_string(&mut r)? }),
+                        0 => Ok(BatchResult::Err {
+                            code: get_u8(&mut r)?,
+                            message: get_string(&mut r)?,
+                        }),
+                        f => Err(Error::Decode(format!("bad batch result flag {f}"))),
+                    })
+                    .collect::<Result<_>>()?;
+                Message::BatchReply { id, results }
+            }
             TAG_ACK => Message::Ack {
                 id: get_u64(&mut r)?,
                 detail: get_string(&mut r)?,
@@ -1058,6 +1280,14 @@ mod tests {
             Message::InfoRequest { id: 7 },
             Message::Ack { id: 1, detail: "ok".into() },
             Message::InsertChunks { chunks: vec![mk_chunk(3)] },
+            Message::PriorityUpdateBatch {
+                id: 2,
+                ops: vec![PriorityUpdateOp {
+                    table: "t".into(),
+                    updates: vec![(1, 2.0)],
+                    deletes: vec![],
+                }],
+            },
         ] {
             let mut streamed = Vec::new();
             msg.write_frame(&mut streamed).unwrap();
@@ -1284,6 +1514,156 @@ mod tests {
     fn v1_frame_rejects_trajectory_items() {
         let mut buf = Vec::new();
         assert!(put_wire_item(&mut buf, &trajectory_item()).is_err());
+    }
+
+    fn flat_item(key: u64) -> WireItem {
+        WireItem {
+            key,
+            table: "t".into(),
+            priority: 1.0,
+            chunk_keys: vec![11],
+            offset: 0,
+            length: 2,
+            times_sampled: 0,
+            columns: None,
+        }
+    }
+
+    #[test]
+    fn create_item_batch_roundtrip() {
+        // Mixed batch: flat and trajectory items ride the same frame.
+        let msg = Message::CreateItemBatch {
+            id: 21,
+            items: vec![flat_item(1), trajectory_item(), flat_item(3)],
+            timeout_ms: 750,
+        };
+        match roundtrip(&msg) {
+            Message::CreateItemBatch { id, items, timeout_ms } => {
+                assert_eq!(id, 21);
+                assert_eq!(items.len(), 3);
+                assert_eq!(items[0], flat_item(1));
+                assert_eq!(items[1], trajectory_item());
+                assert_eq!(timeout_ms, 750);
+            }
+            other => panic!("wrong message {other:?}"),
+        }
+    }
+
+    #[test]
+    fn priority_update_batch_roundtrip() {
+        let msg = Message::PriorityUpdateBatch {
+            id: 8,
+            ops: vec![
+                PriorityUpdateOp {
+                    table: "a".into(),
+                    updates: vec![(1, 0.5), (2, 2.0)],
+                    deletes: vec![9],
+                },
+                PriorityUpdateOp {
+                    table: "b".into(),
+                    updates: vec![],
+                    deletes: vec![],
+                },
+            ],
+        };
+        match roundtrip(&msg) {
+            Message::PriorityUpdateBatch { id, ops } => {
+                assert_eq!(id, 8);
+                assert_eq!(ops.len(), 2);
+                assert_eq!(ops[0].updates, vec![(1, 0.5), (2, 2.0)]);
+                assert_eq!(ops[0].deletes, vec![9]);
+                assert_eq!(ops[1].table, "b");
+            }
+            other => panic!("wrong message {other:?}"),
+        }
+    }
+
+    #[test]
+    fn batch_reply_roundtrip() {
+        let msg = Message::BatchReply {
+            id: 4,
+            results: vec![
+                BatchResult::Ok { detail: "inserted".into() },
+                BatchResult::Err {
+                    code: code::NOT_FOUND,
+                    message: "table missing".into(),
+                },
+            ],
+        };
+        match roundtrip(&msg) {
+            Message::BatchReply { id, results } => {
+                assert_eq!(id, 4);
+                assert_eq!(results[0].clone().into_result().unwrap(), "inserted");
+                let err = results[1].clone().into_result().unwrap_err();
+                assert!(matches!(err, Error::TableNotFound(_)), "{err}");
+            }
+            other => panic!("wrong message {other:?}"),
+        }
+    }
+
+    #[test]
+    fn v3_envelope_rejects_wrong_version_and_magic() {
+        let (tag, body) = Message::PriorityUpdateBatch { id: 1, ops: vec![] }
+            .encode_body()
+            .unwrap();
+        assert_eq!(&body[..2], &ENVELOPE_MAGIC);
+        assert_eq!(body[2], WIRE_VERSION);
+        // A future version must fail with an explicit version message, not
+        // a field-level decode error.
+        let mut future = body.clone();
+        future[2] = WIRE_VERSION + 1;
+        let err = Message::decode_body(tag, &future).unwrap_err();
+        assert!(err.to_string().contains("unsupported wire version"), "{err}");
+        // Corrupt magic and reserved flags are rejected too.
+        let mut bad_magic = body.clone();
+        bad_magic[0] = b'X';
+        assert!(Message::decode_body(tag, &bad_magic).is_err());
+        let mut bad_flags = body;
+        bad_flags[3] = 0x80;
+        assert!(Message::decode_body(tag, &bad_flags).is_err());
+    }
+
+    #[test]
+    fn v3_truncated_frame_rejected_at_every_cut() {
+        // The existing every-cut property extended to v3 envelopes: a
+        // batch frame cut anywhere (inside the envelope, an item, or the
+        // trailing timeout) errors cleanly.
+        let msg = Message::CreateItemBatch {
+            id: 2,
+            items: vec![flat_item(1), trajectory_item()],
+            timeout_ms: 100,
+        };
+        let mut full = Vec::new();
+        msg.write_frame(&mut full).unwrap();
+        for cut in 0..full.len() {
+            let mut cursor = std::io::Cursor::new(&full[..cut]);
+            assert!(
+                Message::read_frame(&mut cursor).is_err(),
+                "truncation at {cut}/{} was accepted",
+                full.len()
+            );
+        }
+        assert!(Message::read_frame(&mut std::io::Cursor::new(full)).is_ok());
+    }
+
+    #[test]
+    fn v3_decode_caps_reject_corrupt_counts() {
+        // A corrupt op count past the decode cap errors without allocating.
+        let mut body = Vec::new();
+        put_envelope(&mut body).unwrap();
+        put_u64(&mut body, 1).unwrap();
+        put_u32(&mut body, (1 << 20) + 1).unwrap();
+        assert!(Message::decode_body(TAG_PRIORITY_UPDATE_BATCH, &body).is_err());
+        let mut items = Vec::new();
+        put_envelope(&mut items).unwrap();
+        put_u64(&mut items, 1).unwrap();
+        put_u32(&mut items, (1 << 20) + 1).unwrap();
+        assert!(Message::decode_body(TAG_CREATE_ITEM_BATCH, &items).is_err());
+        let mut results = Vec::new();
+        put_envelope(&mut results).unwrap();
+        put_u64(&mut results, 1).unwrap();
+        put_u32(&mut results, (1 << 20) + 1).unwrap();
+        assert!(Message::decode_body(TAG_BATCH_REPLY, &results).is_err());
     }
 
     /// A reader that yields its script one slice at a time, interleaving

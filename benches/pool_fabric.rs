@@ -1,0 +1,147 @@
+//! Replay fabric sweep (DESIGN.md §14): one `reverb+pool://` facade over
+//! 1 / 2 / 4 independent in-proc members, measured through the *whole*
+//! client stack — writers consistent-hash their items across members,
+//! samplers draw members mass-weighted, and every fleet worker dials the
+//! single pool address exactly as it would dial one server.
+//!
+//! Three workloads per member count: insert-only, sample-only (prefilled
+//! tables), and the mixed writer/sampler loop. Members are independent
+//! servers (§3.6 sharding), so aggregate throughput should rise with the
+//! member count until the bench box itself saturates; the facade's routing
+//! overhead is the thing this sweep keeps honest.
+//!
+//! Run: `cargo bench --bench pool_fabric`
+//! (REVERB_BENCH_FAST=1 for the CI quick pass.) Emits `BENCH_fabric.json`
+//! for the CI perf trajectory.
+
+use reverb::core::table::TableConfig;
+use reverb::net::server::Server;
+use reverb::util::bench::*;
+use reverb::util::stats::{fmt_qps, json_f64_prec};
+use reverb::{Fabric, FabricOptions};
+
+const PAYLOAD_FLOATS: usize = 100; // 400 B, the paper's small-payload point
+const PREFILL_ITEMS: usize = 2_000;
+
+/// N independent members with unique in-proc names per sweep point, each
+/// prefilled so sample-only workers have mass to draw from immediately.
+fn start_members(n: usize) -> (Vec<Server>, Vec<String>) {
+    let servers: Vec<Server> = (0..n)
+        .map(|i| {
+            Server::builder()
+                .table(TableConfig::uniform_replay("t", 4_000_000))
+                .in_proc_name(format!("bench-fabric-{n}-{i}"))
+                .serve_in_proc()
+                .unwrap()
+        })
+        .collect();
+    for s in &servers {
+        prefill_table(&s.table("t").unwrap(), PREFILL_ITEMS, PAYLOAD_FLOATS);
+    }
+    let addrs = servers.iter().map(|s| s.in_proc_addr()).collect();
+    (servers, addrs)
+}
+
+fn main() {
+    let fast = fast_mode();
+    let member_counts: &[usize] = if fast { &[1, 2] } else { &[1, 2, 4] };
+    let cores = std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(2);
+    let clients = if fast { 4 } else { (2 * cores).clamp(4, 16) };
+
+    println!(
+        "# Replay fabric: {clients} clients on one reverb+pool:// address, \
+         members x workload QPS"
+    );
+    print_row(&[
+        "members".into(),
+        "insert/s".into(),
+        "sample/s".into(),
+        "mixed/s".into(),
+    ]);
+    print_row(&["---".into(), "---".into(), "---".into(), "---".into()]);
+
+    let mut rows: Vec<(usize, f64, f64, f64)> = Vec::new();
+    for &n in member_counts {
+        let (servers, addrs) = start_members(n);
+        let fabric = Fabric::connect(&addrs, FabricOptions::default()).unwrap();
+        let pool = fabric.pool_addr();
+
+        let ins = run_insert_clients(&pool, &["t".into()], clients, PAYLOAD_FLOATS, window());
+        let smp = run_sample_clients(&pool, "t", clients, PAYLOAD_FLOATS, window(), 4);
+        let mix = run_mixed_clients(&pool, "t", clients, PAYLOAD_FLOATS, window());
+
+        // Sanity: consistent hashing spread the inserts over every member.
+        let sizes: Vec<usize> = servers
+            .iter()
+            .map(|s| s.table("t").unwrap().size())
+            .collect();
+        assert!(
+            sizes.iter().all(|&s| s > PREFILL_ITEMS),
+            "a member received no routed inserts: {sizes:?}"
+        );
+
+        print_row(&[
+            n.to_string(),
+            fmt_qps(ins.qps()),
+            fmt_qps(smp.qps()),
+            fmt_qps(mix.qps()),
+        ]);
+        rows.push((n, ins.qps(), smp.qps(), mix.qps()));
+        drop(fabric);
+        drop(servers);
+    }
+
+    let base = rows[0];
+    let last = *rows.last().unwrap();
+    let insert_scaling = last.1 / base.1.max(1.0);
+    let sample_scaling = last.2 / base.2.max(1.0);
+
+    let results: Vec<String> = rows
+        .iter()
+        .map(|(n, i, s, m)| {
+            format!(
+                "    {{\"members\": {n}, \"insert_qps\": {}, \"sample_qps\": {}, \
+                 \"mixed_qps\": {}}}",
+                json_f64_prec(*i, 1),
+                json_f64_prec(*s, 1),
+                json_f64_prec(*m, 1)
+            )
+        })
+        .collect();
+    let json = format!(
+        "{{\n  \"bench\": \"pool_fabric\",\n  \"clients\": {clients},\n  \
+         \"payload_floats\": {PAYLOAD_FLOATS},\n  \"fast\": {fast},\n  \
+         \"insert_scaling\": {},\n  \"sample_scaling\": {},\n  \
+         \"results\": [\n{}\n  ]\n}}\n",
+        json_f64_prec(insert_scaling, 2),
+        json_f64_prec(sample_scaling, 2),
+        results.join(",\n")
+    );
+    std::fs::write("BENCH_fabric.json", &json).expect("write BENCH_fabric.json");
+    println!("\nwrote BENCH_fabric.json");
+
+    println!();
+    if fast {
+        println!(
+            "RESULT: SMOKE — fast mode; {} -> {} members scaled inserts \
+             {insert_scaling:.2}x, samples {sample_scaling:.2}x.",
+            base.0, last.0
+        );
+    } else if insert_scaling >= 1.2 {
+        println!(
+            "RESULT: PASS — {} members sustain {insert_scaling:.2}x the single-member \
+             insert rate through one pool address ({} -> {}).",
+            last.0,
+            fmt_qps(base.1),
+            fmt_qps(last.1)
+        );
+    } else {
+        println!(
+            "RESULT: WARNING — insert scaling {insert_scaling:.2}x at {} members \
+             (want >= 1.2x); rerun on an idle multi-core box.",
+            last.0
+        );
+    }
+}

@@ -1,0 +1,2175 @@
+//! Replay fabric (DESIGN.md §14): N independent Reverb servers behind one
+//! `reverb+pool://` facade.
+//!
+//! [`ClientPool`](super::ClientPool) composes clients *above* the
+//! connection layer, so every caller must know it is talking to a pool.
+//! The fabric instead slots in *below* [`Conn`]: dialing
+//! `reverb+pool://addr1,addr2,...` yields a [`FabricStream`] — an ordinary
+//! `MsgStream` whose `send`/`recv` route frames across the members — so
+//! the entire existing stack (`Client`, `Writer`, `TrajectoryWriter`,
+//! `Sampler`, `Dataset`, `Pipeline`) runs over a pool unchanged.
+//!
+//! Routing:
+//! - **Writers** consistent-hash item keys over the live members with
+//!   rendezvous (highest-random-weight) hashing, so membership changes
+//!   remap only the failed member's ~1/N of the key space — no global
+//!   reshuffle. Chunks are not routable when they arrive (they precede
+//!   the items that reference them), so the stream retains a bounded
+//!   cache and forwards each chunk to a member the first time an item
+//!   routed there references it.
+//! - **Samplers** draw members mass-weighted by each member's
+//!   `TableInfo::total_weight`, refreshed through the §12 watch streams,
+//!   so the pool samples each server in proportion to stored mass.
+//! - **Fan-out ops** (info, reset, checkpoint, admin, ping) go to every
+//!   live member and the replies merge into one frame.
+//!
+//! Every request still gets exactly one reply, in facade send order —
+//! the strict-order contract [`Pipeline`](super::Pipeline) depends on —
+//! even when a member dies mid-flight: pending operations on the dead
+//! member are re-routed (inserts re-hash to the surviving owners, sample
+//! requests re-pick) or answered with a synthesized `Err` frame, never
+//! silently dropped. Failover is at-least-once: an insert the dead member
+//! committed but never acked may be re-applied on a survivor.
+//!
+//! A shared [`FabricCore`] per member-set (process-wide registry, so every
+//! stream dialing the same pool sees one health view) runs the membership
+//! layer: a prober thread pings each member every `ping_interval`,
+//! quarantines members on failure, re-probes with exponential backoff, and
+//! lets a warm standby — a thread tailing the member's `RVBCKPT3` chain
+//! via [`persist::Follower`](crate::persist::Follower) — take over the
+//! member's hash slot (same rendezvous identity, new address) when it
+//! dies.
+
+use super::{Client, Conn};
+use crate::core::chunk::Chunk;
+use crate::core::table::TableInfo;
+use crate::error::{Error, Result};
+use crate::net::transport::{self, MsgStream, PollSource};
+use crate::net::wire::{code, BatchResult, Message, PriorityUpdateOp, WireItem};
+use crate::persist::segment::DecodedRecord;
+use crate::persist::{FollowEvent, Follower, MANIFEST_NAME};
+use std::collections::{HashMap, HashSet, VecDeque};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock, Weak};
+use std::time::{Duration, Instant};
+
+/// URL prefix of the pool facade: `reverb+pool://addr1,addr2,...` where
+/// each member address is any scheme [`transport::dial`] accepts.
+pub const POOL_SCHEME: &str = "reverb+pool://";
+
+/// Tuning for the membership/health layer.
+#[derive(Clone, Debug)]
+pub struct FabricOptions {
+    /// Liveness probe period (and standby poll cadence).
+    pub ping_interval: Duration,
+    /// First quarantine backoff; doubles per failed re-probe.
+    pub quarantine_base: Duration,
+    /// Backoff ceiling.
+    pub quarantine_max: Duration,
+    /// A member continuously up this long gets its backoff reset, so a
+    /// stable member that later flaps starts from the base again.
+    pub stable_after: Duration,
+    /// Per-stream bound on retained chunks awaiting (re-)routing.
+    pub chunk_cache: usize,
+    /// How long a standby's final drain must observe a quiet (non-growing)
+    /// chain before taking over a dead member's slot. Must comfortably
+    /// exceed the primary's shutdown rotation (its last durable manifest
+    /// can land shortly *after* its connections drop).
+    pub takeover_grace: Duration,
+    /// Warm standbys, each tailing one member's checkpoint chain.
+    pub standbys: Vec<StandbyConfig>,
+}
+
+impl Default for FabricOptions {
+    fn default() -> FabricOptions {
+        FabricOptions {
+            ping_interval: Duration::from_millis(250),
+            quarantine_base: Duration::from_millis(500),
+            quarantine_max: Duration::from_secs(30),
+            stable_after: Duration::from_secs(10),
+            chunk_cache: 4096,
+            takeover_grace: Duration::from_millis(750),
+            standbys: Vec::new(),
+        }
+    }
+}
+
+/// One warm standby: a replica server that tails `dir` (the followed
+/// member's `checkpoint_dir`) and takes over that member's hash slot on
+/// failure.
+#[derive(Clone, Debug)]
+pub struct StandbyConfig {
+    /// The followed member's configured address (its rendezvous identity).
+    pub follows: String,
+    /// Address of the standby server (must serve the same tables).
+    pub addr: String,
+    /// The followed member's checkpoint directory (shared filesystem).
+    pub dir: PathBuf,
+}
+
+// ---------------------------------------------------------------------
+// Hashing
+// ---------------------------------------------------------------------
+
+fn fnv1a(s: &str) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for b in s.as_bytes() {
+        h ^= *b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+fn splitmix64(mut x: u64) -> u64 {
+    x = x.wrapping_add(0x9e37_79b9_7f4a_7c15);
+    x = (x ^ (x >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+    x = (x ^ (x >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
+    x ^ (x >> 31)
+}
+
+/// Rendezvous score of `key` on a node: the key's owner is the live node
+/// with the highest score, so removing a node remaps only its own keys.
+fn hrw_score(node_hash: u64, key: u64) -> u64 {
+    splitmix64(node_hash ^ splitmix64(key))
+}
+
+// ---------------------------------------------------------------------
+// Membership
+// ---------------------------------------------------------------------
+
+struct Health {
+    up: bool,
+    /// Next re-probe for a quarantined member.
+    reprobe_at: Instant,
+    backoff: Duration,
+    up_since: Instant,
+}
+
+/// One pool member. `node_id` (the configured address) is the stable
+/// rendezvous identity; `addr` is where the member currently lives — a
+/// standby takeover swaps the address but keeps the identity, so takeover
+/// remaps nothing.
+struct Member {
+    node_id: String,
+    node_hash: u64,
+    addr: Mutex<String>,
+    /// Bumped on takeover; streams drop stale connections lazily.
+    epoch: AtomicU64,
+    health: Mutex<Health>,
+    /// table → latest `TableInfo::total_weight` from the watch stream.
+    weights: Mutex<HashMap<String, f64>>,
+    /// Tables with a live weight-watcher thread.
+    watchers: Mutex<HashSet<String>>,
+    errors: AtomicU64,
+    quarantines: AtomicU64,
+    reroutes: AtomicU64,
+    takeovers: AtomicU64,
+}
+
+impl Member {
+    fn new(addr: &str, up: bool, opts: &FabricOptions) -> Member {
+        Member {
+            node_id: addr.to_string(),
+            node_hash: fnv1a(addr),
+            addr: Mutex::new(addr.to_string()),
+            epoch: AtomicU64::new(0),
+            health: Mutex::new(Health {
+                up,
+                reprobe_at: Instant::now() + opts.quarantine_base,
+                backoff: opts.quarantine_base,
+                up_since: Instant::now(),
+            }),
+            weights: Mutex::new(HashMap::new()),
+            watchers: Mutex::new(HashSet::new()),
+            errors: AtomicU64::new(0),
+            quarantines: AtomicU64::new(if up { 0 } else { 1 }),
+            reroutes: AtomicU64::new(0),
+            takeovers: AtomicU64::new(0),
+        }
+    }
+
+    fn is_up(&self) -> bool {
+        self.health.lock().unwrap().up
+    }
+
+    fn dial_addr(&self) -> String {
+        self.addr.lock().unwrap().clone()
+    }
+}
+
+struct StandbyState {
+    cfg: StandbyConfig,
+    member_index: usize,
+    promoted: AtomicBool,
+    /// Highest journal sequence the standby has applied.
+    applied: AtomicU64,
+}
+
+/// Shared per-pool state: membership, health, weights, standbys. One per
+/// distinct member set per process (see [`registry`]), so every stream
+/// over the same pool shares one health view.
+struct FabricCore {
+    /// Members in configured order.
+    members: Vec<Arc<Member>>,
+    opts: FabricOptions,
+    /// Round-robin / sampling-pick cursor.
+    rr: AtomicU64,
+    standbys: Vec<Arc<StandbyState>>,
+}
+
+impl FabricCore {
+    /// Rendezvous owner of `key` among live members.
+    fn owner(&self, key: u64) -> Option<usize> {
+        let mut best: Option<(u64, usize)> = None;
+        for (mi, m) in self.members.iter().enumerate() {
+            if !m.is_up() {
+                continue;
+            }
+            let score = hrw_score(m.node_hash, key);
+            if best.map(|(s, _)| score > s).unwrap_or(true) {
+                best = Some((score, mi));
+            }
+        }
+        best.map(|(_, mi)| mi)
+    }
+
+    /// Mass-weighted member pick for sampling `table`: probability
+    /// proportional to the member's last-seen total selector weight.
+    /// Falls back to round-robin while no weights are known (all zero).
+    fn pick_weighted(&self, table: &str) -> Option<usize> {
+        let up: Vec<usize> = (0..self.members.len())
+            .filter(|&mi| self.members[mi].is_up())
+            .collect();
+        if up.is_empty() {
+            return None;
+        }
+        let weights: Vec<f64> = up
+            .iter()
+            .map(|&mi| {
+                self.members[mi]
+                    .weights
+                    .lock()
+                    .unwrap()
+                    .get(table)
+                    .copied()
+                    .unwrap_or(0.0)
+                    .max(0.0)
+            })
+            .collect();
+        let total: f64 = weights.iter().sum();
+        let tick = self.rr.fetch_add(1, Ordering::Relaxed);
+        if !(total > 0.0) {
+            return Some(up[(tick as usize) % up.len()]);
+        }
+        let mut t = (splitmix64(tick) as f64 / u64::MAX as f64) * total;
+        for (j, w) in weights.iter().enumerate() {
+            t -= w;
+            if t <= 0.0 {
+                return Some(up[j]);
+            }
+        }
+        Some(*up.last().unwrap())
+    }
+
+    /// A member's connection failed fatally: quarantine it. The backoff is
+    /// left as-is (it grows on failed re-probes, not on the initial trip).
+    fn record_fatal(&self, mi: usize) {
+        let m = &self.members[mi];
+        m.errors.fetch_add(1, Ordering::Relaxed);
+        let mut h = m.health.lock().unwrap();
+        if h.up {
+            h.up = false;
+            h.reprobe_at = Instant::now() + h.backoff;
+            m.quarantines.fetch_add(1, Ordering::Relaxed);
+            log::warn!(
+                "fabric: member {} quarantined (re-probe in {:?})",
+                m.node_id,
+                h.backoff
+            );
+        }
+    }
+
+    /// A quarantined member answered a re-probe: back in rotation.
+    fn mark_up(&self, mi: usize) {
+        let m = &self.members[mi];
+        let mut h = m.health.lock().unwrap();
+        h.up = true;
+        h.up_since = Instant::now();
+        log::info!("fabric: member {} rejoined", m.node_id);
+    }
+
+    /// A failed re-probe: double the backoff toward the ceiling.
+    fn bump_backoff(&self, mi: usize) {
+        let mut h = self.members[mi].health.lock().unwrap();
+        h.backoff = (h.backoff * 2).min(self.opts.quarantine_max);
+        h.reprobe_at = Instant::now() + h.backoff;
+    }
+
+    /// A healthy ping on a member that has been stable for a while resets
+    /// its backoff to the base.
+    fn mark_stable(&self, mi: usize) {
+        let mut h = self.members[mi].health.lock().unwrap();
+        if h.up && h.up_since.elapsed() >= self.opts.stable_after {
+            h.backoff = self.opts.quarantine_base;
+        }
+    }
+
+    /// Standby takeover: the member keeps its rendezvous identity but now
+    /// lives at the standby's address. The epoch bump makes every stream
+    /// drop its stale connection lazily.
+    fn promote(&self, mi: usize, new_addr: &str) {
+        let m = &self.members[mi];
+        *m.addr.lock().unwrap() = new_addr.to_string();
+        m.epoch.fetch_add(1, Ordering::SeqCst);
+        m.takeovers.fetch_add(1, Ordering::Relaxed);
+        {
+            let mut h = m.health.lock().unwrap();
+            h.up = true;
+            h.up_since = Instant::now();
+            h.backoff = self.opts.quarantine_base;
+        }
+        log::info!(
+            "fabric: standby at {} took over member {}",
+            new_addr,
+            m.node_id
+        );
+    }
+}
+
+// ---------------------------------------------------------------------
+// Registry + construction
+// ---------------------------------------------------------------------
+
+fn registry() -> &'static Mutex<HashMap<String, Weak<FabricCore>>> {
+    static REG: OnceLock<Mutex<HashMap<String, Weak<FabricCore>>>> = OnceLock::new();
+    REG.get_or_init(|| Mutex::new(HashMap::new()))
+}
+
+fn canonical_key(addrs: &[String]) -> String {
+    let mut v: Vec<String> = addrs.to_vec();
+    v.sort();
+    v.join(",")
+}
+
+fn parse_members(spec: &str) -> Result<Vec<String>> {
+    let addrs: Vec<String> = spec
+        .split(',')
+        .map(|s| s.trim().to_string())
+        .filter(|s| !s.is_empty())
+        .collect();
+    if addrs.is_empty() {
+        return Err(Error::InvalidArgument(format!(
+            "empty member list in pool address {spec:?}"
+        )));
+    }
+    Ok(addrs)
+}
+
+/// One liveness round-trip over a raw stream.
+fn ping_roundtrip(stream: &mut Box<dyn MsgStream>, nonce: u64) -> Result<()> {
+    stream.send(Message::Ping { id: 1, nonce })?;
+    stream.flush()?;
+    match stream.recv()? {
+        Message::Pong { nonce: got, .. } if got == nonce => Ok(()),
+        other => Err(Error::Decode(format!("bad ping reply: {other:?}"))),
+    }
+}
+
+fn connect_core(addrs: &[String], opts: FabricOptions) -> Result<Arc<FabricCore>> {
+    // Concurrent member probes: one dead address must neither serialize
+    // nor fail the pool — it starts life quarantined instead. Only a pool
+    // with zero reachable members refuses to form.
+    let probes: Vec<std::thread::JoinHandle<Result<()>>> = addrs
+        .iter()
+        .map(|a| {
+            let a = a.clone();
+            std::thread::spawn(move || {
+                let mut s = transport::dial(&a)?;
+                ping_roundtrip(&mut s, 0x5eed)
+            })
+        })
+        .collect();
+    let results: Vec<Result<()>> = probes
+        .into_iter()
+        .map(|h| {
+            h.join()
+                .unwrap_or_else(|_| Err(Error::Decode("probe thread panicked".into())))
+        })
+        .collect();
+    if results.iter().all(|r| r.is_err()) {
+        let detail: Vec<String> = addrs
+            .iter()
+            .zip(&results)
+            .map(|(a, r)| format!("{a}: {}", r.as_ref().err().unwrap()))
+            .collect();
+        return Err(Error::InvalidArgument(format!(
+            "no pool member reachable: {}",
+            detail.join("; ")
+        )));
+    }
+    let members: Vec<Arc<Member>> = addrs
+        .iter()
+        .zip(&results)
+        .map(|(a, r)| Arc::new(Member::new(a, r.is_ok(), &opts)))
+        .collect();
+    for (a, r) in addrs.iter().zip(&results) {
+        if let Err(e) = r {
+            log::warn!("fabric: member {a} unreachable at connect, quarantined: {e}");
+        }
+    }
+    let mut standbys = Vec::new();
+    for cfg in &opts.standbys {
+        match members.iter().position(|m| m.node_id == cfg.follows) {
+            Some(mi) => standbys.push(Arc::new(StandbyState {
+                cfg: cfg.clone(),
+                member_index: mi,
+                promoted: AtomicBool::new(false),
+                applied: AtomicU64::new(0),
+            })),
+            None => {
+                return Err(Error::InvalidArgument(format!(
+                    "standby follows unknown member {:?}",
+                    cfg.follows
+                )))
+            }
+        }
+    }
+    let core = Arc::new(FabricCore {
+        members,
+        opts,
+        rr: AtomicU64::new(0),
+        standbys,
+    });
+    spawn_prober(&core);
+    for mi in 0..core.members.len() {
+        if core.members[mi].is_up() {
+            spawn_watchers(&core, mi);
+        }
+    }
+    for si in 0..core.standbys.len() {
+        spawn_standby(&core, si);
+    }
+    Ok(core)
+}
+
+/// Get-or-create the shared core for a member set. Cores are registered
+/// weakly: when the last fabric handle/stream drops, the core (and its
+/// prober) goes away.
+fn shared_core(addrs: &[String], opts: FabricOptions) -> Result<Arc<FabricCore>> {
+    let key = canonical_key(addrs);
+    if let Some(core) = registry().lock().unwrap().get(&key).and_then(Weak::upgrade) {
+        return Ok(core);
+    }
+    // Built outside the lock (connect does network IO); a concurrent
+    // builder may win the race, in which case we adopt its core.
+    let core = connect_core(addrs, opts)?;
+    let mut reg = registry().lock().unwrap();
+    match reg.get(&key).and_then(Weak::upgrade) {
+        Some(existing) => Ok(existing),
+        None => {
+            reg.insert(key, Arc::downgrade(&core));
+            Ok(core)
+        }
+    }
+}
+
+/// Entry point for [`transport::dial`] on a `reverb+pool://` address.
+pub(crate) fn open_stream(spec: &str) -> Result<Box<dyn MsgStream>> {
+    let addrs = parse_members(spec)?;
+    let core = shared_core(&addrs, FabricOptions::default())?;
+    Ok(Box::new(FabricStream::new(core)))
+}
+
+/// Handle on a replay fabric: constructs (or joins) the shared core for a
+/// member set, with explicit [`FabricOptions`] — the way to configure
+/// standbys and probe cadence before any `reverb+pool://` dial happens.
+pub struct Fabric {
+    core: Arc<FabricCore>,
+    addrs: Vec<String>,
+}
+
+impl Fabric {
+    /// Connect the membership layer to `addrs`. Unreachable members start
+    /// quarantined (probed back in later); only a fully unreachable pool
+    /// is an error, with per-address detail.
+    pub fn connect(addrs: &[String], opts: FabricOptions) -> Result<Fabric> {
+        let addrs: Vec<String> = addrs.to_vec();
+        if addrs.is_empty() {
+            return Err(Error::InvalidArgument("empty server pool".into()));
+        }
+        let core = shared_core(&addrs, opts)?;
+        Ok(Fabric { core, addrs })
+    }
+
+    /// The `reverb+pool://` address of this fabric — dial it with
+    /// [`Client::connect`] (or anything else that dials) to ride the
+    /// facade.
+    pub fn pool_addr(&self) -> String {
+        format!("{POOL_SCHEME}{}", self.addrs.join(","))
+    }
+
+    /// A [`Client`] over the facade.
+    pub fn client(&self) -> Result<Client> {
+        Client::connect(self.pool_addr())
+    }
+
+    /// Member rendezvous identities, in configured order.
+    pub fn member_ids(&self) -> Vec<String> {
+        self.core.members.iter().map(|m| m.node_id.clone()).collect()
+    }
+
+    /// Whether member `i` is currently in rotation.
+    pub fn member_up(&self, i: usize) -> bool {
+        self.core.members[i].is_up()
+    }
+
+    /// The address member `i` currently lives at (changes on takeover).
+    pub fn member_addr(&self, i: usize) -> String {
+        self.core.members[i].dial_addr()
+    }
+
+    /// Times member `i`'s slot was taken over by a standby.
+    pub fn member_takeovers(&self, i: usize) -> u64 {
+        self.core.members[i].takeovers.load(Ordering::Relaxed)
+    }
+
+    /// Highest journal sequence standby `i` has applied.
+    pub fn standby_applied(&self, i: usize) -> u64 {
+        self.core.standbys[i].applied.load(Ordering::Relaxed)
+    }
+
+    /// Per-member fabric gauges in Prometheus text exposition format,
+    /// suitable for concatenation with a server's `/metrics` payload.
+    pub fn metrics_text(&self) -> String {
+        let mut out = String::new();
+        out.push_str("# TYPE reverb_fabric_member_up gauge\n");
+        for m in &self.core.members {
+            out.push_str(&format!(
+                "reverb_fabric_member_up{{member=\"{}\"}} {}\n",
+                m.node_id,
+                if m.is_up() { 1 } else { 0 }
+            ));
+        }
+        out.push_str("# TYPE reverb_fabric_member_weight gauge\n");
+        for m in &self.core.members {
+            for (table, w) in m.weights.lock().unwrap().iter() {
+                out.push_str(&format!(
+                    "reverb_fabric_member_weight{{member=\"{}\",table=\"{}\"}} {}\n",
+                    m.node_id, table, w
+                ));
+            }
+        }
+        for name in ["errors", "quarantines", "reroutes", "takeovers"] {
+            out.push_str(&format!(
+                "# TYPE reverb_fabric_member_{name}_total counter\n"
+            ));
+            for m in &self.core.members {
+                let v = match name {
+                    "errors" => m.errors.load(Ordering::Relaxed),
+                    "quarantines" => m.quarantines.load(Ordering::Relaxed),
+                    "reroutes" => m.reroutes.load(Ordering::Relaxed),
+                    _ => m.takeovers.load(Ordering::Relaxed),
+                };
+                out.push_str(&format!(
+                    "reverb_fabric_member_{name}_total{{member=\"{}\"}} {}\n",
+                    m.node_id, v
+                ));
+            }
+        }
+        out.push_str("# TYPE reverb_fabric_standby_applied_seq gauge\n");
+        for s in &self.core.standbys {
+            out.push_str(&format!(
+                "reverb_fabric_standby_applied_seq{{follows=\"{}\"}} {}\n",
+                s.cfg.follows,
+                s.applied.load(Ordering::Relaxed)
+            ));
+        }
+        out
+    }
+}
+
+// ---------------------------------------------------------------------
+// Background threads: prober, weight watchers, standby follower
+// ---------------------------------------------------------------------
+
+/// Health prober: pings every live member each `ping_interval` over a
+/// persistent connection, quarantines on failure, and re-probes
+/// quarantined members at their backoff deadline. Holds the core weakly —
+/// the thread exits when the last handle/stream drops.
+fn spawn_prober(core: &Arc<FabricCore>) {
+    let weak = Arc::downgrade(core);
+    let n = core.members.len();
+    let _ = std::thread::Builder::new()
+        .name("fabric-prober".into())
+        .spawn(move || {
+            let mut conns: Vec<Option<(u64, Box<dyn MsgStream>)>> =
+                (0..n).map(|_| None).collect();
+            let mut nonce: u64 = 0x5eed_0001;
+            loop {
+                let Some(core) = weak.upgrade() else { return };
+                let interval = core.opts.ping_interval;
+                for mi in 0..core.members.len() {
+                    let member = &core.members[mi];
+                    let (up, due) = {
+                        let h = member.health.lock().unwrap();
+                        (h.up, !h.up && Instant::now() >= h.reprobe_at)
+                    };
+                    nonce = nonce.wrapping_add(1);
+                    if up {
+                        let epoch = member.epoch.load(Ordering::SeqCst);
+                        let stale = conns[mi]
+                            .as_ref()
+                            .map(|(e, _)| *e != epoch)
+                            .unwrap_or(true);
+                        if stale {
+                            conns[mi] = transport::dial(&member.dial_addr())
+                                .ok()
+                                .map(|s| (epoch, s));
+                        }
+                        let ok = match conns[mi].as_mut() {
+                            Some((_, s)) => ping_roundtrip(s, nonce).is_ok(),
+                            None => false,
+                        };
+                        if ok {
+                            core.mark_stable(mi);
+                        } else {
+                            conns[mi] = None;
+                            core.record_fatal(mi);
+                        }
+                    } else if due {
+                        let epoch = member.epoch.load(Ordering::SeqCst);
+                        let probe = transport::dial(&member.dial_addr())
+                            .ok()
+                            .and_then(|mut s| ping_roundtrip(&mut s, nonce).ok().map(|_| s));
+                        match probe {
+                            Some(s) => {
+                                conns[mi] = Some((epoch, s));
+                                core.mark_up(mi);
+                                spawn_watchers(&core, mi);
+                            }
+                            None => core.bump_backoff(mi),
+                        }
+                    }
+                }
+                drop(core);
+                std::thread::sleep(interval);
+            }
+        });
+}
+
+/// Subscribe weight watchers for every table on member `mi`: one §12 watch
+/// stream per table, each keeping the member's `total_weight` fresh for
+/// [`FabricCore::pick_weighted`]. Watchers exit when the connection dies
+/// (member failure) or the member's epoch moves (takeover); the prober
+/// respawns them when the member is next probed up.
+fn spawn_watchers(core: &Arc<FabricCore>, mi: usize) {
+    let weak = Arc::downgrade(core);
+    let member = core.members[mi].clone();
+    let _ = std::thread::Builder::new()
+        .name("fabric-watch".into())
+        .spawn(move || {
+            let addr = member.dial_addr();
+            let Ok(client) = Client::connect(addr) else { return };
+            let Ok(tables) = client.server_info() else { return };
+            {
+                let mut w = member.weights.lock().unwrap();
+                for (name, info) in &tables {
+                    w.insert(name.clone(), info.total_weight);
+                }
+            }
+            for (name, _) in tables {
+                if !member.watchers.lock().unwrap().insert(name.clone()) {
+                    continue; // a live watcher already covers this table
+                }
+                let member = member.clone();
+                let client = client.clone();
+                let weak = weak.clone();
+                let _ = std::thread::Builder::new()
+                    .name("fabric-watch".into())
+                    .spawn(move || {
+                        let epoch0 = member.epoch.load(Ordering::SeqCst);
+                        if let Ok(mut watch) = client.watch(&name) {
+                            loop {
+                                if weak.upgrade().is_none()
+                                    || member.epoch.load(Ordering::SeqCst) != epoch0
+                                {
+                                    break;
+                                }
+                                match watch.next_update() {
+                                    Ok((t, info)) => {
+                                        member
+                                            .weights
+                                            .lock()
+                                            .unwrap()
+                                            .insert(t, info.total_weight);
+                                    }
+                                    Err(_) => break,
+                                }
+                            }
+                        }
+                        member.watchers.lock().unwrap().remove(&name);
+                    });
+            }
+        });
+}
+
+/// Warm-standby runner: tails the followed member's manifest chain with a
+/// [`Follower`], mirroring every event into the standby server over its
+/// own client connection. When the followed member is quarantined, it
+/// drains the remaining journal (whatever the primary made durable before
+/// dying) and promotes the standby into the member's hash slot.
+fn spawn_standby(core: &Arc<FabricCore>, si: usize) {
+    let weak = Arc::downgrade(core);
+    let state = core.standbys[si].clone();
+    let _ = std::thread::Builder::new()
+        .name("fabric-standby".into())
+        .spawn(move || {
+            let mi = state.member_index;
+            let mut follower = Follower::new(state.cfg.dir.join(MANIFEST_NAME));
+            let mut chunks: HashMap<u64, Arc<Chunk>> = HashMap::new();
+            let mut conn: Option<Conn> = None;
+            loop {
+                let Some(core) = weak.upgrade() else { return };
+                if state.promoted.load(Ordering::SeqCst) {
+                    return;
+                }
+                let _ = standby_poll(&mut follower, &mut chunks, &mut conn, &state);
+                if !core.members[mi].is_up() {
+                    // Final drain: the primary's connections drop before
+                    // its shutdown rotation publishes the last durable
+                    // manifest, so keep polling until the chain has been
+                    // quiet for the whole takeover grace. Apply errors
+                    // (standby connection hiccups) don't count as quiet —
+                    // promoting with events unapplied would lose acked
+                    // inserts.
+                    let step = Duration::from_millis(50);
+                    let quiet_needed =
+                        (core.opts.takeover_grace.as_millis() / step.as_millis()).max(2) as u32;
+                    drop(core);
+                    let mut quiet = 0;
+                    let mut rejoined = false;
+                    while quiet < quiet_needed {
+                        let Some(core) = weak.upgrade() else { return };
+                        if core.members[mi].is_up() {
+                            // The primary answered a re-probe mid-drain:
+                            // transient failure, not a death. Keep
+                            // following instead of hijacking a live slot.
+                            rejoined = true;
+                            break;
+                        }
+                        drop(core);
+                        match standby_poll(&mut follower, &mut chunks, &mut conn, &state) {
+                            Ok(true) => quiet = 0,
+                            Ok(false) => quiet += 1,
+                            Err(_) => {}
+                        }
+                        std::thread::sleep(step);
+                    }
+                    if rejoined {
+                        continue;
+                    }
+                    let Some(core) = weak.upgrade() else { return };
+                    if core.members[mi].is_up() {
+                        continue;
+                    }
+                    core.promote(mi, &state.cfg.addr);
+                    state.promoted.store(true, Ordering::SeqCst);
+                    spawn_watchers(&core, mi);
+                    return;
+                }
+                let interval = core.opts.ping_interval;
+                drop(core);
+                std::thread::sleep(interval);
+            }
+        });
+}
+
+/// One follower poll, applying events into the standby server. A broken
+/// standby connection is dropped for re-dial on the next poll; the
+/// follower's watermark only advances over applied events, so nothing is
+/// lost across retries.
+fn standby_poll(
+    follower: &mut Follower,
+    chunks: &mut HashMap<u64, Arc<Chunk>>,
+    conn: &mut Option<Conn>,
+    state: &StandbyState,
+) -> Result<bool> {
+    if conn.is_none() {
+        *conn = Some(Conn::connect(&state.cfg.addr)?);
+    }
+    let c = conn.as_mut().unwrap();
+    let r = follower.poll(&mut |ev| apply_standby_event(c, chunks, ev));
+    state
+        .applied
+        .store(follower.watermark(), Ordering::Relaxed);
+    if r.is_err() {
+        *conn = None;
+    }
+    r
+}
+
+fn apply_standby_event(
+    conn: &mut Conn,
+    chunks: &mut HashMap<u64, Arc<Chunk>>,
+    ev: FollowEvent,
+) -> Result<()> {
+    const APPLY_TIMEOUT_MS: u64 = 10_000;
+    match ev {
+        FollowEvent::Base(data) => {
+            chunks.clear();
+            chunks.extend(data.chunks);
+            for t in data.tables {
+                let id = conn.next_id();
+                conn.send(Message::Reset {
+                    id,
+                    table: t.name.clone(),
+                })?;
+                conn.flush()?;
+                conn.expect_ack(id)?;
+                for item in t.items {
+                    let wire = WireItem {
+                        key: item.key,
+                        table: item.table.clone(),
+                        priority: item.priority,
+                        chunk_keys: item.chunks.iter().map(|c| c.key).collect(),
+                        offset: item.offset as u64,
+                        length: item.length as u64,
+                        times_sampled: item.times_sampled,
+                        columns: item.columns.clone(),
+                    };
+                    conn.send(Message::InsertChunks {
+                        chunks: item.chunks.clone(),
+                    })?;
+                    let id = conn.next_id();
+                    conn.send(Message::CreateItem {
+                        id,
+                        item: wire,
+                        timeout_ms: APPLY_TIMEOUT_MS,
+                    })?;
+                    conn.flush()?;
+                    conn.expect_ack(id)?;
+                }
+            }
+        }
+        FollowEvent::Record(rec) => match rec {
+            DecodedRecord::Chunk(c) => {
+                chunks.entry(c.key).or_insert_with(|| Arc::new(c));
+            }
+            DecodedRecord::Insert { table, item, .. } => {
+                let mut refs = Vec::with_capacity(item.chunk_keys.len());
+                for k in &item.chunk_keys {
+                    refs.push(chunks.get(k).cloned().ok_or(Error::ChunkNotFound(*k))?);
+                }
+                let wire = WireItem {
+                    key: item.key,
+                    table: table.clone(),
+                    priority: item.priority,
+                    chunk_keys: item.chunk_keys.clone(),
+                    offset: item.offset as u64,
+                    length: item.length as u64,
+                    times_sampled: item.times_sampled,
+                    columns: item.columns.clone().map(Arc::new),
+                };
+                conn.send(Message::InsertChunks { chunks: refs })?;
+                let id = conn.next_id();
+                conn.send(Message::CreateItem {
+                    id,
+                    item: wire,
+                    timeout_ms: APPLY_TIMEOUT_MS,
+                })?;
+                conn.flush()?;
+                conn.expect_ack(id)?;
+            }
+            DecodedRecord::Delete { table, key, .. } => {
+                let id = conn.next_id();
+                conn.send(Message::MutatePriorities {
+                    id,
+                    table,
+                    updates: vec![],
+                    deletes: vec![key],
+                })?;
+                conn.flush()?;
+                conn.expect_ack(id)?;
+            }
+            DecodedRecord::Update {
+                table,
+                key,
+                priority,
+                ..
+            } => {
+                let id = conn.next_id();
+                conn.send(Message::MutatePriorities {
+                    id,
+                    table,
+                    updates: vec![(key, priority)],
+                    deletes: vec![],
+                })?;
+                conn.flush()?;
+                conn.expect_ack(id)?;
+            }
+        },
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------
+// The facade stream
+// ---------------------------------------------------------------------
+
+fn err_frame(id: u64, code_: u8, message: impl Into<String>) -> Message {
+    Message::Err {
+        id,
+        code: code_,
+        message: message.into(),
+    }
+}
+
+/// Why a routed send could not reach its member.
+enum RouteErr {
+    /// The member's connection failed (it is quarantined now): re-route.
+    Conn,
+    /// Routing itself cannot succeed (e.g. a referenced chunk fell out of
+    /// the cache): answer the op with this error text.
+    Fatal(String),
+}
+
+/// How to recover a pending single-member op whose member died.
+enum Retry {
+    /// Not recoverable: synthesize an `Err` reply.
+    No,
+    /// `CreateItem`: re-hash to the new owner and replay (chunks re-sent
+    /// from the cache).
+    Item,
+    /// `SampleRequest`: re-pick a weighted member.
+    Sample,
+}
+
+/// One part of a fanned-out request: the member (and connection
+/// generation) it went to, the exact frame sent (for replay), and — for
+/// batch splits — which original op indices the part covers, positionally.
+struct FanPart {
+    mi: usize,
+    gen: u64,
+    frame: Message,
+    idxs: Vec<usize>,
+}
+
+enum FanKind {
+    /// All parts must ack; first error wins.
+    AckJoin,
+    /// Merge `Info` tables by summing per-table counters.
+    InfoMerge,
+    /// Reply `Pong` once every live member answered (any one suffices).
+    Pong { nonce: u64 },
+    /// `CreateItemBatch` split by item-key owner; merged positionally,
+    /// with per-part re-route on member death.
+    ItemBatch { n: usize, timeout_ms: u64 },
+    /// `PriorityUpdateBatch` split by key owner; merged positionally (no
+    /// re-route — the dead member held those keys).
+    UpdateBatch { n: usize },
+}
+
+struct Fan {
+    id: u64,
+    kind: FanKind,
+    parts: Vec<FanPart>,
+    /// Op slots already failed at route time (batch kinds only).
+    failed: Vec<(usize, BatchResult)>,
+}
+
+enum Pending {
+    /// Reply synthesized locally at route time.
+    Local(Message),
+    One {
+        mi: usize,
+        gen: u64,
+        frame: Message,
+        retry: Retry,
+    },
+    Fan(Fan),
+}
+
+struct MemberConn {
+    stream: Box<dyn MsgStream>,
+    /// The member epoch this connection belongs to; a takeover bump makes
+    /// it stale.
+    epoch: u64,
+    /// Stream-local connection generation. A pending op remembers the
+    /// generation its frame was sent on; if the member died and came back
+    /// before the reply was collected, the fresh connection never saw the
+    /// request — waiting on it would hang forever, so a generation
+    /// mismatch fails the op over to the re-route path instead.
+    gen: u64,
+    /// Chunk keys already delivered on this connection.
+    sent_chunks: HashSet<u64>,
+}
+
+/// The `MsgStream` facade over a pool. One request in = exactly one reply
+/// out, in send order, whatever routing/failover happened in between —
+/// the contract `Conn` and [`Pipeline`](super::Pipeline) rely on.
+pub(crate) struct FabricStream {
+    core: Arc<FabricCore>,
+    conns: Vec<Option<MemberConn>>,
+    /// Early replies per member, keyed by request id (re-routing can
+    /// reorder a member's wire relative to the facade's FIFO).
+    stash: Vec<HashMap<u64, VecDeque<Message>>>,
+    pending: VecDeque<Pending>,
+    /// Bounded retention of streamed chunks, for routed (re-)delivery.
+    chunks: HashMap<u64, Arc<Chunk>>,
+    chunk_order: VecDeque<u64>,
+    next_gen: u64,
+}
+
+impl FabricStream {
+    fn new(core: Arc<FabricCore>) -> FabricStream {
+        let n = core.members.len();
+        FabricStream {
+            core,
+            conns: (0..n).map(|_| None).collect(),
+            stash: (0..n).map(|_| HashMap::new()).collect(),
+            pending: VecDeque::new(),
+            chunks: HashMap::new(),
+            chunk_order: VecDeque::new(),
+            next_gen: 0,
+        }
+    }
+
+    /// Generation of the live connection to `mi` (callers use this right
+    /// after a successful send, when the connection necessarily exists).
+    fn cur_gen(&self, mi: usize) -> u64 {
+        self.conns[mi].as_ref().map(|c| c.gen).unwrap_or(0)
+    }
+
+    fn fail_member(&mut self, mi: usize) {
+        self.conns[mi] = None;
+        self.stash[mi].clear();
+        self.core.record_fatal(mi);
+    }
+
+    /// Ensure a live connection to member `mi` at its current epoch.
+    fn ensure_conn(&mut self, mi: usize) -> Result<()> {
+        let member = &self.core.members[mi];
+        let epoch = member.epoch.load(Ordering::SeqCst);
+        if let Some(mc) = &self.conns[mi] {
+            if mc.epoch == epoch {
+                return Ok(());
+            }
+        }
+        self.conns[mi] = None;
+        self.stash[mi].clear();
+        if !member.is_up() {
+            return Err(Error::Io(std::io::Error::new(
+                std::io::ErrorKind::NotConnected,
+                format!("pool member {} is quarantined", member.node_id),
+            )));
+        }
+        let addr = member.dial_addr();
+        match transport::dial(&addr) {
+            Ok(stream) => {
+                self.next_gen += 1;
+                self.conns[mi] = Some(MemberConn {
+                    stream,
+                    epoch,
+                    gen: self.next_gen,
+                    sent_chunks: HashSet::new(),
+                });
+                Ok(())
+            }
+            Err(e) => {
+                self.core.record_fatal(mi);
+                Err(e)
+            }
+        }
+    }
+
+    fn send_to(&mut self, mi: usize, msg: Message) -> Result<()> {
+        self.ensure_conn(mi)?;
+        let r = self.conns[mi].as_mut().unwrap().stream.send(msg);
+        if r.is_err() {
+            self.fail_member(mi);
+        }
+        r
+    }
+
+    fn cache_chunks(&mut self, chunks: Vec<Arc<Chunk>>) {
+        for c in chunks {
+            let k = c.key;
+            if self.chunks.insert(k, c).is_none() {
+                self.chunk_order.push_back(k);
+            }
+        }
+        while self.chunk_order.len() > self.core.opts.chunk_cache {
+            if let Some(old) = self.chunk_order.pop_front() {
+                self.chunks.remove(&old);
+            }
+        }
+    }
+
+    /// Deliver every chunk in `keys` that member `mi`'s connection has not
+    /// seen yet, from the cache.
+    fn ensure_chunks(&mut self, mi: usize, keys: &[u64]) -> std::result::Result<(), RouteErr> {
+        self.ensure_conn(mi).map_err(|_| RouteErr::Conn)?;
+        let mut need: Vec<Arc<Chunk>> = Vec::new();
+        {
+            let sent = &self.conns[mi].as_ref().unwrap().sent_chunks;
+            let mut queued: HashSet<u64> = HashSet::new();
+            for k in keys {
+                if sent.contains(k) || !queued.insert(*k) {
+                    continue;
+                }
+                match self.chunks.get(k) {
+                    Some(c) => need.push(c.clone()),
+                    None => {
+                        return Err(RouteErr::Fatal(format!(
+                            "chunk {k} no longer retained by the pool facade (cache bound {})",
+                            self.core.opts.chunk_cache
+                        )))
+                    }
+                }
+            }
+        }
+        if need.is_empty() {
+            return Ok(());
+        }
+        let sent_keys: Vec<u64> = need.iter().map(|c| c.key).collect();
+        self.send_to(mi, Message::InsertChunks { chunks: need })
+            .map_err(|_| RouteErr::Conn)?;
+        let sent = &mut self.conns[mi].as_mut().unwrap().sent_chunks;
+        for k in sent_keys {
+            sent.insert(k);
+        }
+        Ok(())
+    }
+
+    // ---- routing (send side) ----
+
+    fn route_item(&mut self, id: u64, item: WireItem, timeout_ms: u64) -> Pending {
+        let mut attempts = 0;
+        loop {
+            attempts += 1;
+            if attempts > self.core.members.len() + 2 {
+                return Pending::Local(err_frame(id, code::GENERIC, "no reachable pool member"));
+            }
+            let Some(mi) = self.core.owner(item.key) else {
+                return Pending::Local(err_frame(id, code::GENERIC, "no live pool members"));
+            };
+            match self.ensure_chunks(mi, &item.chunk_keys) {
+                Err(RouteErr::Conn) => continue,
+                Err(RouteErr::Fatal(msg)) => {
+                    return Pending::Local(err_frame(id, code::GENERIC, msg))
+                }
+                Ok(()) => {}
+            }
+            let frame = Message::CreateItem {
+                id,
+                item: item.clone(),
+                timeout_ms,
+            };
+            match self.send_to(mi, frame.clone()) {
+                Ok(()) => {
+                    return Pending::One {
+                        mi,
+                        gen: self.cur_gen(mi),
+                        frame,
+                        retry: Retry::Item,
+                    }
+                }
+                Err(_) => continue,
+            }
+        }
+    }
+
+    fn route_sample(&mut self, id: u64, table: String, num_samples: u32, timeout_ms: u64) -> Pending {
+        let mut attempts = 0;
+        loop {
+            attempts += 1;
+            if attempts > self.core.members.len() + 2 {
+                // A pool with no live member ends the sample stream
+                // gracefully (§3.9 end-of-sequence), mirroring §3.6's
+                // fault-tolerance posture rather than erroring samplers.
+                return Pending::Local(err_frame(id, code::TIMEOUT, "no reachable pool member"));
+            }
+            let Some(mi) = self.core.pick_weighted(&table) else {
+                return Pending::Local(err_frame(id, code::TIMEOUT, "no live pool members"));
+            };
+            let frame = Message::SampleRequest {
+                id,
+                table: table.clone(),
+                num_samples,
+                timeout_ms,
+            };
+            match self.send_to(mi, frame.clone()) {
+                Ok(()) => {
+                    return Pending::One {
+                        mi,
+                        gen: self.cur_gen(mi),
+                        frame,
+                        retry: Retry::Sample,
+                    }
+                }
+                Err(_) => continue,
+            }
+        }
+    }
+
+    /// Split `(original index, item)` pairs by rendezvous owner and send
+    /// one `CreateItemBatch` per member. Items that cannot route report
+    /// their failure positionally instead of poisoning the batch.
+    fn split_send_items(
+        &mut self,
+        id: u64,
+        items: Vec<(usize, WireItem)>,
+        timeout_ms: u64,
+    ) -> (Vec<FanPart>, Vec<(usize, BatchResult)>) {
+        let mut parts = Vec::new();
+        let mut failed = Vec::new();
+        let mut work = items;
+        let mut attempts = 0;
+        while !work.is_empty() {
+            attempts += 1;
+            if attempts > self.core.members.len() + 2 {
+                for (ix, _) in work.drain(..) {
+                    failed.push((
+                        ix,
+                        BatchResult::Err {
+                            code: code::GENERIC,
+                            message: "no reachable pool member".into(),
+                        },
+                    ));
+                }
+                break;
+            }
+            let mut groups: HashMap<usize, Vec<(usize, WireItem)>> = HashMap::new();
+            for (ix, it) in work.drain(..) {
+                match self.core.owner(it.key) {
+                    Some(mi) => groups.entry(mi).or_default().push((ix, it)),
+                    None => failed.push((
+                        ix,
+                        BatchResult::Err {
+                            code: code::GENERIC,
+                            message: "no live pool members".into(),
+                        },
+                    )),
+                }
+            }
+            for (mi, group) in groups {
+                let keys: Vec<u64> = group
+                    .iter()
+                    .flat_map(|(_, it)| it.chunk_keys.iter().copied())
+                    .collect();
+                match self.ensure_chunks(mi, &keys) {
+                    Err(RouteErr::Fatal(msg)) => {
+                        for (ix, _) in group {
+                            failed.push((
+                                ix,
+                                BatchResult::Err {
+                                    code: code::GENERIC,
+                                    message: msg.clone(),
+                                },
+                            ));
+                        }
+                        continue;
+                    }
+                    Err(RouteErr::Conn) => {
+                        work.extend(group); // member quarantined: re-hash next round
+                        continue;
+                    }
+                    Ok(()) => {}
+                }
+                let idxs: Vec<usize> = group.iter().map(|(ix, _)| *ix).collect();
+                let its: Vec<WireItem> = group.into_iter().map(|(_, it)| it).collect();
+                let frame = Message::CreateItemBatch {
+                    id,
+                    items: its,
+                    timeout_ms,
+                };
+                match self.send_to(mi, frame.clone()) {
+                    Ok(()) => parts.push(FanPart {
+                        mi,
+                        gen: self.cur_gen(mi),
+                        frame,
+                        idxs,
+                    }),
+                    Err(_) => {
+                        let Message::CreateItemBatch { items: its, .. } = frame else {
+                            unreachable!()
+                        };
+                        work.extend(idxs.into_iter().zip(its));
+                    }
+                }
+            }
+        }
+        (parts, failed)
+    }
+
+    fn route_item_batch(&mut self, id: u64, items: Vec<WireItem>, timeout_ms: u64) -> Pending {
+        let n = items.len();
+        let (parts, failed) =
+            self.split_send_items(id, items.into_iter().enumerate().collect(), timeout_ms);
+        if parts.is_empty() && failed.len() == n && n > 0 {
+            // Nothing routed anywhere: collapse to one error frame.
+            if let Some((_, BatchResult::Err { code: c, message })) = failed.first() {
+                return Pending::Local(err_frame(id, *c, message.clone()));
+            }
+        }
+        Pending::Fan(Fan {
+            id,
+            kind: FanKind::ItemBatch { n, timeout_ms },
+            parts,
+            failed,
+        })
+    }
+
+    /// Partition one mutation op's keys by owner: per-member fragments of
+    /// the op. Key-less ops (pure table validation) go to one live member.
+    fn split_mutation(
+        &self,
+        table: &str,
+        updates: &[(u64, f64)],
+        deletes: &[u64],
+    ) -> std::result::Result<HashMap<usize, PriorityUpdateOp>, String> {
+        fn frag<'a>(
+            frags: &'a mut HashMap<usize, PriorityUpdateOp>,
+            mi: usize,
+            table: &str,
+        ) -> &'a mut PriorityUpdateOp {
+            frags.entry(mi).or_insert_with(|| PriorityUpdateOp {
+                table: table.to_string(),
+                updates: vec![],
+                deletes: vec![],
+            })
+        }
+        let mut frags: HashMap<usize, PriorityUpdateOp> = HashMap::new();
+        for (k, p) in updates {
+            match self.core.owner(*k) {
+                Some(mi) => frag(&mut frags, mi, table).updates.push((*k, *p)),
+                None => return Err("no live pool members".into()),
+            }
+        }
+        for k in deletes {
+            match self.core.owner(*k) {
+                Some(mi) => frag(&mut frags, mi, table).deletes.push(*k),
+                None => return Err("no live pool members".into()),
+            }
+        }
+        if frags.is_empty() {
+            match self.core.owner(fnv1a(table)) {
+                Some(mi) => {
+                    frag(&mut frags, mi, table);
+                }
+                None => return Err("no live pool members".into()),
+            }
+        }
+        Ok(frags)
+    }
+
+    fn route_mutate(
+        &mut self,
+        id: u64,
+        table: String,
+        updates: Vec<(u64, f64)>,
+        deletes: Vec<u64>,
+    ) -> Pending {
+        let frags = match self.split_mutation(&table, &updates, &deletes) {
+            Ok(f) => f,
+            Err(msg) => return Pending::Local(err_frame(id, code::GENERIC, msg)),
+        };
+        let mut parts = Vec::new();
+        for (mi, op) in frags {
+            let frame = Message::MutatePriorities {
+                id,
+                table: op.table,
+                updates: op.updates,
+                deletes: op.deletes,
+            };
+            if self.send_to(mi, frame.clone()).is_ok() {
+                parts.push(FanPart {
+                    mi,
+                    gen: self.cur_gen(mi),
+                    frame,
+                    idxs: vec![],
+                });
+            } else {
+                return Pending::Local(err_frame(
+                    id,
+                    code::GENERIC,
+                    format!("pool member {} failed", self.core.members[mi].node_id),
+                ));
+            }
+        }
+        Pending::Fan(Fan {
+            id,
+            kind: FanKind::AckJoin,
+            parts,
+            failed: vec![],
+        })
+    }
+
+    fn route_update_batch(&mut self, id: u64, ops: Vec<PriorityUpdateOp>) -> Pending {
+        let n = ops.len();
+        // Per-member fragment list, each fragment tagged with its original
+        // op index for the positional merge.
+        let mut per_member: HashMap<usize, Vec<(usize, PriorityUpdateOp)>> = HashMap::new();
+        let mut failed: Vec<(usize, BatchResult)> = Vec::new();
+        for (ix, op) in ops.into_iter().enumerate() {
+            match self.split_mutation(&op.table, &op.updates, &op.deletes) {
+                Ok(frags) => {
+                    for (mi, frag) in frags {
+                        per_member.entry(mi).or_default().push((ix, frag));
+                    }
+                }
+                Err(msg) => failed.push((
+                    ix,
+                    BatchResult::Err {
+                        code: code::GENERIC,
+                        message: msg,
+                    },
+                )),
+            }
+        }
+        let mut parts = Vec::new();
+        for (mi, tagged) in per_member {
+            let idxs: Vec<usize> = tagged.iter().map(|(ix, _)| *ix).collect();
+            let frag_ops: Vec<PriorityUpdateOp> =
+                tagged.into_iter().map(|(_, op)| op).collect();
+            let frame = Message::PriorityUpdateBatch { id, ops: frag_ops };
+            match self.send_to(mi, frame.clone()) {
+                Ok(()) => parts.push(FanPart {
+                    mi,
+                    gen: self.cur_gen(mi),
+                    frame,
+                    idxs,
+                }),
+                Err(_) => {
+                    for ix in idxs {
+                        failed.push((
+                            ix,
+                            BatchResult::Err {
+                                code: code::GENERIC,
+                                message: format!(
+                                    "pool member {} failed",
+                                    self.core.members[mi].node_id
+                                ),
+                            },
+                        ));
+                    }
+                }
+            }
+        }
+        Pending::Fan(Fan {
+            id,
+            kind: FanKind::UpdateBatch { n },
+            parts,
+            failed,
+        })
+    }
+
+    /// Fan a frame to every live member.
+    fn fan_all(&mut self, id: u64, kind: FanKind, frame: Message) -> Pending {
+        let mut parts = Vec::new();
+        for mi in 0..self.core.members.len() {
+            if !self.core.members[mi].is_up() {
+                continue;
+            }
+            if self.send_to(mi, frame.clone()).is_ok() {
+                parts.push(FanPart {
+                    mi,
+                    gen: self.cur_gen(mi),
+                    frame: frame.clone(),
+                    idxs: vec![],
+                });
+            }
+        }
+        if parts.is_empty() {
+            return Pending::Local(err_frame(id, code::GENERIC, "no live pool members"));
+        }
+        Pending::Fan(Fan {
+            id,
+            kind,
+            parts,
+            failed: vec![],
+        })
+    }
+
+    // ---- reply side ----
+
+    fn pop_stash(&mut self, mi: usize, want: u64) -> Option<Message> {
+        let q = self.stash[mi].get_mut(&want)?;
+        let m = q.pop_front();
+        if q.is_empty() {
+            self.stash[mi].remove(&want);
+        }
+        m
+    }
+
+    /// Receive member `mi`'s reply for request `want`, stashing replies to
+    /// other requests (re-routing can interleave a member's wire order
+    /// relative to the facade FIFO). A connection failure quarantines the
+    /// member and surfaces as `Err` for the caller to recover; so does a
+    /// generation mismatch (the request's connection is gone — its reply
+    /// can never arrive on the current one).
+    fn recv_from(&mut self, mi: usize, want: u64, gen: u64) -> Result<Message> {
+        if let Some(m) = self.pop_stash(mi, want) {
+            return Ok(m);
+        }
+        loop {
+            self.ensure_conn(mi)?;
+            if self.conns[mi].as_ref().unwrap().gen != gen {
+                return Err(Error::Io(std::io::Error::new(
+                    std::io::ErrorKind::NotConnected,
+                    format!(
+                        "pool member {} reconnected after the request was sent",
+                        self.core.members[mi].node_id
+                    ),
+                )));
+            }
+            let res = self.conns[mi].as_mut().unwrap().stream.recv();
+            match res {
+                Ok(reply) => match reply_request_id(&reply) {
+                    Some(got) if got == want => return Ok(reply),
+                    Some(got) => self.stash[mi].entry(got).or_default().push_back(reply),
+                    None => {} // not a reply frame; drop
+                },
+                Err(e) => {
+                    self.fail_member(mi);
+                    return Err(e);
+                }
+            }
+        }
+    }
+
+    fn recv_one(
+        &mut self,
+        mut mi: usize,
+        mut gen: u64,
+        frame: Message,
+        mut retry: Retry,
+    ) -> Result<Message> {
+        let id = request_id(&frame).unwrap_or(0);
+        loop {
+            match self.recv_from(mi, id, gen) {
+                Ok(reply) => return Ok(reply),
+                Err(_) => {
+                    self.core.members[mi].reroutes.fetch_add(1, Ordering::Relaxed);
+                    let next = match &retry {
+                        Retry::No => {
+                            return Ok(err_frame(
+                                id,
+                                code::GENERIC,
+                                format!("pool member {} failed", self.core.members[mi].node_id),
+                            ))
+                        }
+                        Retry::Item => {
+                            let Message::CreateItem {
+                                item, timeout_ms, ..
+                            } = frame.clone()
+                            else {
+                                return Ok(err_frame(id, code::GENERIC, "unroutable frame"));
+                            };
+                            self.route_item(id, item, timeout_ms)
+                        }
+                        Retry::Sample => {
+                            let Message::SampleRequest {
+                                table,
+                                num_samples,
+                                timeout_ms,
+                                ..
+                            } = frame.clone()
+                            else {
+                                return Ok(err_frame(id, code::GENERIC, "unroutable frame"));
+                            };
+                            self.route_sample(id, table, num_samples, timeout_ms)
+                        }
+                    };
+                    match next {
+                        Pending::Local(m) => return Ok(m),
+                        Pending::One {
+                            mi: nmi,
+                            gen: ngen,
+                            retry: nretry,
+                            ..
+                        } => {
+                            mi = nmi;
+                            gen = ngen;
+                            retry = nretry;
+                        }
+                        Pending::Fan(_) => {
+                            return Ok(err_frame(id, code::GENERIC, "unroutable frame"))
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    fn recv_fan(&mut self, fan: Fan) -> Result<Message> {
+        let id = fan.id;
+        match fan.kind {
+            FanKind::AckJoin => {
+                let mut details = Vec::new();
+                let mut first_err: Option<(u8, String)> = None;
+                for part in fan.parts {
+                    match self.recv_from(part.mi, id, part.gen) {
+                        Ok(Message::Ack { detail, .. }) => details.push(detail),
+                        Ok(Message::Err { code: c, message, .. }) => {
+                            first_err.get_or_insert((c, message));
+                        }
+                        Ok(other) => {
+                            first_err
+                                .get_or_insert((code::GENERIC, format!("unexpected {other:?}")));
+                        }
+                        Err(e) => {
+                            first_err.get_or_insert((
+                                code::GENERIC,
+                                format!(
+                                    "pool member {} failed: {e}",
+                                    self.core.members[part.mi].node_id
+                                ),
+                            ));
+                        }
+                    }
+                }
+                Ok(match first_err {
+                    Some((c, m)) => err_frame(id, c, m),
+                    None => Message::Ack {
+                        id,
+                        detail: details.join("; "),
+                    },
+                })
+            }
+            FanKind::InfoMerge => {
+                let mut merged: Vec<(String, TableInfo)> = Vec::new();
+                let mut oks = 0usize;
+                for part in fan.parts {
+                    match self.recv_from(part.mi, id, part.gen) {
+                        Ok(Message::Info { tables, .. }) => {
+                            oks += 1;
+                            for (name, info) in tables {
+                                match merged.iter_mut().find(|(n, _)| *n == name) {
+                                    Some((_, acc)) => merge_info(acc, &info),
+                                    None => merged.push((name, info)),
+                                }
+                            }
+                        }
+                        Ok(_) | Err(_) => {} // §3.6: survivors still report
+                    }
+                }
+                if oks == 0 {
+                    return Ok(err_frame(id, code::GENERIC, "no pool member answered info"));
+                }
+                Ok(Message::Info { id, tables: merged })
+            }
+            FanKind::Pong { nonce } => {
+                let mut oks = 0usize;
+                for part in fan.parts {
+                    if matches!(self.recv_from(part.mi, id, part.gen), Ok(Message::Pong { .. })) {
+                        oks += 1;
+                    }
+                }
+                if oks == 0 {
+                    return Ok(err_frame(id, code::GENERIC, "no live pool members"));
+                }
+                Ok(Message::Pong { id, nonce })
+            }
+            FanKind::ItemBatch { n, timeout_ms } => {
+                let mut out: Vec<Option<BatchResult>> = (0..n).map(|_| None).collect();
+                for (ix, r) in fan.failed {
+                    out[ix] = Some(r);
+                }
+                let mut work: VecDeque<FanPart> = fan.parts.into();
+                while let Some(part) = work.pop_front() {
+                    match self.recv_from(part.mi, id, part.gen) {
+                        Ok(Message::BatchReply { results, .. })
+                            if results.len() == part.idxs.len() =>
+                        {
+                            for (j, r) in results.into_iter().enumerate() {
+                                out[part.idxs[j]] = Some(r);
+                            }
+                        }
+                        Ok(Message::Err { code: c, message, .. }) => {
+                            for &ix in &part.idxs {
+                                out[ix] = Some(BatchResult::Err {
+                                    code: c,
+                                    message: message.clone(),
+                                });
+                            }
+                        }
+                        Ok(other) => {
+                            for &ix in &part.idxs {
+                                out[ix] = Some(BatchResult::Err {
+                                    code: code::GENERIC,
+                                    message: format!("unexpected {other:?}"),
+                                });
+                            }
+                        }
+                        Err(_) => {
+                            // Member died mid-batch: re-hash the part's
+                            // items onto the survivors and keep waiting.
+                            self.core.members[part.mi]
+                                .reroutes
+                                .fetch_add(part.idxs.len() as u64, Ordering::Relaxed);
+                            let Message::CreateItemBatch { items, .. } = part.frame else {
+                                continue;
+                            };
+                            let tagged: Vec<(usize, WireItem)> =
+                                part.idxs.iter().copied().zip(items).collect();
+                            let (parts, failed) =
+                                self.split_send_items(id, tagged, timeout_ms);
+                            for (ix, r) in failed {
+                                out[ix] = Some(r);
+                            }
+                            work.extend(parts);
+                        }
+                    }
+                }
+                let results: Vec<BatchResult> = out
+                    .into_iter()
+                    .map(|r| {
+                        r.unwrap_or(BatchResult::Err {
+                            code: code::GENERIC,
+                            message: "op lost in pool routing".into(),
+                        })
+                    })
+                    .collect();
+                Ok(Message::BatchReply { id, results })
+            }
+            FanKind::UpdateBatch { n } => {
+                // First error wins per original op; Ok otherwise.
+                fn combine(slot: &mut Option<BatchResult>, r: BatchResult) {
+                    let replace = match (&*slot, &r) {
+                        (Some(BatchResult::Err { .. }), _) => false,
+                        (None, _) => true,
+                        (Some(BatchResult::Ok { .. }), BatchResult::Err { .. }) => true,
+                        (Some(BatchResult::Ok { .. }), BatchResult::Ok { .. }) => false,
+                    };
+                    if replace {
+                        *slot = Some(r);
+                    }
+                }
+                let mut out: Vec<Option<BatchResult>> = (0..n).map(|_| None).collect();
+                for (ix, r) in fan.failed {
+                    combine(&mut out[ix], r);
+                }
+                for part in fan.parts {
+                    match self.recv_from(part.mi, id, part.gen) {
+                        Ok(Message::BatchReply { results, .. })
+                            if results.len() == part.idxs.len() =>
+                        {
+                            for (j, r) in results.into_iter().enumerate() {
+                                combine(&mut out[part.idxs[j]], r);
+                            }
+                        }
+                        Ok(Message::Err { code: c, message, .. }) => {
+                            for &ix in &part.idxs {
+                                combine(
+                                    &mut out[ix],
+                                    BatchResult::Err {
+                                        code: c,
+                                        message: message.clone(),
+                                    },
+                                );
+                            }
+                        }
+                        Ok(_) | Err(_) => {
+                            // The keys lived on the dead member: honest
+                            // per-op failure, no re-route.
+                            for &ix in &part.idxs {
+                                combine(
+                                    &mut out[ix],
+                                    BatchResult::Err {
+                                        code: code::GENERIC,
+                                        message: format!(
+                                            "pool member {} failed",
+                                            self.core.members[part.mi].node_id
+                                        ),
+                                    },
+                                );
+                            }
+                        }
+                    }
+                }
+                let results: Vec<BatchResult> = out
+                    .into_iter()
+                    .map(|r| {
+                        r.unwrap_or(BatchResult::Ok {
+                            detail: "empty op".into(),
+                        })
+                    })
+                    .collect();
+                Ok(Message::BatchReply { id, results })
+            }
+        }
+    }
+}
+
+/// Request id of a client→server frame.
+fn request_id(msg: &Message) -> Option<u64> {
+    match msg {
+        Message::CreateItem { id, .. }
+        | Message::SampleRequest { id, .. }
+        | Message::MutatePriorities { id, .. }
+        | Message::Reset { id, .. }
+        | Message::InfoRequest { id }
+        | Message::Checkpoint { id }
+        | Message::AdminReconfig { id, .. }
+        | Message::WatchRequest { id, .. }
+        | Message::WatchCancel { id }
+        | Message::CreateItemBatch { id, .. }
+        | Message::PriorityUpdateBatch { id, .. }
+        | Message::Ping { id, .. } => Some(*id),
+        _ => None,
+    }
+}
+
+/// Request id a server→client frame answers.
+fn reply_request_id(msg: &Message) -> Option<u64> {
+    match msg {
+        Message::Ack { id, .. }
+        | Message::Err { id, .. }
+        | Message::SampleData { id, .. }
+        | Message::Info { id, .. }
+        | Message::WatchUpdate { id, .. }
+        | Message::BatchReply { id, .. }
+        | Message::Pong { id, .. } => Some(*id),
+        _ => None,
+    }
+}
+
+/// Sum `other`'s counters into `acc` (pool-wide table view).
+fn merge_info(acc: &mut TableInfo, other: &TableInfo) {
+    acc.size += other.size;
+    acc.max_size += other.max_size;
+    acc.inserts += other.inserts;
+    acc.samples += other.samples;
+    acc.rate_limited_inserts += other.rate_limited_inserts;
+    acc.rate_limited_samples += other.rate_limited_samples;
+    acc.diff += other.diff;
+    acc.total_weight += other.total_weight;
+}
+
+impl MsgStream for FabricStream {
+    fn send(&mut self, msg: Message) -> Result<()> {
+        let pending = match msg {
+            Message::InsertChunks { chunks } => {
+                // Chunks precede the items that make them routable: retain
+                // them; they ship per member with the first referencing
+                // item. No reply is owed.
+                self.cache_chunks(chunks);
+                return Ok(());
+            }
+            Message::CreateItem {
+                id,
+                item,
+                timeout_ms,
+            } => self.route_item(id, item, timeout_ms),
+            Message::SampleRequest {
+                id,
+                table,
+                num_samples,
+                timeout_ms,
+            } => self.route_sample(id, table, num_samples, timeout_ms),
+            Message::CreateItemBatch {
+                id,
+                items,
+                timeout_ms,
+            } => self.route_item_batch(id, items, timeout_ms),
+            Message::PriorityUpdateBatch { id, ops } => self.route_update_batch(id, ops),
+            Message::MutatePriorities {
+                id,
+                table,
+                updates,
+                deletes,
+            } => self.route_mutate(id, table, updates, deletes),
+            Message::InfoRequest { id } => {
+                self.fan_all(id, FanKind::InfoMerge, Message::InfoRequest { id })
+            }
+            Message::Ping { id, nonce } => {
+                self.fan_all(id, FanKind::Pong { nonce }, Message::Ping { id, nonce })
+            }
+            Message::Reset { .. } | Message::Checkpoint { .. } | Message::AdminReconfig { .. } => {
+                let id = request_id(&msg).unwrap_or(0);
+                self.fan_all(id, FanKind::AckJoin, msg)
+            }
+            Message::WatchRequest { id, .. } | Message::WatchCancel { id } => {
+                // Watch streams are per-member push channels; a merged
+                // facade watch would mis-attribute deltas. Watch members
+                // directly instead.
+                Pending::Local(err_frame(
+                    id,
+                    code::INVALID,
+                    "watch is not supported over reverb+pool:// (watch a member directly)",
+                ))
+            }
+            other => {
+                return Err(Error::InvalidArgument(format!(
+                    "frame not routable over a pool facade: {other:?}"
+                )))
+            }
+        };
+        self.pending.push_back(pending);
+        Ok(())
+    }
+
+    fn flush(&mut self) -> Result<()> {
+        // Per-member flush failures quarantine the member; its pending
+        // ops recover at recv time. The facade flush itself never fails.
+        for mi in 0..self.conns.len() {
+            let failed = match self.conns[mi].as_mut() {
+                Some(mc) => mc.stream.flush().is_err(),
+                None => false,
+            };
+            if failed {
+                self.fail_member(mi);
+            }
+        }
+        Ok(())
+    }
+
+    fn recv(&mut self) -> Result<Message> {
+        let p = self.pending.pop_front().ok_or_else(|| {
+            Error::Decode("pool facade recv with no outstanding request".into())
+        })?;
+        match p {
+            Pending::Local(m) => Ok(m),
+            Pending::One {
+                mi,
+                gen,
+                frame,
+                retry,
+            } => self.recv_one(mi, gen, frame, retry),
+            Pending::Fan(f) => self.recv_fan(f),
+        }
+    }
+
+    fn transport(&self) -> &'static str {
+        "pool"
+    }
+
+    fn set_nonblocking(&mut self, _nonblocking: bool) -> Result<()> {
+        Ok(()) // client-side facade; blocking semantics throughout
+    }
+
+    fn poll_source(&self) -> PollSource {
+        PollSource::Channel
+    }
+
+    fn try_recv(&mut self) -> Result<Option<Message>> {
+        if self.pending.is_empty() {
+            return Ok(None);
+        }
+        self.recv().map(Some)
+    }
+
+    fn try_flush(&mut self) -> Result<bool> {
+        self.flush()?;
+        Ok(true)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::client::{SamplerOptions, WriterOptions};
+    use crate::core::table::TableConfig;
+    use crate::core::tensor::Tensor;
+    use crate::net::server::Server;
+
+    fn test_core(ids: &[&str]) -> FabricCore {
+        let opts = FabricOptions::default();
+        FabricCore {
+            members: ids.iter().map(|a| Arc::new(Member::new(a, true, &opts))).collect(),
+            opts,
+            rr: AtomicU64::new(0),
+            standbys: vec![],
+        }
+    }
+
+    #[test]
+    fn rendezvous_remaps_only_the_failed_members_keys() {
+        let core = test_core(&["a:1", "b:2", "c:3"]);
+        let before: Vec<usize> = (0..10_000u64).map(|k| core.owner(k).unwrap()).collect();
+        // Spread sanity: every member owns a substantial share.
+        for mi in 0..3 {
+            let share = before.iter().filter(|&&m| m == mi).count();
+            assert!(share > 2000, "member {mi} owns only {share}/10000");
+        }
+        core.members[1].health.lock().unwrap().up = false;
+        for (k, &owner_before) in before.iter().enumerate() {
+            let owner_after = core.owner(k as u64).unwrap();
+            if owner_before != 1 {
+                // Keys on surviving members must not move.
+                assert_eq!(owner_after, owner_before, "key {k} moved needlessly");
+            } else {
+                assert_ne!(owner_after, 1, "key {k} still routed to the dead member");
+            }
+        }
+    }
+
+    #[test]
+    fn takeover_keeps_the_hash_identity() {
+        let core = test_core(&["a:1", "b:2", "c:3"]);
+        let before: Vec<usize> = (0..2_000u64).map(|k| core.owner(k).unwrap()).collect();
+        core.promote(1, "standby:9");
+        // Same identity, new address: nothing remaps.
+        for (k, &owner_before) in before.iter().enumerate() {
+            assert_eq!(core.owner(k as u64).unwrap(), owner_before);
+        }
+        assert_eq!(core.members[1].dial_addr(), "standby:9");
+        assert_eq!(core.members[1].epoch.load(Ordering::SeqCst), 1);
+    }
+
+    #[test]
+    fn weighted_pick_follows_mass() {
+        let core = test_core(&["a:1", "b:2", "c:3"]);
+        core.members[0].weights.lock().unwrap().insert("t".into(), 0.0);
+        core.members[1].weights.lock().unwrap().insert("t".into(), 3.0);
+        core.members[2].weights.lock().unwrap().insert("t".into(), 1.0);
+        let mut counts = [0usize; 3];
+        for _ in 0..4000 {
+            counts[core.pick_weighted("t").unwrap()] += 1;
+        }
+        assert_eq!(counts[0], 0, "zero-mass member must not be picked");
+        assert!(
+            counts[1] > counts[2] * 2,
+            "mass 3 vs 1 should skew picks: {counts:?}"
+        );
+        // Unknown table: falls back to round-robin over all live members.
+        let mut rr = [0usize; 3];
+        for _ in 0..300 {
+            rr[core.pick_weighted("unknown").unwrap()] += 1;
+        }
+        assert!(rr.iter().all(|&c| c == 100), "{rr:?}");
+    }
+
+    #[test]
+    fn quarantine_backoff_doubles_to_the_ceiling() {
+        let core = test_core(&["a:1"]);
+        core.record_fatal(0);
+        assert!(!core.members[0].is_up());
+        assert_eq!(core.members[0].quarantines.load(Ordering::Relaxed), 1);
+        let base = core.opts.quarantine_base;
+        let mut expect = base;
+        for _ in 1..=10 {
+            core.bump_backoff(0);
+            expect = (expect * 2).min(core.opts.quarantine_max);
+            let b = core.members[0].health.lock().unwrap().backoff;
+            assert_eq!(b, expect);
+        }
+        // Recovery resets the clock; stability resets the backoff.
+        core.mark_up(0);
+        assert!(core.members[0].is_up());
+    }
+
+    #[test]
+    fn pool_spec_parses_and_rejects_empty() {
+        assert_eq!(
+            parse_members("a:1, b:2 ,c:3").unwrap(),
+            vec!["a:1".to_string(), "b:2".into(), "c:3".into()]
+        );
+        assert!(parse_members(" , ").is_err());
+        assert_eq!(canonical_key(&["b".into(), "a".into()]), "a,b");
+    }
+
+    fn start_members(n: usize, tag: &str) -> (Vec<Server>, Vec<String>) {
+        let servers: Vec<Server> = (0..n)
+            .map(|i| {
+                Server::builder()
+                    .table(TableConfig::uniform_replay("t", 10_000))
+                    .in_proc_name(format!("fabric-{tag}-{i}"))
+                    .serve_in_proc()
+                    .unwrap()
+            })
+            .collect();
+        let addrs = servers.iter().map(|s| s.in_proc_addr()).collect();
+        (servers, addrs)
+    }
+
+    #[test]
+    fn facade_runs_the_whole_client_stack() {
+        let (servers, addrs) = start_members(3, "stack");
+        let fabric = Fabric::connect(&addrs, FabricOptions::default()).unwrap();
+        let client = fabric.client().unwrap();
+
+        // Writers: items spread over members by key hash.
+        for round in 0..30 {
+            let mut w = client.writer(WriterOptions::default()).unwrap();
+            w.append(vec![Tensor::from_f32(&[1], &[round as f32]).unwrap()])
+                .unwrap();
+            w.create_item("t", 1, 1.0).unwrap();
+            w.flush().unwrap();
+        }
+        let sizes: Vec<usize> = servers
+            .iter()
+            .map(|s| s.table("t").unwrap().size())
+            .collect();
+        assert_eq!(sizes.iter().sum::<usize>(), 30, "{sizes:?}");
+        assert!(
+            sizes.iter().all(|&s| s > 0),
+            "every member should own some keys: {sizes:?}"
+        );
+
+        // Info: merged across members.
+        let info = client.server_info().unwrap();
+        assert_eq!(info.len(), 1);
+        assert_eq!(info[0].1.size, 30);
+        assert_eq!(info[0].1.inserts, 30);
+
+        // Sampling: merged stream sees data from more than one member.
+        let mut sampler = client
+            .sampler(SamplerOptions::new("t").with_timeout_ms(2000))
+            .unwrap();
+        let mut seen = std::collections::HashSet::new();
+        for _ in 0..120 {
+            let s = sampler.next_sample().unwrap();
+            seen.insert(s.data[0].to_f32().unwrap()[0] as i64);
+        }
+        assert!(seen.len() > 10, "saw only {seen:?}");
+
+        // Fan-out ack-join (reset) empties every member.
+        client.reset("t").unwrap();
+        for s in &servers {
+            assert_eq!(s.table("t").unwrap().size(), 0);
+        }
+
+        // Metrics render per-member gauges.
+        let text = fabric.metrics_text();
+        assert!(text.contains("reverb_fabric_member_up{"));
+        for a in &addrs {
+            assert!(text.contains(a.as_str()), "{text}");
+        }
+    }
+
+    #[test]
+    fn dialing_the_same_pool_shares_one_core() {
+        let (_servers, addrs) = start_members(2, "shared");
+        let fabric = Fabric::connect(&addrs, FabricOptions::default()).unwrap();
+        let spec = addrs.join(",");
+        let _stream = open_stream(&spec).unwrap();
+        let key = canonical_key(&addrs);
+        let reg = registry().lock().unwrap();
+        let shared = reg.get(&key).and_then(Weak::upgrade).unwrap();
+        assert!(Arc::ptr_eq(&shared, &fabric.core));
+    }
+
+    #[test]
+    fn fully_unreachable_pool_reports_every_address() {
+        let err = Fabric::connect(
+            &["reverb://in-proc/fabric-nowhere-1".into(), "reverb://in-proc/fabric-nowhere-2".into()],
+            FabricOptions::default(),
+        )
+        .unwrap_err();
+        let text = err.to_string();
+        assert!(text.contains("fabric-nowhere-1"), "{text}");
+        assert!(text.contains("fabric-nowhere-2"), "{text}");
+    }
+
+    #[test]
+    fn watch_over_pool_is_rejected_cleanly() {
+        let (_servers, addrs) = start_members(2, "watch");
+        let fabric = Fabric::connect(&addrs, FabricOptions::default()).unwrap();
+        let client = fabric.client().unwrap();
+        let err = client.watch("t").unwrap_err();
+        assert!(matches!(err, Error::InvalidArgument(_)), "{err}");
+    }
+}

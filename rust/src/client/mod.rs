@@ -9,10 +9,15 @@
 //!   flow-controlled prefetching.
 //! - [`Dataset`] is the iterator analogue of `ReverbDataset` (§3.9).
 //! - [`ClientPool`] shards operations across independent servers (§3.6).
+//! - [`Fabric`] is the transport-level pool (DESIGN.md §14): dial
+//!   `reverb+pool://a,b,...` and the whole client stack runs over N
+//!   health-checked servers with consistent-hash writes, mass-weighted
+//!   sampling, and warm-standby failover.
 //! - [`Pipeline`] keeps up to `depth` requests in flight over one
 //!   connection (DESIGN.md §13); writers and samplers route through it.
 
 pub mod dataset;
+pub mod fabric;
 pub mod pipeline;
 pub mod pool;
 pub mod sampler;
@@ -20,6 +25,7 @@ pub mod trajectory_writer;
 pub mod writer;
 
 pub use dataset::Dataset;
+pub use fabric::{Fabric, FabricOptions, StandbyConfig, POOL_SCHEME};
 pub use pipeline::{Completion, Pipeline};
 pub use pool::ClientPool;
 pub use sampler::{Sample, Sampler, SamplerOptions};

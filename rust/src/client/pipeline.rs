@@ -92,7 +92,8 @@ fn reply_id(msg: &Message) -> Option<u64> {
         | Message::SampleData { id, .. }
         | Message::Info { id, .. }
         | Message::WatchUpdate { id, .. }
-        | Message::BatchReply { id, .. } => Some(*id),
+        | Message::BatchReply { id, .. }
+        | Message::Pong { id, .. } => Some(*id),
         _ => None,
     }
 }

@@ -11,6 +11,13 @@
 //! instead of re-serializing it. For explicit pipelining against one
 //! shard, use [`Client::pipeline`] on [`ClientPool::client`] /
 //! [`ClientPool::round_robin`].
+//!
+//! `ClientPool` composes *above* the connection layer: callers hold N
+//! clients and pick shards themselves. For a pool that is transparent to
+//! the whole client stack — consistent-hash writes, mass-weighted
+//! sampling, health checks, quarantine, and warm-standby failover behind
+//! one `reverb+pool://` address — see [`fabric`](super::fabric)
+//! (DESIGN.md §14).
 
 use super::sampler::{Sample, Sampler, SamplerOptions};
 use super::writer::{Writer, WriterOptions};
@@ -27,14 +34,41 @@ pub struct ClientPool {
 impl ClientPool {
     /// Connect to every shard address. Servers are independent (no
     /// replication or synchronization across them, §3.6).
+    ///
+    /// Dials all shards concurrently, so total connect latency is the
+    /// slowest shard rather than the sum — and a dead address surfaces
+    /// after one timeout, not after every shard before it connected. Any
+    /// failure fails the pool, with every failing address in the error.
     pub fn connect(addrs: &[String]) -> Result<ClientPool> {
         if addrs.is_empty() {
             return Err(Error::InvalidArgument("empty server pool".into()));
         }
-        let clients = addrs
+        let handles: Vec<std::thread::JoinHandle<Result<Client>>> = addrs
             .iter()
-            .map(|a| Client::connect(a.clone()))
-            .collect::<Result<Vec<_>>>()?;
+            .map(|a| {
+                let a = a.clone();
+                std::thread::spawn(move || Client::connect(a))
+            })
+            .collect();
+        let results: Vec<Result<Client>> = handles
+            .into_iter()
+            .map(|h| {
+                h.join()
+                    .unwrap_or_else(|_| Err(Error::Runtime("connect thread panicked".into())))
+            })
+            .collect();
+        if results.iter().any(|r| r.is_err()) {
+            let detail: Vec<String> = addrs
+                .iter()
+                .zip(&results)
+                .filter_map(|(a, r)| r.as_ref().err().map(|e| format!("{a}: {e}")))
+                .collect();
+            return Err(Error::InvalidArgument(format!(
+                "pool connect failed: {}",
+                detail.join("; ")
+            )));
+        }
+        let clients = results.into_iter().map(|r| r.unwrap()).collect();
         Ok(ClientPool {
             clients,
             rr: AtomicUsize::new(0),
@@ -282,6 +316,26 @@ mod tests {
     fn empty_pool_rejected() {
         assert!(ClientPool::connect(&[]).is_err());
         assert!(ClientPool::from_clients(vec![]).is_err());
+    }
+
+    #[test]
+    fn connect_reports_every_dead_address() {
+        let live = Server::builder()
+            .table(TableConfig::uniform_replay("t", 100))
+            .in_proc_name("pool-connect-live")
+            .serve_in_proc()
+            .unwrap();
+        let err = ClientPool::connect(&[
+            live.in_proc_addr(),
+            "reverb://in-proc/pool-connect-dead-1".into(),
+            "reverb://in-proc/pool-connect-dead-2".into(),
+        ])
+        .unwrap_err();
+        let text = err.to_string();
+        // Both dead shards named; the live one not blamed.
+        assert!(text.contains("pool-connect-dead-1"), "{text}");
+        assert!(text.contains("pool-connect-dead-2"), "{text}");
+        assert!(!text.contains("pool-connect-live"), "{text}");
     }
 
     #[test]

@@ -186,6 +186,11 @@ pub struct TableInfo {
     pub rate_limited_samples: u64,
     /// Current rate-limiter cursor (inserts × SPI − samples).
     pub diff: f64,
+    /// Total selector mass across all shards — the same quantity
+    /// cross-shard sampling weights shards by, summed. The replay fabric
+    /// (DESIGN.md §14) weights *members* by it when routing samplers, so
+    /// a pool draws from each server in proportion to its stored mass.
+    pub total_weight: f64,
 }
 
 /// Result of [`ShardedTable::try_insert_or_assign`].
@@ -1052,6 +1057,7 @@ impl ShardedTable {
             rate_limited_inserts: self.limiter.blocked_inserts(),
             rate_limited_samples: self.limiter.blocked_samples(),
             diff: self.limiter.diff(),
+            total_weight: self.shards.iter().map(|s| s.load_stats().0).sum(),
         }
     }
 

@@ -28,9 +28,9 @@ pub use crate::core::selector::SelectorConfig;
 pub use crate::core::table::{default_shard_count, ShardedTable, Table, TableConfig, TableInfo};
 pub use crate::core::tensor::{DType, Signature, Tensor, TensorSpec};
 pub use crate::client::{
-    AdminRequest, Client, ClientPool, Completion, Dataset, Pipeline, Sample, Sampler,
-    SamplerOptions, StepRef, Trajectory, TrajectoryWriter, TrajectoryWriterOptions, Watch,
-    Writer, WriterOptions,
+    AdminRequest, Client, ClientPool, Completion, Dataset, Fabric, FabricOptions, Pipeline,
+    Sample, Sampler, SamplerOptions, StandbyConfig, StepRef, Trajectory, TrajectoryWriter,
+    TrajectoryWriterOptions, Watch, Writer, WriterOptions,
 };
 pub use crate::net::wire::{BatchResult, PriorityUpdateOp};
 pub use crate::error::{Error, Result};

@@ -24,7 +24,7 @@ fn usage() -> ! {
          [--persist full|delta] [--checkpoint-interval SECS] \
          [--journal-segment-bytes N] [--service-threads N] \
          [--service-model event|threaded] [--unix-socket PATH] \
-         [--metrics-addr HOST:PORT]\n  \
+         [--metrics-addr HOST:PORT] [--metrics-token TOKEN]\n  \
          reverb-server info --addr HOST:PORT\n  \
          reverb-server checkpoint --addr HOST:PORT\n\n\
          table kinds:\n  NAME:uniform:MAX_SIZE\n  NAME:queue:QUEUE_SIZE\n  \
@@ -42,7 +42,9 @@ fn usage() -> ! {
          threaded restores the legacy thread-per-connection core (kept one \
          release as a differential-testing oracle). --unix-socket PATH \
          additionally serves reverb+unix://PATH. --metrics-addr HOST:PORT \
-         serves Prometheus text exposition at http://HOST:PORT/metrics."
+         serves Prometheus text exposition at http://HOST:PORT/metrics; \
+         --metrics-token TOKEN requires `Authorization: Bearer TOKEN` on \
+         every scrape (use when the endpoint leaves loopback)."
     );
     std::process::exit(2);
 }
@@ -171,6 +173,13 @@ fn main() {
             }
             if let Some(addr) = flag(&args, "--metrics-addr") {
                 builder = builder.metrics_addr(addr);
+            }
+            if let Some(token) = flag(&args, "--metrics-token") {
+                if flag(&args, "--metrics-addr").is_none() {
+                    eprintln!("--metrics-token requires --metrics-addr");
+                    std::process::exit(2);
+                }
+                builder = builder.metrics_token(token);
             }
             if let Some(dir) = flag(&args, "--checkpoint-dir") {
                 builder = builder.checkpoint_dir(dir);

@@ -1184,6 +1184,12 @@ fn dispatch(
             st.stream.send(Message::Info { id, tables })?;
             Ok(Dispatch::Continue)
         }
+        Message::Ping { id, nonce } => {
+            // Pure service-loop echo: no table access, no gate — probe
+            // latency measures dispatch health only (DESIGN.md §14).
+            st.stream.send(Message::Pong { id, nonce })?;
+            Ok(Dispatch::Continue)
+        }
         Message::Checkpoint { id } => {
             // Deliberately synchronous on the worker: checkpoints are rare
             // and gate-serialized; parked connections re-arm off the gate's
@@ -1267,7 +1273,8 @@ fn dispatch(
         | Message::SampleData { .. }
         | Message::Info { .. }
         | Message::WatchUpdate { .. }
-        | Message::BatchReply { .. } => {
+        | Message::BatchReply { .. }
+        | Message::Pong { .. } => {
             Err(Error::Decode("client sent a server-side message".into()))
         }
     }

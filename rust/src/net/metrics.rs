@@ -44,6 +44,15 @@ pub(crate) fn http_response(
             "text/plain; charset=utf-8",
             "method not allowed\n".to_string(),
         )
+    } else if !authorized(head, inner.metrics_token.as_deref()) {
+        // 401 before the path check: an unauthenticated scraper learns
+        // nothing about what paths exist.
+        return format!(
+            "HTTP/1.1 401 Unauthorized\r\nContent-Type: text/plain; charset=utf-8\r\n\
+             Content-Length: 13\r\nWWW-Authenticate: Bearer\r\nConnection: close\r\n\r\n\
+             unauthorized\n"
+        )
+        .into_bytes();
     } else if path == "/metrics" {
         (
             "200 OK",
@@ -62,6 +71,29 @@ pub(crate) fn http_response(
         body.len()
     )
     .into_bytes()
+}
+
+/// Scrape auth (DESIGN.md §14): when the server was built with
+/// `metrics_token`, every request must carry `Authorization: Bearer
+/// <token>`. With no token configured, every request is authorized —
+/// the loopback-only default keeps its zero-config scrape.
+fn authorized(head: &[u8], token: Option<&str>) -> bool {
+    let Some(token) = token else { return true };
+    for line in head.split(|&b| b == b'\n') {
+        let line = String::from_utf8_lossy(line);
+        let line = line.trim_end_matches('\r');
+        let Some((name, value)) = line.split_once(':') else {
+            continue;
+        };
+        if name.trim().eq_ignore_ascii_case("authorization") {
+            let value = value.trim();
+            let Some(bearer) = value.strip_prefix("Bearer ") else {
+                return false;
+            };
+            return bearer.trim() == token;
+        }
+    }
+    false
 }
 
 /// A sample value in exposition syntax (`+Inf`/`-Inf`/`NaN` for the
@@ -434,6 +466,27 @@ mod tests {
     #[test]
     fn labels_escape_specials() {
         assert_eq!(escape_label("a\"b\\c\nd"), "a\\\"b\\\\c\\nd");
+    }
+
+    #[test]
+    fn bearer_auth_matches_token() {
+        let head = b"GET /metrics HTTP/1.1\r\nAuthorization: Bearer s3cret\r\n\r\n";
+        // No token configured: everything is authorized.
+        assert!(authorized(head, None));
+        assert!(authorized(b"GET /metrics HTTP/1.1\r\n\r\n", None));
+        // Token configured: exact bearer match required.
+        assert!(authorized(head, Some("s3cret")));
+        assert!(!authorized(head, Some("other")));
+        assert!(!authorized(b"GET /metrics HTTP/1.1\r\n\r\n", Some("s3cret")));
+        // Header name is case-insensitive; Basic scheme is refused.
+        assert!(authorized(
+            b"GET / HTTP/1.1\r\nauthorization:   Bearer s3cret\r\n\r\n",
+            Some("s3cret")
+        ));
+        assert!(!authorized(
+            b"GET / HTTP/1.1\r\nAuthorization: Basic s3cret\r\n\r\n",
+            Some("s3cret")
+        ));
     }
 
     #[test]

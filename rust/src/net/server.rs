@@ -95,6 +95,7 @@ pub struct ServerBuilder {
     service_threads: Option<usize>,
     uds_path: Option<PathBuf>,
     metrics_addr: Option<String>,
+    metrics_token: Option<String>,
 }
 
 impl ServerBuilder {
@@ -117,6 +118,7 @@ impl ServerBuilder {
             service_threads: None,
             uds_path: None,
             metrics_addr: None,
+            metrics_token: None,
         }
     }
 
@@ -127,6 +129,15 @@ impl ServerBuilder {
     /// model serves scrapes from short-lived threads.
     pub fn metrics_addr(mut self, addr: impl Into<String>) -> Self {
         self.metrics_addr = Some(addr.into());
+        self
+    }
+
+    /// Require `Authorization: Bearer <token>` on every `/metrics` scrape
+    /// (and any other HTTP request). The loopback default needs none, but
+    /// a fabric member scraped across hosts does (DESIGN.md §14);
+    /// unauthenticated requests get `401` before any path routing.
+    pub fn metrics_token(mut self, token: impl Into<String>) -> Self {
+        self.metrics_token = Some(token.into());
         self
     }
 
@@ -302,6 +313,7 @@ impl ServerBuilder {
                     .map(|i| (i.as_millis() as u64).max(1))
                     .unwrap_or(0),
             ),
+            metrics_token: self.metrics_token,
             shutdown: AtomicBool::new(false),
         });
 
@@ -489,6 +501,9 @@ pub(crate) struct ServerInner {
     /// admin RPC rejects attempts to set it). The checkpoint thread
     /// re-reads this every tick, so a re-tune never needs a restart.
     pub(crate) checkpoint_interval_ms: AtomicU64,
+    /// Optional bearer token required on `/metrics` scrapes (DESIGN.md
+    /// §14); `None` = unauthenticated (loopback default).
+    pub(crate) metrics_token: Option<String>,
     shutdown: AtomicBool,
 }
 
@@ -1221,6 +1236,10 @@ fn serve_connection(mut stream: Box<dyn MsgStream>, inner: Arc<ServerInner>) -> 
                 stream.send(Message::Info { id, tables })?;
                 stream.flush()?;
             }
+            Message::Ping { id, nonce } => {
+                stream.send(Message::Pong { id, nonce })?;
+                stream.flush()?;
+            }
             Message::Checkpoint { id } => {
                 let reply = inner
                     .checkpoint()
@@ -1301,7 +1320,8 @@ fn serve_connection(mut stream: Box<dyn MsgStream>, inner: Arc<ServerInner>) -> 
             | Message::SampleData { .. }
             | Message::Info { .. }
             | Message::WatchUpdate { .. }
-            | Message::BatchReply { .. } => {
+            | Message::BatchReply { .. }
+            | Message::Pong { .. } => {
                 return Err(Error::Decode("client sent a server-side message".into()));
             }
         }

@@ -125,8 +125,10 @@ pub trait TransportListener: Send {
 
 /// Connect to an endpoint by URL. Dispatches on scheme:
 /// `reverb://in-proc/<name>` (or `inproc://<name>`) to the channel backend,
-/// `reverb+unix:///path` to a Unix domain socket, and `tcp://host:port` or
-/// bare `host:port` to TCP.
+/// `reverb+unix:///path` to a Unix domain socket,
+/// `reverb+pool://a,b,...` to the replay-fabric facade
+/// ([`crate::client::fabric`]), and `tcp://host:port` or bare `host:port`
+/// to TCP.
 pub fn dial(addr: &str) -> Result<Box<dyn MsgStream>> {
     if let Some(name) = addr.strip_prefix(IN_PROC_SCHEME) {
         return Ok(Box::new(dial_in_proc(name)?));
@@ -146,6 +148,10 @@ pub fn dial(addr: &str) -> Result<Box<dyn MsgStream>> {
                 "unix-domain sockets are not supported on this platform".into(),
             ));
         }
+    }
+    if let Some(spec) = addr.strip_prefix(crate::client::fabric::POOL_SCHEME) {
+        // Replay fabric (DESIGN.md §14): one facade stream over N servers.
+        return crate::client::fabric::open_stream(spec);
     }
     let hostport = addr.strip_prefix("tcp://").unwrap_or(addr);
     Ok(Box::new(TcpMsgStream::connect(hostport)?))

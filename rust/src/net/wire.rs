@@ -104,7 +104,12 @@ impl BatchResult {
 }
 
 /// Everything that travels between client and server.
-#[derive(Debug)]
+///
+/// `Clone` is cheap by construction: chunk payloads are `Arc<Chunk>`
+/// handles, so cloning a frame copies pointers and small metadata. The
+/// pool fabric ([`crate::client::fabric`]) relies on this to retain a
+/// re-sendable copy of routed frames for failover replay.
+#[derive(Clone, Debug)]
 pub enum Message {
     // ---- client → server ----
     /// Stream chunks ahead of the items that reference them. No reply.
@@ -172,6 +177,11 @@ pub enum Message {
     /// Each op is a `MutatePriorities` payload; keys inside one op are
     /// grouped per shard under one lock acquisition by the table.
     PriorityUpdateBatch { id: u64, ops: Vec<PriorityUpdateOp> },
+    /// Lightweight liveness probe (replay fabric health checks, DESIGN.md
+    /// §14). The server echoes `nonce` back in a [`Message::Pong`] without
+    /// touching any table — a pure service-loop round-trip, so probe
+    /// latency measures dispatch health rather than data-plane load.
+    Ping { id: u64, nonce: u64 },
 
     // ---- server → client ----
     /// Positive acknowledgement of the request with matching `id`.
@@ -198,6 +208,8 @@ pub enum Message {
     /// Wire v3 reply to a batch frame: one [`BatchResult`] per op, in op
     /// order, under the batch's single request id.
     BatchReply { id: u64, results: Vec<BatchResult> },
+    /// Reply to [`Message::Ping`], echoing its `nonce`.
+    Pong { id: u64, nonce: u64 },
 }
 
 /// Error codes carried by [`Message::Err`].
@@ -256,6 +268,9 @@ const TAG_WATCH_UPDATE: u8 = 133;
 const TAG_CREATE_ITEM_BATCH: u8 = 12;
 const TAG_PRIORITY_UPDATE_BATCH: u8 = 13;
 const TAG_BATCH_REPLY: u8 = 134;
+/// Fabric liveness probe and its echo (DESIGN.md §14).
+const TAG_PING: u8 = 14;
+const TAG_PONG: u8 = 135;
 
 /// Server-side cap on ops per batch frame. Larger batches are refused
 /// with a clean per-frame `Err` (code `INVALID`) rather than a decode
@@ -348,6 +363,7 @@ fn put_table_info<W: Write>(w: &mut W, info: &TableInfo) -> Result<()> {
     put_u64(w, info.rate_limited_inserts)?;
     put_u64(w, info.rate_limited_samples)?;
     put_f64(w, info.diff)?;
+    put_f64(w, info.total_weight)?;
     Ok(())
 }
 
@@ -360,6 +376,7 @@ fn get_table_info<R: Read>(r: &mut R) -> Result<TableInfo> {
         rate_limited_inserts: get_u64(r)?,
         rate_limited_samples: get_u64(r)?,
         diff: get_f64(r)?,
+        total_weight: get_f64(r)?,
     })
 }
 
@@ -544,6 +561,16 @@ impl Message {
                     }
                 }
                 TAG_PRIORITY_UPDATE_BATCH
+            }
+            Message::Ping { id, nonce } => {
+                put_u64(&mut b, *id)?;
+                put_u64(&mut b, *nonce)?;
+                TAG_PING
+            }
+            Message::Pong { id, nonce } => {
+                put_u64(&mut b, *id)?;
+                put_u64(&mut b, *nonce)?;
+                TAG_PONG
             }
             Message::BatchReply { id, results } => {
                 put_envelope(&mut b)?;
@@ -735,6 +762,14 @@ impl Message {
                     .collect::<Result<_>>()?;
                 Message::PriorityUpdateBatch { id, ops }
             }
+            TAG_PING => Message::Ping {
+                id: get_u64(&mut r)?,
+                nonce: get_u64(&mut r)?,
+            },
+            TAG_PONG => Message::Pong {
+                id: get_u64(&mut r)?,
+                nonce: get_u64(&mut r)?,
+            },
             TAG_BATCH_REPLY => {
                 check_envelope(&mut r)?;
                 let id = get_u64(&mut r)?;
@@ -1166,6 +1201,7 @@ mod tests {
                     rate_limited_inserts: 3,
                     rate_limited_samples: 4,
                     diff: -2.5,
+                    total_weight: 12.25,
                 },
             )],
         };
@@ -1174,9 +1210,22 @@ mod tests {
                 assert_eq!(tables[0].0, "t");
                 assert_eq!(tables[0].1.samples, 200);
                 assert_eq!(tables[0].1.diff, -2.5);
+                assert_eq!(tables[0].1.total_weight, 12.25);
             }
             other => panic!("wrong message {other:?}"),
         }
+    }
+
+    #[test]
+    fn ping_pong_roundtrip() {
+        assert!(matches!(
+            roundtrip(&Message::Ping { id: 6, nonce: 0xdead_beef }),
+            Message::Ping { id: 6, nonce: 0xdead_beef }
+        ));
+        assert!(matches!(
+            roundtrip(&Message::Pong { id: 6, nonce: 0xdead_beef }),
+            Message::Pong { id: 6, nonce: 0xdead_beef }
+        ));
     }
 
     #[test]
@@ -1250,6 +1299,7 @@ mod tests {
                 rate_limited_inserts: 0,
                 rate_limited_samples: 1,
                 diff: 1.5,
+                total_weight: 3.0,
             },
         };
         match roundtrip(&upd) {
@@ -1259,6 +1309,7 @@ mod tests {
                 assert_eq!(info.size, 3);
                 assert_eq!(info.inserts, 7);
                 assert_eq!(info.diff, 1.5);
+                assert_eq!(info.total_weight, 3.0);
             }
             other => panic!("wrong message {other:?}"),
         }

@@ -1,0 +1,447 @@
+//! Read-side tailing of a v3 manifest chain (DESIGN.md §14): the warm-
+//! standby half of the replay fabric.
+//!
+//! [`restore`](crate::persist::restore) materializes a chain once, at
+//! startup. A [`Follower`] instead watches another server's
+//! `checkpoint_dir` *while that server is alive*, re-reading the manifest
+//! each poll and emitting only what is new since the previous poll:
+//!
+//! - the first poll (and any rebase it cannot catch up from) emits one
+//!   [`FollowEvent::Base`] carrying the fully materialized base snapshot;
+//! - every later poll emits [`FollowEvent::Record`]s for journal records
+//!   past the follower's watermark, including records recovered from the
+//!   *unlisted* tail segments the primary has spilled but not yet named
+//!   in a manifest commit.
+//!
+//! Correctness against a live writer rests on three rules. First, the
+//! watermark only advances over records actually emitted, so anything the
+//! primary publishes later is picked up by a later poll and anything read
+//! twice (a torn tail re-read once complete) is skipped by sequence
+//! number. Chunk records carry no sequence number and may be emitted more
+//! than once — consumers must dedup by chunk key, exactly as
+//! [`ReplayState::apply`](crate::persist::ReplayState) does. Second,
+//! unlisted segments are never marked "done": a file caught mid-write can
+//! parse as a clean record prefix, so only manifest-listed segments
+//! (durable before being named, whole-file CRC) enter the applied set.
+//! Third, when a compaction rebases the chain, the follower compares the
+//! new base's floor against its own watermark: at or below means the base
+//! holds nothing the follower lacks and tailing continues seamlessly;
+//! above means records were folded away before this follower saw them,
+//! and the only consistent continuation is a fresh [`FollowEvent::Base`].
+//!
+//! Files vanishing mid-poll (the primary's writer garbage-collects
+//! superseded bases and segments after a fold) are treated as "poll again
+//! later", never as corruption: the next poll reads the newer manifest
+//! and the rebase rule takes over.
+
+use crate::core::checkpoint::{self, CheckpointData};
+use crate::error::{Error, Result};
+use crate::persist::manifest::{self, Manifest};
+use crate::persist::segment::{self, DecodedRecord};
+use std::collections::HashSet;
+use std::path::{Path, PathBuf};
+
+/// One incremental observation from [`Follower::poll`].
+pub enum FollowEvent {
+    /// The chain was seen for the first time or rebased past the
+    /// follower's watermark: a fully materialized snapshot replacing all
+    /// previously emitted state.
+    Base(CheckpointData),
+    /// One journal record beyond the follower's watermark.
+    Record(DecodedRecord),
+}
+
+/// Incremental reader over another server's `RVBCKPT3` manifest chain.
+pub struct Follower {
+    dir: PathBuf,
+    manifest_path: PathBuf,
+    /// File name of the base last folded in; `None` until the first
+    /// successful poll of an existing manifest.
+    base: Option<String>,
+    /// Highest journal sequence number emitted.
+    watermark: u64,
+    /// Manifest-listed segment files fully applied (durable + CRC-clean,
+    /// so never worth re-reading).
+    applied: HashSet<String>,
+}
+
+/// The sequence number a manifest's base already folds in: everything
+/// before the first listed segment, or the manifest watermark when the
+/// commit listed no segments (all journal state folded into the base).
+fn base_floor(m: &Manifest) -> u64 {
+    m.segments
+        .iter()
+        .map(|s| s.first_seq.saturating_sub(1))
+        .min()
+        .unwrap_or(m.watermark)
+}
+
+/// `true` for errors meaning "the file is not there (yet / any more)" —
+/// the live-writer races poll simply retries past.
+fn is_gone(e: &Error) -> bool {
+    matches!(e, Error::Io(io) if io.kind() == std::io::ErrorKind::NotFound)
+}
+
+impl Follower {
+    /// Follow the chain published at `manifest_path` (the primary's
+    /// `checkpoint_dir/MANIFEST.rvb3`). The manifest need not exist yet;
+    /// polls before the primary's first commit emit nothing.
+    pub fn new(manifest_path: impl Into<PathBuf>) -> Follower {
+        let manifest_path = manifest_path.into();
+        let dir = manifest_path
+            .parent()
+            .map(Path::to_path_buf)
+            .unwrap_or_else(|| PathBuf::from("."));
+        Follower {
+            dir,
+            manifest_path,
+            base: None,
+            watermark: 0,
+            applied: HashSet::new(),
+        }
+    }
+
+    /// Highest journal sequence number emitted so far.
+    pub fn watermark(&self) -> u64 {
+        self.watermark
+    }
+
+    /// Read the chain once and emit everything new through `sink`.
+    /// Returns `true` if any event was emitted. An error from `sink`
+    /// aborts the poll *without* advancing past the failed event, so the
+    /// next poll re-emits from the same point (chunk records excepted —
+    /// they are dedup-by-key and may repeat regardless).
+    pub fn poll(&mut self, sink: &mut dyn FnMut(FollowEvent) -> Result<()>) -> Result<bool> {
+        let m = match manifest::read_manifest(&self.manifest_path) {
+            Ok(m) => m,
+            // Not committed yet (or replaced mid-read): nothing to do.
+            Err(e) if is_gone(&e) => return Ok(false),
+            Err(e) => return Err(e),
+        };
+        let mut emitted = false;
+
+        if self.base.as_deref() != Some(m.base.as_str()) {
+            let floor = base_floor(&m);
+            if self.base.is_none() || floor > self.watermark {
+                // First sight of the chain, or a rebase that folded away
+                // records this follower never saw: restart from the base.
+                let data = match checkpoint::read_full(&self.dir.join(&m.base)) {
+                    Ok(d) => d,
+                    Err(e) if is_gone(&e) => return Ok(false),
+                    Err(e) => return Err(e),
+                };
+                sink(FollowEvent::Base(data))?;
+                self.watermark = floor;
+                self.applied.clear();
+                emitted = true;
+            }
+            // A rebase we are already ahead of needs no event: the new
+            // base holds only records below our watermark.
+            self.base = Some(m.base.clone());
+        }
+
+        // Listed segments: durable before the manifest named them, so one
+        // clean strict read each — then never again.
+        let listed: HashSet<&str> = m.segments.iter().map(|s| s.file.as_str()).collect();
+        for meta in &m.segments {
+            if self.applied.contains(&meta.file) {
+                continue;
+            }
+            if meta.last_seq <= self.watermark {
+                self.applied.insert(meta.file.clone());
+                continue;
+            }
+            let bytes = match segment::verify_meta(&self.dir.join(&meta.file), meta) {
+                Ok(b) => b,
+                Err(e) if is_gone(&e) => return Ok(emitted),
+                Err(e) => return Err(e),
+            };
+            let rs = segment::decode_segment(&bytes, &meta.file, true)?;
+            emitted |= self.emit_past_watermark(rs.records, sink)?;
+            self.applied.insert(meta.file.clone());
+        }
+        // Names the manifest no longer lists were folded into the base;
+        // indices are never reused, so dropping them just bounds the set.
+        self.applied.retain(|f| listed.contains(f.as_str()));
+
+        // Unlisted tail: spilled (possibly mid-write) since the last
+        // commit. Re-read every poll — a clean-looking prefix proves
+        // nothing about a file still being written, only sequence numbers
+        // do. A torn file ends the walk: the writer spills sequentially,
+        // so nothing consistent exists past it.
+        let mut tail: Vec<(u64, PathBuf)> = Vec::new();
+        for entry in std::fs::read_dir(&self.dir)? {
+            let entry = entry?;
+            let name = entry.file_name();
+            let name = name.to_string_lossy();
+            if listed.contains(name.as_ref()) {
+                continue;
+            }
+            if let Some(idx) = segment::parse_segment_index(&name) {
+                if idx >= m.first_unlisted_index {
+                    tail.push((idx, entry.path()));
+                }
+            }
+        }
+        tail.sort_by_key(|(idx, _)| *idx);
+        for (_, path) in &tail {
+            let rs = match segment::read_segment(path, false) {
+                Ok(rs) => rs,
+                Err(e) if is_gone(&e) => break,
+                Err(e) => return Err(e),
+            };
+            emitted |= self.emit_past_watermark(rs.records, sink)?;
+            if !rs.clean {
+                break;
+            }
+        }
+        Ok(emitted)
+    }
+
+    fn emit_past_watermark(
+        &mut self,
+        records: Vec<DecodedRecord>,
+        sink: &mut dyn FnMut(FollowEvent) -> Result<()>,
+    ) -> Result<bool> {
+        let mut emitted = false;
+        for rec in records {
+            match rec.seq() {
+                Some(seq) if seq <= self.watermark => continue,
+                Some(seq) => {
+                    sink(FollowEvent::Record(rec))?;
+                    self.watermark = seq;
+                    emitted = true;
+                }
+                // Chunk payloads: no seq, keyed dedup downstream.
+                None => {
+                    sink(FollowEvent::Record(rec))?;
+                    emitted = true;
+                }
+            }
+        }
+        Ok(emitted)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::chunk::{Chunk, Compression};
+    use crate::core::item::Item;
+    use crate::core::table::{Table, TableConfig};
+    use crate::persist::{PersistConfig, Persister, MANIFEST_NAME};
+    use crate::Tensor;
+    use std::collections::HashMap;
+    use std::sync::atomic::{AtomicU64, Ordering};
+    use std::sync::Arc;
+
+    static CASE_ID: AtomicU64 = AtomicU64::new(0);
+
+    fn case_dir(label: &str) -> PathBuf {
+        let id = CASE_ID.fetch_add(1, Ordering::Relaxed);
+        let dir = std::env::temp_dir().join(format!(
+            "reverb_follower_{label}_{}_{id}",
+            std::process::id()
+        ));
+        std::fs::remove_dir_all(&dir).ok();
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    fn mk_item(key: u64) -> Item {
+        let steps = vec![vec![Tensor::from_f32(&[1], &[key as f32]).unwrap()]];
+        let chunk =
+            Arc::new(Chunk::from_steps(key + 1_000_000, 0, &steps, Compression::None).unwrap());
+        Item::new(key, "t", 1.0, vec![chunk], 0, 1).unwrap()
+    }
+
+    /// A model mirror fed by follow events: key → priority for table "t".
+    #[derive(Default)]
+    struct Mirror {
+        items: HashMap<u64, f64>,
+        bases: usize,
+    }
+
+    impl Mirror {
+        fn absorb(&mut self, ev: FollowEvent) {
+            match ev {
+                FollowEvent::Base(data) => {
+                    self.bases += 1;
+                    self.items = data
+                        .tables
+                        .iter()
+                        .find(|t| t.name == "t")
+                        .map(|t| t.items.iter().map(|i| (i.key, i.priority)).collect())
+                        .unwrap_or_default();
+                }
+                FollowEvent::Record(rec) => match rec {
+                    DecodedRecord::Chunk(_) => {}
+                    DecodedRecord::Insert { item, .. } => {
+                        self.items.insert(item.key, item.priority);
+                    }
+                    DecodedRecord::Delete { key, .. } => {
+                        self.items.remove(&key);
+                    }
+                    DecodedRecord::Update { key, priority, .. } => {
+                        if let Some(p) = self.items.get_mut(&key) {
+                            *p = priority;
+                        }
+                    }
+                },
+            }
+        }
+
+        fn assert_matches(&self, table: &Table, what: &str) {
+            let (items, _, _) = table.snapshot();
+            assert_eq!(items.len(), self.items.len(), "{what}: item count");
+            for item in &items {
+                assert_eq!(
+                    self.items.get(&item.key),
+                    Some(&item.priority),
+                    "{what}: item {}",
+                    item.key
+                );
+            }
+        }
+    }
+
+    fn poll_into(f: &mut Follower, mirror: &mut Mirror) -> bool {
+        f.poll(&mut |ev| {
+            mirror.absorb(ev);
+            Ok(())
+        })
+        .unwrap()
+    }
+
+    #[test]
+    fn polls_before_first_commit_emit_nothing() {
+        let dir = case_dir("empty");
+        let mut f = Follower::new(dir.join(MANIFEST_NAME));
+        let mut mirror = Mirror::default();
+        assert!(!poll_into(&mut f, &mut mirror));
+        assert_eq!(f.watermark(), 0);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn tails_commits_incrementally_without_replays() {
+        let dir = case_dir("tail");
+        let table = Arc::new(Table::new(TableConfig::uniform_replay("t", 10_000)));
+        let persister =
+            Persister::start(PersistConfig::new(&dir), &[table.clone()]).unwrap();
+        let mut f = Follower::new(dir.join(MANIFEST_NAME));
+        let mut mirror = Mirror::default();
+
+        for k in 1..=10u64 {
+            table.insert_or_assign(mk_item(k), None).unwrap();
+        }
+        persister.rotate(&[table.clone()]).wait().unwrap();
+        assert!(poll_into(&mut f, &mut mirror));
+        assert_eq!(mirror.bases, 1, "exactly one base load");
+        mirror.assert_matches(&table, "after first commit");
+        let wm1 = f.watermark();
+        assert_eq!(wm1, 10);
+
+        // More mutations, including a delete and an update.
+        for k in 11..=20u64 {
+            table.insert_or_assign(mk_item(k), None).unwrap();
+        }
+        table.delete(&[3]).unwrap();
+        table.update_priorities(&[(5, 9.0)]).unwrap();
+        persister.rotate(&[table.clone()]).wait().unwrap();
+        assert!(poll_into(&mut f, &mut mirror));
+        assert_eq!(mirror.bases, 1, "incremental catch-up, no re-base");
+        assert!(f.watermark() > wm1);
+        mirror.assert_matches(&table, "after second commit");
+
+        // Nothing new: the poll is quiet and the watermark is stable.
+        let wm2 = f.watermark();
+        assert!(!poll_into(&mut f, &mut mirror));
+        assert_eq!(f.watermark(), wm2);
+
+        persister.stop(&[table.clone()]);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn reads_unlisted_tail_and_converges_on_commit() {
+        let dir = case_dir("uncommitted");
+        let table = Arc::new(Table::new(TableConfig::uniform_replay("t", 10_000)));
+        let persister =
+            Persister::start(PersistConfig::new(&dir), &[table.clone()]).unwrap();
+        let mut f = Follower::new(dir.join(MANIFEST_NAME));
+        let mut mirror = Mirror::default();
+
+        table.insert_or_assign(mk_item(1), None).unwrap();
+        persister.rotate(&[table.clone()]).wait().unwrap();
+        assert!(poll_into(&mut f, &mut mirror));
+
+        // Spill a segment the manifest does not list yet (the crash
+        // window): the follower must still pick it up...
+        table.insert_or_assign(mk_item(2), None).unwrap();
+        persister.journal().rotate();
+        persister.sync_writer().unwrap();
+        assert!(poll_into(&mut f, &mut mirror));
+        mirror.assert_matches(&table, "uncommitted tail");
+        let wm = f.watermark();
+
+        // ...and once a commit lists that segment, re-reading it emits
+        // nothing new (sequence numbers dedup the overlap).
+        persister.rotate(&[table.clone()]).wait().unwrap();
+        let grew = f
+            .poll(&mut |ev| {
+                assert!(
+                    matches!(ev, FollowEvent::Record(DecodedRecord::Chunk(_))),
+                    "only keyed-dedup chunk records may repeat"
+                );
+                Ok(())
+            })
+            .unwrap();
+        let _ = grew; // chunk re-emission is allowed either way
+        assert_eq!(f.watermark(), wm);
+
+        persister.stop(&[table.clone()]);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn rebase_past_watermark_reloads_from_base() {
+        let dir = case_dir("rebase");
+        let table = Arc::new(Table::new(TableConfig::uniform_replay("t", 10_000)));
+        // Aggressive compaction so commits fold the journal into fresh
+        // bases (the rebase the follower must survive).
+        let persister = Persister::start(
+            PersistConfig::new(&dir)
+                .with_segment_bytes(512)
+                .with_compaction(1024, 0.0),
+            &[table.clone()],
+        )
+        .unwrap();
+        let mut f = Follower::new(dir.join(MANIFEST_NAME));
+        let mut mirror = Mirror::default();
+
+        table.insert_or_assign(mk_item(1), None).unwrap();
+        persister.rotate(&[table.clone()]).wait().unwrap();
+        assert!(poll_into(&mut f, &mut mirror));
+        mirror.assert_matches(&table, "initial");
+
+        // A *stale* follower (this one stops polling) misses several
+        // fold generations...
+        for k in 2..=60u64 {
+            table.insert_or_assign(mk_item(k), None).unwrap();
+            if k % 15 == 0 {
+                persister.rotate(&[table.clone()]).wait().unwrap();
+            }
+        }
+        table.delete(&[1]).unwrap();
+        persister.rotate(&[table.clone()]).wait().unwrap();
+
+        // ...and on its next poll must reload from the new base rather
+        // than silently missing the folded-away records.
+        assert!(poll_into(&mut f, &mut mirror));
+        mirror.assert_matches(&table, "after rebase");
+
+        persister.stop(&[table.clone()]);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -30,11 +30,13 @@
 //! queue semantics survive exactly), and the `samples` counter restores
 //! from the most recent manifest commit rather than the crash instant.
 
+pub mod follower;
 pub mod journal;
 pub mod manifest;
 pub mod segment;
 pub mod writer;
 
+pub use follower::{FollowEvent, Follower};
 pub use journal::{Journal, JournaledItem, Op};
 pub use manifest::{Manifest, TableCounters, MANIFEST_NAME};
 pub use writer::{PendingCommit, PersistConfig, Persister, DEFAULT_SEGMENT_BYTES};

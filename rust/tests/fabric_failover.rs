@@ -1,0 +1,235 @@
+//! Replay-fabric failover conformance (DESIGN.md §14).
+//!
+//! Three in-proc members behind one `reverb+pool://` facade; one member is
+//! killed mid-stream. The contract under test:
+//!
+//! - writers re-route the dead member's key range to the survivors with no
+//!   client-visible errors, and no insert acked on a survivor is lost;
+//! - samplers keep drawing across the kill;
+//! - the quarantined member rejoins after a successful re-probe and starts
+//!   receiving its key range again;
+//! - a warm standby tailing the member's checkpoint chain takes over its
+//!   hash slot and serves the dead member's items.
+
+use reverb::core::table::TableConfig;
+use reverb::net::server::Server;
+use reverb::{
+    Client, Fabric, FabricOptions, PersistMode, SamplerOptions, StandbyConfig, Tensor,
+    WriterOptions,
+};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::{Duration, Instant};
+
+static CASE_ID: AtomicU64 = AtomicU64::new(0);
+
+fn case_dir(label: &str) -> PathBuf {
+    let id = CASE_ID.fetch_add(1, Ordering::Relaxed);
+    let dir = std::env::temp_dir().join(format!(
+        "reverb_fabric_failover_{label}_{}_{id}",
+        std::process::id()
+    ));
+    std::fs::remove_dir_all(&dir).ok();
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+/// Probe/quarantine cadence fast enough for tests: detection and re-probe
+/// land within tens of milliseconds instead of seconds.
+fn fast_opts() -> FabricOptions {
+    FabricOptions {
+        ping_interval: Duration::from_millis(25),
+        quarantine_base: Duration::from_millis(50),
+        quarantine_max: Duration::from_secs(1),
+        ..FabricOptions::default()
+    }
+}
+
+fn in_proc_member(tag: &str, i: usize) -> Server {
+    Server::builder()
+        .table(TableConfig::uniform_replay("t", 10_000))
+        .in_proc_name(format!("fabfail-{tag}-{i}"))
+        .serve_in_proc()
+        .unwrap()
+}
+
+fn write_one(client: &Client, v: f32) {
+    let mut w = client.writer(WriterOptions::default()).unwrap();
+    w.append(vec![Tensor::from_f32(&[1], &[v]).unwrap()]).unwrap();
+    w.create_item("t", 1, 1.0).unwrap();
+    w.flush().unwrap();
+}
+
+fn wait_until(what: &str, deadline: Duration, mut cond: impl FnMut() -> bool) {
+    let start = Instant::now();
+    while !cond() {
+        assert!(
+            start.elapsed() < deadline,
+            "timed out after {deadline:?} waiting for: {what}"
+        );
+        std::thread::sleep(Duration::from_millis(10));
+    }
+}
+
+#[test]
+fn kill_one_member_reroutes_writes_and_sampling_survives() {
+    let mut servers: Vec<Server> = (0..3).map(|i| in_proc_member("rejoin", i)).collect();
+    let addrs: Vec<String> = servers.iter().map(|s| s.in_proc_addr()).collect();
+    let fabric = Fabric::connect(&addrs, fast_opts()).unwrap();
+    let client = fabric.client().unwrap();
+
+    for i in 0..30 {
+        write_one(&client, i as f32);
+    }
+    let sizes: Vec<usize> = servers
+        .iter()
+        .map(|s| s.table("t").unwrap().size())
+        .collect();
+    assert_eq!(sizes.iter().sum::<usize>(), 30);
+    assert!(sizes.iter().all(|&s| s > 0), "uneven spread: {sizes:?}");
+
+    // A sampler opened before the kill must keep drawing across it.
+    let mut sampler = client
+        .sampler(SamplerOptions::new("t").with_timeout_ms(5000))
+        .unwrap();
+    for _ in 0..10 {
+        sampler.next_sample().unwrap();
+    }
+
+    let victim_size = sizes[2];
+    servers[2].stop();
+    wait_until("victim quarantined", Duration::from_secs(5), || {
+        !fabric.member_up(2)
+    });
+
+    // Samplers keep drawing: in-flight requests on the dead member
+    // re-route, later picks avoid it.
+    for _ in 0..20 {
+        sampler.next_sample().unwrap();
+    }
+
+    // Writers re-route: every post-kill insert must be acked and must land
+    // on a survivor.
+    for i in 0..30 {
+        write_one(&client, 100.0 + i as f32);
+    }
+    let survivor_total: usize = servers[..2]
+        .iter()
+        .map(|s| s.table("t").unwrap().size())
+        .sum();
+    assert_eq!(
+        survivor_total,
+        60 - victim_size,
+        "survivors must hold every item except the victim's pre-kill ones"
+    );
+
+    // The pool keeps answering info (merged over the survivors).
+    let info = client.server_info().unwrap();
+    assert_eq!(info[0].1.size, survivor_total);
+
+    // Rebind the same in-proc name: the re-probe must bring the member
+    // back into rotation.
+    servers[2] = in_proc_member("rejoin", 2);
+    wait_until("victim rejoined", Duration::from_secs(5), || {
+        fabric.member_up(2)
+    });
+
+    // Rejoined members get their key range back.
+    for i in 0..60 {
+        write_one(&client, 200.0 + i as f32);
+    }
+    wait_until("rejoined member receives writes", Duration::from_secs(5), || {
+        servers[2].table("t").unwrap().size() > 0
+    });
+    let total: usize = servers
+        .iter()
+        .map(|s| s.table("t").unwrap().size())
+        .sum();
+    assert_eq!(total, survivor_total + 60);
+}
+
+#[test]
+fn warm_standby_takes_over_the_dead_members_slot() {
+    let dir = case_dir("standby");
+    let member_a = in_proc_member("takeover", 0);
+    let mut member_b = Server::builder()
+        .table(TableConfig::uniform_replay("t", 10_000))
+        .in_proc_name("fabfail-takeover-1")
+        .checkpoint_dir(&dir)
+        .persist_mode(PersistMode::Incremental {
+            journal_segment_bytes: reverb::persist::DEFAULT_SEGMENT_BYTES,
+        })
+        .serve_in_proc()
+        .unwrap();
+    let standby = Server::builder()
+        .table(TableConfig::uniform_replay("t", 10_000))
+        .in_proc_name("fabfail-takeover-standby")
+        .serve_in_proc()
+        .unwrap();
+
+    let addrs = vec![member_a.in_proc_addr(), member_b.in_proc_addr()];
+    let mut opts = fast_opts();
+    opts.standbys = vec![StandbyConfig {
+        follows: member_b.in_proc_addr(),
+        addr: standby.in_proc_addr(),
+        dir: dir.clone(),
+    }];
+    let fabric = Fabric::connect(&addrs, opts).unwrap();
+    let client = fabric.client().unwrap();
+
+    for i in 0..40 {
+        write_one(&client, i as f32);
+    }
+    let b_size = member_b.table("t").unwrap().size();
+    assert!(b_size > 0, "member B should own part of the key range");
+
+    // Publish B's state; the standby must mirror it while B is healthy.
+    member_b.checkpoint().unwrap();
+    wait_until("standby catches up to checkpoint", Duration::from_secs(10), || {
+        standby.table("t").unwrap().size() == b_size
+    });
+
+    // More acked inserts after the checkpoint: B's shutdown rotation makes
+    // them durable, and the standby's final drain must pick them up.
+    for i in 0..10 {
+        write_one(&client, 100.0 + i as f32);
+    }
+    let a_size = member_a.table("t").unwrap().size();
+    let b_final = member_b.table("t").unwrap().size();
+    assert_eq!(a_size + b_final, 50);
+
+    member_b.stop();
+    let standby_addr = standby.in_proc_addr();
+    wait_until("standby promoted into B's slot", Duration::from_secs(10), || {
+        fabric.member_addr(1) == standby_addr
+    });
+    assert_eq!(fabric.member_takeovers(1), 1);
+    assert!(fabric.member_up(1));
+
+    // No acked insert lost: A's items plus the standby's restored items
+    // cover everything ever acked.
+    wait_until("standby serves B's items", Duration::from_secs(10), || {
+        standby.table("t").unwrap().size() == b_final
+    });
+    let info = client.server_info().unwrap();
+    assert_eq!(info[0].1.size, 50, "pool-wide size after takeover");
+
+    // Sampling keeps working and the facade routes B's hash slot to the
+    // standby for new writes.
+    let mut sampler = client
+        .sampler(SamplerOptions::new("t").with_timeout_ms(5000))
+        .unwrap();
+    for _ in 0..30 {
+        sampler.next_sample().unwrap();
+    }
+    for i in 0..20 {
+        write_one(&client, 200.0 + i as f32);
+    }
+    wait_until("standby receives post-takeover writes", Duration::from_secs(5), || {
+        standby.table("t").unwrap().size() > b_final
+    });
+    let total = member_a.table("t").unwrap().size() + standby.table("t").unwrap().size();
+    assert_eq!(total, 70, "every acked insert accounted for after takeover");
+
+    std::fs::remove_dir_all(&dir).ok();
+}

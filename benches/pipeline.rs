@@ -76,6 +76,7 @@ fn insert_qps(addr: &str, depth: usize, batch: usize, window: Duration) -> f64 {
                 id,
                 items,
                 timeout_ms: 30_000,
+                trace: None,
             })
             .unwrap()
         };
@@ -134,7 +135,7 @@ fn mutate_qps(addr: &str, keys: &[u64], batch: usize, window: Duration) -> f64 {
                 })
                 .collect();
             let results = pipe
-                .submit(|id| Message::PriorityUpdateBatch { id, ops })
+                .submit(|id| Message::PriorityUpdateBatch { id, ops, trace: None })
                 .unwrap()
                 .expect_batch()
                 .unwrap();

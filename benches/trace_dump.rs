@@ -1,0 +1,286 @@
+//! End-to-end flight-recorder check (DESIGN.md §15): boot a server with
+//! the metrics listener, push traced traffic through a pipelined client,
+//! fetch `/trace`, and validate the dump is well-formed Chrome
+//! trace-event JSON carrying the expected stage names. Saves the raw
+//! dump to `TRACE_dump.json` (CI uploads it next to the `BENCH_*.json`
+//! artifacts) and a summary to `BENCH_trace_dump.json`.
+//!
+//! Run: `cargo bench --bench trace_dump`
+
+use reverb::core::table::TableConfig;
+use reverb::net::trace::TraceContext;
+use reverb::net::wire::{Message, WireItem};
+use reverb::util::bench::*;
+use reverb::util::rng::Pcg32;
+use reverb::{Chunk, Compression, Pipeline, Server};
+use std::collections::BTreeSet;
+use std::io::{Read, Write};
+use std::sync::Arc;
+
+const PAYLOAD_FLOATS: usize = 50;
+const BATCHES: usize = 64;
+const BATCH: usize = 8;
+
+fn mk_op(key: u64, rng: &mut Pcg32) -> (Arc<Chunk>, WireItem) {
+    let steps = vec![random_step(PAYLOAD_FLOATS, rng)];
+    let chunk = Arc::new(Chunk::from_steps(key, 0, &steps, Compression::None).unwrap());
+    let item = WireItem {
+        key: key | (1 << 62),
+        table: "t".into(),
+        priority: 1.0,
+        chunk_keys: vec![key],
+        offset: 0,
+        length: 1,
+        times_sampled: 0,
+        columns: None,
+    };
+    (chunk, item)
+}
+
+/// Minimal single-pass JSON well-formedness scanner (the offline crate
+/// set has no serde): validates the full value grammar, nothing more.
+struct Scan<'a> {
+    b: &'a [u8],
+    i: usize,
+}
+
+impl<'a> Scan<'a> {
+    fn ws(&mut self) {
+        while matches!(self.b.get(self.i), Some(b' ' | b'\t' | b'\n' | b'\r')) {
+            self.i += 1;
+        }
+    }
+
+    fn eat(&mut self, c: u8) -> Result<(), String> {
+        if self.b.get(self.i) == Some(&c) {
+            self.i += 1;
+            Ok(())
+        } else {
+            Err(format!("expected {:?} at byte {}", c as char, self.i))
+        }
+    }
+
+    fn string(&mut self) -> Result<(), String> {
+        self.eat(b'"')?;
+        loop {
+            match self.b.get(self.i) {
+                Some(b'"') => {
+                    self.i += 1;
+                    return Ok(());
+                }
+                Some(b'\\') => self.i += 2,
+                Some(_) => self.i += 1,
+                None => return Err("unterminated string".into()),
+            }
+        }
+    }
+
+    fn value(&mut self) -> Result<(), String> {
+        self.ws();
+        match self.b.get(self.i) {
+            Some(b'{') => {
+                self.i += 1;
+                self.ws();
+                if self.b.get(self.i) == Some(&b'}') {
+                    self.i += 1;
+                    return Ok(());
+                }
+                loop {
+                    self.ws();
+                    self.string()?;
+                    self.ws();
+                    self.eat(b':')?;
+                    self.value()?;
+                    self.ws();
+                    match self.b.get(self.i) {
+                        Some(b',') => self.i += 1,
+                        Some(b'}') => {
+                            self.i += 1;
+                            return Ok(());
+                        }
+                        _ => return Err(format!("bad object at byte {}", self.i)),
+                    }
+                }
+            }
+            Some(b'[') => {
+                self.i += 1;
+                self.ws();
+                if self.b.get(self.i) == Some(&b']') {
+                    self.i += 1;
+                    return Ok(());
+                }
+                loop {
+                    self.value()?;
+                    self.ws();
+                    match self.b.get(self.i) {
+                        Some(b',') => self.i += 1,
+                        Some(b']') => {
+                            self.i += 1;
+                            return Ok(());
+                        }
+                        _ => return Err(format!("bad array at byte {}", self.i)),
+                    }
+                }
+            }
+            Some(b'"') => self.string(),
+            Some(b't') => self.lit("true"),
+            Some(b'f') => self.lit("false"),
+            Some(b'n') => self.lit("null"),
+            Some(_) => {
+                let start = self.i;
+                while matches!(
+                    self.b.get(self.i),
+                    Some(b'0'..=b'9' | b'-' | b'+' | b'.' | b'e' | b'E')
+                ) {
+                    self.i += 1;
+                }
+                if self.i == start {
+                    Err(format!("bad value at byte {start}"))
+                } else {
+                    Ok(())
+                }
+            }
+            None => Err("truncated".into()),
+        }
+    }
+
+    fn lit(&mut self, s: &str) -> Result<(), String> {
+        if self.b[self.i..].starts_with(s.as_bytes()) {
+            self.i += s.len();
+            Ok(())
+        } else {
+            Err(format!("bad literal at byte {}", self.i))
+        }
+    }
+}
+
+fn validate_json(text: &str) -> Result<(), String> {
+    let mut s = Scan {
+        b: text.as_bytes(),
+        i: 0,
+    };
+    s.value()?;
+    s.ws();
+    if s.i == s.b.len() {
+        Ok(())
+    } else {
+        Err(format!("trailing bytes at {}", s.i))
+    }
+}
+
+fn http_get(addr: &str, path: &str) -> String {
+    let mut sock = std::net::TcpStream::connect(addr).expect("connect metrics listener");
+    sock.write_all(
+        format!("GET {path} HTTP/1.1\r\nHost: reverb\r\nConnection: close\r\n\r\n").as_bytes(),
+    )
+    .unwrap();
+    let mut raw = Vec::new();
+    sock.read_to_end(&mut raw).unwrap();
+    let text = String::from_utf8_lossy(&raw).into_owned();
+    let (head, body) = text.split_once("\r\n\r\n").expect("http head");
+    assert!(head.starts_with("HTTP/1.1 200"), "{path} failed: {head}");
+    body.to_string()
+}
+
+fn main() {
+    let server = Server::builder()
+        .table(TableConfig::uniform_replay("t", 100_000))
+        .metrics_addr("127.0.0.1:0")
+        .bind("127.0.0.1:0")
+        .unwrap();
+    let addr = format!("tcp://{}", server.local_addr());
+    let scrape = server.metrics_addr().unwrap().to_string();
+
+    // Traced traffic: every batch stamped, so the dump carries full
+    // client→server span chains.
+    let pipe = Pipeline::connect(&addr, 8).unwrap();
+    let mut rng = Pcg32::new(0x7ace, 0xd00d);
+    let mut next_key = 1u64;
+    let mut outstanding = std::collections::VecDeque::new();
+    for _ in 0..BATCHES {
+        let mut chunks = Vec::with_capacity(BATCH);
+        let mut items = Vec::with_capacity(BATCH);
+        for _ in 0..BATCH {
+            let (c, i) = mk_op(next_key, &mut rng);
+            next_key += 1;
+            chunks.push(c);
+            items.push(i);
+        }
+        pipe.send_unacked(Message::InsertChunks { chunks }).unwrap();
+        let c = pipe
+            .submit(|id| Message::CreateItemBatch {
+                id,
+                items,
+                timeout_ms: 30_000,
+                trace: Some(TraceContext::generate()),
+            })
+            .unwrap();
+        pipe.flush().unwrap();
+        outstanding.push_back(c);
+        while outstanding.len() >= 8 {
+            outstanding.pop_front().unwrap().expect_batch().unwrap();
+        }
+    }
+    while let Some(c) = outstanding.pop_front() {
+        c.expect_batch().unwrap();
+    }
+
+    let dump = http_get(&scrape, "/trace");
+    std::fs::write("TRACE_dump.json", &dump).expect("write TRACE_dump.json");
+
+    if let Err(e) = validate_json(&dump) {
+        println!("RESULT: FAIL — /trace is not well-formed JSON: {e}");
+        std::process::exit(1);
+    }
+    if !dump.starts_with("{\"traceEvents\":[") {
+        println!("RESULT: FAIL — /trace missing traceEvents envelope");
+        std::process::exit(1);
+    }
+    let events = dump.matches("\"ph\":\"X\"").count();
+    let stages: BTreeSet<&str> = [
+        "decode", "queue", "gate", "lock", "execute", "journal", "flush", "submit",
+        "client_flush", "reply", "pick", "reroute",
+    ]
+    .into_iter()
+    .filter(|s| dump.contains(&format!("\"name\":\"{s}\"")))
+    .collect();
+    println!("# /trace: {events} spans, stages {stages:?}");
+
+    let required = ["submit", "reply", "execute"];
+    let missing: Vec<&str> = required
+        .iter()
+        .copied()
+        .filter(|s| !stages.contains(s))
+        .collect();
+
+    let json = format!(
+        "{{\"bench\":\"trace_dump\",\"batches\":{BATCHES},\"batch\":{BATCH},\
+         \"spans\":{events},\"stages\":[{}],\"missing\":[{}]}}",
+        stages
+            .iter()
+            .map(|s| format!("\"{s}\""))
+            .collect::<Vec<_>>()
+            .join(","),
+        missing
+            .iter()
+            .map(|s| format!("\"{s}\""))
+            .collect::<Vec<_>>()
+            .join(","),
+    );
+    std::fs::write("BENCH_trace_dump.json", &json).expect("write BENCH_trace_dump.json");
+    println!("wrote BENCH_trace_dump.json + TRACE_dump.json");
+
+    if events == 0 {
+        println!("RESULT: FAIL — traced traffic produced an empty flight recorder");
+        std::process::exit(1);
+    }
+    if !missing.is_empty() {
+        println!("RESULT: FAIL — dump missing expected stages: {missing:?}");
+        std::process::exit(1);
+    }
+    println!(
+        "RESULT: PASS — /trace parses as Chrome trace-event JSON; {events} spans across \
+         {} stages.",
+        stages.len()
+    );
+}

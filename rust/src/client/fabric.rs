@@ -44,6 +44,7 @@ use super::{Client, Conn};
 use crate::core::chunk::Chunk;
 use crate::core::table::TableInfo;
 use crate::error::{Error, Result};
+use crate::net::trace::{self, Stage, TraceContext};
 use crate::net::transport::{self, MsgStream, PollSource};
 use crate::net::wire::{code, BatchResult, Message, PriorityUpdateOp, WireItem};
 use crate::persist::segment::DecodedRecord;
@@ -542,51 +543,88 @@ impl Fabric {
     /// Per-member fabric gauges in Prometheus text exposition format,
     /// suitable for concatenation with a server's `/metrics` payload.
     pub fn metrics_text(&self) -> String {
-        let mut out = String::new();
-        out.push_str("# TYPE reverb_fabric_member_up gauge\n");
-        for m in &self.core.members {
-            out.push_str(&format!(
-                "reverb_fabric_member_up{{member=\"{}\"}} {}\n",
-                m.node_id,
-                if m.is_up() { 1 } else { 0 }
-            ));
-        }
-        out.push_str("# TYPE reverb_fabric_member_weight gauge\n");
-        for m in &self.core.members {
-            for (table, w) in m.weights.lock().unwrap().iter() {
-                out.push_str(&format!(
-                    "reverb_fabric_member_weight{{member=\"{}\",table=\"{}\"}} {}\n",
-                    m.node_id, table, w
-                ));
-            }
-        }
-        for name in ["errors", "quarantines", "reroutes", "takeovers"] {
-            out.push_str(&format!(
-                "# TYPE reverb_fabric_member_{name}_total counter\n"
-            ));
-            for m in &self.core.members {
-                let v = match name {
-                    "errors" => m.errors.load(Ordering::Relaxed),
-                    "quarantines" => m.quarantines.load(Ordering::Relaxed),
-                    "reroutes" => m.reroutes.load(Ordering::Relaxed),
-                    _ => m.takeovers.load(Ordering::Relaxed),
-                };
-                out.push_str(&format!(
-                    "reverb_fabric_member_{name}_total{{member=\"{}\"}} {}\n",
-                    m.node_id, v
-                ));
-            }
-        }
-        out.push_str("# TYPE reverb_fabric_standby_applied_seq gauge\n");
-        for s in &self.core.standbys {
-            out.push_str(&format!(
-                "reverb_fabric_standby_applied_seq{{follows=\"{}\"}} {}\n",
-                s.cfg.follows,
-                s.applied.load(Ordering::Relaxed)
-            ));
-        }
-        out
+        render_fabric_metrics(&self.core)
     }
+
+    /// Serve [`Fabric::metrics_text`] over HTTP: binds `addr`, answers
+    /// `GET /metrics` scrapes with the fabric gauges, and returns the
+    /// bound address (`addr` may use port 0). The accept loop holds the
+    /// core weakly, so it stops serving once the last fabric handle and
+    /// stream drop; exposed on the CLI as `--fabric-metrics-addr`.
+    pub fn serve_metrics(&self, addr: &str) -> Result<std::net::SocketAddr> {
+        let listener = std::net::TcpListener::bind(addr)?;
+        let bound = listener.local_addr()?;
+        let weak = Arc::downgrade(&self.core);
+        let _ = std::thread::Builder::new()
+            .name("fabric-metrics".into())
+            .spawn(move || {
+                for sock in listener.incoming() {
+                    let Some(core) = weak.upgrade() else { return };
+                    let Ok(mut sock) = sock else { continue };
+                    let _ = sock.set_read_timeout(Some(Duration::from_secs(2)));
+                    let _ = sock.set_write_timeout(Some(Duration::from_secs(2)));
+                    let Ok(Some(head)) = crate::net::metrics::read_request_head(&mut sock)
+                    else {
+                        continue;
+                    };
+                    let reply = crate::net::metrics::plain_scrape_response(&head, || {
+                        render_fabric_metrics(&core)
+                    });
+                    use std::io::Write;
+                    let _ = sock.write_all(&reply);
+                }
+            });
+        Ok(bound)
+    }
+}
+
+/// Render the per-member fabric gauges (body of [`Fabric::metrics_text`],
+/// shared with the scrape listener which only holds the core).
+fn render_fabric_metrics(core: &FabricCore) -> String {
+    let mut out = String::new();
+    out.push_str("# TYPE reverb_fabric_member_up gauge\n");
+    for m in &core.members {
+        out.push_str(&format!(
+            "reverb_fabric_member_up{{member=\"{}\"}} {}\n",
+            m.node_id,
+            if m.is_up() { 1 } else { 0 }
+        ));
+    }
+    out.push_str("# TYPE reverb_fabric_member_weight gauge\n");
+    for m in &core.members {
+        for (table, w) in m.weights.lock().unwrap().iter() {
+            out.push_str(&format!(
+                "reverb_fabric_member_weight{{member=\"{}\",table=\"{}\"}} {}\n",
+                m.node_id, table, w
+            ));
+        }
+    }
+    for name in ["errors", "quarantines", "reroutes", "takeovers"] {
+        out.push_str(&format!(
+            "# TYPE reverb_fabric_member_{name}_total counter\n"
+        ));
+        for m in &core.members {
+            let v = match name {
+                "errors" => m.errors.load(Ordering::Relaxed),
+                "quarantines" => m.quarantines.load(Ordering::Relaxed),
+                "reroutes" => m.reroutes.load(Ordering::Relaxed),
+                _ => m.takeovers.load(Ordering::Relaxed),
+            };
+            out.push_str(&format!(
+                "reverb_fabric_member_{name}_total{{member=\"{}\"}} {}\n",
+                m.node_id, v
+            ));
+        }
+    }
+    out.push_str("# TYPE reverb_fabric_standby_applied_seq gauge\n");
+    for s in &core.standbys {
+        out.push_str(&format!(
+            "reverb_fabric_standby_applied_seq{{follows=\"{}\"}} {}\n",
+            s.cfg.follows,
+            s.applied.load(Ordering::Relaxed)
+        ));
+    }
+    out
 }
 
 // ---------------------------------------------------------------------
@@ -964,10 +1002,17 @@ enum FanKind {
     Pong { nonce: u64 },
     /// `CreateItemBatch` split by item-key owner; merged positionally,
     /// with per-part re-route on member death.
-    ItemBatch { n: usize, timeout_ms: u64 },
+    ItemBatch {
+        n: usize,
+        timeout_ms: u64,
+        trace: Option<TraceContext>,
+    },
     /// `PriorityUpdateBatch` split by key owner; merged positionally (no
     /// re-route — the dead member held those keys).
-    UpdateBatch { n: usize },
+    UpdateBatch {
+        n: usize,
+        trace: Option<TraceContext>,
+    },
 }
 
 struct Fan {
@@ -1221,6 +1266,7 @@ impl FabricStream {
         id: u64,
         items: Vec<(usize, WireItem)>,
         timeout_ms: u64,
+        trace: Option<TraceContext>,
     ) -> (Vec<FanPart>, Vec<(usize, BatchResult)>) {
         let mut parts = Vec::new();
         let mut failed = Vec::new();
@@ -1283,6 +1329,10 @@ impl FabricStream {
                     id,
                     items: its,
                     timeout_ms,
+                    // Each per-member part gets a child span of the
+                    // caller's context, so server-side stage spans land
+                    // under the same trace id.
+                    trace: trace.map(|t| t.child()),
                 };
                 match self.send_to(mi, frame.clone()) {
                     Ok(()) => parts.push(FanPart {
@@ -1303,10 +1353,20 @@ impl FabricStream {
         (parts, failed)
     }
 
-    fn route_item_batch(&mut self, id: u64, items: Vec<WireItem>, timeout_ms: u64) -> Pending {
+    fn route_item_batch(
+        &mut self,
+        id: u64,
+        items: Vec<WireItem>,
+        timeout_ms: u64,
+        trace: Option<TraceContext>,
+    ) -> Pending {
         let n = items.len();
+        let pick_started = Instant::now();
         let (parts, failed) =
-            self.split_send_items(id, items.into_iter().enumerate().collect(), timeout_ms);
+            self.split_send_items(id, items.into_iter().enumerate().collect(), timeout_ms, trace);
+        if let Some(tc) = trace {
+            trace::recorder().record(Some(tc), Stage::Pick, fabric_cat(), pick_started);
+        }
         if parts.is_empty() && failed.len() == n && n > 0 {
             // Nothing routed anywhere: collapse to one error frame.
             if let Some((_, BatchResult::Err { code: c, message })) = failed.first() {
@@ -1315,7 +1375,11 @@ impl FabricStream {
         }
         Pending::Fan(Fan {
             id,
-            kind: FanKind::ItemBatch { n, timeout_ms },
+            kind: FanKind::ItemBatch {
+                n,
+                timeout_ms,
+                trace,
+            },
             parts,
             failed,
         })
@@ -1406,8 +1470,14 @@ impl FabricStream {
         })
     }
 
-    fn route_update_batch(&mut self, id: u64, ops: Vec<PriorityUpdateOp>) -> Pending {
+    fn route_update_batch(
+        &mut self,
+        id: u64,
+        ops: Vec<PriorityUpdateOp>,
+        trace: Option<TraceContext>,
+    ) -> Pending {
         let n = ops.len();
+        let pick_started = Instant::now();
         // Per-member fragment list, each fragment tagged with its original
         // op index for the positional merge.
         let mut per_member: HashMap<usize, Vec<(usize, PriorityUpdateOp)>> = HashMap::new();
@@ -1433,7 +1503,11 @@ impl FabricStream {
             let idxs: Vec<usize> = tagged.iter().map(|(ix, _)| *ix).collect();
             let frag_ops: Vec<PriorityUpdateOp> =
                 tagged.into_iter().map(|(_, op)| op).collect();
-            let frame = Message::PriorityUpdateBatch { id, ops: frag_ops };
+            let frame = Message::PriorityUpdateBatch {
+                id,
+                ops: frag_ops,
+                trace: trace.map(|t| t.child()),
+            };
             match self.send_to(mi, frame.clone()) {
                 Ok(()) => parts.push(FanPart {
                     mi,
@@ -1457,9 +1531,12 @@ impl FabricStream {
                 }
             }
         }
+        if let Some(tc) = trace {
+            trace::recorder().record(Some(tc), Stage::Pick, fabric_cat(), pick_started);
+        }
         Pending::Fan(Fan {
             id,
-            kind: FanKind::UpdateBatch { n },
+            kind: FanKind::UpdateBatch { n, trace },
             parts,
             failed,
         })
@@ -1672,7 +1749,11 @@ impl FabricStream {
                 }
                 Ok(Message::Pong { id, nonce })
             }
-            FanKind::ItemBatch { n, timeout_ms } => {
+            FanKind::ItemBatch {
+                n,
+                timeout_ms,
+                trace,
+            } => {
                 let mut out: Vec<Option<BatchResult>> = (0..n).map(|_| None).collect();
                 for (ix, r) in fan.failed {
                     out[ix] = Some(r);
@@ -1714,8 +1795,17 @@ impl FabricStream {
                             };
                             let tagged: Vec<(usize, WireItem)> =
                                 part.idxs.iter().copied().zip(items).collect();
+                            let reroute_started = Instant::now();
                             let (parts, failed) =
-                                self.split_send_items(id, tagged, timeout_ms);
+                                self.split_send_items(id, tagged, timeout_ms, trace);
+                            if let Some(tc) = trace {
+                                trace::recorder().record(
+                                    Some(tc),
+                                    Stage::Reroute,
+                                    fabric_cat(),
+                                    reroute_started,
+                                );
+                            }
                             for (ix, r) in failed {
                                 out[ix] = Some(r);
                             }
@@ -1732,9 +1822,9 @@ impl FabricStream {
                         })
                     })
                     .collect();
-                Ok(Message::BatchReply { id, results })
+                Ok(Message::BatchReply { id, results, trace })
             }
-            FanKind::UpdateBatch { n } => {
+            FanKind::UpdateBatch { n, trace } => {
                 // First error wins per original op; Ok otherwise.
                 fn combine(slot: &mut Option<BatchResult>, r: BatchResult) {
                     let replace = match (&*slot, &r) {
@@ -1797,10 +1887,17 @@ impl FabricStream {
                         })
                     })
                     .collect();
-                Ok(Message::BatchReply { id, results })
+                Ok(Message::BatchReply { id, results, trace })
             }
         }
     }
+}
+
+/// Interned flight-recorder category for fabric-side spans (DESIGN.md
+/// §15): routing work is attributed to the facade, not a table.
+fn fabric_cat() -> u16 {
+    static CAT: OnceLock<u16> = OnceLock::new();
+    *CAT.get_or_init(|| trace::recorder().intern("_fabric"))
 }
 
 /// Request id of a client→server frame.
@@ -1873,8 +1970,11 @@ impl MsgStream for FabricStream {
                 id,
                 items,
                 timeout_ms,
-            } => self.route_item_batch(id, items, timeout_ms),
-            Message::PriorityUpdateBatch { id, ops } => self.route_update_batch(id, ops),
+                trace,
+            } => self.route_item_batch(id, items, timeout_ms, trace),
+            Message::PriorityUpdateBatch { id, ops, trace } => {
+                self.route_update_batch(id, ops, trace)
+            }
             Message::MutatePriorities {
                 id,
                 table,

@@ -105,6 +105,12 @@ pub struct AdminRequest {
     /// `(min_diff, max_diff)` — the corridor is always re-tuned as a pair.
     pub corridor: Option<(f64, f64)>,
     pub checkpoint_interval_ms: Option<u64>,
+    /// Span chains of requests slower than this are promoted to
+    /// `log::warn!` on the server (DESIGN.md §15).
+    pub slow_request_micros: Option<u64>,
+    /// Server-side trace sampling rate for untraced requests, per
+    /// thousand (0 disables promotion, 1000 traces everything).
+    pub trace_sample_per_mille: Option<u64>,
 }
 
 impl AdminRequest {
@@ -127,6 +133,16 @@ impl AdminRequest {
 
     pub fn checkpoint_interval_ms(mut self, ms: u64) -> AdminRequest {
         self.checkpoint_interval_ms = Some(ms);
+        self
+    }
+
+    pub fn slow_request_micros(mut self, micros: u64) -> AdminRequest {
+        self.slow_request_micros = Some(micros);
+        self
+    }
+
+    pub fn trace_sample_per_mille(mut self, per_mille: u64) -> AdminRequest {
+        self.trace_sample_per_mille = Some(per_mille);
         self
     }
 }
@@ -243,7 +259,7 @@ impl Client {
     pub fn mutate_priorities_batch(&self, ops: Vec<PriorityUpdateOp>) -> Result<Vec<String>> {
         let mut conn = Conn::connect(&self.addr)?;
         let id = conn.next_id();
-        match conn.call(Message::PriorityUpdateBatch { id, ops })? {
+        match conn.call(Message::PriorityUpdateBatch { id, ops, trace: None })? {
             Message::BatchReply { results, .. } => {
                 results.into_iter().map(|r| r.into_result()).collect()
             }
@@ -295,6 +311,8 @@ impl Client {
             min_diff: req.corridor.map(|(lo, _)| lo),
             max_diff: req.corridor.map(|(_, hi)| hi),
             checkpoint_interval_ms: req.checkpoint_interval_ms,
+            slow_request_micros: req.slow_request_micros,
+            trace_sample_per_mille: req.trace_sample_per_mille,
         })?;
         conn.flush()?;
         conn.expect_ack(id)

@@ -21,9 +21,18 @@
 
 use super::Conn;
 use crate::error::{Error, Result};
+use crate::net::trace::{self, Stage, TraceContext};
 use crate::net::wire::{error_from_code, BatchResult, Message};
 use std::collections::{HashMap, HashSet, VecDeque};
-use std::sync::{Arc, Condvar, Mutex, MutexGuard};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard, OnceLock};
+use std::time::Instant;
+
+/// Interned flight-recorder category for client-side spans (cached: the
+/// intern table takes a mutex).
+fn client_cat() -> u16 {
+    static CAT: OnceLock<u16> = OnceLock::new();
+    *CAT.get_or_init(|| trace::recorder().intern("_client"))
+}
 
 /// Shared pipeline state behind one mutex + condvar.
 struct State {
@@ -36,6 +45,10 @@ struct State {
     /// Ids whose [`Completion`] was dropped unwaited: their replies are
     /// discarded on arrival instead of accumulating in `completed`.
     abandoned: HashSet<u64>,
+    /// Trace contexts of sampled in-flight requests (DESIGN.md §15):
+    /// claimed by the pump when the matching reply arrives, to close the
+    /// client-side span chain.
+    traces: HashMap<u64, TraceContext>,
     /// Once set, every pending and future operation fails with this text
     /// (a broken stream cannot match replies to requests anymore).
     broken: Option<String>,
@@ -58,7 +71,13 @@ impl Shared {
     fn pump<'a>(&'a self, mut st: MutexGuard<'a, State>) -> MutexGuard<'a, State> {
         let mut conn = st.conn.take().expect("pump requires the connection");
         drop(st);
-        let io = conn.flush().and_then(|()| conn.recv());
+        // Split the flush from the reply wait so a traced request can
+        // attribute wire-push time and server-turnaround time separately.
+        let flush_started = Instant::now();
+        let flushed = conn.flush();
+        let flush_dur = flush_started.elapsed();
+        let recv_started = Instant::now();
+        let io = flushed.and_then(|()| conn.recv());
         let mut st = self.state.lock().expect("pipeline lock");
         st.conn = Some(conn);
         match io {
@@ -66,6 +85,19 @@ impl Shared {
                 let expected = st.in_flight.pop_front();
                 match (expected, reply_id(&reply)) {
                     (Some(want), Some(got)) if want == got => {
+                        if let Some(tc) = st.traces.remove(&got) {
+                            let r = trace::recorder();
+                            if !flush_dur.is_zero() {
+                                r.record_at(
+                                    Some(tc),
+                                    Stage::ClientFlush,
+                                    client_cat(),
+                                    flush_started,
+                                    flush_dur,
+                                );
+                            }
+                            r.record(Some(tc), Stage::Reply, client_cat(), recv_started);
+                        }
                         if !st.abandoned.remove(&got) {
                             st.completed.insert(got, reply);
                         }
@@ -123,6 +155,7 @@ impl Pipeline {
                     in_flight: VecDeque::new(),
                     completed: HashMap::new(),
                     abandoned: HashSet::new(),
+                    traces: HashMap::new(),
                     broken: None,
                 }),
                 cv: Condvar::new(),
@@ -162,10 +195,28 @@ impl Pipeline {
         }
         let conn = st.conn.as_mut().expect("window loop left the connection in");
         let id = conn.next_id();
-        if let Err(e) = conn.send(build(id)) {
+        let mut msg = build(id);
+        // Client-side sampling (DESIGN.md §15): stamp a fresh context onto
+        // trace-carrying frames (a caller-stamped context wins); other
+        // frames still get a client-local span chain when sampled.
+        let submit_started = Instant::now();
+        let tc = match &mut msg {
+            Message::CreateItemBatch { trace, .. } | Message::PriorityUpdateBatch { trace, .. } => {
+                if trace.is_none() && trace::should_sample_client() {
+                    *trace = Some(TraceContext::generate());
+                }
+                *trace
+            }
+            _ => trace::should_sample_client().then(TraceContext::generate),
+        };
+        if let Err(e) = conn.send(msg) {
             st.broken = Some(e.to_string());
             self.shared.cv.notify_all();
             return Err(e);
+        }
+        if let Some(tc) = tc {
+            trace::recorder().record(Some(tc), Stage::Submit, client_cat(), submit_started);
+            st.traces.insert(id, tc);
         }
         st.in_flight.push_back(id);
         Ok(Completion {
@@ -465,7 +516,7 @@ mod tests {
             },
         ];
         let c = pipe
-            .submit(|id| Message::PriorityUpdateBatch { id, ops })
+            .submit(|id| Message::PriorityUpdateBatch { id, ops, trace: None })
             .unwrap();
         let results = c.expect_batch().unwrap();
         assert_eq!(results.len(), 2);

@@ -595,6 +595,7 @@ impl TrajectoryWriter {
             id,
             items,
             timeout_ms,
+            trace: None,
         })?;
         self.pipe.flush()?;
         self.in_flight.push_back((completion, n));

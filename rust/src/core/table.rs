@@ -193,6 +193,59 @@ pub struct TableInfo {
     pub total_weight: f64,
 }
 
+/// Number of finite buckets in an [`AgeHistogram`]: power-of-two bounds
+/// 2^0 .. 2^19 insert steps, plus one overflow bucket.
+pub const AGE_BUCKETS: usize = 20;
+
+/// Histogram of item age at sample time, measured in *insert steps*: how
+/// many inserts the table accepted between an item's landing and the
+/// moment it was sampled (DESIGN.md §15). Step counts are the natural
+/// clock for replay staleness — a table sampled at SPI 1.0 reads items
+/// roughly `max_size` steps old on average, and a drifting distribution
+/// here flags an actor/learner imbalance long before wall-clock latency
+/// does. Lock-free: one relaxed fetch_add per sample.
+pub struct AgeHistogram {
+    buckets: [AtomicU64; AGE_BUCKETS + 1],
+    count: AtomicU64,
+    sum: AtomicU64,
+}
+
+impl Default for AgeHistogram {
+    fn default() -> Self {
+        AgeHistogram {
+            buckets: std::array::from_fn(|_| AtomicU64::new(0)),
+            count: AtomicU64::new(0),
+            sum: AtomicU64::new(0),
+        }
+    }
+}
+
+impl AgeHistogram {
+    /// Inclusive upper bound of finite bucket `i` (ages ≤ 2^i steps).
+    pub fn bound(i: usize) -> u64 {
+        1u64 << i
+    }
+
+    pub fn record(&self, age_steps: u64) {
+        let idx = (0..AGE_BUCKETS)
+            .position(|i| age_steps <= Self::bound(i))
+            .unwrap_or(AGE_BUCKETS);
+        self.buckets[idx].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum.fetch_add(age_steps, Ordering::Relaxed);
+    }
+
+    /// Raw (non-cumulative) bucket counts, total count, and step sum. The
+    /// metrics renderer accumulates buckets into Prometheus `le` form.
+    pub fn snapshot(&self) -> (Vec<u64>, u64, u64) {
+        (
+            self.buckets.iter().map(|b| b.load(Ordering::Relaxed)).collect(),
+            self.count.load(Ordering::Relaxed),
+            self.sum.load(Ordering::Relaxed),
+        )
+    }
+}
+
 /// Result of [`ShardedTable::try_insert_or_assign`].
 pub enum TryInsertOutcome {
     /// The item landed (or resolved to a priority update of an existing
@@ -219,6 +272,9 @@ struct ShardState {
     sampler: Box<dyn Selector>,
     remover: Box<dyn Selector>,
     rng: Pcg32,
+    /// Rate-limiter insert-cursor value at each item's landing — the
+    /// subtrahend of the age-at-sample metric ([`AgeHistogram`]).
+    inserted_step: HashMap<u64, u64>,
 }
 
 struct Shard {
@@ -363,6 +419,8 @@ pub struct ShardedTable {
     /// Fast-path mirror of `watchers.len()`: mutations skip the lock when
     /// no one is subscribed.
     watcher_count: AtomicUsize,
+    /// Age-at-sample distribution in insert steps (DESIGN.md §15).
+    age_hist: AgeHistogram,
 }
 
 /// Pooled per-call state for cross-shard sampling.
@@ -395,6 +453,7 @@ impl ShardedTable {
                         0x5EED ^ i as u64,
                         crate::util::splitmix64(config.max_size as u64 ^ ((i as u64) << 17)),
                     ),
+                    inserted_step: HashMap::new(),
                 }),
                 stats: AtomicU64::new(pack_shard_stats(0.0, 0)),
             })
@@ -419,6 +478,7 @@ impl ShardedTable {
             sink: OnceLock::new(),
             watchers: Mutex::new(Vec::new()),
             watcher_count: AtomicUsize::new(0),
+            age_hist: AgeHistogram::default(),
             config,
         }
     }
@@ -445,6 +505,22 @@ impl ShardedTable {
         self.shards.len()
     }
 
+    /// Acquire one shard's lock, attributing any *contended* wait to the
+    /// calling request's `lock` stage via the thread-local accumulator
+    /// (`net::trace`, DESIGN.md §15). The uncontended fast path is a bare
+    /// `try_lock` — no clock read, so tracing adds nothing when shards are
+    /// free (the common case the pipeline bench measures).
+    #[inline]
+    fn lock_shard(&self, idx: usize) -> MutexGuard<'_, ShardState> {
+        if let Ok(st) = self.shards[idx].state.try_lock() {
+            return st;
+        }
+        let started = Instant::now();
+        let st = self.shards[idx].state.lock().unwrap();
+        crate::net::trace::add_lock_wait(started.elapsed());
+        st
+    }
+
     #[inline]
     fn route(&self, key: u64) -> usize {
         if self.shards.len() == 1 {
@@ -467,7 +543,7 @@ impl ShardedTable {
 
         // Existing key → priority update, not an insert (no rate limit).
         {
-            let mut st = self.shards[shard_idx].state.lock().unwrap();
+            let mut st = self.lock_shard(shard_idx);
             if st.items.contains_key(&item.key) {
                 let followups = self.apply_update_in_state(&mut st, item.key, item.priority, true)?;
                 self.shards[shard_idx].store_stats(&st);
@@ -544,7 +620,7 @@ impl ShardedTable {
         // microsecond window.)
         {
             let shard = &self.shards[shard_idx];
-            let mut st = shard.state.lock().unwrap();
+            let mut st = self.lock_shard(shard_idx);
             if st.items.contains_key(&item.key) {
                 self.limiter.rollback_insert(1);
                 let followups = self
@@ -564,7 +640,7 @@ impl ShardedTable {
             return Err((e, Some(item)));
         }
         let shard = &self.shards[shard_idx];
-        let mut st = shard.state.lock().unwrap();
+        let mut st = self.lock_shard(shard_idx);
         if st.items.contains_key(&item.key) {
             // Lost an InsertOrAssign race for this key: resolve as an
             // update. Give back the slot and the cursor reservation so
@@ -596,8 +672,11 @@ impl ShardedTable {
         }
         self.run_extensions(|ext| ext.on_insert(ItemRef::of(&item)));
         if let Some(sink) = self.sink.get() {
+            let journal_started = Instant::now();
             sink.on_insert(&self.config.name, &item);
+            crate::net::trace::add_journal_wait(journal_started.elapsed());
         }
+        st.inserted_step.insert(item.key, self.limiter.inserts());
         st.items.insert(item.key, item);
         self.live.fetch_add(1, Ordering::SeqCst);
         shard.store_stats(&st);
@@ -662,7 +741,7 @@ impl ShardedTable {
         for off in 0..n {
             let idx = (prefer + off) % n;
             let shard = &self.shards[idx];
-            let mut st = shard.state.lock().unwrap();
+            let mut st = self.lock_shard(idx);
             // Re-check under the lock: a consume-on-sample removal (which
             // runs inside this same shard lock) may have freed capacity
             // between the caller's size probe and our lock acquisition —
@@ -876,12 +955,13 @@ impl ShardedTable {
         dropped: &mut Vec<Item>,
     ) {
         let shard = &self.shards[idx];
-        let mut st = shard.state.lock().unwrap();
+        let mut st = self.lock_shard(idx);
         let avail = st.items.len() as u64;
         if avail == 0 {
             return;
         }
         let granted = self.limiter.try_sample_upto(want.min(avail));
+        let now_step = self.limiter.inserts();
         let mut served = 0u64;
         for _ in 0..granted {
             let live = if use_mass {
@@ -910,6 +990,9 @@ impl ShardedTable {
                 p_in
             };
             let table_size = self.live.load(Ordering::SeqCst);
+            if let Some(&landed) = st.inserted_step.get(&key) {
+                self.age_hist.record(now_step.saturating_sub(landed));
+            }
             let item = st.items.get_mut(&key).expect("selector/shard in sync");
             item.times_sampled += 1;
             let snapshot = item.clone();
@@ -956,7 +1039,7 @@ impl ShardedTable {
             let idx = self.route(key);
             let followups = {
                 let shard = &self.shards[idx];
-                let mut st = shard.state.lock().unwrap();
+                let mut st = self.lock_shard(idx);
                 if !st.items.contains_key(&key) {
                     continue;
                 }
@@ -980,7 +1063,7 @@ impl ShardedTable {
         for &key in keys {
             let idx = self.route(key);
             let shard = &self.shards[idx];
-            let mut st = shard.state.lock().unwrap();
+            let mut st = self.lock_shard(idx);
             if let Some(it) = self.remove_item_in_state(&mut st, key)? {
                 dropped.push(it);
                 shard.store_stats(&st);
@@ -999,17 +1082,20 @@ impl ShardedTable {
     /// bookkeeping out of the limiter).
     pub fn reset(&self) {
         let mut dropped: Vec<Item> = Vec::new();
-        for shard in &self.shards {
-            let mut st = shard.state.lock().unwrap();
+        for (idx, shard) in self.shards.iter().enumerate() {
+            let mut st = self.lock_shard(idx);
             let drained = st.items.len();
             let first_drained = dropped.len();
             dropped.extend(st.items.drain().map(|(_, it)| it));
+            st.inserted_step.clear();
             // Journal the drain as per-key deletes under this shard's lock
             // so same-key ordering holds against concurrent re-inserts.
             if let Some(sink) = self.sink.get() {
+                let journal_started = Instant::now();
                 for it in &dropped[first_drained..] {
                     sink.on_delete(&self.config.name, it.key);
                 }
+                crate::net::trace::add_journal_wait(journal_started.elapsed());
             }
             st.sampler.clear();
             st.remover.clear();
@@ -1039,12 +1125,7 @@ impl ShardedTable {
     /// Whether an item with `key` exists.
     pub fn contains(&self, key: u64) -> bool {
         let idx = self.route(key);
-        self.shards[idx]
-            .state
-            .lock()
-            .unwrap()
-            .items
-            .contains_key(&key)
+        self.lock_shard(idx).items.contains_key(&key)
     }
 
     /// Metrics snapshot.
@@ -1089,10 +1170,14 @@ impl ShardedTable {
         for item in items {
             let idx = self.route(item.key);
             let shard = &self.shards[idx];
-            let mut st = shard.state.lock().unwrap();
+            let mut st = self.lock_shard(idx);
             st.sampler.insert(item.key, item.priority)?;
             st.remover.insert(item.key, item.priority)?;
             self.run_extensions(|ext| ext.on_insert(ItemRef::of(&item)));
+            // Restored items are treated as landing at the checkpoint's
+            // insert cursor, so post-restore ages measure steps since the
+            // restore rather than the table's whole history.
+            st.inserted_step.insert(item.key, inserts);
             st.items.insert(item.key, item);
             self.budget.fetch_add(1, Ordering::SeqCst);
             self.live.fetch_add(1, Ordering::SeqCst);
@@ -1131,7 +1216,7 @@ impl ShardedTable {
 
         // Existing key → priority update, not an insert (no rate limit).
         {
-            let mut st = self.shards[shard_idx].state.lock().unwrap();
+            let mut st = self.lock_shard(shard_idx);
             if st.items.contains_key(&item.key) {
                 let followups =
                     self.apply_update_in_state(&mut st, item.key, item.priority, true)?;
@@ -1342,6 +1427,13 @@ impl ShardedTable {
         self.limiter.samples_per_insert()
     }
 
+    /// Age-at-sample distribution (insert steps between an item's landing
+    /// and each sample of it) — `reverb_table_item_age_steps` on
+    /// `/metrics`.
+    pub fn age_histogram(&self) -> &AgeHistogram {
+        &self.age_hist
+    }
+
     // ------------------------------------------------------------------
     // internals
     // ------------------------------------------------------------------
@@ -1456,7 +1548,9 @@ impl ShardedTable {
         st.sampler.update(key, priority)?;
         st.remover.update(key, priority)?;
         if let Some(sink) = self.sink.get() {
+            let journal_started = Instant::now();
             sink.on_update(&self.config.name, key, priority);
+            crate::net::trace::add_journal_wait(journal_started.elapsed());
         }
         let mut followups = Vec::new();
         if run_extensions {
@@ -1473,7 +1567,7 @@ impl ShardedTable {
         for (key, priority) in followups {
             let idx = self.route(key);
             let shard = &self.shards[idx];
-            let mut st = shard.state.lock().unwrap();
+            let mut st = self.lock_shard(idx);
             if st.items.contains_key(&key) {
                 self.apply_update_in_state(&mut st, key, priority, false)?;
                 shard.store_stats(&st);
@@ -1493,6 +1587,7 @@ impl ShardedTable {
         let Some(item) = st.items.remove(&key) else {
             return Ok(None);
         };
+        st.inserted_step.remove(&key);
         // Budget release right after the map removal so map↔budget stay
         // consistent even if a selector delete fails below.
         self.budget.fetch_sub(1, Ordering::SeqCst);
@@ -1501,7 +1596,9 @@ impl ShardedTable {
         st.remover.delete(key)?;
         self.run_extensions(|ext| ext.on_delete(ItemRef::of(&item)));
         if let Some(sink) = self.sink.get() {
+            let journal_started = Instant::now();
             sink.on_delete(&self.config.name, key);
+            crate::net::trace::add_journal_wait(journal_started.elapsed());
         }
         Ok(Some(item))
     }
@@ -2343,5 +2440,94 @@ mod tests {
         let settled = hits.load(Ordering::SeqCst);
         t.insert_or_assign(mk_item(3, 1.0), None).unwrap();
         assert_eq!(hits.load(Ordering::SeqCst), settled, "dropped watcher stays dropped");
+    }
+
+    // ------------------------------------------------------------------
+    // request tracing + age-at-sample (DESIGN.md §15)
+    // ------------------------------------------------------------------
+
+    #[test]
+    fn age_histogram_bucket_placement() {
+        let h = AgeHistogram::default();
+        h.record(0); // ≤ 2^0 → bucket 0
+        h.record(1); // bucket 0
+        h.record(2); // bucket 1
+        h.record(3); // ≤ 4 → bucket 2
+        h.record(1_000_000); // > 2^19 → overflow
+        let (buckets, count, sum) = h.snapshot();
+        assert_eq!(count, 5);
+        assert_eq!(sum, 1_000_006);
+        assert_eq!(buckets[0], 2);
+        assert_eq!(buckets[1], 1);
+        assert_eq!(buckets[2], 1);
+        assert_eq!(buckets[AGE_BUCKETS], 1);
+        assert_eq!(buckets.iter().sum::<u64>(), count);
+    }
+
+    #[test]
+    fn age_at_sample_measures_insert_step_distance() {
+        // FIFO queue: item k lands at insert step k-1, so after 3 inserts
+        // the first two samples see ages 3 and 2 exactly.
+        let t = Table::new(TableConfig::queue("q", 10));
+        for k in 1..=3 {
+            t.insert_or_assign(mk_item(k, 1.0), None).unwrap();
+        }
+        assert_eq!(t.sample(None).unwrap().item.key, 1);
+        assert_eq!(t.sample(None).unwrap().item.key, 2);
+        let (buckets, count, sum) = t.age_histogram().snapshot();
+        assert_eq!(count, 2);
+        assert_eq!(sum, 5, "ages 3 + 2");
+        assert_eq!(buckets[1], 1, "age 2 → bucket le=2");
+        assert_eq!(buckets[2], 1, "age 3 → bucket le=4");
+    }
+
+    #[test]
+    fn journal_wait_accrues_to_tls_accumulator() {
+        struct SleepSink;
+        impl MutationSink for SleepSink {
+            fn on_insert(&self, _: &str, _: &Item) {
+                std::thread::sleep(Duration::from_millis(15));
+            }
+            fn on_delete(&self, _: &str, _: u64) {}
+            fn on_update(&self, _: &str, _: u64, _: f64) {}
+        }
+        let t = uniform_table(10);
+        t.set_mutation_sink(Arc::new(SleepSink)).unwrap();
+        let _ = crate::net::trace::take_journal_wait();
+        t.insert_or_assign(mk_item(1, 1.0), None).unwrap();
+        let waited = crate::net::trace::take_journal_wait();
+        assert!(waited >= Duration::from_millis(10), "{waited:?}");
+        // The take drained the accumulator.
+        assert_eq!(crate::net::trace::take_journal_wait(), Duration::ZERO);
+    }
+
+    #[test]
+    fn contended_shard_lock_wait_reaches_tls_accumulator() {
+        // A sink that parks inside the shard's critical section, so a
+        // concurrent reader measurably contends on the shard lock.
+        struct HoldSink(Arc<std::sync::atomic::AtomicBool>);
+        impl MutationSink for HoldSink {
+            fn on_insert(&self, _: &str, _: &Item) {
+                self.0.store(true, Ordering::SeqCst);
+                std::thread::sleep(Duration::from_millis(40));
+            }
+            fn on_delete(&self, _: &str, _: u64) {}
+            fn on_update(&self, _: &str, _: u64, _: f64) {}
+        }
+        let entered = Arc::new(std::sync::atomic::AtomicBool::new(false));
+        let t = Arc::new(uniform_table(10));
+        t.set_mutation_sink(Arc::new(HoldSink(entered.clone()))).unwrap();
+        let t2 = t.clone();
+        let writer = std::thread::spawn(move || {
+            t2.insert_or_assign(mk_item(1, 1.0), None).unwrap();
+        });
+        while !entered.load(Ordering::SeqCst) {
+            std::thread::yield_now();
+        }
+        let _ = crate::net::trace::take_lock_wait();
+        let _ = t.contains(1); // blocks until the writer leaves the lock
+        let waited = crate::net::trace::take_lock_wait();
+        writer.join().unwrap();
+        assert!(waited >= Duration::from_millis(10), "{waited:?}");
     }
 }

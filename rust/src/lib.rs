@@ -25,13 +25,16 @@ pub use crate::core::chunk_store::ChunkStore;
 pub use crate::core::item::{ChunkSlice, Item, SampledItem, TrajectoryColumn};
 pub use crate::core::rate_limiter::{RateLimiter, RateLimiterConfig};
 pub use crate::core::selector::SelectorConfig;
-pub use crate::core::table::{default_shard_count, ShardedTable, Table, TableConfig, TableInfo};
+pub use crate::core::table::{
+    default_shard_count, AgeHistogram, ShardedTable, Table, TableConfig, TableInfo, AGE_BUCKETS,
+};
 pub use crate::core::tensor::{DType, Signature, Tensor, TensorSpec};
 pub use crate::client::{
     AdminRequest, Client, ClientPool, Completion, Dataset, Fabric, FabricOptions, Pipeline,
     Sample, Sampler, SamplerOptions, StandbyConfig, StepRef, Trajectory, TrajectoryWriter,
     TrajectoryWriterOptions, Watch, Writer, WriterOptions,
 };
+pub use crate::net::trace::TraceContext;
 pub use crate::net::wire::{BatchResult, PriorityUpdateOp};
 pub use crate::error::{Error, Result};
 pub use crate::net::event::default_service_threads;

@@ -26,7 +26,9 @@ fn usage() -> ! {
          [--service-model event|threaded] [--unix-socket PATH] \
          [--metrics-addr HOST:PORT] [--metrics-token TOKEN]\n  \
          reverb-server info --addr HOST:PORT\n  \
-         reverb-server checkpoint --addr HOST:PORT\n\n\
+         reverb-server checkpoint --addr HOST:PORT\n  \
+         reverb-server pool --members ADDR1,ADDR2,... \
+         [--fabric-metrics-addr HOST:PORT]\n\n\
          table kinds:\n  NAME:uniform:MAX_SIZE\n  NAME:queue:QUEUE_SIZE\n  \
          NAME:prioritized:MAX_SIZE:EXPONENT[:SPI:MIN_SIZE:ERROR_BUFFER]\n  NAME:variable\n\n\
          --shards N splits each uniform/prioritized table over N \
@@ -44,7 +46,11 @@ fn usage() -> ! {
          additionally serves reverb+unix://PATH. --metrics-addr HOST:PORT \
          serves Prometheus text exposition at http://HOST:PORT/metrics; \
          --metrics-token TOKEN requires `Authorization: Bearer TOKEN` on \
-         every scrape (use when the endpoint leaves loopback)."
+         every scrape (use when the endpoint leaves loopback).\n\
+         `pool` joins the replay-fabric membership layer over the given \
+         members and serves the client-side fabric gauges (member health, \
+         weights, reroutes, standby lag) at \
+         http://FABRIC_METRICS_ADDR/metrics for Prometheus to scrape."
     );
     std::process::exit(2);
 }
@@ -274,6 +280,42 @@ fn main() {
                 }
                 Err(e) => {
                     eprintln!("info failed: {e}");
+                    std::process::exit(1);
+                }
+            }
+        }
+        Some("pool") => {
+            let members = flag(&args, "--members").unwrap_or_default();
+            let addrs: Vec<String> = members
+                .split(',')
+                .filter(|s| !s.is_empty())
+                .map(str::to_string)
+                .collect();
+            if addrs.is_empty() {
+                eprintln!("pool requires --members ADDR1,ADDR2,...");
+                usage();
+            }
+            let scrape =
+                flag(&args, "--fabric-metrics-addr").unwrap_or_else(|| "127.0.0.1:0".into());
+            let fabric = match reverb::Fabric::connect(&addrs, reverb::FabricOptions::default()) {
+                Ok(f) => f,
+                Err(e) => {
+                    eprintln!("pool connect failed: {e}");
+                    std::process::exit(1);
+                }
+            };
+            match fabric.serve_metrics(&scrape) {
+                Ok(bound) => {
+                    println!("fabric facade: {}", fabric.pool_addr());
+                    println!("  fabric metrics: http://{bound}/metrics");
+                    // Keep the membership layer (and scrape listener) up
+                    // until killed.
+                    loop {
+                        std::thread::sleep(std::time::Duration::from_secs(3600));
+                    }
+                }
+                Err(e) => {
+                    eprintln!("failed to serve fabric metrics on {scrape}: {e}");
                     std::process::exit(1);
                 }
             }

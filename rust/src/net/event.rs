@@ -37,12 +37,13 @@ use crate::core::table::{Table, TryInsertOutcome, TrySampleOutcome};
 use crate::error::{Error, Result};
 use crate::net::poller::Poller;
 use crate::net::server::{batch_too_large, resolve_item, sample_reply, stash_chunks, ServerInner};
+use crate::net::trace::{self, ReqSpans, Stage, TraceContext};
 use crate::net::transport::{MsgStream, PollSource};
 use crate::net::wire::{error_code, BatchResult, Message, WireItem, MAX_BATCH_OPS};
 use std::cmp::Reverse;
 use std::collections::{BinaryHeap, HashMap, VecDeque};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::{Arc, Condvar, Mutex};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
 use std::time::{Duration, Instant};
 
 /// Upper bound on frames handled in one service pass, so one firehose
@@ -71,6 +72,31 @@ pub fn default_service_threads() -> usize {
         .unwrap_or(4)
 }
 
+/// Interned flight-recorder category for spans that belong to the service
+/// loop itself rather than any one table (decode/queue/flush).
+fn server_cat() -> u16 {
+    static CAT: OnceLock<u16> = OnceLock::new();
+    *CAT.get_or_init(|| trace::recorder().intern("_server"))
+}
+
+/// Server-side sampling promotion: an untraced request picks up a fresh
+/// sampled context when the admin-tunable rotor says so, so span chains
+/// exist even when no client stamps traces.
+fn server_trace() -> Option<TraceContext> {
+    trace::should_sample_server().then(TraceContext::generate)
+}
+
+/// Fold a finished request's stage durations into the per-table stage
+/// histograms (the flight-recorder write happens inside
+/// [`ReqSpans::finish`]).
+fn finish_spans(shared: &EventShared, spans: ReqSpans, table: &str, started: Instant) {
+    for (stage, d) in spans.finish(table, started) {
+        if !d.is_zero() {
+            shared.inner.record_stage(table, stage, d);
+        }
+    }
+}
+
 /// A table op the rate limiter (or gate) refused, suspended with its
 /// connection. `noted` tracks the once-per-park blocked-episode metric.
 enum ParkedOp {
@@ -84,6 +110,9 @@ enum ParkedOp {
         /// Dispatch time, for the service-time histogram (the recorded
         /// latency spans parked time, matching the blocking model).
         started: Instant,
+        /// Stage accumulator (DESIGN.md §15); parked time folds into the
+        /// `gate` stage on resume.
+        spans: ReqSpans,
     },
     Sample {
         id: u64,
@@ -93,6 +122,7 @@ enum ParkedOp {
         timeout: Duration,
         noted: bool,
         started: Instant,
+        spans: ReqSpans,
     },
     /// A `CreateItemBatch` suspended at the op that blocked: `results`
     /// holds the outcomes already decided, `items` the blocked op and
@@ -109,6 +139,16 @@ enum ParkedOp {
         noted: bool,
         /// When the op currently at the front began (resets per op).
         started: Instant,
+        /// When the whole batch was dispatched (the spans' origin).
+        batch_started: Instant,
+        spans: ReqSpans,
+        /// The client-stamped context echoed on the `BatchReply`
+        /// (server-promoted contexts stay server-internal so untraced
+        /// peers get byte-identical replies).
+        echo_trace: Option<TraceContext>,
+        /// Table name the batch's span chain is attributed to (the first
+        /// op's table; batches may span tables).
+        span_table: String,
     },
 }
 
@@ -166,6 +206,10 @@ struct ConnState {
     /// `Some` for `/metrics` scrape sockets, which ride the same poller
     /// and worker pool as data-plane connections but speak plain HTTP.
     http: Option<HttpScrape>,
+    /// Trace of the most recent traced reply queued on this connection;
+    /// taken by the next completed flush so the `flush` span lands on the
+    /// request that produced the output.
+    last_trace: Option<TraceContext>,
 }
 
 /// One served connection.
@@ -179,6 +223,10 @@ struct EventConn {
     /// A watcher hook fired since the last service pass: emit one
     /// coalesced `WatchUpdate` per subscription (latest-wins).
     watch_dirty: AtomicBool,
+    /// Recorder-epoch nanos when the connection entered the ready queue
+    /// (0 = unstamped); the next service pass turns it into a `queue`
+    /// stage measurement. One relaxed store per enqueue.
+    enqueued_nanos: AtomicU64,
     state: Mutex<ConnState>,
 }
 
@@ -235,6 +283,7 @@ impl EventShared {
             queued: AtomicBool::new(false),
             closed: AtomicBool::new(false),
             watch_dirty: AtomicBool::new(false),
+            enqueued_nanos: AtomicU64::new(0),
             state: Mutex::new(ConnState {
                 stream,
                 source,
@@ -244,6 +293,7 @@ impl EventShared {
                 want_write: false,
                 watches: Vec::new(),
                 http: None,
+                last_trace: None,
             }),
         });
         self.conns.lock().unwrap().insert(id, conn.clone());
@@ -288,6 +338,7 @@ impl EventShared {
                 queued: AtomicBool::new(false),
                 closed: AtomicBool::new(false),
                 watch_dirty: AtomicBool::new(false),
+                enqueued_nanos: AtomicU64::new(0),
                 state: Mutex::new(ConnState {
                     // HTTP bytes never touch the wire-protocol stream; the
                     // scrape socket lives in `http`.
@@ -304,6 +355,7 @@ impl EventShared {
                         response: None,
                         written: 0,
                     }),
+                    last_trace: None,
                 }),
             });
             self.conns.lock().unwrap().insert(id, conn.clone());
@@ -332,6 +384,12 @@ impl EventShared {
         if conn.queued.swap(true, Ordering::SeqCst) {
             return;
         }
+        // Stamp the enqueue for the `queue` stage (max(1): zero means
+        // "unstamped" to the reader).
+        conn.enqueued_nanos.store(
+            trace::recorder().nanos_since_epoch().max(1),
+            Ordering::Relaxed,
+        );
         self.ready.lock().unwrap().push_back(conn.clone());
         self.ready_cv.notify_one();
     }
@@ -552,9 +610,24 @@ fn service(shared: &Arc<EventShared>, conn: &Arc<EventConn>) -> usize {
     }
     let mut frames = 0usize;
 
+    // Ready-queue wait: stamped by `schedule`, measured now (service
+    // start), recorded later only if this pass does request work — idle
+    // ticks must not drown the queue histogram.
+    let queued_nanos = conn.enqueued_nanos.swap(0, Ordering::Relaxed);
+    let queue_wait = (queued_nanos != 0).then(|| {
+        Duration::from_nanos(
+            trace::recorder()
+                .nanos_since_epoch()
+                .saturating_sub(queued_nanos),
+        )
+    });
+    let service_started = Instant::now();
+    let mut did_work = false;
+
     // 1. Retry a parked op (wakeup or timer brought us here).
     let mut may_read = true;
     if let Some(op) = st.parked.take() {
+        did_work = true;
         match attempt_parked(shared, &mut st, op) {
             Ok(Attempt::Done) => {}
             Ok(Attempt::Parked(op, kind)) => {
@@ -595,9 +668,30 @@ fn service(shared: &Arc<EventShared>, conn: &Arc<EventConn>) -> usize {
                 shared.schedule(conn);
                 break;
             }
+            let decode_started = Instant::now();
             match st.stream.try_recv() {
                 Ok(Some(msg)) => {
                     frames += 1;
+                    did_work = true;
+                    // Decode stage: socket read + frame decode for this
+                    // message. Attributed to the message's own context when
+                    // it carries one; histograms always.
+                    let decode = decode_started.elapsed();
+                    shared.inner.record_stage("_server", Stage::Decode, decode);
+                    let mtrace = match &msg {
+                        Message::CreateItemBatch { trace, .. }
+                        | Message::PriorityUpdateBatch { trace, .. } => *trace,
+                        _ => None,
+                    };
+                    if mtrace.is_some() {
+                        trace::recorder().record_at(
+                            mtrace,
+                            Stage::Decode,
+                            server_cat(),
+                            decode_started,
+                            decode,
+                        );
+                    }
                     match dispatch(shared, conn, &mut st, msg) {
                         Ok(Dispatch::Continue) => continue,
                         Ok(Dispatch::Parked(op, kind)) => {
@@ -652,9 +746,32 @@ fn service(shared: &Arc<EventShared>, conn: &Arc<EventConn>) -> usize {
         }
     }
 
+    // The queue stage covers enqueue → service start; laid down once the
+    // pass is known to have done request work.
+    if let (true, Some(dur)) = (did_work, queue_wait) {
+        shared.inner.record_stage("_server", Stage::Queue, dur);
+        let start = service_started.checked_sub(dur).unwrap_or(service_started);
+        trace::recorder().record_at(None, Stage::Queue, server_cat(), start, dur);
+    }
+
     // 4. Flush replies produced this pass.
+    let flush_started = Instant::now();
     match st.stream.try_flush() {
-        Ok(true) => {}
+        Ok(true) => {
+            if did_work {
+                let dur = flush_started.elapsed();
+                shared.inner.record_stage("_server", Stage::Flush, dur);
+                if let Some(ftrace) = st.last_trace.take() {
+                    trace::recorder().record_at(
+                        Some(ftrace),
+                        Stage::Flush,
+                        server_cat(),
+                        flush_started,
+                        dur,
+                    );
+                }
+            }
+        }
         Ok(false) => {
             st.want_write = true;
             shared.arm_write(&st, conn.id);
@@ -774,7 +891,10 @@ fn attempt_parked(shared: &Arc<EventShared>, st: &mut ConnState, op: ParkedOp) -
             timeout,
             noted,
             started,
-        } => attempt_insert(shared, st, id, table, item, deadline, timeout, noted, started),
+            spans,
+        } => attempt_insert(
+            shared, st, id, table, item, deadline, timeout, noted, started, spans,
+        ),
         ParkedOp::Sample {
             id,
             table,
@@ -783,7 +903,10 @@ fn attempt_parked(shared: &Arc<EventShared>, st: &mut ConnState, op: ParkedOp) -
             timeout,
             noted,
             started,
-        } => attempt_sample(shared, st, id, table, n, deadline, timeout, noted, started),
+            spans,
+        } => attempt_sample(
+            shared, st, id, table, n, deadline, timeout, noted, started, spans,
+        ),
         ParkedOp::InsertBatch {
             id,
             table: _,
@@ -793,7 +916,25 @@ fn attempt_parked(shared: &Arc<EventShared>, st: &mut ConnState, op: ParkedOp) -
             timeout,
             noted,
             started,
-        } => attempt_insert_batch(shared, st, id, items, results, deadline, timeout, noted, started),
+            batch_started,
+            spans,
+            echo_trace,
+            span_table,
+        } => attempt_insert_batch(
+            shared,
+            st,
+            id,
+            items,
+            results,
+            deadline,
+            timeout,
+            noted,
+            started,
+            batch_started,
+            spans,
+            echo_trace,
+            span_table,
+        ),
     }
 }
 
@@ -811,8 +952,13 @@ fn attempt_insert(
     timeout: Duration,
     noted: bool,
     started: Instant,
+    mut spans: ReqSpans,
 ) -> Result<Attempt> {
+    // A retry after a park lands here: fold the parked window into the
+    // gate stage (no-op on the first attempt).
+    spans.resumed();
     let Some(_guard) = shared.inner.gate.try_enter() else {
+        spans.parked();
         return Ok(Attempt::Parked(
             ParkedOp::Insert {
                 id,
@@ -822,25 +968,35 @@ fn attempt_insert(
                 timeout,
                 noted,
                 started,
+                spans,
             },
             ParkKind::Gate,
         ));
     };
-    match table.try_insert_or_assign(item) {
+    let op_started = Instant::now();
+    let outcome = table.try_insert_or_assign(item);
+    spans.op_attempt(op_started.elapsed());
+    match outcome {
         Ok(TryInsertOutcome::Inserted) => {
             shared.inner.record_insert_latency(table.name(), started);
+            if spans.trace.is_some() {
+                st.last_trace = spans.trace;
+            }
+            finish_spans(shared, spans, table.name(), started);
             send_reply(st, id, Ok(String::new()))?;
             Ok(Attempt::Done)
         }
         Ok(TryInsertOutcome::Blocked(item)) => {
             if Instant::now() >= deadline {
                 shared.inner.record_insert_latency(table.name(), started);
+                finish_spans(shared, spans, table.name(), started);
                 send_reply(st, id, Err(Error::RateLimiterTimeout(timeout)))?;
                 return Ok(Attempt::Done);
             }
             if !noted {
                 table.note_blocked_insert();
             }
+            spans.parked();
             Ok(Attempt::Parked(
                 ParkedOp::Insert {
                     id,
@@ -850,12 +1006,14 @@ fn attempt_insert(
                     timeout,
                     noted: true,
                     started,
+                    spans,
                 },
                 ParkKind::Insert,
             ))
         }
         Err(e) => {
             shared.inner.record_insert_latency(table.name(), started);
+            finish_spans(shared, spans, table.name(), started);
             send_reply(st, id, Err(e))?;
             Ok(Attempt::Done)
         }
@@ -882,10 +1040,23 @@ fn attempt_insert_batch(
     timeout: Duration,
     mut noted: bool,
     mut op_started: Instant,
+    batch_started: Instant,
+    mut spans: ReqSpans,
+    echo_trace: Option<TraceContext>,
+    span_table: String,
 ) -> Result<Attempt> {
+    spans.resumed();
     loop {
         let Some(wire_item) = items.front() else {
-            st.stream.send(Message::BatchReply { id, results })?;
+            st.stream.send(Message::BatchReply {
+                id,
+                results,
+                trace: echo_trace,
+            })?;
+            if spans.trace.is_some() {
+                st.last_trace = spans.trace;
+            }
+            finish_spans(shared, spans, &span_table, batch_started);
             return Ok(Attempt::Done);
         };
         let table = match shared.inner.table(&wire_item.table) {
@@ -907,6 +1078,7 @@ fn attempt_insert_batch(
             }
         };
         let Some(_guard) = shared.inner.gate.try_enter() else {
+            spans.parked();
             return Ok(Attempt::Parked(
                 ParkedOp::InsertBatch {
                     id,
@@ -917,11 +1089,18 @@ fn attempt_insert_batch(
                     timeout,
                     noted,
                     started: op_started,
+                    batch_started,
+                    spans,
+                    echo_trace,
+                    span_table,
                 },
                 ParkKind::Gate,
             ));
         };
-        match table.try_insert_or_assign(item) {
+        let try_started = Instant::now();
+        let outcome = table.try_insert_or_assign(item);
+        spans.op_attempt(try_started.elapsed());
+        match outcome {
             Ok(TryInsertOutcome::Inserted) => {
                 shared.inner.record_insert_latency(&wire_item.table, op_started);
                 results.push(BatchResult::Ok { detail: String::new() });
@@ -942,6 +1121,7 @@ fn attempt_insert_batch(
                 if !noted {
                     table.note_blocked_insert();
                 }
+                spans.parked();
                 return Ok(Attempt::Parked(
                     ParkedOp::InsertBatch {
                         id,
@@ -952,6 +1132,10 @@ fn attempt_insert_batch(
                         timeout,
                         noted: true,
                         started: op_started,
+                        batch_started,
+                        spans,
+                        echo_trace,
+                        span_table,
                     },
                     ParkKind::Insert,
                 ));
@@ -979,8 +1163,11 @@ fn attempt_sample(
     timeout: Duration,
     noted: bool,
     started: Instant,
+    mut spans: ReqSpans,
 ) -> Result<Attempt> {
+    spans.resumed();
     let Some(_guard) = shared.inner.gate.try_enter() else {
+        spans.parked();
         return Ok(Attempt::Parked(
             ParkedOp::Sample {
                 id,
@@ -990,25 +1177,37 @@ fn attempt_sample(
                 timeout,
                 noted,
                 started,
+                spans,
             },
             ParkKind::Gate,
         ));
     };
-    match table.try_sample_batch(n) {
+    let op_started = Instant::now();
+    let outcome = table.try_sample_batch(n);
+    spans.op_attempt(op_started.elapsed());
+    match outcome {
         Ok(TrySampleOutcome::Sampled(samples)) => {
             shared.inner.record_sample_latency(table.name(), started);
             st.stream.send(sample_reply(id, &samples))?;
+            if spans.trace.is_some() {
+                st.last_trace = spans.trace;
+            }
+            let name = table.name().to_string();
+            finish_spans(shared, spans, &name, started);
             Ok(Attempt::Done)
         }
         Ok(TrySampleOutcome::Blocked) => {
             if Instant::now() >= deadline {
                 shared.inner.record_sample_latency(table.name(), started);
                 send_err(st, id, &Error::RateLimiterTimeout(timeout))?;
+                let name = table.name().to_string();
+                finish_spans(shared, spans, &name, started);
                 return Ok(Attempt::Done);
             }
             if !noted {
                 table.note_blocked_sample();
             }
+            spans.parked();
             Ok(Attempt::Parked(
                 ParkedOp::Sample {
                     id,
@@ -1018,6 +1217,7 @@ fn attempt_sample(
                     timeout,
                     noted: true,
                     started,
+                    spans,
                 },
                 ParkKind::Sample,
             ))
@@ -1025,6 +1225,8 @@ fn attempt_sample(
         Err(e) => {
             shared.inner.record_sample_latency(table.name(), started);
             send_err(st, id, &e)?;
+            let name = table.name().to_string();
+            finish_spans(shared, spans, &name, started);
             Ok(Attempt::Done)
         }
     }
@@ -1068,14 +1270,15 @@ fn dispatch(
             };
             let timeout = Duration::from_millis(timeout_ms).min(MAX_OP_TIMEOUT);
             let deadline = Instant::now() + timeout;
+            let spans = ReqSpans::new(server_trace());
             match attempt_insert(
-                shared, st, id, table, resolved, deadline, timeout, false, started,
+                shared, st, id, table, resolved, deadline, timeout, false, started, spans,
             )? {
                 Attempt::Done => Ok(Dispatch::Continue),
                 Attempt::Parked(op, kind) => Ok(Dispatch::Parked(op, kind)),
             }
         }
-        Message::CreateItemBatch { id, items, timeout_ms } => {
+        Message::CreateItemBatch { id, items, timeout_ms, trace } => {
             if items.len() > MAX_BATCH_OPS {
                 send_err(st, id, &batch_too_large(items.len()))?;
                 return Ok(Dispatch::Continue);
@@ -1083,6 +1286,15 @@ fn dispatch(
             let timeout = Duration::from_millis(timeout_ms).min(MAX_OP_TIMEOUT);
             let deadline = Instant::now() + timeout;
             let cap = items.len();
+            let batch_started = Instant::now();
+            // Span chains attribute the whole batch to the first op's
+            // table; a client-stamped context wins over server promotion
+            // and is the only one echoed back on the reply (DESIGN.md §15).
+            let span_table = items
+                .first()
+                .map(|i| i.table.clone())
+                .unwrap_or_else(|| "_server".to_string());
+            let spans = ReqSpans::new(trace.or_else(server_trace));
             match attempt_insert_batch(
                 shared,
                 st,
@@ -1092,7 +1304,11 @@ fn dispatch(
                 deadline,
                 timeout,
                 false,
-                Instant::now(),
+                batch_started,
+                batch_started,
+                spans,
+                trace,
+                span_table,
             )? {
                 Attempt::Done => Ok(Dispatch::Continue),
                 Attempt::Parked(op, kind) => Ok(Dispatch::Parked(op, kind)),
@@ -1115,7 +1331,10 @@ fn dispatch(
             let n = num_samples.max(1) as usize;
             let timeout = Duration::from_millis(timeout_ms).min(MAX_OP_TIMEOUT);
             let deadline = Instant::now() + timeout;
-            match attempt_sample(shared, st, id, table, n, deadline, timeout, false, started)? {
+            let spans = ReqSpans::new(server_trace());
+            match attempt_sample(
+                shared, st, id, table, n, deadline, timeout, false, started, spans,
+            )? {
                 Attempt::Done => Ok(Dispatch::Continue),
                 Attempt::Parked(op, kind) => Ok(Dispatch::Parked(op, kind)),
             }
@@ -1138,18 +1357,23 @@ fn dispatch(
             send_reply(st, id, reply)?;
             Ok(Dispatch::Continue)
         }
-        Message::PriorityUpdateBatch { id, ops } => {
+        Message::PriorityUpdateBatch { id, ops, trace } => {
             if ops.len() > MAX_BATCH_OPS {
                 send_err(st, id, &batch_too_large(ops.len()))?;
                 return Ok(Dispatch::Continue);
             }
+            let started = Instant::now();
+            let mut spans = ReqSpans::new(trace.or_else(server_trace));
             // Mutations never park: one gate entry covers the whole batch,
             // and each op's keys are already grouped per shard by
             // `update_priorities`/`delete` — N ops cost one gate
             // acquisition and one lock hold per touched shard.
             let results = {
-                let _guard = shared.inner.gate.enter();
-                ops.iter()
+                let (_guard, waited) = shared.inner.gate.enter_timed();
+                spans.gate += waited;
+                let op_started = Instant::now();
+                let results: Vec<BatchResult> = ops
+                    .iter()
                     .map(|op| {
                         let r = (|| {
                             let table = shared.inner.table(&op.table)?;
@@ -1159,9 +1383,21 @@ fn dispatch(
                         })();
                         BatchResult::from_result(r.as_ref().map(String::clone))
                     })
-                    .collect()
+                    .collect();
+                spans.op_attempt(op_started.elapsed());
+                results
             };
-            st.stream.send(Message::BatchReply { id, results })?;
+            // Update batches span tables; attribute the chain to the first
+            // op's table like CreateItemBatch does.
+            let span_table = ops
+                .first()
+                .map(|op| op.table.clone())
+                .unwrap_or_else(|| "_server".to_string());
+            st.stream.send(Message::BatchReply { id, results, trace })?;
+            if spans.trace.is_some() {
+                st.last_trace = spans.trace;
+            }
+            finish_spans(shared, spans, &span_table, started);
             Ok(Dispatch::Continue)
         }
         Message::Reset { id, table } => {
@@ -1205,11 +1441,18 @@ fn dispatch(
             min_diff,
             max_diff,
             checkpoint_interval_ms,
+            slow_request_micros,
+            trace_sample_per_mille,
         } => {
-            let reply =
-                shared
-                    .inner
-                    .apply_admin(&table, max_size, min_diff, max_diff, checkpoint_interval_ms);
+            let reply = shared.inner.apply_admin(
+                &table,
+                max_size,
+                min_diff,
+                max_diff,
+                checkpoint_interval_ms,
+                slow_request_micros,
+                trace_sample_per_mille,
+            );
             send_reply(st, id, reply)?;
             Ok(Dispatch::Continue)
         }

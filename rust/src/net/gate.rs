@@ -50,6 +50,23 @@ impl Gate {
         GateGuard { gate: self }
     }
 
+    /// [`Gate::enter`] that also reports how long entry blocked — the
+    /// threaded service model attributes this wait to the `gate` stage
+    /// (DESIGN.md §15). The fast path (unpaused) takes no clock reading.
+    pub fn enter_timed(&self) -> (GateGuard<'_>, Duration) {
+        let mut s = self.state.lock().unwrap();
+        let mut waited = Duration::ZERO;
+        if s.paused {
+            let started = Instant::now();
+            while s.paused {
+                s = self.cv.wait(s).unwrap();
+            }
+            waited = started.elapsed();
+        }
+        s.in_flight += 1;
+        (GateGuard { gate: self }, waited)
+    }
+
     /// Try to enter without blocking; `None` when paused.
     pub fn try_enter(&self) -> Option<GateGuard<'_>> {
         let mut s = self.state.lock().unwrap();
@@ -191,6 +208,27 @@ mod tests {
     fn try_enter_succeeds_when_unpaused() {
         let g = Gate::new();
         assert!(g.try_enter().is_some());
+    }
+
+    #[test]
+    fn enter_timed_reports_pause_wait() {
+        let g = Arc::new(Gate::new());
+        // Unpaused: no measurable wait.
+        let (guard, waited) = g.enter_timed();
+        assert_eq!(waited, Duration::ZERO);
+        drop(guard);
+
+        g.pause();
+        let g2 = g.clone();
+        let t = std::thread::spawn(move || {
+            let (guard, waited) = g2.enter_timed();
+            drop(guard);
+            waited
+        });
+        std::thread::sleep(Duration::from_millis(25));
+        g.resume();
+        let waited = t.join().unwrap();
+        assert!(waited >= Duration::from_millis(15), "{waited:?}");
     }
 
     #[test]

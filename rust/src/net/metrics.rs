@@ -59,6 +59,15 @@ pub(crate) fn http_response(
             "text/plain; version=0.0.4; charset=utf-8",
             render_prometheus(inner, event),
         )
+    } else if path == "/trace" {
+        // Flight-recorder dump (DESIGN.md §15): the retained span ring as
+        // Chrome trace-event JSON — load it in chrome://tracing or
+        // Perfetto. Same bearer auth as /metrics (checked above).
+        (
+            "200 OK",
+            "application/json; charset=utf-8",
+            crate::net::trace::recorder().render_chrome_json(),
+        )
     } else {
         (
             "404 Not Found",
@@ -161,20 +170,25 @@ impl LatencyHistogram {
 
     /// Append the `_bucket`/`_sum`/`_count` samples of one labelled
     /// series. Buckets are emitted cumulative per the exposition format,
-    /// with the implicit `+Inf` bucket equal to `_count`.
-    fn render_into(&self, e: &mut Expo, name: &str, table: &str) {
+    /// with the implicit `+Inf` bucket equal to `_count`; `le` is appended
+    /// after the caller's labels.
+    fn render_into(&self, e: &mut Expo, name: &str, labels: &[(&str, &str)]) {
         let bucket_name = format!("{name}_bucket");
         let mut cumulative = 0u64;
         for (i, le) in LATENCY_BUCKETS.iter().enumerate() {
             cumulative += self.buckets[i].load(Ordering::Relaxed);
             let le = fmt_value(*le);
-            e.sample(&bucket_name, &[("table", table), ("le", &le)], cumulative as f64);
+            let mut with_le = labels.to_vec();
+            with_le.push(("le", &le));
+            e.sample(&bucket_name, &with_le, cumulative as f64);
         }
         let count = self.count.load(Ordering::Relaxed);
-        e.sample(&bucket_name, &[("table", table), ("le", "+Inf")], count as f64);
+        let mut with_le = labels.to_vec();
+        with_le.push(("le", "+Inf"));
+        e.sample(&bucket_name, &with_le, count as f64);
         let sum = self.sum_micros.load(Ordering::Relaxed) as f64 / 1e6;
-        e.sample(&format!("{name}_sum"), &[("table", table)], sum);
-        e.sample(&format!("{name}_count"), &[("table", table)], count as f64);
+        e.sample(&format!("{name}_sum"), labels, sum);
+        e.sample(&format!("{name}_count"), labels, count as f64);
     }
 }
 
@@ -378,7 +392,11 @@ pub(crate) fn render_prometheus(inner: &ServerInner, event: Option<&EventShared>
     );
     for t in &inner.table_order {
         if let Some(tl) = inner.latency.get(t.name()) {
-            tl.insert.render_into(&mut e, "reverb_table_insert_latency_seconds", t.name());
+            tl.insert.render_into(
+                &mut e,
+                "reverb_table_insert_latency_seconds",
+                &[("table", t.name())],
+            );
         }
     }
     e.family(
@@ -388,8 +406,77 @@ pub(crate) fn render_prometheus(inner: &ServerInner, event: Option<&EventShared>
     );
     for t in &inner.table_order {
         if let Some(tl) = inner.latency.get(t.name()) {
-            tl.sample.render_into(&mut e, "reverb_table_sample_latency_seconds", t.name());
+            tl.sample.render_into(
+                &mut e,
+                "reverb_table_sample_latency_seconds",
+                &[("table", t.name())],
+            );
         }
+    }
+
+    e.family(
+        "reverb_stage_duration_seconds",
+        "histogram",
+        "Per-request stage timings (DESIGN.md §15); table \"_server\" holds connection-scoped stages.",
+    );
+    let stage_rows: Vec<&str> = inner
+        .table_order
+        .iter()
+        .map(|t| t.name())
+        .chain(std::iter::once("_server"))
+        .collect();
+    for name in stage_rows {
+        if let Some(row) = inner.stages.get(name) {
+            for stage in crate::net::trace::SERVER_STAGES {
+                let idx = stage.server_index().expect("server stage");
+                row[idx].render_into(
+                    &mut e,
+                    "reverb_stage_duration_seconds",
+                    &[("table", name), ("stage", stage.name())],
+                );
+            }
+        }
+    }
+
+    e.family(
+        "reverb_table_sampled_to_inserted_ratio",
+        "gauge",
+        "Lifetime samples / inserts per table (NaN before the first insert).",
+    );
+    for (name, info, ..) in &tables {
+        let ratio = if info.inserts == 0 {
+            f64::NAN
+        } else {
+            info.samples as f64 / info.inserts as f64
+        };
+        e.sample("reverb_table_sampled_to_inserted_ratio", &[("table", name)], ratio);
+    }
+
+    e.family(
+        "reverb_table_item_age_steps",
+        "histogram",
+        "Item age at sample time, in inserts landed since the item (power-of-two buckets).",
+    );
+    for t in &inner.table_order {
+        let (buckets, count, sum) = t.age_histogram().snapshot();
+        let name = t.name();
+        let mut cumulative = 0u64;
+        for (i, n) in buckets.iter().take(crate::core::table::AGE_BUCKETS).enumerate() {
+            cumulative += n;
+            let le = crate::core::table::AgeHistogram::bound(i).to_string();
+            e.sample(
+                "reverb_table_item_age_steps_bucket",
+                &[("table", name), ("le", &le)],
+                cumulative as f64,
+            );
+        }
+        e.sample(
+            "reverb_table_item_age_steps_bucket",
+            &[("table", name), ("le", "+Inf")],
+            count as f64,
+        );
+        e.sample("reverb_table_item_age_steps_sum", &[("table", name)], sum as f64);
+        e.sample("reverb_table_item_age_steps_count", &[("table", name)], count as f64);
     }
 
     e.family(
@@ -441,6 +528,63 @@ pub(crate) fn render_prometheus(inner: &ServerInner, event: Option<&EventShared>
     }
 
     e.out
+}
+
+/// Read one HTTP request head from a blocking socket (shared by the
+/// server's threaded scrape fallback and the client-side fabric
+/// exporter). `None` means the head was oversized and the connection
+/// should just be dropped.
+pub(crate) fn read_request_head(
+    sock: &mut std::net::TcpStream,
+) -> std::io::Result<Option<Vec<u8>>> {
+    use std::io::Read;
+    let mut head = Vec::new();
+    let mut buf = [0u8; 1024];
+    while !head_complete(&head) {
+        if head.len() > MAX_HTTP_HEAD {
+            return Ok(None);
+        }
+        let n = sock.read(&mut buf)?;
+        if n == 0 {
+            break;
+        }
+        head.extend_from_slice(&buf[..n]);
+    }
+    Ok(Some(head))
+}
+
+/// Minimal one-shot responder for a standalone plain-text exposition
+/// endpoint (the client-side fabric scrape listener, which has no
+/// [`ServerInner`] to route against): `GET /metrics` → 200 with
+/// `body()`, wrong method → 405, anything else → 404. Always
+/// `Connection: close`.
+pub(crate) fn plain_scrape_response(head: &[u8], body: impl FnOnce() -> String) -> Vec<u8> {
+    let line = head.split(|&b| b == b'\n').next().unwrap_or(b"");
+    let line = String::from_utf8_lossy(line);
+    let mut parts = line.split_whitespace();
+    let method = parts.next().unwrap_or("");
+    let target = parts.next().unwrap_or("");
+    let path = target.split('?').next().unwrap_or("");
+    let (status, content_type, body) = if method != "GET" {
+        (
+            "405 Method Not Allowed",
+            "text/plain; charset=utf-8",
+            "method not allowed\n".to_string(),
+        )
+    } else if path == "/metrics" {
+        ("200 OK", "text/plain; version=0.0.4; charset=utf-8", body())
+    } else {
+        (
+            "404 Not Found",
+            "text/plain; charset=utf-8",
+            "not found (try /metrics)\n".to_string(),
+        )
+    };
+    format!(
+        "HTTP/1.1 {status}\r\nContent-Type: {content_type}\r\nContent-Length: {}\r\nConnection: close\r\n\r\n{body}",
+        body.len()
+    )
+    .into_bytes()
 }
 
 #[cfg(test)]
@@ -497,7 +641,7 @@ mod tests {
         h.record(Duration::from_millis(2)); // <= 0.0025
         h.record(Duration::from_secs(60)); // beyond the ladder: +Inf only
         let mut e = Expo { out: String::new() };
-        h.render_into(&mut e, "x_seconds", "t");
+        h.render_into(&mut e, "x_seconds", &[("table", "t")]);
         let lines: Vec<&str> = e.out.lines().collect();
         assert_eq!(lines.len(), LATENCY_BUCKETS.len() + 3);
         assert!(lines.contains(&"x_seconds_bucket{table=\"t\",le=\"0.0001\"} 2"));

@@ -8,6 +8,7 @@ pub mod gate;
 pub(crate) mod metrics;
 pub mod poller;
 pub mod server;
+pub mod trace;
 pub mod transport;
 pub mod wire;
 

@@ -27,7 +27,8 @@ use crate::net::gate::Gate;
 use crate::net::transport::{
     self, InProcListener, MsgStream, TcpTransportListener, TransportListener,
 };
-use crate::net::metrics::TableLatency;
+use crate::net::metrics::{LatencyHistogram, TableLatency};
+use crate::net::trace::{self, ReqSpans, Stage, TraceContext, SERVER_STAGES};
 use crate::net::wire::{
     error_code, BatchResult, Message, WireItem, WireSampleInfo, MAX_BATCH_OPS,
 };
@@ -299,10 +300,24 @@ impl ServerBuilder {
             .keys()
             .map(|name| (name.clone(), TableLatency::default()))
             .collect();
+        // Stage histograms: one row per table plus the `_server`
+        // pseudo-table for connection-scoped stages.
+        let stages = tables
+            .keys()
+            .cloned()
+            .chain(std::iter::once("_server".to_string()))
+            .map(|name| {
+                (
+                    name,
+                    std::array::from_fn(|_| LatencyHistogram::default()),
+                )
+            })
+            .collect();
         let inner = Arc::new(ServerInner {
             tables,
             table_order,
             latency,
+            stages,
             store,
             gate: Gate::new(),
             checkpoint_dir: self.checkpoint_dir,
@@ -489,6 +504,10 @@ pub(crate) struct ServerInner {
     pub(crate) table_order: Vec<Arc<Table>>,
     /// Per-table insert/sample service-time histograms (`/metrics`).
     pub(crate) latency: HashMap<String, TableLatency>,
+    /// Per-table per-stage duration histograms (DESIGN.md §15), keyed by
+    /// table name plus the `_server` pseudo-table for connection-scoped
+    /// stages (decode/queue/flush) and ops with no table attribution.
+    pub(crate) stages: HashMap<String, [LatencyHistogram; SERVER_STAGES.len()]>,
     pub(crate) store: ChunkStore,
     pub(crate) gate: Gate,
     checkpoint_dir: Option<PathBuf>,
@@ -692,6 +711,19 @@ impl ServerInner {
         }
     }
 
+    /// Record one stage duration into the per-table stage histogram
+    /// (`reverb_stage_duration_seconds`). Unknown tables fall back to the
+    /// `_server` pseudo-table so no stage time is ever dropped; client-only
+    /// stages are ignored (they have no server histogram row).
+    pub(crate) fn record_stage(&self, table: &str, stage: Stage, d: Duration) {
+        let Some(idx) = stage.server_index() else {
+            return;
+        };
+        if let Some(row) = self.stages.get(table).or_else(|| self.stages.get("_server")) {
+            row[idx].record(d);
+        }
+    }
+
     /// Bytes sealed into the persist journal but not yet spilled to disk
     /// (0 without incremental persistence) — the `/metrics` lag gauge.
     pub(crate) fn journal_lag_bytes(&self) -> u64 {
@@ -708,6 +740,7 @@ impl ServerInner {
     /// width); `table` is ignored — and may be empty — for interval-only
     /// requests. Returns the audit line, which is both logged and sent
     /// back as the Ack detail.
+    #[allow(clippy::too_many_arguments)]
     pub(crate) fn apply_admin(
         &self,
         table: &str,
@@ -715,11 +748,15 @@ impl ServerInner {
         min_diff: Option<f64>,
         max_diff: Option<f64>,
         checkpoint_interval_ms: Option<u64>,
+        slow_request_micros: Option<u64>,
+        trace_sample_per_mille: Option<u64>,
     ) -> Result<String> {
         if max_size.is_none()
             && min_diff.is_none()
             && max_diff.is_none()
             && checkpoint_interval_ms.is_none()
+            && slow_request_micros.is_none()
+            && trace_sample_per_mille.is_none()
         {
             return Err(Error::InvalidArgument(
                 "empty reconfig: nothing to apply".into(),
@@ -745,6 +782,18 @@ impl ServerInner {
         if max_size == Some(0) {
             return Err(Error::InvalidArgument("max_size must be positive".into()));
         }
+        if slow_request_micros == Some(0) {
+            return Err(Error::InvalidArgument(
+                "slow request threshold must be positive".into(),
+            ));
+        }
+        if let Some(pm) = trace_sample_per_mille {
+            if pm > 1000 {
+                return Err(Error::InvalidArgument(format!(
+                    "trace sampling rate {pm}\u{2030} exceeds 1000\u{2030}"
+                )));
+            }
+        }
         let mut audit = Vec::new();
         if max_size.is_some() || min_diff.is_some() {
             let t = self.table(table)?;
@@ -764,6 +813,14 @@ impl ServerInner {
         if let Some(ms) = checkpoint_interval_ms {
             self.checkpoint_interval_ms.store(ms, Ordering::SeqCst);
             audit.push(format!("checkpoint_interval_ms={ms}"));
+        }
+        if let Some(us) = slow_request_micros {
+            trace::set_slow_request_micros(us);
+            audit.push(format!("slow_request_micros={us}"));
+        }
+        if let Some(pm) = trace_sample_per_mille {
+            trace::set_server_sample_per_mille(pm);
+            audit.push(format!("trace_sample_per_mille={pm}"));
         }
         let detail = format!("reconfigured table={table:?} {}", audit.join(" "));
         log::info!("admin: {detail}");
@@ -800,40 +857,100 @@ impl ServerInner {
 
     /// Insert with gate-sliced blocking (see WAIT_SLICE). The item is
     /// cloned per attempt (cheap: `Arc<Chunk>` refs + metadata) so a sliced
-    /// timeout can retry after re-entering the gate.
-    fn gated_insert(&self, table: &Arc<Table>, item: Item, timeout: Duration) -> Result<()> {
+    /// timeout can retry after re-entering the gate. Gate-pause waits and
+    /// timed-out corridor slices accrue to the `gate` stage, matching the
+    /// event model's attribution of parked time (DESIGN.md §15).
+    fn gated_insert(
+        &self,
+        table: &Arc<Table>,
+        item: Item,
+        timeout: Duration,
+        spans: &mut ReqSpans,
+    ) -> Result<()> {
         let deadline = Instant::now() + timeout;
         loop {
-            let _guard = self.gate.enter();
+            let (_guard, waited) = self.gate.enter_timed();
+            spans.gate += waited;
             let now = Instant::now();
             let slice = WAIT_SLICE.min(deadline.saturating_duration_since(now));
+            let attempt_started = Instant::now();
             match table.insert_or_assign(item.clone(), Some(slice)) {
-                Ok(()) => return Ok(()),
-                Err(Error::RateLimiterTimeout(_)) if Instant::now() < deadline => continue,
-                Err(e) => return Err(e),
+                Ok(()) => {
+                    spans.op_attempt(attempt_started.elapsed());
+                    return Ok(());
+                }
+                Err(Error::RateLimiterTimeout(_)) if Instant::now() < deadline => {
+                    accrue_blocked_slice(spans, attempt_started);
+                    continue;
+                }
+                Err(e) => {
+                    spans.op_attempt(attempt_started.elapsed());
+                    return Err(e);
+                }
             }
         }
     }
 
-    /// Sample with gate-sliced blocking.
+    /// Sample with gate-sliced blocking (stage attribution as in
+    /// [`ServerInner::gated_insert`]).
     fn gated_sample(
         &self,
         table: &Arc<Table>,
         n: usize,
         timeout: Duration,
+        spans: &mut ReqSpans,
     ) -> Result<Vec<crate::core::item::SampledItem>> {
         let deadline = Instant::now() + timeout;
         loop {
-            let _guard = self.gate.enter();
+            let (_guard, waited) = self.gate.enter_timed();
+            spans.gate += waited;
             let now = Instant::now();
             let slice = WAIT_SLICE.min(deadline.saturating_duration_since(now));
+            let attempt_started = Instant::now();
             match table.sample_batch(n, Some(slice)) {
-                Ok(items) => return Ok(items),
-                Err(Error::RateLimiterTimeout(_)) if Instant::now() < deadline => continue,
-                Err(e) => return Err(e),
+                Ok(items) => {
+                    spans.op_attempt(attempt_started.elapsed());
+                    return Ok(items);
+                }
+                Err(Error::RateLimiterTimeout(_)) if Instant::now() < deadline => {
+                    accrue_blocked_slice(spans, attempt_started);
+                    continue;
+                }
+                Err(e) => {
+                    spans.op_attempt(attempt_started.elapsed());
+                    return Err(e);
+                }
             }
         }
     }
+}
+
+/// A timed-out WAIT_SLICE attempt spent its wall time corridor-blocked:
+/// drain the TLS lock/journal accumulators into their stages and charge
+/// the remainder to `gate` (not `execute` — no table op completed).
+fn accrue_blocked_slice(spans: &mut ReqSpans, attempt_started: Instant) {
+    let total = attempt_started.elapsed();
+    let lock = trace::take_lock_wait();
+    let journal = trace::take_journal_wait();
+    spans.lock += lock;
+    spans.journal += journal;
+    spans.gate += total.saturating_sub(lock).saturating_sub(journal);
+}
+
+/// Feed a finished request's stage durations into the per-table `/metrics`
+/// histograms (the threaded-model twin of `event::finish_spans`).
+fn finish_spans(inner: &ServerInner, spans: ReqSpans, table: &str, started: Instant) {
+    for (stage, d) in spans.finish(table, started) {
+        if !d.is_zero() {
+            inner.record_stage(table, stage, d);
+        }
+    }
+}
+
+/// Promote an untraced request to a server-sampled trace (flight-recorder
+/// visibility without client cooperation; never echoed on replies).
+fn server_trace() -> Option<TraceContext> {
+    trace::should_sample_server().then(TraceContext::generate)
 }
 
 fn accept_loop(
@@ -921,20 +1038,11 @@ fn serve_metrics_scrape(
     inner: &ServerInner,
     event: Option<&EventShared>,
 ) -> std::io::Result<()> {
-    use std::io::{Read, Write};
+    use std::io::Write;
     sock.set_read_timeout(Some(Duration::from_secs(5)))?;
-    let mut head = Vec::new();
-    let mut buf = [0u8; 1024];
-    while !crate::net::metrics::head_complete(&head) {
-        if head.len() > crate::net::metrics::MAX_HTTP_HEAD {
-            return Ok(()); // oversized request: drop the connection
-        }
-        let n = sock.read(&mut buf)?;
-        if n == 0 {
-            break;
-        }
-        head.extend_from_slice(&buf[..n]);
-    }
+    let Some(head) = crate::net::metrics::read_request_head(&mut sock)? else {
+        return Ok(()); // oversized request: drop the connection
+    };
     let response = crate::net::metrics::http_response(&head, inner, event);
     sock.write_all(&response)?;
     sock.flush()
@@ -1117,16 +1225,23 @@ fn serve_connection(mut stream: Box<dyn MsgStream>, inner: Arc<ServerInner>) -> 
             }
             Message::CreateItem { id, item, timeout_ms } => {
                 let started = Instant::now();
+                let mut spans = ReqSpans::new(server_trace());
                 let reply = (|| {
                     let table = inner.table(&item.table)?.clone();
                     let item = resolve_item(&inner, &pending, &item)?;
-                    inner.gated_insert(&table, item, Duration::from_millis(timeout_ms))?;
+                    inner.gated_insert(
+                        &table,
+                        item,
+                        Duration::from_millis(timeout_ms),
+                        &mut spans,
+                    )?;
                     Ok(())
                 })();
                 inner.record_insert_latency(&item.table, started);
+                finish_spans(&inner, spans, &item.table, started);
                 send_reply(stream.as_mut(), id, reply.map(|()| String::new()))?;
             }
-            Message::CreateItemBatch { id, items, timeout_ms } => {
+            Message::CreateItemBatch { id, items, timeout_ms, trace } => {
                 if items.len() > MAX_BATCH_OPS {
                     send_err(stream.as_mut(), id, &batch_too_large(items.len()))?;
                 } else {
@@ -1135,20 +1250,30 @@ fn serve_connection(mut stream: Box<dyn MsgStream>, inner: Arc<ServerInner>) -> 
                     // park-at-the-blocked-op semantics (nothing after the
                     // blocked op runs until it resolves).
                     let timeout = Duration::from_millis(timeout_ms);
+                    let batch_started = Instant::now();
+                    let span_table = items
+                        .first()
+                        .map(|i| i.table.clone())
+                        .unwrap_or_else(|| "_server".to_string());
+                    let mut spans = ReqSpans::new(trace.or_else(server_trace));
                     let mut results = Vec::with_capacity(items.len());
                     for wire_item in &items {
                         let started = Instant::now();
                         let r = (|| {
                             let table = inner.table(&wire_item.table)?.clone();
                             let item = resolve_item(&inner, &pending, wire_item)?;
-                            inner.gated_insert(&table, item, timeout)?;
+                            inner.gated_insert(&table, item, timeout, &mut spans)?;
                             Ok(String::new())
                         })();
                         inner.record_insert_latency(&wire_item.table, started);
                         results.push(BatchResult::from_result(r.as_ref().map(String::clone)));
                     }
-                    stream.send(Message::BatchReply { id, results })?;
+                    // Only the client-stamped context is echoed; a
+                    // server-promoted trace stays internal so untraced
+                    // peers see byte-identical replies.
+                    stream.send(Message::BatchReply { id, results, trace })?;
                     stream.flush()?;
+                    finish_spans(&inner, spans, &span_table, batch_started);
                 }
             }
             Message::SampleRequest {
@@ -1158,15 +1283,18 @@ fn serve_connection(mut stream: Box<dyn MsgStream>, inner: Arc<ServerInner>) -> 
                 timeout_ms,
             } => {
                 let started = Instant::now();
+                let mut spans = ReqSpans::new(server_trace());
                 let result = (|| {
                     let table = inner.table(&table)?.clone();
                     inner.gated_sample(
                         &table,
                         num_samples.max(1) as usize,
                         Duration::from_millis(timeout_ms),
+                        &mut spans,
                     )
                 })();
                 inner.record_sample_latency(&table, started);
+                finish_spans(&inner, spans, &table, started);
                 match result {
                     Ok(samples) => {
                         stream.send(sample_reply(id, &samples))?;
@@ -1192,17 +1320,22 @@ fn serve_connection(mut stream: Box<dyn MsgStream>, inner: Arc<ServerInner>) -> 
                 })();
                 send_reply(stream.as_mut(), id, reply)?;
             }
-            Message::PriorityUpdateBatch { id, ops } => {
+            Message::PriorityUpdateBatch { id, ops, trace } => {
                 if ops.len() > MAX_BATCH_OPS {
                     send_err(stream.as_mut(), id, &batch_too_large(ops.len()))?;
                 } else {
+                    let started = Instant::now();
+                    let mut spans = ReqSpans::new(trace.or_else(server_trace));
                     // Mutations never park: one gate entry covers the whole
                     // batch, and each op's keys are already grouped per
                     // shard by `update_priorities`/`delete` — N ops cost one
                     // gate acquisition and one lock hold per touched shard.
                     let results = {
-                        let _guard = inner.gate.enter();
-                        ops.iter()
+                        let (_guard, waited) = inner.gate.enter_timed();
+                        spans.gate += waited;
+                        let op_started = Instant::now();
+                        let results: Vec<BatchResult> = ops
+                            .iter()
                             .map(|op| {
                                 let r = (|| {
                                     let table = inner.table(&op.table)?;
@@ -1212,10 +1345,17 @@ fn serve_connection(mut stream: Box<dyn MsgStream>, inner: Arc<ServerInner>) -> 
                                 })();
                                 BatchResult::from_result(r.as_ref().map(String::clone))
                             })
-                            .collect()
+                            .collect();
+                        spans.op_attempt(op_started.elapsed());
+                        results
                     };
-                    stream.send(Message::BatchReply { id, results })?;
+                    let span_table = ops
+                        .first()
+                        .map(|op| op.table.clone())
+                        .unwrap_or_else(|| "_server".to_string());
+                    stream.send(Message::BatchReply { id, results, trace })?;
                     stream.flush()?;
+                    finish_spans(&inner, spans, &span_table, started);
                 }
             }
             Message::Reset { id, table } => {
@@ -1253,6 +1393,8 @@ fn serve_connection(mut stream: Box<dyn MsgStream>, inner: Arc<ServerInner>) -> 
                 min_diff,
                 max_diff,
                 checkpoint_interval_ms,
+                slow_request_micros,
+                trace_sample_per_mille,
             } => {
                 let reply = inner.apply_admin(
                     &table,
@@ -1260,6 +1402,8 @@ fn serve_connection(mut stream: Box<dyn MsgStream>, inner: Arc<ServerInner>) -> 
                     min_diff,
                     max_diff,
                     checkpoint_interval_ms,
+                    slow_request_micros,
+                    trace_sample_per_mille,
                 );
                 send_reply(stream.as_mut(), id, reply)?;
             }
@@ -1948,7 +2092,7 @@ mod tests {
                 Message::WatchUpdate { id, table, info } => {
                     format!("watch {id} {table} size={}", info.size)
                 }
-                Message::BatchReply { id, results } => format!(
+                Message::BatchReply { id, results, .. } => format!(
                     "batch {id} [{}]",
                     results
                         .iter()
@@ -2044,6 +2188,8 @@ mod tests {
             min_diff: None,
             max_diff: None,
             checkpoint_interval_ms: None,
+            slow_request_micros: None,
+            trace_sample_per_mille: None,
         })
         .unwrap();
         // Half a corridor: rejected, nothing applied.
@@ -2054,6 +2200,8 @@ mod tests {
             min_diff: Some(0.0),
             max_diff: None,
             checkpoint_interval_ms: None,
+            slow_request_micros: None,
+            trace_sample_per_mille: None,
         })
         .unwrap();
         conn.send(Message::WatchRequest { id: 11, table: "q".into() }).unwrap();
@@ -2097,6 +2245,7 @@ mod tests {
             id: 15,
             items: vec![item(6), bad, item(7)],
             timeout_ms: 50,
+            trace: None,
         })
         .unwrap();
         conn.flush().unwrap();
@@ -2117,6 +2266,7 @@ mod tests {
                     deletes: vec![],
                 },
             ],
+            trace: None,
         })
         .unwrap();
         // An oversized batch draws a clean per-frame error and leaves the
@@ -2131,6 +2281,7 @@ mod tests {
                 };
                 crate::net::wire::MAX_BATCH_OPS + 1
             ],
+            trace: None,
         })
         .unwrap();
         conn.send(Message::InfoRequest { id: 18 }).unwrap();

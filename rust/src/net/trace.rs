@@ -1,0 +1,760 @@
+//! End-to-end request tracing (DESIGN.md §15): wire-propagated span
+//! context, per-stage timing, and an always-on flight recorder.
+//!
+//! Three cooperating pieces:
+//!
+//! 1. **[`TraceContext`]** — a `(trace_id, span_id, sampled)` triple that
+//!    rides wire-v3 batch frames behind an envelope flag bit
+//!    (`net::wire`). A request stamped by a client [`crate::Pipeline`]
+//!    keeps one trace id across the fabric's member fan-out and the
+//!    server's stage spans, so one id ties the whole chain together.
+//! 2. **The flight recorder** — a process-global, lock-free ring of
+//!    fixed-size span slots ([`Recorder`]). Every stage measurement is
+//!    written with a seqlock per slot (writers never block, readers
+//!    discard torn slots), striped over lanes keyed by thread so
+//!    concurrent workers do not contend on a head pointer. Merge happens
+//!    on read: `/trace` concatenates the lanes, sorts by start time, and
+//!    renders Chrome trace-event JSON.
+//! 3. **Global knobs** — the slow-request threshold (span chains above it
+//!    are promoted to `log::warn!`) and client/server sampling rates,
+//!    all plain atomics so the admin RPC can re-tune them live.
+//!
+//! The recorder is process-global rather than per-server on purpose: an
+//! in-process client (`reverb://in-proc/...`) and its server share one
+//! address space, and a single `/trace` dump should show the client
+//! submit span next to the server's decode→gate→lock→execute→flush chain
+//! for the same trace id.
+
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Mutex, OnceLock};
+use std::time::{Duration, Instant};
+
+/// Span context carried on wire-v3 batch frames (and echoed on their
+/// replies). `sampled` marks the trace as explicitly requested by a
+/// client — unsampled requests still hit the flight recorder, but only
+/// sampled ones are stamped with a non-zero trace id end to end.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct TraceContext {
+    pub trace_id: u64,
+    pub span_id: u64,
+    pub sampled: bool,
+}
+
+impl TraceContext {
+    /// Mint a fresh root context (new trace id, new span id).
+    pub fn generate() -> TraceContext {
+        TraceContext {
+            trace_id: next_id(),
+            span_id: next_id(),
+            sampled: true,
+        }
+    }
+
+    /// A child context: same trace, fresh span id.
+    pub fn child(&self) -> TraceContext {
+        TraceContext {
+            trace_id: self.trace_id,
+            span_id: next_id(),
+            sampled: self.sampled,
+        }
+    }
+}
+
+/// Globally-unique-enough id source: a process counter scrambled through
+/// splitmix64 so ids from concurrent clients interleave without a
+/// coordinated namespace.
+fn next_id() -> u64 {
+    static SEQ: AtomicU64 = AtomicU64::new(0x9E37_79B9_0000_0001);
+    crate::util::splitmix64(SEQ.fetch_add(1, Ordering::Relaxed))
+}
+
+/// One pipeline stage a request passes through. Server stages (the first
+/// seven) also feed the `reverb_stage_duration_seconds` histograms on
+/// `/metrics`; client/fabric stages exist in the flight recorder only.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[repr(u8)]
+pub enum Stage {
+    /// Frame bytes → `Message` (event core read path).
+    Decode = 0,
+    /// Time between a connection becoming ready and a worker servicing it.
+    Queue = 1,
+    /// Parked time: checkpoint-gate closure plus rate-limiter corridor
+    /// parks (both service models attribute all blocked time here).
+    Gate = 2,
+    /// Shard-mutex acquisition wait inside the table.
+    Lock = 3,
+    /// Table op execution (insert/sample/update) net of lock and journal.
+    Execute = 4,
+    /// Durability sink (persist journal append) time.
+    Journal = 5,
+    /// Reply serialization + socket write.
+    Flush = 6,
+    /// Client: request build + buffered send.
+    Submit = 7,
+    /// Client: explicit pipeline flush.
+    ClientFlush = 8,
+    /// Client: blocking flush+recv that produced a reply.
+    Reply = 9,
+    /// Fabric: owner-member pick + per-member send.
+    Pick = 10,
+    /// Fabric: re-route of a batch fragment after a member died.
+    Reroute = 11,
+}
+
+/// The server-side stages exported as `/metrics` histogram families, in
+/// render order.
+pub const SERVER_STAGES: [Stage; 7] = [
+    Stage::Decode,
+    Stage::Queue,
+    Stage::Gate,
+    Stage::Lock,
+    Stage::Execute,
+    Stage::Journal,
+    Stage::Flush,
+];
+
+impl Stage {
+    pub fn name(self) -> &'static str {
+        match self {
+            Stage::Decode => "decode",
+            Stage::Queue => "queue",
+            Stage::Gate => "gate",
+            Stage::Lock => "lock",
+            Stage::Execute => "execute",
+            Stage::Journal => "journal",
+            Stage::Flush => "flush",
+            Stage::Submit => "submit",
+            Stage::ClientFlush => "client_flush",
+            Stage::Reply => "reply",
+            Stage::Pick => "pick",
+            Stage::Reroute => "reroute",
+        }
+    }
+
+    fn from_u8(v: u8) -> Option<Stage> {
+        Some(match v {
+            0 => Stage::Decode,
+            1 => Stage::Queue,
+            2 => Stage::Gate,
+            3 => Stage::Lock,
+            4 => Stage::Execute,
+            5 => Stage::Journal,
+            6 => Stage::Flush,
+            7 => Stage::Submit,
+            8 => Stage::ClientFlush,
+            9 => Stage::Reply,
+            10 => Stage::Pick,
+            11 => Stage::Reroute,
+            _ => return None,
+        })
+    }
+
+    /// Index into per-table [`SERVER_STAGES`] histogram arrays.
+    pub fn server_index(self) -> Option<usize> {
+        let i = self as u8 as usize;
+        (i < SERVER_STAGES.len()).then_some(i)
+    }
+}
+
+// ---------------------------------------------------------------------
+// global tuning knobs (admin RPC re-tunes these live)
+// ---------------------------------------------------------------------
+
+/// Requests slower than this end-to-end are promoted to `log::warn!`
+/// with their full span breakdown. Default 1 s.
+static SLOW_REQUEST_MICROS: AtomicU64 = AtomicU64::new(1_000_000);
+/// Per-mille of *untraced* server requests stamped with a generated
+/// trace id (so their chains group in `/trace`). Default 0.
+static SERVER_SAMPLE_PER_MILLE: AtomicU64 = AtomicU64::new(0);
+/// Per-mille of client pipeline submissions stamped with a fresh trace.
+/// Default 0 — tracing-off clients pay one relaxed load per submit.
+static CLIENT_SAMPLE_PER_MILLE: AtomicU64 = AtomicU64::new(0);
+
+pub fn slow_request_threshold() -> Duration {
+    Duration::from_micros(SLOW_REQUEST_MICROS.load(Ordering::Relaxed))
+}
+
+pub fn set_slow_request_micros(micros: u64) {
+    SLOW_REQUEST_MICROS.store(micros.max(1), Ordering::Relaxed);
+}
+
+pub fn server_sample_per_mille() -> u64 {
+    SERVER_SAMPLE_PER_MILLE.load(Ordering::Relaxed)
+}
+
+pub fn set_server_sample_per_mille(per_mille: u64) {
+    SERVER_SAMPLE_PER_MILLE.store(per_mille.min(1000), Ordering::Relaxed);
+}
+
+pub fn set_client_sampling(per_mille: u64) {
+    CLIENT_SAMPLE_PER_MILLE.store(per_mille.min(1000), Ordering::Relaxed);
+}
+
+/// Whether this client submission should mint a [`TraceContext`].
+/// Deterministic rotor rather than an RNG: exactly `per_mille` of every
+/// 1000 consecutive submissions are sampled.
+pub fn should_sample_client() -> bool {
+    let pm = CLIENT_SAMPLE_PER_MILLE.load(Ordering::Relaxed);
+    if pm == 0 {
+        return false;
+    }
+    static ROTOR: AtomicU64 = AtomicU64::new(0);
+    ROTOR.fetch_add(1, Ordering::Relaxed) % 1000 < pm
+}
+
+/// Server-side counterpart for untraced requests.
+pub fn should_sample_server() -> bool {
+    let pm = SERVER_SAMPLE_PER_MILLE.load(Ordering::Relaxed);
+    if pm == 0 {
+        return false;
+    }
+    static ROTOR: AtomicU64 = AtomicU64::new(0);
+    ROTOR.fetch_add(1, Ordering::Relaxed) % 1000 < pm
+}
+
+// ---------------------------------------------------------------------
+// thread-local stage accumulators (fed from inside core::table)
+// ---------------------------------------------------------------------
+
+thread_local! {
+    static LOCK_WAIT: std::cell::Cell<u64> = const { std::cell::Cell::new(0) };
+    static JOURNAL_WAIT: std::cell::Cell<u64> = const { std::cell::Cell::new(0) };
+}
+
+/// Credit contended shard-lock wait to the current thread's accumulator
+/// (called by `core::table` under no locks).
+pub fn add_lock_wait(d: Duration) {
+    LOCK_WAIT.with(|c| c.set(c.get().saturating_add(d.as_nanos() as u64)));
+}
+
+/// Credit durability-sink time to the current thread's accumulator.
+pub fn add_journal_wait(d: Duration) {
+    JOURNAL_WAIT.with(|c| c.set(c.get().saturating_add(d.as_nanos() as u64)));
+}
+
+/// Drain the lock-wait accumulator (serving code calls this once per op;
+/// the table fills it while the op runs on the same thread).
+pub fn take_lock_wait() -> Duration {
+    Duration::from_nanos(LOCK_WAIT.with(|c| c.replace(0)))
+}
+
+/// Drain the journal-wait accumulator.
+pub fn take_journal_wait() -> Duration {
+    Duration::from_nanos(JOURNAL_WAIT.with(|c| c.replace(0)))
+}
+
+// ---------------------------------------------------------------------
+// per-request span accumulator
+// ---------------------------------------------------------------------
+
+/// Stage times accumulated while one request moves through a service
+/// model. Carried inside the event core's `ParkedOp` across parks, and
+/// on the threaded model's stack across gate slices; finished exactly
+/// once when the reply is built.
+#[derive(Debug)]
+pub struct ReqSpans {
+    pub trace: Option<TraceContext>,
+    pub gate: Duration,
+    pub lock: Duration,
+    pub execute: Duration,
+    pub journal: Duration,
+    /// Set while the op is parked (corridor or checkpoint gate); the
+    /// resume path folds `now - parked_since` into `gate`.
+    pub parked_since: Option<Instant>,
+}
+
+impl ReqSpans {
+    pub fn new(trace: Option<TraceContext>) -> ReqSpans {
+        ReqSpans {
+            trace,
+            gate: Duration::ZERO,
+            lock: Duration::ZERO,
+            execute: Duration::ZERO,
+            journal: Duration::ZERO,
+            parked_since: None,
+        }
+    }
+
+    /// Mark the op parked (idempotent: only the first park in a chain of
+    /// immediate re-attempts stamps the clock).
+    pub fn parked(&mut self) {
+        if self.parked_since.is_none() {
+            self.parked_since = Some(Instant::now());
+        }
+    }
+
+    /// Fold a finished park into the gate stage.
+    pub fn resumed(&mut self) {
+        if let Some(since) = self.parked_since.take() {
+            self.gate += since.elapsed();
+        }
+    }
+
+    /// Account one table-op attempt: `total` is the wall time of the
+    /// call; the thread-local lock/journal accumulators (filled by
+    /// `core::table` during the call) are drained and subtracted, the
+    /// remainder is execute time.
+    pub fn op_attempt(&mut self, total: Duration) {
+        let lock = take_lock_wait();
+        let journal = take_journal_wait();
+        self.lock += lock;
+        self.journal += journal;
+        self.execute += total.saturating_sub(lock).saturating_sub(journal);
+    }
+
+    /// Finish the request: write the stage chain into the flight
+    /// recorder, promote slow requests to `log::warn!`, and hand the
+    /// stage durations back for the caller's histogram map. `started`
+    /// is the request arrival time, `table` the op's table name.
+    pub fn finish(mut self, table: &str, started: Instant) -> [(Stage, Duration); 4] {
+        self.resumed();
+        let total = started.elapsed();
+        let rec = recorder();
+        let cat = rec.intern(table);
+        // Lay the stages out consecutively from the arrival time so the
+        // Chrome trace shows a contiguous chain per request.
+        let mut at = started;
+        for (stage, dur) in [
+            (Stage::Gate, self.gate),
+            (Stage::Lock, self.lock),
+            (Stage::Execute, self.execute),
+            (Stage::Journal, self.journal),
+        ] {
+            if !dur.is_zero() {
+                rec.record_at(self.trace, stage, cat, at, dur);
+            }
+            at += dur;
+        }
+        if total >= slow_request_threshold() {
+            let ids = self
+                .trace
+                .map(|t| format!(" trace={:016x}", t.trace_id))
+                .unwrap_or_default();
+            log::warn!(
+                "slow request table={table:?}{ids} total={total:?} \
+                 gate={:?} lock={:?} execute={:?} journal={:?}",
+                self.gate,
+                self.lock,
+                self.execute,
+                self.journal,
+            );
+        }
+        [
+            (Stage::Gate, self.gate),
+            (Stage::Lock, self.lock),
+            (Stage::Execute, self.execute),
+            (Stage::Journal, self.journal),
+        ]
+    }
+}
+
+// ---------------------------------------------------------------------
+// the flight recorder
+// ---------------------------------------------------------------------
+
+/// Lanes in the span ring. Writer threads hash onto a lane, so up to
+/// this many threads record without sharing a head counter.
+const N_LANES: usize = 16;
+/// Spans per lane; the ring holds `N_LANES * LANE_SLOTS` spans total and
+/// overwrites the oldest per lane (a flight recorder, not a log).
+const LANE_SLOTS: usize = 1024;
+
+/// One recorded span, as read back out of the ring.
+#[derive(Clone, Debug)]
+pub struct SpanRecord {
+    pub trace_id: u64,
+    pub span_id: u64,
+    pub stage: Stage,
+    /// Interned category (table name or `_server`/`_client`).
+    pub cat: String,
+    /// Microseconds since the recorder epoch.
+    pub start_us: u64,
+    pub dur_us: u64,
+    /// Lane the writer recorded on (rendered as the Chrome `tid`).
+    pub lane: usize,
+}
+
+/// One ring slot: a seqlock word plus five payload words. Writers bump
+/// `seq` to odd, store the payload, bump to even; readers accept a slot
+/// only if `seq` is even and unchanged across the payload reads.
+struct Slot {
+    seq: AtomicU64,
+    trace_id: AtomicU64,
+    span_id: AtomicU64,
+    /// `stage | cat << 8` — stage in the low byte, interned category
+    /// id in the next 16 bits.
+    packed: AtomicU64,
+    start_us: AtomicU64,
+    dur_us: AtomicU64,
+}
+
+impl Slot {
+    const fn new() -> Slot {
+        Slot {
+            seq: AtomicU64::new(0),
+            trace_id: AtomicU64::new(0),
+            span_id: AtomicU64::new(0),
+            packed: AtomicU64::new(0),
+            start_us: AtomicU64::new(0),
+            dur_us: AtomicU64::new(0),
+        }
+    }
+}
+
+struct Lane {
+    head: AtomicUsize,
+    slots: Vec<Slot>,
+}
+
+/// The process-global flight recorder (see module docs for why global).
+pub struct Recorder {
+    epoch: Instant,
+    lanes: Vec<Lane>,
+    /// Interned category names; span slots carry a `u16` id instead of a
+    /// string so the write path stays allocation-free after the first
+    /// record per table.
+    cats: Mutex<Vec<String>>,
+}
+
+/// Access the global recorder, creating it on first use.
+pub fn recorder() -> &'static Recorder {
+    static RECORDER: OnceLock<Recorder> = OnceLock::new();
+    RECORDER.get_or_init(Recorder::new)
+}
+
+thread_local! {
+    static MY_LANE: std::cell::Cell<usize> = const { std::cell::Cell::new(usize::MAX) };
+}
+
+impl Recorder {
+    fn new() -> Recorder {
+        Recorder {
+            epoch: Instant::now(),
+            lanes: (0..N_LANES)
+                .map(|_| Lane {
+                    head: AtomicUsize::new(0),
+                    slots: (0..LANE_SLOTS).map(|_| Slot::new()).collect(),
+                })
+                .collect(),
+            cats: Mutex::new(Vec::new()),
+        }
+    }
+
+    /// Nanoseconds since the recorder epoch — a monotonic stamp that fits
+    /// in an atomic, for cross-thread timing (the event core's ready-queue
+    /// wait).
+    pub fn nanos_since_epoch(&self) -> u64 {
+        self.epoch.elapsed().as_nanos() as u64
+    }
+
+    /// Intern a category name (table name or a `_server`/`_client`
+    /// pseudo-table) to the `u16` id the span slots store.
+    pub fn intern(&self, name: &str) -> u16 {
+        let mut cats = self.cats.lock().unwrap();
+        if let Some(i) = cats.iter().position(|c| c == name) {
+            return i as u16;
+        }
+        // Cap the namespace defensively; id 0xFFFF renders as "_other".
+        if cats.len() >= u16::MAX as usize {
+            return u16::MAX;
+        }
+        cats.push(name.to_string());
+        (cats.len() - 1) as u16
+    }
+
+    fn resolve(&self, id: u16) -> String {
+        self.cats
+            .lock()
+            .unwrap()
+            .get(id as usize)
+            .cloned()
+            .unwrap_or_else(|| "_other".into())
+    }
+
+    fn lane_for_thread(&self) -> usize {
+        MY_LANE.with(|c| {
+            let v = c.get();
+            if v != usize::MAX {
+                return v;
+            }
+            static NEXT: AtomicUsize = AtomicUsize::new(0);
+            let lane = NEXT.fetch_add(1, Ordering::Relaxed) % N_LANES;
+            c.set(lane);
+            lane
+        })
+    }
+
+    /// Record one span with an explicit start instant.
+    pub fn record_at(
+        &self,
+        trace: Option<TraceContext>,
+        stage: Stage,
+        cat: u16,
+        start: Instant,
+        dur: Duration,
+    ) {
+        let start_us = start.saturating_duration_since(self.epoch).as_micros() as u64;
+        let lane = &self.lanes[self.lane_for_thread()];
+        let idx = lane.head.fetch_add(1, Ordering::Relaxed) % LANE_SLOTS;
+        let slot = &lane.slots[idx];
+        // Seqlock write: odd while mutating, even when done. A reader
+        // racing with us sees an odd or changed seq and discards.
+        let seq = slot.seq.load(Ordering::Relaxed) | 1;
+        slot.seq.store(seq, Ordering::Release);
+        let (trace_id, span_id) = trace.map(|t| (t.trace_id, t.span_id)).unwrap_or((0, 0));
+        slot.trace_id.store(trace_id, Ordering::Relaxed);
+        slot.span_id.store(span_id, Ordering::Relaxed);
+        slot.packed
+            .store(stage as u8 as u64 | (cat as u64) << 8, Ordering::Relaxed);
+        slot.start_us.store(start_us, Ordering::Relaxed);
+        slot.dur_us.store(dur.as_micros() as u64, Ordering::Relaxed);
+        slot.seq.store(seq + 1, Ordering::Release);
+    }
+
+    /// Convenience: record a span measured up to now.
+    pub fn record(
+        &self,
+        trace: Option<TraceContext>,
+        stage: Stage,
+        cat: u16,
+        start: Instant,
+    ) {
+        self.record_at(trace, stage, cat, start, start.elapsed());
+    }
+
+    /// Merge-on-read snapshot of every valid slot, sorted by start time.
+    pub fn snapshot(&self) -> Vec<SpanRecord> {
+        let mut out = Vec::new();
+        for (li, lane) in self.lanes.iter().enumerate() {
+            for slot in &lane.slots {
+                let s1 = slot.seq.load(Ordering::Acquire);
+                if s1 == 0 || s1 & 1 == 1 {
+                    continue; // never written, or write in progress
+                }
+                let trace_id = slot.trace_id.load(Ordering::Relaxed);
+                let span_id = slot.span_id.load(Ordering::Relaxed);
+                let packed = slot.packed.load(Ordering::Relaxed);
+                let start_us = slot.start_us.load(Ordering::Relaxed);
+                let dur_us = slot.dur_us.load(Ordering::Relaxed);
+                if slot.seq.load(Ordering::Acquire) != s1 {
+                    continue; // torn: overwritten while reading
+                }
+                let Some(stage) = Stage::from_u8((packed & 0xFF) as u8) else {
+                    continue;
+                };
+                out.push(SpanRecord {
+                    trace_id,
+                    span_id,
+                    stage,
+                    cat: self.resolve((packed >> 8 & 0xFFFF) as u16),
+                    start_us,
+                    dur_us,
+                    lane: li,
+                });
+            }
+        }
+        out.sort_by_key(|s| s.start_us);
+        out
+    }
+
+    /// Spans recorded for one trace id (test/debug helper).
+    pub fn spans_for(&self, trace_id: u64) -> Vec<SpanRecord> {
+        self.snapshot()
+            .into_iter()
+            .filter(|s| s.trace_id == trace_id)
+            .collect()
+    }
+
+    /// Render the ring as Chrome trace-event JSON (the `chrome://tracing`
+    /// / Perfetto "JSON Array" flavour): one complete-event (`ph:"X"`)
+    /// per span, lanes mapped to tids.
+    pub fn render_chrome_json(&self) -> String {
+        let spans = self.snapshot();
+        let mut out = String::with_capacity(64 + spans.len() * 128);
+        out.push_str("{\"traceEvents\":[");
+        for (i, s) in spans.iter().enumerate() {
+            if i > 0 {
+                out.push(',');
+            }
+            out.push_str(&format!(
+                "{{\"name\":\"{}\",\"cat\":\"{}\",\"ph\":\"X\",\"ts\":{},\"dur\":{},\
+                 \"pid\":1,\"tid\":{},\"args\":{{\"trace_id\":\"{:016x}\",\"span_id\":\"{:016x}\"}}}}",
+                s.stage.name(),
+                escape_json(&s.cat),
+                s.start_us,
+                s.dur_us,
+                s.lane,
+                s.trace_id,
+                s.span_id,
+            ));
+        }
+        out.push_str("],\"displayTimeUnit\":\"ms\"}");
+        out
+    }
+}
+
+/// Minimal JSON string escaping for category names (tables are
+/// CLI-supplied and may contain anything).
+fn escape_json(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for ch in s.chars() {
+        match ch {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn trace_context_ids_are_distinct() {
+        let a = TraceContext::generate();
+        let b = TraceContext::generate();
+        assert_ne!(a.trace_id, b.trace_id);
+        assert_ne!(a.span_id, b.span_id);
+        let c = a.child();
+        assert_eq!(c.trace_id, a.trace_id);
+        assert_ne!(c.span_id, a.span_id);
+        assert!(a.sampled && c.sampled);
+    }
+
+    #[test]
+    fn recorder_roundtrips_spans_by_trace_id() {
+        let rec = recorder();
+        let ctx = TraceContext::generate();
+        let cat = rec.intern("trace_test_table");
+        let start = Instant::now();
+        rec.record_at(Some(ctx), Stage::Execute, cat, start, Duration::from_micros(120));
+        rec.record_at(Some(ctx), Stage::Gate, cat, start, Duration::from_micros(40));
+        let spans = rec.spans_for(ctx.trace_id);
+        assert_eq!(spans.len(), 2);
+        assert!(spans.iter().any(|s| s.stage == Stage::Execute && s.dur_us == 120));
+        assert!(spans.iter().any(|s| s.stage == Stage::Gate && s.dur_us == 40));
+        assert!(spans.iter().all(|s| s.cat == "trace_test_table"));
+    }
+
+    #[test]
+    fn intern_is_stable_and_reused() {
+        let rec = recorder();
+        let a = rec.intern("intern_test_a");
+        let b = rec.intern("intern_test_b");
+        assert_ne!(a, b);
+        assert_eq!(rec.intern("intern_test_a"), a);
+        assert_eq!(rec.resolve(a), "intern_test_a");
+    }
+
+    #[test]
+    fn chrome_json_renders_all_fields() {
+        let rec = recorder();
+        let ctx = TraceContext::generate();
+        let cat = rec.intern("json_test");
+        rec.record_at(Some(ctx), Stage::Flush, cat, Instant::now(), Duration::from_micros(7));
+        let json = rec.render_chrome_json();
+        assert!(json.starts_with("{\"traceEvents\":["));
+        assert!(json.ends_with("]}") || json.ends_with("\"}"), "{}", &json[json.len() - 16..]);
+        assert!(json.contains("\"name\":\"flush\""));
+        assert!(json.contains("\"cat\":\"json_test\""));
+        assert!(json.contains(&format!("{:016x}", ctx.trace_id)));
+        assert!(json.contains("\"ph\":\"X\""));
+    }
+
+    #[test]
+    fn ring_overwrites_oldest_per_lane() {
+        // Fill one thread's lane twice over: the snapshot keeps at most
+        // LANE_SLOTS spans for this lane and the newest survive.
+        let rec = recorder();
+        let ctx = TraceContext::generate();
+        let cat = rec.intern("wrap_test");
+        let start = Instant::now();
+        for i in 0..(LANE_SLOTS * 2) {
+            rec.record_at(
+                Some(TraceContext { span_id: i as u64 + 1, ..ctx }),
+                Stage::Execute,
+                cat,
+                start,
+                Duration::from_micros(1),
+            );
+        }
+        let spans = rec.spans_for(ctx.trace_id);
+        assert!(spans.len() <= LANE_SLOTS);
+        // The newest span id must have survived the wrap.
+        assert!(spans.iter().any(|s| s.span_id == (LANE_SLOTS * 2) as u64));
+    }
+
+    #[test]
+    fn req_spans_accumulates_and_finishes() {
+        let started = Instant::now();
+        let mut spans = ReqSpans::new(Some(TraceContext::generate()));
+        add_lock_wait(Duration::from_micros(50));
+        add_journal_wait(Duration::from_micros(30));
+        spans.op_attempt(Duration::from_micros(200));
+        assert_eq!(spans.lock, Duration::from_micros(50));
+        assert_eq!(spans.journal, Duration::from_micros(30));
+        assert_eq!(spans.execute, Duration::from_micros(120));
+        spans.parked();
+        std::thread::sleep(Duration::from_millis(2));
+        spans.resumed();
+        assert!(spans.gate >= Duration::from_millis(2));
+        let trace_id = spans.trace.unwrap().trace_id;
+        let out = spans.finish("finish_test", started);
+        assert_eq!(out.len(), 4);
+        let recorded = recorder().spans_for(trace_id);
+        assert!(recorded.iter().any(|s| s.stage == Stage::Gate));
+        assert!(recorded.iter().any(|s| s.stage == Stage::Execute));
+    }
+
+    #[test]
+    fn tls_accumulators_drain_once() {
+        let _ = take_lock_wait();
+        add_lock_wait(Duration::from_micros(9));
+        assert_eq!(take_lock_wait(), Duration::from_micros(9));
+        assert_eq!(take_lock_wait(), Duration::ZERO);
+    }
+
+    #[test]
+    fn knobs_clamp_and_roundtrip() {
+        let old = SLOW_REQUEST_MICROS.load(Ordering::Relaxed);
+        set_slow_request_micros(250_000);
+        assert_eq!(slow_request_threshold(), Duration::from_micros(250_000));
+        SLOW_REQUEST_MICROS.store(old, Ordering::Relaxed);
+        set_server_sample_per_mille(5000);
+        assert_eq!(server_sample_per_mille(), 1000);
+        set_server_sample_per_mille(0);
+    }
+
+    #[test]
+    fn client_sampling_rotor_honors_rate() {
+        set_client_sampling(1000);
+        assert!(should_sample_client());
+        set_client_sampling(0);
+        assert!(!should_sample_client());
+    }
+
+    #[test]
+    fn escape_json_handles_specials() {
+        assert_eq!(escape_json("a\"b\\c\n"), "a\\\"b\\\\c\\u000a");
+    }
+
+    #[test]
+    fn torn_or_unwritten_slots_are_skipped() {
+        // A slot left odd (writer "in progress") must not surface.
+        let rec = recorder();
+        let lane = &rec.lanes[0];
+        let idx = lane.head.fetch_add(1, Ordering::Relaxed) % LANE_SLOTS;
+        lane.slots[idx].seq.store(3, Ordering::Release);
+        lane.slots[idx].trace_id.store(0xDEAD_0001, Ordering::Relaxed);
+        assert!(rec.spans_for(0xDEAD_0001).is_empty());
+        // Finishing the write makes it visible.
+        lane.slots[idx]
+            .packed
+            .store(Stage::Execute as u8 as u64, Ordering::Relaxed);
+        lane.slots[idx].seq.store(4, Ordering::Release);
+        assert_eq!(rec.spans_for(0xDEAD_0001).len(), 1);
+    }
+}

@@ -21,6 +21,7 @@ use crate::core::selector::SelectorConfig;
 use crate::core::table::{TableConfig, TableInfo};
 use crate::error::{Error, Result};
 use crate::io::*;
+use crate::net::trace::TraceContext;
 use std::io::{Read, Write};
 use std::sync::Arc;
 
@@ -153,6 +154,12 @@ pub enum Message {
         /// Server-wide periodic-checkpoint interval; `table` is ignored
         /// for this field.
         checkpoint_interval_ms: Option<u64>,
+        /// Server-wide slow-request threshold (µs) for span promotion to
+        /// `log::warn!` (DESIGN.md §15); `table` is ignored.
+        slow_request_micros: Option<u64>,
+        /// Server-wide per-mille of untraced requests stamped with a
+        /// generated trace id; `table` is ignored.
+        trace_sample_per_mille: Option<u64>,
     },
     /// Subscribe to `TableInfo` deltas for one table (DESIGN.md §12). The
     /// server replies immediately with a `WatchUpdate` snapshot, then
@@ -172,11 +179,20 @@ pub enum Message {
         id: u64,
         items: Vec<WireItem>,
         timeout_ms: u64,
+        /// Optional span context (DESIGN.md §15), carried behind the
+        /// envelope's trace flag bit; `None` keeps the frame byte-identical
+        /// to pre-tracing v3.
+        trace: Option<TraceContext>,
     },
     /// Wire v3: N priority-mutation ops in one frame, one `BatchReply`.
     /// Each op is a `MutatePriorities` payload; keys inside one op are
     /// grouped per shard under one lock acquisition by the table.
-    PriorityUpdateBatch { id: u64, ops: Vec<PriorityUpdateOp> },
+    PriorityUpdateBatch {
+        id: u64,
+        ops: Vec<PriorityUpdateOp>,
+        /// Optional span context (see [`Message::CreateItemBatch`]).
+        trace: Option<TraceContext>,
+    },
     /// Lightweight liveness probe (replay fabric health checks, DESIGN.md
     /// §14). The server echoes `nonce` back in a [`Message::Pong`] without
     /// touching any table — a pure service-loop round-trip, so probe
@@ -207,7 +223,13 @@ pub enum Message {
     },
     /// Wire v3 reply to a batch frame: one [`BatchResult`] per op, in op
     /// order, under the batch's single request id.
-    BatchReply { id: u64, results: Vec<BatchResult> },
+    BatchReply {
+        id: u64,
+        results: Vec<BatchResult>,
+        /// The request's span context echoed back, so a pool fabric can
+        /// keep the trace attached across its positional reply merge.
+        trace: Option<TraceContext>,
+    },
     /// Reply to [`Message::Ping`], echoing its `nonce`.
     Pong { id: u64, nonce: u64 },
 }
@@ -289,14 +311,27 @@ pub const MAX_BATCH_OPS: usize = 4096;
 const ENVELOPE_MAGIC: [u8; 2] = *b"Rv";
 /// Wire version stamped into (and required from) the envelope.
 pub const WIRE_VERSION: u8 = 3;
+/// Envelope flag bit: a 17-byte trace-context extension
+/// (`[u64 trace_id][u64 span_id][u8 sampled]`) follows the flags byte.
+/// Frames without a trace keep the flags byte 0 and are byte-for-byte
+/// identical to pre-tracing v3 — an untagged peer never sees the bit.
+const FLAG_TRACE: u8 = 0x01;
 
-fn put_envelope<W: Write>(w: &mut W) -> Result<()> {
+fn put_envelope<W: Write>(w: &mut W, trace: Option<&TraceContext>) -> Result<()> {
     w.write_all(&ENVELOPE_MAGIC)?;
     put_u8(w, WIRE_VERSION)?;
-    put_u8(w, 0) // flags, reserved
+    match trace {
+        None => put_u8(w, 0), // flags, reserved
+        Some(t) => {
+            put_u8(w, FLAG_TRACE)?;
+            put_u64(w, t.trace_id)?;
+            put_u64(w, t.span_id)?;
+            put_u8(w, t.sampled as u8)
+        }
+    }
 }
 
-fn check_envelope<R: Read>(r: &mut R) -> Result<()> {
+fn check_envelope<R: Read>(r: &mut R) -> Result<Option<TraceContext>> {
     let mut magic = [0u8; 2];
     r.read_exact(&mut magic)?;
     if magic != ENVELOPE_MAGIC {
@@ -311,10 +346,24 @@ fn check_envelope<R: Read>(r: &mut R) -> Result<()> {
         )));
     }
     let flags = get_u8(r)?;
-    if flags != 0 {
+    if flags & !FLAG_TRACE != 0 {
         return Err(Error::Decode(format!("unknown envelope flags {flags:#x}")));
     }
-    Ok(())
+    if flags & FLAG_TRACE == 0 {
+        return Ok(None);
+    }
+    let trace_id = get_u64(r)?;
+    let span_id = get_u64(r)?;
+    let sampled = match get_u8(r)? {
+        0 => false,
+        1 => true,
+        f => return Err(Error::Decode(format!("bad trace sampled flag {f}"))),
+    };
+    Ok(Some(TraceContext {
+        trace_id,
+        span_id,
+        sampled,
+    }))
 }
 
 /// Optional-field layout shared by the admin frames: `[u8 present][value]`.
@@ -514,6 +563,8 @@ impl Message {
                 min_diff,
                 max_diff,
                 checkpoint_interval_ms,
+                slow_request_micros,
+                trace_sample_per_mille,
             } => {
                 put_u64(&mut b, *id)?;
                 put_string(&mut b, table)?;
@@ -521,6 +572,8 @@ impl Message {
                 put_opt_f64(&mut b, *min_diff)?;
                 put_opt_f64(&mut b, *max_diff)?;
                 put_opt_u64(&mut b, *checkpoint_interval_ms)?;
+                put_opt_u64(&mut b, *slow_request_micros)?;
+                put_opt_u64(&mut b, *trace_sample_per_mille)?;
                 TAG_ADMIN_RECONFIG
             }
             Message::WatchRequest { id, table } => {
@@ -532,8 +585,13 @@ impl Message {
                 put_u64(&mut b, *id)?;
                 TAG_WATCH_CANCEL
             }
-            Message::CreateItemBatch { id, items, timeout_ms } => {
-                put_envelope(&mut b)?;
+            Message::CreateItemBatch {
+                id,
+                items,
+                timeout_ms,
+                trace,
+            } => {
+                put_envelope(&mut b, trace.as_ref())?;
                 put_u64(&mut b, *id)?;
                 put_u32(&mut b, items.len() as u32)?;
                 for item in items {
@@ -544,8 +602,8 @@ impl Message {
                 put_u64(&mut b, *timeout_ms)?;
                 TAG_CREATE_ITEM_BATCH
             }
-            Message::PriorityUpdateBatch { id, ops } => {
-                put_envelope(&mut b)?;
+            Message::PriorityUpdateBatch { id, ops, trace } => {
+                put_envelope(&mut b, trace.as_ref())?;
                 put_u64(&mut b, *id)?;
                 put_u32(&mut b, ops.len() as u32)?;
                 for op in ops {
@@ -572,8 +630,8 @@ impl Message {
                 put_u64(&mut b, *nonce)?;
                 TAG_PONG
             }
-            Message::BatchReply { id, results } => {
-                put_envelope(&mut b)?;
+            Message::BatchReply { id, results, trace } => {
+                put_envelope(&mut b, trace.as_ref())?;
                 put_u64(&mut b, *id)?;
                 put_u32(&mut b, results.len() as u32)?;
                 for res in results {
@@ -711,6 +769,8 @@ impl Message {
                 min_diff: get_opt_f64(&mut r)?,
                 max_diff: get_opt_f64(&mut r)?,
                 checkpoint_interval_ms: get_opt_u64(&mut r)?,
+                slow_request_micros: get_opt_u64(&mut r)?,
+                trace_sample_per_mille: get_opt_u64(&mut r)?,
             },
             TAG_WATCH_REQUEST => Message::WatchRequest {
                 id: get_u64(&mut r)?,
@@ -718,7 +778,7 @@ impl Message {
             },
             TAG_WATCH_CANCEL => Message::WatchCancel { id: get_u64(&mut r)? },
             TAG_CREATE_ITEM_BATCH => {
-                check_envelope(&mut r)?;
+                let trace = check_envelope(&mut r)?;
                 let id = get_u64(&mut r)?;
                 let n = get_u32(&mut r)? as usize;
                 if n > 1 << 20 {
@@ -729,10 +789,11 @@ impl Message {
                     id,
                     items,
                     timeout_ms: get_u64(&mut r)?,
+                    trace,
                 }
             }
             TAG_PRIORITY_UPDATE_BATCH => {
-                check_envelope(&mut r)?;
+                let trace = check_envelope(&mut r)?;
                 let id = get_u64(&mut r)?;
                 let n = get_u32(&mut r)? as usize;
                 if n > 1 << 20 {
@@ -760,7 +821,7 @@ impl Message {
                         })
                     })
                     .collect::<Result<_>>()?;
-                Message::PriorityUpdateBatch { id, ops }
+                Message::PriorityUpdateBatch { id, ops, trace }
             }
             TAG_PING => Message::Ping {
                 id: get_u64(&mut r)?,
@@ -771,7 +832,7 @@ impl Message {
                 nonce: get_u64(&mut r)?,
             },
             TAG_BATCH_REPLY => {
-                check_envelope(&mut r)?;
+                let trace = check_envelope(&mut r)?;
                 let id = get_u64(&mut r)?;
                 let n = get_u32(&mut r)? as usize;
                 if n > 1 << 20 {
@@ -787,7 +848,7 @@ impl Message {
                         f => Err(Error::Decode(format!("bad batch result flag {f}"))),
                     })
                     .collect::<Result<_>>()?;
-                Message::BatchReply { id, results }
+                Message::BatchReply { id, results, trace }
             }
             TAG_ACK => Message::Ack {
                 id: get_u64(&mut r)?,
@@ -1238,6 +1299,8 @@ mod tests {
             min_diff: Some(-8.0),
             max_diff: Some(8.0),
             checkpoint_interval_ms: Some(30_000),
+            slow_request_micros: Some(250_000),
+            trace_sample_per_mille: Some(10),
         };
         match roundtrip(&full) {
             Message::AdminReconfig {
@@ -1247,6 +1310,8 @@ mod tests {
                 min_diff,
                 max_diff,
                 checkpoint_interval_ms,
+                slow_request_micros,
+                trace_sample_per_mille,
             } => {
                 assert_eq!(id, 11);
                 assert_eq!(table, "t");
@@ -1254,6 +1319,8 @@ mod tests {
                 assert_eq!(min_diff, Some(-8.0));
                 assert_eq!(max_diff, Some(8.0));
                 assert_eq!(checkpoint_interval_ms, Some(30_000));
+                assert_eq!(slow_request_micros, Some(250_000));
+                assert_eq!(trace_sample_per_mille, Some(10));
             }
             other => panic!("wrong message {other:?}"),
         }
@@ -1265,6 +1332,8 @@ mod tests {
             min_diff: None,
             max_diff: None,
             checkpoint_interval_ms: None,
+            slow_request_micros: None,
+            trace_sample_per_mille: None,
         };
         assert!(matches!(
             roundtrip(&sparse),
@@ -1273,6 +1342,8 @@ mod tests {
                 min_diff: None,
                 max_diff: None,
                 checkpoint_interval_ms: None,
+                slow_request_micros: None,
+                trace_sample_per_mille: None,
                 ..
             }
         ));
@@ -1338,6 +1409,7 @@ mod tests {
                     updates: vec![(1, 2.0)],
                     deletes: vec![],
                 }],
+                trace: None,
             },
         ] {
             let mut streamed = Vec::new();
@@ -1587,14 +1659,21 @@ mod tests {
             id: 21,
             items: vec![flat_item(1), trajectory_item(), flat_item(3)],
             timeout_ms: 750,
+            trace: None,
         };
         match roundtrip(&msg) {
-            Message::CreateItemBatch { id, items, timeout_ms } => {
+            Message::CreateItemBatch {
+                id,
+                items,
+                timeout_ms,
+                trace,
+            } => {
                 assert_eq!(id, 21);
                 assert_eq!(items.len(), 3);
                 assert_eq!(items[0], flat_item(1));
                 assert_eq!(items[1], trajectory_item());
                 assert_eq!(timeout_ms, 750);
+                assert_eq!(trace, None);
             }
             other => panic!("wrong message {other:?}"),
         }
@@ -1616,9 +1695,10 @@ mod tests {
                     deletes: vec![],
                 },
             ],
+            trace: None,
         };
         match roundtrip(&msg) {
-            Message::PriorityUpdateBatch { id, ops } => {
+            Message::PriorityUpdateBatch { id, ops, .. } => {
                 assert_eq!(id, 8);
                 assert_eq!(ops.len(), 2);
                 assert_eq!(ops[0].updates, vec![(1, 0.5), (2, 2.0)]);
@@ -1640,9 +1720,10 @@ mod tests {
                     message: "table missing".into(),
                 },
             ],
+            trace: None,
         };
         match roundtrip(&msg) {
-            Message::BatchReply { id, results } => {
+            Message::BatchReply { id, results, .. } => {
                 assert_eq!(id, 4);
                 assert_eq!(results[0].clone().into_result().unwrap(), "inserted");
                 let err = results[1].clone().into_result().unwrap_err();
@@ -1654,9 +1735,13 @@ mod tests {
 
     #[test]
     fn v3_envelope_rejects_wrong_version_and_magic() {
-        let (tag, body) = Message::PriorityUpdateBatch { id: 1, ops: vec![] }
-            .encode_body()
-            .unwrap();
+        let (tag, body) = Message::PriorityUpdateBatch {
+            id: 1,
+            ops: vec![],
+            trace: None,
+        }
+        .encode_body()
+        .unwrap();
         assert_eq!(&body[..2], &ENVELOPE_MAGIC);
         assert_eq!(body[2], WIRE_VERSION);
         // A future version must fail with an explicit version message, not
@@ -1683,6 +1768,11 @@ mod tests {
             id: 2,
             items: vec![flat_item(1), trajectory_item()],
             timeout_ms: 100,
+            trace: Some(TraceContext {
+                trace_id: 0xAAAA_BBBB,
+                span_id: 0xCCCC_DDDD,
+                sampled: true,
+            }),
         };
         let mut full = Vec::new();
         msg.write_frame(&mut full).unwrap();
@@ -1701,20 +1791,113 @@ mod tests {
     fn v3_decode_caps_reject_corrupt_counts() {
         // A corrupt op count past the decode cap errors without allocating.
         let mut body = Vec::new();
-        put_envelope(&mut body).unwrap();
+        put_envelope(&mut body, None).unwrap();
         put_u64(&mut body, 1).unwrap();
         put_u32(&mut body, (1 << 20) + 1).unwrap();
         assert!(Message::decode_body(TAG_PRIORITY_UPDATE_BATCH, &body).is_err());
         let mut items = Vec::new();
-        put_envelope(&mut items).unwrap();
+        put_envelope(&mut items, None).unwrap();
         put_u64(&mut items, 1).unwrap();
         put_u32(&mut items, (1 << 20) + 1).unwrap();
         assert!(Message::decode_body(TAG_CREATE_ITEM_BATCH, &items).is_err());
         let mut results = Vec::new();
-        put_envelope(&mut results).unwrap();
+        put_envelope(&mut results, None).unwrap();
         put_u64(&mut results, 1).unwrap();
         put_u32(&mut results, (1 << 20) + 1).unwrap();
         assert!(Message::decode_body(TAG_BATCH_REPLY, &results).is_err());
+    }
+
+    #[test]
+    fn trace_context_rides_the_envelope_flag_bit() {
+        let ctx = TraceContext {
+            trace_id: 0x0123_4567_89AB_CDEF,
+            span_id: 0xFEDC_BA98_7654_3210,
+            sampled: true,
+        };
+        for msg in [
+            Message::CreateItemBatch {
+                id: 1,
+                items: vec![flat_item(1)],
+                timeout_ms: 50,
+                trace: Some(ctx),
+            },
+            Message::PriorityUpdateBatch {
+                id: 2,
+                ops: vec![],
+                trace: Some(ctx),
+            },
+            Message::BatchReply {
+                id: 3,
+                results: vec![BatchResult::Ok { detail: "ok".into() }],
+                trace: Some(ctx),
+            },
+        ] {
+            let (_, body) = msg.encode_body().unwrap();
+            assert_eq!(body[3], FLAG_TRACE, "flag bit set when trace present");
+            let decoded = roundtrip(&msg);
+            let got = match decoded {
+                Message::CreateItemBatch { trace, .. }
+                | Message::PriorityUpdateBatch { trace, .. }
+                | Message::BatchReply { trace, .. } => trace,
+                other => panic!("wrong message {other:?}"),
+            };
+            assert_eq!(got, Some(ctx));
+        }
+        // sampled=false round-trips too.
+        let unsampled = Message::BatchReply {
+            id: 4,
+            results: vec![],
+            trace: Some(TraceContext { sampled: false, ..ctx }),
+        };
+        assert!(matches!(
+            roundtrip(&unsampled),
+            Message::BatchReply { trace: Some(TraceContext { sampled: false, .. }), .. }
+        ));
+    }
+
+    #[test]
+    fn untraced_batch_frames_are_byte_identical_to_pre_trace_v3() {
+        // trace=None keeps the flags byte 0 and adds no bytes: the frame an
+        // untagged/pre-tracing peer sees is exactly the old layout —
+        // envelope, id, count, payload — with nothing in between.
+        let msg = Message::CreateItemBatch {
+            id: 0x1122_3344_5566_7788,
+            items: vec![],
+            timeout_ms: 9,
+            trace: None,
+        };
+        let (_, body) = msg.encode_body().unwrap();
+        let mut expected = Vec::new();
+        expected.extend_from_slice(&ENVELOPE_MAGIC);
+        put_u8(&mut expected, WIRE_VERSION).unwrap();
+        put_u8(&mut expected, 0).unwrap();
+        put_u64(&mut expected, 0x1122_3344_5566_7788).unwrap();
+        put_u32(&mut expected, 0).unwrap();
+        put_u64(&mut expected, 9).unwrap();
+        assert_eq!(body, expected);
+    }
+
+    #[test]
+    fn corrupt_trace_extension_rejected() {
+        // Truncated trace payload after the flag bit.
+        let mut body = Vec::new();
+        body.extend_from_slice(&ENVELOPE_MAGIC);
+        put_u8(&mut body, WIRE_VERSION).unwrap();
+        put_u8(&mut body, FLAG_TRACE).unwrap();
+        put_u64(&mut body, 1).unwrap(); // trace_id only, then EOF
+        assert!(Message::decode_body(TAG_BATCH_REPLY, &body).is_err());
+        // Bad sampled byte (2) is rejected, not coerced.
+        let mut bad = Vec::new();
+        bad.extend_from_slice(&ENVELOPE_MAGIC);
+        put_u8(&mut bad, WIRE_VERSION).unwrap();
+        put_u8(&mut bad, FLAG_TRACE).unwrap();
+        put_u64(&mut bad, 1).unwrap();
+        put_u64(&mut bad, 2).unwrap();
+        put_u8(&mut bad, 2).unwrap();
+        put_u64(&mut bad, 3).unwrap(); // id
+        put_u32(&mut bad, 0).unwrap(); // count
+        let err = Message::decode_body(TAG_BATCH_REPLY, &bad).unwrap_err();
+        assert!(err.to_string().contains("bad trace sampled flag"), "{err}");
     }
 
     /// A reader that yields its script one slice at a time, interleaving

@@ -1,0 +1,125 @@
+//! Doc-coverage gate for the metrics catalogue: render a live scrape of
+//! both export surfaces (server `/metrics` and the client-side fabric
+//! gauges) and fail if any exported family is missing from
+//! `docs/METRICS.md` — the catalogue cannot silently rot as families are
+//! added.
+
+mod common;
+
+use common::write_items;
+use reverb::core::table::TableConfig;
+use reverb::net::server::Server;
+use reverb::{Client, Fabric, FabricOptions};
+use std::io::{Read, Write};
+
+/// One blocking HTTP GET against `addr`, returning the response body.
+fn http_get(addr: &str, path: &str) -> String {
+    let mut sock = std::net::TcpStream::connect(addr).unwrap();
+    sock.write_all(
+        format!("GET {path} HTTP/1.1\r\nHost: reverb\r\nConnection: close\r\n\r\n").as_bytes(),
+    )
+    .unwrap();
+    let mut raw = Vec::new();
+    sock.read_to_end(&mut raw).unwrap();
+    let text = String::from_utf8_lossy(&raw).into_owned();
+    let (head, body) = text.split_once("\r\n\r\n").expect("http response head");
+    assert!(head.starts_with("HTTP/1.1 200"), "scrape failed: {head}");
+    body.to_string()
+}
+
+/// Family names out of `# TYPE <name> <kind>` exposition lines.
+fn families(exposition: &str) -> Vec<String> {
+    exposition
+        .lines()
+        .filter_map(|l| l.strip_prefix("# TYPE "))
+        .filter_map(|l| l.split_whitespace().next())
+        .map(str::to_string)
+        .collect()
+}
+
+#[test]
+fn every_exported_family_is_documented() {
+    let doc = std::fs::read_to_string(concat!(
+        env!("CARGO_MANIFEST_DIR"),
+        "/../docs/METRICS.md"
+    ))
+    .expect("docs/METRICS.md");
+
+    // Server surface: event model (the superset — worker/connection
+    // families only exist there), with traffic so histograms are live.
+    let server = Server::builder()
+        .table(TableConfig::uniform_replay("t", 100))
+        .metrics_addr("127.0.0.1:0")
+        .bind("127.0.0.1:0")
+        .unwrap();
+    let client = Client::connect(format!("tcp://{}", server.local_addr())).unwrap();
+    write_items(&client, "t", 4, |_| 1.0);
+    let scrape = http_get(&server.metrics_addr().unwrap().to_string(), "/metrics");
+    let server_families = families(&scrape);
+    // The scrape must actually carry this PR's new families — otherwise
+    // the coverage check below would pass vacuously.
+    for expected in [
+        "reverb_stage_duration_seconds",
+        "reverb_table_sampled_to_inserted_ratio",
+        "reverb_table_item_age_steps",
+    ] {
+        assert!(
+            server_families.iter().any(|f| f == expected),
+            "scrape lost {expected}: {server_families:?}"
+        );
+    }
+
+    // Fabric surface: a one-member pool over the same server.
+    let fabric = Fabric::connect(
+        &[format!("tcp://{}", server.local_addr())],
+        FabricOptions::default(),
+    )
+    .unwrap();
+    let fabric_families = families(&fabric.metrics_text());
+    assert!(
+        fabric_families.iter().any(|f| f == "reverb_fabric_member_up"),
+        "fabric gauges missing: {fabric_families:?}"
+    );
+
+    let mut missing = Vec::new();
+    for family in server_families.iter().chain(&fabric_families) {
+        if !doc.contains(family.as_str()) {
+            missing.push(family.clone());
+        }
+    }
+    assert!(
+        missing.is_empty(),
+        "families exported but not documented in docs/METRICS.md: {missing:?}"
+    );
+}
+
+#[test]
+fn fabric_scrape_listener_serves_metrics_text() {
+    // Satellite: the fabric gauges ride the same HTTP scrape machinery
+    // as the server exporter, bound client-side.
+    let server = Server::builder()
+        .table(TableConfig::uniform_replay("t", 100))
+        .bind("127.0.0.1:0")
+        .unwrap();
+    let fabric = Fabric::connect(
+        &[format!("tcp://{}", server.local_addr())],
+        FabricOptions::default(),
+    )
+    .unwrap();
+    let bound = fabric.serve_metrics("127.0.0.1:0").unwrap();
+    let body = http_get(&bound.to_string(), "/metrics");
+    assert!(
+        body.contains("reverb_fabric_member_up"),
+        "fabric scrape missing member gauges: {body}"
+    );
+    // Unknown paths draw a 404, not a hang or a member-gauge dump.
+    let mut sock = std::net::TcpStream::connect(bound).unwrap();
+    sock.write_all(b"GET /nope HTTP/1.1\r\nHost: x\r\nConnection: close\r\n\r\n")
+        .unwrap();
+    let mut raw = Vec::new();
+    sock.read_to_end(&mut raw).unwrap();
+    assert!(
+        String::from_utf8_lossy(&raw).starts_with("HTTP/1.1 404"),
+        "expected 404 for unknown path"
+    );
+}

@@ -1,0 +1,212 @@
+//! Trace-propagation conformance (DESIGN.md §15): a client-stamped trace
+//! context must survive the round trip on every transport backend — the
+//! server records its stage spans under the caller's trace id and echoes
+//! the context on the reply — while untagged peers see byte-identical v2
+//! traffic (the codec-level guarantee lives in `net::wire`; here we pin
+//! the behavioural half: untraced requests draw untraced replies).
+
+mod common;
+
+use common::{endpoints, step, write_items};
+use reverb::core::table::TableConfig;
+use reverb::net::server::{Server, ServerBuilder};
+use reverb::net::trace::{recorder, Stage, TraceContext};
+use reverb::net::wire;
+use reverb::{Client, SamplerOptions};
+use std::time::Duration;
+
+/// Run `scenario` against every transport backend (see `common::endpoints`).
+fn for_each_transport(
+    build: impl Fn() -> ServerBuilder,
+    scenario: impl Fn(&Server, String, &'static str),
+) {
+    for (server, addr, label) in endpoints(build) {
+        scenario(&server, addr, label);
+    }
+}
+
+/// One single-step chunk + a wire item referencing it.
+fn raw_item(key: u64, table: &str) -> (wire::Message, wire::WireItem) {
+    use reverb::{Chunk, Compression};
+    let steps = vec![step(key as f32)];
+    let chunk = Chunk::from_steps(key, 0, &steps, Compression::None).unwrap();
+    let item = wire::WireItem {
+        key: key << 20, // distinct from chunk-key space
+        table: table.into(),
+        priority: 1.0,
+        chunk_keys: vec![key],
+        offset: 0,
+        length: 1,
+        times_sampled: 0,
+        columns: None,
+    };
+    (
+        wire::Message::InsertChunks {
+            chunks: vec![std::sync::Arc::new(chunk)],
+        },
+        item,
+    )
+}
+
+#[test]
+fn traced_batch_roundtrips_span_context_on_every_transport() {
+    // A `CreateItemBatch` stamped with a trace context: the reply echoes
+    // the exact context (same trace id, same span id — the server never
+    // re-stamps a client trace), and the process-global flight recorder
+    // holds server-side stage spans under that trace id.
+    for_each_transport(
+        || Server::builder().table(TableConfig::uniform_replay("t", 100)),
+        |server, addr, label| {
+            let client = Client::connect(addr).unwrap();
+            let pipe = client.pipeline(4).unwrap();
+            let ctx = TraceContext::generate();
+            let mut items = Vec::new();
+            for key in [101u64, 102, 103] {
+                let (chunks, item) = raw_item(key, "t");
+                pipe.send_unacked(chunks).unwrap();
+                items.push(item);
+            }
+            let c = pipe
+                .submit(|id| wire::Message::CreateItemBatch {
+                    id,
+                    items,
+                    timeout_ms: 5_000,
+                    trace: Some(ctx),
+                })
+                .unwrap();
+            match c.wait().unwrap() {
+                wire::Message::BatchReply { results, trace, .. } => {
+                    assert_eq!(results.len(), 3, "{label}");
+                    let echoed = trace.unwrap_or_else(|| panic!("{label}: reply lost the trace"));
+                    assert_eq!(echoed.trace_id, ctx.trace_id, "{label}");
+                    assert_eq!(echoed.span_id, ctx.span_id, "{label}");
+                    assert!(echoed.sampled, "{label}");
+                }
+                other => panic!("{label}: unexpected reply {other:?}"),
+            }
+            assert_eq!(server.table("t").unwrap().size(), 3, "{label}");
+            // Server stage spans landed under the caller's trace id, and
+            // the execute span is attributed to the batch's table.
+            let spans = recorder().spans_for(ctx.trace_id);
+            assert!(
+                spans.iter().any(|s| s.stage == Stage::Execute && s.cat == "t"),
+                "{label}: no execute span for trace {:016x}: {spans:?}",
+                ctx.trace_id
+            );
+        },
+    );
+}
+
+#[test]
+fn untraced_batch_draws_untraced_reply() {
+    // The behavioural half of the v2-compat guarantee: a peer that never
+    // stamps a trace never receives one, on every backend — replies stay
+    // byte-identical to the pre-trace wire (codec bytes pinned in
+    // `net::wire::tests`).
+    for_each_transport(
+        || Server::builder().table(TableConfig::uniform_replay("t", 100)),
+        |_server, addr, label| {
+            let client = Client::connect(addr).unwrap();
+            let pipe = client.pipeline(4).unwrap();
+            let (chunks, item) = raw_item(201, "t");
+            pipe.send_unacked(chunks).unwrap();
+            let c = pipe
+                .submit(|id| wire::Message::CreateItemBatch {
+                    id,
+                    items: vec![item],
+                    timeout_ms: 5_000,
+                    trace: None,
+                })
+                .unwrap();
+            match c.wait().unwrap() {
+                wire::Message::BatchReply { trace, .. } => {
+                    assert!(trace.is_none(), "{label}: unsolicited trace on reply");
+                }
+                other => panic!("{label}: unexpected reply {other:?}"),
+            }
+        },
+    );
+}
+
+#[test]
+fn corridor_park_attributes_parked_time_to_gate_stage() {
+    // A traced batch into a full queue parks mid-batch until a sampler
+    // drains capacity; the wall-clock spent parked must show up as `gate`
+    // time in the span chain — not inflate `execute`.
+    for_each_transport(
+        || Server::builder().table(TableConfig::queue("q", 2)),
+        |server, addr, label| {
+            let client = Client::connect(addr.clone()).unwrap();
+            write_items(&client, "q", 2, |_| 1.0); // queue now full
+            let drainer = {
+                let addr = addr.clone();
+                std::thread::spawn(move || {
+                    let client = Client::connect(addr).unwrap();
+                    let mut s = client
+                        .sampler(
+                            SamplerOptions::new("q")
+                                .with_workers(1)
+                                .with_max_in_flight(1)
+                                .with_timeout_ms(2_000),
+                        )
+                        .unwrap();
+                    loop {
+                        std::thread::sleep(Duration::from_millis(50));
+                        match s.next_sample() {
+                            Ok(_) => {}
+                            Err(e) if e.is_timeout() => break,
+                            Err(e) => panic!("drainer: {e}"),
+                        }
+                    }
+                })
+            };
+            let pipe = client.pipeline(4).unwrap();
+            let ctx = TraceContext::generate();
+            let mut items = Vec::new();
+            for key in [211u64, 212, 213] {
+                let (chunks, item) = raw_item(key, "q");
+                pipe.send_unacked(chunks).unwrap();
+                items.push(item);
+            }
+            let c = pipe
+                .submit(|id| wire::Message::CreateItemBatch {
+                    id,
+                    items,
+                    timeout_ms: 20_000,
+                    trace: Some(ctx),
+                })
+                .unwrap();
+            let results = c.expect_batch().unwrap();
+            assert_eq!(results.len(), 3, "{label}");
+            for (i, r) in results.iter().enumerate() {
+                assert!(
+                    matches!(r, wire::BatchResult::Ok { .. }),
+                    "{label}: op {i} after park/resume: {r:?}"
+                );
+            }
+            drainer.join().unwrap();
+            let spans = recorder().spans_for(ctx.trace_id);
+            let gate_us: u64 = spans
+                .iter()
+                .filter(|s| s.stage == Stage::Gate)
+                .map(|s| s.dur_us)
+                .sum();
+            let execute_us: u64 = spans
+                .iter()
+                .filter(|s| s.stage == Stage::Execute)
+                .map(|s| s.dur_us)
+                .sum();
+            // The batch was parked for at least one 50ms drain tick; that
+            // time must be attributed to the gate stage, and the execute
+            // stage must not have absorbed it.
+            assert!(
+                gate_us >= 10_000,
+                "{label}: parked time missing from gate stage: {spans:?}"
+            );
+            assert!(
+                execute_us < gate_us,
+                "{label}: execute ({execute_us}us) absorbed parked time (gate {gate_us}us)"
+            );
+        },
+    );
+}

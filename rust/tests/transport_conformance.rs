@@ -605,6 +605,7 @@ fn pipelined_acks_interleave_across_request_kinds() {
                     id,
                     items: vec![item],
                     timeout_ms: 5_000,
+                    trace: None,
                 })
                 .unwrap();
             // Newest first.
@@ -647,6 +648,7 @@ fn batched_create_reports_per_op_and_keeps_connection() {
                     id,
                     items,
                     timeout_ms: 5_000,
+                    trace: None,
                 })
                 .unwrap();
             let results = c.expect_batch().unwrap();
@@ -715,6 +717,7 @@ fn mid_batch_corridor_park_resumes_where_it_blocked() {
                     id,
                     items,
                     timeout_ms: 20_000,
+                    trace: None,
                 })
                 .unwrap();
             let results = c.expect_batch().unwrap();
@@ -789,7 +792,7 @@ fn oversized_batch_rejected_per_frame_connection_usable() {
                 wire::MAX_BATCH_OPS + 1
             ];
             let c = pipe
-                .submit(|id| wire::Message::PriorityUpdateBatch { id, ops })
+                .submit(|id| wire::Message::PriorityUpdateBatch { id, ops, trace: None })
                 .unwrap();
             let err = c.wait().unwrap_err();
             assert!(matches!(err, Error::InvalidArgument(_)), "{label}: {err}");

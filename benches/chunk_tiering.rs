@@ -1,0 +1,212 @@
+//! Hot-budget sweep for the two-tier ChunkStore: sample latency and
+//! resident memory as the hot budget shrinks from "all of it" to 10% of
+//! the inserted bytes.
+//!
+//! Each measured op is one table sample plus resolving every chunk the
+//! sampled item references — the exact server-side work `sampled_to_wire`
+//! does before a reply leaves, so the hot/cold comparison captures what a
+//! client actually feels. The acceptance shape: at a 10% hot budget the
+//! round-trip stays byte-identical, cold p99 stays within a small factor
+//! of hot p50 (page-cache read + CRC + decode, not a disk seek), and RSS
+//! tracks the hot budget instead of the full data set.
+//!
+//! Run: `cargo bench --bench chunk_tiering`
+//! (REVERB_BENCH_FAST=1 for the CI quick pass; emits BENCH_tiering.json.)
+
+use reverb::core::table::TableConfig;
+use reverb::net::server::Server;
+use reverb::util::bench::{fast_mode, print_row, random_step};
+use reverb::util::rng::Pcg32;
+use reverb::util::stats::{json_f64_prec, Samples};
+use reverb::{Client, Compression, WriterOptions};
+use std::collections::HashMap;
+use std::time::Instant;
+
+/// Resident set size in bytes from `/proc/self/status` (0 off-linux).
+fn rss_bytes() -> u64 {
+    let status = std::fs::read_to_string("/proc/self/status").unwrap_or_default();
+    for line in status.lines() {
+        if let Some(rest) = line.strip_prefix("VmRSS:") {
+            let kb: u64 = rest
+                .trim()
+                .trim_end_matches("kB")
+                .trim()
+                .parse()
+                .unwrap_or(0);
+            return kb * 1024;
+        }
+    }
+    0
+}
+
+struct Row {
+    hot_pct: u64,
+    p50_us: f64,
+    p99_us: f64,
+    demotions: u64,
+    rehydrations: u64,
+    cold_bytes: u64,
+    rss_delta_mb: f64,
+    byte_identical: bool,
+}
+
+fn main() {
+    let fast = fast_mode();
+    let floats = 16_384; // 64 kB per item, incompressible
+    let n_items = if fast { 64 } else { 512 };
+    let samples = if fast { 2_000 } else { 20_000 };
+    let total_bytes = (n_items * floats * 4) as u64;
+    let dir = std::env::temp_dir().join(format!("rvb_bench_tier_{}", std::process::id()));
+    let rss_base = rss_bytes();
+
+    println!(
+        "# Chunk tiering: table sample + chunk resolve vs hot budget, {n_items} x 64 kB items \
+         ({} MB inserted), {samples} samples",
+        total_bytes / (1024 * 1024)
+    );
+    println!("| hot budget | p50 (us) | p99 (us) | demotions | rehydrations | cold MB | RSS delta MB |");
+    println!("|---|---|---|---|---|---|---|");
+
+    let mut rng = Pcg32::new(0x5eed, 17);
+    let mut rows: Vec<Row> = Vec::new();
+    for &hot_pct in &[100u64, 50, 10] {
+        // 100% gets headroom so nothing ever demotes (the hot baseline).
+        let hot_bytes = if hot_pct == 100 {
+            total_bytes * 2
+        } else {
+            total_bytes * hot_pct / 100
+        };
+        let d = dir.join(hot_pct.to_string());
+        std::fs::create_dir_all(&d).unwrap();
+        let server = Server::builder()
+            .table(TableConfig::uniform_replay("t", n_items * 2))
+            .chunk_hot_bytes(hot_bytes)
+            .chunk_cold_dir(&d)
+            .serve_in_proc()
+            .unwrap();
+        let client = Client::connect(server.in_proc_addr()).unwrap();
+        let mut w = client
+            .writer(WriterOptions::default().with_compression(Compression::None))
+            .unwrap();
+        for _ in 0..n_items {
+            w.append(random_step(floats, &mut rng)).unwrap();
+            w.create_item("t", 1, 1.0).unwrap();
+        }
+        w.flush().unwrap();
+
+        // Capture probe chunks' encoded bytes while hot, then demote.
+        let table = server.table("t").unwrap();
+        let (items, _, _) = table.snapshot();
+        let mut probes: HashMap<u64, Vec<u8>> = HashMap::new();
+        for item in items.iter().step_by((n_items / 8).max(1)) {
+            for h in &item.chunks {
+                let chunk = h.resolve().unwrap();
+                let mut buf = Vec::new();
+                chunk.encode(&mut buf).unwrap();
+                probes.insert(chunk.key, buf);
+            }
+        }
+        server.chunk_store().run_maintenance();
+
+        let mut lat = Samples::new();
+        for r in 0..samples {
+            // Periodic re-demotion keeps the budget enforced while
+            // rehydrations churn chunks back in.
+            if r % 256 == 0 {
+                server.chunk_store().run_maintenance();
+            }
+            let t0 = Instant::now();
+            let s = table.sample(None).unwrap();
+            for h in &s.item.chunks {
+                std::hint::black_box(h.resolve().unwrap());
+            }
+            lat.add(t0.elapsed().as_secs_f64() * 1e6);
+        }
+        server.chunk_store().run_maintenance();
+
+        // Byte-identity through however many demote/rehydrate cycles the
+        // probes went through.
+        let byte_identical = probes.iter().all(|(key, want)| {
+            let mut got = Vec::new();
+            let chunk = server.chunk_store().get(*key).unwrap().resolve().unwrap();
+            chunk.encode(&mut got).unwrap();
+            got == *want
+        });
+
+        let stats = server.chunk_store().stats();
+        let rss_delta_mb =
+            rss_bytes().saturating_sub(rss_base) as f64 / (1024.0 * 1024.0);
+        let row = Row {
+            hot_pct,
+            p50_us: lat.percentile(50.0),
+            p99_us: lat.percentile(99.0),
+            demotions: stats.demotions,
+            rehydrations: stats.rehydrations,
+            cold_bytes: stats.cold_bytes,
+            rss_delta_mb,
+            byte_identical,
+        };
+        print_row(&[
+            format!("{hot_pct}%"),
+            format!("{:.1}", row.p50_us),
+            format!("{:.1}", row.p99_us),
+            row.demotions.to_string(),
+            row.rehydrations.to_string(),
+            format!("{:.1}", row.cold_bytes as f64 / (1024.0 * 1024.0)),
+            format!("{:.0}", rss_delta_mb),
+        ]);
+        rows.push(row);
+        drop(client);
+        drop(server);
+    }
+    std::fs::remove_dir_all(&dir).ok();
+
+    let results: Vec<String> = rows
+        .iter()
+        .map(|r| {
+            format!(
+                "    {{\"hot_pct\": {}, \"sample_p50_us\": {}, \"sample_p99_us\": {}, \
+                 \"demotions\": {}, \"rehydrations\": {}, \"cold_bytes\": {}, \
+                 \"rss_delta_mb\": {}, \"byte_identical\": {}}}",
+                r.hot_pct,
+                json_f64_prec(r.p50_us, 2),
+                json_f64_prec(r.p99_us, 2),
+                r.demotions,
+                r.rehydrations,
+                r.cold_bytes,
+                json_f64_prec(r.rss_delta_mb, 1),
+                r.byte_identical
+            )
+        })
+        .collect();
+    let json = format!(
+        "{{\n  \"bench\": \"chunk_tiering\",\n  \"fast\": {fast},\n  \
+         \"chunk_bytes\": {},\n  \"n_items\": {n_items},\n  \"samples\": {samples},\n  \
+         \"results\": [\n{}\n  ]\n}}\n",
+        floats * 4,
+        results.join(",\n")
+    );
+    std::fs::write("BENCH_tiering.json", &json).expect("write BENCH_tiering.json");
+    println!("\nwrote BENCH_tiering.json");
+
+    // Acceptance guards, reported not enforced (CI uploads the JSON).
+    let hot_p50 = rows[0].p50_us;
+    let cold = rows.last().unwrap();
+    if !cold.byte_identical {
+        println!("RESULT: FAIL — cold round-trip not byte-identical at 10% hot budget.");
+    } else if cold.demotions == 0 || cold.rehydrations == 0 {
+        println!("RESULT: WARNING — 10% budget never exercised the cold tier; sweep too small.");
+    } else if hot_p50 > 0.0 && cold.p99_us <= hot_p50 * 10.0 {
+        println!(
+            "RESULT: PASS — 10%-budget p99 {:.1} us within 10x of hot p50 {:.1} us; \
+             byte-identical through {} demotions / {} rehydrations.",
+            cold.p99_us, hot_p50, cold.demotions, cold.rehydrations
+        );
+    } else {
+        println!(
+            "RESULT: WARNING — 10%-budget p99 {:.1} us vs hot p50 {:.1} us exceeds 10x; \
+             inspect cold-read path.",
+            cold.p99_us, hot_p50
+        );
+    }
+}

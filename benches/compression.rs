@@ -1,5 +1,5 @@
 //! §5-preamble reproduction: chunk compression on Atari-like correlated
-//! frames vs random data.
+//! frames vs random data, plus a codec × storage-tier sweep.
 //!
 //! Paper claim: "in Atari we observe compression rates of up to 90% in
 //! sequences of 40 frames. The effective throughput would therefore be up
@@ -8,12 +8,21 @@
 //! delta+zstd), reporting compression ratio, effective-throughput
 //! multiplier, and encode/decode speed.
 //!
+//! The tier sweep then resolves the same chunks out of a hot (in-memory)
+//! and a cold (CRC-framed spill file) ChunkStore: a better codec shrinks
+//! the cold record, so the codec choice compounds with tiering — the
+//! motivation for per-column codec rules in `TrajectoryWriterOptions`.
+//!
 //! Run: `cargo bench --bench compression`
+//! (REVERB_BENCH_FAST=1 for the CI quick pass; emits BENCH_compression.json.)
 
 use reverb::core::chunk::{Chunk, Compression};
+use reverb::core::chunk_store::{ChunkStore, TieringConfig};
 use reverb::core::tensor::Tensor;
 use reverb::rl::env::AtariSim;
-use std::time::Instant;
+use reverb::util::bench::{fast_mode, print_row};
+use reverb::util::stats::{json_f64_prec, Samples};
+use std::time::{Duration, Instant};
 
 fn frames(sim: &mut AtariSim, n: usize, random: bool) -> Vec<Vec<Tensor>> {
     (0..n)
@@ -28,11 +37,54 @@ fn frames(sim: &mut AtariSim, n: usize, random: bool) -> Vec<Vec<Tensor>> {
         .collect()
 }
 
+struct CodecRow {
+    source: &'static str,
+    chunk_len: usize,
+    codec: &'static str,
+    ratio: f64,
+    mult: f64,
+    enc_mbps: f64,
+    dec_mbps: f64,
+}
+
+struct TierRow {
+    codec: &'static str,
+    tier: &'static str,
+    resolve_p50_us: f64,
+    resolve_p99_us: f64,
+    cold_bytes: u64,
+}
+
+/// Resolve every handle `rounds` times, re-demoting between passes when
+/// `store` is tiered, and return per-resolve latencies.
+fn resolve_latencies(
+    store: &ChunkStore,
+    handles: &[reverb::core::chunk_store::ChunkHandle],
+    rounds: usize,
+    cold: bool,
+) -> Samples {
+    let mut lat = Samples::new();
+    for _ in 0..rounds {
+        if cold {
+            store.run_maintenance();
+        }
+        for h in handles {
+            let t0 = Instant::now();
+            let chunk = h.resolve().unwrap();
+            lat.add(t0.elapsed().as_secs_f64() * 1e6);
+            std::hint::black_box(chunk);
+        }
+    }
+    lat
+}
+
 fn main() {
+    let fast = fast_mode();
     println!("# Compression: correlated (Atari-like) vs random frames");
     println!("| source | chunk_len | codec | ratio | eff. BPS multiplier | enc MB/s | dec MB/s |");
     println!("|---|---|---|---|---|---|---|");
     let mut sim = AtariSim::new(7, 4);
+    let mut codec_rows: Vec<CodecRow> = Vec::new();
     for &random in &[false, true] {
         for &chunk_len in &[1usize, 10, 40] {
             for (codec, name) in [
@@ -41,7 +93,12 @@ fn main() {
             ] {
                 let steps = frames(&mut sim, chunk_len, random);
                 // Encode/decode timing over enough reps to measure.
-                let reps = if chunk_len == 1 { 200 } else { 20 };
+                let reps = match (fast, chunk_len) {
+                    (true, 1) => 50,
+                    (true, _) => 5,
+                    (false, 1) => 200,
+                    (false, _) => 20,
+                };
                 let t0 = Instant::now();
                 let mut chunk = None;
                 for i in 0..reps {
@@ -59,17 +116,123 @@ fn main() {
                 let ratio = chunk.compression_ratio();
                 let mult = raw / chunk.encoded_len() as f64;
                 let mb = raw * reps as f64 / 1e6;
+                let row = CodecRow {
+                    source: if random { "random" } else { "atari-sim" },
+                    chunk_len,
+                    codec: name,
+                    ratio,
+                    mult,
+                    enc_mbps: mb / enc.as_secs_f64(),
+                    dec_mbps: mb / dec.as_secs_f64(),
+                };
                 println!(
                     "| {} | {chunk_len} | {name} | {:.1}% | {:.1}x | {:.0} | {:.0} |",
-                    if random { "random" } else { "atari-sim" },
+                    row.source,
                     ratio * 100.0,
                     mult,
-                    mb / enc.as_secs_f64(),
-                    mb / dec.as_secs_f64(),
+                    row.enc_mbps,
+                    row.dec_mbps,
                 );
+                codec_rows.push(row);
             }
         }
     }
+
+    // Codec × tier: resolve 40-frame correlated chunks from the hot tier
+    // (Arc clone) and from the cold tier (positional read / mmap + CRC +
+    // decode). A stronger codec shrinks the cold record it re-reads.
+    let n_chunks = if fast { 8 } else { 32 };
+    let rounds = if fast { 3 } else { 10 };
+    println!("\n# Codec x tier: ChunkStore resolve latency, 40-frame atari chunks");
+    println!("| codec | tier | resolve p50 (us) | resolve p99 (us) | cold bytes |");
+    println!("|---|---|---|---|---|");
+    let dir = std::env::temp_dir().join(format!("rvb_bench_comp_{}", std::process::id()));
+    let mut tier_rows: Vec<TierRow> = Vec::new();
+    for (codec, name) in [
+        (Compression::None, "none"),
+        (Compression::Zstd { level: 1 }, "zstd1"),
+        (Compression::DeltaZstd { level: 1 }, "delta+zstd1"),
+    ] {
+        let chunks: Vec<Chunk> = (0..n_chunks)
+            .map(|i| {
+                let steps = frames(&mut sim, 40, false);
+                Chunk::from_steps(i as u64, 0, &steps, codec).unwrap()
+            })
+            .collect();
+        for cold in [false, true] {
+            let tier = if cold { "cold" } else { "hot" };
+            let store = if cold {
+                let d = dir.join(name);
+                std::fs::create_dir_all(&d).unwrap();
+                let mut cfg = TieringConfig::new(1, &d);
+                // Manual maintenance only: keep the background thread out
+                // of the measurement.
+                cfg.sweep_interval = Duration::from_secs(3600);
+                ChunkStore::with_tiering(1, cfg).unwrap()
+            } else {
+                ChunkStore::with_shards(1)
+            };
+            let handles: Vec<_> = chunks.iter().map(|c| store.insert(c.clone())).collect();
+            let mut lat = resolve_latencies(&store, &handles, rounds, cold);
+            let stats = store.stats();
+            let row = TierRow {
+                codec: name,
+                tier,
+                resolve_p50_us: lat.percentile(50.0),
+                resolve_p99_us: lat.percentile(99.0),
+                cold_bytes: stats.cold_bytes,
+            };
+            print_row(&[
+                name.to_string(),
+                tier.to_string(),
+                format!("{:.1}", row.resolve_p50_us),
+                format!("{:.1}", row.resolve_p99_us),
+                row.cold_bytes.to_string(),
+            ]);
+            tier_rows.push(row);
+        }
+    }
+    std::fs::remove_dir_all(&dir).ok();
+
+    let codec_json: Vec<String> = codec_rows
+        .iter()
+        .map(|r| {
+            format!(
+                "    {{\"source\": \"{}\", \"chunk_len\": {}, \"codec\": \"{}\", \
+                 \"ratio\": {}, \"multiplier\": {}, \"enc_mbps\": {}, \"dec_mbps\": {}}}",
+                r.source,
+                r.chunk_len,
+                r.codec,
+                json_f64_prec(r.ratio, 4),
+                json_f64_prec(r.mult, 2),
+                json_f64_prec(r.enc_mbps, 1),
+                json_f64_prec(r.dec_mbps, 1)
+            )
+        })
+        .collect();
+    let tier_json: Vec<String> = tier_rows
+        .iter()
+        .map(|r| {
+            format!(
+                "    {{\"codec\": \"{}\", \"tier\": \"{}\", \"resolve_p50_us\": {}, \
+                 \"resolve_p99_us\": {}, \"cold_bytes\": {}}}",
+                r.codec,
+                r.tier,
+                json_f64_prec(r.resolve_p50_us, 2),
+                json_f64_prec(r.resolve_p99_us, 2),
+                r.cold_bytes
+            )
+        })
+        .collect();
+    let json = format!(
+        "{{\n  \"bench\": \"compression\",\n  \"fast\": {fast},\n  \
+         \"codecs\": [\n{}\n  ],\n  \"tiers\": [\n{}\n  ]\n}}\n",
+        codec_json.join(",\n"),
+        tier_json.join(",\n")
+    );
+    std::fs::write("BENCH_compression.json", &json).expect("write BENCH_compression.json");
+    println!("\nwrote BENCH_compression.json");
+
     println!("\npaper: up to 90% on 40-frame sequences -> ~10x effective throughput;");
     println!("random data sees ~0% (the figure-5/6 benchmarks use random data on purpose).");
 }

@@ -856,7 +856,9 @@ fn apply_standby_event(
     match ev {
         FollowEvent::Base(data) => {
             chunks.clear();
-            chunks.extend(data.chunks);
+            for (k, handle) in data.chunks {
+                chunks.insert(k, handle.resolve()?);
+            }
             for t in data.tables {
                 let id = conn.next_id();
                 conn.send(Message::Reset {
@@ -877,7 +879,11 @@ fn apply_standby_event(
                         columns: item.columns.clone(),
                     };
                     conn.send(Message::InsertChunks {
-                        chunks: item.chunks.clone(),
+                        chunks: item
+                            .chunks
+                            .iter()
+                            .map(|c| c.resolve())
+                            .collect::<Result<Vec<_>>>()?,
                     })?;
                     let id = conn.next_id();
                     conn.send(Message::CreateItem {

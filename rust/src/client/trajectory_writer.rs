@@ -19,9 +19,9 @@
 
 use super::pipeline::{Completion, Pipeline};
 use super::Client;
-use crate::core::chunk::{Chunk, ChunkBuilder, Compression};
+use crate::core::chunk::{select_codec, Chunk, ChunkBuilder, ColumnCodecRule, Compression};
 use crate::core::item::{ChunkSlice, TrajectoryColumn};
-use crate::core::tensor::Tensor;
+use crate::core::tensor::{DType, Tensor};
 use crate::error::{Error, Result};
 use crate::net::wire::{Message, WireItem, MAX_BATCH_OPS};
 use crate::util::KeyGenerator;
@@ -37,8 +37,15 @@ pub struct TrajectoryWriterOptions {
     pub column_chunk_lengths: Vec<(String, usize)>,
     /// Max unacknowledged CreateItem requests before `create_item` blocks.
     pub max_in_flight_items: usize,
-    /// Column compression for cut chunks.
+    /// Default column compression for cut chunks (columns no codec rule
+    /// matches).
     pub compression: Compression,
+    /// Per-column codec rules, first match wins: a column's name and the
+    /// dtype of its first appended cell select its codec — e.g. u8
+    /// frame-stack columns get `DeltaZstd` while scalar reward columns
+    /// skip compression entirely. Mirror a table's advertised rules here
+    /// via [`TrajectoryWriterOptions::with_codec_rules`].
+    pub column_codecs: Vec<ColumnCodecRule>,
     /// Server-side insert timeout per item (rate-limiter blocking).
     pub insert_timeout_ms: u64,
 }
@@ -50,6 +57,7 @@ impl Default for TrajectoryWriterOptions {
             column_chunk_lengths: Vec::new(),
             max_in_flight_items: 64,
             compression: Compression::default_fast(),
+            column_codecs: Vec::new(),
             insert_timeout_ms: 60_000,
         }
     }
@@ -69,6 +77,26 @@ impl TrajectoryWriterOptions {
 
     pub fn with_compression(mut self, c: Compression) -> Self {
         self.compression = c;
+        self
+    }
+
+    /// Append a name-glob codec rule (first match wins), e.g.
+    /// `with_column_codec("obs/*", Compression::DeltaZstd { level: 3 })`.
+    pub fn with_column_codec(mut self, pattern: impl Into<String>, codec: Compression) -> Self {
+        self.column_codecs.push(ColumnCodecRule::name(pattern, codec));
+        self
+    }
+
+    /// Append a dtype codec rule (first match wins).
+    pub fn with_dtype_codec(mut self, dtype: DType, codec: Compression) -> Self {
+        self.column_codecs.push(ColumnCodecRule::dtype(dtype, codec));
+        self
+    }
+
+    /// Replace the rule list wholesale — the shape
+    /// [`crate::core::table::TableConfig::column_codecs`] advertises.
+    pub fn with_codec_rules(mut self, rules: Vec<ColumnCodecRule>) -> Self {
+        self.column_codecs = rules;
         self
     }
 
@@ -183,6 +211,9 @@ struct ColumnState {
     name: Arc<str>,
     builder: ChunkBuilder,
     sent: VecDeque<SentChunk>,
+    /// Whether the column's codec has been settled (it is chosen from the
+    /// codec rules once the first cell reveals the dtype).
+    codec_chosen: bool,
 }
 
 impl ColumnState {
@@ -475,6 +506,7 @@ impl TrajectoryWriter {
             name: Arc::from(name),
             builder: ChunkBuilder::new(chunk_length, self.options.compression),
             sent: VecDeque::new(),
+            codec_chosen: self.options.column_codecs.is_empty(),
         });
         self.col_index.insert(name.to_string(), i);
         i
@@ -485,6 +517,17 @@ impl TrajectoryWriter {
         let key = self.keys.next_key();
         let (name, index, cut) = {
             let state = &mut self.columns[col];
+            // First cell: its dtype plus the column name settle the codec
+            // for every chunk this column ever cuts.
+            if !state.codec_chosen && !row.is_empty() {
+                state.builder.set_compression(select_codec(
+                    &self.options.column_codecs,
+                    &state.name,
+                    row[0].dtype(),
+                    self.options.compression,
+                ));
+                state.codec_chosen = true;
+            }
             let index = state.builder.next_sequence();
             let cut = state.builder.append(key, row)?;
             (state.name.clone(), index, cut)
@@ -822,6 +865,65 @@ mod tests {
         let r = sample.column("reward").unwrap();
         assert_eq!(r.shape(), &[4]);
         assert!((r.to_f32().unwrap()[3] - 0.9).abs() < 1e-6);
+    }
+
+    #[test]
+    fn codec_rules_select_per_column_compression() {
+        let (server, client) = start();
+        let mut w = client
+            .trajectory_writer(
+                TrajectoryWriterOptions::default()
+                    .with_chunk_length(2)
+                    .with_compression(Compression::None)
+                    .with_column_codec("obs*", Compression::Zstd { level: 1 })
+                    .with_dtype_codec(DType::U8, Compression::DeltaZstd { level: 1 }),
+            )
+            .unwrap();
+        let mut obs_refs = Vec::new();
+        let mut frame_refs = Vec::new();
+        let mut rew_refs = Vec::new();
+        for i in 0..4u8 {
+            let refs = w
+                .append(vec![
+                    ("obs", obs(i as f32)),
+                    ("frames", Tensor::from_u8(&[4], &[i, i, i, i]).unwrap()),
+                    ("reward", Tensor::scalar_f32(i as f32)),
+                ])
+                .unwrap();
+            obs_refs.push(refs[0].clone());
+            frame_refs.push(refs[1].clone());
+            rew_refs.push(refs[2].clone());
+        }
+        let t = Trajectory::new()
+            .column(&obs_refs)
+            .column(&frame_refs)
+            .column(&rew_refs);
+        w.create_item("a", 1.0, t).unwrap();
+        w.flush().unwrap();
+
+        // Name rule catches "obs", the dtype rule catches the u8 frame
+        // stack, and the scalar reward column matches nothing so it keeps
+        // the writer default. Columns are distinguishable by dtype/rank
+        // since chunk columns don't carry names.
+        let sampled = server.table("a").unwrap().sample(None).unwrap();
+        assert!(!sampled.item.chunks.is_empty());
+        for handle in &sampled.item.chunks {
+            let chunk = handle.resolve().unwrap();
+            let col = &chunk.columns[0];
+            let expected = match (col.dtype, col.shape.len()) {
+                (DType::U8, _) => Compression::DeltaZstd { level: 1 },
+                (DType::F32, 2) => Compression::Zstd { level: 1 },
+                _ => Compression::None,
+            };
+            assert_eq!(col.compression, expected, "dtype {:?}", col.dtype);
+        }
+
+        // Round-trip still decodes: the codec choice is invisible to
+        // sampling.
+        let mut s = client.sampler(SamplerOptions::new("a")).unwrap();
+        let sample = s.next_sample().unwrap();
+        let frames = sample.column("frames").unwrap();
+        assert_eq!(frames.shape(), &[4, 4]);
     }
 
     #[test]

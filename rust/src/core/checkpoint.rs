@@ -37,7 +37,7 @@
 //! shard-count portable).
 
 use crate::core::chunk::Chunk;
-use crate::core::chunk_store::ChunkStore;
+use crate::core::chunk_store::{ChunkHandle, ChunkSlot, ChunkStore};
 use crate::core::item::{Item, TrajectoryColumn};
 use crate::core::table::Table;
 use crate::error::{Error, Result};
@@ -82,7 +82,7 @@ impl DecodedItem {
     pub fn into_item(
         self,
         table: &str,
-        arcs: &BTreeMap<u64, Arc<Chunk>>,
+        arcs: &BTreeMap<u64, ChunkHandle>,
     ) -> Result<Item> {
         let chunks = self
             .chunk_keys
@@ -178,14 +178,14 @@ pub struct TableSnapshot {
 /// [`read_full`] (from a v1/v2 file), or the persist subsystem's delta
 /// replay; consumed by [`write_full`] and [`install`].
 pub struct CheckpointData {
-    pub chunks: BTreeMap<u64, Arc<Chunk>>,
+    pub chunks: BTreeMap<u64, ChunkHandle>,
     pub tables: Vec<TableSnapshot>,
 }
 
 /// Clone the state of `tables` into a [`CheckpointData`].
 pub fn snapshot_tables(tables: &[Arc<Table>]) -> CheckpointData {
     let mut snapshots = Vec::with_capacity(tables.len());
-    let mut chunks: BTreeMap<u64, Arc<Chunk>> = BTreeMap::new();
+    let mut chunks: BTreeMap<u64, ChunkHandle> = BTreeMap::new();
     for t in tables {
         let (items, inserts, samples) = t.snapshot();
         for item in &items {
@@ -222,7 +222,9 @@ pub fn write_full(path: &Path, data: &CheckpointData) -> Result<()> {
     w.write_all(MAGIC_V2)?;
     put_u32(&mut w, data.chunks.len() as u32)?;
     for c in data.chunks.values() {
-        c.encode(&mut w)?;
+        // Cold-tier slots copy their verified encoded bytes straight
+        // through, so checkpointing never re-inflates the hot tier.
+        c.write_encoded(&mut w)?;
     }
     put_u32(&mut w, data.tables.len() as u32)?;
     for t in &data.tables {
@@ -282,10 +284,11 @@ pub fn read_full(path: &Path) -> Result<CheckpointData> {
     };
 
     let nchunks = get_u32(&mut r)? as usize;
-    let mut arcs: BTreeMap<u64, Arc<Chunk>> = BTreeMap::new();
+    let mut arcs: BTreeMap<u64, ChunkHandle> = BTreeMap::new();
     for _ in 0..nchunks {
         let chunk = Chunk::decode(&mut r)?;
-        arcs.insert(chunk.key, Arc::new(chunk));
+        let key = chunk.key;
+        arcs.insert(key, ChunkSlot::detached(Arc::new(chunk)));
     }
 
     let ntables = get_u32(&mut r)? as usize;
@@ -337,7 +340,10 @@ pub fn read_full(path: &Path) -> Result<CheckpointData> {
 /// Returns the number of items restored.
 pub fn install(data: CheckpointData, tables: &[Arc<Table>], store: &ChunkStore) -> Result<usize> {
     for chunk in data.chunks.values() {
-        store.insert_arc(chunk.clone());
+        // Detached slots (the read_full path) are adopted in place, so
+        // the very handles the restored items hold become store-managed
+        // and demotable; already-owned slots register by key as before.
+        store.adopt(chunk)?;
     }
     let mut restored = 0;
     for t in data.tables {
@@ -661,7 +667,7 @@ mod tests {
             body.extend_from_slice(MAGIC_V1);
             put_u32(&mut body, items.len() as u32).unwrap();
             for item in &items {
-                item.chunks[0].encode(&mut body).unwrap();
+                item.chunks[0].resolve().unwrap().encode(&mut body).unwrap();
             }
             put_u32(&mut body, 1).unwrap(); // one table
             put_string(&mut body, "t").unwrap();

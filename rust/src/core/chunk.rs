@@ -47,6 +47,98 @@ impl Compression {
     }
 }
 
+/// One per-column codec selection rule: match a column by writer-side
+/// name (a `*` glob) and/or dtype, and pick its [`Compression`]. Rules
+/// are checked in order; the first full match wins. This is how u8
+/// frame-stack columns get `DeltaZstd` while scalar reward columns stay
+/// uncompressed, shrinking cold-tier and wire bytes together.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ColumnCodecRule {
+    /// Column-name pattern; `*` matches any run of characters. `None`
+    /// matches every name.
+    pub name_glob: Option<String>,
+    /// Required dtype; `None` matches every dtype.
+    pub dtype: Option<DType>,
+    /// Codec applied when the rule matches.
+    pub codec: Compression,
+}
+
+impl ColumnCodecRule {
+    /// Match columns by name pattern only.
+    pub fn name(pattern: impl Into<String>, codec: Compression) -> Self {
+        ColumnCodecRule {
+            name_glob: Some(pattern.into()),
+            dtype: None,
+            codec,
+        }
+    }
+
+    /// Match columns by dtype only.
+    pub fn dtype(dtype: DType, codec: Compression) -> Self {
+        ColumnCodecRule {
+            name_glob: None,
+            dtype: Some(dtype),
+            codec,
+        }
+    }
+
+    /// Whether this rule matches a column of `name` and `dtype`.
+    pub fn matches(&self, name: &str, dtype: DType) -> bool {
+        if let Some(want) = self.dtype {
+            if want != dtype {
+                return false;
+            }
+        }
+        match &self.name_glob {
+            None => true,
+            Some(pattern) => glob_match(pattern, name),
+        }
+    }
+}
+
+/// First matching rule's codec, or `default` when none match. Dtype is
+/// known only once a column's first cell arrives, which is why writers
+/// pick codecs lazily at first append.
+pub fn select_codec(
+    rules: &[ColumnCodecRule],
+    name: &str,
+    dtype: DType,
+    default: Compression,
+) -> Compression {
+    rules
+        .iter()
+        .find(|r| r.matches(name, dtype))
+        .map(|r| r.codec)
+        .unwrap_or(default)
+}
+
+/// Minimal `*`-only glob match (no character classes, no `?`), iterative
+/// with the classic backtrack-to-last-star algorithm.
+fn glob_match(pattern: &str, name: &str) -> bool {
+    let (p, n) = (pattern.as_bytes(), name.as_bytes());
+    let (mut pi, mut ni) = (0usize, 0usize);
+    let mut star: Option<(usize, usize)> = None;
+    while ni < n.len() {
+        if pi < p.len() && p[pi] == b'*' {
+            star = Some((pi, ni));
+            pi += 1;
+        } else if pi < p.len() && p[pi] == n[ni] {
+            pi += 1;
+            ni += 1;
+        } else if let Some((sp, sn)) = star {
+            pi = sp + 1;
+            ni = sn + 1;
+            star = Some((sp, sn + 1));
+        } else {
+            return false;
+        }
+    }
+    while pi < p.len() && p[pi] == b'*' {
+        pi += 1;
+    }
+    pi == p.len()
+}
+
 /// One compressed column of a chunk: the stacked per-step tensors of one
 /// signature field.
 #[derive(Clone, Debug)]
@@ -417,6 +509,18 @@ impl ChunkBuilder {
         Ok(Some(chunk))
     }
 
+    /// Change the codec applied to future cuts. Compression is applied at
+    /// cut time, so this is safe mid-buffer; writers use it to settle a
+    /// column's codec once the first cell reveals its dtype.
+    pub fn set_compression(&mut self, compression: Compression) {
+        self.compression = compression;
+    }
+
+    /// The codec future cuts will use.
+    pub fn compression(&self) -> Compression {
+        self.compression
+    }
+
     /// Number of steps currently buffered (not yet in a chunk).
     pub fn buffered_steps(&self) -> usize {
         self.buffered.len()
@@ -457,6 +561,65 @@ mod tests {
     use super::*;
     use crate::core::tensor::TensorSpec;
     use crate::util::rng::Pcg32;
+
+    #[test]
+    fn glob_match_star_patterns() {
+        assert!(glob_match("*", ""));
+        assert!(glob_match("*", "anything"));
+        assert!(glob_match("obs/*", "obs/pixels"));
+        assert!(!glob_match("obs/*", "act/pixels"));
+        assert!(glob_match("*pixels", "obs/pixels"));
+        assert!(glob_match("obs*frame*", "obs/stacked_frame_0"));
+        assert!(!glob_match("obs", "observation"));
+        assert!(glob_match("exact", "exact"));
+        assert!(!glob_match("", "x"));
+        assert!(glob_match("", ""));
+    }
+
+    #[test]
+    fn codec_rules_first_match_wins() {
+        let rules = vec![
+            ColumnCodecRule::name("obs/*", Compression::DeltaZstd { level: 3 }),
+            ColumnCodecRule::dtype(DType::U8, Compression::Zstd { level: 9 }),
+            ColumnCodecRule::name("*", Compression::None),
+        ];
+        // Name rule beats the later dtype rule.
+        assert_eq!(
+            select_codec(&rules, "obs/pixels", DType::U8, Compression::default_fast()),
+            Compression::DeltaZstd { level: 3 }
+        );
+        // Dtype rule catches u8 columns under other names.
+        assert_eq!(
+            select_codec(&rules, "aux/mask", DType::U8, Compression::default_fast()),
+            Compression::Zstd { level: 9 }
+        );
+        // Catch-all.
+        assert_eq!(
+            select_codec(&rules, "reward", DType::F32, Compression::default_fast()),
+            Compression::None
+        );
+    }
+
+    #[test]
+    fn codec_rules_fall_back_to_default() {
+        let rules = vec![ColumnCodecRule::name("obs/*", Compression::None)];
+        assert_eq!(
+            select_codec(&rules, "reward", DType::F32, Compression::Zstd { level: 1 }),
+            Compression::Zstd { level: 1 }
+        );
+    }
+
+    #[test]
+    fn codec_rule_requires_both_fields_when_set() {
+        let rule = ColumnCodecRule {
+            name_glob: Some("obs/*".to_string()),
+            dtype: Some(DType::U8),
+            codec: Compression::DeltaZstd { level: 1 },
+        };
+        assert!(rule.matches("obs/pixels", DType::U8));
+        assert!(!rule.matches("obs/pixels", DType::F32));
+        assert!(!rule.matches("act", DType::U8));
+    }
 
     fn step(vals: &[f32], action: i32) -> Vec<Tensor> {
         vec![

@@ -10,6 +10,7 @@
 //!   Produced by `TrajectoryWriter`.
 
 use crate::core::chunk::Chunk;
+use crate::core::chunk_store::ChunkHandle;
 use crate::core::tensor::Tensor;
 use crate::error::{Error, Result};
 use std::collections::HashMap;
@@ -17,7 +18,7 @@ use std::sync::Arc;
 
 /// One contiguous run of rows inside a single chunk, referenced by a
 /// trajectory column. Chunks are addressed by key: the owning [`Item`]
-/// carries the `Arc<Chunk>` handles in [`Item::chunks`].
+/// carries the [`ChunkHandle`]s in [`Item::chunks`].
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct ChunkSlice {
     /// Key of the referenced chunk.
@@ -125,10 +126,12 @@ pub struct Item {
     pub table: String,
     /// Priority used by Selectors. Clients can update this value.
     pub priority: f64,
-    /// Referenced chunks, in stream order. The `Arc`s are the reference
-    /// counts tracked by the ChunkStore design. For trajectory items this
-    /// is the deduplicated union of every column's referenced chunks.
-    pub chunks: Vec<Arc<Chunk>>,
+    /// Referenced chunks, in stream order, as tier-agnostic handles: the
+    /// shared slots are the reference counts tracked by the ChunkStore
+    /// design, whether the payload is hot in memory or spilled cold. For
+    /// trajectory items this is the deduplicated union of every column's
+    /// referenced chunks.
+    pub chunks: Vec<ChunkHandle>,
     /// Offset of the item's first step within `chunks[0]` (flat items; 0
     /// for trajectory items).
     pub offset: usize,
@@ -155,15 +158,19 @@ fn validate_priority(priority: f64) -> Result<()> {
 }
 
 impl Item {
-    /// Construct and validate an item over a chunk span.
-    pub fn new(
+    /// Construct and validate an item over a chunk span. Accepts anything
+    /// convertible to [`ChunkHandle`] — store handles on the server path,
+    /// plain `Arc<Chunk>`s (wrapped detached) on the client and in tests.
+    /// Validation reads only slot metadata, so cold chunks stay cold.
+    pub fn new<H: Into<ChunkHandle>>(
         key: u64,
         table: impl Into<String>,
         priority: f64,
-        chunks: Vec<Arc<Chunk>>,
+        chunks: Vec<H>,
         offset: usize,
         length: usize,
     ) -> Result<Item> {
+        let chunks: Vec<ChunkHandle> = chunks.into_iter().map(Into::into).collect();
         if chunks.is_empty() {
             return Err(Error::InvalidArgument("item with no chunks".into()));
         }
@@ -212,11 +219,11 @@ impl Item {
     /// over single-column chunks. `chunks` must be exactly the
     /// deduplicated set of chunks the slices reference (this is what the
     /// server's insert path checks the wire item against).
-    pub fn new_trajectory(
+    pub fn new_trajectory<H: Into<ChunkHandle>>(
         key: u64,
         table: impl Into<String>,
         priority: f64,
-        chunks: Vec<Arc<Chunk>>,
+        chunks: Vec<H>,
         columns: Vec<TrajectoryColumn>,
     ) -> Result<Item> {
         Self::new_trajectory_shared(key, table, priority, chunks, Arc::new(columns))
@@ -225,13 +232,14 @@ impl Item {
     /// Like [`Item::new_trajectory`], but sharing an already-built column
     /// list. The wire and checkpoint paths pass their decoded `Arc` through
     /// so re-validation never clones the column metadata.
-    pub fn new_trajectory_shared(
+    pub fn new_trajectory_shared<H: Into<ChunkHandle>>(
         key: u64,
         table: impl Into<String>,
         priority: f64,
-        chunks: Vec<Arc<Chunk>>,
+        chunks: Vec<H>,
         columns: Arc<Vec<TrajectoryColumn>>,
     ) -> Result<Item> {
+        let chunks: Vec<ChunkHandle> = chunks.into_iter().map(Into::into).collect();
         if chunks.is_empty() {
             return Err(Error::InvalidArgument("item with no chunks".into()));
         }
@@ -241,7 +249,7 @@ impl Item {
             ));
         }
         validate_priority(priority)?;
-        let mut by_key: HashMap<u64, &Arc<Chunk>> = HashMap::with_capacity(chunks.len());
+        let mut by_key: HashMap<u64, &ChunkHandle> = HashMap::with_capacity(chunks.len());
         for c in &chunks {
             if by_key.insert(c.key, c).is_some() {
                 return Err(Error::InvalidArgument(format!(
@@ -270,13 +278,11 @@ impl Item {
                 let chunk = by_key
                     .get(&s.chunk_key)
                     .ok_or(Error::ChunkNotFound(s.chunk_key))?;
-                if chunk.columns.len() != 1 {
+                if chunk.num_columns != 1 {
                     return Err(Error::SignatureMismatch(format!(
                         "trajectory column {:?} references chunk {} with {} fields \
                          (trajectory chunks hold exactly one column)",
-                        col.name,
-                        s.chunk_key,
-                        chunk.columns.len()
+                        col.name, s.chunk_key, chunk.num_columns
                     )));
                 }
                 if s.offset + s.length > chunk.num_steps {
@@ -365,12 +371,16 @@ impl Item {
 
     /// Per-column gather: decode each slice run from its (single-column)
     /// chunk, concatenate along the time axis, squeeze if requested.
+    /// Resolves each referenced chunk once up front (rehydrating cold
+    /// ones), so repeated slices into one chunk share the decode.
     fn materialize_trajectory(
         &self,
         cols: &[TrajectoryColumn],
     ) -> Result<Vec<(String, Tensor)>> {
-        let by_key: HashMap<u64, &Arc<Chunk>> =
-            self.chunks.iter().map(|c| (c.key, c)).collect();
+        let mut by_key: HashMap<u64, Arc<Chunk>> = HashMap::with_capacity(self.chunks.len());
+        for c in &self.chunks {
+            by_key.insert(c.key, c.resolve()?);
+        }
         let mut out = Vec::with_capacity(cols.len());
         for col in cols {
             let mut parts = Vec::with_capacity(col.slices.len());
@@ -403,11 +413,11 @@ impl Item {
     fn materialize_flat(&self) -> Result<Vec<Tensor>> {
         // Fast path: single chunk.
         if self.chunks.len() == 1 {
-            return self.chunks[0].decode_rows(self.offset, self.length);
+            return self.chunks[0].resolve()?.decode_rows(self.offset, self.length);
         }
         // Multi-chunk: decode each chunk's contribution, then concatenate
         // along the time axis per field.
-        let num_fields = self.chunks[0].columns.len();
+        let num_fields = self.chunks[0].num_columns;
         let mut per_field: Vec<Vec<Tensor>> = vec![Vec::new(); num_fields];
         let mut remaining = self.length;
         let mut offset = self.offset;
@@ -416,7 +426,7 @@ impl Item {
                 break;
             }
             let take = (chunk.num_steps - offset).min(remaining);
-            let rows = chunk.decode_rows(offset, take)?;
+            let rows = chunk.resolve()?.decode_rows(offset, take)?;
             if rows.len() != num_fields {
                 return Err(Error::Decode(
                     "inconsistent field count across item chunks".into(),
@@ -496,7 +506,7 @@ mod tests {
         assert!(Item::new(1, "t", 1.0, vec![c.clone()], 1, 3).is_ok());
         assert!(Item::new(1, "t", 1.0, vec![c.clone()], 1, 4).is_err()); // overruns
         assert!(Item::new(1, "t", 1.0, vec![c.clone()], 4, 1).is_err()); // offset oob
-        assert!(Item::new(1, "t", 1.0, vec![], 0, 1).is_err());
+        assert!(Item::new(1, "t", 1.0, Vec::<Arc<Chunk>>::new(), 0, 1).is_err());
         assert!(Item::new(1, "t", 1.0, vec![c.clone()], 0, 0).is_err());
         assert!(Item::new(1, "t", f64::NAN, vec![c.clone()], 0, 1).is_err());
         assert!(Item::new(1, "t", -1.0, vec![c], 0, 1).is_err());

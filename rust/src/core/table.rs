@@ -38,11 +38,12 @@
 //! queue-style tables (consume-on-sample with a bounded corridor) should
 //! stay at 1 shard — see DESIGN.md §7.
 
+use crate::core::chunk::{ColumnCodecRule, Compression};
 use crate::core::extensions::{ItemRef, TableExtension};
 use crate::core::item::{Item, SampledItem};
 use crate::core::rate_limiter::{AtomicRateLimiter, RateLimiterConfig};
 use crate::core::selector::{Selector, SelectorConfig};
-use crate::core::tensor::Signature;
+use crate::core::tensor::{DType, Signature};
 use crate::error::{Error, Result};
 use crate::util::rng::Pcg32;
 use std::collections::HashMap;
@@ -94,6 +95,11 @@ pub struct TableConfig {
     /// semantics; larger values lift the insert ceiling at the cost of
     /// approximate cross-shard ordering for deterministic samplers.
     pub num_shards: usize,
+    /// Per-column codec rules advertised to writers of this table:
+    /// first match by name glob / dtype wins, falling back to the
+    /// writer's own default compression. Not part of wire table config;
+    /// clients pick them up via `TrajectoryWriter` options.
+    pub column_codecs: Vec<ColumnCodecRule>,
 }
 
 impl TableConfig {
@@ -109,6 +115,7 @@ impl TableConfig {
             rate_limiter: RateLimiterConfig::min_size(1),
             signature: None,
             num_shards: 1,
+            column_codecs: Vec::new(),
         }
     }
 
@@ -123,6 +130,7 @@ impl TableConfig {
             rate_limiter: RateLimiterConfig::queue(queue_size as u64),
             signature: None,
             num_shards: 1,
+            column_codecs: Vec::new(),
         }
     }
 
@@ -149,6 +157,7 @@ impl TableConfig {
             )?,
             signature: None,
             num_shards: 1,
+            column_codecs: Vec::new(),
         })
     }
 
@@ -164,6 +173,7 @@ impl TableConfig {
             rate_limiter: RateLimiterConfig::min_size(1),
             signature: None,
             num_shards: 1,
+            column_codecs: Vec::new(),
         }
     }
 
@@ -171,6 +181,20 @@ impl TableConfig {
     pub fn with_shards(mut self, n: usize) -> Self {
         assert!(n >= 1, "num_shards must be >= 1");
         self.num_shards = n;
+        self
+    }
+
+    /// Append a name-glob codec rule (first match wins), e.g.
+    /// `with_column_codec("obs/*", Compression::DeltaZstd { level: 3 })`
+    /// for u8 frame-stack columns.
+    pub fn with_column_codec(mut self, pattern: impl Into<String>, codec: Compression) -> Self {
+        self.column_codecs.push(ColumnCodecRule::name(pattern, codec));
+        self
+    }
+
+    /// Append a dtype codec rule (first match wins).
+    pub fn with_dtype_codec(mut self, dtype: DType, codec: Compression) -> Self {
+        self.column_codecs.push(ColumnCodecRule::dtype(dtype, codec));
         self
     }
 }
@@ -536,7 +560,7 @@ impl ShardedTable {
     pub fn insert_or_assign(&self, item: Item, timeout: Option<Duration>) -> Result<()> {
         if let Some(sig) = &self.config.signature {
             for chunk in &item.chunks {
-                chunk.validate_signature(sig)?;
+                chunk.resolve()?.validate_signature(sig)?;
             }
         }
         let shard_idx = self.route(item.key);
@@ -1206,7 +1230,7 @@ impl ShardedTable {
     pub fn try_insert_or_assign(&self, item: Item) -> Result<TryInsertOutcome> {
         if let Some(sig) = &self.config.signature {
             for chunk in &item.chunks {
-                chunk.validate_signature(sig)?;
+                chunk.resolve()?.validate_signature(sig)?;
             }
         }
         if self.cancelled.load(Ordering::SeqCst) {

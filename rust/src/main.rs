@@ -24,7 +24,8 @@ fn usage() -> ! {
          [--persist full|delta] [--checkpoint-interval SECS] \
          [--journal-segment-bytes N] [--service-threads N] \
          [--service-model event|threaded] [--unix-socket PATH] \
-         [--metrics-addr HOST:PORT] [--metrics-token TOKEN]\n  \
+         [--metrics-addr HOST:PORT] [--metrics-token TOKEN] \
+         [--chunk-hot-bytes N --chunk-cold-dir DIR]\n  \
          reverb-server info --addr HOST:PORT\n  \
          reverb-server checkpoint --addr HOST:PORT\n  \
          reverb-server pool --members ADDR1,ADDR2,... \
@@ -47,6 +48,11 @@ fn usage() -> ! {
          serves Prometheus text exposition at http://HOST:PORT/metrics; \
          --metrics-token TOKEN requires `Authorization: Bearer TOKEN` on \
          every scrape (use when the endpoint leaves loopback).\n\
+         --chunk-hot-bytes N caps in-memory chunk payload bytes: least \
+         recently sampled chunks demote to CRC-framed, mmap-backed spill \
+         files under --chunk-cold-dir DIR and rehydrate transparently on \
+         sample. The cold dir is an ephemeral cache (wiped on restart), \
+         not durable state — pair with --persist for durability.\n\
          `pool` joins the replay-fabric membership layer over the given \
          members and serves the client-side fabric gauges (member health, \
          weights, reroutes, standby lag) at \
@@ -189,6 +195,27 @@ fn main() {
             }
             if let Some(dir) = flag(&args, "--checkpoint-dir") {
                 builder = builder.checkpoint_dir(dir);
+            }
+            match flag(&args, "--chunk-hot-bytes") {
+                Some(v) => match v.parse::<u64>() {
+                    Ok(n) if n > 0 => {
+                        let Some(dir) = flag(&args, "--chunk-cold-dir") else {
+                            eprintln!("--chunk-hot-bytes requires --chunk-cold-dir");
+                            std::process::exit(2);
+                        };
+                        builder = builder.chunk_hot_bytes(n).chunk_cold_dir(dir);
+                    }
+                    _ => {
+                        eprintln!("--chunk-hot-bytes must be a positive integer");
+                        std::process::exit(2);
+                    }
+                },
+                None => {
+                    if flag(&args, "--chunk-cold-dir").is_some() {
+                        eprintln!("--chunk-cold-dir requires --chunk-hot-bytes");
+                        std::process::exit(2);
+                    }
+                }
             }
             if let Some(ckpt) = flag(&args, "--load") {
                 builder = builder.load_checkpoint(ckpt);

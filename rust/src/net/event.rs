@@ -192,7 +192,7 @@ struct ConnState {
     stream: Box<dyn MsgStream>,
     source: PollSource,
     /// Chunks streamed on this connection, awaiting item creation.
-    pending: HashMap<u64, Arc<crate::core::chunk::Chunk>>,
+    pending: HashMap<u64, crate::core::chunk_store::ChunkHandle>,
     pending_order: VecDeque<u64>,
     /// A dispatched op the limiter/gate refused; while `Some`, no further
     /// input is read (per-connection FIFO + backpressure).
@@ -1188,7 +1188,12 @@ fn attempt_sample(
     match outcome {
         Ok(TrySampleOutcome::Sampled(samples)) => {
             shared.inner.record_sample_latency(table.name(), started);
-            st.stream.send(sample_reply(id, &samples))?;
+            // A cold-tier rehydration failure is an op-level error reply,
+            // not a connection-fatal one.
+            match sample_reply(id, &samples) {
+                Ok(reply) => st.stream.send(reply)?,
+                Err(e) => send_err(st, id, &e)?,
+            }
             if spans.trace.is_some() {
                 st.last_trace = spans.trace;
             }

@@ -499,6 +499,73 @@ pub(crate) fn render_prometheus(inner: &ServerInner, event: Option<&EventShared>
     );
     e.sample("reverb_persist_journal_lag_bytes", &[], inner.journal_lag_bytes() as f64);
 
+    // Chunk-store tiering (DESIGN.md §16): one stats snapshot feeds every
+    // family so hot/cold gauges are mutually consistent.
+    let cs = inner.store.stats();
+    e.family(
+        "reverb_chunkstore_hot_chunks",
+        "gauge",
+        "Live chunks resident in memory (hot tier).",
+    );
+    e.sample("reverb_chunkstore_hot_chunks", &[], cs.hot_chunks as f64);
+    e.family(
+        "reverb_chunkstore_hot_bytes",
+        "gauge",
+        "Encoded payload bytes resident in memory (hot tier).",
+    );
+    e.sample("reverb_chunkstore_hot_bytes", &[], cs.hot_bytes as f64);
+    e.family(
+        "reverb_chunkstore_cold_chunks",
+        "gauge",
+        "Live chunks whose payload lives only in a cold spill file.",
+    );
+    e.sample("reverb_chunkstore_cold_chunks", &[], cs.cold_chunks as f64);
+    e.family(
+        "reverb_chunkstore_cold_bytes",
+        "gauge",
+        "On-disk bytes of live cold records, framing included.",
+    );
+    e.sample("reverb_chunkstore_cold_bytes", &[], cs.cold_bytes as f64);
+    e.family(
+        "reverb_chunkstore_cold_files",
+        "gauge",
+        "Cold spill files currently on disk.",
+    );
+    e.sample("reverb_chunkstore_cold_files", &[], cs.cold_files as f64);
+    e.family(
+        "reverb_chunkstore_demotions_total",
+        "counter",
+        "Hot-to-cold chunk spills since start.",
+    );
+    e.sample("reverb_chunkstore_demotions_total", &[], cs.demotions as f64);
+    e.family(
+        "reverb_chunkstore_rehydrations_total",
+        "counter",
+        "Cold-to-hot chunk promotions since start.",
+    );
+    e.sample("reverb_chunkstore_rehydrations_total", &[], cs.rehydrations as f64);
+    e.family(
+        "reverb_chunkstore_swept_entries_total",
+        "counter",
+        "Dead weak key-map entries removed by maintenance sweeps.",
+    );
+    e.sample("reverb_chunkstore_swept_entries_total", &[], cs.swept_entries as f64);
+    e.family(
+        "reverb_chunkstore_compactions_total",
+        "counter",
+        "Cold-file compactions since start.",
+    );
+    e.sample("reverb_chunkstore_compactions_total", &[], cs.compactions as f64);
+    e.family(
+        "reverb_chunkstore_rehydration_latency_seconds",
+        "histogram",
+        "Time to re-read and decode one chunk from the cold tier.",
+    );
+    inner
+        .store
+        .rehydration_latency()
+        .render_into(&mut e, "reverb_chunkstore_rehydration_latency_seconds", &[]);
+
     if let Some(shared) = event {
         e.family(
             "reverb_connections",

@@ -17,7 +17,7 @@
 //! [`ServerBuilder::serve_in_proc`] serves the in-process path alone.
 
 use crate::core::chunk::Chunk;
-use crate::core::chunk_store::ChunkStore;
+use crate::core::chunk_store::{ChunkHandle, ChunkStore};
 use crate::core::extensions::TableExtension;
 use crate::core::item::{Item, SampledItem};
 use crate::core::table::{Table, TableConfig, TableInfo};
@@ -97,6 +97,8 @@ pub struct ServerBuilder {
     uds_path: Option<PathBuf>,
     metrics_addr: Option<String>,
     metrics_token: Option<String>,
+    chunk_hot_bytes: Option<u64>,
+    chunk_cold_dir: Option<PathBuf>,
 }
 
 impl ServerBuilder {
@@ -120,7 +122,27 @@ impl ServerBuilder {
             uds_path: None,
             metrics_addr: None,
             metrics_token: None,
+            chunk_hot_bytes: None,
+            chunk_cold_dir: None,
         }
+    }
+
+    /// Cap the chunk store's in-memory (hot) tier at about `bytes` of
+    /// encoded chunk payload. Chunks past the budget demote — least
+    /// recently sampled first — to CRC-framed spill files under the
+    /// directory set by [`ServerBuilder::chunk_cold_dir`], and rehydrate
+    /// transparently when sampled again. Requires `chunk_cold_dir`.
+    pub fn chunk_hot_bytes(mut self, bytes: u64) -> Self {
+        self.chunk_hot_bytes = Some(bytes);
+        self
+    }
+
+    /// Directory for the chunk store's cold-tier spill files. The files
+    /// are an ephemeral cache (recreated from the tables' durable state
+    /// on restart), so a fast local disk is ideal.
+    pub fn chunk_cold_dir(mut self, dir: impl Into<PathBuf>) -> Self {
+        self.chunk_cold_dir = Some(dir.into());
+        self
     }
 
     /// Additionally serve a plain-HTTP Prometheus `/metrics` endpoint on
@@ -262,7 +284,18 @@ impl ServerBuilder {
             .max()
             .unwrap_or(1)
             .max(crate::core::chunk_store::DEFAULT_NUM_SHARDS);
-        let store = ChunkStore::with_shards(store_shards);
+        let store = match (self.chunk_hot_bytes, &self.chunk_cold_dir) {
+            (Some(hot_bytes), Some(dir)) => ChunkStore::with_tiering(
+                store_shards,
+                crate::core::chunk_store::TieringConfig::new(hot_bytes, dir.clone()),
+            )?,
+            (Some(_), None) => {
+                return Err(Error::InvalidArgument(
+                    "chunk_hot_bytes requires chunk_cold_dir".into(),
+                ));
+            }
+            (None, _) => ChunkStore::with_shards(store_shards),
+        };
         if let Some(path) = &self.load_checkpoint {
             crate::core::checkpoint::load(path, &table_order, &store)?;
         } else if matches!(self.persist_mode, PersistMode::Incremental { .. }) {
@@ -609,6 +642,13 @@ impl Server {
             .get(name)
             .cloned()
             .ok_or_else(|| Error::TableNotFound(name.into()))
+    }
+
+    /// The server's chunk store — tier statistics for tests/diagnostics,
+    /// and [`ChunkStore::run_maintenance`] for deterministic demotion in
+    /// tests.
+    pub fn chunk_store(&self) -> &ChunkStore {
+        &self.inner.store
     }
 
     /// Info for all tables, in construction order.
@@ -1058,7 +1098,7 @@ fn serve_metrics_scrape(
 /// by both service models so their chunk-retention policies cannot drift.
 pub(crate) fn stash_chunks(
     inner: &ServerInner,
-    pending: &mut HashMap<u64, Arc<Chunk>>,
+    pending: &mut HashMap<u64, ChunkHandle>,
     pending_order: &mut std::collections::VecDeque<u64>,
     chunks: Vec<Arc<Chunk>>,
 ) {
@@ -1078,7 +1118,7 @@ pub(crate) fn stash_chunks(
 
 pub(crate) fn resolve_item(
     inner: &ServerInner,
-    pending: &HashMap<u64, Arc<Chunk>>,
+    pending: &HashMap<u64, ChunkHandle>,
     wire: &WireItem,
 ) -> Result<Item> {
     let chunks = wire
@@ -1111,8 +1151,11 @@ pub(crate) fn resolve_item(
     }
 }
 
-/// Convert a sampled item to its wire form plus its chunk set.
-fn sampled_to_wire(s: &SampledItem) -> (WireSampleInfo, Vec<Arc<Chunk>>) {
+/// Convert a sampled item to its wire form plus its chunk set. Resolving
+/// the item's handles is the sample path's rehydration point: cold-tier
+/// chunks are read back (CRC-checked) and promoted hot here, so the wire
+/// and in-proc transports always see fully materialized chunks.
+fn sampled_to_wire(s: &SampledItem) -> Result<(WireSampleInfo, Vec<Arc<Chunk>>)> {
     let info = WireSampleInfo {
         item: WireItem {
             key: s.item.key,
@@ -1127,7 +1170,13 @@ fn sampled_to_wire(s: &SampledItem) -> (WireSampleInfo, Vec<Arc<Chunk>>) {
         probability: s.probability,
         table_size: s.table_size as u64,
     };
-    (info, s.item.chunks.clone())
+    let chunks = s
+        .item
+        .chunks
+        .iter()
+        .map(|c| c.resolve())
+        .collect::<Result<Vec<_>>>()?;
+    Ok((info, chunks))
 }
 
 /// Build the `SampleData` response for a batch, deduplicating chunks
@@ -1135,11 +1184,11 @@ fn sampled_to_wire(s: &SampledItem) -> (WireSampleInfo, Vec<Arc<Chunk>>) {
 /// encode straight from them, in-proc hands them to the client as-is — no
 /// payload clone either way (hot path). Linear scan beats a HashSet at
 /// batch sizes. Shared by both service models.
-pub(crate) fn sample_reply(id: u64, samples: &[SampledItem]) -> Message {
+pub(crate) fn sample_reply(id: u64, samples: &[SampledItem]) -> Result<Message> {
     let mut infos = Vec::with_capacity(samples.len());
     let mut chunks: Vec<Arc<Chunk>> = Vec::with_capacity(samples.len());
     for s in samples {
-        let (info, item_chunks) = sampled_to_wire(s);
+        let (info, item_chunks) = sampled_to_wire(s)?;
         infos.push(info);
         for c in item_chunks {
             if !chunks.iter().any(|x| x.key == c.key) {
@@ -1147,7 +1196,7 @@ pub(crate) fn sample_reply(id: u64, samples: &[SampledItem]) -> Message {
             }
         }
     }
-    Message::SampleData { id, infos, chunks }
+    Ok(Message::SampleData { id, infos, chunks })
 }
 
 /// How often a threaded-model connection with live watch subscriptions
@@ -1183,7 +1232,7 @@ fn serve_connection(mut stream: Box<dyn MsgStream>, inner: Arc<ServerInner>) -> 
     // Chunks streamed on this connection, awaiting item creation. On the
     // in-process transport these are the writer's own allocations — the
     // whole insert path is copy-free from client append to table item.
-    let mut pending: HashMap<u64, Arc<Chunk>> = HashMap::new();
+    let mut pending: HashMap<u64, ChunkHandle> = HashMap::new();
     let mut pending_order: std::collections::VecDeque<u64> = std::collections::VecDeque::new();
     // Watch subscriptions on this connection: (watch id, table, alive
     // flag). Watcher hooks flip the shared dirty bit; once the first
@@ -1295,9 +1344,9 @@ fn serve_connection(mut stream: Box<dyn MsgStream>, inner: Arc<ServerInner>) -> 
                 })();
                 inner.record_sample_latency(&table, started);
                 finish_spans(&inner, spans, &table, started);
-                match result {
-                    Ok(samples) => {
-                        stream.send(sample_reply(id, &samples))?;
+                match result.and_then(|samples| sample_reply(id, &samples)) {
+                    Ok(reply) => {
+                        stream.send(reply)?;
                         stream.flush()?;
                     }
                     Err(e) => {

@@ -1097,6 +1097,7 @@ pub fn decode_table_config<R: Read>(r: &mut R) -> Result<TableConfig> {
         rate_limiter,
         signature: None,
         num_shards,
+        column_codecs: Vec::new(),
     })
 }
 

@@ -3,7 +3,7 @@
 //!
 //! A [`Journal`] is attached to every table of a persisting server as its
 //! [`MutationSink`]. Each landed mutation appends one [`Op`] record under a
-//! short global mutex hold — the record stores `Arc<Chunk>` handles and an
+//! short global mutex hold — the record stores [`ChunkHandle`]s and an
 //! interned table name, never encoded payload bytes, so an append costs a
 //! sequence assignment, one `Vec` of chunk handles (inserts only), and a
 //! few `Arc` bumps; all serialization and file I/O happen on the writer
@@ -25,7 +25,7 @@
 //! same key are journaled in their true commit order, and replaying records
 //! in sequence order reproduces the final table state.
 
-use crate::core::chunk::Chunk;
+use crate::core::chunk_store::ChunkHandle;
 use crate::core::item::{Item, TrajectoryColumn};
 use crate::core::table::MutationSink;
 use crate::error::Result;
@@ -65,7 +65,7 @@ pub struct JournaledItem {
     pub offset: u64,
     pub length: u64,
     pub times_sampled: u32,
-    pub chunks: Vec<Arc<Chunk>>,
+    pub chunks: Vec<ChunkHandle>,
     pub columns: Option<Arc<Vec<TrajectoryColumn>>>,
 }
 
@@ -112,7 +112,7 @@ pub struct SealedSegment {
     pub approx_bytes: u64,
     /// Chunks whose first durable appearance is this segment, in reference
     /// order (each precedes every record that needs it on replay).
-    pub new_chunks: Vec<Arc<Chunk>>,
+    pub new_chunks: Vec<ChunkHandle>,
     /// `(sequence, op)` records in sequence order.
     pub records: Vec<(u64, Op)>,
 }
@@ -120,7 +120,7 @@ pub struct SealedSegment {
 #[derive(Default)]
 struct Active {
     records: Vec<(u64, Op)>,
-    new_chunks: Vec<Arc<Chunk>>,
+    new_chunks: Vec<ChunkHandle>,
     approx_bytes: usize,
 }
 

@@ -42,7 +42,7 @@ pub use manifest::{Manifest, TableCounters, MANIFEST_NAME};
 pub use writer::{PendingCommit, PersistConfig, Persister, DEFAULT_SEGMENT_BYTES};
 
 use crate::core::checkpoint::{self, CheckpointData, TableSnapshot};
-use crate::core::chunk::Chunk;
+use crate::core::chunk_store::{ChunkHandle, ChunkSlot};
 use crate::core::item::Item;
 use crate::error::Result;
 use crate::persist::segment::DecodedRecord;
@@ -53,7 +53,7 @@ use std::sync::Arc;
 /// Mutable replay state: checkpoint data in a form journal records can be
 /// folded into. Used by [`restore`] and by the writer's compaction.
 pub(crate) struct ReplayState {
-    chunks: BTreeMap<u64, Arc<Chunk>>,
+    chunks: BTreeMap<u64, ChunkHandle>,
     tables: BTreeMap<String, TableReplay>,
 }
 
@@ -91,7 +91,9 @@ impl ReplayState {
         match rec {
             DecodedRecord::Chunk(c) => {
                 let key = c.key;
-                self.chunks.entry(key).or_insert_with(|| Arc::new(c));
+                self.chunks
+                    .entry(key)
+                    .or_insert_with(|| ChunkSlot::detached(Arc::new(c)));
             }
             DecodedRecord::Insert { table, item, .. } => {
                 let item = item.into_item(&table, &self.chunks)?;

@@ -67,11 +67,42 @@ pub struct SegmentMeta {
     pub last_seq: u64,
 }
 
-fn frame_record(out: &mut Vec<u8>, body: &[u8]) -> Result<()> {
+/// Frame one record body as `[u32 len][body][u32 crc32(body)]`. This is
+/// the framing segment files use per record; the chunk store's cold
+/// spill files reuse it so a torn or bit-flipped cold record is rejected
+/// exactly like a torn journal record.
+pub(crate) fn frame_record(out: &mut Vec<u8>, body: &[u8]) -> Result<()> {
     put_u32(out, body.len() as u32)?;
     out.extend_from_slice(body);
     put_u32(out, crc32::crc32(body))?;
     Ok(())
+}
+
+/// Validate one complete framed record (`[u32 len][body][u32 crc]`,
+/// nothing more) and return its body. Inverse of [`frame_record`] for
+/// readers that know the record's exact extent, like the cold chunk tier
+/// reading a spill record back at a remembered offset.
+pub(crate) fn unframe_record(buf: &[u8]) -> Result<&[u8]> {
+    if buf.len() < 8 {
+        return Err(Error::CorruptCheckpoint(
+            "framed record shorter than its framing".into(),
+        ));
+    }
+    let len = u32::from_le_bytes(buf[..4].try_into().unwrap()) as usize;
+    if len > MAX_RECORD_LEN || buf.len() != 8 + len {
+        return Err(Error::CorruptCheckpoint(format!(
+            "framed record length {len} does not match its {} byte extent",
+            buf.len()
+        )));
+    }
+    let body = &buf[4..4 + len];
+    let stored = u32::from_le_bytes(buf[4 + len..8 + len].try_into().unwrap());
+    if crc32::crc32(body) != stored {
+        return Err(Error::CorruptCheckpoint(
+            "framed record crc mismatch".into(),
+        ));
+    }
+    Ok(body)
 }
 
 /// Encode and write `seg` to `path`, fsynced. Segments are bounded by the
@@ -88,7 +119,9 @@ pub fn write_segment(path: &Path, seg: &SealedSegment) -> Result<SegmentMeta> {
     for chunk in &seg.new_chunks {
         body.clear();
         put_u8(&mut body, REC_CHUNK)?;
-        chunk.encode(&mut body)?;
+        // Copies the verified encoded bytes straight through for
+        // cold-tier slots — spilling a segment never rehydrates chunks.
+        chunk.write_encoded(&mut body)?;
         frame_record(&mut out, &body)?;
     }
     for (seq, op) in &seg.records {
@@ -326,7 +359,7 @@ mod tests {
             first_seq: 10,
             last_seq: 12,
             approx_bytes: 0,
-            new_chunks: vec![chunk],
+            new_chunks: vec![chunk.into()],
             records: vec![
                 (
                     10,

@@ -355,10 +355,10 @@ impl WriterState {
         // Self-heal the journal's optimistic chunk dedup: a record sealed
         // while a compaction was folding may have deduped against a chunk
         // the fold then garbage-collected. The records still hold live
-        // `Arc<Chunk>` handles, so re-embed anything this chain no longer
+        // chunk handles, so re-embed anything this chain no longer
         // carries before the segment hits disk.
         let mut embedded: HashSet<u64> = seg.new_chunks.iter().map(|c| c.key).collect();
-        let mut healed: Vec<Arc<crate::core::chunk::Chunk>> = Vec::new();
+        let mut healed: Vec<crate::core::chunk_store::ChunkHandle> = Vec::new();
         for (_, op) in &seg.records {
             if let Op::Insert { item, .. } = op {
                 for c in &item.chunks {

@@ -1,0 +1,223 @@
+//! Minimal read-only file mapping without libc: raw `mmap`/`munmap`
+//! syscalls via inline asm on Linux (the same no-dependency idiom as the
+//! event core's poller), with a read-into-memory fallback everywhere
+//! else. Sealed cold chunk files are served through this, so rehydration
+//! reads are page-cache copies rather than buffered `read` calls and the
+//! cold tier's resident cost is whatever the kernel chooses to cache.
+
+use std::fs::File;
+use std::io;
+
+/// An immutable view of a file's contents: a real `mmap` on Linux, an
+/// owned buffer elsewhere (or when mapping fails).
+pub struct Mmap {
+    inner: Inner,
+}
+
+enum Inner {
+    #[cfg(all(target_os = "linux", any(target_arch = "x86_64", target_arch = "aarch64")))]
+    Mapped { ptr: *const u8, len: usize },
+    Buffered(Vec<u8>),
+}
+
+// The mapping is read-only and never remapped after construction.
+unsafe impl Send for Mmap {}
+unsafe impl Sync for Mmap {}
+
+impl Mmap {
+    /// Map the first `len` bytes of `file`. Falls back to reading the
+    /// bytes into memory when mapping is unsupported or refused.
+    pub fn map(file: &File, len: usize) -> io::Result<Mmap> {
+        if len == 0 {
+            return Ok(Mmap {
+                inner: Inner::Buffered(Vec::new()),
+            });
+        }
+        #[cfg(all(target_os = "linux", any(target_arch = "x86_64", target_arch = "aarch64")))]
+        {
+            if let Some(ptr) = sys::mmap_readonly(file, len) {
+                return Ok(Mmap {
+                    inner: Inner::Mapped { ptr, len },
+                });
+            }
+        }
+        let mut buf = vec![0u8; len];
+        read_exact_at_start(file, &mut buf)?;
+        Ok(Mmap {
+            inner: Inner::Buffered(buf),
+        })
+    }
+
+    /// The mapped bytes.
+    pub fn as_slice(&self) -> &[u8] {
+        match &self.inner {
+            #[cfg(all(
+                target_os = "linux",
+                any(target_arch = "x86_64", target_arch = "aarch64")
+            ))]
+            Inner::Mapped { ptr, len } => unsafe { std::slice::from_raw_parts(*ptr, *len) },
+            Inner::Buffered(v) => v,
+        }
+    }
+
+    /// Whether this is a true kernel mapping (false: owned buffer).
+    pub fn is_mapped(&self) -> bool {
+        match &self.inner {
+            #[cfg(all(
+                target_os = "linux",
+                any(target_arch = "x86_64", target_arch = "aarch64")
+            ))]
+            Inner::Mapped { .. } => true,
+            Inner::Buffered(_) => false,
+        }
+    }
+}
+
+impl Drop for Mmap {
+    fn drop(&mut self) {
+        #[cfg(all(target_os = "linux", any(target_arch = "x86_64", target_arch = "aarch64")))]
+        if let Inner::Mapped { ptr, len } = self.inner {
+            unsafe { sys::munmap(ptr, len) };
+        }
+    }
+}
+
+/// Read `buf.len()` bytes from the start of `file` without moving its
+/// cursor (positional reads on unix, a seek round-trip elsewhere).
+fn read_exact_at_start(file: &File, buf: &mut [u8]) -> io::Result<()> {
+    #[cfg(unix)]
+    {
+        use std::os::unix::fs::FileExt;
+        file.read_exact_at(buf, 0)
+    }
+    #[cfg(not(unix))]
+    {
+        use std::io::{Read, Seek, SeekFrom};
+        let mut f = file.try_clone()?;
+        f.seek(SeekFrom::Start(0))?;
+        f.read_exact(buf)
+    }
+}
+
+#[cfg(all(target_os = "linux", any(target_arch = "x86_64", target_arch = "aarch64")))]
+mod sys {
+    use std::fs::File;
+    use std::os::fd::AsRawFd;
+
+    const PROT_READ: usize = 1;
+    const MAP_SHARED: usize = 1;
+
+    #[cfg(target_arch = "x86_64")]
+    const SYS_MMAP: usize = 9;
+    #[cfg(target_arch = "x86_64")]
+    const SYS_MUNMAP: usize = 11;
+    #[cfg(target_arch = "aarch64")]
+    const SYS_MMAP: usize = 222;
+    #[cfg(target_arch = "aarch64")]
+    const SYS_MUNMAP: usize = 215;
+
+    #[cfg(target_arch = "x86_64")]
+    unsafe fn syscall6(n: usize, a1: usize, a2: usize, a3: usize, a4: usize, a5: usize, a6: usize) -> isize {
+        let ret: isize;
+        core::arch::asm!(
+            "syscall",
+            inlateout("rax") n as isize => ret,
+            in("rdi") a1,
+            in("rsi") a2,
+            in("rdx") a3,
+            in("r10") a4,
+            in("r8") a5,
+            in("r9") a6,
+            lateout("rcx") _,
+            lateout("r11") _,
+            options(nostack)
+        );
+        ret
+    }
+
+    #[cfg(target_arch = "aarch64")]
+    unsafe fn syscall6(n: usize, a1: usize, a2: usize, a3: usize, a4: usize, a5: usize, a6: usize) -> isize {
+        let ret: isize;
+        core::arch::asm!(
+            "svc 0",
+            in("x8") n,
+            inlateout("x0") a1 => ret,
+            in("x1") a2,
+            in("x2") a3,
+            in("x3") a4,
+            in("x4") a5,
+            in("x5") a6,
+            options(nostack)
+        );
+        ret
+    }
+
+    /// `mmap(NULL, len, PROT_READ, MAP_SHARED, fd, 0)`; `None` on error.
+    pub(super) fn mmap_readonly(file: &File, len: usize) -> Option<*const u8> {
+        let fd = file.as_raw_fd();
+        let ret = unsafe { syscall6(SYS_MMAP, 0, len, PROT_READ, MAP_SHARED, fd as usize, 0) };
+        // Errors come back as -errno in the top page of the address space.
+        if (-4095..0).contains(&ret) {
+            None
+        } else {
+            Some(ret as usize as *const u8)
+        }
+    }
+
+    pub(super) unsafe fn munmap(ptr: *const u8, len: usize) {
+        let _ = syscall6(SYS_MUNMAP, ptr as usize, len, 0, 0, 0, 0);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Write;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        std::env::temp_dir().join(format!("reverb_mmap_{name}_{}", std::process::id()))
+    }
+
+    #[test]
+    fn maps_file_contents() {
+        let path = tmp("basic");
+        let payload: Vec<u8> = (0..10_000u32).map(|i| (i % 251) as u8).collect();
+        {
+            let mut f = File::create(&path).unwrap();
+            f.write_all(&payload).unwrap();
+        }
+        let f = File::open(&path).unwrap();
+        let map = Mmap::map(&f, payload.len()).unwrap();
+        assert_eq!(map.as_slice(), &payload[..]);
+        #[cfg(all(target_os = "linux", any(target_arch = "x86_64", target_arch = "aarch64")))]
+        assert!(map.is_mapped(), "linux should take the real mmap path");
+        drop(map);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn empty_mapping_is_fine() {
+        let path = tmp("empty");
+        File::create(&path).unwrap();
+        let f = File::open(&path).unwrap();
+        let map = Mmap::map(&f, 0).unwrap();
+        assert!(map.as_slice().is_empty());
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn prefix_mapping_sees_only_requested_len() {
+        // The cold tier maps the *sealed* length even if the file has
+        // trailing bytes (it never does, but the contract matters).
+        let path = tmp("prefix");
+        {
+            let mut f = File::create(&path).unwrap();
+            f.write_all(&[7u8; 4096]).unwrap();
+        }
+        let f = File::open(&path).unwrap();
+        let map = Mmap::map(&f, 100).unwrap();
+        assert_eq!(map.as_slice().len(), 100);
+        assert!(map.as_slice().iter().all(|&b| b == 7));
+        std::fs::remove_file(&path).ok();
+    }
+}

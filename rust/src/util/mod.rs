@@ -3,6 +3,7 @@
 
 pub mod bench;
 pub mod crc32;
+pub mod mmap;
 pub mod proptest;
 pub mod rng;
 pub mod stats;

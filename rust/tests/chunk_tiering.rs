@@ -1,0 +1,137 @@
+//! Tiered chunk-store conformance: sampling after demotion must be
+//! byte-identical to sampling hot, on every transport backend. The cold
+//! tier is invisible to clients — the only observable difference is the
+//! store's tier gauges moving.
+
+mod common;
+
+use common::{endpoints, write_items};
+use reverb::core::table::TableConfig;
+use reverb::net::server::Server;
+use reverb::{Client, SamplerOptions};
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// A process-unique scratch directory for one server's cold tier.
+fn cold_dir(tag: &str) -> std::path::PathBuf {
+    static NEXT: AtomicU64 = AtomicU64::new(0);
+    let n = NEXT.fetch_add(1, Ordering::Relaxed);
+    std::env::temp_dir().join(format!("rvb_cold_{tag}_{}_{n}", std::process::id()))
+}
+
+#[test]
+fn sample_after_demotion_is_byte_identical_on_all_transports() {
+    let root = cold_dir("conf");
+    // One cold sub-directory per backend: the three servers run
+    // concurrently and each wipes stale cold files at startup.
+    let counter = AtomicU64::new(0);
+    let root2 = root.clone();
+    let servers = endpoints(move || {
+        let dir = root2.join(counter.fetch_add(1, Ordering::Relaxed).to_string());
+        std::fs::create_dir_all(&dir).unwrap();
+        Server::builder()
+            .table(TableConfig::uniform_replay("t", 1000))
+            // A 1-byte hot budget: every chunk demotes on the next
+            // maintenance pass, so all sampling crosses the cold tier.
+            .chunk_hot_bytes(1)
+            .chunk_cold_dir(dir)
+    });
+    for (server, addr, label) in servers {
+        let client = Client::connect(addr).unwrap();
+        write_items(&client, "t", 20, |_| 1.0);
+
+        // Capture every chunk's encoded bytes while hot, straight off the
+        // table's handles.
+        let (items, _, _) = server.table("t").unwrap().snapshot();
+        let mut expect: HashMap<u64, Vec<u8>> = HashMap::new();
+        for item in &items {
+            for h in &item.chunks {
+                let chunk = h.resolve().unwrap();
+                let mut buf = Vec::new();
+                chunk.encode(&mut buf).unwrap();
+                expect.insert(chunk.key, buf);
+            }
+        }
+        assert_eq!(expect.len(), 20, "{label}");
+
+        // Deterministic demotion instead of waiting on the thread.
+        server.chunk_store().run_maintenance();
+        let stats = server.chunk_store().stats();
+        assert!(stats.demotions >= 20, "{label}: {stats:?}");
+        assert!(stats.cold_chunks > 0, "{label}: {stats:?}");
+        assert!(stats.cold_bytes > 0, "{label}: {stats:?}");
+
+        // Server-side: rehydrated bytes match the hot encoding exactly.
+        for item in &items {
+            for h in &item.chunks {
+                let chunk = h.resolve().unwrap();
+                let mut buf = Vec::new();
+                chunk.encode(&mut buf).unwrap();
+                assert_eq!(
+                    buf, expect[&chunk.key],
+                    "{label}: cold round-trip changed chunk {}",
+                    chunk.key
+                );
+            }
+        }
+        let stats = server.chunk_store().stats();
+        assert!(stats.rehydrations >= 20, "{label}: {stats:?}");
+
+        // Client-side: demote again, then sample across the wire. Values
+        // written by `write_items` are exactly representable, so equality
+        // is bitwise.
+        server.chunk_store().run_maintenance();
+        let mut s = client
+            .sampler(SamplerOptions::new("t").with_timeout_ms(5_000))
+            .unwrap();
+        for _ in 0..40 {
+            let sample = s.next_sample().unwrap();
+            assert_eq!(sample.data[0].shape(), &[1, 2], "{label}");
+            let v = sample.data[0].to_f32().unwrap();
+            assert!(v[0] >= 0.0 && v[0] < 20.0 && v[0].fract() == 0.0, "{label}: {v:?}");
+            assert_eq!(v[1], v[0] + 0.5, "{label}: {v:?}");
+        }
+        s.stop();
+    }
+    std::fs::remove_dir_all(root).ok();
+}
+
+#[test]
+fn tier_gauges_land_on_metrics_endpoint() {
+    use std::io::{Read, Write};
+    let dir = cold_dir("metrics");
+    std::fs::create_dir_all(&dir).unwrap();
+    let server = Server::builder()
+        .table(TableConfig::uniform_replay("t", 100))
+        .chunk_hot_bytes(1)
+        .chunk_cold_dir(&dir)
+        .metrics_addr("127.0.0.1:0")
+        .bind("127.0.0.1:0")
+        .unwrap();
+    let client = Client::connect(format!("tcp://{}", server.local_addr())).unwrap();
+    write_items(&client, "t", 5, |_| 1.0);
+    server.chunk_store().run_maintenance();
+
+    let mut sock = std::net::TcpStream::connect(server.metrics_addr().unwrap()).unwrap();
+    sock.write_all(b"GET /metrics HTTP/1.1\r\nHost: x\r\nConnection: close\r\n\r\n")
+        .unwrap();
+    let mut body = String::new();
+    sock.read_to_string(&mut body).unwrap();
+    for family in [
+        "reverb_chunkstore_hot_bytes",
+        "reverb_chunkstore_cold_chunks",
+        "reverb_chunkstore_demotions_total",
+        "reverb_chunkstore_rehydration_latency_seconds_bucket",
+    ] {
+        assert!(body.contains(family), "missing {family}:\n{body}");
+    }
+    // The demotions actually show as a non-zero counter.
+    let line = body
+        .lines()
+        .find(|l| l.starts_with("reverb_chunkstore_demotions_total "))
+        .expect("demotions sample line");
+    let v: f64 = line.rsplit(' ').next().unwrap().parse().unwrap();
+    assert!(v >= 5.0, "{line}");
+    drop(server);
+    std::fs::remove_dir_all(dir).ok();
+}

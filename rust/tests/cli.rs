@@ -132,6 +132,89 @@ fn cli_delta_persistence_survives_kill() {
 }
 
 #[test]
+fn cli_tiered_store_survives_kill_mid_demotion() {
+    // Tiering + delta persistence: chunks spill to the cold cache while
+    // the journal stays the durable source. A SIGKILL while cold files
+    // are live must lose nothing — the restart wipes the stale cold
+    // cache and rehydrates every item from the base+journal chain.
+    let dir = std::env::temp_dir().join(format!("reverb_cli_tier_{}", std::process::id()));
+    let cold = dir.join("cold");
+    std::fs::remove_dir_all(&dir).ok();
+    std::fs::create_dir_all(&cold).unwrap();
+    let (mut child, addr) = spawn_server(&[
+        "--checkpoint-dir",
+        dir.to_str().unwrap(),
+        "--persist",
+        "delta",
+        "--chunk-hot-bytes",
+        "1",
+        "--chunk-cold-dir",
+        cold.to_str().unwrap(),
+    ]);
+    let client = Client::connect(addr).unwrap();
+    let mut w = client.writer(WriterOptions::default()).unwrap();
+    for i in 0..12 {
+        w.append(vec![Tensor::from_f32(&[2], &[i as f32, i as f32 + 0.25]).unwrap()])
+            .unwrap();
+        w.create_item("replay", 1, 1.0).unwrap();
+    }
+    w.flush().unwrap();
+    let ckpt = client.checkpoint().unwrap();
+    assert!(ckpt.ends_with("MANIFEST.rvb3"), "{ckpt}");
+
+    // Wait until the maintenance thread has actually spilled cold files,
+    // so the kill lands with the cold tier populated.
+    let deadline = std::time::Instant::now() + Duration::from_secs(10);
+    loop {
+        let spilled = std::fs::read_dir(&cold)
+            .unwrap()
+            .filter_map(|e| e.ok())
+            .any(|e| e.file_name().to_string_lossy().ends_with(".rvbc"));
+        if spilled {
+            break;
+        }
+        assert!(
+            std::time::Instant::now() < deadline,
+            "cold tier never spilled"
+        );
+        std::thread::sleep(Duration::from_millis(20));
+    }
+    child.kill().unwrap();
+    child.wait().unwrap();
+
+    // Restart against the same (now stale, possibly torn) cold dir: the
+    // store wipes it and serves every item from the journal chain.
+    let (mut child2, addr2) = spawn_server(&[
+        "--load",
+        &ckpt,
+        "--checkpoint-dir",
+        dir.to_str().unwrap(),
+        "--persist",
+        "delta",
+        "--chunk-hot-bytes",
+        "1",
+        "--chunk-cold-dir",
+        cold.to_str().unwrap(),
+    ]);
+    let client2 = Client::connect(addr2).unwrap();
+    let info = client2.server_info().unwrap();
+    let replay = info.iter().find(|(n, _)| n == "replay").unwrap();
+    assert_eq!(replay.1.size, 12, "items survived the kill");
+    // Payloads restore intact and keep sampling through the fresh tiers.
+    let mut s = client2
+        .sampler(SamplerOptions::new("replay").with_timeout_ms(5_000))
+        .unwrap();
+    for _ in 0..24 {
+        let v = s.next_sample().unwrap().data[0].to_f32().unwrap();
+        assert_eq!(v[1], v[0] + 0.25, "restored payload corrupt: {v:?}");
+    }
+    s.stop();
+    child2.kill().unwrap();
+    child2.wait().unwrap();
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
 fn cli_service_model_flags_round_trip() {
     // The event-core knobs: an explicit worker count, and the legacy
     // threaded oracle — both must serve the identical protocol.

@@ -62,6 +62,9 @@ fn every_exported_family_is_documented() {
         "reverb_stage_duration_seconds",
         "reverb_table_sampled_to_inserted_ratio",
         "reverb_table_item_age_steps",
+        "reverb_chunkstore_hot_bytes",
+        "reverb_chunkstore_demotions_total",
+        "reverb_chunkstore_rehydration_latency_seconds",
     ] {
         assert!(
             server_families.iter().any(|f| f == expected),
